@@ -1,0 +1,109 @@
+"""AOT pipeline: lower every registered entry point to HLO text + manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--out-dir`` (default ``../artifacts``):
+
+    <preset>/<entry>.hlo.txt      one module per oracle
+    manifest.json                 shapes/dtypes per entry + preset dims
+
+Run via ``make artifacts``; the Rust runtime consumes the manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import presets
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_dict(s) -> dict:
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def lower_entry(fn, example_args):
+    # keep_unused: some oracles legitimately ignore an input (e.g. the CE
+    # Hessian does not depend on the labels); without this, XLA prunes the
+    # parameter and the Rust runtime's positional marshalling breaks.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_specs = [
+        _spec_dict(o) for o in jax.eval_shape(fn, *example_args)
+    ]
+    in_specs = [_spec_dict(s) for s in example_args]
+    return text, in_specs, out_specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=str(pathlib.Path(__file__).resolve().parents[2] / "artifacts"))
+    ap.add_argument("--presets", default="all", help="comma list or 'all' / 'tiny'")
+    args = ap.parse_args()
+
+    reg = presets()
+    if args.presets == "all":
+        selected = list(reg)
+    elif args.presets == "tiny":
+        selected = [n for n in reg if n.endswith("_tiny") or n == "demo"]
+    else:
+        selected = args.presets.split(",")
+        unknown = [n for n in selected if n not in reg]
+        if unknown:
+            sys.exit(f"unknown presets: {unknown}; available: {sorted(reg)}")
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    manifest = {"version": 1, "entries": {}, "presets": {}}
+    if manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+
+    t0 = time.time()
+    for pname in selected:
+        preset = reg[pname]
+        pdir = out_dir / pname
+        pdir.mkdir(exist_ok=True)
+        entries = preset.build()
+        manifest["presets"][pname] = {
+            "task": preset.task,
+            "kernels": preset.kernels,
+            "dims": preset.dims.to_dict() if preset.dims is not None else {},
+        }
+        for ename, (fn, ex) in entries.items():
+            key = f"{pname}.{ename}"
+            text, in_specs, out_specs = lower_entry(fn, ex)
+            rel = f"{pname}/{ename}.hlo.txt"
+            (out_dir / rel).write_text(text)
+            manifest["entries"][key] = {
+                "file": rel,
+                "inputs": in_specs,
+                "outputs": out_specs,
+                "kernels": preset.kernels,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+            print(f"  lowered {key:28s} {len(text)/1024:8.1f} KiB", flush=True)
+    manifest_path.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+    print(f"wrote {manifest_path} ({len(manifest['entries'])} entries) in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Pallas kernels (L1) and their pure-jnp oracles.
+
+Public surface:
+
+* :func:`matmul.matmul` — tiled, differentiable matmul.
+* :func:`mlp.dense_relu` / :func:`mlp.dense` — fused MLP layers.
+* :func:`elementwise.penalty_combine` — hypergradient assembly.
+* :func:`elementwise.exp_reg_grad` — coefficient-tuning regularizer grad.
+* :mod:`ref` — jnp oracles, one per kernel.
+"""
+
+from . import elementwise, matmul, mlp, ref, tiling  # noqa: F401

@@ -1,0 +1,131 @@
+"""L1 Pallas kernels: fused elementwise stages of the C²DFB oracles.
+
+Two fusions that sit on the per-round hot path of every node:
+
+* ``penalty_combine`` — the fully first-order hypergradient assembly
+  ``u = gxf + λ·(gxg_y − gxg_z)`` (paper Eq. 4 / Alg. 1 "Local Gradients
+  Computation").  One pass over the upper-level dimension.
+* ``exp_reg_grad`` — the coefficient-tuning regularizer gradients: given the
+  per-feature log-weights ``x`` and the squashed squared rows ``r = Σ_c y²``
+  it returns ``exp(x) ⊙ r`` (this is ∂/∂x of ``Σ_fc exp(x_f) y_fc²``).
+
+Both are 1-D grids over VMEM-resident vector tiles; under ``interpret=True``
+they lower to plain HLO loops the CPU PJRT client can run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+_BLOCK = 8192
+
+
+def _penalty_kernel(gxf_ref, gy_ref, gz_ref, lam_ref, o_ref):
+    lam = lam_ref[0]
+    o_ref[...] = gxf_ref[...] + lam * (gy_ref[...] - gz_ref[...])
+
+
+def _penalty_impl(gxf, gy, gz, lam):
+    (d,) = gxf.shape
+    blk = tiling.pick_block(d, _BLOCK)
+    dp = tiling.ceil_to(d, blk)
+    args = [tiling.pad1(v, dp) for v in (gxf, gy, gz)]
+    lam_v = jnp.reshape(lam.astype(jnp.float32), (1,))
+    out = pl.pallas_call(
+        _penalty_kernel,
+        grid=(tiling.cdiv(dp, blk),),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            # The scalar multiplier rides along in every grid step.
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=True,
+    )(*args, lam_v)
+    return out[:d]
+
+
+def penalty_combine(gxf, gy, gz, lam):
+    """``gxf + lam * (gy - gz)`` fused in one Pallas pass."""
+    return _penalty_impl(gxf, gy, gz, lam)
+
+
+def _exp_reg_kernel(x_ref, r_ref, o_ref):
+    o_ref[...] = jnp.exp(x_ref[...]) * r_ref[...]
+
+
+@jax.custom_vjp
+def exp_reg_grad(x, r):
+    """``exp(x) * r`` fused in one Pallas pass (differentiable)."""
+    return _exp_reg_impl(x, r)
+
+
+def _exp_reg_impl(x, r):
+    (d,) = x.shape
+    blk = tiling.pick_block(d, _BLOCK)
+    dp = tiling.ceil_to(d, blk)
+    out = pl.pallas_call(
+        _exp_reg_kernel,
+        grid=(tiling.cdiv(dp, blk),),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=True,
+    )(tiling.pad1(x, dp), tiling.pad1(r, dp))
+    return out[:d]
+
+
+def _exp_reg_fwd(x, r):
+    y = _exp_reg_impl(x, r)
+    return y, (x, r, y)
+
+
+def _exp_reg_bwd(res, g):
+    x, r, y = res
+    # d/dx (exp(x) r) = exp(x) r = y ; d/dr = exp(x)
+    return g * y, g * jnp.exp(x)
+
+
+exp_reg_grad.defvjp(_exp_reg_fwd, _exp_reg_bwd)
+
+
+def _relu_kernel(x_ref, o_ref, m_ref):
+    v = x_ref[...]
+    o_ref[...] = jnp.maximum(v, 0.0)
+    m_ref[...] = (v > 0.0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def relu_with_mask(x2d):
+    """Fused ReLU that also emits the backward mask, tiled over rows."""
+    m, n = x2d.shape
+    bm = tiling.pick_block(m, 128)
+    bn = tiling.pick_block(n, 128)
+    mp, np_ = tiling.ceil_to(m, bm), tiling.ceil_to(n, bn)
+    out, mask = pl.pallas_call(
+        _relu_kernel,
+        grid=(tiling.cdiv(mp, bm), tiling.cdiv(np_, bn)),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=True,
+    )(tiling.pad2(x2d, mp, np_))
+    return out[:m, :n], mask[:m, :n]

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: tiled matmul with a custom VJP.
+
+This is the compute hot-spot of both reproduction tasks — every oracle
+(logits, backward contractions ``AᵀR``, MLP layers) routes through this
+kernel, so when the L2 graphs are lowered the whole model compute sits in
+Pallas-generated HLO.
+
+TPU mental model (see DESIGN.md §Hardware-Adaptation): the grid walks
+``(M/bm, N/bn, K/bk)`` output/reduction tiles; each step keeps a
+``(bm, bn)`` f32 output tile resident in VMEM while streaming
+``(bm, bk)`` / ``(bk, bn)`` operand tiles HBM→VMEM via BlockSpec, i.e. the
+classic MXU systolic-array schedule.  Lowered with ``interpret=True`` so the
+CPU PJRT client can execute it (real-TPU lowering emits a Mosaic
+custom-call; see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps: int):
+    """One grid step: accumulate ``x_tile @ y_tile`` into the output tile.
+
+    The output BlockSpec maps every K-step of a given ``(i, j)`` tile onto
+    the same VMEM block, so ``o_ref`` doubles as the f32 accumulator — no
+    separate scratch needed and no HBM round-trip between K steps.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul_padded(a, b, bm: int, bn: int, bk: int):
+    """Pallas matmul over block-multiple operands."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    grid = (tiling.cdiv(m, bm), tiling.cdiv(n, bn), tiling.cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _matmul_impl(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Pad → pallas matmul → slice."""
+    m, k = a.shape
+    _, n = b.shape
+    bm = tiling.pick_block(m, tiling.BLOCK_M)
+    bn = tiling.pick_block(n, tiling.BLOCK_N)
+    bk = tiling.pick_block(k, tiling.BLOCK_K)
+    mp, kp, np_ = tiling.ceil_to(m, bm), tiling.ceil_to(k, bk), tiling.ceil_to(n, bn)
+    ap = tiling.pad2(a, mp, kp)
+    bp = tiling.pad2(b, kp, np_)
+    out = _matmul_padded(ap, bp, bm, bn, bk)
+    return out[:m, :n].astype(a.dtype)
+
+
+@jax.custom_vjp
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """``a @ b`` through the Pallas tiled kernel, differentiable.
+
+    The VJP routes both cotangent contractions (``g @ bᵀ`` and ``aᵀ @ g``)
+    through the same kernel, so backward passes are Pallas compute too.
+    """
+    return _matmul_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # Route through the custom_vjp wrapper (not _matmul_impl) so that
+    # higher-order differentiation — e.g. the reverse-over-reverse HVP
+    # oracles used by the second-order baselines — stays in reverse mode
+    # instead of hitting pallas_call's missing JVP rule.
+    return matmul(g, b.T), matmul(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: pytest (plus hypothesis sweeps over
+shapes/dtypes) asserts ``assert_allclose(kernel(...), ref(...))`` for each
+kernel, and the L2 task modules can be built against either implementation
+(``use_pallas=False`` routes through these), which is how the ``*_jnp``
+artifact variants for the L2 perf ablation are produced.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def penalty_combine(gxf, gy, gz, lam):
+    return gxf + lam * (gy - gz)
+
+
+def exp_reg_grad(x, r):
+    return jnp.exp(x) * r
+
+
+def relu_with_mask(x2d):
+    return jnp.maximum(x2d, 0.0), (x2d > 0.0).astype(jnp.float32)
+
+
+def dense_relu(x, w, b):
+    return jnp.maximum(x @ w + b[None, :], 0.0)
+
+
+def dense(x, w, b):
+    return x @ w + b[None, :]

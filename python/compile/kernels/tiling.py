@@ -1,0 +1,65 @@
+"""Tiling helpers shared by the Pallas kernels.
+
+All kernels in this package operate on block-padded operands: the public
+wrappers pad every dimension up to a multiple of the block size, launch the
+kernel on the padded grid, and slice the result back.  This keeps the kernel
+bodies branch-free (no partial-tile masking) which is both simpler and closer
+to how an MXU-targeted kernel would be written (8x128-aligned tiles).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Default block sizes.  On a real TPU these map onto MXU-friendly
+# (8k x 128)-aligned tiles; under interpret=True they only control the grid
+# of the emitted HLO loop.  Perf note (EXPERIMENTS.md §Perf): the interpret
+# path executes one XLA while-loop iteration per grid step, so small blocks
+# multiply loop/dynamic-slice overhead into the CPU hot path — 512-blocks
+# cut the coeff-task oracle latency ~8x vs 128-blocks while staying inside
+# a plausible TPU VMEM budget (512x512 f32 = 1 MiB/tile, 3 tiles resident
+# < 16 MiB VMEM).
+BLOCK_M = 512
+BLOCK_N = 512
+BLOCK_K = 512
+
+
+def ceil_to(x: int, b: int) -> int:
+    """Round ``x`` up to the next multiple of ``b``."""
+    return ((x + b - 1) // b) * b
+
+
+def cdiv(x: int, b: int) -> int:
+    """Ceiling division."""
+    return (x + b - 1) // b
+
+
+def pad2(a: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array up to ``(rows, cols)``."""
+    r, c = a.shape
+    if r == rows and c == cols:
+        return a
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)))
+
+
+def pad1(a: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Zero-pad a 1-D array up to length ``n``."""
+    (m,) = a.shape
+    if m == n:
+        return a
+    return jnp.pad(a, (0, n - m))
+
+
+def pick_block(dim: int, preferred: int, floor: int = 8) -> int:
+    """Choose a block size for a dimension.
+
+    Small problem dims (the tiny test preset) should not be padded all the
+    way to 128; pick the smallest power-of-two >= dim instead, bounded below
+    by ``floor`` so the VMEM tile stays vector-register aligned.
+    """
+    if dim >= preferred:
+        return preferred
+    b = floor
+    while b < dim:
+        b *= 2
+    return b

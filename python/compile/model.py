@@ -1,0 +1,63 @@
+"""L2 registry: every AOT entry point this repo lowers, by preset.
+
+A *preset* is (task, dims, kernel backend).  The Rust runtime selects a
+preset by name and reads per-entry shapes from the manifest that
+:mod:`compile.aot` writes alongside the HLO text files.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import task_coeff, task_hyperrep
+from .ops import get_ops
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    task: str
+    kernels: str  # "pallas" | "jnp"
+    dims: object
+    build: Callable[[], dict]
+
+
+def _demo_affine():
+    """Tiny smoke artifact used by the Rust runtime unit tests."""
+
+    def affine(a, b):
+        return (jnp.matmul(a, b) + 1.0,)
+
+    s = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    return {"affine": (affine, (s, s))}
+
+
+def presets() -> dict:
+    out = {}
+
+    def add(name, task, dims, use_pallas):
+        mod = {"coeff": task_coeff, "hyperrep": task_hyperrep}[task]
+        k = get_ops(use_pallas)
+        out[name] = Preset(
+            name=name,
+            task=task,
+            kernels=k.name,
+            dims=dims,
+            build=lambda mod=mod, dims=dims, k=k: mod.build(dims, k),
+        )
+
+    add("coeff", "coeff", task_coeff.FULL, use_pallas=True)
+    add("coeff_tiny", "coeff", task_coeff.TINY, use_pallas=True)
+    add("coeff_jnp", "coeff", task_coeff.FULL, use_pallas=False)
+    add("hyperrep", "hyperrep", task_hyperrep.FULL, use_pallas=True)
+    add("hyperrep_tiny", "hyperrep", task_hyperrep.TINY, use_pallas=True)
+    add("hyperrep_jnp", "hyperrep", task_hyperrep.FULL, use_pallas=False)
+
+    out["demo"] = Preset(
+        name="demo", task="demo", kernels="jnp", dims=None, build=_demo_affine
+    )
+    return out

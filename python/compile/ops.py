@@ -1,0 +1,62 @@
+"""Kernel-backend selector for the L2 graphs.
+
+Every task module takes an ``Ops`` namespace so the same model definitions
+can be lowered either through the Pallas kernels (default artifacts) or the
+pure-jnp reference implementations (the ``*_jnp`` artifact variants used by
+the L2 perf ablation and as a cross-check of the whole lowered pipeline).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .kernels import elementwise, matmul, mlp, ref
+
+
+@dataclass(frozen=True)
+class Ops:
+    name: str
+    matmul: Callable
+    dense_relu: Callable
+    dense: Callable
+    penalty_combine: Callable
+    exp_reg_grad: Callable
+
+
+PALLAS = Ops(
+    name="pallas",
+    matmul=matmul.matmul,
+    dense_relu=mlp.dense_relu,
+    dense=mlp.dense,
+    penalty_combine=elementwise.penalty_combine,
+    exp_reg_grad=elementwise.exp_reg_grad,
+)
+
+JNP = Ops(
+    name="jnp",
+    matmul=ref.matmul,
+    dense_relu=ref.dense_relu,
+    dense=ref.dense,
+    penalty_combine=ref.penalty_combine,
+    exp_reg_grad=ref.exp_reg_grad,
+)
+
+
+def get_ops(use_pallas: bool) -> Ops:
+    return PALLAS if use_pallas else JNP
+
+
+def cross_entropy(logits: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy against one-hot targets."""
+    logz = logits - jnp.max(logits, axis=1, keepdims=True)
+    logz = logz - jnp.log(jnp.sum(jnp.exp(logz), axis=1, keepdims=True))
+    return -jnp.mean(jnp.sum(onehot * logz, axis=1))
+
+
+def accuracy(logits: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    pred = jnp.argmax(logits, axis=1)
+    truth = jnp.argmax(onehot, axis=1)
+    return jnp.mean((pred == truth).astype(jnp.float32))

@@ -1,0 +1,154 @@
+"""L2 oracle bundle for the Coefficient-Tuning task (paper §6.1).
+
+Bilevel problem per node i (20-Newsgroups-style linear classifier with a
+per-feature exponential regularizer tuned at the upper level):
+
+    f_i(x, y) = CE(A_val · Y, B_val)                       (upper / validation)
+    g_i(x, y) = CE(A_tr  · Y, B_tr) + Σ_fc exp(x_f) Y_fc²  (lower / training)
+
+with x ∈ R^F (log regularization weights) and Y ∈ R^{F×C} flattened to
+y ∈ R^{F·C}.  Note ∇_x f ≡ 0 for this task; the hypergradient reduces to
+``u = λ (∇_x g(x,y) − ∇_x g(x,z))`` with ∇_x g(x,·) = exp(x) ⊙ Σ_c (·)².
+
+Every entry point takes and returns flat f32 arrays so the Rust runtime can
+marshal buffers straight from its parameter vectors.  λ is a runtime scalar
+input (not baked into the HLO) so the Fig. 5 sensitivity sweep does not
+re-AOT.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .ops import Ops, accuracy, cross_entropy
+
+
+@dataclass(frozen=True)
+class CoeffDims:
+    features: int
+    classes: int
+    n_train: int
+    n_val: int
+
+    @property
+    def dx(self) -> int:
+        return self.features
+
+    @property
+    def dy(self) -> int:
+        return self.features * self.classes
+
+    def to_dict(self) -> dict:
+        return {
+            "features": self.features,
+            "classes": self.classes,
+            "n_train": self.n_train,
+            "n_val": self.n_val,
+            "dx": self.dx,
+            "dy": self.dy,
+        }
+
+
+FULL = CoeffDims(features=2000, classes=10, n_train=256, n_val=128)
+TINY = CoeffDims(features=64, classes=4, n_train=32, n_val=16)
+
+
+def build(dims: CoeffDims, k: Ops) -> dict:
+    """Return ``{entry_name: (fn, example_args)}`` for AOT lowering."""
+    F, C = dims.features, dims.classes
+
+    def unpack(yf):
+        return yf.reshape(F, C)
+
+    def g_loss(x, yf, atr, btr):
+        y = unpack(yf)
+        logits = k.matmul(atr, y)
+        r = jnp.sum(y * y, axis=1)  # Σ_c y_fc² per feature
+        reg = jnp.sum(k.exp_reg_grad(x, r))
+        return cross_entropy(logits, btr) + reg
+
+    def f_loss(yf, aval, bval):
+        logits = k.matmul(aval, unpack(yf))
+        return cross_entropy(logits, bval)
+
+    def h_loss(x, yf, lam, atr, btr, aval, bval):
+        return f_loss(yf, aval, bval) + lam * g_loss(x, yf, atr, btr)
+
+    # --- C²DFB first-order oracles -------------------------------------
+    def inner_y(x, yf, lam, atr, btr, aval, bval):
+        """∇_y h(x, y) — inner-loop oracle for the y sequence."""
+        return (jax.grad(h_loss, argnums=1)(x, yf, lam, atr, btr, aval, bval),)
+
+    def inner_z(x, zf, atr, btr):
+        """∇_y g(x, z) — inner-loop oracle for the z sequence."""
+        return (jax.grad(g_loss, argnums=1)(x, zf, atr, btr),)
+
+    def hyper(x, yf, zf, lam):
+        """Fully first-order hypergradient u (paper Eq. 4).
+
+        ∇_x g(x, ·) has the closed form exp(x) ⊙ Σ_c (·)², assembled with
+        the fused Pallas kernels; ∇_x f ≡ 0 for this task.
+        """
+        ry = jnp.sum(unpack(yf) ** 2, axis=1)
+        rz = jnp.sum(unpack(zf) ** 2, axis=1)
+        gy = k.exp_reg_grad(x, ry)
+        gz = k.exp_reg_grad(x, rz)
+        return (k.penalty_combine(jnp.zeros_like(x), gy, gz, lam),)
+
+    def evaluate(yf, aval, bval):
+        """(validation CE loss, accuracy) for the upper-level metric."""
+        logits = k.matmul(aval, unpack(yf))
+        return cross_entropy(logits, bval), accuracy(logits, bval)
+
+    # --- Second-order oracles (baselines MADSBO / MDBO only) -----------
+    # Closed forms: the CE Hessian-vector product is
+    #   (∇²_yy CE)·V = Aᵀ[p⊙(AV) − p⊙rowsum(p⊙(AV))]/N
+    # and the regularizer contributes 2 exp(x) ⊙ V; the cross term is
+    #   (∇²_xy g)·V = 2 exp(x) ⊙ Σ_c y ⊙ V.
+    # (custom_vjp kernels are not twice-differentiable, so these are
+    # written out rather than derived by reverse-over-reverse.)
+    def _softmax(logits):
+        z = logits - jnp.max(logits, axis=1, keepdims=True)
+        e = jnp.exp(z)
+        return e / jnp.sum(e, axis=1, keepdims=True)
+
+    def hvp_yy_g(x, yf, v, atr, btr):
+        y, vv = unpack(yf), unpack(v)
+        p = _softmax(k.matmul(atr, y))
+        q = k.matmul(atr, vv)
+        w = p * q - p * jnp.sum(p * q, axis=1, keepdims=True)
+        h = k.matmul(atr.T, w) / dims.n_train + 2.0 * jnp.exp(x)[:, None] * vv
+        return (h.reshape(-1),)
+
+    def jvp_xy_g(x, yf, v):
+        y, vv = unpack(yf), unpack(v)
+        return (2.0 * jnp.exp(x) * jnp.sum(y * vv, axis=1),)
+
+    def grad_y_f(yf, aval, bval):
+        return (jax.grad(f_loss, argnums=0)(yf, aval, bval),)
+
+    def grad_x_f(x, yf):
+        return (jnp.zeros_like(x),)
+
+    f32 = jnp.float32
+    x_s = jax.ShapeDtypeStruct((F,), f32)
+    y_s = jax.ShapeDtypeStruct((F * C,), f32)
+    lam_s = jax.ShapeDtypeStruct((), f32)
+    atr_s = jax.ShapeDtypeStruct((dims.n_train, F), f32)
+    btr_s = jax.ShapeDtypeStruct((dims.n_train, C), f32)
+    aval_s = jax.ShapeDtypeStruct((dims.n_val, F), f32)
+    bval_s = jax.ShapeDtypeStruct((dims.n_val, C), f32)
+
+    return {
+        "inner_y": (inner_y, (x_s, y_s, lam_s, atr_s, btr_s, aval_s, bval_s)),
+        "inner_z": (inner_z, (x_s, y_s, atr_s, btr_s)),
+        "hyper": (hyper, (x_s, y_s, y_s, lam_s)),
+        "eval": (evaluate, (y_s, aval_s, bval_s)),
+        "hvp_yy_g": (hvp_yy_g, (x_s, y_s, y_s, atr_s, btr_s)),
+        "jvp_xy_g": (jvp_xy_g, (x_s, y_s, y_s)),
+        "grad_y_f": (grad_y_f, (y_s, aval_s, bval_s)),
+        "grad_x_f": (grad_x_f, (x_s, y_s)),
+    }

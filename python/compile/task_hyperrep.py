@@ -1,0 +1,182 @@
+"""L2 oracle bundle for the Hyper-Representation task (paper §6.2).
+
+Three-layer MLP on MNIST-shaped data; the *outer* variable x is the flattened
+backbone (input→h1→h2, ReLU), the *inner* variable y is the flattened linear
+classification head (h2→classes):
+
+    f_i(x, y) = CE(head(backbone(A_val; x); y), B_val)           (upper)
+    g_i(x, y) = CE(head(backbone(A_tr;  x); y), B_tr) + (μ/2)‖y‖² (lower)
+
+The small ridge term (HEAD_REG) makes g strongly convex in y, matching
+Assumption 2.  With the paper's sizes (784→100→64→10) the backbone has
+84,964 parameters and the head 650 — the dx ≫ dy asymmetry that drives the
+compression story.
+
+All entry points are flat-f32 in/out; λ is a runtime scalar input.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .ops import Ops, accuracy, cross_entropy
+
+HEAD_REG = 5e-4
+
+
+@dataclass(frozen=True)
+class HyperRepDims:
+    inputs: int
+    hidden1: int
+    hidden2: int
+    classes: int
+    n_train: int
+    n_val: int
+
+    @property
+    def dx(self) -> int:
+        return (
+            self.inputs * self.hidden1
+            + self.hidden1
+            + self.hidden1 * self.hidden2
+            + self.hidden2
+        )
+
+    @property
+    def dy(self) -> int:
+        return self.hidden2 * self.classes + self.classes
+
+    def to_dict(self) -> dict:
+        return {
+            "inputs": self.inputs,
+            "hidden1": self.hidden1,
+            "hidden2": self.hidden2,
+            "classes": self.classes,
+            "n_train": self.n_train,
+            "n_val": self.n_val,
+            "dx": self.dx,
+            "dy": self.dy,
+        }
+
+
+FULL = HyperRepDims(inputs=784, hidden1=100, hidden2=64, classes=10, n_train=256, n_val=128)
+TINY = HyperRepDims(inputs=16, hidden1=8, hidden2=8, classes=4, n_train=32, n_val=16)
+
+
+def build(dims: HyperRepDims, k: Ops) -> dict:
+    I, H1, H2, C = dims.inputs, dims.hidden1, dims.hidden2, dims.classes
+
+    def unpack_x(xf):
+        o = 0
+        w1 = xf[o : o + I * H1].reshape(I, H1); o += I * H1
+        b1 = xf[o : o + H1]; o += H1
+        w2 = xf[o : o + H1 * H2].reshape(H1, H2); o += H1 * H2
+        b2 = xf[o : o + H2]; o += H2
+        return w1, b1, w2, b2
+
+    def unpack_y(yf):
+        w3 = yf[: H2 * C].reshape(H2, C)
+        b3 = yf[H2 * C :]
+        return w3, b3
+
+    def logits(xf, yf, a):
+        w1, b1, w2, b2 = unpack_x(xf)
+        w3, b3 = unpack_y(yf)
+        h1 = k.dense_relu(a, w1, b1)
+        h2 = k.dense_relu(h1, w2, b2)
+        return k.dense(h2, w3, b3)
+
+    def g_loss(xf, yf, atr, btr):
+        return cross_entropy(logits(xf, yf, atr), btr) + 0.5 * HEAD_REG * jnp.vdot(yf, yf)
+
+    def f_loss(xf, yf, aval, bval):
+        return cross_entropy(logits(xf, yf, aval), bval)
+
+    def h_loss(xf, yf, lam, atr, btr, aval, bval):
+        return f_loss(xf, yf, aval, bval) + lam * g_loss(xf, yf, atr, btr)
+
+    # --- C²DFB first-order oracles -------------------------------------
+    def inner_y(xf, yf, lam, atr, btr, aval, bval):
+        return (jax.grad(h_loss, argnums=1)(xf, yf, lam, atr, btr, aval, bval),)
+
+    def inner_z(xf, zf, atr, btr):
+        return (jax.grad(g_loss, argnums=1)(xf, zf, atr, btr),)
+
+    def hyper(xf, yf, zf, lam, atr, btr, aval, bval):
+        """u = ∇_x f(x,y) + λ(∇_x g(x,y) − ∇_x g(x,z)), assembled via the
+        fused penalty kernel from three backbone backward passes."""
+        gxf = jax.grad(f_loss, argnums=0)(xf, yf, aval, bval)
+        gxy = jax.grad(g_loss, argnums=0)(xf, yf, atr, btr)
+        gxz = jax.grad(g_loss, argnums=0)(xf, zf, atr, btr)
+        return (k.penalty_combine(gxf, gxy, gxz, lam),)
+
+    def evaluate(xf, yf, aval, bval):
+        lg = logits(xf, yf, aval)
+        return cross_entropy(lg, bval), accuracy(lg, bval)
+
+    # --- Second-order oracles (baselines only) --------------------------
+    # g is CE in the *head* only, so with features H2 = backbone(x; A) the
+    # y-Hessian has the closed CE form (custom_vjp kernels are not
+    # twice-differentiable, so we write it out).  The cross term ∇²_xy g · v
+    # is a single reverse pass over x of ⟨∇_y g (closed form), v⟩.
+    def _softmax(lg):
+        z = lg - jnp.max(lg, axis=1, keepdims=True)
+        e = jnp.exp(z)
+        return e / jnp.sum(e, axis=1, keepdims=True)
+
+    def backbone(xf, a):
+        w1, b1, w2, b2 = unpack_x(xf)
+        return k.dense_relu(k.dense_relu(a, w1, b1), w2, b2)
+
+    def grad_y_g_closed(xf, yf, atr, btr):
+        h2 = backbone(xf, atr)
+        w3, b3 = unpack_y(yf)
+        p = _softmax(k.dense(h2, w3, b3))
+        r = (p - btr) / dims.n_train
+        gw = k.matmul(h2.T, r)
+        gb = jnp.sum(r, axis=0)
+        return jnp.concatenate([gw.reshape(-1), gb]) + HEAD_REG * yf
+
+    def hvp_yy_g(xf, yf, v, atr, btr):
+        h2 = backbone(xf, atr)
+        w3, b3 = unpack_y(yf)
+        vw, vb = unpack_y(v)
+        p = _softmax(k.dense(h2, w3, b3))
+        q = k.matmul(h2, vw) + vb[None, :]
+        w = p * q - p * jnp.sum(p * q, axis=1, keepdims=True)
+        hw = k.matmul(h2.T, w) / dims.n_train
+        hb = jnp.sum(w, axis=0) / dims.n_train
+        return (jnp.concatenate([hw.reshape(-1), hb]) + HEAD_REG * v,)
+
+    def jvp_xy_g(xf, yf, v, atr, btr):
+        phi = lambda xx: jnp.vdot(grad_y_g_closed(xx, yf, atr, btr), v)
+        return (jax.grad(phi)(xf),)
+
+    def grad_y_f(xf, yf, aval, bval):
+        return (jax.grad(f_loss, argnums=1)(xf, yf, aval, bval),)
+
+    def grad_x_f(xf, yf, aval, bval):
+        return (jax.grad(f_loss, argnums=0)(xf, yf, aval, bval),)
+
+    f32 = jnp.float32
+    x_s = jax.ShapeDtypeStruct((dims.dx,), f32)
+    y_s = jax.ShapeDtypeStruct((dims.dy,), f32)
+    lam_s = jax.ShapeDtypeStruct((), f32)
+    atr_s = jax.ShapeDtypeStruct((dims.n_train, I), f32)
+    btr_s = jax.ShapeDtypeStruct((dims.n_train, C), f32)
+    aval_s = jax.ShapeDtypeStruct((dims.n_val, I), f32)
+    bval_s = jax.ShapeDtypeStruct((dims.n_val, C), f32)
+
+    return {
+        "inner_y": (inner_y, (x_s, y_s, lam_s, atr_s, btr_s, aval_s, bval_s)),
+        "inner_z": (inner_z, (x_s, y_s, atr_s, btr_s)),
+        "hyper": (hyper, (x_s, y_s, y_s, lam_s, atr_s, btr_s, aval_s, bval_s)),
+        "eval": (evaluate, (x_s, y_s, aval_s, bval_s)),
+        "hvp_yy_g": (hvp_yy_g, (x_s, y_s, y_s, atr_s, btr_s)),
+        "jvp_xy_g": (jvp_xy_g, (x_s, y_s, y_s, atr_s, btr_s)),
+        "grad_y_f": (grad_y_f, (x_s, y_s, aval_s, bval_s)),
+        "grad_x_f": (grad_x_f, (x_s, y_s, aval_s, bval_s)),
+    }

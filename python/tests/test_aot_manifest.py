@@ -1,0 +1,81 @@
+"""AOT pipeline: HLO text well-formedness + manifest/shape consistency."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import pytest
+
+from compile import aot, model
+
+REPO = Path(__file__).resolve().parents[2]
+ART = REPO / "artifacts"
+
+
+def test_presets_registry_complete():
+    reg = model.presets()
+    for name in ["coeff", "coeff_tiny", "coeff_jnp", "hyperrep", "hyperrep_tiny", "hyperrep_jnp", "demo"]:
+        assert name in reg
+    for pname, preset in reg.items():
+        entries = preset.build()
+        assert entries, pname
+        if preset.task != "demo":
+            for e in ["inner_y", "inner_z", "hyper", "eval", "hvp_yy_g", "jvp_xy_g", "grad_y_f", "grad_x_f"]:
+                assert e in entries, f"{pname} missing {e}"
+
+
+def test_lower_entry_emits_parseable_hlo_text():
+    reg = model.presets()
+    fn, ex = reg["demo"].build()["affine"]
+    text, in_specs, out_specs = aot.lower_entry(fn, ex)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ROOT" in text
+    assert len(in_specs) == 2 and in_specs[0]["shape"] == [8, 8]
+    assert out_specs[0]["shape"] == [8, 8]
+
+
+def test_manifest_shapes_match_eval_shape():
+    """For the tiny presets, the on-disk manifest must agree with what the
+    registry would lower today (guards against stale artifacts)."""
+    if not (ART / "manifest.json").exists():
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    manifest = json.loads((ART / "manifest.json").read_text())
+    reg = model.presets()
+    for pname in ["coeff_tiny", "hyperrep_tiny"]:
+        if pname not in manifest["presets"]:
+            pytest.skip(f"{pname} not in manifest")
+        entries = reg[pname].build()
+        for ename, (fn, ex) in entries.items():
+            key = f"{pname}.{ename}"
+            ment = manifest["entries"][key]
+            assert (ART / ment["file"]).exists(), key
+            got_in = [list(s.shape) for s in ex]
+            assert [e["shape"] for e in ment["inputs"]] == got_in, key
+            outs = jax.eval_shape(fn, *ex)
+            assert [e["shape"] for e in ment["outputs"]] == [list(o.shape) for o in outs], key
+
+
+def test_manifest_records_kernel_backend():
+    if not (ART / "manifest.json").exists():
+        pytest.skip("artifacts not built")
+    manifest = json.loads((ART / "manifest.json").read_text())
+    for key, ent in manifest["entries"].items():
+        assert ent["kernels"] in ("pallas", "jnp"), key
+    presets = manifest["presets"]
+    if "coeff" in presets and "coeff_jnp" in presets:
+        assert presets["coeff"]["kernels"] == "pallas"
+        assert presets["coeff_jnp"]["kernels"] == "jnp"
+
+
+def test_hlo_files_reference_no_custom_calls():
+    """interpret=True must lower to plain HLO — a Mosaic custom-call would
+    be unloadable by the CPU PJRT client."""
+    if not (ART / "manifest.json").exists():
+        pytest.skip("artifacts not built")
+    manifest = json.loads((ART / "manifest.json").read_text())
+    for key, ent in manifest["entries"].items():
+        text = (ART / ent["file"]).read_text()
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower(), key

@@ -1,0 +1,65 @@
+"""Fused elementwise Pallas kernels vs jnp oracles."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise, ref
+
+DIM = st.integers(min_value=1, max_value=5000)
+
+
+def _rand(n, seed, scale=1.0):
+    return jnp.asarray(np.random.RandomState(seed).randn(n) * scale, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=DIM, lam=st.floats(0.0, 100.0), seed=st.integers(0, 2**16))
+def test_penalty_combine(d, lam, seed):
+    gxf, gy, gz = _rand(d, seed), _rand(d, seed + 1), _rand(d, seed + 2)
+    got = elementwise.penalty_combine(gxf, gy, gz, jnp.float32(lam))
+    want = ref.penalty_combine(gxf, gy, gz, lam)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=DIM, seed=st.integers(0, 2**16))
+def test_exp_reg_grad(d, seed):
+    x = _rand(d, seed, scale=0.5)
+    r = jnp.abs(_rand(d, seed + 1))
+    np.testing.assert_allclose(
+        elementwise.exp_reg_grad(x, r), ref.exp_reg_grad(x, r), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_exp_reg_grad_vjp():
+    x = _rand(300, 0, scale=0.3)
+    r = jnp.abs(_rand(300, 1))
+    f_k = lambda x, r: jnp.sum(elementwise.exp_reg_grad(x, r) ** 2)
+    f_r = lambda x, r: jnp.sum(ref.exp_reg_grad(x, r) ** 2)
+    gk = jax.grad(f_k, (0, 1))(x, r)
+    gr = jax.grad(f_r, (0, 1))(x, r)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 100), n=st.integers(1, 100), seed=st.integers(0, 2**16))
+def test_relu_with_mask(m, n, seed):
+    x = jnp.asarray(np.random.RandomState(seed).randn(m, n), jnp.float32)
+    got_v, got_m = elementwise.relu_with_mask(x)
+    want_v, want_m = ref.relu_with_mask(x)
+    np.testing.assert_allclose(got_v, want_v)
+    np.testing.assert_allclose(got_m, want_m)
+
+
+def test_penalty_combine_zero_lambda_is_identity_on_gxf():
+    gxf, gy, gz = _rand(77, 3), _rand(77, 4), _rand(77, 5)
+    got = elementwise.penalty_combine(gxf, gy, gz, jnp.float32(0.0))
+    np.testing.assert_allclose(got, gxf, rtol=1e-6)

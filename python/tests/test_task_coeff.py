@@ -1,0 +1,149 @@
+"""Coefficient-tuning oracles (Pallas build) vs independent jnp autodiff.
+
+The reference side here is written from the math, NOT from compile.ops —
+plain jnp losses differentiated by jax.grad / reverse-over-reverse — so it
+independently checks both the closed-form second-order oracles and the
+custom-VJP plumbing of the Pallas build.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import task_coeff
+from compile.ops import get_ops
+
+DIMS = task_coeff.TINY
+F, C, NTR, NVAL = DIMS.features, DIMS.classes, DIMS.n_train, DIMS.n_val
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return task_coeff.build(DIMS, get_ops(use_pallas=True))
+
+
+@pytest.fixture(scope="module")
+def data():
+    rs = np.random.RandomState(42)
+    x = jnp.asarray(rs.randn(F) * 0.1, jnp.float32)
+    y = jnp.asarray(rs.randn(F * C) * 0.1, jnp.float32)
+    z = jnp.asarray(rs.randn(F * C) * 0.1, jnp.float32)
+    v = jnp.asarray(rs.randn(F * C), jnp.float32)
+    atr = jnp.asarray(rs.randn(NTR, F), jnp.float32)
+    btr = jnp.asarray(np.eye(C, dtype=np.float32)[rs.randint(0, C, NTR)])
+    aval = jnp.asarray(rs.randn(NVAL, F), jnp.float32)
+    bval = jnp.asarray(np.eye(C, dtype=np.float32)[rs.randint(0, C, NVAL)])
+    return x, y, z, v, atr, btr, aval, bval
+
+
+def _ce(logits, onehot):
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(onehot * logz, axis=1))
+
+
+def g_jnp(x, yf, atr, btr):
+    y = yf.reshape(F, C)
+    return _ce(atr @ y, btr) + jnp.sum(jnp.exp(x)[:, None] * y * y)
+
+
+def f_jnp(yf, aval, bval):
+    return _ce(aval @ yf.reshape(F, C), bval)
+
+
+LAM = jnp.float32(7.5)
+
+
+def test_inner_y_is_grad_of_h(entries, data):
+    x, y, _, _, atr, btr, aval, bval = data
+    (got,) = entries["inner_y"][0](x, y, LAM, atr, btr, aval, bval)
+    want = jax.grad(
+        lambda yy: f_jnp(yy, aval, bval) + LAM * g_jnp(x, yy, atr, btr)
+    )(y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_inner_z_is_grad_of_g(entries, data):
+    x, _, z, _, atr, btr, _, _ = data
+    (got,) = entries["inner_z"][0](x, z, atr, btr)
+    want = jax.grad(lambda zz: g_jnp(x, zz, atr, btr))(z)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_hyper_matches_autodiff_penalty_gradient(entries, data):
+    x, y, z, _, atr, btr, _, _ = data
+    (got,) = entries["hyper"][0](x, y, z, LAM)
+    gxy = jax.grad(lambda xx: g_jnp(xx, y, atr, btr))(x)
+    gxz = jax.grad(lambda xx: g_jnp(xx, z, atr, btr))(x)
+    want = LAM * (gxy - gxz)  # ∇x f ≡ 0 for this task
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_eval_loss_and_accuracy(entries, data):
+    _, y, _, _, _, _, aval, bval = data
+    loss, acc = entries["eval"][0](y, aval, bval)
+    np.testing.assert_allclose(loss, f_jnp(y, aval, bval), rtol=1e-5)
+    pred = jnp.argmax(aval @ y.reshape(F, C), axis=1)
+    want_acc = jnp.mean((pred == jnp.argmax(bval, axis=1)).astype(jnp.float32))
+    np.testing.assert_allclose(acc, want_acc)
+
+
+def test_hvp_yy_matches_reverse_over_reverse(entries, data):
+    x, y, _, v, atr, btr, _, _ = data
+    (got,) = entries["hvp_yy_g"][0](x, y, v, atr, btr)
+    want = jax.grad(
+        lambda yy: jnp.vdot(jax.grad(lambda w: g_jnp(x, w, atr, btr))(yy), v)
+    )(y)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_jvp_xy_matches_reverse_over_reverse(entries, data):
+    x, y, _, v, atr, btr, _, _ = data
+    (got,) = entries["jvp_xy_g"][0](x, y, v)
+    want = jax.grad(
+        lambda xx: jnp.vdot(jax.grad(lambda w: g_jnp(xx, w, atr, btr))(y), v)
+    )(x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_grad_y_f(entries, data):
+    _, y, _, _, _, _, aval, bval = data
+    (got,) = entries["grad_y_f"][0](y, aval, bval)
+    want = jax.grad(lambda yy: f_jnp(yy, aval, bval))(y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_grad_x_f_is_zero(entries, data):
+    x, y = data[0], data[1]
+    (got,) = entries["grad_x_f"][0](x, y)
+    np.testing.assert_allclose(got, jnp.zeros_like(x))
+
+
+def test_hvp_is_symmetric_psd_direction(entries, data):
+    """g is strongly convex in y ⇒ vᵀ(∇²_yy g)v ≥ 2·min(exp(x))·‖v‖²."""
+    x, y, _, v, atr, btr, _, _ = data
+    (hv,) = entries["hvp_yy_g"][0](x, y, v, atr, btr)
+    quad = float(jnp.vdot(v, hv))
+    mu = 2.0 * float(jnp.min(jnp.exp(x)))
+    assert quad >= mu * float(jnp.vdot(v, v)) * 0.999
+
+
+def test_pallas_and_jnp_variants_agree(data):
+    x, y, z, v, atr, btr, aval, bval = data
+    ep = task_coeff.build(DIMS, get_ops(True))
+    ej = task_coeff.build(DIMS, get_ops(False))
+    for name, args in [
+        ("inner_y", (x, y, LAM, atr, btr, aval, bval)),
+        ("inner_z", (x, z, atr, btr)),
+        ("hyper", (x, y, z, LAM)),
+        ("hvp_yy_g", (x, y, v, atr, btr)),
+    ]:
+        got = ep[name][0](*args)
+        want = ej[name][0](*args)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4, err_msg=name)

@@ -1,0 +1,166 @@
+"""Hyper-representation oracles (Pallas build) vs independent jnp autodiff."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import task_hyperrep
+from compile.ops import get_ops
+
+DIMS = task_hyperrep.TINY
+I, H1, H2, C = DIMS.inputs, DIMS.hidden1, DIMS.hidden2, DIMS.classes
+NTR, NVAL = DIMS.n_train, DIMS.n_val
+REG = task_hyperrep.HEAD_REG
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return task_hyperrep.build(DIMS, get_ops(use_pallas=True))
+
+
+@pytest.fixture(scope="module")
+def data():
+    rs = np.random.RandomState(7)
+    x = jnp.asarray(rs.randn(DIMS.dx) * 0.2, jnp.float32)
+    y = jnp.asarray(rs.randn(DIMS.dy) * 0.2, jnp.float32)
+    z = jnp.asarray(rs.randn(DIMS.dy) * 0.2, jnp.float32)
+    v = jnp.asarray(rs.randn(DIMS.dy), jnp.float32)
+    atr = jnp.asarray(rs.randn(NTR, I), jnp.float32)
+    btr = jnp.asarray(np.eye(C, dtype=np.float32)[rs.randint(0, C, NTR)])
+    aval = jnp.asarray(rs.randn(NVAL, I), jnp.float32)
+    bval = jnp.asarray(np.eye(C, dtype=np.float32)[rs.randint(0, C, NVAL)])
+    return x, y, z, v, atr, btr, aval, bval
+
+
+def _unpack_x(xf):
+    o = 0
+    w1 = xf[o : o + I * H1].reshape(I, H1); o += I * H1
+    b1 = xf[o : o + H1]; o += H1
+    w2 = xf[o : o + H1 * H2].reshape(H1, H2); o += H1 * H2
+    b2 = xf[o : o + H2]; o += H2
+    return w1, b1, w2, b2
+
+
+def _logits(xf, yf, a):
+    w1, b1, w2, b2 = _unpack_x(xf)
+    w3 = yf[: H2 * C].reshape(H2, C)
+    b3 = yf[H2 * C :]
+    h1 = jnp.maximum(a @ w1 + b1[None, :], 0.0)
+    h2 = jnp.maximum(h1 @ w2 + b2[None, :], 0.0)
+    return h2 @ w3 + b3[None, :]
+
+
+def _ce(logits, onehot):
+    return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=1))
+
+
+def g_jnp(xf, yf, atr, btr):
+    return _ce(_logits(xf, yf, atr), btr) + 0.5 * REG * jnp.vdot(yf, yf)
+
+
+def f_jnp(xf, yf, aval, bval):
+    return _ce(_logits(xf, yf, aval), bval)
+
+
+LAM = jnp.float32(4.0)
+
+
+def test_inner_y_is_grad_of_h(entries, data):
+    x, y, _, _, atr, btr, aval, bval = data
+    (got,) = entries["inner_y"][0](x, y, LAM, atr, btr, aval, bval)
+    want = jax.grad(
+        lambda yy: f_jnp(x, yy, aval, bval) + LAM * g_jnp(x, yy, atr, btr),
+    )(y)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_inner_z_is_grad_of_g(entries, data):
+    x, _, z, _, atr, btr, _, _ = data
+    (got,) = entries["inner_z"][0](x, z, atr, btr)
+    want = jax.grad(lambda zz: g_jnp(x, zz, atr, btr))(z)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_hyper_matches_autodiff_penalty_gradient(entries, data):
+    x, y, z, _, atr, btr, aval, bval = data
+    (got,) = entries["hyper"][0](x, y, z, LAM, atr, btr, aval, bval)
+    gxf = jax.grad(lambda xx: f_jnp(xx, y, aval, bval))(x)
+    gxy = jax.grad(lambda xx: g_jnp(xx, y, atr, btr))(x)
+    gxz = jax.grad(lambda xx: g_jnp(xx, z, atr, btr))(x)
+    want = gxf + LAM * (gxy - gxz)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_eval(entries, data):
+    x, y, _, _, _, _, aval, bval = data
+    loss, acc = entries["eval"][0](x, y, aval, bval)
+    np.testing.assert_allclose(loss, f_jnp(x, y, aval, bval), rtol=1e-4)
+    pred = jnp.argmax(_logits(x, y, aval), axis=1)
+    want_acc = jnp.mean((pred == jnp.argmax(bval, axis=1)).astype(jnp.float32))
+    np.testing.assert_allclose(acc, want_acc)
+
+
+def test_hvp_yy_matches_reverse_over_reverse(entries, data):
+    x, y, _, v, atr, btr, _, _ = data
+    (got,) = entries["hvp_yy_g"][0](x, y, v, atr, btr)
+    want = jax.grad(
+        lambda yy: jnp.vdot(jax.grad(lambda w: g_jnp(x, w, atr, btr))(yy), v)
+    )(y)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_jvp_xy_matches_reverse_over_reverse(entries, data):
+    x, y, _, v, atr, btr, _, _ = data
+    (got,) = entries["jvp_xy_g"][0](x, y, v, atr, btr)
+    want = jax.grad(
+        lambda xx: jnp.vdot(jax.grad(lambda w: g_jnp(xx, w, atr, btr))(y), v)
+    )(x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-4)
+
+
+def test_grad_y_f_and_grad_x_f(entries, data):
+    x, y, _, _, _, _, aval, bval = data
+    (gy,) = entries["grad_y_f"][0](x, y, aval, bval)
+    (gx,) = entries["grad_x_f"][0](x, y, aval, bval)
+    np.testing.assert_allclose(
+        gy, jax.grad(lambda yy: f_jnp(x, yy, aval, bval))(y), rtol=1e-3, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        gx, jax.grad(lambda xx: f_jnp(xx, y, aval, bval))(x), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_head_hessian_strong_convexity(entries, data):
+    """vᵀ(∇²_yy g)v ≥ REG·‖v‖² — Assumption 2 holds by construction."""
+    x, y, _, v, atr, btr, _, _ = data
+    (hv,) = entries["hvp_yy_g"][0](x, y, v, atr, btr)
+    assert float(jnp.vdot(v, hv)) >= 0.999 * REG * float(jnp.vdot(v, v))
+
+
+def test_dims_match_paper_scale():
+    """Full preset ≈ paper's 81,902 backbone / 640 head split."""
+    full = task_hyperrep.FULL
+    assert 80_000 <= full.dx <= 90_000
+    assert 600 <= full.dy <= 700
+
+
+def test_pallas_and_jnp_variants_agree(data):
+    x, y, z, v, atr, btr, aval, bval = data
+    ep = task_hyperrep.build(DIMS, get_ops(True))
+    ej = task_hyperrep.build(DIMS, get_ops(False))
+    for name, args in [
+        ("inner_y", (x, y, LAM, atr, btr, aval, bval)),
+        ("inner_z", (x, z, atr, btr)),
+        ("hyper", (x, y, z, LAM, atr, btr, aval, bval)),
+        ("grad_x_f", (x, y, aval, bval)),
+    ]:
+        got = ep[name][0](*args)
+        want = ej[name][0](*args)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4, err_msg=name)

@@ -1,0 +1,44 @@
+//! Figure benches: bench-sized versions of the Fig. 2/4 (coefficient
+//! tuning grid), Fig. 3/6 (hyper-representation grid) and Fig. 5
+//! (sensitivity) harnesses.  Full-scale regeneration is `c2dfb all`; this
+//! binary runs reduced-round versions so `cargo bench` exercises every
+//! figure path end to end and prints the same rows.
+//!
+//! ```bash
+//! cargo bench --bench figures [-- fig2|fig3|fig5|ablation]
+//! ```
+
+use c2dfb::coordinator::experiments::{compressor_ablation, fig2, fig3, fig5, HarnessOpts};
+use c2dfb::runtime::ArtifactRegistry;
+
+fn main() {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with("--"));
+    let want = |name: &str| filter.as_deref().map(|f| name.contains(f)).unwrap_or(true);
+
+    let reg = match ArtifactRegistry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = HarnessOpts {
+        rounds: 6,
+        out_dir: "runs/bench".into(),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    if want("fig2") || want("fig4") {
+        fig2(&reg, &opts).expect("fig2 harness failed");
+    }
+    if want("fig3") || want("fig6") {
+        fig3(&reg, &opts).expect("fig3 harness failed");
+    }
+    if want("fig5") {
+        fig5(&reg, &opts).expect("fig5 harness failed");
+    }
+    if want("ablation") {
+        compressor_ablation(&reg, &opts).expect("ablation harness failed");
+    }
+    println!("\nfigures bench completed in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,52 @@
+//! Inner-loop (Algorithm 2) benchmark on the analytic quadratic: isolates
+//! the L3 coordination cost (mixing + compression + tracking bookkeeping)
+//! from oracle latency, and reports bytes per inner step per compressor —
+//! the convergence-theory sanity row of the DESIGN.md experiment index.
+
+use c2dfb::collective::Network;
+use c2dfb::compress::parse;
+use c2dfb::optim::{run_inner, InnerConfig, InnerState};
+use c2dfb::tasks::{BilevelTask, QuadraticTask};
+use c2dfb::topology::{Graph, Topology};
+use c2dfb::util::bench::{black_box, Bencher};
+use c2dfb::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let m = 10;
+    for dim in [2_000usize, 20_000] {
+        let task = QuadraticTask::generate(m, dim, 0.8, 5);
+        let x = task.init_x(&mut Rng::new(1));
+        let xs: Vec<Vec<f32>> = vec![x; m];
+        for spec in ["topk:0.2", "qsgd:16", "none"] {
+            let q = parse(spec).unwrap();
+            let mut net = Network::new(Graph::build(Topology::Ring, m));
+            let mut rng = Rng::new(2);
+            let mut state = InnerState::new(&net, dim);
+            let mut d = vec![vec![0.0f32; dim]; m];
+            let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 1 };
+            let xs_ref = &xs;
+            let before = net.ledger.total_bytes;
+            b.bench(&format!("inner_step/m10/d{dim}/{spec}"), || {
+                run_inner(
+                    &cfg,
+                    &mut net,
+                    q.as_ref(),
+                    &mut rng,
+                    &mut state,
+                    &mut d,
+                    |i, z| task.inner_z_grad(i, &xs_ref[i], z).unwrap(),
+                );
+                black_box(d[0][0])
+            });
+            let steps = net.ledger.gossip_rounds / 2; // 2 exchanges per step
+            if steps > 0 {
+                println!(
+                    "      └─ {:.1} KiB per inner step (all nodes)",
+                    (net.ledger.total_bytes - before) as f64 / steps as f64 / 1024.0
+                );
+            }
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,109 @@
+//! Micro-benchmarks for the L3 hot path: compressors, gossip mixing,
+//! reference-point updates, tracking, and PJRT oracle latency.
+//!
+//! ```bash
+//! cargo bench --bench micro [-- filter]
+//! ```
+
+use c2dfb::collective::Network;
+use c2dfb::compress::{parse, Compressor};
+use c2dfb::config::ExperimentConfig;
+use c2dfb::coordinator::build_task;
+use c2dfb::optim::RefPoint;
+use c2dfb::runtime::ArtifactRegistry;
+use c2dfb::tasks::BilevelTask;
+use c2dfb::topology::{Graph, MixingMatrix, Topology};
+use c2dfb::util::bench::{black_box, Bencher};
+use c2dfb::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rng = Rng::new(1);
+
+    // --- compressors at the coeff-task message size (dy = 20_000) -------
+    let d = 20_000;
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    for spec in ["topk:0.2", "topk:0.05", "randk:0.2", "qsgd:16", "none"] {
+        let q = parse(spec).unwrap();
+        b.bench_throughput(&format!("compress/{spec}/d20k"), d as f64, "coord", || {
+            black_box(q.compress(&v, &mut rng))
+        });
+    }
+    {
+        let q = parse("topk:0.2").unwrap();
+        let msg = q.compress(&v, &mut rng);
+        let mut out = vec![0.0f32; d];
+        b.bench("decompress/topk:0.2/d20k", || {
+            msg.decompress_into(&mut out);
+            black_box(out[0])
+        });
+    }
+
+    // --- gossip mixing (dense) at outer-loop size (dx = 2_000, m = 10) --
+    let graph = Graph::build(Topology::Ring, 10);
+    let w = MixingMatrix::metropolis(&graph);
+    let rows: Vec<Vec<f32>> = (0..10)
+        .map(|_| {
+            let mut r = vec![0.0f32; 2000];
+            rng.fill_normal(&mut r, 0.0, 1.0);
+            r
+        })
+        .collect();
+    b.bench("mixing/dense/m10/d2k", || black_box(w.mix(0.5, &rows)));
+
+    let mut net = Network::new(Graph::build(Topology::Ring, 10));
+    b.bench("network/exchange_dense/m10/d2k", || {
+        black_box(net.exchange_dense(&rows))
+    });
+
+    // --- reference-point protocol step (d = 20_000) ----------------------
+    {
+        let q = parse("topk:0.2").unwrap();
+        let mut rp = RefPoint::new(d, 0.66);
+        let target = v.clone();
+        b.bench("refpoint/residual+compress+apply/d20k", || {
+            let msg = q.compress(&rp.residual(&target), &mut rng);
+            rp.apply_own(&msg);
+            black_box(msg.wire_bytes())
+        });
+    }
+
+    // --- spectral gap computation (setup cost, m = 50) -------------------
+    let big = Graph::build(Topology::ErdosRenyi { p_milli: 300, seed: 3 }, 50);
+    b.bench("topology/metropolis+eigen/m50", || {
+        black_box(MixingMatrix::metropolis(&big).spectral_gap)
+    });
+
+    // --- PJRT oracle latency (the per-inner-step cost) -------------------
+    if let Ok(reg) = ArtifactRegistry::open_default() {
+        for preset in ["coeff", "coeff_jnp"] {
+            if !reg.has_preset(preset) {
+                continue;
+            }
+            let task = build_task(
+                &reg,
+                &ExperimentConfig { preset: preset.into(), nodes: 2, ..Default::default() },
+            )
+            .unwrap();
+            let x = vec![0.0f32; task.dx()];
+            let y = vec![0.01f32; task.dy()];
+            b.bench(&format!("oracle/{preset}/inner_z_grad"), || {
+                black_box(task.inner_z_grad(0, &x, &y).unwrap())
+            });
+            b.bench(&format!("oracle/{preset}/inner_y_grad"), || {
+                black_box(task.inner_y_grad(0, &x, &y, 10.0).unwrap())
+            });
+            b.bench(&format!("oracle/{preset}/hypergrad"), || {
+                black_box(task.hypergrad(0, &x, &y, &y, 10.0).unwrap())
+            });
+            b.bench(&format!("oracle/{preset}/eval"), || {
+                black_box(task.eval(0, &x, &y).unwrap())
+            });
+        }
+    } else {
+        eprintln!("artifacts not built; skipping PJRT oracle benches");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,31 @@
+//! Table 1 bench: end-to-end comm volume & time to target accuracy on the
+//! coefficient-tuning task (ring, heterogeneous), C²DFB vs MADSBO vs MDBO.
+//!
+//! This is the bench-sized version of `c2dfb table1` (fewer rounds so it
+//! finishes in bench budgets); the full harness regenerates the paper
+//! table — see EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo bench --bench table1
+//! ```
+
+use c2dfb::coordinator::experiments::{table1, HarnessOpts};
+use c2dfb::runtime::ArtifactRegistry;
+
+fn main() {
+    let reg = match ArtifactRegistry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = HarnessOpts {
+        rounds: 15,
+        out_dir: "runs/bench".into(),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let runs = table1(&reg, &opts, 0.7).expect("table1 harness failed");
+    println!("\ntable1 bench completed in {:.1}s ({} runs)", t0.elapsed().as_secs_f64(), runs.len());
+}

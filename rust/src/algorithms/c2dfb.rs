@@ -1,0 +1,237 @@
+//! C²DFB — the paper's Algorithm 1 (outer loop) over Algorithm 2 (inner).
+//!
+//! Per outer round t, on every node i:
+//!
+//! 1. **Outer mixing + step** (communicate x, dense):
+//!    `x_i ← x_i + γ_out Σ_j w_ij (x_j − x_i) − η_out (s_i)_x`
+//! 2. **Inner loops** (communicate compressed residuals only):
+//!    `y_i ← IN(h(x_i, ·))` on h = f + λg, warm-started;
+//!    `z_i ← IN(g(x_i, ·))`.
+//! 3. **Hypergradient** (local, fully first-order):
+//!    `u_i = ∇_x f_i(x,y) + λ(∇_x g_i(x,y) − ∇_x g_i(x,z))`
+//! 4. **Tracker update** (communicate s_x, dense):
+//!    `(s_i)_x ← (s_i)_x + γ_out Σ_j w_ij ((s_j)_x − (s_i)_x) + u_i^{t+1} − u_i^t`
+//!
+//! With `naive = true` the inner loops use the error-feedback
+//! naive-compression protocol instead of reference points — the paper's
+//! C²DFB(nc) ablation (same message sizes, worse error dynamics).
+
+use super::RunContext;
+use crate::compress;
+use crate::optim::{run_inner, run_inner_naive, DenseTracker, InnerConfig, InnerState};
+use anyhow::Result;
+
+pub fn run(ctx: &mut RunContext, naive: bool) -> Result<()> {
+    let m = ctx.task.nodes();
+    let lambda = ctx.cfg.lambda as f32;
+    let compressor = compress::parse(&ctx.cfg.compressor)
+        .map_err(anyhow::Error::msg)?;
+    let inner_cfg = InnerConfig {
+        eta: ctx.cfg.eta_in / (1.0 + ctx.cfg.lambda), // h = f + λg is (λL)-smooth
+        gamma: ctx.cfg.gamma_in,
+        k_steps: ctx.cfg.inner_steps,
+    };
+    let inner_cfg_z = InnerConfig {
+        eta: ctx.cfg.eta_in,
+        gamma: ctx.cfg.gamma_in,
+        k_steps: ctx.cfg.inner_steps,
+    };
+
+    // --- init: identical models on every node (paper setup) -------------
+    let x0 = ctx.task.init_x(&mut ctx.rng);
+    let y0 = ctx.task.init_y(&mut ctx.rng);
+    let mut xs: Vec<Vec<f32>> = vec![x0; m];
+    let mut ys: Vec<Vec<f32>> = vec![y0.clone(); m];
+    let mut zs: Vec<Vec<f32>> = vec![y0; m];
+    let mut y_state = InnerState::new(&ctx.net, ctx.task.dy());
+    let mut z_state = InnerState::new(&ctx.net, ctx.task.dy());
+
+    // s_x⁰ = u_i⁰ with the initial (y, z).
+    let mut u: Vec<Vec<f32>> = (0..m)
+        .map(|i| ctx.task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))
+        .collect::<Result<_>>()?;
+    ctx.metrics.oracles.first_order += m as u64;
+    let mut tracker = DenseTracker::new(u.clone());
+
+    let grad_norm0 = crate::linalg::norm2(&crate::linalg::mean_rows(&u));
+    ctx.record(0, &xs, &ys, grad_norm0)?;
+
+    for t in 0..ctx.cfg.rounds {
+        // -- 1. outer mixing + descent (pays one dense x exchange) -------
+        let mixed = ctx.net.mix_paid(ctx.cfg.gamma_out, &xs);
+        for i in 0..m {
+            xs[i] = mixed[i].clone();
+            for (xk, sk) in xs[i].iter_mut().zip(&tracker.s[i]) {
+                *xk -= ctx.cfg.eta_out as f32 * sk;
+            }
+        }
+
+        // -- 2. inner loops (compressed) ----------------------------------
+        {
+            let task = ctx.task;
+            let metrics = &mut ctx.metrics;
+            let xs_ref = &xs;
+            let grad_y = |i: usize, yi: &[f32]| {
+                metrics.oracles.first_order += 1;
+                task.inner_y_grad(i, &xs_ref[i], yi, lambda)
+                    .expect("inner_y oracle failed")
+            };
+            if naive {
+                run_inner_naive(
+                    &inner_cfg,
+                    &mut ctx.net,
+                    compressor.as_ref(),
+                    &mut ctx.rng,
+                    &mut y_state,
+                    &mut ys,
+                    grad_y,
+                );
+            } else {
+                run_inner(
+                    &inner_cfg,
+                    &mut ctx.net,
+                    compressor.as_ref(),
+                    &mut ctx.rng,
+                    &mut y_state,
+                    &mut ys,
+                    grad_y,
+                );
+            }
+        }
+        {
+            let task = ctx.task;
+            let metrics = &mut ctx.metrics;
+            let xs_ref = &xs;
+            let grad_z = |i: usize, zi: &[f32]| {
+                metrics.oracles.first_order += 1;
+                task.inner_z_grad(i, &xs_ref[i], zi)
+                    .expect("inner_z oracle failed")
+            };
+            if naive {
+                run_inner_naive(
+                    &inner_cfg_z,
+                    &mut ctx.net,
+                    compressor.as_ref(),
+                    &mut ctx.rng,
+                    &mut z_state,
+                    &mut zs,
+                    grad_z,
+                );
+            } else {
+                run_inner(
+                    &inner_cfg_z,
+                    &mut ctx.net,
+                    compressor.as_ref(),
+                    &mut ctx.rng,
+                    &mut z_state,
+                    &mut zs,
+                    grad_z,
+                );
+            }
+        }
+
+        // -- 3. local hypergradients --------------------------------------
+        let u_new: Vec<Vec<f32>> = (0..m)
+            .map(|i| ctx.task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))
+            .collect::<Result<_>>()?;
+        ctx.metrics.oracles.first_order += m as u64;
+
+        // -- 4. gradient tracking on s_x (pays one dense s exchange) -----
+        tracker.update(&mut ctx.net, ctx.cfg.gamma_out, &u_new);
+        u = u_new;
+
+        // -- eval ---------------------------------------------------------
+        if (t + 1) % ctx.cfg.eval_every == 0 || t + 1 == ctx.cfg.rounds {
+            let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&u));
+            if ctx.record(t + 1, &xs, &ys, grad_norm)? {
+                break; // target accuracy reached
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::Network;
+    use crate::config::{Algorithm, ExperimentConfig};
+    use crate::tasks::QuadraticTask;
+    use crate::topology::{Graph, Topology};
+
+    fn quad_cfg(rounds: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            algorithm: Algorithm::C2dfb,
+            nodes: 6,
+            rounds,
+            inner_steps: 20,
+            eta_out: 0.3,
+            eta_in: 0.4,
+            gamma_out: 0.8,
+            gamma_in: 0.6,
+            lambda: 50.0,
+            compressor: "topk:0.5".into(),
+            eval_every: 10,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    fn run_quad(rounds: usize, naive: bool) -> (f64, crate::metrics::RunMetrics) {
+        let task = QuadraticTask::generate(6, 8, 1.0, 21);
+        let net = Network::new(Graph::build(Topology::Ring, 6));
+        let mut ctx = RunContext::new(&task, net, quad_cfg(rounds));
+        run(&mut ctx, naive).unwrap();
+        // Hyper-stationarity of the mean upper model.
+        let xbar = {
+            // re-derive final xs is not exposed; use grad_norm from trace.
+            ctx.metrics.trace.last().unwrap().grad_norm
+        };
+        (xbar, ctx.metrics)
+    }
+
+    #[test]
+    fn c2dfb_drives_hypergradient_down_on_quadratic() {
+        let (g_end, metrics) = run_quad(150, false);
+        let g_start = metrics.trace.first().unwrap().grad_norm;
+        assert!(
+            g_end < g_start * 0.05,
+            "hypergrad norm {g_start} -> {g_end} (insufficient decrease)"
+        );
+        assert!(metrics.trace.last().unwrap().loss < metrics.trace[0].loss);
+    }
+
+    #[test]
+    fn c2dfb_reaches_consensus() {
+        let (_, metrics) = run_quad(150, false);
+        let c_end = metrics.trace.last().unwrap().consensus_err;
+        assert!(c_end < 1e-3, "consensus err {c_end}");
+    }
+
+    #[test]
+    fn naive_variant_also_runs_but_tracks_more_error() {
+        let (g_ref, m_ref) = run_quad(80, false);
+        let (g_nc, m_nc) = run_quad(80, true);
+        assert!(g_ref.is_finite() && g_nc.is_finite());
+        // Identical message schedule ⇒ identical byte counts.
+        assert_eq!(m_ref.ledger.total_bytes, m_nc.ledger.total_bytes);
+    }
+
+    #[test]
+    fn oracle_counts_are_first_order_only() {
+        let (_, metrics) = run_quad(10, false);
+        assert!(metrics.oracles.first_order > 0);
+        assert_eq!(metrics.oracles.second_order, 0);
+    }
+
+    #[test]
+    fn target_accuracy_stops_early() {
+        let task = QuadraticTask::generate(6, 8, 0.5, 22);
+        let net = Network::new(Graph::build(Topology::Ring, 6));
+        let mut cfg = quad_cfg(500);
+        cfg.target_accuracy = Some(0.0); // any accuracy qualifies
+        cfg.eval_every = 1;
+        let mut ctx = RunContext::new(&task, net, cfg);
+        run(&mut ctx, false).unwrap();
+        assert!(ctx.metrics.trace.len() <= 3);
+    }
+}

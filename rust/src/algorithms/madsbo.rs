@@ -1,0 +1,207 @@
+//! MADSBO — the MA-DSBO-style second-order baseline (Chen et al. 2023,
+//! "Decentralized Stochastic Bilevel Optimization with Improved
+//! per-Iteration Complexity"), re-implemented at the oracle/message level:
+//!
+//! per outer round:
+//! 1. K steps of gradient-TRACKED decentralized GD on the lower-level y
+//!    (MA-DSBO tracks the LL gradient; two dense exchanges — y and its
+//!    tracker — per step);
+//! 2. an HVP quadratic sub-solver: N tracked decentralized GD steps on
+//!    ½vᵀ(∇²_yy g)v − vᵀ∇_y f  to get v ≈ (∇²_yy ḡ)⁻¹ ∇_y f̄
+//!    (two dense exchanges + one HVP oracle per step);
+//! 3. hypergradient  h_i = ∇_x f_i − (∇²_xy g_i)·v  (one JVP oracle);
+//! 4. moving average  u_i ← (1−θ) u_i + θ h_i, gossip-mixed, and the
+//!    upper step x_i ← mix(x)_i − η_out u_i (dense x exchange).
+//!
+//! Everything it sends is dense and it pays HVP/JVP (second-order) oracle
+//! calls — the cost profile the paper's Table 1 contrasts C²DFB against.
+//! (MDBO, by contrast, keeps the published *untracked* gossip SGD and
+//! therefore suffers the full heterogeneity bias — see `mdbo.rs`.)
+
+use super::RunContext;
+use crate::optim::DenseTracker;
+use anyhow::Result;
+
+/// Moving-average constant (paper Appendix C.1 uses 0.3).
+const THETA: f32 = 0.3;
+/// Quadratic sub-solver iterations per round.
+pub(crate) const SUBSOLVER_STEPS: usize = 10;
+
+pub fn run(ctx: &mut RunContext) -> Result<()> {
+    let m = ctx.task.nodes();
+    let dy = ctx.task.dy();
+    let eta_in = ctx.cfg.eta_in as f32;
+    let eta_out = ctx.cfg.eta_out as f32;
+    let gamma = ctx.cfg.gamma_out;
+
+    let x0 = ctx.task.init_x(&mut ctx.rng);
+    let y0 = ctx.task.init_y(&mut ctx.rng);
+    let mut xs: Vec<Vec<f32>> = vec![x0; m];
+    let mut ys: Vec<Vec<f32>> = vec![y0; m];
+    let mut vs: Vec<Vec<f32>> = vec![vec![0.0; dy]; m];
+    let mut us: Vec<Vec<f32>> = vec![vec![0.0; ctx.task.dx()]; m];
+
+    ctx.record(0, &xs, &ys, f64::NAN)?;
+
+    // Lower-level gradient tracker (persists across rounds; MA-DSBO warm-
+    // starts both y and its tracker).
+    let g0: Vec<Vec<f32>> = (0..m)
+        .map(|i| ctx.task.inner_z_grad(i, &xs[i], &ys[i]))
+        .collect::<Result<_>>()?;
+    ctx.metrics.oracles.first_order += m as u64;
+    let mut y_tracker = DenseTracker::new(g0);
+
+    for t in 0..ctx.cfg.rounds {
+        // -- 1. tracked lower-level loop ----------------------------------
+        for _k in 0..ctx.cfg.inner_steps {
+            let mixed = ctx.net.mix_paid(gamma, &ys);
+            for i in 0..m {
+                ys[i] = mixed[i]
+                    .iter()
+                    .zip(&y_tracker.s[i])
+                    .map(|(y, sk)| y - eta_in * sk)
+                    .collect();
+            }
+            let g: Vec<Vec<f32>> = (0..m)
+                .map(|i| ctx.task.inner_z_grad(i, &xs[i], &ys[i]))
+                .collect::<Result<_>>()?;
+            ctx.metrics.oracles.first_order += m as u64;
+            y_tracker.update(&mut ctx.net, gamma, &g);
+        }
+
+        // -- 2. tracked quadratic sub-solver for v ≈ H⁻¹ ∇_y f -------------
+        let gyf: Vec<Vec<f32>> = (0..m)
+            .map(|i| ctx.task.grad_y_f(i, &xs[i], &ys[i]))
+            .collect::<Result<_>>()?;
+        ctx.metrics.oracles.first_order += m as u64;
+        let alpha = eta_in;
+        let q0: Vec<Vec<f32>> = (0..m)
+            .map(|i| {
+                let hv = ctx.task.hvp_yy_g(i, &xs[i], &ys[i], &vs[i])?;
+                ctx.metrics.oracles.second_order += 1;
+                Ok(hv.iter().zip(&gyf[i]).map(|(h, g)| h - g).collect())
+            })
+            .collect::<Result<_>>()?;
+        let mut v_tracker = DenseTracker::new(q0);
+        for _n in 0..SUBSOLVER_STEPS {
+            let mixed = ctx.net.mix_paid(gamma, &vs);
+            for i in 0..m {
+                vs[i] = mixed[i]
+                    .iter()
+                    .zip(&v_tracker.s[i])
+                    .map(|(v, q)| v - alpha * q)
+                    .collect();
+            }
+            let q: Vec<Vec<f32>> = (0..m)
+                .map(|i| {
+                    let hv = ctx.task.hvp_yy_g(i, &xs[i], &ys[i], &vs[i])?;
+                    ctx.metrics.oracles.second_order += 1;
+                    Ok(hv.iter().zip(&gyf[i]).map(|(h, g)| h - g).collect())
+                })
+                .collect::<Result<_>>()?;
+            v_tracker.update(&mut ctx.net, gamma, &q);
+        }
+
+        // -- 3. hypergradient + moving average ----------------------------
+        for i in 0..m {
+            let gxf = ctx.task.grad_x_f(i, &xs[i], &ys[i])?;
+            let jv = ctx.task.jvp_xy_g(i, &xs[i], &ys[i], &vs[i])?;
+            ctx.metrics.oracles.first_order += 1;
+            ctx.metrics.oracles.second_order += 1;
+            for k in 0..us[i].len() {
+                let h = gxf[k] - jv[k];
+                us[i][k] = (1.0 - THETA) * us[i][k] + THETA * h;
+            }
+        }
+        // Mix the hypergradient estimates (dense exchange).
+        us = ctx.net.mix_paid(gamma, &us);
+
+        // -- 4. upper step -------------------------------------------------
+        let mixed_x = ctx.net.mix_paid(gamma, &xs);
+        for i in 0..m {
+            xs[i] = mixed_x[i]
+                .iter()
+                .zip(&us[i])
+                .map(|(x, u)| x - eta_out * u)
+                .collect();
+        }
+
+        if (t + 1) % ctx.cfg.eval_every == 0 || t + 1 == ctx.cfg.rounds {
+            let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&us));
+            if ctx.record(t + 1, &xs, &ys, grad_norm)? {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::Network;
+    use crate::config::{Algorithm, ExperimentConfig};
+    use crate::tasks::QuadraticTask;
+    use crate::topology::{Graph, Topology};
+
+    fn cfg(rounds: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            algorithm: Algorithm::Madsbo,
+            nodes: 6,
+            rounds,
+            inner_steps: 10,
+            eta_out: 0.8,
+            eta_in: 0.3,
+            gamma_out: 0.8,
+            eval_every: 10,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn madsbo_converges_on_quadratic() {
+        use crate::tasks::BilevelTask;
+        let task = QuadraticTask::generate(6, 8, 0.8, 31);
+        // ψ* > 0: measure excess loss over the analytic hyper-minimum.
+        let mut xstar = task.init_x(&mut crate::util::rng::Rng::new(5));
+        for _ in 0..5000 {
+            let g = task.hypergrad_analytic(&xstar);
+            for k in 0..xstar.len() {
+                xstar[k] -= 0.2 * g[k];
+            }
+        }
+        let psi_min = task.psi(&xstar);
+
+        let net = Network::new(Graph::build(Topology::Ring, 6));
+        let mut ctx = super::super::RunContext::new(&task, net, cfg(400));
+        run(&mut ctx).unwrap();
+        let first = ctx.metrics.trace.first().unwrap().loss;
+        let last = ctx.metrics.trace.last().unwrap().loss;
+        assert!(last.is_finite(), "diverged");
+        let (e0, e1) = (first - psi_min, last - psi_min);
+        assert!(
+            e1 < e0 * 0.5,
+            "excess loss {e0:.4} -> {e1:.4} (psi_min {psi_min:.4})"
+        );
+    }
+
+    #[test]
+    fn madsbo_pays_second_order_oracles_and_dense_bytes() {
+        let task = QuadraticTask::generate(6, 8, 0.8, 32);
+        let net = Network::new(Graph::build(Topology::Ring, 6));
+        let mut ctx = super::super::RunContext::new(&task, net, cfg(5));
+        run(&mut ctx).unwrap();
+        assert!(ctx.metrics.oracles.second_order > 0);
+        // Per round: 2K (tracked y) + 2N (tracked v) + 2 (u, x) dense
+        // exchanges; plus one tracker bootstrap exchange... the ledger
+        // counts every mix_paid/update call:
+        let per_round = 2 * 10 + 2 * SUBSOLVER_STEPS + 2;
+        let expected = 5 * per_round + 1; // +1 y-tracker bootstrap? none: new() doesn't mix
+        // Allow exact check with the actual schedule:
+        assert_eq!(
+            ctx.metrics.ledger.gossip_rounds as usize,
+            5 * per_round,
+            "unexpected message schedule (expected ~{expected})"
+        );
+    }
+}

@@ -1,0 +1,178 @@
+//! MDBO — gossip-based decentralized bilevel optimization with a
+//! Neumann-series Hessian-inverse approximation (Yang, Zhang & Wang 2022),
+//! re-implemented at the oracle/message level:
+//!
+//! per outer round:
+//! 1. K steps of decentralized GD with gossip on the lower level (dense y
+//!    exchange + one ∇_y g per step);
+//! 2. Neumann series for v ≈ (∇²_yy ḡ)⁻¹ ∇_y f̄:
+//!        p⁰ = ∇_y f_i,  p^{q+1} = p^q − η (∇²_yy g_i) p^q,
+//!        v = η Σ_{q<Q} p^q,
+//!    gossip-averaging p every term (dense exchange + one HVP per term —
+//!    this is where MDBO's communication volume explodes);
+//! 3. hypergradient h_i = ∇_x f_i − (∇²_xy g_i)·v (one JVP);
+//! 4. upper gossip step x_i ← mix(x)_i − η_out h_i (dense x exchange).
+
+use super::RunContext;
+use anyhow::Result;
+
+/// Neumann-series length (Q).  The published algorithm takes Q ≈ κ log(·);
+/// 15 matches the paper's experimental scale.
+const NEUMANN_TERMS: usize = 15;
+
+pub fn run(ctx: &mut RunContext) -> Result<()> {
+    let m = ctx.task.nodes();
+    let eta_in = ctx.cfg.eta_in as f32;
+    let eta_out = ctx.cfg.eta_out as f32;
+    let gamma = ctx.cfg.gamma_out;
+
+    let x0 = ctx.task.init_x(&mut ctx.rng);
+    let y0 = ctx.task.init_y(&mut ctx.rng);
+    let mut xs: Vec<Vec<f32>> = vec![x0; m];
+    let mut ys: Vec<Vec<f32>> = vec![y0; m];
+
+    ctx.record(0, &xs, &ys, f64::NAN)?;
+
+    for t in 0..ctx.cfg.rounds {
+        // -- 1. lower-level gossip GD --------------------------------------
+        for _k in 0..ctx.cfg.inner_steps {
+            let mixed = ctx.net.mix_paid(gamma, &ys);
+            for i in 0..m {
+                let g = ctx.task.inner_z_grad(i, &xs[i], &mixed[i])?;
+                ctx.metrics.oracles.first_order += 1;
+                ys[i] = mixed[i]
+                    .iter()
+                    .zip(&g)
+                    .map(|(y, gk)| y - eta_in * gk)
+                    .collect();
+            }
+        }
+
+        // -- 2. Neumann series with per-term gossip ------------------------
+        let mut ps: Vec<Vec<f32>> = (0..m)
+            .map(|i| ctx.task.grad_y_f(i, &xs[i], &ys[i]))
+            .collect::<Result<_>>()?;
+        ctx.metrics.oracles.first_order += m as u64;
+        let mut vs: Vec<Vec<f32>> = ps.iter().map(|p| p.iter().map(|x| eta_in * x).collect()).collect();
+        for _q in 0..NEUMANN_TERMS {
+            ps = ctx.net.mix_paid(gamma, &ps);
+            for i in 0..m {
+                let hp = ctx.task.hvp_yy_g(i, &xs[i], &ys[i], &ps[i])?;
+                ctx.metrics.oracles.second_order += 1;
+                for k in 0..ps[i].len() {
+                    ps[i][k] -= eta_in * hp[k];
+                    vs[i][k] += eta_in * ps[i][k];
+                }
+            }
+        }
+
+        // -- 3. hypergradient ----------------------------------------------
+        let mut hs: Vec<Vec<f32>> = Vec::with_capacity(m);
+        for i in 0..m {
+            let gxf = ctx.task.grad_x_f(i, &xs[i], &ys[i])?;
+            let jv = ctx.task.jvp_xy_g(i, &xs[i], &ys[i], &vs[i])?;
+            ctx.metrics.oracles.first_order += 1;
+            ctx.metrics.oracles.second_order += 1;
+            hs.push(gxf.iter().zip(&jv).map(|(a, b)| a - b).collect());
+        }
+
+        // -- 4. upper gossip step ------------------------------------------
+        let mixed_x = ctx.net.mix_paid(gamma, &xs);
+        for i in 0..m {
+            xs[i] = mixed_x[i]
+                .iter()
+                .zip(&hs[i])
+                .map(|(x, h)| x - eta_out * h)
+                .collect();
+        }
+
+        if (t + 1) % ctx.cfg.eval_every == 0 || t + 1 == ctx.cfg.rounds {
+            let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&hs));
+            if ctx.record(t + 1, &xs, &ys, grad_norm)? {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::Network;
+    use crate::config::{Algorithm, ExperimentConfig};
+    use crate::tasks::{BilevelTask, QuadraticTask};
+    use crate::topology::{Graph, Topology};
+
+    fn cfg(rounds: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            algorithm: Algorithm::Mdbo,
+            nodes: 6,
+            rounds,
+            inner_steps: 10,
+            eta_out: 0.4,
+            eta_in: 0.3,
+            gamma_out: 0.8,
+            eval_every: 10,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn mdbo_converges_on_quadratic() {
+        let task = QuadraticTask::generate(6, 8, 0.8, 41);
+        // ψ* > 0 for this task: measure excess loss over the analytic
+        // minimum, found by GD on the closed-form hypergradient.
+        let mut xstar = task.init_x(&mut crate::util::rng::Rng::new(5));
+        for _ in 0..5000 {
+            let g = task.hypergrad_analytic(&xstar);
+            for k in 0..xstar.len() {
+                xstar[k] -= 0.2 * g[k];
+            }
+        }
+        let psi_min = task.psi(&xstar);
+
+        let net = Network::new(Graph::build(Topology::Ring, 6));
+        let mut ctx = super::super::RunContext::new(&task, net, cfg(300));
+        run(&mut ctx).unwrap();
+        let first = ctx.metrics.trace.first().unwrap().loss;
+        let last = ctx.metrics.trace.last().unwrap().loss;
+        assert!(last.is_finite(), "diverged");
+        let (e0, e1) = (first - psi_min, last - psi_min);
+        assert!(
+            e1 < e0 * 0.5,
+            "excess loss {e0:.4} -> {e1:.4} (psi_min {psi_min:.4})"
+        );
+    }
+
+    #[test]
+    fn mdbo_communicates_more_than_c2dfb_for_same_rounds() {
+        // The structural claim behind Table 1: per outer round MDBO pays
+        // (K + Q + 1) dense exchanges vs C²DFB's 2 dense + 4K compressed.
+        let task = QuadraticTask::generate(6, 64, 0.8, 42);
+
+        let net = Network::new(Graph::build(Topology::Ring, 6));
+        let mut ctx = super::super::RunContext::new(&task, net, cfg(10));
+        run(&mut ctx).unwrap();
+        let mdbo_bytes = ctx.metrics.ledger.total_bytes;
+
+        let net = Network::new(Graph::build(Topology::Ring, 6));
+        let mut c_cfg = cfg(10);
+        c_cfg.algorithm = Algorithm::C2dfb;
+        c_cfg.compressor = "topk:0.2".into();
+        c_cfg.lambda = 50.0;
+        let mut ctx2 = super::super::RunContext::new(&task, net, c_cfg);
+        super::super::c2dfb::run(&mut ctx2, false).unwrap();
+        let c2dfb_bytes = ctx2.metrics.ledger.total_bytes;
+
+        // At EQUAL round counts the structural gap is modest (both move
+        // O(K·d) per round); the order-of-magnitude gap in Table 1 comes
+        // from rounds-to-target, measured by the table1 harness.
+        assert!(
+            mdbo_bytes > c2dfb_bytes,
+            "mdbo {mdbo_bytes} vs c2dfb {c2dfb_bytes}"
+        );
+        assert!(ctx.metrics.oracles.second_order > 0);
+        assert_eq!(ctx2.metrics.oracles.second_order, 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Compressed-message payload encodings and their exact wire sizes.
+
+/// The on-the-wire representation of a compressed vector.  The byte counts
+/// model a straightforward binary encoding; no actual serialization happens
+/// in the in-process simulator, but the sizes feed the communication-volume
+/// ledger, which is the paper's headline metric.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Raw f32 values (4 B/coord).
+    Dense(Vec<f32>),
+    /// Coordinate list: index + f32 value.  Indices are modeled at the
+    /// narrowest width that covers the max index (u16 below 65536, u32
+    /// above), as a real wire encoder would emit.
+    Sparse { idx: Vec<u32>, val: Vec<f32> },
+    /// QSGD: one f32 norm + i16 signed level codes (2 B/coord).
+    Quantized { norm: f32, levels: u32, codes: Vec<i16> },
+}
+
+impl Payload {
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Payload::Dense(v) => 4 * v.len(),
+            Payload::Sparse { idx, val } => {
+                let idx_width =
+                    if idx.last().map(|&m| m < 65_536).unwrap_or(true) { 2 } else { 4 };
+                idx_width * idx.len() + 4 * val.len()
+            }
+            Payload::Quantized { codes, .. } => 4 + 4 + 2 * codes.len(),
+        }
+    }
+
+    /// Number of degrees of freedom actually transmitted.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::Sparse { idx, .. } => idx.len(),
+            Payload::Quantized { codes, .. } => codes.len(),
+        }
+    }
+
+    pub fn write_dense(&self, out: &mut [f32]) {
+        match self {
+            Payload::Dense(v) => out.copy_from_slice(v),
+            Payload::Sparse { idx, val } => {
+                out.fill(0.0);
+                for (&i, &x) in idx.iter().zip(val) {
+                    out[i as usize] = x;
+                }
+            }
+            Payload::Quantized { norm, levels, codes } => {
+                let scale = norm / *levels as f32;
+                for (o, &c) in out.iter_mut().zip(codes) {
+                    *o = c as f32 * scale;
+                }
+            }
+        }
+    }
+
+    pub fn add_dense(&self, target: &mut [f32]) {
+        self.add_scaled_dense(1.0, target);
+    }
+
+    pub fn add_scaled_dense(&self, w: f32, target: &mut [f32]) {
+        match self {
+            Payload::Dense(v) => {
+                for (t, &x) in target.iter_mut().zip(v) {
+                    *t += w * x;
+                }
+            }
+            Payload::Sparse { idx, val } => {
+                for (&i, &x) in idx.iter().zip(val) {
+                    target[i as usize] += w * x;
+                }
+            }
+            Payload::Quantized { norm, levels, codes } => {
+                let scale = w * norm / *levels as f32;
+                for (t, &c) in target.iter_mut().zip(codes) {
+                    *t += c as f32 * scale;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_accounting() {
+        assert_eq!(Payload::Dense(vec![0.0; 10]).payload_bytes(), 40);
+        // u16 indices below 65536.
+        assert_eq!(
+            Payload::Sparse { idx: vec![1, 3], val: vec![1.0, 2.0] }.payload_bytes(),
+            12
+        );
+        // u32 indices once any index exceeds the u16 range.
+        assert_eq!(
+            Payload::Sparse { idx: vec![1, 70_000], val: vec![1.0, 2.0] }.payload_bytes(),
+            16
+        );
+        assert_eq!(
+            Payload::Quantized { norm: 1.0, levels: 4, codes: vec![0; 10] }.payload_bytes(),
+            28
+        );
+    }
+
+    #[test]
+    fn sparse_write_and_add() {
+        let p = Payload::Sparse { idx: vec![0, 2], val: vec![5.0, -1.0] };
+        let mut d = vec![9.0f32; 3];
+        p.write_dense(&mut d);
+        assert_eq!(d, vec![5.0, 0.0, -1.0]);
+        let mut t = vec![1.0f32; 3];
+        p.add_scaled_dense(2.0, &mut t);
+        assert_eq!(t, vec![11.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn quantized_roundtrip_scale() {
+        let p = Payload::Quantized { norm: 8.0, levels: 4, codes: vec![4, -2, 0] };
+        let mut d = vec![0.0f32; 3];
+        p.write_dense(&mut d);
+        assert_eq!(d, vec![8.0, -4.0, 0.0]);
+    }
+}

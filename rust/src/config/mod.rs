@@ -1,0 +1,282 @@
+//! Experiment configuration: typed config struct, TOML loading, CLI
+//! overrides, and the defaults from the paper's §6 / Appendix C.
+
+pub mod toml;
+
+use crate::data::partition::Partition;
+use crate::topology::Topology;
+use std::collections::BTreeMap;
+use std::path::Path;
+use toml::TomlValue;
+
+/// Which algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// The paper's method (Algorithm 1 + 2).
+    C2dfb,
+    /// Ablation: naive compression with local error feedback, no reference
+    /// points (the paper's C²DFB(nc)).
+    C2dfbNc,
+    /// MA-DSBO-style second-order baseline (moving average + HVP solver).
+    Madsbo,
+    /// Gossip bilevel with Neumann-series hypergradient (MDBO).
+    Mdbo,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::C2dfb => "c2dfb",
+            Algorithm::C2dfbNc => "c2dfb_nc",
+            Algorithm::Madsbo => "madsbo",
+            Algorithm::Mdbo => "mdbo",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algorithm, String> {
+        match s {
+            "c2dfb" => Ok(Algorithm::C2dfb),
+            "c2dfb_nc" | "c2dfb-nc" | "nc" => Ok(Algorithm::C2dfbNc),
+            "madsbo" => Ok(Algorithm::Madsbo),
+            "mdbo" => Ok(Algorithm::Mdbo),
+            _ => Err(format!("unknown algorithm: {s}")),
+        }
+    }
+}
+
+/// Full experiment description.  Defaults reproduce the paper's
+/// coefficient-tuning setting (Appendix C.1): η_in = η_out = 1,
+/// mixing step 0.5, λ = 10, K = 15, top-k 20%, m = 10, ring.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Artifact preset: "coeff", "coeff_tiny", "hyperrep", ... (see
+    /// python/compile/model.py).
+    pub preset: String,
+    pub algorithm: Algorithm,
+    pub nodes: usize,
+    pub topology: Topology,
+    pub partition: Partition,
+    /// Compressor spec for the inner loop, e.g. "topk:0.2".
+    pub compressor: String,
+
+    pub rounds: usize,
+    pub inner_steps: usize, // K
+    pub eta_out: f64,
+    pub eta_in: f64,
+    pub gamma_out: f64, // outer mixing step
+    pub gamma_in: f64,  // inner mixing step
+    pub lambda: f64,    // penalty multiplier (the paper's λ / σ)
+
+    pub seed: u64,
+    pub eval_every: usize,
+    /// Stop early once this test accuracy is reached (None = run all rounds).
+    pub target_accuracy: Option<f64>,
+    /// Samples per node are set by the artifact shapes; this scales the
+    /// globally generated pool before partitioning.
+    pub data_noise: f64,
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            preset: "coeff".into(),
+            algorithm: Algorithm::C2dfb,
+            nodes: 10,
+            topology: Topology::Ring,
+            partition: Partition::Iid,
+            compressor: "topk:0.2".into(),
+            rounds: 200,
+            inner_steps: 15,
+            eta_out: 1.0,
+            eta_in: 1.0,
+            gamma_out: 0.5,
+            gamma_in: 0.5,
+            lambda: 10.0,
+            seed: 42,
+            eval_every: 5,
+            target_accuracy: None,
+            data_noise: 0.35,
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Paper defaults for the hyper-representation task (Appendix C.2):
+    /// inner lr 1, outer lr 0.8, mixing 0.3, λ = 10, ~30% compression.
+    pub fn hyperrep_defaults() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "hyperrep".into(),
+            preset: "hyperrep".into(),
+            compressor: "topk:0.3".into(),
+            eta_out: 0.8,
+            eta_in: 1.0,
+            gamma_out: 0.3,
+            gamma_in: 0.3,
+            inner_steps: 10,
+            lambda: 10.0,
+            data_noise: 0.15,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}_{}_{}_m{}",
+            self.preset,
+            self.topology.name(),
+            self.partition.name().replace(':', ""),
+            self.nodes
+        )
+    }
+
+    /// Load from a TOML file; keys may be bare or under [experiment].
+    pub fn from_toml_file(path: &Path) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let map = toml::parse(&text)?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_map(&map)?;
+        Ok(cfg)
+    }
+
+    /// Apply flattened key→value overrides (used by both TOML and CLI).
+    pub fn apply_map(&mut self, map: &BTreeMap<String, TomlValue>) -> Result<(), String> {
+        for (key, v) in map {
+            let k = key.strip_prefix("experiment.").unwrap_or(key);
+            self.apply_one(k, v)?;
+        }
+        Ok(())
+    }
+
+    pub fn apply_one(&mut self, k: &str, v: &TomlValue) -> Result<(), String> {
+        let want_str = || v.as_str().map(str::to_string).ok_or(format!("{k}: expected string"));
+        let want_f64 = || v.as_f64().ok_or(format!("{k}: expected number"));
+        let want_usize = || {
+            v.as_i64()
+                .filter(|i| *i >= 0)
+                .map(|i| i as usize)
+                .ok_or(format!("{k}: expected non-negative integer"))
+        };
+        match k {
+            "name" => self.name = want_str()?,
+            "preset" | "task" => self.preset = want_str()?,
+            "algorithm" | "algo" => self.algorithm = Algorithm::parse(&want_str()?)?,
+            "nodes" | "m" => self.nodes = want_usize()?,
+            "topology" => self.topology = Topology::parse(&want_str()?, self.seed)?,
+            "partition" => self.partition = Partition::parse(&want_str()?)?,
+            "compressor" => self.compressor = want_str()?,
+            "rounds" => self.rounds = want_usize()?,
+            "inner_steps" | "K" | "k" => self.inner_steps = want_usize()?,
+            "eta_out" => self.eta_out = want_f64()?,
+            "eta_in" => self.eta_in = want_f64()?,
+            "gamma_out" => self.gamma_out = want_f64()?,
+            "gamma_in" => self.gamma_in = want_f64()?,
+            "gamma" => {
+                self.gamma_out = want_f64()?;
+                self.gamma_in = self.gamma_out;
+            }
+            "lambda" | "sigma" => self.lambda = want_f64()?,
+            "seed" => self.seed = want_usize()? as u64,
+            "eval_every" => self.eval_every = want_usize()?.max(1),
+            "target_accuracy" => self.target_accuracy = Some(want_f64()?),
+            "data_noise" => self.data_noise = want_f64()?,
+            "out_dir" => self.out_dir = want_str()?,
+            _ => return Err(format!("unknown config key: {k}")),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes < 2 {
+            return Err("need at least 2 nodes".into());
+        }
+        if !(0.0..=1.0).contains(&self.gamma_in) || !(0.0..=1.0).contains(&self.gamma_out) {
+            return Err("mixing steps must lie in [0, 1]".into());
+        }
+        if self.lambda <= 0.0 {
+            return Err("lambda must be positive".into());
+        }
+        if self.inner_steps == 0 {
+            return Err("inner_steps must be >= 1".into());
+        }
+        crate::compress::parse(&self.compressor).map(|_| ())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_appendix() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.nodes, 10);
+        assert_eq!(c.inner_steps, 15);
+        assert_eq!(c.lambda, 10.0);
+        assert_eq!(c.gamma_out, 0.5);
+        assert_eq!(c.eta_out, 1.0);
+        assert_eq!(c.compressor, "topk:0.2");
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let dir = std::env::temp_dir().join("c2dfb_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.toml");
+        std::fs::write(
+            &p,
+            r#"
+[experiment]
+name = "t1"
+algorithm = "madsbo"
+topology = "er:0.4"
+partition = "het:0.8"
+rounds = 50
+lambda = 5.0
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml_file(&p).unwrap();
+        assert_eq!(c.name, "t1");
+        assert_eq!(c.algorithm, Algorithm::Madsbo);
+        assert_eq!(c.topology.name(), "er");
+        assert_eq!(c.partition.name(), "het:0.8");
+        assert_eq!(c.rounds, 50);
+        assert_eq!(c.lambda, 5.0);
+        // Untouched keys keep defaults.
+        assert_eq!(c.inner_steps, 15);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = ExperimentConfig::default();
+        let err = c.apply_one("bogus", &TomlValue::Int(1));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = ExperimentConfig::default();
+        c.nodes = 1;
+        assert!(c.validate().is_err());
+        c = ExperimentConfig::default();
+        c.gamma_in = 1.5;
+        assert!(c.validate().is_err());
+        c = ExperimentConfig::default();
+        c.compressor = "nonsense".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn algorithm_parse() {
+        assert_eq!(Algorithm::parse("c2dfb").unwrap(), Algorithm::C2dfb);
+        assert_eq!(Algorithm::parse("nc").unwrap(), Algorithm::C2dfbNc);
+        assert!(Algorithm::parse("x").is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! Minimal TOML-subset parser for experiment config files.
+//!
+//! Supported grammar (ample for this repo's configs, loudly errors on the
+//! rest): `[section]` headers, `key = value` with string / integer / float
+//! / boolean / flat array values, `#` comments, blank lines.  Keys are
+//! flattened to `section.key`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse the TOML subset into flattened `section.key → value`.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, String> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or(format!("line {}: bad section header", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or(format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let v = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        out.insert(full_key, v);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for item in inner.split(',') {
+                items.push(parse_value(item.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let src = r#"
+# experiment
+name = "fig2"          # inline comment
+[algo]
+eta_out = 1.0
+rounds = 200
+verbose = true
+topologies = ["ring", "2hop"]
+"#;
+        let m = parse(src).unwrap();
+        assert_eq!(m["name"].as_str(), Some("fig2"));
+        assert_eq!(m["algo.eta_out"].as_f64(), Some(1.0));
+        assert_eq!(m["algo.rounds"].as_i64(), Some(200));
+        assert_eq!(m["algo.verbose"].as_bool(), Some(true));
+        match &m["algo.topologies"] {
+            TomlValue::Arr(a) => assert_eq!(a.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn numbers() {
+        let m = parse("a = 5\nb = -2.5\nc = 1e-3\nd = 1_000").unwrap();
+        assert_eq!(m["a"].as_i64(), Some(5));
+        assert_eq!(m["b"].as_f64(), Some(-2.5));
+        assert_eq!(m["c"].as_f64(), Some(1e-3));
+        assert_eq!(m["d"].as_i64(), Some(1000));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[oops").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let m = parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(m["k"].as_str(), Some("a#b"));
+    }
+}

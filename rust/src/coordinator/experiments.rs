@@ -1,0 +1,250 @@
+//! Per-table / per-figure harnesses reproducing the paper's evaluation.
+//!
+//! Each harness builds the exact workload grid from §6 / Appendix C, runs
+//! every (algorithm × topology × heterogeneity) cell, prints the rows the
+//! paper reports, and writes the full traces as CSV under `runs/<id>/`.
+//! Absolute numbers differ from the paper (synthetic data, simulated
+//! network — see DESIGN.md §Substitutions); the comparisons (who wins, by
+//! what order of magnitude) are the reproduction target.
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::coordinator::{run_with_registry, summarize, write_runs};
+use crate::data::partition::Partition;
+use crate::metrics::RunMetrics;
+use crate::runtime::ArtifactRegistry;
+use crate::topology::Topology;
+use anyhow::Result;
+
+/// Scaling knobs shared by all harnesses (CLI: --rounds, --preset-suffix).
+#[derive(Clone, Debug)]
+pub struct HarnessOpts {
+    /// Outer rounds per run (paper: ~1000 coeff / ~100 hyperrep; default
+    /// here is sized for minutes-scale runs with the same ordering).
+    pub rounds: usize,
+    /// Preset override, e.g. "coeff_tiny" for smoke runs.
+    pub coeff_preset: String,
+    pub hyperrep_preset: String,
+    pub out_dir: String,
+    pub seed: u64,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        HarnessOpts {
+            rounds: 120,
+            coeff_preset: "coeff".into(),
+            hyperrep_preset: "hyperrep".into(),
+            out_dir: "runs".into(),
+            seed: 42,
+        }
+    }
+}
+
+fn coeff_cfg(o: &HarnessOpts) -> ExperimentConfig {
+    ExperimentConfig {
+        preset: o.coeff_preset.clone(),
+        rounds: o.rounds,
+        seed: o.seed,
+        out_dir: o.out_dir.clone(),
+        eval_every: (o.rounds / 40).max(1),
+        // Paper Appendix C.1 for C²DFB on coefficient tuning; the step
+        // sizes are rescaled for the synthetic corpus (lr 1 with λ=10 sits
+        // past the compressed-tracking stability edge on it; the baselines
+        // get the same treatment — see EXPERIMENTS.md §Calibration).
+        eta_out: 0.5,
+        eta_in: 0.2,
+        gamma_out: 0.5,
+        gamma_in: 0.5,
+        lambda: 10.0,
+        inner_steps: 15,
+        compressor: "topk:0.2".into(),
+        // Noise calibrated so the optimal linear classifier sits near 85%
+        // and the 70% target separates the methods — see EXPERIMENTS.md
+        // §Calibration.
+        data_noise: 1.2,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn hyperrep_cfg(o: &HarnessOpts) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::hyperrep_defaults();
+    cfg.preset = o.hyperrep_preset.clone();
+    cfg.rounds = o.rounds;
+    cfg.seed = o.seed;
+    cfg.out_dir = o.out_dir.clone();
+    cfg.eval_every = (o.rounds / 60).max(1);
+    // Calibrated for the synthetic MNIST-like corpus (He-init backbone
+    // features give the head problem λ·L ≈ 160; the paper's lr 1 diverges).
+    cfg.eta_out = 0.02;
+    cfg.eta_in = 0.05;
+    cfg.data_noise = 0.45;
+    cfg
+}
+
+/// Baselines need smaller upper steps (no tracking-normalized scale) —
+/// tuned so each baseline converges on the synthetic corpus.
+fn tune_for(algo: Algorithm, cfg: &mut ExperimentConfig) {
+    cfg.algorithm = algo;
+    match algo {
+        Algorithm::C2dfb | Algorithm::C2dfbNc => {}
+        Algorithm::Madsbo => {
+            cfg.eta_out *= 2.0; // moving average damps the step
+            cfg.eta_in *= 0.5;
+        }
+        Algorithm::Mdbo => {
+            // MDBO's untracked gossip SGD has an O(η·heterogeneity/ρ) bias
+            // neighbourhood: it needs a much smaller lower-level step to
+            // make progress under h = 0.8 (and is correspondingly slow —
+            // the paper's Table 1 shows the same 1-2 order gap).
+            cfg.eta_in *= 0.25;
+        }
+    }
+}
+
+/// **Table 1** — comm volume (MB) + training time (s) to reach the target
+/// test accuracy on the coefficient-tuning task, ring topology,
+/// heterogeneous (h = 0.8).
+pub fn table1(reg: &ArtifactRegistry, o: &HarnessOpts, target_acc: f64) -> Result<Vec<RunMetrics>> {
+    println!("== Table 1: comm volume & time to {:.0}% test accuracy (ring, het 0.8) ==", target_acc * 100.0);
+    let mut runs = Vec::new();
+    for algo in [Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::Mdbo] {
+        let mut cfg = coeff_cfg(o);
+        tune_for(algo, &mut cfg);
+        cfg.name = "table1".into();
+        cfg.topology = Topology::Ring;
+        cfg.partition = Partition::Heterogeneous { h: 0.8 };
+        cfg.target_accuracy = Some(target_acc);
+        let m = run_with_registry(reg, &cfg)?;
+        println!("  {}", summarize(&m));
+        runs.push(m);
+    }
+    println!("\n| Algo   | Comm. Vol. (MB) | Sim. Time (s) | Wall Time (s) | reached |");
+    println!("|--------|-----------------|---------------|---------------|---------|");
+    for m in &runs {
+        let hit = m.time_to_accuracy(target_acc);
+        let (mb, st, wt, reached) = match hit {
+            Some(p) => (p.comm_mb, p.sim_time_s + p.wall_time_s, p.wall_time_s, "yes"),
+            None => {
+                let p = m.final_point().unwrap();
+                (p.comm_mb, p.sim_time_s + p.wall_time_s, p.wall_time_s, "no")
+            }
+        };
+        println!("| {:6} | {:15.2} | {:13.2} | {:13.2} | {:7} |", m.algo, mb, st, wt, reached);
+    }
+    write_runs(&o.out_dir, "table1", &runs)?;
+    Ok(runs)
+}
+
+/// **Figures 2 & 4** — coefficient tuning: accuracy/loss vs comm volume,
+/// time, and rounds across {ring, 2hop, ER(0.4)} × {iid, het 0.8} for
+/// C²DFB vs MADSBO vs MDBO.  (Fig. 4 is the same traces plotted against
+/// rounds; the CSVs contain all three x-axes.)
+pub fn fig2(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
+    println!("== Fig 2/4: coefficient tuning across topologies & heterogeneity ==");
+    grid(
+        reg,
+        o,
+        "fig2",
+        coeff_cfg(o),
+        &[Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::Mdbo],
+    )
+}
+
+/// **Figures 3 & 6** — hyper-representation: loss vs comm volume / rounds
+/// across topologies × heterogeneity for C²DFB vs MADSBO vs C²DFB(nc).
+pub fn fig3(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
+    println!("== Fig 3/6: hyper-representation across topologies & heterogeneity ==");
+    grid(
+        reg,
+        o,
+        "fig3",
+        hyperrep_cfg(o),
+        &[Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::C2dfbNc],
+    )
+}
+
+fn grid(
+    reg: &ArtifactRegistry,
+    o: &HarnessOpts,
+    id: &str,
+    base: ExperimentConfig,
+    algos: &[Algorithm],
+) -> Result<Vec<RunMetrics>> {
+    let topologies = [
+        Topology::Ring,
+        Topology::TwoHopRing,
+        Topology::ErdosRenyi { p_milli: 400, seed: o.seed },
+    ];
+    let partitions = [Partition::Iid, Partition::Heterogeneous { h: 0.8 }];
+    let mut runs = Vec::new();
+    for topo in topologies {
+        for part in partitions {
+            for &algo in algos {
+                let mut cfg = base.clone();
+                tune_for(algo, &mut cfg);
+                cfg.name = id.into();
+                cfg.topology = topo;
+                cfg.partition = part;
+                let m = run_with_registry(reg, &cfg)?;
+                println!("  {}", summarize(&m));
+                runs.push(m);
+            }
+        }
+    }
+    write_runs(&o.out_dir, id, &runs)?;
+    Ok(runs)
+}
+
+/// **Figure 5** — sensitivity of C²DFB on coefficient tuning: (a) inner
+/// loops K, (b) compression ratio, (c) multiplier λ (σ).
+pub fn fig5(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
+    println!("== Fig 5: C²DFB sensitivity (K, compression ratio, λ) ==");
+    let mut runs = Vec::new();
+
+    for k in [1usize, 5, 15, 30] {
+        let mut cfg = coeff_cfg(o);
+        cfg.name = format!("fig5_K{k}");
+        cfg.inner_steps = k;
+        let m = run_with_registry(reg, &cfg)?;
+        println!("  K={k:3}  {}", summarize(&m));
+        runs.push(m);
+    }
+    for ratio in ["0.05", "0.1", "0.2", "0.5", "1.0"] {
+        let mut cfg = coeff_cfg(o);
+        cfg.name = format!("fig5_ratio{ratio}");
+        cfg.compressor = format!("topk:{ratio}");
+        let m = run_with_registry(reg, &cfg)?;
+        println!("  ratio={ratio:5}  {}", summarize(&m));
+        runs.push(m);
+    }
+    for lam in [1.0, 10.0, 50.0, 100.0] {
+        let mut cfg = coeff_cfg(o);
+        cfg.name = format!("fig5_lam{lam}");
+        cfg.lambda = lam;
+        let m = run_with_registry(reg, &cfg)?;
+        println!("  λ={lam:5}  {}", summarize(&m));
+        runs.push(m);
+    }
+    // Label runs uniquely before writing (RunMetrics label comes from cfg
+    // label; augment with name).
+    write_runs(&o.out_dir, "fig5", &runs)?;
+    Ok(runs)
+}
+
+/// Compressor ablation beyond the paper: top-k vs rand-k vs qsgd vs dense
+/// at matched settings (DESIGN.md "extension" item).
+pub fn compressor_ablation(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
+    println!("== Ablation: compressor family (C²DFB, coeff, ring, het) ==");
+    let mut runs = Vec::new();
+    for comp in ["topk:0.2", "randk:0.2", "qsgd:16", "none"] {
+        let mut cfg = coeff_cfg(o);
+        cfg.name = format!("ablate_{}", comp.replace(':', ""));
+        cfg.partition = Partition::Heterogeneous { h: 0.8 };
+        cfg.compressor = comp.into();
+        let m = run_with_registry(reg, &cfg)?;
+        println!("  {comp:10}  {}", summarize(&m));
+        runs.push(m);
+    }
+    write_runs(&o.out_dir, "ablation_compressor", &runs)?;
+    Ok(runs)
+}

@@ -1,0 +1,124 @@
+//! Experiment coordinator: builds the world (topology → network, artifacts
+//! → task, config → algorithm) and drives runs; [`experiments`] hosts the
+//! per-table/figure harnesses from the paper's evaluation.
+
+pub mod experiments;
+
+use crate::algorithms;
+use crate::collective::Network;
+use crate::config::ExperimentConfig;
+use crate::metrics::RunMetrics;
+use crate::runtime::ArtifactRegistry;
+use crate::tasks::{BilevelTask, PjrtTask};
+use crate::topology::Graph;
+use anyhow::Result;
+use std::path::Path;
+
+/// Build the gossip network for a config.
+pub fn build_network(cfg: &ExperimentConfig) -> Network {
+    Network::new(Graph::build(cfg.topology, cfg.nodes))
+}
+
+/// Build the PJRT-backed task for a config (artifacts must exist).
+pub fn build_task(reg: &ArtifactRegistry, cfg: &ExperimentConfig) -> Result<PjrtTask> {
+    PjrtTask::build(
+        reg,
+        &cfg.preset,
+        cfg.nodes,
+        cfg.partition,
+        cfg.data_noise as f32,
+        cfg.seed,
+    )
+}
+
+/// Run one experiment end-to-end against the real artifacts.
+pub fn run_with_registry(reg: &ArtifactRegistry, cfg: &ExperimentConfig) -> Result<RunMetrics> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    let task = build_task(reg, cfg)?;
+    let net = build_network(cfg);
+    algorithms::run(&task, net, cfg.clone())
+}
+
+/// Run against a caller-provided task (analytic tasks, tests).
+pub fn run_with_task(task: &dyn BilevelTask, cfg: &ExperimentConfig) -> Result<RunMetrics> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    let net = build_network(cfg);
+    algorithms::run(task, net, cfg.clone())
+}
+
+/// Persist a batch of run metrics under `out_dir/name/`.
+pub fn write_runs(out_dir: &str, name: &str, runs: &[RunMetrics]) -> Result<()> {
+    let dir = Path::new(out_dir).join(name);
+    for r in runs {
+        r.write_to(&dir)?;
+    }
+    Ok(())
+}
+
+/// One-line human summary of a run (used by the CLI and EXPERIMENTS.md).
+pub fn summarize(r: &RunMetrics) -> String {
+    let last = r.final_point();
+    format!(
+        "{:10} {:32} comm={:9.2} MB  rounds={:5}  oracles(1st/2nd)={}/{}  loss={:.4}  acc={:.3}  wall={:.1}s",
+        r.algo,
+        r.label,
+        r.ledger.total_mb(),
+        r.ledger.gossip_rounds,
+        r.oracles.first_order,
+        r.oracles.second_order,
+        last.map(|p| p.loss).unwrap_or(f64::NAN),
+        last.map(|p| p.accuracy).unwrap_or(f64::NAN),
+        r.wall_time_s(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+    use crate::tasks::QuadraticTask;
+
+    #[test]
+    fn run_with_task_all_algorithms() {
+        let task = QuadraticTask::generate(4, 6, 0.5, 77);
+        for algo in [
+            Algorithm::C2dfb,
+            Algorithm::C2dfbNc,
+            Algorithm::Madsbo,
+            Algorithm::Mdbo,
+        ] {
+            let cfg = ExperimentConfig {
+                algorithm: algo,
+                nodes: 4,
+                rounds: 5,
+                inner_steps: 5,
+                eta_out: 0.1,
+                eta_in: 0.2,
+                eval_every: 5,
+                ..ExperimentConfig::default()
+            };
+            let m = run_with_task(&task, &cfg).expect(algo.name());
+            assert!(!m.trace.is_empty(), "{}", algo.name());
+            assert!(m.ledger.total_bytes > 0, "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn write_runs_creates_files() {
+        let task = QuadraticTask::generate(4, 6, 0.5, 78);
+        let cfg = ExperimentConfig {
+            nodes: 4,
+            rounds: 3,
+            inner_steps: 3,
+            eta_out: 0.1,
+            eta_in: 0.2,
+            ..ExperimentConfig::default()
+        };
+        let m = run_with_task(&task, &cfg).unwrap();
+        let dir = std::env::temp_dir().join("c2dfb_write_runs");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_runs(dir.to_str().unwrap(), "t", &[m]).unwrap();
+        let files: Vec<_> = std::fs::read_dir(dir.join("t")).unwrap().collect();
+        assert_eq!(files.len(), 2); // csv + json
+    }
+}

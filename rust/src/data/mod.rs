@@ -1,0 +1,311 @@
+//! Synthetic datasets and heterogeneous partitioning.
+//!
+//! The paper evaluates on 20 Newsgroups (tf-idf features, linear model)
+//! and MNIST (784-dim images, MLP).  Neither is downloadable in this
+//! offline environment, so we generate structurally equivalent synthetic
+//! corpora (see DESIGN.md §Substitutions):
+//!
+//! * [`newsgroups_like`] — sparse-ish multiclass linear data: per-class
+//!   sparse mean direction + Gaussian noise, mimicking tf-idf geometry.
+//! * [`mnist_like`] — per-class 28×28 template images (random smooth
+//!   blobs) + pixel noise, normalized like the paper (mean .1307/std .3081).
+//!
+//! Partitioners reproduce the paper's protocols: `iid` (random split) and
+//! `heterogeneous(h)` where an h-fraction of each class's data is pinned
+//! to one designated node (the paper's h = 0.8 setting).
+
+use crate::util::rng::Rng;
+
+pub mod partition;
+
+/// A dense multiclass dataset (row-major features, one-hot labels).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub d: usize,
+    pub classes: usize,
+    /// n×d row-major.
+    pub features: Vec<f32>,
+    /// Class index per row.
+    pub labels: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.d..(i + 1) * self.d]
+    }
+
+    /// One-hot encode labels as an n×c row-major f32 matrix.
+    pub fn onehot(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n * self.classes];
+        for (i, &l) in self.labels.iter().enumerate() {
+            out[i * self.classes + l] = 1.0;
+        }
+        out
+    }
+
+    /// Select rows by index into a new dataset.
+    pub fn subset(&self, rows: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(rows.len() * self.d);
+        let mut labels = Vec::with_capacity(rows.len());
+        for &r in rows {
+            features.extend_from_slice(self.row(r));
+            labels.push(self.labels[r]);
+        }
+        Dataset { n: rows.len(), d: self.d, classes: self.classes, features, labels }
+    }
+
+    /// Split into (train, val) with the given train fraction, shuffled.
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let mut rows: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut rows);
+        let ntr = ((self.n as f64) * train_frac).round() as usize;
+        (self.subset(&rows[..ntr]), self.subset(&rows[ntr..]))
+    }
+
+    /// Pad or subsample to exactly `n` rows (artifact shapes are static).
+    pub fn resize_to(&self, n: usize, rng: &mut Rng) -> Dataset {
+        if n == self.n {
+            return self.clone();
+        }
+        let mut rows: Vec<usize> = Vec::with_capacity(n);
+        if n < self.n {
+            rows = rng.sample_indices(self.n, n);
+        } else {
+            rows.extend(0..self.n);
+            while rows.len() < n {
+                rows.push(rng.below(self.n));
+            }
+        }
+        self.subset(&rows)
+    }
+
+    /// Per-class row counts.
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &l in &self.labels {
+            h[l] += 1;
+        }
+        h
+    }
+}
+
+/// Sparse-ish multiclass linear data in the spirit of tf-idf 20-Newsgroups:
+/// each class has a sparse mean direction over `d` features (a fraction
+/// `support` of coordinates active), rows are `mean[class] + noise`, and a
+/// global sparsity mask zeroes most small entries, mimicking term-document
+/// sparsity.
+pub fn newsgroups_like(
+    n: usize,
+    d: usize,
+    classes: usize,
+    noise: f32,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let support = (0.05f64.max(20.0 / d as f64)).min(1.0);
+    let k = ((d as f64) * support).ceil() as usize;
+    // Per-class sparse mean directions (the class signal).
+    let mut means = vec![vec![0.0f32; d]; classes];
+    for mean in means.iter_mut() {
+        for idx in rng.sample_indices(d, k) {
+            mean[idx] = rng.normal_f32(0.0, 1.0);
+        }
+    }
+    // Shared class-independent "background topics" — the high-variance
+    // common-word subspace of real tf-idf corpora.  They dominate the raw
+    // feature variance, so a classifier must *suppress* them before the
+    // (small) class signal decides the prediction; this is what makes the
+    // learning curve gradual instead of one-step, like the real dataset.
+    let n_topics = 8usize.min(d / 4).max(1);
+    let bg_scale = 3.0f32;
+    let mut topics = vec![vec![0.0f32; d]; n_topics];
+    for t in topics.iter_mut() {
+        rng.fill_normal(t, 0.0, 1.0);
+        let nrm = (t.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()).sqrt() as f32;
+        for v in t.iter_mut() {
+            *v /= nrm.max(1e-9);
+        }
+    }
+    let mut features = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    let mut bg_row = vec![0.0f32; d];
+    for i in 0..n {
+        let c = i % classes; // balanced classes
+        labels.push(c);
+        let mean = &means[c];
+        bg_row.fill(0.0);
+        for t in &topics {
+            let coef = bg_scale * rng.normal_f32(0.0, 1.0);
+            for (b, tv) in bg_row.iter_mut().zip(t) {
+                *b += coef * tv;
+            }
+        }
+        let row_start = features.len();
+        for j in 0..d {
+            let x = mean[j] + bg_row[j] + rng.normal_f32(0.0, noise);
+            // Soft-threshold small activations to mimic tf-idf sparsity,
+            // then clamp to non-negative like term frequencies.
+            let x = if x.abs() < 0.5 * noise { 0.0 } else { x };
+            features.push(x.max(0.0));
+        }
+        // L2-normalize the row like tf-idf vectors: bounds the CE
+        // smoothness constant so the paper's O(1) step sizes are stable.
+        let row = &mut features[row_start..];
+        let norm = (row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()).sqrt() as f32;
+        if norm > 0.0 {
+            for v in row.iter_mut() {
+                *v /= norm;
+            }
+        }
+    }
+    let mut ds = Dataset { n, d, classes, features, labels };
+    shuffle_rows(&mut ds, &mut rng);
+    ds
+}
+
+/// MNIST-shaped data: per-class smooth 2-D templates + noise, normalized
+/// with the paper's constants (mean 0.1307, std 0.3081).  `d` is the
+/// flattened image size (784 for the full preset); non-square `d` is
+/// generated on the smallest enclosing square and truncated.
+pub fn mnist_like(n: usize, d: usize, classes: usize, noise: f32, seed: u64) -> Dataset {
+    let side = (d as f64).sqrt().ceil() as usize;
+    let mut rng = Rng::new(seed);
+    // Each class template: a sum of 3 Gaussian blobs at random positions.
+    let sq = side * side;
+    let mut templates = vec![vec![0.0f32; sq]; classes];
+    let lo = side as f32 * 0.2;
+    let hi = side as f32 * 0.8;
+    for t in templates.iter_mut() {
+        for _ in 0..3 {
+            let cx = rng.uniform_in(lo, hi);
+            let cy = rng.uniform_in(lo, hi);
+            let sigma = rng.uniform_in(side as f32 * 0.07, side as f32 * 0.18);
+            let amp = rng.uniform_in(0.6, 1.0);
+            for y in 0..side {
+                for x in 0..side {
+                    let dx = x as f32 - cx;
+                    let dy = y as f32 - cy;
+                    t[y * side + x] += amp * (-(dx * dx + dy * dy) / (2.0 * sigma * sigma)).exp();
+                }
+            }
+        }
+    }
+    let mut features = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes;
+        labels.push(c);
+        for j in 0..d {
+            let pix = (templates[c][j] + rng.normal_f32(0.0, noise)).clamp(0.0, 1.0);
+            // The paper's Normalize((0.1307,), (0.3081,)).
+            features.push((pix - 0.1307) / 0.3081);
+        }
+    }
+    let mut ds = Dataset { n, d, classes, features, labels };
+    shuffle_rows(&mut ds, &mut rng);
+    ds
+}
+
+fn shuffle_rows(ds: &mut Dataset, rng: &mut Rng) {
+    let mut order: Vec<usize> = (0..ds.n).collect();
+    rng.shuffle(&mut order);
+    let shuffled = ds.subset(&order);
+    *ds = shuffled;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn newsgroups_shapes_and_balance() {
+        let ds = newsgroups_like(200, 64, 4, 0.3, 1);
+        assert_eq!(ds.n, 200);
+        assert_eq!(ds.d, 64);
+        assert_eq!(ds.features.len(), 200 * 64);
+        let hist = ds.class_histogram();
+        assert_eq!(hist.iter().sum::<usize>(), 200);
+        assert!(hist.iter().all(|&c| c == 50));
+    }
+
+    #[test]
+    fn newsgroups_is_sparse_nonnegative_unit_rows() {
+        let ds = newsgroups_like(100, 128, 4, 0.3, 2);
+        let zeros = ds.features.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros as f64 / ds.features.len() as f64 > 0.3, "not sparse: {zeros}");
+        assert!(ds.features.iter().all(|&x| x >= 0.0));
+        for i in 0..ds.n {
+            let norm: f64 = ds.row(i).iter().map(|v| (*v as f64).powi(2)).sum();
+            assert!((norm - 1.0).abs() < 1e-4, "row {i} norm² {norm}");
+        }
+    }
+
+    #[test]
+    fn newsgroups_is_linearly_separable_ish() {
+        // Class means should be farther apart than in-class scatter, so a
+        // linear model can learn: check mean inter-class distance exceeds
+        // mean intra-class distance.
+        let ds = newsgroups_like(120, 100, 3, 0.2, 3);
+        let mut means = vec![vec![0.0f64; ds.d]; 3];
+        let hist = ds.class_histogram();
+        for i in 0..ds.n {
+            for j in 0..ds.d {
+                means[ds.labels[i]][j] += ds.row(i)[j] as f64;
+            }
+        }
+        for (c, m) in means.iter_mut().enumerate() {
+            for v in m.iter_mut() {
+                *v /= hist[c] as f64;
+            }
+        }
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt()
+        };
+        let inter = dist(&means[0], &means[1]).min(dist(&means[1], &means[2]));
+        assert!(inter > 0.5, "class means too close: {inter}");
+    }
+
+    #[test]
+    fn mnist_like_shapes_and_normalization() {
+        let ds = mnist_like(50, 784, 10, 0.1, 4);
+        assert_eq!(ds.d, 784);
+        // Normalized pixel range: (0−.1307)/.3081 ≈ −0.42, (1−.1307)/.3081 ≈ 2.82.
+        for &x in &ds.features {
+            assert!((-0.43..=2.83).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn split_and_resize() {
+        let mut rng = Rng::new(5);
+        let ds = newsgroups_like(100, 32, 4, 0.3, 6);
+        let (tr, va) = ds.split(0.7, &mut rng);
+        assert_eq!(tr.n, 70);
+        assert_eq!(va.n, 30);
+        let up = va.resize_to(50, &mut rng);
+        assert_eq!(up.n, 50);
+        let down = tr.resize_to(10, &mut rng);
+        assert_eq!(down.n, 10);
+    }
+
+    #[test]
+    fn onehot_rows_sum_to_one() {
+        let ds = newsgroups_like(30, 16, 4, 0.3, 7);
+        let oh = ds.onehot();
+        for i in 0..ds.n {
+            let s: f32 = oh[i * 4..(i + 1) * 4].iter().sum();
+            assert_eq!(s, 1.0);
+            assert_eq!(oh[i * 4 + ds.labels[i]], 1.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = newsgroups_like(40, 16, 4, 0.3, 9);
+        let b = newsgroups_like(40, 16, 4, 0.3, 9);
+        assert_eq!(a.features, b.features);
+        let c = newsgroups_like(40, 16, 4, 0.3, 10);
+        assert_ne!(a.features, c.features);
+    }
+}

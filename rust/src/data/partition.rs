@@ -1,0 +1,173 @@
+//! Data partitioners across decentralized nodes.
+//!
+//! `iid` reproduces the paper's random split; `heterogeneous(h)` its
+//! class-skew protocol: an `h` fraction of each class c's rows is pinned to
+//! node `c mod m`, the remaining `1−h` spread uniformly over the others
+//! (the paper's experiments use h = 0.8).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Partition {
+    Iid,
+    /// `h` ∈ [0, 1): fraction of each class pinned to its designated node.
+    Heterogeneous { h: f64 },
+}
+
+impl Partition {
+    pub fn name(&self) -> String {
+        match self {
+            Partition::Iid => "iid".into(),
+            Partition::Heterogeneous { h } => format!("het:{h}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Partition, String> {
+        if s == "iid" {
+            return Ok(Partition::Iid);
+        }
+        if let Some(h) = s.strip_prefix("het:").or_else(|| s.strip_prefix("het=")) {
+            let h: f64 = h.parse().map_err(|_| format!("bad heterogeneity: {s}"))?;
+            if !(0.0..=1.0).contains(&h) {
+                return Err(format!("heterogeneity out of range: {h}"));
+            }
+            return Ok(Partition::Heterogeneous { h });
+        }
+        Err(format!("unknown partition: {s} (use 'iid' or 'het:0.8')"))
+    }
+
+    /// Split `ds` into `m` shards according to the scheme.
+    pub fn split(&self, ds: &Dataset, m: usize, rng: &mut Rng) -> Vec<Dataset> {
+        assert!(m >= 1);
+        let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); m];
+        match self {
+            Partition::Iid => {
+                let mut rows: Vec<usize> = (0..ds.n).collect();
+                rng.shuffle(&mut rows);
+                for (i, r) in rows.into_iter().enumerate() {
+                    assignment[i % m].push(r);
+                }
+            }
+            Partition::Heterogeneous { h } => {
+                // Group rows by class.
+                let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+                for i in 0..ds.n {
+                    by_class[ds.labels[i]].push(i);
+                }
+                for (c, mut rows) in by_class.into_iter().enumerate() {
+                    rng.shuffle(&mut rows);
+                    let pinned = ((rows.len() as f64) * h).round() as usize;
+                    let home = c % m;
+                    for (i, r) in rows.into_iter().enumerate() {
+                        if i < pinned {
+                            assignment[home].push(r);
+                        } else if m == 1 {
+                            assignment[0].push(r);
+                        } else {
+                            // Spread the tail over the other m−1 nodes.
+                            let mut t = rng.below(m - 1);
+                            if t >= home {
+                                t += 1;
+                            }
+                            assignment[t].push(r);
+                        }
+                    }
+                }
+            }
+        }
+        assignment.iter().map(|rows| ds.subset(rows)).collect()
+    }
+}
+
+/// Node-level skew measure: mean over nodes of the total-variation distance
+/// between the node's class distribution and the global one.  0 for a
+/// perfectly IID split, → 1 as shards become single-class.
+pub fn skew(shards: &[Dataset], classes: usize) -> f64 {
+    let total: usize = shards.iter().map(|s| s.n).sum();
+    let mut global = vec![0.0f64; classes];
+    for s in shards {
+        for (c, cnt) in s.class_histogram().into_iter().enumerate() {
+            global[c] += cnt as f64;
+        }
+    }
+    for g in global.iter_mut() {
+        *g /= total as f64;
+    }
+    let mut acc = 0.0;
+    for s in shards {
+        if s.n == 0 {
+            continue;
+        }
+        let hist = s.class_histogram();
+        let tv: f64 = hist
+            .iter()
+            .enumerate()
+            .map(|(c, &cnt)| (cnt as f64 / s.n as f64 - global[c]).abs())
+            .sum::<f64>()
+            / 2.0;
+        acc += tv;
+    }
+    acc / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::newsgroups_like;
+
+    #[test]
+    fn iid_split_sizes_balanced() {
+        let ds = newsgroups_like(103, 16, 4, 0.3, 1);
+        let mut rng = Rng::new(2);
+        let shards = Partition::Iid.split(&ds, 10, &mut rng);
+        assert_eq!(shards.len(), 10);
+        let total: usize = shards.iter().map(|s| s.n).sum();
+        assert_eq!(total, 103);
+        assert!(shards.iter().all(|s| s.n >= 10 && s.n <= 11));
+    }
+
+    #[test]
+    fn heterogeneous_pins_classes() {
+        let ds = newsgroups_like(400, 16, 4, 0.3, 3);
+        let mut rng = Rng::new(4);
+        let shards = Partition::Heterogeneous { h: 0.8 }.split(&ds, 4, &mut rng);
+        for (node, s) in shards.iter().enumerate() {
+            let hist = s.class_histogram();
+            // Node c holds ~80% of class c: that class dominates its shard.
+            let own = hist[node] as f64 / s.n as f64;
+            assert!(own > 0.5, "node {node} own-class frac {own}");
+        }
+    }
+
+    #[test]
+    fn heterogeneity_increases_skew() {
+        let ds = newsgroups_like(600, 16, 6, 0.3, 5);
+        let mut rng = Rng::new(6);
+        let iid = skew(&Partition::Iid.split(&ds, 6, &mut rng), 6);
+        let het5 = skew(&Partition::Heterogeneous { h: 0.5 }.split(&ds, 6, &mut rng), 6);
+        let het9 = skew(&Partition::Heterogeneous { h: 0.9 }.split(&ds, 6, &mut rng), 6);
+        assert!(iid < het5, "{iid} !< {het5}");
+        assert!(het5 < het9, "{het5} !< {het9}");
+    }
+
+    #[test]
+    fn more_classes_than_nodes_wraps() {
+        let ds = newsgroups_like(300, 8, 10, 0.3, 7);
+        let mut rng = Rng::new(8);
+        let shards = Partition::Heterogeneous { h: 0.8 }.split(&ds, 3, &mut rng);
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards.iter().map(|s| s.n).sum::<usize>(), 300);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Partition::parse("iid").unwrap(), Partition::Iid);
+        assert_eq!(
+            Partition::parse("het:0.8").unwrap(),
+            Partition::Heterogeneous { h: 0.8 }
+        );
+        assert!(Partition::parse("x").is_err());
+        assert!(Partition::parse("het:2").is_err());
+    }
+}

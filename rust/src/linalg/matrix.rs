@@ -1,0 +1,201 @@
+//! Small dense `f64` matrices: mixing-matrix algebra and a cyclic Jacobi
+//! eigensolver (the mixing matrices are symmetric, m ≤ a few hundred, so
+//! Jacobi is simple, robust and plenty fast).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF64 {
+    pub n: usize,
+    /// Row-major n×n storage.
+    pub a: Vec<f64>,
+}
+
+impl MatF64 {
+    pub fn zeros(n: usize) -> MatF64 {
+        MatF64 { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn identity(n: usize) -> MatF64 {
+        let mut m = MatF64::zeros(n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> MatF64 {
+        let n = rows.len();
+        assert!(rows.iter().all(|r| r.len() == n), "not square");
+        MatF64 { n, a: rows.iter().flatten().copied().collect() }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.a[i * self.n..(i + 1) * self.n]
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        (0..self.n).map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum()).collect()
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                if (self.get(i, j) - self.get(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Max |row sum − 1| and |col sum − 1|: 0 for a doubly stochastic matrix.
+    pub fn doubly_stochastic_defect(&self) -> f64 {
+        let mut worst: f64 = 0.0;
+        for i in 0..self.n {
+            let rs: f64 = self.row(i).iter().sum();
+            let cs: f64 = (0..self.n).map(|j| self.get(j, i)).sum();
+            worst = worst.max((rs - 1.0).abs()).max((cs - 1.0).abs());
+        }
+        worst
+    }
+
+    /// Eigenvalues of a symmetric matrix via cyclic Jacobi rotations,
+    /// sorted descending.  Panics if not symmetric.
+    pub fn symmetric_eigenvalues(&self) -> Vec<f64> {
+        assert!(self.is_symmetric(1e-9), "Jacobi requires a symmetric matrix");
+        let n = self.n;
+        let mut a = self.clone();
+        // Up to 30 sweeps; convergence is quadratic so this is generous.
+        for _sweep in 0..30 {
+            let mut off: f64 = 0.0;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    off += a.get(i, j).powi(2);
+                }
+            }
+            if off.sqrt() < 1e-12 {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let apq = a.get(p, q);
+                    if apq.abs() < 1e-15 {
+                        continue;
+                    }
+                    let app = a.get(p, p);
+                    let aqq = a.get(q, q);
+                    let theta = (aqq - app) / (2.0 * apq);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    // Apply the rotation G(p,q,θ)ᵀ A G(p,q,θ) in place.
+                    for k in 0..n {
+                        let akp = a.get(k, p);
+                        let akq = a.get(k, q);
+                        a[(k, p)] = c * akp - s * akq;
+                        a[(k, q)] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a.get(p, k);
+                        let aqk = a.get(q, k);
+                        a[(p, k)] = c * apk - s * aqk;
+                        a[(q, k)] = s * apk + c * aqk;
+                    }
+                }
+            }
+        }
+        let mut eig: Vec<f64> = (0..n).map(|i| a.get(i, i)).collect();
+        eig.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        eig
+    }
+
+    /// Second-largest eigenvalue magnitude δ_ρ = max{|λ₂|, |λ_m|} of a
+    /// doubly stochastic symmetric matrix (λ₁ = 1), per Definition 3.
+    pub fn second_largest_eig_magnitude(&self) -> f64 {
+        let eig = self.symmetric_eigenvalues();
+        assert!(eig.len() >= 2, "need m >= 2");
+        // λ₁ should be 1 for a mixing matrix; take the rest.
+        eig[1].abs().max(eig[eig.len() - 1].abs())
+    }
+
+    /// Largest singular value squared of (W − I) — the ρ' constant in the
+    /// paper's Lemma 4 — i.e. the largest eigenvalue of (W−I)ᵀ(W−I),
+    /// which for symmetric W is max (λᵢ−1)².
+    pub fn w_minus_i_norm_sq(&self) -> f64 {
+        self.symmetric_eigenvalues()
+            .iter()
+            .map(|l| (l - 1.0).powi(2))
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatF64 {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.a[i * self.n + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for MatF64 {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.a[i * self.n + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_eigenvalues() {
+        let eig = MatF64::identity(5).symmetric_eigenvalues();
+        for e in eig {
+            assert!((e - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let m = MatF64::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let eig = m.symmetric_eigenvalues();
+        assert!((eig[0] - 3.0).abs() < 1e-10);
+        assert!((eig[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ring_mixing_spectrum() {
+        // 4-ring with 1/3 self + 1/3 each neighbor... use W = I/2 + (P+Pᵀ)/4
+        // for the 4-cycle: eigenvalues 1/2 + cos(2πk/4)/2 = {1, 1/2, 0, 1/2}.
+        let n = 4;
+        let mut w = MatF64::zeros(n);
+        for i in 0..n {
+            w[(i, i)] = 0.5;
+            w[(i, (i + 1) % n)] += 0.25;
+            w[(i, (i + n - 1) % n)] += 0.25;
+        }
+        assert!(w.doubly_stochastic_defect() < 1e-12);
+        let eig = w.symmetric_eigenvalues();
+        assert!((eig[0] - 1.0).abs() < 1e-10);
+        assert!((eig[1] - 0.5).abs() < 1e-10);
+        assert!(eig[3].abs() < 1e-10);
+        assert!((w.second_largest_eig_magnitude() - 0.5).abs() < 1e-10);
+    }
+
+    #[test]
+    fn matvec_works() {
+        let m = MatF64::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn w_minus_i_norm() {
+        let m = MatF64::identity(3);
+        assert!(m.w_minus_i_norm_sq() < 1e-12);
+    }
+}

@@ -1,0 +1,152 @@
+//! Dense linear algebra substrate.
+//!
+//! The coordinator's per-round math — gossip mixing, gradient tracking,
+//! compression residuals — is all level-1 BLAS on `f32` vectors plus a
+//! little dense `f64` matrix work for the mixing matrices (doubly
+//! stochastic checks, spectral gap via a cyclic Jacobi eigensolver).
+
+pub mod matrix;
+
+pub use matrix::MatF64;
+
+// ---------------------------------------------------------------------------
+// f32 vector kernels (the L3 hot path)
+// ---------------------------------------------------------------------------
+
+/// `y += alpha * x`
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = x` (copy)
+#[inline]
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// `x *= alpha`
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Dot product with f64 accumulation.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+/// Squared Euclidean norm (f64 accumulation).
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    x.iter().map(|a| *a as f64 * *a as f64).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// `out = a - b`
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// `a -= b`
+#[inline]
+pub fn sub_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x -= y;
+    }
+}
+
+/// `a += b`
+#[inline]
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Mean of m stacked vectors of dimension d (`rows` is row-major m×d).
+pub fn mean_rows(rows: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!rows.is_empty());
+    let d = rows[0].len();
+    let mut out = vec![0.0f32; d];
+    for r in rows {
+        add_assign(&mut out, r);
+    }
+    scale(1.0 / rows.len() as f32, &mut out);
+    out
+}
+
+/// Frobenius-norm² of the consensus error `‖X − 1·x̄‖²` of stacked rows.
+pub fn consensus_err_sq(rows: &[Vec<f32>]) -> f64 {
+    let mean = mean_rows(rows);
+    rows.iter()
+        .map(|r| {
+            r.iter()
+                .zip(&mean)
+                .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+                .sum::<f64>()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_dot_norm() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert!((norm2(&x) - 14f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_and_consensus() {
+        let rows = vec![vec![1.0, 0.0], vec![3.0, 4.0]];
+        assert_eq!(mean_rows(&rows), vec![2.0, 2.0]);
+        // ‖(−1,−2)‖² + ‖(1,2)‖² = 5 + 5
+        assert!((consensus_err_sq(&rows) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consensus_zero_when_equal() {
+        let rows = vec![vec![5.0; 8]; 4];
+        assert!(consensus_err_sq(&rows) < 1e-12);
+    }
+
+    #[test]
+    fn sub_ops() {
+        let a = vec![5.0, 7.0];
+        let b = vec![2.0, 3.0];
+        let mut out = vec![0.0; 2];
+        sub(&a, &b, &mut out);
+        assert_eq!(out, vec![3.0, 4.0]);
+        let mut c = a.clone();
+        sub_assign(&mut c, &b);
+        assert_eq!(c, out);
+        add_assign(&mut c, &b);
+        assert_eq!(c, a);
+    }
+}

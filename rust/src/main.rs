@@ -1,0 +1,153 @@
+//! c2dfb — leader entrypoint / CLI.
+//!
+//! ```text
+//! c2dfb run [--config cfg.toml] [--algo c2dfb] [--topology ring] ...
+//! c2dfb table1 [--rounds N] [--target 0.7] [--tiny]
+//! c2dfb fig2 | fig3 | fig4 | fig5 | fig6 | ablation [--rounds N] [--tiny]
+//! c2dfb all [--rounds N]          # every table+figure harness
+//! c2dfb artifacts                  # list AOT artifacts + shapes
+//! ```
+
+use anyhow::{anyhow, Result};
+use c2dfb::config::toml::TomlValue;
+use c2dfb::config::ExperimentConfig;
+use c2dfb::coordinator::{experiments, run_with_registry, summarize};
+use c2dfb::runtime::ArtifactRegistry;
+use c2dfb::util::cli::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|all|artifacts> [options]
+  run options: --config <file.toml> plus any config key as --key value
+               (e.g. --algo mdbo --topology er:0.4 --partition het:0.8
+                --rounds 100 --compressor topk:0.2 --lambda 10)
+  harness options: --rounds N  --target 0.7  --tiny  --out DIR  --seed S";
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env();
+    let sub = args
+        .subcommand
+        .clone()
+        .ok_or_else(|| anyhow!("{USAGE}"))?;
+
+    match sub.as_str() {
+        "artifacts" => {
+            args.finish().map_err(anyhow::Error::msg)?;
+            let reg = ArtifactRegistry::open_default()?;
+            println!("artifacts root: {}", reg.root.display());
+            for (key, e) in &reg.manifest.entries {
+                let ins: Vec<String> =
+                    e.inputs.iter().map(|s| format!("{:?}", s.shape)).collect();
+                println!(
+                    "  {key:28} kernels={:6} inputs={} outputs={:?}",
+                    e.kernels,
+                    ins.join(","),
+                    e.outputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>()
+                );
+            }
+            Ok(())
+        }
+        "run" => cmd_run(args),
+        "table1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "ablation" | "all" => {
+            cmd_harness(&sub, args)
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}\n{USAGE}")),
+    }
+}
+
+fn cmd_run(mut args: Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(std::path::Path::new(&path))
+            .map_err(anyhow::Error::msg)?,
+        None => ExperimentConfig::default(),
+    };
+    // Any remaining --key value pairs are config overrides.
+    for key in [
+        "name", "preset", "algo", "algorithm", "nodes", "m", "topology", "partition",
+        "compressor", "rounds", "inner_steps", "K", "eta_out", "eta_in", "gamma_out",
+        "gamma_in", "gamma", "lambda", "sigma", "seed", "eval_every",
+        "target_accuracy", "data_noise", "out_dir",
+    ] {
+        if let Some(v) = args.get(key) {
+            // Ints/floats/strings: try int, then float, then string.
+            let tv = if let Ok(i) = v.parse::<i64>() {
+                TomlValue::Int(i)
+            } else if let Ok(f) = v.parse::<f64>() {
+                TomlValue::Float(f)
+            } else {
+                TomlValue::Str(v)
+            };
+            cfg.apply_one(key, &tv).map_err(anyhow::Error::msg)?;
+        }
+    }
+    args.finish().map_err(anyhow::Error::msg)?;
+    cfg.validate().map_err(anyhow::Error::msg)?;
+
+    let reg = ArtifactRegistry::open_default()?;
+    println!(
+        "running {} on {} (topology={}, partition={}, compressor={}, rounds={})",
+        cfg.algorithm.name(),
+        cfg.preset,
+        cfg.topology.name(),
+        cfg.partition.name(),
+        cfg.compressor,
+        cfg.rounds
+    );
+    let metrics = run_with_registry(&reg, &cfg)?;
+    println!("{}", summarize(&metrics));
+    let dir = std::path::Path::new(&cfg.out_dir).join(&cfg.name);
+    metrics.write_to(&dir)?;
+    println!("traces written to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_harness(which: &str, mut args: Args) -> Result<()> {
+    let tiny = args.flag("tiny");
+    let mut opts = experiments::HarnessOpts {
+        rounds: args.get_parse("rounds", if tiny { 20 } else { 120 }),
+        out_dir: args.get_or("out", "runs"),
+        seed: args.get_parse("seed", 42u64),
+        ..Default::default()
+    };
+    if tiny {
+        opts.coeff_preset = "coeff_tiny".into();
+        opts.hyperrep_preset = "hyperrep_tiny".into();
+    }
+    let target: f64 = args.get_parse("target", 0.7);
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let reg = ArtifactRegistry::open_default()?;
+    match which {
+        "table1" => {
+            experiments::table1(&reg, &opts, target)?;
+        }
+        // Fig 4 is Fig 2's traces plotted against rounds; Fig 6 is Fig 3's.
+        "fig2" | "fig4" => {
+            experiments::fig2(&reg, &opts)?;
+        }
+        "fig3" | "fig6" => {
+            experiments::fig3(&reg, &opts)?;
+        }
+        "fig5" => {
+            experiments::fig5(&reg, &opts)?;
+        }
+        "ablation" => {
+            experiments::compressor_ablation(&reg, &opts)?;
+        }
+        "all" => {
+            experiments::table1(&reg, &opts, target)?;
+            experiments::fig2(&reg, &opts)?;
+            experiments::fig3(&reg, &opts)?;
+            experiments::fig5(&reg, &opts)?;
+            experiments::compressor_ablation(&reg, &opts)?;
+        }
+        _ => unreachable!(),
+    }
+    println!("\ntraces under {}/ — plot loss/accuracy against comm_mb (Figs 2,3), wall/sim time (Fig 2 right, Table 1), or round (Figs 4,6).", opts.out_dir);
+    Ok(())
+}

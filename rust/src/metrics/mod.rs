@@ -1,0 +1,254 @@
+//! Run metrics: communication ledger, oracle counters, traces, CSV/JSON out.
+//!
+//! The paper's plots are test accuracy/loss against (a) cumulative
+//! communication volume in MB, (b) wall-clock time, and (c) round index —
+//! so the ledger records exact bytes per round (from the compressor's wire
+//! model), a modeled network time (latency + bytes/bandwidth per gossip
+//! round, the in-process simulator has no real network), and real compute
+//! time.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Simple network cost model used to convert bytes into simulated seconds.
+/// Defaults approximate the paper's LAN testbed: 1 ms latency, 1 Gbit/s.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeModel {
+    pub latency_s: f64,
+    pub bandwidth_bytes_per_s: f64,
+}
+
+impl Default for TimeModel {
+    fn default() -> Self {
+        TimeModel { latency_s: 1e-3, bandwidth_bytes_per_s: 125e6 }
+    }
+}
+
+impl TimeModel {
+    /// Time for one synchronous gossip round in which the busiest node
+    /// sends `max_node_bytes` (nodes transmit to neighbours in parallel).
+    pub fn round_time(&self, max_node_bytes: usize) -> f64 {
+        self.latency_s + max_node_bytes as f64 / self.bandwidth_bytes_per_s
+    }
+}
+
+/// Per-run communication ledger.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    /// Total application bytes sent by all nodes.
+    pub total_bytes: u64,
+    /// Number of gossip exchanges (a "communication round" in the plots).
+    pub gossip_rounds: u64,
+    /// Total simulated network seconds (per the TimeModel).
+    pub network_time_s: f64,
+    /// Messages sent.
+    pub messages: u64,
+}
+
+impl CommLedger {
+    /// Record one synchronous gossip exchange.  `per_node_bytes[i]` is the
+    /// bytes node i transmitted to EACH neighbour; `fanout[i]` its degree.
+    pub fn record_round(
+        &mut self,
+        per_node_bytes: &[usize],
+        fanout: &[usize],
+        tm: &TimeModel,
+    ) {
+        let mut max_node = 0usize;
+        for (b, f) in per_node_bytes.iter().zip(fanout) {
+            let node_total = b * f;
+            self.total_bytes += node_total as u64;
+            self.messages += *f as u64;
+            max_node = max_node.max(node_total);
+        }
+        self.gossip_rounds += 1;
+        self.network_time_s += tm.round_time(max_node);
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total_bytes as f64 / 1e6
+    }
+}
+
+/// Oracle-call counters — the paper's computation-efficiency metric.
+#[derive(Clone, Debug, Default)]
+pub struct OracleCounter {
+    pub first_order: u64,
+    pub second_order: u64, // HVP / JVP calls (baselines only)
+    pub evals: u64,
+}
+
+/// A single evaluation record along a run.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub round: usize,
+    pub comm_mb: f64,
+    pub sim_time_s: f64,
+    pub wall_time_s: f64,
+    pub loss: f64,
+    pub accuracy: f64,
+    pub grad_norm: f64,
+    pub consensus_err: f64,
+}
+
+/// Full metrics for one experiment run.
+pub struct RunMetrics {
+    pub algo: String,
+    pub label: String,
+    pub ledger: CommLedger,
+    pub oracles: OracleCounter,
+    pub trace: Vec<TracePoint>,
+    pub time_model: TimeModel,
+    started: Instant,
+}
+
+impl RunMetrics {
+    pub fn new(algo: &str, label: &str) -> RunMetrics {
+        RunMetrics {
+            algo: algo.into(),
+            label: label.into(),
+            ledger: CommLedger::default(),
+            oracles: OracleCounter::default(),
+            trace: Vec::new(),
+            time_model: TimeModel::default(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn wall_time_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_eval(
+        &mut self,
+        round: usize,
+        loss: f64,
+        accuracy: f64,
+        grad_norm: f64,
+        consensus_err: f64,
+    ) {
+        self.trace.push(TracePoint {
+            round,
+            comm_mb: self.ledger.total_mb(),
+            sim_time_s: self.ledger.network_time_s,
+            wall_time_s: self.wall_time_s(),
+            loss,
+            accuracy,
+            grad_norm,
+            consensus_err,
+        });
+    }
+
+    /// First trace point reaching `acc` test accuracy, if any.
+    pub fn time_to_accuracy(&self, acc: f64) -> Option<&TracePoint> {
+        self.trace.iter().find(|p| p.accuracy >= acc)
+    }
+
+    /// First trace point with loss at or below `loss`, if any.
+    pub fn comm_to_loss(&self, loss: f64) -> Option<&TracePoint> {
+        self.trace.iter().find(|p| p.loss <= loss)
+    }
+
+    pub fn final_point(&self) -> Option<&TracePoint> {
+        self.trace.last()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,comm_mb,sim_time_s,wall_time_s,loss,accuracy,grad_norm,consensus_err\n",
+        );
+        for p in &self.trace {
+            let _ = writeln!(
+                out,
+                "{},{:.6},{:.6},{:.3},{:.6},{:.4},{:.6e},{:.6e}",
+                p.round, p.comm_mb, p.sim_time_s, p.wall_time_s, p.loss, p.accuracy,
+                p.grad_norm, p.consensus_err
+            );
+        }
+        out
+    }
+
+    pub fn summary_json(&self) -> Json {
+        let last = self.trace.last();
+        Json::obj(vec![
+            ("algo", Json::str(&self.algo)),
+            ("label", Json::str(&self.label)),
+            ("comm_mb", Json::num(self.ledger.total_mb())),
+            ("gossip_rounds", Json::num(self.ledger.gossip_rounds as f64)),
+            ("messages", Json::num(self.ledger.messages as f64)),
+            ("network_time_s", Json::num(self.ledger.network_time_s)),
+            ("wall_time_s", Json::num(self.wall_time_s())),
+            ("first_order_calls", Json::num(self.oracles.first_order as f64)),
+            ("second_order_calls", Json::num(self.oracles.second_order as f64)),
+            ("final_loss", Json::num(last.map(|p| p.loss).unwrap_or(f64::NAN))),
+            ("final_accuracy", Json::num(last.map(|p| p.accuracy).unwrap_or(f64::NAN))),
+        ])
+    }
+
+    /// Write trace CSV + summary JSON under `dir` (created if needed).
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let stem = format!("{}_{}", self.algo, self.label.replace([' ', '/'], "_"));
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(
+            dir.join(format!("{stem}.json")),
+            self.summary_json().to_string(),
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = CommLedger::default();
+        let tm = TimeModel::default();
+        l.record_round(&[100, 200], &[2, 3], &tm);
+        assert_eq!(l.total_bytes, 100 * 2 + 200 * 3);
+        assert_eq!(l.messages, 5);
+        assert_eq!(l.gossip_rounds, 1);
+        assert!(l.network_time_s > tm.latency_s);
+    }
+
+    #[test]
+    fn time_model_round_time() {
+        let tm = TimeModel { latency_s: 0.001, bandwidth_bytes_per_s: 1000.0 };
+        assert!((tm.round_time(2000) - 2.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_and_thresholds() {
+        let mut m = RunMetrics::new("c2dfb", "test");
+        m.record_eval(0, 2.0, 0.3, 1.0, 0.1);
+        m.ledger.total_bytes = 5_000_000;
+        m.record_eval(10, 1.0, 0.75, 0.5, 0.05);
+        let p = m.time_to_accuracy(0.7).unwrap();
+        assert_eq!(p.round, 10);
+        assert!((p.comm_mb - 5.0).abs() < 1e-9);
+        assert!(m.time_to_accuracy(0.9).is_none());
+        assert_eq!(m.comm_to_loss(1.5).unwrap().round, 10);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut m = RunMetrics::new("a", "b");
+        m.record_eval(0, 1.0, 0.5, 0.0, 0.0);
+        let csv = m.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn summary_json_parses() {
+        let m = RunMetrics::new("c2dfb", "ring");
+        let j = m.summary_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("algo").unwrap().as_str(), Some("c2dfb"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Decentralized optimization building blocks:
+//!
+//! * [`refpoint`] — the paper's reference-point compressed consensus state
+//!   (Algorithm 2's d̂ / ŝ bookkeeping, including the neighbour-weighted
+//!   accumulator (d̂)_w so only residuals ever cross the wire).
+//! * [`tracking`] — plain (uncompressed) gradient tracking, used by the
+//!   outer loop and the baselines.
+//! * [`inner`] — the `IN` procedure (Algorithm 2) over all nodes, plus the
+//!   naive-compression variant used by the C²DFB(nc) ablation.
+
+pub mod inner;
+pub mod refpoint;
+pub mod tracking;
+
+pub use inner::{run_inner, run_inner_naive, InnerConfig, InnerState};
+pub use refpoint::RefPoint;
+pub use tracking::DenseTracker;

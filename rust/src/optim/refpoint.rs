@@ -1,0 +1,200 @@
+//! Reference-point compressed consensus state (paper §4.3, Algorithm 2).
+//!
+//! Each node i maintains, for a consensus variable d:
+//!
+//! * `hat`  — its own reference point d̂_i (also known to its neighbours);
+//! * `hat_w` — the neighbour-weighted accumulator (d̂_i)_w = Σ_{j∈N_i} w_ij d̂_j,
+//!   maintained incrementally from received compressed residuals so the
+//!   full d̂_j vectors never travel.
+//!
+//! Per step: the mixing term is `γ ((d̂)_w − sw·d̂_i)` with `sw = Σ_{j∈N_i} w_ij`;
+//! after the local update the node transmits `Q(d_new − d̂_i)`, applies it to
+//! its own `hat`, and every neighbour folds the same message into its
+//! `hat_w` with weight w_ij.  Because the identical message updates both
+//! sides, `(d̂_i)_w` stays exactly consistent with Σ w_ij d̂_j (the paper's
+//! key invariant), and the global average follows the uncompressed
+//! dynamics (Eq. 7).
+
+use crate::compress::Compressed;
+
+#[derive(Clone, Debug)]
+pub struct RefPoint {
+    pub hat: Vec<f32>,
+    pub hat_w: Vec<f32>,
+    /// Σ_{j∈N_i} w_ij (constant for a fixed topology; = 1 − w_ii).
+    pub neighbor_weight_sum: f32,
+}
+
+impl RefPoint {
+    pub fn new(dim: usize, neighbor_weight_sum: f64) -> RefPoint {
+        RefPoint {
+            hat: vec![0.0; dim],
+            hat_w: vec![0.0; dim],
+            neighbor_weight_sum: neighbor_weight_sum as f32,
+        }
+    }
+
+    /// The consensus mixing term `γ Σ_j w_ij (d̂_j − d̂_i)` evaluated from the
+    /// accumulator: `γ (hat_w − sw · hat)`, added onto `out`.
+    pub fn add_mix_term(&self, gamma: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.hat.len());
+        let sw = self.neighbor_weight_sum;
+        for ((o, hw), h) in out.iter_mut().zip(&self.hat_w).zip(&self.hat) {
+            *o += gamma * (hw - sw * h);
+        }
+    }
+
+    /// Residual to transmit this step: `d_new − d̂_i` (dense, pre-compression).
+    pub fn residual(&self, d_new: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(d_new.len(), self.hat.len());
+        d_new.iter().zip(&self.hat).map(|(d, h)| d - h).collect()
+    }
+
+    /// Fold the node's *own* transmitted message into its reference point:
+    /// `d̂_i ← d̂_i + Q(residual)`.
+    pub fn apply_own(&mut self, msg: &Compressed) {
+        msg.add_into(&mut self.hat);
+    }
+
+    /// Fold a *neighbour's* message into the weighted accumulator:
+    /// `(d̂)_w ← (d̂)_w + w_ij · Q_j`.
+    pub fn apply_neighbor(&mut self, weight: f64, msg: &Compressed) {
+        msg.add_scaled_into(weight as f32, &mut self.hat_w);
+    }
+
+    /// Compression error ‖d − d̂‖² (the inner-loop Lyapunov term Ω₁).
+    pub fn compression_err_sq(&self, d: &[f32]) -> f64 {
+        d.iter()
+            .zip(&self.hat)
+            .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, Identity, TopK};
+    use crate::topology::{Graph, MixingMatrix, Topology};
+    use crate::util::rng::Rng;
+
+    /// With the identity compressor, after one exchange the accumulator
+    /// must equal Σ_j w_ij d̂_j exactly.
+    #[test]
+    fn accumulator_matches_direct_sum_identity() {
+        let g = Graph::build(Topology::Ring, 5);
+        let w = MixingMatrix::metropolis(&g);
+        let d = 7;
+        let mut rng = Rng::new(1);
+        let mut states: Vec<RefPoint> = (0..5)
+            .map(|i| RefPoint::new(d, 1.0 - w.weight(i, i)))
+            .collect();
+        // Each node "has" a vector and sends its full residual (Q = id).
+        let vecs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let msgs: Vec<_> = (0..5)
+            .map(|i| Identity.compress(&states[i].residual(&vecs[i]), &mut rng))
+            .collect();
+        for i in 0..5 {
+            states[i].apply_own(&msgs[i]);
+        }
+        for i in 0..5 {
+            for &(j, wij) in w.neighbors(i) {
+                states[i].apply_neighbor(wij, &msgs[j]);
+            }
+        }
+        // hat_j == vecs_j now; check hat_w_i == Σ w_ij vecs_j.
+        for i in 0..5 {
+            for k in 0..d {
+                let direct: f64 = w
+                    .neighbors(i)
+                    .iter()
+                    .map(|&(j, wij)| wij * vecs[j][k] as f64)
+                    .sum();
+                assert!((states[i].hat_w[k] as f64 - direct).abs() < 1e-5);
+            }
+        }
+    }
+
+    /// The invariant holds for ANY compressor: hat_w_i == Σ_j w_ij hat_j,
+    /// because both sides are updated from the identical message.
+    #[test]
+    fn invariant_under_topk_many_steps() {
+        let g = Graph::build(Topology::TwoHopRing, 6);
+        let w = MixingMatrix::metropolis(&g);
+        let d = 13;
+        let mut rng = Rng::new(2);
+        let q = TopK::new(0.3);
+        let mut states: Vec<RefPoint> = (0..6)
+            .map(|i| RefPoint::new(d, 1.0 - w.weight(i, i)))
+            .collect();
+        let mut vecs: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        for _step in 0..10 {
+            // Drift the vectors, then run the residual protocol.
+            for v in vecs.iter_mut() {
+                for x in v.iter_mut() {
+                    *x += rng.normal_f32(0.0, 0.1);
+                }
+            }
+            let msgs: Vec<_> = (0..6)
+                .map(|i| q.compress(&states[i].residual(&vecs[i]), &mut rng))
+                .collect();
+            for i in 0..6 {
+                states[i].apply_own(&msgs[i]);
+            }
+            for i in 0..6 {
+                for &(j, wij) in w.neighbors(i) {
+                    states[i].apply_neighbor(wij, &msgs[j]);
+                }
+            }
+            for i in 0..6 {
+                for k in 0..d {
+                    let direct: f64 = w
+                        .neighbors(i)
+                        .iter()
+                        .map(|&(j, wij)| wij * states[j].hat[k] as f64)
+                        .sum();
+                    assert!(
+                        (states[i].hat_w[k] as f64 - direct).abs() < 1e-4,
+                        "invariant broken at node {i} coord {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// With repeated compression of a FIXED target the reference point
+    /// converges to it geometrically (contractive compressor property).
+    #[test]
+    fn reference_converges_to_target() {
+        let d = 50;
+        let mut rng = Rng::new(3);
+        let q = TopK::new(0.2);
+        let target: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut rp = RefPoint::new(d, 0.5);
+        let mut prev = f64::INFINITY;
+        for _ in 0..60 {
+            let msg = q.compress(&rp.residual(&target), &mut rng);
+            rp.apply_own(&msg);
+            let err = rp.compression_err_sq(&target);
+            assert!(err <= prev + 1e-9);
+            prev = err;
+        }
+        assert!(prev < 1e-6, "did not converge: {prev}");
+    }
+
+    #[test]
+    fn mix_term_zero_at_consensus() {
+        let mut rp = RefPoint::new(4, 0.6);
+        rp.hat = vec![2.0; 4];
+        rp.hat_w = vec![1.2; 4]; // = 0.6 * 2.0 ⇒ neighbours agree
+        let mut out = vec![0.0f32; 4];
+        rp.add_mix_term(0.5, &mut out);
+        for o in out {
+            assert!(o.abs() < 1e-6);
+        }
+    }
+}

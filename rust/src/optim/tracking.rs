@@ -1,0 +1,107 @@
+//! Plain (uncompressed) gradient tracking, used by the C²DFB outer loop
+//! (Algorithm 1's s_x) and by the dense baselines.
+//!
+//! Update: `s_i ← s_i + γ Σ_j w_ij (s_j − s_i) + u_i^{new} − u_i^{old}`.
+//! Invariant (Proposition 4): the node average of the trackers always
+//! equals the node average of the latest gradients.
+
+use crate::collective::Network;
+use crate::linalg;
+
+pub struct DenseTracker {
+    /// Per-node tracker s_i.
+    pub s: Vec<Vec<f32>>,
+    /// Last gradient u_i folded in.
+    prev_u: Vec<Vec<f32>>,
+}
+
+impl DenseTracker {
+    /// Initialize with the first gradients: s_i⁰ = u_i⁰.
+    pub fn new(u0: Vec<Vec<f32>>) -> DenseTracker {
+        DenseTracker { s: u0.clone(), prev_u: u0 }
+    }
+
+    /// One tracking round: gossip-mix the trackers (PAID communication via
+    /// `net`), then fold in the new gradients.
+    pub fn update(&mut self, net: &mut Network, gamma: f64, u_new: &[Vec<f32>]) {
+        let mixed = net.mix_paid(gamma, &self.s);
+        self.s = mixed;
+        for i in 0..self.s.len() {
+            for k in 0..self.s[i].len() {
+                self.s[i][k] += u_new[i][k] - self.prev_u[i][k];
+            }
+        }
+        self.prev_u = u_new.to_vec();
+    }
+
+    /// Tracker consensus error ‖s − 1·s̄‖² (outer Lyapunov Ω₂).
+    pub fn consensus_err_sq(&self) -> f64 {
+        linalg::consensus_err_sq(&self.s)
+    }
+
+    /// Mean tracker (≡ mean of latest gradients by the invariant).
+    pub fn mean(&self) -> Vec<f32> {
+        linalg::mean_rows(&self.s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{Graph, Topology};
+    use crate::util::rng::Rng;
+
+    fn rand_rows(rng: &mut Rng, m: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..m)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect()
+    }
+
+    /// Proposition 4: mean(s) == mean(latest u) after every update.
+    #[test]
+    fn tracker_mean_equals_gradient_mean() {
+        let mut rng = Rng::new(1);
+        let mut net = Network::new(Graph::build(Topology::Ring, 6));
+        let u0 = rand_rows(&mut rng, 6, 5);
+        let mut t = DenseTracker::new(u0);
+        for _ in 0..7 {
+            let u = rand_rows(&mut rng, 6, 5);
+            t.update(&mut net, 0.5, &u);
+            let su = linalg::mean_rows(&u);
+            let ss = t.mean();
+            for (a, b) in su.iter().zip(&ss) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    /// With constant gradients the trackers reach consensus at s̄ = ū.
+    #[test]
+    fn tracker_converges_with_static_gradients() {
+        let mut rng = Rng::new(2);
+        let mut net = Network::new(Graph::build(Topology::TwoHopRing, 8));
+        let u = rand_rows(&mut rng, 8, 4);
+        let mut t = DenseTracker::new(u.clone());
+        for _ in 0..300 {
+            t.update(&mut net, 0.8, &u);
+        }
+        let mean = linalg::mean_rows(&u);
+        for s in &t.s {
+            for (a, b) in s.iter().zip(&mean) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+        assert!(t.consensus_err_sq() < 1e-5);
+    }
+
+    #[test]
+    fn tracking_pays_communication() {
+        let mut rng = Rng::new(3);
+        let mut net = Network::new(Graph::build(Topology::Ring, 4));
+        let u = rand_rows(&mut rng, 4, 10);
+        let mut t = DenseTracker::new(u.clone());
+        t.update(&mut net, 0.5, &u);
+        assert!(net.ledger.total_bytes > 0);
+        assert_eq!(net.ledger.gossip_rounds, 1);
+    }
+}

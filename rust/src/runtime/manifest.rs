@@ -1,0 +1,173 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec, String> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or("tensor spec missing shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or("tensor spec missing dtype")?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub kernels: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// preset name → dim name → value (e.g. "coeff" → "dx" → 2000).
+    pub preset_dims: BTreeMap<String, BTreeMap<String, usize>>,
+    /// preset name → kernel backend ("pallas" | "jnp").
+    pub preset_kernels: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let root = Json::parse(text)?;
+        let mut m = Manifest::default();
+        let entries = root
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing entries")?;
+        for (key, e) in entries {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or(format!("{key}: missing file"))?
+                .to_string();
+            let parse_list = |name: &str| -> Result<Vec<TensorSpec>, String> {
+                e.get(name)
+                    .and_then(Json::as_arr)
+                    .ok_or(format!("{key}: missing {name}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            m.entries.insert(
+                key.clone(),
+                EntrySpec {
+                    file,
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                    kernels: e
+                        .get("kernels")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown")
+                        .to_string(),
+                },
+            );
+        }
+        if let Some(presets) = root.get("presets").and_then(Json::as_obj) {
+            for (name, p) in presets {
+                let mut dims = BTreeMap::new();
+                if let Some(d) = p.get("dims").and_then(Json::as_obj) {
+                    for (k, v) in d {
+                        if let Some(n) = v.as_usize() {
+                            dims.insert(k.clone(), n);
+                        }
+                    }
+                }
+                m.preset_dims.insert(name.clone(), dims);
+                if let Some(k) = p.get("kernels").and_then(Json::as_str) {
+                    m.preset_kernels.insert(name.clone(), k.to_string());
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// All entry keys under a preset prefix (e.g. "coeff.").
+    pub fn preset_entries(&self, preset: &str) -> Vec<&str> {
+        let prefix = format!("{preset}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(String::as_str)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": {
+        "demo.affine": {
+          "file": "demo/affine.hlo.txt",
+          "inputs": [{"shape": [8, 8], "dtype": "float32"},
+                     {"shape": [8, 8], "dtype": "float32"}],
+          "outputs": [{"shape": [8, 8], "dtype": "float32"}],
+          "kernels": "jnp"
+        },
+        "coeff.hyper": {
+          "file": "coeff/hyper.hlo.txt",
+          "inputs": [{"shape": [2000], "dtype": "float32"},
+                     {"shape": [20000], "dtype": "float32"},
+                     {"shape": [20000], "dtype": "float32"},
+                     {"shape": [], "dtype": "float32"}],
+          "outputs": [{"shape": [2000], "dtype": "float32"}],
+          "kernels": "pallas"
+        }
+      },
+      "presets": {
+        "coeff": {"task": "coeff", "kernels": "pallas",
+                  "dims": {"dx": 2000, "dy": 20000, "features": 2000}}
+      }
+    }"#;
+
+    #[test]
+    fn parses_entries_and_presets() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = &m.entries["coeff.hyper"];
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[3].shape, Vec::<usize>::new());
+        assert_eq!(e.inputs[3].elements(), 1);
+        assert_eq!(e.outputs[0].elements(), 2000);
+        assert_eq!(m.preset_dims["coeff"]["dy"], 20000);
+        assert_eq!(m.preset_kernels["coeff"], "pallas");
+    }
+
+    #[test]
+    fn preset_entry_listing() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset_entries("coeff"), vec!["coeff.hyper"]);
+        assert_eq!(m.preset_entries("demo"), vec!["demo.affine"]);
+        assert!(m.preset_entries("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"entries": {"x": {"file": "f"}}}"#).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Bilevel task abstraction: the per-node oracle bundle the algorithms
+//! consume.
+//!
+//! * [`PjrtTask`] — the real thing: oracles are AOT-compiled HLO artifacts
+//!   executed via PJRT ([`crate::runtime`]), per-node data shards staged as
+//!   device buffers once at construction.
+//! * [`quadratic::QuadraticTask`] — a fully analytic bilevel quadratic used
+//!   by the convergence tests and benchmarks (no artifacts needed, known
+//!   closed-form hyper-objective).
+
+pub mod pjrt;
+pub mod quadratic;
+
+pub use pjrt::PjrtTask;
+pub use quadratic::QuadraticTask;
+
+use anyhow::Result;
+
+/// Per-node bilevel oracle bundle.  All vectors are flat `f32`; `i` indexes
+/// the node (each node sees only its own data shard).
+pub trait BilevelTask {
+    fn nodes(&self) -> usize;
+    /// Upper-level dimension (x).
+    fn dx(&self) -> usize;
+    /// Lower-level dimension (y and z).
+    fn dy(&self) -> usize;
+    fn name(&self) -> String;
+
+    /// ∇_y h_i(x, y) with h = f + λ g (the C²DFB y-sequence oracle).
+    fn inner_y_grad(&self, i: usize, x: &[f32], y: &[f32], lambda: f32) -> Result<Vec<f32>>;
+    /// ∇_y g_i(x, z) (the z-sequence oracle).
+    fn inner_z_grad(&self, i: usize, x: &[f32], z: &[f32]) -> Result<Vec<f32>>;
+    /// Fully first-order hypergradient estimate u_i (paper Eq. 4).
+    fn hypergrad(&self, i: usize, x: &[f32], y: &[f32], z: &[f32], lambda: f32)
+        -> Result<Vec<f32>>;
+    /// Upper-level (validation) loss and accuracy at (x, y).
+    fn eval(&self, i: usize, x: &[f32], y: &[f32]) -> Result<(f64, f64)>;
+
+    // ---- second-order oracles (used only by the baselines) -------------
+    fn grad_y_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>>;
+    fn grad_x_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>>;
+    /// (∇²_yy g_i) · v.
+    fn hvp_yy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>>;
+    /// (∇²_xy g_i) · v  (v ∈ R^dy, result ∈ R^dx).
+    fn jvp_xy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>>;
+
+    /// Initial upper/lower parameters (same on every node, like the paper).
+    fn init_x(&self, rng: &mut crate::util::rng::Rng) -> Vec<f32>;
+    fn init_y(&self, rng: &mut crate::util::rng::Rng) -> Vec<f32>;
+}
+
+/// Average eval over all nodes at per-node parameters.
+pub fn eval_mean(
+    task: &dyn BilevelTask,
+    xs: &[Vec<f32>],
+    ys: &[Vec<f32>],
+) -> Result<(f64, f64)> {
+    let m = task.nodes();
+    let (mut loss, mut acc) = (0.0, 0.0);
+    for i in 0..m {
+        let (l, a) = task.eval(i, &xs[i], &ys[i])?;
+        loss += l;
+        acc += a;
+    }
+    Ok((loss / m as f64, acc / m as f64))
+}
+
+/// Eval the CONSENSUS model (x̄, ȳ) on every node's validation shard and
+/// average — the paper's "upper-level test accuracy" protocol (a single
+/// global model, as standard in decentralized FL evaluations).
+pub fn eval_consensus(
+    task: &dyn BilevelTask,
+    xs: &[Vec<f32>],
+    ys: &[Vec<f32>],
+) -> Result<(f64, f64)> {
+    let xbar = crate::linalg::mean_rows(&xs.to_vec());
+    let ybar = crate::linalg::mean_rows(&ys.to_vec());
+    let m = task.nodes();
+    let (mut loss, mut acc) = (0.0, 0.0);
+    for i in 0..m {
+        let (l, a) = task.eval(i, &xbar, &ybar)?;
+        loss += l;
+        acc += a;
+    }
+    Ok((loss / m as f64, acc / m as f64))
+}

@@ -1,0 +1,375 @@
+//! [`PjrtTask`]: the real oracle bundle, backed by the AOT artifacts.
+//!
+//! Construction loads the preset's eight oracles from the manifest,
+//! generates/partitions the synthetic corpus to the artifact's static
+//! per-node shapes, and stages each node's data shard as device buffers
+//! once — the hot path then only uploads parameter vectors.
+
+use super::BilevelTask;
+use crate::data::{mnist_like, newsgroups_like, partition::Partition};
+use crate::runtime::{Arg, ArtifactRegistry, Oracle, Staged};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::rc::Rc;
+
+/// Which argument convention the preset's entry points use (they differ
+/// because ∇_x f ≡ 0 for the coefficient-tuning task).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Style {
+    Coeff,
+    HyperRep,
+}
+
+struct NodeData {
+    atr: Staged,
+    btr: Staged,
+    aval: Staged,
+    bval: Staged,
+}
+
+pub struct PjrtTask {
+    preset: String,
+    style: Style,
+    m: usize,
+    dx: usize,
+    dy: usize,
+    inner_y: Rc<Oracle>,
+    inner_z: Rc<Oracle>,
+    hyper: Rc<Oracle>,
+    eval: Rc<Oracle>,
+    hvp_yy: Rc<Oracle>,
+    jvp_xy: Rc<Oracle>,
+    gyf: Rc<Oracle>,
+    gxf: Rc<Oracle>,
+    nodes: Vec<NodeData>,
+    /// For hyperrep: backbone layer dims for init; for coeff unused.
+    init_dims: Vec<usize>,
+}
+
+impl PjrtTask {
+    /// Build a task over `m` nodes from a preset ("coeff", "hyperrep",
+    /// "coeff_tiny", ..., or their `_jnp` variants), generating a fresh
+    /// synthetic corpus and partitioning it with `partition`.
+    pub fn build(
+        reg: &ArtifactRegistry,
+        preset: &str,
+        m: usize,
+        partition: Partition,
+        data_noise: f32,
+        seed: u64,
+    ) -> Result<PjrtTask> {
+        if !reg.has_preset(preset) {
+            bail!(
+                "preset {preset:?} not in artifacts manifest — run `make artifacts`"
+            );
+        }
+        let style = if preset.starts_with("coeff") {
+            Style::Coeff
+        } else if preset.starts_with("hyperrep") {
+            Style::HyperRep
+        } else {
+            bail!("preset {preset:?} is not a bilevel task preset");
+        };
+        let dx = reg.preset_dim(preset, "dx")?;
+        let dy = reg.preset_dim(preset, "dy")?;
+        let classes = reg.preset_dim(preset, "classes")?;
+        let n_train = reg.preset_dim(preset, "n_train")?;
+        let n_val = reg.preset_dim(preset, "n_val")?;
+
+        let mut rng = Rng::new(seed);
+        // Generate a global pool about 1.5× the total need, partition the
+        // train side across nodes, then resize each shard to the static
+        // artifact shapes.
+        let need_tr = m * n_train;
+        let need_val = m * n_val;
+        let global = match style {
+            Style::Coeff => {
+                let features = reg.preset_dim(preset, "features")?;
+                newsgroups_like(
+                    (need_tr + need_val) * 3 / 2,
+                    features,
+                    classes,
+                    data_noise,
+                    rng.next_u64(),
+                )
+            }
+            Style::HyperRep => {
+                let inputs = reg.preset_dim(preset, "inputs")?;
+                mnist_like(
+                    (need_tr + need_val) * 3 / 2,
+                    inputs,
+                    classes,
+                    data_noise,
+                    rng.next_u64(),
+                )
+            }
+        };
+        let (train_pool, val_pool) = global.split(
+            need_tr as f64 / (need_tr + need_val) as f64,
+            &mut rng,
+        );
+        // Heterogeneity applies to the training shards (the paper's
+        // protocol); validation is split IID so the eval metric is
+        // comparable across nodes.
+        let train_shards = partition.split(&train_pool, m, &mut rng);
+        let val_shards = Partition::Iid.split(&val_pool, m, &mut rng);
+
+        let e = |name: &str| reg.load(&format!("{preset}.{name}"));
+        let inner_y = e("inner_y")?;
+        let inner_z = e("inner_z")?;
+        let hyper = e("hyper")?;
+        let eval = e("eval")?;
+        let hvp_yy = e("hvp_yy_g")?;
+        let jvp_xy = e("jvp_xy_g")?;
+        let gyf = e("grad_y_f")?;
+        let gxf = e("grad_x_f")?;
+
+        let feat_dim = match style {
+            Style::Coeff => reg.preset_dim(preset, "features")?,
+            Style::HyperRep => reg.preset_dim(preset, "inputs")?,
+        };
+        let mut nodes = Vec::with_capacity(m);
+        for i in 0..m {
+            let tr = train_shards[i].resize_to(n_train, &mut rng);
+            let va = val_shards[i].resize_to(n_val, &mut rng);
+            if tr.d != feat_dim {
+                bail!("data dim {} != artifact feature dim {}", tr.d, feat_dim);
+            }
+            nodes.push(NodeData {
+                atr: inner_y.stage(&tr.features, &[n_train, feat_dim])?,
+                btr: inner_y.stage(&tr.onehot(), &[n_train, classes])?,
+                aval: inner_y.stage(&va.features, &[n_val, feat_dim])?,
+                bval: inner_y.stage(&va.onehot(), &[n_val, classes])?,
+            });
+        }
+
+        let init_dims = match style {
+            Style::HyperRep => vec![
+                reg.preset_dim(preset, "inputs")?,
+                reg.preset_dim(preset, "hidden1")?,
+                reg.preset_dim(preset, "hidden2")?,
+                classes,
+            ],
+            Style::Coeff => vec![],
+        };
+
+        Ok(PjrtTask {
+            preset: preset.to_string(),
+            style,
+            m,
+            dx,
+            dy,
+            inner_y,
+            inner_z,
+            hyper,
+            eval,
+            hvp_yy,
+            jvp_xy,
+            gyf,
+            gxf,
+            nodes,
+            init_dims,
+        })
+    }
+
+    /// Build with per-node datasets supplied by the caller (used by tests
+    /// exercising specific data distributions).
+    pub fn per_node_datasets(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn single(&self, o: &Oracle, args: &[Arg]) -> Result<Vec<f32>> {
+        let mut outs = o.call(args)?;
+        if outs.len() != 1 {
+            bail!("{}: expected 1 output, got {}", o.name, outs.len());
+        }
+        Ok(outs.remove(0))
+    }
+}
+
+impl BilevelTask for PjrtTask {
+    fn nodes(&self) -> usize {
+        self.m
+    }
+
+    fn dx(&self) -> usize {
+        self.dx
+    }
+
+    fn dy(&self) -> usize {
+        self.dy
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.preset)
+    }
+
+    fn inner_y_grad(&self, i: usize, x: &[f32], y: &[f32], lambda: f32) -> Result<Vec<f32>> {
+        let n = &self.nodes[i];
+        // Both styles: (x, y, lam, atr, btr, aval, bval).
+        self.single(
+            &self.inner_y,
+            &[
+                Arg::Host(x),
+                Arg::Host(y),
+                Arg::Scalar(lambda),
+                Arg::Staged(&n.atr),
+                Arg::Staged(&n.btr),
+                Arg::Staged(&n.aval),
+                Arg::Staged(&n.bval),
+            ],
+        )
+    }
+
+    fn inner_z_grad(&self, i: usize, x: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+        let n = &self.nodes[i];
+        self.single(
+            &self.inner_z,
+            &[Arg::Host(x), Arg::Host(z), Arg::Staged(&n.atr), Arg::Staged(&n.btr)],
+        )
+    }
+
+    fn hypergrad(&self, i: usize, x: &[f32], y: &[f32], z: &[f32], lambda: f32) -> Result<Vec<f32>> {
+        let n = &self.nodes[i];
+        match self.style {
+            Style::Coeff => self.single(
+                &self.hyper,
+                &[Arg::Host(x), Arg::Host(y), Arg::Host(z), Arg::Scalar(lambda)],
+            ),
+            Style::HyperRep => self.single(
+                &self.hyper,
+                &[
+                    Arg::Host(x),
+                    Arg::Host(y),
+                    Arg::Host(z),
+                    Arg::Scalar(lambda),
+                    Arg::Staged(&n.atr),
+                    Arg::Staged(&n.btr),
+                    Arg::Staged(&n.aval),
+                    Arg::Staged(&n.bval),
+                ],
+            ),
+        }
+    }
+
+    fn eval(&self, i: usize, x: &[f32], y: &[f32]) -> Result<(f64, f64)> {
+        let n = &self.nodes[i];
+        let outs = match self.style {
+            Style::Coeff => self.eval.call(&[
+                Arg::Host(y),
+                Arg::Staged(&n.aval),
+                Arg::Staged(&n.bval),
+            ])?,
+            Style::HyperRep => self.eval.call(&[
+                Arg::Host(x),
+                Arg::Host(y),
+                Arg::Staged(&n.aval),
+                Arg::Staged(&n.bval),
+            ])?,
+        };
+        if outs.len() != 2 {
+            bail!("eval: expected (loss, acc), got {} outputs", outs.len());
+        }
+        let loss = *outs[0].first().ok_or_else(|| anyhow!("empty loss"))? as f64;
+        let acc = *outs[1].first().ok_or_else(|| anyhow!("empty acc"))? as f64;
+        Ok((loss, acc))
+    }
+
+    fn grad_y_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let n = &self.nodes[i];
+        match self.style {
+            Style::Coeff => self.single(
+                &self.gyf,
+                &[Arg::Host(y), Arg::Staged(&n.aval), Arg::Staged(&n.bval)],
+            ),
+            Style::HyperRep => self.single(
+                &self.gyf,
+                &[
+                    Arg::Host(x),
+                    Arg::Host(y),
+                    Arg::Staged(&n.aval),
+                    Arg::Staged(&n.bval),
+                ],
+            ),
+        }
+    }
+
+    fn grad_x_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let n = &self.nodes[i];
+        match self.style {
+            Style::Coeff => self.single(&self.gxf, &[Arg::Host(x), Arg::Host(y)]),
+            Style::HyperRep => self.single(
+                &self.gxf,
+                &[
+                    Arg::Host(x),
+                    Arg::Host(y),
+                    Arg::Staged(&n.aval),
+                    Arg::Staged(&n.bval),
+                ],
+            ),
+        }
+    }
+
+    fn hvp_yy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let n = &self.nodes[i];
+        self.single(
+            &self.hvp_yy,
+            &[
+                Arg::Host(x),
+                Arg::Host(y),
+                Arg::Host(v),
+                Arg::Staged(&n.atr),
+                Arg::Staged(&n.btr),
+            ],
+        )
+    }
+
+    fn jvp_xy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let n = &self.nodes[i];
+        match self.style {
+            Style::Coeff => self.single(
+                &self.jvp_xy,
+                &[Arg::Host(x), Arg::Host(y), Arg::Host(v)],
+            ),
+            Style::HyperRep => self.single(
+                &self.jvp_xy,
+                &[
+                    Arg::Host(x),
+                    Arg::Host(y),
+                    Arg::Host(v),
+                    Arg::Staged(&n.atr),
+                    Arg::Staged(&n.btr),
+                ],
+            ),
+        }
+    }
+
+    fn init_x(&self, rng: &mut Rng) -> Vec<f32> {
+        match self.style {
+            // log-regularizer weights start at 0 (reg weight exp(0) = 1).
+            Style::Coeff => vec![0.0; self.dx],
+            Style::HyperRep => {
+                // He-style init per backbone layer.
+                let (i, h1, h2) = (self.init_dims[0], self.init_dims[1], self.init_dims[2]);
+                let mut x = Vec::with_capacity(self.dx);
+                let mut layer = |fan_in: usize, rows: usize, cols: usize, x: &mut Vec<f32>| {
+                    let std = (2.0 / fan_in as f32).sqrt();
+                    for _ in 0..rows * cols {
+                        x.push(rng.normal_f32(0.0, std));
+                    }
+                    for _ in 0..cols {
+                        x.push(0.0); // bias
+                    }
+                };
+                layer(i, i, h1, &mut x);
+                layer(h1, h1, h2, &mut x);
+                debug_assert_eq!(x.len(), self.dx);
+                x
+            }
+        }
+    }
+
+    fn init_y(&self, _rng: &mut Rng) -> Vec<f32> {
+        vec![0.0; self.dy]
+    }
+}

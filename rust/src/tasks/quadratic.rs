@@ -1,0 +1,319 @@
+//! Analytic bilevel quadratic task (no PJRT) for tests and benches.
+//!
+//! Per node i (diagonal quadratics keep every oracle closed-form):
+//!
+//!   f_i(x, y) = ½‖y − P_i x − p_i‖²
+//!   g_i(x, y) = ½ yᵀ diag(a_i) y − (Q_i x + q_i)ᵀ y     (a_i > 0)
+//!
+//! with P_i, Q_i diagonal (dx == dy).  Globally
+//! y*(x) = (Q̄x + q̄) / ā coordinate-wise, and the hyper-objective
+//! ψ(x) = ½‖y*(x) − P̄x − p̄‖² + const-ish cross terms is known, so tests
+//! can check the hypergradient estimate against the analytic ∇ψ.
+
+use super::BilevelTask;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct QuadraticTask {
+    pub m: usize,
+    pub dim: usize,
+    /// Per node: diag of the LL Hessian (strong convexity aᵢ > 0).
+    pub a: Vec<Vec<f32>>,
+    /// Per node: diag coupling Q_i and offset q_i of the LL problem.
+    pub q_diag: Vec<Vec<f32>>,
+    pub q_off: Vec<Vec<f32>>,
+    /// Per node: diag P_i and offset p_i of the UL problem.
+    pub p_diag: Vec<Vec<f32>>,
+    pub p_off: Vec<Vec<f32>>,
+}
+
+impl QuadraticTask {
+    pub fn generate(m: usize, dim: usize, heterogeneity: f32, seed: u64) -> QuadraticTask {
+        let mut rng = Rng::new(seed);
+        let mut per_node = |center: f32, spread: f32| -> Vec<Vec<f32>> {
+            (0..m)
+                .map(|_| {
+                    (0..dim)
+                        .map(|_| center + rng.normal_f32(0.0, spread))
+                        .collect()
+                })
+                .collect()
+        };
+        QuadraticTask {
+            m,
+            dim,
+            // Hessian diag in [0.5, 1.5]-ish, strictly positive.
+            a: per_node(1.0, 0.2 * heterogeneity)
+                .into_iter()
+                .map(|v| v.into_iter().map(|x| x.abs().max(0.3)).collect())
+                .collect(),
+            q_diag: per_node(0.8, 0.5 * heterogeneity),
+            q_off: per_node(0.0, heterogeneity),
+            p_diag: per_node(0.5, 0.5 * heterogeneity),
+            p_off: per_node(0.0, heterogeneity),
+        }
+    }
+
+    fn mean_of(field: &[Vec<f32>]) -> Vec<f32> {
+        crate::linalg::mean_rows(&field.to_vec())
+    }
+
+    /// Global lower-level solution y*(x) (coordinate-wise).
+    pub fn y_star(&self, x: &[f32]) -> Vec<f32> {
+        let a = Self::mean_of(&self.a);
+        let qd = Self::mean_of(&self.q_diag);
+        let qo = Self::mean_of(&self.q_off);
+        (0..self.dim)
+            .map(|k| (qd[k] * x[k] + qo[k]) / a[k])
+            .collect()
+    }
+
+    /// Analytic hypergradient ∇ψ(x) of ψ(x) = f̄(x, y*(x)):
+    /// ∇ψ = (dy*/dx)ᵀ ∇_y f̄ + ∇_x f̄ (all diagonal).  Note ∇_x f̄ needs the
+    /// *second moments* of the per-node P_i:
+    /// ∇_x f̄ = −(mean(pd) y* − mean(pd²) x − mean(pd·po)).
+    pub fn hypergrad_analytic(&self, x: &[f32]) -> Vec<f32> {
+        let a = Self::mean_of(&self.a);
+        let qd = Self::mean_of(&self.q_diag);
+        let pd = Self::mean_of(&self.p_diag);
+        let po = Self::mean_of(&self.p_off);
+        let ys = self.y_star(x);
+        let m = self.m as f32;
+        (0..self.dim)
+            .map(|k| {
+                let resid_mean = ys[k] - pd[k] * x[k] - po[k];
+                let m2_pd: f32 =
+                    self.p_diag.iter().map(|p| p[k] * p[k]).sum::<f32>() / m;
+                let m_pd_po: f32 = self
+                    .p_diag
+                    .iter()
+                    .zip(&self.p_off)
+                    .map(|(p, o)| p[k] * o[k])
+                    .sum::<f32>()
+                    / m;
+                let gxf_mean = -(pd[k] * ys[k] - m2_pd * x[k] - m_pd_po);
+                (qd[k] / a[k]) * resid_mean + gxf_mean
+            })
+            .collect()
+    }
+
+    /// ψ(x) = f̄(x, y*(x)) evaluated exactly (per-node residuals).
+    pub fn psi(&self, x: &[f32]) -> f64 {
+        let ys = self.y_star(x);
+        let mut acc = 0.0;
+        for i in 0..self.m {
+            for k in 0..self.dim {
+                let r = ys[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k];
+                acc += 0.5 * (r as f64).powi(2);
+            }
+        }
+        acc / self.m as f64
+    }
+}
+
+impl BilevelTask for QuadraticTask {
+    fn nodes(&self) -> usize {
+        self.m
+    }
+
+    fn dx(&self) -> usize {
+        self.dim
+    }
+
+    fn dy(&self) -> usize {
+        self.dim
+    }
+
+    fn name(&self) -> String {
+        format!("quadratic(m={}, d={})", self.m, self.dim)
+    }
+
+    fn inner_y_grad(&self, i: usize, x: &[f32], y: &[f32], lambda: f32) -> Result<Vec<f32>> {
+        // ∇_y h = ∇_y f + λ ∇_y g
+        Ok((0..self.dim)
+            .map(|k| {
+                let gyf = y[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k];
+                let gyg = self.a[i][k] * y[k] - (self.q_diag[i][k] * x[k] + self.q_off[i][k]);
+                gyf + lambda * gyg
+            })
+            .collect())
+    }
+
+    fn inner_z_grad(&self, i: usize, x: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+        Ok((0..self.dim)
+            .map(|k| self.a[i][k] * z[k] - (self.q_diag[i][k] * x[k] + self.q_off[i][k]))
+            .collect())
+    }
+
+    fn hypergrad(&self, i: usize, x: &[f32], y: &[f32], z: &[f32], lambda: f32) -> Result<Vec<f32>> {
+        // ∇_x f_i −... fully first-order form:
+        // u = ∇_x f_i(x,y) + λ(∇_x g_i(x,y) − ∇_x g_i(x,z))
+        // ∇_x f_i = −P_i (y − P_i x − p_i);  ∇_x g_i(x,·) = −Q_i ·
+        Ok((0..self.dim)
+            .map(|k| {
+                let gxf = -self.p_diag[i][k] * (y[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k]);
+                let gxg_y = -self.q_diag[i][k] * y[k];
+                let gxg_z = -self.q_diag[i][k] * z[k];
+                gxf + lambda * (gxg_y - gxg_z)
+            })
+            .collect())
+    }
+
+    fn eval(&self, i: usize, x: &[f32], y: &[f32]) -> Result<(f64, f64)> {
+        let loss: f64 = (0..self.dim)
+            .map(|k| {
+                0.5 * ((y[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k]) as f64).powi(2)
+            })
+            .sum();
+        // "Accuracy" proxy for a regression task: 1/(1+loss) ∈ (0,1].
+        Ok((loss, 1.0 / (1.0 + loss)))
+    }
+
+    fn grad_y_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        Ok((0..self.dim)
+            .map(|k| y[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k])
+            .collect())
+    }
+
+    fn grad_x_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        Ok((0..self.dim)
+            .map(|k| -self.p_diag[i][k] * (y[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k]))
+            .collect())
+    }
+
+    fn hvp_yy_g(&self, i: usize, _x: &[f32], _y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        Ok((0..self.dim).map(|k| self.a[i][k] * v[k]).collect())
+    }
+
+    fn jvp_xy_g(&self, i: usize, _x: &[f32], _y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        // ∂²g/∂x∂y = −Q_i (diagonal) ⇒ (∇²_xy g)·v = −Q_i v
+        Ok((0..self.dim).map(|k| -self.q_diag[i][k] * v[k]).collect())
+    }
+
+    fn init_x(&self, rng: &mut Rng) -> Vec<f32> {
+        (0..self.dim).map(|_| rng.normal_f32(0.0, 0.5)).collect()
+    }
+
+    fn init_y(&self, _rng: &mut Rng) -> Vec<f32> {
+        vec![0.0; self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn y_star_zeroes_mean_ll_gradient() {
+        let t = QuadraticTask::generate(5, 6, 1.0, 1);
+        let mut rng = Rng::new(2);
+        let x = t.init_x(&mut rng);
+        let ys = t.y_star(&x);
+        let mut mean_grad = vec![0.0f64; 6];
+        for i in 0..5 {
+            let g = t.inner_z_grad(i, &x, &ys).unwrap();
+            for k in 0..6 {
+                mean_grad[k] += g[k] as f64 / 5.0;
+            }
+        }
+        for g in mean_grad {
+            assert!(g.abs() < 1e-5, "{g}");
+        }
+    }
+
+    #[test]
+    fn penalty_hypergrad_approaches_analytic_as_lambda_grows() {
+        // Kwon-style bound: ‖∇ψ_λ − ∇ψ‖ = O(1/λ).  Evaluate the penalty
+        // hypergradient at the EXACT minimizers y*_λ(x), y*(x) and compare.
+        let t = QuadraticTask::generate(4, 5, 0.8, 3);
+        let mut rng = Rng::new(4);
+        let x = t.init_x(&mut rng);
+        let analytic = t.hypergrad_analytic(&x);
+
+        let err_for = |lambda: f32| -> f64 {
+            // y*_λ minimizes f̄ + λḡ: coordinate-wise
+            // (1 + λā) y = P̄x + p̄ + λ(Q̄x + q̄)
+            let a = QuadraticTask::mean_of(&t.a);
+            let qd = QuadraticTask::mean_of(&t.q_diag);
+            let qo = QuadraticTask::mean_of(&t.q_off);
+            let pd = QuadraticTask::mean_of(&t.p_diag);
+            let po = QuadraticTask::mean_of(&t.p_off);
+            let y_lam: Vec<f32> = (0..t.dim)
+                .map(|k| {
+                    (pd[k] * x[k] + po[k] + lambda * (qd[k] * x[k] + qo[k]))
+                        / (1.0 + lambda * a[k])
+                })
+                .collect();
+            let z = t.y_star(&x);
+            let mut u_mean = vec![0.0f64; t.dim];
+            for i in 0..t.m {
+                let u = t.hypergrad(i, &x, &y_lam, &z, lambda).unwrap();
+                for k in 0..t.dim {
+                    u_mean[k] += u[k] as f64 / t.m as f64;
+                }
+            }
+            u_mean
+                .iter()
+                .zip(&analytic)
+                .map(|(a, b)| (a - *b as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+
+        let e10 = err_for(10.0);
+        let e100 = err_for(100.0);
+        let e1000 = err_for(1000.0);
+        assert!(e100 < e10 / 5.0, "{e100} !< {e10}/5");
+        assert!(e1000 < e100 / 5.0, "{e1000} !< {e100}/5");
+    }
+
+    #[test]
+    fn analytic_hypergrad_matches_finite_difference_of_psi() {
+        let t = QuadraticTask::generate(5, 4, 1.0, 11);
+        let mut rng = Rng::new(12);
+        let x = t.init_x(&mut rng);
+        let g = t.hypergrad_analytic(&x);
+        let eps = 1e-3f32;
+        for k in 0..4 {
+            let mut xp = x.clone();
+            xp[k] += eps;
+            let mut xm = x.clone();
+            xm[k] -= eps;
+            let fd = (t.psi(&xp) - t.psi(&xm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - g[k] as f64).abs() < 1e-2 * (1.0 + fd.abs()),
+                "coord {k}: fd {fd} vs analytic {}",
+                g[k]
+            );
+        }
+    }
+
+    #[test]
+    fn hvp_and_jvp_match_finite_differences() {
+        let t = QuadraticTask::generate(3, 4, 1.0, 5);
+        let mut rng = Rng::new(6);
+        let x = t.init_x(&mut rng);
+        let y = t.init_x(&mut rng);
+        let v: Vec<f32> = (0..4).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let eps = 1e-3f32;
+        // (∇_y g(y + εv) − ∇_y g(y)) / ε ≈ H v
+        let y2: Vec<f32> = y.iter().zip(&v).map(|(a, b)| a + eps * b).collect();
+        let g1 = t.inner_z_grad(0, &x, &y).unwrap();
+        let g2 = t.inner_z_grad(0, &x, &y2).unwrap();
+        let hv = t.hvp_yy_g(0, &x, &y, &v).unwrap();
+        for k in 0..4 {
+            let fd = (g2[k] - g1[k]) / eps;
+            assert!((fd - hv[k]).abs() < 1e-2, "{fd} vs {}", hv[k]);
+        }
+        // cross: (∇_y g(x + εv_x) − ∇_y g(x)) / ε ≈ (∇²_yx g) v_x; our
+        // jvp_xy is the transpose contraction — diagonal, so symmetric.
+        let x2: Vec<f32> = x.iter().zip(&v).map(|(a, b)| a + eps * b).collect();
+        let g3 = t.inner_z_grad(0, &x2, &y).unwrap();
+        let jv = t.jvp_xy_g(0, &x, &y, &v).unwrap();
+        for k in 0..4 {
+            let fd = (g3[k] - g1[k]) / eps;
+            assert!((fd - jv[k]).abs() < 1e-2, "{fd} vs {}", jv[k]);
+        }
+    }
+}

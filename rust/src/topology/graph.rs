@@ -1,0 +1,309 @@
+//! Undirected connected graphs over `m` nodes.
+
+use crate::util::rng::Rng;
+use std::collections::BTreeSet;
+
+/// The topologies used in the paper's evaluation plus common extras.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Each node linked to its two immediate neighbours (paper Fig. 2).
+    Ring,
+    /// Ring plus links to neighbours' neighbours (paper's "2-hop").
+    TwoHopRing,
+    /// Erdős–Rényi with edge probability p (paper uses p = 0.4);
+    /// resampled until connected.
+    ErdosRenyi { p_milli: u32, seed: u64 },
+    /// All-to-all.
+    Complete,
+    /// Node 0 is the hub.
+    Star,
+    /// A line (worst-case spectral gap for fixed m).
+    Path,
+    /// 2-D torus grid; m must be rows*cols with |rows-cols| minimal.
+    Torus,
+}
+
+impl Topology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::TwoHopRing => "2hop",
+            Topology::ErdosRenyi { .. } => "er",
+            Topology::Complete => "complete",
+            Topology::Star => "star",
+            Topology::Path => "path",
+            Topology::Torus => "torus",
+        }
+    }
+
+    /// Parse "ring" | "2hop" | "er:0.4" | "complete" | "star" | "path" |
+    /// "torus" (ER takes p after a colon).
+    pub fn parse(s: &str, seed: u64) -> Result<Topology, String> {
+        let s = s.trim();
+        if let Some(p) = s.strip_prefix("er:").or_else(|| s.strip_prefix("er=")) {
+            let p: f64 = p.parse().map_err(|_| format!("bad ER probability: {s}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("ER probability out of range: {p}"));
+            }
+            return Ok(Topology::ErdosRenyi { p_milli: (p * 1000.0).round() as u32, seed });
+        }
+        match s {
+            "ring" => Ok(Topology::Ring),
+            "2hop" | "two-hop" | "twohop" => Ok(Topology::TwoHopRing),
+            "er" => Ok(Topology::ErdosRenyi { p_milli: 400, seed }),
+            "complete" | "full" => Ok(Topology::Complete),
+            "star" => Ok(Topology::Star),
+            "path" | "line" => Ok(Topology::Path),
+            "torus" | "grid" => Ok(Topology::Torus),
+            _ => Err(format!("unknown topology: {s}")),
+        }
+    }
+}
+
+/// Undirected graph with adjacency lists; invariant: connected, no
+/// self-loops, neighbour lists sorted.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub m: usize,
+    pub topology: Topology,
+    adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    pub fn build(topology: Topology, m: usize) -> Graph {
+        assert!(m >= 2, "need at least 2 nodes");
+        let mut edges: BTreeSet<(usize, usize)> = BTreeSet::new();
+        let add = |edges: &mut BTreeSet<(usize, usize)>, i: usize, j: usize| {
+            if i != j {
+                edges.insert((i.min(j), i.max(j)));
+            }
+        };
+        match topology {
+            Topology::Ring => {
+                for i in 0..m {
+                    add(&mut edges, i, (i + 1) % m);
+                }
+            }
+            Topology::TwoHopRing => {
+                for i in 0..m {
+                    add(&mut edges, i, (i + 1) % m);
+                    add(&mut edges, i, (i + 2) % m);
+                }
+            }
+            Topology::ErdosRenyi { p_milli, seed } => {
+                let p = p_milli as f64 / 1000.0;
+                let mut rng = Rng::new(seed);
+                // Resample until connected (guaranteed to terminate for
+                // p > 0 since we fall back to adding a ring after enough
+                // failures).
+                let mut attempts = 0;
+                loop {
+                    edges.clear();
+                    for i in 0..m {
+                        for j in (i + 1)..m {
+                            if rng.bernoulli(p) {
+                                edges.insert((i, j));
+                            }
+                        }
+                    }
+                    attempts += 1;
+                    if Self::connected(m, &edges) {
+                        break;
+                    }
+                    if attempts > 1000 {
+                        // Degenerate p: superimpose a ring to restore
+                        // connectivity (documented fallback).
+                        for i in 0..m {
+                            add(&mut edges, i, (i + 1) % m);
+                        }
+                        break;
+                    }
+                }
+            }
+            Topology::Complete => {
+                for i in 0..m {
+                    for j in (i + 1)..m {
+                        edges.insert((i, j));
+                    }
+                }
+            }
+            Topology::Star => {
+                for i in 1..m {
+                    edges.insert((0, i));
+                }
+            }
+            Topology::Path => {
+                for i in 0..m - 1 {
+                    edges.insert((i, i + 1));
+                }
+            }
+            Topology::Torus => {
+                let rows = (1..=m)
+                    .filter(|r| m % r == 0)
+                    .min_by_key(|r| (m / r).abs_diff(*r))
+                    .unwrap();
+                let cols = m / rows;
+                let id = |r: usize, c: usize| r * cols + c;
+                for r in 0..rows {
+                    for c in 0..cols {
+                        if cols > 1 {
+                            add(&mut edges, id(r, c), id(r, (c + 1) % cols));
+                        }
+                        if rows > 1 {
+                            add(&mut edges, id(r, c), id((r + 1) % rows, c));
+                        }
+                    }
+                }
+            }
+        }
+        let mut adj = vec![Vec::new(); m];
+        for &(i, j) in &edges {
+            adj[i].push(j);
+            adj[j].push(i);
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+            a.dedup();
+        }
+        let g = Graph { m, topology, adj };
+        assert!(g.is_connected(), "built graph must be connected");
+        g
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.edge_count());
+        for i in 0..self.m {
+            for &j in &self.adj[i] {
+                if i < j {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.adj[i].binary_search(&j).is_ok()
+    }
+
+    pub fn is_connected(&self) -> bool {
+        let mut seen = vec![false; self.m];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &w in &self.adj[v] {
+                if !seen[w] {
+                    seen[w] = true;
+                    count += 1;
+                    stack.push(w);
+                }
+            }
+        }
+        count == self.m
+    }
+
+    fn connected(m: usize, edges: &BTreeSet<(usize, usize)>) -> bool {
+        let mut adj = vec![Vec::new(); m];
+        for &(i, j) in edges {
+            adj[i].push(j);
+            adj[j].push(i);
+        }
+        let mut seen = vec![false; m];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &w in &adj[v] {
+                if !seen[w] {
+                    seen[w] = true;
+                    count += 1;
+                    stack.push(w);
+                }
+            }
+        }
+        count == m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_degrees() {
+        let g = Graph::build(Topology::Ring, 10);
+        assert!(g.is_connected());
+        for i in 0..10 {
+            assert_eq!(g.degree(i), 2);
+        }
+        assert_eq!(g.edge_count(), 10);
+    }
+
+    #[test]
+    fn two_hop_degrees() {
+        let g = Graph::build(Topology::TwoHopRing, 10);
+        for i in 0..10 {
+            assert_eq!(g.degree(i), 4);
+        }
+        assert!(g.has_edge(0, 2) && g.has_edge(0, 1));
+    }
+
+    #[test]
+    fn er_connected_and_deterministic() {
+        let t = Topology::ErdosRenyi { p_milli: 400, seed: 7 };
+        let g1 = Graph::build(t, 10);
+        let g2 = Graph::build(t, 10);
+        assert!(g1.is_connected());
+        assert_eq!(g1.edges(), g2.edges());
+    }
+
+    #[test]
+    fn complete_star_path_torus() {
+        let g = Graph::build(Topology::Complete, 6);
+        assert_eq!(g.edge_count(), 15);
+        let g = Graph::build(Topology::Star, 6);
+        assert_eq!(g.degree(0), 5);
+        assert_eq!(g.degree(3), 1);
+        let g = Graph::build(Topology::Path, 6);
+        assert_eq!(g.edge_count(), 5);
+        let g = Graph::build(Topology::Torus, 12); // 3×4 torus
+        assert!(g.is_connected());
+        for i in 0..12 {
+            assert!(g.degree(i) >= 3, "torus degree {}", g.degree(i));
+        }
+    }
+
+    #[test]
+    fn small_rings() {
+        // m=2 and m=3 are edge cases for the modular neighbour formulas.
+        let g = Graph::build(Topology::Ring, 2);
+        assert_eq!(g.edge_count(), 1);
+        let g = Graph::build(Topology::TwoHopRing, 3);
+        assert!(g.is_connected());
+        assert!(g.edge_count() <= 3);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Topology::parse("ring", 0).unwrap(), Topology::Ring);
+        assert_eq!(
+            Topology::parse("er:0.4", 5).unwrap(),
+            Topology::ErdosRenyi { p_milli: 400, seed: 5 }
+        );
+        assert!(Topology::parse("nope", 0).is_err());
+        assert!(Topology::parse("er:1.5", 0).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Gossip mixing matrices (Assumption 1) with Metropolis–Hastings weights.
+
+use super::Graph;
+use crate::linalg::MatF64;
+
+/// Symmetric doubly stochastic mixing matrix over a graph, with the
+/// spectral quantities used throughout the convergence analysis cached.
+#[derive(Clone, Debug)]
+pub struct MixingMatrix {
+    pub m: usize,
+    w: MatF64,
+    /// δ_ρ = max{|λ₂|, |λ_m|} (Definition 3).
+    pub second_eig_magnitude: f64,
+    /// Spectral gap ρ = 1 − δ_ρ.
+    pub spectral_gap: f64,
+    /// ρ' = ‖W − I‖² (largest squared singular value), paper Lemma 4.
+    pub w_minus_i_norm_sq: f64,
+    /// Per-node list of (neighbor, weight), excluding self.
+    neighbor_weights: Vec<Vec<(usize, f64)>>,
+}
+
+impl MixingMatrix {
+    /// Metropolis–Hastings: w_ij = 1 / (1 + max(deg_i, deg_j)) for edges,
+    /// w_ii = 1 − Σ_j w_ij.  Symmetric and doubly stochastic by
+    /// construction; positive diagonal ⇒ λ_m > −1 on any connected graph.
+    pub fn metropolis(graph: &Graph) -> MixingMatrix {
+        let m = graph.m;
+        let mut w = MatF64::zeros(m);
+        for i in 0..m {
+            for &j in graph.neighbors(i) {
+                w[(i, j)] = 1.0 / (1.0 + graph.degree(i).max(graph.degree(j)) as f64);
+            }
+        }
+        for i in 0..m {
+            let off: f64 = (0..m).filter(|&j| j != i).map(|j| w.get(i, j)).sum();
+            w[(i, i)] = 1.0 - off;
+        }
+        Self::from_matrix(w)
+    }
+
+    /// Build from an explicit matrix (validated).
+    pub fn from_matrix(w: MatF64) -> MixingMatrix {
+        assert!(w.is_symmetric(1e-9), "mixing matrix must be symmetric");
+        assert!(
+            w.doubly_stochastic_defect() < 1e-9,
+            "mixing matrix must be doubly stochastic (defect {})",
+            w.doubly_stochastic_defect()
+        );
+        let m = w.n;
+        let second = w.second_largest_eig_magnitude();
+        let w_minus_i = w.w_minus_i_norm_sq();
+        let mut neighbor_weights = vec![Vec::new(); m];
+        for i in 0..m {
+            for j in 0..m {
+                if i != j && w.get(i, j) != 0.0 {
+                    neighbor_weights[i].push((j, w.get(i, j)));
+                }
+            }
+        }
+        MixingMatrix {
+            m,
+            second_eig_magnitude: second,
+            spectral_gap: 1.0 - second,
+            w_minus_i_norm_sq: w_minus_i,
+            w,
+            neighbor_weights,
+        }
+    }
+
+    #[inline]
+    pub fn weight(&self, i: usize, j: usize) -> f64 {
+        self.w.get(i, j)
+    }
+
+    /// Off-diagonal neighbour weights of node i.
+    pub fn neighbors(&self, i: usize) -> &[(usize, f64)] {
+        &self.neighbor_weights[i]
+    }
+
+    pub fn matrix(&self) -> &MatF64 {
+        &self.w
+    }
+
+    /// The mixing step of Algorithms 1–2 applied to stacked rows:
+    /// `out_i = rows_i + γ Σ_j w_ij (rows_j − rows_i)`, i.e. X ← (I + γ(W−I))X.
+    /// Proposition 5: this keeps a spectral gap of at least γρ.
+    pub fn mix(&self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        assert_eq!(rows.len(), self.m);
+        let d = rows[0].len();
+        let mut out = rows.to_vec();
+        for i in 0..self.m {
+            let oi = &mut out[i];
+            for &(j, wij) in &self.neighbor_weights[i] {
+                let c = (gamma * wij) as f32;
+                let rj = &rows[j];
+                let ri = &rows[i];
+                for k in 0..d {
+                    oi[k] += c * (rj[k] - ri[k]);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+    use crate::topology::Topology;
+
+    fn mm(t: Topology, m: usize) -> MixingMatrix {
+        MixingMatrix::metropolis(&Graph::build(t, m))
+    }
+
+    #[test]
+    fn metropolis_is_valid_for_all_topologies() {
+        for t in [
+            Topology::Ring,
+            Topology::TwoHopRing,
+            Topology::Complete,
+            Topology::Star,
+            Topology::Path,
+            Topology::Torus,
+            Topology::ErdosRenyi { p_milli: 400, seed: 3 },
+        ] {
+            let w = mm(t, 10);
+            assert!(w.matrix().doubly_stochastic_defect() < 1e-9, "{t:?}");
+            assert!(w.spectral_gap > 0.0, "{t:?} gap {}", w.spectral_gap);
+            assert!(w.second_eig_magnitude < 1.0, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn better_connectivity_larger_gap() {
+        let ring = mm(Topology::Ring, 10).spectral_gap;
+        let twohop = mm(Topology::TwoHopRing, 10).spectral_gap;
+        let complete = mm(Topology::Complete, 10).spectral_gap;
+        assert!(ring < twohop, "ring {ring} vs 2hop {twohop}");
+        assert!(twohop < complete + 1e-12, "2hop {twohop} vs complete {complete}");
+    }
+
+    #[test]
+    fn mix_preserves_mean_exactly_in_expectation() {
+        // Eq. 7 of the paper: the average over nodes is invariant under the
+        // (uncompressed) mixing step because 1ᵀ(W−I) = 0.
+        let w = mm(Topology::Ring, 6);
+        let rows: Vec<Vec<f32>> =
+            (0..6).map(|i| vec![i as f32, (i * i) as f32, -(i as f32)]).collect();
+        let before = linalg::mean_rows(&rows);
+        let after = linalg::mean_rows(&w.mix(0.7, &rows));
+        for (a, b) in before.iter().zip(&after) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mix_contracts_consensus_error() {
+        let w = mm(Topology::Ring, 8);
+        let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 4]).collect();
+        let e0 = linalg::consensus_err_sq(&rows);
+        let mixed = w.mix(1.0, &rows);
+        let e1 = linalg::consensus_err_sq(&mixed);
+        assert!(e1 < e0, "{e1} !< {e0}");
+    }
+
+    #[test]
+    fn mix_fixed_point_consensus() {
+        let w = mm(Topology::TwoHopRing, 5);
+        let rows = vec![vec![3.0f32, -1.0]; 5];
+        let mixed = w.mix(0.5, &rows);
+        for r in mixed {
+            assert_eq!(r, vec![3.0, -1.0]);
+        }
+    }
+
+    #[test]
+    fn gamma_scales_gap_proposition5() {
+        // W̃ = I + γ(W−I) has gap γρ (Proposition 5): verify spectrally.
+        let w = mm(Topology::Ring, 8);
+        let gamma = 0.5;
+        let mut wt = MatF64::zeros(8);
+        for i in 0..8 {
+            for j in 0..8 {
+                let id = if i == j { 1.0 } else { 0.0 };
+                wt[(i, j)] = id + gamma * (w.matrix().get(i, j) - id);
+            }
+        }
+        let eig = wt.symmetric_eigenvalues();
+        let gap = 1.0 - eig[1];
+        assert!((gap - gamma * (1.0 - w.matrix().symmetric_eigenvalues()[1])).abs() < 1e-9);
+    }
+}

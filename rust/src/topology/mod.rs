@@ -1,0 +1,14 @@
+//! Decentralized network topologies and gossip mixing matrices.
+//!
+//! Covers every topology the paper evaluates (ring, 2-hop ring,
+//! Erdős–Rényi(p)) plus the standard extras a user of the library will
+//! want (complete, star, path, 2-D torus).  Mixing weights are
+//! Metropolis–Hastings (symmetric, doubly stochastic by construction) and
+//! the spectral quantities of Assumption 1 / Definition 3 are computed
+//! exactly via the Jacobi eigensolver.
+
+mod graph;
+mod mixing;
+
+pub use graph::{Graph, Topology};
+pub use mixing::MixingMatrix;

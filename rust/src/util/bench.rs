@@ -1,0 +1,161 @@
+//! Mini-criterion: a benchmark harness for the `harness = false` benches.
+//!
+//! No external bench framework builds offline, so this provides the core of
+//! what the repo needs: warmup, timed iterations until a wall-clock budget,
+//! and mean / p50 / p95 / throughput reporting with a stable text format
+//! that EXPERIMENTS.md quotes.  Filters like `cargo bench -- <substring>`
+//! are honoured.
+
+use std::time::{Duration, Instant};
+
+pub struct Bencher {
+    filter: Option<String>,
+    /// (name, mean_ns) pairs for the summary table.
+    results: Vec<(String, f64)>,
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl Bencher {
+    pub fn from_env() -> Bencher {
+        // `cargo bench -- foo` passes "foo" through; also honour "--bench".
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--"));
+        Bencher {
+            filter,
+            results: Vec::new(),
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+        }
+    }
+
+    /// Fast profile for CI-ish runs (smaller budget).
+    pub fn quick() -> Bencher {
+        let mut b = Bencher::from_env();
+        b.warmup = Duration::from_millis(50);
+        b.budget = Duration::from_millis(400);
+        b.min_iters = 5;
+        b
+    }
+
+    fn selected(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Benchmark a closure; returns the mean duration (or None if filtered
+    /// out).  The closure should return something observable to keep the
+    /// optimizer honest; its result is black-boxed here.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Option<Duration> {
+        if !self.selected(name) {
+            return None;
+        }
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Timed samples.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget || samples_ns.len() < self.min_iters as usize {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 100_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let p = |q: f64| samples_ns[((samples_ns.len() - 1) as f64 * q) as usize];
+        println!(
+            "bench {name:44} {:>12} mean  {:>12} p50  {:>12} p95  ({} iters)",
+            fmt_ns(mean),
+            fmt_ns(p(0.50)),
+            fmt_ns(p(0.95)),
+            samples_ns.len()
+        );
+        self.results.push((name.to_string(), mean));
+        Some(Duration::from_nanos(mean as u64))
+    }
+
+    /// Benchmark with a units-per-iteration throughput report.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        units: f64,
+        unit_label: &str,
+        f: impl FnMut() -> T,
+    ) {
+        if let Some(mean) = self.bench(name, f) {
+            let per_sec = units / mean.as_secs_f64();
+            println!("      └─ throughput: {per_sec:.3e} {unit_label}/s");
+        }
+    }
+
+    pub fn finish(&self) {
+        println!("\n{} benchmarks run", self.results.len());
+    }
+}
+
+/// Identity function that defeats constant-folding (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher {
+            filter: None,
+            results: Vec::new(),
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(10),
+            min_iters: 3,
+        };
+        let d = b.bench("noop", || 1 + 1).unwrap();
+        assert!(d.as_nanos() > 0);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher {
+            filter: Some("xyz".into()),
+            results: Vec::new(),
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(5),
+            min_iters: 1,
+        };
+        assert!(b.bench("abc", || ()).is_none());
+        assert!(b.bench("has_xyz_inside", || ()).is_some());
+    }
+}

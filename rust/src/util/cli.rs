@@ -1,0 +1,121 @@
+//! Tiny command-line parser (offline build: no clap).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value]... [positional]...`
+//! Flags may also be written `--key=value`.  Unknown keys are an error so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — first token is NOT the
+    /// program name.
+    pub fn parse_tokens(tokens: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut it = tokens.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                a.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.kv.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.kv.insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_tokens(&tokens)
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.known.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&mut self, name: &str) -> Option<String> {
+        self.known.push(name.to_string());
+        self.kv.get(name).cloned()
+    }
+
+    pub fn get_or(&mut self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&mut self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name}: cannot parse {s:?}")),
+            None => default,
+        }
+    }
+
+    /// Call after consuming all known options; errors on leftovers.
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.known.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown options: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn subcommand_kv_flags_positional() {
+        let mut a = Args::parse_tokens(&toks("run --rounds 50 --verbose --topo=ring cfg.toml"));
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_parse("rounds", 0usize), 50);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_or("topo", "x"), "ring");
+        assert_eq!(a.positional, vec!["cfg.toml"]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let mut a = Args::parse_tokens(&toks("run --oops 1"));
+        let _ = a.get("rounds");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse_tokens(&toks("bench"));
+        assert_eq!(a.get_parse("m", 10usize), 10);
+        assert_eq!(a.get_or("algo", "c2dfb"), "c2dfb");
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained infrastructure substrates (the offline build has no
+//! external crates beyond `xla` + `anyhow`): PRNG, JSON, CLI parsing,
+//! a benchmark harness and a property-testing harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,113 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` random
+//! inputs drawn from a deterministic seed sequence.  On failure it reports
+//! the failing case's seed so the case can be replayed exactly with
+//! `check_seed`.  Generators live on `Gen`, a thin wrapper over
+//! [`crate::util::rng::Rng`] with value-space helpers.
+
+use super::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_f32(0.0, std)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `f` over `cases` generated inputs; panic with a replayable seed on
+/// the first failure (failures are signalled by `f` panicking or returning
+/// an Err description).
+pub fn check(name: &str, cases: u64, f: impl Fn(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0xC2DFB ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed) };
+        if let Err(msg) = f(&mut g) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_seed(name: &str, seed: u64, f: impl Fn(&mut Gen) -> Result<(), String>) {
+    let mut g = Gen { rng: Rng::new(seed) };
+    if let Err(msg) = f(&mut g) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helpers that return Err instead of panicking, so `check` can
+/// attach the seed.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            ensure((a + b - (b + a)).abs() < 1e-6, "not commutative")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "deliberate")]
+    fn failing_property_reports() {
+        check("fails", 10, |_| Err("deliberate".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("gen-bounds", 100, |g| {
+            let n = g.usize_in(3, 17);
+            ensure((3..=17).contains(&n), format!("usize_in out of bounds: {n}"))?;
+            let v = g.vec_f32(n, -1.0, 1.0);
+            ensure(v.len() == n, "wrong len")?;
+            ensure(
+                v.iter().all(|x| (-1.0..1.0).contains(x)),
+                "f32 out of bounds",
+            )
+        });
+    }
+}

@@ -1,0 +1,280 @@
+//! Convergence-theory tests: the paper's Theorems/Lemmas checked on the
+//! analytic bilevel quadratic, plus cross-algorithm sanity (all methods
+//! find the same hyper-optimum; C²DFB does it with less communication).
+
+use c2dfb::collective::Network;
+use c2dfb::compress::{Identity, TopK};
+use c2dfb::config::{Algorithm, ExperimentConfig};
+use c2dfb::coordinator::run_with_task;
+use c2dfb::linalg;
+use c2dfb::optim::{run_inner, InnerConfig, InnerState};
+use c2dfb::tasks::{BilevelTask, QuadraticTask};
+use c2dfb::topology::{Graph, Topology};
+use c2dfb::util::rng::Rng;
+
+/// The analytic hyper-minimum (GD on the closed-form hypergradient).
+fn psi_min(task: &QuadraticTask) -> (Vec<f32>, f64) {
+    let mut x = task.init_x(&mut Rng::new(5));
+    for _ in 0..8000 {
+        let g = task.hypergrad_analytic(&x);
+        for k in 0..x.len() {
+            x[k] -= 0.2 * g[k];
+        }
+    }
+    let v = task.psi(&x);
+    (x, v)
+}
+
+/// Theorem 1 — linear inner-loop convergence to 1·ỹ* under compression:
+/// the log-error decreases ~linearly in K (checked at three K values).
+#[test]
+fn theorem1_inner_linear_rate_under_compression() {
+    let m = 8;
+    let dim = 12;
+    let task = QuadraticTask::generate(m, dim, 1.0, 7);
+    let mut rng_master = Rng::new(3);
+    let x = task.init_x(&mut rng_master);
+    let xs: Vec<Vec<f32>> = vec![x; m];
+
+    let errs: Vec<f64> = [30usize, 60, 120]
+        .iter()
+        .map(|&k_steps| {
+            let mut net = Network::new(Graph::build(Topology::Ring, m));
+            let mut rng = Rng::new(11);
+            let mut state = InnerState::new(&net, dim);
+            let mut zs = vec![vec![0.0f32; dim]; m];
+            let cfg = InnerConfig { eta: 0.2, gamma: 0.6, k_steps };
+            let xs_ref = &xs;
+            run_inner(
+                &cfg,
+                &mut net,
+                &TopK::new(0.3),
+                &mut rng,
+                &mut state,
+                &mut zs,
+                |i, z| task.inner_z_grad(i, &xs_ref[i], z).unwrap(),
+            );
+            // ỹ* for identical x across nodes is y*(x).
+            let opt = task.y_star(&xs[0]);
+            zs.iter()
+                .map(|z| {
+                    z.iter()
+                        .zip(&opt)
+                        .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+                        .sum::<f64>()
+                })
+                .sum()
+        })
+        .collect();
+    assert!(errs[1] < errs[0] * 0.2, "K=60: {} vs K=30: {}", errs[1], errs[0]);
+    assert!(errs[2] < errs[1] * 0.2 || errs[2] < 1e-9, "K=120: {} vs K=60: {}", errs[2], errs[1]);
+}
+
+/// Lemma 1/3 of the penalty method: the quality of the final point improves
+/// as λ grows (bias ∝ 1/λ), at fixed budget.
+#[test]
+fn penalty_bias_shrinks_with_lambda() {
+    let task = QuadraticTask::generate(6, 8, 0.6, 13);
+    let (_, psi_star) = psi_min(&task);
+    let mut last_excess = f64::INFINITY;
+    for lambda in [2.0, 8.0, 32.0] {
+        let cfg = ExperimentConfig {
+            algorithm: Algorithm::C2dfb,
+            nodes: 6,
+            rounds: 400,
+            inner_steps: 25,
+            eta_out: 0.3,
+            eta_in: 0.4,
+            gamma_out: 0.8,
+            gamma_in: 0.6,
+            lambda,
+            compressor: "topk:0.5".into(),
+            eval_every: 50,
+            ..Default::default()
+        };
+        let m = run_with_task(&task, &cfg).unwrap();
+        let excess = (m.final_point().unwrap().loss - psi_star).abs();
+        assert!(
+            excess < last_excess * 1.5 + 1e-4,
+            "λ={lambda}: excess {excess} vs previous {last_excess}"
+        );
+        last_excess = excess;
+    }
+    assert!(last_excess < 0.05, "λ=32 excess too large: {last_excess}");
+}
+
+/// All four algorithms drive the loss towards the same hyper-minimum on an
+/// easy quadratic — the cross-validation that the baselines are faithful.
+#[test]
+fn all_algorithms_reach_same_optimum() {
+    let task = QuadraticTask::generate(5, 6, 0.5, 17);
+    let (_, psi_star) = psi_min(&task);
+    for (algo, rounds, eta_out, eta_in, comp) in [
+        (Algorithm::C2dfb, 300, 0.3, 0.3, "topk:0.5"),
+        // The naive variant accumulates compression error and diverges at
+        // these (aggressive) settings — the paper's Fig. 3 point.  It is
+        // cross-validated dense here; its behaviour *under* compression is
+        // exercised by the fig3 harness and the integration tests.
+        (Algorithm::C2dfbNc, 300, 0.3, 0.3, "none"),
+        (Algorithm::Madsbo, 800, 0.8, 0.3, "topk:0.5"),
+        (Algorithm::Mdbo, 800, 0.4, 0.3, "topk:0.5"),
+    ] {
+        let cfg = ExperimentConfig {
+            algorithm: algo,
+            nodes: 5,
+            rounds,
+            inner_steps: 20,
+            eta_out,
+            eta_in,
+            gamma_out: 0.8,
+            gamma_in: 0.6,
+            lambda: 40.0,
+            compressor: comp.into(),
+            eval_every: 100,
+            ..Default::default()
+        };
+        let m = run_with_task(&task, &cfg).unwrap();
+        let first_excess = m.trace.first().unwrap().loss - psi_star;
+        let excess = m.final_point().unwrap().loss - psi_star;
+        assert!(
+            excess.abs() < 0.25 * first_excess.abs() + 0.05,
+            "{}: excess {excess:.4} (start {first_excess:.4}, ψ* {psi_star:.4})",
+            algo.name()
+        );
+    }
+}
+
+/// C²DFB needs (much) less communication than MDBO to reach the same loss
+/// threshold — the Table 1 phenomenon on the analytic task.
+#[test]
+fn c2dfb_beats_mdbo_on_comm_to_threshold() {
+    let task = QuadraticTask::generate(6, 32, 1.0, 19);
+    let (_, psi_star) = psi_min(&task);
+    let threshold = {
+        // Halfway (in log scale) between start and optimum.
+        let start = {
+            let mut rng = Rng::new(42 ^ 0xA1607);
+            let x0 = task.init_x(&mut rng);
+            task.psi(&x0)
+        };
+        psi_star + (start - psi_star) * 0.25
+    };
+    let run = |algo: Algorithm, eta_out: f64| {
+        let cfg = ExperimentConfig {
+            algorithm: algo,
+            nodes: 6,
+            rounds: 600,
+            inner_steps: 15,
+            eta_out,
+            eta_in: 0.3,
+            gamma_out: 0.8,
+            gamma_in: 0.6,
+            lambda: 40.0,
+            compressor: "topk:0.2".into(),
+            eval_every: 5,
+            ..Default::default()
+        };
+        run_with_task(&task, &cfg).unwrap()
+    };
+    let c = run(Algorithm::C2dfb, 0.3);
+    let b = run(Algorithm::Mdbo, 0.4);
+    let c_mb = c.comm_to_loss(threshold).map(|p| p.comm_mb);
+    let b_mb = b.comm_to_loss(threshold).map(|p| p.comm_mb);
+    let c_mb = c_mb.expect("C²DFB never reached the threshold");
+    match b_mb {
+        None => {} // MDBO never got there at this budget: stronger win.
+        Some(b_mb) => assert!(
+            c_mb < b_mb,
+            "C²DFB {c_mb:.3} MB vs MDBO {b_mb:.3} MB to loss {threshold:.3}"
+        ),
+    }
+}
+
+/// Tighter compression (smaller δ) still converges, only slower — the
+/// Fig. 5(middle) sensitivity shape.
+#[test]
+fn compression_ratio_sensitivity_shape() {
+    let task = QuadraticTask::generate(6, 16, 0.8, 23);
+    let mut final_losses = Vec::new();
+    for ratio in ["0.05", "0.2", "1.0"] {
+        let cfg = ExperimentConfig {
+            algorithm: Algorithm::C2dfb,
+            nodes: 6,
+            rounds: 120,
+            inner_steps: 10,
+            eta_out: 0.3,
+            // Theorem 1 prescribes η_in ∝ δ_c: the 5% ratio needs the
+            // smallest step, so use a step safe for all three ratios.
+            eta_in: 0.05,
+            gamma_out: 0.8,
+            gamma_in: 0.5,
+            lambda: 30.0,
+            compressor: format!("topk:{ratio}"),
+            eval_every: 20,
+            ..Default::default()
+        };
+        let m = run_with_task(&task, &cfg).unwrap();
+        final_losses.push(m.final_point().unwrap().loss);
+    }
+    // All converge (finite, decreasing from the start), and the dense run
+    // is no worse than the most aggressive compression.
+    assert!(final_losses.iter().all(|l| l.is_finite()));
+    assert!(final_losses[2] <= final_losses[0] * 1.5 + 0.05);
+}
+
+/// With Q = identity the reference-point protocol and textbook
+/// uncompressed gradient tracking share the same fixed point (consensus at
+/// ỹ*): the refpoint machinery adds no asymptotic bias.
+#[test]
+fn refpoint_protocol_fixed_point_matches_dense_tracking() {
+    let m = 5;
+    let dim = 10;
+    let task = QuadraticTask::generate(m, dim, 0.7, 29);
+    let x = task.init_x(&mut Rng::new(1));
+    let xs: Vec<Vec<f32>> = vec![x; m];
+    let opt = task.y_star(&xs[0]);
+
+    // Protocol A: reference-point inner loop with Q = identity.
+    let mut net = Network::new(Graph::build(Topology::Ring, m));
+    let mut rng = Rng::new(2);
+    let mut state = InnerState::new(&net, dim);
+    let mut d_ref = vec![vec![0.0f32; dim]; m];
+    let cfg = InnerConfig { eta: 0.2, gamma: 0.5, k_steps: 250 };
+    let xs_ref = &xs;
+    run_inner(&cfg, &mut net, &Identity, &mut rng, &mut state, &mut d_ref, |i, z| {
+        task.inner_z_grad(i, &xs_ref[i], z).unwrap()
+    });
+
+    // Protocol B: textbook uncompressed gradient tracking (no refpoints).
+    let mut d = vec![vec![0.0f32; dim]; m];
+    let w = c2dfb::topology::MixingMatrix::metropolis(&Graph::build(Topology::Ring, m));
+    let mut s: Vec<Vec<f32>> =
+        (0..m).map(|i| task.inner_z_grad(i, &xs[i], &d[i]).unwrap()).collect();
+    let mut prev: Vec<Vec<f32>> = s.clone();
+    for _k in 0..250 {
+        let mixed = w.mix(0.5, &d);
+        for i in 0..m {
+            d[i] = mixed[i].iter().zip(&s[i]).map(|(a, b)| a - 0.2 * b).collect();
+        }
+        let smixed = w.mix(0.5, &s);
+        for i in 0..m {
+            let g = task.inner_z_grad(i, &xs[i], &d[i]).unwrap();
+            s[i] = smixed[i]
+                .iter()
+                .zip(&g)
+                .zip(&prev[i])
+                .map(|((sv, gn), go)| sv + gn - go)
+                .collect();
+            prev[i] = g;
+        }
+    }
+
+    for protocol in [&d_ref, &d] {
+        assert!(linalg::consensus_err_sq(protocol) < 1e-8);
+        for node in protocol {
+            for (a, b) in node.iter().zip(&opt) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Integration tests over the REAL stack: AOT artifacts → PJRT runtime →
+//! tasks → algorithms.  Requires `make artifacts` (the tiny presets).
+
+use c2dfb::config::{Algorithm, ExperimentConfig};
+use c2dfb::coordinator::{build_task, run_with_registry};
+use c2dfb::data::partition::Partition;
+use c2dfb::runtime::{Arg, ArtifactRegistry};
+use c2dfb::tasks::BilevelTask;
+use c2dfb::topology::Topology;
+use c2dfb::util::rng::Rng;
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::open_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn demo_affine_roundtrip() {
+    let reg = registry();
+    let oracle = reg.load("demo.affine").unwrap();
+    let a: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let b: Vec<f32> = (0..64).map(|i| (i % 8 == i / 8) as u8 as f32).collect(); // identity
+    let out = oracle.call(&[Arg::Host(&a), Arg::Host(&b)]).unwrap();
+    assert_eq!(out.len(), 1);
+    // a @ I + 1 == a + 1
+    for (got, want) in out[0].iter().zip(&a) {
+        assert!((got - (want + 1.0)).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn oracle_rejects_wrong_shapes() {
+    let reg = registry();
+    let oracle = reg.load("demo.affine").unwrap();
+    let a = vec![0.0f32; 64];
+    let short = vec![0.0f32; 5];
+    assert!(oracle.call(&[Arg::Host(&a), Arg::Host(&short)]).is_err());
+    assert!(oracle.call(&[Arg::Host(&a)]).is_err());
+}
+
+#[test]
+fn registry_caches_compilations() {
+    let reg = registry();
+    let t0 = std::time::Instant::now();
+    let _o1 = reg.load("coeff_tiny.eval").unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _o2 = reg.load("coeff_tiny.eval").unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 5, "cache miss? {first:?} vs {second:?}");
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    let reg = registry();
+    let err = match reg.load("coeff_tiny.not_a_thing") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(err.contains("not in manifest"), "{err}");
+}
+
+/// The fully first-order hypergradient identity (paper Eq. 4) holds through
+/// the REAL artifacts for the coeff task (closed form of ∇x g).
+#[test]
+fn coeff_tiny_hypergrad_consistency() {
+    let reg = registry();
+    let task = build_task(
+        &reg,
+        &ExperimentConfig {
+            preset: "coeff_tiny".into(),
+            nodes: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(3);
+    let dx = task.dx();
+    let x: Vec<f32> = (0..dx).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let y: Vec<f32> = (0..task.dy()).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let z: Vec<f32> = (0..task.dy()).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let lam = 4.0f32;
+    let u = task.hypergrad(0, &x, &y, &z, lam).unwrap();
+    // Closed form for coeff: u = λ exp(x) ⊙ (Σ_c y² − Σ_c z²).
+    let c = task.dy() / dx;
+    for f in 0..dx {
+        let ry: f32 = (0..c).map(|j| y[f * c + j] * y[f * c + j]).sum();
+        let rz: f32 = (0..c).map(|j| z[f * c + j] * z[f * c + j]).sum();
+        let want = lam * x[f].exp() * (ry - rz);
+        assert!(
+            (u[f] - want).abs() < 1e-3 * (1.0 + want.abs()),
+            "coord {f}: {} vs {want}",
+            u[f]
+        );
+    }
+}
+
+/// Pallas and jnp artifact variants agree through PJRT end to end.
+#[test]
+fn pallas_vs_jnp_variants_agree_through_runtime() {
+    let reg = registry();
+    if !reg.has_preset("coeff_jnp") {
+        eprintln!("skipping: coeff_jnp preset not built");
+        return;
+    }
+    let mk = |preset: &str| {
+        build_task(
+            &reg,
+            &ExperimentConfig { preset: preset.into(), nodes: 3, seed: 99, ..Default::default() },
+        )
+        .unwrap()
+    };
+    let tp = mk("coeff");
+    let tj = mk("coeff_jnp");
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..tp.dx()).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let y: Vec<f32> = (0..tp.dy()).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    // Same seed ⇒ identical data shards ⇒ oracle outputs must agree.
+    let gp = tp.inner_z_grad(0, &x, &y).unwrap();
+    let gj = tj.inner_z_grad(0, &x, &y).unwrap();
+    let diff: f64 = gp
+        .iter()
+        .zip(&gj)
+        .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let norm: f64 = gj.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(diff < 1e-3 * (1.0 + norm), "pallas vs jnp grad diff {diff} (norm {norm})");
+}
+
+#[test]
+fn c2dfb_learns_on_tiny_coeff_end_to_end() {
+    let reg = registry();
+    let cfg = ExperimentConfig {
+        preset: "coeff_tiny".into(),
+        algorithm: Algorithm::C2dfb,
+        nodes: 6,
+        rounds: 25,
+        inner_steps: 10,
+        eta_out: 0.2,
+        eta_in: 0.2,
+        eval_every: 5,
+        partition: Partition::Heterogeneous { h: 0.8 },
+        ..Default::default()
+    };
+    let m = run_with_registry(&reg, &cfg).unwrap();
+    let first = m.trace.first().unwrap();
+    let last = m.trace.last().unwrap();
+    assert!(
+        last.accuracy > first.accuracy + 0.2,
+        "acc {} -> {}",
+        first.accuracy,
+        last.accuracy
+    );
+    assert!(last.loss.is_finite());
+    assert!(m.ledger.total_bytes > 0);
+    assert_eq!(m.oracles.second_order, 0);
+}
+
+#[test]
+fn all_algorithms_run_on_tiny_hyperrep() {
+    let reg = registry();
+    for algo in [Algorithm::C2dfb, Algorithm::C2dfbNc, Algorithm::Madsbo, Algorithm::Mdbo] {
+        let cfg = ExperimentConfig {
+            preset: "hyperrep_tiny".into(),
+            algorithm: algo,
+            nodes: 4,
+            rounds: 4,
+            inner_steps: 5,
+            eta_out: 0.05,
+            eta_in: 0.05,
+            gamma_out: 0.3,
+            gamma_in: 0.3,
+            eval_every: 2,
+            compressor: "topk:0.3".into(),
+            ..Default::default()
+        };
+        let m =
+            run_with_registry(&reg, &cfg).unwrap_or_else(|e| panic!("{}: {e:?}", algo.name()));
+        assert!(m.final_point().unwrap().loss.is_finite(), "{} diverged", algo.name());
+    }
+}
+
+#[test]
+fn topologies_and_compressors_matrix_smoke() {
+    let reg = registry();
+    for topo in ["ring", "2hop", "er:0.5", "complete", "star"] {
+        for comp in ["topk:0.2", "randk:0.3", "qsgd:16", "none"] {
+            let cfg = ExperimentConfig {
+                preset: "coeff_tiny".into(),
+                nodes: 5,
+                rounds: 2,
+                inner_steps: 3,
+                eta_out: 0.1,
+                eta_in: 0.1,
+                topology: Topology::parse(topo, 1).unwrap(),
+                compressor: comp.into(),
+                eval_every: 2,
+                ..Default::default()
+            };
+            let m = run_with_registry(&reg, &cfg)
+                .unwrap_or_else(|e| panic!("{topo}/{comp}: {e:?}"));
+            assert!(m.final_point().unwrap().loss.is_finite(), "{topo}/{comp}");
+        }
+    }
+}
+
+/// Compression must reduce inner-loop bytes on the real task.
+#[test]
+fn compressed_run_sends_fewer_bytes_than_dense() {
+    let reg = registry();
+    let base = ExperimentConfig {
+        preset: "coeff_tiny".into(),
+        nodes: 5,
+        rounds: 3,
+        inner_steps: 5,
+        eta_out: 0.1,
+        eta_in: 0.1,
+        eval_every: 3,
+        ..Default::default()
+    };
+    let mut dense_cfg = base.clone();
+    dense_cfg.compressor = "none".into();
+    let dense = run_with_registry(&reg, &dense_cfg).unwrap();
+    let mut topk_cfg = base;
+    topk_cfg.compressor = "topk:0.1".into();
+    let topk = run_with_registry(&reg, &topk_cfg).unwrap();
+    assert!(
+        topk.ledger.total_bytes * 2 < dense.ledger.total_bytes,
+        "{} vs {}",
+        topk.ledger.total_bytes,
+        dense.ledger.total_bytes
+    );
+}
+
+/// Determinism: identical config ⇒ identical traces (bytes and losses).
+#[test]
+fn runs_are_deterministic() {
+    let reg = registry();
+    let cfg = ExperimentConfig {
+        preset: "coeff_tiny".into(),
+        nodes: 4,
+        rounds: 5,
+        inner_steps: 4,
+        eta_out: 0.1,
+        eta_in: 0.1,
+        eval_every: 2,
+        seed: 1234,
+        ..Default::default()
+    };
+    let a = run_with_registry(&reg, &cfg).unwrap();
+    let b = run_with_registry(&reg, &cfg).unwrap();
+    assert_eq!(a.ledger.total_bytes, b.ledger.total_bytes);
+    for (pa, pb) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "round {}", pa.round);
+        assert_eq!(pa.accuracy.to_bits(), pb.accuracy.to_bits());
+    }
+}
+
+/// Heterogeneous split changes the data each node sees but the stack stays
+/// stable and still learns.
+#[test]
+fn heterogeneous_vs_iid_both_learn() {
+    let reg = registry();
+    for part in [Partition::Iid, Partition::Heterogeneous { h: 0.8 }] {
+        let cfg = ExperimentConfig {
+            preset: "coeff_tiny".into(),
+            nodes: 6,
+            rounds: 20,
+            inner_steps: 8,
+            eta_out: 0.2,
+            eta_in: 0.2,
+            partition: part,
+            eval_every: 5,
+            ..Default::default()
+        };
+        let m = run_with_registry(&reg, &cfg).unwrap();
+        let last = m.trace.last().unwrap();
+        assert!(last.accuracy > 0.5, "{}: acc {}", part.name(), last.accuracy);
+    }
+}

@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Fill EXPERIMENTS.md placeholder tables from runs/final/ summaries."""
+
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+FINAL = ROOT / "runs" / "final"
+
+
+def load(run_dir: str):
+    out = []
+    d = FINAL / run_dir
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def mb_to_acc(csv_path: pathlib.Path, target: float):
+    for line in csv_path.read_text().splitlines()[1:]:
+        parts = line.split(",")
+        if float(parts[5]) >= target:
+            return float(parts[1])
+    return None
+
+
+def fig_table(run_dir: str, target_acc=None, loss_target=None):
+    rows = ["| run | algo | final acc | final loss | comm (MB) | MB to target |",
+            "|---|---|---|---|---|---|"]
+    for s in load(run_dir):
+        label = s["label"].replace(f"{run_dir}_", "")
+        csv = FINAL / run_dir / (s["algo"] + "_" + s["label"].replace(" ", "_").replace("/", "_") + ".csv")
+        tgt = ""
+        if csv.exists():
+            if target_acc is not None:
+                v = mb_to_acc(csv, target_acc)
+                tgt = f"{v:.1f}" if v is not None else "—"
+            elif loss_target is not None:
+                for line in csv.read_text().splitlines()[1:]:
+                    parts = line.split(",")
+                    try:
+                        if float(parts[4]) <= loss_target:
+                            tgt = f"{float(parts[1]):.1f}"
+                            break
+                    except ValueError:
+                        continue
+                tgt = tgt or "—"
+        fl = s["final_loss"]
+        fl = f"{fl:.4f}" if fl is not None else "NaN"
+        rows.append(
+            f"| {label} | {s['algo']} | {s['final_accuracy']:.3f} | {fl} "
+            f"| {s['comm_mb']:.0f} | {tgt} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- FIG2_TABLE -->", fig_table("fig2", target_acc=0.7))
+    md = md.replace("<!-- FIG3_TABLE -->", fig_table("fig3", loss_target=0.5))
+    md = md.replace("<!-- FIG5_TABLE -->", fig_table("fig5"))
+    md = md.replace("<!-- ABLATION_TABLE -->", fig_table("ablation_compressor"))
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md tables filled")
+
+
+if __name__ == "__main__":
+    main()
