@@ -1,0 +1,234 @@
+//! The real PJRT backend (cargo feature `pjrt`), wrapping the `xla` crate.
+
+use super::manifest::{EntrySpec, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A staged (device-resident) input buffer.
+pub struct Staged {
+    buf: xla::PjRtBuffer,
+    pub len: usize,
+}
+
+/// One argument to an oracle call.
+pub enum Arg<'a> {
+    /// Host data, uploaded at call time.
+    Host(&'a [f32]),
+    /// Scalar (f32[] in the artifact signature).
+    Scalar(f32),
+    /// Pre-staged device buffer (zero upload on the hot path).
+    Staged(&'a Staged),
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Oracle {
+    pub name: String,
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    n_outputs: usize,
+}
+
+impl Oracle {
+    /// Execute with the given args; returns one flat f32 vector per output.
+    pub fn call(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                args.len()
+            );
+        }
+        // First pass: upload host/scalar args (owned buffers).
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut owned_slots: Vec<Option<usize>> = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(&self.spec.inputs).enumerate() {
+            match arg {
+                Arg::Host(data) => {
+                    if data.len() != spec.elements() {
+                        bail!(
+                            "{}: arg {i} has {} elements, artifact expects {:?}",
+                            self.name,
+                            data.len(),
+                            spec.shape
+                        );
+                    }
+                    let buf = self
+                        .client
+                        .buffer_from_host_buffer::<f32>(data, &spec.shape, None)
+                        .map_err(|e| anyhow!("{}: upload arg {i}: {e:?}", self.name))?;
+                    bufs.push(buf);
+                    owned_slots.push(Some(bufs.len() - 1));
+                }
+                Arg::Scalar(v) => {
+                    if !spec.shape.is_empty() {
+                        bail!("{}: arg {i} is not scalar in the artifact", self.name);
+                    }
+                    let buf = self
+                        .client
+                        .buffer_from_host_buffer::<f32>(std::slice::from_ref(v), &[], None)
+                        .map_err(|e| anyhow!("{}: upload scalar {i}: {e:?}", self.name))?;
+                    bufs.push(buf);
+                    owned_slots.push(Some(bufs.len() - 1));
+                }
+                Arg::Staged(s) => {
+                    if s.len != spec.elements() {
+                        bail!(
+                            "{}: staged arg {i} has {} elements, artifact expects {:?}",
+                            self.name,
+                            s.len,
+                            spec.shape
+                        );
+                    }
+                    owned_slots.push(None);
+                }
+            }
+        }
+        // Second pass: build the borrowed, ordered argument list.
+        let mut ordered: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (arg, slot) in args.iter().zip(&owned_slots) {
+            match (arg, slot) {
+                (Arg::Staged(s), None) => ordered.push(&s.buf),
+                (_, Some(ix)) => ordered.push(&bufs[*ix]),
+                _ => unreachable!(),
+            }
+        }
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&ordered)
+            .map_err(|e| anyhow!("{}: execute: {e:?}", self.name))?;
+        // AOT lowers with return_tuple=True: one tuple buffer out.
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: download: {e:?}", self.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: untuple: {e:?}", self.name))?;
+        if parts.len() != self.n_outputs {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.n_outputs,
+                parts.len()
+            );
+        }
+        let mut result = Vec::with_capacity(parts.len());
+        for (p, ospec) in parts.into_iter().zip(&self.spec.outputs) {
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("{}: output to_vec: {e:?}", self.name))?;
+            if v.len() != ospec.elements() {
+                bail!(
+                    "{}: output has {} elements, manifest says {:?}",
+                    self.name,
+                    v.len(),
+                    ospec.shape
+                );
+            }
+            result.push(v);
+        }
+        Ok(result)
+    }
+
+    /// Upload a tensor once; reuse across calls via [`Arg::Staged`].
+    pub fn stage(&self, data: &[f32], shape: &[usize]) -> Result<Staged> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("stage: {} elements vs shape {:?}", data.len(), shape);
+        }
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(data, shape, None)
+            .map_err(|e| anyhow!("stage: {e:?}"))?;
+        Ok(Staged { buf, len: data.len() })
+    }
+}
+
+/// Lazily-compiling registry over the AOT manifest.
+pub struct ArtifactRegistry {
+    pub root: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Oracle>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open `root/manifest.json` and create the CPU PJRT client.
+    pub fn open(root: &Path) -> Result<ArtifactRegistry> {
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ArtifactRegistry {
+            root: root.to_path_buf(),
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default repo location (env `C2DFB_ARTIFACTS` overrides).
+    pub fn open_default() -> Result<ArtifactRegistry> {
+        Self::open(&super::default_root())
+    }
+
+    /// Load (compile-once) an oracle by manifest key, e.g. "coeff.inner_y".
+    pub fn load(&self, key: &str) -> Result<Rc<Oracle>> {
+        if let Some(o) = self.cache.borrow().get(key) {
+            return Ok(o.clone());
+        }
+        let spec = self
+            .manifest
+            .entries
+            .get(key)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact {key:?} not in manifest ({} entries)",
+                    self.manifest.entries.len()
+                )
+            })?
+            .clone();
+        let path = self.root.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("{key}: parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("{key}: XLA compile: {e:?}"))?;
+        let oracle = Rc::new(Oracle {
+            name: key.to_string(),
+            n_outputs: spec.outputs.len(),
+            spec,
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache.borrow_mut().insert(key.to_string(), oracle.clone());
+        Ok(oracle)
+    }
+
+    /// Preset metadata (dims) recorded by the AOT pipeline.
+    pub fn preset_dim(&self, preset: &str, dim: &str) -> Result<usize> {
+        self.manifest
+            .preset_dims
+            .get(preset)
+            .and_then(|d| d.get(dim))
+            .copied()
+            .ok_or_else(|| anyhow!("preset {preset:?} has no dim {dim:?}"))
+    }
+
+    pub fn has_preset(&self, preset: &str) -> bool {
+        self.manifest.preset_dims.contains_key(preset)
+    }
+}

@@ -1,0 +1,96 @@
+//! Offline stand-in for the PJRT backend (default build, no `pjrt`
+//! feature).  The manifest is still parsed — artifact listing, shape
+//! queries and `preset_dim` work — but executing an oracle reports that
+//! the backend is unavailable.  Everything that doesn't need artifacts
+//! (the analytic tasks, the sim engine, `c2dfb netsweep`) runs unchanged.
+
+use super::manifest::{EntrySpec, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+const NO_PJRT: &str = "built without the `pjrt` feature — PJRT-backed oracles are unavailable \
+(rebuild with `cargo build --features pjrt`); analytic tasks and `c2dfb netsweep` work without it";
+
+/// A staged (device-resident) input buffer.  Never constructed in the stub.
+pub struct Staged {
+    pub len: usize,
+}
+
+/// One argument to an oracle call.
+pub enum Arg<'a> {
+    /// Host data, uploaded at call time.
+    Host(&'a [f32]),
+    /// Scalar (f32[] in the artifact signature).
+    Scalar(f32),
+    /// Pre-staged device buffer (zero upload on the hot path).
+    Staged(&'a Staged),
+}
+
+/// Manifest entry without a compiled executable behind it.
+pub struct Oracle {
+    pub name: String,
+    pub spec: EntrySpec,
+}
+
+impl Oracle {
+    pub fn call(&self, _args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        bail!("{}: {NO_PJRT}", self.name)
+    }
+
+    pub fn stage(&self, _data: &[f32], _shape: &[usize]) -> Result<Staged> {
+        bail!("{}: {NO_PJRT}", self.name)
+    }
+}
+
+/// Manifest-only registry: `open`/`preset_dim`/`has_preset` work, `load`
+/// fails with a clear message.
+pub struct ArtifactRegistry {
+    pub root: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactRegistry {
+    pub fn open(root: &Path) -> Result<ArtifactRegistry> {
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        Ok(ArtifactRegistry { root: root.to_path_buf(), manifest })
+    }
+
+    /// Default repo location (env `C2DFB_ARTIFACTS` overrides).
+    pub fn open_default() -> Result<ArtifactRegistry> {
+        Self::open(&super::default_root())
+    }
+
+    /// Look the key up (so unknown artifacts still error precisely), then
+    /// report the missing backend.
+    pub fn load(&self, key: &str) -> Result<Rc<Oracle>> {
+        if !self.manifest.entries.contains_key(key) {
+            bail!(
+                "artifact {key:?} not in manifest ({} entries)",
+                self.manifest.entries.len()
+            );
+        }
+        bail!("artifact {key:?}: {NO_PJRT}")
+    }
+
+    /// Preset metadata (dims) recorded by the AOT pipeline.
+    pub fn preset_dim(&self, preset: &str, dim: &str) -> Result<usize> {
+        self.manifest
+            .preset_dims
+            .get(preset)
+            .and_then(|d| d.get(dim))
+            .copied()
+            .ok_or_else(|| anyhow!("preset {preset:?} has no dim {dim:?}"))
+    }
+
+    pub fn has_preset(&self, preset: &str) -> bool {
+        self.manifest.preset_dims.contains_key(preset)
+    }
+}

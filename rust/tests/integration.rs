@@ -1,5 +1,9 @@
 //! Integration tests over the REAL stack: AOT artifacts → PJRT runtime →
-//! tasks → algorithms.  Requires `make artifacts` (the tiny presets).
+//! tasks → algorithms.  Requires `make artifacts` (the tiny presets) and
+//! a `--features pjrt` build; the default offline build compiles this
+//! file to nothing.
+
+#![cfg(feature = "pjrt")]
 
 use c2dfb::config::{Algorithm, ExperimentConfig};
 use c2dfb::coordinator::{build_task, run_with_registry};
