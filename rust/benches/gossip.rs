@@ -1,0 +1,84 @@
+//! Hot-gossip-path benchmark: the Arc-shared inbox + allocation-free
+//! `mix_paid` against the old clone-per-neighbour delivery.
+//!
+//! ```bash
+//! cargo bench --bench gossip
+//! ```
+//!
+//! `naive_*` re-implements the pre-refactor behaviour (every payload
+//! cloned once per edge) so the saving is measured, not asserted.
+
+use c2dfb::collective::{Network, Transport};
+use c2dfb::compress::{Compressor, TopK};
+use c2dfb::topology::{Graph, Topology};
+use c2dfb::util::bench::{black_box, Bencher};
+use c2dfb::util::rng::Rng;
+
+/// Pre-refactor delivery: one full clone of the payload per edge.
+fn naive_exchange_dense(net: &Network, vecs: &[Vec<f32>]) -> Vec<Vec<(usize, Vec<f32>)>> {
+    let mut inbox: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); vecs.len()];
+    for (sender, v) in vecs.iter().enumerate() {
+        for &nb in net.graph.neighbors(sender) {
+            inbox[nb].push((sender, v.clone()));
+        }
+    }
+    inbox
+}
+
+/// Pre-refactor mix: materialize the cloned inbox, then fold it.
+fn naive_mix_paid(net: &Network, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let inbox = naive_exchange_dense(net, rows);
+    let mut out = rows.to_vec();
+    for (i, msgs) in inbox.into_iter().enumerate() {
+        for (sender, v) in msgs {
+            let w = (gamma * net.mixing.weight(i, sender)) as f32;
+            for k in 0..v.len() {
+                out[i][k] += w * (v[k] - rows[i][k]);
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rng = Rng::new(1);
+
+    for (m, d, topo, tag) in [
+        (10, 20_000, Topology::Ring, "ring_m10_d20k"),
+        (16, 4_096, Topology::TwoHopRing, "2hop_m16_d4k"),
+        (10, 20_000, Topology::Complete, "complete_m10_d20k"),
+    ] {
+        let mut net = Network::new(Graph::build(topo, m));
+        let rows: Vec<Vec<f32>> = (0..m)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+
+        b.bench(&format!("gossip/naive_mix_paid/{tag}"), || {
+            black_box(naive_mix_paid(&net, 0.5, &rows))
+        });
+        b.bench(&format!("gossip/mix_paid/{tag}"), || {
+            black_box(net.mix_paid(0.5, &rows))
+        });
+        b.bench(&format!("gossip/naive_exchange_dense/{tag}"), || {
+            black_box(naive_exchange_dense(&net, &rows))
+        });
+        b.bench(&format!("gossip/exchange_dense_arc/{tag}"), || {
+            black_box(net.exchange_dense(&rows))
+        });
+
+        // Compressed exchange (inner-loop shape): payload sharing matters
+        // less (messages are small) but must not regress.
+        let q = TopK::new(0.2);
+        let msgs: Vec<_> = rows.iter().map(|v| q.compress(v, &mut rng)).collect();
+        b.bench(&format!("gossip/exchange_compressed/{tag}"), || {
+            black_box(Transport::exchange(&mut net, msgs.clone()))
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,74 @@
+//! Wall-clock comparison: synchronous serial loop vs the `sim::NodePool`
+//! parallel per-node executor, on the analytic quadratic task at 8 and 16
+//! nodes.  Writes the measurements to `BENCH_sim.json` at the repo root
+//! (or `$C2DFB_BENCH_OUT`).
+//!
+//! ```bash
+//! cargo bench --bench sim_parallel
+//! ```
+
+use c2dfb::config::{Algorithm, ExperimentConfig};
+use c2dfb::coordinator::{run_with_task, run_with_task_shared};
+use c2dfb::tasks::QuadraticTask;
+use c2dfb::util::bench::{black_box, Bencher};
+use c2dfb::util::json::Json;
+
+fn cfg(nodes: usize, threads: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        algorithm: Algorithm::C2dfb,
+        nodes,
+        rounds: 6,
+        inner_steps: 10,
+        eta_out: 0.3,
+        eta_in: 0.4,
+        gamma_out: 0.8,
+        gamma_in: 0.6,
+        lambda: 50.0,
+        compressor: "topk:0.2".into(),
+        eval_every: 6,
+        ..ExperimentConfig::default()
+    };
+    cfg.network.threads = threads;
+    cfg
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+    // Dimension large enough that oracle math (O(m·d) per batch) dominates
+    // the pool's fan-out overhead.
+    let dim = 65_536;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    let mut entries: Vec<(String, Json)> = vec![
+        ("task".into(), Json::str("quadratic")),
+        ("dim".into(), Json::num(dim as f64)),
+        ("rounds".into(), Json::num(6.0)),
+        ("inner_steps".into(), Json::num(10.0)),
+        ("threads".into(), Json::num(threads as f64)),
+    ];
+
+    for nodes in [8usize, 16] {
+        let task = QuadraticTask::generate(nodes, dim, 0.8, 7);
+
+        let serial = b.bench(&format!("sim/serial/m{nodes}"), || {
+            black_box(run_with_task(&task, &cfg(nodes, 1)).unwrap())
+        });
+        let parallel = b.bench(&format!("sim/parallel/m{nodes}/t{threads}"), || {
+            black_box(run_with_task_shared(&task, &cfg(nodes, threads)).unwrap())
+        });
+
+        if let (Some(s), Some(p)) = (serial, parallel) {
+            let (s, p) = (s.as_secs_f64(), p.as_secs_f64());
+            println!("      └─ m={nodes}: serial {s:.3}s, parallel {p:.3}s, speedup {:.2}×", s / p);
+            entries.push((format!("serial_s_m{nodes}"), Json::num(s)));
+            entries.push((format!("parallel_s_m{nodes}"), Json::num(p)));
+            entries.push((format!("speedup_m{nodes}"), Json::num(s / p)));
+        }
+    }
+
+    let pairs: Vec<(&str, Json)> = entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let out = std::env::var("C2DFB_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".into());
+    std::fs::write(&out, Json::obj(pairs).to_string()).expect("write BENCH_sim.json");
+    println!("\nwrote {out}");
+    b.finish();
+}

@@ -15,13 +15,86 @@
 //! With `naive = true` the inner loops use the error-feedback
 //! naive-compression protocol instead of reference points — the paper's
 //! C²DFB(nc) ablation (same message sizes, worse error dynamics).
+//!
+//! All communication goes through the generic [`Transport`], and the
+//! per-node oracle batches run through [`GradFn`]/[`RunContext::par_nodes`]
+//! so they can fan out over the thread pool for `Sync` tasks.
 
 use super::RunContext;
-use crate::compress;
-use crate::optim::{run_inner, run_inner_naive, DenseTracker, InnerConfig, InnerState};
+use crate::collective::Transport;
+use crate::compress::{self, Compressor};
+use crate::optim::{
+    run_inner_naive_with, run_inner_with, DenseTracker, GradFn, InnerConfig, InnerState,
+};
+use crate::sim::NodePool;
+use crate::tasks::BilevelTask;
+use crate::util::rng::Rng;
 use anyhow::Result;
 
-pub fn run(ctx: &mut RunContext, naive: bool) -> Result<()> {
+/// Which lower-level oracle an `IN` call descends on.
+#[derive(Clone, Copy)]
+enum InnerOracle {
+    /// ∇_y h with h = f + λg (the y-sequence).
+    Y { lambda: f32 },
+    /// ∇_y g (the z-sequence).
+    Z,
+}
+
+impl InnerOracle {
+    fn eval(&self, task: &dyn BilevelTask, i: usize, xs: &[Vec<f32>], d: &[f32]) -> Vec<f32> {
+        match self {
+            InnerOracle::Y { lambda } => task
+                .inner_y_grad(i, &xs[i], d, *lambda)
+                .expect("inner_y oracle failed"),
+            InnerOracle::Z => task
+                .inner_z_grad(i, &xs[i], d)
+                .expect("inner_z oracle failed"),
+        }
+    }
+}
+
+/// One warm-started `IN` call (Algorithm 2): pick the protocol (reference
+/// points vs naive error feedback) and the oracle execution mode (serial,
+/// or fanned out over the pool when a `Sync` task view exists).  Returns
+/// oracle calls made.
+#[allow(clippy::too_many_arguments)]
+fn inner_pass<T: Transport>(
+    naive: bool,
+    cfg: &InnerConfig,
+    net: &mut T,
+    compressor: &dyn Compressor,
+    rng: &mut Rng,
+    state: &mut InnerState,
+    d: &mut [Vec<f32>],
+    xs: &[Vec<f32>],
+    oracle: InnerOracle,
+    task: &dyn BilevelTask,
+    shared: Option<&(dyn BilevelTask + Sync)>,
+    pool: &NodePool,
+) -> u64 {
+    match shared {
+        Some(ts) => {
+            let g = |i: usize, di: &[f32]| oracle.eval(ts, i, xs, di);
+            let grad = GradFn::Parallel(&g, pool);
+            if naive {
+                run_inner_naive_with(cfg, net, compressor, rng, state, d, grad)
+            } else {
+                run_inner_with(cfg, net, compressor, rng, state, d, grad)
+            }
+        }
+        None => {
+            let mut g = |i: usize, di: &[f32]| oracle.eval(task, i, xs, di);
+            let grad = GradFn::Serial(&mut g);
+            if naive {
+                run_inner_naive_with(cfg, net, compressor, rng, state, d, grad)
+            } else {
+                run_inner_with(cfg, net, compressor, rng, state, d, grad)
+            }
+        }
+    }
+}
+
+pub fn run<T: Transport>(ctx: &mut RunContext<T>, naive: bool) -> Result<()> {
     let m = ctx.task.nodes();
     let lambda = ctx.cfg.lambda as f32;
     let compressor = compress::parse(&ctx.cfg.compressor)
@@ -36,6 +109,7 @@ pub fn run(ctx: &mut RunContext, naive: bool) -> Result<()> {
         gamma: ctx.cfg.gamma_in,
         k_steps: ctx.cfg.inner_steps,
     };
+    let pool = ctx.pool;
 
     // --- init: identical models on every node (paper setup) -------------
     let x0 = ctx.task.init_x(&mut ctx.rng);
@@ -47,9 +121,8 @@ pub fn run(ctx: &mut RunContext, naive: bool) -> Result<()> {
     let mut z_state = InnerState::new(&ctx.net, ctx.task.dy());
 
     // s_x⁰ = u_i⁰ with the initial (y, z).
-    let mut u: Vec<Vec<f32>> = (0..m)
-        .map(|i| ctx.task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))
-        .collect::<Result<_>>()?;
+    let mut u: Vec<Vec<f32>> =
+        ctx.par_nodes(|task, i| task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))?;
     ctx.metrics.oracles.first_order += m as u64;
     let mut tracker = DenseTracker::new(u.clone());
 
@@ -67,73 +140,31 @@ pub fn run(ctx: &mut RunContext, naive: bool) -> Result<()> {
         }
 
         // -- 2. inner loops (compressed) ----------------------------------
-        {
-            let task = ctx.task;
-            let metrics = &mut ctx.metrics;
-            let xs_ref = &xs;
-            let grad_y = |i: usize, yi: &[f32]| {
-                metrics.oracles.first_order += 1;
-                task.inner_y_grad(i, &xs_ref[i], yi, lambda)
-                    .expect("inner_y oracle failed")
-            };
-            if naive {
-                run_inner_naive(
-                    &inner_cfg,
-                    &mut ctx.net,
-                    compressor.as_ref(),
-                    &mut ctx.rng,
-                    &mut y_state,
-                    &mut ys,
-                    grad_y,
-                );
-            } else {
-                run_inner(
-                    &inner_cfg,
-                    &mut ctx.net,
-                    compressor.as_ref(),
-                    &mut ctx.rng,
-                    &mut y_state,
-                    &mut ys,
-                    grad_y,
-                );
-            }
-        }
-        {
-            let task = ctx.task;
-            let metrics = &mut ctx.metrics;
-            let xs_ref = &xs;
-            let grad_z = |i: usize, zi: &[f32]| {
-                metrics.oracles.first_order += 1;
-                task.inner_z_grad(i, &xs_ref[i], zi)
-                    .expect("inner_z oracle failed")
-            };
-            if naive {
-                run_inner_naive(
-                    &inner_cfg_z,
-                    &mut ctx.net,
-                    compressor.as_ref(),
-                    &mut ctx.rng,
-                    &mut z_state,
-                    &mut zs,
-                    grad_z,
-                );
-            } else {
-                run_inner(
-                    &inner_cfg_z,
-                    &mut ctx.net,
-                    compressor.as_ref(),
-                    &mut ctx.rng,
-                    &mut z_state,
-                    &mut zs,
-                    grad_z,
-                );
-            }
+        let shared = ctx.task_shared().filter(|_| pool.threads() > 1);
+        for (cfg, state, d, oracle) in [
+            (&inner_cfg, &mut y_state, &mut ys, InnerOracle::Y { lambda }),
+            (&inner_cfg_z, &mut z_state, &mut zs, InnerOracle::Z),
+        ] {
+            let calls = inner_pass(
+                naive,
+                cfg,
+                &mut ctx.net,
+                compressor.as_ref(),
+                &mut ctx.rng,
+                state,
+                d,
+                &xs,
+                oracle,
+                ctx.task,
+                shared,
+                &pool,
+            );
+            ctx.metrics.oracles.first_order += calls;
         }
 
         // -- 3. local hypergradients --------------------------------------
-        let u_new: Vec<Vec<f32>> = (0..m)
-            .map(|i| ctx.task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))
-            .collect::<Result<_>>()?;
+        let u_new: Vec<Vec<f32>> =
+            ctx.par_nodes(|task, i| task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))?;
         ctx.metrics.oracles.first_order += m as u64;
 
         // -- 4. gradient tracking on s_x (pays one dense s exchange) -----
@@ -233,5 +264,27 @@ mod tests {
         let mut ctx = RunContext::new(&task, net, cfg);
         run(&mut ctx, false).unwrap();
         assert!(ctx.metrics.trace.len() <= 3);
+    }
+
+    /// The shared-task parallel path is bit-identical to the serial path
+    /// and counts the same oracle calls.
+    #[test]
+    fn parallel_pool_matches_serial_run() {
+        let task = QuadraticTask::generate(6, 8, 1.0, 23);
+        let run_with_threads = |threads: usize| {
+            let mut cfg = quad_cfg(30);
+            cfg.network.threads = threads;
+            let net = Network::new(Graph::build(Topology::Ring, 6));
+            let mut ctx = RunContext::new_shared(&task, net, cfg);
+            run(&mut ctx, false).unwrap();
+            ctx.metrics
+        };
+        let serial = run_with_threads(1);
+        let par = run_with_threads(4);
+        assert_eq!(serial.oracles.first_order, par.oracles.first_order);
+        assert_eq!(serial.ledger.total_bytes, par.ledger.total_bytes);
+        let a: Vec<u64> = serial.trace.iter().map(|p| p.loss.to_bits()).collect();
+        let b: Vec<u64> = par.trace.iter().map(|p| p.loss.to_bits()).collect();
+        assert_eq!(a, b, "loss trace must not depend on thread count");
     }
 }

@@ -19,6 +19,7 @@
 //! therefore suffers the full heterogeneity bias — see `mdbo.rs`.)
 
 use super::RunContext;
+use crate::collective::Transport;
 use crate::optim::DenseTracker;
 use anyhow::Result;
 
@@ -27,7 +28,7 @@ const THETA: f32 = 0.3;
 /// Quadratic sub-solver iterations per round.
 pub(crate) const SUBSOLVER_STEPS: usize = 10;
 
-pub fn run(ctx: &mut RunContext) -> Result<()> {
+pub fn run<T: Transport>(ctx: &mut RunContext<T>) -> Result<()> {
     let m = ctx.task.nodes();
     let dy = ctx.task.dy();
     let eta_in = ctx.cfg.eta_in as f32;
@@ -45,9 +46,7 @@ pub fn run(ctx: &mut RunContext) -> Result<()> {
 
     // Lower-level gradient tracker (persists across rounds; MA-DSBO warm-
     // starts both y and its tracker).
-    let g0: Vec<Vec<f32>> = (0..m)
-        .map(|i| ctx.task.inner_z_grad(i, &xs[i], &ys[i]))
-        .collect::<Result<_>>()?;
+    let g0: Vec<Vec<f32>> = ctx.par_nodes(|task, i| task.inner_z_grad(i, &xs[i], &ys[i]))?;
     ctx.metrics.oracles.first_order += m as u64;
     let mut y_tracker = DenseTracker::new(g0);
 
@@ -62,26 +61,25 @@ pub fn run(ctx: &mut RunContext) -> Result<()> {
                     .map(|(y, sk)| y - eta_in * sk)
                     .collect();
             }
-            let g: Vec<Vec<f32>> = (0..m)
-                .map(|i| ctx.task.inner_z_grad(i, &xs[i], &ys[i]))
-                .collect::<Result<_>>()?;
+            let g: Vec<Vec<f32>> =
+                ctx.par_nodes(|task, i| task.inner_z_grad(i, &xs[i], &ys[i]))?;
             ctx.metrics.oracles.first_order += m as u64;
             y_tracker.update(&mut ctx.net, gamma, &g);
         }
 
         // -- 2. tracked quadratic sub-solver for v ≈ H⁻¹ ∇_y f -------------
-        let gyf: Vec<Vec<f32>> = (0..m)
-            .map(|i| ctx.task.grad_y_f(i, &xs[i], &ys[i]))
-            .collect::<Result<_>>()?;
+        let gyf: Vec<Vec<f32>> = ctx.par_nodes(|task, i| task.grad_y_f(i, &xs[i], &ys[i]))?;
         ctx.metrics.oracles.first_order += m as u64;
         let alpha = eta_in;
-        let q0: Vec<Vec<f32>> = (0..m)
-            .map(|i| {
-                let hv = ctx.task.hvp_yy_g(i, &xs[i], &ys[i], &vs[i])?;
-                ctx.metrics.oracles.second_order += 1;
-                Ok(hv.iter().zip(&gyf[i]).map(|(h, g)| h - g).collect())
-            })
-            .collect::<Result<_>>()?;
+        let q0: Vec<Vec<f32>> = {
+            let hv: Vec<Vec<f32>> =
+                ctx.par_nodes(|task, i| task.hvp_yy_g(i, &xs[i], &ys[i], &vs[i]))?;
+            ctx.metrics.oracles.second_order += m as u64;
+            hv.into_iter()
+                .zip(&gyf)
+                .map(|(h, g)| h.iter().zip(g).map(|(hk, gk)| hk - gk).collect())
+                .collect()
+        };
         let mut v_tracker = DenseTracker::new(q0);
         for _n in 0..SUBSOLVER_STEPS {
             let mixed = ctx.net.mix_paid(gamma, &vs);
@@ -92,22 +90,27 @@ pub fn run(ctx: &mut RunContext) -> Result<()> {
                     .map(|(v, q)| v - alpha * q)
                     .collect();
             }
-            let q: Vec<Vec<f32>> = (0..m)
-                .map(|i| {
-                    let hv = ctx.task.hvp_yy_g(i, &xs[i], &ys[i], &vs[i])?;
-                    ctx.metrics.oracles.second_order += 1;
-                    Ok(hv.iter().zip(&gyf[i]).map(|(h, g)| h - g).collect())
-                })
-                .collect::<Result<_>>()?;
+            let q: Vec<Vec<f32>> = {
+                let hv: Vec<Vec<f32>> =
+                    ctx.par_nodes(|task, i| task.hvp_yy_g(i, &xs[i], &ys[i], &vs[i]))?;
+                ctx.metrics.oracles.second_order += m as u64;
+                hv.into_iter()
+                    .zip(&gyf)
+                    .map(|(h, g)| h.iter().zip(g).map(|(hk, gk)| hk - gk).collect())
+                    .collect()
+            };
             v_tracker.update(&mut ctx.net, gamma, &q);
         }
 
         // -- 3. hypergradient + moving average ----------------------------
-        for i in 0..m {
-            let gxf = ctx.task.grad_x_f(i, &xs[i], &ys[i])?;
-            let jv = ctx.task.jvp_xy_g(i, &xs[i], &ys[i], &vs[i])?;
-            ctx.metrics.oracles.first_order += 1;
-            ctx.metrics.oracles.second_order += 1;
+        let hyper: Vec<(Vec<f32>, Vec<f32>)> = ctx.par_nodes(|task, i| {
+            let gxf = task.grad_x_f(i, &xs[i], &ys[i])?;
+            let jv = task.jvp_xy_g(i, &xs[i], &ys[i], &vs[i])?;
+            Ok((gxf, jv))
+        })?;
+        ctx.metrics.oracles.first_order += m as u64;
+        ctx.metrics.oracles.second_order += m as u64;
+        for (i, (gxf, jv)) in hyper.into_iter().enumerate() {
             for k in 0..us[i].len() {
                 let h = gxf[k] - jv[k];
                 us[i][k] = (1.0 - THETA) * us[i][k] + THETA * h;

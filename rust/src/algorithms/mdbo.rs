@@ -14,13 +14,14 @@
 //! 4. upper gossip step x_i ← mix(x)_i − η_out h_i (dense x exchange).
 
 use super::RunContext;
+use crate::collective::Transport;
 use anyhow::Result;
 
 /// Neumann-series length (Q).  The published algorithm takes Q ≈ κ log(·);
 /// 15 matches the paper's experimental scale.
 const NEUMANN_TERMS: usize = 15;
 
-pub fn run(ctx: &mut RunContext) -> Result<()> {
+pub fn run<T: Transport>(ctx: &mut RunContext<T>) -> Result<()> {
     let m = ctx.task.nodes();
     let eta_in = ctx.cfg.eta_in as f32;
     let eta_out = ctx.cfg.eta_out as f32;
@@ -37,44 +38,43 @@ pub fn run(ctx: &mut RunContext) -> Result<()> {
         // -- 1. lower-level gossip GD --------------------------------------
         for _k in 0..ctx.cfg.inner_steps {
             let mixed = ctx.net.mix_paid(gamma, &ys);
+            let g: Vec<Vec<f32>> =
+                ctx.par_nodes(|task, i| task.inner_z_grad(i, &xs[i], &mixed[i]))?;
+            ctx.metrics.oracles.first_order += m as u64;
             for i in 0..m {
-                let g = ctx.task.inner_z_grad(i, &xs[i], &mixed[i])?;
-                ctx.metrics.oracles.first_order += 1;
                 ys[i] = mixed[i]
                     .iter()
-                    .zip(&g)
+                    .zip(&g[i])
                     .map(|(y, gk)| y - eta_in * gk)
                     .collect();
             }
         }
 
         // -- 2. Neumann series with per-term gossip ------------------------
-        let mut ps: Vec<Vec<f32>> = (0..m)
-            .map(|i| ctx.task.grad_y_f(i, &xs[i], &ys[i]))
-            .collect::<Result<_>>()?;
+        let mut ps: Vec<Vec<f32>> = ctx.par_nodes(|task, i| task.grad_y_f(i, &xs[i], &ys[i]))?;
         ctx.metrics.oracles.first_order += m as u64;
         let mut vs: Vec<Vec<f32>> = ps.iter().map(|p| p.iter().map(|x| eta_in * x).collect()).collect();
         for _q in 0..NEUMANN_TERMS {
             ps = ctx.net.mix_paid(gamma, &ps);
+            let hp: Vec<Vec<f32>> =
+                ctx.par_nodes(|task, i| task.hvp_yy_g(i, &xs[i], &ys[i], &ps[i]))?;
+            ctx.metrics.oracles.second_order += m as u64;
             for i in 0..m {
-                let hp = ctx.task.hvp_yy_g(i, &xs[i], &ys[i], &ps[i])?;
-                ctx.metrics.oracles.second_order += 1;
                 for k in 0..ps[i].len() {
-                    ps[i][k] -= eta_in * hp[k];
+                    ps[i][k] -= eta_in * hp[i][k];
                     vs[i][k] += eta_in * ps[i][k];
                 }
             }
         }
 
         // -- 3. hypergradient ----------------------------------------------
-        let mut hs: Vec<Vec<f32>> = Vec::with_capacity(m);
-        for i in 0..m {
-            let gxf = ctx.task.grad_x_f(i, &xs[i], &ys[i])?;
-            let jv = ctx.task.jvp_xy_g(i, &xs[i], &ys[i], &vs[i])?;
-            ctx.metrics.oracles.first_order += 1;
-            ctx.metrics.oracles.second_order += 1;
-            hs.push(gxf.iter().zip(&jv).map(|(a, b)| a - b).collect());
-        }
+        let hs: Vec<Vec<f32>> = ctx.par_nodes(|task, i| {
+            let gxf = task.grad_x_f(i, &xs[i], &ys[i])?;
+            let jv = task.jvp_xy_g(i, &xs[i], &ys[i], &vs[i])?;
+            Ok(gxf.iter().zip(&jv).map(|(a, b)| a - b).collect::<Vec<f32>>())
+        })?;
+        ctx.metrics.oracles.first_order += m as u64;
+        ctx.metrics.oracles.second_order += m as u64;
 
         // -- 4. upper gossip step ------------------------------------------
         let mixed_x = ctx.net.mix_paid(gamma, &xs);

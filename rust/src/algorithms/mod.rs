@@ -9,36 +9,84 @@
 //!   approximation (Yang, Zhang & Wang 2022).
 //!
 //! All algorithms consume the same [`crate::tasks::BilevelTask`] oracle
-//! bundle and pay communication through the same [`crate::collective`]
-//! network, so comm-volume and oracle-count comparisons are apples to
-//! apples (this is how the Table 1 / Fig. 2–4 harnesses work).
+//! bundle and pay communication through the same
+//! [`Transport`](crate::collective::Transport), so comm-volume and
+//! oracle-count comparisons are apples to apples (this is how the Table 1
+//! / Fig. 2–4 harnesses work) — and each runs unmodified on either the
+//! synchronous [`Network`](crate::collective::Network) or the
+//! event-driven [`SimNetwork`](crate::sim::SimNetwork).
+//!
+//! Per-node oracle batches go through [`RunContext::par_nodes`]: when the
+//! task is `Sync` (the analytic tasks) and `network.threads > 1`, nodes
+//! evaluate concurrently on a [`NodePool`] with node-ordered results, so
+//! trajectories are bit-identical to the serial path.
 
 pub mod c2dfb;
 pub mod madsbo;
 pub mod mdbo;
 
-use crate::collective::Network;
+use crate::collective::Transport;
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::metrics::RunMetrics;
+use crate::sim::NodePool;
 use crate::tasks::BilevelTask;
 use crate::util::rng::Rng;
 use anyhow::Result;
 
 /// Shared driver state handed to each algorithm.
-pub struct RunContext<'a> {
+pub struct RunContext<'a, T: Transport> {
     pub task: &'a dyn BilevelTask,
-    pub net: Network,
+    /// Set when the task may be shared across threads (analytic tasks);
+    /// enables the parallel per-node executor.
+    task_sync: Option<&'a (dyn BilevelTask + Sync)>,
+    pub net: T,
     pub cfg: ExperimentConfig,
     pub rng: Rng,
     pub metrics: RunMetrics,
+    pub pool: NodePool,
 }
 
-impl<'a> RunContext<'a> {
-    pub fn new(task: &'a dyn BilevelTask, net: Network, cfg: ExperimentConfig) -> Self {
+impl<'a, T: Transport> RunContext<'a, T> {
+    pub fn new(task: &'a dyn BilevelTask, net: T, cfg: ExperimentConfig) -> Self {
         let label = format!("{}_{}", cfg.name, cfg.label());
         let metrics = RunMetrics::new(cfg.algorithm.name(), &label);
         let rng = Rng::new(cfg.seed ^ 0xA1607);
-        RunContext { task, net, cfg, rng, metrics }
+        let pool = NodePool::new(cfg.network.threads);
+        RunContext { task, task_sync: None, net, cfg, rng, metrics, pool }
+    }
+
+    /// Like [`RunContext::new`] for thread-shareable tasks: per-node
+    /// oracle batches may then run on the pool.
+    pub fn new_shared(task: &'a (dyn BilevelTask + Sync), net: T, cfg: ExperimentConfig) -> Self {
+        let mut ctx = RunContext::new(task, net, cfg);
+        ctx.task_sync = Some(task);
+        ctx
+    }
+
+    /// The `Sync` view of the task, when available.
+    pub fn task_shared(&self) -> Option<&'a (dyn BilevelTask + Sync)> {
+        self.task_sync
+    }
+
+    /// Evaluate a pure per-node oracle batch `f(task, i)` for every node —
+    /// on the thread pool when the task is shareable and the pool is
+    /// wider than one thread, serially otherwise.  Results come back in
+    /// node order either way, so downstream reductions are identical.
+    pub fn par_nodes<R, F>(&self, f: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(&dyn BilevelTask, usize) -> Result<R> + Sync,
+    {
+        let m = self.task.nodes();
+        match self.task_sync {
+            // NB: `ts` (the `+ Sync` view) must be what the closure
+            // captures — coercing to `&dyn BilevelTask` before the closure
+            // would make the capture non-Sync.
+            Some(ts) if self.pool.threads() > 1 => {
+                self.pool.map(m, |i| f(ts, i)).into_iter().collect()
+            }
+            _ => (0..m).map(|i| f(self.task, i)).collect(),
+        }
     }
 
     /// Evaluate mean loss/acc over nodes and record a trace point.  Returns
@@ -52,7 +100,7 @@ impl<'a> RunContext<'a> {
     ) -> Result<bool> {
         // The network owns the live byte counters; mirror them into the
         // run metrics so trace points and summaries see current totals.
-        self.metrics.ledger = self.net.ledger.clone();
+        self.metrics.ledger = self.net.ledger().clone();
         // Consensus-model evaluation (paper protocol): test the averaged
         // (x̄, ȳ) on every node's validation shard.
         let (loss, acc) = crate::tasks::eval_consensus(self.task, xs, ys)?;
@@ -67,15 +115,31 @@ impl<'a> RunContext<'a> {
     }
 }
 
-/// Entry point: dispatch on the configured algorithm and run to completion.
-pub fn run(task: &dyn BilevelTask, net: Network, cfg: ExperimentConfig) -> Result<RunMetrics> {
-    let mut ctx = RunContext::new(task, net, cfg);
+fn dispatch<T: Transport>(mut ctx: RunContext<T>) -> Result<RunMetrics> {
     match ctx.cfg.algorithm {
         Algorithm::C2dfb => c2dfb::run(&mut ctx, false)?,
         Algorithm::C2dfbNc => c2dfb::run(&mut ctx, true)?,
         Algorithm::Madsbo => madsbo::run(&mut ctx)?,
         Algorithm::Mdbo => mdbo::run(&mut ctx)?,
     }
-    ctx.metrics.ledger = ctx.net.ledger.clone();
+    ctx.metrics.ledger = ctx.net.ledger().clone();
     Ok(ctx.metrics)
+}
+
+/// Entry point: dispatch on the configured algorithm and run to completion.
+pub fn run<T: Transport>(
+    task: &dyn BilevelTask,
+    net: T,
+    cfg: ExperimentConfig,
+) -> Result<RunMetrics> {
+    dispatch(RunContext::new(task, net, cfg))
+}
+
+/// [`run`] for thread-shareable tasks: honours `network.threads`.
+pub fn run_shared<T: Transport>(
+    task: &(dyn BilevelTask + Sync),
+    net: T,
+    cfg: ExperimentConfig,
+) -> Result<RunMetrics> {
+    dispatch(RunContext::new_shared(task, net, cfg))
 }

@@ -1,20 +1,114 @@
-//! Simulated decentralized network: synchronous gossip exchanges over a
-//! topology, with exact per-message byte accounting and a latency/bandwidth
-//! time model.
+//! The communication layer: the [`Transport`] abstraction every algorithm
+//! gossips through, and [`Network`] — the synchronous in-process transport
+//! with exact per-message byte accounting and a latency/bandwidth time
+//! model.
 //!
-//! The simulator is deterministic and in-process (the paper's testbed is 10
-//! processes on one machine; its metrics — communication volume and
-//! time-to-accuracy — depend on *what* is sent, which we account exactly,
-//! not on real sockets).  One [`Network::exchange`] call = one
-//! communication round in the paper's plots.
+//! The synchronous simulator is deterministic and in-process (the paper's
+//! testbed is 10 processes on one machine; its metrics — communication
+//! volume and time-to-accuracy — depend on *what* is sent, which we
+//! account exactly, not on real sockets).  One [`Transport::exchange`]
+//! call = one communication round in the paper's plots.
+//!
+//! [`crate::sim::SimNetwork`] implements the same trait with a
+//! discrete-event engine (per-link latency/jitter, drops, stragglers,
+//! time-varying topologies); algorithms are generic over [`Transport`] and
+//! behave identically on either when the network is benign.
+//!
+//! Inbox payloads are [`Arc`]-shared: a broadcast message is allocated
+//! once per sender and reference-counted per neighbour, so the dense
+//! gossip hot path no longer clones every vector per edge.
 
 use crate::compress::Compressed;
 use crate::metrics::{CommLedger, TimeModel};
 use crate::topology::{Graph, MixingMatrix};
+use std::sync::Arc;
 
-/// Messages delivered to each node: `(sender, payload)` pairs.
-pub type Inbox<T> = Vec<Vec<(usize, T)>>;
+/// Messages delivered to each node: `(sender, payload)` pairs, in
+/// ascending sender order.  Payloads are shared, not cloned per edge.
+pub type Inbox<T> = Vec<Vec<(usize, Arc<T>)>>;
 
+/// Exact wire size of a dense `f32` vector message (8-byte header + data).
+#[inline]
+pub fn dense_wire_bytes(len: usize) -> usize {
+    8 + 4 * len
+}
+
+/// Fan a message set out to each sender's neighbours (shared payloads).
+/// Receivers see senders in ascending order — a canonical order, so
+/// downstream float reductions are reproducible across transports.
+pub(crate) fn deliver<T>(graph: &Graph, msgs: Vec<T>) -> Inbox<T> {
+    let mut inbox: Inbox<T> = vec![Vec::new(); graph.m];
+    for (sender, msg) in msgs.into_iter().enumerate() {
+        let msg = Arc::new(msg);
+        for &nb in graph.neighbors(sender) {
+            inbox[nb].push((sender, msg.clone()));
+        }
+    }
+    inbox
+}
+
+/// What an algorithm needs from a network: gossip exchanges that pay
+/// communication, the mixing weights, and the cost ledger.
+///
+/// Implementations must deliver each message to every current neighbour
+/// of its sender (minus whatever the transport's loss model eats) and
+/// keep inboxes in ascending sender order.
+pub trait Transport {
+    /// Number of nodes.
+    fn m(&self) -> usize;
+    /// Current gossip mixing weights (may change under a topology schedule).
+    fn mixing(&self) -> &MixingMatrix;
+    /// Current communication graph.
+    fn graph(&self) -> &Graph;
+    /// Cumulative communication costs.
+    fn ledger(&self) -> &CommLedger;
+
+    /// Gossip-broadcast one compressed message per node to all its
+    /// neighbours.  Returns each node's inbox; bytes are recorded.
+    fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed>;
+
+    /// Gossip-broadcast dense vectors (uncompressed algorithms / the outer
+    /// loop).
+    fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>>;
+
+    /// Dense gossip-mix step `rows_i + γ Σ_j w_ij (rows_j − rows_i)` that
+    /// *also* pays for the communication (one dense exchange).  This is the
+    /// outer-loop mixing of Algorithm 1 and the whole communication story
+    /// of the uncompressed baselines.  The default implementation mixes
+    /// with whatever the transport actually delivered, so message loss
+    /// degrades consensus exactly as it would in a real deployment.
+    fn mix_paid(&mut self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let inbox = self.exchange_dense(rows);
+        let mut out = rows.to_vec();
+        for (i, msgs) in inbox.into_iter().enumerate() {
+            let ri = &rows[i];
+            let oi = &mut out[i];
+            for (sender, v) in msgs {
+                let w = (gamma * self.mixing().weight(i, sender)) as f32;
+                for k in 0..ri.len() {
+                    oi[k] += w * (v[k] - ri[k]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Monotone counter bumped whenever the communication graph (and so
+    /// the mixing matrix) changes — time-varying topologies.  Constant on
+    /// static transports.  Protocols that cache topology-derived state
+    /// (the reference points) watch this to know when to resync.
+    fn graph_epoch(&self) -> u64 {
+        0
+    }
+
+    /// Total virtual (modeled) network time so far, seconds.
+    fn virtual_time_s(&self) -> f64 {
+        self.ledger().network_time_s
+    }
+}
+
+/// Synchronous in-process transport: every message is delivered within the
+/// round, time is modeled per round as latency + max-node-bytes/bandwidth.
 pub struct Network {
     pub graph: Graph,
     pub mixing: MixingMatrix,
@@ -40,52 +134,62 @@ impl Network {
         self.graph.m
     }
 
-    /// Gossip-broadcast one compressed message per node to all its
-    /// neighbours.  Returns each node's inbox; bytes are recorded.
+    /// See [`Transport::exchange`].
     pub fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
         assert_eq!(msgs.len(), self.m());
         let bytes: Vec<usize> = msgs.iter().map(Compressed::wire_bytes).collect();
         self.ledger.record_round(&bytes, &self.degrees, &self.time_model);
-        let mut inbox: Inbox<Compressed> = vec![Vec::new(); self.m()];
-        for (sender, msg) in msgs.into_iter().enumerate() {
-            for &nb in self.graph.neighbors(sender) {
-                inbox[nb].push((sender, msg.clone()));
-            }
-        }
-        inbox
+        deliver(&self.graph, msgs)
     }
 
-    /// Gossip-broadcast dense vectors (uncompressed algorithms / the outer
-    /// loop).  Returns the inbox of borrowed-by-clone vectors.
+    /// See [`Transport::exchange_dense`].  One clone per sender (into the
+    /// shared payload), not one per edge.
     pub fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
         assert_eq!(vecs.len(), self.m());
-        let bytes: Vec<usize> = vecs.iter().map(|v| 8 + 4 * v.len()).collect();
+        let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes(v.len())).collect();
         self.ledger.record_round(&bytes, &self.degrees, &self.time_model);
-        let mut inbox: Inbox<Vec<f32>> = vec![Vec::new(); self.m()];
-        for (sender, v) in vecs.iter().enumerate() {
-            for &nb in self.graph.neighbors(sender) {
-                inbox[nb].push((sender, v.clone()));
-            }
-        }
-        inbox
+        deliver(&self.graph, vecs.to_vec())
     }
 
-    /// Dense gossip-mix step `rows_i + γ Σ_j w_ij (rows_j − rows_i)` that
-    /// *also* pays for the communication (one dense exchange).  This is the
-    /// outer-loop mixing of Algorithm 1 and the whole communication story
-    /// of the uncompressed baselines.
+    /// See [`Transport::mix_paid`].  The synchronous network delivers
+    /// everything, so it can skip payload materialization entirely: pay
+    /// the bytes, then mix straight over the callers' rows (zero clones
+    /// beyond the output).
     pub fn mix_paid(&mut self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        let inbox = self.exchange_dense(rows);
-        let mut out = rows.to_vec();
-        for (i, msgs) in inbox.into_iter().enumerate() {
-            for (sender, v) in msgs {
-                let w = (gamma * self.mixing.weight(i, sender)) as f32;
-                for k in 0..v.len() {
-                    out[i][k] += w * (v[k] - rows[i][k]);
-                }
-            }
-        }
-        out
+        assert_eq!(rows.len(), self.m());
+        let bytes: Vec<usize> = rows.iter().map(|v| dense_wire_bytes(v.len())).collect();
+        self.ledger.record_round(&bytes, &self.degrees, &self.time_model);
+        self.mixing.mix(gamma, rows)
+    }
+}
+
+impl Transport for Network {
+    fn m(&self) -> usize {
+        Network::m(self)
+    }
+
+    fn mixing(&self) -> &MixingMatrix {
+        &self.mixing
+    }
+
+    fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn ledger(&self) -> &CommLedger {
+        &self.ledger
+    }
+
+    fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+        Network::exchange(self, msgs)
+    }
+
+    fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+        Network::exchange_dense(self, vecs)
+    }
+
+    fn mix_paid(&mut self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        Network::mix_paid(self, gamma, rows)
     }
 }
 
@@ -113,10 +217,21 @@ mod tests {
             let senders: Vec<usize> = inbox[i].iter().map(|(s, _)| *s).collect();
             let mut expect = vec![(i + 1) % 5, (i + 4) % 5];
             expect.sort_unstable();
-            let mut got = senders.clone();
-            got.sort_unstable();
-            assert_eq!(got, expect);
+            // Inboxes arrive in ascending sender order.
+            assert_eq!(senders, expect);
         }
+    }
+
+    #[test]
+    fn inbox_payloads_are_shared_not_cloned() {
+        let mut n = net(4);
+        let rows: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 8]).collect();
+        let inbox = n.exchange_dense(&rows);
+        // Ring of 4: each message has 2 receivers sharing one allocation.
+        let (s0, v0) = &inbox[1][0];
+        assert_eq!(*s0, 0);
+        assert_eq!(Arc::strong_count(v0), 2);
+        assert_eq!(v0.as_ref(), &rows[0]);
     }
 
     #[test]
@@ -162,5 +277,45 @@ mod tests {
         let e0 = linalg::consensus_err_sq(&rows);
         let mixed = n.mix_paid(1.0, &rows);
         assert!(linalg::consensus_err_sq(&mixed) < e0);
+    }
+
+    /// The inherent fast path and the trait's inbox-based default must
+    /// agree bit-for-bit on a lossless transport (same neighbour order,
+    /// same f32 arithmetic).
+    #[test]
+    fn mix_paid_fast_path_matches_trait_default() {
+        struct DefaultOnly(Network);
+        impl Transport for DefaultOnly {
+            fn m(&self) -> usize {
+                self.0.m()
+            }
+            fn mixing(&self) -> &MixingMatrix {
+                &self.0.mixing
+            }
+            fn graph(&self) -> &Graph {
+                &self.0.graph
+            }
+            fn ledger(&self) -> &CommLedger {
+                &self.0.ledger
+            }
+            fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+                self.0.exchange(msgs)
+            }
+            fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+                self.0.exchange_dense(vecs)
+            }
+            // mix_paid: trait default (inbox-based).
+        }
+
+        let mut rng = Rng::new(3);
+        let rows: Vec<Vec<f32>> = (0..7)
+            .map(|_| (0..11).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let mut fast = net(7);
+        let mut slow = DefaultOnly(net(7));
+        let a = fast.mix_paid(0.7, &rows);
+        let b = slow.mix_paid(0.7, &rows);
+        assert_eq!(a, b);
+        assert_eq!(fast.ledger.total_bytes, slow.0.ledger.total_bytes);
     }
 }

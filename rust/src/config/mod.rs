@@ -4,6 +4,7 @@
 pub mod toml;
 
 use crate::data::partition::Partition;
+use crate::sim::{NetConfig, NetMode};
 use crate::topology::Topology;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -76,6 +77,9 @@ pub struct ExperimentConfig {
     /// globally generated pool before partitioning.
     pub data_noise: f64,
     pub out_dir: String,
+    /// The `[network]` table: transport engine, link model, fault
+    /// injection, and the per-node compute thread pool.
+    pub network: NetConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -100,6 +104,7 @@ impl Default for ExperimentConfig {
             target_accuracy: None,
             data_noise: 0.35,
             out_dir: "runs".into(),
+            network: NetConfig::default(),
         }
     }
 }
@@ -144,10 +149,17 @@ impl ExperimentConfig {
     }
 
     /// Apply flattened key→value overrides (used by both TOML and CLI).
+    /// `seed` is applied first regardless of map order: `topology` and
+    /// `network.topology_schedule` freeze a seed-dependent realization
+    /// when parsed.
     pub fn apply_map(&mut self, map: &BTreeMap<String, TomlValue>) -> Result<(), String> {
-        for (key, v) in map {
-            let k = key.strip_prefix("experiment.").unwrap_or(key);
-            self.apply_one(k, v)?;
+        for pass in 0..2 {
+            for (key, v) in map {
+                let k = key.strip_prefix("experiment.").unwrap_or(key);
+                if (k == "seed") == (pass == 0) {
+                    self.apply_one(k, v)?;
+                }
+            }
         }
         Ok(())
     }
@@ -185,6 +197,24 @@ impl ExperimentConfig {
             "target_accuracy" => self.target_accuracy = Some(want_f64()?),
             "data_noise" => self.data_noise = want_f64()?,
             "out_dir" => self.out_dir = want_str()?,
+            // --- the [network] table (TOML: network.*; CLI: bare keys) ---
+            "network" | "network.mode" => {
+                self.network.mode = NetMode::parse(&want_str()?)?
+            }
+            "network.latency" | "latency" => self.network.latency_s = want_f64()?,
+            "network.jitter" | "jitter" => self.network.jitter_s = want_f64()?,
+            "network.bandwidth" | "bandwidth" => {
+                self.network.bandwidth_bytes_per_s = want_f64()?
+            }
+            "network.drop_rate" | "drop_rate" => self.network.drop_rate = want_f64()?,
+            "network.straggler" | "straggler" => {
+                self.network.parse_straggler(&want_str()?)?
+            }
+            "network.topology_schedule" | "topology_schedule" => {
+                let spec = want_str()?;
+                self.network.parse_schedule(&spec, self.seed)?
+            }
+            "network.threads" | "threads" => self.network.threads = want_usize()?,
             _ => return Err(format!("unknown config key: {k}")),
         }
         Ok(())
@@ -204,6 +234,7 @@ impl ExperimentConfig {
             return Err("inner_steps must be >= 1".into());
         }
         crate::compress::parse(&self.compressor).map(|_| ())?;
+        self.network.validate()?;
         Ok(())
     }
 }
@@ -278,5 +309,85 @@ lambda = 5.0
         assert_eq!(Algorithm::parse("c2dfb").unwrap(), Algorithm::C2dfb);
         assert_eq!(Algorithm::parse("nc").unwrap(), Algorithm::C2dfbNc);
         assert!(Algorithm::parse("x").is_err());
+    }
+
+    #[test]
+    fn network_table_roundtrip() {
+        let dir = std::env::temp_dir().join("c2dfb_cfg_net_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("net.toml");
+        std::fs::write(
+            &p,
+            r#"
+[experiment]
+rounds = 10
+
+[network]
+mode = "sim"
+latency = 0.05
+jitter = 0.01
+bandwidth = 12.5e6
+drop_rate = 0.1
+straggler = "0.2:0.5"
+topology_schedule = "0:ring,40:2hop"
+threads = 4
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml_file(&p).unwrap();
+        assert!(c.network.is_event());
+        assert_eq!(c.network.latency_s, 0.05);
+        assert_eq!(c.network.jitter_s, 0.01);
+        assert_eq!(c.network.bandwidth_bytes_per_s, 12.5e6);
+        assert_eq!(c.network.drop_rate, 0.1);
+        assert_eq!(c.network.straggler_frac, 0.2);
+        assert_eq!(c.network.straggler_delay_s, 0.5);
+        assert_eq!(c.network.topology_schedule.len(), 2);
+        assert_eq!(c.network.threads, 4);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn seed_applies_before_seeded_keys_regardless_of_map_order() {
+        // "network.topology_schedule" < "seed" in BTreeMap order; the
+        // schedule's ER realization must still see the configured seed.
+        let mut map = BTreeMap::new();
+        map.insert("seed".to_string(), TomlValue::Int(7));
+        map.insert(
+            "network.mode".to_string(),
+            TomlValue::Str("sim".into()),
+        );
+        map.insert(
+            "network.topology_schedule".to_string(),
+            TomlValue::Str("50:er:0.4".into()),
+        );
+        let mut c = ExperimentConfig::default();
+        c.apply_map(&map).unwrap();
+        assert_eq!(c.seed, 7);
+        match c.network.topology_schedule[0].1 {
+            Topology::ErdosRenyi { seed, .. } => assert_eq!(seed, 7),
+            t => panic!("expected ER, got {t:?}"),
+        }
+    }
+
+    #[test]
+    fn cli_style_network_overrides() {
+        let mut c = ExperimentConfig::default();
+        c.apply_one("network", &TomlValue::Str("sim".into())).unwrap();
+        c.apply_one("drop_rate", &TomlValue::Float(0.05)).unwrap();
+        c.apply_one("threads", &TomlValue::Int(8)).unwrap();
+        assert!(c.network.is_event());
+        assert_eq!(c.network.drop_rate, 0.05);
+        assert_eq!(c.network.threads, 8);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn faults_require_event_engine() {
+        let mut c = ExperimentConfig::default();
+        c.apply_one("drop_rate", &TomlValue::Float(0.1)).unwrap();
+        assert!(c.validate().is_err(), "drops on the sync engine must be rejected");
+        c.apply_one("network", &TomlValue::Str("sim".into())).unwrap();
+        assert!(c.validate().is_ok());
     }
 }

@@ -8,10 +8,12 @@
 //! what order of magnitude) are the reproduction target.
 
 use crate::config::{Algorithm, ExperimentConfig};
-use crate::coordinator::{run_with_registry, summarize, write_runs};
+use crate::coordinator::{run_with_registry, run_with_task_shared, summarize, write_runs};
 use crate::data::partition::Partition;
 use crate::metrics::RunMetrics;
 use crate::runtime::ArtifactRegistry;
+use crate::sim::{NetConfig, NetMode};
+use crate::tasks::QuadraticTask;
 use crate::topology::Topology;
 use anyhow::Result;
 
@@ -228,6 +230,142 @@ pub fn fig5(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> 
     // Label runs uniquely before writing (RunMetrics label comes from cfg
     // label; augment with name).
     write_runs(&o.out_dir, "fig5", &runs)?;
+    Ok(runs)
+}
+
+/// Per-algorithm settings that converge on the analytic quadratic task
+/// (mirrors the algorithm test suites; no artifacts needed).
+fn quad_cfg_for(algo: Algorithm, rounds: usize, nodes: usize, o: &HarnessOpts) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        algorithm: algo,
+        nodes,
+        rounds,
+        seed: o.seed,
+        out_dir: o.out_dir.clone(),
+        eval_every: (rounds / 10).max(1),
+        gamma_out: 0.8,
+        ..ExperimentConfig::default()
+    };
+    match algo {
+        Algorithm::C2dfb | Algorithm::C2dfbNc => {
+            cfg.inner_steps = 15;
+            cfg.eta_out = 0.3;
+            cfg.eta_in = 0.4;
+            cfg.gamma_in = 0.6;
+            cfg.lambda = 50.0;
+            cfg.compressor = "topk:0.5".into();
+        }
+        Algorithm::Madsbo => {
+            cfg.inner_steps = 10;
+            cfg.eta_out = 0.8;
+            cfg.eta_in = 0.3;
+        }
+        Algorithm::Mdbo => {
+            cfg.inner_steps = 10;
+            cfg.eta_out = 0.4;
+            cfg.eta_in = 0.3;
+        }
+    }
+    cfg
+}
+
+/// **netsweep** — C²DFB vs the baselines across network regimes on the
+/// analytic quadratic task (runs without artifacts): ideal LAN, WAN
+/// latency/bandwidth, message loss, stragglers, and a time-varying
+/// topology.  This is the comparison axis the communication-complexity
+/// line of work (Zhang et al.; Chen et al.) argues about — how much of
+/// C²DFB's compressed-residual advantage survives a hostile network.
+///
+/// Also doubles as the sim engine's acceptance check: the `sync` and
+/// `ideal-sim` rows must agree exactly (bytes, rounds, final loss).
+pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
+    let (nodes, dim) = if tiny { (6, 8) } else { (8, 32) };
+    let rounds = o.rounds;
+    println!(
+        "== netsweep: network regimes on the quadratic task (m={nodes}, d={dim}, {rounds} rounds) =="
+    );
+    let task = QuadraticTask::generate(nodes, dim, 0.8, o.seed);
+
+    let event = NetConfig { mode: NetMode::Event, ..NetConfig::default() };
+    let dynamic = {
+        let mut n = event.clone();
+        n.parse_schedule("100:2hop,300:er:0.4", o.seed)
+            .map_err(anyhow::Error::msg)?;
+        n
+    };
+    let regimes: Vec<(&str, NetConfig)> = vec![
+        ("sync", NetConfig::default()),
+        ("ideal-sim", event.clone()),
+        (
+            "wan",
+            NetConfig {
+                latency_s: 0.04,
+                jitter_s: 0.01,
+                bandwidth_bytes_per_s: 12.5e6,
+                ..event.clone()
+            },
+        ),
+        ("lossy", NetConfig { drop_rate: 0.1, ..event.clone() }),
+        (
+            "straggler",
+            NetConfig {
+                straggler_frac: 0.25,
+                straggler_delay_s: 0.05,
+                ..event.clone()
+            },
+        ),
+        ("dynamic", dynamic),
+    ];
+    let algos = [Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::Mdbo];
+
+    let mut runs = Vec::new();
+    println!(
+        "\n| regime    | algo   | comm (MB) | gossip rounds | virtual time (s) | dropped | final loss |"
+    );
+    println!(
+        "|-----------|--------|-----------|---------------|------------------|---------|------------|"
+    );
+    for (regime, netcfg) in &regimes {
+        for algo in algos {
+            let mut cfg = quad_cfg_for(algo, rounds, nodes, o);
+            cfg.name = format!("netsweep_{regime}");
+            cfg.network = netcfg.clone();
+            let m = run_with_task_shared(&task, &cfg)?;
+            let last = m.final_point().expect("run produced no trace");
+            println!(
+                "| {:9} | {:6} | {:9.3} | {:13} | {:16.4} | {:7} | {:10.5} |",
+                regime,
+                m.algo,
+                m.ledger.total_mb(),
+                m.ledger.gossip_rounds,
+                m.ledger.network_time_s,
+                m.ledger.dropped_messages,
+                last.loss
+            );
+            runs.push(m);
+        }
+    }
+
+    // Benign-network equivalence: event engine ≡ synchronous engine.
+    let mut all_ok = true;
+    for i in 0..algos.len() {
+        let (s, e) = (&runs[i], &runs[algos.len() + i]);
+        let ok = s.ledger.total_bytes == e.ledger.total_bytes
+            && s.ledger.gossip_rounds == e.ledger.gossip_rounds
+            && s.final_point().map(|p| p.loss.to_bits())
+                == e.final_point().map(|p| p.loss.to_bits());
+        all_ok &= ok;
+        println!(
+            "{} sync ≡ ideal-sim ({}): bytes/rounds/loss {}",
+            if ok { "OK " } else { "ERR" },
+            s.algo,
+            if ok { "identical" } else { "DIFFER" }
+        );
+    }
+    if !all_ok {
+        anyhow::bail!("event engine diverged from the synchronous engine on a benign network");
+    }
+    write_runs(&o.out_dir, "netsweep", &runs)?;
     Ok(runs)
 }
 

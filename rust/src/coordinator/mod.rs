@@ -9,14 +9,27 @@ use crate::collective::Network;
 use crate::config::ExperimentConfig;
 use crate::metrics::RunMetrics;
 use crate::runtime::ArtifactRegistry;
+use crate::sim::SimNetwork;
 use crate::tasks::{BilevelTask, PjrtTask};
 use crate::topology::Graph;
 use anyhow::Result;
 use std::path::Path;
 
-/// Build the gossip network for a config.
+/// Build the synchronous gossip network for a config (the default
+/// engine), with the `[network]` link parameters as its cost model.
 pub fn build_network(cfg: &ExperimentConfig) -> Network {
-    Network::new(Graph::build(cfg.topology, cfg.nodes))
+    let mut net = Network::new(Graph::build(cfg.topology, cfg.nodes));
+    net.time_model = cfg.network.time_model();
+    net
+}
+
+/// Build the event-driven network for a config (`network.mode = "sim"`).
+pub fn build_sim_network(cfg: &ExperimentConfig) -> SimNetwork {
+    SimNetwork::new(
+        Graph::build(cfg.topology, cfg.nodes),
+        cfg.network.clone(),
+        cfg.seed ^ 0x6E65_7477, // independent of the algorithms' stream
+    )
 }
 
 /// Build the PJRT-backed task for a config (artifacts must exist).
@@ -35,15 +48,35 @@ pub fn build_task(reg: &ArtifactRegistry, cfg: &ExperimentConfig) -> Result<Pjrt
 pub fn run_with_registry(reg: &ArtifactRegistry, cfg: &ExperimentConfig) -> Result<RunMetrics> {
     cfg.validate().map_err(anyhow::Error::msg)?;
     let task = build_task(reg, cfg)?;
-    let net = build_network(cfg);
-    algorithms::run(&task, net, cfg.clone())
+    if cfg.network.is_event() {
+        algorithms::run(&task, build_sim_network(cfg), cfg.clone())
+    } else {
+        algorithms::run(&task, build_network(cfg), cfg.clone())
+    }
 }
 
 /// Run against a caller-provided task (analytic tasks, tests).
 pub fn run_with_task(task: &dyn BilevelTask, cfg: &ExperimentConfig) -> Result<RunMetrics> {
     cfg.validate().map_err(anyhow::Error::msg)?;
-    let net = build_network(cfg);
-    algorithms::run(task, net, cfg.clone())
+    if cfg.network.is_event() {
+        algorithms::run(task, build_sim_network(cfg), cfg.clone())
+    } else {
+        algorithms::run(task, build_network(cfg), cfg.clone())
+    }
+}
+
+/// [`run_with_task`] for thread-shareable tasks: `network.threads > 1`
+/// fans per-node compute out over the [`crate::sim::NodePool`].
+pub fn run_with_task_shared(
+    task: &(dyn BilevelTask + Sync),
+    cfg: &ExperimentConfig,
+) -> Result<RunMetrics> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    if cfg.network.is_event() {
+        algorithms::run_shared(task, build_sim_network(cfg), cfg.clone())
+    } else {
+        algorithms::run_shared(task, build_network(cfg), cfg.clone())
+    }
 }
 
 /// Persist a batch of run metrics under `out_dir/name/`.
@@ -101,6 +134,55 @@ mod tests {
             assert!(!m.trace.is_empty(), "{}", algo.name());
             assert!(m.ledger.total_bytes > 0, "{}", algo.name());
         }
+    }
+
+    #[test]
+    fn run_with_task_event_engine_all_algorithms() {
+        use crate::sim::NetMode;
+        let task = QuadraticTask::generate(4, 6, 0.5, 79);
+        for algo in [
+            Algorithm::C2dfb,
+            Algorithm::C2dfbNc,
+            Algorithm::Madsbo,
+            Algorithm::Mdbo,
+        ] {
+            let mut cfg = ExperimentConfig {
+                algorithm: algo,
+                nodes: 4,
+                rounds: 5,
+                inner_steps: 5,
+                eta_out: 0.1,
+                eta_in: 0.2,
+                eval_every: 5,
+                ..ExperimentConfig::default()
+            };
+            cfg.network.mode = NetMode::Event;
+            cfg.network.drop_rate = 0.1;
+            let m = run_with_task(&task, &cfg).expect(algo.name());
+            assert!(!m.trace.is_empty(), "{}", algo.name());
+            assert!(m.ledger.dropped_messages > 0, "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn shared_runner_matches_serial_runner() {
+        let task = QuadraticTask::generate(4, 6, 0.5, 80);
+        let mut cfg = ExperimentConfig {
+            nodes: 4,
+            rounds: 4,
+            inner_steps: 4,
+            eta_out: 0.1,
+            eta_in: 0.2,
+            eval_every: 2,
+            ..ExperimentConfig::default()
+        };
+        let serial = run_with_task(&task, &cfg).unwrap();
+        cfg.network.threads = 3;
+        let parallel = run_with_task_shared(&task, &cfg).unwrap();
+        let a: Vec<u64> = serial.trace.iter().map(|p| p.loss.to_bits()).collect();
+        let b: Vec<u64> = parallel.trace.iter().map(|p| p.loss.to_bits()).collect();
+        assert_eq!(a, b);
+        assert_eq!(serial.ledger.total_bytes, parallel.ledger.total_bytes);
     }
 
     #[test]

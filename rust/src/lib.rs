@@ -16,7 +16,25 @@
 //!   hot-spots, verified against pure-jnp oracles.
 //!
 //! The request path is pure Rust: artifacts are loaded through the PJRT C
-//! API ([`runtime`]), Python never runs after `make artifacts`.
+//! API ([`runtime`], behind the `pjrt` cargo feature), Python never runs
+//! after `make artifacts`.
+//!
+//! ## Transports
+//!
+//! Algorithms gossip through the [`collective::Transport`] trait and run
+//! unmodified on either engine:
+//!
+//! * [`collective::Network`] — the synchronous in-process loop the paper's
+//!   harnesses use: every message delivered, per-round cost model.
+//! * [`sim::SimNetwork`] — a deterministic discrete-event engine with
+//!   per-link latency/bandwidth/jitter, message loss, stragglers, and
+//!   time-varying topology schedules (the `[network]` config table /
+//!   `c2dfb netsweep`).  With a benign config it reproduces the
+//!   synchronous trajectories bit-for-bit; see `docs/SIM.md`.
+//!
+//! Per-node compute (oracle calls) can additionally run on a scoped
+//! thread pool ([`sim::NodePool`], `network.threads` config) with
+//! node-ordered reductions, so results are identical at any thread count.
 
 pub mod algorithms;
 pub mod collective;
@@ -28,6 +46,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
+pub mod sim;
 pub mod tasks;
 pub mod topology;
 pub mod util;

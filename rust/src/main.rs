@@ -1,10 +1,12 @@
 //! c2dfb — leader entrypoint / CLI.
 //!
 //! ```text
-//! c2dfb run [--config cfg.toml] [--algo c2dfb] [--topology ring] ...
+//! c2dfb run [--config cfg.toml] [--algo c2dfb] [--topology ring]
+//!           [--network sim --drop_rate 0.1 --straggler 0.25:0.05 ...]
 //! c2dfb table1 [--rounds N] [--target 0.7] [--tiny]
 //! c2dfb fig2 | fig3 | fig4 | fig5 | fig6 | ablation [--rounds N] [--tiny]
 //! c2dfb all [--rounds N]          # every table+figure harness
+//! c2dfb netsweep [--rounds N] [--tiny]   # network-regime sweep (no artifacts)
 //! c2dfb artifacts                  # list AOT artifacts + shapes
 //! ```
 
@@ -22,11 +24,15 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|all|artifacts> [options]
+const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|all|artifacts> [options]
   run options: --config <file.toml> plus any config key as --key value
                (e.g. --algo mdbo --topology er:0.4 --partition het:0.8
                 --rounds 100 --compressor topk:0.2 --lambda 10)
-  harness options: --rounds N  --target 0.7  --tiny  --out DIR  --seed S";
+               network keys: --network sync|sim  --latency S  --jitter S
+                --bandwidth B/s  --drop_rate P  --straggler FRAC:DELAY
+                --topology_schedule R:TOPO,...  --threads N
+  harness options: --rounds N  --target 0.7  --tiny  --out DIR  --seed S
+  netsweep: C²DFB vs baselines across network regimes (no artifacts needed)";
 
 fn real_main() -> Result<()> {
     let args = Args::from_env();
@@ -53,6 +59,7 @@ fn real_main() -> Result<()> {
             Ok(())
         }
         "run" => cmd_run(args),
+        "netsweep" => cmd_netsweep(args),
         "table1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "ablation" | "all" => {
             cmd_harness(&sub, args)
         }
@@ -71,7 +78,8 @@ fn cmd_run(mut args: Args) -> Result<()> {
         "name", "preset", "algo", "algorithm", "nodes", "m", "topology", "partition",
         "compressor", "rounds", "inner_steps", "K", "eta_out", "eta_in", "gamma_out",
         "gamma_in", "gamma", "lambda", "sigma", "seed", "eval_every",
-        "target_accuracy", "data_noise", "out_dir",
+        "target_accuracy", "data_noise", "out_dir", "network", "latency", "jitter",
+        "bandwidth", "drop_rate", "straggler", "topology_schedule", "threads",
     ] {
         if let Some(v) = args.get(key) {
             // Ints/floats/strings: try int, then float, then string.
@@ -103,6 +111,24 @@ fn cmd_run(mut args: Args) -> Result<()> {
     let dir = std::path::Path::new(&cfg.out_dir).join(&cfg.name);
     metrics.write_to(&dir)?;
     println!("traces written to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_netsweep(mut args: Args) -> Result<()> {
+    let tiny = args.flag("tiny");
+    let opts = experiments::HarnessOpts {
+        rounds: args.get_parse("rounds", if tiny { 12 } else { 60 }),
+        out_dir: args.get_or("out", "runs"),
+        seed: args.get_parse("seed", 42u64),
+        ..Default::default()
+    };
+    args.finish().map_err(anyhow::Error::msg)?;
+    // Analytic task — no artifact registry needed.
+    experiments::netsweep(&opts, tiny)?;
+    println!(
+        "\ntraces under {}/netsweep/ — compare comm_mb / sim_time_s / dropped across regimes.",
+        opts.out_dir
+    );
     Ok(())
 }
 

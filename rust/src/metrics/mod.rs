@@ -37,14 +37,20 @@ impl TimeModel {
 /// Per-run communication ledger.
 #[derive(Clone, Debug, Default)]
 pub struct CommLedger {
-    /// Total application bytes sent by all nodes.
+    /// Total application bytes sent by all nodes (paid even for messages
+    /// the transport later loses — they left the NIC).
     pub total_bytes: u64,
     /// Number of gossip exchanges (a "communication round" in the plots).
     pub gossip_rounds: u64,
-    /// Total simulated network seconds (per the TimeModel).
+    /// Total virtual network seconds: the synchronous engine accumulates a
+    /// per-round cost model, the event engine reports its furthest node
+    /// clock.
     pub network_time_s: f64,
     /// Messages sent.
     pub messages: u64,
+    /// Messages lost in transit (event engine's drop injection; always 0
+    /// on the synchronous engine).
+    pub dropped_messages: u64,
 }
 
 impl CommLedger {
@@ -91,6 +97,8 @@ pub struct TracePoint {
     pub accuracy: f64,
     pub grad_norm: f64,
     pub consensus_err: f64,
+    /// Cumulative messages lost by this point (event engine).
+    pub dropped_msgs: u64,
 }
 
 /// Full metrics for one experiment run.
@@ -139,6 +147,7 @@ impl RunMetrics {
             accuracy,
             grad_norm,
             consensus_err,
+            dropped_msgs: self.ledger.dropped_messages,
         });
     }
 
@@ -157,15 +166,17 @@ impl RunMetrics {
     }
 
     pub fn to_csv(&self) -> String {
+        // `dropped` stays LAST: tools/fill_experiments.py indexes columns
+        // positionally.
         let mut out = String::from(
-            "round,comm_mb,sim_time_s,wall_time_s,loss,accuracy,grad_norm,consensus_err\n",
+            "round,comm_mb,sim_time_s,wall_time_s,loss,accuracy,grad_norm,consensus_err,dropped\n",
         );
         for p in &self.trace {
             let _ = writeln!(
                 out,
-                "{},{:.6},{:.6},{:.3},{:.6},{:.4},{:.6e},{:.6e}",
+                "{},{:.6},{:.6},{:.3},{:.6},{:.4},{:.6e},{:.6e},{}",
                 p.round, p.comm_mb, p.sim_time_s, p.wall_time_s, p.loss, p.accuracy,
-                p.grad_norm, p.consensus_err
+                p.grad_norm, p.consensus_err, p.dropped_msgs
             );
         }
         out
@@ -179,6 +190,7 @@ impl RunMetrics {
             ("comm_mb", Json::num(self.ledger.total_mb())),
             ("gossip_rounds", Json::num(self.ledger.gossip_rounds as f64)),
             ("messages", Json::num(self.ledger.messages as f64)),
+            ("dropped_messages", Json::num(self.ledger.dropped_messages as f64)),
             ("network_time_s", Json::num(self.ledger.network_time_s)),
             ("wall_time_s", Json::num(self.wall_time_s())),
             ("first_order_calls", Json::num(self.oracles.first_order as f64)),

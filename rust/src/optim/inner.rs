@@ -9,13 +9,25 @@
 //!   directly with local error feedback (classic error accumulation), no
 //!   reference points.
 //!
+//! Both are generic over [`Transport`] and consume what the transport
+//! *actually delivered*: on the synchronous engine that is every
+//! neighbour's message (identical to the original lockstep formulation);
+//! on the event engine, lost messages simply never reach the reference
+//! points — the exact failure mode a real deployment would see.
+//!
+//! Gradient oracles go through [`GradFn`]: a serial closure, or a
+//! `Sync` closure plus a [`NodePool`] to evaluate nodes concurrently.
+//! Each step's oracle batch happens at a point where the evaluated
+//! state is frozen, so parallel evaluation is bit-identical to serial.
+//!
 //! Inner state persists across outer rounds: Algorithm 1 passes
 //! `(d̂_i^K)^t, (s_i^K)^t, (ŝ_i^K)^t` back into the next round's `IN` call
 //! (warm start), which `InnerState` models.
 
-use crate::collective::Network;
+use crate::collective::Transport;
 use crate::compress::Compressor;
 use crate::optim::refpoint::RefPoint;
+use crate::sim::parallel::NodePool;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug)]
@@ -23,6 +35,31 @@ pub struct InnerConfig {
     pub eta: f64,
     pub gamma: f64,
     pub k_steps: usize,
+}
+
+/// How the inner loop evaluates the per-node gradient oracle ∇r_i.
+pub enum GradFn<'f> {
+    /// One shared mutable closure, evaluated node by node.
+    Serial(&'f mut dyn FnMut(usize, &[f32]) -> Vec<f32>),
+    /// A shareable closure fanned out over a [`NodePool`]; results come
+    /// back in node order, so the maths is identical to `Serial`.
+    Parallel(&'f (dyn Fn(usize, &[f32]) -> Vec<f32> + Sync), &'f NodePool),
+}
+
+impl GradFn<'_> {
+    /// Evaluate the oracle at every node's current iterate.
+    fn eval_all(&mut self, d: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        match self {
+            GradFn::Serial(f) => d.iter().enumerate().map(|(i, di)| f(i, di)).collect(),
+            GradFn::Parallel(f, pool) => {
+                // Copy the shared-closure reference out of the &mut match
+                // binding so the spawned closure captures a plain
+                // `&(dyn Fn + Sync)`.
+                let f: &(dyn Fn(usize, &[f32]) -> Vec<f32> + Sync) = *f;
+                pool.map(d.len(), |i| f(i, &d[i]))
+            }
+        }
+    }
 }
 
 /// Per-variable persistent inner-loop state across outer rounds.
@@ -39,14 +76,16 @@ pub struct InnerState {
     /// Naive-variant error-feedback accumulators (e_i) for d and s.
     err_d: Vec<Vec<f32>>,
     err_s: Vec<Vec<f32>>,
+    /// Transport graph epoch the reference points were built against.
+    epoch: u64,
 }
 
 impl InnerState {
-    pub fn new(net: &Network, dim: usize) -> InnerState {
+    pub fn new<T: Transport>(net: &T, dim: usize) -> InnerState {
         let m = net.m();
         let mk_refs = || {
             (0..m)
-                .map(|i| RefPoint::new(dim, 1.0 - net.mixing.weight(i, i)))
+                .map(|i| RefPoint::new(dim, 1.0 - net.mixing().weight(i, i)))
                 .collect::<Vec<_>>()
         };
         InnerState {
@@ -57,45 +96,88 @@ impl InnerState {
             initialized: false,
             err_d: vec![vec![0.0; dim]; m],
             err_s: vec![vec![0.0; dim]; m],
+            epoch: net.graph_epoch(),
         }
+    }
+
+    /// Reference points are keyed to a fixed mixing matrix: the
+    /// neighbour-weight sums and the `(d̂)_w` accumulators are meaningless
+    /// once the graph changes.  When the transport reports a new graph
+    /// epoch (time-varying topologies), perform the resync a real
+    /// deployment would: every node simultaneously resets its reference
+    /// points against the new weights — the next residuals are then full
+    /// snapshots `Q(d − 0)` and the invariant `(d̂)_w = Σ w_ij d̂_j` holds
+    /// again by construction.  Local tracker values, gradients and
+    /// error-feedback accumulators carry over.  No-op on static graphs.
+    fn sync_topology<T: Transport>(&mut self, net: &T) {
+        let epoch = net.graph_epoch();
+        if epoch == self.epoch {
+            return;
+        }
+        self.epoch = epoch;
+        let dim = self.d_ref.first().map_or(0, |r| r.hat.len());
+        for i in 0..self.d_ref.len() {
+            let sw = 1.0 - net.mixing().weight(i, i);
+            self.d_ref[i] = RefPoint::new(dim, sw);
+            self.s_ref[i] = RefPoint::new(dim, sw);
+        }
+    }
+
+    /// Tracker bootstrap on the very first call: s_i⁰ = ∇r_i(d_i⁰).  On
+    /// warm starts the tracker carries over and self-corrects through the
+    /// gradient-difference term.  Returns oracle calls made (0 or m).
+    fn bootstrap(&mut self, d: &[Vec<f32>], grad: &mut GradFn) -> u64 {
+        if self.initialized {
+            return 0;
+        }
+        let g = grad.eval_all(d);
+        self.prev_grad = g.clone();
+        self.s = g;
+        self.initialized = true;
+        d.len() as u64
     }
 }
 
-/// Run K steps of Algorithm 2 over all nodes.
+/// Run K steps of Algorithm 2 over all nodes with a plain serial oracle.
 ///
 /// `d` is the per-node variable (y or z), updated in place.  `grad(i, d_i)`
-/// is the local first-order oracle ∇r_i; each call is counted by the
-/// caller.  Communication (two compressed messages per node per step) is
-/// paid through `net`.
-pub fn run_inner(
+/// is the local first-order oracle ∇r_i.  Communication (two compressed
+/// messages per node per step) is paid through `net`.  Returns the number
+/// of oracle calls made.
+pub fn run_inner<T: Transport>(
     cfg: &InnerConfig,
-    net: &mut Network,
+    net: &mut T,
     compressor: &dyn Compressor,
     rng: &mut Rng,
     state: &mut InnerState,
     d: &mut [Vec<f32>],
     mut grad: impl FnMut(usize, &[f32]) -> Vec<f32>,
-) {
-    let m = net.m();
-    let dim = d[0].len();
-    debug_assert_eq!(d.len(), m);
+) -> u64 {
+    run_inner_with(cfg, net, compressor, rng, state, d, GradFn::Serial(&mut grad))
+}
 
-    // Tracker bootstrap on the very first call: s_i⁰ = ∇r_i(d_i⁰).  On
-    // warm starts the tracker carries over and self-corrects through the
-    // gradient-difference term.
-    if !state.initialized {
-        for i in 0..m {
-            let g = grad(i, &d[i]);
-            state.prev_grad[i] = g.clone();
-            state.s[i] = g;
-        }
-        state.initialized = true;
-    }
+/// [`run_inner`] with an explicit (possibly parallel) oracle.
+pub fn run_inner_with<T: Transport>(
+    cfg: &InnerConfig,
+    net: &mut T,
+    compressor: &dyn Compressor,
+    rng: &mut Rng,
+    state: &mut InnerState,
+    d: &mut [Vec<f32>],
+    mut grad: GradFn,
+) -> u64 {
+    let m = net.m();
+    debug_assert_eq!(d.len(), m);
+    let mut calls = state.bootstrap(d, &mut grad);
 
     let eta = cfg.eta as f32;
     let gamma = cfg.gamma as f32;
 
     for _k in 0..cfg.k_steps {
+        // A topology switch (possibly mid-IN-call: schedules tick per
+        // gossip round) invalidates the reference points; resync first.
+        state.sync_topology(net);
+
         // -- 1. model update: d ← d + γ((d̂)_w − sw·d̂) − η s  --------------
         for i in 0..m {
             state.d_ref[i].add_mix_term(gamma, &mut d[i]);
@@ -103,76 +185,87 @@ pub fn run_inner(
                 *dk -= eta * sk;
             }
         }
-        // -- 2. transmit Q(d_new − d̂); update d̂ and (d̂)_w  -----------------
+        // -- 2. transmit Q(d_new − d̂); update d̂, then fold each DELIVERED
+        //       neighbour message into (d̂)_w  ------------------------------
         let msgs: Vec<_> = (0..m)
             .map(|i| compressor.compress(&state.d_ref[i].residual(&d[i]), rng))
             .collect();
         for i in 0..m {
             state.d_ref[i].apply_own(&msgs[i]);
         }
-        // Clone neighbour weights up-front to avoid borrowing net twice.
-        for i in 0..m {
-            let nbrs: Vec<(usize, f64)> = net.mixing.neighbors(i).to_vec();
-            for (j, wij) in nbrs {
-                state.d_ref[i].apply_neighbor(wij, &msgs[j]);
+        let inbox = net.exchange(msgs);
+        for (i, arrived) in inbox.into_iter().enumerate() {
+            for (j, q) in arrived {
+                let wij = net.mixing().weight(i, j);
+                state.d_ref[i].apply_neighbor(wij, q.as_ref());
             }
         }
-        net.exchange(msgs); // pays bytes; payload already applied above
 
         // -- 3. tracker update: s ← s + γ((ŝ)_w − sw·ŝ) + ∇r^{new} − ∇r^{old}
         for i in 0..m {
             state.s_ref[i].add_mix_term(gamma, &mut state.s[i]);
-            let g_new = grad(i, &d[i]);
+        }
+        let g_new = grad.eval_all(d);
+        calls += m as u64;
+        for i in 0..m {
             for ((sk, gn), go) in state.s[i]
                 .iter_mut()
-                .zip(&g_new)
+                .zip(&g_new[i])
                 .zip(&state.prev_grad[i])
             {
                 *sk += gn - go;
             }
-            state.prev_grad[i] = g_new;
         }
-        // -- 4. transmit Q(s_new − ŝ); update ŝ and (ŝ)_w  -----------------
+        state.prev_grad = g_new;
+
+        // -- 4. transmit Q(s_new − ŝ); update ŝ and delivered (ŝ)_w  -------
         let msgs: Vec<_> = (0..m)
             .map(|i| compressor.compress(&state.s_ref[i].residual(&state.s[i]), rng))
             .collect();
         for i in 0..m {
             state.s_ref[i].apply_own(&msgs[i]);
         }
-        for i in 0..m {
-            let nbrs: Vec<(usize, f64)> = net.mixing.neighbors(i).to_vec();
-            for (j, wij) in nbrs {
-                state.s_ref[i].apply_neighbor(wij, &msgs[j]);
+        let inbox = net.exchange(msgs);
+        for (i, arrived) in inbox.into_iter().enumerate() {
+            for (j, q) in arrived {
+                let wij = net.mixing().weight(i, j);
+                state.s_ref[i].apply_neighbor(wij, q.as_ref());
             }
         }
-        net.exchange(msgs);
-        let _ = dim;
     }
+    calls
 }
 
-/// The C²DFB(nc) ablation: per step each node transmits `Q(d_i + e_i)`
-/// (error-feedback compression of the raw parameter), neighbours mix with
-/// the received compressed values.  Same message count/sizes as
-/// [`run_inner`] but errors accumulate locally instead of being implicitly
-/// shared — the paper's Fig. 3 shows this is slower and less stable.
-pub fn run_inner_naive(
+/// The C²DFB(nc) ablation with a serial oracle: per step each node
+/// transmits `Q(d_i + e_i)` (error-feedback compression of the raw
+/// parameter), neighbours mix with the received compressed values.  Same
+/// message count/sizes as [`run_inner`] but errors accumulate locally
+/// instead of being implicitly shared — the paper's Fig. 3 shows this is
+/// slower and less stable.  Returns the number of oracle calls made.
+pub fn run_inner_naive<T: Transport>(
     cfg: &InnerConfig,
-    net: &mut Network,
+    net: &mut T,
     compressor: &dyn Compressor,
     rng: &mut Rng,
     state: &mut InnerState,
     d: &mut [Vec<f32>],
     mut grad: impl FnMut(usize, &[f32]) -> Vec<f32>,
-) {
+) -> u64 {
+    run_inner_naive_with(cfg, net, compressor, rng, state, d, GradFn::Serial(&mut grad))
+}
+
+/// [`run_inner_naive`] with an explicit (possibly parallel) oracle.
+pub fn run_inner_naive_with<T: Transport>(
+    cfg: &InnerConfig,
+    net: &mut T,
+    compressor: &dyn Compressor,
+    rng: &mut Rng,
+    state: &mut InnerState,
+    d: &mut [Vec<f32>],
+    mut grad: GradFn,
+) -> u64 {
     let m = net.m();
-    if !state.initialized {
-        for i in 0..m {
-            let g = grad(i, &d[i]);
-            state.prev_grad[i] = g.clone();
-            state.s[i] = g;
-        }
-        state.initialized = true;
-    }
+    let mut calls = state.bootstrap(d, &mut grad);
     let eta = cfg.eta as f32;
     let gamma = cfg.gamma as f32;
 
@@ -194,15 +287,16 @@ pub fn run_inner_naive(
             state.err_d[i] = carry;
             msgs.push(q);
         }
-        let inbox = net.exchange(msgs.clone());
-        // d_i ← d_i + γ Σ w_ij (Q_j − Q_i) − η s_i
-        for i in 0..m {
-            let own = msgs[i].to_dense();
-            for (sender, q) in &inbox[i] {
-                let w = (gamma as f64 * net.mixing.weight(i, *sender)) as f32;
-                let qd = q.to_dense();
+        let own: Vec<Vec<f32>> = msgs.iter().map(|q| q.to_dense()).collect();
+        let inbox = net.exchange(msgs);
+        // d_i ← d_i + γ Σ w_ij (Q_j − Q_i) − η s_i over DELIVERED messages
+        // (a delivered q IS the sender's message — reuse its dense form).
+        for (i, arrived) in inbox.into_iter().enumerate() {
+            for (sender, _q) in arrived {
+                let w = (gamma as f64 * net.mixing().weight(i, sender)) as f32;
+                let qd = &own[sender];
                 for k in 0..d[i].len() {
-                    d[i][k] += w * (qd[k] - own[k]);
+                    d[i][k] += w * (qd[k] - own[i][k]);
                 }
             }
             for (dk, sk) in d[i].iter_mut().zip(&state.s[i]) {
@@ -225,30 +319,37 @@ pub fn run_inner_naive(
             state.err_s[i] = carry;
             smsgs.push(q);
         }
-        let inbox = net.exchange(smsgs.clone());
-        for i in 0..m {
-            let own = smsgs[i].to_dense();
-            let mut mixed = state.s[i].clone();
-            for (sender, q) in &inbox[i] {
-                let w = (gamma as f64 * net.mixing.weight(i, *sender)) as f32;
-                let qd = q.to_dense();
-                for k in 0..mixed.len() {
-                    mixed[k] += w * (qd[k] - own[k]);
+        let own: Vec<Vec<f32>> = smsgs.iter().map(|q| q.to_dense()).collect();
+        let inbox = net.exchange(smsgs);
+        for (i, arrived) in inbox.into_iter().enumerate() {
+            for (sender, _q) in arrived {
+                let w = (gamma as f64 * net.mixing().weight(i, sender)) as f32;
+                let qd = &own[sender];
+                for k in 0..state.s[i].len() {
+                    state.s[i][k] += w * (qd[k] - own[i][k]);
                 }
             }
-            let g_new = grad(i, &d[i]);
-            for ((sk, gn), go) in mixed.iter_mut().zip(&g_new).zip(&state.prev_grad[i]) {
+        }
+        let g_new = grad.eval_all(d);
+        calls += m as u64;
+        for i in 0..m {
+            for ((sk, gn), go) in state.s[i]
+                .iter_mut()
+                .zip(&g_new[i])
+                .zip(&state.prev_grad[i])
+            {
                 *sk += gn - go;
             }
-            state.prev_grad[i] = g_new;
-            state.s[i] = mixed;
         }
+        state.prev_grad = g_new;
     }
+    calls
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collective::Network;
     use crate::compress::{Identity, TopK};
     use crate::linalg;
     use crate::topology::{Graph, Topology};
@@ -434,5 +535,73 @@ mod tests {
             (topk_bytes as f64) < dense_bytes as f64 * 0.3,
             "{topk_bytes} vs {dense_bytes}"
         );
+    }
+
+    /// Oracle-call accounting: bootstrap m, then m per step.
+    #[test]
+    fn returns_oracle_call_count() {
+        let m = 6;
+        let dim = 4;
+        let q = Quad::build(m, dim, 5);
+        let mut net = Network::new(Graph::build(Topology::Ring, m));
+        let mut rng = Rng::new(4);
+        let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 3 };
+        let mut state = InnerState::new(&net, dim);
+        let mut d = vec![vec![0.0f32; dim]; m];
+        let n1 = run_inner(&cfg, &mut net, &Identity, &mut rng, &mut state, &mut d, |i, x| {
+            q.grad(i, x)
+        });
+        assert_eq!(n1, (m + 3 * m) as u64); // bootstrap + per-step
+        let n2 = run_inner(&cfg, &mut net, &Identity, &mut rng, &mut state, &mut d, |i, x| {
+            q.grad(i, x)
+        });
+        assert_eq!(n2, (3 * m) as u64); // warm start: no bootstrap
+    }
+
+    /// A parallel oracle over a NodePool gives bit-identical trajectories
+    /// to the serial closure, at any thread count.
+    #[test]
+    fn parallel_oracle_matches_serial_exactly() {
+        let m = 6;
+        let dim = 16;
+        let q = Quad::build(m, dim, 13);
+        let run_with_pool = |threads: usize| {
+            let mut net = Network::new(Graph::build(Topology::Ring, m));
+            let mut rng = Rng::new(8);
+            let cfg = InnerConfig { eta: 0.12, gamma: 0.6, k_steps: 40 };
+            let mut state = InnerState::new(&net, dim);
+            let mut d = vec![vec![0.0f32; dim]; m];
+            let g = |i: usize, di: &[f32]| q.grad(i, di);
+            let pool = NodePool::new(threads);
+            let calls = if threads == 1 {
+                let mut gs = g;
+                run_inner_with(
+                    &cfg,
+                    &mut net,
+                    &TopK::new(0.3),
+                    &mut rng,
+                    &mut state,
+                    &mut d,
+                    GradFn::Serial(&mut gs),
+                )
+            } else {
+                run_inner_with(
+                    &cfg,
+                    &mut net,
+                    &TopK::new(0.3),
+                    &mut rng,
+                    &mut state,
+                    &mut d,
+                    GradFn::Parallel(&g, &pool),
+                )
+            };
+            (calls, d)
+        };
+        let (c1, d1) = run_with_pool(1);
+        for threads in [2, 4] {
+            let (c, d) = run_with_pool(threads);
+            assert_eq!(c, c1);
+            assert_eq!(d, d1, "trajectory diverged at {threads} threads");
+        }
     }
 }

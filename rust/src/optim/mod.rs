@@ -12,6 +12,9 @@ pub mod inner;
 pub mod refpoint;
 pub mod tracking;
 
-pub use inner::{run_inner, run_inner_naive, InnerConfig, InnerState};
+pub use inner::{
+    run_inner, run_inner_naive, run_inner_naive_with, run_inner_with, GradFn, InnerConfig,
+    InnerState,
+};
 pub use refpoint::RefPoint;
 pub use tracking::DenseTracker;

@@ -5,7 +5,7 @@
 //! Invariant (Proposition 4): the node average of the trackers always
 //! equals the node average of the latest gradients.
 
-use crate::collective::Network;
+use crate::collective::Transport;
 use crate::linalg;
 
 pub struct DenseTracker {
@@ -23,7 +23,7 @@ impl DenseTracker {
 
     /// One tracking round: gossip-mix the trackers (PAID communication via
     /// `net`), then fold in the new gradients.
-    pub fn update(&mut self, net: &mut Network, gamma: f64, u_new: &[Vec<f32>]) {
+    pub fn update<T: Transport>(&mut self, net: &mut T, gamma: f64, u_new: &[Vec<f32>]) {
         let mixed = net.mix_paid(gamma, &self.s);
         self.s = mixed;
         for i in 0..self.s.len() {
@@ -48,6 +48,7 @@ impl DenseTracker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collective::Network;
     use crate::topology::{Graph, Topology};
     use crate::util::rng::Rng;
 

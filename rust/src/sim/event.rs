@@ -1,0 +1,129 @@
+//! Deterministic discrete-event queue keyed by virtual time.
+//!
+//! A thin min-heap with two guarantees the engine leans on:
+//!
+//! * **Total order on `f64` times** via `total_cmp` (no NaN surprises —
+//!   NaN times are rejected at push).
+//! * **Deterministic tie-breaking**: events at equal times pop in
+//!   insertion order (a monotone sequence number), so a run is a pure
+//!   function of its inputs regardless of heap internals.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    time_s: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time_s
+            .total_cmp(&other.time_s)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap of `(virtual time, payload)` events.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Reverse<Entry<T>>>,
+    seq: u64,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `item` at `time_s` (virtual seconds, must be finite).
+    pub fn push(&mut self, time_s: f64, item: T) {
+        assert!(time_s.is_finite(), "event time must be finite, got {time_s}");
+        self.heap.push(Reverse(Entry { time_s, seq: self.seq, item }));
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event (FIFO among equal times).
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|Reverse(e)| (e.time_s, e.item))
+    }
+
+    /// Virtual time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(e)| e.time_s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, x)| x)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(1.0, i);
+        }
+        q.push(0.5, 999);
+        assert_eq!(q.pop(), Some((0.5, 999)));
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((1.0, i)));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_does_not_pop() {
+        let mut q = EventQueue::new();
+        q.push(2.5, ());
+        assert_eq!(q.peek_time(), Some(2.5));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some((2.5, ())));
+        assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_times() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+}

@@ -1,0 +1,243 @@
+//! Event-driven network simulation: realistic transports for the
+//! decentralized algorithms.
+//!
+//! The paper's evaluation (and the `table1`/`fig*` harnesses) runs on a
+//! synchronous in-process gossip loop — every message delivered, every
+//! node in lockstep.  C²DFB's compressed inner loop matters most when the
+//! network is *not* like that, so this subsystem provides:
+//!
+//! * [`event::EventQueue`] — a deterministic discrete-event queue keyed by
+//!   virtual time;
+//! * [`SimNetwork`] — a [`Transport`](crate::collective::Transport) that
+//!   simulates per-link latency/bandwidth/jitter, message loss,
+//!   stragglers, and time-varying topologies;
+//! * [`parallel::NodePool`] — a scoped thread pool running per-node
+//!   compute concurrently with node-ordered results and per-node RNG
+//!   streams, so runs are bit-reproducible at any thread count;
+//! * [`NetConfig`] — the `[network]` config table behind all of it.
+//!
+//! With a benign config (no jitter/drops/stragglers) the event engine
+//! reproduces the synchronous engine's trajectories exactly; see
+//! `docs/SIM.md` and `tests/sim.rs`.
+
+pub mod event;
+pub mod net;
+pub mod parallel;
+
+pub use net::{Arrival, SimNetwork};
+pub use parallel::NodePool;
+
+use crate::topology::Topology;
+
+/// Which transport engine to run an experiment on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetMode {
+    /// Synchronous in-process gossip (the default; the paper's setting).
+    Sync,
+    /// Discrete-event simulation ([`SimNetwork`]).
+    Event,
+}
+
+impl NetMode {
+    pub fn parse(s: &str) -> Result<NetMode, String> {
+        match s {
+            "sync" | "ideal" => Ok(NetMode::Sync),
+            "sim" | "event" => Ok(NetMode::Event),
+            _ => Err(format!("unknown network mode: {s:?} (want sync|sim)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetMode::Sync => "sync",
+            NetMode::Event => "sim",
+        }
+    }
+}
+
+/// The `[network]` config table: link model, fault injection, topology
+/// schedule, and the per-node compute thread pool width.
+///
+/// Defaults describe the paper's LAN testbed (1 ms latency, 1 Gbit/s,
+/// lossless, no stragglers) on the synchronous engine — so an empty
+/// `[network]` table changes nothing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetConfig {
+    pub mode: NetMode,
+    /// Base one-way per-message latency (s).
+    pub latency_s: f64,
+    /// Extra per-message latency, uniform in `[0, jitter_s)` (s).
+    pub jitter_s: f64,
+    /// NIC bandwidth per node (bytes/s); copies to different neighbours
+    /// serialize through it.
+    pub bandwidth_bytes_per_s: f64,
+    /// I.i.d. per-message loss probability.
+    pub drop_rate: f64,
+    /// Fraction of nodes that straggle (chosen once per run, seed-stable).
+    pub straggler_frac: f64,
+    /// Extra delay a straggler adds before each round's sends (s).
+    pub straggler_delay_s: f64,
+    /// `(gossip round, topology)` switch points for time-varying graphs.
+    pub topology_schedule: Vec<(u64, Topology)>,
+    /// Thread-pool width for per-node compute (0 or 1 = serial).
+    pub threads: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            mode: NetMode::Sync,
+            latency_s: 1e-3,
+            jitter_s: 0.0,
+            bandwidth_bytes_per_s: 125e6,
+            drop_rate: 0.0,
+            straggler_frac: 0.0,
+            straggler_delay_s: 0.0,
+            topology_schedule: Vec::new(),
+            threads: 1,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn is_event(&self) -> bool {
+        self.mode == NetMode::Event
+    }
+
+    /// The synchronous engine's equivalent cost model.
+    pub fn time_model(&self) -> crate::metrics::TimeModel {
+        crate::metrics::TimeModel {
+            latency_s: self.latency_s,
+            bandwidth_bytes_per_s: self.bandwidth_bytes_per_s,
+        }
+    }
+
+    /// Parse a straggler spec `"frac:delay_s"`, e.g. `"0.2:0.05"` = 20% of
+    /// nodes add 50 ms before each round's sends.
+    pub fn parse_straggler(&mut self, spec: &str) -> Result<(), String> {
+        let (frac, delay) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("straggler wants frac:delay_s, got {spec:?}"))?;
+        self.straggler_frac = frac
+            .parse()
+            .map_err(|_| format!("bad straggler fraction: {frac:?}"))?;
+        self.straggler_delay_s = delay
+            .parse()
+            .map_err(|_| format!("bad straggler delay: {delay:?}"))?;
+        Ok(())
+    }
+
+    /// Parse a topology schedule `"round:topo[,round:topo]…"`, e.g.
+    /// `"0:ring,50:2hop,100:er:0.4"` (rounds are gossip rounds; topology
+    /// specs as in [`Topology::parse`], which may themselves contain `:`).
+    pub fn parse_schedule(&mut self, spec: &str, seed: u64) -> Result<(), String> {
+        let mut out = Vec::new();
+        for entry in spec.split(',').filter(|e| !e.trim().is_empty()) {
+            let (round, topo) = entry
+                .trim()
+                .split_once(':')
+                .ok_or_else(|| format!("schedule entry wants round:topology, got {entry:?}"))?;
+            let round: u64 = round
+                .parse()
+                .map_err(|_| format!("bad schedule round: {round:?}"))?;
+            out.push((round, Topology::parse(topo, seed)?));
+        }
+        out.sort_by_key(|(r, _)| *r);
+        self.topology_schedule = out;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..1.0).contains(&self.drop_rate) {
+            return Err(format!("drop_rate must be in [0, 1), got {}", self.drop_rate));
+        }
+        if self.latency_s < 0.0 || self.jitter_s < 0.0 || self.straggler_delay_s < 0.0 {
+            return Err("latency/jitter/straggler delay must be non-negative".into());
+        }
+        if self.bandwidth_bytes_per_s.is_nan() || self.bandwidth_bytes_per_s <= 0.0 {
+            return Err("bandwidth must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&self.straggler_frac) {
+            return Err(format!(
+                "straggler fraction must be in [0, 1], got {}",
+                self.straggler_frac
+            ));
+        }
+        if !self.is_event()
+            && (self.drop_rate > 0.0
+                || self.jitter_s > 0.0
+                || self.straggler_frac > 0.0
+                || !self.topology_schedule.is_empty())
+        {
+            return Err(
+                "drops/jitter/stragglers/topology_schedule need the event engine: \
+                 set network mode = \"sim\""
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_benign_sync() {
+        let c = NetConfig::default();
+        assert!(!c.is_event());
+        assert_eq!(c.drop_rate, 0.0);
+        assert!(c.validate().is_ok());
+        let tm = c.time_model();
+        assert_eq!(tm.latency_s, 1e-3);
+        assert_eq!(tm.bandwidth_bytes_per_s, 125e6);
+    }
+
+    #[test]
+    fn straggler_spec_parses() {
+        let mut c = NetConfig::default();
+        c.parse_straggler("0.25:0.05").unwrap();
+        assert_eq!(c.straggler_frac, 0.25);
+        assert_eq!(c.straggler_delay_s, 0.05);
+        assert!(c.parse_straggler("nope").is_err());
+        assert!(c.parse_straggler("0.2:x").is_err());
+    }
+
+    #[test]
+    fn schedule_spec_parses_and_sorts() {
+        let mut c = NetConfig::default();
+        c.parse_schedule("100:er:0.4, 0:ring,50:2hop", 9).unwrap();
+        let names: Vec<(u64, &str)> = c
+            .topology_schedule
+            .iter()
+            .map(|(r, t)| (*r, t.name()))
+            .collect();
+        assert_eq!(names, vec![(0, "ring"), (50, "2hop"), (100, "er")]);
+        assert!(c.parse_schedule("ring", 9).is_err());
+        assert!(c.parse_schedule("x:ring", 9).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_faults_on_sync_engine() {
+        let mut c = NetConfig { drop_rate: 0.1, ..NetConfig::default() };
+        assert!(c.validate().is_err());
+        c.mode = NetMode::Event;
+        assert!(c.validate().is_ok());
+        c.drop_rate = 1.0;
+        assert!(c.validate().is_err());
+        let c = NetConfig {
+            bandwidth_bytes_per_s: 0.0,
+            ..NetConfig::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(NetMode::parse("sync").unwrap(), NetMode::Sync);
+        assert_eq!(NetMode::parse("sim").unwrap(), NetMode::Event);
+        assert_eq!(NetMode::parse("event").unwrap(), NetMode::Event);
+        assert!(NetMode::parse("tcp").is_err());
+    }
+}

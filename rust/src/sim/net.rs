@@ -1,0 +1,383 @@
+//! Event-driven gossip transport: [`SimNetwork`].
+//!
+//! One `exchange` = one bulk-synchronous gossip round, simulated message
+//! by message:
+//!
+//! 1. Every sender starts transmitting at its own virtual clock (plus its
+//!    straggler delay, if it is one), serializing its per-neighbour copies
+//!    through one NIC at `bandwidth` bytes/s.
+//! 2. Each copy arrives `latency + U[0, jitter)` after it leaves the NIC,
+//!    or is lost with probability `drop_rate`.  Jitter and drops are drawn
+//!    from per-sender RNG streams in neighbour order, so the realization
+//!    depends only on `(seed, round, sender, edge)` — never on event
+//!    interleaving or thread count.
+//! 3. Arrivals drain through the [`EventQueue`](super::event::EventQueue)
+//!    in virtual-time order; each receiver's clock advances to the latest
+//!    of its own send completion and its delivered arrivals (a *local*
+//!    barrier — a straggler delays its neighbours this round, their
+//!    neighbours next round, one hop per round, like a real deployment).
+//!
+//! With zero jitter, zero drops and no stragglers every message is
+//! delivered, inboxes match the synchronous [`Network`]'s exactly (both
+//! are sorted by sender), and ledger bytes/rounds/messages are identical —
+//! so algorithm trajectories are bit-for-bit the same (asserted by
+//! `tests/sim.rs`).
+
+use super::event::EventQueue;
+use super::{NetConfig, NetMode};
+use crate::collective::{dense_wire_bytes, Inbox, Transport};
+use crate::compress::Compressed;
+use crate::metrics::CommLedger;
+use crate::topology::{Graph, MixingMatrix, Topology};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// One simulated message delivery (or loss), for tests and tracing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    /// Virtual arrival time (s); for dropped messages, when it *would*
+    /// have arrived.
+    pub t_s: f64,
+    pub sender: usize,
+    pub receiver: usize,
+    pub bytes: usize,
+    pub dropped: bool,
+}
+
+/// Discrete-event transport with per-link latency/bandwidth/jitter, loss,
+/// stragglers and a topology schedule.  Implements [`Transport`], so every
+/// algorithm runs on it unmodified.
+pub struct SimNetwork {
+    pub graph: Graph,
+    pub mixing: MixingMatrix,
+    pub ledger: CommLedger,
+    cfg: NetConfig,
+    degrees: Vec<usize>,
+    /// Per-node virtual clocks (s): when the node can next transmit.
+    clock: Vec<f64>,
+    /// Per-sender RNG streams for jitter and drops.
+    streams: Vec<Rng>,
+    /// Extra pre-send delay per node per round (stragglers; 0 otherwise).
+    straggle: Vec<f64>,
+    /// Gossip rounds completed (drives the topology schedule).
+    round: u64,
+    sched_next: usize,
+    /// Bumped on every topology switch (see [`Transport::graph_epoch`]).
+    epoch: u64,
+    /// Arrival log of the most recent exchange, in event order.
+    pub last_events: Vec<Arrival>,
+}
+
+impl SimNetwork {
+    /// Build over an initial graph.  `seed` controls jitter/drop draws and
+    /// the straggler choice; it is independent of the algorithms' seeds.
+    pub fn new(graph: Graph, cfg: NetConfig, seed: u64) -> SimNetwork {
+        assert_eq!(
+            cfg.mode,
+            NetMode::Event,
+            "SimNetwork built from a config with mode = sync"
+        );
+        cfg.validate().expect("invalid network config");
+        let m = graph.m;
+        let mixing = MixingMatrix::metropolis(&graph);
+        let degrees = (0..m).map(|i| graph.degree(i)).collect();
+        let mut root = Rng::new(seed ^ 0x5157_0C0D);
+        let streams = (0..m).map(|i| root.split(i as u64)).collect();
+        let mut straggle = vec![0.0; m];
+        let k = (cfg.straggler_frac * m as f64).ceil() as usize;
+        if k > 0 && cfg.straggler_delay_s > 0.0 {
+            for i in root.sample_indices(m, k.min(m)) {
+                straggle[i] = cfg.straggler_delay_s;
+            }
+        }
+        let mut schedule = cfg.topology_schedule.clone();
+        schedule.sort_by_key(|(r, _)| *r);
+        let mut net = SimNetwork {
+            mixing,
+            ledger: CommLedger::default(),
+            degrees,
+            clock: vec![0.0; m],
+            streams,
+            straggle,
+            round: 0,
+            sched_next: 0,
+            epoch: 0,
+            last_events: Vec::new(),
+            cfg: NetConfig { topology_schedule: schedule, ..cfg },
+            graph,
+        };
+        // A schedule entry at round 0 replaces the initial graph.
+        net.advance_schedule();
+        net
+    }
+
+    /// Indices of the nodes chosen as stragglers.
+    pub fn stragglers(&self) -> Vec<usize> {
+        (0..self.m())
+            .filter(|&i| self.straggle[i] > 0.0)
+            .collect()
+    }
+
+    /// Per-node virtual clocks (s).
+    pub fn clocks(&self) -> &[f64] {
+        &self.clock
+    }
+
+    fn m(&self) -> usize {
+        self.graph.m
+    }
+
+    fn advance_schedule(&mut self) {
+        let sched = &self.cfg.topology_schedule;
+        let mut switched = None;
+        while self.sched_next < sched.len() && sched[self.sched_next].0 <= self.round {
+            switched = Some(sched[self.sched_next].1);
+            self.sched_next += 1;
+        }
+        if let Some(topo) = switched {
+            let graph = Graph::build(topo, self.m());
+            self.mixing = MixingMatrix::metropolis(&graph);
+            self.degrees = (0..graph.m).map(|i| graph.degree(i)).collect();
+            self.graph = graph;
+            self.epoch += 1;
+        }
+    }
+
+    /// The shared engine behind both exchange flavours: pay the bytes,
+    /// schedule every copy, drain arrivals in time order, advance clocks.
+    fn simulate<T>(&mut self, payloads: Vec<T>, bytes: &[usize]) -> Inbox<T> {
+        let m = self.m();
+        assert_eq!(payloads.len(), m);
+        self.advance_schedule();
+
+        // -- ledger: bytes leave the NIC whether or not they arrive -------
+        for (b, deg) in bytes.iter().zip(&self.degrees) {
+            self.ledger.total_bytes += (b * deg) as u64;
+            self.ledger.messages += *deg as u64;
+        }
+        self.ledger.gossip_rounds += 1;
+
+        // -- schedule all copies; draw jitter/drops deterministically -----
+        struct Flight {
+            sender: usize,
+            receiver: usize,
+            dropped: bool,
+        }
+        let mut queue = EventQueue::new();
+        let mut done = vec![0.0f64; m]; // own-send completion per node
+        for i in 0..m {
+            let start = self.clock[i] + self.straggle[i];
+            let tx = bytes[i] as f64 / self.cfg.bandwidth_bytes_per_s;
+            let mut depart = start;
+            for &nb in self.graph.neighbors(i) {
+                depart += tx;
+                let jitter = if self.cfg.jitter_s > 0.0 {
+                    self.streams[i].uniform() * self.cfg.jitter_s
+                } else {
+                    0.0
+                };
+                let dropped =
+                    self.cfg.drop_rate > 0.0 && self.streams[i].bernoulli(self.cfg.drop_rate);
+                queue.push(
+                    depart + self.cfg.latency_s + jitter,
+                    Flight { sender: i, receiver: nb, dropped },
+                );
+            }
+            done[i] = depart;
+        }
+
+        // -- drain arrivals in virtual-time order -------------------------
+        let payloads: Vec<Arc<T>> = payloads.into_iter().map(Arc::new).collect();
+        let mut inbox: Inbox<T> = vec![Vec::new(); m];
+        let mut ready = done;
+        self.last_events.clear();
+        while let Some((t, c)) = queue.pop() {
+            self.last_events.push(Arrival {
+                t_s: t,
+                sender: c.sender,
+                receiver: c.receiver,
+                bytes: bytes[c.sender],
+                dropped: c.dropped,
+            });
+            if c.dropped {
+                self.ledger.dropped_messages += 1;
+                continue;
+            }
+            inbox[c.receiver].push((c.sender, payloads[c.sender].clone()));
+            if t > ready[c.receiver] {
+                ready[c.receiver] = t;
+            }
+        }
+
+        // -- local barrier: each node proceeds once ITS inbox is complete -
+        self.clock = ready;
+        let horizon = self.clock.iter().fold(0.0f64, |a, &b| a.max(b));
+        self.ledger.network_time_s = horizon;
+        self.round += 1;
+
+        // Canonical inbox order (ascending sender) so downstream float
+        // reductions match the synchronous transport bit-for-bit.
+        for ib in inbox.iter_mut() {
+            ib.sort_by_key(|(s, _)| *s);
+        }
+        inbox
+    }
+
+    /// Topology in force right now (changes under a schedule).
+    pub fn current_topology(&self) -> Topology {
+        self.graph.topology
+    }
+}
+
+impl Transport for SimNetwork {
+    fn m(&self) -> usize {
+        SimNetwork::m(self)
+    }
+
+    fn mixing(&self) -> &MixingMatrix {
+        &self.mixing
+    }
+
+    fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn ledger(&self) -> &CommLedger {
+        &self.ledger
+    }
+
+    fn graph_epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+        let bytes: Vec<usize> = msgs.iter().map(Compressed::wire_bytes).collect();
+        self.simulate(msgs, &bytes)
+    }
+
+    fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+        let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes(v.len())).collect();
+        self.simulate(vecs.to_vec(), &bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::Network;
+    use crate::topology::Topology;
+
+    fn event_cfg() -> NetConfig {
+        NetConfig { mode: NetMode::Event, ..NetConfig::default() }
+    }
+
+    fn ring(m: usize) -> Graph {
+        Graph::build(Topology::Ring, m)
+    }
+
+    #[test]
+    fn benign_sim_matches_sync_inbox_and_ledger() {
+        let rows: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32; 5]).collect();
+        let mut sync = Network::new(ring(6));
+        let mut sim = SimNetwork::new(ring(6), event_cfg(), 1);
+        let a = sync.exchange_dense(&rows);
+        let b = Transport::exchange_dense(&mut sim, &rows);
+        assert_eq!(a.len(), b.len());
+        for (ia, ib) in a.iter().zip(&b) {
+            let sa: Vec<_> = ia.iter().map(|(s, v)| (*s, v.as_ref().clone())).collect();
+            let sb: Vec<_> = ib.iter().map(|(s, v)| (*s, v.as_ref().clone())).collect();
+            assert_eq!(sa, sb);
+        }
+        assert_eq!(sync.ledger.total_bytes, sim.ledger.total_bytes);
+        assert_eq!(sync.ledger.messages, sim.ledger.messages);
+        assert_eq!(sync.ledger.gossip_rounds, sim.ledger.gossip_rounds);
+        assert_eq!(sim.ledger.dropped_messages, 0);
+        // Equal message sizes on a ring: identical round time too.
+        assert!((sync.ledger.network_time_s - sim.ledger.network_time_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drops_shrink_inboxes_and_are_counted() {
+        let mut cfg = event_cfg();
+        cfg.drop_rate = 0.5;
+        let mut sim = SimNetwork::new(ring(8), cfg, 7);
+        let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 4]).collect();
+        let mut delivered = 0u64;
+        let rounds = 50;
+        for _ in 0..rounds {
+            let inbox = Transport::exchange_dense(&mut sim, &rows);
+            delivered += inbox.iter().map(|ib| ib.len() as u64).sum::<u64>();
+        }
+        let sent = sim.ledger.messages;
+        assert_eq!(sent, rounds * 16); // ring of 8: 16 edges-directions
+        assert_eq!(delivered + sim.ledger.dropped_messages, sent);
+        // ~50% loss, generously bounded.
+        let rate = sim.ledger.dropped_messages as f64 / sent as f64;
+        assert!((0.35..0.65).contains(&rate), "drop rate {rate}");
+        // Bytes are paid for dropped messages too (they left the NIC).
+        let mut sync = Network::new(ring(8));
+        for _ in 0..rounds {
+            sync.exchange_dense(&rows);
+        }
+        assert_eq!(sim.ledger.total_bytes, sync.ledger.total_bytes);
+    }
+
+    #[test]
+    fn identical_seeds_identical_realizations() {
+        let mut cfg = event_cfg();
+        cfg.drop_rate = 0.3;
+        cfg.jitter_s = 5e-4;
+        let rows: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32; 3]).collect();
+        let run = |seed| {
+            let mut sim = SimNetwork::new(ring(6), cfg.clone(), seed);
+            let mut log = Vec::new();
+            for _ in 0..10 {
+                Transport::exchange_dense(&mut sim, &rows);
+                log.extend(sim.last_events.iter().copied().map(|a| {
+                    (a.sender, a.receiver, a.dropped, a.t_s.to_bits())
+                }));
+            }
+            log
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn straggler_delays_propagate_through_clocks() {
+        let mut cfg = event_cfg();
+        cfg.straggler_frac = 0.2; // 1 of 5
+        cfg.straggler_delay_s = 0.5;
+        let mut sim = SimNetwork::new(ring(5), cfg, 11);
+        let lag = sim.stragglers();
+        assert_eq!(lag.len(), 1);
+        let rows: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32; 2]).collect();
+        Transport::exchange_dense(&mut sim, &rows);
+        let s = lag[0];
+        // The straggler's neighbours waited for it; a node two hops away
+        // did not (one-hop-per-round propagation).
+        let nb = (s + 1) % 5;
+        let far = (s + 3) % 5; // distance ≥ 2 on a 5-ring
+        assert!(sim.clocks()[nb] > sim.clocks()[far] + 0.4);
+        // Event log arrivals are time-sorted and the straggler's sends
+        // come last.
+        let times: Vec<f64> = sim.last_events.iter().map(|a| a.t_s).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        let last = sim.last_events.last().unwrap();
+        assert_eq!(last.sender, s);
+    }
+
+    #[test]
+    fn topology_schedule_switches_graph() {
+        let mut cfg = event_cfg();
+        cfg.topology_schedule = vec![(2, Topology::Complete)];
+        let mut sim = SimNetwork::new(ring(5), cfg, 1);
+        let rows: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32]).collect();
+        Transport::exchange_dense(&mut sim, &rows); // round 0: ring
+        Transport::exchange_dense(&mut sim, &rows); // round 1: ring
+        assert_eq!(sim.current_topology().name(), "ring");
+        let inbox = Transport::exchange_dense(&mut sim, &rows); // round 2: complete
+        assert_eq!(sim.current_topology().name(), "complete");
+        assert!(inbox.iter().all(|ib| ib.len() == 4));
+    }
+}

@@ -1,0 +1,266 @@
+//! Sim-subsystem acceptance tests: benign-network equivalence with the
+//! synchronous engine, bit-reproducibility across thread counts,
+//! drop-rate accounting, straggler virtual-time ordering, and the
+//! `netsweep` harness end-to-end.
+
+use c2dfb::collective::Transport;
+use c2dfb::config::{Algorithm, ExperimentConfig};
+use c2dfb::coordinator::{experiments, run_with_task, run_with_task_shared};
+use c2dfb::metrics::RunMetrics;
+use c2dfb::sim::{NetConfig, NetMode, SimNetwork};
+use c2dfb::tasks::QuadraticTask;
+use c2dfb::topology::{Graph, Topology};
+
+fn quad_cfg(algo: Algorithm) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        algorithm: algo,
+        nodes: 6,
+        rounds: 8,
+        inner_steps: 8,
+        eta_out: 0.2,
+        eta_in: 0.3,
+        gamma_out: 0.8,
+        gamma_in: 0.6,
+        lambda: 50.0,
+        compressor: "topk:0.5".into(),
+        eval_every: 2,
+        ..ExperimentConfig::default()
+    };
+    if algo == Algorithm::Madsbo || algo == Algorithm::Mdbo {
+        cfg.eta_out = 0.4;
+    }
+    cfg
+}
+
+fn trace_bits(m: &RunMetrics) -> Vec<(usize, u64, u64)> {
+    m.trace
+        .iter()
+        .map(|p| (p.round, p.loss.to_bits(), p.grad_norm.to_bits()))
+        .collect()
+}
+
+/// Acceptance criterion: with drop_rate = 0, zero jitter and no
+/// stragglers, the event engine reproduces the synchronous engine's
+/// RunMetrics — bytes, rounds, messages and the full loss trace — exactly,
+/// for every algorithm.
+#[test]
+fn event_engine_reproduces_sync_engine_exactly() {
+    for algo in [
+        Algorithm::C2dfb,
+        Algorithm::C2dfbNc,
+        Algorithm::Madsbo,
+        Algorithm::Mdbo,
+    ] {
+        let task = QuadraticTask::generate(6, 10, 0.8, 91);
+        let cfg_sync = quad_cfg(algo);
+        let mut cfg_sim = quad_cfg(algo);
+        cfg_sim.network.mode = NetMode::Event;
+
+        let a = run_with_task(&task, &cfg_sync).expect(algo.name());
+        let b = run_with_task(&task, &cfg_sim).expect(algo.name());
+
+        assert_eq!(a.ledger.total_bytes, b.ledger.total_bytes, "{}", algo.name());
+        assert_eq!(a.ledger.gossip_rounds, b.ledger.gossip_rounds, "{}", algo.name());
+        assert_eq!(a.ledger.messages, b.ledger.messages, "{}", algo.name());
+        assert_eq!(b.ledger.dropped_messages, 0, "{}", algo.name());
+        assert_eq!(trace_bits(&a), trace_bits(&b), "{} trajectory diverged", algo.name());
+        // Same message sizes on a ring every round ⇒ same virtual time.
+        assert!(
+            (a.ledger.network_time_s - b.ledger.network_time_s).abs()
+                < 1e-9 * a.ledger.network_time_s.max(1.0),
+            "{}: {} vs {}",
+            algo.name(),
+            a.ledger.network_time_s,
+            b.ledger.network_time_s
+        );
+    }
+}
+
+/// Same seed ⇒ identical RunMetrics at any thread-pool width, even with
+/// drops and jitter in play (transport randomness lives in per-sender
+/// streams, compute fans out with node-ordered reductions).
+#[test]
+fn runs_are_bit_identical_across_thread_counts() {
+    let task = QuadraticTask::generate(6, 12, 0.8, 92);
+    let run_at = |threads: usize| {
+        let mut cfg = quad_cfg(Algorithm::C2dfb);
+        cfg.network.mode = NetMode::Event;
+        cfg.network.drop_rate = 0.1;
+        cfg.network.jitter_s = 2e-4;
+        cfg.network.threads = threads;
+        run_with_task_shared(&task, &cfg).unwrap()
+    };
+    let reference = run_at(1);
+    for threads in [2, 4, 8] {
+        let m = run_at(threads);
+        assert_eq!(trace_bits(&reference), trace_bits(&m), "{threads} threads");
+        assert_eq!(reference.ledger.total_bytes, m.ledger.total_bytes);
+        assert_eq!(
+            reference.ledger.dropped_messages,
+            m.ledger.dropped_messages,
+            "drop realization must not depend on thread count"
+        );
+        assert_eq!(
+            reference.oracles.first_order, m.oracles.first_order,
+            "oracle accounting must not depend on thread count"
+        );
+    }
+}
+
+/// Ledger invariant under loss: sent = delivered + dropped, with the
+/// empirical drop rate near the configured one, and dropped messages
+/// surfacing in the trace/CSV.
+#[test]
+fn drop_rate_accounting_is_exact() {
+    let cfg = NetConfig {
+        mode: NetMode::Event,
+        drop_rate: 0.2,
+        ..NetConfig::default()
+    };
+    let mut net = SimNetwork::new(Graph::build(Topology::TwoHopRing, 8), cfg, 5);
+    let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 16]).collect();
+    let mut delivered = 0u64;
+    for _ in 0..100 {
+        delivered += net
+            .exchange_dense(&rows)
+            .iter()
+            .map(|ib| ib.len() as u64)
+            .sum::<u64>();
+    }
+    assert_eq!(delivered + net.ledger.dropped_messages, net.ledger.messages);
+    let rate = net.ledger.dropped_messages as f64 / net.ledger.messages as f64;
+    assert!((0.15..0.25).contains(&rate), "empirical drop rate {rate}");
+
+    // End-to-end: the trace carries the cumulative dropped counter.
+    let task = QuadraticTask::generate(6, 8, 0.5, 93);
+    let mut ecfg = quad_cfg(Algorithm::C2dfb);
+    ecfg.network.mode = NetMode::Event;
+    ecfg.network.drop_rate = 0.1;
+    let m = run_with_task(&task, &ecfg).unwrap();
+    assert!(m.ledger.dropped_messages > 0);
+    assert_eq!(m.trace.last().unwrap().dropped_msgs, m.ledger.dropped_messages);
+    let csv = m.to_csv();
+    assert!(csv.lines().next().unwrap().ends_with(",dropped"));
+}
+
+/// Straggler ordering in virtual time: the event log is time-sorted, the
+/// straggler's copies arrive after every healthy node's, and the run's
+/// virtual time grows by ~the straggler delay per gossip round.
+#[test]
+fn straggler_virtual_time_ordering() {
+    let delay = 0.25;
+    let cfg = NetConfig {
+        mode: NetMode::Event,
+        straggler_frac: 0.15, // 1 of 8
+        straggler_delay_s: delay,
+        ..NetConfig::default()
+    };
+    let mut net = SimNetwork::new(Graph::build(Topology::Ring, 8), cfg, 17);
+    let lag = net.stragglers();
+    assert_eq!(lag.len(), 2); // ceil(0.15 * 8)
+    let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 4]).collect();
+    let rounds = 5;
+    for _ in 0..rounds {
+        net.exchange_dense(&rows);
+        let times: Vec<f64> = net.last_events.iter().map(|a| a.t_s).collect();
+        assert!(
+            times.windows(2).all(|w| w[0] <= w[1]),
+            "event log must be sorted by virtual time"
+        );
+        // Every arrival from a straggler postdates every arrival from a
+        // non-straggler whose clock isn't already dragged by one.
+        let first_straggler_arrival = net
+            .last_events
+            .iter()
+            .find(|a| lag.contains(&a.sender))
+            .map(|a| a.t_s)
+            .unwrap();
+        assert!(first_straggler_arrival >= delay);
+    }
+    // Virtual time accumulated ≥ rounds × delay (the lag re-applies every
+    // round and propagates to neighbours' clocks).
+    assert!(
+        net.ledger.network_time_s >= rounds as f64 * delay,
+        "virtual time {} after {rounds} rounds",
+        net.ledger.network_time_s
+    );
+
+    // Sanity at the run level: stragglers inflate virtual time, not bytes.
+    let task = QuadraticTask::generate(6, 8, 0.5, 94);
+    let mut benign = quad_cfg(Algorithm::C2dfb);
+    benign.network.mode = NetMode::Event;
+    let mut slow = benign.clone();
+    slow.network.straggler_frac = 0.2;
+    slow.network.straggler_delay_s = 0.1;
+    let a = run_with_task(&task, &benign).unwrap();
+    let b = run_with_task(&task, &slow).unwrap();
+    assert_eq!(a.ledger.total_bytes, b.ledger.total_bytes);
+    assert!(b.ledger.network_time_s > a.ledger.network_time_s * 10.0);
+}
+
+/// Time-varying topology: a schedule switch changes message fan-out (and
+/// therefore bytes) mid-run, and the dense baselines keep converging.
+#[test]
+fn topology_schedule_changes_cost_profile() {
+    let task = QuadraticTask::generate(6, 8, 0.5, 95);
+    let mut stat = quad_cfg(Algorithm::Mdbo);
+    stat.network.mode = NetMode::Event;
+    let mut dyn_cfg = stat.clone();
+    dyn_cfg
+        .network
+        .parse_schedule("20:complete", dyn_cfg.seed)
+        .unwrap();
+    let a = run_with_task(&task, &stat).unwrap();
+    let b = run_with_task(&task, &dyn_cfg).unwrap();
+    // Complete graph from gossip round 20 on ⇒ strictly more messages.
+    assert!(b.ledger.messages > a.ledger.messages);
+    assert!(b.final_point().unwrap().loss.is_finite());
+}
+
+/// The compressed inner loop resyncs its reference points when the graph
+/// epoch changes: C²DFB stays stable and keeps improving across a
+/// topology switch (rather than silently mixing with a stale matrix).
+#[test]
+fn c2dfb_resyncs_reference_points_across_topology_switch() {
+    let task = QuadraticTask::generate(6, 8, 0.5, 96);
+    let mut cfg = quad_cfg(Algorithm::C2dfb);
+    cfg.rounds = 40;
+    cfg.eval_every = 10;
+    cfg.network.mode = NetMode::Event;
+    // c2dfb pays (2 + 4K) gossip rounds per outer round; switch a few
+    // outer rounds in, then again later.
+    cfg.network
+        .parse_schedule("150:2hop,600:complete", cfg.seed)
+        .unwrap();
+    let m = run_with_task(&task, &cfg).unwrap();
+    let first = m.trace.first().unwrap();
+    let last = m.final_point().unwrap();
+    assert!(last.loss.is_finite());
+    assert!(last.grad_norm.is_finite());
+    assert!(
+        last.grad_norm < first.grad_norm * 0.5,
+        "hypergrad {} -> {} across topology switches",
+        first.grad_norm,
+        last.grad_norm
+    );
+}
+
+/// `c2dfb netsweep --tiny` end-to-end (the CLI calls exactly this),
+/// including its internal sync ≡ ideal-sim assertion.
+#[test]
+fn netsweep_tiny_completes() {
+    let dir = std::env::temp_dir().join("c2dfb_netsweep_tiny");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = experiments::HarnessOpts {
+        rounds: 4,
+        out_dir: dir.to_str().unwrap().to_string(),
+        seed: 42,
+        ..Default::default()
+    };
+    let runs = experiments::netsweep(&opts, true).expect("netsweep failed");
+    assert_eq!(runs.len(), 6 * 3); // 6 regimes × 3 algorithms
+    assert!(runs.iter().all(|r| !r.trace.is_empty()));
+    // Traces landed on disk.
+    let n_files = std::fs::read_dir(dir.join("netsweep")).unwrap().count();
+    assert_eq!(n_files, 6 * 3 * 2); // csv + json each
+}
