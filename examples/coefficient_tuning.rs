@@ -9,7 +9,7 @@
 //! ```
 
 use c2dfb::config::{Algorithm, ExperimentConfig};
-use c2dfb::coordinator::{run_with_registry, summarize, write_runs};
+use c2dfb::coordinator::{summarize, write_runs, Runner};
 use c2dfb::data::partition::Partition;
 use c2dfb::runtime::ArtifactRegistry;
 
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
             cfg.eta_in = 0.1;
         }
         println!("--- {} ---", algo.name());
-        let m = run_with_registry(&reg, &cfg)?;
+        let m = Runner::new(&cfg).registry(&reg).run()?;
         println!("{}", summarize(&m));
         if let Some(p) = m.time_to_accuracy(0.7) {
             println!(

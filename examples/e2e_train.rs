@@ -14,7 +14,7 @@
 //! ```
 
 use c2dfb::config::{Algorithm, ExperimentConfig};
-use c2dfb::coordinator::{run_with_registry, summarize};
+use c2dfb::coordinator::{summarize, Runner};
 use c2dfb::data::partition::Partition;
 use c2dfb::runtime::ArtifactRegistry;
 use c2dfb::topology::Topology;
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         "e2e: C²DFB, hyper-representation (dx=85k backbone / dy=650 head), \
          m=10 ER(0.4), het 0.8, top-k 30%, {rounds} rounds\n"
     );
-    let metrics = run_with_registry(&reg, &cfg)?;
+    let metrics = Runner::new(&cfg).registry(&reg).run()?;
 
     println!("round  comm(MB)   sim-t(s)  wall(s)   loss      acc     ‖∇ψ̂‖");
     for p in &metrics.trace {

@@ -9,7 +9,7 @@
 //! ```
 
 use c2dfb::config::{Algorithm, ExperimentConfig};
-use c2dfb::coordinator::{run_with_registry, summarize, write_runs};
+use c2dfb::coordinator::{summarize, write_runs, Runner};
 use c2dfb::data::partition::Partition;
 use c2dfb::runtime::ArtifactRegistry;
 
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = base.clone();
         cfg.algorithm = algo;
         println!("--- {} ---", algo.name());
-        let m = run_with_registry(&reg, &cfg)?;
+        let m = Runner::new(&cfg).registry(&reg).run()?;
         println!("{}", summarize(&m));
         runs.push(m);
     }

@@ -6,7 +6,7 @@
 //! ```
 
 use c2dfb::config::ExperimentConfig;
-use c2dfb::coordinator::{run_with_registry, summarize};
+use c2dfb::coordinator::{summarize, Runner};
 use c2dfb::data::partition::Partition;
 use c2dfb::runtime::ArtifactRegistry;
 
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     // 3. Run. All compute goes through the PJRT-loaded Pallas/JAX
     //    artifacts; all communication through the simulated gossip network
     //    with exact byte accounting.
-    let metrics = run_with_registry(&reg, &cfg)?;
+    let metrics = Runner::new(&cfg).registry(&reg).run()?;
 
     println!("\nround  comm(MB)  loss     accuracy");
     for p in &metrics.trace {

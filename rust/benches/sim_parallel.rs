@@ -8,10 +8,24 @@
 //! ```
 
 use c2dfb::config::{Algorithm, ExperimentConfig};
-use c2dfb::coordinator::{run_with_task, run_with_task_shared};
+use c2dfb::coordinator::Runner;
 use c2dfb::tasks::QuadraticTask;
 use c2dfb::util::bench::{black_box, Bencher};
 use c2dfb::util::json::Json;
+
+fn run_with_task(
+    task: &QuadraticTask,
+    cfg: &ExperimentConfig,
+) -> anyhow::Result<c2dfb::metrics::RunMetrics> {
+    Runner::new(cfg).task(task).run()
+}
+
+fn run_with_task_shared(
+    task: &QuadraticTask,
+    cfg: &ExperimentConfig,
+) -> anyhow::Result<c2dfb::metrics::RunMetrics> {
+    Runner::new(cfg).shared_task(task).run()
+}
 
 fn cfg(nodes: usize, threads: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig {

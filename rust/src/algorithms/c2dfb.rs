@@ -12,15 +12,18 @@
 //! 4. **Tracker update** (communicate s_x, dense):
 //!    `(s_i)_x ← (s_i)_x + γ_out Σ_j w_ij ((s_j)_x − (s_i)_x) + u_i^{t+1} − u_i^t`
 //!
-//! With `naive = true` the inner loops use the error-feedback
-//! naive-compression protocol instead of reference points — the paper's
-//! C²DFB(nc) ablation (same message sizes, worse error dynamics).
+//! With `naive = true` ([`C2dfb::new`]) the inner loops use the
+//! error-feedback naive-compression protocol instead of reference points —
+//! the paper's C²DFB(nc) ablation (same message sizes, worse error
+//! dynamics).
 //!
 //! All communication goes through the generic [`Transport`], and the
 //! per-node oracle batches run through [`GradFn`]/[`RunContext::par_nodes`]
-//! so they can fan out over the thread pool for `Sync` tasks.
+//! so they can fan out over the thread pool for `Sync` tasks.  The outer
+//! loop itself lives in [`super::drive`]; this module only implements
+//! [`BilevelAlgorithm::init`]/[`BilevelAlgorithm::step`].
 
-use super::RunContext;
+use super::{BilevelAlgorithm, RunContext, StepOutcome};
 use crate::collective::Transport;
 use crate::compress::{self, Compressor};
 use crate::optim::{
@@ -94,47 +97,98 @@ fn inner_pass<T: Transport>(
     }
 }
 
-pub fn run<T: Transport>(ctx: &mut RunContext<T>, naive: bool) -> Result<()> {
-    let m = ctx.task.nodes();
-    let lambda = ctx.cfg.lambda as f32;
-    let compressor = compress::parse(&ctx.cfg.compressor)
-        .map_err(anyhow::Error::msg)?;
-    let inner_cfg = InnerConfig {
-        eta: ctx.cfg.eta_in / (1.0 + ctx.cfg.lambda), // h = f + λg is (λL)-smooth
-        gamma: ctx.cfg.gamma_in,
-        k_steps: ctx.cfg.inner_steps,
-    };
-    let inner_cfg_z = InnerConfig {
-        eta: ctx.cfg.eta_in,
-        gamma: ctx.cfg.gamma_in,
-        k_steps: ctx.cfg.inner_steps,
-    };
-    let pool = ctx.pool;
+/// C²DFB (Algorithm 1 over Algorithm 2) as a step-driven
+/// [`BilevelAlgorithm`]; `naive = true` is the C²DFB(nc) ablation.
+pub struct C2dfb {
+    naive: bool,
+    st: Option<St>,
+}
 
-    // --- init: identical models on every node (paper setup) -------------
-    let x0 = ctx.task.init_x(&mut ctx.rng);
-    let y0 = ctx.task.init_y(&mut ctx.rng);
-    let mut xs: Vec<Vec<f32>> = vec![x0; m];
-    let mut ys: Vec<Vec<f32>> = vec![y0.clone(); m];
-    let mut zs: Vec<Vec<f32>> = vec![y0; m];
-    let mut y_state = InnerState::new(&ctx.net, ctx.task.dy());
-    let mut z_state = InnerState::new(&ctx.net, ctx.task.dy());
+/// Iterate state built by `init` and advanced by `step`.
+struct St {
+    lambda: f32,
+    compressor: Box<dyn Compressor>,
+    inner_cfg_y: InnerConfig,
+    inner_cfg_z: InnerConfig,
+    xs: Vec<Vec<f32>>,
+    ys: Vec<Vec<f32>>,
+    zs: Vec<Vec<f32>>,
+    y_state: InnerState,
+    z_state: InnerState,
+    tracker: DenseTracker,
+}
 
-    // s_x⁰ = u_i⁰ with the initial (y, z).
-    let mut u: Vec<Vec<f32>> =
-        ctx.par_nodes(|task, i| task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))?;
-    ctx.metrics.oracles.first_order += m as u64;
-    let mut tracker = DenseTracker::new(u.clone());
+impl C2dfb {
+    /// `naive` selects the error-feedback naive-compression inner protocol
+    /// (the paper's C²DFB(nc)) instead of reference points.
+    pub fn new(naive: bool) -> C2dfb {
+        C2dfb { naive, st: None }
+    }
+}
 
-    let grad_norm0 = crate::linalg::norm2(&crate::linalg::mean_rows(&u));
-    ctx.record(0, &xs, &ys, grad_norm0)?;
+impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
+    fn name(&self) -> &'static str {
+        if self.naive {
+            "c2dfb_nc"
+        } else {
+            "c2dfb"
+        }
+    }
 
-    for t in 0..ctx.cfg.rounds {
+    fn init(&mut self, ctx: &mut RunContext<'_, T>) -> Result<StepOutcome> {
+        let m = ctx.task.nodes();
+        let lambda = ctx.cfg.lambda as f32;
+        let compressor = compress::parse(&ctx.cfg.compressor).map_err(anyhow::Error::msg)?;
+        let inner_cfg_y = InnerConfig {
+            eta: ctx.cfg.eta_in / (1.0 + ctx.cfg.lambda), // h = f + λg is (λL)-smooth
+            gamma: ctx.cfg.gamma_in,
+            k_steps: ctx.cfg.inner_steps,
+        };
+        let inner_cfg_z = InnerConfig {
+            eta: ctx.cfg.eta_in,
+            gamma: ctx.cfg.gamma_in,
+            k_steps: ctx.cfg.inner_steps,
+        };
+
+        // Identical models on every node (paper setup).
+        let x0 = ctx.task.init_x(&mut ctx.rng);
+        let y0 = ctx.task.init_y(&mut ctx.rng);
+        let xs: Vec<Vec<f32>> = vec![x0; m];
+        let ys: Vec<Vec<f32>> = vec![y0.clone(); m];
+        let zs: Vec<Vec<f32>> = vec![y0; m];
+        let y_state = InnerState::new(&ctx.net, ctx.task.dy());
+        let z_state = InnerState::new(&ctx.net, ctx.task.dy());
+
+        // s_x⁰ = u_i⁰ with the initial (y, z).
+        let u: Vec<Vec<f32>> =
+            ctx.par_nodes(|task, i| task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))?;
+        ctx.metrics.oracles.first_order += m as u64;
+        let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&u));
+        self.st = Some(St {
+            lambda,
+            compressor,
+            inner_cfg_y,
+            inner_cfg_z,
+            xs,
+            ys,
+            zs,
+            y_state,
+            z_state,
+            tracker: DenseTracker::new(u),
+        });
+        Ok(StepOutcome { grad_norm })
+    }
+
+    fn step(&mut self, ctx: &mut RunContext<'_, T>, _round: usize) -> Result<StepOutcome> {
+        let st = self.st.as_mut().expect("init() must run before step()");
+        let m = ctx.task.nodes();
+        let pool = ctx.pool;
+        let lambda = st.lambda;
+
         // -- 1. outer mixing + descent (pays one dense x exchange) -------
-        let mixed = ctx.net.mix_paid(ctx.cfg.gamma_out, &xs);
-        for i in 0..m {
-            xs[i] = mixed[i].clone();
-            for (xk, sk) in xs[i].iter_mut().zip(&tracker.s[i]) {
+        st.xs = ctx.net.mix_paid(ctx.cfg.gamma_out, &st.xs);
+        for (xi, si) in st.xs.iter_mut().zip(&st.tracker.s) {
+            for (xk, sk) in xi.iter_mut().zip(si) {
                 *xk -= ctx.cfg.eta_out as f32 * sk;
             }
         }
@@ -142,18 +196,23 @@ pub fn run<T: Transport>(ctx: &mut RunContext<T>, naive: bool) -> Result<()> {
         // -- 2. inner loops (compressed) ----------------------------------
         let shared = ctx.task_shared().filter(|_| pool.threads() > 1);
         for (cfg, state, d, oracle) in [
-            (&inner_cfg, &mut y_state, &mut ys, InnerOracle::Y { lambda }),
-            (&inner_cfg_z, &mut z_state, &mut zs, InnerOracle::Z),
+            (
+                &st.inner_cfg_y,
+                &mut st.y_state,
+                &mut st.ys,
+                InnerOracle::Y { lambda },
+            ),
+            (&st.inner_cfg_z, &mut st.z_state, &mut st.zs, InnerOracle::Z),
         ] {
             let calls = inner_pass(
-                naive,
+                self.naive,
                 cfg,
                 &mut ctx.net,
-                compressor.as_ref(),
+                st.compressor.as_ref(),
                 &mut ctx.rng,
                 state,
                 d,
-                &xs,
+                &st.xs,
                 oracle,
                 ctx.task,
                 shared,
@@ -164,22 +223,22 @@ pub fn run<T: Transport>(ctx: &mut RunContext<T>, naive: bool) -> Result<()> {
 
         // -- 3. local hypergradients --------------------------------------
         let u_new: Vec<Vec<f32>> =
-            ctx.par_nodes(|task, i| task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))?;
+            ctx.par_nodes(|task, i| task.hypergrad(i, &st.xs[i], &st.ys[i], &st.zs[i], lambda))?;
         ctx.metrics.oracles.first_order += m as u64;
 
         // -- 4. gradient tracking on s_x (pays one dense s exchange) -----
-        tracker.update(&mut ctx.net, ctx.cfg.gamma_out, &u_new);
-        u = u_new;
-
-        // -- eval ---------------------------------------------------------
-        if (t + 1) % ctx.cfg.eval_every == 0 || t + 1 == ctx.cfg.rounds {
-            let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&u));
-            if ctx.record(t + 1, &xs, &ys, grad_norm)? {
-                break; // target accuracy reached
-            }
-        }
+        st.tracker.update(&mut ctx.net, ctx.cfg.gamma_out, &u_new);
+        let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&u_new));
+        Ok(StepOutcome { grad_norm })
     }
-    Ok(())
+
+    fn xs(&self) -> &[Vec<f32>] {
+        &self.st.as_ref().expect("init() must run first").xs
+    }
+
+    fn ys(&self) -> &[Vec<f32>] {
+        &self.st.as_ref().expect("init() must run first").ys
+    }
 }
 
 #[cfg(test)]
@@ -211,7 +270,8 @@ mod tests {
         let task = QuadraticTask::generate(6, 8, 1.0, 21);
         let net = Network::new(Graph::build(Topology::Ring, 6));
         let mut ctx = RunContext::new(&task, net, quad_cfg(rounds));
-        run(&mut ctx, naive).unwrap();
+        let mut algo = C2dfb::new(naive);
+        crate::algorithms::drive(&mut ctx, &mut algo, &mut crate::algorithms::NoObserver).unwrap();
         // Hyper-stationarity of the mean upper model.
         let xbar = {
             // re-derive final xs is not exposed; use grad_norm from trace.
@@ -262,8 +322,14 @@ mod tests {
         cfg.target_accuracy = Some(0.0); // any accuracy qualifies
         cfg.eval_every = 1;
         let mut ctx = RunContext::new(&task, net, cfg);
-        run(&mut ctx, false).unwrap();
-        assert!(ctx.metrics.trace.len() <= 3);
+        let mut algo = C2dfb::new(false);
+        crate::algorithms::drive(&mut ctx, &mut algo, &mut crate::algorithms::NoObserver).unwrap();
+        // The driver checks the target at round 0 already.
+        assert_eq!(ctx.metrics.trace.len(), 1);
+        assert_eq!(
+            ctx.metrics.stop_reason,
+            Some(crate::metrics::StopReason::TargetAccuracy)
+        );
     }
 
     /// The shared-task parallel path is bit-identical to the serial path
@@ -276,7 +342,9 @@ mod tests {
             cfg.network.threads = threads;
             let net = Network::new(Graph::build(Topology::Ring, 6));
             let mut ctx = RunContext::new_shared(&task, net, cfg);
-            run(&mut ctx, false).unwrap();
+            let mut algo = C2dfb::new(false);
+            crate::algorithms::drive(&mut ctx, &mut algo, &mut crate::algorithms::NoObserver)
+                .unwrap();
             ctx.metrics
         };
         let serial = run_with_threads(1);

@@ -18,7 +18,7 @@
 //! (MDBO, by contrast, keeps the published *untracked* gossip SGD and
 //! therefore suffers the full heterogeneity bias — see `mdbo.rs`.)
 
-use super::RunContext;
+use super::{BilevelAlgorithm, RunContext, StepOutcome};
 use crate::collective::Transport;
 use crate::optim::DenseTracker;
 use anyhow::Result;
@@ -28,52 +28,93 @@ const THETA: f32 = 0.3;
 /// Quadratic sub-solver iterations per round.
 pub(crate) const SUBSOLVER_STEPS: usize = 10;
 
-pub fn run<T: Transport>(ctx: &mut RunContext<T>) -> Result<()> {
-    let m = ctx.task.nodes();
-    let dy = ctx.task.dy();
-    let eta_in = ctx.cfg.eta_in as f32;
-    let eta_out = ctx.cfg.eta_out as f32;
-    let gamma = ctx.cfg.gamma_out;
+/// MA-DSBO-style second-order baseline as a step-driven
+/// [`BilevelAlgorithm`].
+#[derive(Default)]
+pub struct Madsbo {
+    st: Option<St>,
+}
 
-    let x0 = ctx.task.init_x(&mut ctx.rng);
-    let y0 = ctx.task.init_y(&mut ctx.rng);
-    let mut xs: Vec<Vec<f32>> = vec![x0; m];
-    let mut ys: Vec<Vec<f32>> = vec![y0; m];
-    let mut vs: Vec<Vec<f32>> = vec![vec![0.0; dy]; m];
-    let mut us: Vec<Vec<f32>> = vec![vec![0.0; ctx.task.dx()]; m];
+/// Iterate state built by `init` and advanced by `step`.
+struct St {
+    eta_in: f32,
+    eta_out: f32,
+    gamma: f64,
+    xs: Vec<Vec<f32>>,
+    ys: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+    us: Vec<Vec<f32>>,
+    /// Lower-level gradient tracker (persists across rounds; MA-DSBO
+    /// warm-starts both y and its tracker).
+    y_tracker: DenseTracker,
+}
 
-    ctx.record(0, &xs, &ys, f64::NAN)?;
+impl Madsbo {
+    pub fn new() -> Madsbo {
+        Madsbo::default()
+    }
+}
 
-    // Lower-level gradient tracker (persists across rounds; MA-DSBO warm-
-    // starts both y and its tracker).
-    let g0: Vec<Vec<f32>> = ctx.par_nodes(|task, i| task.inner_z_grad(i, &xs[i], &ys[i]))?;
-    ctx.metrics.oracles.first_order += m as u64;
-    let mut y_tracker = DenseTracker::new(g0);
+impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
+    fn name(&self) -> &'static str {
+        "madsbo"
+    }
 
-    for t in 0..ctx.cfg.rounds {
+    fn init(&mut self, ctx: &mut RunContext<'_, T>) -> Result<StepOutcome> {
+        let m = ctx.task.nodes();
+        let dy = ctx.task.dy();
+        let x0 = ctx.task.init_x(&mut ctx.rng);
+        let y0 = ctx.task.init_y(&mut ctx.rng);
+        let xs: Vec<Vec<f32>> = vec![x0; m];
+        let ys: Vec<Vec<f32>> = vec![y0; m];
+        let vs: Vec<Vec<f32>> = vec![vec![0.0; dy]; m];
+        let us: Vec<Vec<f32>> = vec![vec![0.0; ctx.task.dx()]; m];
+
+        let g0: Vec<Vec<f32>> = ctx.par_nodes(|task, i| task.inner_z_grad(i, &xs[i], &ys[i]))?;
+        ctx.metrics.oracles.first_order += m as u64;
+        self.st = Some(St {
+            eta_in: ctx.cfg.eta_in as f32,
+            eta_out: ctx.cfg.eta_out as f32,
+            gamma: ctx.cfg.gamma_out,
+            xs,
+            ys,
+            vs,
+            us,
+            y_tracker: DenseTracker::new(g0),
+        });
+        // No hypergradient estimate before the first round.
+        Ok(StepOutcome { grad_norm: f64::NAN })
+    }
+
+    fn step(&mut self, ctx: &mut RunContext<'_, T>, _round: usize) -> Result<StepOutcome> {
+        let st = self.st.as_mut().expect("init() must run before step()");
+        let m = ctx.task.nodes();
+        let (eta_in, eta_out, gamma) = (st.eta_in, st.eta_out, st.gamma);
+
         // -- 1. tracked lower-level loop ----------------------------------
         for _k in 0..ctx.cfg.inner_steps {
-            let mixed = ctx.net.mix_paid(gamma, &ys);
+            let mixed = ctx.net.mix_paid(gamma, &st.ys);
             for i in 0..m {
-                ys[i] = mixed[i]
+                st.ys[i] = mixed[i]
                     .iter()
-                    .zip(&y_tracker.s[i])
+                    .zip(&st.y_tracker.s[i])
                     .map(|(y, sk)| y - eta_in * sk)
                     .collect();
             }
             let g: Vec<Vec<f32>> =
-                ctx.par_nodes(|task, i| task.inner_z_grad(i, &xs[i], &ys[i]))?;
+                ctx.par_nodes(|task, i| task.inner_z_grad(i, &st.xs[i], &st.ys[i]))?;
             ctx.metrics.oracles.first_order += m as u64;
-            y_tracker.update(&mut ctx.net, gamma, &g);
+            st.y_tracker.update(&mut ctx.net, gamma, &g);
         }
 
         // -- 2. tracked quadratic sub-solver for v ≈ H⁻¹ ∇_y f -------------
-        let gyf: Vec<Vec<f32>> = ctx.par_nodes(|task, i| task.grad_y_f(i, &xs[i], &ys[i]))?;
+        let gyf: Vec<Vec<f32>> =
+            ctx.par_nodes(|task, i| task.grad_y_f(i, &st.xs[i], &st.ys[i]))?;
         ctx.metrics.oracles.first_order += m as u64;
         let alpha = eta_in;
         let q0: Vec<Vec<f32>> = {
             let hv: Vec<Vec<f32>> =
-                ctx.par_nodes(|task, i| task.hvp_yy_g(i, &xs[i], &ys[i], &vs[i]))?;
+                ctx.par_nodes(|task, i| task.hvp_yy_g(i, &st.xs[i], &st.ys[i], &st.vs[i]))?;
             ctx.metrics.oracles.second_order += m as u64;
             hv.into_iter()
                 .zip(&gyf)
@@ -82,9 +123,9 @@ pub fn run<T: Transport>(ctx: &mut RunContext<T>) -> Result<()> {
         };
         let mut v_tracker = DenseTracker::new(q0);
         for _n in 0..SUBSOLVER_STEPS {
-            let mixed = ctx.net.mix_paid(gamma, &vs);
+            let mixed = ctx.net.mix_paid(gamma, &st.vs);
             for i in 0..m {
-                vs[i] = mixed[i]
+                st.vs[i] = mixed[i]
                     .iter()
                     .zip(&v_tracker.s[i])
                     .map(|(v, q)| v - alpha * q)
@@ -92,7 +133,7 @@ pub fn run<T: Transport>(ctx: &mut RunContext<T>) -> Result<()> {
             }
             let q: Vec<Vec<f32>> = {
                 let hv: Vec<Vec<f32>> =
-                    ctx.par_nodes(|task, i| task.hvp_yy_g(i, &xs[i], &ys[i], &vs[i]))?;
+                    ctx.par_nodes(|task, i| task.hvp_yy_g(i, &st.xs[i], &st.ys[i], &st.vs[i]))?;
                 ctx.metrics.oracles.second_order += m as u64;
                 hv.into_iter()
                     .zip(&gyf)
@@ -104,39 +145,42 @@ pub fn run<T: Transport>(ctx: &mut RunContext<T>) -> Result<()> {
 
         // -- 3. hypergradient + moving average ----------------------------
         let hyper: Vec<(Vec<f32>, Vec<f32>)> = ctx.par_nodes(|task, i| {
-            let gxf = task.grad_x_f(i, &xs[i], &ys[i])?;
-            let jv = task.jvp_xy_g(i, &xs[i], &ys[i], &vs[i])?;
+            let gxf = task.grad_x_f(i, &st.xs[i], &st.ys[i])?;
+            let jv = task.jvp_xy_g(i, &st.xs[i], &st.ys[i], &st.vs[i])?;
             Ok((gxf, jv))
         })?;
         ctx.metrics.oracles.first_order += m as u64;
         ctx.metrics.oracles.second_order += m as u64;
         for (i, (gxf, jv)) in hyper.into_iter().enumerate() {
-            for k in 0..us[i].len() {
+            for k in 0..st.us[i].len() {
                 let h = gxf[k] - jv[k];
-                us[i][k] = (1.0 - THETA) * us[i][k] + THETA * h;
+                st.us[i][k] = (1.0 - THETA) * st.us[i][k] + THETA * h;
             }
         }
         // Mix the hypergradient estimates (dense exchange).
-        us = ctx.net.mix_paid(gamma, &us);
+        st.us = ctx.net.mix_paid(gamma, &st.us);
 
         // -- 4. upper step -------------------------------------------------
-        let mixed_x = ctx.net.mix_paid(gamma, &xs);
+        let mixed_x = ctx.net.mix_paid(gamma, &st.xs);
         for i in 0..m {
-            xs[i] = mixed_x[i]
+            st.xs[i] = mixed_x[i]
                 .iter()
-                .zip(&us[i])
+                .zip(&st.us[i])
                 .map(|(x, u)| x - eta_out * u)
                 .collect();
         }
 
-        if (t + 1) % ctx.cfg.eval_every == 0 || t + 1 == ctx.cfg.rounds {
-            let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&us));
-            if ctx.record(t + 1, &xs, &ys, grad_norm)? {
-                break;
-            }
-        }
+        let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&st.us));
+        Ok(StepOutcome { grad_norm })
     }
-    Ok(())
+
+    fn xs(&self) -> &[Vec<f32>] {
+        &self.st.as_ref().expect("init() must run first").xs
+    }
+
+    fn ys(&self) -> &[Vec<f32>] {
+        &self.st.as_ref().expect("init() must run first").ys
+    }
 }
 
 #[cfg(test)]
@@ -177,7 +221,8 @@ mod tests {
 
         let net = Network::new(Graph::build(Topology::Ring, 6));
         let mut ctx = super::super::RunContext::new(&task, net, cfg(400));
-        run(&mut ctx).unwrap();
+        let mut algo = Madsbo::new();
+        super::super::drive(&mut ctx, &mut algo, &mut super::super::NoObserver).unwrap();
         let first = ctx.metrics.trace.first().unwrap().loss;
         let last = ctx.metrics.trace.last().unwrap().loss;
         assert!(last.is_finite(), "diverged");
@@ -193,7 +238,8 @@ mod tests {
         let task = QuadraticTask::generate(6, 8, 0.8, 32);
         let net = Network::new(Graph::build(Topology::Ring, 6));
         let mut ctx = super::super::RunContext::new(&task, net, cfg(5));
-        run(&mut ctx).unwrap();
+        let mut algo = Madsbo::new();
+        super::super::drive(&mut ctx, &mut algo, &mut super::super::NoObserver).unwrap();
         assert!(ctx.metrics.oracles.second_order > 0);
         // Per round: 2K (tracked y) + 2N (tracked v) + 2 (u, x) dense
         // exchanges; plus one tracker bootstrap exchange... the ledger

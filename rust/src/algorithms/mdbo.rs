@@ -13,7 +13,7 @@
 //! 3. hypergradient h_i = ∇_x f_i − (∇²_xy g_i)·v (one JVP);
 //! 4. upper gossip step x_i ← mix(x)_i − η_out h_i (dense x exchange).
 
-use super::RunContext;
+use super::{BilevelAlgorithm, RunContext, StepOutcome};
 use crate::collective::Transport;
 use anyhow::Result;
 
@@ -21,28 +21,61 @@ use anyhow::Result;
 /// 15 matches the paper's experimental scale.
 const NEUMANN_TERMS: usize = 15;
 
-pub fn run<T: Transport>(ctx: &mut RunContext<T>) -> Result<()> {
-    let m = ctx.task.nodes();
-    let eta_in = ctx.cfg.eta_in as f32;
-    let eta_out = ctx.cfg.eta_out as f32;
-    let gamma = ctx.cfg.gamma_out;
+/// MDBO (gossip bilevel + Neumann-series hypergradient) as a step-driven
+/// [`BilevelAlgorithm`].
+#[derive(Default)]
+pub struct Mdbo {
+    st: Option<St>,
+}
 
-    let x0 = ctx.task.init_x(&mut ctx.rng);
-    let y0 = ctx.task.init_y(&mut ctx.rng);
-    let mut xs: Vec<Vec<f32>> = vec![x0; m];
-    let mut ys: Vec<Vec<f32>> = vec![y0; m];
+/// Iterate state built by `init` and advanced by `step`.
+struct St {
+    eta_in: f32,
+    eta_out: f32,
+    gamma: f64,
+    xs: Vec<Vec<f32>>,
+    ys: Vec<Vec<f32>>,
+}
 
-    ctx.record(0, &xs, &ys, f64::NAN)?;
+impl Mdbo {
+    pub fn new() -> Mdbo {
+        Mdbo::default()
+    }
+}
 
-    for t in 0..ctx.cfg.rounds {
+impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
+    fn name(&self) -> &'static str {
+        "mdbo"
+    }
+
+    fn init(&mut self, ctx: &mut RunContext<'_, T>) -> Result<StepOutcome> {
+        let m = ctx.task.nodes();
+        let x0 = ctx.task.init_x(&mut ctx.rng);
+        let y0 = ctx.task.init_y(&mut ctx.rng);
+        self.st = Some(St {
+            eta_in: ctx.cfg.eta_in as f32,
+            eta_out: ctx.cfg.eta_out as f32,
+            gamma: ctx.cfg.gamma_out,
+            xs: vec![x0; m],
+            ys: vec![y0; m],
+        });
+        // No hypergradient estimate before the first round.
+        Ok(StepOutcome { grad_norm: f64::NAN })
+    }
+
+    fn step(&mut self, ctx: &mut RunContext<'_, T>, _round: usize) -> Result<StepOutcome> {
+        let st = self.st.as_mut().expect("init() must run before step()");
+        let m = ctx.task.nodes();
+        let (eta_in, eta_out, gamma) = (st.eta_in, st.eta_out, st.gamma);
+
         // -- 1. lower-level gossip GD --------------------------------------
         for _k in 0..ctx.cfg.inner_steps {
-            let mixed = ctx.net.mix_paid(gamma, &ys);
+            let mixed = ctx.net.mix_paid(gamma, &st.ys);
             let g: Vec<Vec<f32>> =
-                ctx.par_nodes(|task, i| task.inner_z_grad(i, &xs[i], &mixed[i]))?;
+                ctx.par_nodes(|task, i| task.inner_z_grad(i, &st.xs[i], &mixed[i]))?;
             ctx.metrics.oracles.first_order += m as u64;
             for i in 0..m {
-                ys[i] = mixed[i]
+                st.ys[i] = mixed[i]
                     .iter()
                     .zip(&g[i])
                     .map(|(y, gk)| y - eta_in * gk)
@@ -51,13 +84,17 @@ pub fn run<T: Transport>(ctx: &mut RunContext<T>) -> Result<()> {
         }
 
         // -- 2. Neumann series with per-term gossip ------------------------
-        let mut ps: Vec<Vec<f32>> = ctx.par_nodes(|task, i| task.grad_y_f(i, &xs[i], &ys[i]))?;
+        let mut ps: Vec<Vec<f32>> =
+            ctx.par_nodes(|task, i| task.grad_y_f(i, &st.xs[i], &st.ys[i]))?;
         ctx.metrics.oracles.first_order += m as u64;
-        let mut vs: Vec<Vec<f32>> = ps.iter().map(|p| p.iter().map(|x| eta_in * x).collect()).collect();
+        let mut vs: Vec<Vec<f32>> = ps
+            .iter()
+            .map(|p| p.iter().map(|x| eta_in * x).collect())
+            .collect();
         for _q in 0..NEUMANN_TERMS {
             ps = ctx.net.mix_paid(gamma, &ps);
             let hp: Vec<Vec<f32>> =
-                ctx.par_nodes(|task, i| task.hvp_yy_g(i, &xs[i], &ys[i], &ps[i]))?;
+                ctx.par_nodes(|task, i| task.hvp_yy_g(i, &st.xs[i], &st.ys[i], &ps[i]))?;
             ctx.metrics.oracles.second_order += m as u64;
             for i in 0..m {
                 for k in 0..ps[i].len() {
@@ -69,31 +106,34 @@ pub fn run<T: Transport>(ctx: &mut RunContext<T>) -> Result<()> {
 
         // -- 3. hypergradient ----------------------------------------------
         let hs: Vec<Vec<f32>> = ctx.par_nodes(|task, i| {
-            let gxf = task.grad_x_f(i, &xs[i], &ys[i])?;
-            let jv = task.jvp_xy_g(i, &xs[i], &ys[i], &vs[i])?;
+            let gxf = task.grad_x_f(i, &st.xs[i], &st.ys[i])?;
+            let jv = task.jvp_xy_g(i, &st.xs[i], &st.ys[i], &vs[i])?;
             Ok(gxf.iter().zip(&jv).map(|(a, b)| a - b).collect::<Vec<f32>>())
         })?;
         ctx.metrics.oracles.first_order += m as u64;
         ctx.metrics.oracles.second_order += m as u64;
 
         // -- 4. upper gossip step ------------------------------------------
-        let mixed_x = ctx.net.mix_paid(gamma, &xs);
+        let mixed_x = ctx.net.mix_paid(gamma, &st.xs);
         for i in 0..m {
-            xs[i] = mixed_x[i]
+            st.xs[i] = mixed_x[i]
                 .iter()
                 .zip(&hs[i])
                 .map(|(x, h)| x - eta_out * h)
                 .collect();
         }
 
-        if (t + 1) % ctx.cfg.eval_every == 0 || t + 1 == ctx.cfg.rounds {
-            let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&hs));
-            if ctx.record(t + 1, &xs, &ys, grad_norm)? {
-                break;
-            }
-        }
+        let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&hs));
+        Ok(StepOutcome { grad_norm })
     }
-    Ok(())
+
+    fn xs(&self) -> &[Vec<f32>] {
+        &self.st.as_ref().expect("init() must run first").xs
+    }
+
+    fn ys(&self) -> &[Vec<f32>] {
+        &self.st.as_ref().expect("init() must run first").ys
+    }
 }
 
 #[cfg(test)]
@@ -134,7 +174,8 @@ mod tests {
 
         let net = Network::new(Graph::build(Topology::Ring, 6));
         let mut ctx = super::super::RunContext::new(&task, net, cfg(300));
-        run(&mut ctx).unwrap();
+        let mut algo = Mdbo::new();
+        super::super::drive(&mut ctx, &mut algo, &mut super::super::NoObserver).unwrap();
         let first = ctx.metrics.trace.first().unwrap().loss;
         let last = ctx.metrics.trace.last().unwrap().loss;
         assert!(last.is_finite(), "diverged");
@@ -153,7 +194,8 @@ mod tests {
 
         let net = Network::new(Graph::build(Topology::Ring, 6));
         let mut ctx = super::super::RunContext::new(&task, net, cfg(10));
-        run(&mut ctx).unwrap();
+        let mut algo = Mdbo::new();
+        super::super::drive(&mut ctx, &mut algo, &mut super::super::NoObserver).unwrap();
         let mdbo_bytes = ctx.metrics.ledger.total_bytes;
 
         let net = Network::new(Graph::build(Topology::Ring, 6));
@@ -162,7 +204,8 @@ mod tests {
         c_cfg.compressor = "topk:0.2".into();
         c_cfg.lambda = 50.0;
         let mut ctx2 = super::super::RunContext::new(&task, net, c_cfg);
-        super::super::c2dfb::run(&mut ctx2, false).unwrap();
+        let mut c2dfb = super::super::C2dfb::new(false);
+        super::super::drive(&mut ctx2, &mut c2dfb, &mut super::super::NoObserver).unwrap();
         let c2dfb_bytes = ctx2.metrics.ledger.total_bytes;
 
         // At EQUAL round counts the structural gap is modest (both move

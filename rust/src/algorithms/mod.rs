@@ -16,6 +16,15 @@
 //! synchronous [`Network`](crate::collective::Network) or the
 //! event-driven [`SimNetwork`](crate::sim::SimNetwork).
 //!
+//! Each method implements [`BilevelAlgorithm`] — `init` builds the iterate
+//! state, `step` executes one outer round — and the [`drive`] loop owns
+//! everything around the steps: evaluation cadence, the communication
+//! ledger mirror, [`StopCondition`](crate::metrics::StopCondition)
+//! checks, and [`RunObserver`] callbacks.  Budgeted runs are therefore
+//! bit-identical prefixes of fixed-round runs.  Use
+//! [`Runner`](crate::coordinator::Runner) unless you are composing the
+//! pieces yourself; see `docs/API.md`.
+//!
 //! Per-node oracle batches go through [`RunContext::par_nodes`]: when the
 //! task is `Sync` (the analytic tasks) and `network.threads > 1`, nodes
 //! evaluate concurrently on a [`NodePool`] with node-ordered results, so
@@ -25,9 +34,13 @@ pub mod c2dfb;
 pub mod madsbo;
 pub mod mdbo;
 
+pub use self::c2dfb::C2dfb;
+pub use self::madsbo::Madsbo;
+pub use self::mdbo::Mdbo;
+
 use crate::collective::Transport;
 use crate::config::{Algorithm, ExperimentConfig};
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, StopReason, TracePoint};
 use crate::sim::NodePool;
 use crate::tasks::BilevelTask;
 use crate::util::rng::Rng;
@@ -89,57 +102,141 @@ impl<'a, T: Transport> RunContext<'a, T> {
         }
     }
 
-    /// Evaluate mean loss/acc over nodes and record a trace point.  Returns
-    /// true if the target accuracy (if any) has been reached.
+    /// Evaluate mean loss/acc over nodes and record a trace point.  The
+    /// communication-ledger mirror is synced by [`drive`] (its single
+    /// owner) before each call, so the point sees current byte totals.
     pub fn record(
         &mut self,
         round: usize,
         xs: &[Vec<f32>],
         ys: &[Vec<f32>],
         grad_norm: f64,
-    ) -> Result<bool> {
-        // The network owns the live byte counters; mirror them into the
-        // run metrics so trace points and summaries see current totals.
-        self.metrics.ledger = self.net.ledger().clone();
+    ) -> Result<()> {
         // Consensus-model evaluation (paper protocol): test the averaged
         // (x̄, ȳ) on every node's validation shard.
         let (loss, acc) = crate::tasks::eval_consensus(self.task, xs, ys)?;
         self.metrics.oracles.evals += self.task.nodes() as u64;
         let consensus = crate::linalg::consensus_err_sq(xs);
         self.metrics.record_eval(round, loss, acc, grad_norm, consensus);
-        Ok(self
-            .cfg
-            .target_accuracy
-            .map(|t| acc >= t)
-            .unwrap_or(false))
+        Ok(())
     }
 }
 
-fn dispatch<T: Transport>(mut ctx: RunContext<T>) -> Result<RunMetrics> {
-    match ctx.cfg.algorithm {
-        Algorithm::C2dfb => c2dfb::run(&mut ctx, false)?,
-        Algorithm::C2dfbNc => c2dfb::run(&mut ctx, true)?,
-        Algorithm::Madsbo => madsbo::run(&mut ctx)?,
-        Algorithm::Mdbo => mdbo::run(&mut ctx)?,
+/// What one outer round reports back to the driver.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// ‖mean hypergradient estimate‖ after the round (`NaN` when the
+    /// algorithm has no estimate yet, e.g. the baselines at round 0).
+    pub grad_norm: f64,
+}
+
+/// A decentralized bilevel method, driven one outer round at a time.
+///
+/// Implementations own their iterate state (models, trackers, inner-loop
+/// caches); the [`drive`] loop owns everything around the steps —
+/// evaluation cadence, stop conditions, observers, and the ledger mirror.
+/// Constructed by [`make_algorithm`] or directly (e.g.
+/// [`C2dfb::new`]`(naive)` for the compression ablation).
+pub trait BilevelAlgorithm<T: Transport> {
+    /// Algorithm identifier (matches [`Algorithm::name`]).
+    fn name(&self) -> &'static str;
+    /// Build all run state from the context; returns the round-0 outcome.
+    fn init(&mut self, ctx: &mut RunContext<'_, T>) -> Result<StepOutcome>;
+    /// Execute outer round `round` (0-based).
+    fn step(&mut self, ctx: &mut RunContext<'_, T>, round: usize) -> Result<StepOutcome>;
+    /// Per-node upper iterates (consensus evaluation reads these).
+    fn xs(&self) -> &[Vec<f32>];
+    /// Per-node lower iterates.
+    fn ys(&self) -> &[Vec<f32>];
+}
+
+/// Construct the configured algorithm.  C²DFB(nc) is the same
+/// implementation as C²DFB with `naive = true`.
+pub fn make_algorithm<T: Transport>(algo: Algorithm) -> Box<dyn BilevelAlgorithm<T>> {
+    match algo {
+        Algorithm::C2dfb => Box::new(C2dfb::new(false)),
+        Algorithm::C2dfbNc => Box::new(C2dfb::new(true)),
+        Algorithm::Madsbo => Box::new(Madsbo::new()),
+        Algorithm::Mdbo => Box::new(Mdbo::new()),
     }
-    ctx.metrics.ledger = ctx.net.ledger().clone();
-    Ok(ctx.metrics)
+}
+
+/// Callback surface of the [`drive`] loop: receives every recorded
+/// [`TracePoint`] (progress lines, streaming consumers).  Returning
+/// `false` aborts the run, recorded as [`StopReason::Observer`].
+pub trait RunObserver {
+    fn on_trace(&mut self, algo: &str, point: &TracePoint) -> bool;
+}
+
+/// The do-nothing observer.
+pub struct NoObserver;
+
+impl RunObserver for NoObserver {
+    fn on_trace(&mut self, _algo: &str, _point: &TracePoint) -> bool {
+        true
+    }
+}
+
+/// The outer loop, owned by the coordinator: `init`, then `step` until a
+/// [`StopCondition`](crate::metrics::StopCondition) fires.  Evaluation
+/// (consensus loss/accuracy → trace point → observer → stop checks) runs
+/// every `cfg.eval_every` rounds plus rounds 0 and `cfg.rounds`, so any
+/// budget triggers within one eval interval of being exceeded and a
+/// budget-stopped run is a bit-identical prefix of the fixed-round trace.
+/// The stop reason lands in [`RunMetrics::stop_reason`].
+pub fn drive<T: Transport>(
+    ctx: &mut RunContext<'_, T>,
+    algo: &mut dyn BilevelAlgorithm<T>,
+    observer: &mut dyn RunObserver,
+) -> Result<()> {
+    let stops = ctx.cfg.stop_conditions();
+    let every = ctx.cfg.eval_every.max(1);
+    let mut out = algo.init(ctx)?;
+    let mut round = 0usize;
+    let reason = loop {
+        // The transport owns the live byte counters; this is the single
+        // place they are mirrored into the run metrics (trace points,
+        // stop conditions and summaries all read the mirror).
+        ctx.metrics.ledger = ctx.net.ledger().clone();
+        if round % every == 0 || round == ctx.cfg.rounds {
+            ctx.record(round, algo.xs(), algo.ys(), out.grad_norm)?;
+            let point = ctx.metrics.trace.last().expect("record pushed a point");
+            if !observer.on_trace(algo.name(), point) {
+                break StopReason::Observer;
+            }
+            if let Some(c) = stops.iter().find(|c| c.triggered(round, &ctx.metrics)) {
+                break c.reason();
+            }
+        }
+        out = algo.step(ctx, round)?;
+        round += 1;
+    };
+    ctx.metrics.stop_reason = Some(reason);
+    Ok(())
 }
 
 /// Entry point: dispatch on the configured algorithm and run to completion.
+#[deprecated(note = "use coordinator::Runner::new(&cfg).task(&task).run()")]
 pub fn run<T: Transport>(
     task: &dyn BilevelTask,
     net: T,
     cfg: ExperimentConfig,
 ) -> Result<RunMetrics> {
-    dispatch(RunContext::new(task, net, cfg))
+    let mut ctx = RunContext::new(task, net, cfg);
+    let mut algo = make_algorithm(ctx.cfg.algorithm);
+    drive(&mut ctx, algo.as_mut(), &mut NoObserver)?;
+    Ok(ctx.metrics)
 }
 
 /// [`run`] for thread-shareable tasks: honours `network.threads`.
+#[deprecated(note = "use coordinator::Runner::new(&cfg).shared_task(&task).run()")]
 pub fn run_shared<T: Transport>(
     task: &(dyn BilevelTask + Sync),
     net: T,
     cfg: ExperimentConfig,
 ) -> Result<RunMetrics> {
-    dispatch(RunContext::new_shared(task, net, cfg))
+    let mut ctx = RunContext::new_shared(task, net, cfg);
+    let mut algo = make_algorithm(ctx.cfg.algorithm);
+    drive(&mut ctx, algo.as_mut(), &mut NoObserver)?;
+    Ok(ctx.metrics)
 }

@@ -4,6 +4,7 @@
 pub mod toml;
 
 use crate::data::partition::Partition;
+use crate::metrics::StopCondition;
 use crate::sim::{NetConfig, NetMode};
 use crate::topology::Topology;
 use std::collections::BTreeMap;
@@ -45,6 +46,22 @@ impl Algorithm {
     }
 }
 
+/// The `[stop]` config table: optional budgets the runner turns into
+/// [`StopCondition`]s on top of the always-present `rounds` cap and the
+/// optional `target_accuracy`.  `None` everywhere (the default) keeps the
+/// classic fixed-round behaviour.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StopConfig {
+    /// Communication budget in MB ([`StopCondition::CommBudgetMb`]).
+    pub comm_mb: Option<f64>,
+    /// First-order oracle budget ([`StopCondition::FirstOrderOracles`]).
+    pub first_order: Option<u64>,
+    /// Wall-clock limit, seconds ([`StopCondition::WallClockSecs`]).
+    pub wall_secs: Option<f64>,
+    /// Virtual network-time limit, seconds ([`StopCondition::SimTimeSecs`]).
+    pub sim_secs: Option<f64>,
+}
+
 /// Full experiment description.  Defaults reproduce the paper's
 /// coefficient-tuning setting (Appendix C.1): η_in = η_out = 1,
 /// mixing step 0.5, λ = 10, K = 15, top-k 20%, m = 10, ring.
@@ -80,6 +97,9 @@ pub struct ExperimentConfig {
     /// The `[network]` table: transport engine, link model, fault
     /// injection, and the per-node compute thread pool.
     pub network: NetConfig,
+    /// The `[stop]` table: budgeted stopping conditions beyond the round
+    /// cap (communication, oracles, wall/sim time).
+    pub stop: StopConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -105,6 +125,7 @@ impl Default for ExperimentConfig {
             data_noise: 0.35,
             out_dir: "runs".into(),
             network: NetConfig::default(),
+            stop: StopConfig::default(),
         }
     }
 }
@@ -215,26 +236,79 @@ impl ExperimentConfig {
                 self.network.parse_schedule(&spec, self.seed)?
             }
             "network.threads" | "threads" => self.network.threads = want_usize()?,
+            // --- the [stop] table (TOML: stop.*; CLI: --stop_* flags) ---
+            "stop.rounds" | "stop_rounds" => self.rounds = want_usize()?,
+            "stop.target_accuracy" | "stop_target_accuracy" => {
+                self.target_accuracy = Some(want_f64()?)
+            }
+            "stop.comm_mb" | "stop_comm_mb" => self.stop.comm_mb = Some(want_f64()?),
+            "stop.first_order" | "stop_first_order" => {
+                self.stop.first_order = Some(
+                    v.as_u64()
+                        .ok_or(format!("{k}: expected non-negative integer"))?,
+                )
+            }
+            "stop.wall_secs" | "stop_wall_secs" => self.stop.wall_secs = Some(want_f64()?),
+            "stop.sim_secs" | "stop_sim_secs" => self.stop.sim_secs = Some(want_f64()?),
             _ => return Err(format!("unknown config key: {k}")),
         }
         Ok(())
     }
 
-    pub fn validate(&self) -> Result<(), String> {
+    /// The stop-condition set the runner evaluates at every eval point.
+    /// Budget/target conditions come first so their reason wins when a
+    /// budget and the round cap fire at the same evaluation; the `rounds`
+    /// cap is always present and always last.
+    pub fn stop_conditions(&self) -> Vec<StopCondition> {
+        let mut v = Vec::new();
+        if let Some(a) = self.target_accuracy {
+            v.push(StopCondition::TargetAccuracy(a));
+        }
+        if let Some(mb) = self.stop.comm_mb {
+            v.push(StopCondition::CommBudgetMb(mb));
+        }
+        if let Some(n) = self.stop.first_order {
+            v.push(StopCondition::FirstOrderOracles(n));
+        }
+        if let Some(s) = self.stop.sim_secs {
+            v.push(StopCondition::SimTimeSecs(s));
+        }
+        if let Some(s) = self.stop.wall_secs {
+            v.push(StopCondition::WallClockSecs(s));
+        }
+        v.push(StopCondition::Rounds(self.rounds));
+        v
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
         if self.nodes < 2 {
-            return Err("need at least 2 nodes".into());
+            anyhow::bail!("need at least 2 nodes");
         }
         if !(0.0..=1.0).contains(&self.gamma_in) || !(0.0..=1.0).contains(&self.gamma_out) {
-            return Err("mixing steps must lie in [0, 1]".into());
+            anyhow::bail!("mixing steps must lie in [0, 1]");
         }
         if self.lambda <= 0.0 {
-            return Err("lambda must be positive".into());
+            anyhow::bail!("lambda must be positive");
         }
         if self.inner_steps == 0 {
-            return Err("inner_steps must be >= 1".into());
+            anyhow::bail!("inner_steps must be >= 1");
         }
-        crate::compress::parse(&self.compressor).map(|_| ())?;
-        self.network.validate()?;
+        crate::compress::parse(&self.compressor).map_err(anyhow::Error::msg)?;
+        self.network.validate().map_err(anyhow::Error::msg)?;
+        for (key, val) in [
+            ("stop.comm_mb", self.stop.comm_mb),
+            ("stop.wall_secs", self.stop.wall_secs),
+            ("stop.sim_secs", self.stop.sim_secs),
+        ] {
+            if let Some(x) = val {
+                if x.is_nan() || x <= 0.0 {
+                    anyhow::bail!("{key} must be positive, got {x}");
+                }
+            }
+        }
+        if self.stop.first_order == Some(0) {
+            anyhow::bail!("stop.first_order must be positive");
+        }
         Ok(())
     }
 }
@@ -380,6 +454,71 @@ threads = 4
         assert_eq!(c.network.drop_rate, 0.05);
         assert_eq!(c.network.threads, 8);
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn stop_table_roundtrip_and_conditions() {
+        let dir = std::env::temp_dir().join("c2dfb_cfg_stop_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("stop.toml");
+        std::fs::write(
+            &p,
+            r#"
+[experiment]
+rounds = 500
+
+[stop]
+comm_mb = 12.5
+first_order = 100000
+wall_secs = 30.0
+sim_secs = 2.5
+target_accuracy = 0.7
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml_file(&p).unwrap();
+        assert_eq!(c.stop.comm_mb, Some(12.5));
+        assert_eq!(c.stop.first_order, Some(100_000));
+        assert_eq!(c.stop.wall_secs, Some(30.0));
+        assert_eq!(c.stop.sim_secs, Some(2.5));
+        assert_eq!(c.target_accuracy, Some(0.7));
+        assert!(c.validate().is_ok());
+
+        // Condition set: budgets/target first, the round cap always last.
+        let conds = c.stop_conditions();
+        assert_eq!(conds.len(), 6);
+        assert_eq!(conds[0], StopCondition::TargetAccuracy(0.7));
+        assert_eq!(*conds.last().unwrap(), StopCondition::Rounds(500));
+
+        // Defaults: only the round cap.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.stop_conditions(), vec![StopCondition::Rounds(d.rounds)]);
+    }
+
+    #[test]
+    fn stop_cli_overrides_and_validation() {
+        let mut c = ExperimentConfig::default();
+        c.apply_one("stop_comm_mb", &TomlValue::Float(4.0)).unwrap();
+        c.apply_one("stop_first_order", &TomlValue::Int(5000)).unwrap();
+        c.apply_one("stop_rounds", &TomlValue::Int(77)).unwrap();
+        assert_eq!(c.stop.comm_mb, Some(4.0));
+        assert_eq!(c.stop.first_order, Some(5000));
+        assert_eq!(c.rounds, 77);
+        assert!(c.validate().is_ok());
+
+        // Budgets must be positive; oracle budgets must be non-negative ints.
+        c.stop.comm_mb = Some(0.0);
+        assert!(c.validate().is_err());
+        c.stop.comm_mb = Some(4.0);
+        c.stop.first_order = Some(0);
+        assert!(c.validate().is_err(), "a zero oracle budget stops every run at round 0");
+        c.stop.first_order = Some(5000);
+        assert!(c
+            .apply_one("stop_first_order", &TomlValue::Int(-1))
+            .is_err());
+        assert!(c
+            .apply_one("stop_sim_secs", &TomlValue::Str("x".into()))
+            .is_err());
     }
 
     #[test]

@@ -39,6 +39,14 @@ impl TomlValue {
         }
     }
 
+    /// Non-negative integer view (oracle budgets, counters).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -158,11 +166,15 @@ topologies = ["ring", "2hop"]
 
     #[test]
     fn numbers() {
-        let m = parse("a = 5\nb = -2.5\nc = 1e-3\nd = 1_000").unwrap();
+        let m = parse("a = 5\nb = -2.5\nc = 1e-3\nd = 1_000\ne = -3").unwrap();
         assert_eq!(m["a"].as_i64(), Some(5));
         assert_eq!(m["b"].as_f64(), Some(-2.5));
         assert_eq!(m["c"].as_f64(), Some(1e-3));
         assert_eq!(m["d"].as_i64(), Some(1000));
+        // u64 view rejects negatives and non-integers.
+        assert_eq!(m["a"].as_u64(), Some(5));
+        assert_eq!(m["e"].as_u64(), None);
+        assert_eq!(m["b"].as_u64(), None);
     }
 
     #[test]

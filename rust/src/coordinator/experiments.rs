@@ -7,17 +7,52 @@
 //! network — see DESIGN.md §Substitutions); the comparisons (who wins, by
 //! what order of magnitude) are the reproduction target.
 
+use crate::algorithms::RunObserver;
 use crate::config::{Algorithm, ExperimentConfig};
-use crate::coordinator::{run_with_registry, run_with_task_shared, summarize, write_runs};
+use crate::coordinator::{summarize, write_runs, Runner};
 use crate::data::partition::Partition;
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, TracePoint};
 use crate::runtime::ArtifactRegistry;
 use crate::sim::{NetConfig, NetMode};
 use crate::tasks::QuadraticTask;
 use crate::topology::Topology;
 use anyhow::Result;
 
-/// Scaling knobs shared by all harnesses (CLI: --rounds, --preset-suffix).
+/// Harness observer: optionally prints a progress line per trace point and
+/// aborts any run whose loss goes non-finite (divergence guard) — the
+/// runner then records `stop_reason = observer_abort` instead of burning
+/// the remaining round/communication budget on NaNs.
+#[derive(Default)]
+pub struct HarnessObserver {
+    /// Print one line per recorded trace point.
+    pub verbose: bool,
+}
+
+impl RunObserver for HarnessObserver {
+    fn on_trace(&mut self, algo: &str, p: &TracePoint) -> bool {
+        if self.verbose {
+            println!(
+                "    [{algo:8}] round {:5}  comm {:9.3} MB  loss {:.5}  acc {:.3}",
+                p.round, p.comm_mb, p.loss, p.accuracy
+            );
+        }
+        if !p.loss.is_finite() {
+            eprintln!("    [{algo}] aborting run: non-finite loss at round {}", p.round);
+            return false;
+        }
+        true
+    }
+}
+
+/// Run one harness cell against the artifact registry with the divergence
+/// guard attached.
+fn run_cell(reg: &ArtifactRegistry, cfg: &ExperimentConfig, o: &HarnessOpts) -> Result<RunMetrics> {
+    let mut guard = HarnessObserver { verbose: o.verbose };
+    Runner::new(cfg).registry(reg).observer(&mut guard).run()
+}
+
+/// Scaling knobs shared by all harnesses (CLI: --rounds, --verbose,
+/// --preset-suffix).
 #[derive(Clone, Debug)]
 pub struct HarnessOpts {
     /// Outer rounds per run (paper: ~1000 coeff / ~100 hyperrep; default
@@ -28,6 +63,8 @@ pub struct HarnessOpts {
     pub hyperrep_preset: String,
     pub out_dir: String,
     pub seed: u64,
+    /// Stream one progress line per recorded trace point (CLI: --verbose).
+    pub verbose: bool,
 }
 
 impl Default for HarnessOpts {
@@ -38,6 +75,7 @@ impl Default for HarnessOpts {
             hyperrep_preset: "hyperrep".into(),
             out_dir: "runs".into(),
             seed: 42,
+            verbose: false,
         }
     }
 }
@@ -116,7 +154,7 @@ pub fn table1(reg: &ArtifactRegistry, o: &HarnessOpts, target_acc: f64) -> Resul
         cfg.topology = Topology::Ring;
         cfg.partition = Partition::Heterogeneous { h: 0.8 };
         cfg.target_accuracy = Some(target_acc);
-        let m = run_with_registry(reg, &cfg)?;
+        let m = run_cell(reg, &cfg, o)?;
         println!("  {}", summarize(&m));
         runs.push(m);
     }
@@ -187,7 +225,7 @@ fn grid(
                 cfg.name = id.into();
                 cfg.topology = topo;
                 cfg.partition = part;
-                let m = run_with_registry(reg, &cfg)?;
+                let m = run_cell(reg, &cfg, o)?;
                 println!("  {}", summarize(&m));
                 runs.push(m);
             }
@@ -207,7 +245,7 @@ pub fn fig5(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> 
         let mut cfg = coeff_cfg(o);
         cfg.name = format!("fig5_K{k}");
         cfg.inner_steps = k;
-        let m = run_with_registry(reg, &cfg)?;
+        let m = run_cell(reg, &cfg, o)?;
         println!("  K={k:3}  {}", summarize(&m));
         runs.push(m);
     }
@@ -215,7 +253,7 @@ pub fn fig5(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> 
         let mut cfg = coeff_cfg(o);
         cfg.name = format!("fig5_ratio{ratio}");
         cfg.compressor = format!("topk:{ratio}");
-        let m = run_with_registry(reg, &cfg)?;
+        let m = run_cell(reg, &cfg, o)?;
         println!("  ratio={ratio:5}  {}", summarize(&m));
         runs.push(m);
     }
@@ -223,7 +261,7 @@ pub fn fig5(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> 
         let mut cfg = coeff_cfg(o);
         cfg.name = format!("fig5_lam{lam}");
         cfg.lambda = lam;
-        let m = run_with_registry(reg, &cfg)?;
+        let m = run_cell(reg, &cfg, o)?;
         println!("  λ={lam:5}  {}", summarize(&m));
         runs.push(m);
     }
@@ -330,7 +368,11 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
             let mut cfg = quad_cfg_for(algo, rounds, nodes, o);
             cfg.name = format!("netsweep_{regime}");
             cfg.network = netcfg.clone();
-            let m = run_with_task_shared(&task, &cfg)?;
+            let mut guard = HarnessObserver { verbose: o.verbose };
+            let m = Runner::new(&cfg)
+                .shared_task(&task)
+                .observer(&mut guard)
+                .run()?;
             let last = m.final_point().expect("run produced no trace");
             println!(
                 "| {:9} | {:6} | {:9.3} | {:13} | {:16.4} | {:7} | {:10.5} |",
@@ -369,6 +411,68 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
     Ok(runs)
 }
 
+/// **budget** — the equal-communication comparison behind the paper's
+/// efficiency claim: run all four algorithms on the analytic quadratic
+/// task until each has spent the same communication budget (MB), then
+/// compare where they got.  This makes the Table-1 / Fig-2 "who wins at
+/// equal communication" reading a first-class run instead of post-hoc
+/// trace slicing (cf. Zhang et al. 2023's framing of decentralized
+/// bilevel baselines by communication complexity).  Needs no artifacts.
+///
+/// Every run carries a [`crate::metrics::StopCondition::CommBudgetMb`]
+/// plus a generous round cap as a non-progress guard; the printed `stop`
+/// column should read `comm_budget` for every row.
+pub fn budget(o: &HarnessOpts, budget_mb: f64, tiny: bool) -> Result<Vec<RunMetrics>> {
+    let (nodes, dim) = if tiny { (6, 8) } else { (8, 32) };
+    println!(
+        "== budget: all algorithms to {budget_mb} MB of communication \
+         (quadratic, m={nodes}, d={dim}, round cap {}) ==",
+        o.rounds
+    );
+    let task = QuadraticTask::generate(nodes, dim, 0.8, o.seed);
+    let algos = [
+        Algorithm::C2dfb,
+        Algorithm::C2dfbNc,
+        Algorithm::Madsbo,
+        Algorithm::Mdbo,
+    ];
+
+    let mut runs = Vec::new();
+    for algo in algos {
+        let mut cfg = quad_cfg_for(algo, o.rounds, nodes, o);
+        cfg.name = "budget".into();
+        cfg.stop.comm_mb = Some(budget_mb);
+        // Check the budget every round so each run lands within one outer
+        // round of the budget (the stop contract is one eval interval).
+        cfg.eval_every = 1;
+        let mut guard = HarnessObserver { verbose: o.verbose };
+        let m = Runner::new(&cfg)
+            .shared_task(&task)
+            .observer(&mut guard)
+            .run()?;
+        println!("  {}", summarize(&m));
+        runs.push(m);
+    }
+
+    println!("\n| algo     | comm (MB) | rounds | oracles 1st | oracles 2nd | final loss | stop        |");
+    println!("|----------|-----------|--------|-------------|-------------|------------|-------------|");
+    for m in &runs {
+        let last = m.final_point().expect("run produced no trace");
+        println!(
+            "| {:8} | {:9.3} | {:6} | {:11} | {:11} | {:10.5} | {:11} |",
+            m.algo,
+            m.ledger.total_mb(),
+            last.round,
+            m.oracles.first_order,
+            m.oracles.second_order,
+            last.loss,
+            m.stop_reason.map_or("-", |s| s.name()),
+        );
+    }
+    write_runs(&o.out_dir, "budget", &runs)?;
+    Ok(runs)
+}
+
 /// Compressor ablation beyond the paper: top-k vs rand-k vs qsgd vs dense
 /// at matched settings (DESIGN.md "extension" item).
 pub fn compressor_ablation(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
@@ -379,7 +483,7 @@ pub fn compressor_ablation(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Ve
         cfg.name = format!("ablate_{}", comp.replace(':', ""));
         cfg.partition = Partition::Heterogeneous { h: 0.8 };
         cfg.compressor = comp.into();
-        let m = run_with_registry(reg, &cfg)?;
+        let m = run_cell(reg, &cfg, o)?;
         println!("  {comp:10}  {}", summarize(&m));
         runs.push(m);
     }

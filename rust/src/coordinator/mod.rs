@@ -1,11 +1,31 @@
 //! Experiment coordinator: builds the world (topology → network, artifacts
-//! → task, config → algorithm) and drives runs; [`experiments`] hosts the
-//! per-table/figure harnesses from the paper's evaluation.
+//! → task, config → algorithm) and drives runs through the fluent
+//! [`Runner`]; [`experiments`] hosts the per-table/figure harnesses from
+//! the paper's evaluation.
+//!
+//! ```no_run
+//! # use c2dfb::config::ExperimentConfig;
+//! # use c2dfb::coordinator::Runner;
+//! # use c2dfb::tasks::QuadraticTask;
+//! # fn main() -> anyhow::Result<()> {
+//! let cfg = ExperimentConfig::default();
+//! let task = QuadraticTask::generate(10, 16, 0.8, 42);
+//! let metrics = Runner::new(&cfg).shared_task(&task).run()?;
+//! println!("stopped: {:?}", metrics.stop_reason);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The runner picks the transport engine (`[network] mode`), the execution
+//! mode (serial vs [`crate::sim::NodePool`] for shared tasks), and stops on
+//! the first [`StopCondition`](crate::metrics::StopCondition) from the
+//! `[stop]` table to fire — see `docs/API.md` for the surface and the
+//! migration table from the old `run_with_*` functions.
 
 pub mod experiments;
 
-use crate::algorithms;
-use crate::collective::Network;
+use crate::algorithms::{self, NoObserver, RunObserver};
+use crate::collective::{Network, Transport};
 use crate::config::ExperimentConfig;
 use crate::metrics::RunMetrics;
 use crate::runtime::ArtifactRegistry;
@@ -44,39 +64,131 @@ pub fn build_task(reg: &ArtifactRegistry, cfg: &ExperimentConfig) -> Result<Pjrt
     )
 }
 
-/// Run one experiment end-to-end against the real artifacts.
-pub fn run_with_registry(reg: &ArtifactRegistry, cfg: &ExperimentConfig) -> Result<RunMetrics> {
-    cfg.validate().map_err(anyhow::Error::msg)?;
-    let task = build_task(reg, cfg)?;
-    if cfg.network.is_event() {
-        algorithms::run(&task, build_sim_network(cfg), cfg.clone())
-    } else {
-        algorithms::run(&task, build_network(cfg), cfg.clone())
+/// Fluent run entry point: pick a task source, optionally attach a
+/// [`RunObserver`], and `.run()`.  Replaces the `run_with_task` /
+/// `run_with_task_shared` / `run_with_registry` trio (kept one release as
+/// deprecated shims): the runner owns transport selection (sync vs event),
+/// execution mode (serial vs [`crate::sim::NodePool`]) and budgeted
+/// stopping, so every entry path behaves identically.
+pub struct Runner<'a> {
+    cfg: &'a ExperimentConfig,
+    source: Source<'a>,
+    observer: Option<&'a mut dyn RunObserver>,
+}
+
+enum Source<'a> {
+    Unset,
+    Task(&'a dyn BilevelTask),
+    Shared(&'a (dyn BilevelTask + Sync)),
+    Registry(&'a ArtifactRegistry),
+}
+
+impl<'a> Runner<'a> {
+    pub fn new(cfg: &'a ExperimentConfig) -> Runner<'a> {
+        Runner { cfg, source: Source::Unset, observer: None }
     }
+
+    /// Run against a caller-provided task (analytic tasks, tests).
+    pub fn task(mut self, task: &'a dyn BilevelTask) -> Self {
+        self.source = Source::Task(task);
+        self
+    }
+
+    /// Like [`Runner::task`] for thread-shareable tasks:
+    /// `network.threads > 1` then fans per-node compute out over the
+    /// [`crate::sim::NodePool`] (bit-identical to serial).
+    pub fn shared_task(mut self, task: &'a (dyn BilevelTask + Sync)) -> Self {
+        self.source = Source::Shared(task);
+        self
+    }
+
+    /// Build the task from AOT artifacts (the real stack).
+    pub fn registry(mut self, reg: &'a ArtifactRegistry) -> Self {
+        self.source = Source::Registry(reg);
+        self
+    }
+
+    /// Attach an observer: called on every trace point; may abort the run.
+    pub fn observer(mut self, obs: &'a mut dyn RunObserver) -> Self {
+        self.observer = Some(obs);
+        self
+    }
+
+    /// Validate the config, build the world and drive the run to its stop
+    /// condition.  The stop reason lands in
+    /// [`RunMetrics::stop_reason`](crate::metrics::RunMetrics).
+    pub fn run(self) -> Result<RunMetrics> {
+        self.cfg.validate()?;
+        let Runner { cfg, source, observer } = self;
+        let mut fallback = NoObserver;
+        let obs: &mut dyn RunObserver = match observer {
+            Some(o) => o,
+            None => &mut fallback,
+        };
+        match source {
+            Source::Unset => anyhow::bail!(
+                "Runner has no task source: call .task(), .shared_task() or .registry() before .run()"
+            ),
+            Source::Task(task) => launch(task, None, cfg, obs),
+            Source::Shared(task) => launch(task, Some(task), cfg, obs),
+            Source::Registry(reg) => {
+                let task = build_task(reg, cfg)?;
+                launch(&task, None, cfg, obs)
+            }
+        }
+    }
+}
+
+/// Transport selection: one place decides sync vs event for every entry
+/// path (previously duplicated across the four `run_*` functions).
+fn launch(
+    task: &dyn BilevelTask,
+    shared: Option<&(dyn BilevelTask + Sync)>,
+    cfg: &ExperimentConfig,
+    obs: &mut dyn RunObserver,
+) -> Result<RunMetrics> {
+    if cfg.network.is_event() {
+        drive_on(task, shared, build_sim_network(cfg), cfg, obs)
+    } else {
+        drive_on(task, shared, build_network(cfg), cfg, obs)
+    }
+}
+
+fn drive_on<T: Transport>(
+    task: &dyn BilevelTask,
+    shared: Option<&(dyn BilevelTask + Sync)>,
+    net: T,
+    cfg: &ExperimentConfig,
+    obs: &mut dyn RunObserver,
+) -> Result<RunMetrics> {
+    let mut ctx = match shared {
+        Some(t) => algorithms::RunContext::new_shared(t, net, cfg.clone()),
+        None => algorithms::RunContext::new(task, net, cfg.clone()),
+    };
+    let mut algo = algorithms::make_algorithm(ctx.cfg.algorithm);
+    algorithms::drive(&mut ctx, algo.as_mut(), obs)?;
+    Ok(ctx.metrics)
+}
+
+/// Run one experiment end-to-end against the real artifacts.
+#[deprecated(note = "use Runner::new(cfg).registry(reg).run()")]
+pub fn run_with_registry(reg: &ArtifactRegistry, cfg: &ExperimentConfig) -> Result<RunMetrics> {
+    Runner::new(cfg).registry(reg).run()
 }
 
 /// Run against a caller-provided task (analytic tasks, tests).
+#[deprecated(note = "use Runner::new(cfg).task(task).run()")]
 pub fn run_with_task(task: &dyn BilevelTask, cfg: &ExperimentConfig) -> Result<RunMetrics> {
-    cfg.validate().map_err(anyhow::Error::msg)?;
-    if cfg.network.is_event() {
-        algorithms::run(task, build_sim_network(cfg), cfg.clone())
-    } else {
-        algorithms::run(task, build_network(cfg), cfg.clone())
-    }
+    Runner::new(cfg).task(task).run()
 }
 
-/// [`run_with_task`] for thread-shareable tasks: `network.threads > 1`
-/// fans per-node compute out over the [`crate::sim::NodePool`].
+/// [`Runner::shared_task`] as a free function.
+#[deprecated(note = "use Runner::new(cfg).shared_task(task).run()")]
 pub fn run_with_task_shared(
     task: &(dyn BilevelTask + Sync),
     cfg: &ExperimentConfig,
 ) -> Result<RunMetrics> {
-    cfg.validate().map_err(anyhow::Error::msg)?;
-    if cfg.network.is_event() {
-        algorithms::run_shared(task, build_sim_network(cfg), cfg.clone())
-    } else {
-        algorithms::run_shared(task, build_network(cfg), cfg.clone())
-    }
+    Runner::new(cfg).shared_task(task).run()
 }
 
 /// Persist a batch of run metrics under `out_dir/name/`.
@@ -92,7 +204,7 @@ pub fn write_runs(out_dir: &str, name: &str, runs: &[RunMetrics]) -> Result<()> 
 pub fn summarize(r: &RunMetrics) -> String {
     let last = r.final_point();
     format!(
-        "{:10} {:32} comm={:9.2} MB  rounds={:5}  oracles(1st/2nd)={}/{}  loss={:.4}  acc={:.3}  wall={:.1}s",
+        "{:10} {:32} comm={:9.2} MB  rounds={:5}  oracles(1st/2nd)={}/{}  loss={:.4}  acc={:.3}  wall={:.1}s  stop={}",
         r.algo,
         r.label,
         r.ledger.total_mb(),
@@ -102,6 +214,7 @@ pub fn summarize(r: &RunMetrics) -> String {
         last.map(|p| p.loss).unwrap_or(f64::NAN),
         last.map(|p| p.accuracy).unwrap_or(f64::NAN),
         r.wall_time_s(),
+        r.stop_reason.map_or("-", |s| s.name()),
     )
 }
 
@@ -109,10 +222,11 @@ pub fn summarize(r: &RunMetrics) -> String {
 mod tests {
     use super::*;
     use crate::config::Algorithm;
+    use crate::metrics::StopReason;
     use crate::tasks::QuadraticTask;
 
     #[test]
-    fn run_with_task_all_algorithms() {
+    fn runner_all_algorithms() {
         let task = QuadraticTask::generate(4, 6, 0.5, 77);
         for algo in [
             Algorithm::C2dfb,
@@ -130,14 +244,15 @@ mod tests {
                 eval_every: 5,
                 ..ExperimentConfig::default()
             };
-            let m = run_with_task(&task, &cfg).expect(algo.name());
+            let m = Runner::new(&cfg).task(&task).run().expect(algo.name());
             assert!(!m.trace.is_empty(), "{}", algo.name());
             assert!(m.ledger.total_bytes > 0, "{}", algo.name());
+            assert_eq!(m.stop_reason, Some(StopReason::Rounds), "{}", algo.name());
         }
     }
 
     #[test]
-    fn run_with_task_event_engine_all_algorithms() {
+    fn runner_event_engine_all_algorithms() {
         use crate::sim::NetMode;
         let task = QuadraticTask::generate(4, 6, 0.5, 79);
         for algo in [
@@ -158,7 +273,7 @@ mod tests {
             };
             cfg.network.mode = NetMode::Event;
             cfg.network.drop_rate = 0.1;
-            let m = run_with_task(&task, &cfg).expect(algo.name());
+            let m = Runner::new(&cfg).task(&task).run().expect(algo.name());
             assert!(!m.trace.is_empty(), "{}", algo.name());
             assert!(m.ledger.dropped_messages > 0, "{}", algo.name());
         }
@@ -176,13 +291,45 @@ mod tests {
             eval_every: 2,
             ..ExperimentConfig::default()
         };
-        let serial = run_with_task(&task, &cfg).unwrap();
+        let serial = Runner::new(&cfg).task(&task).run().unwrap();
         cfg.network.threads = 3;
-        let parallel = run_with_task_shared(&task, &cfg).unwrap();
+        let parallel = Runner::new(&cfg).shared_task(&task).run().unwrap();
         let a: Vec<u64> = serial.trace.iter().map(|p| p.loss.to_bits()).collect();
         let b: Vec<u64> = parallel.trace.iter().map(|p| p.loss.to_bits()).collect();
         assert_eq!(a, b);
         assert_eq!(serial.ledger.total_bytes, parallel.ledger.total_bytes);
+    }
+
+    #[test]
+    fn runner_without_source_errors() {
+        let cfg = ExperimentConfig::default();
+        let err = Runner::new(&cfg).run().unwrap_err();
+        assert!(err.to_string().contains("no task source"), "{err}");
+    }
+
+    /// The pre-Runner entry points must keep compiling and producing the
+    /// same runs for one deprecation cycle.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_work() {
+        let task = QuadraticTask::generate(4, 6, 0.5, 81);
+        let cfg = ExperimentConfig {
+            nodes: 4,
+            rounds: 3,
+            inner_steps: 3,
+            eta_out: 0.1,
+            eta_in: 0.2,
+            eval_every: 1,
+            ..ExperimentConfig::default()
+        };
+        let via_shim = run_with_task(&task, &cfg).unwrap();
+        let via_shared_shim = run_with_task_shared(&task, &cfg).unwrap();
+        let via_runner = Runner::new(&cfg).task(&task).run().unwrap();
+        let bits =
+            |m: &RunMetrics| m.trace.iter().map(|p| p.loss.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&via_shim), bits(&via_runner));
+        assert_eq!(bits(&via_shared_shim), bits(&via_runner));
+        assert_eq!(via_shim.ledger.total_bytes, via_runner.ledger.total_bytes);
     }
 
     #[test]
@@ -196,7 +343,7 @@ mod tests {
             eta_in: 0.2,
             ..ExperimentConfig::default()
         };
-        let m = run_with_task(&task, &cfg).unwrap();
+        let m = Runner::new(&cfg).task(&task).run().unwrap();
         let dir = std::env::temp_dir().join("c2dfb_write_runs");
         let _ = std::fs::remove_dir_all(&dir);
         write_runs(dir.to_str().unwrap(), "t", &[m]).unwrap();

@@ -19,6 +19,21 @@
 //! API ([`runtime`], behind the `pjrt` cargo feature), Python never runs
 //! after `make artifacts`.
 //!
+//! ## Running experiments
+//!
+//! The single entry point is the fluent [`Runner`]
+//! (`Runner::new(&cfg).task(&task).run()`, or `.shared_task(..)` /
+//! `.registry(..)`): algorithms implement the step-driven
+//! [`algorithms::BilevelAlgorithm`] trait and the runner owns the outer
+//! loop — evaluation cadence, [`metrics::StopCondition`] budgets
+//! (rounds, communication MB, first-order oracles, target accuracy,
+//! wall/sim time; the `[stop]` config table), and
+//! [`algorithms::RunObserver`] streaming callbacks.  The stop reason is
+//! recorded in [`metrics::RunMetrics`].  See `docs/API.md` for the full
+//! surface and the migration table from the pre-`Runner` `run_with_*`
+//! functions, and `c2dfb budget` for the equal-communication-budget
+//! comparison harness.
+//!
 //! ## Transports
 //!
 //! Algorithms gossip through the [`collective::Transport`] trait and run
@@ -50,3 +65,5 @@ pub mod sim;
 pub mod tasks;
 pub mod topology;
 pub mod util;
+
+pub use crate::coordinator::Runner;

@@ -3,17 +3,19 @@
 //! ```text
 //! c2dfb run [--config cfg.toml] [--algo c2dfb] [--topology ring]
 //!           [--network sim --drop_rate 0.1 --straggler 0.25:0.05 ...]
+//!           [--stop_comm_mb MB --stop_first_order N --stop_wall_secs S ...]
 //! c2dfb table1 [--rounds N] [--target 0.7] [--tiny]
 //! c2dfb fig2 | fig3 | fig4 | fig5 | fig6 | ablation [--rounds N] [--tiny]
 //! c2dfb all [--rounds N]          # every table+figure harness
 //! c2dfb netsweep [--rounds N] [--tiny]   # network-regime sweep (no artifacts)
+//! c2dfb budget [--budget_mb MB] [--tiny]  # equal-comm-budget comparison
 //! c2dfb artifacts                  # list AOT artifacts + shapes
 //! ```
 
 use anyhow::{anyhow, Result};
 use c2dfb::config::toml::TomlValue;
 use c2dfb::config::ExperimentConfig;
-use c2dfb::coordinator::{experiments, run_with_registry, summarize};
+use c2dfb::coordinator::{experiments, summarize, Runner};
 use c2dfb::runtime::ArtifactRegistry;
 use c2dfb::util::cli::Args;
 
@@ -24,15 +26,21 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|all|artifacts> [options]
+const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|all|artifacts> [options]
   run options: --config <file.toml> plus any config key as --key value
                (e.g. --algo mdbo --topology er:0.4 --partition het:0.8
                 --rounds 100 --compressor topk:0.2 --lambda 10)
                network keys: --network sync|sim  --latency S  --jitter S
                 --bandwidth B/s  --drop_rate P  --straggler FRAC:DELAY
                 --topology_schedule R:TOPO,...  --threads N
+               stop keys (budgeted stopping, first to fire wins):
+                --stop_comm_mb MB  --stop_first_order N  --stop_wall_secs S
+                --stop_sim_secs S  --stop_target_accuracy A  --stop_rounds N
   harness options: --rounds N  --target 0.7  --tiny  --out DIR  --seed S
-  netsweep: C²DFB vs baselines across network regimes (no artifacts needed)";
+                   --verbose (stream one progress line per eval point)
+  netsweep: C²DFB vs baselines across network regimes (no artifacts needed)
+  budget:   all four algorithms to one communication budget (--budget_mb MB,
+            no artifacts needed); prints comm/oracles/loss + stop reason";
 
 fn real_main() -> Result<()> {
     let args = Args::from_env();
@@ -60,6 +68,7 @@ fn real_main() -> Result<()> {
         }
         "run" => cmd_run(args),
         "netsweep" => cmd_netsweep(args),
+        "budget" => cmd_budget(args),
         "table1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "ablation" | "all" => {
             cmd_harness(&sub, args)
         }
@@ -80,6 +89,8 @@ fn cmd_run(mut args: Args) -> Result<()> {
         "gamma_in", "gamma", "lambda", "sigma", "seed", "eval_every",
         "target_accuracy", "data_noise", "out_dir", "network", "latency", "jitter",
         "bandwidth", "drop_rate", "straggler", "topology_schedule", "threads",
+        "stop_comm_mb", "stop_first_order", "stop_wall_secs", "stop_sim_secs",
+        "stop_target_accuracy", "stop_rounds",
     ] {
         if let Some(v) = args.get(key) {
             // Ints/floats/strings: try int, then float, then string.
@@ -94,7 +105,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
         }
     }
     args.finish().map_err(anyhow::Error::msg)?;
-    cfg.validate().map_err(anyhow::Error::msg)?;
+    cfg.validate()?;
 
     let reg = ArtifactRegistry::open_default()?;
     println!(
@@ -106,7 +117,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
         cfg.compressor,
         cfg.rounds
     );
-    let metrics = run_with_registry(&reg, &cfg)?;
+    let metrics = Runner::new(&cfg).registry(&reg).run()?;
     println!("{}", summarize(&metrics));
     let dir = std::path::Path::new(&cfg.out_dir).join(&cfg.name);
     metrics.write_to(&dir)?;
@@ -120,6 +131,7 @@ fn cmd_netsweep(mut args: Args) -> Result<()> {
         rounds: args.get_parse("rounds", if tiny { 12 } else { 60 }),
         out_dir: args.get_or("out", "runs"),
         seed: args.get_parse("seed", 42u64),
+        verbose: args.flag("verbose"),
         ..Default::default()
     };
     args.finish().map_err(anyhow::Error::msg)?;
@@ -132,12 +144,34 @@ fn cmd_netsweep(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_budget(mut args: Args) -> Result<()> {
+    let tiny = args.flag("tiny");
+    let budget_mb: f64 = args.get_parse("budget_mb", if tiny { 0.75 } else { 8.0 });
+    let opts = experiments::HarnessOpts {
+        // A generous non-progress guard; the comm budget should fire first.
+        rounds: args.get_parse("rounds", if tiny { 200 } else { 600 }),
+        out_dir: args.get_or("out", "runs"),
+        seed: args.get_parse("seed", 42u64),
+        verbose: args.flag("verbose"),
+        ..Default::default()
+    };
+    args.finish().map_err(anyhow::Error::msg)?;
+    // Analytic task — no artifact registry needed.
+    experiments::budget(&opts, budget_mb, tiny)?;
+    println!(
+        "\ntraces under {}/budget/ — equal-communication comparison; the stop column records why each run ended.",
+        opts.out_dir
+    );
+    Ok(())
+}
+
 fn cmd_harness(which: &str, mut args: Args) -> Result<()> {
     let tiny = args.flag("tiny");
     let mut opts = experiments::HarnessOpts {
         rounds: args.get_parse("rounds", if tiny { 20 } else { 120 }),
         out_dir: args.get_or("out", "runs"),
         seed: args.get_parse("seed", 42u64),
+        verbose: args.flag("verbose"),
         ..Default::default()
     };
     if tiny {

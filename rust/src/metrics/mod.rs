@@ -86,6 +86,91 @@ pub struct OracleCounter {
     pub evals: u64,
 }
 
+/// Why a run ended — recorded in [`RunMetrics`] and the CSV/JSON outputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The configured round cap was reached.
+    Rounds,
+    /// The communication budget (MB) was exhausted.
+    CommBudget,
+    /// The first-order oracle budget was exhausted.
+    FirstOrderOracles,
+    /// The target test accuracy was reached.
+    TargetAccuracy,
+    /// The wall-clock limit elapsed.
+    WallClock,
+    /// The virtual (simulated) network-time limit elapsed.
+    SimTime,
+    /// A [`RunObserver`](crate::algorithms::RunObserver) aborted the run.
+    Observer,
+}
+
+impl StopReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopReason::Rounds => "rounds",
+            StopReason::CommBudget => "comm_budget",
+            StopReason::FirstOrderOracles => "first_order_oracles",
+            StopReason::TargetAccuracy => "target_accuracy",
+            StopReason::WallClock => "wall_clock",
+            StopReason::SimTime => "sim_time",
+            StopReason::Observer => "observer_abort",
+        }
+    }
+}
+
+/// A budgeted stopping rule, evaluated by the runner against the live
+/// [`CommLedger`]/[`OracleCounter`] mirror at every evaluation point — so
+/// a condition fires within one `eval_every` interval of becoming true,
+/// and a budget-stopped run is a bit-identical prefix of the fixed-round
+/// trace.  Built from the config by
+/// [`ExperimentConfig::stop_conditions`](crate::config::ExperimentConfig::stop_conditions).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StopCondition {
+    /// Stop after this many outer rounds (the classic `rounds` cap).
+    Rounds(usize),
+    /// Stop once total communication reaches this many megabytes.
+    CommBudgetMb(f64),
+    /// Stop once this many first-order oracle calls have been paid.
+    FirstOrderOracles(u64),
+    /// Stop once consensus test accuracy reaches this value.
+    TargetAccuracy(f64),
+    /// Stop once this much real wall-clock time has elapsed.
+    WallClockSecs(f64),
+    /// Stop once the transport's virtual network time reaches this value.
+    SimTimeSecs(f64),
+}
+
+impl StopCondition {
+    /// The reason recorded when this condition fires.
+    pub fn reason(&self) -> StopReason {
+        match self {
+            StopCondition::Rounds(_) => StopReason::Rounds,
+            StopCondition::CommBudgetMb(_) => StopReason::CommBudget,
+            StopCondition::FirstOrderOracles(_) => StopReason::FirstOrderOracles,
+            StopCondition::TargetAccuracy(_) => StopReason::TargetAccuracy,
+            StopCondition::WallClockSecs(_) => StopReason::WallClock,
+            StopCondition::SimTimeSecs(_) => StopReason::SimTime,
+        }
+    }
+
+    /// Whether the condition holds at `round` given the run's live
+    /// counters.  The caller (the runner) must have synced the ledger
+    /// mirror first.
+    pub fn triggered(&self, round: usize, m: &RunMetrics) -> bool {
+        match *self {
+            StopCondition::Rounds(n) => round >= n,
+            StopCondition::CommBudgetMb(mb) => m.ledger.total_mb() >= mb,
+            StopCondition::FirstOrderOracles(n) => m.oracles.first_order >= n,
+            StopCondition::TargetAccuracy(a) => {
+                m.trace.last().is_some_and(|p| p.accuracy >= a)
+            }
+            StopCondition::WallClockSecs(s) => m.wall_time_s() >= s,
+            StopCondition::SimTimeSecs(s) => m.ledger.network_time_s >= s,
+        }
+    }
+}
+
 /// A single evaluation record along a run.
 #[derive(Clone, Debug)]
 pub struct TracePoint {
@@ -109,6 +194,9 @@ pub struct RunMetrics {
     pub oracles: OracleCounter,
     pub trace: Vec<TracePoint>,
     pub time_model: TimeModel,
+    /// Why the run ended (set by the runner; `None` on a run that was
+    /// never driven to a stop).
+    pub stop_reason: Option<StopReason>,
     started: Instant,
 }
 
@@ -121,6 +209,7 @@ impl RunMetrics {
             oracles: OracleCounter::default(),
             trace: Vec::new(),
             time_model: TimeModel::default(),
+            stop_reason: None,
             started: Instant::now(),
         }
     }
@@ -166,17 +255,19 @@ impl RunMetrics {
     }
 
     pub fn to_csv(&self) -> String {
-        // `dropped` stays LAST: tools/fill_experiments.py indexes columns
-        // positionally.
+        // New columns append at the END: tools/fill_experiments.py indexes
+        // the earlier columns positionally.  `stop_reason` is a run-level
+        // fact repeated per row so sliced/filtered traces keep it.
         let mut out = String::from(
-            "round,comm_mb,sim_time_s,wall_time_s,loss,accuracy,grad_norm,consensus_err,dropped\n",
+            "round,comm_mb,sim_time_s,wall_time_s,loss,accuracy,grad_norm,consensus_err,dropped,stop_reason\n",
         );
+        let stop = self.stop_reason.map_or("", |r| r.name());
         for p in &self.trace {
             let _ = writeln!(
                 out,
-                "{},{:.6},{:.6},{:.3},{:.6},{:.4},{:.6e},{:.6e},{}",
+                "{},{:.6},{:.6},{:.3},{:.6},{:.4},{:.6e},{:.6e},{},{}",
                 p.round, p.comm_mb, p.sim_time_s, p.wall_time_s, p.loss, p.accuracy,
-                p.grad_norm, p.consensus_err, p.dropped_msgs
+                p.grad_norm, p.consensus_err, p.dropped_msgs, stop
             );
         }
         out
@@ -197,6 +288,7 @@ impl RunMetrics {
             ("second_order_calls", Json::num(self.oracles.second_order as f64)),
             ("final_loss", Json::num(last.map(|p| p.loss).unwrap_or(f64::NAN))),
             ("final_accuracy", Json::num(last.map(|p| p.accuracy).unwrap_or(f64::NAN))),
+            ("stop_reason", Json::str(self.stop_reason.map_or("none", |r| r.name()))),
         ])
     }
 
@@ -262,5 +354,62 @@ mod tests {
         let j = m.summary_json().to_string();
         let v = crate::util::json::Json::parse(&j).unwrap();
         assert_eq!(v.get("algo").unwrap().as_str(), Some("c2dfb"));
+        assert_eq!(v.get("stop_reason").unwrap().as_str(), Some("none"));
+    }
+
+    #[test]
+    fn stop_reason_lands_in_csv_and_json() {
+        let mut m = RunMetrics::new("c2dfb", "b");
+        m.record_eval(0, 1.0, 0.5, 0.0, 0.0);
+        m.stop_reason = Some(StopReason::CommBudget);
+        let csv = m.to_csv();
+        assert!(csv.lines().next().unwrap().ends_with(",stop_reason"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",comm_budget"));
+        let j = m.summary_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("stop_reason").unwrap().as_str(), Some("comm_budget"));
+    }
+
+    #[test]
+    fn stop_conditions_trigger_on_live_counters() {
+        let mut m = RunMetrics::new("a", "b");
+        m.ledger.total_bytes = 3_000_000;
+        m.ledger.network_time_s = 1.5;
+        m.oracles.first_order = 100;
+        m.record_eval(7, 1.0, 0.8, 0.1, 0.0);
+
+        assert!(StopCondition::Rounds(7).triggered(7, &m));
+        assert!(!StopCondition::Rounds(8).triggered(7, &m));
+        assert!(StopCondition::CommBudgetMb(3.0).triggered(7, &m));
+        assert!(!StopCondition::CommBudgetMb(3.1).triggered(7, &m));
+        assert!(StopCondition::FirstOrderOracles(100).triggered(7, &m));
+        assert!(!StopCondition::FirstOrderOracles(101).triggered(7, &m));
+        assert!(StopCondition::TargetAccuracy(0.8).triggered(7, &m));
+        assert!(!StopCondition::TargetAccuracy(0.81).triggered(7, &m));
+        assert!(StopCondition::SimTimeSecs(1.5).triggered(7, &m));
+        assert!(!StopCondition::SimTimeSecs(2.0).triggered(7, &m));
+        // Wall clock: zero always fires, an hour never (in a test).
+        assert!(StopCondition::WallClockSecs(0.0).triggered(7, &m));
+        assert!(!StopCondition::WallClockSecs(3600.0).triggered(7, &m));
+        // TargetAccuracy needs a trace point.
+        let empty = RunMetrics::new("a", "b");
+        assert!(!StopCondition::TargetAccuracy(0.0).triggered(0, &empty));
+    }
+
+    #[test]
+    fn stop_reason_names_are_stable() {
+        for (r, n) in [
+            (StopReason::Rounds, "rounds"),
+            (StopReason::CommBudget, "comm_budget"),
+            (StopReason::FirstOrderOracles, "first_order_oracles"),
+            (StopReason::TargetAccuracy, "target_accuracy"),
+            (StopReason::WallClock, "wall_clock"),
+            (StopReason::SimTime, "sim_time"),
+            (StopReason::Observer, "observer_abort"),
+        ] {
+            assert_eq!(r.name(), n);
+        }
+        assert_eq!(StopCondition::CommBudgetMb(1.0).reason(), StopReason::CommBudget);
+        assert_eq!(StopCondition::Rounds(1).reason(), StopReason::Rounds);
     }
 }

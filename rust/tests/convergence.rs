@@ -5,12 +5,17 @@
 use c2dfb::collective::Network;
 use c2dfb::compress::{Identity, TopK};
 use c2dfb::config::{Algorithm, ExperimentConfig};
-use c2dfb::coordinator::run_with_task;
+use c2dfb::coordinator::Runner;
 use c2dfb::linalg;
+use c2dfb::metrics::RunMetrics;
 use c2dfb::optim::{run_inner, InnerConfig, InnerState};
 use c2dfb::tasks::{BilevelTask, QuadraticTask};
 use c2dfb::topology::{Graph, Topology};
 use c2dfb::util::rng::Rng;
+
+fn run_with_task(task: &QuadraticTask, cfg: &ExperimentConfig) -> anyhow::Result<RunMetrics> {
+    Runner::new(cfg).task(task).run()
+}
 
 /// The analytic hyper-minimum (GD on the closed-form hypergradient).
 fn psi_min(task: &QuadraticTask) -> (Vec<f32>, f64) {

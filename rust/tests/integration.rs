@@ -6,12 +6,19 @@
 #![cfg(feature = "pjrt")]
 
 use c2dfb::config::{Algorithm, ExperimentConfig};
-use c2dfb::coordinator::{build_task, run_with_registry};
+use c2dfb::coordinator::{build_task, Runner};
 use c2dfb::data::partition::Partition;
 use c2dfb::runtime::{Arg, ArtifactRegistry};
 use c2dfb::tasks::BilevelTask;
 use c2dfb::topology::Topology;
 use c2dfb::util::rng::Rng;
+
+fn run_with_registry(
+    reg: &ArtifactRegistry,
+    cfg: &ExperimentConfig,
+) -> anyhow::Result<c2dfb::metrics::RunMetrics> {
+    Runner::new(cfg).registry(reg).run()
+}
 
 fn registry() -> ArtifactRegistry {
     ArtifactRegistry::open_default().expect("run `make artifacts` first")

@@ -1,0 +1,231 @@
+//! Runner / budgeted-stopping acceptance tests: every `StopCondition`
+//! fires within one eval interval and records its reason, budget-stopped
+//! runs are bit-identical prefixes of fixed-round runs (across serial vs
+//! `NodePool` and sync vs benign-sim engines), observers see every trace
+//! point and can abort, and the `budget` harness runs end-to-end.
+
+use c2dfb::algorithms::RunObserver;
+use c2dfb::config::{Algorithm, ExperimentConfig};
+use c2dfb::coordinator::{experiments, Runner};
+use c2dfb::metrics::{RunMetrics, StopReason, TracePoint};
+use c2dfb::sim::NetMode;
+use c2dfb::tasks::QuadraticTask;
+
+fn quad_cfg(rounds: usize, eval_every: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm: Algorithm::C2dfb,
+        nodes: 6,
+        rounds,
+        inner_steps: 8,
+        eta_out: 0.2,
+        eta_in: 0.3,
+        gamma_out: 0.8,
+        gamma_in: 0.6,
+        lambda: 50.0,
+        compressor: "topk:0.5".into(),
+        eval_every,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn task() -> QuadraticTask {
+    QuadraticTask::generate(6, 10, 0.8, 101)
+}
+
+fn run(task: &QuadraticTask, cfg: &ExperimentConfig) -> RunMetrics {
+    Runner::new(cfg).task(task).run().unwrap()
+}
+
+fn trace_bits(m: &RunMetrics) -> Vec<(usize, u64, u64)> {
+    m.trace
+        .iter()
+        .map(|p| (p.round, p.loss.to_bits(), p.grad_norm.to_bits()))
+        .collect()
+}
+
+#[test]
+fn fixed_round_run_records_rounds_reason() {
+    let t = task();
+    let m = run(&t, &quad_cfg(6, 2));
+    assert_eq!(m.stop_reason, Some(StopReason::Rounds));
+    assert_eq!(m.trace.last().unwrap().round, 6);
+}
+
+#[test]
+fn target_accuracy_records_reason() {
+    let t = task();
+    let mut cfg = quad_cfg(50, 1);
+    cfg.target_accuracy = Some(0.0); // any accuracy qualifies at round 0
+    let m = run(&t, &cfg);
+    assert_eq!(m.stop_reason, Some(StopReason::TargetAccuracy));
+    assert_eq!(m.trace.len(), 1);
+}
+
+/// Communication budget: fires at the FIRST eval point where the ledger
+/// crosses the budget (one eval interval), and the stopped run is a
+/// bit-identical prefix of the fixed-round trace.
+#[test]
+fn comm_budget_stops_within_one_eval_interval_and_is_a_prefix() {
+    let t = task();
+    let full = run(&t, &quad_cfg(12, 2));
+    // Budget strictly between the comm totals at rounds 4 and 6: the
+    // first eval point at or past the budget is round 6.
+    let c4 = full.trace.iter().find(|p| p.round == 4).unwrap().comm_mb;
+    let c6 = full.trace.iter().find(|p| p.round == 6).unwrap().comm_mb;
+    assert!(c4 < c6);
+    let mut cfg = quad_cfg(12, 2);
+    cfg.stop.comm_mb = Some((c4 + c6) / 2.0);
+
+    let stopped = run(&t, &cfg);
+    assert_eq!(stopped.stop_reason, Some(StopReason::CommBudget));
+    let last = stopped.trace.last().unwrap();
+    assert_eq!(last.round, 6, "budget must fire at the first eval past it");
+    assert!(last.comm_mb >= cfg.stop.comm_mb.unwrap());
+
+    // Bit-identical prefix of the fixed-round run.
+    let full_bits = trace_bits(&full);
+    let stop_bits = trace_bits(&stopped);
+    assert_eq!(stop_bits, full_bits[..stop_bits.len()]);
+}
+
+#[test]
+fn first_order_oracle_budget_stops_early_with_reason() {
+    let t = task();
+    let full = run(&t, &quad_cfg(10, 1));
+    let total = full.oracles.first_order;
+    let mut cfg = quad_cfg(10, 1);
+    cfg.stop.first_order = Some(total / 2);
+    let m = run(&t, &cfg);
+    assert_eq!(m.stop_reason, Some(StopReason::FirstOrderOracles));
+    assert!(m.oracles.first_order >= total / 2);
+    assert!(m.trace.len() < full.trace.len());
+
+    // A 1-call budget is already exhausted by init's hypergradient batch.
+    cfg.stop.first_order = Some(1);
+    let m = run(&t, &cfg);
+    assert_eq!(m.stop_reason, Some(StopReason::FirstOrderOracles));
+    assert_eq!(m.trace.len(), 1);
+}
+
+#[test]
+fn sim_time_budget_stops_with_reason() {
+    let t = task();
+    let full = run(&t, &quad_cfg(8, 1));
+    let s3 = full.trace.iter().find(|p| p.round == 3).unwrap().sim_time_s;
+    let s4 = full.trace.iter().find(|p| p.round == 4).unwrap().sim_time_s;
+    assert!(s3 < s4);
+    let mut cfg = quad_cfg(8, 1);
+    cfg.stop.sim_secs = Some((s3 + s4) / 2.0);
+    let m = run(&t, &cfg);
+    assert_eq!(m.stop_reason, Some(StopReason::SimTime));
+    assert_eq!(m.trace.last().unwrap().round, 4);
+}
+
+#[test]
+fn wall_clock_budget_stops_with_reason() {
+    let t = task();
+    let mut cfg = quad_cfg(1000, 1);
+    cfg.stop.wall_secs = Some(1e-9); // elapses before the first eval
+    let m = run(&t, &cfg);
+    assert_eq!(m.stop_reason, Some(StopReason::WallClock));
+    assert_eq!(m.trace.len(), 1);
+}
+
+/// Budget-stopped runs must not depend on the execution mode: serial vs
+/// `NodePool` and sync vs benign event engine all produce the same trace
+/// bits, bytes and stop reason.
+#[test]
+fn budget_stop_is_bit_identical_across_engines_and_threads() {
+    let t = task();
+    let mut cfg = quad_cfg(20, 2);
+    // Pick a budget that binds strictly inside the run.
+    let probe = run(&t, &quad_cfg(20, 2));
+    let mid = probe.trace[probe.trace.len() / 2].comm_mb;
+    cfg.stop.comm_mb = Some(mid * 0.99 + probe.trace.last().unwrap().comm_mb * 0.01);
+
+    let serial = Runner::new(&cfg).task(&t).run().unwrap();
+    assert_eq!(serial.stop_reason, Some(StopReason::CommBudget));
+
+    let mut pooled_cfg = cfg.clone();
+    pooled_cfg.network.threads = 3;
+    let pooled = Runner::new(&pooled_cfg).shared_task(&t).run().unwrap();
+
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.network.mode = NetMode::Event;
+    let sim = Runner::new(&sim_cfg).task(&t).run().unwrap();
+
+    for other in [&pooled, &sim] {
+        assert_eq!(trace_bits(&serial), trace_bits(other));
+        assert_eq!(serial.ledger.total_bytes, other.ledger.total_bytes);
+        assert_eq!(serial.stop_reason, other.stop_reason);
+        assert_eq!(serial.oracles.first_order, other.oracles.first_order);
+    }
+}
+
+struct Counting {
+    seen: Vec<usize>,
+    abort_after: Option<usize>,
+}
+
+impl RunObserver for Counting {
+    fn on_trace(&mut self, _algo: &str, p: &TracePoint) -> bool {
+        self.seen.push(p.round);
+        match self.abort_after {
+            Some(n) => self.seen.len() < n,
+            None => true,
+        }
+    }
+}
+
+#[test]
+fn observer_sees_every_trace_point_and_can_abort() {
+    let t = task();
+    let cfg = quad_cfg(6, 2);
+
+    let mut obs = Counting { seen: Vec::new(), abort_after: None };
+    let m = Runner::new(&cfg).task(&t).observer(&mut obs).run().unwrap();
+    let rounds: Vec<usize> = m.trace.iter().map(|p| p.round).collect();
+    assert_eq!(obs.seen, rounds, "observer must see every recorded point");
+    assert_eq!(m.stop_reason, Some(StopReason::Rounds));
+
+    let mut obs = Counting { seen: Vec::new(), abort_after: Some(2) };
+    let m = Runner::new(&cfg).task(&t).observer(&mut obs).run().unwrap();
+    assert_eq!(m.stop_reason, Some(StopReason::Observer));
+    assert_eq!(m.trace.len(), 2);
+}
+
+/// `c2dfb budget --tiny` end-to-end: all four algorithms stop on the
+/// communication budget and record it.
+#[test]
+fn budget_harness_tiny_completes() {
+    let dir = std::env::temp_dir().join("c2dfb_budget_tiny");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = experiments::HarnessOpts {
+        rounds: 200,
+        out_dir: dir.to_str().unwrap().to_string(),
+        seed: 42,
+        ..Default::default()
+    };
+    let budget_mb = 0.3;
+    let runs = experiments::budget(&opts, budget_mb, true).expect("budget harness failed");
+    assert_eq!(runs.len(), 4);
+    for m in &runs {
+        assert_eq!(
+            m.stop_reason,
+            Some(StopReason::CommBudget),
+            "{} should stop on the communication budget",
+            m.algo
+        );
+        assert!(m.ledger.total_mb() >= budget_mb, "{}", m.algo);
+        assert!(m.final_point().unwrap().loss.is_finite(), "{}", m.algo);
+    }
+    // No second-order oracle calls for the fully first-order methods,
+    // even under budgeted stopping.
+    for m in &runs {
+        if m.algo.starts_with("c2dfb") {
+            assert_eq!(m.oracles.second_order, 0, "{}", m.algo);
+        }
+    }
+    let n_files = std::fs::read_dir(dir.join("budget")).unwrap().count();
+    assert_eq!(n_files, 4 * 2); // csv + json per algorithm
+}

@@ -5,11 +5,22 @@
 
 use c2dfb::collective::Transport;
 use c2dfb::config::{Algorithm, ExperimentConfig};
-use c2dfb::coordinator::{experiments, run_with_task, run_with_task_shared};
+use c2dfb::coordinator::{experiments, Runner};
 use c2dfb::metrics::RunMetrics;
 use c2dfb::sim::{NetConfig, NetMode, SimNetwork};
 use c2dfb::tasks::QuadraticTask;
 use c2dfb::topology::{Graph, Topology};
+
+fn run_with_task(task: &QuadraticTask, cfg: &ExperimentConfig) -> anyhow::Result<RunMetrics> {
+    Runner::new(cfg).task(task).run()
+}
+
+fn run_with_task_shared(
+    task: &QuadraticTask,
+    cfg: &ExperimentConfig,
+) -> anyhow::Result<RunMetrics> {
+    Runner::new(cfg).shared_task(task).run()
+}
 
 fn quad_cfg(algo: Algorithm) -> ExperimentConfig {
     let mut cfg = ExperimentConfig {
@@ -140,7 +151,11 @@ fn drop_rate_accounting_is_exact() {
     assert!(m.ledger.dropped_messages > 0);
     assert_eq!(m.trace.last().unwrap().dropped_msgs, m.ledger.dropped_messages);
     let csv = m.to_csv();
-    assert!(csv.lines().next().unwrap().ends_with(",dropped"));
+    assert!(csv
+        .lines()
+        .next()
+        .unwrap()
+        .ends_with(",dropped,stop_reason"));
 }
 
 /// Straggler ordering in virtual time: the event log is time-sorted, the
