@@ -215,28 +215,3 @@ pub fn drive<T: Transport>(
     Ok(())
 }
 
-/// Entry point: dispatch on the configured algorithm and run to completion.
-#[deprecated(note = "use coordinator::Runner::new(&cfg).task(&task).run()")]
-pub fn run<T: Transport>(
-    task: &dyn BilevelTask,
-    net: T,
-    cfg: ExperimentConfig,
-) -> Result<RunMetrics> {
-    let mut ctx = RunContext::new(task, net, cfg);
-    let mut algo = make_algorithm(ctx.cfg.algorithm);
-    drive(&mut ctx, algo.as_mut(), &mut NoObserver)?;
-    Ok(ctx.metrics)
-}
-
-/// [`run`] for thread-shareable tasks: honours `network.threads`.
-#[deprecated(note = "use coordinator::Runner::new(&cfg).shared_task(&task).run()")]
-pub fn run_shared<T: Transport>(
-    task: &(dyn BilevelTask + Sync),
-    net: T,
-    cfg: ExperimentConfig,
-) -> Result<RunMetrics> {
-    let mut ctx = RunContext::new_shared(task, net, cfg);
-    let mut algo = make_algorithm(ctx.cfg.algorithm);
-    drive(&mut ctx, algo.as_mut(), &mut NoObserver)?;
-    Ok(ctx.metrics)
-}

@@ -14,7 +14,7 @@ use crate::data::partition::Partition;
 use crate::metrics::{RunMetrics, TracePoint};
 use crate::runtime::ArtifactRegistry;
 use crate::sim::{NetConfig, NetMode};
-use crate::tasks::QuadraticTask;
+use crate::tasks::{BilevelTask, HyperRepTask, LogRegTask, QuadraticTask};
 use crate::topology::Topology;
 use anyhow::Result;
 
@@ -411,25 +411,111 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
     Ok(runs)
 }
 
+/// Build a native (artifact-free) task by name for the no-artifact
+/// harnesses: `"quadratic"` (the analytic default), `"logreg"`
+/// (hyperparameter tuning, `dir:0.5` Dirichlet label skew) or
+/// `"hyperrep"` (linear hyper-representation).  Sizes scale with `tiny`.
+pub fn native_task(
+    spec: &str,
+    nodes: usize,
+    tiny: bool,
+    seed: u64,
+) -> Result<Box<dyn BilevelTask + Sync>> {
+    let part = crate::data::partition::Partition::Dirichlet { alpha: 0.5 };
+    Ok(match spec {
+        "quadratic" | "quad" => {
+            let dim = if tiny { 8 } else { 32 };
+            Box::new(QuadraticTask::generate(nodes, dim, 0.8, seed))
+        }
+        "logreg" => {
+            let (d, n_tr, n_val) = if tiny { (12, 24, 12) } else { (48, 80, 40) };
+            Box::new(LogRegTask::generate(nodes, d, 4, n_tr, n_val, part, 0.4, seed))
+        }
+        "hyperrep" => {
+            let (p, k, n_tr, n_val) = if tiny { (12, 4, 20, 10) } else { (36, 8, 64, 32) };
+            Box::new(HyperRepTask::generate(
+                nodes, p, k, 4, n_tr, n_val, part, 0.3, seed,
+            ))
+        }
+        other => anyhow::bail!("unknown native task {other:?} (quadratic|logreg|hyperrep)"),
+    })
+}
+
+/// Per-algorithm settings for the native data tasks (smaller steps than
+/// the quadratic: CE/ridge curvature, λ = 10 like the paper).
+fn native_cfg_for(
+    algo: Algorithm,
+    spec: &str,
+    rounds: usize,
+    nodes: usize,
+    o: &HarnessOpts,
+) -> ExperimentConfig {
+    if matches!(spec, "quadratic" | "quad") {
+        return quad_cfg_for(algo, rounds, nodes, o);
+    }
+    let mut cfg = ExperimentConfig {
+        algorithm: algo,
+        nodes,
+        rounds,
+        seed: o.seed,
+        out_dir: o.out_dir.clone(),
+        eval_every: (rounds / 10).max(1),
+        gamma_out: 0.8,
+        gamma_in: 0.6,
+        inner_steps: 5,
+        lambda: 10.0,
+        compressor: "topk:0.5".into(),
+        ..ExperimentConfig::default()
+    };
+    match spec {
+        "logreg" => {
+            cfg.eta_out = 0.2;
+            cfg.eta_in = 0.3;
+        }
+        _ => {
+            // hyperrep: the embedded-feature Gram matrix has the largest
+            // curvature; keep both levels conservative.
+            cfg.eta_out = 0.05;
+            cfg.eta_in = 0.05;
+        }
+    }
+    if matches!(algo, Algorithm::Mdbo) {
+        cfg.eta_in *= 0.5; // untracked gossip SGD needs smaller LL steps
+    }
+    cfg
+}
+
 /// **budget** — the equal-communication comparison behind the paper's
-/// efficiency claim: run all four algorithms on the analytic quadratic
-/// task until each has spent the same communication budget (MB), then
-/// compare where they got.  This makes the Table-1 / Fig-2 "who wins at
-/// equal communication" reading a first-class run instead of post-hoc
-/// trace slicing (cf. Zhang et al. 2023's framing of decentralized
-/// bilevel baselines by communication complexity).  Needs no artifacts.
+/// efficiency claim: run all four algorithms on a native task until each
+/// has spent the same communication budget (MB), then compare where they
+/// got.  This makes the Table-1 / Fig-2 "who wins at equal communication"
+/// reading a first-class run instead of post-hoc trace slicing (cf. Zhang
+/// et al. 2023's framing of decentralized bilevel baselines by
+/// communication complexity).  Needs no artifacts; `task_spec` selects
+/// quadratic (default), logreg or hyperrep via [`native_task`].
 ///
 /// Every run carries a [`crate::metrics::StopCondition::CommBudgetMb`]
 /// plus a generous round cap as a non-progress guard; the printed `stop`
 /// column should read `comm_budget` for every row.
 pub fn budget(o: &HarnessOpts, budget_mb: f64, tiny: bool) -> Result<Vec<RunMetrics>> {
-    let (nodes, dim) = if tiny { (6, 8) } else { (8, 32) };
+    budget_on(o, budget_mb, tiny, "quadratic")
+}
+
+/// [`budget`] on an explicit native task.
+pub fn budget_on(
+    o: &HarnessOpts,
+    budget_mb: f64,
+    tiny: bool,
+    task_spec: &str,
+) -> Result<Vec<RunMetrics>> {
+    let nodes = if tiny { 6 } else { 8 };
+    let task = native_task(task_spec, nodes, tiny, o.seed)?;
     println!(
         "== budget: all algorithms to {budget_mb} MB of communication \
-         (quadratic, m={nodes}, d={dim}, round cap {}) ==",
+         ({}, m={nodes}, round cap {}) ==",
+        task.name(),
         o.rounds
     );
-    let task = QuadraticTask::generate(nodes, dim, 0.8, o.seed);
     let algos = [
         Algorithm::C2dfb,
         Algorithm::C2dfbNc,
@@ -439,15 +525,15 @@ pub fn budget(o: &HarnessOpts, budget_mb: f64, tiny: bool) -> Result<Vec<RunMetr
 
     let mut runs = Vec::new();
     for algo in algos {
-        let mut cfg = quad_cfg_for(algo, o.rounds, nodes, o);
-        cfg.name = "budget".into();
+        let mut cfg = native_cfg_for(algo, task_spec, o.rounds, nodes, o);
+        cfg.name = format!("budget_{task_spec}");
         cfg.stop.comm_mb = Some(budget_mb);
         // Check the budget every round so each run lands within one outer
         // round of the budget (the stop contract is one eval interval).
         cfg.eval_every = 1;
         let mut guard = HarnessObserver { verbose: o.verbose };
         let m = Runner::new(&cfg)
-            .shared_task(&task)
+            .shared_task(task.as_ref())
             .observer(&mut guard)
             .run()?;
         println!("  {}", summarize(&m));

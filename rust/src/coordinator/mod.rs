@@ -65,11 +65,12 @@ pub fn build_task(reg: &ArtifactRegistry, cfg: &ExperimentConfig) -> Result<Pjrt
 }
 
 /// Fluent run entry point: pick a task source, optionally attach a
-/// [`RunObserver`], and `.run()`.  Replaces the `run_with_task` /
-/// `run_with_task_shared` / `run_with_registry` trio (kept one release as
-/// deprecated shims): the runner owns transport selection (sync vs event),
-/// execution mode (serial vs [`crate::sim::NodePool`]) and budgeted
-/// stopping, so every entry path behaves identically.
+/// [`RunObserver`], and `.run()`.  Replaces the pre-Runner
+/// `run_with_task` / `run_with_task_shared` / `run_with_registry` trio
+/// (removed after their one-release deprecation window; see the
+/// migration table in `docs/API.md`): the runner owns transport selection
+/// (sync vs event), execution mode (serial vs [`crate::sim::NodePool`])
+/// and budgeted stopping, so every entry path behaves identically.
 pub struct Runner<'a> {
     cfg: &'a ExperimentConfig,
     source: Source<'a>,
@@ -168,27 +169,6 @@ fn drive_on<T: Transport>(
     let mut algo = algorithms::make_algorithm(ctx.cfg.algorithm);
     algorithms::drive(&mut ctx, algo.as_mut(), obs)?;
     Ok(ctx.metrics)
-}
-
-/// Run one experiment end-to-end against the real artifacts.
-#[deprecated(note = "use Runner::new(cfg).registry(reg).run()")]
-pub fn run_with_registry(reg: &ArtifactRegistry, cfg: &ExperimentConfig) -> Result<RunMetrics> {
-    Runner::new(cfg).registry(reg).run()
-}
-
-/// Run against a caller-provided task (analytic tasks, tests).
-#[deprecated(note = "use Runner::new(cfg).task(task).run()")]
-pub fn run_with_task(task: &dyn BilevelTask, cfg: &ExperimentConfig) -> Result<RunMetrics> {
-    Runner::new(cfg).task(task).run()
-}
-
-/// [`Runner::shared_task`] as a free function.
-#[deprecated(note = "use Runner::new(cfg).shared_task(task).run()")]
-pub fn run_with_task_shared(
-    task: &(dyn BilevelTask + Sync),
-    cfg: &ExperimentConfig,
-) -> Result<RunMetrics> {
-    Runner::new(cfg).shared_task(task).run()
 }
 
 /// Persist a batch of run metrics under `out_dir/name/`.
@@ -305,31 +285,6 @@ mod tests {
         let cfg = ExperimentConfig::default();
         let err = Runner::new(&cfg).run().unwrap_err();
         assert!(err.to_string().contains("no task source"), "{err}");
-    }
-
-    /// The pre-Runner entry points must keep compiling and producing the
-    /// same runs for one deprecation cycle.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_work() {
-        let task = QuadraticTask::generate(4, 6, 0.5, 81);
-        let cfg = ExperimentConfig {
-            nodes: 4,
-            rounds: 3,
-            inner_steps: 3,
-            eta_out: 0.1,
-            eta_in: 0.2,
-            eval_every: 1,
-            ..ExperimentConfig::default()
-        };
-        let via_shim = run_with_task(&task, &cfg).unwrap();
-        let via_shared_shim = run_with_task_shared(&task, &cfg).unwrap();
-        let via_runner = Runner::new(&cfg).task(&task).run().unwrap();
-        let bits =
-            |m: &RunMetrics| m.trace.iter().map(|p| p.loss.to_bits()).collect::<Vec<_>>();
-        assert_eq!(bits(&via_shim), bits(&via_runner));
-        assert_eq!(bits(&via_shared_shim), bits(&via_runner));
-        assert_eq!(via_shim.ledger.total_bytes, via_runner.ledger.total_bytes);
     }
 
     #[test]

@@ -3,7 +3,11 @@
 //! `iid` reproduces the paper's random split; `heterogeneous(h)` its
 //! class-skew protocol: an `h` fraction of each class c's rows is pinned to
 //! node `c mod m`, the remaining `1−h` spread uniformly over the others
-//! (the paper's experiments use h = 0.8).
+//! (the paper's experiments use h = 0.8).  `dirichlet(α)` is the standard
+//! federated-learning label-skew knob (Hsu et al. 2019): each class's rows
+//! are divided across nodes by a fresh Dir(α·1_m) draw — α → ∞ recovers
+//! IID, α → 0 approaches single-class shards — giving a *continuous*
+//! heterogeneity axis where `het:h` only pins one home node per class.
 
 use super::Dataset;
 use crate::util::rng::Rng;
@@ -13,6 +17,8 @@ pub enum Partition {
     Iid,
     /// `h` ∈ [0, 1): fraction of each class pinned to its designated node.
     Heterogeneous { h: f64 },
+    /// Label-skew via per-class Dir(α·1_m) proportions (α > 0).
+    Dirichlet { alpha: f64 },
 }
 
 impl Partition {
@@ -20,6 +26,7 @@ impl Partition {
         match self {
             Partition::Iid => "iid".into(),
             Partition::Heterogeneous { h } => format!("het:{h}"),
+            Partition::Dirichlet { alpha } => format!("dir:{alpha}"),
         }
     }
 
@@ -34,7 +41,16 @@ impl Partition {
             }
             return Ok(Partition::Heterogeneous { h });
         }
-        Err(format!("unknown partition: {s} (use 'iid' or 'het:0.8')"))
+        if let Some(a) = s.strip_prefix("dir:").or_else(|| s.strip_prefix("dir=")) {
+            let alpha: f64 = a.parse().map_err(|_| format!("bad dirichlet alpha: {s}"))?;
+            if !(alpha > 0.0 && alpha.is_finite()) {
+                return Err(format!("dirichlet alpha must be positive, got {alpha}"));
+            }
+            return Ok(Partition::Dirichlet { alpha });
+        }
+        Err(format!(
+            "unknown partition: {s} (use 'iid', 'het:0.8' or 'dir:0.3')"
+        ))
     }
 
     /// Split `ds` into `m` shards according to the scheme.
@@ -71,6 +87,53 @@ impl Partition {
                                 t += 1;
                             }
                             assignment[t].push(r);
+                        }
+                    }
+                }
+            }
+            Partition::Dirichlet { alpha } => {
+                let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+                for i in 0..ds.n {
+                    by_class[ds.labels[i]].push(i);
+                }
+                for mut rows in by_class.into_iter() {
+                    rng.shuffle(&mut rows);
+                    let p = rng.dirichlet(*alpha, m);
+                    // Largest-remainder allocation: counts sum exactly to
+                    // the class size, so no rows are lost or duplicated.
+                    let n_c = rows.len();
+                    let mut counts: Vec<usize> =
+                        p.iter().map(|&q| (q * n_c as f64).floor() as usize).collect();
+                    let assigned: usize = counts.iter().sum();
+                    let mut rema: Vec<(usize, f64)> = p
+                        .iter()
+                        .enumerate()
+                        .map(|(t, &q)| (t, q * n_c as f64 - (q * n_c as f64).floor()))
+                        .collect();
+                    rema.sort_by(|a, b| {
+                        b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+                    });
+                    for &(t, _) in rema.iter().take(n_c - assigned) {
+                        counts[t] += 1;
+                    }
+                    let mut it = rows.into_iter();
+                    for (t, &cnt) in counts.iter().enumerate() {
+                        for _ in 0..cnt {
+                            assignment[t].push(it.next().unwrap());
+                        }
+                    }
+                }
+                // Tiny α can starve a node entirely; downstream shard
+                // resizing samples *from* the shard, so guarantee every
+                // node at least one row by stealing from the fullest.
+                for t in 0..m {
+                    if assignment[t].is_empty() {
+                        let donor = (0..m)
+                            .max_by_key(|&s| assignment[s].len())
+                            .expect("m >= 1");
+                        if assignment[donor].len() > 1 {
+                            let row = assignment[donor].pop().unwrap();
+                            assignment[t].push(row);
                         }
                     }
                 }
@@ -167,7 +230,46 @@ mod tests {
             Partition::parse("het:0.8").unwrap(),
             Partition::Heterogeneous { h: 0.8 }
         );
+        assert_eq!(
+            Partition::parse("dir:0.3").unwrap(),
+            Partition::Dirichlet { alpha: 0.3 }
+        );
         assert!(Partition::parse("x").is_err());
         assert!(Partition::parse("het:2").is_err());
+        assert!(Partition::parse("dir:0").is_err());
+        assert!(Partition::parse("dir:-1").is_err());
+    }
+
+    #[test]
+    fn dirichlet_conserves_rows_and_alpha_controls_skew() {
+        let ds = newsgroups_like(600, 16, 6, 0.3, 11);
+        let mut rng = Rng::new(12);
+        let tight = Partition::Dirichlet { alpha: 100.0 }.split(&ds, 6, &mut rng);
+        let loose = Partition::Dirichlet { alpha: 0.1 }.split(&ds, 6, &mut rng);
+        for shards in [&tight, &loose] {
+            assert_eq!(shards.iter().map(|s| s.n).sum::<usize>(), 600);
+            assert!(shards.iter().all(|s| s.n >= 1), "empty shard");
+        }
+        let s_tight = skew(&tight, 6);
+        let s_loose = skew(&loose, 6);
+        assert!(
+            s_tight + 0.1 < s_loose,
+            "α=100 skew {s_tight} should be well below α=0.1 skew {s_loose}"
+        );
+    }
+
+    #[test]
+    fn dirichlet_split_is_deterministic_by_seed() {
+        let ds = newsgroups_like(200, 8, 4, 0.3, 13);
+        let shards = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            Partition::Dirichlet { alpha: 0.5 }
+                .split(&ds, 5, &mut rng)
+                .iter()
+                .map(|s| (s.n, s.labels.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(shards(7), shards(7));
+        assert_ne!(shards(7), shards(8));
     }
 }

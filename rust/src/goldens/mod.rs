@@ -1,0 +1,497 @@
+//! Golden-trace regression fixtures: deterministic pinned trajectories for
+//! every algorithm on every native task.
+//!
+//! The scenario matrix is {C²DFB, C²DFB(nc), MADSBO, MDBO} ×
+//! {quadratic, logreg, hyperrep} × {ring, exponential} × {sync,
+//! benign-sim} — 48 short runs, a few rounds each, every one seeded so a
+//! `(code, fixture)` pair either agrees bit-for-bit-modulo-tolerance or
+//! the build fails.  This is the safety net performance PRs diff against:
+//! a refactor that changes any trajectory, byte count or oracle count
+//! shows up as fixture drift.
+//!
+//! * [`bless`] regenerates the fixtures under `rust/goldens/*.json` (one
+//!   file per task).  Blessing is deterministic: a second bless produces
+//!   byte-identical files (CI proves this on every push).
+//! * [`replay`] re-runs the matrix and diffs against the committed
+//!   fixtures with per-field tolerances — **exact** for communication
+//!   bytes, message/round counts, oracle counts and stop reasons,
+//!   **1e-9 relative** for losses, gradient norms and consensus errors
+//!   (floating-point results may legitimately be re-associated by future
+//!   compiler versions; byte counts may not drift, ever).
+//! * Missing fixture files are bootstrapped on first replay (written and
+//!   reported, not failed) so a fresh clone without a toolchain-blessed
+//!   checkout can still self-initialize; commit the generated files.
+//!
+//! CLI: `c2dfb goldens [--bless] [--dir D]`; test: `tests/golden.rs`.
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::coordinator::Runner;
+use crate::data::partition::Partition;
+use crate::metrics::RunMetrics;
+use crate::sim::NetMode;
+use crate::tasks::{BilevelTask, HyperRepTask, LogRegTask, QuadraticTask};
+use crate::topology::Topology;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Fixture format version; bump when the schema changes (forces re-bless).
+pub const FORMAT: u64 = 1;
+
+/// Relative tolerance for float trace fields (loss, grad norm, consensus).
+pub const REL_TOL: f64 = 1e-9;
+
+/// Which native task a scenario runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Quadratic,
+    Logreg,
+    Hyperrep,
+}
+
+impl TaskKind {
+    pub const ALL: [TaskKind; 3] = [TaskKind::Quadratic, TaskKind::Logreg, TaskKind::Hyperrep];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Quadratic => "quadratic",
+            TaskKind::Logreg => "logreg",
+            TaskKind::Hyperrep => "hyperrep",
+        }
+    }
+
+    /// Build the task instance (fixed generation seeds: the fixtures pin
+    /// these exact datasets).
+    pub fn build(&self) -> Box<dyn BilevelTask + Sync> {
+        match self {
+            TaskKind::Quadratic => Box::new(QuadraticTask::generate(4, 8, 0.8, 11)),
+            TaskKind::Logreg => Box::new(LogRegTask::generate(
+                4,
+                12,
+                3,
+                24,
+                12,
+                Partition::Dirichlet { alpha: 0.5 },
+                0.4,
+                11,
+            )),
+            TaskKind::Hyperrep => Box::new(HyperRepTask::generate(
+                4,
+                12,
+                4,
+                3,
+                20,
+                10,
+                Partition::Dirichlet { alpha: 0.5 },
+                0.3,
+                13,
+            )),
+        }
+    }
+}
+
+/// Which transport engine a scenario uses.  `BenignSim` is the event
+/// engine with the default (lossless, jitter-free) link model — its
+/// fixtures double as a pinned record of the sync ≡ benign-sim
+/// equivalence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Sync,
+    BenignSim,
+}
+
+impl Engine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Sync => "sync",
+            Engine::BenignSim => "sim",
+        }
+    }
+}
+
+/// One cell of the golden matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    pub algo: Algorithm,
+    pub task: TaskKind,
+    pub topology: Topology,
+    pub engine: Engine,
+}
+
+impl Scenario {
+    /// Key inside the per-task fixture file, e.g. `c2dfb_ring_sync`.
+    pub fn id(&self) -> String {
+        format!(
+            "{}_{}_{}",
+            self.algo.name(),
+            self.topology.name(),
+            self.engine.name()
+        )
+    }
+}
+
+/// The full 4×3×2×2 matrix in a deterministic order.
+pub fn matrix() -> Vec<Scenario> {
+    let algos = [
+        Algorithm::C2dfb,
+        Algorithm::C2dfbNc,
+        Algorithm::Madsbo,
+        Algorithm::Mdbo,
+    ];
+    let topologies = [Topology::Ring, Topology::Exponential];
+    let engines = [Engine::Sync, Engine::BenignSim];
+    let mut out = Vec::with_capacity(48);
+    for task in TaskKind::ALL {
+        for algo in algos {
+            for topology in topologies {
+                for engine in engines {
+                    out.push(Scenario { algo, task, topology, engine });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The run configuration for a scenario: a few rounds, eval every round,
+/// per-task step sizes known to stay finite.  Everything here is part of
+/// the fixture contract — changing any value invalidates the fixtures
+/// (re-bless and review the diff).
+pub fn config_for(s: &Scenario) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        name: "goldens".into(),
+        algorithm: s.algo,
+        nodes: 4,
+        topology: s.topology,
+        rounds: 3,
+        eval_every: 1,
+        seed: 42,
+        compressor: "topk:0.5".into(),
+        gamma_out: 0.8,
+        gamma_in: 0.6,
+        ..ExperimentConfig::default()
+    };
+    match s.task {
+        TaskKind::Quadratic => {
+            cfg.inner_steps = 8;
+            cfg.eta_out = 0.3;
+            cfg.eta_in = 0.4;
+            cfg.lambda = 50.0;
+        }
+        TaskKind::Logreg => {
+            cfg.inner_steps = 5;
+            cfg.eta_out = 0.2;
+            cfg.eta_in = 0.3;
+            cfg.lambda = 10.0;
+        }
+        TaskKind::Hyperrep => {
+            cfg.inner_steps = 5;
+            cfg.eta_out = 0.05;
+            cfg.eta_in = 0.05;
+            cfg.lambda = 10.0;
+        }
+    }
+    if s.engine == Engine::BenignSim {
+        cfg.network.mode = NetMode::Event;
+    }
+    cfg
+}
+
+/// Run one scenario against an already-built task.
+pub fn run_scenario(task: &(dyn BilevelTask + Sync), s: &Scenario) -> Result<RunMetrics> {
+    let cfg = config_for(s);
+    Runner::new(&cfg)
+        .shared_task(task)
+        .run()
+        .with_context(|| format!("golden scenario {} ({})", s.id(), s.task.name()))
+}
+
+/// Default fixture directory: `<crate root>/goldens`.
+pub fn default_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("goldens")
+}
+
+fn fixture_path(dir: &Path, task: TaskKind) -> PathBuf {
+    dir.join(format!("{}.json", task.name()))
+}
+
+/// Serialize one run into its fixture record.  Wall-clock fields are
+/// deliberately excluded (non-deterministic); everything here must be a
+/// pure function of (code, config, seed).
+fn run_json(s: &Scenario, m: &RunMetrics) -> Json {
+    let trace: Vec<Json> = m
+        .trace
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("round", Json::num(p.round as f64)),
+                ("comm_mb", Json::num(p.comm_mb)),
+                ("loss", Json::num(p.loss)),
+                ("grad_norm", Json::num(p.grad_norm)),
+                ("consensus", Json::num(p.consensus_err)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("algo", Json::str(s.algo.name())),
+        ("topology", Json::str(s.topology.name())),
+        ("engine", Json::str(s.engine.name())),
+        ("total_bytes", Json::num(m.ledger.total_bytes as f64)),
+        ("messages", Json::num(m.ledger.messages as f64)),
+        ("gossip_rounds", Json::num(m.ledger.gossip_rounds as f64)),
+        ("first_order", Json::num(m.oracles.first_order as f64)),
+        ("second_order", Json::num(m.oracles.second_order as f64)),
+        ("evals", Json::num(m.oracles.evals as f64)),
+        (
+            "stop_reason",
+            Json::str(m.stop_reason.map_or("none", |r| r.name())),
+        ),
+        ("trace", Json::Arr(trace)),
+    ])
+}
+
+/// Run every scenario of one task kind and assemble the fixture document.
+fn fixture_for(task: TaskKind) -> Result<Json> {
+    let t = task.build();
+    let mut scenarios = Vec::new();
+    for s in matrix().into_iter().filter(|s| s.task == task) {
+        let m = run_scenario(t.as_ref(), &s)?;
+        scenarios.push((s.id(), run_json(&s, &m)));
+    }
+    Ok(Json::obj(vec![
+        ("format", Json::num(FORMAT as f64)),
+        ("task", Json::str(task.name())),
+        (
+            "scenarios",
+            Json::Obj(scenarios.into_iter().collect()),
+        ),
+    ]))
+}
+
+/// Regenerate all fixture files under `dir`.  Deterministic: a second
+/// bless writes byte-identical files.
+pub fn bless(dir: &Path) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating fixture dir {}", dir.display()))?;
+    let mut written = Vec::new();
+    for task in TaskKind::ALL {
+        let doc = fixture_for(task)?;
+        let path = fixture_path(dir, task);
+        std::fs::write(&path, doc.to_string() + "\n")
+            .with_context(|| format!("writing {}", path.display()))?;
+        written.push(path);
+    }
+    Ok(written)
+}
+
+/// Outcome of a replay: which files were checked, which were freshly
+/// bootstrapped (absent before), and every field-level mismatch found.
+#[derive(Debug, Default)]
+pub struct ReplayReport {
+    pub checked: usize,
+    pub bootstrapped: Vec<PathBuf>,
+    pub mismatches: Vec<String>,
+}
+
+impl ReplayReport {
+    pub fn ok(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+}
+
+/// Fixture numbers may be `null` (JSON has no NaN literal — the baselines
+/// report a NaN grad norm at round 0).
+fn num_or_nan(v: Option<&Json>) -> f64 {
+    match v {
+        Some(Json::Null) | None => f64::NAN,
+        Some(j) => j.as_f64().unwrap_or(f64::NAN),
+    }
+}
+
+fn close_rel(a: f64, b: f64) -> bool {
+    // JSON has no NaN/Inf literal: every non-finite value is blessed as
+    // `null` and parses back as NaN, so all non-finite values are one
+    // equivalence class on replay (NaN vs Inf cannot be distinguished
+    // after a round-trip).
+    if !a.is_finite() || !b.is_finite() {
+        return !a.is_finite() && !b.is_finite();
+    }
+    (a - b).abs() <= REL_TOL * (1.0f64).max(a.abs()).max(b.abs())
+}
+
+/// Diff one scenario's expected fixture record against a fresh run.
+fn diff_run(id: &str, expected: &Json, actual: &Json, out: &mut Vec<String>) {
+    // Exact integer counters and strings.
+    for key in [
+        "total_bytes",
+        "messages",
+        "gossip_rounds",
+        "first_order",
+        "second_order",
+        "evals",
+    ] {
+        let e = num_or_nan(expected.get(key));
+        let a = num_or_nan(actual.get(key));
+        if e != a {
+            out.push(format!("{id}: {key} expected {e}, got {a} (exact field)"));
+        }
+    }
+    for key in ["stop_reason", "algo", "topology", "engine"] {
+        let e = expected.get(key).and_then(Json::as_str);
+        let a = actual.get(key).and_then(Json::as_str);
+        if e != a {
+            out.push(format!("{id}: {key} expected {e:?}, got {a:?}"));
+        }
+    }
+    let empty: Vec<Json> = Vec::new();
+    let etr = expected.get("trace").and_then(Json::as_arr).unwrap_or(&empty);
+    let atr = actual.get("trace").and_then(Json::as_arr).unwrap_or(&empty);
+    if etr.len() != atr.len() {
+        out.push(format!(
+            "{id}: trace length expected {}, got {}",
+            etr.len(),
+            atr.len()
+        ));
+        return;
+    }
+    for (i, (e, a)) in etr.iter().zip(atr).enumerate() {
+        // Round index and comm bytes are exact; losses are tolerance-based.
+        for key in ["round", "comm_mb"] {
+            let ev = num_or_nan(e.get(key));
+            let av = num_or_nan(a.get(key));
+            if ev != av {
+                out.push(format!(
+                    "{id}[{i}]: {key} expected {ev}, got {av} (exact field)"
+                ));
+            }
+        }
+        for key in ["loss", "grad_norm", "consensus"] {
+            let ev = num_or_nan(e.get(key));
+            let av = num_or_nan(a.get(key));
+            if !close_rel(ev, av) {
+                out.push(format!(
+                    "{id}[{i}]: {key} expected {ev}, got {av} (rel tol {REL_TOL})"
+                ));
+            }
+        }
+    }
+}
+
+/// Replay the full matrix against the fixtures under `dir`.  Absent
+/// fixture files are bootstrapped (written from the current code) and
+/// reported; present files are diffed field by field.
+pub fn replay(dir: &Path) -> Result<ReplayReport> {
+    let mut report = ReplayReport::default();
+    for task in TaskKind::ALL {
+        let path = fixture_path(dir, task);
+        if !path.exists() {
+            let actual = fixture_for(task)?;
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating fixture dir {}", dir.display()))?;
+            std::fs::write(&path, actual.to_string() + "\n")
+                .with_context(|| format!("bootstrapping {}", path.display()))?;
+            report.bootstrapped.push(path);
+            continue;
+        }
+        // Parse and format-check the fixture BEFORE paying for the 16
+        // scenario re-runs, so corrupt/stale files fail fast.
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let expected = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let fmt = num_or_nan(expected.get("format"));
+        if fmt != FORMAT as f64 {
+            bail!(
+                "{}: fixture format {fmt} != supported {FORMAT}; re-bless with `c2dfb goldens --bless`",
+                path.display()
+            );
+        }
+        let actual = fixture_for(task)?;
+        let empty = std::collections::BTreeMap::new();
+        let escn = expected
+            .get("scenarios")
+            .and_then(Json::as_obj)
+            .unwrap_or(&empty);
+        let ascn = actual
+            .get("scenarios")
+            .and_then(Json::as_obj)
+            .expect("fixture_for always emits scenarios");
+        for (id, a) in ascn {
+            match escn.get(id) {
+                None => report
+                    .mismatches
+                    .push(format!("{}: scenario {id} missing from fixture", task.name())),
+                Some(e) => diff_run(id, e, a, &mut report.mismatches),
+            }
+            report.checked += 1;
+        }
+        for id in escn.keys() {
+            if !ascn.contains_key(id) {
+                report.mismatches.push(format!(
+                    "{}: fixture scenario {id} no longer produced",
+                    task.name()
+                ));
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_is_full_and_ids_unique() {
+        let m = matrix();
+        assert_eq!(m.len(), 48, "4 algos × 3 tasks × 2 topologies × 2 engines");
+        let mut ids: Vec<String> =
+            m.iter().map(|s| format!("{}/{}", s.task.name(), s.id())).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 48, "scenario ids must be unique");
+    }
+
+    #[test]
+    fn configs_validate() {
+        for s in matrix() {
+            config_for(&s).validate().unwrap_or_else(|e| {
+                panic!("invalid golden config for {}: {e}", s.id());
+            });
+        }
+    }
+
+    #[test]
+    fn close_rel_handles_nonfinite_and_scale() {
+        assert!(close_rel(f64::NAN, f64::NAN));
+        assert!(!close_rel(f64::NAN, 1.0));
+        // Inf blesses as null and replays as NaN: one equivalence class.
+        assert!(close_rel(f64::INFINITY, f64::NAN));
+        assert!(close_rel(f64::NEG_INFINITY, f64::INFINITY));
+        assert!(!close_rel(f64::INFINITY, 1.0));
+        assert!(close_rel(1.0, 1.0 + 1e-12));
+        assert!(!close_rel(1.0, 1.0 + 1e-6));
+        assert!(close_rel(1e12, 1e12 * (1.0 + 1e-10)));
+    }
+
+    #[test]
+    fn run_json_excludes_wall_clock_and_roundtrips() {
+        let s = Scenario {
+            algo: Algorithm::C2dfb,
+            task: TaskKind::Quadratic,
+            topology: Topology::Ring,
+            engine: Engine::Sync,
+        };
+        let t = TaskKind::Quadratic.build();
+        let m = run_scenario(t.as_ref(), &s).unwrap();
+        let j = run_json(&s, &m);
+        let text = j.to_string();
+        assert!(!text.contains("wall"), "wall-clock must not enter fixtures");
+        let re = Json::parse(&text).unwrap();
+        assert_eq!(re, j, "fixture records must round-trip through JSON");
+        // And a self-diff is clean.
+        let mut out = Vec::new();
+        diff_run("self", &j, &re, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -50,6 +50,17 @@
 //! Per-node compute (oracle calls) can additionally run on a scoped
 //! thread pool ([`sim::NodePool`], `network.threads` config) with
 //! node-ordered reductions, so results are identical at any thread count.
+//!
+//! ## Native tasks and golden traces
+//!
+//! Three task implementations need no artifacts and run on any build:
+//! the analytic [`tasks::QuadraticTask`], the hyperparameter-tuning
+//! [`tasks::LogRegTask`] and the [`tasks::HyperRepTask`] linear
+//! hyper-representation (see `docs/TASKS.md`).  Their trajectories are
+//! pinned by the [`goldens`] regression fixtures (`c2dfb goldens
+//! [--bless]`, `tests/golden.rs`): exact byte/oracle accounting plus
+//! 1e-9-relative losses across the full algorithm × task × topology ×
+//! engine matrix.
 
 pub mod algorithms;
 pub mod collective;
@@ -57,6 +68,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod goldens;
 pub mod linalg;
 pub mod metrics;
 pub mod optim;

@@ -9,6 +9,7 @@
 //! c2dfb all [--rounds N]          # every table+figure harness
 //! c2dfb netsweep [--rounds N] [--tiny]   # network-regime sweep (no artifacts)
 //! c2dfb budget [--budget_mb MB] [--tiny]  # equal-comm-budget comparison
+//! c2dfb goldens [--bless] [--dir D]  # golden-trace fixtures: replay/bless
 //! c2dfb artifacts                  # list AOT artifacts + shapes
 //! ```
 
@@ -26,7 +27,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|all|artifacts> [options]
+const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|goldens|all|artifacts> [options]
   run options: --config <file.toml> plus any config key as --key value
                (e.g. --algo mdbo --topology er:0.4 --partition het:0.8
                 --rounds 100 --compressor topk:0.2 --lambda 10)
@@ -40,7 +41,12 @@ const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|
                    --verbose (stream one progress line per eval point)
   netsweep: C²DFB vs baselines across network regimes (no artifacts needed)
   budget:   all four algorithms to one communication budget (--budget_mb MB,
-            no artifacts needed); prints comm/oracles/loss + stop reason";
+            --task quadratic|logreg|hyperrep, no artifacts needed); prints
+            comm/oracles/loss + stop reason
+  goldens:  replay the 4 algo x 3 task x 2 topology x 2 engine golden-trace
+            matrix against rust/goldens/*.json (drift fails; missing files
+            are bootstrapped); --bless regenerates the fixtures, --dir D
+            overrides the fixture directory";
 
 fn real_main() -> Result<()> {
     let args = Args::from_env();
@@ -69,6 +75,7 @@ fn real_main() -> Result<()> {
         "run" => cmd_run(args),
         "netsweep" => cmd_netsweep(args),
         "budget" => cmd_budget(args),
+        "goldens" => cmd_goldens(args),
         "table1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "ablation" | "all" => {
             cmd_harness(&sub, args)
         }
@@ -147,6 +154,7 @@ fn cmd_netsweep(mut args: Args) -> Result<()> {
 fn cmd_budget(mut args: Args) -> Result<()> {
     let tiny = args.flag("tiny");
     let budget_mb: f64 = args.get_parse("budget_mb", if tiny { 0.75 } else { 8.0 });
+    let task_spec = args.get_or("task", "quadratic");
     let opts = experiments::HarnessOpts {
         // A generous non-progress guard; the comm budget should fire first.
         rounds: args.get_parse("rounds", if tiny { 200 } else { 600 }),
@@ -156,12 +164,53 @@ fn cmd_budget(mut args: Args) -> Result<()> {
         ..Default::default()
     };
     args.finish().map_err(anyhow::Error::msg)?;
-    // Analytic task — no artifact registry needed.
-    experiments::budget(&opts, budget_mb, tiny)?;
+    // Native tasks — no artifact registry needed.
+    experiments::budget_on(&opts, budget_mb, tiny, &task_spec)?;
     println!(
         "\ntraces under {}/budget/ — equal-communication comparison; the stop column records why each run ended.",
         opts.out_dir
     );
+    Ok(())
+}
+
+fn cmd_goldens(mut args: Args) -> Result<()> {
+    let bless = args.flag("bless");
+    let dir = match args.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => c2dfb::goldens::default_dir(),
+    };
+    args.finish().map_err(anyhow::Error::msg)?;
+    if bless {
+        let written = c2dfb::goldens::bless(&dir)?;
+        for p in &written {
+            println!("blessed {}", p.display());
+        }
+        println!(
+            "{} fixture files regenerated; commit them so replay pins this behavior.",
+            written.len()
+        );
+        return Ok(());
+    }
+    let report = c2dfb::goldens::replay(&dir)?;
+    for p in &report.bootstrapped {
+        println!("bootstrapped {} (no fixture on disk; commit it)", p.display());
+    }
+    println!(
+        "replayed {} golden scenarios against {}",
+        report.checked,
+        dir.display()
+    );
+    if !report.ok() {
+        for m in &report.mismatches {
+            eprintln!("  DRIFT {m}");
+        }
+        anyhow::bail!(
+            "{} golden-trace mismatches — if the change is intentional, \
+             re-bless with `c2dfb goldens --bless` and commit the diff",
+            report.mismatches.len()
+        );
+    }
+    println!("all golden traces match.");
     Ok(())
 }
 

@@ -1,0 +1,519 @@
+//! Native (pure-Rust, no-PJRT) linear hyper-representation task.
+//!
+//! Per node i, with a shared linear embedding E ∈ R^{p×k} (the upper
+//! variable, flattened row-major) and a regression head W ∈ R^{k×c} (the
+//! lower variable):
+//!
+//!   g_i(E, W) = 1/(2n)‖A_tr E W − B_tr‖²_F + ρ/2 ‖W‖²_F
+//!   f_i(E, W) = 1/(2n)‖A_val E W − B_val‖²_F
+//!
+//! i.e. the lower level ridge-fits a head on the node's embedded train
+//! shard and the upper level learns the embedding that makes those heads
+//! work on validation data — the paper's hyper-representation workload
+//! with a linear backbone so every oracle (HVP/JVP included) is
+//! closed-form matrix algebra.
+//!
+//! Data is an [`mnist_like`](crate::data::mnist_like) corpus regressed
+//! onto one-hot labels, partitioned by any [`Partition`] (including
+//! Dirichlet-α), seeded through [`crate::util::rng::Rng`] for
+//! bit-reproducibility — the golden-trace fixtures pin these runs.
+
+use super::{resize_guarded, BilevelTask};
+use crate::data::{mnist_like, partition::Partition, Dataset};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+struct Shard {
+    n: usize,
+    /// n×p features.
+    a: Vec<f32>,
+    /// n×c one-hot targets.
+    b: Vec<f32>,
+    labels: Vec<usize>,
+}
+
+impl Shard {
+    fn stage(ds: &Dataset) -> Shard {
+        Shard { n: ds.n, a: ds.features.clone(), b: ds.onehot(), labels: ds.labels.clone() }
+    }
+}
+
+pub struct HyperRepTask {
+    m: usize,
+    /// Input feature dimension p.
+    pub inputs: usize,
+    /// Embedding dimension k.
+    pub embed: usize,
+    pub classes: usize,
+    /// Head ridge coefficient ρ (keeps the lower level strongly convex).
+    pub ridge: f32,
+    train: Vec<Shard>,
+    val: Vec<Shard>,
+}
+
+impl HyperRepTask {
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate(
+        m: usize,
+        inputs: usize,
+        embed: usize,
+        classes: usize,
+        n_train: usize,
+        n_val: usize,
+        partition: Partition,
+        noise: f32,
+        seed: u64,
+    ) -> HyperRepTask {
+        let mut rng = Rng::new(seed);
+        let need_tr = m * n_train;
+        let need_val = m * n_val;
+        let global = mnist_like(
+            (need_tr + need_val) * 3 / 2,
+            inputs,
+            classes,
+            noise,
+            rng.next_u64(),
+        );
+        let (train_pool, val_pool) =
+            global.split(need_tr as f64 / (need_tr + need_val) as f64, &mut rng);
+        let train_shards = partition.split(&train_pool, m, &mut rng);
+        let val_shards = Partition::Iid.split(&val_pool, m, &mut rng);
+        let train = train_shards
+            .iter()
+            .map(|s| Shard::stage(&resize_guarded(s, &train_pool, n_train, &mut rng)))
+            .collect();
+        let val = val_shards
+            .iter()
+            .map(|s| Shard::stage(&resize_guarded(s, &val_pool, n_val, &mut rng)))
+            .collect();
+        HyperRepTask { m, inputs, embed, classes, ridge: 0.1, train, val }
+    }
+
+    /// Embedded features Z = A E (n×k) for a shard.
+    fn embed_shard(&self, shard: &Shard, e: &[f32]) -> Vec<f32> {
+        let (p, k) = (self.inputs, self.embed);
+        let mut z = vec![0.0f32; shard.n * k];
+        for r in 0..shard.n {
+            let a = &shard.a[r * p..(r + 1) * p];
+            let zr = &mut z[r * k..(r + 1) * k];
+            for (j, &aj) in a.iter().enumerate() {
+                if aj != 0.0 {
+                    let ej = &e[j * k..(j + 1) * k];
+                    for (zc, &ejc) in zr.iter_mut().zip(ej) {
+                        *zc += aj * ejc;
+                    }
+                }
+            }
+        }
+        z
+    }
+
+    /// Residual R = Z W − B (n×c).
+    fn residual(&self, shard: &Shard, z: &[f32], w: &[f32]) -> Vec<f32> {
+        let (k, c) = (self.embed, self.classes);
+        let mut r = vec![0.0f32; shard.n * c];
+        for row in 0..shard.n {
+            let zr = &z[row * k..(row + 1) * k];
+            let rr = &mut r[row * c..(row + 1) * c];
+            for (j, &zj) in zr.iter().enumerate() {
+                let wj = &w[j * c..(j + 1) * c];
+                for (rc, &wjc) in rr.iter_mut().zip(wj) {
+                    *rc += zj * wjc;
+                }
+            }
+            for (rc, &bc) in rr.iter_mut().zip(&shard.b[row * c..(row + 1) * c]) {
+                *rc -= bc;
+            }
+        }
+        r
+    }
+
+    /// ∇_W [1/(2n)‖ZW − B‖²] = Zᵀ R / n (k×c).
+    fn grad_w(&self, shard: &Shard, z: &[f32], r: &[f32]) -> Vec<f32> {
+        let (k, c) = (self.embed, self.classes);
+        let mut g = vec![0.0f32; k * c];
+        for row in 0..shard.n {
+            let zr = &z[row * k..(row + 1) * k];
+            let rr = &r[row * c..(row + 1) * c];
+            for (j, &zj) in zr.iter().enumerate() {
+                let gj = &mut g[j * c..(j + 1) * c];
+                for (gc, &rc) in gj.iter_mut().zip(rr) {
+                    *gc += zj * rc;
+                }
+            }
+        }
+        let n = shard.n.max(1) as f32;
+        for v in g.iter_mut() {
+            *v /= n;
+        }
+        g
+    }
+
+    /// ∇_E [1/(2n)‖A E W − B‖²] = Aᵀ R Wᵀ / n (p×k).
+    fn grad_e(&self, shard: &Shard, r: &[f32], w: &[f32]) -> Vec<f32> {
+        let (p, k, c) = (self.inputs, self.embed, self.classes);
+        // First S = R Wᵀ (n×k), then Aᵀ S.
+        let mut g = vec![0.0f32; p * k];
+        let mut s_row = vec![0.0f32; k];
+        for row in 0..r.len() / c {
+            let rr = &r[row * c..(row + 1) * c];
+            s_row.fill(0.0);
+            for (j, sj) in s_row.iter_mut().enumerate() {
+                let wj = &w[j * c..(j + 1) * c];
+                *sj = rr.iter().zip(wj).map(|(a, b)| a * b).sum();
+            }
+            let a = &shard.a[row * p..(row + 1) * p];
+            for (jf, &aj) in a.iter().enumerate() {
+                if aj != 0.0 {
+                    let gj = &mut g[jf * k..(jf + 1) * k];
+                    for (gc, &sc) in gj.iter_mut().zip(&s_row) {
+                        *gc += aj * sc;
+                    }
+                }
+            }
+        }
+        let n = shard.n.max(1) as f32;
+        for v in g.iter_mut() {
+            *v /= n;
+        }
+        g
+    }
+
+    /// Unregularized ∇_W of ½/n‖A E W − B‖² on a shard.  Split from
+    /// [`Self::grad_e_of`] so the inner loop (which only needs the head
+    /// gradient) never pays the O(n·p·k) embedding-gradient product.
+    fn grad_w_of(&self, shard: &Shard, e: &[f32], w: &[f32]) -> Vec<f32> {
+        let z = self.embed_shard(shard, e);
+        let r = self.residual(shard, &z, w);
+        self.grad_w(shard, &z, &r)
+    }
+
+    /// Unregularized ∇_E of ½/n‖A E W − B‖² on a shard.
+    fn grad_e_of(&self, shard: &Shard, e: &[f32], w: &[f32]) -> Vec<f32> {
+        let z = self.embed_shard(shard, e);
+        let r = self.residual(shard, &z, w);
+        self.grad_e(shard, &r, w)
+    }
+
+    fn loss_of(&self, shard: &Shard, e: &[f32], w: &[f32]) -> f64 {
+        let z = self.embed_shard(shard, e);
+        let r = self.residual(shard, &z, w);
+        let n = shard.n.max(1) as f64;
+        r.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / (2.0 * n)
+    }
+}
+
+impl BilevelTask for HyperRepTask {
+    fn nodes(&self) -> usize {
+        self.m
+    }
+
+    fn dx(&self) -> usize {
+        self.inputs * self.embed
+    }
+
+    fn dy(&self) -> usize {
+        self.embed * self.classes
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "hyperrep(m={}, p={}, k={}, c={})",
+            self.m, self.inputs, self.embed, self.classes
+        )
+    }
+
+    fn inner_y_grad(&self, i: usize, x: &[f32], y: &[f32], lambda: f32) -> Result<Vec<f32>> {
+        let gf = self.grad_w_of(&self.val[i], x, y);
+        let mut gg = self.grad_w_of(&self.train[i], x, y);
+        for (g, &wv) in gg.iter_mut().zip(y) {
+            *g += self.ridge * wv;
+        }
+        Ok(gf
+            .iter()
+            .zip(&gg)
+            .map(|(a, b)| a + lambda * b)
+            .collect())
+    }
+
+    fn inner_z_grad(&self, i: usize, x: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+        let mut gg = self.grad_w_of(&self.train[i], x, z);
+        for (g, &wv) in gg.iter_mut().zip(z) {
+            *g += self.ridge * wv;
+        }
+        Ok(gg)
+    }
+
+    fn hypergrad(&self, i: usize, x: &[f32], y: &[f32], z: &[f32], lambda: f32) -> Result<Vec<f32>> {
+        // u = ∇_E f(x,y) + λ(∇_E g(x,y) − ∇_E g(x,z)); the ridge term has
+        // no E-dependence.  The train-shard embedding Z = A·E depends only
+        // on x, so compute it once for both penalty residuals.
+        let gf_e = self.grad_e_of(&self.val[i], x, y);
+        let train = &self.train[i];
+        let zt = self.embed_shard(train, x);
+        let gg_e_y = self.grad_e(train, &self.residual(train, &zt, y), y);
+        let gg_e_z = self.grad_e(train, &self.residual(train, &zt, z), z);
+        Ok(gf_e
+            .iter()
+            .zip(&gg_e_y)
+            .zip(&gg_e_z)
+            .map(|((f, gy), gz)| f + lambda * (gy - gz))
+            .collect())
+    }
+
+    fn eval(&self, i: usize, x: &[f32], y: &[f32]) -> Result<(f64, f64)> {
+        let shard = &self.val[i];
+        let loss = self.loss_of(shard, x, y);
+        // Accuracy: argmax of the regressed one-hot scores.
+        let (k, c) = (self.embed, self.classes);
+        let z = self.embed_shard(shard, x);
+        let mut hits = 0usize;
+        for row in 0..shard.n {
+            let zr = &z[row * k..(row + 1) * k];
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for j in 0..c {
+                let score: f32 = zr
+                    .iter()
+                    .enumerate()
+                    .map(|(t, &zt)| zt * y[t * c + j])
+                    .sum();
+                if score > best_v {
+                    best_v = score;
+                    best = j;
+                }
+            }
+            if best == shard.labels[row] {
+                hits += 1;
+            }
+        }
+        Ok((loss, hits as f64 / shard.n.max(1) as f64))
+    }
+
+    fn grad_y_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.grad_w_of(&self.val[i], x, y))
+    }
+
+    fn grad_x_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.grad_e_of(&self.val[i], x, y))
+    }
+
+    fn hvp_yy_g(&self, i: usize, x: &[f32], _y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        // The lower level is quadratic in W: H·V = ZᵀZV/n + ρV.
+        let shard = &self.train[i];
+        let z = self.embed_shard(shard, x);
+        let (k, c) = (self.embed, self.classes);
+        // ZV (n×c) without the −B shift, then Zᵀ(ZV)/n.
+        let mut zv = vec![0.0f32; shard.n * c];
+        for row in 0..shard.n {
+            let zr = &z[row * k..(row + 1) * k];
+            let o = &mut zv[row * c..(row + 1) * c];
+            for (j, &zj) in zr.iter().enumerate() {
+                let vj = &v[j * c..(j + 1) * c];
+                for (oc, &vjc) in o.iter_mut().zip(vj) {
+                    *oc += zj * vjc;
+                }
+            }
+        }
+        let mut out = self.grad_w(shard, &z, &zv);
+        for (o, &vv) in out.iter_mut().zip(v) {
+            *o += self.ridge * vv;
+        }
+        Ok(out)
+    }
+
+    fn jvp_xy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        // ∇_E g = Aᵀ(A E W − B)Wᵀ/n; directional derivative in W-direction
+        // V: Aᵀ(A E V)Wᵀ/n + Aᵀ(A E W − B)Vᵀ/n.
+        let shard = &self.train[i];
+        let z = self.embed_shard(shard, x);
+        let (k, c) = (self.embed, self.classes);
+        // Term 1: residual' = Z V (no B), contracted against Wᵀ.
+        let mut zv = vec![0.0f32; shard.n * c];
+        for row in 0..shard.n {
+            let zr = &z[row * k..(row + 1) * k];
+            let o = &mut zv[row * c..(row + 1) * c];
+            for (j, &zj) in zr.iter().enumerate() {
+                let vj = &v[j * c..(j + 1) * c];
+                for (oc, &vjc) in o.iter_mut().zip(vj) {
+                    *oc += zj * vjc;
+                }
+            }
+        }
+        let t1 = self.grad_e(shard, &zv, y);
+        // Term 2: true residual contracted against Vᵀ.
+        let r = self.residual(shard, &z, y);
+        let t2 = self.grad_e(shard, &r, v);
+        Ok(t1.iter().zip(&t2).map(|(a, b)| a + b).collect())
+    }
+
+    fn init_x(&self, rng: &mut Rng) -> Vec<f32> {
+        // He-style init for the linear backbone.
+        let std = (1.0 / self.inputs as f32).sqrt();
+        (0..self.dx()).map(|_| rng.normal_f32(0.0, std)).collect()
+    }
+
+    fn init_y(&self, _rng: &mut Rng) -> Vec<f32> {
+        vec![0.0; self.dy()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> HyperRepTask {
+        HyperRepTask::generate(3, 9, 4, 3, 18, 10, Partition::Dirichlet { alpha: 0.5 }, 0.2, 6)
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+    }
+
+    fn g_scalar(t: &HyperRepTask, i: usize, e: &[f32], w: &[f32]) -> f64 {
+        t.loss_of(&t.train[i], e, w)
+            + 0.5 * t.ridge as f64 * w.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+    }
+
+    #[test]
+    fn inner_z_grad_matches_finite_difference() {
+        let t = task();
+        let mut rng = Rng::new(1);
+        let e = t.init_x(&mut rng);
+        let w = rand_vec(&mut rng, t.dy(), 0.4);
+        let g = t.inner_z_grad(0, &e, &w).unwrap();
+        let eps = 1e-3f32;
+        for k in [0usize, 5, t.dy() - 1] {
+            let mut wp = w.clone();
+            wp[k] += eps;
+            let mut wm = w.clone();
+            wm[k] -= eps;
+            let fd = (g_scalar(&t, 0, &e, &wp) - g_scalar(&t, 0, &e, &wm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - g[k] as f64).abs() < 2e-3 * (1.0 + fd.abs()),
+                "coord {k}: fd {fd} vs {}",
+                g[k]
+            );
+        }
+    }
+
+    #[test]
+    fn grad_x_f_matches_finite_difference() {
+        let t = task();
+        let mut rng = Rng::new(2);
+        let e = t.init_x(&mut rng);
+        let w = rand_vec(&mut rng, t.dy(), 0.4);
+        let g = t.grad_x_f(1, &e, &w).unwrap();
+        let eps = 1e-3f32;
+        for k in [0usize, 11, t.dx() - 1] {
+            let mut ep = e.clone();
+            ep[k] += eps;
+            let mut em = e.clone();
+            em[k] -= eps;
+            let fd = (t.loss_of(&t.val[1], &ep, &w) - t.loss_of(&t.val[1], &em, &w))
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - g[k] as f64).abs() < 2e-3 * (1.0 + fd.abs()),
+                "coord {k}: fd {fd} vs {}",
+                g[k]
+            );
+        }
+    }
+
+    #[test]
+    fn hvp_matches_finite_difference_of_gradient() {
+        let t = task();
+        let mut rng = Rng::new(3);
+        let e = t.init_x(&mut rng);
+        let w = rand_vec(&mut rng, t.dy(), 0.4);
+        let v = rand_vec(&mut rng, t.dy(), 1.0);
+        let hv = t.hvp_yy_g(0, &e, &w, &v).unwrap();
+        let eps = 1e-3f32;
+        let wp: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a + eps * b).collect();
+        let wm: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a - eps * b).collect();
+        let gp = t.inner_z_grad(0, &e, &wp).unwrap();
+        let gm = t.inner_z_grad(0, &e, &wm).unwrap();
+        for k in 0..t.dy() {
+            let fd = (gp[k] - gm[k]) / (2.0 * eps);
+            assert!(
+                (fd - hv[k]).abs() < 1e-2 * (1.0 + fd.abs()),
+                "coord {k}: fd {fd} vs {}",
+                hv[k]
+            );
+        }
+    }
+
+    #[test]
+    fn jvp_matches_finite_difference_cross_derivative() {
+        let t = task();
+        let mut rng = Rng::new(4);
+        let e = t.init_x(&mut rng);
+        let w = rand_vec(&mut rng, t.dy(), 0.4);
+        let v = rand_vec(&mut rng, t.dy(), 1.0);
+        let jv = t.jvp_xy_g(0, &e, &w, &v).unwrap();
+        let eps = 1e-3f32;
+        let wp: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a + eps * b).collect();
+        let wm: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a - eps * b).collect();
+        let grad_e_at = |w_: &[f32]| -> Vec<f32> {
+            let z = t.embed_shard(&t.train[0], &e);
+            let r = t.residual(&t.train[0], &z, w_);
+            t.grad_e(&t.train[0], &r, w_)
+        };
+        let gp = grad_e_at(&wp);
+        let gm = grad_e_at(&wm);
+        for k in 0..t.dx() {
+            let fd = (gp[k] - gm[k]) / (2.0 * eps);
+            assert!(
+                (fd - jv[k]).abs() < 1e-2 * (1.0 + fd.abs()),
+                "coord {k}: fd {fd} vs {}",
+                jv[k]
+            );
+        }
+    }
+
+    #[test]
+    fn penalty_hypergrad_consistency() {
+        // With y = z the penalty terms cancel and the hypergradient reduces
+        // to ∇_E f — the fully first-order estimator's λ-independence check.
+        let t = task();
+        let mut rng = Rng::new(5);
+        let e = t.init_x(&mut rng);
+        let y = rand_vec(&mut rng, t.dy(), 0.4);
+        let u1 = t.hypergrad(0, &e, &y, &y, 5.0).unwrap();
+        let u2 = t.hypergrad(0, &e, &y, &y, 500.0).unwrap();
+        let gf = t.grad_x_f(0, &e, &y).unwrap();
+        for k in 0..t.dx() {
+            assert!((u1[k] - gf[k]).abs() < 1e-5, "λ=5 coord {k}");
+            assert!((u2[k] - gf[k]).abs() < 1e-5, "λ=500 coord {k}");
+        }
+    }
+
+    #[test]
+    fn lower_level_descent_reduces_train_loss() {
+        let t = task();
+        let mut rng = Rng::new(6);
+        let e = t.init_x(&mut rng);
+        let mut w = vec![0.0f32; t.dy()];
+        let l0 = g_scalar(&t, 0, &e, &w);
+        for _ in 0..80 {
+            let g = t.inner_z_grad(0, &e, &w).unwrap();
+            for (wk, gk) in w.iter_mut().zip(&g) {
+                *wk -= 0.1 * gk;
+            }
+        }
+        let l1 = g_scalar(&t, 0, &e, &w);
+        assert!(l1 < l0 * 0.95, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = task();
+        let b = task();
+        assert_eq!(a.dx(), 9 * 4);
+        assert_eq!(a.dy(), 4 * 3);
+        assert_eq!(a.train[0].a, b.train[0].a);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        assert_eq!(a.init_x(&mut r1), b.init_x(&mut r2));
+    }
+}

@@ -1,0 +1,514 @@
+//! Native (pure-Rust, no-PJRT) bilevel hyperparameter-tuning task: the
+//! paper's "coefficient tuning" workload with every oracle evaluated
+//! in-process.
+//!
+//! Per node i, with a multiclass logistic-regression head
+//! W ∈ R^{d×c} (the lower variable, flattened row-major) and
+//! per-coordinate log-regularization weights x ∈ R^d (the upper variable):
+//!
+//!   g_i(x, W) = CE(W; train_i) + ½ Σ_k r₀·exp(x_k) ‖W_{k·}‖²
+//!   f_i(x, W) = CE(W; val_i)
+//!
+//! i.e. the lower level fits a regularized classifier on the node's train
+//! shard and the upper level tunes the d regularization coefficients
+//! against the validation shard (∇_x f ≡ 0, like the artifact preset).
+//! All eight [`BilevelTask`] oracles — including the HVP/JVP the
+//! second-order baselines pay for — are closed-form softmax-CE algebra,
+//! so the task runs identically with or without the `pjrt` feature.
+//!
+//! Data is a [`newsgroups_like`](crate::data::newsgroups_like) corpus
+//! partitioned across nodes by any [`Partition`] (including the
+//! Dirichlet-α label-skew knob); everything is seeded through
+//! [`crate::util::rng::Rng`], so a `(config, seed)` pair reproduces the
+//! trajectory bit-for-bit — this is what the golden-trace fixtures pin.
+
+use super::{resize_guarded, BilevelTask};
+use crate::data::{newsgroups_like, partition::Partition, Dataset};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// One node's staged shards (row-major features, class labels).
+struct Shard {
+    n: usize,
+    features: Vec<f32>,
+    labels: Vec<usize>,
+}
+
+impl Shard {
+    fn stage(ds: &Dataset) -> Shard {
+        Shard { n: ds.n, features: ds.features.clone(), labels: ds.labels.clone() }
+    }
+
+    fn row(&self, i: usize, d: usize) -> &[f32] {
+        &self.features[i * d..(i + 1) * d]
+    }
+}
+
+pub struct LogRegTask {
+    m: usize,
+    /// Feature dimension d (= upper dimension).
+    pub features: usize,
+    pub classes: usize,
+    /// Base regularization scale r₀ (per-coordinate weight is r₀·exp(x_k)).
+    pub reg0: f32,
+    train: Vec<Shard>,
+    val: Vec<Shard>,
+}
+
+impl LogRegTask {
+    /// Generate the synthetic corpus, split train/val, partition the train
+    /// side with `partition` (validation is split IID so the eval metric
+    /// is comparable across nodes — the artifact-task protocol), and
+    /// resize every shard to the static per-node sizes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate(
+        m: usize,
+        features: usize,
+        classes: usize,
+        n_train: usize,
+        n_val: usize,
+        partition: Partition,
+        noise: f32,
+        seed: u64,
+    ) -> LogRegTask {
+        let mut rng = Rng::new(seed);
+        let need_tr = m * n_train;
+        let need_val = m * n_val;
+        let global = newsgroups_like(
+            (need_tr + need_val) * 3 / 2,
+            features,
+            classes,
+            noise,
+            rng.next_u64(),
+        );
+        let (train_pool, val_pool) =
+            global.split(need_tr as f64 / (need_tr + need_val) as f64, &mut rng);
+        let train_shards = partition.split(&train_pool, m, &mut rng);
+        let val_shards = Partition::Iid.split(&val_pool, m, &mut rng);
+        let train = train_shards
+            .iter()
+            .map(|s| Shard::stage(&resize_guarded(s, &train_pool, n_train, &mut rng)))
+            .collect();
+        let val = val_shards
+            .iter()
+            .map(|s| Shard::stage(&resize_guarded(s, &val_pool, n_val, &mut rng)))
+            .collect();
+        LogRegTask { m, features, classes, reg0: 0.1, train, val }
+    }
+
+    /// CE loss, accuracy and (optionally) the CE gradient over a shard at
+    /// head `w` (d×c row-major).  One fused pass: logits → stabilized
+    /// softmax → loss/acc, plus the rank-1 gradient update per row.
+    fn ce_pass(&self, shard: &Shard, w: &[f32], mut grad: Option<&mut [f32]>) -> (f64, f64) {
+        let (d, c) = (self.features, self.classes);
+        let mut loss = 0.0f64;
+        let mut hits = 0usize;
+        let mut p = vec![0.0f32; c];
+        for r in 0..shard.n {
+            let a = shard.row(r, d);
+            softmax_logits(a, w, d, c, &mut p);
+            let label = shard.labels[r];
+            loss += -(p[label].max(1e-30) as f64).ln();
+            let pred = argmax(&p);
+            if pred == label {
+                hits += 1;
+            }
+            if let Some(g) = grad.as_deref_mut() {
+                // ∇_W CE for one sample: a · (p − onehot)ᵀ.
+                p[label] -= 1.0;
+                for (k, &ak) in a.iter().enumerate() {
+                    if ak != 0.0 {
+                        let gk = &mut g[k * c..(k + 1) * c];
+                        for (gkc, &pc) in gk.iter_mut().zip(p.iter()) {
+                            *gkc += ak * pc;
+                        }
+                    }
+                }
+            }
+        }
+        let n = shard.n.max(1) as f32;
+        if let Some(g) = grad {
+            for v in g.iter_mut() {
+                *v /= n;
+            }
+        }
+        (loss / n as f64, hits as f64 / n as f64)
+    }
+
+    /// ∇_y g_i = ∇_W CE(train) + r₀ exp(x_k) W_{k·} (the regularized
+    /// lower-level gradient).
+    fn grad_g(&self, i: usize, x: &[f32], w: &[f32]) -> Vec<f32> {
+        let (d, c) = (self.features, self.classes);
+        let mut g = vec![0.0f32; d * c];
+        self.ce_pass(&self.train[i], w, Some(&mut g[..]));
+        for k in 0..d {
+            let r = self.reg0 * x[k].exp();
+            for j in 0..c {
+                g[k * c + j] += r * w[k * c + j];
+            }
+        }
+        g
+    }
+
+    /// (∇_x g_i)_k = ½ r₀ exp(x_k) ‖W_{k·}‖².
+    fn grad_x_g(&self, x: &[f32], w: &[f32]) -> Vec<f32> {
+        let (d, c) = (self.features, self.classes);
+        (0..d)
+            .map(|k| {
+                let row_sq: f32 = w[k * c..(k + 1) * c].iter().map(|v| v * v).sum();
+                0.5 * self.reg0 * x[k].exp() * row_sq
+            })
+            .collect()
+    }
+}
+
+/// `p = softmax(Wᵀ a)` with max-logit stabilization.
+fn softmax_logits(a: &[f32], w: &[f32], d: usize, c: usize, p: &mut [f32]) {
+    p.fill(0.0);
+    for (k, &ak) in a.iter().enumerate().take(d) {
+        if ak != 0.0 {
+            let wk = &w[k * c..(k + 1) * c];
+            for (pj, &wkj) in p.iter_mut().zip(wk) {
+                *pj += ak * wkj;
+            }
+        }
+    }
+    let mx = p.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in p.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    for v in p.iter_mut() {
+        *v /= sum;
+    }
+}
+
+fn argmax(p: &[f32]) -> usize {
+    let mut best = 0;
+    for (j, &v) in p.iter().enumerate() {
+        if v > p[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+impl BilevelTask for LogRegTask {
+    fn nodes(&self) -> usize {
+        self.m
+    }
+
+    fn dx(&self) -> usize {
+        self.features
+    }
+
+    fn dy(&self) -> usize {
+        self.features * self.classes
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "logreg(m={}, d={}, c={})",
+            self.m, self.features, self.classes
+        )
+    }
+
+    fn inner_y_grad(&self, i: usize, x: &[f32], y: &[f32], lambda: f32) -> Result<Vec<f32>> {
+        // ∇_y h = ∇_y f + λ ∇_y g.
+        let mut gf = vec![0.0f32; self.dy()];
+        self.ce_pass(&self.val[i], y, Some(&mut gf[..]));
+        let gg = self.grad_g(i, x, y);
+        for (a, b) in gf.iter_mut().zip(&gg) {
+            *a += lambda * b;
+        }
+        Ok(gf)
+    }
+
+    fn inner_z_grad(&self, i: usize, x: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.grad_g(i, x, z))
+    }
+
+    fn hypergrad(&self, _i: usize, x: &[f32], y: &[f32], z: &[f32], lambda: f32) -> Result<Vec<f32>> {
+        // ∇_x f ≡ 0 here, so u = λ(∇_x g(x,y) − ∇_x g(x,z)); the reg term
+        // is data-independent, hence identical on every node.
+        let gy = self.grad_x_g(x, y);
+        let gz = self.grad_x_g(x, z);
+        Ok(gy
+            .iter()
+            .zip(&gz)
+            .map(|(a, b)| lambda * (a - b))
+            .collect())
+    }
+
+    fn eval(&self, i: usize, _x: &[f32], y: &[f32]) -> Result<(f64, f64)> {
+        Ok(self.ce_pass(&self.val[i], y, None))
+    }
+
+    fn grad_y_f(&self, i: usize, _x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let mut g = vec![0.0f32; self.dy()];
+        self.ce_pass(&self.val[i], y, Some(&mut g[..]));
+        Ok(g)
+    }
+
+    fn grad_x_f(&self, _i: usize, _x: &[f32], _y: &[f32]) -> Result<Vec<f32>> {
+        Ok(vec![0.0; self.dx()])
+    }
+
+    fn hvp_yy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        // Softmax-CE Hessian applied to V (per sample: with p = softmax,
+        // du = Vᵀa, dp = (diag(p) − ppᵀ)du, contribution a·dpᵀ), plus the
+        // diagonal regularizer r₀ exp(x_k).
+        let (d, c) = (self.features, self.classes);
+        let shard = &self.train[i];
+        let mut out = vec![0.0f32; d * c];
+        let mut p = vec![0.0f32; c];
+        let mut du = vec![0.0f32; c];
+        for r in 0..shard.n {
+            let a = shard.row(r, d);
+            softmax_logits(a, y, d, c, &mut p);
+            du.fill(0.0);
+            for (k, &ak) in a.iter().enumerate() {
+                if ak != 0.0 {
+                    let vk = &v[k * c..(k + 1) * c];
+                    for (dj, &vkj) in du.iter_mut().zip(vk) {
+                        *dj += ak * vkj;
+                    }
+                }
+            }
+            let pdu: f32 = p.iter().zip(&du).map(|(a, b)| a * b).sum();
+            // dp_j = p_j (du_j − pᵀdu)
+            for (k, &ak) in a.iter().enumerate() {
+                if ak != 0.0 {
+                    let ok = &mut out[k * c..(k + 1) * c];
+                    for ((oj, &pj), &dj) in ok.iter_mut().zip(&p).zip(&du) {
+                        *oj += ak * pj * (dj - pdu);
+                    }
+                }
+            }
+        }
+        let n = shard.n.max(1) as f32;
+        for o in out.iter_mut() {
+            *o /= n;
+        }
+        for k in 0..d {
+            let reg = self.reg0 * x[k].exp();
+            for j in 0..c {
+                out[k * c + j] += reg * v[k * c + j];
+            }
+        }
+        Ok(out)
+    }
+
+    fn jvp_xy_g(&self, _i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        // ∂²g/∂x_k∂W_{k·} = r₀ exp(x_k) W_{k·}; contraction with v ∈ R^{dy}.
+        let (d, c) = (self.features, self.classes);
+        Ok((0..d)
+            .map(|k| {
+                let dot: f32 = y[k * c..(k + 1) * c]
+                    .iter()
+                    .zip(&v[k * c..(k + 1) * c])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                self.reg0 * x[k].exp() * dot
+            })
+            .collect())
+    }
+
+    fn init_x(&self, _rng: &mut Rng) -> Vec<f32> {
+        // Log-weights start at 0 ⇒ per-coordinate reg weight r₀·exp(0).
+        vec![0.0; self.dx()]
+    }
+
+    fn init_y(&self, _rng: &mut Rng) -> Vec<f32> {
+        vec![0.0; self.dy()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> LogRegTask {
+        LogRegTask::generate(3, 10, 3, 20, 12, Partition::Dirichlet { alpha: 0.5 }, 0.3, 5)
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+    }
+
+    /// Scalar h = f + λg via the public oracles is impossible (losses are
+    /// only exposed through eval); rebuild g's scalar here for FD checks.
+    fn g_scalar(t: &LogRegTask, i: usize, x: &[f32], w: &[f32]) -> f64 {
+        let (loss, _) = t.ce_pass(&t.train[i], w, None);
+        let c = t.classes;
+        let reg: f64 = (0..t.features)
+            .map(|k| {
+                let row_sq: f64 = w[k * c..(k + 1) * c]
+                    .iter()
+                    .map(|v| (*v as f64).powi(2))
+                    .sum();
+                0.5 * (t.reg0 as f64) * (x[k] as f64).exp() * row_sq
+            })
+            .sum();
+        loss + reg
+    }
+
+    #[test]
+    fn inner_z_grad_matches_finite_difference() {
+        let t = task();
+        let mut rng = Rng::new(1);
+        let x = rand_vec(&mut rng, t.dx(), 0.3);
+        let w = rand_vec(&mut rng, t.dy(), 0.4);
+        let g = t.inner_z_grad(0, &x, &w).unwrap();
+        let eps = 1e-3f32;
+        for k in [0usize, 7, t.dy() - 1] {
+            let mut wp = w.clone();
+            wp[k] += eps;
+            let mut wm = w.clone();
+            wm[k] -= eps;
+            let fd = (g_scalar(&t, 0, &x, &wp) - g_scalar(&t, 0, &x, &wm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - g[k] as f64).abs() < 2e-3 * (1.0 + fd.abs()),
+                "coord {k}: fd {fd} vs {}",
+                g[k]
+            );
+        }
+    }
+
+    #[test]
+    fn grad_x_g_matches_finite_difference() {
+        let t = task();
+        let mut rng = Rng::new(2);
+        let x = rand_vec(&mut rng, t.dx(), 0.3);
+        let w = rand_vec(&mut rng, t.dy(), 0.4);
+        let gx = t.grad_x_g(&x, &w);
+        let eps = 1e-3f32;
+        for k in 0..t.dx() {
+            let mut xp = x.clone();
+            xp[k] += eps;
+            let mut xm = x.clone();
+            xm[k] -= eps;
+            let fd = (g_scalar(&t, 1, &xp, &w) - g_scalar(&t, 1, &xm, &w)) / (2.0 * eps as f64);
+            assert!(
+                (fd - gx[k] as f64).abs() < 2e-3 * (1.0 + fd.abs()),
+                "coord {k}: fd {fd} vs {}",
+                gx[k]
+            );
+        }
+    }
+
+    #[test]
+    fn hvp_matches_finite_difference_of_gradient() {
+        let t = task();
+        let mut rng = Rng::new(3);
+        let x = rand_vec(&mut rng, t.dx(), 0.3);
+        let w = rand_vec(&mut rng, t.dy(), 0.4);
+        let v = rand_vec(&mut rng, t.dy(), 1.0);
+        let hv = t.hvp_yy_g(0, &x, &w, &v).unwrap();
+        let eps = 1e-3f32;
+        let wp: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a + eps * b).collect();
+        let wm: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a - eps * b).collect();
+        let gp = t.inner_z_grad(0, &x, &wp).unwrap();
+        let gm = t.inner_z_grad(0, &x, &wm).unwrap();
+        for k in 0..t.dy() {
+            let fd = (gp[k] - gm[k]) / (2.0 * eps);
+            assert!(
+                (fd - hv[k]).abs() < 5e-2 * (1.0 + fd.abs()),
+                "coord {k}: fd {fd} vs {}",
+                hv[k]
+            );
+        }
+    }
+
+    #[test]
+    fn jvp_matches_finite_difference_cross_derivative() {
+        let t = task();
+        let mut rng = Rng::new(4);
+        let x = rand_vec(&mut rng, t.dx(), 0.3);
+        let w = rand_vec(&mut rng, t.dy(), 0.4);
+        let v = rand_vec(&mut rng, t.dy(), 1.0);
+        let jv = t.jvp_xy_g(0, &x, &w, &v).unwrap();
+        // (∇_x g(x, w + εv) − ∇_x g(x, w − εv)) / 2ε ≈ (∇²_xy g)·v.
+        let eps = 1e-3f32;
+        let wp: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a + eps * b).collect();
+        let wm: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a - eps * b).collect();
+        let gp = t.grad_x_g(&x, &wp);
+        let gm = t.grad_x_g(&x, &wm);
+        for k in 0..t.dx() {
+            let fd = (gp[k] - gm[k]) / (2.0 * eps);
+            assert!(
+                (fd - jv[k]).abs() < 1e-2 * (1.0 + fd.abs()),
+                "coord {k}: fd {fd} vs {}",
+                jv[k]
+            );
+        }
+    }
+
+    #[test]
+    fn hypergrad_is_lambda_scaled_reg_difference() {
+        let t = task();
+        let mut rng = Rng::new(5);
+        let x = rand_vec(&mut rng, t.dx(), 0.3);
+        let y = rand_vec(&mut rng, t.dy(), 0.4);
+        let z = rand_vec(&mut rng, t.dy(), 0.4);
+        let u = t.hypergrad(0, &x, &y, &z, 10.0).unwrap();
+        let gy = t.grad_x_g(&x, &y);
+        let gz = t.grad_x_g(&x, &z);
+        for k in 0..t.dx() {
+            assert!((u[k] - 10.0 * (gy[k] - gz[k])).abs() < 1e-5);
+        }
+        // y = z ⇒ zero hypergradient (no upper coupling through f).
+        let u0 = t.hypergrad(0, &x, &y, &y, 10.0).unwrap();
+        assert!(u0.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gradient_descent_on_lower_level_reduces_train_loss() {
+        let t = task();
+        let x = vec![0.0f32; t.dx()];
+        let mut w = vec![0.0f32; t.dy()];
+        let loss0 = g_scalar(&t, 0, &x, &w);
+        for _ in 0..60 {
+            let g = t.inner_z_grad(0, &x, &w).unwrap();
+            for (wk, gk) in w.iter_mut().zip(&g) {
+                *wk -= 0.5 * gk;
+            }
+        }
+        let loss1 = g_scalar(&t, 0, &x, &w);
+        assert!(loss1 < loss0 * 0.9, "{loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn iid_trained_head_beats_chance_on_validation() {
+        // Use an IID split so node 0's train shard covers every class (a
+        // Dirichlet shard may be near single-class by design).
+        let t = LogRegTask::generate(3, 10, 3, 30, 15, Partition::Iid, 0.3, 8);
+        let x = vec![0.0f32; t.dx()];
+        let mut w = vec![0.0f32; t.dy()];
+        for _ in 0..150 {
+            let g = t.inner_z_grad(0, &x, &w).unwrap();
+            for (wk, gk) in w.iter_mut().zip(&g) {
+                *wk -= 0.5 * gk;
+            }
+        }
+        let (loss, acc) = t.eval(0, &x, &w).unwrap();
+        assert!(loss.is_finite());
+        assert!(acc > 1.0 / 3.0, "val acc {acc} not above chance");
+    }
+
+    #[test]
+    fn deterministic_by_seed_and_shard_shapes() {
+        let a = task();
+        let b = task();
+        assert_eq!(a.train[0].features, b.train[0].features);
+        assert_eq!(a.val[2].labels, b.val[2].labels);
+        for i in 0..3 {
+            assert_eq!(a.train[i].n, 20);
+            assert_eq!(a.val[i].n, 12);
+        }
+        let mut rng = Rng::new(9);
+        assert_eq!(a.init_x(&mut rng), vec![0.0; a.dx()]);
+        assert_eq!(a.init_y(&mut rng).len(), a.dy());
+    }
+}

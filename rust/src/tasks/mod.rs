@@ -7,10 +7,24 @@
 //! * [`quadratic::QuadraticTask`] — a fully analytic bilevel quadratic used
 //!   by the convergence tests and benchmarks (no artifacts needed, known
 //!   closed-form hyper-objective).
+//! * [`logreg::LogRegTask`] — native hyperparameter tuning: per-coordinate
+//!   ℓ2 weights (upper) over node-local multiclass logistic regression
+//!   (lower).  Pure Rust, no artifacts; see `docs/TASKS.md`.
+//! * [`hyperrep::HyperRepTask`] — native linear hyper-representation: a
+//!   shared embedding (upper) over per-node ridge heads (lower).
+//!
+//! The native tasks accept any [`crate::data::partition::Partition`]
+//! (including the Dirichlet-α label-skew knob) and are seeded for
+//! bit-reproducibility — the golden-trace fixtures ([`crate::goldens`])
+//! pin their trajectories.
 
+pub mod hyperrep;
+pub mod logreg;
 pub mod pjrt;
 pub mod quadratic;
 
+pub use hyperrep::HyperRepTask;
+pub use logreg::LogRegTask;
 pub use pjrt::PjrtTask;
 pub use quadratic::QuadraticTask;
 
@@ -47,6 +61,23 @@ pub trait BilevelTask {
     /// Initial upper/lower parameters (same on every node, like the paper).
     fn init_x(&self, rng: &mut crate::util::rng::Rng) -> Vec<f32>;
     fn init_y(&self, rng: &mut crate::util::rng::Rng) -> Vec<f32>;
+}
+
+/// Resize a partitioned shard to exactly `n` rows; an empty shard
+/// (possible under extreme label skew, e.g. tiny Dirichlet α) falls back
+/// to sampling from the global pool so every node keeps a working oracle.
+/// Shared by the native data tasks' `generate` constructors.
+pub(crate) fn resize_guarded(
+    shard: &crate::data::Dataset,
+    pool: &crate::data::Dataset,
+    n: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> crate::data::Dataset {
+    if shard.n > 0 {
+        shard.resize_to(n, rng)
+    } else {
+        pool.resize_to(n, rng)
+    }
 }
 
 /// Average eval over all nodes at per-node parameters.

@@ -10,6 +10,10 @@ pub enum Topology {
     Ring,
     /// Ring plus links to neighbours' neighbours (paper's "2-hop").
     TwoHopRing,
+    /// Static exponential graph: node i links to i ± 2^j (mod m) for every
+    /// j with 2^j < m — O(log m) degree with an O(1/log m) spectral gap,
+    /// the standard high-connectivity topology in decentralized training.
+    Exponential,
     /// Erdős–Rényi with edge probability p (paper uses p = 0.4);
     /// resampled until connected.
     ErdosRenyi { p_milli: u32, seed: u64 },
@@ -28,6 +32,7 @@ impl Topology {
         match self {
             Topology::Ring => "ring",
             Topology::TwoHopRing => "2hop",
+            Topology::Exponential => "exp",
             Topology::ErdosRenyi { .. } => "er",
             Topology::Complete => "complete",
             Topology::Star => "star",
@@ -36,8 +41,8 @@ impl Topology {
         }
     }
 
-    /// Parse "ring" | "2hop" | "er:0.4" | "complete" | "star" | "path" |
-    /// "torus" (ER takes p after a colon).
+    /// Parse "ring" | "2hop" | "exp" | "er:0.4" | "complete" | "star" |
+    /// "path" | "torus" (ER takes p after a colon).
     pub fn parse(s: &str, seed: u64) -> Result<Topology, String> {
         let s = s.trim();
         if let Some(p) = s.strip_prefix("er:").or_else(|| s.strip_prefix("er=")) {
@@ -50,6 +55,7 @@ impl Topology {
         match s {
             "ring" => Ok(Topology::Ring),
             "2hop" | "two-hop" | "twohop" => Ok(Topology::TwoHopRing),
+            "exp" | "exponential" => Ok(Topology::Exponential),
             "er" => Ok(Topology::ErdosRenyi { p_milli: 400, seed }),
             "complete" | "full" => Ok(Topology::Complete),
             "star" => Ok(Topology::Star),
@@ -88,6 +94,15 @@ impl Graph {
                 for i in 0..m {
                     add(&mut edges, i, (i + 1) % m);
                     add(&mut edges, i, (i + 2) % m);
+                }
+            }
+            Topology::Exponential => {
+                for i in 0..m {
+                    let mut hop = 1usize;
+                    while hop < m {
+                        add(&mut edges, i, (i + hop) % m);
+                        hop *= 2;
+                    }
                 }
             }
             Topology::ErdosRenyi { p_milli, seed } => {
@@ -284,6 +299,28 @@ mod tests {
         for i in 0..12 {
             assert!(g.degree(i) >= 3, "torus degree {}", g.degree(i));
         }
+    }
+
+    #[test]
+    fn exponential_degrees_and_edges() {
+        // m = 8: hops {1, 2, 4}; hop 4 pairs antipodes, so degree is
+        // 2·|hops| − 1 = 5 for every node.
+        let g = Graph::build(Topology::Exponential, 8);
+        assert!(g.is_connected());
+        for i in 0..8 {
+            assert_eq!(g.degree(i), 5, "node {i}");
+        }
+        assert!(g.has_edge(0, 1) && g.has_edge(0, 2) && g.has_edge(0, 4));
+        assert!(!g.has_edge(0, 3));
+        // Non-power-of-two m still connects and keeps O(log m) degree.
+        let g = Graph::build(Topology::Exponential, 10);
+        assert!(g.is_connected());
+        for i in 0..10 {
+            assert!(g.degree(i) <= 8, "degree {}", g.degree(i));
+        }
+        // Tiny m degenerates gracefully (hop 1 only).
+        let g = Graph::build(Topology::Exponential, 2);
+        assert_eq!(g.edge_count(), 1);
     }
 
     #[test]

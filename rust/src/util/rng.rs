@@ -116,6 +116,56 @@ impl Rng {
         self.uniform() < p
     }
 
+    /// Gamma(shape, 1) via Marsaglia–Tsang squeeze; `shape < 1` uses the
+    /// standard boost Gamma(k) = Gamma(k+1)·U^{1/k}.  Deterministic given
+    /// the generator state (drives the Dirichlet partitioner).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be positive");
+        if shape < 1.0 {
+            let boost = loop {
+                let u = self.uniform();
+                if u > 0.0 {
+                    break u.powf(1.0 / shape);
+                }
+            };
+            return boost * self.gamma(shape + 1.0);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || (u > 0.0 && u.ln() < 0.5 * x * x + d - d * v + d * v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// A point on the `n`-simplex ~ Dirichlet(α·1) (symmetric
+    /// concentration α): normalized i.i.d. Gamma(α) draws.
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        assert!(n >= 1);
+        let mut g: Vec<f64> = (0..n).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            // Pathologically tiny α can underflow every draw; fall back to
+            // a deterministic one-hot on a uniform index.
+            let hot = self.below(n);
+            return (0..n).map(|i| if i == hot { 1.0 } else { 0.0 }).collect();
+        }
+        for x in g.iter_mut() {
+            *x /= sum;
+        }
+        g
+    }
+
     /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -209,6 +259,57 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // Gamma(k, 1): mean k, variance k — check both above and below the
+        // Marsaglia–Tsang k = 1 boost boundary.
+        for shape in [0.5f64, 2.5] {
+            let mut r = Rng::new(17);
+            let n = 40_000;
+            let (mut s1, mut s2) = (0.0, 0.0);
+            for _ in 0..n {
+                let g = r.gamma(shape);
+                assert!(g > 0.0);
+                s1 += g;
+                s2 += g * g;
+            }
+            let mean = s1 / n as f64;
+            let var = s2 / n as f64 - mean * mean;
+            assert!((mean - shape).abs() < 0.05 * (1.0 + shape), "k={shape} mean={mean}");
+            assert!((var - shape).abs() < 0.1 * (1.0 + shape), "k={shape} var={var}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_is_on_the_simplex_and_alpha_controls_spread() {
+        let mut r = Rng::new(19);
+        let spread = |alpha: f64, r: &mut Rng| -> f64 {
+            let mut acc = 0.0;
+            for _ in 0..200 {
+                let p = r.dirichlet(alpha, 6);
+                let sum: f64 = p.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "sum={sum}");
+                assert!(p.iter().all(|&x| x >= 0.0));
+                // Max coordinate: → 1/n for large α, → 1 for tiny α.
+                acc += p.iter().cloned().fold(0.0, f64::max);
+            }
+            acc / 200.0
+        };
+        let tight = spread(100.0, &mut r);
+        let loose = spread(0.1, &mut r);
+        assert!(tight < 0.3, "α=100 max-coord {tight}");
+        assert!(loose > 0.6, "α=0.1 max-coord {loose}");
+    }
+
+    #[test]
+    fn gamma_deterministic_by_seed() {
+        let mut a = Rng::new(23);
+        let mut b = Rng::new(23);
+        for _ in 0..50 {
+            assert_eq!(a.gamma(0.7).to_bits(), b.gamma(0.7).to_bits());
+        }
     }
 
     #[test]

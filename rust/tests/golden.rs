@@ -1,0 +1,140 @@
+//! Golden-trace acceptance tests: the full 4 algorithms × 3 tasks ×
+//! 2 topologies × 2 engines matrix replays against the committed fixtures
+//! under `rust/goldens/` (exact bytes/oracle counts, 1e-9-relative
+//! losses), blessing is byte-identical across repeated runs, and the
+//! benign-sim fixtures agree with their sync twins.
+
+use c2dfb::goldens::{self, Engine, TaskKind};
+
+/// Replay against the committed fixtures.  On a checkout that has never
+/// been blessed (no toolchain ran here yet) the fixtures are bootstrapped
+/// in place — commit them; every later run then enforces them.
+#[test]
+fn full_matrix_replays_against_committed_fixtures() {
+    let dir = goldens::default_dir();
+    let report = goldens::replay(&dir).expect("replay failed to run");
+    for p in &report.bootstrapped {
+        eprintln!(
+            "NOTE: bootstrapped golden fixture {} — commit it to pin behavior",
+            p.display()
+        );
+    }
+    assert!(
+        report.ok(),
+        "golden-trace drift ({} mismatches):\n  {}",
+        report.mismatches.len(),
+        report.mismatches.join("\n  ")
+    );
+    if report.bootstrapped.is_empty() {
+        assert_eq!(report.checked, 48, "matrix must cover all 48 scenarios");
+    }
+}
+
+/// Blessing twice into different directories produces byte-identical
+/// files: the whole pipeline (data generation, partitioning, algorithms,
+/// transports, serialization) is deterministic.
+#[test]
+fn bless_is_byte_identical_across_runs() {
+    let base = std::env::temp_dir().join("c2dfb_goldens_determinism");
+    let (d1, d2) = (base.join("a"), base.join("b"));
+    for d in [&d1, &d2] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let w1 = goldens::bless(&d1).expect("first bless");
+    let w2 = goldens::bless(&d2).expect("second bless");
+    assert_eq!(w1.len(), 3);
+    assert_eq!(w2.len(), 3);
+    for (a, b) in w1.iter().zip(&w2) {
+        let ba = std::fs::read(a).unwrap();
+        let bb = std::fs::read(b).unwrap();
+        assert_eq!(
+            ba,
+            bb,
+            "bless must be deterministic: {} differs from {}",
+            a.display(),
+            b.display()
+        );
+        assert!(!ba.is_empty());
+    }
+}
+
+/// A freshly blessed directory replays clean against itself (the diff
+/// logic's tolerances accept the serialization round-trip).
+#[test]
+fn fresh_bless_replays_clean() {
+    let dir = std::env::temp_dir().join("c2dfb_goldens_selfcheck");
+    let _ = std::fs::remove_dir_all(&dir);
+    goldens::bless(&dir).expect("bless");
+    let report = goldens::replay(&dir).expect("replay");
+    assert!(report.bootstrapped.is_empty());
+    assert_eq!(report.checked, 48);
+    assert!(report.ok(), "self-replay drift: {:?}", report.mismatches);
+}
+
+/// The benign event engine must reproduce the synchronous engine exactly —
+/// per scenario pair, same byte totals and bit-identical losses.  This
+/// pins PR1's equivalence guarantee inside the golden matrix itself.
+#[test]
+fn sync_and_benign_sim_scenarios_agree() {
+    for task in TaskKind::ALL {
+        let t = task.build();
+        for s in goldens::matrix().into_iter().filter(|s| {
+            s.task == task && s.engine == Engine::Sync
+        }) {
+            let mut twin = s;
+            twin.engine = Engine::BenignSim;
+            let a = goldens::run_scenario(t.as_ref(), &s).unwrap();
+            let b = goldens::run_scenario(t.as_ref(), &twin).unwrap();
+            assert_eq!(
+                a.ledger.total_bytes,
+                b.ledger.total_bytes,
+                "{}: sync vs benign-sim bytes",
+                s.id()
+            );
+            let la: Vec<u64> = a.trace.iter().map(|p| p.loss.to_bits()).collect();
+            let lb: Vec<u64> = b.trace.iter().map(|p| p.loss.to_bits()).collect();
+            assert_eq!(la, lb, "{}: sync vs benign-sim loss bits", s.id());
+        }
+    }
+}
+
+/// Corrupting a fixture field is caught by replay (the harness actually
+/// bites): flip one loss value beyond tolerance and expect a mismatch.
+#[test]
+fn replay_detects_injected_drift() {
+    use c2dfb::util::json::Json;
+
+    let dir = std::env::temp_dir().join("c2dfb_goldens_drift");
+    let _ = std::fs::remove_dir_all(&dir);
+    goldens::bless(&dir).expect("bless");
+    let path = dir.join("quadratic.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut doc = Json::parse(&text).unwrap();
+    // Mutate the first scenario's first trace loss by 1% (≫ 1e-9).
+    if let Json::Obj(top) = &mut doc {
+        let scenarios = top.get_mut("scenarios").unwrap();
+        if let Json::Obj(scn) = scenarios {
+            let first = scn.values_mut().next().unwrap();
+            if let Json::Obj(run) = first {
+                if let Json::Arr(trace) = run.get_mut("trace").unwrap() {
+                    if let Json::Obj(point) = &mut trace[0] {
+                        let loss = point.get_mut("loss").unwrap();
+                        let v = loss.as_f64().unwrap();
+                        *loss = Json::num(v * 1.01 + 0.01);
+                    }
+                }
+            }
+        }
+    }
+    std::fs::write(&path, doc.to_string() + "\n").unwrap();
+    let report = goldens::replay(&dir).expect("replay");
+    assert!(
+        !report.ok(),
+        "injected drift must be detected by the replay diff"
+    );
+    assert!(
+        report.mismatches.iter().any(|m| m.contains("loss")),
+        "mismatch should name the drifted field: {:?}",
+        report.mismatches
+    );
+}

@@ -106,6 +106,118 @@ fn prop_compressors_contractive() {
     });
 }
 
+/// Message encode→decode identity: every densification path of a
+/// [`c2dfb::compress::Compressed`] message — `to_dense`, `write_dense`
+/// into a dirty buffer, `add_dense` onto zeros, `add_scaled_into(1.0)`
+/// onto zeros — reconstructs the same vector, and the dense/identity
+/// encoding round-trips the input verbatim.
+#[test]
+fn prop_message_densify_paths_agree() {
+    check("message-roundtrip", 60, |g| {
+        let q = random_compressor(g);
+        let d = g.usize_in(1, 400);
+        let v = g.vec_normal(d, 1.5);
+        let c = q.compress(&v, &mut g.rng);
+        ensure(c.dim == d, "dim lost in compression")?;
+        ensure(c.wire_bytes() > 8, "empty wire message")?;
+
+        let dense = c.to_dense();
+        let mut written = g.vec_normal(d, 9.0); // dirty buffer
+        c.decompress_into(&mut written);
+        let mut added = vec![0.0f32; d];
+        c.add_into(&mut added);
+        let mut scaled = vec![0.0f32; d];
+        c.add_scaled_into(1.0, &mut scaled);
+        for k in 0..d {
+            ensure(
+                dense[k] == written[k] && dense[k] == added[k] && dense[k] == scaled[k],
+                format!(
+                    "{}: densify paths disagree at {k}: {} / {} / {} / {}",
+                    q.name(),
+                    dense[k],
+                    written[k],
+                    added[k],
+                    scaled[k]
+                ),
+            )?;
+        }
+        // The dense (identity) encoding is a bit-exact round-trip.
+        let id = parse("none").unwrap();
+        let c2 = id.compress(&v, &mut g.rng);
+        ensure(c2.to_dense() == v, "identity encode→decode altered the vector")
+    });
+}
+
+/// Re-encoding an already-compressed message is the identity for the
+/// deterministic sparsifier: top-k(decode(top-k(v))) == top-k(v), so the
+/// wire format is a fixed point of the compressor (no error accumulates
+/// from encode→decode→encode cycles).
+#[test]
+fn prop_topk_reencode_is_fixed_point() {
+    check("topk-fixed-point", 40, |g| {
+        let d = g.usize_in(2, 300);
+        let ratio = [0.1, 0.3, 0.6][g.usize_in(0, 2)];
+        let q = parse(&format!("topk:{ratio}")).unwrap();
+        let v = g.vec_normal(d, 1.0);
+        let once = q.compress(&v, &mut g.rng).to_dense();
+        let twice = q.compress(&once, &mut g.rng).to_dense();
+        ensure(
+            once == twice,
+            "top-k is not idempotent on its own reconstruction",
+        )
+    });
+}
+
+/// Compressed-residual error norms are monotone in the compression ratio:
+/// keeping more coordinates never hurts — exactly for the deterministic
+/// top-k, in empirical expectation for rand-k.
+#[test]
+fn prop_compression_error_monotone_in_ratio() {
+    let err_of = |dense: &[f32], v: &[f32]| -> f64 {
+        dense
+            .iter()
+            .zip(v)
+            .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+            .sum()
+    };
+    check("ratio-monotone", 40, |g| {
+        let d = g.usize_in(8, 400);
+        let v = g.vec_normal(d, 1.0);
+        let ratios = [0.05, 0.15, 0.4, 0.8, 1.0];
+        // Top-k: deterministic, so monotonicity must hold exactly.
+        let mut last = f64::INFINITY;
+        for r in ratios {
+            let q = parse(&format!("topk:{r}")).unwrap();
+            let e = err_of(&q.compress(&v, &mut g.rng).to_dense(), &v);
+            ensure(
+                e <= last + 1e-9,
+                format!("topk error not monotone at ratio {r}: {e} > {last}"),
+            )?;
+            last = e;
+        }
+        // Rand-k: monotone in expectation; average a few trials and allow
+        // sampling slack.
+        let mut last = f64::INFINITY;
+        for r in ratios {
+            let q = parse(&format!("randk:{r}")).unwrap();
+            let trials = 25;
+            let mut acc = 0.0;
+            for _ in 0..trials {
+                acc += err_of(&q.compress(&v, &mut g.rng).to_dense(), &v);
+            }
+            let e = acc / trials as f64;
+            ensure(
+                e <= last * 1.25 + 1e-9,
+                format!("randk mean error not monotone-ish at ratio {r}: {e} > {last}"),
+            )?;
+            last = e;
+        }
+        // Full-ratio compression is lossless for both.
+        let full = parse("topk:1.0").unwrap().compress(&v, &mut g.rng).to_dense();
+        ensure(full == v, "ratio 1.0 must be lossless")
+    });
+}
+
 /// Compression round-trips are exact on the kept coordinates for sparse
 /// compressors (top-k keeps the largest magnitudes verbatim).
 #[test]

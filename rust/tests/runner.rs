@@ -7,9 +7,10 @@
 use c2dfb::algorithms::RunObserver;
 use c2dfb::config::{Algorithm, ExperimentConfig};
 use c2dfb::coordinator::{experiments, Runner};
+use c2dfb::data::partition::Partition;
 use c2dfb::metrics::{RunMetrics, StopReason, TracePoint};
 use c2dfb::sim::NetMode;
-use c2dfb::tasks::QuadraticTask;
+use c2dfb::tasks::{LogRegTask, QuadraticTask};
 
 fn quad_cfg(rounds: usize, eval_every: usize) -> ExperimentConfig {
     ExperimentConfig {
@@ -162,6 +163,96 @@ fn budget_stop_is_bit_identical_across_engines_and_threads() {
     }
 }
 
+fn logreg_cfg(rounds: usize, eval_every: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm: Algorithm::C2dfb,
+        nodes: 4,
+        rounds,
+        inner_steps: 5,
+        eta_out: 0.2,
+        eta_in: 0.3,
+        gamma_out: 0.8,
+        gamma_in: 0.6,
+        lambda: 10.0,
+        compressor: "topk:0.5".into(),
+        eval_every,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn logreg_task() -> LogRegTask {
+    LogRegTask::generate(4, 12, 3, 24, 12, Partition::Dirichlet { alpha: 0.5 }, 0.4, 31)
+}
+
+/// The stop contract holds on the native logreg task too, not just the
+/// analytic quadratic: a communication budget fires at the first eval
+/// point past it, and the stopped run is a bit-identical prefix of the
+/// fixed-round trace.
+#[test]
+fn comm_budget_on_logreg_fires_within_one_interval_and_is_a_prefix() {
+    let t = logreg_task();
+    let full = Runner::new(&logreg_cfg(8, 2)).shared_task(&t).run().unwrap();
+    let c2 = full.trace.iter().find(|p| p.round == 2).unwrap().comm_mb;
+    let c4 = full.trace.iter().find(|p| p.round == 4).unwrap().comm_mb;
+    assert!(c2 < c4, "ledger must grow between evals: {c2} vs {c4}");
+    let mut cfg = logreg_cfg(8, 2);
+    cfg.stop.comm_mb = Some((c2 + c4) / 2.0);
+
+    let stopped = Runner::new(&cfg).shared_task(&t).run().unwrap();
+    assert_eq!(stopped.stop_reason, Some(StopReason::CommBudget));
+    let last = stopped.trace.last().unwrap();
+    assert_eq!(last.round, 4, "budget must fire at the first eval past it");
+    assert!(last.comm_mb >= cfg.stop.comm_mb.unwrap());
+    let full_bits = trace_bits(&full);
+    let stop_bits = trace_bits(&stopped);
+    assert_eq!(stop_bits, full_bits[..stop_bits.len()], "prefix invariant");
+    assert!(last.loss.is_finite());
+}
+
+#[test]
+fn first_order_oracle_budget_on_logreg_stops_with_prefix() {
+    let t = logreg_task();
+    let full = Runner::new(&logreg_cfg(6, 1)).shared_task(&t).run().unwrap();
+    let total = full.oracles.first_order;
+    assert!(total > 0);
+    let mut cfg = logreg_cfg(6, 1);
+    cfg.stop.first_order = Some(total / 2);
+    let m = Runner::new(&cfg).shared_task(&t).run().unwrap();
+    assert_eq!(m.stop_reason, Some(StopReason::FirstOrderOracles));
+    assert!(m.oracles.first_order >= total / 2);
+    assert!(m.trace.len() < full.trace.len());
+    let full_bits = trace_bits(&full);
+    let stop_bits = trace_bits(&m);
+    assert_eq!(stop_bits, full_bits[..stop_bits.len()], "prefix invariant");
+
+    // A 1-call budget is exhausted by init's hypergradient batch already.
+    cfg.stop.first_order = Some(1);
+    let m = Runner::new(&cfg).shared_task(&t).run().unwrap();
+    assert_eq!(m.stop_reason, Some(StopReason::FirstOrderOracles));
+    assert_eq!(m.trace.len(), 1);
+}
+
+/// Budget-stopped logreg runs are engine-independent like the quadratic
+/// ones: sync and benign-sim produce the same bits, bytes and reason.
+#[test]
+fn logreg_budget_stop_is_engine_independent() {
+    let t = logreg_task();
+    let probe = Runner::new(&logreg_cfg(6, 1)).shared_task(&t).run().unwrap();
+    let mid = probe.trace[probe.trace.len() / 2].comm_mb;
+    let mut cfg = logreg_cfg(6, 1);
+    cfg.stop.comm_mb = Some(mid * 0.99 + probe.trace.last().unwrap().comm_mb * 0.01);
+
+    let sync = Runner::new(&cfg).shared_task(&t).run().unwrap();
+    assert_eq!(sync.stop_reason, Some(StopReason::CommBudget));
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.network.mode = NetMode::Event;
+    let sim = Runner::new(&sim_cfg).shared_task(&t).run().unwrap();
+    assert_eq!(trace_bits(&sync), trace_bits(&sim));
+    assert_eq!(sync.ledger.total_bytes, sim.ledger.total_bytes);
+    assert_eq!(sync.stop_reason, sim.stop_reason);
+    assert_eq!(sync.oracles.first_order, sim.oracles.first_order);
+}
+
 struct Counting {
     seen: Vec<usize>,
     abort_after: Option<usize>,
@@ -192,6 +283,37 @@ fn observer_sees_every_trace_point_and_can_abort() {
     let m = Runner::new(&cfg).task(&t).observer(&mut obs).run().unwrap();
     assert_eq!(m.stop_reason, Some(StopReason::Observer));
     assert_eq!(m.trace.len(), 2);
+}
+
+/// `c2dfb budget --tiny --task logreg` end-to-end: the equal-communication
+/// harness also runs on the native logreg task, and every algorithm stops
+/// on the budget with a finite loss.
+#[test]
+fn budget_harness_on_logreg_completes() {
+    let dir = std::env::temp_dir().join("c2dfb_budget_logreg");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = experiments::HarnessOpts {
+        rounds: 300,
+        out_dir: dir.to_str().unwrap().to_string(),
+        seed: 42,
+        ..Default::default()
+    };
+    let budget_mb = 0.3;
+    let runs = experiments::budget_on(&opts, budget_mb, true, "logreg")
+        .expect("budget harness on logreg failed");
+    assert_eq!(runs.len(), 4);
+    for m in &runs {
+        assert_eq!(
+            m.stop_reason,
+            Some(StopReason::CommBudget),
+            "{} should stop on the communication budget",
+            m.algo
+        );
+        assert!(m.ledger.total_mb() >= budget_mb, "{}", m.algo);
+        assert!(m.final_point().unwrap().loss.is_finite(), "{}", m.algo);
+    }
+    // Unknown task specs are rejected loudly.
+    assert!(experiments::budget_on(&opts, budget_mb, true, "bogus").is_err());
 }
 
 /// `c2dfb budget --tiny` end-to-end: all four algorithms stop on the
