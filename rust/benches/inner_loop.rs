@@ -1,52 +1,186 @@
-//! Inner-loop (Algorithm 2) benchmark on the analytic quadratic: isolates
+//! Inner-loop (Algorithm 2) benchmark on an analytic quadratic: isolates
 //! the L3 coordination cost (mixing + compression + tracking bookkeeping)
-//! from oracle latency, and reports bytes per inner step per compressor —
-//! the convergence-theory sanity row of the DESIGN.md experiment index.
+//! from oracle latency, reports bytes per inner step per compressor, and
+//! — the hot-path contract — **asserts zero heap allocations per
+//! steady-state inner step** with a counting global allocator.  The
+//! gradient oracle writes into the reusable batch row, so the measured
+//! loop is the full `IN` step: mix terms, residuals, compression, the
+//! borrowing exchange, and both folds.
+//!
+//! Writes `BENCH_inner.json` (override with `$C2DFB_BENCH_INNER_OUT`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use c2dfb::collective::Network;
 use c2dfb::compress::parse;
-use c2dfb::optim::{run_inner, InnerConfig, InnerState};
-use c2dfb::tasks::{BilevelTask, QuadraticTask};
+use c2dfb::optim::{run_inner_with, GradFn, InnerConfig, InnerState};
 use c2dfb::topology::{Graph, Topology};
 use c2dfb::util::bench::{black_box, Bencher};
+use c2dfb::util::json::Json;
 use c2dfb::util::rng::Rng;
+
+/// Counts every heap allocation (alloc/realloc/alloc_zeroed) so steady-
+/// state sections can assert they make none.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Heterogeneous quadratic gradients ∇r_i(z) = a_i (z − c_i), written
+/// in place — the oracle contributes zero allocations, so the assertion
+/// covers the pure coordination cost of a step.
+struct Quad {
+    a: Vec<f32>,
+    c: Vec<Vec<f32>>,
+}
+
+impl Quad {
+    fn build(m: usize, dim: usize, seed: u64) -> Quad {
+        let mut rng = Rng::new(seed);
+        Quad {
+            a: (0..m).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
+            c: (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; dim];
+                    rng.fill_normal(&mut v, 0.0, 1.0);
+                    v
+                })
+                .collect(),
+        }
+    }
+
+    fn grad_into(&self, i: usize, z: &[f32], out: &mut [f32]) {
+        for ((o, zk), ck) in out.iter_mut().zip(z).zip(&self.c[i]) {
+            *o = self.a[i] * (zk - ck);
+        }
+    }
+}
 
 fn main() {
     let mut b = Bencher::from_env();
     let m = 10;
+    let mut results: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str("inner_loop")),
+        (
+            "description".into(),
+            Json::str(
+                "Steady-state cost of one compressed inner step (Algorithm 2) on a ring of 10 \
+                 nodes, analytic quadratic oracle evaluated in place. allocs_per_step counts \
+                 heap allocations via a counting global allocator and MUST be 0 for every \
+                 compressor (asserted).",
+            ),
+        ),
+        ("command".into(), Json::str("cd rust && cargo bench --bench inner_loop")),
+    ];
+
     for dim in [2_000usize, 20_000] {
-        let task = QuadraticTask::generate(m, dim, 0.8, 5);
-        let x = task.init_x(&mut Rng::new(1));
-        let xs: Vec<Vec<f32>> = vec![x; m];
-        for spec in ["topk:0.2", "qsgd:16", "none"] {
+        let quad = Quad::build(m, dim, 5);
+        for spec in ["topk:0.2", "randk:0.25", "qsgd:16", "none"] {
             let q = parse(spec).unwrap();
             let mut net = Network::new(Graph::build(Topology::Ring, m));
             let mut rng = Rng::new(2);
             let mut state = InnerState::new(&net, dim);
             let mut d = vec![vec![0.0f32; dim]; m];
             let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 1 };
-            let xs_ref = &xs;
-            let before = net.ledger.total_bytes;
-            b.bench(&format!("inner_step/m10/d{dim}/{spec}"), || {
-                run_inner(
+            let mut grad =
+                |i: usize, z: &[f32], out: &mut [f32]| quad.grad_into(i, z, out);
+
+            // Warm up buffer capacities (bootstrap + first residual
+            // rounds), then require exactly zero allocations per step.
+            for _ in 0..5 {
+                run_inner_with(
                     &cfg,
                     &mut net,
                     q.as_ref(),
                     &mut rng,
                     &mut state,
                     &mut d,
-                    |i, z| task.inner_z_grad(i, &xs_ref[i], z).unwrap(),
+                    GradFn::Serial(&mut grad),
+                );
+            }
+            let steady_steps = 200u64;
+            let before_allocs = ALLOCATIONS.load(Ordering::Relaxed);
+            let before_bytes = net.ledger.total_bytes;
+            for _ in 0..steady_steps {
+                run_inner_with(
+                    &cfg,
+                    &mut net,
+                    q.as_ref(),
+                    &mut rng,
+                    &mut state,
+                    &mut d,
+                    GradFn::Serial(&mut grad),
+                );
+            }
+            let allocs = ALLOCATIONS.load(Ordering::Relaxed) - before_allocs;
+            let kib_per_step =
+                (net.ledger.total_bytes - before_bytes) as f64 / steady_steps as f64 / 1024.0;
+            assert_eq!(
+                allocs, 0,
+                "{spec} d={dim}: {allocs} heap allocations in {steady_steps} steady-state \
+                 inner steps — the hot path must not allocate"
+            );
+            println!(
+                "alloc-check inner_step/m10/d{dim}/{spec}: 0 allocations over {steady_steps} steps"
+            );
+
+            let name = format!("inner_step/m10/d{dim}/{spec}");
+            let mean = b.bench(&name, || {
+                run_inner_with(
+                    &cfg,
+                    &mut net,
+                    q.as_ref(),
+                    &mut rng,
+                    &mut state,
+                    &mut d,
+                    GradFn::Serial(&mut grad),
                 );
                 black_box(d[0][0])
             });
-            let steps = net.ledger.gossip_rounds / 2; // 2 exchanges per step
-            if steps > 0 {
-                println!(
-                    "      └─ {:.1} KiB per inner step (all nodes)",
-                    (net.ledger.total_bytes - before) as f64 / steps as f64 / 1024.0
-                );
-            }
+            println!("      └─ {kib_per_step:.1} KiB per inner step (all nodes)");
+            let key = format!("d{dim}/{spec}");
+            results.push((
+                format!("{key}/allocs_per_step"),
+                Json::num(allocs as f64 / steady_steps as f64),
+            ));
+            results.push((format!("{key}/kib_per_step"), Json::num(kib_per_step)));
+            results.push((
+                format!("{key}/mean_ns"),
+                mean.map_or(Json::Null, |t| Json::num(t.as_nanos() as f64)),
+            ));
         }
     }
     b.finish();
+
+    // cargo runs benches with cwd = the package root (rust/); the tracked
+    // artifact lives one level up at the repo root.
+    let out = std::env::var("C2DFB_BENCH_INNER_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_inner.json").into());
+    std::fs::write(&out, Json::Obj(results.into_iter().collect()).to_string() + "\n")
+        .expect("write BENCH_inner.json");
+    println!("wrote {out}");
 }

@@ -81,7 +81,10 @@ fn main() {
     }
 
     let pairs: Vec<(&str, Json)> = entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
-    let out = std::env::var("C2DFB_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".into());
+    // cargo runs benches with cwd = the package root (rust/); the tracked
+    // artifact lives one level up at the repo root.
+    let out = std::env::var("C2DFB_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json").into());
     std::fs::write(&out, Json::obj(pairs).to_string()).expect("write BENCH_sim.json");
     println!("\nwrote {out}");
     b.finish();

@@ -24,7 +24,7 @@
 //! [`BilevelAlgorithm::init`]/[`BilevelAlgorithm::step`].
 
 use super::{BilevelAlgorithm, RunContext, StepOutcome};
-use crate::collective::Transport;
+use crate::collective::{MixScratch, Transport};
 use crate::compress::{self, Compressor};
 use crate::optim::{
     run_inner_naive_with, run_inner_with, DenseTracker, GradFn, InnerConfig, InnerState,
@@ -44,15 +44,26 @@ enum InnerOracle {
 }
 
 impl InnerOracle {
-    fn eval(&self, task: &dyn BilevelTask, i: usize, xs: &[Vec<f32>], d: &[f32]) -> Vec<f32> {
-        match self {
+    /// Evaluate into the inner loop's reusable gradient row.  (The task
+    /// oracles themselves return fresh vectors — that allocation belongs
+    /// to the task API, not the coordination hot path.)
+    fn eval_into(
+        &self,
+        task: &dyn BilevelTask,
+        i: usize,
+        xs: &[Vec<f32>],
+        d: &[f32],
+        out: &mut [f32],
+    ) {
+        let g = match self {
             InnerOracle::Y { lambda } => task
                 .inner_y_grad(i, &xs[i], d, *lambda)
                 .expect("inner_y oracle failed"),
             InnerOracle::Z => task
                 .inner_z_grad(i, &xs[i], d)
                 .expect("inner_z oracle failed"),
-        }
+        };
+        out.copy_from_slice(&g);
     }
 }
 
@@ -77,7 +88,8 @@ fn inner_pass<T: Transport>(
 ) -> u64 {
     match shared {
         Some(ts) => {
-            let g = |i: usize, di: &[f32]| oracle.eval(ts, i, xs, di);
+            let g =
+                |i: usize, di: &[f32], out: &mut [f32]| oracle.eval_into(ts, i, xs, di, out);
             let grad = GradFn::Parallel(&g, pool);
             if naive {
                 run_inner_naive_with(cfg, net, compressor, rng, state, d, grad)
@@ -86,7 +98,8 @@ fn inner_pass<T: Transport>(
             }
         }
         None => {
-            let mut g = |i: usize, di: &[f32]| oracle.eval(task, i, xs, di);
+            let mut g =
+                |i: usize, di: &[f32], out: &mut [f32]| oracle.eval_into(task, i, xs, di, out);
             let grad = GradFn::Serial(&mut g);
             if naive {
                 run_inner_naive_with(cfg, net, compressor, rng, state, d, grad)
@@ -116,6 +129,8 @@ struct St {
     y_state: InnerState,
     z_state: InnerState,
     tracker: DenseTracker,
+    /// Reused buffers for the outer in-place x mixing.
+    mix: MixScratch,
 }
 
 impl C2dfb {
@@ -175,6 +190,7 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
             y_state,
             z_state,
             tracker: DenseTracker::new(u),
+            mix: MixScratch::new(),
         });
         Ok(StepOutcome { grad_norm })
     }
@@ -186,9 +202,10 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
         let lambda = st.lambda;
 
         // -- 1. outer mixing + descent (pays one dense x exchange) -------
-        st.xs = ctx.net.mix_paid(ctx.cfg.gamma_out, &st.xs);
-        for (xi, si) in st.xs.iter_mut().zip(&st.tracker.s) {
-            for (xk, sk) in xi.iter_mut().zip(si) {
+        ctx.net
+            .mix_paid_into(ctx.cfg.gamma_out, st.xs.as_mut_slice(), &mut st.mix);
+        for (i, xi) in st.xs.iter_mut().enumerate() {
+            for (xk, sk) in xi.iter_mut().zip(st.tracker.s.row(i)) {
                 *xk -= ctx.cfg.eta_out as f32 * sk;
             }
         }

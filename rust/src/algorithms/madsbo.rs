@@ -19,7 +19,7 @@
 //! therefore suffers the full heterogeneity bias — see `mdbo.rs`.)
 
 use super::{BilevelAlgorithm, RunContext, StepOutcome};
-use crate::collective::Transport;
+use crate::collective::{MixScratch, Transport};
 use crate::optim::DenseTracker;
 use anyhow::Result;
 
@@ -47,6 +47,8 @@ struct St {
     /// Lower-level gradient tracker (persists across rounds; MA-DSBO
     /// warm-starts both y and its tracker).
     y_tracker: DenseTracker,
+    /// Reused buffers for every in-place dense mix (y/v/u/x exchanges).
+    mix: MixScratch,
 }
 
 impl Madsbo {
@@ -81,6 +83,7 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
             vs,
             us,
             y_tracker: DenseTracker::new(g0),
+            mix: MixScratch::new(),
         });
         // No hypergradient estimate before the first round.
         Ok(StepOutcome { grad_norm: f64::NAN })
@@ -91,15 +94,13 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
         let m = ctx.task.nodes();
         let (eta_in, eta_out, gamma) = (st.eta_in, st.eta_out, st.gamma);
 
-        // -- 1. tracked lower-level loop ----------------------------------
+        // -- 1. tracked lower-level loop (in-place dense mixes) -----------
         for _k in 0..ctx.cfg.inner_steps {
-            let mixed = ctx.net.mix_paid(gamma, &st.ys);
-            for i in 0..m {
-                st.ys[i] = mixed[i]
-                    .iter()
-                    .zip(&st.y_tracker.s[i])
-                    .map(|(y, sk)| y - eta_in * sk)
-                    .collect();
+            ctx.net.mix_paid_into(gamma, st.ys.as_mut_slice(), &mut st.mix);
+            for (i, yi) in st.ys.iter_mut().enumerate() {
+                for (yk, sk) in yi.iter_mut().zip(st.y_tracker.s.row(i)) {
+                    *yk -= eta_in * sk;
+                }
             }
             let g: Vec<Vec<f32>> =
                 ctx.par_nodes(|task, i| task.inner_z_grad(i, &st.xs[i], &st.ys[i]))?;
@@ -123,13 +124,11 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
         };
         let mut v_tracker = DenseTracker::new(q0);
         for _n in 0..SUBSOLVER_STEPS {
-            let mixed = ctx.net.mix_paid(gamma, &st.vs);
-            for i in 0..m {
-                st.vs[i] = mixed[i]
-                    .iter()
-                    .zip(&v_tracker.s[i])
-                    .map(|(v, q)| v - alpha * q)
-                    .collect();
+            ctx.net.mix_paid_into(gamma, st.vs.as_mut_slice(), &mut st.mix);
+            for (i, vi) in st.vs.iter_mut().enumerate() {
+                for (vk, qk) in vi.iter_mut().zip(v_tracker.s.row(i)) {
+                    *vk -= alpha * qk;
+                }
             }
             let q: Vec<Vec<f32>> = {
                 let hv: Vec<Vec<f32>> =
@@ -158,16 +157,14 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
             }
         }
         // Mix the hypergradient estimates (dense exchange).
-        st.us = ctx.net.mix_paid(gamma, &st.us);
+        ctx.net.mix_paid_into(gamma, st.us.as_mut_slice(), &mut st.mix);
 
         // -- 4. upper step -------------------------------------------------
-        let mixed_x = ctx.net.mix_paid(gamma, &st.xs);
-        for i in 0..m {
-            st.xs[i] = mixed_x[i]
-                .iter()
-                .zip(&st.us[i])
-                .map(|(x, u)| x - eta_out * u)
-                .collect();
+        ctx.net.mix_paid_into(gamma, st.xs.as_mut_slice(), &mut st.mix);
+        for (xi, ui) in st.xs.iter_mut().zip(&st.us) {
+            for (xk, uk) in xi.iter_mut().zip(ui) {
+                *xk -= eta_out * uk;
+            }
         }
 
         let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&st.us));

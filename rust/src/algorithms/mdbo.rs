@@ -14,7 +14,7 @@
 //! 4. upper gossip step x_i ← mix(x)_i − η_out h_i (dense x exchange).
 
 use super::{BilevelAlgorithm, RunContext, StepOutcome};
-use crate::collective::Transport;
+use crate::collective::{MixScratch, Transport};
 use anyhow::Result;
 
 /// Neumann-series length (Q).  The published algorithm takes Q ≈ κ log(·);
@@ -35,6 +35,8 @@ struct St {
     gamma: f64,
     xs: Vec<Vec<f32>>,
     ys: Vec<Vec<f32>>,
+    /// Reused buffers for every in-place dense mix (y/p/x exchanges).
+    mix: MixScratch,
 }
 
 impl Mdbo {
@@ -58,6 +60,7 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
             gamma: ctx.cfg.gamma_out,
             xs: vec![x0; m],
             ys: vec![y0; m],
+            mix: MixScratch::new(),
         });
         // No hypergradient estimate before the first round.
         Ok(StepOutcome { grad_norm: f64::NAN })
@@ -68,18 +71,16 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
         let m = ctx.task.nodes();
         let (eta_in, eta_out, gamma) = (st.eta_in, st.eta_out, st.gamma);
 
-        // -- 1. lower-level gossip GD --------------------------------------
+        // -- 1. lower-level gossip GD (in-place dense mixes) ---------------
         for _k in 0..ctx.cfg.inner_steps {
-            let mixed = ctx.net.mix_paid(gamma, &st.ys);
+            ctx.net.mix_paid_into(gamma, st.ys.as_mut_slice(), &mut st.mix);
             let g: Vec<Vec<f32>> =
-                ctx.par_nodes(|task, i| task.inner_z_grad(i, &st.xs[i], &mixed[i]))?;
+                ctx.par_nodes(|task, i| task.inner_z_grad(i, &st.xs[i], &st.ys[i]))?;
             ctx.metrics.oracles.first_order += m as u64;
-            for i in 0..m {
-                st.ys[i] = mixed[i]
-                    .iter()
-                    .zip(&g[i])
-                    .map(|(y, gk)| y - eta_in * gk)
-                    .collect();
+            for (yi, gi) in st.ys.iter_mut().zip(&g) {
+                for (yk, gk) in yi.iter_mut().zip(gi) {
+                    *yk -= eta_in * gk;
+                }
             }
         }
 
@@ -92,7 +93,7 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
             .map(|p| p.iter().map(|x| eta_in * x).collect())
             .collect();
         for _q in 0..NEUMANN_TERMS {
-            ps = ctx.net.mix_paid(gamma, &ps);
+            ctx.net.mix_paid_into(gamma, ps.as_mut_slice(), &mut st.mix);
             let hp: Vec<Vec<f32>> =
                 ctx.par_nodes(|task, i| task.hvp_yy_g(i, &st.xs[i], &st.ys[i], &ps[i]))?;
             ctx.metrics.oracles.second_order += m as u64;
@@ -114,13 +115,11 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
         ctx.metrics.oracles.second_order += m as u64;
 
         // -- 4. upper gossip step ------------------------------------------
-        let mixed_x = ctx.net.mix_paid(gamma, &st.xs);
-        for i in 0..m {
-            st.xs[i] = mixed_x[i]
-                .iter()
-                .zip(&hs[i])
-                .map(|(x, h)| x - eta_out * h)
-                .collect();
+        ctx.net.mix_paid_into(gamma, st.xs.as_mut_slice(), &mut st.mix);
+        for (xi, hi) in st.xs.iter_mut().zip(&hs) {
+            for (xk, hk) in xi.iter_mut().zip(hi) {
+                *xk -= eta_out * hk;
+            }
         }
 
         let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&hs));

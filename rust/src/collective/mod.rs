@@ -16,9 +16,16 @@
 //!
 //! Inbox payloads are [`Arc`]-shared: a broadcast message is allocated
 //! once per sender and reference-counted per neighbour, so the dense
-//! gossip hot path no longer clones every vector per edge.
+//! gossip hot path no longer clones every vector per edge.  The
+//! compressed inner loop goes one step further through
+//! [`Transport::exchange_indices`] — messages stay with the caller and
+//! only (reused) sender-index lists cross the trait boundary — and
+//! dense mixing has an in-place twin, [`Transport::mix_paid_into`],
+//! with caller-owned [`MixScratch`] buffers; both are allocation-free
+//! in steady state and bit-identical to their allocating counterparts.
 
 use crate::compress::Compressed;
+use crate::linalg::{NodeBlock, RowsMut};
 use crate::metrics::{CommLedger, TimeModel};
 use crate::topology::{Graph, MixingMatrix};
 use std::sync::Arc;
@@ -47,6 +54,32 @@ pub(crate) fn deliver<T>(graph: &Graph, msgs: Vec<T>) -> Inbox<T> {
     inbox
 }
 
+/// Shape `delivered` into m empty per-node sender lists, reusing the
+/// existing allocations (the borrowing-exchange hot path).
+pub(crate) fn clear_delivered(delivered: &mut Vec<Vec<usize>>, m: usize) {
+    delivered.resize_with(m, Vec::new);
+    for ib in delivered.iter_mut() {
+        ib.clear();
+    }
+}
+
+/// Reusable buffers for the in-place paid mixing kernel
+/// ([`Transport::mix_paid_into`]): a contiguous snapshot of the pre-mix
+/// rows, the per-sender byte sizes, and the delivered-sender lists.  Own
+/// one per mixed variable and the steady state allocates nothing.
+#[derive(Default)]
+pub struct MixScratch {
+    prev: NodeBlock,
+    bytes: Vec<usize>,
+    delivered: Vec<Vec<usize>>,
+}
+
+impl MixScratch {
+    pub fn new() -> MixScratch {
+        MixScratch::default()
+    }
+}
+
 /// What an algorithm needs from a network: gossip exchanges that pay
 /// communication, the mixing weights, and the cost ledger.
 ///
@@ -66,6 +99,49 @@ pub trait Transport {
     /// Gossip-broadcast one compressed message per node to all its
     /// neighbours.  Returns each node's inbox; bytes are recorded.
     fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed>;
+
+    /// The borrowing gossip round (the inner-loop hot path): pay
+    /// `bytes[i]` per neighbour of node i and fill `delivered[i]` with the
+    /// ascending sender indices whose messages reached node i.  Payloads
+    /// never enter the transport — the caller keeps them and reads
+    /// `&msgs[j]` for each delivered `j` — so no per-round `Arc`/`Vec`
+    /// churn.  Ledger accounting, loss model and RNG consumption are
+    /// identical to [`Transport::exchange`] with the same byte sizes.
+    fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>);
+
+    /// In-place [`Transport::mix_paid`]: mixes `rows` (any [`RowsMut`]
+    /// representation) against the delivered messages, snapshotting the
+    /// pre-mix rows into `sc`.  Bit-identical to `mix_paid` on every
+    /// transport (same fold expression, ascending sender order) but
+    /// allocation-free in steady state.
+    fn mix_paid_into<R: RowsMut + ?Sized>(
+        &mut self,
+        gamma: f64,
+        rows: &mut R,
+        sc: &mut MixScratch,
+    ) {
+        let m = self.m();
+        let d = rows.dim();
+        debug_assert_eq!(rows.nrows(), m);
+        sc.prev.reset(m, d);
+        for i in 0..m {
+            sc.prev.row_mut(i).copy_from_slice(rows.row(i));
+        }
+        sc.bytes.clear();
+        sc.bytes.resize(m, dense_wire_bytes(d));
+        self.exchange_indices(&sc.bytes, &mut sc.delivered);
+        for i in 0..m {
+            let oi = rows.row_mut(i);
+            let ri = sc.prev.row(i);
+            for &j in &sc.delivered[i] {
+                let w = (gamma * self.mixing().weight(i, j)) as f32;
+                let rj = sc.prev.row(j);
+                for k in 0..d {
+                    oi[k] += w * (rj[k] - ri[k]);
+                }
+            }
+        }
+    }
 
     /// Gossip-broadcast dense vectors (uncompressed algorithms / the outer
     /// loop).
@@ -161,6 +237,20 @@ impl Network {
         self.ledger.record_round(&bytes, &self.degrees, &self.time_model);
         self.mixing.mix(gamma, rows)
     }
+
+    /// See [`Transport::exchange_indices`]: every message is delivered, so
+    /// the sender lists are just the (ascending) neighbour relation; only
+    /// the ledger is touched.  Allocation-free once `delivered` is warm.
+    pub fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
+        assert_eq!(bytes.len(), self.m());
+        self.ledger.record_round(bytes, &self.degrees, &self.time_model);
+        clear_delivered(delivered, self.m());
+        for sender in 0..self.m() {
+            for &nb in self.graph.neighbors(sender) {
+                delivered[nb].push(sender);
+            }
+        }
+    }
 }
 
 impl Transport for Network {
@@ -186,6 +276,10 @@ impl Transport for Network {
 
     fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
         Network::exchange_dense(self, vecs)
+    }
+
+    fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
+        Network::exchange_indices(self, bytes, delivered)
     }
 
     fn mix_paid(&mut self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
@@ -304,6 +398,9 @@ mod tests {
             fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
                 self.0.exchange_dense(vecs)
             }
+            fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
+                self.0.exchange_indices(bytes, delivered)
+            }
             // mix_paid: trait default (inbox-based).
         }
 
@@ -317,5 +414,63 @@ mod tests {
         let b = slow.mix_paid(0.7, &rows);
         assert_eq!(a, b);
         assert_eq!(fast.ledger.total_bytes, slow.0.ledger.total_bytes);
+    }
+
+    /// The borrowing exchange pays exactly what the Arc-based exchange
+    /// pays and reports the same (ascending) sender sets.
+    #[test]
+    fn exchange_indices_matches_exchange_deliveries_and_ledger() {
+        let mut rng = Rng::new(5);
+        let msgs: Vec<Compressed> = (0..5)
+            .map(|i| {
+                let mut v = vec![0.0f32; 40 + 10 * i];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                TopK::new(0.3).compress(&v, &mut rng)
+            })
+            .collect();
+        let bytes: Vec<usize> = msgs.iter().map(Compressed::wire_bytes).collect();
+
+        let mut a = net(5);
+        let inbox = a.exchange(msgs.clone());
+        let mut b = net(5);
+        // Dirty, wrongly-shaped buffer: must be reshaped and cleared.
+        let mut delivered = vec![vec![9usize; 3]; 2];
+        b.exchange_indices(&bytes, &mut delivered);
+
+        assert_eq!(a.ledger.total_bytes, b.ledger.total_bytes);
+        assert_eq!(a.ledger.messages, b.ledger.messages);
+        assert_eq!(a.ledger.gossip_rounds, b.ledger.gossip_rounds);
+        assert!((a.ledger.network_time_s - b.ledger.network_time_s).abs() < 1e-15);
+        for i in 0..5 {
+            let senders: Vec<usize> = inbox[i].iter().map(|(s, _)| *s).collect();
+            assert_eq!(delivered[i], senders);
+        }
+    }
+
+    /// In-place paid mixing is bit-identical to `mix_paid` on both a
+    /// stacked-vector slice and a contiguous block, with equal ledgers.
+    #[test]
+    fn mix_paid_into_matches_mix_paid_bitwise() {
+        use crate::linalg::NodeBlock;
+        let mut rng = Rng::new(9);
+        let rows: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..17).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+
+        let mut reference = net(6);
+        let expect = reference.mix_paid(0.6, &rows);
+
+        let mut sc = MixScratch::new();
+        let mut inplace = rows.clone();
+        let mut n1 = net(6);
+        n1.mix_paid_into(0.6, inplace.as_mut_slice(), &mut sc);
+        assert_eq!(inplace, expect);
+        assert_eq!(n1.ledger.total_bytes, reference.ledger.total_bytes);
+
+        let mut block = NodeBlock::from_rows(&rows);
+        let mut n2 = net(6);
+        n2.mix_paid_into(0.6, &mut block, &mut sc);
+        assert_eq!(block.to_vecs(), expect);
+        assert_eq!(n2.ledger.total_bytes, reference.ledger.total_bytes);
     }
 }

@@ -4,7 +4,7 @@
 /// model a straightforward binary encoding; no actual serialization happens
 /// in the in-process simulator, but the sizes feed the communication-volume
 /// ledger, which is the paper's headline metric.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
     /// Raw f32 values (4 B/coord).
     Dense(Vec<f32>),
@@ -21,11 +21,63 @@ impl Payload {
         match self {
             Payload::Dense(v) => 4 * v.len(),
             Payload::Sparse { idx, val } => {
-                let idx_width =
-                    if idx.last().map(|&m| m < 65_536).unwrap_or(true) { 2 } else { 4 };
+                // Width from the MAX index, not the last: the encoding must
+                // bill correctly even if a producer ever emits indices out
+                // of order (the canonical encoders sort, but the byte model
+                // must not under-bill if that invariant slips).
+                let max = idx.iter().copied().max().unwrap_or(0);
+                let idx_width = if max < 65_536 { 2 } else { 4 };
                 idx_width * idx.len() + 4 * val.len()
             }
             Payload::Quantized { codes, .. } => 4 + 4 + 2 * codes.len(),
+        }
+    }
+
+    /// Reuse `self` as a `Dense` payload, returning its cleared value
+    /// buffer (allocation-free once the variant and capacity are warm).
+    pub(crate) fn reuse_dense(&mut self) -> &mut Vec<f32> {
+        if !matches!(self, Payload::Dense(_)) {
+            *self = Payload::Dense(Vec::new());
+        }
+        match self {
+            Payload::Dense(v) => {
+                v.clear();
+                v
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Reuse `self` as a `Sparse` payload, returning its cleared index and
+    /// value buffers.
+    pub(crate) fn reuse_sparse(&mut self) -> (&mut Vec<u32>, &mut Vec<f32>) {
+        if !matches!(self, Payload::Sparse { .. }) {
+            *self = Payload::Sparse { idx: Vec::new(), val: Vec::new() };
+        }
+        match self {
+            Payload::Sparse { idx, val } => {
+                idx.clear();
+                val.clear();
+                (idx, val)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Reuse `self` as a `Quantized` payload with the given header fields,
+    /// returning its cleared code buffer.
+    pub(crate) fn reuse_quantized(&mut self, norm: f32, levels: u32) -> &mut Vec<i16> {
+        if !matches!(self, Payload::Quantized { .. }) {
+            *self = Payload::Quantized { norm, levels, codes: Vec::new() };
+        }
+        match self {
+            Payload::Quantized { norm: n, levels: l, codes } => {
+                *n = norm;
+                *l = levels;
+                codes.clear();
+                codes
+            }
+            _ => unreachable!(),
         }
     }
 
@@ -99,6 +151,12 @@ mod tests {
             Payload::Sparse { idx: vec![1, 70_000], val: vec![1.0, 2.0] }.payload_bytes(),
             16
         );
+        // Width follows the MAX index even when indices are unsorted (an
+        // early wide index must not be under-billed at u16 width).
+        assert_eq!(
+            Payload::Sparse { idx: vec![70_000, 1], val: vec![1.0, 2.0] }.payload_bytes(),
+            16
+        );
         assert_eq!(
             Payload::Quantized { norm: 1.0, levels: 4, codes: vec![0; 10] }.payload_bytes(),
             28
@@ -114,6 +172,26 @@ mod tests {
         let mut t = vec![1.0f32; 3];
         p.add_scaled_dense(2.0, &mut t);
         assert_eq!(t, vec![11.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn reuse_helpers_switch_variant_and_clear() {
+        let mut p = Payload::Dense(vec![1.0, 2.0]);
+        {
+            let (idx, val) = p.reuse_sparse();
+            assert!(idx.is_empty() && val.is_empty());
+            idx.push(3);
+            val.push(9.0);
+        }
+        assert_eq!(p, Payload::Sparse { idx: vec![3], val: vec![9.0] });
+        {
+            let codes = p.reuse_quantized(2.0, 4);
+            assert!(codes.is_empty());
+            codes.push(1);
+        }
+        assert_eq!(p, Payload::Quantized { norm: 2.0, levels: 4, codes: vec![1] });
+        let v = p.reuse_dense();
+        assert!(v.is_empty());
     }
 
     #[test]

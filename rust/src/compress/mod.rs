@@ -22,13 +22,36 @@ mod message;
 pub use message::Payload;
 
 /// A compressed vector plus its exact serialized size.
+///
+/// Also the reusable output slot of [`Compressor::compress_into`]: the
+/// payload buffers and two private scratch fields (quickselect magnitudes,
+/// rand-k index samples) persist across calls, so re-encoding into an old
+/// message is allocation-free in steady state.  The scratch never reaches
+/// the wire and is excluded from equality.
 #[derive(Clone, Debug)]
 pub struct Compressed {
     pub dim: usize,
     pub payload: Payload,
+    scratch: Vec<f32>,
+    scratch_idx: Vec<usize>,
+}
+
+impl PartialEq for Compressed {
+    fn eq(&self, other: &Self) -> bool {
+        self.dim == other.dim && self.payload == other.payload
+    }
 }
 
 impl Compressed {
+    pub fn new(dim: usize, payload: Payload) -> Compressed {
+        Compressed { dim, payload, scratch: Vec::new(), scratch_idx: Vec::new() }
+    }
+
+    /// An empty slot for [`Compressor::compress_into`] to fill.
+    pub fn empty() -> Compressed {
+        Compressed::new(0, Payload::Dense(Vec::new()))
+    }
+
     /// Exact bytes on the wire for this message (payload + 8-byte header).
     pub fn wire_bytes(&self) -> usize {
         8 + self.payload.payload_bytes()
@@ -64,7 +87,21 @@ pub trait Compressor: Send + Sync {
     fn name(&self) -> String;
     /// The contraction constant δ ∈ (0, 1].
     fn delta(&self) -> f64;
-    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed;
+
+    /// Compress `v` into `out`, reusing `out`'s payload and scratch
+    /// buffers (the inner-loop hot path; allocation-free in steady state).
+    /// `out` is fully overwritten — its previous contents, variant and dim
+    /// are irrelevant.  Equal RNG state ⇒ output identical to
+    /// [`Compressor::compress`], which is defined in terms of this method.
+    fn compress_into(&self, v: &[f32], out: &mut Compressed, rng: &mut Rng);
+
+    /// Allocating convenience wrapper around
+    /// [`Compressor::compress_into`].
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(v, &mut out, rng);
+        out
+    }
 }
 
 /// Parse "topk:0.2" | "randk:0.3" | "qsgd:16" | "none".
@@ -85,6 +122,12 @@ pub fn parse(spec: &str) -> Result<Box<dyn Compressor>, String> {
         }
         "qsgd" => {
             let l: u32 = arg.ok_or("qsgd needs a level count, e.g. qsgd:16")?.parse().map_err(|_| "bad qsgd levels")?;
+            if l == 0 || l > Qsgd::MAX_LEVELS {
+                return Err(format!(
+                    "qsgd levels must be in 1..={} (i16 code range), got {l}",
+                    Qsgd::MAX_LEVELS
+                ));
+            }
             Ok(Box::new(Qsgd::new(l)))
         }
         _ => Err(format!("unknown compressor: {spec}")),
@@ -106,8 +149,9 @@ impl Compressor for Identity {
         1.0
     }
 
-    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
-        Compressed { dim: v.len(), payload: Payload::Dense(v.to_vec()) }
+    fn compress_into(&self, v: &[f32], out: &mut Compressed, _rng: &mut Rng) {
+        out.dim = v.len();
+        out.payload.reuse_dense().extend_from_slice(v);
     }
 }
 
@@ -137,42 +181,40 @@ impl Compressor for TopK {
         self.ratio
     }
 
-    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, v: &[f32], out: &mut Compressed, _rng: &mut Rng) {
         let d = v.len();
         let k = self.k(d);
-        if k == d {
-            return Compressed { dim: d, payload: Payload::Dense(v.to_vec()) };
+        out.dim = d;
+        // Non-finite coordinates break the quickselect ordering (its
+        // comparisons are not a total order under NaN), which can corrupt
+        // the threshold or drop entries.  Fall back deterministically to
+        // the dense encoding: nothing is silently lost, and the run-level
+        // divergence guard sees the non-finite values unfiltered.
+        if k == d || v.iter().any(|x| !x.is_finite()) {
+            out.payload.reuse_dense().extend_from_slice(v);
+            return;
         }
-        // Quickselect on |v| for the threshold, then gather ≥ threshold in
-        // index order (ties broken by first-come, capped at k).
-        let mut mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
-        let thresh = quickselect_desc(&mut mags, k - 1);
-        let mut idx = Vec::with_capacity(k);
-        let mut val = Vec::with_capacity(k);
+        // Quickselect on |v| (in the reusable scratch) for the threshold.
+        out.scratch.clear();
+        out.scratch.extend(v.iter().map(|x| x.abs()));
+        let thresh = quickselect_desc(&mut out.scratch, k - 1);
+        // Count strictly-above entries, then gather in one ascending pass:
+        // everything above the threshold plus the first (k − count) ties in
+        // index order — canonical ascending indices by construction.
+        let n_gt = v.iter().filter(|x| x.abs() > thresh).count();
+        let mut ties_left = k - n_gt;
+        let (idx, val) = out.payload.reuse_sparse();
         for (i, &x) in v.iter().enumerate() {
-            if x.abs() > thresh {
+            let a = x.abs();
+            if a > thresh {
+                idx.push(i as u32);
+                val.push(x);
+            } else if a == thresh && ties_left > 0 {
+                ties_left -= 1;
                 idx.push(i as u32);
                 val.push(x);
             }
         }
-        // Fill remaining slots with values exactly at the threshold.
-        if idx.len() < k {
-            for (i, &x) in v.iter().enumerate() {
-                if x.abs() == thresh {
-                    idx.push(i as u32);
-                    val.push(x);
-                    if idx.len() == k {
-                        break;
-                    }
-                }
-            }
-            // Keep index order canonical.
-            let mut pairs: Vec<(u32, f32)> = idx.into_iter().zip(val).collect();
-            pairs.sort_unstable_by_key(|p| p.0);
-            idx = pairs.iter().map(|p| p.0).collect();
-            val = pairs.iter().map(|p| p.1).collect();
-        }
-        Compressed { dim: d, payload: Payload::Sparse { idx, val } }
     }
 }
 
@@ -238,16 +280,21 @@ impl Compressor for RandK {
         self.ratio
     }
 
-    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, v: &[f32], out: &mut Compressed, rng: &mut Rng) {
         let d = v.len();
         let k = ((self.ratio * d as f64).ceil() as usize).clamp(1, d);
+        out.dim = d;
         if k == d {
-            return Compressed { dim: d, payload: Payload::Dense(v.to_vec()) };
+            out.payload.reuse_dense().extend_from_slice(v);
+            return;
         }
-        let indices = rng.sample_indices(d, k);
-        let idx: Vec<u32> = indices.iter().map(|&i| i as u32).collect();
-        let val: Vec<f32> = indices.iter().map(|&i| v[i]).collect();
-        Compressed { dim: d, payload: Payload::Sparse { idx, val } }
+        // Canonically sorted ascending (sample_indices_into sorts), so the
+        // wire width model and re-encode fixed points see the same order
+        // top-k emits.
+        rng.sample_indices_into(d, k, &mut out.scratch_idx);
+        let (idx, val) = out.payload.reuse_sparse();
+        idx.extend(out.scratch_idx.iter().map(|&i| i as u32));
+        val.extend(out.scratch_idx.iter().map(|&i| v[i]));
     }
 }
 
@@ -260,8 +307,17 @@ pub struct Qsgd {
 }
 
 impl Qsgd {
+    /// Largest representable level count: codes are `level · sign` stored
+    /// as `i16`, so levels beyond `i16::MAX` would silently saturate.
+    pub const MAX_LEVELS: u32 = i16::MAX as u32;
+
     pub fn new(levels: u32) -> Qsgd {
         assert!(levels >= 1, "need at least 1 level");
+        assert!(
+            levels <= Qsgd::MAX_LEVELS,
+            "qsgd levels {levels} exceed the i16 code range (max {})",
+            Qsgd::MAX_LEVELS
+        );
         Qsgd { levels }
     }
 
@@ -284,26 +340,25 @@ impl Compressor for Qsgd {
         1.0 / (1.0 + self.omega(10_000))
     }
 
-    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, v: &[f32], out: &mut Compressed, rng: &mut Rng) {
         let d = v.len();
         let norm = crate::linalg::norm2(v) as f32;
+        out.dim = d;
         if norm == 0.0 {
-            return Compressed {
-                dim: d,
-                payload: Payload::Quantized { norm: 0.0, levels: self.levels, codes: vec![0; d] },
-            };
+            let codes = out.payload.reuse_quantized(0.0, self.levels);
+            codes.resize(d, 0);
+            return;
         }
         let s = self.levels as f32;
-        let mut codes = Vec::with_capacity(d);
+        let codes = out.payload.reuse_quantized(norm, self.levels);
         for &x in v {
             let u = x.abs() / norm * s; // in [0, s]
             let lo = u.floor();
             let level = lo + if rng.bernoulli((u - lo) as f64) { 1.0 } else { 0.0 };
-            // Signed code in [−s, s]; stored as i16.
+            // Signed code in [−s, s]; Qsgd::new bounds s to the i16 range.
             let code = (level * x.signum()) as i16;
             codes.push(code);
         }
-        Compressed { dim: d, payload: Payload::Quantized { norm, levels: self.levels, codes } }
     }
 }
 
@@ -455,6 +510,91 @@ mod tests {
         assert_eq!(parse("none").unwrap().name(), "none");
         assert!(parse("bogus").is_err());
         assert!(parse("topk").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_qsgd_level_overflow() {
+        // (level · sign) is stored as i16: levels beyond 32767 would
+        // silently saturate, so the spec is rejected with a clear error.
+        assert_eq!(parse("qsgd:32767").unwrap().name(), "qsgd:32767");
+        let err = parse("qsgd:32768").unwrap_err();
+        assert!(err.contains("i16"), "unhelpful error: {err}");
+        assert!(parse("qsgd:40000").is_err());
+        assert!(parse("qsgd:0").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "i16 code range")]
+    fn qsgd_constructor_rejects_overflow() {
+        Qsgd::new(40_000);
+    }
+
+    #[test]
+    fn topk_nan_input_falls_back_to_dense() {
+        let mut rng = Rng::new(21);
+        let mut v = vec![1.0f32, -2.0, 3.0, -4.0, 5.0, -6.0, 7.0, -8.0, 9.0, -10.0];
+        v[3] = f32::NAN;
+        let c = TopK::new(0.2).compress(&v, &mut rng);
+        // Deterministic fallback: the full vector travels dense, so the
+        // divergence guard downstream sees the NaN unfiltered.
+        match &c.payload {
+            Payload::Dense(dense) => {
+                assert_eq!(dense.len(), v.len());
+                assert!(dense[3].is_nan());
+                for (i, x) in v.iter().enumerate() {
+                    if i != 3 {
+                        assert_eq!(dense[i], *x);
+                    }
+                }
+            }
+            p => panic!("expected dense fallback, got {p:?}"),
+        }
+        assert_eq!(c.wire_bytes(), 8 + 4 * v.len());
+        // Infinities take the same fallback.
+        v[3] = f32::INFINITY;
+        let c = TopK::new(0.2).compress(&v, &mut rng);
+        assert!(matches!(c.payload, Payload::Dense(_)));
+    }
+
+    #[test]
+    fn randk_indices_sorted_and_billed_at_u32_width_beyond_u16_range() {
+        // Regression for the wire-size accounting: at d > 65536 the width
+        // must come from the max index, and rand-k indices stay canonical
+        // (ascending) like top-k's.
+        let d = 70_000;
+        let mut rng = Rng::new(33);
+        let mut v = vec![0.0f32; d];
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        let c = RandK::new(0.01).compress(&v, &mut rng);
+        let Payload::Sparse { idx, val } = &c.payload else {
+            panic!("expected sparse");
+        };
+        assert_eq!(idx.len(), 700);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices not sorted");
+        let max = *idx.last().unwrap();
+        assert!(max >= 65_536, "seed must sample a wide index (got max {max})");
+        assert_eq!(c.wire_bytes(), 8 + 4 * idx.len() + 4 * val.len());
+    }
+
+    #[test]
+    fn compress_into_reuses_dirty_buffers_identically() {
+        let (_, v) = rngv(40, 257);
+        let (_, w) = rngv(41, 64);
+        for spec in ["none", "topk:0.1", "randk:0.25", "qsgd:8"] {
+            let q = parse(spec).unwrap();
+            let mut rng_a = Rng::new(99);
+            let mut rng_b = rng_a.clone();
+            let fresh = q.compress(&v, &mut rng_a);
+            // Dirty the slot with a different vector and different
+            // compressors first, then re-encode v into it.
+            let mut slot = parse("qsgd:4").unwrap().compress(&w, &mut Rng::new(1));
+            parse("topk:0.5").unwrap().compress_into(&w, &mut slot, &mut Rng::new(2));
+            q.compress_into(&v, &mut slot, &mut rng_b);
+            assert_eq!(slot, fresh, "{spec}: dirty-buffer reuse changed the message");
+            assert_eq!(slot.wire_bytes(), fresh.wire_bytes());
+            // Both RNGs consumed the same draws.
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{spec}: rng divergence");
+        }
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Contiguous per-node matrices for the coordination hot path.
+//!
+//! The inner loop (Algorithm 2) and the trackers keep one d-vector per
+//! node.  Backing those with `Vec<Vec<f32>>` scatters the rows across the
+//! heap and forces an allocation every time a batch is rebuilt; a
+//! [`NodeBlock`] is one m×d row-major allocation with row views, so
+//! per-step rebuilds are `copy_from_slice` into storage that already
+//! exists and neighbouring rows share cache lines.
+//!
+//! The [`Rows`]/[`RowsMut`] traits abstract "m stacked d-vectors" so the
+//! paid gossip-mixing kernels
+//! ([`Transport::mix_paid_into`](crate::collective::Transport::mix_paid_into))
+//! work identically over a `NodeBlock` and over the legacy `[Vec<f32>]`
+//! representation the algorithm iterates still use at their API surface.
+
+/// Read access to m stacked rows of dimension d.
+pub trait Rows {
+    fn nrows(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn row(&self, i: usize) -> &[f32];
+}
+
+/// Mutable access to m stacked rows of dimension d.
+pub trait RowsMut: Rows {
+    fn row_mut(&mut self, i: usize) -> &mut [f32];
+}
+
+impl Rows for [Vec<f32>] {
+    fn nrows(&self) -> usize {
+        self.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.first().map_or(0, |r| r.len())
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        &self[i]
+    }
+}
+
+impl RowsMut for [Vec<f32>] {
+    fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self[i]
+    }
+}
+
+/// One contiguous row-major m×d `f32` matrix holding a per-node vector per
+/// row.  All row accessors are allocation-free; the only methods that
+/// allocate are the explicit conversions ([`NodeBlock::to_vecs`],
+/// [`NodeBlock::mean_row`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeBlock {
+    m: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl Default for NodeBlock {
+    fn default() -> Self {
+        NodeBlock::zeros(0, 0)
+    }
+}
+
+impl NodeBlock {
+    pub fn zeros(m: usize, d: usize) -> NodeBlock {
+        NodeBlock { m, d, data: vec![0.0; m * d] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> NodeBlock {
+        let mut b = NodeBlock::zeros(rows.nrows(), rows.dim());
+        b.copy_from_rows(rows);
+        b
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.m
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Iterate all rows in node order.
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.d.max(1))
+    }
+
+    /// Re-shape to m×d, keeping the backing storage (no allocation once
+    /// capacity covers the largest shape ever used).  Newly grown storage
+    /// is zeroed; existing contents are unspecified — callers overwrite.
+    pub fn reset(&mut self, m: usize, d: usize) {
+        self.m = m;
+        self.d = d;
+        self.data.clear();
+        self.data.resize(m * d, 0.0);
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Copy all rows from stacked vectors of matching shape.
+    pub fn copy_from_rows(&mut self, rows: &[Vec<f32>]) {
+        debug_assert_eq!(rows.nrows(), self.m);
+        for (i, r) in rows.iter().enumerate() {
+            self.row_mut(i).copy_from_slice(r);
+        }
+    }
+
+    /// Copy from another block of identical shape.
+    pub fn copy_from(&mut self, other: &NodeBlock) {
+        debug_assert_eq!((self.m, self.d), (other.m, other.d));
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Node-average row (allocates; evaluation cadence only).
+    pub fn mean_row(&self) -> Vec<f32> {
+        assert!(self.m > 0);
+        let mut out = vec![0.0f32; self.d];
+        for r in self.rows() {
+            super::add_assign(&mut out, r);
+        }
+        super::scale(1.0 / self.m as f32, &mut out);
+        out
+    }
+
+    /// Frobenius-norm² consensus error `‖X − 1·x̄‖²` (allocates the mean;
+    /// evaluation cadence only).
+    pub fn consensus_err_sq(&self) -> f64 {
+        let mean = self.mean_row();
+        self.rows()
+            .map(|r| {
+                r.iter()
+                    .zip(&mean)
+                    .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// Convert to the legacy stacked-vector representation (allocates).
+    pub fn to_vecs(&self) -> Vec<Vec<f32>> {
+        self.rows().map(<[f32]>::to_vec).collect()
+    }
+}
+
+impl Rows for NodeBlock {
+    fn nrows(&self) -> usize {
+        self.m
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        NodeBlock::row(self, i)
+    }
+}
+
+impl RowsMut for NodeBlock {
+    fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        NodeBlock::row_mut(self, i)
+    }
+}
+
+impl std::ops::Index<usize> for NodeBlock {
+    type Output = [f32];
+
+    fn index(&self, i: usize) -> &[f32] {
+        self.row(i)
+    }
+}
+
+impl std::ops::IndexMut<usize> for NodeBlock {
+    fn index_mut(&mut self, i: usize) -> &mut [f32] {
+        self.row_mut(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_indexing() {
+        let mut b = NodeBlock::zeros(3, 2);
+        b.row_mut(1).copy_from_slice(&[1.0, 2.0]);
+        assert_eq!(b.row(0), &[0.0, 0.0]);
+        assert_eq!(&b[1], &[1.0, 2.0]);
+        b[2][0] = 5.0;
+        assert_eq!(b.row(2), &[5.0, 0.0]);
+        assert_eq!(b.rows().count(), 3);
+    }
+
+    #[test]
+    fn from_rows_roundtrip() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let b = NodeBlock::from_rows(&rows);
+        assert_eq!(b.to_vecs(), rows);
+        assert_eq!(b.nrows(), 2);
+        assert_eq!(b.dim(), 2);
+    }
+
+    #[test]
+    fn mean_and_consensus_match_vec_versions() {
+        let rows = vec![vec![1.0, 0.0], vec![3.0, 4.0]];
+        let b = NodeBlock::from_rows(&rows);
+        assert_eq!(b.mean_row(), super::super::mean_rows(&rows));
+        assert!((b.consensus_err_sq() - super::super::consensus_err_sq(&rows)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_reshapes_without_shrinking_capacity() {
+        let mut b = NodeBlock::zeros(4, 8);
+        let cap = b.data.capacity();
+        b.reset(2, 3);
+        assert_eq!((b.nrows(), b.dim()), (2, 3));
+        assert_eq!(b.data.len(), 6);
+        assert!(b.data.capacity() >= cap.min(32));
+        b.reset(4, 8);
+        assert_eq!(b.data.len(), 32);
+        assert_eq!(b.data.capacity(), cap, "reset must reuse storage");
+    }
+
+    #[test]
+    fn rows_trait_on_slices() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let s: &[Vec<f32>] = &rows;
+        assert_eq!(s.nrows(), 2);
+        assert_eq!(s.dim(), 2);
+        assert_eq!(s.row(1), &[3.0, 4.0]);
+    }
+}

@@ -5,8 +5,10 @@
 //! little dense `f64` matrix work for the mixing matrices (doubly
 //! stochastic checks, spectral gap via a cyclic Jacobi eigensolver).
 
+pub mod block;
 pub mod matrix;
 
+pub use block::{NodeBlock, Rows, RowsMut};
 pub use matrix::MatF64;
 
 // ---------------------------------------------------------------------------

@@ -15,6 +15,26 @@
 //! on the event engine, lost messages simply never reach the reference
 //! points — the exact failure mode a real deployment would see.
 //!
+//! **This is the communication hot path and it is allocation-free in
+//! steady state.**  Every buffer a step needs — residual scratch, the
+//! per-node [`Compressed`] message slots, the delivered-sender lists, and
+//! the contiguous [`NodeBlock`] matrices backing `s`, `∇r` batches and the
+//! error-feedback accumulators — lives in [`InnerState`] and is reused
+//! across steps and outer rounds.  Messages travel by reference through
+//! [`Transport::exchange_indices`], so no `Arc`/`Vec` churn per round
+//! (`benches/inner_loop.rs` asserts zero heap allocations per steady-state
+//! step with a serial in-place oracle; the pool-parallel oracle path
+//! stages rows through the thread pool and is not allocation-free —
+//! there, task-oracle allocations and thread fan-out dominate anyway).
+//!
+//! Weight/epoch consistency: neighbour folds must use the mixing weights
+//! the messages were *sent* under.  A topology schedule can tick in the
+//! middle of an exchange (graph epochs advance per gossip round), so each
+//! exchange snapshots the epoch first; if the epoch moved during the
+//! exchange, the in-flight messages belong to a dead epoch — they are
+//! dropped rather than folded with new-epoch weights, and the reference
+//! points resync immediately.
+//!
 //! Gradient oracles go through [`GradFn`]: a serial closure, or a
 //! `Sync` closure plus a [`NodePool`] to evaluate nodes concurrently.
 //! Each step's oracle batch happens at a point where the evaluated
@@ -25,7 +45,8 @@
 //! (warm start), which `InnerState` models.
 
 use crate::collective::Transport;
-use crate::compress::Compressor;
+use crate::compress::{Compressed, Compressor};
+use crate::linalg::NodeBlock;
 use crate::optim::refpoint::RefPoint;
 use crate::sim::parallel::NodePool;
 use crate::util::rng::Rng;
@@ -38,46 +59,80 @@ pub struct InnerConfig {
 }
 
 /// How the inner loop evaluates the per-node gradient oracle ∇r_i.
+///
+/// Oracles write into a caller-provided row (`f(i, d_i, out)`), so the
+/// serial path is allocation-free end to end; the parallel path stages
+/// per-node rows through the pool (those sends allocate — oracle latency
+/// dominates there anyway).
 pub enum GradFn<'f> {
-    /// One shared mutable closure, evaluated node by node.
-    Serial(&'f mut dyn FnMut(usize, &[f32]) -> Vec<f32>),
-    /// A shareable closure fanned out over a [`NodePool`]; results come
-    /// back in node order, so the maths is identical to `Serial`.
-    Parallel(&'f (dyn Fn(usize, &[f32]) -> Vec<f32> + Sync), &'f NodePool),
+    /// One shared mutable closure, evaluated node by node into the batch.
+    Serial(&'f mut dyn FnMut(usize, &[f32], &mut [f32])),
+    /// A shareable closure fanned out over a [`NodePool`]; results land in
+    /// node order, so the maths is identical to `Serial`.
+    Parallel(&'f (dyn Fn(usize, &[f32], &mut [f32]) + Sync), &'f NodePool),
 }
 
 impl GradFn<'_> {
-    /// Evaluate the oracle at every node's current iterate.
-    fn eval_all(&mut self, d: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    /// Evaluate the oracle at every node's current iterate, into `out`.
+    fn eval_all(&mut self, d: &[Vec<f32>], out: &mut NodeBlock) {
+        debug_assert_eq!(d.len(), out.nrows());
         match self {
-            GradFn::Serial(f) => d.iter().enumerate().map(|(i, di)| f(i, di)).collect(),
+            GradFn::Serial(f) => {
+                for (i, di) in d.iter().enumerate() {
+                    f(i, di, out.row_mut(i));
+                }
+            }
             GradFn::Parallel(f, pool) => {
                 // Copy the shared-closure reference out of the &mut match
                 // binding so the spawned closure captures a plain
                 // `&(dyn Fn + Sync)`.
-                let f: &(dyn Fn(usize, &[f32]) -> Vec<f32> + Sync) = *f;
-                pool.map(d.len(), |i| f(i, &d[i]))
+                let f: &(dyn Fn(usize, &[f32], &mut [f32]) + Sync) = *f;
+                let dim = out.dim();
+                let rows = pool.map(d.len(), |i| {
+                    let mut row = vec![0.0f32; dim];
+                    f(i, &d[i], &mut row);
+                    row
+                });
+                for (i, row) in rows.iter().enumerate() {
+                    out.row_mut(i).copy_from_slice(row);
+                }
             }
         }
     }
 }
 
-/// Per-variable persistent inner-loop state across outer rounds.
+/// Per-variable persistent inner-loop state across outer rounds, plus all
+/// steady-state scratch the hot loop reuses.
 pub struct InnerState {
     /// Model reference points (d̂, (d̂)_w) per node.
     pub d_ref: Vec<RefPoint>,
-    /// Tracker values s_i per node.
-    pub s: Vec<Vec<f32>>,
+    /// Tracker values s_i per node (contiguous m×d).
+    pub s: NodeBlock,
     /// Tracker reference points (ŝ, (ŝ)_w) per node.
     pub s_ref: Vec<RefPoint>,
-    /// Gradient folded into the tracker last (∇r_i^k).
-    pub prev_grad: Vec<Vec<f32>>,
+    /// Gradient folded into the tracker last (∇r_i^k), contiguous m×d.
+    pub prev_grad: NodeBlock,
     initialized: bool,
     /// Naive-variant error-feedback accumulators (e_i) for d and s.
-    err_d: Vec<Vec<f32>>,
-    err_s: Vec<Vec<f32>>,
+    err_d: NodeBlock,
+    err_s: NodeBlock,
     /// Transport graph epoch the reference points were built against.
     epoch: u64,
+    // ---- reused per-step scratch (never reallocated in steady state) ----
+    /// One compressed-message slot per node (payload buffers reused).
+    msgs: Vec<Compressed>,
+    /// Wire sizes of the current message set.
+    bytes: Vec<usize>,
+    /// Delivered-sender lists from the last exchange.
+    delivered: Vec<Vec<usize>>,
+    /// Dense residual / error-feedback carry scratch (one row).
+    resid: Vec<f32>,
+    /// Fresh gradient batch ∇r^{k+1} (swapped into `prev_grad`).
+    g_new: NodeBlock,
+    /// Naive variant only: densified own messages Q_i, contiguous m×d.
+    /// Empty until the first `run_inner_naive_with` call sizes it, so the
+    /// reference-point path never pays for it.
+    own: NodeBlock,
 }
 
 impl InnerState {
@@ -90,13 +145,19 @@ impl InnerState {
         };
         InnerState {
             d_ref: mk_refs(),
-            s: vec![vec![0.0; dim]; m],
+            s: NodeBlock::zeros(m, dim),
             s_ref: mk_refs(),
-            prev_grad: vec![vec![0.0; dim]; m],
+            prev_grad: NodeBlock::zeros(m, dim),
             initialized: false,
-            err_d: vec![vec![0.0; dim]; m],
-            err_s: vec![vec![0.0; dim]; m],
+            err_d: NodeBlock::zeros(m, dim),
+            err_s: NodeBlock::zeros(m, dim),
             epoch: net.graph_epoch(),
+            msgs: (0..m).map(|_| Compressed::empty()).collect(),
+            bytes: Vec::with_capacity(m),
+            delivered: vec![Vec::new(); m],
+            resid: Vec::with_capacity(dim),
+            g_new: NodeBlock::zeros(m, dim),
+            own: NodeBlock::default(),
         }
     }
 
@@ -110,16 +171,20 @@ impl InnerState {
     /// again by construction.  Local tracker values, gradients and
     /// error-feedback accumulators carry over.  No-op on static graphs.
     fn sync_topology<T: Transport>(&mut self, net: &T) {
-        let epoch = net.graph_epoch();
-        if epoch == self.epoch {
+        if net.graph_epoch() == self.epoch {
             return;
         }
-        self.epoch = epoch;
-        let dim = self.d_ref.first().map_or(0, |r| r.hat.len());
+        self.resync(net);
+    }
+
+    /// Unconditionally rebuild the reference points against the
+    /// transport's current epoch/weights (in place, allocation-free).
+    fn resync<T: Transport>(&mut self, net: &T) {
+        self.epoch = net.graph_epoch();
         for i in 0..self.d_ref.len() {
             let sw = 1.0 - net.mixing().weight(i, i);
-            self.d_ref[i] = RefPoint::new(dim, sw);
-            self.s_ref[i] = RefPoint::new(dim, sw);
+            self.d_ref[i].reset(sw);
+            self.s_ref[i].reset(sw);
         }
     }
 
@@ -130,15 +195,31 @@ impl InnerState {
         if self.initialized {
             return 0;
         }
-        let g = grad.eval_all(d);
-        self.prev_grad = g.clone();
-        self.s = g;
+        grad.eval_all(d, &mut self.g_new);
+        self.prev_grad.copy_from(&self.g_new);
+        self.s.copy_from(&self.g_new);
         self.initialized = true;
         d.len() as u64
     }
 }
 
-/// Run K steps of Algorithm 2 over all nodes with a plain serial oracle.
+/// Snapshot the graph epoch, run the borrowing exchange, and report
+/// whether the delivered messages still belong to that epoch (safe to fold
+/// with current weights).  A schedule tick during the exchange makes the
+/// in-flight messages stale: the caller must drop them and resync.
+fn exchange_same_epoch<T: Transport>(
+    net: &mut T,
+    bytes: &[usize],
+    delivered: &mut Vec<Vec<usize>>,
+) -> bool {
+    let epoch_before = net.graph_epoch();
+    net.exchange_indices(bytes, delivered);
+    net.graph_epoch() == epoch_before
+}
+
+/// Run K steps of Algorithm 2 over all nodes with a plain serial oracle
+/// returning freshly allocated gradients (convenience wrapper; the
+/// returned vectors are copied into the reusable batch).
 ///
 /// `d` is the per-node variable (y or z), updated in place.  `grad(i, d_i)`
 /// is the local first-order oracle ∇r_i.  Communication (two compressed
@@ -153,10 +234,11 @@ pub fn run_inner<T: Transport>(
     d: &mut [Vec<f32>],
     mut grad: impl FnMut(usize, &[f32]) -> Vec<f32>,
 ) -> u64 {
-    run_inner_with(cfg, net, compressor, rng, state, d, GradFn::Serial(&mut grad))
+    let mut g = |i: usize, di: &[f32], out: &mut [f32]| out.copy_from_slice(&grad(i, di));
+    run_inner_with(cfg, net, compressor, rng, state, d, GradFn::Serial(&mut g))
 }
 
-/// [`run_inner`] with an explicit (possibly parallel) oracle.
+/// [`run_inner`] with an explicit (possibly parallel) in-place oracle.
 pub fn run_inner_with<T: Transport>(
     cfg: &InnerConfig,
     net: &mut T,
@@ -174,70 +256,88 @@ pub fn run_inner_with<T: Transport>(
     let gamma = cfg.gamma as f32;
 
     for _k in 0..cfg.k_steps {
-        // A topology switch (possibly mid-IN-call: schedules tick per
-        // gossip round) invalidates the reference points; resync first.
+        // A topology switch between steps invalidates the reference
+        // points; resync first.  (Mid-exchange switches are handled at
+        // each exchange below.)
         state.sync_topology(net);
 
         // -- 1. model update: d ← d + γ((d̂)_w − sw·d̂) − η s  --------------
-        for i in 0..m {
-            state.d_ref[i].add_mix_term(gamma, &mut d[i]);
-            for (dk, sk) in d[i].iter_mut().zip(&state.s[i]) {
+        for (i, di) in d.iter_mut().enumerate() {
+            state.d_ref[i].add_mix_term(gamma, di);
+            for (dk, sk) in di.iter_mut().zip(state.s.row(i)) {
                 *dk -= eta * sk;
             }
         }
         // -- 2. transmit Q(d_new − d̂); update d̂, then fold each DELIVERED
-        //       neighbour message into (d̂)_w  ------------------------------
-        let msgs: Vec<_> = (0..m)
-            .map(|i| compressor.compress(&state.d_ref[i].residual(&d[i]), rng))
-            .collect();
-        for i in 0..m {
-            state.d_ref[i].apply_own(&msgs[i]);
+        //       same-epoch neighbour message into (d̂)_w  -------------------
+        for (i, di) in d.iter().enumerate() {
+            state.d_ref[i].residual_into(di, &mut state.resid);
+            compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
         }
-        let inbox = net.exchange(msgs);
-        for (i, arrived) in inbox.into_iter().enumerate() {
-            for (j, q) in arrived {
-                let wij = net.mixing().weight(i, j);
-                state.d_ref[i].apply_neighbor(wij, q.as_ref());
+        for i in 0..m {
+            state.d_ref[i].apply_own(&state.msgs[i]);
+        }
+        state.bytes.clear();
+        state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        if exchange_same_epoch(net, &state.bytes, &mut state.delivered) {
+            for i in 0..m {
+                for &j in &state.delivered[i] {
+                    let wij = net.mixing().weight(i, j);
+                    state.d_ref[i].apply_neighbor(wij, &state.msgs[j]);
+                }
             }
+        } else {
+            // The graph switched while these messages were in flight:
+            // folding them with new-epoch weights would corrupt the
+            // accumulators.  Drop the dead-epoch round and resync.
+            state.resync(net);
         }
 
         // -- 3. tracker update: s ← s + γ((ŝ)_w − sw·ŝ) + ∇r^{new} − ∇r^{old}
         for i in 0..m {
-            state.s_ref[i].add_mix_term(gamma, &mut state.s[i]);
+            state.s_ref[i].add_mix_term(gamma, state.s.row_mut(i));
         }
-        let g_new = grad.eval_all(d);
+        grad.eval_all(d, &mut state.g_new);
         calls += m as u64;
         for i in 0..m {
-            for ((sk, gn), go) in state.s[i]
+            for ((sk, gn), go) in state
+                .s
+                .row_mut(i)
                 .iter_mut()
-                .zip(&g_new[i])
-                .zip(&state.prev_grad[i])
+                .zip(state.g_new.row(i))
+                .zip(state.prev_grad.row(i))
             {
                 *sk += gn - go;
             }
         }
-        state.prev_grad = g_new;
+        std::mem::swap(&mut state.prev_grad, &mut state.g_new);
 
         // -- 4. transmit Q(s_new − ŝ); update ŝ and delivered (ŝ)_w  -------
-        let msgs: Vec<_> = (0..m)
-            .map(|i| compressor.compress(&state.s_ref[i].residual(&state.s[i]), rng))
-            .collect();
         for i in 0..m {
-            state.s_ref[i].apply_own(&msgs[i]);
+            state.s_ref[i].residual_into(state.s.row(i), &mut state.resid);
+            compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
         }
-        let inbox = net.exchange(msgs);
-        for (i, arrived) in inbox.into_iter().enumerate() {
-            for (j, q) in arrived {
-                let wij = net.mixing().weight(i, j);
-                state.s_ref[i].apply_neighbor(wij, q.as_ref());
+        for i in 0..m {
+            state.s_ref[i].apply_own(&state.msgs[i]);
+        }
+        state.bytes.clear();
+        state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        if exchange_same_epoch(net, &state.bytes, &mut state.delivered) {
+            for i in 0..m {
+                for &j in &state.delivered[i] {
+                    let wij = net.mixing().weight(i, j);
+                    state.s_ref[i].apply_neighbor(wij, &state.msgs[j]);
+                }
             }
+        } else {
+            state.resync(net);
         }
     }
     calls
 }
 
-/// The C²DFB(nc) ablation with a serial oracle: per step each node
-/// transmits `Q(d_i + e_i)` (error-feedback compression of the raw
+/// The C²DFB(nc) ablation with a serial allocating oracle: per step each
+/// node transmits `Q(d_i + e_i)` (error-feedback compression of the raw
 /// parameter), neighbours mix with the received compressed values.  Same
 /// message count/sizes as [`run_inner`] but errors accumulate locally
 /// instead of being implicitly shared — the paper's Fig. 3 shows this is
@@ -251,10 +351,12 @@ pub fn run_inner_naive<T: Transport>(
     d: &mut [Vec<f32>],
     mut grad: impl FnMut(usize, &[f32]) -> Vec<f32>,
 ) -> u64 {
-    run_inner_naive_with(cfg, net, compressor, rng, state, d, GradFn::Serial(&mut grad))
+    let mut g = |i: usize, di: &[f32], out: &mut [f32]| out.copy_from_slice(&grad(i, di));
+    run_inner_naive_with(cfg, net, compressor, rng, state, d, GradFn::Serial(&mut g))
 }
 
-/// [`run_inner_naive`] with an explicit (possibly parallel) oracle.
+/// [`run_inner_naive`] with an explicit (possibly parallel) in-place
+/// oracle.
 pub fn run_inner_naive_with<T: Transport>(
     cfg: &InnerConfig,
     net: &mut T,
@@ -268,80 +370,99 @@ pub fn run_inner_naive_with<T: Transport>(
     let mut calls = state.bootstrap(d, &mut grad);
     let eta = cfg.eta as f32;
     let gamma = cfg.gamma as f32;
+    // Size the naive-only dense-message block on first use (no-op and
+    // allocation-free afterwards; contents are fully overwritten below).
+    state.own.reset(m, state.g_new.dim());
 
     for _k in 0..cfg.k_steps {
-        // Compress d with error feedback.
-        let mut msgs = Vec::with_capacity(m);
-        for i in 0..m {
-            let mut carry: Vec<f32> = d[i]
-                .iter()
-                .zip(&state.err_d[i])
-                .map(|(a, e)| a + e)
-                .collect();
-            let q = compressor.compress(&carry, rng);
-            // e ← (d + e) − Q(d + e)
-            let dense = q.to_dense();
-            for (c, qv) in carry.iter_mut().zip(&dense) {
-                *c -= qv;
+        // Compress d with error feedback: carry = d + e, e ← carry − Q(carry).
+        for (i, di) in d.iter().enumerate() {
+            state.resid.clear();
+            state
+                .resid
+                .extend(di.iter().zip(state.err_d.row(i)).map(|(a, e)| a + e));
+            compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
+            state.msgs[i].decompress_into(state.own.row_mut(i));
+            for ((e, c), q) in state
+                .err_d
+                .row_mut(i)
+                .iter_mut()
+                .zip(&state.resid)
+                .zip(state.own.row(i))
+            {
+                *e = c - q;
             }
-            state.err_d[i] = carry;
-            msgs.push(q);
         }
-        let own: Vec<Vec<f32>> = msgs.iter().map(|q| q.to_dense()).collect();
-        let inbox = net.exchange(msgs);
+        state.bytes.clear();
+        state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
         // d_i ← d_i + γ Σ w_ij (Q_j − Q_i) − η s_i over DELIVERED messages
-        // (a delivered q IS the sender's message — reuse its dense form).
-        for (i, arrived) in inbox.into_iter().enumerate() {
-            for (sender, _q) in arrived {
-                let w = (gamma as f64 * net.mixing().weight(i, sender)) as f32;
-                let qd = &own[sender];
-                for k in 0..d[i].len() {
-                    d[i][k] += w * (qd[k] - own[i][k]);
+        // of the SAME graph epoch (a delivered q IS the sender's message —
+        // its dense form is already in `own`).  If the graph switched
+        // mid-exchange, the stale round is dropped, not folded with
+        // new-epoch weights.
+        let fold = exchange_same_epoch(net, &state.bytes, &mut state.delivered);
+        for (i, di) in d.iter_mut().enumerate() {
+            if fold {
+                for &sender in &state.delivered[i] {
+                    let w = (gamma as f64 * net.mixing().weight(i, sender)) as f32;
+                    let qd = state.own.row(sender);
+                    let qi = state.own.row(i);
+                    for (k, dk) in di.iter_mut().enumerate() {
+                        *dk += w * (qd[k] - qi[k]);
+                    }
                 }
             }
-            for (dk, sk) in d[i].iter_mut().zip(&state.s[i]) {
+            for (dk, sk) in di.iter_mut().zip(state.s.row(i)) {
                 *dk -= eta * sk;
             }
         }
         // Tracker: same naive scheme on s.
-        let mut smsgs = Vec::with_capacity(m);
         for i in 0..m {
-            let mut carry: Vec<f32> = state.s[i]
-                .iter()
-                .zip(&state.err_s[i])
-                .map(|(a, e)| a + e)
-                .collect();
-            let q = compressor.compress(&carry, rng);
-            let dense = q.to_dense();
-            for (c, qv) in carry.iter_mut().zip(&dense) {
-                *c -= qv;
+            state.resid.clear();
+            state
+                .resid
+                .extend(state.s.row(i).iter().zip(state.err_s.row(i)).map(|(a, e)| a + e));
+            compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
+            state.msgs[i].decompress_into(state.own.row_mut(i));
+            for ((e, c), q) in state
+                .err_s
+                .row_mut(i)
+                .iter_mut()
+                .zip(&state.resid)
+                .zip(state.own.row(i))
+            {
+                *e = c - q;
             }
-            state.err_s[i] = carry;
-            smsgs.push(q);
         }
-        let own: Vec<Vec<f32>> = smsgs.iter().map(|q| q.to_dense()).collect();
-        let inbox = net.exchange(smsgs);
-        for (i, arrived) in inbox.into_iter().enumerate() {
-            for (sender, _q) in arrived {
-                let w = (gamma as f64 * net.mixing().weight(i, sender)) as f32;
-                let qd = &own[sender];
-                for k in 0..state.s[i].len() {
-                    state.s[i][k] += w * (qd[k] - own[i][k]);
+        state.bytes.clear();
+        state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        let fold = exchange_same_epoch(net, &state.bytes, &mut state.delivered);
+        if fold {
+            for i in 0..m {
+                for &sender in &state.delivered[i] {
+                    let w = (gamma as f64 * net.mixing().weight(i, sender)) as f32;
+                    let qd = state.own.row(sender);
+                    let qi = state.own.row(i);
+                    for (k, sk) in state.s.row_mut(i).iter_mut().enumerate() {
+                        *sk += w * (qd[k] - qi[k]);
+                    }
                 }
             }
         }
-        let g_new = grad.eval_all(d);
+        grad.eval_all(d, &mut state.g_new);
         calls += m as u64;
         for i in 0..m {
-            for ((sk, gn), go) in state.s[i]
+            for ((sk, gn), go) in state
+                .s
+                .row_mut(i)
                 .iter_mut()
-                .zip(&g_new[i])
-                .zip(&state.prev_grad[i])
+                .zip(state.g_new.row(i))
+                .zip(state.prev_grad.row(i))
             {
                 *sk += gn - go;
             }
         }
-        state.prev_grad = g_new;
+        std::mem::swap(&mut state.prev_grad, &mut state.g_new);
     }
     calls
 }
@@ -352,6 +473,7 @@ mod tests {
     use crate::collective::Network;
     use crate::compress::{Identity, TopK};
     use crate::linalg;
+    use crate::sim::{NetConfig, NetMode, SimNetwork};
     use crate::topology::{Graph, Topology};
 
     /// Heterogeneous strongly-convex quadratics:
@@ -485,14 +607,14 @@ mod tests {
         // need s̄ BEFORE the step to predict the mean).
         for i in 0..m {
             let g = q.grad(i, &d[i]);
-            state.prev_grad[i] = g.clone();
-            state.s[i] = g;
+            state.prev_grad.row_mut(i).copy_from_slice(&g);
+            state.s.row_mut(i).copy_from_slice(&g);
         }
         state.initialized = true;
 
         for _step in 0..5 {
             let mean_before = linalg::mean_rows(&d);
-            let s_mean = linalg::mean_rows(&state.s);
+            let s_mean = state.s.mean_row();
             let g = |i: usize, di: &[f32]| q.grad(i, di);
             run_inner(&cfg, &mut net, &TopK::new(0.3), &mut rng, &mut state, &mut d, g);
             let mean_after = linalg::mean_rows(&d);
@@ -571,7 +693,9 @@ mod tests {
             let cfg = InnerConfig { eta: 0.12, gamma: 0.6, k_steps: 40 };
             let mut state = InnerState::new(&net, dim);
             let mut d = vec![vec![0.0f32; dim]; m];
-            let g = |i: usize, di: &[f32]| q.grad(i, di);
+            let g = |i: usize, di: &[f32], out: &mut [f32]| {
+                out.copy_from_slice(&q.grad(i, di))
+            };
             let pool = NodePool::new(threads);
             let calls = if threads == 1 {
                 let mut gs = g;
@@ -603,5 +727,92 @@ mod tests {
             assert_eq!(c, c1);
             assert_eq!(d, d1, "trajectory diverged at {threads} threads");
         }
+    }
+
+    /// The refpoint invariant `(d̂)_w = Σ_j w_ij d̂_j` against the CURRENT
+    /// mixing matrix, for both the model and tracker reference points.
+    fn assert_refpoint_invariant<T: Transport>(net: &T, state: &InnerState, tol: f64) {
+        let m = net.m();
+        for refs in [&state.d_ref, &state.s_ref] {
+            for i in 0..m {
+                for k in 0..refs[i].hat.len() {
+                    let direct: f64 = net
+                        .mixing()
+                        .neighbors(i)
+                        .iter()
+                        .map(|&(j, wij)| wij * refs[j].hat[k] as f64)
+                        .sum();
+                    assert!(
+                        (refs[i].hat_w[k] as f64 - direct).abs() < tol,
+                        "invariant broken at node {i} coord {k}: {} vs {direct}",
+                        refs[i].hat_w[k]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Regression (mid-step topology-epoch weight mismatch): a graph-
+    /// schedule tick DURING an exchange must not fold the old-graph
+    /// messages with new-epoch weights.  The schedule below switches the
+    /// graph at gossip round 1 — i.e. during the SECOND (tracker) exchange
+    /// of the first inner step, mid-step.  After the step the reference
+    /// points must satisfy the accumulator invariant under the NEW mixing
+    /// matrix; pre-fix, the stale fold left `(ŝ)_w` inconsistent until the
+    /// next step's resync, and anything computed from it in between was
+    /// silently wrong.
+    #[test]
+    fn mid_step_topology_tick_keeps_refpoints_consistent() {
+        let m = 6;
+        let dim = 5;
+        let q = Quad::build(m, dim, 19);
+        let cfg_net = NetConfig {
+            mode: NetMode::Event,
+            topology_schedule: vec![(1, Topology::Complete)],
+            ..NetConfig::default()
+        };
+        let build = || SimNetwork::new(Graph::build(Topology::Ring, m), cfg_net.clone(), 5);
+
+        // One step: the tick lands between this step's two exchanges.
+        let mut net = build();
+        let mut rng = Rng::new(3);
+        let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 1 };
+        let mut state = InnerState::new(&net, dim);
+        let mut d: Vec<Vec<f32>> = (0..m)
+            .map(|i| (0..dim).map(|k| (i + k) as f32 * 0.3).collect())
+            .collect();
+        let g = |i: usize, di: &[f32]| q.grad(i, di);
+        run_inner(&cfg, &mut net, &TopK::new(0.5), &mut rng, &mut state, &mut d, g);
+        assert_eq!(net.graph_epoch(), 1, "schedule must have ticked mid-step");
+        assert_refpoint_invariant(&net, &state, 1e-5);
+
+        // Several more steps across the tick: still consistent and finite.
+        let mut net = build();
+        let mut rng = Rng::new(3);
+        let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 6 };
+        let mut state = InnerState::new(&net, dim);
+        let mut d: Vec<Vec<f32>> = (0..m)
+            .map(|i| (0..dim).map(|k| (i + k) as f32 * 0.3).collect())
+            .collect();
+        run_inner(&cfg, &mut net, &TopK::new(0.5), &mut rng, &mut state, &mut d, g);
+        assert_refpoint_invariant(&net, &state, 1e-4);
+        assert!(d.iter().flatten().all(|x| x.is_finite()));
+
+        // The naive variant takes the same guarded path: deterministic
+        // and finite across mid-step ticks.
+        let run_naive = || {
+            let mut net = build();
+            let mut rng = Rng::new(3);
+            let mut state = InnerState::new(&net, dim);
+            let mut d: Vec<Vec<f32>> = (0..m)
+                .map(|i| (0..dim).map(|k| (i + k) as f32 * 0.3).collect())
+                .collect();
+            run_inner_naive(&cfg, &mut net, &TopK::new(0.5), &mut rng, &mut state, &mut d, g);
+            d
+        };
+        let d1 = run_naive();
+        let d2 = run_naive();
+        assert_eq!(d1, d2);
+        assert!(d1.iter().flatten().all(|x| x.is_finite()));
     }
 }

@@ -46,8 +46,25 @@ impl RefPoint {
 
     /// Residual to transmit this step: `d_new − d̂_i` (dense, pre-compression).
     pub fn residual(&self, d_new: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.residual_into(d_new, &mut out);
+        out
+    }
+
+    /// [`RefPoint::residual`] into a reusable buffer (the hot path;
+    /// allocation-free once `out` has capacity).  `out` is overwritten.
+    pub fn residual_into(&self, d_new: &[f32], out: &mut Vec<f32>) {
         debug_assert_eq!(d_new.len(), self.hat.len());
-        d_new.iter().zip(&self.hat).map(|(d, h)| d - h).collect()
+        out.clear();
+        out.extend(d_new.iter().zip(&self.hat).map(|(d, h)| d - h));
+    }
+
+    /// Reset to zero reference points against a new neighbour weight sum
+    /// (topology-epoch resync) without reallocating.
+    pub fn reset(&mut self, neighbor_weight_sum: f64) {
+        self.hat.fill(0.0);
+        self.hat_w.fill(0.0);
+        self.neighbor_weight_sum = neighbor_weight_sum as f32;
     }
 
     /// Fold the node's *own* transmitted message into its reference point:

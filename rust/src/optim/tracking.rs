@@ -4,44 +4,58 @@
 //! Update: `s_i ← s_i + γ Σ_j w_ij (s_j − s_i) + u_i^{new} − u_i^{old}`.
 //! Invariant (Proposition 4): the node average of the trackers always
 //! equals the node average of the latest gradients.
+//!
+//! The tracker state lives in contiguous [`NodeBlock`] matrices and the
+//! gossip mix runs in place through
+//! [`Transport::mix_paid_into`](crate::collective::Transport::mix_paid_into)
+//! with tracker-owned scratch, so a steady-state update allocates nothing
+//! (the incoming gradient batch is the caller's).
 
-use crate::collective::Transport;
-use crate::linalg;
+use crate::collective::{MixScratch, Transport};
+use crate::linalg::NodeBlock;
 
 pub struct DenseTracker {
-    /// Per-node tracker s_i.
-    pub s: Vec<Vec<f32>>,
+    /// Per-node tracker s_i (contiguous m×d; index or `.row(i)` for views).
+    pub s: NodeBlock,
     /// Last gradient u_i folded in.
-    prev_u: Vec<Vec<f32>>,
+    prev_u: NodeBlock,
+    /// Reused mixing buffers.
+    mix: MixScratch,
 }
 
 impl DenseTracker {
     /// Initialize with the first gradients: s_i⁰ = u_i⁰.
     pub fn new(u0: Vec<Vec<f32>>) -> DenseTracker {
-        DenseTracker { s: u0.clone(), prev_u: u0 }
+        let s = NodeBlock::from_rows(&u0);
+        DenseTracker { prev_u: s.clone(), s, mix: MixScratch::new() }
     }
 
-    /// One tracking round: gossip-mix the trackers (PAID communication via
-    /// `net`), then fold in the new gradients.
+    /// One tracking round: gossip-mix the trackers in place (PAID
+    /// communication via `net`), then fold in the new gradients.
     pub fn update<T: Transport>(&mut self, net: &mut T, gamma: f64, u_new: &[Vec<f32>]) {
-        let mixed = net.mix_paid(gamma, &self.s);
-        self.s = mixed;
-        for i in 0..self.s.len() {
-            for k in 0..self.s[i].len() {
-                self.s[i][k] += u_new[i][k] - self.prev_u[i][k];
+        net.mix_paid_into(gamma, &mut self.s, &mut self.mix);
+        for i in 0..self.s.nrows() {
+            for ((sk, un), uo) in self
+                .s
+                .row_mut(i)
+                .iter_mut()
+                .zip(&u_new[i])
+                .zip(self.prev_u.row(i))
+            {
+                *sk += un - uo;
             }
         }
-        self.prev_u = u_new.to_vec();
+        self.prev_u.copy_from_rows(u_new);
     }
 
     /// Tracker consensus error ‖s − 1·s̄‖² (outer Lyapunov Ω₂).
     pub fn consensus_err_sq(&self) -> f64 {
-        linalg::consensus_err_sq(&self.s)
+        self.s.consensus_err_sq()
     }
 
     /// Mean tracker (≡ mean of latest gradients by the invariant).
     pub fn mean(&self) -> Vec<f32> {
-        linalg::mean_rows(&self.s)
+        self.s.mean_row()
     }
 }
 
@@ -49,6 +63,7 @@ impl DenseTracker {
 mod tests {
     use super::*;
     use crate::collective::Network;
+    use crate::linalg;
     use crate::topology::{Graph, Topology};
     use crate::util::rng::Rng;
 
@@ -87,7 +102,7 @@ mod tests {
             t.update(&mut net, 0.8, &u);
         }
         let mean = linalg::mean_rows(&u);
-        for s in &t.s {
+        for s in t.s.rows() {
             for (a, b) in s.iter().zip(&mean) {
                 assert!((a - b).abs() < 1e-3, "{a} vs {b}");
             }
@@ -104,5 +119,32 @@ mod tests {
         t.update(&mut net, 0.5, &u);
         assert!(net.ledger.total_bytes > 0);
         assert_eq!(net.ledger.gossip_rounds, 1);
+    }
+
+    /// The in-place update is bit-identical to the allocating reference
+    /// formulation (mix_paid + rebuild), per update and cumulatively.
+    #[test]
+    fn inplace_update_matches_allocating_reference() {
+        let mut rng = Rng::new(4);
+        let mut net = Network::new(Graph::build(Topology::Ring, 5));
+        let mut net_ref = Network::new(Graph::build(Topology::Ring, 5));
+        let u0 = rand_rows(&mut rng, 5, 7);
+        let mut t = DenseTracker::new(u0.clone());
+        let mut s_ref = u0.clone();
+        let mut prev_ref = u0;
+        for _ in 0..6 {
+            let u = rand_rows(&mut rng, 5, 7);
+            t.update(&mut net, 0.7, &u);
+            let mixed = net_ref.mix_paid(0.7, &s_ref);
+            s_ref = mixed;
+            for i in 0..5 {
+                for k in 0..7 {
+                    s_ref[i][k] += u[i][k] - prev_ref[i][k];
+                }
+            }
+            prev_ref = u.clone();
+            assert_eq!(t.s.to_vecs(), s_ref, "tracker diverged from reference");
+        }
+        assert_eq!(net.ledger.total_bytes, net_ref.ledger.total_bytes);
     }
 }

@@ -25,12 +25,19 @@
 
 use super::event::EventQueue;
 use super::{NetConfig, NetMode};
-use crate::collective::{dense_wire_bytes, Inbox, Transport};
+use crate::collective::{clear_delivered, dense_wire_bytes, Inbox, Transport};
 use crate::compress::Compressed;
 use crate::metrics::CommLedger;
 use crate::topology::{Graph, MixingMatrix, Topology};
 use crate::util::rng::Rng;
 use std::sync::Arc;
+
+/// One scheduled message copy in flight (event-queue payload).
+struct Flight {
+    sender: usize,
+    receiver: usize,
+    dropped: bool,
+}
 
 /// One simulated message delivery (or loss), for tests and tracing.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -66,6 +73,11 @@ pub struct SimNetwork {
     epoch: u64,
     /// Arrival log of the most recent exchange, in event order.
     pub last_events: Vec<Arrival>,
+    /// Reused event queue (its heap storage persists across rounds).
+    queue: EventQueue<Flight>,
+    /// Reused per-node scratch: send-completion times during an exchange,
+    /// swapped into `clock` afterwards.
+    done: Vec<f64>,
 }
 
 impl SimNetwork {
@@ -103,6 +115,8 @@ impl SimNetwork {
             sched_next: 0,
             epoch: 0,
             last_events: Vec::new(),
+            queue: EventQueue::new(),
+            done: Vec::new(),
             cfg: NetConfig { topology_schedule: schedule, ..cfg },
             graph,
         };
@@ -143,11 +157,15 @@ impl SimNetwork {
         }
     }
 
-    /// The shared engine behind both exchange flavours: pay the bytes,
-    /// schedule every copy, drain arrivals in time order, advance clocks.
-    fn simulate<T>(&mut self, payloads: Vec<T>, bytes: &[usize]) -> Inbox<T> {
+    /// The shared engine behind every exchange flavour: pay the bytes,
+    /// schedule every copy, drain arrivals in virtual-time order, advance
+    /// clocks, and fill `delivered[i]` with the ascending senders whose
+    /// copies reached node i.  Payloads never enter the engine, and all
+    /// working storage (event queue, clock scratch, sender lists) is
+    /// reused — steady state allocates nothing.
+    fn simulate_core(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
         let m = self.m();
-        assert_eq!(payloads.len(), m);
+        assert_eq!(bytes.len(), m);
         self.advance_schedule();
 
         // -- ledger: bytes leave the NIC whether or not they arrive -------
@@ -158,13 +176,9 @@ impl SimNetwork {
         self.ledger.gossip_rounds += 1;
 
         // -- schedule all copies; draw jitter/drops deterministically -----
-        struct Flight {
-            sender: usize,
-            receiver: usize,
-            dropped: bool,
-        }
-        let mut queue = EventQueue::new();
-        let mut done = vec![0.0f64; m]; // own-send completion per node
+        debug_assert!(self.queue.is_empty());
+        self.done.clear();
+        self.done.resize(m, 0.0); // own-send completion per node
         for i in 0..m {
             let start = self.clock[i] + self.straggle[i];
             let tx = bytes[i] as f64 / self.cfg.bandwidth_bytes_per_s;
@@ -178,20 +192,19 @@ impl SimNetwork {
                 };
                 let dropped =
                     self.cfg.drop_rate > 0.0 && self.streams[i].bernoulli(self.cfg.drop_rate);
-                queue.push(
+                self.queue.push(
                     depart + self.cfg.latency_s + jitter,
                     Flight { sender: i, receiver: nb, dropped },
                 );
             }
-            done[i] = depart;
+            self.done[i] = depart;
         }
 
-        // -- drain arrivals in virtual-time order -------------------------
-        let payloads: Vec<Arc<T>> = payloads.into_iter().map(Arc::new).collect();
-        let mut inbox: Inbox<T> = vec![Vec::new(); m];
-        let mut ready = done;
+        // -- drain arrivals in virtual-time order; `done` becomes each
+        //    node's ready time (max of send completion and arrivals) ------
+        clear_delivered(delivered, m);
         self.last_events.clear();
-        while let Some((t, c)) = queue.pop() {
+        while let Some((t, c)) = self.queue.pop() {
             self.last_events.push(Arrival {
                 t_s: t,
                 sender: c.sender,
@@ -203,24 +216,36 @@ impl SimNetwork {
                 self.ledger.dropped_messages += 1;
                 continue;
             }
-            inbox[c.receiver].push((c.sender, payloads[c.sender].clone()));
-            if t > ready[c.receiver] {
-                ready[c.receiver] = t;
+            delivered[c.receiver].push(c.sender);
+            if t > self.done[c.receiver] {
+                self.done[c.receiver] = t;
             }
         }
 
         // -- local barrier: each node proceeds once ITS inbox is complete -
-        self.clock = ready;
+        std::mem::swap(&mut self.clock, &mut self.done);
         let horizon = self.clock.iter().fold(0.0f64, |a, &b| a.max(b));
         self.ledger.network_time_s = horizon;
         self.round += 1;
 
-        // Canonical inbox order (ascending sender) so downstream float
-        // reductions match the synchronous transport bit-for-bit.
-        for ib in inbox.iter_mut() {
-            ib.sort_by_key(|(s, _)| *s);
+        // Canonical order (ascending sender) so downstream float
+        // reductions match the synchronous transport bit-for-bit.  At most
+        // one copy per edge per round, so senders are unique.
+        for ib in delivered.iter_mut() {
+            ib.sort_unstable();
         }
-        inbox
+    }
+
+    /// Arc-sharing wrapper over [`SimNetwork::simulate_core`] for the
+    /// owning exchange flavours.
+    fn simulate<T>(&mut self, payloads: Vec<T>, bytes: &[usize]) -> Inbox<T> {
+        let mut delivered: Vec<Vec<usize>> = Vec::new();
+        self.simulate_core(bytes, &mut delivered);
+        let payloads: Vec<Arc<T>> = payloads.into_iter().map(Arc::new).collect();
+        delivered
+            .iter()
+            .map(|ib| ib.iter().map(|&s| (s, payloads[s].clone())).collect())
+            .collect()
     }
 
     /// Topology in force right now (changes under a schedule).
@@ -258,6 +283,10 @@ impl Transport for SimNetwork {
     fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
         let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes(v.len())).collect();
         self.simulate(vecs.to_vec(), &bytes)
+    }
+
+    fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
+        self.simulate_core(bytes, delivered);
     }
 }
 
@@ -365,6 +394,37 @@ mod tests {
         assert!(times.windows(2).all(|w| w[0] <= w[1]));
         let last = sim.last_events.last().unwrap();
         assert_eq!(last.sender, s);
+    }
+
+    /// The borrowing exchange consumes the same jitter/drop draws, pays
+    /// the same ledger and reports the same sender sets as the Arc-based
+    /// exchange — including under heavy loss.
+    #[test]
+    fn exchange_indices_matches_exchange_under_drops() {
+        let mut cfg = event_cfg();
+        cfg.drop_rate = 0.4;
+        cfg.jitter_s = 2e-4;
+        let rows: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32; 8]).collect();
+        let bytes: Vec<usize> =
+            rows.iter().map(|v| dense_wire_bytes(v.len())).collect();
+        let mut a = SimNetwork::new(ring(6), cfg.clone(), 17);
+        let mut b = SimNetwork::new(ring(6), cfg, 17);
+        let mut delivered = Vec::new();
+        for _round in 0..20 {
+            let inbox = Transport::exchange_dense(&mut a, &rows);
+            b.exchange_indices(&bytes, &mut delivered);
+            for i in 0..6 {
+                let senders: Vec<usize> = inbox[i].iter().map(|(s, _)| *s).collect();
+                assert_eq!(delivered[i], senders);
+            }
+            assert_eq!(a.last_events.len(), b.last_events.len());
+            for (ea, eb) in a.last_events.iter().zip(&b.last_events) {
+                assert_eq!(ea, eb);
+            }
+        }
+        assert_eq!(a.ledger.total_bytes, b.ledger.total_bytes);
+        assert_eq!(a.ledger.dropped_messages, b.ledger.dropped_messages);
+        assert_eq!(a.clocks(), b.clocks());
     }
 
     #[test]

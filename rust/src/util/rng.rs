@@ -8,11 +8,21 @@
 //! deterministically.
 
 /// xoshiro256++ by Blackman & Vigna (public domain reference algorithm).
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Rng {
     s: [u64; 4],
     /// Cached second normal deviate from Box–Muller.
     spare_normal: Option<f64>,
+    /// Reusable membership bitmap for [`Rng::sample_indices_into`].  Pure
+    /// scratch — not part of the generator state, never affects draws.
+    mask: Vec<u64>,
+}
+
+impl Clone for Rng {
+    fn clone(&self) -> Rng {
+        // Clone the generator state only; the scratch is per-instance.
+        Rng { s: self.s, spare_normal: self.spare_normal, mask: Vec::new() }
+    }
 }
 
 fn splitmix64(state: &mut u64) -> u64 {
@@ -33,7 +43,7 @@ impl Rng {
             splitmix64(&mut sm),
             splitmix64(&mut sm),
         ];
-        Rng { s, spare_normal: None }
+        Rng { s, spare_normal: None, mask: Vec::new() }
     }
 
     /// Derive an independent stream (for per-node generators).
@@ -174,27 +184,43 @@ impl Rng {
         }
     }
 
-    /// Sample `k` distinct indices from `[0, n)` (Floyd's algorithm for
-    /// small k, shuffle for large k).
+    /// Sample `k` distinct indices from `[0, n)`, sorted ascending
+    /// (Floyd's algorithm for small k, shuffle for large k).
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
-        assert!(k <= n);
-        if k * 4 > n {
-            let mut all: Vec<usize> = (0..n).collect();
-            self.shuffle(&mut all);
-            all.truncate(k);
-            all.sort_unstable();
-            return all;
-        }
-        let mut chosen = std::collections::HashSet::with_capacity(k);
         let mut out = Vec::with_capacity(k);
+        self.sample_indices_into(n, k, &mut out);
+        out
+    }
+
+    /// [`sample_indices`](Rng::sample_indices) into a reusable buffer:
+    /// identical draw sequence and output, but allocation-free once `out`
+    /// (and the internal bitmap) have capacity — the rand-k hot path.
+    /// `out` is overwritten.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        assert!(k <= n);
+        out.clear();
+        if k * 4 > n {
+            out.extend(0..n);
+            self.shuffle(out);
+            out.truncate(k);
+            out.sort_unstable();
+            return;
+        }
+        // Floyd's algorithm with a reusable bitmap as the membership set:
+        // same accept/replace decisions (and so the same draws and output)
+        // as the hash-set formulation, O(1) queries, no per-call heap
+        // churn.  Taken out of `self` so `below` can borrow the generator.
+        let mut mask = std::mem::take(&mut self.mask);
+        mask.clear();
+        mask.resize((n + 63) / 64, 0);
         for j in (n - k)..n {
             let t = self.below(j + 1);
-            let v = if chosen.contains(&t) { j } else { t };
-            chosen.insert(v);
+            let v = if (mask[t / 64] >> (t % 64)) & 1 == 1 { j } else { t };
+            mask[v / 64] |= 1 << (v % 64);
             out.push(v);
         }
+        self.mask = mask;
         out.sort_unstable();
-        out
     }
 }
 
@@ -320,6 +346,20 @@ mod tests {
             assert_eq!(idx.len(), k);
             assert!(idx.windows(2).all(|w| w[0] < w[1]));
             assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn sample_indices_into_matches_allocating_version() {
+        let mut dirty = vec![7usize; 300];
+        for (n, k) in [(100, 5), (100, 80), (10, 10), (1, 1), (70_000, 7)] {
+            let mut a = Rng::new(29);
+            let mut b = Rng::new(29);
+            let fresh = a.sample_indices(n, k);
+            b.sample_indices_into(n, k, &mut dirty);
+            assert_eq!(fresh, dirty);
+            // Both generators advanced identically.
+            assert_eq!(a.next_u64(), b.next_u64());
         }
     }
 

@@ -1,0 +1,342 @@
+//! Hot-path refactor equivalence: the zero-allocation inner loop must be
+//! **bit-identical** to the original allocating formulation.
+//!
+//! `reference_inner` / `reference_inner_naive` below transcribe the
+//! pre-refactor protocol verbatim (fresh `Vec`s per residual/message/
+//! gradient batch, the Arc-based `exchange`, weights read after the
+//! exchange — safe here: static graphs only).  Any numerical or
+//! accounting drift introduced by buffer reuse, `compress_into`, the
+//! borrowing exchange or the `NodeBlock` layout shows up as a bitwise
+//! mismatch.  Together with the golden fixtures (which pin the same
+//! trajectories across releases), this is the proof the rewrite changed
+//! performance, not semantics.
+
+use c2dfb::collective::{Network, Transport};
+use c2dfb::compress::{parse, Compressor};
+use c2dfb::optim::{run_inner, run_inner_naive, InnerConfig, InnerState, RefPoint};
+use c2dfb::topology::{Graph, Topology};
+use c2dfb::util::rng::Rng;
+
+struct Quad {
+    a: Vec<f32>,
+    c: Vec<Vec<f32>>,
+}
+
+impl Quad {
+    fn build(m: usize, dim: usize, seed: u64) -> Quad {
+        let mut rng = Rng::new(seed);
+        Quad {
+            a: (0..m).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
+            c: (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; dim];
+                    rng.fill_normal(&mut v, 0.0, 1.0);
+                    v
+                })
+                .collect(),
+        }
+    }
+
+    fn grad(&self, i: usize, z: &[f32]) -> Vec<f32> {
+        z.iter()
+            .zip(&self.c[i])
+            .map(|(x, c)| self.a[i] * (x - c))
+            .collect()
+    }
+}
+
+/// Pre-refactor per-node inner state (plain vectors).
+struct RefState {
+    d_ref: Vec<RefPoint>,
+    s: Vec<Vec<f32>>,
+    s_ref: Vec<RefPoint>,
+    prev_grad: Vec<Vec<f32>>,
+    err_d: Vec<Vec<f32>>,
+    err_s: Vec<Vec<f32>>,
+}
+
+impl RefState {
+    fn new(net: &Network, dim: usize) -> RefState {
+        let m = net.m();
+        let mk = || {
+            (0..m)
+                .map(|i| RefPoint::new(dim, 1.0 - Transport::mixing(net).weight(i, i)))
+                .collect::<Vec<_>>()
+        };
+        RefState {
+            d_ref: mk(),
+            s: vec![vec![0.0; dim]; m],
+            s_ref: mk(),
+            prev_grad: vec![vec![0.0; dim]; m],
+            err_d: vec![vec![0.0; dim]; m],
+            err_s: vec![vec![0.0; dim]; m],
+        }
+    }
+
+    fn bootstrap(&mut self, q: &Quad, d: &[Vec<f32>]) {
+        let g: Vec<Vec<f32>> = d.iter().enumerate().map(|(i, di)| q.grad(i, di)).collect();
+        self.prev_grad = g.clone();
+        self.s = g;
+    }
+}
+
+/// The original (allocating) reference-point protocol, verbatim.
+fn reference_inner(
+    cfg: &InnerConfig,
+    net: &mut Network,
+    compressor: &dyn Compressor,
+    rng: &mut Rng,
+    state: &mut RefState,
+    d: &mut [Vec<f32>],
+    q: &Quad,
+) {
+    let m = net.m();
+    let eta = cfg.eta as f32;
+    let gamma = cfg.gamma as f32;
+    for _k in 0..cfg.k_steps {
+        for i in 0..m {
+            state.d_ref[i].add_mix_term(gamma, &mut d[i]);
+            for (dk, sk) in d[i].iter_mut().zip(&state.s[i]) {
+                *dk -= eta * sk;
+            }
+        }
+        let msgs: Vec<_> = (0..m)
+            .map(|i| compressor.compress(&state.d_ref[i].residual(&d[i]), rng))
+            .collect();
+        for i in 0..m {
+            state.d_ref[i].apply_own(&msgs[i]);
+        }
+        let inbox = net.exchange(msgs);
+        for (i, arrived) in inbox.into_iter().enumerate() {
+            for (j, qmsg) in arrived {
+                let wij = Transport::mixing(net).weight(i, j);
+                state.d_ref[i].apply_neighbor(wij, qmsg.as_ref());
+            }
+        }
+        for i in 0..m {
+            state.s_ref[i].add_mix_term(gamma, &mut state.s[i]);
+        }
+        let g_new: Vec<Vec<f32>> = d.iter().enumerate().map(|(i, di)| q.grad(i, di)).collect();
+        for i in 0..m {
+            for ((sk, gn), go) in state.s[i]
+                .iter_mut()
+                .zip(&g_new[i])
+                .zip(&state.prev_grad[i])
+            {
+                *sk += gn - go;
+            }
+        }
+        state.prev_grad = g_new;
+        let msgs: Vec<_> = (0..m)
+            .map(|i| compressor.compress(&state.s_ref[i].residual(&state.s[i]), rng))
+            .collect();
+        for i in 0..m {
+            state.s_ref[i].apply_own(&msgs[i]);
+        }
+        let inbox = net.exchange(msgs);
+        for (i, arrived) in inbox.into_iter().enumerate() {
+            for (j, qmsg) in arrived {
+                let wij = Transport::mixing(net).weight(i, j);
+                state.s_ref[i].apply_neighbor(wij, qmsg.as_ref());
+            }
+        }
+    }
+}
+
+/// The original (allocating) naive error-feedback protocol, verbatim.
+fn reference_inner_naive(
+    cfg: &InnerConfig,
+    net: &mut Network,
+    compressor: &dyn Compressor,
+    rng: &mut Rng,
+    state: &mut RefState,
+    d: &mut [Vec<f32>],
+    q: &Quad,
+) {
+    let m = net.m();
+    let eta = cfg.eta as f32;
+    let gamma = cfg.gamma as f32;
+    for _k in 0..cfg.k_steps {
+        let mut msgs = Vec::with_capacity(m);
+        for i in 0..m {
+            let mut carry: Vec<f32> = d[i]
+                .iter()
+                .zip(&state.err_d[i])
+                .map(|(a, e)| a + e)
+                .collect();
+            let qm = compressor.compress(&carry, rng);
+            let dense = qm.to_dense();
+            for (c, qv) in carry.iter_mut().zip(&dense) {
+                *c -= qv;
+            }
+            state.err_d[i] = carry;
+            msgs.push(qm);
+        }
+        let own: Vec<Vec<f32>> = msgs.iter().map(|qm| qm.to_dense()).collect();
+        let inbox = net.exchange(msgs);
+        for (i, arrived) in inbox.into_iter().enumerate() {
+            for (sender, _qm) in arrived {
+                let w = (gamma as f64 * Transport::mixing(net).weight(i, sender)) as f32;
+                let qd = &own[sender];
+                for k in 0..d[i].len() {
+                    d[i][k] += w * (qd[k] - own[i][k]);
+                }
+            }
+            for (dk, sk) in d[i].iter_mut().zip(&state.s[i]) {
+                *dk -= eta * sk;
+            }
+        }
+        let mut smsgs = Vec::with_capacity(m);
+        for i in 0..m {
+            let mut carry: Vec<f32> = state.s[i]
+                .iter()
+                .zip(&state.err_s[i])
+                .map(|(a, e)| a + e)
+                .collect();
+            let qm = compressor.compress(&carry, rng);
+            let dense = qm.to_dense();
+            for (c, qv) in carry.iter_mut().zip(&dense) {
+                *c -= qv;
+            }
+            state.err_s[i] = carry;
+            smsgs.push(qm);
+        }
+        let own: Vec<Vec<f32>> = smsgs.iter().map(|qm| qm.to_dense()).collect();
+        let inbox = net.exchange(smsgs);
+        for (i, arrived) in inbox.into_iter().enumerate() {
+            for (sender, _qm) in arrived {
+                let w = (gamma as f64 * Transport::mixing(net).weight(i, sender)) as f32;
+                let qd = &own[sender];
+                for k in 0..state.s[i].len() {
+                    state.s[i][k] += w * (qd[k] - own[i][k]);
+                }
+            }
+        }
+        let g_new: Vec<Vec<f32>> = d.iter().enumerate().map(|(i, di)| q.grad(i, di)).collect();
+        for i in 0..m {
+            for ((sk, gn), go) in state.s[i]
+                .iter_mut()
+                .zip(&g_new[i])
+                .zip(&state.prev_grad[i])
+            {
+                *sk += gn - go;
+            }
+        }
+        state.prev_grad = g_new;
+    }
+}
+
+fn init_d(m: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..m)
+        .map(|i| (0..dim).map(|k| (i * 3 + k) as f32 * 0.05).collect())
+        .collect()
+}
+
+fn bits(rows: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    rows.iter()
+        .map(|r| r.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn rewritten_inner_loop_is_bit_identical_to_reference() {
+    let m = 6;
+    let dim = 37; // odd, exercises tie/threshold paths
+    let q = Quad::build(m, dim, 11);
+    for (spec, topo) in [
+        ("topk:0.2", Topology::Ring),
+        ("topk:0.5", Topology::TwoHopRing),
+        ("randk:0.3", Topology::Ring),
+        ("qsgd:16", Topology::Ring),
+        ("none", Topology::Exponential),
+    ] {
+        let comp = parse(spec).unwrap();
+        let cfg = InnerConfig { eta: 0.12, gamma: 0.55, k_steps: 25 };
+
+        let mut net_new = Network::new(Graph::build(topo, m));
+        let mut rng_new = Rng::new(77);
+        let mut st_new = InnerState::new(&net_new, dim);
+        let mut d_new = init_d(m, dim);
+        run_inner(&cfg, &mut net_new, comp.as_ref(), &mut rng_new, &mut st_new, &mut d_new, |i, z| {
+            q.grad(i, z)
+        });
+
+        let mut net_ref = Network::new(Graph::build(topo, m));
+        let mut rng_ref = Rng::new(77);
+        let mut st_ref = RefState::new(&net_ref, dim);
+        st_ref.bootstrap(&q, &init_d(m, dim));
+        let mut d_ref = init_d(m, dim);
+        reference_inner(
+            &cfg,
+            &mut net_ref,
+            comp.as_ref(),
+            &mut rng_ref,
+            &mut st_ref,
+            &mut d_ref,
+            &q,
+        );
+
+        assert_eq!(bits(&d_new), bits(&d_ref), "{spec}: iterates diverged");
+        assert_eq!(bits(&st_new.s.to_vecs()), bits(&st_ref.s), "{spec}: trackers diverged");
+        for i in 0..m {
+            assert_eq!(
+                st_new.d_ref[i].hat.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                st_ref.d_ref[i].hat.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{spec}: d̂ diverged at node {i}"
+            );
+        }
+        assert_eq!(
+            net_new.ledger.total_bytes, net_ref.ledger.total_bytes,
+            "{spec}: byte accounting diverged"
+        );
+        assert_eq!(net_new.ledger.messages, net_ref.ledger.messages);
+        assert_eq!(net_new.ledger.gossip_rounds, net_ref.ledger.gossip_rounds);
+        // Both RNGs consumed exactly the same draw sequence.
+        assert_eq!(rng_new.next_u64(), rng_ref.next_u64(), "{spec}: rng drift");
+    }
+}
+
+#[test]
+fn rewritten_naive_loop_is_bit_identical_to_reference() {
+    let m = 5;
+    let dim = 23;
+    let q = Quad::build(m, dim, 13);
+    for spec in ["topk:0.3", "qsgd:8", "none"] {
+        let comp = parse(spec).unwrap();
+        let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 20 };
+
+        let mut net_new = Network::new(Graph::build(Topology::Ring, m));
+        let mut rng_new = Rng::new(5);
+        let mut st_new = InnerState::new(&net_new, dim);
+        let mut d_new = init_d(m, dim);
+        run_inner_naive(
+            &cfg,
+            &mut net_new,
+            comp.as_ref(),
+            &mut rng_new,
+            &mut st_new,
+            &mut d_new,
+            |i, z| q.grad(i, z),
+        );
+
+        let mut net_ref = Network::new(Graph::build(Topology::Ring, m));
+        let mut rng_ref = Rng::new(5);
+        let mut st_ref = RefState::new(&net_ref, dim);
+        st_ref.bootstrap(&q, &init_d(m, dim));
+        let mut d_ref = init_d(m, dim);
+        reference_inner_naive(
+            &cfg,
+            &mut net_ref,
+            comp.as_ref(),
+            &mut rng_ref,
+            &mut st_ref,
+            &mut d_ref,
+            &q,
+        );
+
+        assert_eq!(bits(&d_new), bits(&d_ref), "{spec}: iterates diverged");
+        assert_eq!(bits(&st_new.s.to_vecs()), bits(&st_ref.s), "{spec}: trackers diverged");
+        assert_eq!(net_new.ledger.total_bytes, net_ref.ledger.total_bytes);
+        assert_eq!(rng_new.next_u64(), rng_ref.next_u64(), "{spec}: rng drift");
+    }
+}

@@ -148,6 +148,38 @@ fn prop_message_densify_paths_agree() {
     });
 }
 
+/// Hot-path buffer reuse: `compress_into` into an arbitrarily dirty
+/// reused slot (previously holding a different vector compressed by a
+/// different compressor) produces exactly the message a fresh `compress`
+/// produces — same payload, same wire bytes, same RNG consumption — for
+/// every compressor.
+#[test]
+fn prop_compress_into_dirty_buffer_equals_fresh_compress() {
+    check("compress-into-reuse", 60, |g| {
+        let q = random_compressor(g);
+        let d = g.usize_in(1, 400);
+        let v = g.vec_normal(d, 1.0);
+        // Fresh encode with a cloned RNG stream.
+        let mut rng_fresh = Rng::new(g.rng.next_u64());
+        let mut rng_reuse = rng_fresh.clone();
+        let fresh = q.compress(&v, &mut rng_fresh);
+        // Dirty the slot: different vector, different compressor family.
+        let other = g.vec_normal(g.usize_in(1, 300), 2.0);
+        let dirt = random_compressor(g);
+        let mut slot = dirt.compress(&other, &mut g.rng);
+        q.compress_into(&v, &mut slot, &mut rng_reuse);
+        ensure(slot == fresh, format!("{}: reused slot differs from fresh", q.name()))?;
+        ensure(
+            slot.wire_bytes() == fresh.wire_bytes(),
+            format!("{}: wire bytes differ", q.name()),
+        )?;
+        ensure(
+            rng_fresh.next_u64() == rng_reuse.next_u64(),
+            format!("{}: rng consumption differs", q.name()),
+        )
+    });
+}
+
 /// Re-encoding an already-compressed message is the identity for the
 /// deterministic sparsifier: top-k(decode(top-k(v))) == top-k(v), so the
 /// wire format is a fixed point of the compressor (no error accumulates
