@@ -1,0 +1,79 @@
+//! Wall-clock scaling of the sweep orchestrator: one grid executed at
+//! pool widths 1, 2 and max, with the per-cell results asserted
+//! bit-identical across widths on every measurement (the determinism
+//! contract is free to check here, so the bench doubles as a stress
+//! test).  Writes the measurements to `BENCH_sweep.json` at the repo
+//! root (or `$C2DFB_BENCH_OUT`).
+//!
+//! ```bash
+//! cargo bench --bench sweep_scaling
+//! ```
+
+use c2dfb::coordinator::sweep::{self, SweepSpec};
+use c2dfb::util::bench::{black_box, Bencher};
+use c2dfb::util::json::Json;
+
+/// A grid heavy enough that cell compute dominates pool overhead: the
+/// tiny axes (16 cells) but with real round counts and full-size tasks.
+fn spec(jobs: usize) -> SweepSpec {
+    let mut s = SweepSpec::tiny();
+    s.tiny = false; // full-size task instances
+    s.base.nodes = 8;
+    s.base.rounds = 10;
+    s.base.eval_every = 5;
+    s.jobs = jobs;
+    s
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    // Reference outcomes for the bit-identity assertion.
+    let (ref_grid, ref_outcomes) = sweep::run(&spec(1), false).expect("reference sweep");
+    let n_cells = ref_grid.cells.len();
+    let ref_csv = sweep::report_csv(&ref_grid.cells, &ref_outcomes);
+
+    let mut entries: Vec<(String, Json)> = vec![
+        ("cells".into(), Json::num(n_cells as f64)),
+        ("rounds".into(), Json::num(10.0)),
+        ("max_jobs".into(), Json::num(max as f64)),
+    ];
+
+    let mut serial_s = None;
+    for jobs in [1usize, 2, max] {
+        let sp = spec(jobs);
+        let t = b.bench(&format!("sweep/{n_cells}cells/jobs{jobs}"), || {
+            let (grid, outcomes) = sweep::run(&sp, false).expect("sweep");
+            assert_eq!(
+                sweep::diff_outcomes(&ref_outcomes, &outcomes),
+                None,
+                "jobs={jobs} diverged from the serial reference"
+            );
+            assert_eq!(ref_csv, sweep::report_csv(&grid.cells, &outcomes));
+            black_box(outcomes.len())
+        });
+        if let Some(t) = t {
+            let t = t.as_secs_f64();
+            if jobs == 1 {
+                serial_s = Some(t);
+            }
+            if let Some(s) = serial_s {
+                println!("      └─ jobs={jobs}: {t:.3}s, speedup {:.2}×", s / t);
+            }
+            entries.push((format!("wall_s_jobs{jobs}"), Json::num(t)));
+            if let Some(s) = serial_s {
+                entries.push((format!("speedup_jobs{jobs}"), Json::num(s / t)));
+            }
+        }
+    }
+
+    let pairs: Vec<(&str, Json)> = entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    // cargo runs benches with cwd = the package root (rust/); the tracked
+    // artifact lives one level up at the repo root.
+    let out = std::env::var("C2DFB_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sweep.json").into());
+    std::fs::write(&out, Json::obj(pairs).to_string()).expect("write BENCH_sweep.json");
+    println!("\nwrote {out}");
+    b.finish();
+}

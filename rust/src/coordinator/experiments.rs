@@ -1,58 +1,33 @@
 //! Per-table / per-figure harnesses reproducing the paper's evaluation.
 //!
-//! Each harness builds the exact workload grid from §6 / Appendix C, runs
-//! every (algorithm × topology × heterogeneity) cell, prints the rows the
-//! paper reports, and writes the full traces as CSV under `runs/<id>/`.
+//! Each harness is now a **thin grid declaration** over the
+//! [`sweep`](super::sweep) orchestrator: it builds the exact workload grid
+//! from §6 / Appendix C as a `Vec<Cell>`, hands the cells to
+//! [`sweep::run_cells`] (which executes them — concurrently when the
+//! tasks are thread-shareable and `--jobs > 1`), then prints the rows the
+//! paper reports and writes the full traces as CSV plus an aggregated
+//! `report.{csv,json}` under `runs/<id>/`.  Output semantics are
+//! unchanged from the pre-sweep serial loops: cells are summarized in
+//! declaration order and the first failing cell still fails the harness.
 //! Absolute numbers differ from the paper (synthetic data, simulated
 //! network — see DESIGN.md §Substitutions); the comparisons (who wins, by
 //! what order of magnitude) are the reproduction target.
 
-use crate::algorithms::RunObserver;
+use super::sweep::{self, Cell, CellOutcome, TaskRef};
 use crate::config::{Algorithm, ExperimentConfig};
-use crate::coordinator::{summarize, write_runs, Runner};
+use crate::coordinator::{summarize, write_runs};
 use crate::data::partition::Partition;
-use crate::metrics::{RunMetrics, TracePoint};
+use crate::metrics::RunMetrics;
 use crate::runtime::ArtifactRegistry;
 use crate::sim::{NetConfig, NetMode};
 use crate::tasks::{BilevelTask, HyperRepTask, LogRegTask, QuadraticTask};
 use crate::topology::Topology;
 use anyhow::Result;
 
-/// Harness observer: optionally prints a progress line per trace point and
-/// aborts any run whose loss goes non-finite (divergence guard) — the
-/// runner then records `stop_reason = observer_abort` instead of burning
-/// the remaining round/communication budget on NaNs.
-#[derive(Default)]
-pub struct HarnessObserver {
-    /// Print one line per recorded trace point.
-    pub verbose: bool,
-}
-
-impl RunObserver for HarnessObserver {
-    fn on_trace(&mut self, algo: &str, p: &TracePoint) -> bool {
-        if self.verbose {
-            println!(
-                "    [{algo:8}] round {:5}  comm {:9.3} MB  loss {:.5}  acc {:.3}",
-                p.round, p.comm_mb, p.loss, p.accuracy
-            );
-        }
-        if !p.loss.is_finite() {
-            eprintln!("    [{algo}] aborting run: non-finite loss at round {}", p.round);
-            return false;
-        }
-        true
-    }
-}
-
-/// Run one harness cell against the artifact registry with the divergence
-/// guard attached.
-fn run_cell(reg: &ArtifactRegistry, cfg: &ExperimentConfig, o: &HarnessOpts) -> Result<RunMetrics> {
-    let mut guard = HarnessObserver { verbose: o.verbose };
-    Runner::new(cfg).registry(reg).observer(&mut guard).run()
-}
+pub use super::sweep::HarnessObserver;
 
 /// Scaling knobs shared by all harnesses (CLI: --rounds, --verbose,
-/// --preset-suffix).
+/// --jobs, --preset-suffix).
 #[derive(Clone, Debug)]
 pub struct HarnessOpts {
     /// Outer rounds per run (paper: ~1000 coeff / ~100 hyperrep; default
@@ -65,6 +40,10 @@ pub struct HarnessOpts {
     pub seed: u64,
     /// Stream one progress line per recorded trace point (CLI: --verbose).
     pub verbose: bool,
+    /// Cell-level parallelism for thread-shareable grids (CLI: --jobs;
+    /// 0 = all cores).  Artifact-registry grids always run serially
+    /// (thread-local PJRT state); 1 preserves the classic serial order.
+    pub jobs: usize,
 }
 
 impl Default for HarnessOpts {
@@ -76,8 +55,34 @@ impl Default for HarnessOpts {
             out_dir: "runs".into(),
             seed: 42,
             verbose: false,
+            jobs: 1,
         }
     }
+}
+
+/// Run a declared grid and unwrap the outcomes with classic harness
+/// semantics: the first failing cell (in declaration order) fails the
+/// harness, otherwise every cell's metrics come back in order.  Also
+/// writes the aggregated cross-cell report next to the per-run traces.
+fn run_grid(
+    id: &str,
+    cells: Vec<Cell>,
+    tasks: &[&(dyn BilevelTask + Sync)],
+    reg: Option<&ArtifactRegistry>,
+    o: &HarnessOpts,
+) -> Result<Vec<RunMetrics>> {
+    let outcomes = sweep::run_cells(&cells, tasks, reg, o.jobs, o.verbose);
+    let dir = std::path::Path::new(&o.out_dir).join(id);
+    sweep::write_report(&dir, &cells, &outcomes)?;
+    let mut runs = Vec::with_capacity(outcomes.len());
+    for CellOutcome { id: cell_id, result } in outcomes {
+        match result {
+            Ok(m) => runs.push(m),
+            Err(e) => anyhow::bail!("cell {cell_id}: {e}"),
+        }
+    }
+    write_runs(&o.out_dir, id, &runs)?;
+    Ok(runs)
 }
 
 fn coeff_cfg(o: &HarnessOpts) -> ExperimentConfig {
@@ -146,7 +151,7 @@ fn tune_for(algo: Algorithm, cfg: &mut ExperimentConfig) {
 /// heterogeneous (h = 0.8).
 pub fn table1(reg: &ArtifactRegistry, o: &HarnessOpts, target_acc: f64) -> Result<Vec<RunMetrics>> {
     println!("== Table 1: comm volume & time to {:.0}% test accuracy (ring, het 0.8) ==", target_acc * 100.0);
-    let mut runs = Vec::new();
+    let mut cells = Vec::new();
     for algo in [Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::Mdbo] {
         let mut cfg = coeff_cfg(o);
         tune_for(algo, &mut cfg);
@@ -154,9 +159,15 @@ pub fn table1(reg: &ArtifactRegistry, o: &HarnessOpts, target_acc: f64) -> Resul
         cfg.topology = Topology::Ring;
         cfg.partition = Partition::Heterogeneous { h: 0.8 };
         cfg.target_accuracy = Some(target_acc);
-        let m = run_cell(reg, &cfg, o)?;
-        println!("  {}", summarize(&m));
-        runs.push(m);
+        cells.push(Cell {
+            id: format!("table1+{}", algo.name()),
+            cfg,
+            task: TaskRef::Registry,
+        });
+    }
+    let runs = run_grid("table1", cells, &[], Some(reg), o)?;
+    for m in &runs {
+        println!("  {}", summarize(m));
     }
     println!("\n| Algo   | Comm. Vol. (MB) | Sim. Time (s) | Wall Time (s) | reached |");
     println!("|--------|-----------------|---------------|---------------|---------|");
@@ -171,7 +182,6 @@ pub fn table1(reg: &ArtifactRegistry, o: &HarnessOpts, target_acc: f64) -> Resul
         };
         println!("| {:6} | {:15.2} | {:13.2} | {:13.2} | {:7} |", m.algo, mb, st, wt, reached);
     }
-    write_runs(&o.out_dir, "table1", &runs)?;
     Ok(runs)
 }
 
@@ -203,6 +213,8 @@ pub fn fig3(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> 
     )
 }
 
+/// The figs' 3-topology × 2-partition × N-algorithm grid, declared as
+/// sweep cells over the artifact registry.
 fn grid(
     reg: &ArtifactRegistry,
     o: &HarnessOpts,
@@ -216,7 +228,7 @@ fn grid(
         Topology::ErdosRenyi { p_milli: 400, seed: o.seed },
     ];
     let partitions = [Partition::Iid, Partition::Heterogeneous { h: 0.8 }];
-    let mut runs = Vec::new();
+    let mut cells = Vec::new();
     for topo in topologies {
         for part in partitions {
             for &algo in algos {
@@ -225,13 +237,18 @@ fn grid(
                 cfg.name = id.into();
                 cfg.topology = topo;
                 cfg.partition = part;
-                let m = run_cell(reg, &cfg, o)?;
-                println!("  {}", summarize(&m));
-                runs.push(m);
+                cells.push(Cell {
+                    id: format!("{id}+{}+{}+{}", topo.name(), part.name(), algo.name()),
+                    cfg,
+                    task: TaskRef::Registry,
+                });
             }
         }
     }
-    write_runs(&o.out_dir, id, &runs)?;
+    let runs = run_grid(id, cells, &[], Some(reg), o)?;
+    for m in &runs {
+        println!("  {}", summarize(m));
+    }
     Ok(runs)
 }
 
@@ -239,71 +256,43 @@ fn grid(
 /// loops K, (b) compression ratio, (c) multiplier λ (σ).
 pub fn fig5(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
     println!("== Fig 5: C²DFB sensitivity (K, compression ratio, λ) ==");
-    let mut runs = Vec::new();
+    let mut cells = Vec::new();
+    let mut prefixes = Vec::new();
 
     for k in [1usize, 5, 15, 30] {
         let mut cfg = coeff_cfg(o);
         cfg.name = format!("fig5_K{k}");
         cfg.inner_steps = k;
-        let m = run_cell(reg, &cfg, o)?;
-        println!("  K={k:3}  {}", summarize(&m));
-        runs.push(m);
+        prefixes.push(format!("K={k:3}"));
+        cells.push(Cell { id: format!("fig5+K{k}"), cfg, task: TaskRef::Registry });
     }
     for ratio in ["0.05", "0.1", "0.2", "0.5", "1.0"] {
         let mut cfg = coeff_cfg(o);
         cfg.name = format!("fig5_ratio{ratio}");
         cfg.compressor = format!("topk:{ratio}");
-        let m = run_cell(reg, &cfg, o)?;
-        println!("  ratio={ratio:5}  {}", summarize(&m));
-        runs.push(m);
+        prefixes.push(format!("ratio={ratio:5}"));
+        cells.push(Cell { id: format!("fig5+ratio{ratio}"), cfg, task: TaskRef::Registry });
     }
     for lam in [1.0, 10.0, 50.0, 100.0] {
         let mut cfg = coeff_cfg(o);
         cfg.name = format!("fig5_lam{lam}");
         cfg.lambda = lam;
-        let m = run_cell(reg, &cfg, o)?;
-        println!("  λ={lam:5}  {}", summarize(&m));
-        runs.push(m);
+        prefixes.push(format!("λ={lam:5}"));
+        cells.push(Cell { id: format!("fig5+lam{lam}"), cfg, task: TaskRef::Registry });
     }
-    // Label runs uniquely before writing (RunMetrics label comes from cfg
-    // label; augment with name).
-    write_runs(&o.out_dir, "fig5", &runs)?;
+    let runs = run_grid("fig5", cells, &[], Some(reg), o)?;
+    for (prefix, m) in prefixes.iter().zip(&runs) {
+        println!("  {prefix}  {}", summarize(m));
+    }
     Ok(runs)
 }
 
 /// Per-algorithm settings that converge on the analytic quadratic task
 /// (mirrors the algorithm test suites; no artifacts needed).
 fn quad_cfg_for(algo: Algorithm, rounds: usize, nodes: usize, o: &HarnessOpts) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig {
-        algorithm: algo,
-        nodes,
-        rounds,
-        seed: o.seed,
-        out_dir: o.out_dir.clone(),
-        eval_every: (rounds / 10).max(1),
-        gamma_out: 0.8,
-        ..ExperimentConfig::default()
-    };
-    match algo {
-        Algorithm::C2dfb | Algorithm::C2dfbNc => {
-            cfg.inner_steps = 15;
-            cfg.eta_out = 0.3;
-            cfg.eta_in = 0.4;
-            cfg.gamma_in = 0.6;
-            cfg.lambda = 50.0;
-            cfg.compressor = "topk:0.5".into();
-        }
-        Algorithm::Madsbo => {
-            cfg.inner_steps = 10;
-            cfg.eta_out = 0.8;
-            cfg.eta_in = 0.3;
-        }
-        Algorithm::Mdbo => {
-            cfg.inner_steps = 10;
-            cfg.eta_out = 0.4;
-            cfg.eta_in = 0.3;
-        }
-    }
+    let mut cfg = calibrated_cfg(algo, "quadratic", rounds, nodes);
+    cfg.seed = o.seed;
+    cfg.out_dir = o.out_dir.clone();
     cfg
 }
 
@@ -356,36 +345,41 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
     ];
     let algos = [Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::Mdbo];
 
-    let mut runs = Vec::new();
+    let mut cells = Vec::new();
+    let mut regime_of = Vec::new();
+    for (regime, netcfg) in &regimes {
+        for algo in algos {
+            let mut cfg = quad_cfg_for(algo, rounds, nodes, o);
+            cfg.name = format!("netsweep_{regime}");
+            cfg.network = netcfg.clone();
+            regime_of.push(*regime);
+            cells.push(Cell {
+                id: format!("netsweep+{regime}+{}", algo.name()),
+                cfg,
+                task: TaskRef::Shared(0),
+            });
+        }
+    }
+    let runs = run_grid("netsweep", cells, &[&task], None, o)?;
+
     println!(
         "\n| regime    | algo   | comm (MB) | gossip rounds | virtual time (s) | dropped | final loss |"
     );
     println!(
         "|-----------|--------|-----------|---------------|------------------|---------|------------|"
     );
-    for (regime, netcfg) in &regimes {
-        for algo in algos {
-            let mut cfg = quad_cfg_for(algo, rounds, nodes, o);
-            cfg.name = format!("netsweep_{regime}");
-            cfg.network = netcfg.clone();
-            let mut guard = HarnessObserver { verbose: o.verbose };
-            let m = Runner::new(&cfg)
-                .shared_task(&task)
-                .observer(&mut guard)
-                .run()?;
-            let last = m.final_point().expect("run produced no trace");
-            println!(
-                "| {:9} | {:6} | {:9.3} | {:13} | {:16.4} | {:7} | {:10.5} |",
-                regime,
-                m.algo,
-                m.ledger.total_mb(),
-                m.ledger.gossip_rounds,
-                m.ledger.network_time_s,
-                m.ledger.dropped_messages,
-                last.loss
-            );
-            runs.push(m);
-        }
+    for (regime, m) in regime_of.iter().zip(&runs) {
+        let last = m.final_point().expect("run produced no trace");
+        println!(
+            "| {:9} | {:6} | {:9.3} | {:13} | {:16.4} | {:7} | {:10.5} |",
+            regime,
+            m.algo,
+            m.ledger.total_mb(),
+            m.ledger.gossip_rounds,
+            m.ledger.network_time_s,
+            m.ledger.dropped_messages,
+            last.loss
+        );
     }
 
     // Benign-network equivalence: event engine ≡ synchronous engine.
@@ -407,25 +401,43 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
     if !all_ok {
         anyhow::bail!("event engine diverged from the synchronous engine on a benign network");
     }
-    write_runs(&o.out_dir, "netsweep", &runs)?;
     Ok(runs)
 }
 
 /// Build a native (artifact-free) task by name for the no-artifact
 /// harnesses: `"quadratic"` (the analytic default), `"logreg"`
-/// (hyperparameter tuning, `dir:0.5` Dirichlet label skew) or
-/// `"hyperrep"` (linear hyper-representation).  Sizes scale with `tiny`.
+/// (hyperparameter tuning) or `"hyperrep"` (linear hyper-representation),
+/// partitioned with the default `dir:0.5` Dirichlet label skew.  Sizes
+/// scale with `tiny`.
 pub fn native_task(
     spec: &str,
     nodes: usize,
     tiny: bool,
     seed: u64,
 ) -> Result<Box<dyn BilevelTask + Sync>> {
-    let part = crate::data::partition::Partition::Dirichlet { alpha: 0.5 };
+    native_task_with(spec, nodes, tiny, seed, Partition::Dirichlet { alpha: 0.5 })
+}
+
+/// [`native_task`] with an explicit partition (the sweep's partition
+/// axis).  The quadratic task has no label distribution to skew, so the
+/// partition maps onto its heterogeneity knob: `iid` → h = 0, `het:h` →
+/// h, and `dir:α` → the historical default h = 0.8.
+pub fn native_task_with(
+    spec: &str,
+    nodes: usize,
+    tiny: bool,
+    seed: u64,
+    part: Partition,
+) -> Result<Box<dyn BilevelTask + Sync>> {
     Ok(match spec {
         "quadratic" | "quad" => {
             let dim = if tiny { 8 } else { 32 };
-            Box::new(QuadraticTask::generate(nodes, dim, 0.8, seed))
+            let h = match part {
+                Partition::Iid => 0.0,
+                Partition::Heterogeneous { h } => h,
+                Partition::Dirichlet { .. } => 0.8,
+            };
+            Box::new(QuadraticTask::generate(nodes, dim, h, seed))
         }
         "logreg" => {
             let (d, n_tr, n_val) = if tiny { (12, 24, 12) } else { (48, 80, 40) };
@@ -441,32 +453,51 @@ pub fn native_task(
     })
 }
 
-/// Per-algorithm settings for the native data tasks (smaller steps than
-/// the quadratic: CE/ridge curvature, λ = 10 like the paper).
-fn native_cfg_for(
+/// Calibrated per-(algorithm, task) settings for the native tasks — the
+/// step sizes known to converge on each task's curvature (quadratic from
+/// the algorithm test suites; CE/ridge tasks with λ = 10 like the paper).
+/// Seed and out_dir are left at their defaults for the caller to set.
+pub fn calibrated_cfg(
     algo: Algorithm,
     spec: &str,
     rounds: usize,
     nodes: usize,
-    o: &HarnessOpts,
 ) -> ExperimentConfig {
-    if matches!(spec, "quadratic" | "quad") {
-        return quad_cfg_for(algo, rounds, nodes, o);
-    }
     let mut cfg = ExperimentConfig {
         algorithm: algo,
         nodes,
         rounds,
-        seed: o.seed,
-        out_dir: o.out_dir.clone(),
         eval_every: (rounds / 10).max(1),
         gamma_out: 0.8,
-        gamma_in: 0.6,
-        inner_steps: 5,
-        lambda: 10.0,
-        compressor: "topk:0.5".into(),
         ..ExperimentConfig::default()
     };
+    if matches!(spec, "quadratic" | "quad") {
+        match algo {
+            Algorithm::C2dfb | Algorithm::C2dfbNc => {
+                cfg.inner_steps = 15;
+                cfg.eta_out = 0.3;
+                cfg.eta_in = 0.4;
+                cfg.gamma_in = 0.6;
+                cfg.lambda = 50.0;
+                cfg.compressor = "topk:0.5".into();
+            }
+            Algorithm::Madsbo => {
+                cfg.inner_steps = 10;
+                cfg.eta_out = 0.8;
+                cfg.eta_in = 0.3;
+            }
+            Algorithm::Mdbo => {
+                cfg.inner_steps = 10;
+                cfg.eta_out = 0.4;
+                cfg.eta_in = 0.3;
+            }
+        }
+        return cfg;
+    }
+    cfg.gamma_in = 0.6;
+    cfg.inner_steps = 5;
+    cfg.lambda = 10.0;
+    cfg.compressor = "topk:0.5".into();
     match spec {
         "logreg" => {
             cfg.eta_out = 0.2;
@@ -482,6 +513,21 @@ fn native_cfg_for(
     if matches!(algo, Algorithm::Mdbo) {
         cfg.eta_in *= 0.5; // untracked gossip SGD needs smaller LL steps
     }
+    cfg
+}
+
+/// Per-algorithm settings for the native data tasks, with the harness's
+/// seed/out_dir applied.
+fn native_cfg_for(
+    algo: Algorithm,
+    spec: &str,
+    rounds: usize,
+    nodes: usize,
+    o: &HarnessOpts,
+) -> ExperimentConfig {
+    let mut cfg = calibrated_cfg(algo, spec, rounds, nodes);
+    cfg.seed = o.seed;
+    cfg.out_dir = o.out_dir.clone();
     cfg
 }
 
@@ -523,7 +569,7 @@ pub fn budget_on(
         Algorithm::Mdbo,
     ];
 
-    let mut runs = Vec::new();
+    let mut cells = Vec::new();
     for algo in algos {
         let mut cfg = native_cfg_for(algo, task_spec, o.rounds, nodes, o);
         cfg.name = format!("budget_{task_spec}");
@@ -531,13 +577,15 @@ pub fn budget_on(
         // Check the budget every round so each run lands within one outer
         // round of the budget (the stop contract is one eval interval).
         cfg.eval_every = 1;
-        let mut guard = HarnessObserver { verbose: o.verbose };
-        let m = Runner::new(&cfg)
-            .shared_task(task.as_ref())
-            .observer(&mut guard)
-            .run()?;
-        println!("  {}", summarize(&m));
-        runs.push(m);
+        cells.push(Cell {
+            id: format!("budget+{task_spec}+{}", algo.name()),
+            cfg,
+            task: TaskRef::Shared(0),
+        });
+    }
+    let runs = run_grid("budget", cells, &[task.as_ref()], None, o)?;
+    for m in &runs {
+        println!("  {}", summarize(m));
     }
 
     println!("\n| algo     | comm (MB) | rounds | oracles 1st | oracles 2nd | final loss | stop        |");
@@ -555,7 +603,6 @@ pub fn budget_on(
             m.stop_reason.map_or("-", |s| s.name()),
         );
     }
-    write_runs(&o.out_dir, "budget", &runs)?;
     Ok(runs)
 }
 
@@ -563,16 +610,22 @@ pub fn budget_on(
 /// at matched settings (DESIGN.md "extension" item).
 pub fn compressor_ablation(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
     println!("== Ablation: compressor family (C²DFB, coeff, ring, het) ==");
-    let mut runs = Vec::new();
-    for comp in ["topk:0.2", "randk:0.2", "qsgd:16", "none"] {
+    let comps = ["topk:0.2", "randk:0.2", "qsgd:16", "none"];
+    let mut cells = Vec::new();
+    for comp in comps {
         let mut cfg = coeff_cfg(o);
         cfg.name = format!("ablate_{}", comp.replace(':', ""));
         cfg.partition = Partition::Heterogeneous { h: 0.8 };
         cfg.compressor = comp.into();
-        let m = run_cell(reg, &cfg, o)?;
-        println!("  {comp:10}  {}", summarize(&m));
-        runs.push(m);
+        cells.push(Cell {
+            id: format!("ablation+{comp}"),
+            cfg,
+            task: TaskRef::Registry,
+        });
     }
-    write_runs(&o.out_dir, "ablation_compressor", &runs)?;
+    let runs = run_grid("ablation_compressor", cells, &[], Some(reg), o)?;
+    for (comp, m) in comps.iter().zip(&runs) {
+        println!("  {comp:10}  {}", summarize(m));
+    }
     Ok(runs)
 }

@@ -23,6 +23,7 @@
 //! migration table from the old `run_with_*` functions.
 
 pub mod experiments;
+pub mod sweep;
 
 use crate::algorithms::{self, NoObserver, RunObserver};
 use crate::collective::{Network, Transport};
@@ -44,12 +45,15 @@ pub fn build_network(cfg: &ExperimentConfig) -> Network {
 }
 
 /// Build the event-driven network for a config (`network.mode = "sim"`).
-pub fn build_sim_network(cfg: &ExperimentConfig) -> SimNetwork {
+/// Errors cleanly on an invalid `[network]` table (e.g. a bad CLI flag)
+/// instead of panicking inside the transport constructor.
+pub fn build_sim_network(cfg: &ExperimentConfig) -> Result<SimNetwork> {
     SimNetwork::new(
         Graph::build(cfg.topology, cfg.nodes),
         cfg.network.clone(),
         cfg.seed ^ 0x6E65_7477, // independent of the algorithms' stream
     )
+    .map_err(|e| anyhow::anyhow!("building event network: {e}"))
 }
 
 /// Build the PJRT-backed task for a config (artifacts must exist).
@@ -149,7 +153,7 @@ fn launch(
     obs: &mut dyn RunObserver,
 ) -> Result<RunMetrics> {
     if cfg.network.is_event() {
-        drive_on(task, shared, build_sim_network(cfg), cfg, obs)
+        drive_on(task, shared, build_sim_network(cfg)?, cfg, obs)
     } else {
         drive_on(task, shared, build_network(cfg), cfg, obs)
     }
@@ -278,6 +282,25 @@ mod tests {
         let b: Vec<u64> = parallel.trace.iter().map(|p| p.loss.to_bits()).collect();
         assert_eq!(a, b);
         assert_eq!(serial.ledger.total_bytes, parallel.ledger.total_bytes);
+    }
+
+    #[test]
+    fn bad_network_config_is_a_clean_error_not_a_panic() {
+        use crate::sim::NetMode;
+        // Simulates `c2dfb run --network sim --drop_rate 1.5`: the flag
+        // parses, the config is invalid, and every path must return Err.
+        let mut cfg = ExperimentConfig::default();
+        cfg.network.mode = NetMode::Event;
+        cfg.network.drop_rate = 1.5;
+        let err = build_sim_network(&cfg).unwrap_err();
+        assert!(err.to_string().contains("drop_rate"), "{err}");
+        let task = QuadraticTask::generate(4, 6, 0.5, 81);
+        let err = Runner::new(&cfg).task(&task).run().unwrap_err();
+        assert!(err.to_string().contains("drop_rate"), "{err}");
+        // A sync-mode config handed to the event constructor: Err too.
+        cfg.network.drop_rate = 0.0;
+        cfg.network.mode = NetMode::Sync;
+        assert!(build_sim_network(&cfg).is_err());
     }
 
     #[test]

@@ -1,0 +1,996 @@
+//! Declarative scenario-grid orchestrator: the substrate every harness
+//! runs on.
+//!
+//! A sweep is a cartesian grid over seven axes — algorithm × task ×
+//! topology × compressor × partition × engine × stop condition — declared
+//! either programmatically (a `Vec<Cell>`, how the `table1`/`fig*`/
+//! `netsweep`/`budget` harnesses are now written), from a `[sweep]` TOML
+//! table, or from `c2dfb sweep` CLI flags.  [`run_cells`] executes the
+//! cells on a work-stealing pool ([`NodePool`]'s shared cursor *is* the
+//! stealing) and returns per-cell outcomes **in declaration order**:
+//!
+//! * Every cell is self-contained — its config carries a deterministic
+//!   seed (see [`derive_seed`]) and cells share no mutable state — so
+//!   N-way-parallel execution is **bit-identical** to serial execution
+//!   (proven by [`diff_outcomes`], enforced by `c2dfb sweep --tiny`, CI
+//!   and `tests/sweep.rs`).
+//! * A cell that fails (bad config, diverged run, missing artifacts) is
+//!   reported in its [`CellOutcome`] without aborting sibling cells.
+//! * Cells whose task is [`TaskRef::Shared`] run concurrently; cells that
+//!   build their task from the artifact registry ([`TaskRef::Registry`])
+//!   run on the caller's thread, because the PJRT state is thread-local
+//!   (`Rc` oracle handles) — same engine, serial lane.
+//!
+//! [`report_csv`]/[`report_json`] aggregate the outcomes into one
+//! cross-cell document (per-cell deterministic metrics plus a grouped
+//! summary with communication/virtual-time ratios); wall-clock fields are
+//! deliberately excluded so the report bytes are identical at any
+//! parallelism.  See `docs/SWEEP.md` for the grid syntax, the
+//! seed-derivation contract and the report schema.
+
+use crate::algorithms::RunObserver;
+use crate::config::toml::{self, TomlValue};
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::coordinator::{experiments, Runner};
+use crate::data::partition::Partition;
+use crate::metrics::{RunMetrics, TracePoint};
+use crate::runtime::ArtifactRegistry;
+use crate::sim::{NetMode, NodePool};
+use crate::tasks::BilevelTask;
+use crate::topology::Topology;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Harness observer: optionally prints a progress line per trace point and
+/// aborts any run whose loss goes non-finite (divergence guard) — the
+/// runner then records `stop_reason = observer_abort` instead of burning
+/// the remaining round/communication budget on NaNs.
+#[derive(Default)]
+pub struct HarnessObserver {
+    /// Print one line per recorded trace point.
+    pub verbose: bool,
+}
+
+impl RunObserver for HarnessObserver {
+    fn on_trace(&mut self, algo: &str, p: &TracePoint) -> bool {
+        if self.verbose {
+            println!(
+                "    [{algo:8}] round {:5}  comm {:9.3} MB  loss {:.5}  acc {:.3}",
+                p.round, p.comm_mb, p.loss, p.accuracy
+            );
+        }
+        if !p.loss.is_finite() {
+            eprintln!("    [{algo}] aborting run: non-finite loss at round {}", p.round);
+            return false;
+        }
+        true
+    }
+}
+
+/// Where a cell's task comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskRef {
+    /// Index into the sweep's shared task table — parallel lane.
+    Shared(usize),
+    /// Build a PJRT task from the artifact registry inside the cell —
+    /// serial lane (oracle handles are thread-local).
+    Registry,
+}
+
+/// One fully-resolved cell of a sweep grid.
+pub struct Cell {
+    /// Unique id within the sweep; also the seed-derivation input.
+    pub id: String,
+    pub cfg: ExperimentConfig,
+    pub task: TaskRef,
+}
+
+/// The per-cell result: the run's metrics, or the error that felled this
+/// cell (sibling cells always run to completion either way).
+pub struct CellOutcome {
+    pub id: String,
+    pub result: Result<RunMetrics, String>,
+}
+
+impl CellOutcome {
+    pub fn metrics(&self) -> Option<&RunMetrics> {
+        self.result.as_ref().ok()
+    }
+}
+
+/// Resolve `jobs = 0` to the machine's available parallelism.
+pub fn effective_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        jobs
+    }
+}
+
+/// Execute every cell and return outcomes in declaration order.
+///
+/// Shared-task cells fan out over a [`NodePool`] of `jobs` workers
+/// (`jobs = 0` = all cores); registry cells run serially on this thread.
+/// Verbose trace streaming only engages at `jobs <= 1` — interleaved
+/// progress lines from concurrent cells would scramble the log — but the
+/// divergence guard is armed in both lanes.  A failing cell never aborts
+/// its siblings.
+pub fn run_cells(
+    cells: &[Cell],
+    tasks: &[&(dyn BilevelTask + Sync)],
+    reg: Option<&ArtifactRegistry>,
+    jobs: usize,
+    verbose: bool,
+) -> Vec<CellOutcome> {
+    let jobs = effective_jobs(jobs);
+    let stream = verbose && jobs <= 1;
+    let shared_lane: Vec<usize> = cells
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| matches!(c.task, TaskRef::Shared(_)))
+        .map(|(i, _)| i)
+        .collect();
+
+    let mut outcomes: Vec<Option<CellOutcome>> = cells.iter().map(|_| None).collect();
+    let pool = NodePool::new(jobs);
+    let lane_results = pool.map(shared_lane.len(), |k| {
+        run_shared_cell(&cells[shared_lane[k]], tasks, stream)
+    });
+    for (&i, out) in shared_lane.iter().zip(lane_results) {
+        outcomes[i] = Some(out);
+    }
+    for (i, cell) in cells.iter().enumerate() {
+        if cell.task == TaskRef::Registry {
+            outcomes[i] = Some(run_registry_cell(cell, reg, verbose));
+        }
+    }
+    outcomes
+        .into_iter()
+        .map(|o| o.expect("every cell ran on exactly one lane"))
+        .collect()
+}
+
+fn run_shared_cell(
+    cell: &Cell,
+    tasks: &[&(dyn BilevelTask + Sync)],
+    verbose: bool,
+) -> CellOutcome {
+    let result = match cell.task {
+        TaskRef::Shared(t) => match tasks.get(t) {
+            Some(task) => {
+                let mut guard = HarnessObserver { verbose };
+                Runner::new(&cell.cfg)
+                    .shared_task(*task)
+                    .observer(&mut guard)
+                    .run()
+                    .map_err(|e| format!("{e:#}"))
+            }
+            None => Err(format!(
+                "task index {t} out of range ({} shared tasks declared)",
+                tasks.len()
+            )),
+        },
+        TaskRef::Registry => unreachable!("registry cells run on the serial lane"),
+    };
+    CellOutcome { id: cell.id.clone(), result }
+}
+
+fn run_registry_cell(
+    cell: &Cell,
+    reg: Option<&ArtifactRegistry>,
+    verbose: bool,
+) -> CellOutcome {
+    let result = match reg {
+        Some(reg) => {
+            let mut guard = HarnessObserver { verbose };
+            Runner::new(&cell.cfg)
+                .registry(reg)
+                .observer(&mut guard)
+                .run()
+                .map_err(|e| format!("{e:#}"))
+        }
+        None => Err("cell needs the artifact registry, but none was supplied".into()),
+    };
+    CellOutcome { id: cell.id.clone(), result }
+}
+
+/// The per-cell seed-derivation contract (see docs/SWEEP.md): FNV-1a 64
+/// over the cell id, mixed with the sweep's base seed through one
+/// splitmix64 finalizer.  The derived seed depends only on
+/// `(base_seed, cell_id)` — never on grid shape, cell order or
+/// parallelism — so editing one axis leaves every other cell's run
+/// untouched, and parallel execution is trivially bit-identical to
+/// serial.
+pub fn derive_seed(base: u64, cell_id: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in cell_id.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut z = (base ^ h).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A declarative sweep: axis value lists over a base config.  Built from
+/// `[sweep]` TOML (`SweepSpec::from_toml_str`) or CLI flags (`c2dfb
+/// sweep`); `expand` turns it into cells + a shared task table.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Non-axis knobs: nodes, rounds, eval cadence, seed, out_dir, the
+    /// `[network]` link model and the `[stop]` budget table.
+    pub base: ExperimentConfig,
+    pub algos: Vec<Algorithm>,
+    /// Native task specs: `quadratic`, `logreg`, `hyperrep`.
+    pub tasks: Vec<String>,
+    /// Topology specs as in [`Topology::parse`] (realized with the base
+    /// seed, shared by every cell of the same axis value).
+    pub topologies: Vec<String>,
+    /// Compressor specs; `"default"` keeps the per-cell calibrated choice.
+    pub compressors: Vec<String>,
+    /// Partition specs (`iid`, `het:0.8`, `dir:0.5`); part of the task
+    /// table key — data is generated once per (task, partition).
+    pub partitions: Vec<String>,
+    pub engines: Vec<NetMode>,
+    /// Stop-axis specs: `rounds:N`, `comm_mb:X`, `oracles:N`, `acc:X`,
+    /// `sim_secs:X`; `"rounds"` keeps the base round cap.  (`wall_secs`
+    /// is rejected: a wall-clock stop is scheduler-dependent and would
+    /// break the parallel ≡ serial bit-identity contract.)
+    pub stops: Vec<String>,
+    /// Cell-level parallelism (0 = all cores).
+    pub jobs: usize,
+    /// Small task instances (the `--tiny` sizes).
+    pub tiny: bool,
+    /// Start each cell from the task library's calibrated per-(algorithm,
+    /// task) step sizes (default); `false` takes the base config's
+    /// optimizer knobs verbatim.
+    pub calibrate: bool,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        let base = ExperimentConfig {
+            name: "sweep".into(),
+            nodes: 8,
+            rounds: 30,
+            eval_every: 5,
+            ..ExperimentConfig::default()
+        };
+        SweepSpec {
+            base,
+            algos: vec![Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::Mdbo],
+            tasks: vec!["quadratic".into()],
+            topologies: vec!["ring".into()],
+            compressors: vec!["default".into()],
+            partitions: vec!["dir:0.5".into()],
+            engines: vec![NetMode::Sync],
+            stops: vec!["rounds".into()],
+            jobs: 0,
+            tiny: false,
+            calibrate: true,
+        }
+    }
+}
+
+impl SweepSpec {
+    /// The `--tiny` grid: a real multi-axis sweep (2 algos × 2 tasks ×
+    /// 2 topologies × 2 engines = 16 cells) sized to finish in seconds.
+    pub fn tiny() -> SweepSpec {
+        let mut s = SweepSpec {
+            algos: vec![Algorithm::C2dfb, Algorithm::Madsbo],
+            tasks: vec!["quadratic".into(), "logreg".into()],
+            topologies: vec!["ring".into(), "exp".into()],
+            engines: vec![NetMode::Sync, NetMode::Event],
+            tiny: true,
+            ..SweepSpec::default()
+        };
+        s.base.nodes = 4;
+        s.base.rounds = 3;
+        s.base.eval_every = 1;
+        s
+    }
+
+    /// Parse a config file whose non-`[sweep]` keys feed the base config
+    /// and whose `[sweep]` table declares the axes.
+    pub fn from_toml_file(path: &Path) -> Result<SweepSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        SweepSpec::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<SweepSpec, String> {
+        let map = toml::parse(text)?;
+        let mut spec = SweepSpec::default();
+        let base_map: BTreeMap<String, TomlValue> = map
+            .iter()
+            .filter(|(k, _)| !k.starts_with("sweep."))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        spec.base.apply_map(&base_map)?;
+        for (k, v) in map.iter().filter(|(k, _)| k.starts_with("sweep.")) {
+            spec.apply_one(k.strip_prefix("sweep.").unwrap(), v)?;
+        }
+        Ok(spec)
+    }
+
+    /// Apply one `[sweep]` key (TOML `sweep.*` or a CLI `--key value`).
+    /// Axis lists accept a comma-separated string or a TOML string array.
+    pub fn apply_one(&mut self, k: &str, v: &TomlValue) -> Result<(), String> {
+        match k {
+            "algos" | "algorithms" => {
+                self.algos = parse_list(v)?
+                    .iter()
+                    .map(|s| Algorithm::parse(s))
+                    .collect::<Result<_, _>>()?
+            }
+            "tasks" => self.tasks = parse_list(v)?,
+            "topologies" => self.topologies = parse_list(v)?,
+            "compressors" => self.compressors = parse_list(v)?,
+            "partitions" => self.partitions = parse_list(v)?,
+            "engines" => {
+                self.engines = parse_list(v)?
+                    .iter()
+                    .map(|s| NetMode::parse(s))
+                    .collect::<Result<_, _>>()?
+            }
+            "stops" => self.stops = parse_list(v)?,
+            "jobs" | "parallelism" => {
+                self.jobs = v
+                    .as_i64()
+                    .filter(|i| *i >= 0)
+                    .ok_or(format!("sweep.{k}: expected non-negative integer"))?
+                    as usize
+            }
+            "tiny" => {
+                self.tiny = v.as_bool().ok_or(format!("sweep.{k}: expected bool"))?
+            }
+            "calibrate" => {
+                self.calibrate = v.as_bool().ok_or(format!("sweep.{k}: expected bool"))?
+            }
+            _ => return Err(format!("unknown [sweep] key: {k}")),
+        }
+        Ok(())
+    }
+}
+
+fn parse_list(v: &TomlValue) -> Result<Vec<String>, String> {
+    match v {
+        TomlValue::Str(s) => Ok(s
+            .split(',')
+            .map(|p| p.trim().to_string())
+            .filter(|p| !p.is_empty())
+            .collect()),
+        TomlValue::Arr(a) => a
+            .iter()
+            .map(|e| {
+                e.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| "sweep axis lists must contain strings".to_string())
+            })
+            .collect(),
+        _ => Err("expected a comma-separated string or an array of strings".into()),
+    }
+}
+
+/// Apply one stop-axis spec to a cell config.  `"rounds"` (bare) and
+/// `"default"` keep the base round cap unchanged.
+pub fn apply_stop(cfg: &mut ExperimentConfig, spec: &str) -> Result<(), String> {
+    let spec = spec.trim();
+    if spec.is_empty() || spec == "rounds" || spec == "default" {
+        return Ok(());
+    }
+    let (k, v) = spec
+        .split_once(':')
+        .ok_or_else(|| format!("stop axis wants kind:value, got {spec:?}"))?;
+    let float = || v.parse::<f64>().map_err(|_| format!("bad stop value in {spec:?}"));
+    match k {
+        "rounds" => {
+            cfg.rounds = v.parse().map_err(|_| format!("bad stop value in {spec:?}"))?
+        }
+        "comm_mb" => cfg.stop.comm_mb = Some(float()?),
+        "oracles" | "first_order" => {
+            cfg.stop.first_order =
+                Some(v.parse().map_err(|_| format!("bad stop value in {spec:?}"))?)
+        }
+        "acc" | "target_accuracy" => cfg.target_accuracy = Some(float()?),
+        "sim_secs" => cfg.stop.sim_secs = Some(float()?),
+        "wall_secs" => {
+            // A wall-clock budget stops at a scheduler-dependent round, so
+            // it cannot honor the sweep's parallel ≡ serial bit-identity
+            // contract (diff_outcomes / --verify would flag spurious
+            // divergence).  Virtual time is the deterministic equivalent.
+            return Err(
+                "stop axis wall_secs is wall-clock-nondeterministic under a parallel sweep; \
+                 use sim_secs (virtual network time) instead"
+                    .into(),
+            );
+        }
+        _ => {
+            return Err(format!(
+                "unknown stop axis kind {k:?} (rounds|comm_mb|oracles|acc|sim_secs)"
+            ))
+        }
+    }
+    Ok(())
+}
+
+/// An expanded sweep: cells in deterministic grid order plus the shared
+/// task table their [`TaskRef::Shared`] indices point into.
+pub struct Grid {
+    pub cells: Vec<Cell>,
+    pub tasks: Vec<Box<dyn BilevelTask + Sync>>,
+}
+
+/// Expand a spec into its cell grid.  Axis order (outer→inner): task,
+/// partition, topology, compressor, engine, stop, algorithm — so the rows
+/// to compare (same scenario, different algorithm) sit adjacent.  Task
+/// data is generated once per (task, partition) from the **base** seed:
+/// every cell of a comparison group trains on identical shards no matter
+/// which other cells exist.
+pub fn expand(spec: &SweepSpec) -> Result<Grid> {
+    for (axis, len) in [
+        ("algos", spec.algos.len()),
+        ("tasks", spec.tasks.len()),
+        ("topologies", spec.topologies.len()),
+        ("compressors", spec.compressors.len()),
+        ("partitions", spec.partitions.len()),
+        ("engines", spec.engines.len()),
+        ("stops", spec.stops.len()),
+    ] {
+        if len == 0 {
+            anyhow::bail!("sweep axis {axis:?} is empty");
+        }
+    }
+    let mut tasks: Vec<Box<dyn BilevelTask + Sync>> = Vec::new();
+    let mut task_idx: BTreeMap<(String, String), usize> = BTreeMap::new();
+    let mut cells = Vec::new();
+    for task_spec in &spec.tasks {
+        for part_spec in &spec.partitions {
+            let part = Partition::parse(part_spec).map_err(anyhow::Error::msg)?;
+            let key = (task_spec.clone(), part_spec.clone());
+            let ti = match task_idx.entry(key) {
+                std::collections::btree_map::Entry::Occupied(e) => *e.get(),
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    let t = experiments::native_task_with(
+                        task_spec,
+                        spec.base.nodes,
+                        spec.tiny,
+                        spec.base.seed,
+                        part,
+                    )
+                    .with_context(|| format!("building task for axis value {task_spec:?}"))?;
+                    tasks.push(t);
+                    *e.insert(tasks.len() - 1)
+                }
+            };
+            for topo_spec in &spec.topologies {
+                let topology =
+                    Topology::parse(topo_spec, spec.base.seed).map_err(anyhow::Error::msg)?;
+                for comp in &spec.compressors {
+                    for engine in &spec.engines {
+                        for stop in &spec.stops {
+                            for &algo in &spec.algos {
+                                let id = format!(
+                                    "{task_spec}+{part_spec}+{topo_spec}+{comp}+{}+{stop}+{}",
+                                    engine.name(),
+                                    algo.name()
+                                );
+                                let mut cfg = if spec.calibrate {
+                                    experiments::calibrated_cfg(
+                                        algo,
+                                        task_spec,
+                                        spec.base.rounds,
+                                        spec.base.nodes,
+                                    )
+                                } else {
+                                    let mut c = spec.base.clone();
+                                    c.algorithm = algo;
+                                    c
+                                };
+                                cfg.name = spec.base.name.clone();
+                                cfg.preset = task_spec.clone();
+                                cfg.nodes = spec.base.nodes;
+                                cfg.rounds = spec.base.rounds;
+                                cfg.eval_every = spec.base.eval_every;
+                                cfg.out_dir = spec.base.out_dir.clone();
+                                cfg.network = spec.base.network.clone();
+                                cfg.stop = spec.base.stop.clone();
+                                cfg.target_accuracy = spec.base.target_accuracy;
+                                cfg.topology = topology;
+                                cfg.partition = part;
+                                if comp != "default" && !comp.is_empty() {
+                                    cfg.compressor = comp.clone();
+                                }
+                                cfg.network.mode = *engine;
+                                apply_stop(&mut cfg, stop).map_err(anyhow::Error::msg)?;
+                                cfg.seed = derive_seed(spec.base.seed, &id);
+                                cells.push(Cell { id, cfg, task: TaskRef::Shared(ti) });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Grid { cells, tasks })
+}
+
+/// Expand and execute a spec; outcomes come back in grid order.
+pub fn run(spec: &SweepSpec, verbose: bool) -> Result<(Grid, Vec<CellOutcome>)> {
+    let grid = expand(spec)?;
+    let tasks: Vec<&(dyn BilevelTask + Sync)> = grid.tasks.iter().map(|t| t.as_ref()).collect();
+    let outcomes = run_cells(&grid.cells, &tasks, None, spec.jobs, verbose);
+    Ok((grid, outcomes))
+}
+
+/// The report's `stop` column: every active stop condition, `|`-joined,
+/// round cap always last — so two cells differing in ANY stop knob (a
+/// varying `rounds:N` axis under a base `[stop]` budget included) get
+/// distinct descriptions.
+fn stop_desc(cfg: &ExperimentConfig) -> String {
+    let mut parts = Vec::new();
+    if let Some(a) = cfg.target_accuracy {
+        parts.push(format!("acc:{a}"));
+    }
+    if let Some(mb) = cfg.stop.comm_mb {
+        parts.push(format!("comm_mb:{mb}"));
+    }
+    if let Some(n) = cfg.stop.first_order {
+        parts.push(format!("oracles:{n}"));
+    }
+    if let Some(s) = cfg.stop.sim_secs {
+        parts.push(format!("sim_secs:{s}"));
+    }
+    if let Some(s) = cfg.stop.wall_secs {
+        parts.push(format!("wall_secs:{s}"));
+    }
+    parts.push(format!("rounds:{}", cfg.rounds));
+    parts.join("|")
+}
+
+/// A cell's comparison-group key: its id with the trailing
+/// `+<algorithm>` stripped (the expansion and every harness put the
+/// algorithm last in the id).  Ids without the suffix — single-algorithm
+/// grids like fig5/ablation — group as themselves.
+fn group_key(cell: &Cell) -> String {
+    let suffix = format!("+{}", cell.cfg.algorithm.name());
+    match cell.id.strip_suffix(&suffix) {
+        Some(prefix) => prefix.to_string(),
+        None => cell.id.clone(),
+    }
+}
+
+fn sanitize_csv(s: &str) -> String {
+    s.replace([',', '\n', '\r'], ";")
+}
+
+/// The aggregated per-cell CSV report.  Every field is a pure function of
+/// (code, config, seed) — wall-clock columns are deliberately absent — so
+/// the bytes are identical at any parallelism.
+pub fn report_csv(cells: &[Cell], outcomes: &[CellOutcome]) -> String {
+    assert_eq!(cells.len(), outcomes.len());
+    let mut out = String::from(
+        "cell,algo,task,topology,partition,compressor,engine,stop,seed,status,\
+         rounds,gossip_rounds,comm_mb,total_bytes,messages,dropped,network_time_s,\
+         first_order,second_order,evals,final_loss,final_accuracy,stop_reason,error\n",
+    );
+    for (c, o) in cells.iter().zip(outcomes) {
+        let cfg = &c.cfg;
+        let _ = write!(
+            out,
+            "{},{},{},{},{},{},{},{},{},",
+            sanitize_csv(&c.id),
+            cfg.algorithm.name(),
+            sanitize_csv(&cfg.preset),
+            cfg.topology.name(),
+            cfg.partition.name(),
+            sanitize_csv(&cfg.compressor),
+            cfg.network.mode.name(),
+            sanitize_csv(&stop_desc(cfg)),
+            cfg.seed,
+        );
+        match &o.result {
+            Ok(m) => {
+                let last = m.final_point();
+                let _ = writeln!(
+                    out,
+                    "ok,{},{},{:.6},{},{},{},{:.9},{},{},{},{:.9e},{:.6},{},",
+                    last.map_or(0, |p| p.round),
+                    m.ledger.gossip_rounds,
+                    m.ledger.total_mb(),
+                    m.ledger.total_bytes,
+                    m.ledger.messages,
+                    m.ledger.dropped_messages,
+                    m.ledger.network_time_s,
+                    m.oracles.first_order,
+                    m.oracles.second_order,
+                    m.oracles.evals,
+                    last.map_or(f64::NAN, |p| p.loss),
+                    last.map_or(f64::NAN, |p| p.accuracy),
+                    m.stop_reason.map_or("none", |r| r.name()),
+                );
+            }
+            Err(e) => {
+                let _ = writeln!(out, "error,,,,,,,,,,,,,,{}", sanitize_csv(e));
+            }
+        }
+    }
+    out
+}
+
+/// The aggregated JSON report: per-cell deterministic metrics plus a
+/// cross-cell `summary` grouping cells by everything-but-algorithm and
+/// annotating each row with its communication / virtual-time ratio
+/// against the group's best (min).  Wall-clock fields are excluded, so
+/// the document is byte-identical at any parallelism.
+pub fn report_json(cells: &[Cell], outcomes: &[CellOutcome]) -> Json {
+    assert_eq!(cells.len(), outcomes.len());
+    let cell_docs: Vec<Json> = cells
+        .iter()
+        .zip(outcomes)
+        .map(|(c, o)| {
+            let cfg = &c.cfg;
+            let mut pairs = vec![
+                ("cell", Json::str(&c.id)),
+                ("algo", Json::str(cfg.algorithm.name())),
+                ("task", Json::str(&cfg.preset)),
+                ("topology", Json::str(cfg.topology.name())),
+                ("partition", Json::str(&cfg.partition.name())),
+                ("compressor", Json::str(&cfg.compressor)),
+                ("engine", Json::str(cfg.network.mode.name())),
+                ("stop", Json::str(&stop_desc(cfg))),
+                // u64 seeds exceed f64's exact-integer range: keep as text.
+                ("seed", Json::str(&cfg.seed.to_string())),
+            ];
+            match &o.result {
+                Ok(m) => {
+                    let last = m.final_point();
+                    pairs.push(("status", Json::str("ok")));
+                    pairs.push(("rounds", Json::num(last.map_or(0, |p| p.round) as f64)));
+                    pairs.push((
+                        "gossip_rounds",
+                        Json::num(m.ledger.gossip_rounds as f64),
+                    ));
+                    pairs.push(("comm_mb", Json::num(m.ledger.total_mb())));
+                    pairs.push(("total_bytes", Json::num(m.ledger.total_bytes as f64)));
+                    pairs.push(("messages", Json::num(m.ledger.messages as f64)));
+                    pairs.push((
+                        "dropped_messages",
+                        Json::num(m.ledger.dropped_messages as f64),
+                    ));
+                    pairs.push(("network_time_s", Json::num(m.ledger.network_time_s)));
+                    pairs.push(("first_order", Json::num(m.oracles.first_order as f64)));
+                    pairs.push(("second_order", Json::num(m.oracles.second_order as f64)));
+                    pairs.push(("evals", Json::num(m.oracles.evals as f64)));
+                    pairs.push((
+                        "final_loss",
+                        Json::num(last.map_or(f64::NAN, |p| p.loss)),
+                    ));
+                    pairs.push((
+                        "final_accuracy",
+                        Json::num(last.map_or(f64::NAN, |p| p.accuracy)),
+                    ));
+                    pairs.push((
+                        "stop_reason",
+                        Json::str(m.stop_reason.map_or("none", |r| r.name())),
+                    ));
+                }
+                Err(e) => {
+                    pairs.push(("status", Json::str("error")));
+                    pairs.push(("error", Json::str(e)));
+                }
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+
+    // Cross-cell summary: group by everything-but-algorithm; ratio each
+    // row's comm volume and virtual time against the group minimum.  The
+    // group key is the cell id minus its algorithm suffix — NOT a
+    // reconstruction from config fields, because per-algorithm calibration
+    // legitimately varies fields like the compressor within a comparison
+    // group (C²DFB's calibrated top-k vs the baselines' default), and the
+    // id is the one string that carries exactly the declared axis values.
+    let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (i, c) in cells.iter().enumerate() {
+        groups.entry(group_key(c)).or_default().push(i);
+    }
+    let mut summary = Vec::new();
+    for (key, members) in &groups {
+        let ok: Vec<(&Cell, &RunMetrics)> = members
+            .iter()
+            .filter_map(|&i| outcomes[i].metrics().map(|m| (&cells[i], m)))
+            .collect();
+        if ok.is_empty() {
+            continue;
+        }
+        let min_mb = ok
+            .iter()
+            .map(|(_, m)| m.ledger.total_mb())
+            .fold(f64::INFINITY, f64::min);
+        let min_t = ok
+            .iter()
+            .map(|(_, m)| m.ledger.network_time_s)
+            .fold(f64::INFINITY, f64::min);
+        let rows: Vec<Json> = ok
+            .iter()
+            .map(|(c, m)| {
+                let last = m.final_point();
+                Json::obj(vec![
+                    ("algo", Json::str(c.cfg.algorithm.name())),
+                    ("comm_mb", Json::num(m.ledger.total_mb())),
+                    (
+                        "comm_x_best",
+                        Json::num(if min_mb > 0.0 {
+                            m.ledger.total_mb() / min_mb
+                        } else {
+                            f64::NAN
+                        }),
+                    ),
+                    ("network_time_s", Json::num(m.ledger.network_time_s)),
+                    (
+                        "time_x_best",
+                        Json::num(if min_t > 0.0 {
+                            m.ledger.network_time_s / min_t
+                        } else {
+                            f64::NAN
+                        }),
+                    ),
+                    ("first_order", Json::num(m.oracles.first_order as f64)),
+                    ("second_order", Json::num(m.oracles.second_order as f64)),
+                    (
+                        "final_loss",
+                        Json::num(last.map_or(f64::NAN, |p| p.loss)),
+                    ),
+                    (
+                        "final_accuracy",
+                        Json::num(last.map_or(f64::NAN, |p| p.accuracy)),
+                    ),
+                ])
+            })
+            .collect();
+        summary.push(Json::obj(vec![
+            ("group", Json::str(key)),
+            ("algos", Json::Arr(rows)),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("format", Json::num(1.0)),
+        ("cells", Json::Arr(cell_docs)),
+        ("summary", Json::Arr(summary)),
+    ])
+}
+
+/// Write `report.csv` + `report.json` under `dir` (created if needed).
+pub fn write_report(
+    dir: &Path,
+    cells: &[Cell],
+    outcomes: &[CellOutcome],
+) -> Result<(PathBuf, PathBuf)> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating report dir {}", dir.display()))?;
+    let csv = dir.join("report.csv");
+    std::fs::write(&csv, report_csv(cells, outcomes))
+        .with_context(|| format!("writing {}", csv.display()))?;
+    let json = dir.join("report.json");
+    std::fs::write(&json, report_json(cells, outcomes).to_string() + "\n")
+        .with_context(|| format!("writing {}", json.display()))?;
+    Ok((csv, json))
+}
+
+/// Compare two outcome sets on every deterministic field — bit-level for
+/// floats, exact for counters and stop reasons; wall-clock fields exempt.
+/// Returns the first difference, or `None` when the sets are
+/// bit-identical (the `parallel ≡ serial` proof obligation).
+pub fn diff_outcomes(a: &[CellOutcome], b: &[CellOutcome]) -> Option<String> {
+    if a.len() != b.len() {
+        return Some(format!("cell count differs: {} vs {}", a.len(), b.len()));
+    }
+    for (x, y) in a.iter().zip(b) {
+        if x.id != y.id {
+            return Some(format!("cell order differs: {:?} vs {:?}", x.id, y.id));
+        }
+        match (&x.result, &y.result) {
+            (Err(e1), Err(e2)) => {
+                if e1 != e2 {
+                    return Some(format!("{}: errors differ: {e1:?} vs {e2:?}", x.id));
+                }
+            }
+            (Ok(_), Err(e)) | (Err(e), Ok(_)) => {
+                return Some(format!("{}: ok on one side, error on the other: {e}", x.id));
+            }
+            (Ok(m1), Ok(m2)) => {
+                if let Some(d) = diff_metrics(&x.id, m1, m2) {
+                    return Some(d);
+                }
+            }
+        }
+    }
+    None
+}
+
+fn diff_metrics(id: &str, a: &RunMetrics, b: &RunMetrics) -> Option<String> {
+    let exact = [
+        ("total_bytes", a.ledger.total_bytes, b.ledger.total_bytes),
+        ("messages", a.ledger.messages, b.ledger.messages),
+        ("gossip_rounds", a.ledger.gossip_rounds, b.ledger.gossip_rounds),
+        ("dropped", a.ledger.dropped_messages, b.ledger.dropped_messages),
+        (
+            "network_time_bits",
+            a.ledger.network_time_s.to_bits(),
+            b.ledger.network_time_s.to_bits(),
+        ),
+        ("first_order", a.oracles.first_order, b.oracles.first_order),
+        ("second_order", a.oracles.second_order, b.oracles.second_order),
+        ("evals", a.oracles.evals, b.oracles.evals),
+    ];
+    for (k, va, vb) in exact {
+        if va != vb {
+            return Some(format!("{id}: {k} {va} vs {vb}"));
+        }
+    }
+    let (ra, rb) = (
+        a.stop_reason.map(|r| r.name()),
+        b.stop_reason.map(|r| r.name()),
+    );
+    if ra != rb {
+        return Some(format!("{id}: stop reason {ra:?} vs {rb:?}"));
+    }
+    if a.trace.len() != b.trace.len() {
+        return Some(format!(
+            "{id}: trace length {} vs {}",
+            a.trace.len(),
+            b.trace.len()
+        ));
+    }
+    for (i, (p, q)) in a.trace.iter().zip(&b.trace).enumerate() {
+        let fields = [
+            ("round", p.round as u64, q.round as u64),
+            ("comm_mb", p.comm_mb.to_bits(), q.comm_mb.to_bits()),
+            ("sim_time", p.sim_time_s.to_bits(), q.sim_time_s.to_bits()),
+            ("loss", p.loss.to_bits(), q.loss.to_bits()),
+            ("accuracy", p.accuracy.to_bits(), q.accuracy.to_bits()),
+            ("grad_norm", p.grad_norm.to_bits(), q.grad_norm.to_bits()),
+            (
+                "consensus",
+                p.consensus_err.to_bits(),
+                q.consensus_err.to_bits(),
+            ),
+            ("dropped", p.dropped_msgs, q.dropped_msgs),
+        ];
+        for (k, va, vb) in fields {
+            if va != vb {
+                return Some(format!("{id}[{i}]: {k} differs ({va} vs {vb})"));
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derive_seed_is_stable_and_id_sensitive() {
+        // The docs/SWEEP.md contract: a pure function of (base, id),
+        // sensitive to both (changing the hash is a fixture-breaking
+        // change and must be deliberate).
+        assert_eq!(derive_seed(42, "a+b+c"), derive_seed(42, "a+b+c"));
+        assert_ne!(derive_seed(42, "a+b+c"), derive_seed(43, "a+b+c"));
+        assert_ne!(derive_seed(42, "a+b+c"), derive_seed(42, "a+b+d"));
+        // Independent of any global state: pure function of its inputs.
+        let first = derive_seed(7, "cell");
+        for _ in 0..3 {
+            assert_eq!(derive_seed(7, "cell"), first);
+        }
+    }
+
+    #[test]
+    fn parse_list_accepts_strings_and_arrays() {
+        let v = TomlValue::Str("a, b,c".into());
+        assert_eq!(parse_list(&v).unwrap(), vec!["a", "b", "c"]);
+        let v = TomlValue::Arr(vec![
+            TomlValue::Str("x".into()),
+            TomlValue::Str("y".into()),
+        ]);
+        assert_eq!(parse_list(&v).unwrap(), vec!["x", "y"]);
+        assert!(parse_list(&TomlValue::Int(3)).is_err());
+    }
+
+    #[test]
+    fn apply_stop_covers_every_kind() {
+        let mut cfg = ExperimentConfig::default();
+        apply_stop(&mut cfg, "rounds:7").unwrap();
+        assert_eq!(cfg.rounds, 7);
+        apply_stop(&mut cfg, "comm_mb:1.5").unwrap();
+        assert_eq!(cfg.stop.comm_mb, Some(1.5));
+        apply_stop(&mut cfg, "oracles:5000").unwrap();
+        assert_eq!(cfg.stop.first_order, Some(5000));
+        apply_stop(&mut cfg, "acc:0.7").unwrap();
+        assert_eq!(cfg.target_accuracy, Some(0.7));
+        apply_stop(&mut cfg, "sim_secs:2.5").unwrap();
+        assert_eq!(cfg.stop.sim_secs, Some(2.5));
+        apply_stop(&mut cfg, "rounds").unwrap(); // no-op
+        assert!(apply_stop(&mut cfg, "bogus:1").is_err());
+        assert!(apply_stop(&mut cfg, "comm_mb:x").is_err());
+        // Wall-clock stops are scheduler-dependent: rejected with a hint.
+        let err = apply_stop(&mut cfg, "wall_secs:3").unwrap_err();
+        assert!(err.contains("sim_secs"), "{err}");
+        assert_eq!(cfg.stop.wall_secs, None);
+    }
+
+    #[test]
+    fn tiny_grid_expands_with_unique_ids_and_derived_seeds() {
+        let spec = SweepSpec::tiny();
+        let grid = expand(&spec).unwrap();
+        assert_eq!(grid.cells.len(), 2 * 2 * 2 * 2, "2 algos×2 tasks×2 topos×2 engines");
+        assert_eq!(grid.tasks.len(), 2, "one task instance per (task, partition)");
+        let mut ids: Vec<&str> = grid.cells.iter().map(|c| c.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), grid.cells.len(), "cell ids must be unique");
+        for c in &grid.cells {
+            assert_eq!(c.cfg.seed, derive_seed(spec.base.seed, &c.id));
+            c.cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", c.id));
+        }
+    }
+
+    #[test]
+    fn sweep_toml_roundtrip() {
+        let spec = SweepSpec::from_toml_str(
+            r#"
+[experiment]
+nodes = 6
+rounds = 12
+seed = 9
+
+[sweep]
+algos = "c2dfb,mdbo"
+tasks = "quadratic"
+topologies = "ring,2hop"
+engines = "sync,sim"
+stops = "rounds,comm_mb:2.5"
+jobs = 3
+calibrate = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.base.nodes, 6);
+        assert_eq!(spec.base.rounds, 12);
+        assert_eq!(spec.base.seed, 9);
+        assert_eq!(spec.algos, vec![Algorithm::C2dfb, Algorithm::Mdbo]);
+        assert_eq!(spec.topologies, vec!["ring", "2hop"]);
+        assert_eq!(spec.engines, vec![NetMode::Sync, NetMode::Event]);
+        assert_eq!(spec.stops, vec!["rounds", "comm_mb:2.5"]);
+        assert_eq!(spec.jobs, 3);
+        assert!(!spec.calibrate);
+        assert!(SweepSpec::from_toml_str("[sweep]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn report_csv_handles_errors_without_commas() {
+        let cell = Cell {
+            id: "x".into(),
+            cfg: ExperimentConfig::default(),
+            task: TaskRef::Shared(0),
+        };
+        let out = CellOutcome {
+            id: "x".into(),
+            result: Err("boom, with commas\nand newlines".into()),
+        };
+        let csv = report_csv(&[cell], &[out]);
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.contains("error"));
+        assert!(row.contains("boom; with commas;and newlines"));
+        assert_eq!(
+            row.split(',').count(),
+            csv.lines().next().unwrap().split(',').count()
+        );
+    }
+}

@@ -197,11 +197,19 @@ pub fn config_for(s: &Scenario) -> ExperimentConfig {
     cfg
 }
 
-/// Run one scenario against an already-built task.
+/// Run one scenario against an already-built task.  Attaches the same
+/// divergence guard the sweep pool uses for `bless`/`replay`
+/// ([`crate::coordinator::sweep::HarnessObserver`]), so this path and
+/// the pooled fixture pipeline record identical traces for any scenario
+/// — including a hypothetical diverging one, which both would truncate
+/// with `stop_reason = observer_abort` (and which replay would then
+/// flag as drift against a healthy fixture).
 pub fn run_scenario(task: &(dyn BilevelTask + Sync), s: &Scenario) -> Result<RunMetrics> {
     let cfg = config_for(s);
+    let mut guard = crate::coordinator::sweep::HarnessObserver { verbose: false };
     Runner::new(&cfg)
         .shared_task(task)
+        .observer(&mut guard)
         .run()
         .with_context(|| format!("golden scenario {} ({})", s.id(), s.task.name()))
 }
@@ -251,31 +259,45 @@ fn run_json(s: &Scenario, m: &RunMetrics) -> Json {
 }
 
 /// Run every scenario of one task kind and assemble the fixture document.
-fn fixture_for(task: TaskKind) -> Result<Json> {
+/// The scenarios execute as cells on the sweep orchestrator's
+/// work-stealing pool (`jobs` workers; 0 = all cores), so replay and
+/// bless exercise — and are therefore proven against — the same
+/// determinism-under-parallelism contract as every other sweep: the
+/// assembled document is byte-identical at any `jobs`.
+fn fixture_for(task: TaskKind, jobs: usize) -> Result<Json> {
+    use crate::coordinator::sweep::{self, Cell, TaskRef};
     let t = task.build();
-    let mut scenarios = Vec::new();
-    for s in matrix().into_iter().filter(|s| s.task == task) {
-        let m = run_scenario(t.as_ref(), &s)?;
-        scenarios.push((s.id(), run_json(&s, &m)));
+    let scenarios: Vec<Scenario> = matrix().into_iter().filter(|s| s.task == task).collect();
+    let cells: Vec<Cell> = scenarios
+        .iter()
+        .map(|s| Cell { id: s.id(), cfg: config_for(s), task: TaskRef::Shared(0) })
+        .collect();
+    let outcomes = sweep::run_cells(&cells, &[t.as_ref()], None, jobs, false);
+    let mut out = Vec::new();
+    for (s, o) in scenarios.iter().zip(outcomes) {
+        let m = o.result.map_err(|e| {
+            anyhow::anyhow!("golden scenario {} ({}): {e}", s.id(), s.task.name())
+        })?;
+        out.push((s.id(), run_json(s, &m)));
     }
     Ok(Json::obj(vec![
         ("format", Json::num(FORMAT as f64)),
         ("task", Json::str(task.name())),
         (
             "scenarios",
-            Json::Obj(scenarios.into_iter().collect()),
+            Json::Obj(out.into_iter().collect()),
         ),
     ]))
 }
 
 /// Regenerate all fixture files under `dir`.  Deterministic: a second
-/// bless writes byte-identical files.
-pub fn bless(dir: &Path) -> Result<Vec<PathBuf>> {
+/// bless writes byte-identical files, at any `jobs` (0 = all cores).
+pub fn bless(dir: &Path, jobs: usize) -> Result<Vec<PathBuf>> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating fixture dir {}", dir.display()))?;
     let mut written = Vec::new();
     for task in TaskKind::ALL {
-        let doc = fixture_for(task)?;
+        let doc = fixture_for(task, jobs)?;
         let path = fixture_path(dir, task);
         std::fs::write(&path, doc.to_string() + "\n")
             .with_context(|| format!("writing {}", path.display()))?;
@@ -377,15 +399,17 @@ fn diff_run(id: &str, expected: &Json, actual: &Json, out: &mut Vec<String>) {
     }
 }
 
-/// Replay the full matrix against the fixtures under `dir`.  Absent
-/// fixture files are bootstrapped (written from the current code) and
-/// reported; present files are diffed field by field.
-pub fn replay(dir: &Path) -> Result<ReplayReport> {
+/// Replay the full matrix against the fixtures under `dir`, running the
+/// scenario re-runs on the sweep pool (`jobs` workers; 0 = all cores —
+/// the results are bit-identical at any width).  Absent fixture files
+/// are bootstrapped (written from the current code) and reported;
+/// present files are diffed field by field.
+pub fn replay(dir: &Path, jobs: usize) -> Result<ReplayReport> {
     let mut report = ReplayReport::default();
     for task in TaskKind::ALL {
         let path = fixture_path(dir, task);
         if !path.exists() {
-            let actual = fixture_for(task)?;
+            let actual = fixture_for(task, jobs)?;
             std::fs::create_dir_all(dir)
                 .with_context(|| format!("creating fixture dir {}", dir.display()))?;
             std::fs::write(&path, actual.to_string() + "\n")
@@ -406,7 +430,7 @@ pub fn replay(dir: &Path) -> Result<ReplayReport> {
                 path.display()
             );
         }
-        let actual = fixture_for(task)?;
+        let actual = fixture_for(task, jobs)?;
         let empty = std::collections::BTreeMap::new();
         let escn = expected
             .get("scenarios")

@@ -34,6 +34,13 @@
 //! functions, and `c2dfb budget` for the equal-communication-budget
 //! comparison harness.
 //!
+//! Batch execution lives one level up in [`coordinator::sweep`]: a
+//! declarative scenario grid (algorithm × task × topology × compressor ×
+//! partition × engine × stop) executed concurrently on a work-stealing
+//! pool, bit-identical to serial at any width, with aggregated CSV/JSON
+//! reports — `c2dfb sweep`, `docs/SWEEP.md`.  All experiment harnesses
+//! and the goldens replay run through it.
+//!
 //! ## Transports
 //!
 //! Algorithms gossip through the [`collective::Transport`] trait and run

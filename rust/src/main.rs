@@ -4,19 +4,21 @@
 //! c2dfb run [--config cfg.toml] [--algo c2dfb] [--topology ring]
 //!           [--network sim --drop_rate 0.1 --straggler 0.25:0.05 ...]
 //!           [--stop_comm_mb MB --stop_first_order N --stop_wall_secs S ...]
+//! c2dfb sweep [--tiny] [--config cfg.toml] [--algos L] [--tasks L] ...
+//!           # declarative multi-axis scenario grid on the parallel pool
 //! c2dfb table1 [--rounds N] [--target 0.7] [--tiny]
 //! c2dfb fig2 | fig3 | fig4 | fig5 | fig6 | ablation [--rounds N] [--tiny]
 //! c2dfb all [--rounds N]          # every table+figure harness
 //! c2dfb netsweep [--rounds N] [--tiny]   # network-regime sweep (no artifacts)
 //! c2dfb budget [--budget_mb MB] [--tiny]  # equal-comm-budget comparison
-//! c2dfb goldens [--bless] [--dir D]  # golden-trace fixtures: replay/bless
+//! c2dfb goldens [--bless] [--dir D] [--jobs N]  # golden-trace fixtures
 //! c2dfb artifacts                  # list AOT artifacts + shapes
 //! ```
 
 use anyhow::{anyhow, Result};
 use c2dfb::config::toml::TomlValue;
 use c2dfb::config::ExperimentConfig;
-use c2dfb::coordinator::{experiments, summarize, Runner};
+use c2dfb::coordinator::{experiments, summarize, sweep, Runner};
 use c2dfb::runtime::ArtifactRegistry;
 use c2dfb::util::cli::Args;
 
@@ -27,7 +29,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|goldens|all|artifacts> [options]
+const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|goldens|all|artifacts> [options]
   run options: --config <file.toml> plus any config key as --key value
                (e.g. --algo mdbo --topology er:0.4 --partition het:0.8
                 --rounds 100 --compressor topk:0.2 --lambda 10)
@@ -37,7 +39,16 @@ const USAGE: &str = "usage: c2dfb <run|table1|fig2|fig3|fig4|fig5|fig6|ablation|
                stop keys (budgeted stopping, first to fire wins):
                 --stop_comm_mb MB  --stop_first_order N  --stop_wall_secs S
                 --stop_sim_secs S  --stop_target_accuracy A  --stop_rounds N
+  sweep options (declarative scenario grid, executed concurrently; see
+            docs/SWEEP.md): --config <file.toml> with a [sweep] table, or
+            axis lists --algos --tasks --topologies --compressors
+            --partitions --engines --stops (comma-separated), base knobs
+            --nodes --rounds --seed --eval_every --out, --jobs N (cell
+            parallelism, 0 = all cores), --calibrate true|false,
+            --verify (prove N-way-parallel ≡ serial bit-identity; implied
+            by --tiny); writes runs/sweep/report.{csv,json}
   harness options: --rounds N  --target 0.7  --tiny  --out DIR  --seed S
+                   --jobs N (cell parallelism for artifact-free grids)
                    --verbose (stream one progress line per eval point)
   netsweep: C²DFB vs baselines across network regimes (no artifacts needed)
   budget:   all four algorithms to one communication budget (--budget_mb MB,
@@ -73,6 +84,7 @@ fn real_main() -> Result<()> {
             Ok(())
         }
         "run" => cmd_run(args),
+        "sweep" => cmd_sweep(args),
         "netsweep" => cmd_netsweep(args),
         "budget" => cmd_budget(args),
         "goldens" => cmd_goldens(args),
@@ -132,6 +144,122 @@ fn cmd_run(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+/// `c2dfb sweep`: expand the declared grid, execute it on the
+/// work-stealing pool, write the aggregated report, and (with --verify,
+/// implied by --tiny) prove the parallel run bit-identical to a serial
+/// re-run of the same grid.
+fn cmd_sweep(mut args: Args) -> Result<()> {
+    let tiny = args.flag("tiny");
+    let mut spec = match args.get("config") {
+        Some(path) => {
+            let mut s = sweep::SweepSpec::from_toml_file(std::path::Path::new(&path))
+                .map_err(anyhow::Error::msg)?;
+            s.tiny |= tiny;
+            s
+        }
+        None if tiny => sweep::SweepSpec::tiny(),
+        None => sweep::SweepSpec::default(),
+    };
+    // Base-config knobs, then axis lists — all optional CLI overrides.
+    for key in ["nodes", "rounds", "seed", "eval_every"] {
+        if let Some(v) = args.get(key) {
+            let tv = if let Ok(i) = v.parse::<i64>() {
+                TomlValue::Int(i)
+            } else {
+                TomlValue::Str(v)
+            };
+            spec.base.apply_one(key, &tv).map_err(anyhow::Error::msg)?;
+        }
+    }
+    if let Some(out) = args.get("out") {
+        spec.base.out_dir = out;
+    }
+    for key in [
+        "algos", "tasks", "topologies", "compressors", "partitions", "engines", "stops",
+        "jobs", "calibrate",
+    ] {
+        if let Some(v) = args.get(key) {
+            let tv = if let Ok(i) = v.parse::<i64>() {
+                TomlValue::Int(i)
+            } else if let Ok(b) = v.parse::<bool>() {
+                TomlValue::Bool(b)
+            } else {
+                TomlValue::Str(v)
+            };
+            spec.apply_one(key, &tv).map_err(anyhow::Error::msg)?;
+        }
+    }
+    let verify = args.flag("verify") || tiny;
+    let verbose = args.flag("verbose");
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let jobs = sweep::effective_jobs(spec.jobs);
+    let started = std::time::Instant::now();
+    let (grid, outcomes) = sweep::run(&spec, verbose)?;
+    println!(
+        "== sweep: {} cells ({} tasks × {} partitions × {} topologies × {} compressors × {} engines × {} stops × {} algos) on {jobs} workers ==",
+        grid.cells.len(),
+        spec.tasks.len(),
+        spec.partitions.len(),
+        spec.topologies.len(),
+        spec.compressors.len(),
+        spec.engines.len(),
+        spec.stops.len(),
+        spec.algos.len(),
+    );
+    let mut n_err = 0usize;
+    for (cell, o) in grid.cells.iter().zip(&outcomes) {
+        match &o.result {
+            Ok(m) => println!("  {:48} {}", cell.id, summarize(m)),
+            Err(e) => {
+                n_err += 1;
+                println!("  {:48} ERROR: {e}", cell.id);
+            }
+        }
+    }
+    println!(
+        "ran {} cells in {:.1}s wall ({n_err} errors)",
+        grid.cells.len(),
+        started.elapsed().as_secs_f64()
+    );
+    let dir = std::path::Path::new(&spec.base.out_dir).join(&spec.base.name);
+    let (csv, json) = sweep::write_report(&dir, &grid.cells, &outcomes)?;
+    println!("aggregated report: {} + {}", csv.display(), json.display());
+
+    if verify {
+        println!("verify: re-running the cells serially to prove bit-identity ...");
+        // Re-run the already-expanded cells at jobs = 1 — same cells,
+        // same task instances, no duplicate grid expansion or dataset
+        // generation; only the execution width changes.
+        let tasks: Vec<&(dyn c2dfb::tasks::BilevelTask + Sync)> =
+            grid.tasks.iter().map(|t| t.as_ref()).collect();
+        let soutcomes = sweep::run_cells(&grid.cells, &tasks, None, 1, false);
+        if let Some(d) = sweep::diff_outcomes(&outcomes, &soutcomes) {
+            anyhow::bail!("parallel execution diverged from serial: {d}");
+        }
+        let par_csv = sweep::report_csv(&grid.cells, &outcomes);
+        let ser_csv = sweep::report_csv(&grid.cells, &soutcomes);
+        let par_json = sweep::report_json(&grid.cells, &outcomes).to_string();
+        let ser_json = sweep::report_json(&grid.cells, &soutcomes).to_string();
+        anyhow::ensure!(
+            par_csv == ser_csv && par_json == ser_json,
+            "aggregate report bytes differ between parallel and serial execution"
+        );
+        println!(
+            "OK {jobs}-way-parallel ≡ serial: all {} per-cell results bit-identical, report bytes identical.",
+            outcomes.len()
+        );
+    }
+    if n_err > 0 {
+        anyhow::bail!(
+            "{n_err} of {} cells failed — per-cell errors are in the report at {}",
+            grid.cells.len(),
+            csv.display()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_netsweep(mut args: Args) -> Result<()> {
     let tiny = args.flag("tiny");
     let opts = experiments::HarnessOpts {
@@ -139,6 +267,7 @@ fn cmd_netsweep(mut args: Args) -> Result<()> {
         out_dir: args.get_or("out", "runs"),
         seed: args.get_parse("seed", 42u64),
         verbose: args.flag("verbose"),
+        jobs: args.get_parse("jobs", 1usize),
         ..Default::default()
     };
     args.finish().map_err(anyhow::Error::msg)?;
@@ -161,6 +290,7 @@ fn cmd_budget(mut args: Args) -> Result<()> {
         out_dir: args.get_or("out", "runs"),
         seed: args.get_parse("seed", 42u64),
         verbose: args.flag("verbose"),
+        jobs: args.get_parse("jobs", 1usize),
         ..Default::default()
     };
     args.finish().map_err(anyhow::Error::msg)?;
@@ -179,9 +309,12 @@ fn cmd_goldens(mut args: Args) -> Result<()> {
         Some(d) => std::path::PathBuf::from(d),
         None => c2dfb::goldens::default_dir(),
     };
+    // Scenario re-runs go through the sweep pool; bit-identical at any
+    // width (0 = all cores).
+    let jobs = args.get_parse("jobs", 1usize);
     args.finish().map_err(anyhow::Error::msg)?;
     if bless {
-        let written = c2dfb::goldens::bless(&dir)?;
+        let written = c2dfb::goldens::bless(&dir, jobs)?;
         for p in &written {
             println!("blessed {}", p.display());
         }
@@ -191,7 +324,7 @@ fn cmd_goldens(mut args: Args) -> Result<()> {
         );
         return Ok(());
     }
-    let report = c2dfb::goldens::replay(&dir)?;
+    let report = c2dfb::goldens::replay(&dir, jobs)?;
     for p in &report.bootstrapped {
         println!("bootstrapped {} (no fixture on disk; commit it)", p.display());
     }
@@ -221,6 +354,7 @@ fn cmd_harness(which: &str, mut args: Args) -> Result<()> {
         out_dir: args.get_or("out", "runs"),
         seed: args.get_parse("seed", 42u64),
         verbose: args.flag("verbose"),
+        jobs: args.get_parse("jobs", 1usize),
         ..Default::default()
     };
     if tiny {

@@ -771,7 +771,8 @@ mod tests {
             topology_schedule: vec![(1, Topology::Complete)],
             ..NetConfig::default()
         };
-        let build = || SimNetwork::new(Graph::build(Topology::Ring, m), cfg_net.clone(), 5);
+        let build =
+            || SimNetwork::new(Graph::build(Topology::Ring, m), cfg_net.clone(), 5).unwrap();
 
         // One step: the tick lands between this step's two exchanges.
         let mut net = build();

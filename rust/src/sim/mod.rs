@@ -148,8 +148,8 @@ impl NetConfig {
     }
 
     pub fn validate(&self) -> Result<(), String> {
-        if !(0.0..1.0).contains(&self.drop_rate) {
-            return Err(format!("drop_rate must be in [0, 1), got {}", self.drop_rate));
+        if !(0.0..=1.0).contains(&self.drop_rate) {
+            return Err(format!("drop_rate must be in [0, 1], got {}", self.drop_rate));
         }
         if self.latency_s < 0.0 || self.jitter_s < 0.0 || self.straggler_delay_s < 0.0 {
             return Err("latency/jitter/straggler delay must be non-negative".into());
@@ -224,7 +224,11 @@ mod tests {
         assert!(c.validate().is_err());
         c.mode = NetMode::Event;
         assert!(c.validate().is_ok());
+        // Total loss is a legal (if hostile) regime; the zero-delivery
+        // round is exercised by sim::net's total-loss regression test.
         c.drop_rate = 1.0;
+        assert!(c.validate().is_ok());
+        c.drop_rate = 1.5;
         assert!(c.validate().is_err());
         let c = NetConfig {
             bandwidth_bytes_per_s: 0.0,

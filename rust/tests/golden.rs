@@ -12,7 +12,7 @@ use c2dfb::goldens::{self, Engine, TaskKind};
 #[test]
 fn full_matrix_replays_against_committed_fixtures() {
     let dir = goldens::default_dir();
-    let report = goldens::replay(&dir).expect("replay failed to run");
+    let report = goldens::replay(&dir, 1).expect("replay failed to run");
     for p in &report.bootstrapped {
         eprintln!(
             "NOTE: bootstrapped golden fixture {} — commit it to pin behavior",
@@ -30,9 +30,10 @@ fn full_matrix_replays_against_committed_fixtures() {
     }
 }
 
-/// Blessing twice into different directories produces byte-identical
-/// files: the whole pipeline (data generation, partitioning, algorithms,
-/// transports, serialization) is deterministic.
+/// Blessing twice into different directories — serially the first time,
+/// on a 4-worker sweep pool the second — produces byte-identical files:
+/// the whole pipeline (data generation, partitioning, algorithms,
+/// transports, serialization) is deterministic at any parallelism.
 #[test]
 fn bless_is_byte_identical_across_runs() {
     let base = std::env::temp_dir().join("c2dfb_goldens_determinism");
@@ -40,8 +41,8 @@ fn bless_is_byte_identical_across_runs() {
     for d in [&d1, &d2] {
         let _ = std::fs::remove_dir_all(d);
     }
-    let w1 = goldens::bless(&d1).expect("first bless");
-    let w2 = goldens::bless(&d2).expect("second bless");
+    let w1 = goldens::bless(&d1, 1).expect("first bless");
+    let w2 = goldens::bless(&d2, 4).expect("second bless");
     assert_eq!(w1.len(), 3);
     assert_eq!(w2.len(), 3);
     for (a, b) in w1.iter().zip(&w2) {
@@ -64,8 +65,8 @@ fn bless_is_byte_identical_across_runs() {
 fn fresh_bless_replays_clean() {
     let dir = std::env::temp_dir().join("c2dfb_goldens_selfcheck");
     let _ = std::fs::remove_dir_all(&dir);
-    goldens::bless(&dir).expect("bless");
-    let report = goldens::replay(&dir).expect("replay");
+    goldens::bless(&dir, 1).expect("bless");
+    let report = goldens::replay(&dir, 2).expect("replay");
     assert!(report.bootstrapped.is_empty());
     assert_eq!(report.checked, 48);
     assert!(report.ok(), "self-replay drift: {:?}", report.mismatches);
@@ -106,7 +107,7 @@ fn replay_detects_injected_drift() {
 
     let dir = std::env::temp_dir().join("c2dfb_goldens_drift");
     let _ = std::fs::remove_dir_all(&dir);
-    goldens::bless(&dir).expect("bless");
+    goldens::bless(&dir, 1).expect("bless");
     let path = dir.join("quadratic.json");
     let text = std::fs::read_to_string(&path).unwrap();
     let mut doc = Json::parse(&text).unwrap();
@@ -127,7 +128,7 @@ fn replay_detects_injected_drift() {
         }
     }
     std::fs::write(&path, doc.to_string() + "\n").unwrap();
-    let report = goldens::replay(&dir).expect("replay");
+    let report = goldens::replay(&dir, 2).expect("replay");
     assert!(
         !report.ok(),
         "injected drift must be detected by the replay diff"

@@ -349,5 +349,6 @@ fn budget_harness_tiny_completes() {
         }
     }
     let n_files = std::fs::read_dir(dir.join("budget")).unwrap().count();
-    assert_eq!(n_files, 4 * 2); // csv + json per algorithm
+    // csv + json per algorithm, plus the sweep engine's report.{csv,json}.
+    assert_eq!(n_files, 4 * 2 + 2);
 }

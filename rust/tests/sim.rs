@@ -128,7 +128,7 @@ fn drop_rate_accounting_is_exact() {
         drop_rate: 0.2,
         ..NetConfig::default()
     };
-    let mut net = SimNetwork::new(Graph::build(Topology::TwoHopRing, 8), cfg, 5);
+    let mut net = SimNetwork::new(Graph::build(Topology::TwoHopRing, 8), cfg, 5).unwrap();
     let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 16]).collect();
     let mut delivered = 0u64;
     for _ in 0..100 {
@@ -170,7 +170,7 @@ fn straggler_virtual_time_ordering() {
         straggler_delay_s: delay,
         ..NetConfig::default()
     };
-    let mut net = SimNetwork::new(Graph::build(Topology::Ring, 8), cfg, 17);
+    let mut net = SimNetwork::new(Graph::build(Topology::Ring, 8), cfg, 17).unwrap();
     let lag = net.stragglers();
     assert_eq!(lag.len(), 2); // ceil(0.15 * 8)
     let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 4]).collect();
@@ -275,7 +275,29 @@ fn netsweep_tiny_completes() {
     let runs = experiments::netsweep(&opts, true).expect("netsweep failed");
     assert_eq!(runs.len(), 6 * 3); // 6 regimes × 3 algorithms
     assert!(runs.iter().all(|r| !r.trace.is_empty()));
-    // Traces landed on disk.
+    // Traces landed on disk, plus the sweep engine's aggregated report.
     let n_files = std::fs::read_dir(dir.join("netsweep")).unwrap().count();
-    assert_eq!(n_files, 6 * 3 * 2); // csv + json each
+    assert_eq!(n_files, 6 * 3 * 2 + 2); // csv + json each, + report.{csv,json}
+    assert!(dir.join("netsweep/report.csv").exists());
+    assert!(dir.join("netsweep/report.json").exists());
+}
+
+/// Regression for the zero-delivery panic path: a full run under total
+/// message loss (`drop_rate = 1.0`) completes cleanly — every inbox is
+/// empty every round, the nodes fall back to their own state, and the
+/// driver still records a finite trace and a `rounds` stop.
+#[test]
+fn total_loss_run_completes_without_panicking() {
+    let task = QuadraticTask::generate(4, 6, 0.5, 97);
+    let mut cfg = quad_cfg(Algorithm::C2dfb);
+    cfg.nodes = 4;
+    cfg.rounds = 3;
+    cfg.inner_steps = 3;
+    cfg.eval_every = 1;
+    cfg.network.mode = NetMode::Event;
+    cfg.network.drop_rate = 1.0;
+    let m = run_with_task(&task, &cfg).unwrap();
+    assert_eq!(m.ledger.dropped_messages, m.ledger.messages);
+    assert!(m.ledger.messages > 0);
+    assert!(m.final_point().unwrap().loss.is_finite());
 }

@@ -1,0 +1,198 @@
+//! Sweep-orchestrator acceptance tests: the same grid at parallelism 1,
+//! 2 and max yields bit-identical per-cell RunMetrics and identical
+//! aggregate report bytes; a failing cell is reported per-cell without
+//! aborting its siblings; and the refactored harnesses produce identical
+//! results at any `--jobs`.
+
+use c2dfb::config::{Algorithm, ExperimentConfig};
+use c2dfb::coordinator::sweep::{self, Cell, SweepSpec, TaskRef};
+use c2dfb::coordinator::experiments;
+use c2dfb::tasks::QuadraticTask;
+
+/// The acceptance criterion behind `c2dfb sweep --tiny`: one multi-axis
+/// grid (2 algos × 2 tasks × 2 topologies × 2 engines), executed at
+/// three pool widths, must agree bit-for-bit — per-cell metrics AND the
+/// aggregated CSV/JSON report bytes.
+#[test]
+fn same_grid_bit_identical_at_parallelism_1_2_and_max() {
+    let run_at = |jobs: usize| {
+        let mut spec = SweepSpec::tiny();
+        spec.jobs = jobs;
+        sweep::run(&spec, false).expect("sweep run")
+    };
+    let (g1, o1) = run_at(1);
+    assert_eq!(g1.cells.len(), 16);
+    assert!(o1.iter().all(|o| o.result.is_ok()), "tiny grid must be clean");
+    for jobs in [2, 0] {
+        let (g, o) = run_at(jobs);
+        assert_eq!(
+            sweep::diff_outcomes(&o1, &o),
+            None,
+            "per-cell results must be bit-identical at jobs={jobs}"
+        );
+        assert_eq!(
+            sweep::report_csv(&g1.cells, &o1),
+            sweep::report_csv(&g.cells, &o),
+            "CSV report bytes must be identical at jobs={jobs}"
+        );
+        assert_eq!(
+            sweep::report_json(&g1.cells, &o1).to_string(),
+            sweep::report_json(&g.cells, &o).to_string(),
+            "JSON report bytes must be identical at jobs={jobs}"
+        );
+    }
+}
+
+/// Error isolation: a cell with an invalid config fails alone; every
+/// sibling (before and after it in declaration order) completes, and the
+/// report carries the per-cell error.
+#[test]
+fn failing_cell_does_not_abort_siblings() {
+    let task = QuadraticTask::generate(4, 6, 0.5, 11);
+    let mut cells = Vec::new();
+    for (i, comp) in ["topk:0.5", "qsgd:0", "topk:0.5"].iter().enumerate() {
+        let cfg = ExperimentConfig {
+            algorithm: Algorithm::C2dfb,
+            nodes: 4,
+            rounds: 2,
+            inner_steps: 3,
+            eta_out: 0.1,
+            eta_in: 0.2,
+            eval_every: 1,
+            compressor: comp.to_string(),
+            ..ExperimentConfig::default()
+        };
+        cells.push(Cell { id: format!("cell{i}+{comp}"), cfg, task: TaskRef::Shared(0) });
+    }
+    let outcomes = sweep::run_cells(&cells, &[&task], None, 3, false);
+    assert_eq!(outcomes.len(), 3);
+    assert!(outcomes[0].result.is_ok(), "{:?}", outcomes[0].result.as_ref().err());
+    assert!(outcomes[1].result.is_err(), "qsgd:0 must fail validation");
+    assert!(outcomes[2].result.is_ok(), "sibling after the failure must still run");
+    let csv = sweep::report_csv(&cells, &outcomes);
+    let rows: Vec<&str> = csv.lines().collect();
+    assert_eq!(rows.len(), 4, "header + one row per cell");
+    assert!(rows[2].contains("error"));
+    assert!(rows[1].contains(",ok,") && rows[3].contains(",ok,"));
+}
+
+/// A registry-lane cell without a registry is a per-cell error, and a
+/// shared-lane cell pointing past the task table is too — never a panic,
+/// never an abort of the other cells.
+#[test]
+fn bad_task_references_are_per_cell_errors() {
+    let task = QuadraticTask::generate(4, 6, 0.5, 12);
+    let ok_cfg = ExperimentConfig {
+        nodes: 4,
+        rounds: 2,
+        inner_steps: 3,
+        eta_out: 0.1,
+        eta_in: 0.2,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    let cells = vec![
+        Cell { id: "good".into(), cfg: ok_cfg.clone(), task: TaskRef::Shared(0) },
+        Cell { id: "no-registry".into(), cfg: ok_cfg.clone(), task: TaskRef::Registry },
+        Cell { id: "out-of-range".into(), cfg: ok_cfg, task: TaskRef::Shared(7) },
+    ];
+    let outcomes = sweep::run_cells(&cells, &[&task], None, 2, false);
+    assert!(outcomes[0].result.is_ok());
+    assert!(outcomes[1].result.as_ref().unwrap_err().contains("registry"));
+    assert!(outcomes[2].result.as_ref().unwrap_err().contains("out of range"));
+}
+
+/// The divergence guard stays armed on the parallel lane: a cell driven
+/// into non-finite losses stops with `observer_abort` instead of burning
+/// its whole round budget, and its siblings are unaffected.
+#[test]
+fn divergence_guard_fires_inside_parallel_cells() {
+    let task = QuadraticTask::generate(4, 6, 0.5, 13);
+    let mut diverging = ExperimentConfig {
+        nodes: 4,
+        rounds: 50,
+        inner_steps: 5,
+        eta_out: 1e6, // far past the stability edge
+        eta_in: 1e6,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    diverging.algorithm = Algorithm::C2dfb;
+    let sane = ExperimentConfig {
+        nodes: 4,
+        rounds: 3,
+        inner_steps: 3,
+        eta_out: 0.1,
+        eta_in: 0.2,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    let cells = vec![
+        Cell { id: "diverging".into(), cfg: diverging, task: TaskRef::Shared(0) },
+        Cell { id: "sane".into(), cfg: sane, task: TaskRef::Shared(0) },
+    ];
+    let outcomes = sweep::run_cells(&cells, &[&task], None, 2, false);
+    let m = outcomes[0].metrics().expect("aborted runs still return metrics");
+    assert_eq!(
+        m.stop_reason,
+        Some(c2dfb::metrics::StopReason::Observer),
+        "guard must abort the diverging cell"
+    );
+    assert!(m.trace.len() < 50, "abort must fire well before the round cap");
+    assert!(outcomes[1].result.is_ok());
+}
+
+/// Cell seeds follow the published derivation contract and the task
+/// table is shared: every cell of a (task, partition) group points at
+/// one task instance, so comparisons run on identical data.
+#[test]
+fn expansion_shares_tasks_and_derives_seeds() {
+    let spec = SweepSpec::tiny();
+    let grid = sweep::expand(&spec).unwrap();
+    // 16 cells over 2 (task, partition) groups -> exactly 2 instances.
+    assert_eq!(grid.tasks.len(), 2);
+    for c in &grid.cells {
+        assert_eq!(c.cfg.seed, sweep::derive_seed(spec.base.seed, &c.id));
+        match c.task {
+            TaskRef::Shared(i) => assert!(i < grid.tasks.len()),
+            TaskRef::Registry => panic!("native sweeps never use the registry lane"),
+        }
+    }
+    // Editing an axis (dropping one topology) leaves surviving cells'
+    // seeds untouched — the contract that makes grids extendable.
+    let mut smaller = spec.clone();
+    smaller.topologies = vec!["ring".into()];
+    let sgrid = sweep::expand(&smaller).unwrap();
+    for sc in &sgrid.cells {
+        let twin = grid.cells.iter().find(|c| c.id == sc.id).expect("subset");
+        assert_eq!(twin.cfg.seed, sc.cfg.seed);
+    }
+}
+
+/// The refactored `budget` harness (now a grid declaration over the
+/// sweep engine) returns identical trajectories at any --jobs.
+#[test]
+fn budget_harness_identical_across_jobs() {
+    let dir = std::env::temp_dir().join("c2dfb_sweep_budget_jobs");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = |jobs: usize, sub: &str| experiments::HarnessOpts {
+        rounds: 40,
+        out_dir: dir.join(sub).to_str().unwrap().to_string(),
+        seed: 42,
+        jobs,
+        ..Default::default()
+    };
+    let serial = experiments::budget(&opts(1, "serial"), 0.4, true).unwrap();
+    let parallel = experiments::budget(&opts(4, "parallel"), 0.4, true).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.ledger.total_bytes, b.ledger.total_bytes, "{}", a.algo);
+        assert_eq!(a.stop_reason, b.stop_reason, "{}", a.algo);
+        let la: Vec<u64> = a.trace.iter().map(|p| p.loss.to_bits()).collect();
+        let lb: Vec<u64> = b.trace.iter().map(|p| p.loss.to_bits()).collect();
+        assert_eq!(la, lb, "{}", a.algo);
+    }
+    // The aggregated report landed next to the traces in both runs.
+    assert!(dir.join("serial/budget/report.csv").exists());
+    assert!(dir.join("parallel/budget/report.json").exists());
+}
