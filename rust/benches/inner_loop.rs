@@ -7,6 +7,12 @@
 //! loop is the full `IN` step: mix terms, residuals, compression, the
 //! borrowing exchange, and both folds.
 //!
+//! The assertion runs twice per configuration: once with the default
+//! no-op recorder, and once with a pre-sized JSONL trace recorder
+//! attached (`obs::Recorder::with_capacity`) — per-step instrumentation
+//! only bumps fixed-size aggregates, so tracing must not break the
+//! zero-allocation contract either.
+//!
 //! Writes `BENCH_inner.json` (override with `$C2DFB_BENCH_INNER_OUT`).
 
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -14,6 +20,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use c2dfb::collective::Network;
 use c2dfb::compress::parse;
+use c2dfb::obs::Recorder;
 use c2dfb::optim::{run_inner_with, GradFn, InnerConfig, InnerState};
 use c2dfb::topology::{Graph, Topology};
 use c2dfb::util::bench::{black_box, Bencher};
@@ -91,7 +98,8 @@ fn main() {
                 "Steady-state cost of one compressed inner step (Algorithm 2) on a ring of 10 \
                  nodes, analytic quadratic oracle evaluated in place. allocs_per_step counts \
                  heap allocations via a counting global allocator and MUST be 0 for every \
-                 compressor (asserted).",
+                 compressor (asserted), both with the no-op recorder and with a pre-sized \
+                 JSONL trace recorder attached (traced_allocs_per_step).",
             ),
         ),
         ("command".into(), Json::str("cd rust && cargo bench --bench inner_loop")),
@@ -148,6 +156,51 @@ fn main() {
                 "alloc-check inner_step/m10/d{dim}/{spec}: 0 allocations over {steady_steps} steps"
             );
 
+            // Same contract with the JSONL trace sink attached: per-step
+            // instrumentation bumps fixed-size aggregates only (lines are
+            // emitted at run/round boundaries, never per step), so a
+            // pre-sized recorder must keep the hot path allocation-free.
+            state.obs = Recorder::with_capacity(1 << 20, false);
+            state.obs.run_start("bench", &format!("d{dim}/{spec}"), m, 2, spec);
+            for _ in 0..5 {
+                run_inner_with(
+                    &cfg,
+                    &mut net,
+                    q.as_ref(),
+                    &mut rng,
+                    &mut state,
+                    &mut d,
+                    GradFn::Serial(&mut grad),
+                );
+            }
+            let before_traced = ALLOCATIONS.load(Ordering::Relaxed);
+            for _ in 0..steady_steps {
+                run_inner_with(
+                    &cfg,
+                    &mut net,
+                    q.as_ref(),
+                    &mut rng,
+                    &mut state,
+                    &mut d,
+                    GradFn::Serial(&mut grad),
+                );
+            }
+            let traced_allocs = ALLOCATIONS.load(Ordering::Relaxed) - before_traced;
+            assert_eq!(
+                traced_allocs, 0,
+                "{spec} d={dim}: {traced_allocs} heap allocations in {steady_steps} traced \
+                 steady-state inner steps — tracing must not allocate on the hot path"
+            );
+            let trace = state.obs.take_trace().expect("trace sink was attached");
+            assert!(
+                trace.contains("\"ev\":\"run_start\""),
+                "trace recorder attached but recorded nothing"
+            );
+            state.obs = Recorder::noop();
+            println!(
+                "alloc-check inner_step/m10/d{dim}/{spec}+trace: 0 allocations over {steady_steps} steps"
+            );
+
             let name = format!("inner_step/m10/d{dim}/{spec}");
             let mean = b.bench(&name, || {
                 run_inner_with(
@@ -166,6 +219,10 @@ fn main() {
             results.push((
                 format!("{key}/allocs_per_step"),
                 Json::num(allocs as f64 / steady_steps as f64),
+            ));
+            results.push((
+                format!("{key}/traced_allocs_per_step"),
+                Json::num(traced_allocs as f64 / steady_steps as f64),
             ));
             results.push((format!("{key}/kib_per_step"), Json::num(kib_per_step)));
             results.push((

@@ -26,6 +26,7 @@
 use super::{BilevelAlgorithm, RunContext, StepOutcome};
 use crate::collective::{MixScratch, Transport};
 use crate::compress::{self, Compressor};
+use crate::obs::{LedgerSnap, Phase, Scope};
 use crate::optim::{
     run_inner_naive_with, run_inner_with, DenseTracker, GradFn, InnerConfig, InnerState,
 };
@@ -171,8 +172,10 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
         let xs: Vec<Vec<f32>> = vec![x0; m];
         let ys: Vec<Vec<f32>> = vec![y0.clone(); m];
         let zs: Vec<Vec<f32>> = vec![y0; m];
-        let y_state = InnerState::new(&ctx.net, ctx.task.dy());
-        let z_state = InnerState::new(&ctx.net, ctx.task.dy());
+        let mut y_state = InnerState::new(&ctx.net, ctx.task.dy());
+        let mut z_state = InnerState::new(&ctx.net, ctx.task.dy());
+        y_state.obs = ctx.obs.scoped(Scope::InnerY);
+        z_state.obs = ctx.obs.scoped(Scope::InnerZ);
 
         // s_x⁰ = u_i⁰ with the initial (y, z).
         let u: Vec<Vec<f32>> =
@@ -202,6 +205,8 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
         let lambda = st.lambda;
 
         // -- 1. outer mixing + descent (pays one dense x exchange) -------
+        let snap = LedgerSnap::of(ctx.net.ledger());
+        let t = ctx.obs.clock();
         ctx.net
             .mix_paid_into(ctx.cfg.gamma_out, st.xs.as_mut_slice(), &mut st.mix);
         for (i, xi) in st.xs.iter_mut().enumerate() {
@@ -209,6 +214,7 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
                 *xk -= ctx.cfg.eta_out as f32 * sk;
             }
         }
+        ctx.obs.phase_comm(Phase::Mix, 0, snap, ctx.net.ledger(), t);
 
         // -- 2. inner loops (compressed) ----------------------------------
         let shared = ctx.task_shared().filter(|_| pool.threads() > 1);
@@ -239,12 +245,17 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
         }
 
         // -- 3. local hypergradients --------------------------------------
+        let t = ctx.obs.clock();
         let u_new: Vec<Vec<f32>> =
             ctx.par_nodes(|task, i| task.hypergrad(i, &st.xs[i], &st.ys[i], &st.zs[i], lambda))?;
         ctx.metrics.oracles.first_order += m as u64;
+        ctx.obs.phase(Phase::Hypergrad, m as u64, t);
 
         // -- 4. gradient tracking on s_x (pays one dense s exchange) -----
+        let snap = LedgerSnap::of(ctx.net.ledger());
+        let t = ctx.obs.clock();
         st.tracker.update(&mut ctx.net, ctx.cfg.gamma_out, &u_new);
+        ctx.obs.phase_comm(Phase::Tracker, 0, snap, ctx.net.ledger(), t);
         let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&u_new));
         Ok(StepOutcome { grad_norm })
     }

@@ -20,6 +20,7 @@
 
 use super::{BilevelAlgorithm, RunContext, StepOutcome};
 use crate::collective::{MixScratch, Transport};
+use crate::obs::{LedgerSnap, Phase};
 use crate::optim::DenseTracker;
 use anyhow::Result;
 
@@ -95,6 +96,8 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
         let (eta_in, eta_out, gamma) = (st.eta_in, st.eta_out, st.gamma);
 
         // -- 1. tracked lower-level loop (in-place dense mixes) -----------
+        let snap = LedgerSnap::of(ctx.net.ledger());
+        let t = ctx.obs.clock();
         for _k in 0..ctx.cfg.inner_steps {
             ctx.net.mix_paid_into(gamma, st.ys.as_mut_slice(), &mut st.mix);
             for (i, yi) in st.ys.iter_mut().enumerate() {
@@ -107,8 +110,13 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
             ctx.metrics.oracles.first_order += m as u64;
             st.y_tracker.update(&mut ctx.net, gamma, &g);
         }
+        let lower_oracles = (ctx.cfg.inner_steps * m) as u64;
+        ctx.obs
+            .phase_comm(Phase::Lower, lower_oracles, snap, ctx.net.ledger(), t);
 
         // -- 2. tracked quadratic sub-solver for v ≈ H⁻¹ ∇_y f -------------
+        let snap = LedgerSnap::of(ctx.net.ledger());
+        let t = ctx.obs.clock();
         let gyf: Vec<Vec<f32>> =
             ctx.par_nodes(|task, i| task.grad_y_f(i, &st.xs[i], &st.ys[i]))?;
         ctx.metrics.oracles.first_order += m as u64;
@@ -141,8 +149,12 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
             };
             v_tracker.update(&mut ctx.net, gamma, &q);
         }
+        let hvp_oracles = (m + (1 + SUBSOLVER_STEPS) * m) as u64;
+        ctx.obs
+            .phase_comm(Phase::Hvp, hvp_oracles, snap, ctx.net.ledger(), t);
 
         // -- 3. hypergradient + moving average ----------------------------
+        let t = ctx.obs.clock();
         let hyper: Vec<(Vec<f32>, Vec<f32>)> = ctx.par_nodes(|task, i| {
             let gxf = task.grad_x_f(i, &st.xs[i], &st.ys[i])?;
             let jv = task.jvp_xy_g(i, &st.xs[i], &st.ys[i], &st.vs[i])?;
@@ -156,7 +168,11 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
                 st.us[i][k] = (1.0 - THETA) * st.us[i][k] + THETA * h;
             }
         }
+        ctx.obs.phase(Phase::Hypergrad, 2 * m as u64, t);
+
         // Mix the hypergradient estimates (dense exchange).
+        let snap = LedgerSnap::of(ctx.net.ledger());
+        let t = ctx.obs.clock();
         ctx.net.mix_paid_into(gamma, st.us.as_mut_slice(), &mut st.mix);
 
         // -- 4. upper step -------------------------------------------------
@@ -166,6 +182,7 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
                 *xk -= eta_out * uk;
             }
         }
+        ctx.obs.phase_comm(Phase::Mix, 0, snap, ctx.net.ledger(), t);
 
         let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&st.us));
         Ok(StepOutcome { grad_norm })

@@ -15,6 +15,7 @@
 
 use super::{BilevelAlgorithm, RunContext, StepOutcome};
 use crate::collective::{MixScratch, Transport};
+use crate::obs::{LedgerSnap, Phase};
 use anyhow::Result;
 
 /// Neumann-series length (Q).  The published algorithm takes Q ≈ κ log(·);
@@ -72,6 +73,8 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
         let (eta_in, eta_out, gamma) = (st.eta_in, st.eta_out, st.gamma);
 
         // -- 1. lower-level gossip GD (in-place dense mixes) ---------------
+        let snap = LedgerSnap::of(ctx.net.ledger());
+        let t = ctx.obs.clock();
         for _k in 0..ctx.cfg.inner_steps {
             ctx.net.mix_paid_into(gamma, st.ys.as_mut_slice(), &mut st.mix);
             let g: Vec<Vec<f32>> =
@@ -83,8 +86,13 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
                 }
             }
         }
+        let lower_oracles = (ctx.cfg.inner_steps * m) as u64;
+        ctx.obs
+            .phase_comm(Phase::Lower, lower_oracles, snap, ctx.net.ledger(), t);
 
         // -- 2. Neumann series with per-term gossip ------------------------
+        let snap = LedgerSnap::of(ctx.net.ledger());
+        let t = ctx.obs.clock();
         let mut ps: Vec<Vec<f32>> =
             ctx.par_nodes(|task, i| task.grad_y_f(i, &st.xs[i], &st.ys[i]))?;
         ctx.metrics.oracles.first_order += m as u64;
@@ -104,8 +112,12 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
                 }
             }
         }
+        let neumann_oracles = (m + NEUMANN_TERMS * m) as u64;
+        ctx.obs
+            .phase_comm(Phase::Neumann, neumann_oracles, snap, ctx.net.ledger(), t);
 
         // -- 3. hypergradient ----------------------------------------------
+        let t = ctx.obs.clock();
         let hs: Vec<Vec<f32>> = ctx.par_nodes(|task, i| {
             let gxf = task.grad_x_f(i, &st.xs[i], &st.ys[i])?;
             let jv = task.jvp_xy_g(i, &st.xs[i], &st.ys[i], &vs[i])?;
@@ -113,14 +125,18 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
         })?;
         ctx.metrics.oracles.first_order += m as u64;
         ctx.metrics.oracles.second_order += m as u64;
+        ctx.obs.phase(Phase::Hypergrad, 2 * m as u64, t);
 
         // -- 4. upper gossip step ------------------------------------------
+        let snap = LedgerSnap::of(ctx.net.ledger());
+        let t = ctx.obs.clock();
         ctx.net.mix_paid_into(gamma, st.xs.as_mut_slice(), &mut st.mix);
         for (xi, hi) in st.xs.iter_mut().zip(&hs) {
             for (xk, hk) in xi.iter_mut().zip(hi) {
                 *xk -= eta_out * hk;
             }
         }
+        ctx.obs.phase_comm(Phase::Mix, 0, snap, ctx.net.ledger(), t);
 
         let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&hs));
         Ok(StepOutcome { grad_norm })

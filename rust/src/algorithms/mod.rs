@@ -41,6 +41,7 @@ pub use self::mdbo::Mdbo;
 use crate::collective::Transport;
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::metrics::{RunMetrics, StopReason, TracePoint};
+use crate::obs::{LedgerSnap, Phase, Recorder};
 use crate::sim::NodePool;
 use crate::tasks::BilevelTask;
 use crate::util::rng::Rng;
@@ -57,6 +58,11 @@ pub struct RunContext<'a, T: Transport> {
     pub rng: Rng,
     pub metrics: RunMetrics,
     pub pool: NodePool,
+    /// Telemetry recorder (defaults to the no-op recorder — a single
+    /// branch per instrumentation point, no allocation, no RNG).  Set via
+    /// [`Runner::recorder`](crate::coordinator::Runner::recorder) or
+    /// directly before [`drive`].
+    pub obs: Recorder,
 }
 
 impl<'a, T: Transport> RunContext<'a, T> {
@@ -65,7 +71,16 @@ impl<'a, T: Transport> RunContext<'a, T> {
         let metrics = RunMetrics::new(cfg.algorithm.name(), &label);
         let rng = Rng::new(cfg.seed ^ 0xA1607);
         let pool = NodePool::new(cfg.network.threads);
-        RunContext { task, task_sync: None, net, cfg, rng, metrics, pool }
+        RunContext {
+            task,
+            task_sync: None,
+            net,
+            cfg,
+            rng,
+            metrics,
+            pool,
+            obs: Recorder::noop(),
+        }
     }
 
     /// Like [`RunContext::new`] for thread-shareable tasks: per-node
@@ -191,7 +206,24 @@ pub fn drive<T: Transport>(
 ) -> Result<()> {
     let stops = ctx.cfg.stop_conditions();
     let every = ctx.cfg.eval_every.max(1);
+    ctx.obs.run_start(
+        ctx.cfg.algorithm.name(),
+        &ctx.metrics.label,
+        ctx.net.m(),
+        ctx.cfg.seed,
+        &ctx.cfg.compressor,
+    );
+    let init_snap = LedgerSnap::of(ctx.net.ledger());
+    let (f0, s0) = (ctx.metrics.oracles.first_order, ctx.metrics.oracles.second_order);
+    let t = ctx.obs.clock();
     let mut out = algo.init(ctx)?;
+    ctx.obs.phase_comm(
+        Phase::Init,
+        (ctx.metrics.oracles.first_order - f0) + (ctx.metrics.oracles.second_order - s0),
+        init_snap,
+        ctx.net.ledger(),
+        t,
+    );
     let mut round = 0usize;
     let reason = loop {
         // The transport owns the live byte counters; this is the single
@@ -199,8 +231,11 @@ pub fn drive<T: Transport>(
         // stop conditions and summaries all read the mirror).
         ctx.metrics.ledger = ctx.net.ledger().clone();
         if round % every == 0 || round == ctx.cfg.rounds {
+            let t = ctx.obs.clock();
             ctx.record(round, algo.xs(), algo.ys(), out.grad_norm)?;
+            ctx.obs.phase(Phase::Eval, ctx.net.m() as u64, t);
             let point = ctx.metrics.trace.last().expect("record pushed a point");
+            ctx.obs.eval(point);
             if !observer.on_trace(algo.name(), point) {
                 break StopReason::Observer;
             }
@@ -209,9 +244,11 @@ pub fn drive<T: Transport>(
             }
         }
         out = algo.step(ctx, round)?;
+        ctx.obs.round(round, ctx.net.ledger(), &ctx.metrics.oracles);
         round += 1;
     };
     ctx.metrics.stop_reason = Some(reason);
+    ctx.obs.run_end(&ctx.metrics);
     Ok(())
 }
 

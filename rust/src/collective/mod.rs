@@ -181,6 +181,15 @@ pub trait Transport {
     fn virtual_time_s(&self) -> f64 {
         self.ledger().network_time_s
     }
+
+    /// Per-message arrival records of the most recent exchange, for
+    /// telemetry ([`Recorder::exchange`](crate::obs::Recorder::exchange)):
+    /// per-edge delivered/dropped flags and sim-time arrival stamps.  Only
+    /// the event engine has per-edge timing; the synchronous transport
+    /// (and any custom transport) reports nothing via this default.
+    fn last_events(&self) -> &[crate::sim::Arrival] {
+        &[]
+    }
 }
 
 /// Synchronous in-process transport: every message is delivered within the

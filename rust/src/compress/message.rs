@@ -16,7 +16,24 @@ pub enum Payload {
     Quantized { norm: f32, levels: u32, codes: Vec<i16> },
 }
 
+/// Coarse payload classification, used by the telemetry layer's
+/// per-compressor encode counters ([`crate::obs`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    Dense,
+    Sparse,
+    Quantized,
+}
+
 impl Payload {
+    pub fn kind(&self) -> PayloadKind {
+        match self {
+            Payload::Dense(_) => PayloadKind::Dense,
+            Payload::Sparse { .. } => PayloadKind::Sparse,
+            Payload::Quantized { .. } => PayloadKind::Quantized,
+        }
+    }
+
     pub fn payload_bytes(&self) -> usize {
         match self {
             Payload::Dense(v) => 4 * v.len(),

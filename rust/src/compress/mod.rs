@@ -19,7 +19,7 @@
 use crate::util::rng::Rng;
 
 mod message;
-pub use message::Payload;
+pub use message::{Payload, PayloadKind};
 
 /// A compressed vector plus its exact serialized size.
 ///
@@ -79,6 +79,11 @@ impl Compressed {
     pub fn add_scaled_into(&self, weight: f32, target: &mut [f32]) {
         assert_eq!(target.len(), self.dim);
         self.payload.add_scaled_dense(weight, target);
+    }
+
+    /// Payload classification for the telemetry encode counters.
+    pub fn payload_kind(&self) -> PayloadKind {
+        self.payload.kind()
     }
 }
 

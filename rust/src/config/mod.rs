@@ -46,6 +46,18 @@ impl Algorithm {
     }
 }
 
+/// The `[obs]` config table: which telemetry sinks ([`crate::obs`]) a run
+/// attaches.  Off by default — with both sinks off the recorder is a
+/// no-op and the hot paths stay allocation-free.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsConfig {
+    /// Write the deterministic JSONL trace to this path (CLI: --trace).
+    pub trace: Option<String>,
+    /// Collect the wall-clock phase profile (CLI: --profile; explicitly
+    /// nondeterministic, reported separately from the trace).
+    pub profile: bool,
+}
+
 /// The `[stop]` config table: optional budgets the runner turns into
 /// [`StopCondition`]s on top of the always-present `rounds` cap and the
 /// optional `target_accuracy`.  `None` everywhere (the default) keeps the
@@ -100,6 +112,8 @@ pub struct ExperimentConfig {
     /// The `[stop]` table: budgeted stopping conditions beyond the round
     /// cap (communication, oracles, wall/sim time).
     pub stop: StopConfig,
+    /// The `[obs]` table: telemetry sinks (JSONL trace, phase profiler).
+    pub obs: ObsConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -126,6 +140,7 @@ impl Default for ExperimentConfig {
             out_dir: "runs".into(),
             network: NetConfig::default(),
             stop: StopConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -250,6 +265,11 @@ impl ExperimentConfig {
             }
             "stop.wall_secs" | "stop_wall_secs" => self.stop.wall_secs = Some(want_f64()?),
             "stop.sim_secs" | "stop_sim_secs" => self.stop.sim_secs = Some(want_f64()?),
+            // --- the [obs] table (TOML: obs.*; CLI: --trace/--profile) ---
+            "obs.trace" | "trace" => self.obs.trace = Some(want_str()?),
+            "obs.profile" | "profile" => {
+                self.obs.profile = v.as_bool().ok_or(format!("{k}: expected bool"))?
+            }
             _ => return Err(format!("unknown config key: {k}")),
         }
         Ok(())
@@ -519,6 +539,18 @@ target_accuracy = 0.7
         assert!(c
             .apply_one("stop_sim_secs", &TomlValue::Str("x".into()))
             .is_err());
+    }
+
+    #[test]
+    fn obs_table_roundtrip() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.obs, ObsConfig::default());
+        c.apply_one("trace", &TomlValue::Str("out.jsonl".into())).unwrap();
+        c.apply_one("obs.profile", &TomlValue::Bool(true)).unwrap();
+        assert_eq!(c.obs.trace.as_deref(), Some("out.jsonl"));
+        assert!(c.obs.profile);
+        assert!(c.apply_one("profile", &TomlValue::Int(1)).is_err());
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::config::{Algorithm, ExperimentConfig};
 use crate::coordinator::{summarize, write_runs};
 use crate::data::partition::Partition;
 use crate::metrics::RunMetrics;
+use crate::obs::Console;
 use crate::runtime::ArtifactRegistry;
 use crate::sim::{NetConfig, NetMode};
 use crate::tasks::{BilevelTask, HyperRepTask, LogRegTask, QuadraticTask};
@@ -44,6 +45,16 @@ pub struct HarnessOpts {
     /// 0 = all cores).  Artifact-registry grids always run serially
     /// (thread-local PJRT state); 1 preserves the classic serial order.
     pub jobs: usize,
+    /// Suppress per-harness summary output (CLI: --quiet); warnings and
+    /// the final tables' data still land in `runs/` either way.
+    pub quiet: bool,
+    /// Write the deterministic JSONL telemetry trace ([`crate::obs`]) of
+    /// every cell, concatenated in declaration order, to this path
+    /// (CLI: --trace FILE).
+    pub trace: Option<String>,
+    /// Print each cell's wall-clock phase profile after the grid runs
+    /// (CLI: --profile; explicitly nondeterministic, never in the trace).
+    pub profile: bool,
 }
 
 impl Default for HarnessOpts {
@@ -56,7 +67,18 @@ impl Default for HarnessOpts {
             seed: 42,
             verbose: false,
             jobs: 1,
+            quiet: false,
+            trace: None,
+            profile: false,
         }
+    }
+}
+
+impl HarnessOpts {
+    /// Console routing derived from `--quiet`/`--verbose` — the single
+    /// knob every harness's progress and summary output goes through.
+    pub fn console(&self) -> Console {
+        Console::new(self.quiet, self.verbose)
     }
 }
 
@@ -71,11 +93,30 @@ fn run_grid(
     reg: Option<&ArtifactRegistry>,
     o: &HarnessOpts,
 ) -> Result<Vec<RunMetrics>> {
-    let outcomes = sweep::run_cells(&cells, tasks, reg, o.jobs, o.verbose);
+    let opts = sweep::ExecOpts {
+        jobs: o.jobs,
+        console: o.console(),
+        trace: o.trace.is_some(),
+        profile: o.profile,
+    };
+    let outcomes = sweep::run_cells_with(&cells, tasks, reg, &opts);
+    if let Some(path) = &o.trace {
+        std::fs::write(path, sweep::concat_traces(&outcomes))
+            .map_err(|e| anyhow::anyhow!("writing trace {path}: {e}"))?;
+        o.console()
+            .info(format_args!("wrote JSONL trace to {path}"));
+    }
+    if o.profile {
+        for oc in &outcomes {
+            if let Some(p) = &oc.profile {
+                println!("-- profile: {} --\n{p}", oc.id);
+            }
+        }
+    }
     let dir = std::path::Path::new(&o.out_dir).join(id);
     sweep::write_report(&dir, &cells, &outcomes)?;
     let mut runs = Vec::with_capacity(outcomes.len());
-    for CellOutcome { id: cell_id, result } in outcomes {
+    for CellOutcome { id: cell_id, result, .. } in outcomes {
         match result {
             Ok(m) => runs.push(m),
             Err(e) => anyhow::bail!("cell {cell_id}: {e}"),
@@ -150,7 +191,11 @@ fn tune_for(algo: Algorithm, cfg: &mut ExperimentConfig) {
 /// test accuracy on the coefficient-tuning task, ring topology,
 /// heterogeneous (h = 0.8).
 pub fn table1(reg: &ArtifactRegistry, o: &HarnessOpts, target_acc: f64) -> Result<Vec<RunMetrics>> {
-    println!("== Table 1: comm volume & time to {:.0}% test accuracy (ring, het 0.8) ==", target_acc * 100.0);
+    let con = o.console();
+    con.info(format_args!(
+        "== Table 1: comm volume & time to {:.0}% test accuracy (ring, het 0.8) ==",
+        target_acc * 100.0
+    ));
     let mut cells = Vec::new();
     for algo in [Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::Mdbo] {
         let mut cfg = coeff_cfg(o);
@@ -167,10 +212,14 @@ pub fn table1(reg: &ArtifactRegistry, o: &HarnessOpts, target_acc: f64) -> Resul
     }
     let runs = run_grid("table1", cells, &[], Some(reg), o)?;
     for m in &runs {
-        println!("  {}", summarize(m));
+        con.info(format_args!("  {}", summarize(m)));
     }
-    println!("\n| Algo   | Comm. Vol. (MB) | Sim. Time (s) | Wall Time (s) | reached |");
-    println!("|--------|-----------------|---------------|---------------|---------|");
+    con.info(format_args!(
+        "\n| Algo   | Comm. Vol. (MB) | Sim. Time (s) | Wall Time (s) | reached |"
+    ));
+    con.info(format_args!(
+        "|--------|-----------------|---------------|---------------|---------|"
+    ));
     for m in &runs {
         let hit = m.time_to_accuracy(target_acc);
         let (mb, st, wt, reached) = match hit {
@@ -180,7 +229,10 @@ pub fn table1(reg: &ArtifactRegistry, o: &HarnessOpts, target_acc: f64) -> Resul
                 (p.comm_mb, p.sim_time_s + p.wall_time_s, p.wall_time_s, "no")
             }
         };
-        println!("| {:6} | {:15.2} | {:13.2} | {:13.2} | {:7} |", m.algo, mb, st, wt, reached);
+        con.info(format_args!(
+            "| {:6} | {:15.2} | {:13.2} | {:13.2} | {:7} |",
+            m.algo, mb, st, wt, reached
+        ));
     }
     Ok(runs)
 }
@@ -190,7 +242,8 @@ pub fn table1(reg: &ArtifactRegistry, o: &HarnessOpts, target_acc: f64) -> Resul
 /// C²DFB vs MADSBO vs MDBO.  (Fig. 4 is the same traces plotted against
 /// rounds; the CSVs contain all three x-axes.)
 pub fn fig2(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
-    println!("== Fig 2/4: coefficient tuning across topologies & heterogeneity ==");
+    o.console()
+        .info(format_args!("== Fig 2/4: coefficient tuning across topologies & heterogeneity =="));
     grid(
         reg,
         o,
@@ -203,7 +256,8 @@ pub fn fig2(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> 
 /// **Figures 3 & 6** — hyper-representation: loss vs comm volume / rounds
 /// across topologies × heterogeneity for C²DFB vs MADSBO vs C²DFB(nc).
 pub fn fig3(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
-    println!("== Fig 3/6: hyper-representation across topologies & heterogeneity ==");
+    o.console()
+        .info(format_args!("== Fig 3/6: hyper-representation across topologies & heterogeneity =="));
     grid(
         reg,
         o,
@@ -247,7 +301,7 @@ fn grid(
     }
     let runs = run_grid(id, cells, &[], Some(reg), o)?;
     for m in &runs {
-        println!("  {}", summarize(m));
+        o.console().info(format_args!("  {}", summarize(m)));
     }
     Ok(runs)
 }
@@ -255,7 +309,8 @@ fn grid(
 /// **Figure 5** — sensitivity of C²DFB on coefficient tuning: (a) inner
 /// loops K, (b) compression ratio, (c) multiplier λ (σ).
 pub fn fig5(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
-    println!("== Fig 5: C²DFB sensitivity (K, compression ratio, λ) ==");
+    o.console()
+        .info(format_args!("== Fig 5: C²DFB sensitivity (K, compression ratio, λ) =="));
     let mut cells = Vec::new();
     let mut prefixes = Vec::new();
 
@@ -282,7 +337,7 @@ pub fn fig5(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> 
     }
     let runs = run_grid("fig5", cells, &[], Some(reg), o)?;
     for (prefix, m) in prefixes.iter().zip(&runs) {
-        println!("  {prefix}  {}", summarize(m));
+        o.console().info(format_args!("  {prefix}  {}", summarize(m)));
     }
     Ok(runs)
 }
@@ -308,9 +363,10 @@ fn quad_cfg_for(algo: Algorithm, rounds: usize, nodes: usize, o: &HarnessOpts) -
 pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
     let (nodes, dim) = if tiny { (6, 8) } else { (8, 32) };
     let rounds = o.rounds;
-    println!(
+    let con = o.console();
+    con.info(format_args!(
         "== netsweep: network regimes on the quadratic task (m={nodes}, d={dim}, {rounds} rounds) =="
-    );
+    ));
     let task = QuadraticTask::generate(nodes, dim, 0.8, o.seed);
 
     let event = NetConfig { mode: NetMode::Event, ..NetConfig::default() };
@@ -362,15 +418,15 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
     }
     let runs = run_grid("netsweep", cells, &[&task], None, o)?;
 
-    println!(
+    con.info(format_args!(
         "\n| regime    | algo   | comm (MB) | gossip rounds | virtual time (s) | dropped | final loss |"
-    );
-    println!(
+    ));
+    con.info(format_args!(
         "|-----------|--------|-----------|---------------|------------------|---------|------------|"
-    );
+    ));
     for (regime, m) in regime_of.iter().zip(&runs) {
         let last = m.final_point().expect("run produced no trace");
-        println!(
+        con.info(format_args!(
             "| {:9} | {:6} | {:9.3} | {:13} | {:16.4} | {:7} | {:10.5} |",
             regime,
             m.algo,
@@ -379,7 +435,7 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
             m.ledger.network_time_s,
             m.ledger.dropped_messages,
             last.loss
-        );
+        ));
     }
 
     // Benign-network equivalence: event engine ≡ synchronous engine.
@@ -391,12 +447,12 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
             && s.final_point().map(|p| p.loss.to_bits())
                 == e.final_point().map(|p| p.loss.to_bits());
         all_ok &= ok;
-        println!(
+        con.info(format_args!(
             "{} sync ≡ ideal-sim ({}): bytes/rounds/loss {}",
             if ok { "OK " } else { "ERR" },
             s.algo,
             if ok { "identical" } else { "DIFFER" }
-        );
+        ));
     }
     if !all_ok {
         anyhow::bail!("event engine diverged from the synchronous engine on a benign network");
@@ -556,12 +612,13 @@ pub fn budget_on(
 ) -> Result<Vec<RunMetrics>> {
     let nodes = if tiny { 6 } else { 8 };
     let task = native_task(task_spec, nodes, tiny, o.seed)?;
-    println!(
+    let con = o.console();
+    con.info(format_args!(
         "== budget: all algorithms to {budget_mb} MB of communication \
          ({}, m={nodes}, round cap {}) ==",
         task.name(),
         o.rounds
-    );
+    ));
     let algos = [
         Algorithm::C2dfb,
         Algorithm::C2dfbNc,
@@ -585,14 +642,18 @@ pub fn budget_on(
     }
     let runs = run_grid("budget", cells, &[task.as_ref()], None, o)?;
     for m in &runs {
-        println!("  {}", summarize(m));
+        con.info(format_args!("  {}", summarize(m)));
     }
 
-    println!("\n| algo     | comm (MB) | rounds | oracles 1st | oracles 2nd | final loss | stop        |");
-    println!("|----------|-----------|--------|-------------|-------------|------------|-------------|");
+    con.info(format_args!(
+        "\n| algo     | comm (MB) | rounds | oracles 1st | oracles 2nd | final loss | stop        |"
+    ));
+    con.info(format_args!(
+        "|----------|-----------|--------|-------------|-------------|------------|-------------|"
+    ));
     for m in &runs {
         let last = m.final_point().expect("run produced no trace");
-        println!(
+        con.info(format_args!(
             "| {:8} | {:9.3} | {:6} | {:11} | {:11} | {:10.5} | {:11} |",
             m.algo,
             m.ledger.total_mb(),
@@ -601,7 +662,7 @@ pub fn budget_on(
             m.oracles.second_order,
             last.loss,
             m.stop_reason.map_or("-", |s| s.name()),
-        );
+        ));
     }
     Ok(runs)
 }
@@ -609,7 +670,8 @@ pub fn budget_on(
 /// Compressor ablation beyond the paper: top-k vs rand-k vs qsgd vs dense
 /// at matched settings (DESIGN.md "extension" item).
 pub fn compressor_ablation(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Vec<RunMetrics>> {
-    println!("== Ablation: compressor family (C²DFB, coeff, ring, het) ==");
+    o.console()
+        .info(format_args!("== Ablation: compressor family (C²DFB, coeff, ring, het) =="));
     let comps = ["topk:0.2", "randk:0.2", "qsgd:16", "none"];
     let mut cells = Vec::new();
     for comp in comps {
@@ -625,7 +687,7 @@ pub fn compressor_ablation(reg: &ArtifactRegistry, o: &HarnessOpts) -> Result<Ve
     }
     let runs = run_grid("ablation_compressor", cells, &[], Some(reg), o)?;
     for (comp, m) in comps.iter().zip(&runs) {
-        println!("  {comp:10}  {}", summarize(m));
+        o.console().info(format_args!("  {comp:10}  {}", summarize(m)));
     }
     Ok(runs)
 }

@@ -29,6 +29,7 @@ use crate::algorithms::{self, NoObserver, RunObserver};
 use crate::collective::{Network, Transport};
 use crate::config::ExperimentConfig;
 use crate::metrics::RunMetrics;
+use crate::obs::Recorder;
 use crate::runtime::ArtifactRegistry;
 use crate::sim::SimNetwork;
 use crate::tasks::{BilevelTask, PjrtTask};
@@ -79,6 +80,7 @@ pub struct Runner<'a> {
     cfg: &'a ExperimentConfig,
     source: Source<'a>,
     observer: Option<&'a mut dyn RunObserver>,
+    recorder: Recorder,
 }
 
 enum Source<'a> {
@@ -90,7 +92,12 @@ enum Source<'a> {
 
 impl<'a> Runner<'a> {
     pub fn new(cfg: &'a ExperimentConfig) -> Runner<'a> {
-        Runner { cfg, source: Source::Unset, observer: None }
+        Runner {
+            cfg,
+            source: Source::Unset,
+            observer: None,
+            recorder: Recorder::noop(),
+        }
     }
 
     /// Run against a caller-provided task (analytic tasks, tests).
@@ -119,12 +126,21 @@ impl<'a> Runner<'a> {
         self
     }
 
+    /// Attach a telemetry recorder ([`crate::obs`]): span/phase counters,
+    /// the deterministic JSONL trace sink and/or the wall-clock profiler.
+    /// Cloning shares the sink — take the trace from the caller's handle
+    /// after `.run()`.
+    pub fn recorder(mut self, rec: &Recorder) -> Self {
+        self.recorder = rec.clone();
+        self
+    }
+
     /// Validate the config, build the world and drive the run to its stop
     /// condition.  The stop reason lands in
     /// [`RunMetrics::stop_reason`](crate::metrics::RunMetrics).
     pub fn run(self) -> Result<RunMetrics> {
         self.cfg.validate()?;
-        let Runner { cfg, source, observer } = self;
+        let Runner { cfg, source, observer, recorder } = self;
         let mut fallback = NoObserver;
         let obs: &mut dyn RunObserver = match observer {
             Some(o) => o,
@@ -134,11 +150,11 @@ impl<'a> Runner<'a> {
             Source::Unset => anyhow::bail!(
                 "Runner has no task source: call .task(), .shared_task() or .registry() before .run()"
             ),
-            Source::Task(task) => launch(task, None, cfg, obs),
-            Source::Shared(task) => launch(task, Some(task), cfg, obs),
+            Source::Task(task) => launch(task, None, cfg, obs, recorder),
+            Source::Shared(task) => launch(task, Some(task), cfg, obs, recorder),
             Source::Registry(reg) => {
                 let task = build_task(reg, cfg)?;
-                launch(&task, None, cfg, obs)
+                launch(&task, None, cfg, obs, recorder)
             }
         }
     }
@@ -151,11 +167,12 @@ fn launch(
     shared: Option<&(dyn BilevelTask + Sync)>,
     cfg: &ExperimentConfig,
     obs: &mut dyn RunObserver,
+    rec: Recorder,
 ) -> Result<RunMetrics> {
     if cfg.network.is_event() {
-        drive_on(task, shared, build_sim_network(cfg)?, cfg, obs)
+        drive_on(task, shared, build_sim_network(cfg)?, cfg, obs, rec)
     } else {
-        drive_on(task, shared, build_network(cfg), cfg, obs)
+        drive_on(task, shared, build_network(cfg), cfg, obs, rec)
     }
 }
 
@@ -165,11 +182,13 @@ fn drive_on<T: Transport>(
     net: T,
     cfg: &ExperimentConfig,
     obs: &mut dyn RunObserver,
+    rec: Recorder,
 ) -> Result<RunMetrics> {
     let mut ctx = match shared {
         Some(t) => algorithms::RunContext::new_shared(t, net, cfg.clone()),
         None => algorithms::RunContext::new(task, net, cfg.clone()),
     };
+    ctx.obs = rec;
     let mut algo = algorithms::make_algorithm(ctx.cfg.algorithm);
     algorithms::drive(&mut ctx, algo.as_mut(), obs)?;
     Ok(ctx.metrics)

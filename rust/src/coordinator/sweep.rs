@@ -34,6 +34,7 @@ use crate::config::{Algorithm, ExperimentConfig};
 use crate::coordinator::{experiments, Runner};
 use crate::data::partition::Partition;
 use crate::metrics::{RunMetrics, TracePoint};
+use crate::obs::{Console, Recorder};
 use crate::runtime::ArtifactRegistry;
 use crate::sim::{NetMode, NodePool};
 use crate::tasks::BilevelTask;
@@ -44,26 +45,36 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
-/// Harness observer: optionally prints a progress line per trace point and
-/// aborts any run whose loss goes non-finite (divergence guard) — the
-/// runner then records `stop_reason = observer_abort` instead of burning
-/// the remaining round/communication budget on NaNs.
+/// Harness observer: streams a progress line per trace point at
+/// [`Verbosity::Verbose`](crate::obs::Verbosity) and aborts any run whose
+/// loss goes non-finite (divergence guard) — the runner then records
+/// `stop_reason = observer_abort` instead of burning the remaining
+/// round/communication budget on NaNs.  All console output routes through
+/// [`Console`], so one `--quiet`/`--verbose` flag governs every harness.
 #[derive(Default)]
 pub struct HarnessObserver {
-    /// Print one line per recorded trace point.
-    pub verbose: bool,
+    /// Output routing: per-point progress at Verbose, warnings always.
+    pub console: Console,
+}
+
+impl HarnessObserver {
+    /// Compatibility constructor for the old `{ verbose: bool }` shape.
+    pub fn verbose(verbose: bool) -> HarnessObserver {
+        HarnessObserver { console: Console::from_verbose(verbose) }
+    }
 }
 
 impl RunObserver for HarnessObserver {
     fn on_trace(&mut self, algo: &str, p: &TracePoint) -> bool {
-        if self.verbose {
-            println!(
-                "    [{algo:8}] round {:5}  comm {:9.3} MB  loss {:.5}  acc {:.3}",
-                p.round, p.comm_mb, p.loss, p.accuracy
-            );
-        }
+        self.console.progress(format_args!(
+            "    [{algo:8}] round {:5}  comm {:9.3} MB  loss {:.5}  acc {:.3}",
+            p.round, p.comm_mb, p.loss, p.accuracy
+        ));
         if !p.loss.is_finite() {
-            eprintln!("    [{algo}] aborting run: non-finite loss at round {}", p.round);
+            self.console.warn(format_args!(
+                "    [{algo}] aborting run: non-finite loss at round {}",
+                p.round
+            ));
             return false;
         }
         true
@@ -93,9 +104,21 @@ pub struct Cell {
 pub struct CellOutcome {
     pub id: String,
     pub result: Result<RunMetrics, String>,
+    /// The cell's deterministic JSONL trace chunk ([`crate::obs`]), when
+    /// tracing was requested.  Buffered per cell so the sweep-level file
+    /// is byte-identical at any `--jobs`.
+    pub trace: Option<String>,
+    /// The cell's wall-clock phase profile (explicitly nondeterministic;
+    /// never mixed into the trace), when profiling was requested.
+    pub profile: Option<String>,
 }
 
 impl CellOutcome {
+    /// An outcome with no telemetry attached (tests, error paths).
+    pub fn bare(id: String, result: Result<RunMetrics, String>) -> CellOutcome {
+        CellOutcome { id, result, trace: None, profile: None }
+    }
+
     pub fn metrics(&self) -> Option<&RunMetrics> {
         self.result.as_ref().ok()
     }
@@ -110,14 +133,23 @@ pub fn effective_jobs(jobs: usize) -> usize {
     }
 }
 
+/// Execution knobs for [`run_cells_with`]: parallelism, console routing
+/// and which telemetry sinks ([`crate::obs`]) each cell gets.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecOpts {
+    /// Cell-level parallelism (0 = all cores).
+    pub jobs: usize,
+    /// Console verbosity for progress streaming and warnings.
+    pub console: Console,
+    /// Attach a deterministic JSONL trace sink to every cell.
+    pub trace: bool,
+    /// Attach the wall-clock phase profiler to every cell.
+    pub profile: bool,
+}
+
 /// Execute every cell and return outcomes in declaration order.
-///
-/// Shared-task cells fan out over a [`NodePool`] of `jobs` workers
-/// (`jobs = 0` = all cores); registry cells run serially on this thread.
-/// Verbose trace streaming only engages at `jobs <= 1` — interleaved
-/// progress lines from concurrent cells would scramble the log — but the
-/// divergence guard is armed in both lanes.  A failing cell never aborts
-/// its siblings.
+/// Compatibility wrapper over [`run_cells_with`] for the pre-telemetry
+/// `(jobs, verbose)` signature.
 pub fn run_cells(
     cells: &[Cell],
     tasks: &[&(dyn BilevelTask + Sync)],
@@ -125,8 +157,39 @@ pub fn run_cells(
     jobs: usize,
     verbose: bool,
 ) -> Vec<CellOutcome> {
-    let jobs = effective_jobs(jobs);
-    let stream = verbose && jobs <= 1;
+    let opts = ExecOpts {
+        jobs,
+        console: Console::from_verbose(verbose),
+        ..ExecOpts::default()
+    };
+    run_cells_with(cells, tasks, reg, &opts)
+}
+
+/// Execute every cell and return outcomes in declaration order.
+///
+/// Shared-task cells fan out over a [`NodePool`] of `opts.jobs` workers
+/// (`jobs = 0` = all cores); registry cells run serially on this thread.
+/// Verbose trace streaming only engages at `jobs <= 1` — interleaved
+/// progress lines from concurrent cells would scramble the log — but the
+/// divergence guard is armed in both lanes.  A failing cell never aborts
+/// its siblings.
+///
+/// With `opts.trace` each cell gets its own [`Recorder`] whose JSONL
+/// chunk lands in [`CellOutcome::trace`]; chunks carry only counters and
+/// sim-time, and concatenating them in declaration order
+/// ([`concat_traces`]) yields bytes independent of `jobs`.
+pub fn run_cells_with(
+    cells: &[Cell],
+    tasks: &[&(dyn BilevelTask + Sync)],
+    reg: Option<&ArtifactRegistry>,
+    opts: &ExecOpts,
+) -> Vec<CellOutcome> {
+    let jobs = effective_jobs(opts.jobs);
+    let stream = if jobs <= 1 {
+        opts.console
+    } else {
+        Console { level: opts.console.level.min(crate::obs::Verbosity::Normal) }
+    };
     let shared_lane: Vec<usize> = cells
         .iter()
         .enumerate()
@@ -137,14 +200,14 @@ pub fn run_cells(
     let mut outcomes: Vec<Option<CellOutcome>> = cells.iter().map(|_| None).collect();
     let pool = NodePool::new(jobs);
     let lane_results = pool.map(shared_lane.len(), |k| {
-        run_shared_cell(&cells[shared_lane[k]], tasks, stream)
+        run_shared_cell(&cells[shared_lane[k]], tasks, stream, opts)
     });
     for (&i, out) in shared_lane.iter().zip(lane_results) {
         outcomes[i] = Some(out);
     }
     for (i, cell) in cells.iter().enumerate() {
         if cell.task == TaskRef::Registry {
-            outcomes[i] = Some(run_registry_cell(cell, reg, verbose));
+            outcomes[i] = Some(run_registry_cell(cell, reg, opts));
         }
     }
     outcomes
@@ -153,18 +216,36 @@ pub fn run_cells(
         .collect()
 }
 
+/// Wrap a cell run with its per-cell telemetry recorder and harvest the
+/// sinks into the outcome.
+fn finish_cell(
+    cell: &Cell,
+    rec: Recorder,
+    result: Result<RunMetrics, String>,
+) -> CellOutcome {
+    CellOutcome {
+        id: cell.id.clone(),
+        result,
+        trace: rec.take_trace(),
+        profile: rec.render_profile(),
+    }
+}
+
 fn run_shared_cell(
     cell: &Cell,
     tasks: &[&(dyn BilevelTask + Sync)],
-    verbose: bool,
+    stream: Console,
+    opts: &ExecOpts,
 ) -> CellOutcome {
+    let rec = Recorder::for_cell(opts.trace, opts.profile, &cell.id);
     let result = match cell.task {
         TaskRef::Shared(t) => match tasks.get(t) {
             Some(task) => {
-                let mut guard = HarnessObserver { verbose };
+                let mut guard = HarnessObserver { console: stream };
                 Runner::new(&cell.cfg)
                     .shared_task(*task)
                     .observer(&mut guard)
+                    .recorder(&rec)
                     .run()
                     .map_err(|e| format!("{e:#}"))
             }
@@ -175,26 +256,41 @@ fn run_shared_cell(
         },
         TaskRef::Registry => unreachable!("registry cells run on the serial lane"),
     };
-    CellOutcome { id: cell.id.clone(), result }
+    finish_cell(cell, rec, result)
 }
 
 fn run_registry_cell(
     cell: &Cell,
     reg: Option<&ArtifactRegistry>,
-    verbose: bool,
+    opts: &ExecOpts,
 ) -> CellOutcome {
+    let rec = Recorder::for_cell(opts.trace, opts.profile, &cell.id);
     let result = match reg {
         Some(reg) => {
-            let mut guard = HarnessObserver { verbose };
+            let mut guard = HarnessObserver { console: opts.console };
             Runner::new(&cell.cfg)
                 .registry(reg)
                 .observer(&mut guard)
+                .recorder(&rec)
                 .run()
                 .map_err(|e| format!("{e:#}"))
         }
         None => Err("cell needs the artifact registry, but none was supplied".into()),
     };
-    CellOutcome { id: cell.id.clone(), result }
+    finish_cell(cell, rec, result)
+}
+
+/// Concatenate per-cell trace chunks in declaration order.  Because every
+/// chunk is buffered privately and stamped only with counters and
+/// sim-time, the result is byte-identical at any `--jobs`.
+pub fn concat_traces(outcomes: &[CellOutcome]) -> String {
+    let mut out = String::new();
+    for o in outcomes {
+        if let Some(t) = &o.trace {
+            out.push_str(t);
+        }
+    }
+    out
 }
 
 /// The per-cell seed-derivation contract (see docs/SWEEP.md): FNV-1a 64
@@ -521,9 +617,20 @@ pub fn expand(spec: &SweepSpec) -> Result<Grid> {
 
 /// Expand and execute a spec; outcomes come back in grid order.
 pub fn run(spec: &SweepSpec, verbose: bool) -> Result<(Grid, Vec<CellOutcome>)> {
+    let opts = ExecOpts {
+        jobs: spec.jobs,
+        console: Console::from_verbose(verbose),
+        ..ExecOpts::default()
+    };
+    run_with(spec, &opts)
+}
+
+/// [`run`] with explicit execution options (telemetry sinks, console
+/// routing).  `opts.jobs` overrides the spec's own parallelism knob.
+pub fn run_with(spec: &SweepSpec, opts: &ExecOpts) -> Result<(Grid, Vec<CellOutcome>)> {
     let grid = expand(spec)?;
     let tasks: Vec<&(dyn BilevelTask + Sync)> = grid.tasks.iter().map(|t| t.as_ref()).collect();
-    let outcomes = run_cells(&grid.cells, &tasks, None, spec.jobs, verbose);
+    let outcomes = run_cells_with(&grid.cells, &tasks, None, opts);
     Ok((grid, outcomes))
 }
 
@@ -810,6 +917,11 @@ pub fn diff_outcomes(a: &[CellOutcome], b: &[CellOutcome]) -> Option<String> {
                 }
             }
         }
+        // Telemetry is part of the determinism contract: when both sides
+        // traced, the JSONL chunks must match byte for byte.
+        if x.trace != y.trace {
+            return Some(format!("{}: JSONL trace chunks differ", x.id));
+        }
     }
     None
 }
@@ -980,10 +1092,10 @@ calibrate = false
             cfg: ExperimentConfig::default(),
             task: TaskRef::Shared(0),
         };
-        let out = CellOutcome {
-            id: "x".into(),
-            result: Err("boom, with commas\nand newlines".into()),
-        };
+        let out = CellOutcome::bare(
+            "x".into(),
+            Err("boom, with commas\nand newlines".into()),
+        );
         let csv = report_csv(&[cell], &[out]);
         let row = csv.lines().nth(1).unwrap();
         assert!(row.contains("error"));

@@ -206,7 +206,7 @@ pub fn config_for(s: &Scenario) -> ExperimentConfig {
 /// flag as drift against a healthy fixture).
 pub fn run_scenario(task: &(dyn BilevelTask + Sync), s: &Scenario) -> Result<RunMetrics> {
     let cfg = config_for(s);
-    let mut guard = crate::coordinator::sweep::HarnessObserver { verbose: false };
+    let mut guard = crate::coordinator::sweep::HarnessObserver::default();
     Runner::new(&cfg)
         .shared_task(task)
         .observer(&mut guard)

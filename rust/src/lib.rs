@@ -78,6 +78,7 @@ pub mod data;
 pub mod goldens;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod sim;

@@ -12,6 +12,7 @@
 //! c2dfb netsweep [--rounds N] [--tiny]   # network-regime sweep (no artifacts)
 //! c2dfb budget [--budget_mb MB] [--tiny]  # equal-comm-budget comparison
 //! c2dfb goldens [--bless] [--dir D] [--jobs N]  # golden-trace fixtures
+//! c2dfb trace out.jsonl            # summarize a recorded JSONL trace
 //! c2dfb artifacts                  # list AOT artifacts + shapes
 //! ```
 
@@ -29,7 +30,12 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|goldens|all|artifacts> [options]
+const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|goldens|trace|all|artifacts> [options]
+  telemetry (run, sweep, and every harness; see docs/OBS.md):
+            --trace FILE.jsonl (deterministic JSONL span trace, sim-time /
+            counter stamped, byte-identical at any --jobs width)
+            --profile (wall-clock per-phase profile, nondeterministic,
+            printed separately)  --quiet (errors only)  --verbose
   run options: --config <file.toml> plus any config key as --key value
                (e.g. --algo mdbo --topology er:0.4 --partition het:0.8
                 --rounds 100 --compressor topk:0.2 --lambda 10)
@@ -57,7 +63,10 @@ const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|abl
   goldens:  replay the 4 algo x 3 task x 2 topology x 2 engine golden-trace
             matrix against rust/goldens/*.json (drift fails; missing files
             are bootstrapped); --bless regenerates the fixtures, --dir D
-            overrides the fixture directory";
+            overrides the fixture directory
+  trace:    summarize a recorded JSONL trace into a per-phase cost table
+            (c2dfb trace out.jsonl, or --file out.jsonl); validates every
+            line against the schema in docs/OBS.md";
 
 fn real_main() -> Result<()> {
     let args = Args::from_env();
@@ -88,6 +97,7 @@ fn real_main() -> Result<()> {
         "netsweep" => cmd_netsweep(args),
         "budget" => cmd_budget(args),
         "goldens" => cmd_goldens(args),
+        "trace" => cmd_trace(args),
         "table1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "ablation" | "all" => {
             cmd_harness(&sub, args)
         }
@@ -109,7 +119,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
         "target_accuracy", "data_noise", "out_dir", "network", "latency", "jitter",
         "bandwidth", "drop_rate", "straggler", "topology_schedule", "threads",
         "stop_comm_mb", "stop_first_order", "stop_wall_secs", "stop_sim_secs",
-        "stop_target_accuracy", "stop_rounds",
+        "stop_target_accuracy", "stop_rounds", "trace",
     ] {
         if let Some(v) = args.get(key) {
             // Ints/floats/strings: try int, then float, then string.
@@ -123,11 +133,15 @@ fn cmd_run(mut args: Args) -> Result<()> {
             cfg.apply_one(key, &tv).map_err(anyhow::Error::msg)?;
         }
     }
+    if args.flag("profile") {
+        cfg.obs.profile = true;
+    }
+    let con = c2dfb::obs::Console::new(args.flag("quiet"), args.flag("verbose"));
     args.finish().map_err(anyhow::Error::msg)?;
     cfg.validate()?;
 
     let reg = ArtifactRegistry::open_default()?;
-    println!(
+    con.info(format_args!(
         "running {} on {} (topology={}, partition={}, compressor={}, rounds={})",
         cfg.algorithm.name(),
         cfg.preset,
@@ -135,12 +149,21 @@ fn cmd_run(mut args: Args) -> Result<()> {
         cfg.partition.name(),
         cfg.compressor,
         cfg.rounds
-    );
-    let metrics = Runner::new(&cfg).registry(&reg).run()?;
-    println!("{}", summarize(&metrics));
+    ));
+    let rec = c2dfb::obs::Recorder::new(cfg.obs.trace.is_some(), cfg.obs.profile);
+    let metrics = Runner::new(&cfg).registry(&reg).recorder(&rec).run()?;
+    con.info(format_args!("{}", summarize(&metrics)));
     let dir = std::path::Path::new(&cfg.out_dir).join(&cfg.name);
     metrics.write_to(&dir)?;
-    println!("traces written to {}", dir.display());
+    con.info(format_args!("traces written to {}", dir.display()));
+    if let Some(path) = &cfg.obs.trace {
+        let text = rec.take_trace().unwrap_or_default();
+        std::fs::write(path, text).map_err(|e| anyhow!("writing trace {path}: {e}"))?;
+        con.info(format_args!("wrote JSONL trace to {path}"));
+    }
+    if let Some(p) = rec.render_profile() {
+        println!("-- profile (wall-clock, nondeterministic) --\n{p}");
+    }
     Ok(())
 }
 
@@ -191,12 +214,20 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     }
     let verify = args.flag("verify") || tiny;
     let verbose = args.flag("verbose");
+    let trace_path = args.get("trace");
+    let eopts = sweep::ExecOpts {
+        jobs: spec.jobs,
+        console: c2dfb::obs::Console::new(args.flag("quiet"), verbose),
+        trace: trace_path.is_some(),
+        profile: args.flag("profile"),
+    };
+    let con = eopts.console;
     args.finish().map_err(anyhow::Error::msg)?;
 
     let jobs = sweep::effective_jobs(spec.jobs);
     let started = std::time::Instant::now();
-    let (grid, outcomes) = sweep::run(&spec, verbose)?;
-    println!(
+    let (grid, outcomes) = sweep::run_with(&spec, &eopts)?;
+    con.info(format_args!(
         "== sweep: {} cells ({} tasks × {} partitions × {} topologies × {} compressors × {} engines × {} stops × {} algos) on {jobs} workers ==",
         grid.cells.len(),
         spec.tasks.len(),
@@ -206,34 +237,60 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         spec.engines.len(),
         spec.stops.len(),
         spec.algos.len(),
-    );
+    ));
     let mut n_err = 0usize;
     for (cell, o) in grid.cells.iter().zip(&outcomes) {
         match &o.result {
-            Ok(m) => println!("  {:48} {}", cell.id, summarize(m)),
+            Ok(m) => con.info(format_args!("  {:48} {}", cell.id, summarize(m))),
             Err(e) => {
                 n_err += 1;
-                println!("  {:48} ERROR: {e}", cell.id);
+                con.info(format_args!("  {:48} ERROR: {e}", cell.id));
             }
         }
     }
-    println!(
+    con.info(format_args!(
         "ran {} cells in {:.1}s wall ({n_err} errors)",
         grid.cells.len(),
         started.elapsed().as_secs_f64()
-    );
+    ));
     let dir = std::path::Path::new(&spec.base.out_dir).join(&spec.base.name);
     let (csv, json) = sweep::write_report(&dir, &grid.cells, &outcomes)?;
-    println!("aggregated report: {} + {}", csv.display(), json.display());
+    con.info(format_args!(
+        "aggregated report: {} + {}",
+        csv.display(),
+        json.display()
+    ));
+    if let Some(path) = &trace_path {
+        std::fs::write(path, sweep::concat_traces(&outcomes))
+            .map_err(|e| anyhow!("writing trace {path}: {e}"))?;
+        con.info(format_args!("wrote JSONL trace to {path}"));
+    }
+    if eopts.profile {
+        for oc in &outcomes {
+            if let Some(p) = &oc.profile {
+                println!("-- profile (wall-clock, nondeterministic): {} --\n{p}", oc.id);
+            }
+        }
+    }
 
     if verify {
-        println!("verify: re-running the cells serially to prove bit-identity ...");
+        con.info(format_args!(
+            "verify: re-running the cells serially to prove bit-identity ..."
+        ));
         // Re-run the already-expanded cells at jobs = 1 — same cells,
-        // same task instances, no duplicate grid expansion or dataset
-        // generation; only the execution width changes.
+        // same task instances, same telemetry sinks, no duplicate grid
+        // expansion or dataset generation; only the execution width
+        // changes.  diff_outcomes also compares the per-cell JSONL
+        // trace chunks, so a --trace run proves the trace bytes are
+        // width-independent too.
         let tasks: Vec<&(dyn c2dfb::tasks::BilevelTask + Sync)> =
             grid.tasks.iter().map(|t| t.as_ref()).collect();
-        let soutcomes = sweep::run_cells(&grid.cells, &tasks, None, 1, false);
+        let sopts = sweep::ExecOpts {
+            jobs: 1,
+            console: c2dfb::obs::Console::quiet(),
+            ..eopts
+        };
+        let soutcomes = sweep::run_cells_with(&grid.cells, &tasks, None, &sopts);
         if let Some(d) = sweep::diff_outcomes(&outcomes, &soutcomes) {
             anyhow::bail!("parallel execution diverged from serial: {d}");
         }
@@ -245,10 +302,10 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
             par_csv == ser_csv && par_json == ser_json,
             "aggregate report bytes differ between parallel and serial execution"
         );
-        println!(
+        con.info(format_args!(
             "OK {jobs}-way-parallel ≡ serial: all {} per-cell results bit-identical, report bytes identical.",
             outcomes.len()
-        );
+        ));
     }
     if n_err > 0 {
         anyhow::bail!(
@@ -267,16 +324,19 @@ fn cmd_netsweep(mut args: Args) -> Result<()> {
         out_dir: args.get_or("out", "runs"),
         seed: args.get_parse("seed", 42u64),
         verbose: args.flag("verbose"),
+        quiet: args.flag("quiet"),
+        trace: args.get("trace"),
+        profile: args.flag("profile"),
         jobs: args.get_parse("jobs", 1usize),
         ..Default::default()
     };
     args.finish().map_err(anyhow::Error::msg)?;
     // Analytic task — no artifact registry needed.
     experiments::netsweep(&opts, tiny)?;
-    println!(
+    opts.console().info(format_args!(
         "\ntraces under {}/netsweep/ — compare comm_mb / sim_time_s / dropped across regimes.",
         opts.out_dir
-    );
+    ));
     Ok(())
 }
 
@@ -290,16 +350,19 @@ fn cmd_budget(mut args: Args) -> Result<()> {
         out_dir: args.get_or("out", "runs"),
         seed: args.get_parse("seed", 42u64),
         verbose: args.flag("verbose"),
+        quiet: args.flag("quiet"),
+        trace: args.get("trace"),
+        profile: args.flag("profile"),
         jobs: args.get_parse("jobs", 1usize),
         ..Default::default()
     };
     args.finish().map_err(anyhow::Error::msg)?;
     // Native tasks — no artifact registry needed.
     experiments::budget_on(&opts, budget_mb, tiny, &task_spec)?;
-    println!(
+    opts.console().info(format_args!(
         "\ntraces under {}/budget/ — equal-communication comparison; the stop column records why each run ended.",
         opts.out_dir
-    );
+    ));
     Ok(())
 }
 
@@ -354,6 +417,9 @@ fn cmd_harness(which: &str, mut args: Args) -> Result<()> {
         out_dir: args.get_or("out", "runs"),
         seed: args.get_parse("seed", 42u64),
         verbose: args.flag("verbose"),
+        quiet: args.flag("quiet"),
+        trace: args.get("trace"),
+        profile: args.flag("profile"),
         jobs: args.get_parse("jobs", 1usize),
         ..Default::default()
     };
@@ -391,6 +457,26 @@ fn cmd_harness(which: &str, mut args: Args) -> Result<()> {
         }
         _ => unreachable!(),
     }
-    println!("\ntraces under {}/ — plot loss/accuracy against comm_mb (Figs 2,3), wall/sim time (Fig 2 right, Table 1), or round (Figs 4,6).", opts.out_dir);
+    opts.console().info(format_args!("\ntraces under {}/ — plot loss/accuracy against comm_mb (Figs 2,3), wall/sim time (Fig 2 right, Table 1), or round (Figs 4,6).", opts.out_dir));
+    Ok(())
+}
+
+/// `c2dfb trace <file.jsonl>`: validate every line of a recorded trace
+/// against the JSONL schema and render the per-phase cost table
+/// (bytes / oracles / sim-time by phase × algorithm × node decile).
+fn cmd_trace(mut args: Args) -> Result<()> {
+    let file = match args.get("file") {
+        Some(f) => f,
+        None => args
+            .positional
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow!("trace: expected a JSONL file, e.g. `c2dfb trace out.jsonl`"))?,
+    };
+    args.finish().map_err(anyhow::Error::msg)?;
+    let text =
+        std::fs::read_to_string(&file).map_err(|e| anyhow!("reading {file}: {e}"))?;
+    let summary = c2dfb::obs::summarize(&text).map_err(anyhow::Error::msg)?;
+    println!("{}", summary.render());
     Ok(())
 }

@@ -292,6 +292,157 @@ impl RunMetrics {
         ])
     }
 
+    /// Prometheus text-exposition snapshot of this run — the metrics
+    /// surface the future `c2dfb serve` daemon will scrape.  Counters
+    /// carry a `_total` suffix; every sample is labeled
+    /// `{algo, label}`.  Wall-clock time is intentionally absent: the
+    /// exposition covers the same deterministic counters as the trace
+    /// sink, so scraping a finished run is reproducible.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let lbl = format!(
+            "{{algo={:?},label={:?}}}",
+            self.algo,
+            self.label.replace(['\n', '"'], "_")
+        );
+        // One HELP/TYPE header per metric name, then its samples — strict
+        // exposition-format parsers reject repeated TYPE lines.
+        fn family(
+            out: &mut String,
+            lbl: &str,
+            name: &str,
+            help: &str,
+            kind: &str,
+            samples: &[(Option<&str>, f64)],
+        ) {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            for (extra, v) in samples {
+                let l = match extra {
+                    Some(e) => format!("{},{e}}}", lbl.trim_end_matches('}')),
+                    None => lbl.to_string(),
+                };
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    let _ = writeln!(out, "{name}{l} {}", *v as i64);
+                } else {
+                    let _ = writeln!(out, "{name}{l} {v}");
+                }
+            }
+        }
+        let one = |v: f64| vec![(None, v)];
+        family(
+            &mut out,
+            &lbl,
+            "c2dfb_comm_bytes_total",
+            "Application bytes sent by all nodes.",
+            "counter",
+            &one(self.ledger.total_bytes as f64),
+        );
+        family(
+            &mut out,
+            &lbl,
+            "c2dfb_messages_total",
+            "Messages sent.",
+            "counter",
+            &one(self.ledger.messages as f64),
+        );
+        family(
+            &mut out,
+            &lbl,
+            "c2dfb_dropped_messages_total",
+            "Messages lost in transit (event engine).",
+            "counter",
+            &one(self.ledger.dropped_messages as f64),
+        );
+        family(
+            &mut out,
+            &lbl,
+            "c2dfb_gossip_rounds_total",
+            "Paid gossip exchanges.",
+            "counter",
+            &one(self.ledger.gossip_rounds as f64),
+        );
+        family(
+            &mut out,
+            &lbl,
+            "c2dfb_oracle_calls_total",
+            "Oracle calls by differentiation order.",
+            "counter",
+            &[
+                (Some("order=\"first\""), self.oracles.first_order as f64),
+                (Some("order=\"second\""), self.oracles.second_order as f64),
+            ],
+        );
+        family(
+            &mut out,
+            &lbl,
+            "c2dfb_evals_total",
+            "Consensus evaluations.",
+            "counter",
+            &one(self.oracles.evals as f64),
+        );
+        family(
+            &mut out,
+            &lbl,
+            "c2dfb_sim_time_seconds",
+            "Virtual network time.",
+            "gauge",
+            &one(self.ledger.network_time_s),
+        );
+        family(
+            &mut out,
+            &lbl,
+            "c2dfb_rounds",
+            "Last evaluated outer round.",
+            "gauge",
+            &one(self.trace.last().map_or(0.0, |p| p.round as f64)),
+        );
+        if let Some(p) = self.trace.last() {
+            family(
+                &mut out,
+                &lbl,
+                "c2dfb_loss",
+                "Consensus loss at the last evaluation.",
+                "gauge",
+                &one(p.loss),
+            );
+            family(
+                &mut out,
+                &lbl,
+                "c2dfb_grad_norm",
+                "Hypergradient norm at the last evaluation.",
+                "gauge",
+                &one(p.grad_norm),
+            );
+            family(
+                &mut out,
+                &lbl,
+                "c2dfb_consensus_err",
+                "Consensus error at the last evaluation.",
+                "gauge",
+                &one(p.consensus_err),
+            );
+            family(
+                &mut out,
+                &lbl,
+                "c2dfb_accuracy",
+                "Consensus accuracy at the last evaluation.",
+                "gauge",
+                &one(p.accuracy),
+            );
+        }
+        let reason = format!("reason={:?}", self.stop_reason.map_or("none", |r| r.name()));
+        family(
+            &mut out,
+            &lbl,
+            "c2dfb_stop_reason",
+            "1 for the reason the run stopped.",
+            "gauge",
+            &[(Some(reason.as_str()), 1.0)],
+        );
+        out
+    }
+
     /// Write trace CSV + summary JSON under `dir` (created if needed).
     pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<()> {
         std::fs::create_dir_all(dir)?;
@@ -394,6 +545,31 @@ mod tests {
         // TargetAccuracy needs a trace point.
         let empty = RunMetrics::new("a", "b");
         assert!(!StopCondition::TargetAccuracy(0.0).triggered(0, &empty));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let mut m = RunMetrics::new("c2dfb", "ring");
+        m.ledger.total_bytes = 1234;
+        m.ledger.messages = 10;
+        m.oracles.first_order = 40;
+        m.oracles.second_order = 2;
+        m.record_eval(5, 0.25, 0.9, 0.125, 0.0);
+        m.stop_reason = Some(StopReason::Rounds);
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE c2dfb_comm_bytes_total counter"));
+        assert!(text.contains("c2dfb_comm_bytes_total{algo=\"c2dfb\",label=\"ring\"} 1234"));
+        assert!(text
+            .contains("c2dfb_oracle_calls_total{algo=\"c2dfb\",label=\"ring\",order=\"first\"} 40"));
+        assert!(text
+            .contains("c2dfb_oracle_calls_total{algo=\"c2dfb\",label=\"ring\",order=\"second\"} 2"));
+        assert!(text.contains("c2dfb_stop_reason{algo=\"c2dfb\",label=\"ring\",reason=\"rounds\"} 1"));
+        assert!(text.contains("c2dfb_rounds{algo=\"c2dfb\",label=\"ring\"} 5"));
+        assert!(text.contains("c2dfb_accuracy{algo=\"c2dfb\",label=\"ring\"} 0.9"));
+        // One TYPE header per family, even multi-sample ones.
+        assert_eq!(text.matches("# TYPE c2dfb_oracle_calls_total").count(), 1);
+        // The exposition is deterministic: no wall-clock samples.
+        assert!(!text.contains("wall"));
     }
 
     #[test]

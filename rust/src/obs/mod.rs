@@ -1,0 +1,1173 @@
+//! `obs` — structured tracing, per-phase metrics, and deterministic run
+//! telemetry.
+//!
+//! The paper's claims are resource claims (Õ(ε⁻⁴) first-order oracle
+//! calls, compressed inner-loop traffic), but `RunMetrics` only reports
+//! end-of-run aggregates.  This module records *where* inside a run the
+//! bytes, oracle calls and simulated time go, without perturbing any of
+//! the bit-reproducibility contracts:
+//!
+//! * [`Recorder`] — a cheap clonable handle threaded through
+//!   [`RunContext`](crate::algorithms::RunContext) and
+//!   [`InnerState`](crate::optim::InnerState).  The no-op recorder
+//!   ([`Recorder::noop`], the default) is a `None` behind the handle:
+//!   every instrumentation call is a single branch, no allocation — the
+//!   zero-allocation steady-state contract of the inner loop is asserted
+//!   *with a recorder attached* by `benches/inner_loop.rs`.
+//! * A **deterministic JSONL sink** (`--trace out.jsonl`): one JSON object
+//!   per line, stamped with counters and simulated time only — never wall
+//!   clock.  Tracing consumes no RNG and never touches the
+//!   [`CommLedger`](crate::metrics::CommLedger), so traced runs are
+//!   bit-identical to untraced runs, and sweep traces are byte-identical
+//!   at any `--jobs` width (per-cell buffers, flushed in declaration
+//!   order — the docs/SWEEP.md cell-id contract).
+//! * A **wall-clock phase profiler** (`--profile`): explicitly
+//!   nondeterministic, reported separately ([`Recorder::render_profile`])
+//!   and never written into the JSONL sink.
+//! * [`Console`] — one place for harness verbosity (`--quiet` /
+//!   `--verbose`) instead of scattered `println!`/`eprintln!`.
+//! * [`summarize`] / [`validate_line`] — the engine behind `c2dfb trace
+//!   <file>`: schema validation (rejecting any wall-clock field) and the
+//!   per-phase cost table (bytes / oracle calls / sim-time by phase ×
+//!   algorithm, plus per-node byte deciles).
+//!
+//! The span taxonomy, JSONL schema and determinism contract are
+//! documented in `docs/OBS.md`.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::compress::Compressed;
+use crate::compress::PayloadKind;
+use crate::metrics::{CommLedger, OracleCounter, RunMetrics, TracePoint};
+use crate::sim::Arrival;
+use crate::util::json::Json;
+
+/// JSONL trace format version (the `format` key of `run_start` lines).
+pub const TRACE_FORMAT: u64 = 1;
+
+/// Histogram width for payload-byte and latency histograms (log₂ buckets).
+pub const HIST_BUCKETS: usize = 24;
+
+/// Default JSONL buffer capacity.  Pre-sized so steady-state appends do
+/// not reallocate for typical runs (round lines are ~120 bytes).
+pub const DEFAULT_TRACE_CAPACITY: usize = 256 * 1024;
+
+// ---------------------------------------------------------------------------
+// span taxonomy
+// ---------------------------------------------------------------------------
+
+/// Which loop a recorded phase belongs to.  Inner-loop instrumentation
+/// points live in `optim::inner`, which is generic over the y/z sequence —
+/// the algorithm tags each [`InnerState`](crate::optim::InnerState) with a
+/// scoped handle ([`Recorder::scoped`]) so the phases separate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Scope {
+    /// The outer loop (Algorithm 1) and everything not inside an `IN` call.
+    #[default]
+    Outer,
+    /// The y-sequence inner loop (descending h = f + λg).
+    InnerY,
+    /// The z-sequence inner loop (descending g).
+    InnerZ,
+}
+
+pub const N_SCOPES: usize = 3;
+
+impl Scope {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scope::Outer => "outer",
+            Scope::InnerY => "inner_y",
+            Scope::InnerZ => "inner_z",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Scope::Outer => 0,
+            Scope::InnerY => 1,
+            Scope::InnerZ => 2,
+        }
+    }
+}
+
+const ALL_SCOPES: [Scope; N_SCOPES] = [Scope::Outer, Scope::InnerY, Scope::InnerZ];
+
+/// What kind of work a span covers.  C²DFB uses `Init`, `Mix`,
+/// `Compress`, `Exchange`, `Grad`, `Tracker`, `Hypergrad` and `Eval`;
+/// the second-order baselines additionally attribute their coarse
+/// sections to `Lower` (lower-level GD), `Hvp` (MADSBO's quadratic
+/// sub-solver) and `Neumann` (MDBO's series).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// `BilevelAlgorithm::init` — state construction before round 0.
+    Init,
+    /// Gossip-mixing model iterates (outer x-mix, inner model update).
+    Mix,
+    /// Residual computation + compressor encode.
+    Compress,
+    /// A paid transport exchange (and the fold of delivered messages).
+    Exchange,
+    /// Lower-level gradient oracle batches.
+    Grad,
+    /// Gradient-tracker bookkeeping (s-updates).
+    Tracker,
+    /// Hypergradient assembly.
+    Hypergrad,
+    /// Baselines: the lower-level GD section.
+    Lower,
+    /// MADSBO: the tracked HVP quadratic sub-solver.
+    Hvp,
+    /// MDBO: the Neumann-series Hessian-inverse approximation.
+    Neumann,
+    /// Consensus evaluation (loss/accuracy on the averaged model).
+    Eval,
+}
+
+pub const N_PHASES: usize = 11;
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Init => "init",
+            Phase::Mix => "mix",
+            Phase::Compress => "compress",
+            Phase::Exchange => "exchange",
+            Phase::Grad => "grad",
+            Phase::Tracker => "tracker",
+            Phase::Hypergrad => "hypergrad",
+            Phase::Lower => "lower",
+            Phase::Hvp => "hvp",
+            Phase::Neumann => "neumann",
+            Phase::Eval => "eval",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::Init => 0,
+            Phase::Mix => 1,
+            Phase::Compress => 2,
+            Phase::Exchange => 3,
+            Phase::Grad => 4,
+            Phase::Tracker => 5,
+            Phase::Hypergrad => 6,
+            Phase::Lower => 7,
+            Phase::Hvp => 8,
+            Phase::Neumann => 9,
+            Phase::Eval => 10,
+        }
+    }
+}
+
+const ALL_PHASES: [Phase; N_PHASES] = [
+    Phase::Init,
+    Phase::Mix,
+    Phase::Compress,
+    Phase::Exchange,
+    Phase::Grad,
+    Phase::Tracker,
+    Phase::Hypergrad,
+    Phase::Lower,
+    Phase::Hvp,
+    Phase::Neumann,
+    Phase::Eval,
+];
+
+// ---------------------------------------------------------------------------
+// recorder
+// ---------------------------------------------------------------------------
+
+/// A copy of the [`CommLedger`] counters before a paid section, so the
+/// recorder can attribute the delta.  Plain `Copy` data — taking a
+/// snapshot never allocates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LedgerSnap {
+    pub bytes: u64,
+    pub msgs: u64,
+    pub dropped: u64,
+    pub gossip: u64,
+    pub sim_s: f64,
+}
+
+impl LedgerSnap {
+    pub fn of(l: &CommLedger) -> LedgerSnap {
+        LedgerSnap {
+            bytes: l.total_bytes,
+            msgs: l.messages,
+            dropped: l.dropped_messages,
+            gossip: l.gossip_rounds,
+            sim_s: l.network_time_s,
+        }
+    }
+}
+
+/// Per-(scope, phase) aggregates.  `wall_ns` is profiler-only data and is
+/// never written to the deterministic sink.
+#[derive(Clone, Copy, Debug, Default)]
+struct PhaseStat {
+    count: u64,
+    bytes: u64,
+    msgs: u64,
+    dropped: u64,
+    oracles: u64,
+    sim_s: f64,
+    wall_ns: u64,
+}
+
+impl PhaseStat {
+    fn is_zero(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// Per-compressor encode/decode counters + payload-byte histogram.
+#[derive(Clone, Debug, Default)]
+struct CompressStats {
+    encodes: u64,
+    decodes: u64,
+    dense: u64,
+    sparse: u64,
+    quantized: u64,
+    payload_hist: [u64; HIST_BUCKETS],
+}
+
+/// Per-edge delivery counters + sim-time latency histogram (event engine
+/// only — the synchronous transport has no per-edge timing).
+#[derive(Clone, Debug, Default)]
+struct EdgeStats {
+    delivered: u64,
+    dropped: u64,
+    queue_peak: u64,
+    latency_hist: [u64; HIST_BUCKETS],
+}
+
+struct Inner {
+    /// JSONL buffer; `None` when only profiling.
+    buf: Option<String>,
+    profile: bool,
+    cell: Option<String>,
+    algo: String,
+    phase: [[PhaseStat; N_PHASES]; N_SCOPES],
+    enc: CompressStats,
+    edges: EdgeStats,
+    node_bytes: Vec<u64>,
+    resets: u64,
+}
+
+impl Inner {
+    fn reset_run(&mut self) {
+        self.phase = [[PhaseStat::default(); N_PHASES]; N_SCOPES];
+        self.enc = CompressStats::default();
+        self.edges = EdgeStats::default();
+        self.node_bytes.clear();
+        self.resets = 0;
+    }
+}
+
+/// The span/event recorder behind a cheap clonable handle.
+///
+/// The default ([`Recorder::noop`]) carries no state: every
+/// instrumentation call is one `Option` branch and returns immediately —
+/// no allocation, no RNG, no ledger access.  An enabled recorder shares
+/// one `Rc<RefCell>` across its scoped clones, so the outer loop and both
+/// inner-loop states record into the same sinks.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Rc<RefCell<Inner>>>,
+    scope: Scope,
+}
+
+impl Recorder {
+    /// The no-op recorder: all instrumentation compiles down to a branch.
+    pub fn noop() -> Recorder {
+        Recorder::default()
+    }
+
+    /// A recorder with the requested sinks; noop when both are off.
+    pub fn new(trace: bool, profile: bool) -> Recorder {
+        Recorder::with_capacity(if trace { DEFAULT_TRACE_CAPACITY } else { 0 }, profile)
+    }
+
+    /// A recorder whose JSONL buffer is pre-sized to `trace_capacity`
+    /// bytes (0 disables the trace sink).  Steady-state appends within
+    /// the capacity never reallocate.
+    pub fn with_capacity(trace_capacity: usize, profile: bool) -> Recorder {
+        if trace_capacity == 0 && !profile {
+            return Recorder::noop();
+        }
+        Recorder {
+            inner: Some(Rc::new(RefCell::new(Inner {
+                buf: (trace_capacity > 0).then(|| String::with_capacity(trace_capacity)),
+                profile,
+                cell: None,
+                algo: String::new(),
+                phase: [[PhaseStat::default(); N_PHASES]; N_SCOPES],
+                enc: CompressStats::default(),
+                edges: EdgeStats::default(),
+                node_bytes: Vec::new(),
+                resets: 0,
+            }))),
+            scope: Scope::Outer,
+        }
+    }
+
+    /// A recorder for one sweep cell: `run_start` lines carry the cell id
+    /// so a concatenated sweep trace keyed by the cell-id contract stays
+    /// self-describing.
+    pub fn for_cell(trace: bool, profile: bool, cell: &str) -> Recorder {
+        let rec = Recorder::new(trace, profile);
+        if let Some(rc) = &rec.inner {
+            rc.borrow_mut().cell = Some(cell.to_string());
+        }
+        rec
+    }
+
+    /// Whether any sink is attached (false for the no-op recorder).
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// A clone of this handle tagged with `scope`; records into the same
+    /// shared sinks.
+    pub fn scoped(&self, scope: Scope) -> Recorder {
+        Recorder { inner: self.inner.clone(), scope }
+    }
+
+    /// `Some(now)` iff the wall-clock profiler is on.  Pass the result to
+    /// the matching `phase`/`phase_comm`/`exchange` call; the deterministic
+    /// sink never sees it.
+    pub fn clock(&self) -> Option<Instant> {
+        match &self.inner {
+            Some(rc) if rc.borrow().profile => Some(Instant::now()),
+            _ => None,
+        }
+    }
+
+    // -- run lifecycle ----------------------------------------------------
+
+    /// Start-of-run event: resets per-run aggregates and emits the
+    /// `run_start` line.  `seed` is written as a string (u64s do not fit
+    /// f64 JSON numbers losslessly).
+    pub fn run_start(&self, algo: &str, label: &str, m: usize, seed: u64, compressor: &str) {
+        let Some(rc) = &self.inner else { return };
+        let mut g = rc.borrow_mut();
+        g.reset_run();
+        g.algo.clear();
+        g.algo.push_str(algo);
+        g.node_bytes.resize(m, 0);
+        let cell = g.cell.take();
+        if let Some(b) = g.buf.as_mut() {
+            b.push_str("{\"ev\":\"run_start\",\"format\":");
+            let _ = write!(b, "{TRACE_FORMAT}");
+            b.push_str(",\"algo\":");
+            push_json_str(b, algo);
+            if let Some(c) = &cell {
+                b.push_str(",\"cell\":");
+                push_json_str(b, c);
+            }
+            b.push_str(",\"label\":");
+            push_json_str(b, label);
+            b.push_str(",\"m\":");
+            let _ = write!(b, "{m}");
+            b.push_str(",\"seed\":");
+            push_json_str(b, &seed.to_string());
+            b.push_str(",\"compressor\":");
+            push_json_str(b, compressor);
+            b.push_str("}\n");
+        }
+        g.cell = cell;
+    }
+
+    /// End-of-round span: cumulative counters after the round's step.
+    pub fn round(&self, round: usize, l: &CommLedger, o: &OracleCounter) {
+        let Some(rc) = &self.inner else { return };
+        let mut g = rc.borrow_mut();
+        if let Some(b) = g.buf.as_mut() {
+            b.push_str("{\"ev\":\"round\",\"round\":");
+            let _ = write!(b, "{round}");
+            b.push_str(",\"bytes\":");
+            let _ = write!(b, "{}", l.total_bytes);
+            b.push_str(",\"msgs\":");
+            let _ = write!(b, "{}", l.messages);
+            b.push_str(",\"dropped\":");
+            let _ = write!(b, "{}", l.dropped_messages);
+            b.push_str(",\"gossip\":");
+            let _ = write!(b, "{}", l.gossip_rounds);
+            b.push_str(",\"first_order\":");
+            let _ = write!(b, "{}", o.first_order);
+            b.push_str(",\"second_order\":");
+            let _ = write!(b, "{}", o.second_order);
+            b.push_str(",\"sim_s\":");
+            push_num(b, l.network_time_s);
+            b.push_str("}\n");
+        }
+    }
+
+    /// Evaluation span: the trace point minus its wall-clock field.
+    pub fn eval(&self, p: &TracePoint) {
+        let Some(rc) = &self.inner else { return };
+        let mut g = rc.borrow_mut();
+        if let Some(b) = g.buf.as_mut() {
+            b.push_str("{\"ev\":\"eval\",\"round\":");
+            let _ = write!(b, "{}", p.round);
+            b.push_str(",\"loss\":");
+            push_num(b, p.loss);
+            b.push_str(",\"accuracy\":");
+            push_num(b, p.accuracy);
+            b.push_str(",\"grad_norm\":");
+            push_num(b, p.grad_norm);
+            b.push_str(",\"consensus\":");
+            push_num(b, p.consensus_err);
+            b.push_str(",\"comm_mb\":");
+            push_num(b, p.comm_mb);
+            b.push_str(",\"dropped\":");
+            let _ = write!(b, "{}", p.dropped_msgs);
+            b.push_str(",\"sim_s\":");
+            push_num(b, p.sim_time_s);
+            b.push_str("}\n");
+        }
+    }
+
+    /// End-of-run: per-phase aggregate lines, compressor/edge/node
+    /// summaries, then the `run_end` line.
+    pub fn run_end(&self, m: &RunMetrics) {
+        let Some(rc) = &self.inner else { return };
+        let mut g = rc.borrow_mut();
+        let g = &mut *g;
+        let Some(b) = g.buf.as_mut() else { return };
+        for scope in ALL_SCOPES {
+            for phase in ALL_PHASES {
+                let st = g.phase[scope.idx()][phase.idx()];
+                if st.is_zero() {
+                    continue;
+                }
+                b.push_str("{\"ev\":\"phase\",\"scope\":");
+                push_json_str(b, scope.name());
+                b.push_str(",\"phase\":");
+                push_json_str(b, phase.name());
+                b.push_str(",\"count\":");
+                let _ = write!(b, "{}", st.count);
+                b.push_str(",\"bytes\":");
+                let _ = write!(b, "{}", st.bytes);
+                b.push_str(",\"msgs\":");
+                let _ = write!(b, "{}", st.msgs);
+                b.push_str(",\"dropped\":");
+                let _ = write!(b, "{}", st.dropped);
+                b.push_str(",\"oracles\":");
+                let _ = write!(b, "{}", st.oracles);
+                b.push_str(",\"sim_s\":");
+                push_num(b, st.sim_s);
+                b.push_str("}\n");
+            }
+        }
+        if g.enc.encodes > 0 {
+            b.push_str("{\"ev\":\"compress\",\"encodes\":");
+            let _ = write!(b, "{}", g.enc.encodes);
+            b.push_str(",\"decodes\":");
+            let _ = write!(b, "{}", g.enc.decodes);
+            b.push_str(",\"dense\":");
+            let _ = write!(b, "{}", g.enc.dense);
+            b.push_str(",\"sparse\":");
+            let _ = write!(b, "{}", g.enc.sparse);
+            b.push_str(",\"quantized\":");
+            let _ = write!(b, "{}", g.enc.quantized);
+            b.push_str(",\"payload_hist\":");
+            push_hist(b, &g.enc.payload_hist);
+            b.push_str("}\n");
+        }
+        if g.edges.delivered + g.edges.dropped > 0 {
+            b.push_str("{\"ev\":\"edges\",\"delivered\":");
+            let _ = write!(b, "{}", g.edges.delivered);
+            b.push_str(",\"dropped\":");
+            let _ = write!(b, "{}", g.edges.dropped);
+            b.push_str(",\"queue_peak\":");
+            let _ = write!(b, "{}", g.edges.queue_peak);
+            b.push_str(",\"latency_hist\":");
+            push_hist(b, &g.edges.latency_hist);
+            b.push_str("}\n");
+        }
+        if g.node_bytes.iter().any(|&v| v > 0) {
+            b.push_str("{\"ev\":\"node_bytes\",\"bytes\":");
+            push_hist(b, &g.node_bytes);
+            b.push_str("}\n");
+        }
+        b.push_str("{\"ev\":\"run_end\",\"algo\":");
+        push_json_str(b, &m.algo);
+        b.push_str(",\"stop\":");
+        push_json_str(b, m.stop_reason.map_or("none", |r| r.name()));
+        b.push_str(",\"rounds\":");
+        let _ = write!(b, "{}", m.trace.last().map_or(0, |p| p.round));
+        b.push_str(",\"bytes\":");
+        let _ = write!(b, "{}", m.ledger.total_bytes);
+        b.push_str(",\"msgs\":");
+        let _ = write!(b, "{}", m.ledger.messages);
+        b.push_str(",\"dropped\":");
+        let _ = write!(b, "{}", m.ledger.dropped_messages);
+        b.push_str(",\"gossip\":");
+        let _ = write!(b, "{}", m.ledger.gossip_rounds);
+        b.push_str(",\"first_order\":");
+        let _ = write!(b, "{}", m.oracles.first_order);
+        b.push_str(",\"second_order\":");
+        let _ = write!(b, "{}", m.oracles.second_order);
+        b.push_str(",\"evals\":");
+        let _ = write!(b, "{}", m.oracles.evals);
+        b.push_str(",\"resets\":");
+        let _ = write!(b, "{}", g.resets);
+        b.push_str(",\"sim_s\":");
+        push_num(b, m.ledger.network_time_s);
+        b.push_str("}\n");
+    }
+
+    // -- hot-path instrumentation ----------------------------------------
+
+    /// Record a compute-only phase event (`oracles` oracle calls, no
+    /// communication).  `t` comes from [`Recorder::clock`].
+    pub fn phase(&self, phase: Phase, oracles: u64, t: Option<Instant>) {
+        let Some(rc) = &self.inner else { return };
+        let mut g = rc.borrow_mut();
+        let st = &mut g.phase[self.scope.idx()][phase.idx()];
+        st.count += 1;
+        st.oracles += oracles;
+        if let Some(t0) = t {
+            st.wall_ns += t0.elapsed().as_nanos() as u64;
+        }
+    }
+
+    /// Record a phase event that also paid communication: attributes the
+    /// ledger delta since `before`.
+    pub fn phase_comm(
+        &self,
+        phase: Phase,
+        oracles: u64,
+        before: LedgerSnap,
+        after: &CommLedger,
+        t: Option<Instant>,
+    ) {
+        let Some(rc) = &self.inner else { return };
+        let mut g = rc.borrow_mut();
+        let st = &mut g.phase[self.scope.idx()][phase.idx()];
+        st.count += 1;
+        st.oracles += oracles;
+        st.bytes += after.total_bytes - before.bytes;
+        st.msgs += after.messages - before.msgs;
+        st.dropped += after.dropped_messages - before.dropped;
+        st.sim_s += after.network_time_s - before.sim_s;
+        if let Some(t0) = t {
+            st.wall_ns += t0.elapsed().as_nanos() as u64;
+        }
+    }
+
+    /// Record one paid transport exchange: the ledger delta, per-node sent
+    /// bytes (`sent[i]` = wire bytes node i sent to EACH neighbour), and —
+    /// on the event engine — per-edge arrivals (delivered/dropped counts,
+    /// queue depth, sim-time latency histogram).
+    pub fn exchange(
+        &self,
+        phase: Phase,
+        before: LedgerSnap,
+        after: &CommLedger,
+        sent: &[usize],
+        events: &[Arrival],
+        t: Option<Instant>,
+    ) {
+        let Some(rc) = &self.inner else { return };
+        let mut g = rc.borrow_mut();
+        {
+            let st = &mut g.phase[self.scope.idx()][phase.idx()];
+            st.count += 1;
+            st.bytes += after.total_bytes - before.bytes;
+            st.msgs += after.messages - before.msgs;
+            st.dropped += after.dropped_messages - before.dropped;
+            st.sim_s += after.network_time_s - before.sim_s;
+            if let Some(t0) = t {
+                st.wall_ns += t0.elapsed().as_nanos() as u64;
+            }
+        }
+        if g.node_bytes.len() < sent.len() {
+            g.node_bytes.resize(sent.len(), 0);
+        }
+        for (nb, &s) in g.node_bytes.iter_mut().zip(sent) {
+            *nb += s as u64;
+        }
+        if !events.is_empty() {
+            g.edges.queue_peak = g.edges.queue_peak.max(events.len() as u64);
+            for e in events {
+                if e.dropped {
+                    g.edges.dropped += 1;
+                } else {
+                    g.edges.delivered += 1;
+                }
+                let lat_us = ((e.t_s - before.sim_s).max(0.0) * 1e6) as u64;
+                g.edges.latency_hist[log_bucket(lat_us)] += 1;
+            }
+        }
+    }
+
+    /// Count compressor encodes: one per message, with the payload kind
+    /// and a log₂ wire-byte histogram.
+    pub fn encoded(&self, msgs: &[Compressed]) {
+        let Some(rc) = &self.inner else { return };
+        let mut g = rc.borrow_mut();
+        for msg in msgs {
+            g.enc.encodes += 1;
+            g.enc.payload_hist[log_bucket(msg.wire_bytes() as u64)] += 1;
+            match msg.payload_kind() {
+                PayloadKind::Dense => g.enc.dense += 1,
+                PayloadKind::Sparse => g.enc.sparse += 1,
+                PayloadKind::Quantized => g.enc.quantized += 1,
+            }
+        }
+    }
+
+    /// Count `n` compressor decodes (neighbour folds of delivered
+    /// messages).
+    pub fn decoded(&self, n: u64) {
+        let Some(rc) = &self.inner else { return };
+        rc.borrow_mut().enc.decodes += n;
+    }
+
+    /// A reference-point resync event (topology epoch change or a node
+    /// that fell behind): counter-stamped, scope from the handle.
+    pub fn reset(&self, step: u64, epoch: u64) {
+        let Some(rc) = &self.inner else { return };
+        let mut g = rc.borrow_mut();
+        g.resets += 1;
+        let scope = self.scope;
+        if let Some(b) = g.buf.as_mut() {
+            b.push_str("{\"ev\":\"reset\",\"scope\":");
+            push_json_str(b, scope.name());
+            b.push_str(",\"step\":");
+            let _ = write!(b, "{step}");
+            b.push_str(",\"epoch\":");
+            let _ = write!(b, "{epoch}");
+            b.push_str("}\n");
+        }
+    }
+
+    // -- sink extraction --------------------------------------------------
+
+    /// Take the JSONL buffer (None for noop/profile-only recorders, or if
+    /// already taken).
+    pub fn take_trace(&self) -> Option<String> {
+        self.inner.as_ref()?.borrow_mut().buf.take()
+    }
+
+    /// Render the wall-clock phase profile (None unless profiling).  The
+    /// output is explicitly nondeterministic and is kept out of the
+    /// deterministic JSONL sink by construction.
+    pub fn render_profile(&self) -> Option<String> {
+        let rc = self.inner.as_ref()?;
+        let g = rc.borrow();
+        if !g.profile {
+            return None;
+        }
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "# wall-clock phase profile ({}; nondeterministic, never in --trace)",
+            if g.algo.is_empty() { "run" } else { &g.algo }
+        );
+        let _ = writeln!(out, "{:<22} {:>10} {:>12} {:>12}", "scope/phase", "count", "wall_ms", "ms/event");
+        for scope in ALL_SCOPES {
+            for phase in ALL_PHASES {
+                let st = g.phase[scope.idx()][phase.idx()];
+                if st.is_zero() {
+                    continue;
+                }
+                let ms = st.wall_ns as f64 / 1e6;
+                let _ = writeln!(
+                    out,
+                    "{:<22} {:>10} {:>12.3} {:>12.6}",
+                    format!("{}/{}", scope.name(), phase.name()),
+                    st.count,
+                    ms,
+                    ms / st.count as f64,
+                );
+            }
+        }
+        Some(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// console verbosity
+// ---------------------------------------------------------------------------
+
+/// Harness output level: `--quiet` < normal < `--verbose`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verbosity {
+    Quiet,
+    #[default]
+    Normal,
+    Verbose,
+}
+
+/// The one place harness progress output goes through, so `--quiet` /
+/// `--verbose` control every sweep/goldens/budget progress line.
+/// Warnings always print (stderr).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Console {
+    pub level: Verbosity,
+}
+
+impl Console {
+    pub fn new(quiet: bool, verbose: bool) -> Console {
+        let level = if quiet {
+            Verbosity::Quiet
+        } else if verbose {
+            Verbosity::Verbose
+        } else {
+            Verbosity::Normal
+        };
+        Console { level }
+    }
+
+    pub fn quiet() -> Console {
+        Console { level: Verbosity::Quiet }
+    }
+
+    pub fn from_verbose(verbose: bool) -> Console {
+        Console::new(false, verbose)
+    }
+
+    pub fn is_verbose(&self) -> bool {
+        self.level >= Verbosity::Verbose
+    }
+
+    pub fn is_quiet(&self) -> bool {
+        self.level == Verbosity::Quiet
+    }
+
+    /// Per-trace-point progress lines (`--verbose` only).
+    pub fn progress(&self, msg: std::fmt::Arguments<'_>) {
+        if self.level >= Verbosity::Verbose {
+            println!("{msg}");
+        }
+    }
+
+    /// Normal result/summary lines (suppressed by `--quiet`).
+    pub fn info(&self, msg: std::fmt::Arguments<'_>) {
+        if self.level >= Verbosity::Normal {
+            println!("{msg}");
+        }
+    }
+
+    /// Diagnostics that must not be silenced (stderr).
+    pub fn warn(&self, msg: std::fmt::Arguments<'_>) {
+        eprintln!("{msg}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSONL helpers
+// ---------------------------------------------------------------------------
+
+/// Log₂ histogram bucket of `v` (bucket 0 holds 0, bucket k holds
+/// [2^(k-1), 2^k)), clamped to [`HIST_BUCKETS`].
+fn log_bucket(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// JSON number with [`Json`]'s exact semantics (non-finite → null,
+/// integral < 1e15 → integer form) so traces parse back identically.
+fn push_num(b: &mut String, v: f64) {
+    if !v.is_finite() {
+        b.push_str("null");
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        let _ = write!(b, "{}", v as i64);
+    } else {
+        let _ = write!(b, "{v}");
+    }
+}
+
+/// JSON string with [`Json`]'s escaping.
+fn push_json_str(b: &mut String, s: &str) {
+    crate::util::json::write_escaped(s, b);
+}
+
+fn push_hist(b: &mut String, h: &[u64]) {
+    b.push('[');
+    for (i, v) in h.iter().enumerate() {
+        if i > 0 {
+            b.push(',');
+        }
+        let _ = write!(b, "{v}");
+    }
+    b.push(']');
+}
+
+// ---------------------------------------------------------------------------
+// trace validation + summary (`c2dfb trace <file>`)
+// ---------------------------------------------------------------------------
+
+/// Required keys per event type; unknown event types are an error.
+fn required_keys(ev: &str) -> Option<&'static [&'static str]> {
+    Some(match ev {
+        "run_start" => &["format", "algo", "label", "m", "seed", "compressor"],
+        "round" => &["round", "bytes", "msgs", "dropped", "gossip", "first_order", "sim_s"],
+        "eval" => &["round", "loss", "accuracy", "grad_norm", "consensus", "comm_mb", "sim_s"],
+        "reset" => &["scope", "step", "epoch"],
+        "phase" => &["scope", "phase", "count", "bytes", "msgs", "dropped", "oracles", "sim_s"],
+        "compress" => &["encodes", "decodes", "dense", "sparse", "quantized", "payload_hist"],
+        "edges" => &["delivered", "dropped", "queue_peak", "latency_hist"],
+        "node_bytes" => &["bytes"],
+        "run_end" => &[
+            "algo",
+            "stop",
+            "rounds",
+            "bytes",
+            "msgs",
+            "gossip",
+            "first_order",
+            "second_order",
+            "evals",
+            "sim_s",
+        ],
+        _ => return None,
+    })
+}
+
+/// Validate one JSONL trace line: must parse as a JSON object with a
+/// known `ev`, all required keys present, and **no wall-clock field** —
+/// the deterministic sink's contract.
+pub fn validate_line(line: &str) -> Result<Json, String> {
+    let v = Json::parse(line).map_err(|e| format!("bad JSON: {e}"))?;
+    let obj = v.as_obj().ok_or("not a JSON object")?;
+    for k in obj.keys() {
+        if k.contains("wall") {
+            return Err(format!("wall-clock field {k:?} in deterministic trace"));
+        }
+    }
+    let ev = v
+        .get("ev")
+        .and_then(Json::as_str)
+        .ok_or("missing \"ev\" key")?;
+    let req = required_keys(ev).ok_or_else(|| format!("unknown event type {ev:?}"))?;
+    for k in req {
+        if obj.get(*k).is_none() {
+            return Err(format!("{ev}: missing required key {k:?}"));
+        }
+    }
+    Ok(v)
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct PhaseRow {
+    count: u64,
+    bytes: u64,
+    msgs: u64,
+    dropped: u64,
+    oracles: u64,
+    sim_s: f64,
+}
+
+/// Aggregated view of a JSONL trace: the per-phase cost table behind
+/// `c2dfb trace <file>`.
+#[derive(Default)]
+pub struct TraceSummary {
+    pub lines: usize,
+    pub runs: usize,
+    pub evals: usize,
+    pub resets: usize,
+    /// (algo, scope, phase) → aggregates, across all runs in the file.
+    rows: BTreeMap<(String, String, String), PhaseRow>,
+    /// algo → per-node cumulative sent bytes, pooled across that algo's
+    /// runs (the node-decile distribution).
+    node_bytes: BTreeMap<String, Vec<u64>>,
+}
+
+/// Parse, validate and aggregate a JSONL trace.  Errors carry the
+/// 1-based line number.
+pub fn summarize(text: &str) -> Result<TraceSummary, String> {
+    let mut s = TraceSummary::default();
+    let mut algo = String::from("?");
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = validate_line(line).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        s.lines += 1;
+        let ev = v.get("ev").and_then(Json::as_str).unwrap_or("");
+        match ev {
+            "run_start" => {
+                algo = v.get("algo").and_then(Json::as_str).unwrap_or("?").to_string();
+            }
+            "run_end" => s.runs += 1,
+            "eval" => s.evals += 1,
+            "reset" => s.resets += 1,
+            "phase" => {
+                let key = (
+                    algo.clone(),
+                    v.get("scope").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    v.get("phase").and_then(Json::as_str).unwrap_or("?").to_string(),
+                );
+                let num = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                let row = s.rows.entry(key).or_default();
+                row.count += num("count") as u64;
+                row.bytes += num("bytes") as u64;
+                row.msgs += num("msgs") as u64;
+                row.dropped += num("dropped") as u64;
+                row.oracles += num("oracles") as u64;
+                row.sim_s += num("sim_s");
+            }
+            "node_bytes" => {
+                let pool = s.node_bytes.entry(algo.clone()).or_default();
+                if let Some(arr) = v.get("bytes").and_then(Json::as_arr) {
+                    pool.extend(arr.iter().map(|x| x.as_f64().unwrap_or(0.0) as u64));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(s)
+}
+
+impl TraceSummary {
+    /// All (algo, scope, phase) triples present in the trace.
+    pub fn phase_pairs(&self) -> Vec<(String, String, String)> {
+        self.rows.keys().cloned().collect()
+    }
+
+    /// Render the per-phase cost table (+ node-decile sent-byte
+    /// distribution when recorded).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace: {} lines, {} runs, {} evals, {} resets",
+            self.lines, self.runs, self.evals, self.resets
+        );
+        let _ = writeln!(
+            out,
+            "\n| {:<10} | {:<8} | {:<9} | {:>8} | {:>14} | {:>8} | {:>8} | {:>10} | {:>12} |",
+            "algo", "scope", "phase", "count", "bytes", "msgs", "dropped", "oracles", "sim_s"
+        );
+        let _ = writeln!(
+            out,
+            "|{:-<12}|{:-<10}|{:-<11}|{:-<10}|{:-<16}|{:-<10}|{:-<10}|{:-<12}|{:-<14}|",
+            "", "", "", "", "", "", "", "", ""
+        );
+        for ((algo, scope, phase), r) in &self.rows {
+            let _ = writeln!(
+                out,
+                "| {:<10} | {:<8} | {:<9} | {:>8} | {:>14} | {:>8} | {:>8} | {:>10} | {:>12.6} |",
+                algo, scope, phase, r.count, r.bytes, r.msgs, r.dropped, r.oracles, r.sim_s
+            );
+        }
+        if !self.node_bytes.is_empty() {
+            let _ = writeln!(
+                out,
+                "\nper-node sent bytes (deciles p10..p100 of the node distribution):"
+            );
+            for (algo, pool) in &self.node_bytes {
+                let mut sorted = pool.clone();
+                sorted.sort_unstable();
+                let decs: Vec<String> = (1..=10)
+                    .map(|q| {
+                        let idx = (q * sorted.len()).div_ceil(10).saturating_sub(1);
+                        format!("{}", sorted.get(idx).copied().unwrap_or(0))
+                    })
+                    .collect();
+                let _ = writeln!(out, "  {:<10} [{}]", algo, decs.join(", "));
+            }
+        }
+        out
+    }
+}
+
+/// Validate a whole trace file; returns the number of (non-empty) lines.
+pub fn validate_trace(text: &str) -> Result<usize, String> {
+    let mut n = 0;
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        validate_line(line).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StopReason;
+
+    fn ledger(bytes: u64, msgs: u64, sim_s: f64) -> CommLedger {
+        CommLedger {
+            total_bytes: bytes,
+            gossip_rounds: 1,
+            network_time_s: sim_s,
+            messages: msgs,
+            dropped_messages: 0,
+        }
+    }
+
+    #[test]
+    fn noop_recorder_is_inert() {
+        let r = Recorder::noop();
+        assert!(!r.enabled());
+        assert!(r.clock().is_none());
+        r.phase(Phase::Grad, 10, None);
+        r.round(0, &ledger(1, 1, 0.0), &OracleCounter::default());
+        assert!(r.take_trace().is_none());
+        assert!(r.render_profile().is_none());
+    }
+
+    #[test]
+    fn new_with_no_sinks_is_noop() {
+        assert!(!Recorder::new(false, false).enabled());
+        assert!(Recorder::new(true, false).enabled());
+        assert!(Recorder::new(false, true).enabled());
+    }
+
+    #[test]
+    fn trace_lines_validate_and_summarize() {
+        let r = Recorder::new(true, false);
+        r.run_start("c2dfb", "lab", 4, 42, "topk:0.5");
+        let before = LedgerSnap::of(&ledger(0, 0, 0.0));
+        r.scoped(Scope::InnerY)
+            .exchange(Phase::Exchange, before, &ledger(800, 8, 0.001), &[100; 4], &[], None);
+        r.scoped(Scope::InnerY).phase(Phase::Grad, 4, None);
+        r.round(0, &ledger(800, 8, 0.001), &OracleCounter { first_order: 4, ..Default::default() });
+        let mut m = RunMetrics::new("c2dfb", "lab");
+        m.ledger = ledger(800, 8, 0.001);
+        m.record_eval(0, 1.0, 0.5, 0.1, 0.0);
+        r.eval(m.trace.last().unwrap());
+        m.stop_reason = Some(StopReason::Rounds);
+        r.run_end(&m);
+        let text = r.take_trace().unwrap();
+        let s = summarize(&text).unwrap();
+        assert_eq!(s.runs, 1);
+        assert_eq!(s.evals, 1);
+        let pairs = s.phase_pairs();
+        assert!(pairs.contains(&("c2dfb".into(), "inner_y".into(), "exchange".into())));
+        assert!(pairs.contains(&("c2dfb".into(), "inner_y".into(), "grad".into())));
+        let rendered = s.render();
+        assert!(rendered.contains("inner_y"));
+        assert!(rendered.contains("exchange"));
+        // Deterministic-sink contract: nothing wall-clock anywhere.
+        assert!(!text.contains("wall"));
+    }
+
+    #[test]
+    fn validator_rejects_wall_clock_fields() {
+        let err = validate_line(r#"{"ev":"round","round":0,"wall_time_s":1.0}"#).unwrap_err();
+        assert!(err.contains("wall"));
+    }
+
+    #[test]
+    fn validator_rejects_unknown_events_and_missing_keys() {
+        assert!(validate_line(r#"{"ev":"bogus"}"#).is_err());
+        assert!(validate_line(r#"{"round":0}"#).is_err());
+        assert!(validate_line(r#"{"ev":"reset","scope":"inner_y"}"#).is_err());
+        assert!(validate_line("not json").is_err());
+        assert!(validate_line(
+            r#"{"ev":"reset","scope":"inner_y","step":3,"epoch":1}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn scoped_handles_share_one_sink() {
+        let r = Recorder::new(true, false);
+        r.run_start("c2dfb", "l", 2, 1, "none");
+        let y = r.scoped(Scope::InnerY);
+        let z = y.scoped(Scope::InnerZ);
+        y.phase(Phase::Mix, 0, None);
+        z.phase(Phase::Mix, 0, None);
+        let m = RunMetrics::new("c2dfb", "l");
+        r.run_end(&m);
+        let text = r.take_trace().unwrap();
+        assert!(text.contains(r#""scope":"inner_y","phase":"mix""#));
+        assert!(text.contains(r#""scope":"inner_z","phase":"mix""#));
+        // y's sink is the same buffer — already taken.
+        assert!(y.take_trace().is_none());
+    }
+
+    #[test]
+    fn reset_events_are_counter_stamped() {
+        let r = Recorder::new(true, false);
+        r.run_start("c2dfb", "l", 2, 1, "none");
+        r.scoped(Scope::InnerZ).reset(17, 3);
+        let m = RunMetrics::new("c2dfb", "l");
+        r.run_end(&m);
+        let text = r.take_trace().unwrap();
+        assert!(text.contains(r#"{"ev":"reset","scope":"inner_z","step":17,"epoch":3}"#));
+        assert!(text.contains(r#""resets":1"#));
+        assert_eq!(summarize(&text).unwrap().resets, 1);
+    }
+
+    #[test]
+    fn profile_renders_separately_from_trace() {
+        let r = Recorder::new(true, true);
+        r.run_start("c2dfb", "l", 2, 1, "none");
+        let t = r.clock();
+        assert!(t.is_some());
+        r.phase(Phase::Grad, 2, t);
+        let m = RunMetrics::new("c2dfb", "l");
+        r.run_end(&m);
+        let prof = r.render_profile().unwrap();
+        assert!(prof.contains("outer/grad"));
+        assert!(prof.contains("nondeterministic"));
+        let text = r.take_trace().unwrap();
+        assert!(!text.contains("wall"), "profiler data leaked into the trace");
+        assert!(validate_trace(&text).unwrap() > 0);
+    }
+
+    #[test]
+    fn log_bucket_is_monotone_and_clamped() {
+        assert_eq!(log_bucket(0), 0);
+        assert_eq!(log_bucket(1), 1);
+        assert_eq!(log_bucket(2), 2);
+        assert_eq!(log_bucket(3), 2);
+        assert_eq!(log_bucket(4), 3);
+        assert_eq!(log_bucket(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn node_decile_render_pools_per_algo() {
+        let r = Recorder::new(true, false);
+        r.run_start("c2dfb", "l", 4, 1, "none");
+        let before = LedgerSnap::default();
+        r.exchange(Phase::Exchange, before, &ledger(40, 4, 0.0), &[10, 20, 30, 40], &[], None);
+        let m = RunMetrics::new("c2dfb", "l");
+        r.run_end(&m);
+        let text = r.take_trace().unwrap();
+        assert!(text.contains(r#"{"ev":"node_bytes","bytes":[10,20,30,40]}"#));
+        let rendered = summarize(&text).unwrap().render();
+        assert!(rendered.contains("per-node sent bytes"));
+    }
+
+    #[test]
+    fn console_levels() {
+        assert!(Console::new(false, true).is_verbose());
+        assert!(!Console::new(false, false).is_verbose());
+        assert!(Console::new(true, true).is_quiet(), "quiet wins over verbose");
+        assert!(Console::quiet().is_quiet());
+        assert_eq!(Console::default().level, Verbosity::Normal);
+    }
+
+    #[test]
+    fn edge_events_feed_latency_histogram() {
+        let r = Recorder::new(true, false);
+        r.run_start("c2dfb", "l", 2, 1, "none");
+        let before = LedgerSnap::default();
+        let events = [
+            Arrival { t_s: 0.001, sender: 0, receiver: 1, bytes: 50, dropped: false },
+            Arrival { t_s: 0.002, sender: 1, receiver: 0, bytes: 50, dropped: true },
+        ];
+        r.exchange(Phase::Exchange, before, &ledger(100, 2, 0.002), &[50, 50], &events, None);
+        let m = RunMetrics::new("c2dfb", "l");
+        r.run_end(&m);
+        let text = r.take_trace().unwrap();
+        assert!(text.contains(r#""delivered":1"#));
+        assert!(text.contains(r#""queue_peak":2"#));
+        assert!(validate_trace(&text).is_ok());
+    }
+}

@@ -47,6 +47,7 @@
 use crate::collective::Transport;
 use crate::compress::{Compressed, Compressor};
 use crate::linalg::NodeBlock;
+use crate::obs::{LedgerSnap, Phase, Recorder};
 use crate::optim::refpoint::RefPoint;
 use crate::sim::parallel::NodePool;
 use crate::util::rng::Rng;
@@ -118,6 +119,13 @@ pub struct InnerState {
     err_s: NodeBlock,
     /// Transport graph epoch the reference points were built against.
     epoch: u64,
+    /// Telemetry recorder; defaults to the no-op recorder (one branch per
+    /// instrumentation point, no allocation).  Algorithms install a scoped
+    /// handle ([`Recorder::scoped`]) so y- and z-sequence phases separate.
+    pub obs: Recorder,
+    /// Inner k-steps executed over this state's lifetime (stamps
+    /// refpoint-reset events; telemetry only, no algorithmic role).
+    steps: u64,
     // ---- reused per-step scratch (never reallocated in steady state) ----
     /// One compressed-message slot per node (payload buffers reused).
     msgs: Vec<Compressed>,
@@ -152,6 +160,8 @@ impl InnerState {
             err_d: NodeBlock::zeros(m, dim),
             err_s: NodeBlock::zeros(m, dim),
             epoch: net.graph_epoch(),
+            obs: Recorder::noop(),
+            steps: 0,
             msgs: (0..m).map(|_| Compressed::empty()).collect(),
             bytes: Vec::with_capacity(m),
             delivered: vec![Vec::new(); m],
@@ -186,6 +196,7 @@ impl InnerState {
             self.d_ref[i].reset(sw);
             self.s_ref[i].reset(sw);
         }
+        self.obs.reset(self.steps, self.epoch);
     }
 
     /// Tracker bootstrap on the very first call: s_i⁰ = ∇r_i(d_i⁰).  On
@@ -262,14 +273,17 @@ pub fn run_inner_with<T: Transport>(
         state.sync_topology(net);
 
         // -- 1. model update: d ← d + γ((d̂)_w − sw·d̂) − η s  --------------
+        let t = state.obs.clock();
         for (i, di) in d.iter_mut().enumerate() {
             state.d_ref[i].add_mix_term(gamma, di);
             for (dk, sk) in di.iter_mut().zip(state.s.row(i)) {
                 *dk -= eta * sk;
             }
         }
+        state.obs.phase(Phase::Mix, 0, t);
         // -- 2. transmit Q(d_new − d̂); update d̂, then fold each DELIVERED
         //       same-epoch neighbour message into (d̂)_w  -------------------
+        let t = state.obs.clock();
         for (i, di) in d.iter().enumerate() {
             state.d_ref[i].residual_into(di, &mut state.resid);
             compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
@@ -279,6 +293,10 @@ pub fn run_inner_with<T: Transport>(
         }
         state.bytes.clear();
         state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        state.obs.phase(Phase::Compress, 0, t);
+        state.obs.encoded(&state.msgs);
+        let snap = LedgerSnap::of(net.ledger());
+        let t = state.obs.clock();
         if exchange_same_epoch(net, &state.bytes, &mut state.delivered) {
             for i in 0..m {
                 for &j in &state.delivered[i] {
@@ -286,19 +304,32 @@ pub fn run_inner_with<T: Transport>(
                     state.d_ref[i].apply_neighbor(wij, &state.msgs[j]);
                 }
             }
+            if state.obs.enabled() {
+                state
+                    .obs
+                    .decoded(state.delivered.iter().map(|s| s.len() as u64).sum());
+            }
         } else {
             // The graph switched while these messages were in flight:
             // folding them with new-epoch weights would corrupt the
             // accumulators.  Drop the dead-epoch round and resync.
             state.resync(net);
         }
+        state
+            .obs
+            .exchange(Phase::Exchange, snap, net.ledger(), &state.bytes, net.last_events(), t);
 
         // -- 3. tracker update: s ← s + γ((ŝ)_w − sw·ŝ) + ∇r^{new} − ∇r^{old}
+        let t = state.obs.clock();
         for i in 0..m {
             state.s_ref[i].add_mix_term(gamma, state.s.row_mut(i));
         }
+        state.obs.phase(Phase::Tracker, 0, t);
+        let t = state.obs.clock();
         grad.eval_all(d, &mut state.g_new);
         calls += m as u64;
+        state.obs.phase(Phase::Grad, m as u64, t);
+        let t = state.obs.clock();
         for i in 0..m {
             for ((sk, gn), go) in state
                 .s
@@ -311,8 +342,10 @@ pub fn run_inner_with<T: Transport>(
             }
         }
         std::mem::swap(&mut state.prev_grad, &mut state.g_new);
+        state.obs.phase(Phase::Tracker, 0, t);
 
         // -- 4. transmit Q(s_new − ŝ); update ŝ and delivered (ŝ)_w  -------
+        let t = state.obs.clock();
         for i in 0..m {
             state.s_ref[i].residual_into(state.s.row(i), &mut state.resid);
             compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
@@ -322,6 +355,10 @@ pub fn run_inner_with<T: Transport>(
         }
         state.bytes.clear();
         state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        state.obs.phase(Phase::Compress, 0, t);
+        state.obs.encoded(&state.msgs);
+        let snap = LedgerSnap::of(net.ledger());
+        let t = state.obs.clock();
         if exchange_same_epoch(net, &state.bytes, &mut state.delivered) {
             for i in 0..m {
                 for &j in &state.delivered[i] {
@@ -329,9 +366,18 @@ pub fn run_inner_with<T: Transport>(
                     state.s_ref[i].apply_neighbor(wij, &state.msgs[j]);
                 }
             }
+            if state.obs.enabled() {
+                state
+                    .obs
+                    .decoded(state.delivered.iter().map(|s| s.len() as u64).sum());
+            }
         } else {
             state.resync(net);
         }
+        state
+            .obs
+            .exchange(Phase::Exchange, snap, net.ledger(), &state.bytes, net.last_events(), t);
+        state.steps += 1;
     }
     calls
 }
@@ -376,6 +422,7 @@ pub fn run_inner_naive_with<T: Transport>(
 
     for _k in 0..cfg.k_steps {
         // Compress d with error feedback: carry = d + e, e ← carry − Q(carry).
+        let t = state.obs.clock();
         for (i, di) in d.iter().enumerate() {
             state.resid.clear();
             state
@@ -395,12 +442,25 @@ pub fn run_inner_naive_with<T: Transport>(
         }
         state.bytes.clear();
         state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        state.obs.phase(Phase::Compress, 0, t);
+        state.obs.encoded(&state.msgs);
         // d_i ← d_i + γ Σ w_ij (Q_j − Q_i) − η s_i over DELIVERED messages
         // of the SAME graph epoch (a delivered q IS the sender's message —
         // its dense form is already in `own`).  If the graph switched
         // mid-exchange, the stale round is dropped, not folded with
         // new-epoch weights.
+        let snap = LedgerSnap::of(net.ledger());
+        let t = state.obs.clock();
         let fold = exchange_same_epoch(net, &state.bytes, &mut state.delivered);
+        state
+            .obs
+            .exchange(Phase::Exchange, snap, net.ledger(), &state.bytes, net.last_events(), t);
+        if fold && state.obs.enabled() {
+            state
+                .obs
+                .decoded(state.delivered.iter().map(|s| s.len() as u64).sum());
+        }
+        let t = state.obs.clock();
         for (i, di) in d.iter_mut().enumerate() {
             if fold {
                 for &sender in &state.delivered[i] {
@@ -416,7 +476,9 @@ pub fn run_inner_naive_with<T: Transport>(
                 *dk -= eta * sk;
             }
         }
+        state.obs.phase(Phase::Mix, 0, t);
         // Tracker: same naive scheme on s.
+        let t = state.obs.clock();
         for i in 0..m {
             state.resid.clear();
             state
@@ -436,7 +498,20 @@ pub fn run_inner_naive_with<T: Transport>(
         }
         state.bytes.clear();
         state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        state.obs.phase(Phase::Compress, 0, t);
+        state.obs.encoded(&state.msgs);
+        let snap = LedgerSnap::of(net.ledger());
+        let t = state.obs.clock();
         let fold = exchange_same_epoch(net, &state.bytes, &mut state.delivered);
+        state
+            .obs
+            .exchange(Phase::Exchange, snap, net.ledger(), &state.bytes, net.last_events(), t);
+        if fold && state.obs.enabled() {
+            state
+                .obs
+                .decoded(state.delivered.iter().map(|s| s.len() as u64).sum());
+        }
+        let t = state.obs.clock();
         if fold {
             for i in 0..m {
                 for &sender in &state.delivered[i] {
@@ -449,8 +524,12 @@ pub fn run_inner_naive_with<T: Transport>(
                 }
             }
         }
+        state.obs.phase(Phase::Mix, 0, t);
+        let t = state.obs.clock();
         grad.eval_all(d, &mut state.g_new);
         calls += m as u64;
+        state.obs.phase(Phase::Grad, m as u64, t);
+        let t = state.obs.clock();
         for i in 0..m {
             for ((sk, gn), go) in state
                 .s
@@ -463,6 +542,8 @@ pub fn run_inner_naive_with<T: Transport>(
             }
         }
         std::mem::swap(&mut state.prev_grad, &mut state.g_new);
+        state.obs.phase(Phase::Tracker, 0, t);
+        state.steps += 1;
     }
     calls
 }

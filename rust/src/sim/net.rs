@@ -309,6 +309,10 @@ impl Transport for SimNetwork {
     fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
         self.simulate_core(bytes, delivered);
     }
+
+    fn last_events(&self) -> &[Arrival] {
+        &self.last_events
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,157 @@
+//! Telemetry acceptance tests (docs/OBS.md): the deterministic JSONL
+//! trace is byte-identical at any pool width; attaching the trace and
+//! profiler sinks never perturbs a run (no RNG consumption, no comm-
+//! ledger mutation); every produced line validates against the schema;
+//! and the `c2dfb trace` summary has a per-phase row for each
+//! algorithm × phase pair a run exercised.
+
+use c2dfb::config::{Algorithm, ExperimentConfig};
+use c2dfb::coordinator::sweep::{self, Cell, ExecOpts, SweepSpec, TaskRef};
+use c2dfb::obs::{self, Console};
+use c2dfb::tasks::{BilevelTask, QuadraticTask};
+
+fn exec(trace: bool, profile: bool, jobs: usize) -> ExecOpts {
+    ExecOpts { jobs, console: Console::quiet(), trace, profile }
+}
+
+/// The tentpole determinism contract: the same grid traced at
+/// parallelism 1, 2 and max produces byte-identical JSONL — per cell
+/// (checked by `diff_outcomes`) and for the concatenated file.
+#[test]
+fn traces_byte_identical_at_parallelism_1_2_and_max() {
+    let spec = SweepSpec::tiny();
+    let grid = sweep::expand(&spec).expect("tiny grid expands");
+    let tasks: Vec<&(dyn BilevelTask + Sync)> =
+        grid.tasks.iter().map(|t| t.as_ref()).collect();
+    let o1 = sweep::run_cells_with(&grid.cells, &tasks, None, &exec(true, false, 1));
+    assert!(o1.iter().all(|o| o.result.is_ok()), "tiny grid must be clean");
+    assert!(
+        o1.iter().all(|o| o.trace.as_ref().is_some_and(|t| !t.is_empty())),
+        "every traced cell must produce a JSONL chunk"
+    );
+    let t1 = sweep::concat_traces(&o1);
+    let lines = obs::validate_trace(&t1).expect("trace must validate line-by-line");
+    assert!(lines > grid.cells.len(), "at least one line per cell plus spans");
+    for jobs in [2, 0] {
+        let o = sweep::run_cells_with(&grid.cells, &tasks, None, &exec(true, false, jobs));
+        assert_eq!(
+            sweep::diff_outcomes(&o1, &o),
+            None,
+            "per-cell results AND trace chunks must be bit-identical at jobs={jobs}"
+        );
+        assert_eq!(
+            t1,
+            sweep::concat_traces(&o),
+            "concatenated trace bytes must be identical at jobs={jobs}"
+        );
+    }
+}
+
+/// Observer-effect guard: runs with both sinks attached are bit-identical
+/// to untraced runs — tracing consumes no RNG and never touches the
+/// communication ledger.
+#[test]
+fn tracing_never_perturbs_results() {
+    let spec = SweepSpec::tiny();
+    let grid = sweep::expand(&spec).expect("tiny grid expands");
+    let tasks: Vec<&(dyn BilevelTask + Sync)> =
+        grid.tasks.iter().map(|t| t.as_ref()).collect();
+    let plain = sweep::run_cells_with(&grid.cells, &tasks, None, &exec(false, false, 2));
+    let traced = sweep::run_cells_with(&grid.cells, &tasks, None, &exec(true, true, 2));
+    for (a, b) in plain.iter().zip(&traced) {
+        assert!(a.trace.is_none() && a.profile.is_none());
+        assert!(b.trace.is_some(), "{}: trace sink was requested", b.id);
+        assert!(b.profile.is_some(), "{}: profiler was requested", b.id);
+        let (ma, mb) = (a.metrics().unwrap(), b.metrics().unwrap());
+        assert_eq!(ma.ledger.total_bytes, mb.ledger.total_bytes, "{}", a.id);
+        assert_eq!(ma.ledger.messages, mb.ledger.messages, "{}", a.id);
+        assert_eq!(ma.ledger.gossip_rounds, mb.ledger.gossip_rounds, "{}", a.id);
+        assert_eq!(ma.oracles.first_order, mb.oracles.first_order, "{}", a.id);
+        assert_eq!(ma.oracles.second_order, mb.oracles.second_order, "{}", a.id);
+        let la: Vec<u64> = ma.trace.iter().map(|p| p.loss.to_bits()).collect();
+        let lb: Vec<u64> = mb.trace.iter().map(|p| p.loss.to_bits()).collect();
+        assert_eq!(la, lb, "{}: traced losses must be bit-identical", a.id);
+    }
+}
+
+/// `c2dfb trace` renders a per-phase cost row for every algorithm ×
+/// phase pair the runs exercised: C²DFB's scoped inner loops, MADSBO's
+/// HVP sub-solver, MDBO's Neumann series.
+#[test]
+fn summary_covers_every_algorithm_phase_pair() {
+    let task = QuadraticTask::generate(4, 6, 0.5, 21);
+    let mut cells = Vec::new();
+    for algo in [Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::Mdbo] {
+        let cfg = ExperimentConfig {
+            algorithm: algo,
+            nodes: 4,
+            rounds: 3,
+            inner_steps: 3,
+            eta_out: 0.1,
+            eta_in: 0.2,
+            eval_every: 1,
+            ..ExperimentConfig::default()
+        };
+        cells.push(Cell {
+            id: format!("obs+{}", algo.name()),
+            cfg,
+            task: TaskRef::Shared(0),
+        });
+    }
+    let outcomes = sweep::run_cells_with(&cells, &[&task], None, &exec(true, false, 1));
+    assert!(outcomes.iter().all(|o| o.result.is_ok()));
+    let text = sweep::concat_traces(&outcomes);
+    let s = obs::summarize(&text).expect("trace must summarize");
+    assert_eq!(s.runs, 3);
+    assert!(s.evals > 0);
+    let pairs = s.phase_pairs();
+    let has = |algo: &str, scope: &str, phase: &str| {
+        pairs.iter().any(|(a, s, p)| a == algo && s == scope && p == phase)
+    };
+    // C²DFB: outer mixing + hypergradient, and both scoped inner loops
+    // paying compression and exchanges.
+    for scope in ["inner_y", "inner_z"] {
+        for phase in ["mix", "compress", "exchange", "grad", "tracker"] {
+            assert!(has("c2dfb", scope, phase), "missing c2dfb/{scope}/{phase}");
+        }
+    }
+    for phase in ["mix", "hypergrad", "eval"] {
+        assert!(has("c2dfb", "outer", phase), "missing c2dfb/outer/{phase}");
+    }
+    // Baselines: coarse second-order sections attributed to their phases.
+    for phase in ["lower", "hvp", "hypergrad", "mix"] {
+        assert!(has("madsbo", "outer", phase), "missing madsbo/outer/{phase}");
+    }
+    for phase in ["lower", "neumann", "hypergrad", "mix"] {
+        assert!(has("mdbo", "outer", phase), "missing mdbo/outer/{phase}");
+    }
+    let rendered = s.render();
+    for needle in ["c2dfb", "madsbo", "mdbo", "hvp", "neumann", "per-node sent bytes"] {
+        assert!(rendered.contains(needle), "summary table missing {needle:?}");
+    }
+}
+
+/// The deterministic sink never carries wall-clock data, even when the
+/// profiler runs alongside it in the same cells.
+#[test]
+fn profiled_trace_stays_wall_clock_free() {
+    let task = QuadraticTask::generate(4, 6, 0.5, 22);
+    let cfg = ExperimentConfig {
+        algorithm: Algorithm::C2dfb,
+        nodes: 4,
+        rounds: 2,
+        inner_steps: 3,
+        eta_out: 0.1,
+        eta_in: 0.2,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    let cells = vec![Cell { id: "prof".into(), cfg, task: TaskRef::Shared(0) }];
+    let outcomes = sweep::run_cells_with(&cells, &[&task], None, &exec(true, true, 1));
+    let trace = outcomes[0].trace.as_ref().expect("trace requested");
+    assert!(!trace.contains("wall"), "profiler data leaked into the trace");
+    obs::validate_trace(trace).expect("trace validates with profiler attached");
+    let profile = outcomes[0].profile.as_ref().expect("profile requested");
+    assert!(profile.contains("nondeterministic"));
+    assert!(profile.contains("inner_y/"), "profile must attribute inner-loop phases");
+}
