@@ -1,4 +1,14 @@
-//! Compressed-message payload encodings and their exact wire sizes.
+//! Compressed-message payload encodings and their exact wire sizes —
+//! plus the real binary wire codec ([`Payload::encode`] /
+//! [`Payload::decode`]) the `c2dfb serve` daemon lineage needs before any
+//! byte from an untrusted client may reach the gossip fold.
+//!
+//! The decode path treats its input as hostile: truncated payloads,
+//! oversized counts, inconsistent lengths, out-of-range indices and
+//! non-finite headers all return a clean `Err` — never a panic, never an
+//! over-read, never an attacker-sized allocation (see
+//! [`MAX_WIRE_COORDS`]).  `tests/proptests.rs` feeds it random byte
+//! strings and mutated valid encodings to hold that line.
 
 /// The on-the-wire representation of a compressed vector.  The byte counts
 /// model a straightforward binary encoding; no actual serialization happens
@@ -151,6 +161,247 @@ impl Payload {
     }
 }
 
+// ---------------------------------------------------------------------------
+// wire codec
+// ---------------------------------------------------------------------------
+
+/// Hard cap on the coordinate count any single decoded payload may claim.
+/// A 4-byte length field can demand a 16 GiB allocation before the first
+/// value byte is read; rejecting counts above this bound keeps a hostile
+/// header from becoming a memory bomb.  2²⁴ coordinates (64 MiB of f32s)
+/// comfortably covers every dimension this repo simulates.
+pub const MAX_WIRE_COORDS: u32 = 1 << 24;
+
+/// Wire tags (first byte of every encoded payload).
+const TAG_DENSE: u8 = 0;
+const TAG_SPARSE16: u8 = 1;
+const TAG_SPARSE32: u8 = 2;
+const TAG_QUANTIZED: u8 = 3;
+
+/// Bounds-checked little-endian reader over untrusted bytes.  Every read
+/// goes through [`Reader::take`], so an over-read is impossible by
+/// construction: the only failure mode is a clean `Err`.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        // i never exceeds b.len(), so the subtraction cannot wrap.
+        if n > self.b.len() - self.i {
+            return Err(format!(
+                "truncated payload: wanted {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            ));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn i16(&mut self) -> Result<i16, String> {
+        let s = self.take(2)?;
+        Ok(i16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.i != self.b.len() {
+            return Err(format!(
+                "{} trailing bytes after payload end",
+                self.b.len() - self.i
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Validate a decoded element count against both the global cap and the
+/// bytes actually present (`elem_bytes` per element still unread).
+fn checked_count(n: u32, remaining: usize, elem_bytes: usize) -> Result<usize, String> {
+    if n > MAX_WIRE_COORDS {
+        return Err(format!("count {n} exceeds MAX_WIRE_COORDS ({MAX_WIRE_COORDS})"));
+    }
+    let need = (n as usize).checked_mul(elem_bytes).ok_or("count overflow")?;
+    if need > remaining {
+        return Err(format!(
+            "inconsistent length: count {n} needs {need} bytes, only {remaining} remain"
+        ));
+    }
+    Ok(n as usize)
+}
+
+impl Payload {
+    /// Serialize into `out` (appended; caller clears for reuse).  The
+    /// format is little-endian and mirrors [`payload_bytes`]'s cost
+    /// model: `tag u8 · count u32 · body`, with sparse indices at the
+    /// narrowest width covering the max index, exactly as billed.
+    ///
+    /// [`payload_bytes`]: Payload::payload_bytes
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Payload::Dense(v) => {
+                out.push(TAG_DENSE);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            Payload::Sparse { idx, val } => {
+                let max = idx.iter().copied().max().unwrap_or(0);
+                let wide = max >= 65_536;
+                out.push(if wide { TAG_SPARSE32 } else { TAG_SPARSE16 });
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for &i in idx {
+                    if wide {
+                        out.extend_from_slice(&i.to_le_bytes());
+                    } else {
+                        out.extend_from_slice(&(i as u16).to_le_bytes());
+                    }
+                }
+                for x in val {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            Payload::Quantized { norm, levels, codes } => {
+                out.push(TAG_QUANTIZED);
+                out.extend_from_slice(&(codes.len() as u32).to_le_bytes());
+                out.extend_from_slice(&norm.to_bits().to_le_bytes());
+                out.extend_from_slice(&levels.to_le_bytes());
+                for &c in codes {
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Exact length [`encode`](Payload::encode) will append.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            Payload::Dense(v) => 1 + 4 + 4 * v.len(),
+            Payload::Sparse { idx, val } => {
+                let max = idx.iter().copied().max().unwrap_or(0);
+                let w = if max >= 65_536 { 4 } else { 2 };
+                1 + 4 + w * idx.len() + 4 * val.len()
+            }
+            Payload::Quantized { codes, .. } => 1 + 4 + 4 + 4 + 2 * codes.len(),
+        }
+    }
+
+    /// Decode an untrusted byte string.  Structural failures — unknown
+    /// tag, truncation, counts that disagree with the bytes present,
+    /// trailing garbage, a count above [`MAX_WIRE_COORDS`], unsorted or
+    /// duplicate sparse indices, a quantized header with `levels`
+    /// outside `1..=32767` or a non-finite norm — all return `Err`.
+    /// Dimension agreement is the caller's contract: use
+    /// [`decode_for_dim`](Payload::decode_for_dim) before folding a
+    /// payload into `d`-length state.
+    pub fn decode(bytes: &[u8]) -> Result<Payload, String> {
+        let mut r = Reader { b: bytes, i: 0 };
+        let tag = r.u8().map_err(|_| "empty payload".to_string())?;
+        let n_raw = r.u32()?;
+        let remaining = bytes.len() - r.i;
+        let p = match tag {
+            TAG_DENSE => {
+                let n = checked_count(n_raw, remaining, 4)?;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(r.f32()?);
+                }
+                Payload::Dense(v)
+            }
+            TAG_SPARSE16 | TAG_SPARSE32 => {
+                let iw = if tag == TAG_SPARSE32 { 4 } else { 2 };
+                let n = checked_count(n_raw, remaining, iw + 4)?;
+                let mut idx = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let i = if tag == TAG_SPARSE32 {
+                        r.u32()?
+                    } else {
+                        r.u16()? as u32
+                    };
+                    if let Some(&prev) = idx.last() {
+                        if i <= prev {
+                            return Err(format!(
+                                "sparse indices not strictly increasing ({prev} then {i})"
+                            ));
+                        }
+                    }
+                    idx.push(i);
+                }
+                // A canonical encoder uses the narrow tag whenever the max
+                // index fits u16; a wide tag on narrow indices would let a
+                // peer bill 4 B/index for traffic the ledger models at 2 B.
+                if tag == TAG_SPARSE32 && idx.last().is_some_and(|&m| m < 65_536) {
+                    return Err("non-canonical width: u32 indices all fit u16".into());
+                }
+                let mut val = Vec::with_capacity(n);
+                for _ in 0..n {
+                    val.push(r.f32()?);
+                }
+                Payload::Sparse { idx, val }
+            }
+            TAG_QUANTIZED => {
+                let norm = r.f32()?;
+                let levels = r.u32()?;
+                if !norm.is_finite() {
+                    return Err("quantized norm is not finite".into());
+                }
+                if levels == 0 || levels > 32_767 {
+                    return Err(format!("quantized levels {levels} outside 1..=32767"));
+                }
+                let n = checked_count(n_raw, bytes.len() - r.i, 2)?;
+                let mut codes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    codes.push(r.i16()?);
+                }
+                Payload::Quantized { norm, levels, codes }
+            }
+            other => return Err(format!("unknown payload tag {other}")),
+        };
+        r.done()?;
+        Ok(p)
+    }
+
+    /// [`decode`](Payload::decode) plus the dimension contract: every
+    /// index/coordinate count must fit a `dim`-length vector, so the
+    /// result is safe to pass to [`write_dense`](Payload::write_dense) /
+    /// [`add_dense`](Payload::add_dense) with `dim`-length buffers.
+    pub fn decode_for_dim(bytes: &[u8], dim: usize) -> Result<Payload, String> {
+        let p = Payload::decode(bytes)?;
+        let ok = match &p {
+            Payload::Dense(v) => v.len() == dim,
+            Payload::Sparse { idx, .. } => {
+                idx.len() <= dim && idx.last().map_or(true, |&m| (m as usize) < dim)
+            }
+            Payload::Quantized { codes, .. } => codes.len() == dim,
+        };
+        if !ok {
+            return Err(format!("payload does not fit dimension {dim}"));
+        }
+        Ok(p)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,5 +468,118 @@ mod tests {
         let mut d = vec![0.0f32; 3];
         p.write_dense(&mut d);
         assert_eq!(d, vec![8.0, -4.0, 0.0]);
+    }
+
+    fn enc(p: &Payload) -> Vec<u8> {
+        let mut b = Vec::new();
+        p.encode(&mut b);
+        assert_eq!(b.len(), p.encoded_len());
+        b
+    }
+
+    #[test]
+    fn wire_roundtrip_all_variants() {
+        let cases = vec![
+            Payload::Dense(vec![1.0, -2.5, 0.0]),
+            Payload::Dense(vec![]),
+            Payload::Sparse { idx: vec![0, 3, 9], val: vec![1.0, 2.0, -3.0] },
+            Payload::Sparse { idx: vec![5, 70_000], val: vec![0.5, 0.25] },
+            Payload::Quantized { norm: 2.0, levels: 4, codes: vec![1, -4, 0] },
+        ];
+        for p in cases {
+            let b = enc(&p);
+            assert_eq!(Payload::decode(&b).unwrap(), p, "roundtrip failed");
+        }
+    }
+
+    #[test]
+    fn wire_width_matches_billing() {
+        // The encoded body (minus tag + count header) costs exactly what
+        // payload_bytes bills, so the ledger and the wire cannot drift.
+        for p in [
+            Payload::Dense(vec![1.0; 7]),
+            Payload::Sparse { idx: vec![1, 2, 65_536], val: vec![1.0; 3] },
+            Payload::Sparse { idx: vec![1, 2, 3], val: vec![1.0; 3] },
+        ] {
+            assert_eq!(enc(&p).len() - 5, p.payload_bytes());
+        }
+        // Quantized ships one extra u32 count the cost model folds into
+        // its 8-byte header allowance.
+        let q = Payload::Quantized { norm: 1.0, levels: 4, codes: vec![0; 5] };
+        assert_eq!(enc(&q).len(), 1 + 4 + q.payload_bytes());
+    }
+
+    #[test]
+    fn decode_rejects_structural_garbage() {
+        // Empty, unknown tag, truncated header.
+        assert!(Payload::decode(&[]).is_err());
+        assert!(Payload::decode(&[9, 0, 0, 0, 0]).is_err());
+        assert!(Payload::decode(&[TAG_DENSE, 1]).is_err());
+        // Count disagrees with the bytes present (both directions).
+        let mut b = enc(&Payload::Dense(vec![1.0, 2.0]));
+        b[1] = 3; // claims 3 coords, carries 2
+        assert!(Payload::decode(&b).is_err());
+        let mut b = enc(&Payload::Dense(vec![1.0, 2.0]));
+        b[1] = 1; // claims 1 coord → 4 trailing bytes
+        assert!(Payload::decode(&b).is_err());
+        // Oversized count: a 16 GiB allocation request must die at the
+        // header, not at the allocator.
+        let mut b = vec![TAG_DENSE];
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Payload::decode(&b).unwrap_err().contains("MAX_WIRE_COORDS"));
+        // Every truncation of a valid encoding fails cleanly.
+        let full = enc(&Payload::Sparse { idx: vec![2, 7, 70_000], val: vec![1.0, 2.0, 3.0] });
+        for cut in 0..full.len() {
+            assert!(Payload::decode(&full[..cut]).is_err(), "cut at {cut} decoded");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_non_canonical_sparse() {
+        // Unsorted and duplicate indices.
+        let mut b = vec![TAG_SPARSE16];
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&7u16.to_le_bytes());
+        b.extend_from_slice(&3u16.to_le_bytes());
+        b.extend_from_slice(&1.0f32.to_bits().to_le_bytes());
+        b.extend_from_slice(&2.0f32.to_bits().to_le_bytes());
+        assert!(Payload::decode(&b).unwrap_err().contains("strictly increasing"));
+        // Wide tag on indices that all fit u16 (billing inflation).
+        let mut b = vec![TAG_SPARSE32];
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&3u32.to_le_bytes());
+        b.extend_from_slice(&1.0f32.to_bits().to_le_bytes());
+        assert!(Payload::decode(&b).unwrap_err().contains("non-canonical"));
+    }
+
+    #[test]
+    fn decode_rejects_bad_quantized_header() {
+        let good = Payload::Quantized { norm: 1.0, levels: 4, codes: vec![1, 2] };
+        let b = enc(&good);
+        // levels = 0 and levels > i16 code range.
+        let mut z = b.clone();
+        z[9..13].copy_from_slice(&0u32.to_le_bytes());
+        assert!(Payload::decode(&z).is_err());
+        let mut big = b.clone();
+        big[9..13].copy_from_slice(&40_000u32.to_le_bytes());
+        assert!(Payload::decode(&big).is_err());
+        // Non-finite norm (a NaN scale would poison every fold).
+        let mut nan = b;
+        nan[5..9].copy_from_slice(&f32::NAN.to_bits().to_le_bytes());
+        assert!(Payload::decode(&nan).unwrap_err().contains("finite"));
+    }
+
+    #[test]
+    fn decode_for_dim_enforces_fit() {
+        let d = enc(&Payload::Dense(vec![1.0, 2.0, 3.0]));
+        assert!(Payload::decode_for_dim(&d, 3).is_ok());
+        assert!(Payload::decode_for_dim(&d, 4).is_err());
+        let s = enc(&Payload::Sparse { idx: vec![0, 5], val: vec![1.0, 2.0] });
+        assert!(Payload::decode_for_dim(&s, 6).is_ok());
+        // Index 5 out of range for dim 5 — write_dense would have panicked.
+        assert!(Payload::decode_for_dim(&s, 5).is_err());
+        let q = enc(&Payload::Quantized { norm: 1.0, levels: 2, codes: vec![0, 1] });
+        assert!(Payload::decode_for_dim(&q, 2).is_ok());
+        assert!(Payload::decode_for_dim(&q, 3).is_err());
     }
 }

@@ -19,7 +19,7 @@
 use crate::util::rng::Rng;
 
 mod message;
-pub use message::{Payload, PayloadKind};
+pub use message::{Payload, PayloadKind, MAX_WIRE_COORDS};
 
 /// A compressed vector plus its exact serialized size.
 ///

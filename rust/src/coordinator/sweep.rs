@@ -92,6 +92,7 @@ pub enum TaskRef {
 }
 
 /// One fully-resolved cell of a sweep grid.
+#[derive(Clone)]
 pub struct Cell {
     /// Unique id within the sweep; also the seed-derivation input.
     pub id: String,
@@ -101,6 +102,7 @@ pub struct Cell {
 
 /// The per-cell result: the run's metrics, or the error that felled this
 /// cell (sibling cells always run to completion either way).
+#[derive(Clone)]
 pub struct CellOutcome {
     pub id: String,
     pub result: Result<RunMetrics, String>,
@@ -130,6 +132,35 @@ pub fn effective_jobs(jobs: usize) -> usize {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
         jobs
+    }
+}
+
+/// Per-cell lifecycle callbacks layered onto cell execution by a caller
+/// that multiplexes many grids through one pool — the `c2dfb serve`
+/// daemon streams these into per-job SSE event logs.  Every method has a
+/// no-op default, so implementors override only what they observe.
+///
+/// Hooks run on pool worker threads (hence the `Sync` supertrait) and
+/// must not block: they are called inside the cell's run loop.
+pub trait CellHooks: Sync {
+    /// Called once before a cell starts executing.
+    fn on_cell_start(&self, _id: &str) {}
+    /// Called at every evaluation point of a cell's run (the same cadence
+    /// as [`RunObserver::on_trace`]).  Returning `false` aborts the run —
+    /// the runner records `stop_reason = observer_abort` — which is how
+    /// the daemon implements mid-job cancellation: the abort engages at
+    /// the cell's next evaluation point (`eval_every` cadence), never
+    /// mid-step.
+    fn on_point(&self, _id: &str, _algo: &str, _p: &TracePoint) -> bool {
+        true
+    }
+    /// Called once after a cell finishes (ok or error).
+    fn on_cell_done(&self, _id: &str, _ok: bool) {}
+    /// Checked before a cell starts; `true` skips execution entirely and
+    /// yields an `Err("skipped: …")` outcome (a cancelled job's pending
+    /// cells never pay init costs).
+    fn skip(&self, _id: &str) -> bool {
+        false
     }
 }
 
@@ -184,6 +215,19 @@ pub fn run_cells_with(
     reg: Option<&ArtifactRegistry>,
     opts: &ExecOpts,
 ) -> Vec<CellOutcome> {
+    run_cells_observed(cells, tasks, reg, opts, None)
+}
+
+/// [`run_cells_with`] plus per-cell lifecycle [`CellHooks`].  The hooks
+/// see every cell start/point/done on whatever pool thread runs the cell;
+/// `hooks = None` is exactly `run_cells_with`.
+pub fn run_cells_observed(
+    cells: &[Cell],
+    tasks: &[&(dyn BilevelTask + Sync)],
+    reg: Option<&ArtifactRegistry>,
+    opts: &ExecOpts,
+    hooks: Option<&dyn CellHooks>,
+) -> Vec<CellOutcome> {
     let jobs = effective_jobs(opts.jobs);
     let stream = if jobs <= 1 {
         opts.console
@@ -200,20 +244,39 @@ pub fn run_cells_with(
     let mut outcomes: Vec<Option<CellOutcome>> = cells.iter().map(|_| None).collect();
     let pool = NodePool::new(jobs);
     let lane_results = pool.map(shared_lane.len(), |k| {
-        run_shared_cell(&cells[shared_lane[k]], tasks, stream, opts)
+        run_shared_cell(&cells[shared_lane[k]], tasks, stream, opts, hooks)
     });
     for (&i, out) in shared_lane.iter().zip(lane_results) {
         outcomes[i] = Some(out);
     }
     for (i, cell) in cells.iter().enumerate() {
         if cell.task == TaskRef::Registry {
-            outcomes[i] = Some(run_registry_cell(cell, reg, opts));
+            outcomes[i] = Some(run_registry_cell(cell, reg, opts, hooks));
         }
     }
     outcomes
         .into_iter()
         .map(|o| o.expect("every cell ran on exactly one lane"))
         .collect()
+}
+
+/// The observer attached to every hooked cell: the divergence guard
+/// first (its verdict always counts), then the caller's hooks.
+struct GuardedObserver<'a> {
+    guard: HarnessObserver,
+    id: &'a str,
+    hooks: Option<&'a dyn CellHooks>,
+}
+
+impl RunObserver for GuardedObserver<'_> {
+    fn on_trace(&mut self, algo: &str, p: &TracePoint) -> bool {
+        let ok = self.guard.on_trace(algo, p);
+        let cont = match self.hooks {
+            Some(h) => h.on_point(self.id, algo, p),
+            None => true,
+        };
+        ok && cont
+    }
 }
 
 /// Wrap a cell run with its per-cell telemetry recorder and harvest the
@@ -236,12 +299,23 @@ fn run_shared_cell(
     tasks: &[&(dyn BilevelTask + Sync)],
     stream: Console,
     opts: &ExecOpts,
+    hooks: Option<&dyn CellHooks>,
 ) -> CellOutcome {
+    if hooks.is_some_and(|h| h.skip(&cell.id)) {
+        return CellOutcome::bare(cell.id.clone(), Err("skipped: job cancelled".into()));
+    }
+    if let Some(h) = hooks {
+        h.on_cell_start(&cell.id);
+    }
     let rec = Recorder::for_cell(opts.trace, opts.profile, &cell.id);
     let result = match cell.task {
         TaskRef::Shared(t) => match tasks.get(t) {
             Some(task) => {
-                let mut guard = HarnessObserver { console: stream };
+                let mut guard = GuardedObserver {
+                    guard: HarnessObserver { console: stream },
+                    id: &cell.id,
+                    hooks,
+                };
                 Runner::new(&cell.cfg)
                     .shared_task(*task)
                     .observer(&mut guard)
@@ -256,6 +330,9 @@ fn run_shared_cell(
         },
         TaskRef::Registry => unreachable!("registry cells run on the serial lane"),
     };
+    if let Some(h) = hooks {
+        h.on_cell_done(&cell.id, result.is_ok());
+    }
     finish_cell(cell, rec, result)
 }
 
@@ -263,11 +340,22 @@ fn run_registry_cell(
     cell: &Cell,
     reg: Option<&ArtifactRegistry>,
     opts: &ExecOpts,
+    hooks: Option<&dyn CellHooks>,
 ) -> CellOutcome {
+    if hooks.is_some_and(|h| h.skip(&cell.id)) {
+        return CellOutcome::bare(cell.id.clone(), Err("skipped: job cancelled".into()));
+    }
+    if let Some(h) = hooks {
+        h.on_cell_start(&cell.id);
+    }
     let rec = Recorder::for_cell(opts.trace, opts.profile, &cell.id);
     let result = match reg {
         Some(reg) => {
-            let mut guard = HarnessObserver { console: opts.console };
+            let mut guard = GuardedObserver {
+                guard: HarnessObserver { console: opts.console },
+                id: &cell.id,
+                hooks,
+            };
             Runner::new(&cell.cfg)
                 .registry(reg)
                 .observer(&mut guard)
@@ -277,6 +365,9 @@ fn run_registry_cell(
         }
         None => Err("cell needs the artifact registry, but none was supplied".into()),
     };
+    if let Some(h) = hooks {
+        h.on_cell_done(&cell.id, result.is_ok());
+    }
     finish_cell(cell, rec, result)
 }
 
@@ -399,8 +490,19 @@ impl SweepSpec {
     }
 
     pub fn from_toml_str(text: &str) -> Result<SweepSpec, String> {
-        let map = toml::parse(text)?;
-        let mut spec = SweepSpec::default();
+        SweepSpec::from_flat_map(&toml::parse(text)?)
+    }
+
+    /// Build a spec from a flattened `table.key → value` map — the common
+    /// substrate behind TOML files ([`from_toml_str`](Self::from_toml_str))
+    /// and the daemon's JSON job bodies, so both surfaces resolve a body
+    /// to the *same* spec (and hence the same grid, seeds and report
+    /// bytes).  `sweep.tiny = true` starts from [`SweepSpec::tiny`] — the
+    /// built-in tiny grid, exactly what `c2dfb sweep --tiny` runs — and
+    /// the map's other keys then override it.
+    pub fn from_flat_map(map: &BTreeMap<String, TomlValue>) -> Result<SweepSpec, String> {
+        let tiny = matches!(map.get("sweep.tiny"), Some(TomlValue::Bool(true)));
+        let mut spec = if tiny { SweepSpec::tiny() } else { SweepSpec::default() };
         let base_map: BTreeMap<String, TomlValue> = map
             .iter()
             .filter(|(k, _)| !k.starts_with("sweep."))

@@ -1,0 +1,145 @@
+//! Completed-cell result cache.
+//!
+//! The sweep layer's determinism contract (docs/SWEEP.md) makes caching
+//! sound: a cell's metrics and trace chunk are a pure function of its
+//! fully-resolved config plus the seed derived from `(base_seed,
+//! cell_id)` by [`derive_seed`](crate::coordinator::sweep::derive_seed).
+//! Re-running an identical cell is a bit-identical replay, so the daemon
+//! serves resubmitted or overlapping grids straight from this cache —
+//! byte-identical `report.{csv,json}` with zero new oracle calls.
+//!
+//! The key ([`cache_key`]) therefore captures *everything* a cell run
+//! reads: the cell id (seed input), the sweep-level knobs that shape the
+//! task data (`tiny`, base seed) and whether a trace sink was attached,
+//! plus the full resolved `ExperimentConfig` via its `Debug` rendering
+//! (topology realization, partition, compressor, stop budgets, optimizer
+//! knobs — all of it).  Execution-only knobs (`jobs`, console verbosity)
+//! are deliberately absent: they cannot change result bytes.
+//!
+//! Eviction is FIFO with a bounded entry count — the daemon's memory
+//! stays bounded no matter how many distinct grids clients submit, and
+//! FIFO keeps the policy deterministic (no clock reads).
+
+use crate::coordinator::sweep::{Cell, SweepSpec};
+use crate::metrics::RunMetrics;
+use std::collections::{BTreeMap, VecDeque};
+
+/// A cached cell result: the deterministic metrics plus the cell's JSONL
+/// trace chunk when the job that produced it traced.
+#[derive(Clone)]
+pub struct CacheEntry {
+    pub metrics: RunMetrics,
+    pub trace: Option<String>,
+}
+
+/// The deterministic cache key for one cell of one submission.  `v1|` is
+/// a schema version prefix so a future key-shape change cannot alias old
+/// entries.
+pub fn cache_key(spec: &SweepSpec, trace: bool, cell: &Cell) -> String {
+    format!(
+        "v1|tiny={}|base_seed={}|trace={}|{}|{:?}",
+        spec.tiny, spec.base.seed, trace, cell.id, cell.cfg
+    )
+}
+
+/// Bounded FIFO map from [`cache_key`] to [`CacheEntry`].
+pub struct CellCache {
+    cap: usize,
+    map: BTreeMap<String, CacheEntry>,
+    order: VecDeque<String>,
+}
+
+impl CellCache {
+    /// `cap = 0` disables caching entirely (every lookup misses).
+    pub fn new(cap: usize) -> CellCache {
+        CellCache { cap, map: BTreeMap::new(), order: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&CacheEntry> {
+        self.map.get(key)
+    }
+
+    /// Insert one completed cell, evicting oldest-first past the cap.
+    /// Re-inserting an existing key is a no-op (first result wins; both
+    /// are bit-identical by the determinism contract anyway).
+    pub fn insert(&mut self, key: String, entry: CacheEntry) {
+        if self.cap == 0 || self.map.contains_key(&key) {
+            return;
+        }
+        while self.map.len() >= self.cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        self.order.push_back(key.clone());
+        self.map.insert(key, entry);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::{self, SweepSpec};
+
+    fn entry() -> CacheEntry {
+        CacheEntry { metrics: RunMetrics::new("c2dfb", "t"), trace: None }
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_entry_count() {
+        let mut c = CellCache::new(2);
+        c.insert("a".into(), entry());
+        c.insert("b".into(), entry());
+        c.insert("c".into(), entry());
+        assert_eq!(c.len(), 2);
+        assert!(c.get("a").is_none(), "oldest entry evicted first");
+        assert!(c.get("b").is_some());
+        assert!(c.get("c").is_some());
+    }
+
+    #[test]
+    fn zero_cap_disables_caching() {
+        let mut c = CellCache::new(0);
+        c.insert("a".into(), entry());
+        assert!(c.is_empty());
+        assert!(c.get("a").is_none());
+    }
+
+    #[test]
+    fn key_separates_seed_trace_and_cell() {
+        let spec = SweepSpec::tiny();
+        let grid = sweep::expand(&spec).unwrap();
+        let a = cache_key(&spec, false, &grid.cells[0]);
+        let b = cache_key(&spec, false, &grid.cells[1]);
+        assert_ne!(a, b, "distinct cells key differently");
+        assert_ne!(
+            a,
+            cache_key(&spec, true, &grid.cells[0]),
+            "trace flag is part of the key"
+        );
+        let mut seeded = SweepSpec::tiny();
+        seeded.base.seed = 999;
+        let reseeded = sweep::expand(&seeded).unwrap();
+        assert_ne!(
+            a,
+            cache_key(&seeded, false, &reseeded.cells[0]),
+            "base seed is part of the key"
+        );
+        assert_eq!(
+            a,
+            cache_key(&spec, false, &sweep::expand(&spec).unwrap().cells[0]),
+            "identical submissions share the key"
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! `c2dfb client` — the daemon's command-line companion, speaking the
+//! line-delimited TCP protocol of [`super::tcp`].  One connection per
+//! call: write a command, read one `OK <n>`/`ERR <msg>` frame, done.
+//! Also usable programmatically (the daemon tests drive it in-process).
+
+use crate::obs::Console;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+pub struct Client {
+    pub addr: String,
+    pub timeout: Duration,
+}
+
+impl Client {
+    pub fn new(addr: &str) -> Client {
+        Client { addr: addr.to_string(), timeout: Duration::from_secs(10) }
+    }
+
+    /// One protocol round-trip: send `header` (+ optional raw body for
+    /// `SUBMITB`), return the `OK` payload or the `ERR` message.
+    fn call(&self, header: &str, body: Option<&[u8]>) -> Result<Vec<u8>, String> {
+        let mut stream = TcpStream::connect(&self.addr)
+            .map_err(|e| format!("connecting to {}: {e}", self.addr))?;
+        let _ = stream.set_read_timeout(Some(self.timeout));
+        let _ = stream.set_write_timeout(Some(self.timeout));
+        stream
+            .write_all(header.as_bytes())
+            .and_then(|_| stream.write_all(b"\n"))
+            .and_then(|_| match body {
+                Some(b) => stream.write_all(b),
+                None => Ok(()),
+            })
+            .and_then(|_| stream.flush())
+            .map_err(|e| format!("sending command: {e}"))?;
+        let mut reader = BufReader::new(stream);
+        let mut status = String::new();
+        reader
+            .read_line(&mut status)
+            .map_err(|e| format!("reading response: {e}"))?;
+        let status = status.trim_end();
+        if let Some(rest) = status.strip_prefix("OK ") {
+            let n: usize = rest
+                .parse()
+                .map_err(|_| format!("malformed response frame {status:?}"))?;
+            let mut payload = vec![0u8; n];
+            reader
+                .read_exact(&mut payload)
+                .map_err(|e| format!("reading {n}-byte payload: {e}"))?;
+            Ok(payload)
+        } else if let Some(msg) = status.strip_prefix("ERR ") {
+            Err(msg.to_string())
+        } else {
+            Err(format!("malformed response frame {status:?}"))
+        }
+    }
+
+    fn call_json(&self, header: &str, body: Option<&[u8]>) -> Result<Json, String> {
+        let payload = self.call(header, body)?;
+        let text = String::from_utf8(payload).map_err(|_| "non-UTF-8 response")?;
+        Json::parse(&text)
+    }
+
+    pub fn ping(&self) -> Result<(), String> {
+        self.call("PING", None).map(|_| ())
+    }
+
+    /// Submit a TOML/JSON sweep body (`SUBMITB`: length-framed, so the
+    /// body may span lines).  Returns the job's status document.
+    pub fn submit(&self, body: &str, priority: i64, trace: bool) -> Result<Json, String> {
+        let header = format!(
+            "SUBMITB {} {priority} {}",
+            body.len(),
+            if trace { 1 } else { 0 }
+        );
+        self.call_json(&header, Some(body.as_bytes()))
+    }
+
+    pub fn status(&self, id: u64) -> Result<Json, String> {
+        self.call_json(&format!("STATUS {id}"), None)
+    }
+
+    pub fn list(&self) -> Result<Json, String> {
+        self.call_json("LIST", None)
+    }
+
+    pub fn report(&self, id: u64, fmt: &str) -> Result<Vec<u8>, String> {
+        self.call(&format!("REPORT {id} {fmt}"), None)
+    }
+
+    /// Poll the event log once from `cursor`:
+    /// `(new lines, next cursor, closed)`.
+    pub fn events(&self, id: u64, cursor: usize) -> Result<(Vec<String>, usize, bool), String> {
+        let doc = self.call_json(&format!("EVENTS {id} {cursor}"), None)?;
+        let next = doc
+            .get("next")
+            .and_then(Json::as_usize)
+            .ok_or("malformed EVENTS response")?;
+        let closed = matches!(doc.get("closed"), Some(Json::Bool(true)));
+        let lines = doc
+            .get("lines")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|l| l.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok((lines, next, closed))
+    }
+
+    pub fn cancel(&self, id: u64) -> Result<Json, String> {
+        self.call_json(&format!("CANCEL {id}"), None)
+    }
+
+    pub fn metrics(&self) -> Result<String, String> {
+        let payload = self.call("METRICS", None)?;
+        String::from_utf8(payload).map_err(|_| "non-UTF-8 metrics".into())
+    }
+
+    pub fn shutdown(&self, now: bool) -> Result<(), String> {
+        self.call(if now { "SHUTDOWN now" } else { "SHUTDOWN drain" }, None)
+            .map(|_| ())
+    }
+
+    /// Follow a job to a terminal state, streaming its progress events to
+    /// `con` (event lines at verbose, one line per cell completion at
+    /// normal).  Returns the final status document.
+    pub fn wait(&self, id: u64, timeout: Duration, con: &Console) -> Result<Json, String> {
+        let started = Instant::now();
+        let mut cursor = 0usize;
+        loop {
+            let (lines, next, closed) = self.events(id, cursor)?;
+            cursor = next;
+            for line in &lines {
+                con.progress(format_args!("  {line}"));
+                if !con.is_verbose() {
+                    if let Ok(ev) = Json::parse(line) {
+                        if ev.get("ev").and_then(Json::as_str) == Some("cell_done") {
+                            con.info(format_args!(
+                                "  cell {}/{} {}",
+                                ev.get("done").and_then(Json::as_usize).unwrap_or(0),
+                                ev.get("total").and_then(Json::as_usize).unwrap_or(0),
+                                ev.get("cell").and_then(Json::as_str).unwrap_or("?"),
+                            ));
+                        }
+                    }
+                }
+            }
+            if closed && lines.is_empty() {
+                let status = self.status(id)?;
+                let state = status.get("state").and_then(Json::as_str).unwrap_or("");
+                if matches!(state, "done" | "failed" | "cancelled") {
+                    return Ok(status);
+                }
+                // Events closed but the state write is racing us: fall
+                // through to the timeout check and poll again.
+            }
+            if started.elapsed() > timeout {
+                return Err(format!("timed out after {:.0?} waiting for job {id}", timeout));
+            }
+            if lines.is_empty() {
+                std::thread::sleep(Duration::from_millis(150));
+            }
+        }
+    }
+}

@@ -1,0 +1,373 @@
+//! Minimal HTTP/1.1 surface over [`Daemon`] — std-only, one request per
+//! connection (`Connection: close`), each connection on its own thread.
+//!
+//! Routes (docs/SERVE.md):
+//!
+//! | method | path                          | purpose                        |
+//! |--------|-------------------------------|--------------------------------|
+//! | POST   | /jobs?priority=N&trace=1      | submit a TOML/JSON sweep body  |
+//! | GET    | /jobs                         | list job statuses              |
+//! | GET    | /jobs/:id                     | one job's status               |
+//! | DELETE | /jobs/:id                     | cancel                         |
+//! | GET    | /jobs/:id/report.csv          | finished job's CSV report      |
+//! | GET    | /jobs/:id/report.json         | finished job's JSON report     |
+//! | GET    | /jobs/:id/trace.jsonl         | finished job's JSONL trace     |
+//! | GET    | /jobs/:id/events?cursor=N     | SSE progress stream            |
+//! | GET    | /metrics                      | Prometheus text exposition     |
+//! | GET    | /healthz                      | liveness probe                 |
+//! | POST   | /shutdown?mode=drain\|now     | begin shutdown                 |
+//!
+//! Input hardening: 16 KiB header cap, 4 MiB body cap, read/write
+//! timeouts, no chunked encoding (411 without a Content-Length body).
+
+use super::{Daemon, Job, JobState, SubmitError};
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Accept loop: non-blocking so it can poll the daemon's shutdown phase;
+/// exits once the daemon has stopped.
+pub fn listen(d: &Arc<Daemon>, listener: TcpListener) {
+    if listener.set_nonblocking(true).is_err() {
+        d.opts.console.warn(format_args!("http listener: cannot set non-blocking"));
+        return;
+    }
+    loop {
+        if d.stopped() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let d = d.clone();
+                std::thread::spawn(move || handle(&d, stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+struct Request {
+    method: String,
+    /// Path with the query string stripped.
+    path: String,
+    query: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Request {
+    fn query_get(&self, key: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn handle(d: &Arc<Daemon>, mut stream: TcpStream) {
+    // Listeners accept in non-blocking mode; handler I/O is blocking with
+    // timeouts.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err((code, msg)) => {
+            respond_json(&mut stream, code, &err_doc(&msg));
+            return;
+        }
+    };
+    route(d, &mut stream, &req);
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Request, (u16, String)> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 1024];
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err((431, "request header too large".into()));
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| (408u16, format!("reading request: {e}")))?;
+        if n == 0 {
+            return Err((400, "connection closed mid-request".into()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let target = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || !target.starts_with('/') {
+        return Err((400, format!("malformed request line {request_line:?}")));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            let k = k.trim().to_ascii_lowercase();
+            let v = v.trim();
+            if k == "content-length" {
+                content_length = v
+                    .parse()
+                    .map_err(|_| (400u16, format!("bad content-length {v:?}")))?;
+            } else if k == "transfer-encoding" && !v.eq_ignore_ascii_case("identity") {
+                return Err((411, "chunked bodies unsupported; send Content-Length".into()));
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err((413, format!("body larger than {MAX_BODY_BYTES} bytes")));
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| (408u16, format!("reading body: {e}")))?;
+        if n == 0 {
+            return Err((400, "connection closed mid-body".into()));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target, Vec::new()),
+    };
+    Ok(Request { method, path, query, body })
+}
+
+fn parse_query(q: &str) -> Vec<(String, String)> {
+    q.split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (kv.to_string(), String::new()),
+        })
+        .collect()
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack
+        .windows(needle.len())
+        .position(|w| w == needle)
+}
+
+fn reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+fn respond(stream: &mut TcpStream, code: u16, ctype: &str, body: &[u8]) {
+    let head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(code),
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body);
+    let _ = stream.flush();
+}
+
+fn respond_json(stream: &mut TcpStream, code: u16, doc: &Json) {
+    respond(stream, code, "application/json", (doc.to_string() + "\n").as_bytes());
+}
+
+fn err_doc(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+fn route(d: &Arc<Daemon>, stream: &mut TcpStream, req: &Request) {
+    let segments: Vec<&str> = req
+        .path
+        .trim_matches('/')
+        .split('/')
+        .filter(|s| !s.is_empty())
+        .collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => respond(stream, 200, "text/plain", b"ok\n"),
+        ("GET", ["metrics"]) => respond(
+            stream,
+            200,
+            "text/plain; version=0.0.4",
+            d.render_metrics().as_bytes(),
+        ),
+        ("POST", ["jobs"]) => post_job(d, stream, req),
+        ("GET", ["jobs"]) => {
+            let docs: Vec<Json> = d.jobs_snapshot().iter().map(|j| j.status_json()).collect();
+            respond_json(stream, 200, &Json::obj(vec![("jobs", Json::Arr(docs))]));
+        }
+        ("GET", ["jobs", id]) => match lookup(d, *id) {
+            Ok(job) => respond_json(stream, 200, &job.status_json()),
+            Err(doc) => respond_json(stream, 404, &doc),
+        },
+        ("DELETE", ["jobs", id]) => match lookup(d, *id) {
+            Ok(job) => {
+                d.cancel(job.id);
+                respond_json(stream, 200, &job.status_json());
+            }
+            Err(doc) => respond_json(stream, 404, &doc),
+        },
+        ("GET", ["jobs", id, artifact @ ("report.csv" | "report.json" | "trace.jsonl")]) => {
+            match lookup(d, *id) {
+                Ok(job) => serve_artifact(stream, &job, *artifact),
+                Err(doc) => respond_json(stream, 404, &doc),
+            }
+        }
+        ("GET", ["jobs", id, "events"]) => match lookup(d, *id) {
+            Ok(job) => {
+                let cursor = req
+                    .query_get("cursor")
+                    .and_then(|c| c.parse().ok())
+                    .unwrap_or(0usize);
+                stream_events(d, stream, &job, cursor);
+            }
+            Err(doc) => respond_json(stream, 404, &doc),
+        },
+        ("POST", ["shutdown"]) => {
+            let now = req.query_get("mode").is_some_and(|m| m == "now");
+            d.begin_shutdown(now);
+            respond_json(
+                stream,
+                202,
+                &Json::obj(vec![(
+                    "state",
+                    Json::str(if now { "stopping" } else { "draining" }),
+                )]),
+            );
+        }
+        (_, ["jobs", ..]) | (_, ["metrics"]) | (_, ["healthz"]) | (_, ["shutdown"]) => {
+            respond_json(stream, 405, &err_doc("method not allowed"))
+        }
+        _ => respond_json(stream, 404, &err_doc("no such route")),
+    }
+}
+
+fn lookup(d: &Daemon, id: &str) -> Result<Arc<Job>, Json> {
+    let id: u64 = id
+        .parse()
+        .map_err(|_| err_doc(&format!("bad job id {id:?}")))?;
+    d.job(id).ok_or_else(|| err_doc(&format!("no job {id}")))
+}
+
+fn post_job(d: &Arc<Daemon>, stream: &mut TcpStream, req: &Request) {
+    let priority: i64 = match req.query_get("priority").map(str::parse).transpose() {
+        Ok(p) => p.unwrap_or(0),
+        Err(_) => return respond_json(stream, 400, &err_doc("bad priority")),
+    };
+    let trace = req
+        .query_get("trace")
+        .is_some_and(|t| t == "1" || t == "true");
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(s) => s,
+        Err(_) => return respond_json(stream, 400, &err_doc("body must be UTF-8 TOML or JSON")),
+    };
+    match d.submit(body, priority, trace) {
+        Ok(job) => respond_json(stream, 201, &job.status_json()),
+        Err(SubmitError::QueueFull) => respond_json(stream, 429, &err_doc("queue full")),
+        Err(SubmitError::ShuttingDown) => {
+            respond_json(stream, 503, &err_doc("daemon is shutting down"))
+        }
+        Err(SubmitError::Bad(e)) => respond_json(stream, 400, &err_doc(&e)),
+    }
+}
+
+fn serve_artifact(stream: &mut TcpStream, job: &Job, artifact: &str) {
+    enum Out {
+        Body(String, &'static str),
+        Error(u16, String),
+    }
+    let out = job.with_progress(|st| match st.state {
+        JobState::Queued | JobState::Running => Out::Error(
+            409,
+            format!("job is {} — artifacts exist once it is done", st.state.name()),
+        ),
+        JobState::Failed | JobState::Cancelled => Out::Error(
+            409,
+            format!(
+                "job {}: {}",
+                st.state.name(),
+                st.error.as_deref().unwrap_or("no artifacts")
+            ),
+        ),
+        JobState::Done => {
+            let picked = match artifact {
+                "report.csv" => (st.report_csv.clone(), "text/csv"),
+                "report.json" => (st.report_json.clone(), "application/json"),
+                _ => (st.trace_jsonl.clone(), "application/jsonl"),
+            };
+            match picked {
+                (Some(body), ctype) => Out::Body(body, ctype),
+                (None, _) => Out::Error(
+                    404,
+                    "no such artifact (trace.jsonl requires submitting with trace=1)".into(),
+                ),
+            }
+        }
+    });
+    match out {
+        Out::Body(body, ctype) => respond(stream, 200, ctype, body.as_bytes()),
+        Out::Error(code, msg) => respond_json(stream, code, &err_doc(&msg)),
+    }
+}
+
+/// Server-sent events: replay the job's event log from `cursor`, then
+/// follow it live (1 s keep-alive comments) until the log closes, the
+/// client hangs up, or the daemon stops.
+fn stream_events(d: &Arc<Daemon>, stream: &mut TcpStream, job: &Arc<Job>, mut cursor: usize) {
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        return;
+    }
+    loop {
+        let (lines, next, closed) = job.events.wait_from(cursor, Duration::from_secs(1));
+        cursor = next;
+        for line in &lines {
+            if stream
+                .write_all(format!("data: {line}\n\n").as_bytes())
+                .is_err()
+            {
+                return;
+            }
+        }
+        if closed {
+            return;
+        }
+        if lines.is_empty() {
+            if d.stopped() {
+                return;
+            }
+            if stream.write_all(b": keep-alive\n\n").is_err() {
+                return;
+            }
+        }
+        let _ = stream.flush();
+    }
+}

@@ -1,0 +1,1188 @@
+//! `c2dfb serve` — the long-running sweep daemon.
+//!
+//! The batch entry points (run, sweep, the paper harnesses) are one
+//! process / one grid / exit.  This module turns the same sweep substrate
+//! into a multi-client service (the ROADMAP's "serve heavy traffic"
+//! step): a std-only server (`std::net::TcpListener` + threads, no new
+//! crates) that owns one execution pool and multiplexes many submitted
+//! grids through [`coordinator::sweep::run_cells_observed`].
+//!
+//! Architecture (see docs/SERVE.md for the protocol reference):
+//!
+//! * **Job queue** — submissions land in a bounded priority queue
+//!   ([`ServeOpts::queue_cap`]); a full queue refuses new work (HTTP 429
+//!   / TCP `ERR queue-full`) instead of growing without bound.  One
+//!   executor thread drains it (highest priority first, FIFO within a
+//!   priority); each job then fans its cells out over the work-stealing
+//!   [`NodePool`](crate::sim::NodePool) inside `run_cells_observed`, so
+//!   cell-level parallelism is the daemon-wide [`ServeOpts::jobs`] knob.
+//! * **Result cache** — completed cells are cached under the
+//!   deterministic key of [`cache::cache_key`]; resubmitted or
+//!   overlapping grids are served byte-identically without re-running
+//!   (docs/SWEEP.md seed contract).
+//! * **Progress streaming** — every job carries an [`EventLog`] of
+//!   JSON event lines fed by [`CellHooks`]; HTTP clients stream it as
+//!   SSE (`GET /jobs/:id/events`), TCP clients poll it with a cursor.
+//! * **Error isolation** — a failing cell is confined to its row in the
+//!   job's report (PR 5's per-cell error model); a panicking job is
+//!   confined to that job, which ends `failed`.
+//! * **Graceful shutdown** — SIGINT/SIGTERM flip the daemon into drain
+//!   mode: listeners stop accepting, the queue drains, artifacts flush.
+//!   A second signal (or `mode=now`) cancels the running job at its next
+//!   evaluation point and checkpoints still-queued job bodies to disk.
+//!
+//! Everything here is std-only and deterministic where it matters: the
+//! report bytes a job produces are identical to what a batch `c2dfb
+//! sweep` of the same body would write.
+
+mod cache;
+mod client;
+mod http;
+mod prom;
+mod tcp;
+
+pub use cache::{cache_key, CacheEntry, CellCache};
+pub use client::Client;
+pub use prom::{render_process, validate_exposition, ProcSnapshot};
+
+use crate::config::toml::{self, TomlValue};
+use crate::coordinator::sweep::{self, CellHooks, CellOutcome, ExecOpts, SweepSpec};
+use crate::data::partition::Partition;
+use crate::metrics::{RunMetrics, TracePoint};
+use crate::obs::Console;
+use crate::tasks::BilevelTask;
+use crate::topology::Topology;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Recover a lock even if a holder panicked — the daemon's per-job panic
+/// isolation must not poison shared state.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------------
+// Options
+
+/// Daemon configuration (CLI: `c2dfb serve`).
+#[derive(Clone)]
+pub struct ServeOpts {
+    /// HTTP listen address, or `None` to disable the HTTP surface.
+    pub http: Option<String>,
+    /// Line-protocol TCP listen address (the `c2dfb client` transport),
+    /// or `None` to disable it.
+    pub tcp: Option<String>,
+    /// Cell-level parallelism per job (0 = all cores).
+    pub jobs: usize,
+    /// Maximum queued (not yet running) jobs before submissions are
+    /// refused with explicit backpressure.
+    pub queue_cap: usize,
+    /// Maximum completed cells kept in the result cache (0 disables).
+    pub cache_cap: usize,
+    /// Per-job progress-event cap; past it events are counted + dropped.
+    pub event_cap: usize,
+    /// Artifact directory: finished jobs flush `job-<id>/report.{csv,json}`
+    /// (+ `trace.jsonl`) here, and a hard shutdown checkpoints still-queued
+    /// job bodies under `checkpoint/`.  `None` keeps artifacts in memory
+    /// only.
+    pub out_dir: Option<String>,
+    pub console: Console,
+    /// Start with the executor paused (tests: lets a queue fill up
+    /// deterministically).  Unpause with [`Daemon::pause`].
+    pub start_paused: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            http: None,
+            tcp: None,
+            jobs: 0,
+            queue_cap: 64,
+            cache_cap: 4096,
+            event_cap: 10_000,
+            out_dir: None,
+            console: Console::quiet(),
+            start_paused: false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Job state
+
+/// Job lifecycle: `queued → running → done | failed | cancelled`
+/// (queued jobs may also jump straight to `cancelled`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// Mutable per-job progress + artifacts, behind the job's mutex.
+pub struct JobProgress {
+    pub state: JobState,
+    pub cells_total: usize,
+    pub cells_done: usize,
+    pub cells_cached: usize,
+    pub cells_failed: usize,
+    pub error: Option<String>,
+    pub report_csv: Option<String>,
+    pub report_json: Option<String>,
+    pub trace_jsonl: Option<String>,
+}
+
+/// One submitted sweep.
+pub struct Job {
+    pub id: u64,
+    /// Submission order — the FIFO tiebreak within a priority class.
+    pub seq: u64,
+    /// Higher runs earlier.
+    pub priority: i64,
+    pub name: String,
+    /// Whether the job records per-cell JSONL traces.
+    pub trace: bool,
+    /// The original submitted body (TOML or JSON) — checkpointed verbatim
+    /// on hard shutdown so queued work survives a restart.
+    pub body: String,
+    pub spec: SweepSpec,
+    /// Cooperative cancel flag: checked before each pending cell and at
+    /// every evaluation point of running cells.
+    pub cancel: AtomicBool,
+    pub events: EventLog,
+    st: Mutex<JobProgress>,
+}
+
+impl Job {
+    pub fn state(&self) -> JobState {
+        lock(&self.st).state
+    }
+
+    /// Read the progress snapshot under the job lock.
+    pub fn with_progress<R>(&self, f: impl FnOnce(&JobProgress) -> R) -> R {
+        f(&lock(&self.st))
+    }
+
+    /// The status document served by `GET /jobs/:id` and `STATUS`.
+    pub fn status_json(&self) -> Json {
+        let st = lock(&self.st);
+        let mut pairs = vec![
+            ("id", Json::num(self.id as f64)),
+            ("name", Json::str(&self.name)),
+            ("state", Json::str(st.state.name())),
+            ("priority", Json::num(self.priority as f64)),
+            ("trace", Json::Bool(self.trace)),
+            ("cells", Json::num(st.cells_total as f64)),
+            ("cells_done", Json::num(st.cells_done as f64)),
+            ("cells_cached", Json::num(st.cells_cached as f64)),
+            ("cells_failed", Json::num(st.cells_failed as f64)),
+        ];
+        if let Some(e) = &st.error {
+            pairs.push(("error", Json::str(e)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event log
+
+/// Bounded, closable, waitable log of JSON event lines — one per job.
+/// Readers keep a cursor (line index) and either poll (`snapshot_from`)
+/// or block (`wait_from`, the SSE path).  Past the cap a single
+/// `events_truncated` marker is appended and further events are counted
+/// but dropped, so a runaway job cannot exhaust daemon memory.
+pub struct EventLog {
+    cap: usize,
+    inner: Mutex<EventBuf>,
+    cv: Condvar,
+}
+
+struct EventBuf {
+    lines: Vec<String>,
+    closed: bool,
+    dropped: u64,
+}
+
+impl EventLog {
+    fn new(cap: usize) -> EventLog {
+        EventLog {
+            cap: cap.max(2),
+            inner: Mutex::new(EventBuf { lines: Vec::new(), closed: false, dropped: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, line: String) {
+        let mut g = lock(&self.inner);
+        if g.closed {
+            return;
+        }
+        if g.lines.len() >= self.cap {
+            if g.dropped == 0 {
+                g.lines.push(Json::obj(vec![("ev", Json::str("events_truncated"))]).to_string());
+            }
+            g.dropped += 1;
+        } else {
+            g.lines.push(line);
+        }
+        self.cv.notify_all();
+    }
+
+    fn close(&self) {
+        lock(&self.inner).closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn dropped(&self) -> u64 {
+        lock(&self.inner).dropped
+    }
+
+    /// Non-blocking read from `cursor`: `(new lines, next cursor, closed)`.
+    pub fn snapshot_from(&self, cursor: usize) -> (Vec<String>, usize, bool) {
+        let g = lock(&self.inner);
+        let start = cursor.min(g.lines.len());
+        (g.lines[start..].to_vec(), g.lines.len(), g.closed)
+    }
+
+    /// Like [`snapshot_from`](Self::snapshot_from) but blocks up to
+    /// `timeout` when nothing new is available yet.
+    pub fn wait_from(&self, cursor: usize, timeout: Duration) -> (Vec<String>, usize, bool) {
+        let mut g = lock(&self.inner);
+        if g.lines.len() <= cursor && !g.closed {
+            g = self
+                .cv
+                .wait_timeout(g, timeout)
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .0;
+        }
+        let start = cursor.min(g.lines.len());
+        (g.lines[start..].to_vec(), g.lines.len(), g.closed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process counters
+
+/// Monotonic process-level counters surfaced at `GET /metrics`.
+#[derive(Default)]
+pub struct ProcCounters {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub cancelled: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub cells_run: AtomicU64,
+}
+
+fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Daemon
+
+/// Why a submission was refused.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Queue at capacity — explicit backpressure, try again later.
+    QueueFull,
+    /// Daemon is draining; no new work is accepted.
+    ShuttingDown,
+    /// The job body did not parse/validate.
+    Bad(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "queue full"),
+            SubmitError::ShuttingDown => write!(f, "daemon is shutting down"),
+            SubmitError::Bad(e) => write!(f, "bad job body: {e}"),
+        }
+    }
+}
+
+const PHASE_RUN: u8 = 0;
+const PHASE_DRAIN: u8 = 1;
+const PHASE_STOPPED: u8 = 2;
+
+/// Shared daemon state: job table, queue signalling, cell cache and the
+/// aggregate metrics ledger.  All surfaces (HTTP, TCP, in-process tests)
+/// operate on an `Arc<Daemon>`.
+pub struct Daemon {
+    pub opts: ServeOpts,
+    jobs: Mutex<BTreeMap<u64, Arc<Job>>>,
+    queue_cv: Condvar,
+    next_id: AtomicU64,
+    cache: Mutex<CellCache>,
+    pub counters: ProcCounters,
+    /// Cross-job aggregate of executed (non-cached) cells; its single
+    /// `render_prometheus` block is concatenated into `GET /metrics`.
+    agg: Mutex<RunMetrics>,
+    phase: AtomicU8,
+    paused: AtomicBool,
+}
+
+impl Daemon {
+    pub fn new(opts: ServeOpts) -> Arc<Daemon> {
+        let cache_cap = opts.cache_cap;
+        let paused = opts.start_paused;
+        Arc::new(Daemon {
+            opts,
+            jobs: Mutex::new(BTreeMap::new()),
+            queue_cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            cache: Mutex::new(CellCache::new(cache_cap)),
+            counters: ProcCounters::default(),
+            agg: Mutex::new(RunMetrics::new("all", "daemon")),
+            phase: AtomicU8::new(PHASE_RUN),
+            paused: AtomicBool::new(paused),
+        })
+    }
+
+    fn phase(&self) -> u8 {
+        self.phase.load(Ordering::SeqCst)
+    }
+
+    /// `false` once shutdown has begun (submissions are refused).
+    pub fn accepting(&self) -> bool {
+        self.phase() == PHASE_RUN
+    }
+
+    /// `true` once the executor has exited and listeners are stopping.
+    pub fn stopped(&self) -> bool {
+        self.phase() == PHASE_STOPPED
+    }
+
+    /// Pause/resume the executor (jobs keep queueing while paused).
+    pub fn pause(&self, paused: bool) {
+        self.paused.store(paused, Ordering::SeqCst);
+        self.queue_cv.notify_all();
+    }
+
+    pub fn job(&self, id: u64) -> Option<Arc<Job>> {
+        lock(&self.jobs).get(&id).cloned()
+    }
+
+    pub fn jobs_snapshot(&self) -> Vec<Arc<Job>> {
+        lock(&self.jobs).values().cloned().collect()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        lock(&self.jobs)
+            .values()
+            .filter(|j| j.state() == JobState::Queued)
+            .count()
+    }
+
+    /// Parse, validate and enqueue a job body.  Backpressure and
+    /// drain-mode refusal happen here — before any task data is built.
+    pub fn submit(&self, body: &str, priority: i64, trace: bool) -> Result<Arc<Job>, SubmitError> {
+        if !self.accepting() {
+            bump(&self.counters.rejected);
+            return Err(SubmitError::ShuttingDown);
+        }
+        let spec = parse_spec(body).map_err(|e| {
+            bump(&self.counters.rejected);
+            SubmitError::Bad(e)
+        })?;
+        let mut jobs = lock(&self.jobs);
+        let queued = jobs
+            .values()
+            .filter(|j| j.state() == JobState::Queued)
+            .count();
+        if queued >= self.opts.queue_cap {
+            bump(&self.counters.rejected);
+            return Err(SubmitError::QueueFull);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let job = Arc::new(Job {
+            id,
+            seq: id,
+            priority,
+            name: spec.base.name.clone(),
+            trace,
+            body: body.to_string(),
+            spec,
+            cancel: AtomicBool::new(false),
+            events: EventLog::new(self.opts.event_cap),
+            st: Mutex::new(JobProgress {
+                state: JobState::Queued,
+                cells_total: 0,
+                cells_done: 0,
+                cells_cached: 0,
+                cells_failed: 0,
+                error: None,
+                report_csv: None,
+                report_json: None,
+                trace_jsonl: None,
+            }),
+        });
+        job.events.push(
+            Json::obj(vec![
+                ("ev", Json::str("queued")),
+                ("job", Json::num(id as f64)),
+                ("priority", Json::num(priority as f64)),
+            ])
+            .to_string(),
+        );
+        jobs.insert(id, job.clone());
+        bump(&self.counters.submitted);
+        self.queue_cv.notify_all();
+        Ok(job)
+    }
+
+    /// Request cancellation.  A queued job flips to `cancelled`
+    /// immediately; a running job aborts at its next evaluation point
+    /// (`eval_every` cadence — never mid-step).  Terminal jobs are
+    /// untouched.  Returns the job, or `None` if the id is unknown.
+    pub fn cancel(&self, id: u64) -> Option<Arc<Job>> {
+        let job = self.job(id)?;
+        job.cancel.store(true, Ordering::SeqCst);
+        let became_cancelled = {
+            let mut st = lock(&job.st);
+            if st.state == JobState::Queued {
+                st.state = JobState::Cancelled;
+                st.error = Some("cancelled before start".into());
+                true
+            } else {
+                false
+            }
+        };
+        if became_cancelled {
+            bump(&self.counters.cancelled);
+            job.events.push(
+                Json::obj(vec![
+                    ("ev", Json::str("job_done")),
+                    ("job", Json::num(job.id as f64)),
+                    ("state", Json::str("cancelled")),
+                ])
+                .to_string(),
+            );
+            job.events.close();
+        }
+        self.queue_cv.notify_all();
+        Some(job)
+    }
+
+    /// Begin shutdown.  Drain mode stops accepting and lets the queue
+    /// finish; `now` additionally cancels queued + running jobs and
+    /// checkpoints the queued bodies under `out_dir/checkpoint/`.
+    pub fn begin_shutdown(&self, now: bool) {
+        let _ = self.phase.compare_exchange(
+            PHASE_RUN,
+            PHASE_DRAIN,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+        if now {
+            let queued_ids: Vec<u64> = {
+                let jobs = lock(&self.jobs);
+                for j in jobs.values() {
+                    j.cancel.store(true, Ordering::SeqCst);
+                }
+                jobs.values()
+                    .filter(|j| j.state() == JobState::Queued)
+                    .map(|j| j.id)
+                    .collect()
+            };
+            for id in queued_ids {
+                if let Some(job) = self.job(id) {
+                    self.checkpoint_job(&job);
+                    let mut st = lock(&job.st);
+                    if st.state == JobState::Queued {
+                        st.state = JobState::Cancelled;
+                        st.error = Some("daemon shutdown".into());
+                        drop(st);
+                        bump(&self.counters.cancelled);
+                        job.events.close();
+                    }
+                }
+            }
+        }
+        self.queue_cv.notify_all();
+    }
+
+    /// Persist a queued job's original body so a restart can resubmit it.
+    fn checkpoint_job(&self, job: &Job) {
+        let Some(dir) = &self.opts.out_dir else { return };
+        let dir = Path::new(dir).join("checkpoint");
+        if let Err(e) = std::fs::create_dir_all(&dir) {
+            self.opts
+                .console
+                .warn(format_args!("checkpoint dir {}: {e}", dir.display()));
+            return;
+        }
+        let path = dir.join(format!("job-{}.body", job.id));
+        if let Err(e) = std::fs::write(&path, &job.body) {
+            self.opts
+                .console
+                .warn(format_args!("checkpointing {}: {e}", path.display()));
+        }
+    }
+
+    /// The `GET /metrics` document: process families + exactly one
+    /// aggregate [`RunMetrics::render_prometheus`] block.
+    pub fn render_metrics(&self) -> String {
+        let mut by_state = [0u64; 5];
+        let mut events_dropped = 0u64;
+        for j in self.jobs_snapshot() {
+            let i = match j.state() {
+                JobState::Queued => 0,
+                JobState::Running => 1,
+                JobState::Done => 2,
+                JobState::Failed => 3,
+                JobState::Cancelled => 4,
+            };
+            by_state[i] += 1;
+            events_dropped += j.events.dropped();
+        }
+        let c = &self.counters;
+        let snap = ProcSnapshot {
+            queue_depth: by_state[0],
+            jobs_by_state: by_state,
+            submitted: c.submitted.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            failed: c.failed.load(Ordering::Relaxed),
+            cancelled: c.cancelled.load(Ordering::Relaxed),
+            cache_hits: c.cache_hits.load(Ordering::Relaxed),
+            cache_misses: c.cache_misses.load(Ordering::Relaxed),
+            cache_entries: lock(&self.cache).len() as u64,
+            cells_run: c.cells_run.load(Ordering::Relaxed),
+            events_dropped,
+        };
+        format!("{}{}", render_process(&snap), lock(&self.agg).render_prometheus())
+    }
+
+    // -- executor ---------------------------------------------------------
+
+    /// The single job-executor loop: pick the best queued job, run it,
+    /// repeat; exit once shutdown has begun and the queue is empty.
+    fn executor_loop(&self) {
+        loop {
+            let next = {
+                let mut g = lock(&self.jobs);
+                loop {
+                    if self.paused.load(Ordering::SeqCst) && self.phase() == PHASE_RUN {
+                        g = self
+                            .queue_cv
+                            .wait_timeout(g, Duration::from_millis(100))
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
+                            .0;
+                        continue;
+                    }
+                    let pick = g
+                        .values()
+                        .filter(|j| j.state() == JobState::Queued)
+                        .max_by_key(|j| (j.priority, std::cmp::Reverse(j.seq)))
+                        .cloned();
+                    match pick {
+                        Some(j) => {
+                            lock(&j.st).state = JobState::Running;
+                            break Some(j);
+                        }
+                        None => {
+                            if self.phase() >= PHASE_DRAIN {
+                                break None;
+                            }
+                            g = self
+                                .queue_cv
+                                .wait_timeout(g, Duration::from_millis(200))
+                                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                                .0;
+                        }
+                    }
+                }
+            };
+            let Some(job) = next else { break };
+            // Per-job panic isolation: a job that panics ends `failed`
+            // without taking the daemon down.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.run_job(&job);
+            }));
+            if run.is_err() {
+                let mut st = lock(&job.st);
+                if !st.state.terminal() {
+                    st.state = JobState::Failed;
+                    st.error = Some("job panicked while executing".into());
+                    drop(st);
+                    bump(&self.counters.failed);
+                }
+                job.events.close();
+            }
+        }
+        self.phase.store(PHASE_STOPPED, Ordering::SeqCst);
+    }
+
+    fn fail_job(&self, job: &Job, err: String) {
+        {
+            let mut st = lock(&job.st);
+            st.state = JobState::Failed;
+            st.error = Some(err.clone());
+        }
+        bump(&self.counters.failed);
+        job.events.push(
+            Json::obj(vec![
+                ("ev", Json::str("job_done")),
+                ("job", Json::num(job.id as f64)),
+                ("state", Json::str("failed")),
+                ("error", Json::str(&err)),
+            ])
+            .to_string(),
+        );
+        job.events.close();
+    }
+
+    /// Execute one job: expand the grid, partition cells into cache hits
+    /// and misses, run the misses through the pool with progress hooks,
+    /// merge in declaration order, cache fresh successes, and render the
+    /// aggregate reports.
+    fn run_job(&self, job: &Arc<Job>) {
+        let grid = match sweep::expand(&job.spec) {
+            Ok(g) => g,
+            Err(e) => return self.fail_job(job, format!("{e:#}")),
+        };
+        // Partition against the cache.
+        let mut merged: Vec<Option<CellOutcome>> = grid.cells.iter().map(|_| None).collect();
+        let mut miss: Vec<usize> = Vec::new();
+        {
+            let cache = lock(&self.cache);
+            for (i, cell) in grid.cells.iter().enumerate() {
+                match cache.get(&cache_key(&job.spec, job.trace, cell)) {
+                    Some(e) => {
+                        merged[i] = Some(CellOutcome {
+                            id: cell.id.clone(),
+                            result: Ok(e.metrics.clone()),
+                            trace: e.trace.clone(),
+                            profile: None,
+                        });
+                        bump(&self.counters.cache_hits);
+                    }
+                    None => {
+                        miss.push(i);
+                        bump(&self.counters.cache_misses);
+                    }
+                }
+            }
+        }
+        let cached = grid.cells.len() - miss.len();
+        {
+            let mut st = lock(&job.st);
+            st.cells_total = grid.cells.len();
+            st.cells_cached = cached;
+            st.cells_done = cached;
+        }
+        job.events.push(
+            Json::obj(vec![
+                ("ev", Json::str("job_start")),
+                ("job", Json::num(job.id as f64)),
+                ("cells", Json::num(grid.cells.len() as f64)),
+                ("cached", Json::num(cached as f64)),
+            ])
+            .to_string(),
+        );
+
+        // Run the misses (skipped entirely on a full cache hit — zero new
+        // oracle calls, the acceptance criterion).
+        if !miss.is_empty() {
+            let miss_cells: Vec<sweep::Cell> =
+                miss.iter().map(|&i| grid.cells[i].clone()).collect();
+            let tasks: Vec<&(dyn BilevelTask + Sync)> =
+                grid.tasks.iter().map(|t| t.as_ref()).collect();
+            let hooks = JobHooks { daemon: self, job };
+            let eopts = ExecOpts {
+                jobs: self.opts.jobs,
+                console: Console::quiet(),
+                trace: job.trace,
+                profile: false,
+            };
+            let fresh = sweep::run_cells_observed(&miss_cells, &tasks, None, &eopts, Some(&hooks));
+            for (k, outcome) in fresh.into_iter().enumerate() {
+                merged[miss[k]] = Some(outcome);
+            }
+        }
+        let outcomes: Vec<CellOutcome> = merged
+            .into_iter()
+            .map(|o| o.expect("every cell is either cached or ran"))
+            .collect();
+
+        let cancelled = job.cancel.load(Ordering::SeqCst);
+        // Cache fresh successes — but never from a cancelled job, whose
+        // aborted cells stopped at a client-timing-dependent point.
+        if !cancelled {
+            let mut cache = lock(&self.cache);
+            for &i in &miss {
+                if let Ok(m) = &outcomes[i].result {
+                    cache.insert(
+                        cache_key(&job.spec, job.trace, &grid.cells[i]),
+                        CacheEntry { metrics: m.clone(), trace: outcomes[i].trace.clone() },
+                    );
+                }
+            }
+        }
+        // Fold executed cells into the daemon-wide aggregate ledger
+        // (cache hits deliberately excluded: they cost nothing).
+        {
+            let mut agg = lock(&self.agg);
+            for &i in &miss {
+                if let Ok(m) = &outcomes[i].result {
+                    agg.ledger.total_bytes += m.ledger.total_bytes;
+                    agg.ledger.messages += m.ledger.messages;
+                    agg.ledger.dropped_messages += m.ledger.dropped_messages;
+                    agg.ledger.gossip_rounds += m.ledger.gossip_rounds;
+                    agg.ledger.network_time_s += m.ledger.network_time_s;
+                    agg.oracles.first_order += m.oracles.first_order;
+                    agg.oracles.second_order += m.oracles.second_order;
+                    agg.oracles.evals += m.oracles.evals;
+                }
+            }
+        }
+
+        if cancelled {
+            {
+                let mut st = lock(&job.st);
+                st.state = JobState::Cancelled;
+                st.error = Some("cancelled while running".into());
+            }
+            bump(&self.counters.cancelled);
+            job.events.push(
+                Json::obj(vec![
+                    ("ev", Json::str("job_done")),
+                    ("job", Json::num(job.id as f64)),
+                    ("state", Json::str("cancelled")),
+                ])
+                .to_string(),
+            );
+            job.events.close();
+            return;
+        }
+
+        // Aggregate reports over the FULL grid (cached + fresh), exactly
+        // the bytes a batch sweep of this body would write.
+        let csv = sweep::report_csv(&grid.cells, &outcomes);
+        let json = sweep::report_json(&grid.cells, &outcomes).to_string() + "\n";
+        let trace = job.trace.then(|| sweep::concat_traces(&outcomes));
+        let failed = outcomes.iter().filter(|o| o.result.is_err()).count();
+        if let Some(dir) = &self.opts.out_dir {
+            let d = Path::new(dir).join(format!("job-{}", job.id));
+            let write_all = || -> std::io::Result<()> {
+                std::fs::create_dir_all(&d)?;
+                std::fs::write(d.join("report.csv"), &csv)?;
+                std::fs::write(d.join("report.json"), &json)?;
+                if let Some(t) = &trace {
+                    std::fs::write(d.join("trace.jsonl"), t)?;
+                }
+                Ok(())
+            };
+            if let Err(e) = write_all() {
+                self.opts
+                    .console
+                    .warn(format_args!("flushing artifacts to {}: {e}", d.display()));
+            }
+        }
+        {
+            let mut st = lock(&job.st);
+            st.state = JobState::Done;
+            st.cells_done = st.cells_total;
+            st.cells_failed = failed;
+            st.report_csv = Some(csv);
+            st.report_json = Some(json);
+            st.trace_jsonl = trace;
+        }
+        bump(&self.counters.completed);
+        job.events.push(
+            Json::obj(vec![
+                ("ev", Json::str("job_done")),
+                ("job", Json::num(job.id as f64)),
+                ("state", Json::str("done")),
+                ("cells_failed", Json::num(failed as f64)),
+            ])
+            .to_string(),
+        );
+        job.events.close();
+    }
+}
+
+/// The per-job [`CellHooks`] bridge: cell lifecycle → event log +
+/// counters, cancel flag → skip/abort.
+struct JobHooks<'a> {
+    daemon: &'a Daemon,
+    job: &'a Arc<Job>,
+}
+
+impl CellHooks for JobHooks<'_> {
+    fn on_cell_start(&self, id: &str) {
+        self.job.events.push(
+            Json::obj(vec![("ev", Json::str("cell_start")), ("cell", Json::str(id))]).to_string(),
+        );
+    }
+
+    fn on_point(&self, id: &str, algo: &str, p: &TracePoint) -> bool {
+        self.job.events.push(
+            Json::obj(vec![
+                ("ev", Json::str("point")),
+                ("cell", Json::str(id)),
+                ("algo", Json::str(algo)),
+                ("round", Json::num(p.round as f64)),
+                ("loss", Json::num(p.loss)),
+                ("comm_mb", Json::num(p.comm_mb)),
+            ])
+            .to_string(),
+        );
+        !self.job.cancel.load(Ordering::Relaxed)
+    }
+
+    fn on_cell_done(&self, id: &str, ok: bool) {
+        bump(&self.daemon.counters.cells_run);
+        let (done, total) = {
+            let mut st = lock(&self.job.st);
+            st.cells_done += 1;
+            if !ok {
+                st.cells_failed += 1;
+            }
+            (st.cells_done, st.cells_total)
+        };
+        self.job.events.push(
+            Json::obj(vec![
+                ("ev", Json::str("cell_done")),
+                ("cell", Json::str(id)),
+                ("ok", Json::Bool(ok)),
+                ("done", Json::num(done as f64)),
+                ("total", Json::num(total as f64)),
+            ])
+            .to_string(),
+        );
+    }
+
+    fn skip(&self, _id: &str) -> bool {
+        self.job.cancel.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Job-body parsing
+
+/// Parse a job body into a sweep spec.  Sniffs the format: a leading `{`
+/// means JSON (flattened to the same `table.key` map TOML produces), else
+/// TOML.  Both resolve through [`SweepSpec::from_flat_map`], so a body
+/// yields the same grid, seeds and report bytes as a batch `c2dfb sweep
+/// --config` of the equivalent file.
+pub fn parse_spec(body: &str) -> Result<SweepSpec, String> {
+    let trimmed = body.trim_start();
+    if trimmed.is_empty() {
+        return Err("empty job body".into());
+    }
+    let map = if trimmed.starts_with('{') {
+        json_flat_map(body)?
+    } else {
+        toml::parse(body)?
+    };
+    let spec = SweepSpec::from_flat_map(&map)?;
+    validate_spec(&spec)?;
+    Ok(spec)
+}
+
+/// Cheap submit-time validation: parse every axis value that has a
+/// parser, so malformed grids are refused with 400 at submission instead
+/// of failing later inside the queue.  (Task names are validated at
+/// expansion — building task data here would be submit-time work.)
+fn validate_spec(spec: &SweepSpec) -> Result<(), String> {
+    for p in &spec.partitions {
+        Partition::parse(p)?;
+    }
+    for t in &spec.topologies {
+        Topology::parse(t, spec.base.seed)?;
+    }
+    for c in &spec.compressors {
+        if c != "default" && !c.is_empty() {
+            crate::compress::parse(c)?;
+        }
+    }
+    let mut scratch = spec.base.clone();
+    for s in &spec.stops {
+        sweep::apply_stop(&mut scratch, s)?;
+    }
+    Ok(())
+}
+
+/// Flatten a JSON job body to the `table.key → TomlValue` map the TOML
+/// parser produces: top-level scalars keep their key, one level of
+/// nesting becomes `section.key`, arrays of strings map to TOML string
+/// arrays (axis lists).  Deeper nesting is rejected.
+fn json_flat_map(body: &str) -> Result<BTreeMap<String, TomlValue>, String> {
+    let doc = Json::parse(body)?;
+    let top = doc.as_obj().ok_or("job body must be a JSON object")?;
+    let mut map = BTreeMap::new();
+    for (k, v) in top {
+        match v {
+            Json::Obj(inner) => {
+                for (k2, v2) in inner {
+                    map.insert(format!("{k}.{k2}"), json_scalar(&format!("{k}.{k2}"), v2)?);
+                }
+            }
+            other => {
+                map.insert(k.clone(), json_scalar(k, other)?);
+            }
+        }
+    }
+    Ok(map)
+}
+
+fn json_scalar(key: &str, v: &Json) -> Result<TomlValue, String> {
+    match v {
+        Json::Bool(b) => Ok(TomlValue::Bool(*b)),
+        Json::Str(s) => Ok(TomlValue::Str(s.clone())),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 9e15 {
+                Ok(TomlValue::Int(*n as i64))
+            } else {
+                Ok(TomlValue::Float(*n))
+            }
+        }
+        Json::Arr(a) => a
+            .iter()
+            .map(|e| {
+                e.as_str()
+                    .map(|s| TomlValue::Str(s.to_string()))
+                    .ok_or(format!("{key}: axis arrays must contain strings"))
+            })
+            .collect::<Result<Vec<_>, _>>()
+            .map(TomlValue::Arr),
+        Json::Null => Err(format!("{key}: null is not a valid value")),
+        Json::Obj(_) => Err(format!("{key}: nesting deeper than one table is not supported")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving
+
+/// A spawned daemon: shared state, bound addresses, listener threads.
+pub struct DaemonHandle {
+    pub daemon: Arc<Daemon>,
+    pub http_addr: Option<SocketAddr>,
+    pub tcp_addr: Option<SocketAddr>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl DaemonHandle {
+    /// Block until every daemon thread has exited (after
+    /// [`Daemon::begin_shutdown`] has let the executor drain).
+    pub fn join(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+
+    /// Convenience for tests: begin shutdown and wait for full stop.
+    pub fn shutdown_join(self, now: bool) {
+        self.daemon.begin_shutdown(now);
+        self.join();
+    }
+}
+
+/// Bind the requested listeners and start the executor; returns
+/// immediately.  Tests bind `127.0.0.1:0` and read the actual port from
+/// the handle.
+pub fn spawn(opts: ServeOpts) -> Result<DaemonHandle> {
+    let daemon = Daemon::new(opts);
+    let mut threads = Vec::new();
+    let http_addr = match &daemon.opts.http {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)
+                .map_err(|e| anyhow::anyhow!("binding http {addr}: {e}"))?;
+            let local = listener.local_addr()?;
+            let d = daemon.clone();
+            threads.push(std::thread::spawn(move || http::listen(&d, listener)));
+            Some(local)
+        }
+        None => None,
+    };
+    let tcp_addr = match &daemon.opts.tcp {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)
+                .map_err(|e| anyhow::anyhow!("binding tcp {addr}: {e}"))?;
+            let local = listener.local_addr()?;
+            let d = daemon.clone();
+            threads.push(std::thread::spawn(move || tcp::listen(&d, listener)));
+            Some(local)
+        }
+        None => None,
+    };
+    {
+        let d = daemon.clone();
+        threads.push(std::thread::spawn(move || d.executor_loop()));
+    }
+    Ok(DaemonHandle { daemon, http_addr, tcp_addr, threads })
+}
+
+/// Foreground entry point for `c2dfb serve`: spawn, then supervise until
+/// a signal (or a protocol `SHUTDOWN`) stops the daemon.  First
+/// SIGINT/SIGTERM drains; a second one hard-stops (cancel + checkpoint).
+pub fn serve(opts: ServeOpts) -> Result<()> {
+    install_signal_handlers();
+    let con = opts.console;
+    let handle = spawn(opts)?;
+    if let Some(a) = handle.http_addr {
+        con.info(format_args!("c2dfb serve: http on {a}"));
+    }
+    if let Some(a) = handle.tcp_addr {
+        con.info(format_args!("c2dfb serve: tcp on {a}"));
+    }
+    if handle.http_addr.is_none() && handle.tcp_addr.is_none() {
+        anyhow::bail!("both surfaces disabled: pass --http ADDR and/or --tcp ADDR");
+    }
+    let mut announced = 0usize;
+    while !handle.daemon.stopped() {
+        let signals = SIGNALS_SEEN.load(Ordering::SeqCst);
+        if signals >= 2 {
+            if announced < 2 {
+                con.info(format_args!("second signal: cancelling + checkpointing the queue"));
+                announced = 2;
+            }
+            handle.daemon.begin_shutdown(true);
+        } else if signals == 1 {
+            if announced < 1 {
+                con.info(format_args!(
+                    "signal received: draining the queue (signal again to hard-stop)"
+                ));
+                announced = 1;
+            }
+            handle.daemon.begin_shutdown(false);
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    handle.join();
+    con.info(format_args!("c2dfb serve: stopped"));
+    Ok(())
+}
+
+static SIGNALS_SEEN: AtomicUsize = AtomicUsize::new(0);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALS_SEEN.fetch_add(1, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    // SIGINT = 2, SIGTERM = 15 — std-only registration; the handler just
+    // bumps an atomic the supervise loop polls.
+    unsafe {
+        signal(2, on_signal as extern "C" fn(i32) as usize);
+        signal(15, on_signal as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec_sniffs_toml_and_json_to_the_same_grid() {
+        let toml_spec = parse_spec(
+            "[sweep]\ntiny = true\n",
+        )
+        .unwrap();
+        let json_spec = parse_spec(r#"{"sweep": {"tiny": true}}"#).unwrap();
+        let a = sweep::expand(&toml_spec).unwrap();
+        let b = sweep::expand(&json_spec).unwrap();
+        assert_eq!(a.cells.len(), b.cells.len());
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.cfg.seed, y.cfg.seed);
+        }
+        // And both match the batch --tiny grid.
+        let tiny = sweep::expand(&SweepSpec::tiny()).unwrap();
+        assert_eq!(a.cells.len(), tiny.cells.len());
+        for (x, y) in a.cells.iter().zip(&tiny.cells) {
+            assert_eq!(x.id, y.id);
+        }
+    }
+
+    #[test]
+    fn parse_spec_rejects_garbage_early() {
+        assert!(parse_spec("").is_err());
+        assert!(parse_spec("   ").is_err());
+        assert!(parse_spec("{not json").is_err());
+        assert!(parse_spec("[sweep]\nbogus = 1\n").is_err());
+        assert!(parse_spec(r#"{"sweep": {"stops": "wall_secs:3"}}"#).is_err());
+        assert!(parse_spec(r#"{"sweep": {"topologies": "hypercube9000"}}"#).is_err());
+        assert!(parse_spec(r#"{"a": {"b": {"c": 1}}}"#).is_err(), "deep nesting");
+        assert!(parse_spec(r#"{"sweep": {"algos": [1, 2]}}"#).is_err(), "non-string axis");
+    }
+
+    #[test]
+    fn event_log_caps_waits_and_closes() {
+        let log = EventLog::new(3);
+        log.push("a".into());
+        log.push("b".into());
+        log.push("c".into());
+        log.push("d".into());
+        log.push("e".into());
+        let (lines, next, closed) = log.snapshot_from(0);
+        assert_eq!(lines.len(), 4, "3 lines + one truncation marker");
+        assert!(lines[3].contains("events_truncated"));
+        assert_eq!(log.dropped(), 2);
+        assert!(!closed);
+        let (rest, _, _) = log.snapshot_from(next);
+        assert!(rest.is_empty());
+        log.close();
+        let (_, _, closed) = log.wait_from(next, Duration::from_millis(10));
+        assert!(closed);
+    }
+
+    #[test]
+    fn submit_backpressure_and_priority_order() {
+        let opts = ServeOpts { queue_cap: 2, start_paused: true, ..ServeOpts::default() };
+        let d = Daemon::new(opts);
+        let body = r#"{"sweep": {"tiny": true}}"#;
+        let a = d.submit(body, 0, false).unwrap();
+        let b = d.submit(body, 5, false).unwrap();
+        assert!(matches!(d.submit(body, 0, false), Err(SubmitError::QueueFull)));
+        assert_eq!(d.queue_depth(), 2);
+        assert_eq!(d.counters.rejected.load(Ordering::Relaxed), 1);
+        // Cancel one queued job: it flips to cancelled immediately and
+        // frees queue capacity.
+        d.cancel(a.id).unwrap();
+        assert_eq!(a.state(), JobState::Cancelled);
+        assert_eq!(d.queue_depth(), 1);
+        assert!(d.submit(body, 0, false).is_ok());
+        // Drain mode refuses new work.
+        d.begin_shutdown(false);
+        assert!(matches!(d.submit(body, 0, false), Err(SubmitError::ShuttingDown)));
+        assert_eq!(b.state(), JobState::Queued, "drain keeps queued jobs");
+    }
+}

@@ -1,0 +1,367 @@
+//! Prometheus text-exposition helpers for the daemon's GET /metrics.
+//!
+//! Two halves:
+//!
+//! * [`render_process`] — the daemon's process-level families (queue
+//!   depth, jobs by state, submission/cache counters), rendered from a
+//!   plain snapshot struct so the daemon's internals stay private.  The
+//!   endpoint concatenates this with exactly **one**
+//!   [`RunMetrics::render_prometheus`](crate::metrics::RunMetrics::render_prometheus)
+//!   rendering of the daemon's aggregate run ledger — never one per job,
+//!   because repeated `# TYPE` lines for the same family are invalid
+//!   exposition.
+//! * [`validate_exposition`] — a strict parser for the text exposition
+//!   format (the format `# TYPE` discipline, metric/label name grammar,
+//!   float sample values, optional timestamps).  It is the unit-test
+//!   oracle that keeps /metrics scrapable.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+/// Point-in-time view of the daemon's process-level metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProcSnapshot {
+    pub queue_depth: u64,
+    /// Jobs currently in each lifecycle state, in fixed order:
+    /// queued, running, done, failed, cancelled.
+    pub jobs_by_state: [u64; 5],
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_entries: u64,
+    pub cells_run: u64,
+    pub events_dropped: u64,
+}
+
+const STATE_NAMES: [&str; 5] = ["queued", "running", "done", "failed", "cancelled"];
+
+fn family(out: &mut String, name: &str, help: &str, kind: &str, samples: &[(String, u64)]) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for (labels, v) in samples {
+        let _ = writeln!(out, "{name}{labels} {v}");
+    }
+}
+
+/// Render the daemon's process-level families as text exposition.
+pub fn render_process(s: &ProcSnapshot) -> String {
+    let mut out = String::new();
+    let plain = |v: u64| vec![(String::new(), v)];
+    family(
+        &mut out,
+        "c2dfb_daemon_queue_depth",
+        "Jobs waiting in the priority queue.",
+        "gauge",
+        &plain(s.queue_depth),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_jobs",
+        "Jobs currently tracked, by lifecycle state.",
+        "gauge",
+        &STATE_NAMES
+            .iter()
+            .zip(s.jobs_by_state)
+            .map(|(name, v)| (format!("{{state=\"{name}\"}}"), v))
+            .collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_jobs_submitted_total",
+        "Jobs accepted into the queue since start.",
+        "counter",
+        &plain(s.submitted),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_jobs_rejected_total",
+        "Submissions refused by queue backpressure.",
+        "counter",
+        &plain(s.rejected),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_jobs_completed_total",
+        "Jobs that finished successfully.",
+        "counter",
+        &plain(s.completed),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_jobs_failed_total",
+        "Jobs that failed (bad spec, panic, or expansion error).",
+        "counter",
+        &plain(s.failed),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_jobs_cancelled_total",
+        "Jobs cancelled by clients or shutdown.",
+        "counter",
+        &plain(s.cancelled),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_cell_cache_hits_total",
+        "Cells served from the completed-cell result cache.",
+        "counter",
+        &plain(s.cache_hits),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_cell_cache_misses_total",
+        "Cells that had to execute.",
+        "counter",
+        &plain(s.cache_misses),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_cell_cache_entries",
+        "Completed cells currently cached.",
+        "gauge",
+        &plain(s.cache_entries),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_cells_run_total",
+        "Cells executed (cache misses that ran to completion or error).",
+        "counter",
+        &plain(s.cells_run),
+    );
+    family(
+        &mut out,
+        "c2dfb_daemon_events_dropped_total",
+        "Per-job progress events discarded past the event-log cap.",
+        "counter",
+        &plain(s.events_dropped),
+    );
+    out
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse one `{name="value",...}` label block; returns the byte length
+/// consumed (including both braces).
+fn parse_labels(s: &str) -> Result<usize, String> {
+    let bytes = s.as_bytes();
+    debug_assert_eq!(bytes.first(), Some(&b'{'));
+    let mut i = 1;
+    loop {
+        // Allow `{}` and a trailing comma before the closing brace.
+        if bytes.get(i) == Some(&b'}') {
+            return Ok(i + 1);
+        }
+        let name_start = i;
+        while i < bytes.len() && bytes[i] != b'=' && bytes[i] != b'}' && bytes[i] != b',' {
+            i += 1;
+        }
+        let name = &s[name_start..i];
+        if !valid_label_name(name) {
+            return Err(format!("bad label name {name:?}"));
+        }
+        if bytes.get(i) != Some(&b'=') {
+            return Err(format!("label {name:?} missing '='"));
+        }
+        i += 1;
+        if bytes.get(i) != Some(&b'"') {
+            return Err(format!("label {name:?} value must be quoted"));
+        }
+        i += 1;
+        // Scan the quoted value; backslash escapes the next byte.
+        loop {
+            match bytes.get(i) {
+                None => return Err(format!("unterminated label value for {name:?}")),
+                Some(b'\\') => i += 2,
+                Some(b'"') => {
+                    i += 1;
+                    break;
+                }
+                Some(_) => i += 1,
+            }
+        }
+        match bytes.get(i) {
+            Some(b',') => i += 1,
+            Some(b'}') => return Ok(i + 1),
+            _ => return Err("expected ',' or '}' after label value".into()),
+        }
+    }
+}
+
+/// Validate Prometheus text exposition (format version 0.0.4).  Checks
+/// the grammar of every line, the metric/label name character sets, that
+/// each family's `# TYPE` appears at most once and before any of its
+/// samples, and that every sample value parses as a float.  Returns the
+/// number of sample lines.
+pub fn validate_exposition(text: &str) -> Result<usize, String> {
+    let mut typed: BTreeSet<String> = BTreeSet::new();
+    let mut sampled: BTreeSet<String> = BTreeSet::new();
+    let mut samples = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or(format!("line {ln}: TYPE without name"))?;
+            let kind = it.next().ok_or(format!("line {ln}: TYPE without kind"))?;
+            if it.next().is_some() {
+                return Err(format!("line {ln}: trailing tokens after TYPE"));
+            }
+            if !valid_metric_name(name) {
+                return Err(format!("line {ln}: bad metric name {name:?}"));
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {ln}: unknown metric type {kind:?}"));
+            }
+            if !typed.insert(name.to_string()) {
+                return Err(format!("line {ln}: duplicate TYPE for {name:?}"));
+            }
+            if sampled.contains(name) {
+                return Err(format!("line {ln}: TYPE for {name:?} after its samples"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest
+                .split_whitespace()
+                .next()
+                .ok_or(format!("line {ln}: HELP without name"))?;
+            if !valid_metric_name(name) {
+                return Err(format!("line {ln}: bad metric name {name:?}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+        // Sample: name[{labels}] value [timestamp]
+        let name_end = line
+            .find(|c: char| c == '{' || c == ' ' || c == '\t')
+            .ok_or(format!("line {ln}: sample without value"))?;
+        let name = &line[..name_end];
+        if !valid_metric_name(name) {
+            return Err(format!("line {ln}: bad metric name {name:?}"));
+        }
+        let mut rest = &line[name_end..];
+        if rest.starts_with('{') {
+            let consumed =
+                parse_labels(rest).map_err(|e| format!("line {ln}: {e}"))?;
+            rest = &rest[consumed..];
+        }
+        let mut it = rest.split_whitespace();
+        let value = it.next().ok_or(format!("line {ln}: sample without value"))?;
+        value
+            .parse::<f64>()
+            .map_err(|_| format!("line {ln}: bad sample value {value:?}"))?;
+        if let Some(ts) = it.next() {
+            ts.parse::<i64>()
+                .map_err(|_| format!("line {ln}: bad timestamp {ts:?}"))?;
+        }
+        if it.next().is_some() {
+            return Err(format!("line {ln}: trailing tokens after sample"));
+        }
+        // The family base name: histogram/summary series suffixes
+        // (_bucket/_sum/_count) still belong to the declared family.
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|b| typed.contains(*b))
+            .unwrap_or(name);
+        sampled.insert(base.to_string());
+        samples += 1;
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{RunMetrics, TracePoint};
+
+    #[test]
+    fn process_families_are_valid_exposition() {
+        let snap = ProcSnapshot {
+            queue_depth: 3,
+            jobs_by_state: [3, 1, 7, 1, 2],
+            submitted: 14,
+            rejected: 2,
+            completed: 7,
+            cache_hits: 32,
+            cache_misses: 16,
+            cache_entries: 16,
+            ..ProcSnapshot::default()
+        };
+        let text = render_process(&snap);
+        let n = validate_exposition(&text).expect("process families must validate");
+        // 11 single-sample families + 5 per-state job gauges.
+        assert_eq!(n, 16);
+        assert!(text.contains("c2dfb_daemon_jobs{state=\"queued\"} 3"));
+        assert!(text.contains("c2dfb_daemon_cell_cache_hits_total 32"));
+    }
+
+    #[test]
+    fn run_metrics_render_validates_and_concatenates_once() {
+        let mut m = RunMetrics::new("c2dfb", "daemon");
+        m.ledger.total_bytes = 123_456;
+        m.ledger.messages = 78;
+        m.oracles.first_order = 900;
+        m.trace.push(TracePoint {
+            round: 3,
+            comm_mb: 0.1,
+            sim_time_s: 0.0,
+            wall_time_s: 0.0,
+            loss: 0.25,
+            accuracy: 0.5,
+            grad_norm: 1.0,
+            consensus_err: 0.0,
+            dropped_msgs: 0,
+        });
+        validate_exposition(&m.render_prometheus()).expect("run families must validate");
+        // The /metrics endpoint shape: process families + ONE run render.
+        let combined = format!("{}{}", render_process(&ProcSnapshot::default()), m.render_prometheus());
+        validate_exposition(&combined).expect("combined endpoint output must validate");
+        // Two run renders would repeat every # TYPE line — exactly what
+        // the validator (and real scrapers) reject.
+        let doubled = format!("{}{}", m.render_prometheus(), m.render_prometheus());
+        assert!(validate_exposition(&doubled).is_err());
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(validate_exposition("ok_metric 1\n").is_ok());
+        assert!(validate_exposition("ok{a=\"b\",c=\"d\"} 2.5 1234\n").is_ok());
+        assert!(validate_exposition("ok{a=\"say \\\"hi\\\"\"} NaN\n").is_ok());
+        assert!(validate_exposition("1bad 1\n").is_err(), "name must not start with digit");
+        assert!(validate_exposition("m{1x=\"v\"} 1\n").is_err(), "bad label name");
+        assert!(validate_exposition("m{a=\"v} 1\n").is_err(), "unterminated label");
+        assert!(validate_exposition("m notanumber\n").is_err(), "bad value");
+        assert!(validate_exposition("m 1 2 3\n").is_err(), "trailing tokens");
+        assert!(validate_exposition("# TYPE m flavor\nm 1\n").is_err(), "unknown type");
+        assert!(
+            validate_exposition("m 1\n# TYPE m counter\n").is_err(),
+            "TYPE after samples"
+        );
+    }
+}

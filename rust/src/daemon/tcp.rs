@@ -1,0 +1,238 @@
+//! Line-delimited TCP protocol — the `c2dfb client` transport.
+//!
+//! One command per connection.  The client sends a single command line
+//! (LF-terminated; `SUBMITB` is followed by a raw body), the server
+//! answers with exactly one framed response and closes:
+//!
+//! ```text
+//! OK <nbytes>\n<nbytes of payload>     success
+//! ERR <message>\n                      failure (message is one line)
+//! ```
+//!
+//! Commands:
+//!
+//! ```text
+//! PING
+//! SUBMIT <priority> <trace:0|1> <inline-json-body>
+//! SUBMITB <nbytes> <priority> <trace:0|1>    (raw TOML/JSON body follows)
+//! STATUS <id>
+//! LIST
+//! REPORT <id> csv|json|trace
+//! EVENTS <id> <cursor>
+//! CANCEL <id>
+//! METRICS
+//! SHUTDOWN [drain|now]
+//! ```
+//!
+//! Same hardening budget as HTTP: 1 MiB command line, 4 MiB body,
+//! 10 s I/O timeouts.
+
+use super::{Daemon, SubmitError};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+const MAX_LINE_BYTES: usize = 1024 * 1024;
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Accept loop (mirrors the HTTP one): non-blocking accept polling the
+/// shutdown phase, one thread per connection.
+pub fn listen(d: &Arc<Daemon>, listener: TcpListener) {
+    if listener.set_nonblocking(true).is_err() {
+        d.opts.console.warn(format_args!("tcp listener: cannot set non-blocking"));
+        return;
+    }
+    loop {
+        if d.stopped() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let d = d.clone();
+                std::thread::spawn(move || handle(&d, stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+fn handle(d: &Arc<Daemon>, stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let result = read_command(&mut reader).and_then(|line| dispatch(d, &line, &mut reader));
+    match result {
+        Ok(payload) => {
+            let _ = writer.write_all(format!("OK {}\n", payload.len()).as_bytes());
+            let _ = writer.write_all(&payload);
+        }
+        Err(msg) => {
+            // The error frame is one line by construction.
+            let one_line = msg.replace(['\n', '\r'], " ");
+            let _ = writer.write_all(format!("ERR {one_line}\n").as_bytes());
+        }
+    }
+    let _ = writer.flush();
+}
+
+/// Read one LF-terminated command line with an explicit cap (BufRead's
+/// `read_line` is unbounded — a hostile peer could stream gigabytes).
+fn read_command(reader: &mut BufReader<TcpStream>) -> Result<String, String> {
+    let mut raw = Vec::new();
+    let n = reader
+        .by_ref()
+        .take(MAX_LINE_BYTES as u64 + 1)
+        .read_until(b'\n', &mut raw)
+        .map_err(|e| format!("reading command: {e}"))?;
+    if n == 0 {
+        return Err("empty command".into());
+    }
+    if raw.last() != Some(&b'\n') {
+        return Err(format!("command line exceeds {MAX_LINE_BYTES} bytes or is unterminated"));
+    }
+    raw.pop();
+    if raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
+    String::from_utf8(raw).map_err(|_| "command must be UTF-8".into())
+}
+
+fn parse_id(tok: Option<&str>) -> Result<u64, String> {
+    tok.ok_or("missing job id")?
+        .parse()
+        .map_err(|_| "bad job id".into())
+}
+
+fn submit(d: &Daemon, body: &str, priority: i64, trace: bool) -> Result<Vec<u8>, String> {
+    match d.submit(body, priority, trace) {
+        Ok(job) => Ok((job.status_json().to_string() + "\n").into_bytes()),
+        Err(SubmitError::QueueFull) => Err("queue-full".into()),
+        Err(SubmitError::ShuttingDown) => Err("shutting-down".into()),
+        Err(SubmitError::Bad(e)) => Err(format!("bad-request: {e}")),
+    }
+}
+
+fn dispatch(
+    d: &Arc<Daemon>,
+    line: &str,
+    reader: &mut BufReader<TcpStream>,
+) -> Result<Vec<u8>, String> {
+    let mut head = line.splitn(4, ' ');
+    let cmd = head.next().unwrap_or_default();
+    match cmd {
+        "PING" => Ok(b"pong\n".to_vec()),
+        "SUBMIT" => {
+            let priority: i64 = head
+                .next()
+                .ok_or("SUBMIT wants: SUBMIT <priority> <trace:0|1> <json>")?
+                .parse()
+                .map_err(|_| "bad priority")?;
+            let trace = parse_trace_flag(head.next())?;
+            let body = head.next().ok_or("SUBMIT: missing inline body")?;
+            submit(d, body, priority, trace)
+        }
+        "SUBMITB" => {
+            let nbytes: usize = head
+                .next()
+                .ok_or("SUBMITB wants: SUBMITB <nbytes> <priority> <trace:0|1>")?
+                .parse()
+                .map_err(|_| "bad byte count")?;
+            if nbytes > MAX_BODY_BYTES {
+                return Err(format!("body larger than {MAX_BODY_BYTES} bytes"));
+            }
+            let priority: i64 = head
+                .next()
+                .ok_or("SUBMITB: missing priority")?
+                .parse()
+                .map_err(|_| "bad priority")?;
+            let trace = parse_trace_flag(head.next())?;
+            let mut body = vec![0u8; nbytes];
+            reader
+                .read_exact(&mut body)
+                .map_err(|e| format!("reading {nbytes}-byte body: {e}"))?;
+            let body = String::from_utf8(body).map_err(|_| "body must be UTF-8")?;
+            submit(d, &body, priority, trace)
+        }
+        "STATUS" => {
+            let id = parse_id(head.next())?;
+            let job = d.job(id).ok_or(format!("no job {id}"))?;
+            Ok((job.status_json().to_string() + "\n").into_bytes())
+        }
+        "LIST" => {
+            let docs: Vec<Json> = d.jobs_snapshot().iter().map(|j| j.status_json()).collect();
+            let doc = Json::obj(vec![("jobs", Json::Arr(docs))]);
+            Ok((doc.to_string() + "\n").into_bytes())
+        }
+        "REPORT" => {
+            let id = parse_id(head.next())?;
+            let fmt = head.next().ok_or("REPORT wants: REPORT <id> csv|json|trace")?;
+            let job = d.job(id).ok_or(format!("no job {id}"))?;
+            job.with_progress(|st| {
+                if st.state != super::JobState::Done {
+                    return Err(format!(
+                        "job is {} — artifacts exist once it is done",
+                        st.state.name()
+                    ));
+                }
+                let body = match fmt {
+                    "csv" => st.report_csv.clone(),
+                    "json" => st.report_json.clone(),
+                    "trace" => st.trace_jsonl.clone(),
+                    other => return Err(format!("unknown report format {other:?}")),
+                };
+                body.map(String::into_bytes)
+                    .ok_or("no such artifact (trace requires submitting with trace=1)".into())
+            })
+        }
+        "EVENTS" => {
+            let id = parse_id(head.next())?;
+            let cursor: usize = head
+                .next()
+                .unwrap_or("0")
+                .parse()
+                .map_err(|_| "bad cursor")?;
+            let job = d.job(id).ok_or(format!("no job {id}"))?;
+            let (lines, next, closed) = job.events.snapshot_from(cursor);
+            let doc = Json::obj(vec![
+                ("next", Json::num(next as f64)),
+                ("closed", Json::Bool(closed)),
+                (
+                    "lines",
+                    Json::Arr(lines.iter().map(|l| Json::str(l)).collect()),
+                ),
+            ]);
+            Ok((doc.to_string() + "\n").into_bytes())
+        }
+        "CANCEL" => {
+            let id = parse_id(head.next())?;
+            let job = d.cancel(id).ok_or(format!("no job {id}"))?;
+            Ok((job.status_json().to_string() + "\n").into_bytes())
+        }
+        "METRICS" => Ok(d.render_metrics().into_bytes()),
+        "SHUTDOWN" => {
+            let now = matches!(head.next(), Some("now"));
+            d.begin_shutdown(now);
+            Ok(b"shutting down\n".to_vec())
+        }
+        other => Err(format!("unknown command {other:?}")),
+    }
+}
+
+fn parse_trace_flag(tok: Option<&str>) -> Result<bool, String> {
+    match tok {
+        Some("0") => Ok(false),
+        Some("1") => Ok(true),
+        _ => Err("trace flag must be 0 or 1".into()),
+    }
+}

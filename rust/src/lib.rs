@@ -74,6 +74,7 @@ pub mod collective;
 pub mod compress;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
 pub mod data;
 pub mod goldens;
 pub mod linalg;

@@ -14,6 +14,8 @@
 //! c2dfb goldens [--bless] [--dir D] [--jobs N]  # golden-trace fixtures
 //! c2dfb trace out.jsonl            # summarize a recorded JSONL trace
 //! c2dfb artifacts                  # list AOT artifacts + shapes
+//! c2dfb serve [--http A] [--tcp A] # long-running sweep daemon
+//! c2dfb client <action> [...]      # talk to a running daemon
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -30,7 +32,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|goldens|trace|all|artifacts> [options]
+const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|goldens|trace|all|artifacts|serve|client> [options]
   telemetry (run, sweep, and every harness; see docs/OBS.md):
             --trace FILE.jsonl (deterministic JSONL span trace, sim-time /
             counter stamped, byte-identical at any --jobs width)
@@ -66,7 +68,22 @@ const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|abl
             overrides the fixture directory
   trace:    summarize a recorded JSONL trace into a per-phase cost table
             (c2dfb trace out.jsonl, or --file out.jsonl); validates every
-            line against the schema in docs/OBS.md";
+            line against the schema in docs/OBS.md
+  serve:    long-running sweep daemon (docs/SERVE.md): bounded priority
+            job queue, deterministic completed-cell result cache, SSE
+            progress streaming, Prometheus /metrics, graceful shutdown.
+            --http ADDR (default 127.0.0.1:8642, 'off' disables)
+            --tcp ADDR (default 127.0.0.1:8643, 'off' disables)
+            --jobs N (cell parallelism)  --queue_cap N (default 64)
+            --cache_cap N (default 4096)  --out DIR (default runs/daemon,
+            'off' keeps artifacts in memory only)
+  client:   talk to a running daemon over the TCP line protocol:
+            c2dfb client [--addr HOST:PORT] <action>
+              submit [--config f.toml | --tiny] [--priority P] [--trace]
+                     [--wait [--timeout SECS]]
+              status <id> | list | wait <id> [--timeout SECS]
+              report <id> [--format csv|json|trace] [--out FILE]
+              cancel <id> | metrics | ping | shutdown [--now]";
 
 fn real_main() -> Result<()> {
     let args = Args::from_env();
@@ -98,6 +115,8 @@ fn real_main() -> Result<()> {
         "budget" => cmd_budget(args),
         "goldens" => cmd_goldens(args),
         "trace" => cmd_trace(args),
+        "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
         "table1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "ablation" | "all" => {
             cmd_harness(&sub, args)
         }
@@ -315,6 +334,147 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `c2dfb serve`: the long-running sweep daemon (docs/SERVE.md).
+fn cmd_serve(mut args: Args) -> Result<()> {
+    let http = args.get_or("http", "127.0.0.1:8642");
+    let tcp = args.get_or("tcp", "127.0.0.1:8643");
+    let jobs = args.get_parse::<usize>("jobs", 0);
+    let queue_cap = args.get_parse::<usize>("queue_cap", 64);
+    let cache_cap = args.get_parse::<usize>("cache_cap", 4096);
+    let out = args.get_or("out", "runs/daemon");
+    let con = c2dfb::obs::Console::new(args.flag("quiet"), args.flag("verbose"));
+    args.finish().map_err(anyhow::Error::msg)?;
+    let opts = c2dfb::daemon::ServeOpts {
+        http: (http != "off").then_some(http),
+        tcp: (tcp != "off").then_some(tcp),
+        jobs,
+        queue_cap,
+        cache_cap,
+        out_dir: (out != "off").then_some(out),
+        console: con,
+        ..c2dfb::daemon::ServeOpts::default()
+    };
+    c2dfb::daemon::serve(opts)
+}
+
+/// `c2dfb client`: drive a running daemon over the TCP line protocol.
+fn cmd_client(mut args: Args) -> Result<()> {
+    use c2dfb::util::json::Json;
+    let addr = args.get_or("addr", "127.0.0.1:8643");
+    let con = c2dfb::obs::Console::new(args.flag("quiet"), args.flag("verbose"));
+    let client = c2dfb::daemon::Client::new(&addr);
+    let action = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("client wants an action\n{USAGE}"))?;
+    let pos_id: Option<u64> = args.positional.get(1).and_then(|s| s.parse().ok());
+    let need_id = || pos_id.ok_or_else(|| anyhow!("client {action} wants a job id"));
+    let final_state = |status: &Json| -> Result<()> {
+        match status.get("state").and_then(Json::as_str) {
+            Some("done") => Ok(()),
+            other => anyhow::bail!("job ended {}", other.unwrap_or("in an unknown state")),
+        }
+    };
+    match action.as_str() {
+        "ping" => {
+            args.finish().map_err(anyhow::Error::msg)?;
+            client.ping().map_err(anyhow::Error::msg)?;
+            con.info(format_args!("pong from {addr}"));
+            Ok(())
+        }
+        "submit" => {
+            let tiny = args.flag("tiny");
+            let config = args.get("config");
+            let body = match (&config, tiny) {
+                // The daemon resolves sweep.tiny=true to the exact grid
+                // batch `c2dfb sweep --tiny` runs.
+                (None, true) => r#"{"sweep": {"tiny": true}}"#.to_string(),
+                (Some(path), _) => std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("reading {path}: {e}"))?,
+                (None, false) => anyhow::bail!("client submit wants --config FILE or --tiny"),
+            };
+            let priority = args.get_parse::<i64>("priority", 0);
+            let trace = args.flag("trace");
+            let wait = args.flag("wait");
+            let timeout = args.get_parse::<u64>("timeout", 3600);
+            args.finish().map_err(anyhow::Error::msg)?;
+            let status = client.submit(&body, priority, trace).map_err(anyhow::Error::msg)?;
+            println!("{}", status.to_string());
+            if wait {
+                let id = status
+                    .get("id")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("daemon returned a status without an id"))?;
+                let done = client
+                    .wait(id as u64, std::time::Duration::from_secs(timeout), &con)
+                    .map_err(anyhow::Error::msg)?;
+                println!("{}", done.to_string());
+                final_state(&done)?;
+            }
+            Ok(())
+        }
+        "status" => {
+            let id = need_id()?;
+            args.finish().map_err(anyhow::Error::msg)?;
+            println!("{}", client.status(id).map_err(anyhow::Error::msg)?.to_string());
+            Ok(())
+        }
+        "list" => {
+            args.finish().map_err(anyhow::Error::msg)?;
+            println!("{}", client.list().map_err(anyhow::Error::msg)?.to_string());
+            Ok(())
+        }
+        "wait" => {
+            let id = need_id()?;
+            let timeout = args.get_parse::<u64>("timeout", 3600);
+            args.finish().map_err(anyhow::Error::msg)?;
+            let done = client
+                .wait(id, std::time::Duration::from_secs(timeout), &con)
+                .map_err(anyhow::Error::msg)?;
+            println!("{}", done.to_string());
+            final_state(&done)
+        }
+        "report" => {
+            let id = need_id()?;
+            let fmt = args.get_or("format", "csv");
+            let out = args.get("out");
+            args.finish().map_err(anyhow::Error::msg)?;
+            let bytes = client.report(id, &fmt).map_err(anyhow::Error::msg)?;
+            match out {
+                Some(path) => {
+                    std::fs::write(&path, &bytes).map_err(|e| anyhow!("writing {path}: {e}"))?;
+                    con.info(format_args!("wrote {} bytes to {path}", bytes.len()));
+                }
+                None => {
+                    use std::io::Write as _;
+                    std::io::stdout().write_all(&bytes)?;
+                }
+            }
+            Ok(())
+        }
+        "cancel" => {
+            let id = need_id()?;
+            args.finish().map_err(anyhow::Error::msg)?;
+            println!("{}", client.cancel(id).map_err(anyhow::Error::msg)?.to_string());
+            Ok(())
+        }
+        "metrics" => {
+            args.finish().map_err(anyhow::Error::msg)?;
+            print!("{}", client.metrics().map_err(anyhow::Error::msg)?);
+            Ok(())
+        }
+        "shutdown" => {
+            let now = args.flag("now");
+            args.finish().map_err(anyhow::Error::msg)?;
+            client.shutdown(now).map_err(anyhow::Error::msg)?;
+            con.info(format_args!("daemon at {addr} is shutting down"));
+            Ok(())
+        }
+        other => Err(anyhow!("unknown client action {other:?}\n{USAGE}")),
+    }
 }
 
 fn cmd_netsweep(mut args: Args) -> Result<()> {

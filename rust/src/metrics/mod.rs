@@ -186,7 +186,10 @@ pub struct TracePoint {
     pub dropped_msgs: u64,
 }
 
-/// Full metrics for one experiment run.
+/// Full metrics for one experiment run.  `Clone` exists for the daemon's
+/// completed-cell cache: every deterministic field round-trips exactly
+/// (the `started` instant is wall-clock and excluded from all reports).
+#[derive(Clone)]
 pub struct RunMetrics {
     pub algo: String,
     pub label: String,

@@ -1,0 +1,267 @@
+//! End-to-end tests for the `c2dfb serve` daemon: in-process
+//! [`daemon::spawn`] on ephemeral ports (`127.0.0.1:0`), driven through
+//! the real TCP line protocol ([`daemon::Client`]) and raw HTTP/1.1
+//! requests.  The acceptance criteria from the daemon PR live here:
+//! resubmitted grids are fully cache-served with zero new cell
+//! executions, and daemon report bytes are identical to a batch
+//! `c2dfb sweep` of the same body.
+
+use c2dfb::coordinator::sweep::{self, ExecOpts, SweepSpec};
+use c2dfb::daemon::{self, Client, Job, JobState, ServeOpts, SubmitError};
+use c2dfb::obs::Console;
+use c2dfb::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const TINY_BODY: &str = r#"{"sweep": {"tiny": true}}"#;
+const DEADLINE: Duration = Duration::from_secs(120);
+
+/// Poll a job to a terminal state (the executor runs on its own thread).
+fn wait_state(job: &Arc<Job>) -> JobState {
+    let t0 = Instant::now();
+    loop {
+        let s = job.state();
+        if s.terminal() {
+            return s;
+        }
+        assert!(
+            t0.elapsed() < DEADLINE,
+            "timed out waiting for job {} (still {:?})",
+            job.id,
+            s
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// One blocking HTTP/1.1 request; the server closes after responding, so
+/// read-to-EOF captures the full response.
+fn http_req(addr: SocketAddr, method: &str, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send request");
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read response");
+    out
+}
+
+fn http_body(resp: &str) -> &str {
+    resp.split_once("\r\n\r\n").expect("header separator").1
+}
+
+/// Concurrent submissions through the real TCP protocol all complete,
+/// each with an intact full-grid report (per-job error isolation).
+#[test]
+fn concurrent_tcp_submissions_all_complete() {
+    let opts = ServeOpts { tcp: Some("127.0.0.1:0".into()), ..ServeOpts::default() };
+    let handle = daemon::spawn(opts).expect("spawn daemon");
+    let addr = handle.tcp_addr.expect("tcp bound").to_string();
+
+    let threads: Vec<_> = (0..4)
+        .map(|k| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let c = Client::new(&addr);
+                let st = c.submit(TINY_BODY, k as i64, false).expect("submit");
+                st.get("id").and_then(Json::as_usize).expect("id") as u64
+            })
+        })
+        .collect();
+    let ids: Vec<u64> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    assert_eq!(ids.len(), 4);
+
+    let c = Client::new(&addr);
+    let quiet = Console::quiet();
+    let ncells = sweep::expand(&SweepSpec::tiny()).unwrap().cells.len();
+    for id in &ids {
+        let fin = c.wait(*id, DEADLINE, &quiet).expect("wait");
+        assert_eq!(fin.get("state").and_then(Json::as_str), Some("done"), "{fin:?}");
+        let csv = String::from_utf8(c.report(*id, "csv").expect("report")).unwrap();
+        assert_eq!(
+            csv.lines().count(),
+            ncells + 1,
+            "job {id}: header + one row per cell"
+        );
+    }
+    handle.shutdown_join(false);
+}
+
+/// The headline cache contract: resubmitting an identical grid returns
+/// byte-identical reports with every cell served from the cache — zero
+/// new cell executions (and therefore zero new oracle calls).
+#[test]
+fn resubmitted_grid_is_cache_served_and_byte_identical() {
+    let handle = daemon::spawn(ServeOpts::default()).expect("spawn daemon");
+    let d = handle.daemon.clone();
+
+    let a = d.submit(TINY_BODY, 0, false).expect("submit a");
+    assert_eq!(wait_state(&a), JobState::Done);
+    let misses = d.counters.cache_misses.load(Ordering::Relaxed);
+    let run = d.counters.cells_run.load(Ordering::Relaxed);
+    assert!(misses > 0, "first run must populate the cache");
+    assert_eq!(run, misses, "every miss ran exactly once");
+    let (csv_a, json_a) =
+        a.with_progress(|st| (st.report_csv.clone().unwrap(), st.report_json.clone().unwrap()));
+
+    let b = d.submit(TINY_BODY, 0, false).expect("submit b");
+    assert_eq!(wait_state(&b), JobState::Done);
+    assert_eq!(
+        d.counters.cache_misses.load(Ordering::Relaxed),
+        misses,
+        "resubmission must not miss the cache"
+    );
+    assert_eq!(
+        d.counters.cells_run.load(Ordering::Relaxed),
+        run,
+        "resubmission must execute zero cells"
+    );
+    b.with_progress(|st| {
+        assert_eq!(st.cells_cached, st.cells_total, "fully cache-served");
+        assert_eq!(st.report_csv.as_deref(), Some(csv_a.as_str()), "CSV bytes differ");
+        assert_eq!(st.report_json.as_deref(), Some(json_a.as_str()), "JSON bytes differ");
+    });
+    handle.shutdown_join(false);
+}
+
+/// Daemon reports are bit-identical to what a batch `c2dfb sweep` of the
+/// same body writes: same grid expansion, same derived seeds, same
+/// report rendering.
+#[test]
+fn daemon_report_bytes_match_batch_sweep() {
+    let eopts = ExecOpts {
+        jobs: 0,
+        console: Console::quiet(),
+        trace: false,
+        profile: false,
+    };
+    let (grid, outcomes) = sweep::run_with(&SweepSpec::tiny(), &eopts).expect("batch sweep");
+    let batch_csv = sweep::report_csv(&grid.cells, &outcomes);
+    let batch_json = sweep::report_json(&grid.cells, &outcomes).to_string() + "\n";
+
+    let handle = daemon::spawn(ServeOpts::default()).expect("spawn daemon");
+    let job = handle.daemon.submit(TINY_BODY, 0, false).expect("submit");
+    assert_eq!(wait_state(&job), JobState::Done);
+    job.with_progress(|st| {
+        assert_eq!(st.report_csv.as_deref(), Some(batch_csv.as_str()), "CSV differs");
+        assert_eq!(st.report_json.as_deref(), Some(batch_json.as_str()), "JSON differs");
+    });
+    handle.shutdown_join(false);
+}
+
+/// Cancelling one job leaves its siblings untouched: the cancelled job
+/// ends `cancelled` with a closed event log, the sibling completes with
+/// a full report.
+#[test]
+fn cancelling_one_job_leaves_siblings_untouched() {
+    let opts = ServeOpts { start_paused: true, ..ServeOpts::default() };
+    let handle = daemon::spawn(opts).expect("spawn daemon");
+    let d = &handle.daemon;
+
+    let a = d.submit(TINY_BODY, 0, false).expect("submit a");
+    let b = d.submit(TINY_BODY, 0, false).expect("submit b");
+    d.cancel(a.id).expect("cancel a");
+    assert_eq!(a.state(), JobState::Cancelled);
+
+    d.pause(false);
+    assert_eq!(wait_state(&b), JobState::Done);
+    assert_eq!(a.state(), JobState::Cancelled, "sibling completion must not revive a");
+    b.with_progress(|st| {
+        assert_eq!(st.cells_done, st.cells_total);
+        assert!(st.report_csv.is_some());
+    });
+    let (lines, _, closed) = a.events.snapshot_from(0);
+    assert!(closed, "cancelled job's event log must close");
+    assert!(
+        lines.iter().any(|l| l.contains("job_done") && l.contains("cancelled")),
+        "terminal event missing: {lines:?}"
+    );
+    handle.shutdown_join(false);
+}
+
+/// Drain shutdown finishes every queued job before stopping, and refuses
+/// new submissions the moment it begins.
+#[test]
+fn drain_shutdown_finishes_queued_jobs() {
+    let opts = ServeOpts { start_paused: true, ..ServeOpts::default() };
+    let handle = daemon::spawn(opts).expect("spawn daemon");
+    let a = handle.daemon.submit(TINY_BODY, 0, false).expect("submit a");
+    let b = handle.daemon.submit(TINY_BODY, 3, false).expect("submit b");
+
+    handle.daemon.begin_shutdown(false);
+    assert!(
+        matches!(handle.daemon.submit(TINY_BODY, 0, false), Err(SubmitError::ShuttingDown)),
+        "drain mode must refuse new work"
+    );
+    let d = handle.daemon.clone();
+    handle.join();
+
+    assert!(d.stopped());
+    assert_eq!(a.state(), JobState::Done, "drain must finish queued jobs");
+    assert_eq!(b.state(), JobState::Done, "drain must finish queued jobs");
+}
+
+/// The HTTP surface end-to-end: health probe, submission, queue
+/// backpressure as 429, artifact serving, SSE event replay, and a
+/// `/metrics` document that passes the strict exposition validator both
+/// before and after cells have run.
+#[test]
+fn http_surface_backpressure_artifacts_and_valid_metrics() {
+    let opts = ServeOpts {
+        http: Some("127.0.0.1:0".into()),
+        queue_cap: 1,
+        start_paused: true,
+        ..ServeOpts::default()
+    };
+    let handle = daemon::spawn(opts).expect("spawn daemon");
+    let addr = handle.http_addr.expect("http bound");
+
+    assert!(http_req(addr, "GET", "/healthz", "").starts_with("HTTP/1.1 200"));
+
+    let r1 = http_req(addr, "POST", "/jobs?priority=2", TINY_BODY);
+    assert!(r1.starts_with("HTTP/1.1 201"), "submit: {r1}");
+    let r2 = http_req(addr, "POST", "/jobs", TINY_BODY);
+    assert!(r2.starts_with("HTTP/1.1 429"), "backpressure: {r2}");
+
+    // Artifacts do not exist yet: 409 while queued.
+    let early = http_req(addr, "GET", "/jobs/1/report.csv", "");
+    assert!(early.starts_with("HTTP/1.1 409"), "{early}");
+
+    // Metrics must validate even before anything has run.
+    let m = http_req(addr, "GET", "/metrics", "");
+    assert!(m.starts_with("HTTP/1.1 200"));
+    daemon::validate_exposition(http_body(&m)).expect("pre-run exposition invalid");
+
+    handle.daemon.pause(false);
+    let job = handle.daemon.job(1).expect("job 1 exists");
+    assert_eq!(wait_state(&job), JobState::Done);
+
+    let csv = http_req(addr, "GET", "/jobs/1/report.csv", "");
+    assert!(csv.starts_with("HTTP/1.1 200"), "{csv}");
+    let expected = job.with_progress(|st| st.report_csv.clone().unwrap());
+    assert_eq!(http_body(&csv), expected, "HTTP artifact differs from stored report");
+
+    // SSE replay: the log is closed, so the stream drains and ends.
+    let sse = http_req(addr, "GET", "/jobs/1/events", "");
+    assert!(sse.contains("Content-Type: text/event-stream"), "{sse}");
+    assert!(sse.contains("data: "), "{sse}");
+    assert!(sse.contains("job_done"), "{sse}");
+
+    let m2 = http_req(addr, "GET", "/metrics", "");
+    let body2 = http_body(&m2);
+    let samples = daemon::validate_exposition(body2).expect("post-run exposition invalid");
+    assert!(samples >= 16, "expected full family set, got {samples} samples");
+    assert!(
+        body2.contains("c2dfb_daemon_jobs_completed_total 1"),
+        "completion counter missing:\n{body2}"
+    );
+    assert!(body2.contains("c2dfb_daemon_cells_run_total"), "{body2}");
+
+    handle.shutdown_join(false);
+}

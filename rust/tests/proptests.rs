@@ -400,3 +400,144 @@ fn prop_tracker_mean_invariant() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Binary wire codec (`compress::Payload::encode`/`decode`) — the daemon's
+// untrusted-input boundary.  The decoder's contract is: arbitrary bytes
+// never panic, never over-read, never allocate attacker-sized buffers;
+// valid encodings round-trip exactly.
+// ---------------------------------------------------------------------------
+
+use c2dfb::compress::Payload;
+
+/// A random canonical payload: dense, sparse (narrow or wide indices,
+/// strictly increasing), or quantized with an in-range header.
+fn random_payload(g: &mut Gen) -> Payload {
+    match g.usize_in(0, 2) {
+        0 => Payload::Dense(g.vec_normal(g.usize_in(0, 48), 1.0)),
+        1 => {
+            let n = g.usize_in(0, 16);
+            let wide = g.bool();
+            let mut cur: u32 = if wide { 65_536 } else { 0 };
+            let mut idx = Vec::with_capacity(n);
+            for _ in 0..n {
+                cur += g.usize_in(0, 9) as u32;
+                idx.push(cur);
+                cur += 1;
+            }
+            let val = g.vec_normal(n, 1.0);
+            Payload::Sparse { idx, val }
+        }
+        _ => Payload::Quantized {
+            norm: g.f32_in(0.0, 100.0),
+            levels: g.usize_in(1, 32_767) as u32,
+            codes: (0..g.usize_in(0, 48)).map(|_| g.rng.next_u64() as i16).collect(),
+        },
+    }
+}
+
+/// The smallest dimension a payload legitimately fits
+/// (`decode_for_dim`'s accept side).
+fn fitting_dim(p: &Payload) -> usize {
+    match p {
+        Payload::Dense(v) => v.len(),
+        Payload::Sparse { idx, .. } => idx.last().map_or(0, |&m| m as usize) + 1,
+        Payload::Quantized { codes, .. } => codes.len(),
+    }
+}
+
+/// Canonical payloads round-trip the wire bit-exactly: `encoded_len` is
+/// the true length, `decode(encode(p)) == p`, `decode_for_dim` accepts
+/// the payload's own dimension and rejects a dimension it cannot fit.
+#[test]
+fn prop_wire_codec_roundtrip() {
+    check("wire-roundtrip", 80, |g| {
+        let p = random_payload(g);
+        let mut bytes = Vec::new();
+        p.encode(&mut bytes);
+        ensure(
+            bytes.len() == p.encoded_len(),
+            format!("encoded_len {} vs actual {}", p.encoded_len(), bytes.len()),
+        )?;
+        let back = Payload::decode(&bytes)
+            .map_err(|e| format!("decode of a valid encoding failed: {e}"))?;
+        ensure(back == p, "encode→decode altered the payload")?;
+        let dim = fitting_dim(&p);
+        Payload::decode_for_dim(&bytes, dim)
+            .map_err(|e| format!("rejected at its own dim {dim}: {e}"))?;
+        // A dimension the payload cannot fit must be rejected: one short
+        // of the dense/quantized length, or the max sparse index itself.
+        let too_small = match &p {
+            Payload::Dense(v) if !v.is_empty() => Some(v.len() - 1),
+            Payload::Quantized { codes, .. } if !codes.is_empty() => Some(codes.len() - 1),
+            Payload::Sparse { idx, .. } => idx.last().map(|&m| m as usize),
+            _ => None,
+        };
+        if let Some(bad) = too_small {
+            ensure(
+                Payload::decode_for_dim(&bytes, bad).is_err(),
+                format!("dim {bad} accepted a payload needing {dim}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Arbitrary byte strings never panic the decoder.  When hostile bytes
+/// happen to decode, the result must be a canonical payload: re-encoding
+/// it and decoding again is a bit-exact fixed point (compared on encoded
+/// bytes, so NaN payload values cannot fake a mismatch).
+#[test]
+fn prop_wire_decode_survives_random_bytes() {
+    check("wire-hostile", 200, |g| {
+        let n = g.usize_in(0, 64);
+        let mut bytes: Vec<u8> = (0..n).map(|_| g.rng.next_u64() as u8).collect();
+        // Bias half the cases onto real tags so every decode arm is hit.
+        if !bytes.is_empty() && g.bool() {
+            bytes[0] = g.usize_in(0, 4) as u8;
+        }
+        match Payload::decode(&bytes) {
+            Err(_) => Ok(()),
+            Ok(p) => {
+                let mut re = Vec::new();
+                p.encode(&mut re);
+                let p2 = Payload::decode(&re)
+                    .map_err(|e| format!("re-encoding not decodable: {e}"))?;
+                let mut re2 = Vec::new();
+                p2.encode(&mut re2);
+                ensure(re == re2, "decode→encode→decode is not a fixed point")
+            }
+        }
+    });
+}
+
+/// Every strict prefix of a valid encoding fails cleanly (the count field
+/// pins the exact payload length), and flipping a single byte never
+/// panics — if the mutant still decodes, it is itself canonical.
+#[test]
+fn prop_wire_truncation_and_mutation_are_clean() {
+    check("wire-truncate", 60, |g| {
+        let p = random_payload(g);
+        let mut bytes = Vec::new();
+        p.encode(&mut bytes);
+        for cut in 0..bytes.len() {
+            ensure(
+                Payload::decode(&bytes[..cut]).is_err(),
+                format!("strict prefix {cut}/{} decoded", bytes.len()),
+            )?;
+        }
+        if !bytes.is_empty() {
+            let at = g.usize_in(0, bytes.len() - 1);
+            bytes[at] ^= (g.rng.next_u64() as u8) | 1;
+            if let Ok(m) = Payload::decode(&bytes) {
+                let mut re = Vec::new();
+                m.encode(&mut re);
+                ensure(
+                    Payload::decode(&re).is_ok(),
+                    "mutated payload decoded but its re-encoding does not",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
