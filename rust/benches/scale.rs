@@ -1,0 +1,113 @@
+//! Million-node sparse-engine benchmark: rounds/sec and active
+//! nodes/sec for `sim::scale::ScaleSim` at m ∈ {1k, 100k, 1M}.
+//!
+//! ```bash
+//! cargo bench --bench scale                 # full ladder (1M included)
+//! cargo bench --bench scale -- m100k        # filter one rung
+//! SCALE_BENCH_JSON=BENCH_scale.json cargo bench --bench scale
+//! ```
+//!
+//! The headline numbers (recorded in `BENCH_scale.json`, methodology in
+//! `docs/SCALE.md`):
+//!
+//! * **full participation** (`rate = 1.0`) — every node mixes and steps
+//!   every round; throughput is bounded by O(m·degree) event traffic;
+//! * **sampled** (`rate` chosen so ~1k nodes are active per round) —
+//!   the design point: per-round cost tracks the ACTIVE set, so a 1M
+//!   node round costs roughly what a 1k-node dense round does plus the
+//!   O(m) mask draw.
+//!
+//! Setting `SCALE_BENCH_JSON=<path>` additionally writes the measured
+//! ladder as JSON in the `BENCH_scale.json` shape.
+
+use c2dfb::metrics::ConsensusEstimator;
+use c2dfb::sim::{ScaleOpts, ScaleSim};
+use c2dfb::topology::Topology;
+use c2dfb::util::bench::{black_box, Bencher};
+use c2dfb::util::json::Json;
+
+struct Rung {
+    tag: &'static str,
+    nodes: usize,
+    topology: Topology,
+    rate: f64,
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    // Big single-shot workloads: a short budget is plenty (each iteration
+    // is itself thousands-to-millions of node updates).
+    b.budget = std::time::Duration::from_secs(1);
+    b.min_iters = 3;
+
+    let ladder = [
+        Rung { tag: "ring_m1k_full", nodes: 1_000, topology: Topology::Ring, rate: 1.0 },
+        Rung { tag: "exp_m1k_full", nodes: 1_000, topology: Topology::Exponential, rate: 1.0 },
+        Rung { tag: "ring_m100k_full", nodes: 100_000, topology: Topology::Ring, rate: 1.0 },
+        Rung { tag: "ring_m100k_s1pct", nodes: 100_000, topology: Topology::Ring, rate: 0.01 },
+        Rung { tag: "ring_m1m_s01pct", nodes: 1_000_000, topology: Topology::Ring, rate: 0.001 },
+        Rung { tag: "exp_m1m_s01pct", nodes: 1_000_000, topology: Topology::Exponential, rate: 0.001 },
+    ];
+
+    let mut measured: Vec<(String, f64, f64)> = Vec::new(); // (tag, nodes/s, wall_s)
+    for rung in &ladder {
+        let opts = ScaleOpts {
+            nodes: rung.nodes,
+            topology: rung.topology,
+            rounds: 1,
+            rate: rung.rate,
+            dim: 8,
+            seed: 42,
+            eta: 0.1,
+            gamma: 0.5,
+            estimator: ConsensusEstimator::default(),
+        };
+        // Bench one round on a persistent engine (steady-state: maps and
+        // queue warm); the active node count per round is mask-dependent,
+        // so report throughput from an explicit measured pass.
+        let mut sim = ScaleSim::new(opts).expect("bench opts are valid");
+        let name = format!("scale/round/{}", rung.tag);
+        let mean = b.bench(&name, || {
+            sim.step_round();
+            black_box(sim.tracked_states())
+        });
+        if let Some(mean) = mean {
+            let per_round_active = sim.opts().rate * rung.nodes as f64;
+            let nodes_per_sec = per_round_active / mean.as_secs_f64();
+            println!("      └─ ~{nodes_per_sec:.3e} active nodes/s");
+            measured.push((rung.tag.to_string(), nodes_per_sec, mean.as_secs_f64()));
+        }
+
+        // The strided consensus estimate at this m (the eval-point cost).
+        let sim2 = ScaleSim::new(opts).expect("bench opts are valid");
+        b.bench(&format!("scale/consensus_estimate/{}", rung.tag), || {
+            black_box(sim2.consensus_estimate())
+        });
+    }
+    b.finish();
+
+    if let Ok(path) = std::env::var("SCALE_BENCH_JSON") {
+        let metrics = Json::obj(
+            measured
+                .iter()
+                .map(|(tag, nps, wall)| {
+                    (
+                        tag.as_str(),
+                        Json::obj(vec![
+                            ("active_nodes_per_sec", Json::num(*nps)),
+                            ("round_wall_s", Json::num(*wall)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let doc = Json::obj(vec![
+            ("bench", Json::str("scale")),
+            ("command", Json::str("cargo bench --bench scale")),
+            ("status", Json::str("measured")),
+            ("metrics", metrics),
+        ]);
+        std::fs::write(&path, doc.to_string()).expect("write SCALE_BENCH_JSON");
+        println!("wrote {path}");
+    }
+}

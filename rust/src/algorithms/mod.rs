@@ -40,12 +40,13 @@ pub use self::mdbo::Mdbo;
 
 use crate::collective::Transport;
 use crate::config::{Algorithm, ExperimentConfig};
-use crate::metrics::{RunMetrics, StopReason, TracePoint};
+use crate::metrics::{ConsensusEstimator, RunMetrics, StopReason, TracePoint};
 use crate::obs::{LedgerSnap, Phase, Recorder};
 use crate::sim::NodePool;
 use crate::tasks::BilevelTask;
 use crate::util::rng::Rng;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Shared driver state handed to each algorithm.
 pub struct RunContext<'a, T: Transport> {
@@ -131,10 +132,37 @@ impl<'a, T: Transport> RunContext<'a, T> {
         // (x̄, ȳ) on every node's validation shard.
         let (loss, acc) = crate::tasks::eval_consensus(self.task, xs, ys)?;
         self.metrics.oracles.evals += self.task.nodes() as u64;
-        let consensus = crate::linalg::consensus_err_sq(xs);
+        // The estimator spec is validated up front; "auto" is the exact
+        // path (bitwise) below its node-count threshold, so existing
+        // configs keep byte-stable traces.
+        let est = ConsensusEstimator::parse(&self.cfg.scale.consensus)
+            .map_err(anyhow::Error::msg)?;
+        let consensus = est.estimate(xs);
         self.metrics.record_eval(round, loss, acc, grad_norm, consensus);
         Ok(())
     }
+}
+
+/// The active-node mask for outer round `round` — a pure function of
+/// (seed, round, m, rate), so any round's mask can be recomputed from the
+/// config alone (sweep replays, crash recovery, the adversarial tests).
+///
+/// `rate ≥ 1` returns `None` and consumes no RNG: the unsampled path is
+/// bit-identical to a build without sampling at all.  Each node is active
+/// with probability `rate`; an all-inactive draw activates node
+/// `round % m` so every round makes progress.
+pub fn sampling_mask(seed: u64, round: usize, m: usize, rate: f64) -> Option<Arc<Vec<bool>>> {
+    if rate >= 1.0 {
+        return None;
+    }
+    let salt = (seed ^ 0x5A4D_5053_414D_504C)
+        .wrapping_add((round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut rng = Rng::new(salt);
+    let mut mask: Vec<bool> = (0..m).map(|_| rng.bernoulli(rate)).collect();
+    if !mask.iter().any(|&a| a) {
+        mask[round % m] = true;
+    }
+    Some(Arc::new(mask))
 }
 
 /// What one outer round reports back to the driver.
@@ -243,12 +271,66 @@ pub fn drive<T: Transport>(
                 break c.reason();
             }
         }
+        // Refresh the round's sampling mask (None at rate 1.0 — the
+        // default — which leaves every transport on its unmasked path).
+        ctx.net.set_active(sampling_mask(
+            ctx.cfg.seed,
+            round,
+            ctx.net.m(),
+            ctx.cfg.sampling.rate,
+        ));
         out = algo.step(ctx, round)?;
         ctx.obs.round(round, ctx.net.ledger(), &ctx.metrics.oracles);
         round += 1;
     };
     ctx.metrics.stop_reason = Some(reason);
+    ctx.net.set_active(None);
     ctx.obs.run_end(&ctx.metrics);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_mask_is_pure_and_never_empty() {
+        for round in 0..50 {
+            let a = sampling_mask(7, round, 16, 0.2).unwrap();
+            let b = sampling_mask(7, round, 16, 0.2).unwrap();
+            assert_eq!(a, b, "mask must be a pure function of (seed, round)");
+            assert!(a.iter().any(|&x| x), "round {round}: empty mask");
+        }
+        // Different rounds/seeds decorrelate.
+        let r0 = sampling_mask(7, 0, 64, 0.5).unwrap();
+        let r1 = sampling_mask(7, 1, 64, 0.5).unwrap();
+        let s1 = sampling_mask(8, 0, 64, 0.5).unwrap();
+        assert_ne!(r0, r1);
+        assert_ne!(r0, s1);
+    }
+
+    #[test]
+    fn sampling_mask_rate_one_is_none() {
+        assert!(sampling_mask(1, 0, 10, 1.0).is_none());
+        assert!(sampling_mask(1, 3, 10, 1.5).is_none());
+    }
+
+    #[test]
+    fn sampling_mask_tiny_rate_forces_progress() {
+        for round in 0..20 {
+            let m = 5;
+            let mask = sampling_mask(3, round, m, 1e-12).unwrap();
+            let n = mask.iter().filter(|&&x| x).count();
+            assert!(n >= 1, "round {round}: no active node");
+        }
+    }
+
+    #[test]
+    fn sampling_mask_rate_tracks_expectation() {
+        let m = 4000;
+        let mask = sampling_mask(11, 2, m, 0.3).unwrap();
+        let frac = mask.iter().filter(|&&x| x).count() as f64 / m as f64;
+        assert!((frac - 0.3).abs() < 0.05, "active fraction {frac} far from 0.3");
+    }
 }
 

@@ -1,0 +1,237 @@
+//! Generator-backed synchronous transport: [`GenNetwork`] answers every
+//! [`Transport`] query from a [`GenTopology`] — no adjacency lists, no
+//! m×m mixing matrix — so the fixed per-run footprint is O(m) (degrees
+//! for the ledger) instead of O(m²).
+//!
+//! Semantics are exactly [`Network`](super::Network)'s: every message
+//! from an active sender is delivered within the round, receivers see
+//! senders ascending, the ledger and time model are identical, and
+//! mixing weights are bitwise-equal Metropolis–Hastings values (the
+//! [`GenTopology`] edge contract).  `tests/scale.rs` pins full-trajectory
+//! bit-identity against the materialized path at small m.
+
+use std::sync::Arc;
+
+use super::{clear_delivered, dense_wire_bytes, Inbox, Transport};
+use crate::compress::Compressed;
+use crate::metrics::{CommLedger, TimeModel};
+use crate::topology::{GenTopology, Neighborhood, Topology};
+
+/// Synchronous in-process transport over an implicit topology.
+pub struct GenNetwork {
+    topo: GenTopology,
+    m: usize,
+    pub ledger: CommLedger,
+    pub time_model: TimeModel,
+    degrees: Vec<usize>,
+    active: Option<Arc<Vec<bool>>>,
+    /// Reusable neighbor buffer for delivery fan-out.
+    nbrs: Vec<usize>,
+}
+
+impl GenNetwork {
+    pub fn new(topo: GenTopology) -> GenNetwork {
+        let m = topo.node_count();
+        let degrees = (0..m).map(|i| topo.degree(i)).collect();
+        GenNetwork {
+            topo,
+            m,
+            ledger: CommLedger::default(),
+            time_model: TimeModel::default(),
+            degrees,
+            active: None,
+            nbrs: Vec::new(),
+        }
+    }
+
+    /// Build straight from a [`Topology`] value; errors on variants with
+    /// no generator form.
+    pub fn build(topology: Topology, m: usize) -> Result<GenNetwork, String> {
+        Ok(GenNetwork::new(GenTopology::new(topology, m)?))
+    }
+
+    pub fn topology(&self) -> &GenTopology {
+        &self.topo
+    }
+
+    fn mask(&self) -> Option<&[bool]> {
+        self.active.as_ref().map(|a| a.as_slice())
+    }
+
+    fn fan_out<T>(&mut self, msgs: Vec<T>) -> Inbox<T> {
+        let mut inbox: Inbox<T> = vec![Vec::new(); self.m];
+        let mut nbrs = std::mem::take(&mut self.nbrs);
+        for (sender, msg) in msgs.into_iter().enumerate() {
+            if let Some(mask) = self.mask() {
+                if !mask[sender] {
+                    continue;
+                }
+            }
+            let msg = Arc::new(msg);
+            self.topo.neighbors_into(sender, &mut nbrs);
+            for &nb in &nbrs {
+                inbox[nb].push((sender, msg.clone()));
+            }
+        }
+        self.nbrs = nbrs;
+        inbox
+    }
+}
+
+impl Transport for GenNetwork {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn weight(&self, i: usize, j: usize) -> f64 {
+        self.topo.mix_weight(i, j)
+    }
+
+    fn ledger(&self) -> &CommLedger {
+        &self.ledger
+    }
+
+    fn set_active(&mut self, mask: Option<Arc<Vec<bool>>>) {
+        if let Some(m) = &mask {
+            assert_eq!(m.len(), self.m, "sampling mask length must equal node count");
+        }
+        self.active = mask;
+    }
+
+    fn active(&self) -> Option<&[bool]> {
+        self.mask()
+    }
+
+    fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+        assert_eq!(msgs.len(), self.m);
+        let bytes: Vec<usize> = msgs.iter().map(Compressed::wire_bytes).collect();
+        self.ledger
+            .record_round_active(&bytes, &self.degrees, self.mask(), &self.time_model);
+        self.fan_out(msgs)
+    }
+
+    fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+        assert_eq!(vecs.len(), self.m);
+        let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes(v.len())).collect();
+        self.ledger
+            .record_round_active(&bytes, &self.degrees, self.mask(), &self.time_model);
+        self.fan_out(vecs.to_vec())
+    }
+
+    fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
+        assert_eq!(bytes.len(), self.m);
+        self.ledger
+            .record_round_active(bytes, &self.degrees, self.mask(), &self.time_model);
+        clear_delivered(delivered, self.m);
+        let mut nbrs = std::mem::take(&mut self.nbrs);
+        for sender in 0..self.m {
+            if let Some(mask) = self.mask() {
+                if !mask[sender] {
+                    continue;
+                }
+            }
+            self.topo.neighbors_into(sender, &mut nbrs);
+            for &nb in &nbrs {
+                delivered[nb].push(sender);
+            }
+        }
+        self.nbrs = nbrs;
+    }
+
+    // mix_paid / mix_paid_into: trait defaults.  They fold delivered
+    // messages with `weight()`, which is bitwise-equal to the
+    // materialized MixingMatrix, and `Network`'s fast paths are pinned
+    // equal to the same defaults — so all three agree exactly.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{MixScratch, Network};
+    use super::*;
+    use crate::topology::Graph;
+    use crate::util::rng::Rng;
+
+    fn pair(topology: Topology, m: usize) -> (Network, GenNetwork) {
+        (
+            Network::new(Graph::build(topology, m)),
+            GenNetwork::build(topology, m).unwrap(),
+        )
+    }
+
+    #[test]
+    fn matches_materialized_network_bitwise() {
+        for (topology, m) in [
+            (Topology::Ring, 6),
+            (Topology::Exponential, 9),
+            (Topology::Torus, 12),
+            (Topology::RandomRegular { k: 4, seed: 5 }, 11),
+        ] {
+            let (mut mat, mut gen) = pair(topology, m);
+            let mut rng = Rng::new(17);
+            let rows: Vec<Vec<f32>> = (0..m)
+                .map(|_| (0..7).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .collect();
+
+            let a = mat.mix_paid(0.6, &rows);
+            let b = gen.mix_paid(0.6, &rows);
+            assert_eq!(a, b, "{topology:?} m={m}");
+            assert_eq!(mat.ledger.total_bytes, gen.ledger.total_bytes);
+            assert_eq!(mat.ledger.messages, gen.ledger.messages);
+            assert_eq!(
+                mat.ledger.network_time_s.to_bits(),
+                gen.ledger.network_time_s.to_bits()
+            );
+
+            let bytes = vec![100usize; m];
+            let (mut da, mut db) = (Vec::new(), Vec::new());
+            mat.exchange_indices(&bytes, &mut da);
+            gen.exchange_indices(&bytes, &mut db);
+            assert_eq!(da, db);
+
+            for i in 0..m {
+                for j in 0..m {
+                    assert_eq!(
+                        Transport::weight(&mat, i, j).to_bits(),
+                        Transport::weight(&gen, i, j).to_bits(),
+                        "{topology:?} w[{i},{j}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_paths_match_materialized() {
+        let (mut mat, mut gen) = pair(Topology::Exponential, 10);
+        let mask = Arc::new((0..10).map(|i| i % 3 != 1).collect::<Vec<bool>>());
+        mat.set_active(Some(mask.clone()));
+        gen.set_active(Some(mask.clone()));
+        let rows: Vec<Vec<f32>> = (0..10).map(|i| vec![i as f32; 5]).collect();
+        let a = mat.mix_paid(0.8, &rows);
+        let b = gen.mix_paid(0.8, &rows);
+        assert_eq!(a, b);
+        assert_eq!(mat.ledger.total_bytes, gen.ledger.total_bytes);
+
+        // The in-place masked kernel agrees with the allocating one.
+        let mut sc = MixScratch::new();
+        let mut inplace = rows.clone();
+        gen.mix_paid_into(0.8, inplace.as_mut_slice(), &mut sc);
+        assert_eq!(inplace, a);
+    }
+
+    #[test]
+    fn exchange_fans_out_like_network() {
+        let (mut mat, mut gen) = pair(Topology::Ring, 5);
+        let rows: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32]).collect();
+        let ia = mat.exchange_dense(&rows);
+        let ib = gen.exchange_dense(&rows);
+        for i in 0..5 {
+            let sa: Vec<usize> = ia[i].iter().map(|(s, _)| *s).collect();
+            let sb: Vec<usize> = ib[i].iter().map(|(s, _)| *s).collect();
+            assert_eq!(sa, sb);
+            for ((_, va), (_, vb)) in ia[i].iter().zip(&ib[i]) {
+                assert_eq!(va.as_ref(), vb.as_ref());
+            }
+        }
+    }
+}

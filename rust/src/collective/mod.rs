@@ -30,6 +30,10 @@ use crate::metrics::{CommLedger, TimeModel};
 use crate::topology::{Graph, MixingMatrix};
 use std::sync::Arc;
 
+mod gen;
+
+pub use gen::GenNetwork;
+
 /// Messages delivered to each node: `(sender, payload)` pairs, in
 /// ascending sender order.  Payloads are shared, not cloned per edge.
 pub type Inbox<T> = Vec<Vec<(usize, Arc<T>)>>;
@@ -43,9 +47,15 @@ pub fn dense_wire_bytes(len: usize) -> usize {
 /// Fan a message set out to each sender's neighbours (shared payloads).
 /// Receivers see senders in ascending order — a canonical order, so
 /// downstream float reductions are reproducible across transports.
-pub(crate) fn deliver<T>(graph: &Graph, msgs: Vec<T>) -> Inbox<T> {
+/// Senders that are inactive under `active` transmit nothing.
+pub(crate) fn deliver<T>(graph: &Graph, msgs: Vec<T>, active: Option<&[bool]>) -> Inbox<T> {
     let mut inbox: Inbox<T> = vec![Vec::new(); graph.m];
     for (sender, msg) in msgs.into_iter().enumerate() {
+        if let Some(mask) = active {
+            if !mask[sender] {
+                continue;
+            }
+        }
         let msg = Arc::new(msg);
         for &nb in graph.neighbors(sender) {
             inbox[nb].push((sender, msg.clone()));
@@ -86,15 +96,38 @@ impl MixScratch {
 /// Implementations must deliver each message to every current neighbour
 /// of its sender (minus whatever the transport's loss model eats) and
 /// keep inboxes in ascending sender order.
+///
+/// Mixing weights are exposed as point queries ([`Transport::weight`])
+/// rather than a materialized matrix, so generator-backed transports
+/// ([`GenNetwork`]) can answer them in O(1) from degrees at million-node
+/// scale.  Per-round node sampling plugs in through
+/// [`Transport::set_active`]: an inactive node sends nothing and pays
+/// nothing that round, while still receiving whatever its active
+/// neighbours broadcast (docs/SCALE.md covers the semantics).
 pub trait Transport {
     /// Number of nodes.
     fn m(&self) -> usize;
-    /// Current gossip mixing weights (may change under a topology schedule).
-    fn mixing(&self) -> &MixingMatrix;
-    /// Current communication graph.
-    fn graph(&self) -> &Graph;
+    /// Current gossip mixing weight w_ij (may change under a topology
+    /// schedule).  `i == j` yields the self-weight, non-edges exactly 0.
+    fn weight(&self, i: usize, j: usize) -> f64;
     /// Cumulative communication costs.
     fn ledger(&self) -> &CommLedger;
+
+    /// Install (`Some`) or clear (`None`) the per-round sampling mask.
+    /// While a mask is set, inactive senders transmit nothing and are
+    /// charged nothing; delivery to *receivers* is unaffected (an
+    /// inactive node still hears its active neighbours — the compressed
+    /// inner loop needs this to keep reference points in sync).  The
+    /// default ignores the mask: custom transports without sampling
+    /// support keep every node active.
+    fn set_active(&mut self, mask: Option<Arc<Vec<bool>>>) {
+        let _ = mask;
+    }
+
+    /// The currently installed sampling mask, if any.
+    fn active(&self) -> Option<&[bool]> {
+        None
+    }
 
     /// Gossip-broadcast one compressed message per node to all its
     /// neighbours.  Returns each node's inbox; bytes are recorded.
@@ -131,10 +164,18 @@ pub trait Transport {
         sc.bytes.resize(m, dense_wire_bytes(d));
         self.exchange_indices(&sc.bytes, &mut sc.delivered);
         for i in 0..m {
+            // Under a sampling mask only active nodes take the mix step;
+            // inactive rows pass through unchanged (senders were already
+            // filtered by the transport's exchange).
+            if let Some(mask) = self.active() {
+                if !mask[i] {
+                    continue;
+                }
+            }
             let oi = rows.row_mut(i);
             let ri = sc.prev.row(i);
             for &j in &sc.delivered[i] {
-                let w = (gamma * self.mixing().weight(i, j)) as f32;
+                let w = (gamma * self.weight(i, j)) as f32;
                 let rj = sc.prev.row(j);
                 for k in 0..d {
                     oi[k] += w * (rj[k] - ri[k]);
@@ -157,10 +198,15 @@ pub trait Transport {
         let inbox = self.exchange_dense(rows);
         let mut out = rows.to_vec();
         for (i, msgs) in inbox.into_iter().enumerate() {
+            if let Some(mask) = self.active() {
+                if !mask[i] {
+                    continue;
+                }
+            }
             let ri = &rows[i];
             let oi = &mut out[i];
             for (sender, v) in msgs {
-                let w = (gamma * self.mixing().weight(i, sender)) as f32;
+                let w = (gamma * self.weight(i, sender)) as f32;
                 for k in 0..ri.len() {
                     oi[k] += w * (v[k] - ri[k]);
                 }
@@ -200,6 +246,7 @@ pub struct Network {
     pub ledger: CommLedger,
     pub time_model: TimeModel,
     degrees: Vec<usize>,
+    active: Option<Arc<Vec<bool>>>,
 }
 
 impl Network {
@@ -212,6 +259,7 @@ impl Network {
             ledger: CommLedger::default(),
             time_model: TimeModel::default(),
             degrees,
+            active: None,
         }
     }
 
@@ -219,12 +267,17 @@ impl Network {
         self.graph.m
     }
 
+    fn mask(&self) -> Option<&[bool]> {
+        self.active.as_ref().map(|a| a.as_slice())
+    }
+
     /// See [`Transport::exchange`].
     pub fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
         assert_eq!(msgs.len(), self.m());
         let bytes: Vec<usize> = msgs.iter().map(Compressed::wire_bytes).collect();
-        self.ledger.record_round(&bytes, &self.degrees, &self.time_model);
-        deliver(&self.graph, msgs)
+        self.ledger
+            .record_round_active(&bytes, &self.degrees, self.mask(), &self.time_model);
+        deliver(&self.graph, msgs, self.mask())
     }
 
     /// See [`Transport::exchange_dense`].  One clone per sender (into the
@@ -232,29 +285,62 @@ impl Network {
     pub fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
         assert_eq!(vecs.len(), self.m());
         let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes(v.len())).collect();
-        self.ledger.record_round(&bytes, &self.degrees, &self.time_model);
-        deliver(&self.graph, vecs.to_vec())
+        self.ledger
+            .record_round_active(&bytes, &self.degrees, self.mask(), &self.time_model);
+        deliver(&self.graph, vecs.to_vec(), self.mask())
     }
 
     /// See [`Transport::mix_paid`].  The synchronous network delivers
-    /// everything, so it can skip payload materialization entirely: pay
-    /// the bytes, then mix straight over the callers' rows (zero clones
-    /// beyond the output).
+    /// everything, so with no sampling mask it can skip payload
+    /// materialization entirely: pay the bytes, then mix straight over
+    /// the callers' rows (zero clones beyond the output).  Under a mask
+    /// it folds explicitly — active receivers mix contributions from
+    /// active neighbours only, inactive rows pass through — which is
+    /// bit-identical to the trait default's masked fold.
     pub fn mix_paid(&mut self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
         assert_eq!(rows.len(), self.m());
         let bytes: Vec<usize> = rows.iter().map(|v| dense_wire_bytes(v.len())).collect();
-        self.ledger.record_round(&bytes, &self.degrees, &self.time_model);
-        self.mixing.mix(gamma, rows)
+        self.ledger
+            .record_round_active(&bytes, &self.degrees, self.mask(), &self.time_model);
+        let Some(mask) = self.active.clone() else {
+            return self.mixing.mix(gamma, rows);
+        };
+        let mut out = rows.to_vec();
+        for i in 0..self.m() {
+            if !mask[i] {
+                continue;
+            }
+            let ri = &rows[i];
+            let oi = &mut out[i];
+            for &j in self.graph.neighbors(i) {
+                if !mask[j] {
+                    continue;
+                }
+                let w = (gamma * self.mixing.weight(i, j)) as f32;
+                let rj = &rows[j];
+                for k in 0..ri.len() {
+                    oi[k] += w * (rj[k] - ri[k]);
+                }
+            }
+        }
+        out
     }
 
-    /// See [`Transport::exchange_indices`]: every message is delivered, so
-    /// the sender lists are just the (ascending) neighbour relation; only
-    /// the ledger is touched.  Allocation-free once `delivered` is warm.
+    /// See [`Transport::exchange_indices`]: every message from an active
+    /// sender is delivered, so the sender lists are just the (ascending)
+    /// neighbour relation filtered by the mask; only the ledger is
+    /// touched.  Allocation-free once `delivered` is warm.
     pub fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
         assert_eq!(bytes.len(), self.m());
-        self.ledger.record_round(bytes, &self.degrees, &self.time_model);
+        self.ledger
+            .record_round_active(bytes, &self.degrees, self.mask(), &self.time_model);
         clear_delivered(delivered, self.m());
         for sender in 0..self.m() {
+            if let Some(mask) = self.mask() {
+                if !mask[sender] {
+                    continue;
+                }
+            }
             for &nb in self.graph.neighbors(sender) {
                 delivered[nb].push(sender);
             }
@@ -267,16 +353,23 @@ impl Transport for Network {
         Network::m(self)
     }
 
-    fn mixing(&self) -> &MixingMatrix {
-        &self.mixing
-    }
-
-    fn graph(&self) -> &Graph {
-        &self.graph
+    fn weight(&self, i: usize, j: usize) -> f64 {
+        self.mixing.weight(i, j)
     }
 
     fn ledger(&self) -> &CommLedger {
         &self.ledger
+    }
+
+    fn set_active(&mut self, mask: Option<Arc<Vec<bool>>>) {
+        if let Some(m) = &mask {
+            assert_eq!(m.len(), self.m(), "sampling mask length must equal node count");
+        }
+        self.active = mask;
+    }
+
+    fn active(&self) -> Option<&[bool]> {
+        self.mask()
     }
 
     fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
@@ -392,14 +485,17 @@ mod tests {
             fn m(&self) -> usize {
                 self.0.m()
             }
-            fn mixing(&self) -> &MixingMatrix {
-                &self.0.mixing
-            }
-            fn graph(&self) -> &Graph {
-                &self.0.graph
+            fn weight(&self, i: usize, j: usize) -> f64 {
+                self.0.mixing.weight(i, j)
             }
             fn ledger(&self) -> &CommLedger {
                 &self.0.ledger
+            }
+            fn set_active(&mut self, mask: Option<Arc<Vec<bool>>>) {
+                self.0.set_active(mask)
+            }
+            fn active(&self) -> Option<&[bool]> {
+                Transport::active(&self.0)
             }
             fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
                 self.0.exchange(msgs)
@@ -481,5 +577,94 @@ mod tests {
         n2.mix_paid_into(0.6, &mut block, &mut sc);
         assert_eq!(block.to_vecs(), expect);
         assert_eq!(n2.ledger.total_bytes, reference.ledger.total_bytes);
+    }
+
+    /// Sampling semantics on the synchronous transport: inactive senders
+    /// pay nothing and deliver nothing, inactive receivers pass through
+    /// unchanged, and the masked fast path agrees with the masked trait
+    /// default bit-for-bit.
+    #[test]
+    fn masked_exchange_and_mix_semantics() {
+        let mask = Arc::new(vec![true, false, true, true, false, true]);
+        let rows: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32 + 0.5; 4]).collect();
+
+        // Delivery: only active senders appear in inboxes/delivered.
+        let mut n = net(6);
+        n.set_active(Some(mask.clone()));
+        let inbox = n.exchange_dense(&rows);
+        for (i, msgs) in inbox.iter().enumerate() {
+            for (s, _) in msgs {
+                assert!(mask[*s], "inactive sender {s} delivered to {i}");
+            }
+        }
+        let mut delivered = Vec::new();
+        let mut n2 = net(6);
+        n2.set_active(Some(mask.clone()));
+        n2.exchange_indices(&[dense_wire_bytes(4); 6], &mut delivered);
+        for senders in &delivered {
+            assert!(senders.iter().all(|&s| mask[s]));
+            assert!(senders.windows(2).all(|w| w[0] < w[1]));
+        }
+        // Ledger charges active senders only (4 of 6, degree 2 each).
+        assert_eq!(n2.ledger.messages, 8);
+        assert_eq!(n2.ledger.total_bytes, 4 * 2 * dense_wire_bytes(4) as u64);
+
+        // Masked fast path == masked trait default, inactive rows frozen.
+        struct DefaultOnly(Network);
+        impl Transport for DefaultOnly {
+            fn m(&self) -> usize {
+                self.0.m()
+            }
+            fn weight(&self, i: usize, j: usize) -> f64 {
+                self.0.mixing.weight(i, j)
+            }
+            fn ledger(&self) -> &CommLedger {
+                &self.0.ledger
+            }
+            fn set_active(&mut self, mask: Option<Arc<Vec<bool>>>) {
+                self.0.set_active(mask)
+            }
+            fn active(&self) -> Option<&[bool]> {
+                Transport::active(&self.0)
+            }
+            fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+                self.0.exchange(msgs)
+            }
+            fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+                self.0.exchange_dense(vecs)
+            }
+            fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
+                self.0.exchange_indices(bytes, delivered)
+            }
+        }
+        let mut fast = net(6);
+        fast.set_active(Some(mask.clone()));
+        let a = fast.mix_paid(0.7, &rows);
+        let mut slow = DefaultOnly(net(6));
+        slow.set_active(Some(mask.clone()));
+        let b = slow.mix_paid(0.7, &rows);
+        assert_eq!(a, b);
+        assert_eq!(fast.ledger.total_bytes, slow.0.ledger.total_bytes);
+        for i in 0..6 {
+            if !mask[i] {
+                assert_eq!(a[i], rows[i], "inactive row {i} must not move");
+            } else {
+                assert_ne!(a[i], rows[i], "active row {i} should mix");
+            }
+        }
+        // mix_paid_into honors the mask identically.
+        let mut sc = MixScratch::new();
+        let mut inplace = rows.clone();
+        let mut n3 = net(6);
+        n3.set_active(Some(mask.clone()));
+        n3.mix_paid_into(0.7, inplace.as_mut_slice(), &mut sc);
+        assert_eq!(inplace, a);
+
+        // Clearing the mask restores the unmasked path exactly.
+        let mut cleared = net(6);
+        cleared.set_active(Some(mask));
+        cleared.set_active(None);
+        let mut plain = net(6);
+        assert_eq!(cleared.mix_paid(0.7, &rows), plain.mix_paid(0.7, &rows));
     }
 }

@@ -74,6 +74,45 @@ pub struct StopConfig {
     pub sim_secs: Option<f64>,
 }
 
+/// The `[sampling]` config table: per-round node sampling.  Each outer
+/// round draws a Bernoulli active mask (a pure function of the seed and
+/// round index); inactive nodes freeze — no oracle calls, no transmitted
+/// bytes — while active nodes keep the reference-point invariant alive by
+/// construction.  Only C²DFB / C²DFB(nc) support rates below 1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingConfig {
+    /// Fraction of nodes active per round, in (0, 1].  The default 1.0
+    /// disables sampling entirely (bit-identical to the unsampled path;
+    /// no RNG is consumed).
+    pub rate: f64,
+}
+
+impl Default for SamplingConfig {
+    fn default() -> Self {
+        SamplingConfig { rate: 1.0 }
+    }
+}
+
+/// The `[scale]` config table: large-m machinery.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScaleConfig {
+    /// Answer topology queries from a generator ([`crate::collective::GenNetwork`],
+    /// O(m·degree) memory) instead of materializing the graph and mixing
+    /// matrix (O(m²)).  Requires a generator-capable topology (ring,
+    /// exponential, torus, rreg), the synchronous engine, and no topology
+    /// schedule.  Bit-identical to the materialized path.
+    pub generator: bool,
+    /// Consensus-distance estimator: "auto" (exact below 4096 nodes,
+    /// strided above), "auto:THRESHOLD", "exact", or "strided:K".
+    pub consensus: String,
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        ScaleConfig { generator: false, consensus: "auto".into() }
+    }
+}
+
 /// Full experiment description.  Defaults reproduce the paper's
 /// coefficient-tuning setting (Appendix C.1): η_in = η_out = 1,
 /// mixing step 0.5, λ = 10, K = 15, top-k 20%, m = 10, ring.
@@ -114,6 +153,10 @@ pub struct ExperimentConfig {
     pub stop: StopConfig,
     /// The `[obs]` table: telemetry sinks (JSONL trace, phase profiler).
     pub obs: ObsConfig,
+    /// The `[sampling]` table: per-round node sampling.
+    pub sampling: SamplingConfig,
+    /// The `[scale]` table: generator transport + consensus estimator.
+    pub scale: ScaleConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -141,6 +184,8 @@ impl Default for ExperimentConfig {
             network: NetConfig::default(),
             stop: StopConfig::default(),
             obs: ObsConfig::default(),
+            sampling: SamplingConfig::default(),
+            scale: ScaleConfig::default(),
         }
     }
 }
@@ -270,6 +315,15 @@ impl ExperimentConfig {
             "obs.profile" | "profile" => {
                 self.obs.profile = v.as_bool().ok_or(format!("{k}: expected bool"))?
             }
+            // --- the [sampling] table ------------------------------------
+            "sampling.rate" | "sample_rate" => self.sampling.rate = want_f64()?,
+            // --- the [scale] table ---------------------------------------
+            "scale.generator" | "generator" => {
+                self.scale.generator = v.as_bool().ok_or(format!("{k}: expected bool"))?
+            }
+            "scale.consensus" | "consensus_estimator" => {
+                self.scale.consensus = want_str()?
+            }
             _ => return Err(format!("unknown config key: {k}")),
         }
         Ok(())
@@ -328,6 +382,41 @@ impl ExperimentConfig {
         }
         if self.stop.first_order == Some(0) {
             anyhow::bail!("stop.first_order must be positive");
+        }
+        if !(self.sampling.rate > 0.0 && self.sampling.rate <= 1.0) {
+            anyhow::bail!(
+                "sampling.rate must lie in (0, 1], got {}",
+                self.sampling.rate
+            );
+        }
+        if self.sampling.rate < 1.0
+            && !matches!(self.algorithm, Algorithm::C2dfb | Algorithm::C2dfbNc)
+        {
+            anyhow::bail!(
+                "sampling.rate < 1 is only supported by c2dfb/c2dfb_nc; {} \
+                 has no frozen-node semantics",
+                self.algorithm.name()
+            );
+        }
+        crate::metrics::ConsensusEstimator::parse(&self.scale.consensus)
+            .map_err(anyhow::Error::msg)?;
+        if self.scale.generator {
+            if !crate::topology::GenTopology::supports(self.topology) {
+                anyhow::bail!(
+                    "scale.generator requires a generator-capable topology \
+                     (ring, exp, torus, rreg), got {}",
+                    self.topology.name()
+                );
+            }
+            if self.network.is_event() {
+                anyhow::bail!(
+                    "scale.generator runs on the synchronous engine only \
+                     (set network.mode = \"sync\")"
+                );
+            }
+            if !self.network.topology_schedule.is_empty() {
+                anyhow::bail!("scale.generator does not support a topology schedule");
+            }
         }
         Ok(())
     }
@@ -551,6 +640,62 @@ target_accuracy = 0.7
         assert!(c.obs.profile);
         assert!(c.apply_one("profile", &TomlValue::Int(1)).is_err());
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn sampling_table_roundtrip_and_validation() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.sampling.rate, 1.0);
+        c.apply_one("sampling.rate", &TomlValue::Float(0.25)).unwrap();
+        assert_eq!(c.sampling.rate, 0.25);
+        assert!(c.validate().is_ok());
+        c.apply_one("sample_rate", &TomlValue::Float(0.5)).unwrap();
+        assert_eq!(c.sampling.rate, 0.5);
+
+        // Out-of-range rates are rejected.
+        for bad in [0.0, -0.1, 1.5, f64::NAN] {
+            c.sampling.rate = bad;
+            assert!(c.validate().is_err(), "rate {bad} must be rejected");
+        }
+
+        // The dense baselines have no frozen-node semantics.
+        c.sampling.rate = 0.5;
+        c.algorithm = Algorithm::Madsbo;
+        assert!(c.validate().is_err(), "madsbo + sampling must be rejected");
+        c.sampling.rate = 1.0;
+        assert!(c.validate().is_ok(), "madsbo without sampling is fine");
+    }
+
+    #[test]
+    fn scale_table_roundtrip_and_validation() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.scale.generator);
+        assert_eq!(c.scale.consensus, "auto");
+        c.apply_one("scale.generator", &TomlValue::Bool(true)).unwrap();
+        assert!(c.scale.generator);
+        assert!(c.validate().is_ok(), "generator on the default ring is fine");
+
+        // Generator-incapable topology.
+        c.apply_one("topology", &TomlValue::Str("complete".into())).unwrap();
+        assert!(c.validate().is_err());
+        c.apply_one("topology", &TomlValue::Str("rreg:4".into())).unwrap();
+        assert!(c.validate().is_ok());
+
+        // Event engine and schedules are incompatible with the generator.
+        c.apply_one("network", &TomlValue::Str("sim".into())).unwrap();
+        assert!(c.validate().is_err());
+        c.network = NetConfig::default();
+        c.apply_one("topology_schedule", &TomlValue::Str("5:ring".into()))
+            .unwrap();
+        assert!(c.validate().is_err());
+
+        // Estimator specs parse or are rejected up front.
+        let mut c = ExperimentConfig::default();
+        c.apply_one("consensus_estimator", &TomlValue::Str("strided:8".into()))
+            .unwrap();
+        assert!(c.validate().is_ok());
+        c.scale.consensus = "bogus".into();
+        assert!(c.validate().is_err());
     }
 
     #[test]

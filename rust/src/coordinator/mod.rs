@@ -26,7 +26,7 @@ pub mod experiments;
 pub mod sweep;
 
 use crate::algorithms::{self, NoObserver, RunObserver};
-use crate::collective::{Network, Transport};
+use crate::collective::{GenNetwork, Network, Transport};
 use crate::config::ExperimentConfig;
 use crate::metrics::RunMetrics;
 use crate::obs::Recorder;
@@ -43,6 +43,17 @@ pub fn build_network(cfg: &ExperimentConfig) -> Network {
     let mut net = Network::new(Graph::build(cfg.topology, cfg.nodes));
     net.time_model = cfg.network.time_model();
     net
+}
+
+/// Build the generator-backed synchronous transport
+/// (`scale.generator = true`): O(m·degree) memory instead of the
+/// materialized graph + m×m mixing matrix, bitwise-identical semantics.
+/// Errors cleanly on topologies without a generator form.
+pub fn build_gen_network(cfg: &ExperimentConfig) -> Result<GenNetwork> {
+    let mut net = GenNetwork::build(cfg.topology, cfg.nodes)
+        .map_err(|e| anyhow::anyhow!("building generator network: {e}"))?;
+    net.time_model = cfg.network.time_model();
+    Ok(net)
 }
 
 /// Build the event-driven network for a config (`network.mode = "sim"`).
@@ -171,6 +182,8 @@ fn launch(
 ) -> Result<RunMetrics> {
     if cfg.network.is_event() {
         drive_on(task, shared, build_sim_network(cfg)?, cfg, obs, rec)
+    } else if cfg.scale.generator {
+        drive_on(task, shared, build_gen_network(cfg)?, cfg, obs, rec)
     } else {
         drive_on(task, shared, build_network(cfg), cfg, obs, rec)
     }
@@ -320,6 +333,40 @@ mod tests {
         cfg.network.drop_rate = 0.0;
         cfg.network.mode = NetMode::Sync;
         assert!(build_sim_network(&cfg).is_err());
+    }
+
+    #[test]
+    fn generator_transport_matches_materialized_run_bitwise() {
+        use crate::topology::Topology;
+        let task = QuadraticTask::generate(8, 6, 0.5, 83);
+        for topology in [
+            Topology::Ring,
+            Topology::Exponential,
+            Topology::Torus,
+            Topology::RandomRegular { k: 4, seed: 42 },
+        ] {
+            let mut cfg = ExperimentConfig {
+                nodes: 8,
+                topology,
+                rounds: 5,
+                inner_steps: 4,
+                eta_out: 0.1,
+                eta_in: 0.2,
+                eval_every: 1,
+                ..ExperimentConfig::default()
+            };
+            let base = Runner::new(&cfg).task(&task).run().unwrap();
+            cfg.scale.generator = true;
+            let gen = Runner::new(&cfg).task(&task).run().unwrap();
+            let a: Vec<u64> = base.trace.iter().map(|p| p.loss.to_bits()).collect();
+            let b: Vec<u64> = gen.trace.iter().map(|p| p.loss.to_bits()).collect();
+            assert_eq!(a, b, "{topology:?}: generator trace diverged");
+            assert_eq!(base.ledger.total_bytes, gen.ledger.total_bytes);
+            assert_eq!(
+                base.ledger.network_time_s.to_bits(),
+                gen.ledger.network_time_s.to_bits()
+            );
+        }
     }
 
     #[test]

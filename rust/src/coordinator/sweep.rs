@@ -697,6 +697,13 @@ pub fn expand(spec: &SweepSpec) -> Result<Grid> {
                                 cfg.out_dir = spec.base.out_dir.clone();
                                 cfg.network = spec.base.network.clone();
                                 cfg.stop = spec.base.stop.clone();
+                                // Scale machinery rides along even when the
+                                // optimizer knobs come from the calibration
+                                // table: generator transport, consensus
+                                // estimator, and per-round sampling are
+                                // base-config properties of the whole grid.
+                                cfg.sampling = spec.base.sampling.clone();
+                                cfg.scale = spec.base.scale.clone();
                                 cfg.target_accuracy = spec.base.target_accuracy;
                                 cfg.topology = topology;
                                 cfg.partition = part;

@@ -10,6 +10,7 @@
 //! c2dfb fig2 | fig3 | fig4 | fig5 | fig6 | ablation [--rounds N] [--tiny]
 //! c2dfb all [--rounds N]          # every table+figure harness
 //! c2dfb netsweep [--rounds N] [--tiny]   # network-regime sweep (no artifacts)
+//! c2dfb scale [--nodes M] [--rate P] ...  # sparse million-node engine
 //! c2dfb budget [--budget_mb MB] [--tiny]  # equal-comm-budget comparison
 //! c2dfb goldens [--bless] [--dir D] [--jobs N]  # golden-trace fixtures
 //! c2dfb trace out.jsonl            # summarize a recorded JSONL trace
@@ -32,7 +33,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|goldens|trace|all|artifacts|serve|client> [options]
+const USAGE: &str = "usage: c2dfb <run|sweep|scale|table1|fig2|fig3|fig4|fig5|fig6|ablation|netsweep|budget|goldens|trace|all|artifacts|serve|client> [options]
   telemetry (run, sweep, and every harness; see docs/OBS.md):
             --trace FILE.jsonl (deterministic JSONL span trace, sim-time /
             counter stamped, byte-identical at any --jobs width)
@@ -47,6 +48,8 @@ const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|abl
                stop keys (budgeted stopping, first to fire wins):
                 --stop_comm_mb MB  --stop_first_order N  --stop_wall_secs S
                 --stop_sim_secs S  --stop_target_accuracy A  --stop_rounds N
+               scale keys (docs/SCALE.md): --generator true|false
+                --sample_rate P  --consensus_estimator exact|strided:K|auto
   sweep options (declarative scenario grid, executed concurrently; see
             docs/SWEEP.md): --config <file.toml> with a [sweep] table, or
             axis lists --algos --tasks --topologies --compressors
@@ -58,6 +61,12 @@ const USAGE: &str = "usage: c2dfb <run|sweep|table1|fig2|fig3|fig4|fig5|fig6|abl
   harness options: --rounds N  --target 0.7  --tiny  --out DIR  --seed S
                    --jobs N (cell parallelism for artifact-free grids)
                    --verbose (stream one progress line per eval point)
+  scale:    sparse gossip-descent at up to millions of nodes (docs/SCALE.md):
+            generator topologies, lazy node state, calendar-queue delivery.
+            --nodes M (default 100000)  --topology ring|exp|torus|rreg:k
+            --rounds N  --rate P (per-round node sampling, (0,1])
+            --dim D  --seed S  --eta X  --gamma X
+            --consensus auto|auto:N|exact|strided:K  --out report.json
   netsweep: C²DFB vs baselines across network regimes (no artifacts needed)
   budget:   all four algorithms to one communication budget (--budget_mb MB,
             --task quadratic|logreg|hyperrep, no artifacts needed); prints
@@ -111,6 +120,7 @@ fn real_main() -> Result<()> {
         }
         "run" => cmd_run(args),
         "sweep" => cmd_sweep(args),
+        "scale" => cmd_scale(args),
         "netsweep" => cmd_netsweep(args),
         "budget" => cmd_budget(args),
         "goldens" => cmd_goldens(args),
@@ -138,11 +148,19 @@ fn cmd_run(mut args: Args) -> Result<()> {
         "target_accuracy", "data_noise", "out_dir", "network", "latency", "jitter",
         "bandwidth", "drop_rate", "straggler", "topology_schedule", "threads",
         "stop_comm_mb", "stop_first_order", "stop_wall_secs", "stop_sim_secs",
-        "stop_target_accuracy", "stop_rounds", "trace",
+        "stop_target_accuracy", "stop_rounds", "trace", "sample_rate", "generator",
+        "consensus_estimator",
     ] {
         if let Some(v) = args.get(key) {
             // Ints/floats/strings: try int, then float, then string.
-            let tv = if let Ok(i) = v.parse::<i64>() {
+            // `generator` alone takes a bool; parsing true/false for every
+            // key would break string values that happen to spell a bool.
+            let tv = if key == "generator" {
+                match v.parse::<bool>() {
+                    Ok(b) => TomlValue::Bool(b),
+                    Err(_) => TomlValue::Str(v),
+                }
+            } else if let Ok(i) = v.parse::<i64>() {
                 TomlValue::Int(i)
             } else if let Ok(f) = v.parse::<f64>() {
                 TomlValue::Float(f)
@@ -475,6 +493,41 @@ fn cmd_client(mut args: Args) -> Result<()> {
         }
         other => Err(anyhow!("unknown client action {other:?}\n{USAGE}")),
     }
+}
+
+/// `c2dfb scale`: the sparse million-node engine (`sim::scale`,
+/// docs/SCALE.md).  No artifacts, no dense state — prints active
+/// nodes/sec plus before/after consensus and loss estimates.
+fn cmd_scale(mut args: Args) -> Result<()> {
+    use c2dfb::metrics::ConsensusEstimator;
+    use c2dfb::sim::{ScaleOpts, ScaleSim};
+    let seed: u64 = args.get_parse("seed", 42u64);
+    let topo_spec = args.get_or("topology", "ring");
+    let opts = ScaleOpts {
+        nodes: args.get_parse("nodes", 100_000usize),
+        topology: c2dfb::topology::Topology::parse(&topo_spec, seed)
+            .map_err(anyhow::Error::msg)?,
+        rounds: args.get_parse("rounds", 10usize),
+        rate: args.get_parse("rate", 1.0f64),
+        dim: args.get_parse("dim", 8usize),
+        seed,
+        eta: args.get_parse("eta", 0.1f64),
+        gamma: args.get_parse("gamma", 0.5f64),
+        estimator: ConsensusEstimator::parse(&args.get_or("consensus", "auto"))
+            .map_err(anyhow::Error::msg)?,
+    };
+    let out = args.get("out");
+    let con = c2dfb::obs::Console::new(args.flag("quiet"), args.flag("verbose"));
+    args.finish().map_err(anyhow::Error::msg)?;
+    let mut sim = ScaleSim::new(opts).map_err(anyhow::Error::msg)?;
+    let report = sim.run();
+    println!("{}", report.render());
+    if let Some(path) = out {
+        std::fs::write(&path, report.to_json().to_string())
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        con.info(format_args!("wrote scale report to {path}"));
+    }
+    Ok(())
 }
 
 fn cmd_netsweep(mut args: Args) -> Result<()> {

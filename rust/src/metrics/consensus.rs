@@ -1,0 +1,314 @@
+//! Consensus-distance evaluation at scale.
+//!
+//! [`crate::linalg::consensus_err_sq`] is the exact Σ_i ‖x_i − x̄‖² — an
+//! O(m·d) pass the driver runs at every eval point.  At millions of nodes
+//! that pass costs more than the round it measures, so
+//! [`ConsensusEstimator`] subsamples above a node-count threshold: every
+//! `stride`-th row is measured against the subset's own mean and the
+//! subset sum is scaled by m / |subset|.  The strided rows are spread
+//! evenly across node ids, so block-structured disagreement (e.g. a torus
+//! quadrant lagging) is still seen.
+//!
+//! Contract pinned by tests here and in `tests/proptests.rs`:
+//! * `exact` and `strided:1` call the SAME function — bitwise-equal
+//!   results, not merely close ones.
+//! * `auto` is exact at or below its threshold, so every config that
+//!   existed before this knob (m ≤ 4096) keeps byte-stable traces.
+//! * As the stride shrinks toward 1 the estimate converges to exact.
+
+use crate::linalg;
+
+/// Node count at or below which `auto` stays exact.  Every golden config
+/// sits far under this, so the default estimator never perturbs them.
+pub const AUTO_EXACT_THRESHOLD: usize = 4096;
+
+/// How to evaluate the consensus distance Σ_i ‖x_i − x̄‖².
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConsensusEstimator {
+    /// Exact at or below `threshold` nodes; above it, strided with the
+    /// stride chosen to sample ≈ `threshold` rows.
+    Auto { threshold: usize },
+    /// Always the full evaluation.
+    Exact,
+    /// Sample rows 0, stride, 2·stride, …; scale the subset sum by
+    /// m / |subset|.  `strided:1` is the exact path (bitwise).
+    Strided { stride: usize },
+}
+
+impl Default for ConsensusEstimator {
+    fn default() -> Self {
+        ConsensusEstimator::Auto { threshold: AUTO_EXACT_THRESHOLD }
+    }
+}
+
+impl ConsensusEstimator {
+    /// Parse "auto", "auto:THRESHOLD", "exact", or "strided:K".
+    pub fn parse(s: &str) -> Result<ConsensusEstimator, String> {
+        if s == "auto" {
+            return Ok(ConsensusEstimator::default());
+        }
+        if s == "exact" {
+            return Ok(ConsensusEstimator::Exact);
+        }
+        if let Some(t) = s.strip_prefix("auto:") {
+            let threshold: usize = t
+                .parse()
+                .map_err(|_| format!("bad auto threshold: {s}"))?;
+            if threshold == 0 {
+                return Err("auto threshold must be >= 1".into());
+            }
+            return Ok(ConsensusEstimator::Auto { threshold });
+        }
+        if let Some(t) = s.strip_prefix("strided:") {
+            let stride: usize = t.parse().map_err(|_| format!("bad stride: {s}"))?;
+            if stride == 0 {
+                return Err("stride must be >= 1".into());
+            }
+            return Ok(ConsensusEstimator::Strided { stride });
+        }
+        Err(format!(
+            "unknown consensus estimator: {s} (want auto, auto:N, exact, strided:K)"
+        ))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ConsensusEstimator::Auto { threshold } if *threshold == AUTO_EXACT_THRESHOLD => {
+                "auto".into()
+            }
+            ConsensusEstimator::Auto { threshold } => format!("auto:{threshold}"),
+            ConsensusEstimator::Exact => "exact".into(),
+            ConsensusEstimator::Strided { stride } => format!("strided:{stride}"),
+        }
+    }
+
+    /// Evaluate (or estimate) Σ_i ‖x_i − x̄‖² over the stacked rows.
+    pub fn estimate(&self, rows: &[Vec<f32>]) -> f64 {
+        let m = rows.len();
+        match *self {
+            ConsensusEstimator::Exact => linalg::consensus_err_sq(rows),
+            ConsensusEstimator::Auto { threshold } => {
+                if m <= threshold {
+                    linalg::consensus_err_sq(rows)
+                } else {
+                    strided_err_sq(rows, m.div_ceil(threshold))
+                }
+            }
+            ConsensusEstimator::Strided { stride } => strided_err_sq(rows, stride),
+        }
+    }
+
+    /// The row stride this estimator uses at `m` nodes (1 = exact).
+    pub fn stride_for(&self, m: usize) -> usize {
+        match *self {
+            ConsensusEstimator::Exact => 1,
+            ConsensusEstimator::Auto { threshold } => {
+                if m <= threshold {
+                    1
+                } else {
+                    m.div_ceil(threshold)
+                }
+            }
+            ConsensusEstimator::Strided { stride } => stride,
+        }
+    }
+
+    /// [`estimate`](Self::estimate) from lazily-derived rows: `fill(i,
+    /// row)` writes node i's d-dimensional row.  Only the sampled subset
+    /// is materialized — O((m / stride)·d) memory — which is what lets
+    /// the sparse scale engine ([`crate::sim::scale`]) report consensus
+    /// at m = 10⁶ without holding m rows.  For every variant the result
+    /// is bitwise identical to `estimate` on fully materialized rows:
+    /// stride 1 materializes everything and calls the same exact
+    /// function; stride > 1 picks the same subset and runs the same f64
+    /// reduction.
+    pub fn estimate_sampled(
+        &self,
+        m: usize,
+        d: usize,
+        mut fill: impl FnMut(usize, &mut [f32]),
+    ) -> f64 {
+        let stride = self.stride_for(m);
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(m.div_ceil(stride));
+        for i in (0..m).step_by(stride) {
+            let mut r = vec![0.0f32; d];
+            fill(i, &mut r);
+            rows.push(r);
+        }
+        if stride == 1 {
+            linalg::consensus_err_sq(&rows)
+        } else {
+            subset_scaled_err_sq(&rows, m)
+        }
+    }
+}
+
+/// Strided estimate: subset = rows {0, stride, 2·stride, …}, measured
+/// against the subset mean, scaled by m / |subset|.  `stride == 1` is
+/// exactly `linalg::consensus_err_sq` — same call, same bits.
+fn strided_err_sq(rows: &[Vec<f32>], stride: usize) -> f64 {
+    assert!(stride >= 1, "stride must be >= 1");
+    if stride == 1 {
+        return linalg::consensus_err_sq(rows);
+    }
+    let picked: Vec<&Vec<f32>> = rows.iter().step_by(stride).collect();
+    subset_scaled_err_sq(&picked, rows.len())
+}
+
+/// The shared strided reduction: subset rows against the subset's own
+/// f64 mean, subset sum scaled by m / |subset|.  One implementation so
+/// the materialized ([`strided_err_sq`]) and lazy
+/// ([`ConsensusEstimator::estimate_sampled`]) paths agree bitwise.
+fn subset_scaled_err_sq<R: AsRef<[f32]>>(picked: &[R], m: usize) -> f64 {
+    let n = picked.len();
+    let d = picked[0].as_ref().len();
+    let mut mean = vec![0.0f64; d];
+    for r in picked {
+        for (s, x) in mean.iter_mut().zip(r.as_ref()) {
+            *s += *x as f64;
+        }
+    }
+    for s in &mut mean {
+        *s /= n as f64;
+    }
+    let sum: f64 = picked
+        .iter()
+        .map(|r| {
+            r.as_ref()
+                .iter()
+                .zip(&mean)
+                .map(|(a, b)| (*a as f64 - b).powi(2))
+                .sum::<f64>()
+        })
+        .sum();
+    sum * (m as f64 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_rows(m: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for s in ["auto", "exact", "strided:7", "auto:128"] {
+            let e = ConsensusEstimator::parse(s).unwrap();
+            assert_eq!(e.name(), s);
+        }
+        assert_eq!(
+            ConsensusEstimator::parse("auto").unwrap(),
+            ConsensusEstimator::Auto { threshold: AUTO_EXACT_THRESHOLD }
+        );
+        for bad in ["strided:0", "auto:0", "strided:x", "bogus"] {
+            assert!(ConsensusEstimator::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    /// stride 1 and exact are the SAME code path — bitwise equal.
+    #[test]
+    fn stride_one_is_bitwise_exact() {
+        let rows = rand_rows(37, 9, 3);
+        let exact = ConsensusEstimator::Exact.estimate(&rows);
+        let s1 = ConsensusEstimator::Strided { stride: 1 }.estimate(&rows);
+        assert_eq!(exact.to_bits(), s1.to_bits());
+    }
+
+    /// Auto below the threshold is the exact path, bitwise.
+    #[test]
+    fn auto_is_exact_below_threshold() {
+        let rows = rand_rows(64, 5, 4);
+        let exact = ConsensusEstimator::Exact.estimate(&rows);
+        let auto = ConsensusEstimator::default().estimate(&rows);
+        assert_eq!(exact.to_bits(), auto.to_bits());
+    }
+
+    /// Shrinking the stride converges monotonically-in-error toward exact
+    /// on smooth disagreement fields.
+    #[test]
+    fn strided_converges_to_exact() {
+        let m = 1200;
+        let rows: Vec<Vec<f32>> = (0..m)
+            .map(|i| {
+                let t = i as f32 / m as f32;
+                vec![t.sin(), (2.0 * t).cos(), t]
+            })
+            .collect();
+        let exact = ConsensusEstimator::Exact.estimate(&rows);
+        assert!(exact > 0.0);
+        for (stride, bound) in [(64usize, 0.25), (16, 0.10), (4, 0.03)] {
+            let est = ConsensusEstimator::Strided { stride }.estimate(&rows);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < bound, "stride {stride}: rel err {rel} >= {bound}");
+        }
+        let s1 = ConsensusEstimator::Strided { stride: 1 }.estimate(&rows);
+        assert_eq!(s1.to_bits(), exact.to_bits(), "stride 1 must recover exact");
+    }
+
+    /// Perfect consensus is reported as exactly zero at any stride.
+    #[test]
+    fn zero_on_consensus_rows() {
+        let rows = vec![vec![1.5f32, -0.5]; 500];
+        for e in [
+            ConsensusEstimator::Exact,
+            ConsensusEstimator::Strided { stride: 17 },
+            ConsensusEstimator::Auto { threshold: 10 },
+        ] {
+            assert_eq!(e.estimate(&rows), 0.0);
+        }
+    }
+
+    /// The lazy entry point materializes only the sampled subset yet
+    /// returns the exact bits of the materialized evaluation, for every
+    /// variant on both sides of the auto threshold.
+    #[test]
+    fn estimate_sampled_is_bitwise_identical_to_estimate() {
+        for (m, d) in [(50usize, 3usize), (700, 4)] {
+            let rows = rand_rows(m, d, 11);
+            for est in [
+                ConsensusEstimator::Exact,
+                ConsensusEstimator::Auto { threshold: 100 },
+                ConsensusEstimator::Strided { stride: 1 },
+                ConsensusEstimator::Strided { stride: 13 },
+            ] {
+                let dense = est.estimate(&rows);
+                let lazy =
+                    est.estimate_sampled(m, d, |i, out| out.copy_from_slice(&rows[i]));
+                assert_eq!(
+                    dense.to_bits(),
+                    lazy.to_bits(),
+                    "{} at m={m}: dense {dense} vs lazy {lazy}",
+                    est.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stride_for_matches_variant_semantics() {
+        let auto = ConsensusEstimator::Auto { threshold: 100 };
+        assert_eq!(auto.stride_for(100), 1);
+        assert_eq!(auto.stride_for(101), 2);
+        assert_eq!(auto.stride_for(1_000_000), 10_000);
+        assert_eq!(ConsensusEstimator::Exact.stride_for(1_000_000), 1);
+        assert_eq!(ConsensusEstimator::Strided { stride: 7 }.stride_for(10), 7);
+    }
+
+    /// Above its threshold, auto switches to a stride targeting ~threshold
+    /// sampled rows and stays within a reasonable band of exact on
+    /// homogeneous random data.
+    #[test]
+    fn auto_estimates_above_threshold() {
+        let rows = rand_rows(2000, 4, 9);
+        let exact = ConsensusEstimator::Exact.estimate(&rows);
+        let est = ConsensusEstimator::Auto { threshold: 250 }.estimate(&rows);
+        let rel = (est - exact).abs() / exact;
+        assert!(rel < 0.2, "auto estimate off by {rel}");
+    }
+}

@@ -12,6 +12,10 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
+pub mod consensus;
+
+pub use consensus::{ConsensusEstimator, AUTO_EXACT_THRESHOLD};
+
 /// Simple network cost model used to convert bytes into simulated seconds.
 /// Defaults approximate the paper's LAN testbed: 1 ms latency, 1 Gbit/s.
 #[derive(Clone, Copy, Debug)]
@@ -62,8 +66,28 @@ impl CommLedger {
         fanout: &[usize],
         tm: &TimeModel,
     ) {
+        self.record_round_active(per_node_bytes, fanout, None, tm);
+    }
+
+    /// [`record_round`](CommLedger::record_round) under a per-round node
+    /// sampling mask: inactive senders transmit nothing and pay nothing
+    /// (no bytes, no messages, and they don't bound the round time).
+    /// `active: None` is the unmasked path, bit-identical to
+    /// `record_round`.
+    pub fn record_round_active(
+        &mut self,
+        per_node_bytes: &[usize],
+        fanout: &[usize],
+        active: Option<&[bool]>,
+        tm: &TimeModel,
+    ) {
         let mut max_node = 0usize;
-        for (b, f) in per_node_bytes.iter().zip(fanout) {
+        for (i, (b, f)) in per_node_bytes.iter().zip(fanout).enumerate() {
+            if let Some(mask) = active {
+                if !mask[i] {
+                    continue;
+                }
+            }
             let node_total = b * f;
             self.total_bytes += node_total as u64;
             self.messages += *f as u64;
@@ -472,6 +496,28 @@ mod tests {
         assert_eq!(l.messages, 5);
         assert_eq!(l.gossip_rounds, 1);
         assert!(l.network_time_s > tm.latency_s);
+    }
+
+    #[test]
+    fn masked_ledger_charges_active_senders_only() {
+        let tm = TimeModel::default();
+        let mut all = CommLedger::default();
+        all.record_round_active(&[100, 200, 300], &[2, 3, 1], None, &tm);
+        let mut full = CommLedger::default();
+        full.record_round(&[100, 200, 300], &[2, 3, 1], &tm);
+        // None mask is bit-identical to the unmasked call.
+        assert_eq!(all.total_bytes, full.total_bytes);
+        assert_eq!(all.messages, full.messages);
+        assert_eq!(all.network_time_s.to_bits(), full.network_time_s.to_bits());
+
+        let mut masked = CommLedger::default();
+        masked.record_round_active(&[100, 200, 300], &[2, 3, 1], Some(&[true, false, true]), &tm);
+        assert_eq!(masked.total_bytes, 100 * 2 + 300);
+        assert_eq!(masked.messages, 3);
+        assert_eq!(masked.gossip_rounds, 1);
+        // Node 1 (the busiest) was inactive, so it doesn't bound the
+        // round time.
+        assert!(masked.network_time_s < full.network_time_s);
     }
 
     #[test]

@@ -74,6 +74,34 @@ pub enum GradFn<'f> {
 }
 
 impl GradFn<'_> {
+    /// Evaluate the oracle only at mask-active nodes (rows of inactive
+    /// nodes are left untouched — callers must not read them).  The masked
+    /// path is always serial: a sampled round evaluates few nodes, so pool
+    /// fan-out overhead would dominate, and skipping pool sends keeps the
+    /// active nodes' evaluation order identical to `Serial`.
+    fn eval_active(&mut self, d: &[Vec<f32>], out: &mut NodeBlock, mask: Option<&[bool]>) {
+        let Some(mask) = mask else {
+            return self.eval_all(d, out);
+        };
+        debug_assert_eq!(d.len(), out.nrows());
+        match self {
+            GradFn::Serial(f) => {
+                for (i, di) in d.iter().enumerate() {
+                    if mask[i] {
+                        f(i, di, out.row_mut(i));
+                    }
+                }
+            }
+            GradFn::Parallel(f, _) => {
+                for (i, di) in d.iter().enumerate() {
+                    if mask[i] {
+                        f(i, di, out.row_mut(i));
+                    }
+                }
+            }
+        }
+    }
+
     /// Evaluate the oracle at every node's current iterate, into `out`.
     fn eval_all(&mut self, d: &[Vec<f32>], out: &mut NodeBlock) {
         debug_assert_eq!(d.len(), out.nrows());
@@ -141,6 +169,10 @@ pub struct InnerState {
     /// Empty until the first `run_inner_naive_with` call sizes it, so the
     /// reference-point path never pays for it.
     own: NodeBlock,
+    /// Sampling-mask snapshot buffer (copied from the transport at the top
+    /// of each inner call so the mask cannot shift mid-call; reused, so
+    /// the masked path stays allocation-free in steady state too).
+    mask_buf: Vec<bool>,
 }
 
 impl InnerState {
@@ -148,7 +180,7 @@ impl InnerState {
         let m = net.m();
         let mk_refs = || {
             (0..m)
-                .map(|i| RefPoint::new(dim, 1.0 - net.mixing().weight(i, i)))
+                .map(|i| RefPoint::new(dim, 1.0 - net.weight(i, i)))
                 .collect::<Vec<_>>()
         };
         InnerState {
@@ -168,6 +200,7 @@ impl InnerState {
             resid: Vec::with_capacity(dim),
             g_new: NodeBlock::zeros(m, dim),
             own: NodeBlock::default(),
+            mask_buf: Vec::new(),
         }
     }
 
@@ -192,7 +225,7 @@ impl InnerState {
     fn resync<T: Transport>(&mut self, net: &T) {
         self.epoch = net.graph_epoch();
         for i in 0..self.d_ref.len() {
-            let sw = 1.0 - net.mixing().weight(i, i);
+            let sw = 1.0 - net.weight(i, i);
             self.d_ref[i].reset(sw);
             self.s_ref[i].reset(sw);
         }
@@ -228,6 +261,22 @@ fn exchange_same_epoch<T: Transport>(
     net.graph_epoch() == epoch_before
 }
 
+/// Defense against misbehaving transports: the [`Transport`] contract says
+/// every delivered-sender list is strictly ascending (each neighbour's
+/// message at most once).  A duplicate would fold the same residual into a
+/// reference-point accumulator twice — silent, unbounded divergence that no
+/// downstream check catches — so refuse loudly instead.
+fn check_delivered_contract(receiver: usize, delivered: &[usize]) {
+    for w in delivered.windows(2) {
+        assert!(
+            w[0] < w[1],
+            "transport contract violated: node {receiver} was handed senders \
+             {delivered:?} (duplicated or out-of-order delivery); folding \
+             would silently corrupt the reference points"
+        );
+    }
+}
+
 /// Run K steps of Algorithm 2 over all nodes with a plain serial oracle
 /// returning freshly allocated gradients (convenience wrapper; the
 /// returned vectors are copied into the reusable batch).
@@ -261,6 +310,28 @@ pub fn run_inner_with<T: Transport>(
 ) -> u64 {
     let m = net.m();
     debug_assert_eq!(d.len(), m);
+    // Snapshot the sampling mask for the whole call (the buffer is reused,
+    // so this stays allocation-free in steady state).  Semantics: inactive
+    // nodes pay no oracle calls and transmit nothing, but they still FOLD
+    // delivered neighbour residuals into their reference points — that
+    // passive fold is what keeps `(d̂)_w = Σ w_ij d̂_j` true at every node
+    // while only a subset participates.  Bootstrap intentionally ignores
+    // the mask: `s_i⁰ = ∇r_i(d_i⁰)` must hold at every node once.
+    let mut mask_store = std::mem::take(&mut state.mask_buf);
+    mask_store.clear();
+    let masked = match net.active() {
+        Some(a) => {
+            debug_assert_eq!(a.len(), m);
+            mask_store.extend_from_slice(a);
+            true
+        }
+        None => false,
+    };
+    let active_nodes = if masked {
+        mask_store.iter().filter(|&&a| a).count() as u64
+    } else {
+        m as u64
+    };
     let mut calls = state.bootstrap(d, &mut grad);
 
     let eta = cfg.eta as f32;
@@ -273,8 +344,12 @@ pub fn run_inner_with<T: Transport>(
         state.sync_topology(net);
 
         // -- 1. model update: d ← d + γ((d̂)_w − sw·d̂) − η s  --------------
+        //       (sampled-out nodes freeze: no mix, no descent)
         let t = state.obs.clock();
         for (i, di) in d.iter_mut().enumerate() {
+            if masked && !mask_store[i] {
+                continue;
+            }
             state.d_ref[i].add_mix_term(gamma, di);
             for (dk, sk) in di.iter_mut().zip(state.s.row(i)) {
                 *dk -= eta * sk;
@@ -283,24 +358,44 @@ pub fn run_inner_with<T: Transport>(
         state.obs.phase(Phase::Mix, 0, t);
         // -- 2. transmit Q(d_new − d̂); update d̂, then fold each DELIVERED
         //       same-epoch neighbour message into (d̂)_w  -------------------
+        //       Inactive nodes send nothing (their d̂ stays put, so their
+        //       stale `msgs` slot is never read: transports only deliver
+        //       active senders), but they DO fold incoming messages below.
         let t = state.obs.clock();
         for (i, di) in d.iter().enumerate() {
+            if masked && !mask_store[i] {
+                continue;
+            }
             state.d_ref[i].residual_into(di, &mut state.resid);
             compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
         }
         for i in 0..m {
+            if masked && !mask_store[i] {
+                continue;
+            }
             state.d_ref[i].apply_own(&state.msgs[i]);
         }
         state.bytes.clear();
-        state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        if masked {
+            state.bytes.extend(
+                state
+                    .msgs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, q)| if mask_store[i] { q.wire_bytes() } else { 0 }),
+            );
+        } else {
+            state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        }
         state.obs.phase(Phase::Compress, 0, t);
         state.obs.encoded(&state.msgs);
         let snap = LedgerSnap::of(net.ledger());
         let t = state.obs.clock();
         if exchange_same_epoch(net, &state.bytes, &mut state.delivered) {
             for i in 0..m {
+                check_delivered_contract(i, &state.delivered[i]);
                 for &j in &state.delivered[i] {
-                    let wij = net.mixing().weight(i, j);
+                    let wij = net.weight(i, j);
                     state.d_ref[i].apply_neighbor(wij, &state.msgs[j]);
                 }
             }
@@ -320,17 +415,25 @@ pub fn run_inner_with<T: Transport>(
             .exchange(Phase::Exchange, snap, net.ledger(), &state.bytes, net.last_events(), t);
 
         // -- 3. tracker update: s ← s + γ((ŝ)_w − sw·ŝ) + ∇r^{new} − ∇r^{old}
+        //       (active nodes only; an inactive node's s and ∇r stay put,
+        //       exactly like a node that slept through the round)
         let t = state.obs.clock();
         for i in 0..m {
+            if masked && !mask_store[i] {
+                continue;
+            }
             state.s_ref[i].add_mix_term(gamma, state.s.row_mut(i));
         }
         state.obs.phase(Phase::Tracker, 0, t);
         let t = state.obs.clock();
-        grad.eval_all(d, &mut state.g_new);
-        calls += m as u64;
-        state.obs.phase(Phase::Grad, m as u64, t);
+        grad.eval_active(d, &mut state.g_new, masked.then_some(mask_store.as_slice()));
+        calls += active_nodes;
+        state.obs.phase(Phase::Grad, active_nodes, t);
         let t = state.obs.clock();
         for i in 0..m {
+            if masked && !mask_store[i] {
+                continue;
+            }
             for ((sk, gn), go) in state
                 .s
                 .row_mut(i)
@@ -341,28 +444,55 @@ pub fn run_inner_with<T: Transport>(
                 *sk += gn - go;
             }
         }
-        std::mem::swap(&mut state.prev_grad, &mut state.g_new);
+        if masked {
+            // Only active rows of `g_new` are fresh; a wholesale swap would
+            // ping-pong stale gradients into inactive nodes' `prev_grad`.
+            for i in 0..m {
+                if mask_store[i] {
+                    state.prev_grad.row_mut(i).copy_from_slice(state.g_new.row(i));
+                }
+            }
+        } else {
+            std::mem::swap(&mut state.prev_grad, &mut state.g_new);
+        }
         state.obs.phase(Phase::Tracker, 0, t);
 
         // -- 4. transmit Q(s_new − ŝ); update ŝ and delivered (ŝ)_w  -------
         let t = state.obs.clock();
         for i in 0..m {
+            if masked && !mask_store[i] {
+                continue;
+            }
             state.s_ref[i].residual_into(state.s.row(i), &mut state.resid);
             compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
         }
         for i in 0..m {
+            if masked && !mask_store[i] {
+                continue;
+            }
             state.s_ref[i].apply_own(&state.msgs[i]);
         }
         state.bytes.clear();
-        state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        if masked {
+            state.bytes.extend(
+                state
+                    .msgs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, q)| if mask_store[i] { q.wire_bytes() } else { 0 }),
+            );
+        } else {
+            state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        }
         state.obs.phase(Phase::Compress, 0, t);
         state.obs.encoded(&state.msgs);
         let snap = LedgerSnap::of(net.ledger());
         let t = state.obs.clock();
         if exchange_same_epoch(net, &state.bytes, &mut state.delivered) {
             for i in 0..m {
+                check_delivered_contract(i, &state.delivered[i]);
                 for &j in &state.delivered[i] {
-                    let wij = net.mixing().weight(i, j);
+                    let wij = net.weight(i, j);
                     state.s_ref[i].apply_neighbor(wij, &state.msgs[j]);
                 }
             }
@@ -379,6 +509,7 @@ pub fn run_inner_with<T: Transport>(
             .exchange(Phase::Exchange, snap, net.ledger(), &state.bytes, net.last_events(), t);
         state.steps += 1;
     }
+    state.mask_buf = mask_store;
     calls
 }
 
@@ -413,6 +544,26 @@ pub fn run_inner_naive_with<T: Transport>(
     mut grad: GradFn,
 ) -> u64 {
     let m = net.m();
+    // Mask semantics for the naive variant are simpler than the refpoint
+    // protocol's: there are no shared accumulators to keep consistent, so
+    // an inactive node just sits the step out entirely — no send, no fold,
+    // no descent, no oracle.  (Active receivers still mix the delivered
+    // active senders' messages.)
+    let mut mask_store = std::mem::take(&mut state.mask_buf);
+    mask_store.clear();
+    let masked = match net.active() {
+        Some(a) => {
+            debug_assert_eq!(a.len(), m);
+            mask_store.extend_from_slice(a);
+            true
+        }
+        None => false,
+    };
+    let active_nodes = if masked {
+        mask_store.iter().filter(|&&a| a).count() as u64
+    } else {
+        m as u64
+    };
     let mut calls = state.bootstrap(d, &mut grad);
     let eta = cfg.eta as f32;
     let gamma = cfg.gamma as f32;
@@ -424,6 +575,9 @@ pub fn run_inner_naive_with<T: Transport>(
         // Compress d with error feedback: carry = d + e, e ← carry − Q(carry).
         let t = state.obs.clock();
         for (i, di) in d.iter().enumerate() {
+            if masked && !mask_store[i] {
+                continue;
+            }
             state.resid.clear();
             state
                 .resid
@@ -441,7 +595,17 @@ pub fn run_inner_naive_with<T: Transport>(
             }
         }
         state.bytes.clear();
-        state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        if masked {
+            state.bytes.extend(
+                state
+                    .msgs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, q)| if mask_store[i] { q.wire_bytes() } else { 0 }),
+            );
+        } else {
+            state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        }
         state.obs.phase(Phase::Compress, 0, t);
         state.obs.encoded(&state.msgs);
         // d_i ← d_i + γ Σ w_ij (Q_j − Q_i) − η s_i over DELIVERED messages
@@ -462,9 +626,13 @@ pub fn run_inner_naive_with<T: Transport>(
         }
         let t = state.obs.clock();
         for (i, di) in d.iter_mut().enumerate() {
+            if masked && !mask_store[i] {
+                continue;
+            }
             if fold {
+                check_delivered_contract(i, &state.delivered[i]);
                 for &sender in &state.delivered[i] {
-                    let w = (gamma as f64 * net.mixing().weight(i, sender)) as f32;
+                    let w = (gamma as f64 * net.weight(i, sender)) as f32;
                     let qd = state.own.row(sender);
                     let qi = state.own.row(i);
                     for (k, dk) in di.iter_mut().enumerate() {
@@ -480,6 +648,9 @@ pub fn run_inner_naive_with<T: Transport>(
         // Tracker: same naive scheme on s.
         let t = state.obs.clock();
         for i in 0..m {
+            if masked && !mask_store[i] {
+                continue;
+            }
             state.resid.clear();
             state
                 .resid
@@ -497,7 +668,17 @@ pub fn run_inner_naive_with<T: Transport>(
             }
         }
         state.bytes.clear();
-        state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        if masked {
+            state.bytes.extend(
+                state
+                    .msgs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, q)| if mask_store[i] { q.wire_bytes() } else { 0 }),
+            );
+        } else {
+            state.bytes.extend(state.msgs.iter().map(Compressed::wire_bytes));
+        }
         state.obs.phase(Phase::Compress, 0, t);
         state.obs.encoded(&state.msgs);
         let snap = LedgerSnap::of(net.ledger());
@@ -514,8 +695,12 @@ pub fn run_inner_naive_with<T: Transport>(
         let t = state.obs.clock();
         if fold {
             for i in 0..m {
+                if masked && !mask_store[i] {
+                    continue;
+                }
+                check_delivered_contract(i, &state.delivered[i]);
                 for &sender in &state.delivered[i] {
-                    let w = (gamma as f64 * net.mixing().weight(i, sender)) as f32;
+                    let w = (gamma as f64 * net.weight(i, sender)) as f32;
                     let qd = state.own.row(sender);
                     let qi = state.own.row(i);
                     for (k, sk) in state.s.row_mut(i).iter_mut().enumerate() {
@@ -526,11 +711,14 @@ pub fn run_inner_naive_with<T: Transport>(
         }
         state.obs.phase(Phase::Mix, 0, t);
         let t = state.obs.clock();
-        grad.eval_all(d, &mut state.g_new);
-        calls += m as u64;
-        state.obs.phase(Phase::Grad, m as u64, t);
+        grad.eval_active(d, &mut state.g_new, masked.then_some(mask_store.as_slice()));
+        calls += active_nodes;
+        state.obs.phase(Phase::Grad, active_nodes, t);
         let t = state.obs.clock();
         for i in 0..m {
+            if masked && !mask_store[i] {
+                continue;
+            }
             for ((sk, gn), go) in state
                 .s
                 .row_mut(i)
@@ -541,10 +729,19 @@ pub fn run_inner_naive_with<T: Transport>(
                 *sk += gn - go;
             }
         }
-        std::mem::swap(&mut state.prev_grad, &mut state.g_new);
+        if masked {
+            for i in 0..m {
+                if mask_store[i] {
+                    state.prev_grad.row_mut(i).copy_from_slice(state.g_new.row(i));
+                }
+            }
+        } else {
+            std::mem::swap(&mut state.prev_grad, &mut state.g_new);
+        }
         state.obs.phase(Phase::Tracker, 0, t);
         state.steps += 1;
     }
+    state.mask_buf = mask_store;
     calls
 }
 
@@ -817,11 +1014,11 @@ mod tests {
         for refs in [&state.d_ref, &state.s_ref] {
             for i in 0..m {
                 for k in 0..refs[i].hat.len() {
-                    let direct: f64 = net
-                        .mixing()
-                        .neighbors(i)
-                        .iter()
-                        .map(|&(j, wij)| wij * refs[j].hat[k] as f64)
+                    // Non-neighbours have weight exactly 0.0, so summing
+                    // over all j≠i equals the neighbour-only sum.
+                    let direct: f64 = (0..m)
+                        .filter(|&j| j != i)
+                        .map(|j| net.weight(i, j) * refs[j].hat[k] as f64)
                         .sum();
                     assert!(
                         (refs[i].hat_w[k] as f64 - direct).abs() < tol,
@@ -896,5 +1093,136 @@ mod tests {
         let d2 = run_naive();
         assert_eq!(d1, d2);
         assert!(d1.iter().flatten().all(|x| x.is_finite()));
+    }
+
+    /// Node sampling: inactive nodes freeze (model rows untouched, no
+    /// oracle calls charged for them) while the refpoint invariant
+    /// `(d̂)_w = Σ w_ij d̂_j` keeps holding at EVERY node — the passive
+    /// fold at inactive receivers is what makes that true.
+    #[test]
+    fn sampling_mask_freezes_inactive_and_keeps_invariant() {
+        use std::sync::Arc;
+        let m = 6;
+        let dim = 5;
+        let q = Quad::build(m, dim, 23);
+        let mask: Vec<bool> = vec![true, false, true, true, false, true];
+        let mut net = Network::new(Graph::build(Topology::Ring, m));
+        net.set_active(Some(Arc::new(mask.clone())));
+        let mut rng = Rng::new(11);
+        let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 7 };
+        let mut state = InnerState::new(&net, dim);
+        let mut d: Vec<Vec<f32>> = (0..m)
+            .map(|i| (0..dim).map(|k| (i + 2 * k) as f32 * 0.2).collect())
+            .collect();
+        let d0 = d.clone();
+        let g = |i: usize, di: &[f32]| q.grad(i, di);
+        let calls =
+            run_inner(&cfg, &mut net, &TopK::new(0.5), &mut rng, &mut state, &mut d, g);
+        // Bootstrap touches all m once; each step only the 4 active nodes.
+        assert_eq!(calls, (m + 7 * 4) as u64);
+        for i in 0..m {
+            if mask[i] {
+                assert_ne!(d[i], d0[i], "active node {i} should have moved");
+            } else {
+                assert_eq!(d[i], d0[i], "inactive node {i} must be frozen");
+            }
+        }
+        assert_refpoint_invariant(&net, &state, 1e-5);
+        assert!(d.iter().flatten().all(|x| x.is_finite()));
+
+        // Naive variant under the same mask: frozen inactive rows, finite,
+        // deterministic.
+        let run_nc = || {
+            let mut net = Network::new(Graph::build(Topology::Ring, m));
+            net.set_active(Some(Arc::new(mask.clone())));
+            let mut rng = Rng::new(11);
+            let mut state = InnerState::new(&net, dim);
+            let mut d = d0.clone();
+            run_inner_naive(&cfg, &mut net, &TopK::new(0.5), &mut rng, &mut state, &mut d, g);
+            d
+        };
+        let n1 = run_nc();
+        let n2 = run_nc();
+        assert_eq!(n1, n2);
+        for i in 0..m {
+            if !mask[i] {
+                assert_eq!(n1[i], d0[i], "naive inactive node {i} must be frozen");
+            }
+        }
+        assert!(n1.iter().flatten().all(|x| x.is_finite()));
+    }
+
+    /// An all-true mask must be bit-identical to no mask at all: the
+    /// masked code path may not perturb the unsampled trajectory.
+    #[test]
+    fn all_active_mask_is_bitwise_identical_to_unmasked() {
+        use std::sync::Arc;
+        let m = 5;
+        let dim = 6;
+        let q = Quad::build(m, dim, 31);
+        let traj = |mask: Option<Arc<Vec<bool>>>, naive: bool| {
+            let mut net = Network::new(Graph::build(Topology::Ring, m));
+            net.set_active(mask);
+            let mut rng = Rng::new(6);
+            let cfg = InnerConfig { eta: 0.12, gamma: 0.55, k_steps: 9 };
+            let mut state = InnerState::new(&net, dim);
+            let mut d = vec![vec![0.25f32; dim]; m];
+            let g = |i: usize, di: &[f32]| q.grad(i, di);
+            let calls = if naive {
+                run_inner_naive(&cfg, &mut net, &TopK::new(0.4), &mut rng, &mut state, &mut d, g)
+            } else {
+                run_inner(&cfg, &mut net, &TopK::new(0.4), &mut rng, &mut state, &mut d, g)
+            };
+            (calls, d, net.ledger.total_bytes)
+        };
+        for naive in [false, true] {
+            let all = Some(Arc::new(vec![true; m]));
+            assert_eq!(traj(None, naive), traj(all, naive), "naive={naive}");
+        }
+    }
+
+    /// Duplicated delivery must fail loudly, never fold twice: a transport
+    /// that hands the same sender to a receiver twice in one exchange is
+    /// rejected before any accumulator is touched.
+    #[test]
+    #[should_panic(expected = "transport contract violated")]
+    fn duplicate_delivery_fails_loudly() {
+        use crate::collective::Inbox;
+        use crate::metrics::CommLedger;
+        struct Duplicating(Network);
+        impl Transport for Duplicating {
+            fn m(&self) -> usize {
+                self.0.m()
+            }
+            fn weight(&self, i: usize, j: usize) -> f64 {
+                Transport::weight(&self.0, i, j)
+            }
+            fn ledger(&self) -> &CommLedger {
+                &self.0.ledger
+            }
+            fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+                self.0.exchange(msgs)
+            }
+            fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+                self.0.exchange_dense(vecs)
+            }
+            fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
+                self.0.exchange_indices(bytes, delivered);
+                if let Some(&first) = delivered[0].first() {
+                    delivered[0].insert(0, first); // duplicate node 0's first sender
+                }
+            }
+        }
+        let m = 4;
+        let dim = 3;
+        let q = Quad::build(m, dim, 2);
+        let mut net = Duplicating(Network::new(Graph::build(Topology::Ring, m)));
+        let mut rng = Rng::new(1);
+        let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 1 };
+        let mut state = InnerState::new(&net, dim);
+        let mut d = vec![vec![0.5f32; dim]; m];
+        run_inner(&cfg, &mut net, &Identity, &mut rng, &mut state, &mut d, |i, x| {
+            q.grad(i, x)
+        });
     }
 }

@@ -32,9 +32,20 @@ impl DenseTracker {
 
     /// One tracking round: gossip-mix the trackers in place (PAID
     /// communication via `net`), then fold in the new gradients.
+    ///
+    /// Under a sampling mask only active rows fold `u_new − prev_u` and
+    /// refresh `prev_u` — inactive rows of `u_new` are stale (the caller
+    /// skipped those oracles) and must not enter the tracker.  The mix
+    /// itself is already mask-aware through `mix_paid_into`.
     pub fn update<T: Transport>(&mut self, net: &mut T, gamma: f64, u_new: &[Vec<f32>]) {
         net.mix_paid_into(gamma, &mut self.s, &mut self.mix);
+        let mask = net.active();
         for i in 0..self.s.nrows() {
+            if let Some(mask) = mask {
+                if !mask[i] {
+                    continue;
+                }
+            }
             for ((sk, un), uo) in self
                 .s
                 .row_mut(i)
@@ -45,7 +56,23 @@ impl DenseTracker {
                 *sk += un - uo;
             }
         }
-        self.prev_u.copy_from_rows(u_new);
+        match mask {
+            None => self.prev_u.copy_from_rows(u_new),
+            Some(mask) => {
+                for i in 0..self.s.nrows() {
+                    if mask[i] {
+                        self.prev_u.row_mut(i).copy_from_slice(&u_new[i]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Last gradient folded in for node `i`.  Under sampling, callers
+    /// reuse this for nodes that skipped the current round's oracle (the
+    /// update above then folds a zero difference for them).
+    pub fn last_u(&self, i: usize) -> &[f32] {
+        self.prev_u.row(i)
     }
 
     /// Tracker consensus error ‖s − 1·s̄‖² (outer Lyapunov Ω₂).
@@ -146,5 +173,40 @@ mod tests {
             assert_eq!(t.s.to_vecs(), s_ref, "tracker diverged from reference");
         }
         assert_eq!(net.ledger.total_bytes, net_ref.ledger.total_bytes);
+    }
+
+    /// Sampling: inactive tracker rows are frozen exactly (no mix drift,
+    /// no stale-gradient fold), and an all-true mask is bit-identical to
+    /// running unmasked.
+    #[test]
+    fn masked_update_freezes_inactive_rows() {
+        use std::sync::Arc;
+        let m = 6;
+        let mask = Arc::new(vec![true, true, false, true, false, true]);
+        let mut rng = Rng::new(5);
+        let u0 = rand_rows(&mut rng, m, 4);
+        let u1 = rand_rows(&mut rng, m, 4);
+
+        let mut net = Network::new(Graph::build(Topology::Ring, m));
+        net.set_active(Some(mask.clone()));
+        let mut t = DenseTracker::new(u0.clone());
+        t.update(&mut net, 0.6, &u1);
+        for i in 0..m {
+            if !mask[i] {
+                assert_eq!(t.s.row(i), &u0[i][..], "inactive tracker row {i} moved");
+            } else {
+                assert_ne!(t.s.row(i), &u0[i][..], "active tracker row {i} frozen");
+            }
+        }
+
+        let mut net_all = Network::new(Graph::build(Topology::Ring, m));
+        net_all.set_active(Some(Arc::new(vec![true; m])));
+        let mut t_all = DenseTracker::new(u0.clone());
+        t_all.update(&mut net_all, 0.6, &u1);
+        let mut net_none = Network::new(Graph::build(Topology::Ring, m));
+        let mut t_none = DenseTracker::new(u0);
+        t_none.update(&mut net_none, 0.6, &u1);
+        assert_eq!(t_all.s.to_vecs(), t_none.s.to_vecs());
+        assert_eq!(net_all.ledger.total_bytes, net_none.ledger.total_bytes);
     }
 }

@@ -1,20 +1,50 @@
-//! Deterministic discrete-event queue keyed by virtual time.
+//! Deterministic discrete-event queues keyed by virtual time.
 //!
-//! A thin min-heap with two guarantees the engine leans on:
+//! Two implementations with **identical observable ordering**:
+//!
+//! * [`HeapEventQueue`] — the reference binary heap, O(log n) per op.
+//! * [`EventQueue`] — a calendar (bucketed) queue, amortized O(1) per op
+//!   at 10⁶+ in-flight events; the engine's default since the scale
+//!   work.
+//!
+//! Both provide the two guarantees the engine leans on:
 //!
 //! * **Total order on `f64` times** via `total_cmp` (no NaN surprises —
 //!   NaN times are rejected at push).
 //! * **Deterministic tie-breaking**: events at equal times pop in
 //!   insertion order (a monotone sequence number), so a run is a pure
-//!   function of its inputs regardless of heap internals.
+//!   function of its inputs regardless of queue internals.
+//!
+//! ## The same-timestamp tie contract (pinned — do not weaken)
+//!
+//! `SimNetwork::simulate_core` pushes one event per message copy,
+//! iterating senders in ascending node id and, per sender, neighbors in
+//! ascending id.  Combined with insertion-order tie-breaking this means
+//! **messages that arrive at the same virtual instant pop in (sender id,
+//! push sequence) order** — exactly the ascending-sender inbox order the
+//! synchronous engine uses, which is why a benign sim config reproduces
+//! the synchronous trajectories bit-for-bit (float reductions fold in
+//! the same order).  The goldens encode this order; a queue that
+//! reorders equal-time events is a correctness bug, not a scheduling
+//! choice.  `tie_contract_*` tests below and `tests/proptests.rs`
+//! (random streams, heap vs calendar) pin it.
 
 use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 struct Entry<T> {
     time_s: f64,
     seq: u64,
     item: T,
+}
+
+impl<T> Entry<T> {
+    #[inline]
+    fn key_cmp(&self, other: &Self) -> Ordering {
+        self.time_s
+            .total_cmp(&other.time_s)
+            .then(self.seq.cmp(&other.seq))
+    }
 }
 
 impl<T> PartialEq for Entry<T> {
@@ -33,21 +63,22 @@ impl<T> PartialOrd for Entry<T> {
 
 impl<T> Ord for Entry<T> {
     fn cmp(&self, other: &Self) -> Ordering {
-        self.time_s
-            .total_cmp(&other.time_s)
-            .then(self.seq.cmp(&other.seq))
+        self.key_cmp(other)
     }
 }
 
-/// Min-heap of `(virtual time, payload)` events.
-pub struct EventQueue<T> {
+/// Reference min-heap of `(virtual time, payload)` events.  Kept (and
+/// kept public) as the ordering oracle for the calendar queue: the
+/// property suite replays random streams through both and requires
+/// identical pop sequences, including same-timestamp ties.
+pub struct HeapEventQueue<T> {
     heap: BinaryHeap<Reverse<Entry<T>>>,
     seq: u64,
 }
 
-impl<T> EventQueue<T> {
-    pub fn new() -> EventQueue<T> {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+impl<T> HeapEventQueue<T> {
+    pub fn new() -> HeapEventQueue<T> {
+        HeapEventQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
     /// Schedule `item` at `time_s` (virtual seconds, must be finite).
@@ -76,6 +107,222 @@ impl<T> EventQueue<T> {
     }
 }
 
+impl<T> Default for HeapEventQueue<T> {
+    fn default() -> Self {
+        HeapEventQueue::new()
+    }
+}
+
+/// Calendar queue (Brown 1988): events hash into `width`-second day
+/// buckets on a circular year; dequeue walks days in order.  Amortized
+/// O(1) push/pop when event times spread across buckets, and never worse
+/// than O(n) in degenerate distributions (every event in one bucket pops
+/// front-of-deque in O(1); the pathological case is *inserting* before
+/// many earlier-pushed later-time events in one bucket).
+///
+/// Each bucket is kept sorted ascending by `(time total_cmp, seq)`, so
+/// the pop order — including the same-timestamp tie contract above — is
+/// exactly [`HeapEventQueue`]'s.  The bulk-arrival pattern the engine
+/// produces (a gossip round schedules many copies at identical or
+/// near-identical times, in seq order) inserts at the bucket tail in
+/// O(1).
+///
+/// Bucket count and width adapt on resize: the count tracks the live
+/// event count (×2 / ÷2 thresholds), the width spans the observed time
+/// range so one "year" covers the queue and an average day holds O(1)
+/// events.  A width floor of `max_abs_time / 1e15` keeps every
+/// `time / width` day index well inside `i64` (and its rounding error
+/// below half a day, so an event lands at most one day off its true
+/// position — `scan_min` checks the neighboring day to compensate).
+pub struct EventQueue<T> {
+    buckets: Vec<VecDeque<Entry<T>>>,
+    /// Day length in virtual seconds.
+    width: f64,
+    /// Virtual day index (`floor(time / width)`) below which all days
+    /// have been drained; `i64::MIN` sentinel when unknown (empty).
+    cur_day: i64,
+    len: usize,
+    seq: u64,
+}
+
+const MIN_BUCKETS: usize = 4;
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| VecDeque::new()).collect(),
+            width: 1.0,
+            cur_day: i64::MIN,
+            len: 0,
+            seq: 0,
+        }
+    }
+
+    /// Virtual day index of `time_s` under the current width.  Rounding
+    /// in the division can misplace an event by at most one day (see the
+    /// type docs); `scan_min` compensates.
+    #[inline]
+    fn day_of(&self, time_s: f64) -> i64 {
+        (time_s / self.width).floor() as i64
+    }
+
+    #[inline]
+    fn bucket_of_day(&self, day: i64) -> usize {
+        day.rem_euclid(self.buckets.len() as i64) as usize
+    }
+
+    /// Schedule `item` at `time_s` (virtual seconds, must be finite).
+    pub fn push(&mut self, time_s: f64, item: T) {
+        assert!(time_s.is_finite(), "event time must be finite, got {time_s}");
+        let entry = Entry { time_s, seq: self.seq, item };
+        self.seq += 1;
+        let day = self.day_of(time_s);
+        if day < self.cur_day || self.len == 0 {
+            self.cur_day = day;
+        }
+        let bucket = self.bucket_of_day(day);
+        Self::insert_sorted(&mut self.buckets[bucket], entry);
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            self.resize();
+        }
+    }
+
+    /// Insert preserving ascending `(time, seq)` order.  New entries
+    /// carry the largest seq so far, so among equal times the insertion
+    /// point is always the tail of the equal-time run — `partition_point`
+    /// with a `!= Greater` predicate lands exactly there.
+    fn insert_sorted(bucket: &mut VecDeque<Entry<T>>, entry: Entry<T>) {
+        let pos = bucket.partition_point(|e| e.key_cmp(&entry) != Ordering::Greater);
+        if pos == bucket.len() {
+            bucket.push_back(entry);
+        } else {
+            bucket.insert(pos, entry);
+        }
+    }
+
+    /// Bucket index holding the global minimum entry, or None if empty.
+    ///
+    /// Walks days from `cur_day`; the first day whose bucket front lives
+    /// in that day is the candidate.  Because an event's computed day can
+    /// be off by one from its time (float division), the next day's
+    /// front is compared too and the smaller key wins.  If a whole year
+    /// passes with no match (sparse far-future events), falls back to a
+    /// direct scan of all bucket fronts.
+    fn scan_min(&self) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len();
+        let mut day = self.cur_day;
+        for _ in 0..n {
+            let b = self.bucket_of_day(day);
+            if let Some(front) = self.buckets[b].front() {
+                if self.day_of(front.time_s) == day {
+                    // Candidate found; the true min may sit one day over.
+                    let nb = self.bucket_of_day(day + 1);
+                    if nb != b {
+                        if let Some(next) = self.buckets[nb].front() {
+                            if next.key_cmp(front) == Ordering::Less {
+                                return Some(nb);
+                            }
+                        }
+                    }
+                    return Some(b);
+                }
+            }
+            day += 1;
+        }
+        // Direct search: compare every bucket front.
+        let mut best: Option<usize> = None;
+        for (b, q) in self.buckets.iter().enumerate() {
+            if let Some(front) = q.front() {
+                match best {
+                    None => best = Some(b),
+                    Some(bb) => {
+                        if front.key_cmp(self.buckets[bb].front().unwrap()) == Ordering::Less {
+                            best = Some(b);
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Pop the earliest event (FIFO among equal times).
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let b = self.scan_min()?;
+        let entry = self.buckets[b].pop_front().unwrap();
+        self.len -= 1;
+        if self.len == 0 {
+            self.cur_day = i64::MIN;
+        } else {
+            self.cur_day = self.day_of(entry.time_s);
+        }
+        if self.len >= MIN_BUCKETS && self.len < self.buckets.len() / 2 {
+            self.resize();
+        }
+        Some((entry.time_s, entry.item))
+    }
+
+    /// Virtual time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.scan_min()
+            .map(|b| self.buckets[b].front().unwrap().time_s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Rebuild with a bucket count tracking `len` and a width spanning
+    /// the live time range.  O(n log n) for the global sort, amortized
+    /// against the pushes/pops that moved `len` past a threshold.
+    fn resize(&mut self) {
+        let mut entries: Vec<Entry<T>> = Vec::with_capacity(self.len);
+        for q in self.buckets.iter_mut() {
+            entries.extend(q.drain(..));
+        }
+        entries.sort_unstable_by(|a, b| a.key_cmp(b));
+        let n = self.len.next_power_of_two().max(MIN_BUCKETS);
+        self.buckets = (0..n).map(|_| VecDeque::new()).collect();
+        let (mut lo, mut hi, mut max_abs) = (f64::INFINITY, f64::NEG_INFINITY, 0.0f64);
+        for e in &entries {
+            lo = lo.min(e.time_s);
+            hi = hi.max(e.time_s);
+            max_abs = max_abs.max(e.time_s.abs());
+        }
+        let span = if entries.is_empty() { 0.0 } else { hi - lo };
+        // ~4 days per span so a year (n days) comfortably covers it;
+        // floors keep day indices finite and within i64 (see type docs).
+        let mut w = span * 4.0 / entries.len().max(1) as f64;
+        w = w.max(max_abs / 1e15).max(f64::MIN_POSITIVE);
+        if !w.is_finite() || w == 0.0 {
+            w = 1.0;
+        }
+        self.width = w;
+        self.cur_day = i64::MIN;
+        for e in entries {
+            let day = self.day_of(e.time_s);
+            if self.cur_day == i64::MIN || day < self.cur_day {
+                self.cur_day = day;
+            }
+            let b = self.bucket_of_day(day);
+            // Entries arrive globally sorted, so per-bucket order is
+            // already ascending — append.
+            self.buckets[b].push_back(e);
+        }
+        if self.len == 0 {
+            self.cur_day = i64::MIN;
+        }
+    }
+}
+
 impl<T> Default for EventQueue<T> {
     fn default() -> Self {
         EventQueue::new()
@@ -85,6 +332,7 @@ impl<T> Default for EventQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn pops_in_time_order() {
@@ -111,6 +359,69 @@ mod tests {
     }
 
     #[test]
+    fn heap_ties_break_by_insertion_order() {
+        let mut q = HeapEventQueue::new();
+        for i in 0..100 {
+            q.push(1.0, i);
+        }
+        q.push(0.5, 999);
+        assert_eq!(q.pop(), Some((0.5, 999)));
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((1.0, i)));
+        }
+        assert!(q.is_empty());
+    }
+
+    /// The pinned contract: copies pushed in ascending (sender, neighbor)
+    /// order with equal arrival times pop in exactly that push order —
+    /// on BOTH queue implementations.  `SimNetwork`'s inbox assembly
+    /// (and so the benign-sim ≡ sync bit-identity) depends on this.
+    #[test]
+    fn tie_contract_sender_then_sequence_order() {
+        let t = 1.0 + 1e-3; // one latency hop, like a benign round
+        let mut heap = HeapEventQueue::new();
+        let mut cal = EventQueue::new();
+        let mut pushed = Vec::new();
+        for sender in 0..8u32 {
+            for neighbor in [1u32, 3, 5] {
+                heap.push(t, (sender, neighbor));
+                cal.push(t, (sender, neighbor));
+                pushed.push((sender, neighbor));
+            }
+        }
+        let hv: Vec<_> = std::iter::from_fn(|| heap.pop().map(|(_, x)| x)).collect();
+        let cv: Vec<_> = std::iter::from_fn(|| cal.pop().map(|(_, x)| x)).collect();
+        assert_eq!(hv, pushed, "heap must preserve (sender, seq) push order on ties");
+        assert_eq!(cv, pushed, "calendar must preserve (sender, seq) push order on ties");
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_random_interleaved_streams() {
+        let mut rng = Rng::new(0xCA1E);
+        for case in 0..20 {
+            let mut heap = HeapEventQueue::new();
+            let mut cal = EventQueue::new();
+            let n = 50 + case * 37;
+            let mut id = 0u64;
+            for _ in 0..n {
+                // Mix pushes and interleaved pops, heavy on ties.
+                let t = (rng.below(16) as f64) * 0.25;
+                heap.push(t, id);
+                cal.push(t, id);
+                id += 1;
+                if rng.bernoulli(0.3) {
+                    assert_eq!(heap.pop(), cal.pop());
+                }
+            }
+            while !heap.is_empty() {
+                assert_eq!(heap.peek_time(), cal.peek_time());
+                assert_eq!(heap.pop(), cal.pop());
+            }
+            assert!(cal.is_empty());
+        }
+    }
+
+    #[test]
     fn peek_does_not_pop() {
         let mut q = EventQueue::new();
         q.push(2.5, ());
@@ -121,9 +432,58 @@ mod tests {
     }
 
     #[test]
+    fn survives_resize_cycles_and_wide_time_ranges() {
+        let mut heap = HeapEventQueue::new();
+        let mut cal = EventQueue::new();
+        let mut rng = Rng::new(7);
+        for i in 0..4096u64 {
+            let t = match i % 4 {
+                0 => rng.uniform() * 1e-6,
+                1 => rng.uniform() * 1e6,
+                2 => 42.0, // massive tie pile-up in one day
+                _ => rng.uniform(),
+            };
+            heap.push(t, i);
+            cal.push(t, i);
+        }
+        // Drain half, refill, drain all — exercises shrink and grow.
+        for _ in 0..2048 {
+            assert_eq!(heap.pop(), cal.pop());
+        }
+        for i in 0..512u64 {
+            let t = rng.uniform() * 100.0;
+            heap.push(t, 10_000 + i);
+            cal.push(t, 10_000 + i);
+        }
+        while !heap.is_empty() {
+            assert_eq!(heap.pop(), cal.pop());
+        }
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn push_earlier_than_current_scan_position() {
+        let mut q = EventQueue::new();
+        q.push(10.0, "late");
+        q.push(20.0, "later");
+        assert_eq!(q.pop(), Some((10.0, "late")));
+        // Now schedule before the drained region — must still pop first.
+        q.push(1.0, "early");
+        assert_eq!(q.pop(), Some((1.0, "early")));
+        assert_eq!(q.pop(), Some((20.0, "later")));
+    }
+
+    #[test]
     #[should_panic(expected = "finite")]
     fn rejects_nan_times() {
         let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn heap_rejects_nan_times() {
+        let mut q = HeapEventQueue::new();
         q.push(f64::NAN, ());
     }
 }

@@ -14,6 +14,9 @@
 //! * [`parallel::NodePool`] — a scoped thread pool running per-node
 //!   compute concurrently with node-ordered results and per-node RNG
 //!   streams, so runs are bit-reproducible at any thread count;
+//! * [`scale::ScaleSim`] — the sparse million-node engine (`c2dfb
+//!   scale`): lazy per-node state over generator topologies, calendar-
+//!   queue delivery, O(m·degree + active·d) memory (docs/SCALE.md);
 //! * [`NetConfig`] — the `[network]` config table behind all of it.
 //!
 //! With a benign config (no jitter/drops/stragglers) the event engine
@@ -23,9 +26,11 @@
 pub mod event;
 pub mod net;
 pub mod parallel;
+pub mod scale;
 
 pub use net::{Arrival, SimNetwork};
 pub use parallel::NodePool;
+pub use scale::{ScaleOpts, ScaleReport, ScaleSim};
 
 use crate::topology::Topology;
 

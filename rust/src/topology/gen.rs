@@ -1,0 +1,466 @@
+//! Generator-backed implicit topologies: neighbor sets and mixing
+//! weights computed on the fly in O(degree) per node, no materialized
+//! adjacency or m×m mixing matrix.
+//!
+//! This is the memory half of the million-node scale story (see
+//! docs/SCALE.md): a [`Graph`] + `MixingMatrix` pair costs O(m·degree)
+//! for adjacency plus O(m²) for the dense mixing matrix, which caps
+//! experiments at a few thousand nodes.  A [`GenTopology`] answers the
+//! same queries from closed-form edge rules in O(degree) memory total.
+//!
+//! ## Edge contract
+//!
+//! For every supported [`Topology`] variant the generator reproduces the
+//! materialized [`Graph::build`] adjacency **exactly** (same neighbor
+//! sets, ascending order) and [`Neighborhood::mix_weight`] reproduces
+//! `MixingMatrix::metropolis` **bitwise**:
+//!
+//! * edge weights are the identical expression
+//!   `1.0 / (1.0 + max(deg_i, deg_j) as f64)`, and
+//! * the self-weight sums neighbor weights in ascending-j order, which is
+//!   bit-identical to the materialized row sum because non-neighbor
+//!   entries are exactly `0.0` and `x + 0.0 == x` for the non-negative
+//!   finite weights involved.
+//!
+//! Random-regular graphs are seed-derived circulants: the offset list is
+//! a pure function of `(m, k, seed)` shared with
+//! `Topology::RandomRegular` via [`circulant_offsets`], so the generator
+//! and materialized paths agree by construction.  The equivalence suite
+//! (`tests/scale.rs`) pins all of this at small m.
+
+use super::graph::{torus_dims, Graph, Topology};
+use crate::util::rng::Rng;
+
+/// Uniform query interface over materialized and generated topologies.
+///
+/// Everything the gossip hot path needs: node count, degrees, ascending
+/// neighbor lists, and Metropolis–Hastings mixing weights (including the
+/// `i == j` self-weight).  [`Graph`] implements it by lookup; a
+/// [`GenTopology`] implements it by formula.
+pub trait Neighborhood {
+    /// Number of nodes.
+    fn node_count(&self) -> usize;
+
+    /// Degree of node `i`.
+    fn degree(&self, i: usize) -> usize;
+
+    /// Replace `out` with `i`'s neighbors in ascending order.
+    fn neighbors_into(&self, i: usize, out: &mut Vec<usize>);
+
+    /// Metropolis–Hastings mixing weight w_ij; `i == j` yields the
+    /// self-weight `1 − Σ_j w_ij`, non-edges yield exactly `0.0`.
+    fn mix_weight(&self, i: usize, j: usize) -> f64;
+}
+
+impl Neighborhood for Graph {
+    fn node_count(&self) -> usize {
+        self.m
+    }
+
+    fn degree(&self, i: usize) -> usize {
+        Graph::degree(self, i)
+    }
+
+    fn neighbors_into(&self, i: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend_from_slice(self.neighbors(i));
+    }
+
+    fn mix_weight(&self, i: usize, j: usize) -> f64 {
+        metropolis_weight(self, i, j)
+    }
+}
+
+/// Metropolis–Hastings weight computed from degrees alone — the shared
+/// implementation behind every [`Neighborhood`].  Bitwise-identical to
+/// `MixingMatrix::metropolis` (see the module docs for why the
+/// neighbor-only self-weight sum is exact).
+fn metropolis_weight<N: Neighborhood + ?Sized>(n: &N, i: usize, j: usize) -> f64 {
+    if i != j {
+        let mut nbrs = Vec::with_capacity(n.degree(i));
+        n.neighbors_into(i, &mut nbrs);
+        if nbrs.binary_search(&j).is_ok() {
+            1.0 / (1.0 + n.degree(i).max(n.degree(j)) as f64)
+        } else {
+            0.0
+        }
+    } else {
+        let mut nbrs = Vec::with_capacity(n.degree(i));
+        n.neighbors_into(i, &mut nbrs);
+        let di = n.degree(i);
+        let off: f64 = nbrs
+            .iter()
+            .map(|&j| 1.0 / (1.0 + di.max(n.degree(j)) as f64))
+            .sum();
+        1.0 - off
+    }
+}
+
+/// Seed-derived circulant offsets for a k-regular graph on m nodes: the
+/// pure function of `(m, k, seed)` shared by [`GenTopology`] and the
+/// materialized `Topology::RandomRegular` build, so both paths produce
+/// the same edge set.
+///
+/// Offset 1 is always included (guarantees connectivity — the graph
+/// contains the m-cycle); the remaining k/2 − 1 offsets are distinct
+/// draws from [2, (m−1)/2].  Every offset o satisfies 0 < o < m/2, so
+/// the ±o neighbors of a node are 2·|offsets| distinct nodes and the
+/// graph is exactly k-regular.
+pub fn circulant_offsets(m: usize, k: usize, seed: u64) -> Result<Vec<usize>, String> {
+    if k < 2 || k % 2 != 0 {
+        return Err(format!("random-regular degree must be even and >= 2, got {k}"));
+    }
+    if m < 3 {
+        return Err(format!("random-regular needs m >= 3, got {m}"));
+    }
+    let extra = k / 2 - 1;
+    let hi = (m - 1) / 2; // largest usable offset
+    let avail = hi.saturating_sub(1); // offsets in [2, hi]
+    if extra > avail {
+        return Err(format!(
+            "random-regular degree {k} infeasible for m={m} (needs {extra} offsets in [2, {hi}])"
+        ));
+    }
+    let mut offsets = vec![1usize];
+    if extra > 0 {
+        // Distinct ascending draws from [2, hi], salted so the offset
+        // stream is independent of every other seed consumer.
+        let mut rng = Rng::new(seed ^ 0x5252_4547); // "RREG"
+        offsets.extend(rng.sample_indices(avail, extra).into_iter().map(|x| x + 2));
+    }
+    Ok(offsets)
+}
+
+/// The closed-form edge rule behind a [`GenTopology`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum GenKind {
+    Ring,
+    Exponential,
+    Torus { rows: usize, cols: usize },
+    /// Circulant: i ↔ (i ± o) mod m for each offset o.
+    Circulant { offsets: Vec<usize> },
+}
+
+/// An implicit topology over `m` nodes: O(degree) memory, every query
+/// answered by formula.  Construct with [`GenTopology::new`] from the
+/// same [`Topology`] value the materialized path uses.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GenTopology {
+    m: usize,
+    topology: Topology,
+    kind: GenKind,
+    /// Per-node degree for the uniform-degree kinds (circulants); the
+    /// torus computes per-node degree from its position.
+    uniform_degree: usize,
+}
+
+impl GenTopology {
+    /// Wrap `topology` as a generator.  Errors on variants whose edge
+    /// sets are not closed-form (ER needs global resampling; complete /
+    /// star / path / 2-hop simply have no scale story and stay
+    /// materialized-only).
+    pub fn new(topology: Topology, m: usize) -> Result<GenTopology, String> {
+        assert!(m >= 2, "need at least 2 nodes");
+        let (kind, uniform_degree) = match topology {
+            Topology::Ring => (GenKind::Ring, if m == 2 { 1 } else { 2 }),
+            Topology::Exponential => {
+                // Degree is uniform (circulant): count distinct ±2^j mod m.
+                let mut nbrs = Vec::new();
+                exp_neighbors_into(m, 0, &mut nbrs);
+                (GenKind::Exponential, nbrs.len())
+            }
+            Topology::Torus => {
+                let (rows, cols) = torus_dims(m);
+                (GenKind::Torus { rows, cols }, 0)
+            }
+            Topology::RandomRegular { k, seed } => {
+                let offsets = circulant_offsets(m, k as usize, seed)?;
+                let deg = 2 * offsets.len();
+                (GenKind::Circulant { offsets }, deg)
+            }
+            other => {
+                return Err(format!(
+                    "topology '{}' has no generator form (use the materialized path)",
+                    other.name()
+                ))
+            }
+        };
+        Ok(GenTopology { m, topology, kind, uniform_degree })
+    }
+
+    /// The [`Topology`] this generator mirrors.
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// Whether `topology` has a generator form.
+    pub fn supports(topology: Topology) -> bool {
+        matches!(
+            topology,
+            Topology::Ring | Topology::Exponential | Topology::Torus | Topology::RandomRegular { .. }
+        )
+    }
+
+    /// Allocating convenience around [`Neighborhood::neighbors_into`].
+    pub fn neighbors(&self, i: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.neighbors_into(i, &mut out);
+        out
+    }
+
+    /// Materialize this generator as a [`Graph`] (test/equivalence
+    /// bridge; O(m·degree) memory — small m only).
+    pub fn materialize(&self) -> Graph {
+        Graph::build(self.topology, self.m)
+    }
+
+    /// O(degree) allocation-free adjacency test — the hot edge-weight
+    /// path at scale.
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        if i == j || i >= self.m || j >= self.m {
+            return false;
+        }
+        let m = self.m;
+        let diff = (j + m - i) % m; // forward circular distance i → j
+        match &self.kind {
+            GenKind::Ring => diff == 1 || diff == m - 1,
+            GenKind::Exponential => {
+                let mut hop = 1usize;
+                while hop < m {
+                    if diff == hop || diff == m - hop {
+                        return true;
+                    }
+                    hop *= 2;
+                }
+                false
+            }
+            GenKind::Torus { rows, cols } => {
+                let (rows, cols) = (*rows, *cols);
+                let (ri, ci) = (i / cols, i % cols);
+                let (rj, cj) = (j / cols, j % cols);
+                let col_adj = cols > 1
+                    && ri == rj
+                    && ((ci + 1) % cols == cj || (cj + 1) % cols == ci);
+                let row_adj = rows > 1
+                    && ci == cj
+                    && ((ri + 1) % rows == rj || (rj + 1) % rows == ri);
+                col_adj || row_adj
+            }
+            GenKind::Circulant { offsets } => {
+                offsets.iter().any(|&o| diff == o || diff == m - o)
+            }
+        }
+    }
+}
+
+/// Ascending distinct ±2^j (mod m) neighbors of `i` — the exponential
+/// graph rule, shared with the uniform-degree probe in `new`.
+fn exp_neighbors_into(m: usize, i: usize, out: &mut Vec<usize>) {
+    out.clear();
+    let mut hop = 1usize;
+    while hop < m {
+        out.push((i + hop) % m);
+        out.push((i + m - hop) % m);
+        hop *= 2;
+    }
+    out.sort_unstable();
+    out.dedup();
+}
+
+impl Neighborhood for GenTopology {
+    fn node_count(&self) -> usize {
+        self.m
+    }
+
+    fn degree(&self, i: usize) -> usize {
+        match &self.kind {
+            GenKind::Torus { rows, cols } => {
+                let _ = i; // torus degree is position-independent too
+                let row_deg = match *rows {
+                    1 => 0,
+                    2 => 1,
+                    _ => 2,
+                };
+                let col_deg = match *cols {
+                    1 => 0,
+                    2 => 1,
+                    _ => 2,
+                };
+                row_deg + col_deg
+            }
+            _ => self.uniform_degree,
+        }
+    }
+
+    fn neighbors_into(&self, i: usize, out: &mut Vec<usize>) {
+        let m = self.m;
+        debug_assert!(i < m);
+        match &self.kind {
+            GenKind::Ring => {
+                out.clear();
+                out.push((i + 1) % m);
+                out.push((i + m - 1) % m);
+                out.sort_unstable();
+                out.dedup();
+            }
+            GenKind::Exponential => exp_neighbors_into(m, i, out),
+            GenKind::Torus { rows, cols } => {
+                out.clear();
+                let (rows, cols) = (*rows, *cols);
+                let (r, c) = (i / cols, i % cols);
+                let id = |r: usize, c: usize| r * cols + c;
+                if cols > 1 {
+                    out.push(id(r, (c + 1) % cols));
+                    out.push(id(r, (c + cols - 1) % cols));
+                }
+                if rows > 1 {
+                    out.push(id((r + 1) % rows, c));
+                    out.push(id((r + rows - 1) % rows, c));
+                }
+                out.sort_unstable();
+                out.dedup();
+            }
+            GenKind::Circulant { offsets } => {
+                out.clear();
+                for &o in offsets {
+                    out.push((i + o) % m);
+                    out.push((i + m - o) % m);
+                }
+                out.sort_unstable();
+                out.dedup();
+            }
+        }
+    }
+
+    fn mix_weight(&self, i: usize, j: usize) -> f64 {
+        if i != j {
+            // Allocation-free edge path (the per-message hot path); the
+            // expression is the exact MixingMatrix::metropolis one.
+            if self.has_edge(i, j) {
+                1.0 / (1.0 + self.degree(i).max(self.degree(j)) as f64)
+            } else {
+                0.0
+            }
+        } else {
+            metropolis_weight(self, i, i)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::MixingMatrix;
+
+    fn assert_matches_materialized(topology: Topology, m: usize) {
+        let gen = GenTopology::new(topology, m).unwrap();
+        let graph = Graph::build(topology, m);
+        let mixing = MixingMatrix::metropolis(&graph);
+        let mut nbrs = Vec::new();
+        for i in 0..m {
+            gen.neighbors_into(i, &mut nbrs);
+            assert_eq!(nbrs.as_slice(), graph.neighbors(i), "{topology:?} m={m} node {i}");
+            assert_eq!(gen.degree(i), graph.degree(i), "{topology:?} m={m} node {i}");
+            for j in 0..m {
+                let a = gen.mix_weight(i, j);
+                let b = mixing.weight(i, j);
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{topology:?} m={m} w[{i},{j}] gen={a} mat={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_matches_materialized() {
+        for m in [2, 3, 4, 7, 16] {
+            assert_matches_materialized(Topology::Ring, m);
+        }
+    }
+
+    #[test]
+    fn exponential_matches_materialized() {
+        for m in [2, 3, 8, 10, 17] {
+            assert_matches_materialized(Topology::Exponential, m);
+        }
+    }
+
+    #[test]
+    fn torus_matches_materialized() {
+        for m in [4, 6, 12, 16, 15] {
+            assert_matches_materialized(Topology::Torus, m);
+        }
+    }
+
+    #[test]
+    fn random_regular_matches_materialized() {
+        for (m, k) in [(8usize, 4u32), (16, 4), (16, 6), (33, 8)] {
+            assert_matches_materialized(Topology::RandomRegular { k, seed: 7 }, m);
+        }
+    }
+
+    #[test]
+    fn random_regular_is_exactly_k_regular_and_seeded() {
+        let t = Topology::RandomRegular { k: 6, seed: 11 };
+        let g = GenTopology::new(t, 40).unwrap();
+        for i in 0..40 {
+            assert_eq!(g.degree(i), 6);
+            assert_eq!(g.neighbors(i).len(), 6);
+        }
+        // Same (m, k, seed) → same offsets; different seed → (almost
+        // surely) different edges but still k-regular.
+        assert_eq!(
+            circulant_offsets(40, 6, 11).unwrap(),
+            circulant_offsets(40, 6, 11).unwrap()
+        );
+        let other = GenTopology::new(Topology::RandomRegular { k: 6, seed: 12 }, 40).unwrap();
+        assert_eq!(other.degree(0), 6);
+    }
+
+    #[test]
+    fn circulant_offsets_rejects_infeasible() {
+        assert!(circulant_offsets(8, 3, 0).is_err()); // odd degree
+        assert!(circulant_offsets(8, 0, 0).is_err());
+        assert!(circulant_offsets(2, 2, 0).is_err()); // m too small
+        assert!(circulant_offsets(7, 6, 0).is_err()); // not enough offsets
+        assert_eq!(circulant_offsets(7, 4, 3).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unsupported_topologies_error_cleanly() {
+        for t in [Topology::Complete, Topology::Star, Topology::Path, Topology::TwoHopRing] {
+            let err = GenTopology::new(t, 8).unwrap_err();
+            assert!(err.contains("generator"), "{err}");
+        }
+        assert!(GenTopology::new(Topology::ErdosRenyi { p_milli: 400, seed: 1 }, 8).is_err());
+    }
+
+    #[test]
+    fn million_node_queries_are_cheap() {
+        // The point of the module: neighbor queries at m = 1M without
+        // materializing anything.  Just exercise a handful of nodes.
+        let m = 1_000_000;
+        for t in [Topology::Ring, Topology::Exponential, Topology::Torus] {
+            let g = GenTopology::new(t, m).unwrap();
+            let mut nbrs = Vec::new();
+            for &i in &[0usize, 1, m / 2, m - 1] {
+                g.neighbors_into(i, &mut nbrs);
+                assert_eq!(nbrs.len(), g.degree(i));
+                assert!(nbrs.windows(2).all(|w| w[0] < w[1]));
+                assert!(nbrs.iter().all(|&j| j < m && j != i));
+                // Symmetry spot-check.
+                let mut back = Vec::new();
+                for &j in &nbrs {
+                    g.neighbors_into(j, &mut back);
+                    assert!(back.binary_search(&i).is_ok(), "{t:?}: {j} missing back-edge to {i}");
+                }
+                let w_self = g.mix_weight(i, i);
+                assert!(w_self > 0.0 && w_self < 1.0);
+            }
+        }
+        let g = GenTopology::new(Topology::RandomRegular { k: 8, seed: 3 }, m).unwrap();
+        assert_eq!(g.degree(123_456), 8);
+    }
+}

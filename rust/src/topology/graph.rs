@@ -25,6 +25,22 @@ pub enum Topology {
     Path,
     /// 2-D torus grid; m must be rows*cols with |rows-cols| minimal.
     Torus,
+    /// Seed-derived k-regular circulant: offset 1 (an m-cycle, so always
+    /// connected) plus k/2 − 1 distinct offsets drawn from [2, (m−1)/2].
+    /// Pure function of (m, k, seed) — shared with the generator path via
+    /// [`circulant_offsets`](crate::topology::circulant_offsets).
+    RandomRegular { k: u32, seed: u64 },
+}
+
+/// Torus factorization used by both the materialized and generator
+/// paths: the smallest divisor r of m minimizing |m/r − r| (rows), with
+/// cols = m/r.  E.g. m = 12 → 3 × 4.
+pub fn torus_dims(m: usize) -> (usize, usize) {
+    let rows = (1..=m)
+        .filter(|r| m % r == 0)
+        .min_by_key(|r| (m / r).abs_diff(*r))
+        .unwrap();
+    (rows, m / rows)
 }
 
 impl Topology {
@@ -38,11 +54,13 @@ impl Topology {
             Topology::Star => "star",
             Topology::Path => "path",
             Topology::Torus => "torus",
+            Topology::RandomRegular { .. } => "rreg",
         }
     }
 
     /// Parse "ring" | "2hop" | "exp" | "er:0.4" | "complete" | "star" |
-    /// "path" | "torus" (ER takes p after a colon).
+    /// "path" | "torus" | "rreg:k" (ER takes p, random-regular takes the
+    /// even degree k, after a colon).
     pub fn parse(s: &str, seed: u64) -> Result<Topology, String> {
         let s = s.trim();
         if let Some(p) = s.strip_prefix("er:").or_else(|| s.strip_prefix("er=")) {
@@ -51,6 +69,13 @@ impl Topology {
                 return Err(format!("ER probability out of range: {p}"));
             }
             return Ok(Topology::ErdosRenyi { p_milli: (p * 1000.0).round() as u32, seed });
+        }
+        if let Some(k) = s.strip_prefix("rreg:").or_else(|| s.strip_prefix("rreg=")) {
+            let k: u32 = k.parse().map_err(|_| format!("bad random-regular degree: {s}"))?;
+            if k < 2 || k % 2 != 0 {
+                return Err(format!("random-regular degree must be even and >= 2, got {k}"));
+            }
+            return Ok(Topology::RandomRegular { k, seed });
         }
         match s {
             "ring" => Ok(Topology::Ring),
@@ -153,11 +178,7 @@ impl Graph {
                 }
             }
             Topology::Torus => {
-                let rows = (1..=m)
-                    .filter(|r| m % r == 0)
-                    .min_by_key(|r| (m / r).abs_diff(*r))
-                    .unwrap();
-                let cols = m / rows;
+                let (rows, cols) = torus_dims(m);
                 let id = |r: usize, c: usize| r * cols + c;
                 for r in 0..rows {
                     for c in 0..cols {
@@ -167,6 +188,15 @@ impl Graph {
                         if rows > 1 {
                             add(&mut edges, id(r, c), id((r + 1) % rows, c));
                         }
+                    }
+                }
+            }
+            Topology::RandomRegular { k, seed } => {
+                let offsets = super::gen::circulant_offsets(m, k as usize, seed)
+                    .unwrap_or_else(|e| panic!("{e}"));
+                for i in 0..m {
+                    for &o in &offsets {
+                        add(&mut edges, i, (i + o) % m);
                     }
                 }
             }
@@ -340,7 +370,33 @@ mod tests {
             Topology::parse("er:0.4", 5).unwrap(),
             Topology::ErdosRenyi { p_milli: 400, seed: 5 }
         );
+        assert_eq!(
+            Topology::parse("rreg:6", 9).unwrap(),
+            Topology::RandomRegular { k: 6, seed: 9 }
+        );
         assert!(Topology::parse("nope", 0).is_err());
         assert!(Topology::parse("er:1.5", 0).is_err());
+        assert!(Topology::parse("rreg:5", 0).is_err());
+        assert!(Topology::parse("rreg:x", 0).is_err());
+    }
+
+    #[test]
+    fn random_regular_builds_k_regular_connected() {
+        let g = Graph::build(Topology::RandomRegular { k: 4, seed: 21 }, 20);
+        assert!(g.is_connected());
+        for i in 0..20 {
+            assert_eq!(g.degree(i), 4, "node {i}");
+        }
+        // Deterministic by (m, k, seed).
+        let g2 = Graph::build(Topology::RandomRegular { k: 4, seed: 21 }, 20);
+        assert_eq!(g.edges(), g2.edges());
+    }
+
+    #[test]
+    fn torus_dims_balanced() {
+        assert_eq!(torus_dims(12), (3, 4));
+        assert_eq!(torus_dims(16), (4, 4));
+        assert_eq!(torus_dims(7), (1, 7));
+        assert_eq!(torus_dims(2), (1, 2));
     }
 }

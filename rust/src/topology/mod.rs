@@ -2,13 +2,25 @@
 //!
 //! Covers every topology the paper evaluates (ring, 2-hop ring,
 //! Erdős–Rényi(p)) plus the standard extras a user of the library will
-//! want (complete, star, path, 2-D torus).  Mixing weights are
-//! Metropolis–Hastings (symmetric, doubly stochastic by construction) and
-//! the spectral quantities of Assumption 1 / Definition 3 are computed
-//! exactly via the Jacobi eigensolver.
+//! want (complete, star, path, 2-D torus, seed-derived random-regular
+//! circulants).  Mixing weights are Metropolis–Hastings (symmetric,
+//! doubly stochastic by construction) and the spectral quantities of
+//! Assumption 1 / Definition 3 are computed exactly via the Jacobi
+//! eigensolver.
+//!
+//! Two representations answer the same queries (see docs/SCALE.md):
+//!
+//! * materialized — [`Graph`] adjacency + dense [`MixingMatrix`], the
+//!   default below a few thousand nodes;
+//! * generated — [`GenTopology`] computes neighbor sets and mixing
+//!   weights on the fly in O(degree) memory, bit-identical to the
+//!   materialized path for every supported topology (pinned by
+//!   `tests/scale.rs`).
 
+mod gen;
 mod graph;
 mod mixing;
 
-pub use graph::{Graph, Topology};
+pub use gen::{circulant_offsets, GenTopology, Neighborhood};
+pub use graph::{torus_dims, Graph, Topology};
 pub use mixing::MixingMatrix;

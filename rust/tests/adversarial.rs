@@ -1,0 +1,345 @@
+//! Adversarial-transport tests: the compressed inner loop against
+//! transports that violate, bend, or stress the [`Transport`] delivery
+//! contract.  The required behavior (docs/SCALE.md) is *resync or fail
+//! loudly, never silent divergence*:
+//!
+//! * duplicated or out-of-order delivery — a contract violation that
+//!   would silently corrupt the reference-point accumulators — must
+//!   panic with a diagnostic, not fold;
+//! * a graph-epoch bump observed mid-exchange (cross-epoch reordering)
+//!   must drop the in-flight round and resync the reference points;
+//! * asymmetric partitions and total blackouts are *legal* hostile
+//!   regimes: runs stay finite, deterministic, and locally progressing;
+//! * a crashed (masked-out) node neither sends nor steps while dark and
+//!   rejoins seamlessly because passive folding kept its reference
+//!   points in sync.
+//!
+//! Every wrapper delegates real accounting to the synchronous
+//! [`Network`] and then tampers with what the algorithm sees.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use c2dfb::collective::{Inbox, Network, Transport};
+use c2dfb::compress::{parse, Compressed};
+use c2dfb::metrics::CommLedger;
+use c2dfb::optim::{run_inner, InnerConfig, InnerState};
+use c2dfb::topology::{Graph, Topology};
+use c2dfb::util::rng::Rng;
+
+/// What a [`HostileNet`] does to each receiver's delivered-sender list
+/// after the honest exchange has run (bytes already paid).
+#[derive(Clone, Copy)]
+enum Tamper {
+    /// Deliver honestly.
+    None,
+    /// Hand `receiver` the first delivered sender twice.
+    DuplicateFirst { receiver: usize },
+    /// Hand `receiver` its senders in descending order.
+    ReverseOrder { receiver: usize },
+    /// Silently eat every message from `from` to `to` (one direction
+    /// only — the reverse link stays up).
+    DropDirected { from: usize, to: usize },
+    /// Total blackout: every list empty, every inbox empty.
+    DropAll,
+}
+
+/// A transport that performs honest synchronous exchanges and then
+/// tampers with the delivery report; optionally bumps its graph epoch on
+/// every `bump_every`-th exchange to simulate a topology switch racing
+/// the in-flight messages.
+struct HostileNet {
+    inner: Network,
+    tamper: Tamper,
+    epoch: u64,
+    bump_every: usize,
+    exchanges: usize,
+}
+
+impl HostileNet {
+    fn new(m: usize, tamper: Tamper) -> HostileNet {
+        HostileNet {
+            inner: Network::new(Graph::build(Topology::Ring, m)),
+            tamper,
+            epoch: 0,
+            bump_every: 0,
+            exchanges: 0,
+        }
+    }
+
+    fn tamper_delivered(&self, delivered: &mut [Vec<usize>]) {
+        match self.tamper {
+            Tamper::None => {}
+            Tamper::DuplicateFirst { receiver } => {
+                if let Some(&first) = delivered[receiver].first() {
+                    delivered[receiver].insert(0, first);
+                }
+            }
+            Tamper::ReverseOrder { receiver } => delivered[receiver].reverse(),
+            Tamper::DropDirected { from, to } => delivered[to].retain(|&s| s != from),
+            Tamper::DropAll => {
+                for list in delivered.iter_mut() {
+                    list.clear();
+                }
+            }
+        }
+    }
+
+    fn tick_epoch(&mut self) {
+        self.exchanges += 1;
+        if self.bump_every > 0 && self.exchanges % self.bump_every == 0 {
+            self.epoch += 1;
+        }
+    }
+}
+
+impl Transport for HostileNet {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn weight(&self, i: usize, j: usize) -> f64 {
+        Transport::weight(&self.inner, i, j)
+    }
+
+    fn ledger(&self) -> &CommLedger {
+        Transport::ledger(&self.inner)
+    }
+
+    fn set_active(&mut self, mask: Option<Arc<Vec<bool>>>) {
+        self.inner.set_active(mask)
+    }
+
+    fn active(&self) -> Option<&[bool]> {
+        Transport::active(&self.inner)
+    }
+
+    fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+        let mut inbox = self.inner.exchange(msgs);
+        if matches!(self.tamper, Tamper::DropAll) {
+            for ib in inbox.iter_mut() {
+                ib.clear();
+            }
+        }
+        self.tick_epoch();
+        inbox
+    }
+
+    fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+        let mut inbox = self.inner.exchange_dense(vecs);
+        if matches!(self.tamper, Tamper::DropAll) {
+            for ib in inbox.iter_mut() {
+                ib.clear();
+            }
+        }
+        self.tick_epoch();
+        inbox
+    }
+
+    fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
+        self.inner.exchange_indices(bytes, delivered);
+        self.tamper_delivered(delivered);
+        self.tick_epoch();
+    }
+
+    fn graph_epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+const M: usize = 6;
+const DIM: usize = 8;
+
+fn targets(seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..M).map(|_| (0..DIM).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect()
+}
+
+/// Run `steps` inner steps of the refpoint protocol (quadratic oracle
+/// ∇r_i(d) = d − t_i) over `net`, returning the final per-node iterates.
+fn run_protocol<T: Transport>(net: &mut T, steps: usize, seed: u64) -> Vec<Vec<f32>> {
+    let cfg = InnerConfig { eta: 0.3, gamma: 0.6, k_steps: steps };
+    let q = parse("topk:0.5").unwrap();
+    let mut rng = Rng::new(seed ^ 0xAD5E);
+    let mut state = InnerState::new(net, DIM);
+    let t = targets(seed);
+    let mut d: Vec<Vec<f32>> = vec![vec![0.0; DIM]; M];
+    run_inner(&cfg, net, q.as_ref(), &mut rng, &mut state, &mut d, |i, di| {
+        di.iter().zip(&t[i]).map(|(x, ti)| x - ti).collect()
+    });
+    d
+}
+
+fn bits(rows: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    rows.iter().map(|r| r.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn all_finite(rows: &[Vec<f32>]) -> bool {
+    rows.iter().all(|r| r.iter().all(|x| x.is_finite()))
+}
+
+/// Duplicated delivery must panic with the contract diagnostic — folding
+/// the same residual twice would corrupt the accumulators silently.
+#[test]
+fn duplicated_delivery_fails_loudly() {
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        let mut net = HostileNet::new(M, Tamper::DuplicateFirst { receiver: 2 });
+        run_protocol(&mut net, 4, 7);
+    }))
+    .expect_err("a duplicating transport must not be folded silently");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(
+        msg.contains("transport contract violated"),
+        "panic lacked the contract diagnostic: {msg:?}"
+    );
+}
+
+/// Out-of-order delivery is the same contract violation and must be
+/// refused just as loudly.
+#[test]
+fn out_of_order_delivery_fails_loudly() {
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        let mut net = HostileNet::new(M, Tamper::ReverseOrder { receiver: 0 });
+        run_protocol(&mut net, 4, 7);
+    }))
+    .expect_err("an order-scrambling transport must not be folded silently");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(
+        msg.contains("transport contract violated"),
+        "panic lacked the contract diagnostic: {msg:?}"
+    );
+}
+
+/// Cross-epoch reordering: when the graph epoch ticks while messages are
+/// in flight, the round is dropped and the reference points resync.  The
+/// run must complete, stay finite, be deterministic, and actually differ
+/// from the clean run (the dropped rounds are observable, not papered
+/// over).
+#[test]
+fn epoch_flap_mid_exchange_resyncs_and_stays_finite() {
+    let clean = {
+        let mut net = HostileNet::new(M, Tamper::None);
+        run_protocol(&mut net, 6, 11)
+    };
+    let run_flapping = || {
+        let mut net = HostileNet::new(M, Tamper::None);
+        net.bump_every = 3; // every 3rd exchange lands in a new epoch
+        run_protocol(&mut net, 6, 11)
+    };
+    let a = run_flapping();
+    let b = run_flapping();
+    assert!(all_finite(&a), "epoch flapping produced non-finite iterates");
+    assert_eq!(bits(&a), bits(&b), "dropped-round handling must be deterministic");
+    assert_ne!(
+        bits(&a),
+        bits(&clean),
+        "flapped run should visibly drop rounds, not silently equal the clean run"
+    );
+}
+
+/// An asymmetric partition (0 → 1 dead, 1 → 0 alive) is a legal hostile
+/// regime: ascending delivery is preserved, so the run completes finite
+/// and deterministic, and the fault visibly bends the trajectory.
+#[test]
+fn asymmetric_partition_is_finite_and_deterministic() {
+    let clean = {
+        let mut net = HostileNet::new(M, Tamper::None);
+        run_protocol(&mut net, 6, 13)
+    };
+    let run_cut = || {
+        let mut net = HostileNet::new(M, Tamper::DropDirected { from: 0, to: 1 });
+        run_protocol(&mut net, 6, 13)
+    };
+    let a = run_cut();
+    let b = run_cut();
+    assert!(all_finite(&a), "asymmetric partition produced non-finite iterates");
+    assert_eq!(bits(&a), bits(&b), "partitioned run must be deterministic");
+    assert_ne!(bits(&a), bits(&clean), "a dead link must be observable in the iterates");
+}
+
+/// Total blackout: every node pays its sends but nothing arrives.  The
+/// run degrades to damped local descent (the uncoupled mix term
+/// `−γ·sw·d̂` pulls toward the reference origin, so nodes settle at a
+/// biased point between 0 and their local target) — finite,
+/// deterministic, strictly closer to the local targets than the start,
+/// and the ledger still charges the senders.
+#[test]
+fn zero_delivery_degrades_to_local_descent() {
+    let mut net = HostileNet::new(M, Tamper::DropAll);
+    let d = run_protocol(&mut net, 8, 17);
+    assert!(all_finite(&d), "blackout produced non-finite iterates");
+    assert!(net.ledger().total_bytes > 0, "senders must still pay under a blackout");
+    let t = targets(17);
+    for i in 0..M {
+        let dist_sq: f64 = d[i]
+            .iter()
+            .zip(&t[i])
+            .map(|(x, ti)| (*x as f64 - *ti as f64).powi(2))
+            .sum();
+        let init_sq: f64 = t[i].iter().map(|ti| (*ti as f64).powi(2)).sum();
+        assert!(
+            dist_sq < 0.8 * init_sq.max(1e-6),
+            "node {i} made no local progress: {dist_sq} vs initial {init_sq}"
+        );
+        assert!(
+            d[i].iter().any(|&x| x != 0.0),
+            "node {i} never moved — blackout should not freeze local descent"
+        );
+    }
+    // And the blackout run is bit-reproducible.
+    let mut net2 = HostileNet::new(M, Tamper::DropAll);
+    let d2 = run_protocol(&mut net2, 8, 17);
+    assert_eq!(bits(&d), bits(&d2));
+}
+
+/// Crash and rejoin via the sampling mask: a dark node neither sends nor
+/// steps (its iterate is frozen exactly), and after rejoining, the run
+/// continues finite and deterministic — passive folding kept its
+/// reference points consistent, so no resync is needed.
+#[test]
+fn crashed_node_freezes_then_rejoins_cleanly() {
+    let crashed = 2usize;
+    let run_with_crash = || {
+        let mut net = Network::new(Graph::build(Topology::Ring, M));
+        let cfg = InnerConfig { eta: 0.3, gamma: 0.6, k_steps: 3 };
+        let q = parse("topk:0.5").unwrap();
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut state = InnerState::new(&net, DIM);
+        let t = targets(19);
+        let mut d: Vec<Vec<f32>> = vec![vec![0.0; DIM]; M];
+        let mut run_k = |net: &mut Network, state: &mut InnerState, d: &mut [Vec<f32>], rng: &mut Rng| {
+            run_inner(&cfg, net, q.as_ref(), rng, state, d, |i, di| {
+                di.iter().zip(&t[i]).map(|(x, ti)| x - ti).collect()
+            });
+        };
+        // Healthy warm-up.
+        run_k(&mut net, &mut state, &mut d, &mut rng);
+        // Crash: node `crashed` goes dark for a stretch.
+        let mut mask = vec![true; M];
+        mask[crashed] = false;
+        net.set_active(Some(Arc::new(mask)));
+        let frozen = d[crashed].clone();
+        run_k(&mut net, &mut state, &mut d, &mut rng);
+        assert_eq!(
+            bits(&[frozen]),
+            bits(&[d[crashed].clone()]),
+            "a dark node's iterate must be frozen exactly"
+        );
+        // Rejoin: full participation again.
+        net.set_active(None);
+        run_k(&mut net, &mut state, &mut d, &mut rng);
+        d
+    };
+    let a = run_with_crash();
+    let b = run_with_crash();
+    assert!(all_finite(&a), "crash/rejoin produced non-finite iterates");
+    assert_eq!(bits(&a), bits(&b), "crash/rejoin must be deterministic");
+}

@@ -511,6 +511,181 @@ fn prop_wire_decode_survives_random_bytes() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Scale subsystem (docs/SCALE.md): generator topologies, the calendar
+// event queue, and the strided consensus estimator.
+// ---------------------------------------------------------------------------
+
+use c2dfb::metrics::ConsensusEstimator;
+use c2dfb::sim::event::{EventQueue, HeapEventQueue};
+use c2dfb::topology::{GenTopology, Neighborhood};
+
+/// A random generator-capable topology with an m it accepts.
+fn random_gen_topology(g: &mut Gen) -> (Topology, usize) {
+    match g.usize_in(0, 3) {
+        0 => (Topology::Ring, g.usize_in(3, 90)),
+        1 => (Topology::Exponential, g.usize_in(3, 90)),
+        2 => (Topology::Torus, g.usize_in(4, 90)),
+        _ => {
+            let k = 2 * g.usize_in(1, 4) as u32; // 2, 4, 6, 8
+            // Circulant feasibility: offset 1 plus k/2 − 1 distinct offsets
+            // in [2, (m−1)/2] needs m ≥ k + 2 or so; stay well above.
+            let m = g.usize_in(k as usize + 3, 90);
+            (Topology::RandomRegular { k, seed: g.rng.next_u64() }, m)
+        }
+    }
+}
+
+/// Every generator topology is a valid gossip graph at any (m, seed):
+/// sorted self-loop-free neighbor lists, symmetric edges, degree
+/// consistent with the advertised `degree(i)`, connected, and a
+/// symmetric Metropolis weight function whose rows sum to 1.
+#[test]
+fn prop_generator_topologies_are_valid_graphs() {
+    check("gen-valid", 60, |g| {
+        let (t, m) = random_gen_topology(g);
+        let gt = GenTopology::new(t, m).map_err(|e| format!("{t:?} m={m}: {e}"))?;
+        ensure(gt.node_count() == m, "node count")?;
+        let mut nbrs = Vec::new();
+        let mut back = Vec::new();
+        let mut seen = vec![false; m];
+        let mut frontier = vec![0usize];
+        seen[0] = true;
+        let mut reached = 1usize;
+        while let Some(i) = frontier.pop() {
+            gt.neighbors_into(i, &mut nbrs);
+            for &j in &nbrs {
+                if !seen[j] {
+                    seen[j] = true;
+                    reached += 1;
+                    frontier.push(j);
+                }
+            }
+        }
+        ensure(reached == m, format!("{t:?} m={m}: only {reached}/{m} reachable"))?;
+        for i in 0..m {
+            gt.neighbors_into(i, &mut nbrs);
+            ensure(
+                nbrs.windows(2).all(|w| w[0] < w[1]),
+                format!("{t:?} m={m}: node {i} neighbors not sorted-unique"),
+            )?;
+            ensure(!nbrs.contains(&i), format!("{t:?} m={m}: self-loop at {i}"))?;
+            ensure(
+                nbrs.len() == gt.degree(i),
+                format!("{t:?} m={m}: node {i} degree {} vs list {}", gt.degree(i), nbrs.len()),
+            )?;
+            let mut row_sum = gt.mix_weight(i, i);
+            for &j in &nbrs {
+                gt.neighbors_into(j, &mut back);
+                ensure(
+                    back.binary_search(&i).is_ok(),
+                    format!("{t:?} m={m}: edge {i}->{j} not symmetric"),
+                )?;
+                let w = gt.mix_weight(i, j);
+                ensure(w > 0.0, format!("{t:?} m={m}: non-positive edge weight"))?;
+                ensure(
+                    w.to_bits() == gt.mix_weight(j, i).to_bits(),
+                    format!("{t:?} m={m}: weight ({i},{j}) not symmetric"),
+                )?;
+                row_sum += w;
+            }
+            ensure_close(row_sum, 1.0, 1e-9, &format!("{t:?} m={m}: row {i} sum"))?;
+        }
+        Ok(())
+    });
+}
+
+/// The O(1) calendar queue pops the exact sequence the binary heap pops
+/// on any random stream — interleaved pushes/pops, duplicate times, and
+/// times far beyond the initial bucket horizon included.  Equal
+/// timestamps break ties by insertion order in both queues.
+#[test]
+fn prop_calendar_queue_matches_heap_order() {
+    check("calendar-vs-heap", 80, |g| {
+        let mut cal: EventQueue<u32> = EventQueue::new();
+        let mut heap: HeapEventQueue<u32> = HeapEventQueue::new();
+        let ops = g.usize_in(1, 200);
+        // A small palette of times forces plenty of exact ties.
+        let palette: Vec<f64> = (0..g.usize_in(2, 12))
+            .map(|_| g.f32_in(0.0, 50.0) as f64 * if g.bool() { 1.0 } else { 1e4 })
+            .collect();
+        let mut next_id = 0u32;
+        for _ in 0..ops {
+            if g.bool() || cal.is_empty() {
+                let t = *g.choose(&palette);
+                cal.push(t, next_id);
+                heap.push(t, next_id);
+                next_id += 1;
+            } else {
+                let a = cal.pop();
+                let b = heap.pop();
+                ensure(
+                    a.map(|(t, v)| (t.to_bits(), v)) == b.map(|(t, v)| (t.to_bits(), v)),
+                    format!("mid-stream pop diverged: {a:?} vs {b:?}"),
+                )?;
+            }
+            ensure(cal.len() == heap.len(), "length drifted")?;
+            ensure(
+                cal.peek_time().map(f64::to_bits) == heap.peek_time().map(f64::to_bits),
+                "peek_time drifted",
+            )?;
+        }
+        while let Some(b) = heap.pop() {
+            let a = cal.pop();
+            ensure(
+                a.map(|(t, v)| (t.to_bits(), v)) == Some((b.0.to_bits(), b.1)),
+                format!("drain pop diverged: {a:?} vs {b:?}"),
+            )?;
+        }
+        ensure(cal.pop().is_none(), "calendar queue had extra events")
+    });
+}
+
+/// The strided consensus estimator degrades gracefully: stride 1 is
+/// bit-exact, the lazy row-fill entry point matches the materialized
+/// entry point bitwise for every variant, and on a consensus-reached
+/// state every stride reports exactly zero.
+#[test]
+fn prop_strided_estimator_converges_to_exact() {
+    check("estimator-strides", 60, |g| {
+        let m = g.usize_in(2, 120);
+        let d = g.usize_in(1, 24);
+        let rows: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(d, 1.5)).collect();
+        let exact = linalg::consensus_err_sq(&rows);
+        let variants = [
+            ConsensusEstimator::Exact,
+            ConsensusEstimator::Strided { stride: 1 },
+            ConsensusEstimator::Strided { stride: g.usize_in(2, 16) },
+            ConsensusEstimator::Auto { threshold: g.usize_in(1, 150) },
+        ];
+        for est in variants {
+            let direct = est.estimate(&rows);
+            let lazy = est.estimate_sampled(m, d, |i, out| out.copy_from_slice(&rows[i]));
+            ensure(
+                direct.to_bits() == lazy.to_bits(),
+                format!("{}: lazy {lazy} vs materialized {direct}", est.name()),
+            )?;
+            if est.stride_for(m) == 1 {
+                ensure(
+                    direct.to_bits() == exact.to_bits(),
+                    format!("{}: stride 1 not bit-exact", est.name()),
+                )?;
+            } else {
+                ensure(direct.is_finite() && direct >= 0.0, "strided estimate not finite")?;
+            }
+        }
+        // Consensus reached ⇒ every estimator reports exactly zero.
+        let same: Vec<Vec<f32>> = (0..m).map(|_| rows[0].clone()).collect();
+        for est in variants {
+            ensure(
+                est.estimate(&same) == 0.0,
+                format!("{}: nonzero on consensus state", est.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
 /// Every strict prefix of a valid encoding fails cleanly (the count field
 /// pins the exact payload length), and flipping a single byte never
 /// panics — if the mutant still decodes, it is itself canonical.

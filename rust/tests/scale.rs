@@ -1,0 +1,310 @@
+//! Scale-subsystem equivalence suite: the million-node machinery
+//! (generator topologies, per-round node sampling, the strided consensus
+//! estimator) must be **bitwise invisible** at small m, where we can
+//! afford to run the materialized / unsampled / exact reference next to
+//! it.  Every test here compares full trajectories by `f64::to_bits`,
+//! not tolerances — the 48-scenario golden matrix stays byte-stable only
+//! if these paths are exactly equal, not merely close.
+//!
+//! Layers covered (see docs/SCALE.md):
+//!
+//! * edge contract — `GenTopology` neighbor sets and Metropolis weights
+//!   vs `Graph` + `MixingMatrix` at m ∈ 4..=64;
+//! * driver — C²DFB / C²DFB(nc) runs with `scale.generator = true`
+//!   bitwise equal to materialized runs, with and without sampling;
+//! * engines — generator-capable topologies on the benign event engine
+//!   reproduce the synchronous engine (materialized path);
+//! * sampling — `sampling.rate = 1.0` is the identity, rates < 1 are
+//!   deterministic and strictly cheaper;
+//! * sweep — a generator + sampling grid is byte-identical at
+//!   jobs ∈ {1, 2, max}.
+
+use c2dfb::config::{Algorithm, ExperimentConfig};
+use c2dfb::coordinator::{sweep, sweep::SweepSpec, Runner};
+use c2dfb::metrics::RunMetrics;
+use c2dfb::sim::NetMode;
+use c2dfb::tasks::QuadraticTask;
+use c2dfb::topology::{GenTopology, Graph, MixingMatrix, Neighborhood, Topology};
+
+/// The generator-capable topology set (everything `GenTopology::supports`
+/// accepts), at an m each variant is happy with.
+fn gen_topologies() -> Vec<Topology> {
+    vec![
+        Topology::Ring,
+        Topology::Exponential,
+        Topology::Torus,
+        Topology::RandomRegular { k: 4, seed: 23 },
+    ]
+}
+
+fn quad_cfg(algo: Algorithm, m: usize, topology: Topology) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm: algo,
+        nodes: m,
+        topology,
+        rounds: 4,
+        inner_steps: 4,
+        eta_out: 0.2,
+        eta_in: 0.3,
+        gamma_out: 0.8,
+        gamma_in: 0.6,
+        lambda: 50.0,
+        compressor: "topk:0.5".into(),
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn run(task: &QuadraticTask, cfg: &ExperimentConfig) -> RunMetrics {
+    Runner::new(cfg).task(task).run().expect("run")
+}
+
+fn trace_bits(m: &RunMetrics) -> Vec<(usize, u64, u64)> {
+    m.trace
+        .iter()
+        .map(|p| (p.round, p.loss.to_bits(), p.grad_norm.to_bits()))
+        .collect()
+}
+
+/// Bitwise run equality: trajectory, bytes, messages, virtual time.
+fn assert_runs_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(trace_bits(a), trace_bits(b), "{what}: trajectory diverged");
+    assert_eq!(a.ledger.total_bytes, b.ledger.total_bytes, "{what}: bytes");
+    assert_eq!(a.ledger.messages, b.ledger.messages, "{what}: messages");
+    assert_eq!(a.ledger.gossip_rounds, b.ledger.gossip_rounds, "{what}: rounds");
+    assert_eq!(
+        a.ledger.network_time_s.to_bits(),
+        b.ledger.network_time_s.to_bits(),
+        "{what}: virtual time"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Edge contract: generator vs materialized adjacency + mixing weights.
+// ---------------------------------------------------------------------------
+
+/// For every generator-capable topology and a spread of node counts in
+/// 4..=64 (including awkward odd / prime m), the generator's neighbor
+/// sets and Metropolis weights match `Graph::build` +
+/// `MixingMatrix::metropolis` bitwise at every (i, j).
+#[test]
+fn generator_edge_contract_matches_materialized() {
+    let cases: Vec<(Topology, Vec<usize>)> = vec![
+        (Topology::Ring, vec![4, 5, 7, 16, 33, 64]),
+        (Topology::Exponential, vec![4, 5, 9, 16, 33, 64]),
+        (Topology::Torus, vec![4, 6, 9, 12, 16, 35, 64]),
+        // Circulant rreg needs m > k; start above that floor.
+        (Topology::RandomRegular { k: 4, seed: 23 }, vec![7, 11, 16, 33, 64]),
+    ];
+    for (topology, ms) in cases {
+        for m in ms {
+            let g = GenTopology::new(topology, m)
+                .unwrap_or_else(|e| panic!("{}/{m}: {e}", topology.name()));
+            let graph = Graph::build(topology, m);
+            let mixing = MixingMatrix::metropolis(&graph);
+            assert_eq!(g.node_count(), m);
+            let mut nbrs = Vec::new();
+            for i in 0..m {
+                g.neighbors_into(i, &mut nbrs);
+                assert_eq!(
+                    nbrs,
+                    graph.neighbors(i),
+                    "{}/{m}: neighbor set of node {i}",
+                    topology.name()
+                );
+                assert_eq!(
+                    g.degree(i),
+                    graph.degree(i),
+                    "{}/{m}: degree of node {i}",
+                    topology.name()
+                );
+                for j in 0..m {
+                    assert_eq!(
+                        g.mix_weight(i, j).to_bits(),
+                        mixing.weight(i, j).to_bits(),
+                        "{}/{m}: weight ({i}, {j})",
+                        topology.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver: generator transport ≡ materialized transport, all topologies,
+// several node counts, with and without sampling.
+// ---------------------------------------------------------------------------
+
+/// Full C²DFB / C²DFB(nc) runs with the generator transport reproduce
+/// the materialized transport bitwise across m ∈ {5, 16, 64} — the
+/// range where both paths are affordable.  (m = 5 is skipped for the
+/// torus/rreg variants that want more nodes; each m uses a task sized
+/// to it.)
+#[test]
+fn generator_runs_match_materialized_across_node_counts() {
+    for algo in [Algorithm::C2dfb, Algorithm::C2dfbNc] {
+        for topology in gen_topologies() {
+            for m in [5usize, 16, 64] {
+                if GenTopology::new(topology, m).is_err() {
+                    continue; // e.g. rreg:4 below its m floor
+                }
+                let task = QuadraticTask::generate(m, 6, 0.7, 90 + m as u64);
+                let mut cfg = quad_cfg(algo, m, topology);
+                let reference = run(&task, &cfg);
+                cfg.scale.generator = true;
+                let generated = run(&task, &cfg);
+                assert_runs_identical(
+                    &reference,
+                    &generated,
+                    &format!("{} {} m={m}", algo.name(), topology.name()),
+                );
+            }
+        }
+    }
+}
+
+/// The generator transport stays bitwise identical under per-round node
+/// sampling — the interaction the million-node path actually runs
+/// (implicit topology AND a sparse active set in the same round).
+#[test]
+fn generator_matches_materialized_under_sampling() {
+    for algo in [Algorithm::C2dfb, Algorithm::C2dfbNc] {
+        for topology in gen_topologies() {
+            let m = 12;
+            let task = QuadraticTask::generate(m, 6, 0.7, 131);
+            let mut cfg = quad_cfg(algo, m, topology);
+            cfg.sampling.rate = 0.5;
+            let reference = run(&task, &cfg);
+            cfg.scale.generator = true;
+            let generated = run(&task, &cfg);
+            assert_runs_identical(
+                &reference,
+                &generated,
+                &format!("{} {} sampled", algo.name(), topology.name()),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engines: the generator-capable topologies on the benign event engine.
+// ---------------------------------------------------------------------------
+
+/// Torus and random-regular circulants (the topologies this PR adds to
+/// the generator set) reproduce the synchronous engine exactly on a
+/// benign event-engine run, like the seed's ring/exp tests.
+#[test]
+fn new_generator_topologies_match_on_benign_event_engine() {
+    for topology in [Topology::Torus, Topology::RandomRegular { k: 4, seed: 23 }] {
+        for algo in [Algorithm::C2dfb, Algorithm::Madsbo] {
+            let m = 9;
+            let task = QuadraticTask::generate(m, 8, 0.8, 77);
+            let cfg_sync = quad_cfg(algo, m, topology);
+            let mut cfg_sim = quad_cfg(algo, m, topology);
+            cfg_sim.network.mode = NetMode::Event;
+            let a = run(&task, &cfg_sync);
+            let b = run(&task, &cfg_sim);
+            assert_eq!(trace_bits(&a), trace_bits(&b), "{} {}", algo.name(), topology.name());
+            assert_eq!(a.ledger.total_bytes, b.ledger.total_bytes);
+            assert_eq!(a.ledger.messages, b.ledger.messages);
+            assert_eq!(b.ledger.dropped_messages, 0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sampling: rate = 1.0 is the identity; rates < 1 are deterministic and
+// strictly cheaper.
+// ---------------------------------------------------------------------------
+
+/// `sampling.rate = 1.0` must be bit-identical to a config that never
+/// mentions sampling — no RNG consumed, no ledger drift.
+#[test]
+fn sampling_rate_one_is_the_identity() {
+    for algo in [Algorithm::C2dfb, Algorithm::C2dfbNc, Algorithm::Madsbo] {
+        let m = 8;
+        let task = QuadraticTask::generate(m, 8, 0.8, 55);
+        let cfg_default = quad_cfg(algo, m, Topology::Ring);
+        let mut cfg_explicit = quad_cfg(algo, m, Topology::Ring);
+        cfg_explicit.sampling.rate = 1.0;
+        let a = run(&task, &cfg_default);
+        let b = run(&task, &cfg_explicit);
+        assert_runs_identical(&a, &b, &format!("{} rate=1.0", algo.name()));
+    }
+}
+
+/// Sampled runs are deterministic (same seed ⇒ same bits) and pay
+/// strictly fewer gossip bytes than the full-participation run.
+#[test]
+fn sampled_runs_are_deterministic_and_cheaper() {
+    for algo in [Algorithm::C2dfb, Algorithm::C2dfbNc] {
+        let m = 16;
+        let task = QuadraticTask::generate(m, 6, 0.7, 201);
+        let mut cfg = quad_cfg(algo, m, Topology::Exponential);
+        let full = run(&task, &cfg);
+        cfg.sampling.rate = 0.5;
+        let s1 = run(&task, &cfg);
+        let s2 = run(&task, &cfg);
+        assert_runs_identical(&s1, &s2, &format!("{} sampled repeat", algo.name()));
+        assert!(
+            s1.ledger.total_bytes < full.ledger.total_bytes,
+            "{}: sampled bytes {} !< full bytes {}",
+            algo.name(),
+            s1.ledger.total_bytes,
+            full.ledger.total_bytes
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sweep: generator + sampling grid, byte-identical at any job count.
+// ---------------------------------------------------------------------------
+
+/// A sweep over the generator transport with sampling enabled produces
+/// byte-identical CSV/JSON reports at jobs ∈ {1, 2, max} — scale
+/// features must not leak nondeterminism into the grid.
+#[test]
+fn generator_sampling_sweep_is_job_count_invariant() {
+    let mut spec = SweepSpec::tiny();
+    spec.algos = vec![Algorithm::C2dfb, Algorithm::C2dfbNc];
+    spec.topologies = vec!["ring".into(), "exp".into()];
+    spec.engines = vec![NetMode::Sync];
+    spec.base.nodes = 6;
+    spec.base.scale.generator = true;
+    spec.base.sampling.rate = 0.75;
+
+    let run_at = |jobs: usize| {
+        let mut s = spec.clone();
+        s.jobs = jobs;
+        sweep::run(&s, false).expect("sweep run")
+    };
+    let (grid, reference) = run_at(1);
+    assert!(!reference.is_empty(), "sweep produced no cells");
+    // The scale tables must survive grid expansion (calibration included):
+    // a cell silently running dense/unsampled would make this test vacuous.
+    for c in &grid.cells {
+        assert!(c.cfg.scale.generator, "cell {} lost scale.generator", c.id);
+        assert_eq!(c.cfg.sampling.rate, 0.75, "cell {} lost sampling.rate", c.id);
+    }
+    assert!(
+        reference.iter().all(|o| o.result.is_ok()),
+        "generator + sampling grid must be clean"
+    );
+    let ref_csv = sweep::report_csv(&grid.cells, &reference);
+    let ref_json = sweep::report_json(&grid.cells, &reference).to_string();
+    for jobs in [2usize, 0] {
+        let (g, outcomes) = run_at(jobs);
+        assert_eq!(
+            sweep::diff_outcomes(&reference, &outcomes),
+            None,
+            "jobs={jobs}: outcomes diverged from serial run"
+        );
+        assert_eq!(ref_csv, sweep::report_csv(&g.cells, &outcomes), "jobs={jobs}: csv");
+        assert_eq!(
+            ref_json,
+            sweep::report_json(&g.cells, &outcomes).to_string(),
+            "jobs={jobs}: json"
+        );
+    }
+}
