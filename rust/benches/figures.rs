@@ -8,6 +8,9 @@
 //! cargo bench --bench figures [-- fig2|fig3|fig5|ablation]
 //! ```
 
+// Bench timing reads the wall clock by design (docs/LINT.md R1).
+#![allow(clippy::disallowed_methods)]
+
 use c2dfb::coordinator::experiments::{compressor_ablation, fig2, fig3, fig5, HarnessOpts};
 use c2dfb::runtime::ArtifactRegistry;
 

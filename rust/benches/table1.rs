@@ -9,6 +9,9 @@
 //! cargo bench --bench table1
 //! ```
 
+// Bench timing reads the wall clock by design (docs/LINT.md R1).
+#![allow(clippy::disallowed_methods)]
+
 use c2dfb::coordinator::experiments::{table1, HarnessOpts};
 use c2dfb::runtime::ArtifactRegistry;
 

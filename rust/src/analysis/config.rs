@@ -1,0 +1,202 @@
+//! `lint.toml` — the checked-in policy file for `c2dfb lint`.
+//!
+//! The format rides on the repo's own TOML subset parser
+//! ([`crate::config::toml`]): one `[R*]` section per rule, with two key
+//! families (numbered so every entry is one greppable line):
+//!
+//! * `pathN = "…"` — scope the rule to the listed files/directories
+//!   (used by the path-scoped rules R3 and R6; a rule with no `pathN`
+//!   keys applies to every scanned file).
+//! * `allowN = "<path> -- <reason>"` — suppress the rule in one file.
+//!   The reason is MANDATORY and lives here, in review-able history,
+//!   which is the point: every exemption is a written claim that the
+//!   contract holds for a documented reason (docs/LINT.md).
+//!
+//! A directory scope/allow ends with `/`.  Unknown rule ids and
+//! reason-less allows are hard errors — a typo must not silently turn a
+//! rule off.
+
+use crate::config::toml;
+use std::collections::BTreeMap;
+
+/// One `allowN` entry: `rule` is the section it appeared under.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub reason: String,
+}
+
+/// Parsed lint policy.
+#[derive(Clone, Debug, Default)]
+pub struct LintConfig {
+    /// Rule id → explicit scope paths (empty = rule applies everywhere).
+    pub scopes: BTreeMap<String, Vec<String>>,
+    pub allows: Vec<AllowEntry>,
+}
+
+/// The rules that may appear as `[R*]` sections.
+pub const RULE_IDS: [&str; 6] = ["R1", "R2", "R3", "R4", "R5", "R6"];
+
+/// Built-in scopes used when no `lint.toml` is present: R3 covers the
+/// hostile-byte parsers, R6 the trace emitter; everything else is
+/// tree-wide.  The shipped `rust/lint.toml` mirrors these.
+pub fn default_scopes() -> BTreeMap<String, Vec<String>> {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "R3".to_string(),
+        [
+            "src/compress/message.rs",
+            "src/daemon/http.rs",
+            "src/daemon/tcp.rs",
+            "src/util/json.rs",
+            "src/config/toml.rs",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+    );
+    m.insert("R6".to_string(), vec!["src/obs/mod.rs".to_string()]);
+    m
+}
+
+impl LintConfig {
+    /// Policy with the built-in scopes and no allows (tests, and `c2dfb
+    /// lint` when no `lint.toml` is found).
+    pub fn default_config() -> LintConfig {
+        LintConfig { scopes: default_scopes(), allows: Vec::new() }
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<LintConfig, String> {
+        let map = toml::parse(text)?;
+        let mut cfg = LintConfig { scopes: default_scopes(), allows: Vec::new() };
+        // First pass: any rule section that declares pathN keys replaces
+        // that rule's default scope entirely.
+        let mut declared_paths: BTreeMap<String, Vec<(String, String)>> = BTreeMap::new();
+        for (key, val) in &map {
+            let (rule, field) = key
+                .split_once('.')
+                .ok_or_else(|| format!("lint.toml: top-level key {key:?}; entries live in [R*] sections"))?;
+            if !RULE_IDS.contains(&rule) {
+                return Err(format!("lint.toml: unknown rule section [{rule}]"));
+            }
+            let sval = val
+                .as_str()
+                .ok_or_else(|| format!("lint.toml: {key} must be a string"))?;
+            if field.starts_with("path") {
+                declared_paths
+                    .entry(rule.to_string())
+                    .or_default()
+                    .push((field.to_string(), sval.to_string()));
+            } else if field.starts_with("allow") {
+                let (path, reason) = sval.split_once(" -- ").ok_or_else(|| {
+                    format!(
+                        "lint.toml: {key}: missing \" -- reason\"; every allow entry \
+                         must carry a written justification"
+                    )
+                })?;
+                let (path, reason) = (path.trim(), reason.trim());
+                if path.is_empty() || reason.is_empty() {
+                    return Err(format!("lint.toml: {key}: empty path or reason"));
+                }
+                cfg.allows.push(AllowEntry {
+                    rule: rule.to_string(),
+                    path: path.to_string(),
+                    reason: reason.to_string(),
+                });
+            } else {
+                return Err(format!(
+                    "lint.toml: {key}: unknown field {field:?} (expected pathN or allowN)"
+                ));
+            }
+        }
+        for (rule, mut entries) in declared_paths {
+            entries.sort(); // key order (path1, path2, …), deterministic
+            cfg.scopes
+                .insert(rule, entries.into_iter().map(|(_, p)| p).collect());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<LintConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        LintConfig::from_toml_str(&text)
+    }
+
+    /// Does `rule` apply to `file`?  (True when the rule has no scope or
+    /// any scope entry matches.)
+    pub fn rule_applies(&self, rule: &str, file: &str) -> bool {
+        match self.scopes.get(rule) {
+            None => true,
+            Some(paths) if paths.is_empty() => true,
+            Some(paths) => paths.iter().any(|p| path_matches(p, file)),
+        }
+    }
+
+    /// Index of the allow entry suppressing `rule` in `file`, if any.
+    pub fn allow_for(&self, rule: &str, file: &str) -> Option<usize> {
+        self.allows
+            .iter()
+            .position(|a| a.rule == rule && path_matches(&a.path, file))
+    }
+}
+
+/// Path matching: an entry ending in `/` is a directory prefix; anything
+/// else must match the file path exactly or as a `/`-anchored suffix
+/// (so `src/obs/mod.rs` matches `rust/src/obs/mod.rs` when the linter is
+/// invoked from the repo root).
+pub fn path_matches(entry: &str, file: &str) -> bool {
+    let f = file.replace('\\', "/");
+    if let Some(dir) = entry.strip_suffix('/') {
+        f == dir || f.starts_with(&format!("{dir}/")) || f.contains(&format!("/{dir}/"))
+    } else {
+        f == entry || f.ends_with(&format!("/{entry}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scopes_and_allows() {
+        let cfg = LintConfig::from_toml_str(
+            "[R1]\nallow1 = \"src/obs/mod.rs -- profiler is wall-clock by design\"\n\
+             [R3]\npath1 = \"src/compress/message.rs\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.allows.len(), 1);
+        assert_eq!(cfg.allows[0].rule, "R1");
+        assert!(cfg.allows[0].reason.contains("profiler"));
+        assert_eq!(cfg.scopes["R3"], vec!["src/compress/message.rs".to_string()]);
+        // R6 keeps its built-in scope when the file does not override it.
+        assert!(cfg.rule_applies("R6", "src/obs/mod.rs"));
+        assert!(!cfg.rule_applies("R6", "src/main.rs"));
+        assert!(cfg.rule_applies("R1", "src/anything.rs"));
+        assert_eq!(cfg.allow_for("R1", "rust/src/obs/mod.rs"), Some(0));
+        assert_eq!(cfg.allow_for("R1", "src/main.rs"), None);
+    }
+
+    #[test]
+    fn reasonless_allow_is_an_error() {
+        let e = LintConfig::from_toml_str("[R1]\nallow1 = \"src/obs/mod.rs\"\n")
+            .unwrap_err();
+        assert!(e.contains("reason"), "{e}");
+    }
+
+    #[test]
+    fn unknown_rule_is_an_error() {
+        assert!(LintConfig::from_toml_str("[R9]\npath1 = \"x\"\n").is_err());
+        assert!(LintConfig::from_toml_str("[R1]\nwhatever = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn dir_entries_match_prefixes() {
+        assert!(path_matches("tests/lint_fixtures/", "tests/lint_fixtures/r1.rs"));
+        assert!(path_matches("tests/lint_fixtures/", "rust/tests/lint_fixtures/r1.rs"));
+        assert!(!path_matches("tests/lint_fixtures/", "src/lib.rs"));
+        assert!(path_matches("src/obs/mod.rs", "src/obs/mod.rs"));
+        assert!(!path_matches("src/obs/mod.rs", "xsrc/obs/mod.rs"));
+    }
+}

@@ -1,0 +1,408 @@
+//! A small hand-rolled Rust lexer for the static-analysis pass.
+//!
+//! The goal is NOT a full grammar — only a token stream faithful enough
+//! that rules never fire inside string literals, char/byte literals,
+//! comments, or raw strings, and can reason about adjacency ("`[` right
+//! after an identifier is an index expression", "`unsafe` preceded by a
+//! `// SAFETY:` comment").  Everything the rules in
+//! [`crate::analysis::rules`] match is an [`Ident`], [`Punct`] or
+//! [`Str`] token; comments are kept in the stream (as [`Comment`]) so
+//! the safety-comment rule can see them, and every token carries its
+//! 1-based start line for reporting.
+//!
+//! [`Ident`]: TokKind::Ident
+//! [`Punct`]: TokKind::Punct
+//! [`Str`]: TokKind::Str
+//! [`Comment`]: TokKind::Comment
+
+/// Token classification.  `Str` holds the raw source text between the
+/// delimiters (escapes NOT processed — rules match on source bytes);
+/// `Comment` holds the text after `//` / between `/* */`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// String or byte-string literal (cooked or raw).
+    Str,
+    /// Char or byte literal (`'x'`, `b'\n'`).
+    Char,
+    Num,
+    /// A single punctuation character.
+    Punct(char),
+    /// Line or block comment (doc comments included).
+    Comment,
+    /// A lifetime (`'a`, `'static`).
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// Source text: the identifier itself, the literal's inner text, the
+    /// comment body, or the punctuation character.
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Lex `src` into a token stream.  Unknown bytes are skipped (they can
+/// only occur in pathological input; this lexer is for OUR source tree,
+/// and the self-test fixtures prove the cases the rules depend on).
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { b: src.as_bytes(), src, i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    src: &'a str,
+    i: usize,
+    line: u32,
+    out: Vec<Tok>,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Vec<Tok> {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                c if c.is_ascii_whitespace() => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.cooked_string(false),
+                b'\'' => self.char_or_lifetime(),
+                b'r' | b'b' if self.raw_or_byte_prefix() => {}
+                c if is_ident_start(c) => self.ident(),
+                c if c.is_ascii_digit() => self.number(),
+                c if c.is_ascii() => {
+                    self.push(TokKind::Punct(c as char), self.i, self.i + 1, self.line);
+                    self.i += 1;
+                }
+                // Non-ASCII outside strings/comments: skip the byte.
+                _ => self.i += 1,
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, end: usize, line: u32) {
+        let text = self.src.get(start..end).unwrap_or_default().to_string();
+        self.out.push(Tok { kind, text, line });
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i + 2;
+        let line = self.line;
+        let mut j = start;
+        while j < self.b.len() && self.b[j] != b'\n' {
+            j += 1;
+        }
+        self.push(TokKind::Comment, start, j, line);
+        self.i = j;
+    }
+
+    fn block_comment(&mut self) {
+        let start = self.i + 2;
+        let line = self.line;
+        let mut depth = 1usize;
+        let mut j = start;
+        while j < self.b.len() && depth > 0 {
+            if self.b[j] == b'\n' {
+                self.line += 1;
+                j += 1;
+            } else if self.b[j] == b'/' && self.b.get(j + 1) == Some(&b'*') {
+                depth += 1;
+                j += 2;
+            } else if self.b[j] == b'*' && self.b.get(j + 1) == Some(&b'/') {
+                depth -= 1;
+                j += 2;
+            } else {
+                j += 1;
+            }
+        }
+        let end = j.saturating_sub(2).max(start);
+        self.push(TokKind::Comment, start, end, line);
+        self.i = j;
+    }
+
+    /// Cooked (escape-processing) string starting at the current `"`.
+    /// `byte` marks `b"..."` — lexed identically.
+    fn cooked_string(&mut self, _byte: bool) {
+        let line = self.line;
+        let start = self.i + 1;
+        let mut j = start;
+        while j < self.b.len() {
+            match self.b[j] {
+                b'\\' => j += 2,
+                b'"' => break,
+                b'\n' => {
+                    self.line += 1;
+                    j += 1;
+                }
+                _ => j += 1,
+            }
+        }
+        self.push(TokKind::Str, start, j.min(self.b.len()), line);
+        self.i = (j + 1).min(self.b.len());
+    }
+
+    /// Raw string `r"…"`, `r#"…"#`, … starting at the current `"` with
+    /// `hashes` trailing `#`s expected after the closing quote.
+    fn raw_string(&mut self, hashes: usize) {
+        let line = self.line;
+        let start = self.i + 1;
+        let mut j = start;
+        while j < self.b.len() {
+            if self.b[j] == b'\n' {
+                self.line += 1;
+                j += 1;
+                continue;
+            }
+            if self.b[j] == b'"' {
+                let close = &self.b[j + 1..];
+                if close.len() >= hashes && close.iter().take(hashes).all(|&c| c == b'#') {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        self.push(TokKind::Str, start, j.min(self.b.len()), line);
+        self.i = (j + 1 + hashes).min(self.b.len());
+    }
+
+    /// Handle `r"`, `r#"`, `br"`, `b"`, `b'`, and raw identifiers
+    /// (`r#ident`).  Returns true when the current position was consumed
+    /// as one of those; false lets the caller fall through to a plain
+    /// identifier starting with `r`/`b`.
+    fn raw_or_byte_prefix(&mut self) -> bool {
+        let c = self.b[self.i];
+        let mut j = self.i + 1;
+        if c == b'b' && self.b.get(j) == Some(&b'\'') {
+            // Byte literal b'x'.
+            self.i += 1;
+            self.char_literal();
+            return true;
+        }
+        if c == b'b' && self.b.get(j) == Some(&b'r') {
+            j += 1;
+        }
+        let mut hashes = 0usize;
+        while self.b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        match self.b.get(j) {
+            Some(&b'"') if c == b'b' && self.b.get(self.i + 1) == Some(&b'"') => {
+                // b"..." cooked byte string.
+                self.i = j;
+                self.cooked_string(true);
+                true
+            }
+            Some(&b'"') if hashes > 0 || matches!((c, self.b.get(self.i + 1)), (b'r', Some(&b'"'))) || (c == b'b' && self.b.get(self.i + 1) == Some(&b'r')) => {
+                // r"...", r#"..."#, br"...", br#"..."#.
+                self.i = j;
+                self.raw_string(hashes);
+                true
+            }
+            Some(&n) if c == b'r' && hashes == 1 && is_ident_start(n) => {
+                // Raw identifier r#ident.
+                self.i = j;
+                self.ident();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Char literal starting at the current `'` (after any `b` prefix).
+    fn char_literal(&mut self) {
+        let line = self.line;
+        let start = self.i + 1;
+        let mut j = start;
+        if self.b.get(j) == Some(&b'\\') {
+            j += 2;
+        } else if j < self.b.len() {
+            j += 1;
+            // Multi-byte UTF-8 scalar: advance to the closing quote.
+            while j < self.b.len() && self.b[j] != b'\'' {
+                j += 1;
+            }
+        }
+        // Escapes like \u{1F600} span to the closing quote.
+        while j < self.b.len() && self.b[j] != b'\'' {
+            j += 1;
+        }
+        self.push(TokKind::Char, start, j.min(self.b.len()), line);
+        self.i = (j + 1).min(self.b.len());
+    }
+
+    /// Disambiguate `'a` (lifetime) from `'a'` (char literal).
+    fn char_or_lifetime(&mut self) {
+        match (self.peek(1), self.peek(2)) {
+            // '\... is always a char literal.
+            (Some(b'\\'), _) => self.char_literal(),
+            // 'x' — char literal.
+            (Some(_), Some(b'\'')) => self.char_literal(),
+            // Non-ASCII after the quote: multi-byte char literal.
+            (Some(n), _) if !n.is_ascii() => self.char_literal(),
+            // 'ident not followed by a quote: lifetime.
+            (Some(n), _) if is_ident_start(n) => {
+                let line = self.line;
+                let start = self.i + 1;
+                let mut j = start;
+                while j < self.b.len() && is_ident_cont(self.b[j]) {
+                    j += 1;
+                }
+                self.push(TokKind::Lifetime, start, j, line);
+                self.i = j;
+            }
+            _ => {
+                // Stray quote; emit as punctuation and move on.
+                self.push(TokKind::Punct('\''), self.i, self.i + 1, self.line);
+                self.i += 1;
+            }
+        }
+    }
+
+    fn ident(&mut self) {
+        let start = self.i;
+        let mut j = start;
+        while j < self.b.len() && is_ident_cont(self.b[j]) {
+            j += 1;
+        }
+        self.push(TokKind::Ident, start, j, self.line);
+        self.i = j;
+    }
+
+    /// Numbers: decimal/hex/octal/binary ints, floats, exponents, type
+    /// suffixes.  A `.` is consumed only when a digit follows, so range
+    /// expressions (`0..n`) never swallow the identifier after them.
+    fn number(&mut self) {
+        let start = self.i;
+        let mut j = start;
+        if self.b[j] == b'0'
+            && matches!(self.b.get(j + 1), Some(&b'x') | Some(&b'o') | Some(&b'b'))
+        {
+            j += 2;
+            while j < self.b.len()
+                && (self.b[j].is_ascii_hexdigit() || self.b[j] == b'_')
+            {
+                j += 1;
+            }
+        } else {
+            while j < self.b.len() && (self.b[j].is_ascii_digit() || self.b[j] == b'_') {
+                j += 1;
+            }
+            if self.b.get(j) == Some(&b'.')
+                && self.b.get(j + 1).is_some_and(|c| c.is_ascii_digit())
+            {
+                j += 1;
+                while j < self.b.len() && (self.b[j].is_ascii_digit() || self.b[j] == b'_') {
+                    j += 1;
+                }
+            }
+            if matches!(self.b.get(j), Some(&b'e') | Some(&b'E')) {
+                let mut k = j + 1;
+                if matches!(self.b.get(k), Some(&b'+') | Some(&b'-')) {
+                    k += 1;
+                }
+                if self.b.get(k).is_some_and(|c| c.is_ascii_digit()) {
+                    j = k;
+                    while j < self.b.len() && self.b[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+            }
+        }
+        // Type suffix (u32, f64, usize, …).
+        while j < self.b.len() && is_ident_cont(self.b[j]) {
+            j += 1;
+        }
+        self.push(TokKind::Num, start, j, self.line);
+        self.i = j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_strings_comments() {
+        let toks = kinds(r#"let x = "Instant"; // Instant"#);
+        assert_eq!(toks[0], (TokKind::Ident, "let".to_string()));
+        assert_eq!(toks[1], (TokKind::Ident, "x".to_string()));
+        assert_eq!(toks[2], (TokKind::Punct('='), "=".to_string()));
+        assert_eq!(toks[3], (TokKind::Str, "Instant".to_string()));
+        assert_eq!(toks[4], (TokKind::Punct(';'), ";".to_string()));
+        assert_eq!(toks[5], (TokKind::Comment, " Instant".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        let toks = kinds(r##"let s = r#"a "quoted" HashMap"#;"##);
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Str && t.contains("HashMap")));
+        assert!(!toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "HashMap"));
+        let toks = kinds("r#type");
+        assert_eq!(toks, vec![(TokKind::Ident, "type".to_string())]);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let toks = kinds(r#"m(b"\r\n\r\n", b' ', b'[')"#);
+        assert!(toks.iter().any(|(k, _)| *k == TokKind::Str));
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::Char).count(), 2);
+        // The '[' inside the byte char must NOT become punctuation.
+        assert!(!toks.iter().any(|(k, _)| *k == TokKind::Punct('[')));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::Char).count(), 1);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let toks = kinds("for i in 0..rounds { a[i] = 1.5e-3f64; }");
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "rounds"));
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Num && t == "1.5e-3f64"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = kinds("/* outer /* inner */ still */ ident");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[1], (TokKind::Ident, "ident".to_string()));
+    }
+
+    #[test]
+    fn lines_are_tracked() {
+        let toks = lex("a\nb\n\"s\"\n// c");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3);
+        assert_eq!(toks[3].line, 4);
+    }
+}

@@ -1,0 +1,269 @@
+//! `c2dfb lint` — a std-only static-analysis pass that machine-checks
+//! the repo's determinism and hostile-input contracts at the source
+//! level (docs/LINT.md).
+//!
+//! The value proposition this crate sells — bit-identical parallel
+//! sweeps, byte-stable goldens, a wall-clock-free trace, a decode path
+//! that never panics on attacker bytes — is otherwise enforced only at
+//! runtime, after a careless `Instant::now()` or `HashMap` iteration has
+//! already shipped.  This pass refuses those constructs up front:
+//!
+//! * [`lexer`] — a small string/char/comment/raw-string-aware Rust
+//!   lexer, so rules never fire inside literals or docs;
+//! * [`rules`] — the R1–R6 catalog, each grounded in a documented
+//!   contract;
+//! * [`config`] — `rust/lint.toml`, the checked-in per-rule scopes and
+//!   reason-carrying allowlist.
+//!
+//! The pass is self-testing (`tests/lint.rs`: one bad fixture per rule
+//! must trigger exactly that rule; the full `src/` tree must pass
+//! clean) and runs in CI as a hard gate alongside `cargo clippy`
+//! (rust/clippy.toml carries the toolchain-native twin of R1/R2).
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+pub use config::{path_matches, AllowEntry, LintConfig};
+pub use rules::{Finding, RuleInfo, RULES};
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Result of linting a file set.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    /// Files scanned (deterministic sorted order).
+    pub files: Vec<String>,
+    /// Allowlist entries that suppressed at least one finding.
+    pub used_allows: Vec<AllowEntry>,
+    /// Allowlist entries that matched nothing — stale, candidates for
+    /// deletion (reported, not fatal).
+    pub unused_allows: Vec<AllowEntry>,
+}
+
+/// Lint one in-memory source file: scope rules by `path`, run them, then
+/// apply the allowlist.  Returns surviving findings plus the indices of
+/// allow entries that suppressed something.
+fn lint_source_impl(
+    path: &str,
+    src: &str,
+    cfg: &LintConfig,
+) -> (Vec<Finding>, Vec<usize>) {
+    let toks = lexer::lex(src);
+    let raw = rules::run_rules(path, &toks, |rule| cfg.rule_applies(rule, path));
+    let mut used = Vec::new();
+    let mut kept = Vec::new();
+    for finding in raw {
+        match cfg.allow_for(finding.rule, path) {
+            Some(idx) => {
+                if !used.contains(&idx) {
+                    used.push(idx);
+                }
+            }
+            None => kept.push(finding),
+        }
+    }
+    (kept, used)
+}
+
+/// Public single-file entry point (the allowlist is applied).
+pub fn lint_source(path: &str, src: &str, cfg: &LintConfig) -> Vec<Finding> {
+    lint_source_impl(path, src, cfg).0
+}
+
+/// Recursively collect `.rs` files under `root` in sorted order.
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)
+        .map_err(|e| format!("reading {}: {e}", root.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint a set of files/directories against `cfg`.
+pub fn lint_tree(paths: &[String], cfg: &LintConfig) -> Result<LintReport, String> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs(Path::new(p), &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = LintReport::default();
+    let mut used_all: Vec<usize> = Vec::new();
+    for file in &files {
+        let rel = file.to_string_lossy().replace('\\', "/");
+        let src = std::fs::read_to_string(file)
+            .map_err(|e| format!("reading {}: {e}", file.display()))?;
+        let (findings, used) = lint_source_impl(&rel, &src, cfg);
+        report.findings.extend(findings);
+        for u in used {
+            if !used_all.contains(&u) {
+                used_all.push(u);
+            }
+        }
+        report.files.push(rel);
+    }
+    for (i, a) in cfg.allows.iter().enumerate() {
+        if used_all.contains(&i) {
+            report.used_allows.push(a.clone());
+        } else {
+            report.unused_allows.push(a.clone());
+        }
+    }
+    Ok(report)
+}
+
+impl LintReport {
+    /// Stable machine-readable form (schema pinned by `tests/lint.rs`):
+    /// `{"version":1,"findings":[{rule,path,line,message}],
+    ///   "files_scanned":N,"allow_used":N,"allow_unused":[…]}`.
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("rule", Json::str(f.rule)),
+                    ("path", Json::str(&f.path)),
+                    ("line", Json::num(f.line as f64)),
+                    ("message", Json::str(&f.message)),
+                ])
+            })
+            .collect();
+        let unused: Vec<Json> = self
+            .unused_allows
+            .iter()
+            .map(|a| Json::obj(vec![("rule", Json::str(&a.rule)), ("path", Json::str(&a.path))]))
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("findings", Json::Arr(findings)),
+            ("files_scanned", Json::num(self.files.len() as f64)),
+            ("allow_used", Json::num(self.used_allows.len() as f64)),
+            ("allow_unused", Json::Arr(unused)),
+        ])
+    }
+
+    /// Human-readable form, one `path:line: rule name: message` per
+    /// finding (clickable in most terminals/editors).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let name = RULES
+                .iter()
+                .find(|r| r.id == f.rule)
+                .map(|r| r.name)
+                .unwrap_or("?");
+            out.push_str(&format!(
+                "{}:{}: {} {}: {}\n",
+                f.path, f.line, f.rule, name, f.message
+            ));
+        }
+        for a in &self.unused_allows {
+            out.push_str(&format!(
+                "note: stale allowlist entry {} {} (matched nothing; delete it)\n",
+                a.rule, a.path
+            ));
+        }
+        out.push_str(&format!(
+            "{} finding(s) in {} file(s); {} allowlist entr{} in use\n",
+            self.findings.len(),
+            self.files.len(),
+            self.used_allows.len(),
+            if self.used_allows.len() == 1 { "y" } else { "ies" },
+        ));
+        out
+    }
+}
+
+/// `--fix-safety-stubs`: insert a `// SAFETY: FIXME` stub above every R4
+/// finding so the violation is visible in the diff (the stub still needs
+/// a human argument; the lint keeps failing until the FIXME is replaced
+/// — the stub only localizes the work).  Returns stubs written.
+pub fn fix_safety_stubs(report: &LintReport) -> Result<usize, String> {
+    let mut by_file: Vec<(&str, Vec<u32>)> = Vec::new();
+    for f in report.findings.iter().filter(|f| f.rule == "R4") {
+        match by_file.iter_mut().find(|(p, _)| *p == f.path) {
+            Some((_, lines)) => lines.push(f.line),
+            None => by_file.push((&f.path, vec![f.line])),
+        }
+    }
+    let mut written = 0usize;
+    for (path, mut lines) in by_file {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        let mut out: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        lines.sort_unstable();
+        lines.dedup();
+        // Insert bottom-up so earlier line numbers stay valid.
+        for &line in lines.iter().rev() {
+            let idx = (line as usize).saturating_sub(1).min(out.len());
+            let indent: String = out
+                .get(idx)
+                .map(|l| l.chars().take_while(|c| c.is_whitespace()).collect())
+                .unwrap_or_default();
+            out.insert(
+                idx,
+                format!("{indent}// SAFETY: FIXME(c2dfb lint): argue why this unsafe is sound."),
+            );
+            written += 1;
+        }
+        let mut joined = out.join("\n");
+        if text.ends_with('\n') {
+            joined.push('\n');
+        }
+        std::fs::write(path, joined).map_err(|e| format!("writing {path}: {e}"))?;
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_suppresses_and_is_tracked() {
+        let cfg = LintConfig::from_toml_str(
+            "[R1]\nallow1 = \"src/wall.rs -- profiler file, wall-clock by design\"\n",
+        )
+        .unwrap();
+        let src = "fn t() { let t0 = Instant::now(); }";
+        assert!(lint_source("src/wall.rs", src, &cfg).is_empty());
+        let none = LintConfig::default_config();
+        assert_eq!(lint_source("src/wall.rs", src, &none).len(), 1);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let report = LintReport {
+            findings: vec![Finding {
+                rule: "R1",
+                path: "src/x.rs".into(),
+                line: 3,
+                message: "m".into(),
+            }],
+            files: vec!["src/x.rs".into()],
+            used_allows: vec![],
+            unused_allows: vec![],
+        };
+        let j = report.to_json();
+        assert_eq!(j.get("version").and_then(|v| v.as_f64()), Some(1.0));
+        let f = &j.get("findings").and_then(|f| f.as_arr()).unwrap()[0];
+        for key in ["rule", "path", "line", "message"] {
+            assert!(f.get(key).is_some(), "missing {key}");
+        }
+    }
+}

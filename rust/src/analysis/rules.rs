@@ -1,0 +1,449 @@
+//! The rule catalog for `c2dfb lint` (docs/LINT.md).
+//!
+//! Each rule protects one documented runtime contract by refusing the
+//! source-level constructs that can break it, *before* anything runs:
+//!
+//! | id | name                   | contract it protects                     |
+//! |----|------------------------|------------------------------------------|
+//! | R1 | no-wall-clock          | bit-identical replays & byte-stable traces (docs/OBS.md, docs/SWEEP.md) |
+//! | R2 | no-unordered-iteration | deterministic iteration everywhere (HashMap/HashSet banned; BTreeMap orders by construction) |
+//! | R3 | panic-free-decode      | hostile bytes never panic the decode/request-parsing paths (docs/SERVE.md) |
+//! | R4 | safety-comments        | every `unsafe` carries a `// SAFETY:` argument |
+//! | R5 | rng-discipline         | all randomness flows through the crate's seeded `Rng` (docs/SWEEP.md seed contract) |
+//! | R6 | no-wall-keys           | the `c2dfb trace` "no key containing wall" check, applied statically at the emit sites (docs/OBS.md) |
+//!
+//! Rules match the token stream from [`crate::analysis::lexer`], so they
+//! never fire inside string literals, char literals, comments, or raw
+//! strings — and `#[cfg(test)]`/`#[test]` items are skipped entirely
+//! (the contracts bind shipped code; tests exercise panics on purpose).
+
+use super::lexer::{Tok, TokKind};
+
+/// One reported violation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// Static rule metadata (rendered by `--format json` and docs tooling).
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub contract: &'static str,
+}
+
+pub const RULES: [RuleInfo; 6] = [
+    RuleInfo {
+        id: "R1",
+        name: "no-wall-clock",
+        contract: "deterministic modules never read the wall clock (docs/OBS.md)",
+    },
+    RuleInfo {
+        id: "R2",
+        name: "no-unordered-iteration",
+        contract: "no HashMap/HashSet in deterministic modules; BTreeMap orders by construction (docs/SWEEP.md)",
+    },
+    RuleInfo {
+        id: "R3",
+        name: "panic-free-decode",
+        contract: "hostile bytes return Err, never panic (docs/SERVE.md)",
+    },
+    RuleInfo {
+        id: "R4",
+        name: "safety-comments",
+        contract: "every unsafe block argues its soundness in a // SAFETY: comment",
+    },
+    RuleInfo {
+        id: "R5",
+        name: "rng-discipline",
+        contract: "all randomness is derived from the run seed via the crate Rng (docs/SWEEP.md)",
+    },
+    RuleInfo {
+        id: "R6",
+        name: "no-wall-keys",
+        contract: "no trace key contains 'wall' (the c2dfb trace schema check, statically)",
+    },
+];
+
+/// Keywords that can legitimately precede `[` without forming an index
+/// expression (`&mut [f32]`, `for x in [..]`, `dyn [..]`, …).
+const KEYWORDS: [&str; 35] = [
+    "as", "async", "await", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move",
+    "mut", "pub", "ref", "return", "self", "Self", "static", "struct", "super", "trait",
+    "type", "unsafe", "use", "where",
+];
+
+/// Compute which tokens sit inside `#[cfg(test)]` / `#[test]` items (the
+/// attribute itself, the item header, and its brace-delimited body) so
+/// rules can skip them.
+pub fn test_skip_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut skip = vec![false; toks.len()];
+    let sig: Vec<usize> = (0..toks.len())
+        .filter(|&i| toks[i].kind != TokKind::Comment)
+        .collect();
+    let mut s = 0usize;
+    while s < sig.len() {
+        if is_punct(toks, &sig, s, '#') && is_punct(toks, &sig, s + 1, '[') {
+            // Collect the attribute's identifiers up to the matching ']'.
+            let mut depth = 0usize;
+            let mut idents: Vec<&str> = Vec::new();
+            let mut e = s + 1;
+            while e < sig.len() {
+                match &toks[sig[e]].kind {
+                    TokKind::Punct('[') => depth += 1,
+                    TokKind::Punct(']') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    TokKind::Ident => idents.push(&toks[sig[e]].text),
+                    _ => {}
+                }
+                e += 1;
+            }
+            let is_test_attr = idents.as_slice() == ["test"]
+                || (idents.first().copied() == Some("cfg")
+                    && idents.iter().any(|i| *i == "test")
+                    && !idents.iter().any(|i| *i == "not"));
+            if is_test_attr && e < sig.len() {
+                // Skip the attribute, any stacked attributes, and the
+                // following item: to the matching `}` of its first body
+                // brace, or to a top-level `;` for brace-less items.
+                let start_tok = sig[s];
+                let mut k = e + 1;
+                while k + 1 < sig.len()
+                    && is_punct(toks, &sig, k, '#')
+                    && is_punct(toks, &sig, k + 1, '[')
+                {
+                    let mut d = 0usize;
+                    while k < sig.len() {
+                        match &toks[sig[k]].kind {
+                            TokKind::Punct('[') => d += 1,
+                            TokKind::Punct(']') => {
+                                d -= 1;
+                                if d == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                let mut brace = 0usize;
+                let mut entered = false;
+                while k < sig.len() {
+                    match &toks[sig[k]].kind {
+                        TokKind::Punct('{') => {
+                            brace += 1;
+                            entered = true;
+                        }
+                        TokKind::Punct('}') => {
+                            brace = brace.saturating_sub(1);
+                            if entered && brace == 0 {
+                                break;
+                            }
+                        }
+                        TokKind::Punct(';') if !entered => break,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                let end_tok = if k < sig.len() { sig[k] } else { toks.len() - 1 };
+                for slot in skip.iter_mut().take(end_tok + 1).skip(start_tok) {
+                    *slot = true;
+                }
+                s = k + 1;
+                continue;
+            }
+        }
+        s += 1;
+    }
+    skip
+}
+
+/// Run every rule that `applies` says is in scope for `path` over the
+/// token stream; allowlisting happens in the caller.
+pub fn run_rules(
+    path: &str,
+    toks: &[Tok],
+    applies: impl Fn(&str) -> bool,
+) -> Vec<Finding> {
+    let skip = test_skip_mask(toks);
+    // Significant (non-comment, non-skipped) token indices, for
+    // adjacency checks.
+    let sig: Vec<usize> = (0..toks.len())
+        .filter(|&i| toks[i].kind != TokKind::Comment && !skip[i])
+        .collect();
+    let mut out = Vec::new();
+    let f = |rule: &'static str, line: u32, message: String| Finding {
+        rule,
+        path: path.to_string(),
+        line,
+        message,
+    };
+
+    for (s, &i) in sig.iter().enumerate() {
+        let t = &toks[i];
+        let prev = s.checked_sub(1).map(|p| &toks[sig[p]]);
+        let next = sig.get(s + 1).map(|&n| &toks[n]);
+        match &t.kind {
+            TokKind::Ident => {
+                let name = t.text.as_str();
+                if applies("R1") && matches!(name, "Instant" | "SystemTime") {
+                    out.push(f(
+                        "R1",
+                        t.line,
+                        format!("wall-clock type `{name}` in a deterministic module"),
+                    ));
+                }
+                if applies("R1")
+                    && name == "elapsed"
+                    && prev_is_punct(prev, '.')
+                    && next_is_punct(next, '(')
+                {
+                    out.push(f("R1", t.line, "wall-clock read `.elapsed()`".to_string()));
+                }
+                if applies("R2") && matches!(name, "HashMap" | "HashSet") {
+                    out.push(f(
+                        "R2",
+                        t.line,
+                        format!(
+                            "`{name}` in a deterministic module: iteration order is \
+                             randomized per process; use BTreeMap/BTreeSet or allowlist \
+                             with an order-insensitivity argument"
+                        ),
+                    ));
+                }
+                if applies("R3")
+                    && matches!(name, "unwrap" | "expect")
+                    && prev_is_punct(prev, '.')
+                    && next_is_punct(next, '(')
+                {
+                    out.push(f(
+                        "R3",
+                        t.line,
+                        format!("`.{name}()` on a hostile-input path; return Err instead"),
+                    ));
+                }
+                if applies("R3")
+                    && matches!(name, "panic" | "todo" | "unimplemented")
+                    && next_is_punct(next, '!')
+                {
+                    out.push(f(
+                        "R3",
+                        t.line,
+                        format!("`{name}!` on a hostile-input path; return Err instead"),
+                    ));
+                }
+                if applies("R5")
+                    && matches!(
+                        name,
+                        "thread_rng" | "OsRng" | "StdRng" | "SmallRng" | "from_entropy" | "getrandom"
+                    )
+                {
+                    out.push(f(
+                        "R5",
+                        t.line,
+                        format!("foreign RNG `{name}`: all randomness must flow through the crate's seeded Rng"),
+                    ));
+                }
+                if applies("R5")
+                    && name == "rand"
+                    && next_is_punct(next, ':')
+                    && sig.get(s + 2).map(|&n| &toks[n].kind) == Some(&TokKind::Punct(':'))
+                {
+                    out.push(f(
+                        "R5",
+                        t.line,
+                        "`rand::` path: the rand crate is banned; use the crate's seeded Rng"
+                            .to_string(),
+                    ));
+                }
+                if applies("R4") && name == "unsafe" && !has_safety_comment(toks, i) {
+                    out.push(f(
+                        "R4",
+                        t.line,
+                        "`unsafe` without a preceding `// SAFETY:` comment arguing soundness"
+                            .to_string(),
+                    ));
+                }
+            }
+            TokKind::Punct('[') if applies("R3") => {
+                let indexing = match prev.map(|p| &p.kind) {
+                    Some(TokKind::Ident) => {
+                        !KEYWORDS.contains(&prev.map(|p| p.text.as_str()).unwrap_or(""))
+                    }
+                    Some(TokKind::Punct(')')) | Some(TokKind::Punct(']')) => true,
+                    _ => false,
+                };
+                if indexing {
+                    out.push(f(
+                        "R3",
+                        t.line,
+                        "slice/array index expression on a hostile-input path; use .get()"
+                            .to_string(),
+                    ));
+                }
+            }
+            TokKind::Str if applies("R6") => {
+                let lower = t.text.to_ascii_lowercase();
+                if lower.contains("wall")
+                    && (t.text.contains("\\\":") || t.text.contains("\":"))
+                {
+                    out.push(f(
+                        "R6",
+                        t.line,
+                        "string literal builds a trace key containing \"wall\"; the \
+                         deterministic trace schema rejects it at runtime — remove it here"
+                            .to_string(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn is_punct(toks: &[Tok], sig: &[usize], s: usize, c: char) -> bool {
+    sig.get(s)
+        .map(|&i| toks[i].kind == TokKind::Punct(c))
+        .unwrap_or(false)
+}
+
+fn prev_is_punct(prev: Option<&Tok>, c: char) -> bool {
+    prev.map(|p| p.kind == TokKind::Punct(c)).unwrap_or(false)
+}
+
+fn next_is_punct(next: Option<&Tok>, c: char) -> bool {
+    next.map(|p| p.kind == TokKind::Punct(c)).unwrap_or(false)
+}
+
+/// R4: walk back over the comment run immediately preceding the `unsafe`
+/// token; any comment in that run whose text (after stripping doc-slash
+/// and bang decoration) starts with `SAFETY:` satisfies the rule.
+fn has_safety_comment(toks: &[Tok], unsafe_idx: usize) -> bool {
+    // Walk the contiguous comment run immediately above the `unsafe`:
+    // each comment must sit within 2 lines of the code/comment below it
+    // (so a blank line inside the run is tolerated, but a comment
+    // paragraph separated from the block by other code never counts).
+    // The run may be arbitrarily long — a thorough SAFETY argument is
+    // exactly what R4 wants to encourage.
+    let mut below_line = toks.get(unsafe_idx).map(|t| t.line).unwrap_or(0);
+    let mut j = unsafe_idx;
+    while j > 0 {
+        j -= 1;
+        match toks.get(j).map(|t| &t.kind) {
+            Some(TokKind::Comment) => {
+                let tok = &toks[j];
+                // A block comment spans lines; measure adjacency from
+                // where it ends, not where it starts.
+                let end_line = tok.line + tok.text.matches('\n').count() as u32;
+                if below_line.saturating_sub(end_line) > 2 {
+                    return false;
+                }
+                below_line = tok.line;
+                let t = tok.text.trim_start_matches(['/', '!', '*']).trim_start();
+                // A `--fix-safety-stubs` placeholder is not an argument;
+                // the rule keeps failing until the FIXME is replaced.
+                if t.starts_with("SAFETY:") && !t.contains("FIXME(c2dfb lint)") {
+                    return true;
+                }
+            }
+            _ => return false,
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn run_all(src: &str) -> Vec<Finding> {
+        run_rules("src/t.rs", &lex(src), |_| true)
+    }
+
+    #[test]
+    fn r1_fires_on_instant_but_not_in_strings_or_comments() {
+        let fs = run_all("fn t() { let t0 = Instant::now(); }");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "R1");
+        assert_eq!(fs[0].line, 1);
+        assert!(run_all("// Instant::now()\nfn t() {}").is_empty());
+        assert!(run_all("fn t() -> &'static str { \"Instant SystemTime\" }").is_empty());
+    }
+
+    #[test]
+    fn r3_indexing_vs_types_and_literals() {
+        let fs = run_all("fn t(b: &[u8]) -> u8 { b[0] }");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "R3");
+        // Slice types, array literals, attributes, and vec![] are fine.
+        assert!(run_all("#[derive(Debug)]\nfn t(x: &mut [f32]) -> Vec<u8> { vec![1, 2] }")
+            .is_empty());
+        assert!(run_all("fn t() { for _ in [1, 2] {} }").is_empty());
+    }
+
+    #[test]
+    fn r4_safety_comment_satisfies() {
+        let bad = "fn t(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(run_all(bad).len(), 1);
+        let good = "fn t(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}";
+        assert!(run_all(good).is_empty());
+        let far = "fn t(p: *const u8) -> u8 {\n    // SAFETY: too far away.\n\n\n\n\n\n\n\n    unsafe { *p }\n}";
+        assert_eq!(run_all(far).len(), 1);
+        // A long contiguous comment run qualifies however many lines the
+        // SAFETY argument takes (the daemon signal handler's is ~11).
+        let long = format!(
+            "fn t(p: *const u8) -> u8 {{\n    // SAFETY: a thorough argument:\n{}    unsafe {{ *p }}\n}}",
+            "    // - because of many careful reasons.\n".repeat(10)
+        );
+        assert!(run_all(&long).is_empty());
+        // A --fix-safety-stubs placeholder does not count as an argument.
+        let stub = "fn t(p: *const u8) -> u8 {\n    // SAFETY: FIXME(c2dfb lint): argue why this unsafe is sound.\n    unsafe { *p }\n}";
+        assert_eq!(run_all(stub).len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let x = Instant::now(); x.unwrap(); }\n}\nfn live() { let _ = Instant::now(); }";
+        let fs = run_all(src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].line, 5);
+        // #[cfg(not(test))] must NOT be skipped.
+        let fs = run_all("#[cfg(not(test))]\nfn t() { Instant::now(); }");
+        assert_eq!(fs.len(), 1);
+        // A cfg(test) use statement skips only to the semicolon.
+        let fs = run_all("#[cfg(test)]\nuse foo::bar;\nfn t() { Instant::now(); }");
+        assert_eq!(fs.len(), 1);
+    }
+
+    #[test]
+    fn r6_matches_key_literals_only() {
+        let fs = run_all("fn t(b: &mut String) { b.push_str(\",\\\"wall_s\\\":\"); }");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "R6");
+        // Prose mentioning wall without a key shape is fine.
+        assert!(run_all("fn t() -> &'static str { \"wall-clock profile\" }").is_empty());
+    }
+
+    #[test]
+    fn r5_rand_paths() {
+        let fs = run_all("fn t() { let mut r = thread_rng(); }");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "R5");
+        let fs = run_all("fn t() { let x = rand::random::<f64>(); }");
+        assert_eq!(fs.len(), 1);
+        // An ordinary identifier merely named rand does not fire.
+        assert!(run_all("fn t(rand: u64) -> u64 { rand }").is_empty());
+    }
+}

@@ -10,6 +10,10 @@
 //! [`MAX_WIRE_COORDS`]).  `tests/proptests.rs` feeds it random byte
 //! strings and mutated valid encodings to hold that line.
 
+// Toolchain-native twin of lint rule R3 (panic-free decode); `c2dfb
+// lint` enforces the same contract lexically.  docs/LINT.md.
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
 /// The on-the-wire representation of a compressed vector.  The byte counts
 /// model a straightforward binary encoding; no actual serialization happens
 /// in the in-process simulator, but the sizes feed the communication-volume
@@ -119,11 +123,25 @@ impl Payload {
 
     pub fn write_dense(&self, out: &mut [f32]) {
         match self {
-            Payload::Dense(v) => out.copy_from_slice(v),
+            Payload::Dense(v) => {
+                // zip, not copy_from_slice: a decoded dense payload may
+                // claim a different dim than the receiver's buffer, and
+                // copy_from_slice panics on mismatch (R3).
+                debug_assert_eq!(v.len(), out.len(), "dense payload dim mismatch");
+                out.fill(0.0);
+                for (o, &x) in out.iter_mut().zip(v) {
+                    *o = x;
+                }
+            }
             Payload::Sparse { idx, val } => {
                 out.fill(0.0);
                 for (&i, &x) in idx.iter().zip(val) {
-                    out[i as usize] = x;
+                    // A decoded index can exceed the receiver's dim on
+                    // hostile bytes; dropping it beats panicking (R3).
+                    debug_assert!((i as usize) < out.len(), "sparse index {i} out of range");
+                    if let Some(o) = out.get_mut(i as usize) {
+                        *o = x;
+                    }
                 }
             }
             Payload::Quantized { norm, levels, codes } => {
@@ -148,7 +166,10 @@ impl Payload {
             }
             Payload::Sparse { idx, val } => {
                 for (&i, &x) in idx.iter().zip(val) {
-                    target[i as usize] += w * x;
+                    debug_assert!((i as usize) < target.len(), "sparse index {i} out of range");
+                    if let Some(t) = target.get_mut(i as usize) {
+                        *t += w * x;
+                    }
                 }
             }
             Payload::Quantized { norm, levels, codes } => {
@@ -188,31 +209,48 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
-        // i never exceeds b.len(), so the subtraction cannot wrap.
-        if n > self.b.len() - self.i {
-            return Err(format!(
-                "truncated payload: wanted {n} bytes at offset {}, have {}",
-                self.i,
-                self.b.len() - self.i
-            ));
-        }
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
+        // checked_add + get: no arithmetic here can wrap and no slice
+        // indexing can panic, whatever n a hostile header claims.
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| {
+                format!(
+                    "truncated payload: wanted {n} bytes at offset {}, have {}",
+                    self.i,
+                    self.b.len().saturating_sub(self.i)
+                )
+            })?;
+        let s = self
+            .b
+            .get(self.i..end)
+            .ok_or_else(|| "reader range out of bounds".to_string())?;
+        self.i = end;
         Ok(s)
     }
 
     fn u8(&mut self) -> Result<u8, String> {
-        Ok(self.take(1)?[0])
+        self.take(1)?
+            .first()
+            .copied()
+            .ok_or_else(|| "empty u8 read".to_string())
     }
 
     fn u16(&mut self) -> Result<u16, String> {
-        let s = self.take(2)?;
-        Ok(u16::from_le_bytes([s[0], s[1]]))
+        let s: [u8; 2] = self
+            .take(2)?
+            .try_into()
+            .map_err(|_| "short u16 read".to_string())?;
+        Ok(u16::from_le_bytes(s))
     }
 
     fn u32(&mut self) -> Result<u32, String> {
-        let s = self.take(4)?;
-        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        let s: [u8; 4] = self
+            .take(4)?
+            .try_into()
+            .map_err(|_| "short u32 read".to_string())?;
+        Ok(u32::from_le_bytes(s))
     }
 
     fn f32(&mut self) -> Result<f32, String> {
@@ -220,8 +258,11 @@ impl<'a> Reader<'a> {
     }
 
     fn i16(&mut self) -> Result<i16, String> {
-        let s = self.take(2)?;
-        Ok(i16::from_le_bytes([s[0], s[1]]))
+        let s: [u8; 2] = self
+            .take(2)?
+            .try_into()
+            .map_err(|_| "short i16 read".to_string())?;
+        Ok(i16::from_le_bytes(s))
     }
 
     fn done(&self) -> Result<(), String> {
@@ -403,6 +444,7 @@ impl Payload {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 mod tests {
     use super::*;
 

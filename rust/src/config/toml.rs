@@ -5,6 +5,10 @@
 //! / boolean / flat array values, `#` comments, blank lines.  Keys are
 //! flattened to `section.key`.
 
+// Toolchain-native twin of lint rule R3: daemon job bodies arrive as
+// TOML, so this parser must never panic.  docs/LINT.md.
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -96,7 +100,9 @@ fn strip_comment(line: &str) -> &str {
     for (i, c) in line.char_indices() {
         match c {
             '"' => in_str = !in_str,
-            '#' if !in_str => return &line[..i],
+            // i is a char_indices boundary, so get() always succeeds;
+            // the fallback just keeps the parser panic-free (R3).
+            '#' if !in_str => return line.get(..i).unwrap_or_default(),
             _ => {}
         }
     }
@@ -139,6 +145,7 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 mod tests {
     use super::*;
 

@@ -128,6 +128,9 @@ impl Client {
     /// Follow a job to a terminal state, streaming its progress events to
     /// `con` (event lines at verbose, one line per cell completion at
     /// normal).  Returns the final status document.
+    // Operator-facing deadline against a remote daemon (lint.toml R1
+    // allow4).
+    #[allow(clippy::disallowed_methods)]
     pub fn wait(&self, id: u64, timeout: Duration, con: &Console) -> Result<Json, String> {
         let started = Instant::now();
         let mut cursor = 0usize;

@@ -20,6 +20,10 @@
 //! Input hardening: 16 KiB header cap, 4 MiB body cap, read/write
 //! timeouts, no chunked encoding (411 without a Content-Length body).
 
+// Toolchain-native twin of lint rule R3 (panic-free request parsing);
+// `c2dfb lint` enforces the same contract lexically.  docs/LINT.md.
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
 use super::{Daemon, Job, JobState, SubmitError};
 use crate::util::json::Json;
 use std::io::{Read, Write};
@@ -104,9 +108,9 @@ fn read_request(stream: &mut TcpStream) -> Result<Request, (u16, String)> {
         if n == 0 {
             return Err((400, "connection closed mid-request".into()));
         }
-        buf.extend_from_slice(&chunk[..n]);
+        buf.extend_from_slice(chunk.get(..n).unwrap_or_default());
     };
-    let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    let head = String::from_utf8_lossy(buf.get(..header_end).unwrap_or_default()).to_string();
     let mut lines = head.split("\r\n");
     let request_line = lines.next().unwrap_or_default();
     let mut parts = request_line.split_whitespace();
@@ -132,7 +136,9 @@ fn read_request(stream: &mut TcpStream) -> Result<Request, (u16, String)> {
     if content_length > MAX_BODY_BYTES {
         return Err((413, format!("body larger than {MAX_BODY_BYTES} bytes")));
     }
-    let mut body = buf[header_end + 4..].to_vec();
+    // header_end + 4 ≤ buf.len() by find_subslice's contract; get keeps
+    // the parser panic-free even if that invariant ever shifts (R3).
+    let mut body = buf.get(header_end + 4..).unwrap_or_default().to_vec();
     while body.len() < content_length {
         let n = stream
             .read(&mut chunk)
@@ -140,7 +146,7 @@ fn read_request(stream: &mut TcpStream) -> Result<Request, (u16, String)> {
         if n == 0 {
             return Err((400, "connection closed mid-body".into()));
         }
-        body.extend_from_slice(&chunk[..n]);
+        body.extend_from_slice(chunk.get(..n).unwrap_or_default());
     }
     body.truncate(content_length);
     let (path, query) = match target.split_once('?') {

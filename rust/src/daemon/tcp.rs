@@ -27,6 +27,10 @@
 //! Same hardening budget as HTTP: 1 MiB command line, 4 MiB body,
 //! 10 s I/O timeouts.
 
+// Toolchain-native twin of lint rule R3 (panic-free request parsing);
+// `c2dfb lint` enforces the same contract lexically.  docs/LINT.md.
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
 use super::{Daemon, SubmitError};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Read, Write};

@@ -70,6 +70,7 @@
 //! engine matrix.
 
 pub mod algorithms;
+pub mod analysis;
 pub mod collective;
 pub mod compress;
 pub mod config;

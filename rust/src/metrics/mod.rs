@@ -228,6 +228,9 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    // Wall-clock stop budget: documented nondeterministic, rejected on
+    // sweep axes (lint.toml R1 allow3).
+    #[allow(clippy::disallowed_methods)]
     pub fn new(algo: &str, label: &str) -> RunMetrics {
         RunMetrics {
             algo: algo.into(),

@@ -340,7 +340,9 @@ impl Recorder {
 
     /// `Some(now)` iff the wall-clock profiler is on.  Pass the result to
     /// the matching `phase`/`phase_comm`/`exchange` call; the deterministic
-    /// sink never sees it.
+    /// sink never sees it.  (lint.toml R1 allow1: the profiler is the one
+    /// sanctioned clock reader.)
+    #[allow(clippy::disallowed_methods)]
     pub fn clock(&self) -> Option<Instant> {
         match &self.inner {
             Some(rc) if rc.borrow().profile => Some(Instant::now()),

@@ -48,7 +48,7 @@
 //! `docs/SCALE.md` for the methodology and `BENCH_scale.json` for the
 //! nodes/sec numbers this engine is benchmarked on (`benches/scale.rs`).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::algorithms::sampling_mask;
 use crate::metrics::{CommLedger, ConsensusEstimator, TimeModel};
@@ -142,8 +142,10 @@ pub struct ScaleSim {
     opts: ScaleOpts,
     /// State overrides for nodes that have ever been active.  Everything
     /// else is still on its `(seed, i)`-derived baseline — this map IS
-    /// the O(active·d) term of the memory bound.
-    states: HashMap<usize, Vec<f32>>,
+    /// the O(active·d) term of the memory bound.  BTreeMap, not HashMap:
+    /// keyed access only today, but an ordered map keeps any future
+    /// iteration deterministic by construction (lint rule R2).
+    states: BTreeMap<usize, Vec<f32>>,
     pub ledger: CommLedger,
     pub time_model: TimeModel,
     clock: f64,
@@ -152,7 +154,7 @@ pub struct ScaleSim {
     active_node_rounds: u64,
     queue: EventQueue<(u32, u32)>,
     /// Per-receiver mix accumulators, live within one round.
-    acc: HashMap<usize, Vec<f32>>,
+    acc: BTreeMap<usize, Vec<f32>>,
     nbrs: Vec<usize>,
 }
 
@@ -163,14 +165,14 @@ impl ScaleSim {
         Ok(ScaleSim {
             topo,
             opts,
-            states: HashMap::new(),
+            states: BTreeMap::new(),
             ledger: CommLedger::default(),
             time_model: TimeModel::default(),
             clock: 0.0,
             round: 0,
             active_node_rounds: 0,
             queue: EventQueue::new(),
-            acc: HashMap::new(),
+            acc: BTreeMap::new(),
             nbrs: Vec::new(),
         })
     }
@@ -350,17 +352,18 @@ impl ScaleSim {
         self.round += 1;
     }
 
-    /// Run the configured number of rounds and report throughput plus
-    /// before/after consensus and loss estimates.
+    /// Run the configured number of rounds and report before/after
+    /// consensus and loss estimates.  This engine is wall-clock-free
+    /// (lint rule R1): `wall_s`/`nodes_per_sec` come back zero and the
+    /// CLI layer stamps them via [`ScaleReport::set_wall`] — everything
+    /// this method computes is a pure function of [`ScaleOpts`].
     pub fn run(&mut self) -> ScaleReport {
         let consensus_before = self.consensus_estimate();
         let loss_before = self.loss_estimate();
         let start_active = self.active_node_rounds;
-        let t0 = std::time::Instant::now();
         for _ in 0..self.opts.rounds {
             self.step_round();
         }
-        let wall_s = t0.elapsed().as_secs_f64();
         let active_node_rounds = self.active_node_rounds - start_active;
         ScaleReport {
             nodes: self.opts.nodes,
@@ -379,12 +382,8 @@ impl ScaleSim {
             consensus_after: self.consensus_estimate(),
             loss_before,
             loss_after: self.loss_estimate(),
-            wall_s,
-            nodes_per_sec: if wall_s > 0.0 {
-                active_node_rounds as f64 / wall_s
-            } else {
-                0.0
-            },
+            wall_s: 0.0,
+            nodes_per_sec: 0.0,
         }
     }
 }
@@ -411,13 +410,28 @@ pub struct ScaleReport {
     pub loss_before: f64,
     pub loss_after: f64,
     /// Wall-clock seconds for the rounds (nondeterministic; everything
-    /// else in the report is a pure function of the opts).
+    /// else in the report is a pure function of the opts).  Zero until
+    /// the caller stamps it with [`ScaleReport::set_wall`] — the engine
+    /// itself never reads a clock.
     pub wall_s: f64,
-    /// active_node_rounds / wall_s.
+    /// active_node_rounds / wall_s; stamped together with `wall_s`.
     pub nodes_per_sec: f64,
 }
 
 impl ScaleReport {
+    /// Stamp the nondeterministic throughput numbers.  Lives outside the
+    /// engine so `run()` stays a pure function of [`ScaleOpts`]; the CLI
+    /// (`c2dfb scale`) and the bench harness time the call and stamp the
+    /// report afterwards.
+    pub fn set_wall(&mut self, wall_s: f64) {
+        self.wall_s = wall_s;
+        self.nodes_per_sec = if wall_s > 0.0 {
+            self.active_node_rounds as f64 / wall_s
+        } else {
+            0.0
+        };
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("nodes", Json::num(self.nodes as f64)),

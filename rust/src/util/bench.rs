@@ -6,6 +6,9 @@
 //! that EXPERIMENTS.md quotes.  Filters like `cargo bench -- <substring>`
 //! are honoured.
 
+// Wall-clock reads are this module's whole purpose (lint.toml R1 allow2).
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 pub struct Bencher {

@@ -5,6 +5,10 @@
 //! (metrics, experiment summaries).  Supports the full JSON value grammar
 //! with the usual escapes; numbers are held as `f64`.
 
+// Toolchain-native twin of lint rule R3: this parser sees daemon-client
+// bytes, so it must never panic.  docs/LINT.md.
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -165,7 +169,7 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn skip_ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
             self.i += 1;
         }
     }
@@ -174,7 +178,9 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    // Named `eat`, not `expect`, so hostile-input call sites stay
+    // trivially greppable from Result::expect (lint rule R3).
+    fn eat(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -184,7 +190,7 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
+        if self.b.get(self.i..).is_some_and(|r| r.starts_with(word.as_bytes())) {
             self.i += word.len();
             Ok(v)
         } else {
@@ -218,7 +224,7 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        std::str::from_utf8(&self.b[start..self.i])
+        std::str::from_utf8(self.b.get(start..self.i).unwrap_or_default())
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
             .map(Json::Num)
@@ -226,7 +232,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -249,10 +255,11 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                return Err("bad \\u escape".into());
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                            let bytes = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or("bad \\u escape")?;
+                            let hex = std::str::from_utf8(bytes)
                                 .map_err(|_| "bad \\u escape")?;
                             let cp =
                                 u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
@@ -264,9 +271,9 @@ impl<'a> Parser<'a> {
                 }
                 Some(_) => {
                     // Consume one UTF-8 scalar (multi-byte safe).
-                    let rest = std::str::from_utf8(&self.b[self.i..])
+                    let rest = std::str::from_utf8(self.b.get(self.i..).unwrap_or_default())
                         .map_err(|_| "invalid utf-8")?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest.chars().next().ok_or("unterminated string")?;
                     out.push(c);
                     self.i += c.len_utf8();
                 }
@@ -275,7 +282,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, String> {
-        self.expect(b'[')?;
+        self.eat(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -299,7 +306,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
-        self.expect(b'{')?;
+        self.eat(b'{')?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -310,7 +317,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             let val = self.value()?;
             out.insert(key, val);
             self.skip_ws();
@@ -329,6 +336,7 @@ impl<'a> Parser<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 mod tests {
     use super::*;
 

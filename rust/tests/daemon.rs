@@ -6,6 +6,10 @@
 //! executions, and daemon report bytes are identical to a batch
 //! `c2dfb sweep` of the same body.
 
+// Test deadlines legitimately read the wall clock (clippy.toml bans it
+// in deterministic code; see docs/LINT.md R1).
+#![allow(clippy::disallowed_methods)]
+
 use c2dfb::coordinator::sweep::{self, ExecOpts, SweepSpec};
 use c2dfb::daemon::{self, Client, Job, JobState, ServeOpts, SubmitError};
 use c2dfb::obs::Console;

@@ -4,6 +4,8 @@
 //! file to nothing.
 
 #![cfg(feature = "pjrt")]
+// Test-side timing printout only (docs/LINT.md R1).
+#![allow(clippy::disallowed_methods)]
 
 use c2dfb::config::{Algorithm, ExperimentConfig};
 use c2dfb::coordinator::{build_task, Runner};

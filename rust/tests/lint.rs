@@ -1,0 +1,151 @@
+//! `c2dfb lint` self-tests (ISSUE: the pass must be self-testing).
+//!
+//! Three contracts pinned here:
+//! 1. each committed bad fixture under `tests/lint_fixtures/` triggers
+//!    exactly its rule, at the expected line;
+//! 2. the full `src/` tree passes clean under the shipped `lint.toml`
+//!    (every pre-existing violation is fixed or allowlisted-with-reason);
+//! 3. the JSON report schema and the allowlist semantics are stable.
+//!
+//! cargo runs integration tests with cwd = the crate root (`rust/`), so
+//! `lint.toml`, `src/`, and `tests/lint_fixtures/` resolve directly.
+
+use c2dfb::analysis::{self, lint_source, LintConfig};
+use c2dfb::util::json::Json;
+
+fn shipped_config() -> LintConfig {
+    LintConfig::load(std::path::Path::new("lint.toml")).expect("rust/lint.toml parses")
+}
+
+/// (fixture file, rule that must fire, line it must fire on)
+const FIXTURES: [(&str, &str, u32); 6] = [
+    ("tests/lint_fixtures/r1_wall_clock.rs", "R1", 3),
+    ("tests/lint_fixtures/r2_unordered_iteration.rs", "R2", 2),
+    ("tests/lint_fixtures/r3_panicky_decode.rs", "R3", 3),
+    ("tests/lint_fixtures/r4_missing_safety.rs", "R4", 3),
+    ("tests/lint_fixtures/r5_foreign_rng.rs", "R5", 3),
+    ("tests/lint_fixtures/r6_wall_key.rs", "R6", 3),
+];
+
+#[test]
+fn each_bad_fixture_triggers_exactly_its_rule() {
+    let cfg = shipped_config();
+    for (path, rule, line) in FIXTURES {
+        let src = std::fs::read_to_string(path).expect(path);
+        let findings = lint_source(path, &src, &cfg);
+        assert_eq!(findings.len(), 1, "{path}: expected exactly one finding, got {findings:?}");
+        assert_eq!(findings[0].rule, rule, "{path}: wrong rule: {findings:?}");
+        assert_eq!(findings[0].line, line, "{path}: wrong line: {findings:?}");
+    }
+}
+
+#[test]
+fn full_src_tree_is_clean_under_shipped_policy() {
+    let cfg = shipped_config();
+    let report = analysis::lint_tree(&["src".to_string()], &cfg).expect("scan src/");
+    assert!(
+        report.findings.is_empty(),
+        "src/ must lint clean; fix the code or allowlist-with-reason in lint.toml:\n{}",
+        report.render_text()
+    );
+    assert!(
+        report.files.len() > 30,
+        "suspiciously few files scanned ({}); did the walk break?",
+        report.files.len()
+    );
+    // Every shipped allow entry must still be load-bearing: a stale entry
+    // means the violation it excused was fixed, so delete the entry.
+    assert!(
+        report.unused_allows.is_empty(),
+        "stale lint.toml allow entries: {:?}",
+        report.unused_allows
+    );
+}
+
+#[test]
+fn allowlist_round_trip() {
+    let src = "fn t() { let t0 = std::time::Instant::now(); }";
+    // Entry present => suppressed.
+    let with = LintConfig::from_toml_str(
+        "[R1]\nallow1 = \"src/wall.rs -- test: wall-clock on purpose\"\n",
+    )
+    .unwrap();
+    assert!(lint_source("src/wall.rs", src, &with).is_empty());
+    // Entry removed => fires again.
+    let without = LintConfig::default_config();
+    let findings = lint_source("src/wall.rs", src, &without);
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].rule, "R1");
+    // A reason-less entry is rejected outright.
+    assert!(LintConfig::from_toml_str("[R1]\nallow1 = \"src/wall.rs\"\n").is_err());
+}
+
+#[test]
+fn json_report_schema_is_stable() {
+    let cfg = shipped_config();
+    let report = analysis::lint_tree(
+        &["tests/lint_fixtures/r1_wall_clock.rs".to_string()],
+        &cfg,
+    )
+    .expect("scan fixture");
+    let text = report.to_json().to_string();
+    let j = Json::parse(&text).expect("lint JSON output parses");
+    assert_eq!(j.get("version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(j.get("files_scanned").and_then(Json::as_usize), Some(1));
+    assert!(j.get("allow_used").is_some());
+    assert!(j.get("allow_unused").and_then(Json::as_arr).is_some());
+    let findings = j.get("findings").and_then(Json::as_arr).expect("findings array");
+    assert_eq!(findings.len(), 1);
+    let f = &findings[0];
+    assert_eq!(f.get("rule").and_then(Json::as_str), Some("R1"));
+    assert_eq!(f.get("line").and_then(Json::as_usize), Some(3));
+    assert!(f.get("path").and_then(Json::as_str).is_some());
+    assert!(f.get("message").and_then(Json::as_str).is_some());
+}
+
+#[test]
+fn rules_never_fire_inside_literals_or_comments() {
+    let cfg = LintConfig::default_config();
+    // Every banned name, spelled inside strings, raw strings, and
+    // comments — none may produce a finding.
+    let src = r####"
+// Instant::now() HashMap thread_rng unsafe x.unwrap()
+/* SystemTime rand::random b[0] panic!("no") */
+pub fn t() -> &'static str {
+    let s = r#"Instant HashMap "wall_s": thread_rng"#;
+    let _ = s;
+    "Instant SystemTime .elapsed() unwrap expect"
+}
+"####;
+    let findings = lint_source("src/t.rs", src, &cfg);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn scoped_rules_stay_in_scope() {
+    let cfg = shipped_config();
+    // Indexing is an R3 finding only on the hostile-input paths; the
+    // same code elsewhere in the tree is not R3's business.
+    let src = "pub fn first(b: &[u8]) -> u8 { b[0] }";
+    assert_eq!(lint_source("src/compress/message.rs", src, &cfg).len(), 1);
+    assert!(lint_source("src/topology/mod.rs", src, &cfg).is_empty());
+    // Wall-key literals are R6 findings only at the obs emit sites.
+    let src = "pub fn emit(o: &mut String) { o.push_str(\"\\\"wall_s\\\":\"); }";
+    assert_eq!(lint_source("src/obs/mod.rs", src, &cfg).len(), 1);
+    assert!(lint_source("src/metrics/mod.rs", src, &cfg).is_empty());
+}
+
+#[test]
+fn unused_allow_entries_are_reported() {
+    let cfg = LintConfig::from_toml_str(
+        "[R1]\nallow1 = \"src/never_matches_anything.rs -- stale on purpose\"\n",
+    )
+    .unwrap();
+    let report = analysis::lint_tree(
+        &["tests/lint_fixtures/r4_missing_safety.rs".to_string()],
+        &cfg,
+    )
+    .expect("scan fixture");
+    assert_eq!(report.unused_allows.len(), 1);
+    assert!(report.render_text().contains("stale allowlist entry"));
+}

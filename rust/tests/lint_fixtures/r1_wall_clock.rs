@@ -1,0 +1,6 @@
+// R1 bad fixture: a wall-clock read in replayable code (docs/LINT.md).
+pub fn stamp_now() -> u64 {
+    let t0 = std::time::Instant::now();
+    let _ = t0;
+    0
+}

@@ -1,0 +1,4 @@
+// R2 bad fixture: an unordered map in a deterministic module.
+pub fn sum(m: &std::collections::HashMap<u32, f32>) -> f32 {
+    m.values().sum()
+}

@@ -1,0 +1,4 @@
+// R3 bad fixture: a panicking slice index on untrusted bytes.
+pub fn first(b: &[u8]) -> u8 {
+    b[0]
+}

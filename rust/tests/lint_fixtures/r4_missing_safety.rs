@@ -1,0 +1,4 @@
+// R4 bad fixture: an unsafe block with no SAFETY argument.
+pub fn read(p: *const u8) -> u8 {
+    unsafe { *p }
+}

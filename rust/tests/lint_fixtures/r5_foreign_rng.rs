@@ -1,0 +1,6 @@
+// R5 bad fixture: a nondeterministic RNG source.
+pub fn roll() -> u64 {
+    let r = thread_rng();
+    let _ = r;
+    0
+}

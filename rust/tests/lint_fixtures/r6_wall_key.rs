@@ -1,0 +1,4 @@
+// R6 bad fixture: a wall-clock key literal at a trace emit site.
+pub fn emit(out: &mut String) {
+    out.push_str("\"wall_time_s\":");
+}
