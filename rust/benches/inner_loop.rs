@@ -11,7 +11,10 @@
 //! no-op recorder, and once with a pre-sized JSONL trace recorder
 //! attached (`obs::Recorder::with_capacity`) — per-step instrumentation
 //! only bumps fixed-size aggregates, so tracing must not break the
-//! zero-allocation contract either.
+//! zero-allocation contract either.  Both payload dtypes are covered:
+//! the full dim sweep at f32 (the default width), plus an f64 lane at
+//! the small dim — the generic kernels must stay allocation-free at
+//! either scalar width.
 //!
 //! Writes `BENCH_inner.json` (override with `$C2DFB_BENCH_INNER_OUT`).
 
@@ -20,6 +23,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use c2dfb::collective::Network;
 use c2dfb::compress::parse;
+use c2dfb::linalg::{Dtype, Scalar};
 use c2dfb::obs::Recorder;
 use c2dfb::optim::{run_inner_with, GradFn, InnerConfig, InnerState};
 use c2dfb::topology::{Graph, Topology};
@@ -59,37 +63,124 @@ static COUNTER: CountingAlloc = CountingAlloc;
 
 /// Heterogeneous quadratic gradients ∇r_i(z) = a_i (z − c_i), written
 /// in place — the oracle contributes zero allocations, so the assertion
-/// covers the pure coordination cost of a step.
-struct Quad {
-    a: Vec<f32>,
-    c: Vec<Vec<f32>>,
+/// covers the pure coordination cost of a step.  Generated from the f32
+/// RNG streams at every dtype (the widening contract, docs/DTYPE.md).
+struct Quad<S: Scalar> {
+    a: Vec<S>,
+    c: Vec<Vec<S>>,
 }
 
-impl Quad {
-    fn build(m: usize, dim: usize, seed: u64) -> Quad {
+impl<S: Scalar> Quad<S> {
+    fn build(m: usize, dim: usize, seed: u64) -> Quad<S> {
         let mut rng = Rng::new(seed);
         Quad {
-            a: (0..m).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
+            a: (0..m)
+                .map(|_| S::from_f64(rng.uniform_in(0.5, 2.0) as f64))
+                .collect(),
             c: (0..m)
                 .map(|_| {
                     let mut v = vec![0.0f32; dim];
                     rng.fill_normal(&mut v, 0.0, 1.0);
-                    v
+                    v.into_iter().map(|x| S::from_f64(x as f64)).collect()
                 })
                 .collect(),
         }
     }
 
-    fn grad_into(&self, i: usize, z: &[f32], out: &mut [f32]) {
-        for ((o, zk), ck) in out.iter_mut().zip(z).zip(&self.c[i]) {
+    fn grad_into(&self, i: usize, z: &[S], out: &mut [S]) {
+        for ((o, &zk), &ck) in out.iter_mut().zip(z).zip(&self.c[i]) {
             *o = self.a[i] * (zk - ck);
         }
     }
 }
 
+/// One (dtype, dim, compressor) configuration: warm up, assert zero
+/// steady-state allocations (bare and traced), time a step, and push the
+/// result rows.  f32 keeps the historical result keys; f64 rows carry a
+/// `+f64` suffix so dashboards track the lanes separately.
+fn measure<S: Scalar>(b: &mut Bencher, results: &mut Vec<(String, Json)>, m: usize, dim: usize, spec: &str) {
+    let lane = if S::DTYPE == Dtype::F32 { String::new() } else { format!("+{}", S::NAME) };
+    let quad: Quad<S> = Quad::build(m, dim, 5);
+    let q = parse::<S>(spec).unwrap();
+    let mut net = Network::new(Graph::build(Topology::Ring, m));
+    let mut rng = Rng::new(2);
+    let mut state: InnerState<S> = InnerState::new(&net, dim);
+    let mut d = vec![vec![S::ZERO; dim]; m];
+    let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 1 };
+    let mut grad = |i: usize, z: &[S], out: &mut [S]| quad.grad_into(i, z, out);
+
+    // Warm up buffer capacities (bootstrap + first residual rounds),
+    // then require exactly zero allocations per step.
+    for _ in 0..5 {
+        run_inner_with(&cfg, &mut net, q.as_ref(), &mut rng, &mut state, &mut d, GradFn::Serial(&mut grad));
+    }
+    let steady_steps = 200u64;
+    let before_allocs = ALLOCATIONS.load(Ordering::Relaxed);
+    let before_bytes = net.ledger.total_bytes;
+    for _ in 0..steady_steps {
+        run_inner_with(&cfg, &mut net, q.as_ref(), &mut rng, &mut state, &mut d, GradFn::Serial(&mut grad));
+    }
+    let allocs = ALLOCATIONS.load(Ordering::Relaxed) - before_allocs;
+    let kib_per_step = (net.ledger.total_bytes - before_bytes) as f64 / steady_steps as f64 / 1024.0;
+    assert_eq!(
+        allocs, 0,
+        "{spec}{lane} d={dim}: {allocs} heap allocations in {steady_steps} steady-state \
+         inner steps — the hot path must not allocate"
+    );
+    println!("alloc-check inner_step/m10/d{dim}/{spec}{lane}: 0 allocations over {steady_steps} steps");
+
+    // Same contract with the JSONL trace sink attached: per-step
+    // instrumentation bumps fixed-size aggregates only (lines are
+    // emitted at run/round boundaries, never per step), so a pre-sized
+    // recorder must keep the hot path allocation-free.
+    state.obs = Recorder::with_capacity(1 << 20, false);
+    state.obs.run_start("bench", &format!("d{dim}/{spec}{lane}"), m, 2, spec);
+    for _ in 0..5 {
+        run_inner_with(&cfg, &mut net, q.as_ref(), &mut rng, &mut state, &mut d, GradFn::Serial(&mut grad));
+    }
+    let before_traced = ALLOCATIONS.load(Ordering::Relaxed);
+    for _ in 0..steady_steps {
+        run_inner_with(&cfg, &mut net, q.as_ref(), &mut rng, &mut state, &mut d, GradFn::Serial(&mut grad));
+    }
+    let traced_allocs = ALLOCATIONS.load(Ordering::Relaxed) - before_traced;
+    assert_eq!(
+        traced_allocs, 0,
+        "{spec}{lane} d={dim}: {traced_allocs} heap allocations in {steady_steps} traced \
+         steady-state inner steps — tracing must not allocate on the hot path"
+    );
+    let trace = state.obs.take_trace().expect("trace sink was attached");
+    assert!(
+        trace.contains("\"ev\":\"run_start\""),
+        "trace recorder attached but recorded nothing"
+    );
+    state.obs = Recorder::noop();
+    println!(
+        "alloc-check inner_step/m10/d{dim}/{spec}{lane}+trace: 0 allocations over {steady_steps} steps"
+    );
+
+    let name = format!("inner_step/m10/d{dim}/{spec}{lane}");
+    let mean = b.bench(&name, || {
+        run_inner_with(&cfg, &mut net, q.as_ref(), &mut rng, &mut state, &mut d, GradFn::Serial(&mut grad));
+        black_box(d[0][0].to_f64())
+    });
+    println!("      └─ {kib_per_step:.1} KiB per inner step (all nodes)");
+    let key = format!("d{dim}/{spec}{lane}");
+    results.push((format!("{key}/allocs_per_step"), Json::num(allocs as f64 / steady_steps as f64)));
+    results.push((
+        format!("{key}/traced_allocs_per_step"),
+        Json::num(traced_allocs as f64 / steady_steps as f64),
+    ));
+    results.push((format!("{key}/kib_per_step"), Json::num(kib_per_step)));
+    results.push((
+        format!("{key}/mean_ns"),
+        mean.map_or(Json::Null, |t| Json::num(t.as_nanos() as f64)),
+    ));
+}
+
 fn main() {
     let mut b = Bencher::from_env();
     let m = 10;
+    let specs = ["topk:0.2", "randk:0.25", "qsgd:16", "none"];
     let mut results: Vec<(String, Json)> = vec![
         ("bench".into(), Json::str("inner_loop")),
         (
@@ -99,137 +190,22 @@ fn main() {
                  nodes, analytic quadratic oracle evaluated in place. allocs_per_step counts \
                  heap allocations via a counting global allocator and MUST be 0 for every \
                  compressor (asserted), both with the no-op recorder and with a pre-sized \
-                 JSONL trace recorder attached (traced_allocs_per_step).",
+                 JSONL trace recorder attached (traced_allocs_per_step), and at both payload \
+                 dtypes (`+f64` rows cover the wide lane).",
             ),
         ),
         ("command".into(), Json::str("cd rust && cargo bench --bench inner_loop")),
     ];
 
     for dim in [2_000usize, 20_000] {
-        let quad = Quad::build(m, dim, 5);
-        for spec in ["topk:0.2", "randk:0.25", "qsgd:16", "none"] {
-            let q = parse(spec).unwrap();
-            let mut net = Network::new(Graph::build(Topology::Ring, m));
-            let mut rng = Rng::new(2);
-            let mut state = InnerState::new(&net, dim);
-            let mut d = vec![vec![0.0f32; dim]; m];
-            let cfg = InnerConfig { eta: 0.1, gamma: 0.5, k_steps: 1 };
-            let mut grad =
-                |i: usize, z: &[f32], out: &mut [f32]| quad.grad_into(i, z, out);
-
-            // Warm up buffer capacities (bootstrap + first residual
-            // rounds), then require exactly zero allocations per step.
-            for _ in 0..5 {
-                run_inner_with(
-                    &cfg,
-                    &mut net,
-                    q.as_ref(),
-                    &mut rng,
-                    &mut state,
-                    &mut d,
-                    GradFn::Serial(&mut grad),
-                );
-            }
-            let steady_steps = 200u64;
-            let before_allocs = ALLOCATIONS.load(Ordering::Relaxed);
-            let before_bytes = net.ledger.total_bytes;
-            for _ in 0..steady_steps {
-                run_inner_with(
-                    &cfg,
-                    &mut net,
-                    q.as_ref(),
-                    &mut rng,
-                    &mut state,
-                    &mut d,
-                    GradFn::Serial(&mut grad),
-                );
-            }
-            let allocs = ALLOCATIONS.load(Ordering::Relaxed) - before_allocs;
-            let kib_per_step =
-                (net.ledger.total_bytes - before_bytes) as f64 / steady_steps as f64 / 1024.0;
-            assert_eq!(
-                allocs, 0,
-                "{spec} d={dim}: {allocs} heap allocations in {steady_steps} steady-state \
-                 inner steps — the hot path must not allocate"
-            );
-            println!(
-                "alloc-check inner_step/m10/d{dim}/{spec}: 0 allocations over {steady_steps} steps"
-            );
-
-            // Same contract with the JSONL trace sink attached: per-step
-            // instrumentation bumps fixed-size aggregates only (lines are
-            // emitted at run/round boundaries, never per step), so a
-            // pre-sized recorder must keep the hot path allocation-free.
-            state.obs = Recorder::with_capacity(1 << 20, false);
-            state.obs.run_start("bench", &format!("d{dim}/{spec}"), m, 2, spec);
-            for _ in 0..5 {
-                run_inner_with(
-                    &cfg,
-                    &mut net,
-                    q.as_ref(),
-                    &mut rng,
-                    &mut state,
-                    &mut d,
-                    GradFn::Serial(&mut grad),
-                );
-            }
-            let before_traced = ALLOCATIONS.load(Ordering::Relaxed);
-            for _ in 0..steady_steps {
-                run_inner_with(
-                    &cfg,
-                    &mut net,
-                    q.as_ref(),
-                    &mut rng,
-                    &mut state,
-                    &mut d,
-                    GradFn::Serial(&mut grad),
-                );
-            }
-            let traced_allocs = ALLOCATIONS.load(Ordering::Relaxed) - before_traced;
-            assert_eq!(
-                traced_allocs, 0,
-                "{spec} d={dim}: {traced_allocs} heap allocations in {steady_steps} traced \
-                 steady-state inner steps — tracing must not allocate on the hot path"
-            );
-            let trace = state.obs.take_trace().expect("trace sink was attached");
-            assert!(
-                trace.contains("\"ev\":\"run_start\""),
-                "trace recorder attached but recorded nothing"
-            );
-            state.obs = Recorder::noop();
-            println!(
-                "alloc-check inner_step/m10/d{dim}/{spec}+trace: 0 allocations over {steady_steps} steps"
-            );
-
-            let name = format!("inner_step/m10/d{dim}/{spec}");
-            let mean = b.bench(&name, || {
-                run_inner_with(
-                    &cfg,
-                    &mut net,
-                    q.as_ref(),
-                    &mut rng,
-                    &mut state,
-                    &mut d,
-                    GradFn::Serial(&mut grad),
-                );
-                black_box(d[0][0])
-            });
-            println!("      └─ {kib_per_step:.1} KiB per inner step (all nodes)");
-            let key = format!("d{dim}/{spec}");
-            results.push((
-                format!("{key}/allocs_per_step"),
-                Json::num(allocs as f64 / steady_steps as f64),
-            ));
-            results.push((
-                format!("{key}/traced_allocs_per_step"),
-                Json::num(traced_allocs as f64 / steady_steps as f64),
-            ));
-            results.push((format!("{key}/kib_per_step"), Json::num(kib_per_step)));
-            results.push((
-                format!("{key}/mean_ns"),
-                mean.map_or(Json::Null, |t| Json::num(t.as_nanos() as f64)),
-            ));
+        for spec in specs {
+            measure::<f32>(&mut b, &mut results, m, dim, spec);
         }
+    }
+    // The wide lane honors the same zero-allocation contract; one dim
+    // suffices — the assertion counts allocations, not throughput.
+    for spec in specs {
+        measure::<f64>(&mut b, &mut results, m, 2_000, spec);
     }
     b.finish();
 

@@ -62,7 +62,7 @@ fn main() {
     ];
 
     for nodes in [8usize, 16] {
-        let task = QuadraticTask::generate(nodes, dim, 0.8, 7);
+        let task: QuadraticTask = QuadraticTask::generate(nodes, dim, 0.8, 7);
 
         let serial = b.bench(&format!("sim/serial/m{nodes}"), || {
             black_box(run_with_task(&task, &cfg(nodes, 1)).unwrap())

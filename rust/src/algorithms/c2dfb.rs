@@ -17,6 +17,10 @@
 //! the paper's C²DFB(nc) ablation (same message sizes, worse error
 //! dynamics).
 //!
+//! Generic over the payload [`Scalar`] `S`: iterates, oracle calls and
+//! every wire payload run at `S` (docs/DTYPE.md), with `f32` the default
+//! and byte-identical to the historical path.
+//!
 //! All communication goes through the generic [`Transport`], and the
 //! per-node oracle batches run through [`GradFn`]/[`RunContext::par_nodes`]
 //! so they can fan out over the thread pool for `Sync` tasks.  The outer
@@ -26,6 +30,7 @@
 use super::{BilevelAlgorithm, RunContext, StepOutcome};
 use crate::collective::{MixScratch, Transport};
 use crate::compress::{self, Compressor};
+use crate::linalg::{kernels, Scalar};
 use crate::obs::{LedgerSnap, Phase, Scope};
 use crate::optim::{
     run_inner_naive_with, run_inner_with, DenseTracker, GradFn, InnerConfig, InnerState,
@@ -37,24 +42,24 @@ use anyhow::Result;
 
 /// Which lower-level oracle an `IN` call descends on.
 #[derive(Clone, Copy)]
-enum InnerOracle {
+enum InnerOracle<S: Scalar> {
     /// ∇_y h with h = f + λg (the y-sequence).
-    Y { lambda: f32 },
+    Y { lambda: S },
     /// ∇_y g (the z-sequence).
     Z,
 }
 
-impl InnerOracle {
+impl<S: Scalar> InnerOracle<S> {
     /// Evaluate into the inner loop's reusable gradient row.  (The task
     /// oracles themselves return fresh vectors — that allocation belongs
     /// to the task API, not the coordination hot path.)
     fn eval_into(
         &self,
-        task: &dyn BilevelTask,
+        task: &dyn BilevelTask<S>,
         i: usize,
-        xs: &[Vec<f32>],
-        d: &[f32],
-        out: &mut [f32],
+        xs: &[Vec<S>],
+        d: &[S],
+        out: &mut [S],
     ) {
         let g = match self {
             InnerOracle::Y { lambda } => task
@@ -73,24 +78,23 @@ impl InnerOracle {
 /// or fanned out over the pool when a `Sync` task view exists).  Returns
 /// oracle calls made.
 #[allow(clippy::too_many_arguments)]
-fn inner_pass<T: Transport>(
+fn inner_pass<S: Scalar, T: Transport>(
     naive: bool,
     cfg: &InnerConfig,
     net: &mut T,
-    compressor: &dyn Compressor,
+    compressor: &dyn Compressor<S>,
     rng: &mut Rng,
-    state: &mut InnerState,
-    d: &mut [Vec<f32>],
-    xs: &[Vec<f32>],
-    oracle: InnerOracle,
-    task: &dyn BilevelTask,
-    shared: Option<&(dyn BilevelTask + Sync)>,
+    state: &mut InnerState<S>,
+    d: &mut [Vec<S>],
+    xs: &[Vec<S>],
+    oracle: InnerOracle<S>,
+    task: &dyn BilevelTask<S>,
+    shared: Option<&(dyn BilevelTask<S> + Sync)>,
     pool: &NodePool,
 ) -> u64 {
     match shared {
         Some(ts) => {
-            let g =
-                |i: usize, di: &[f32], out: &mut [f32]| oracle.eval_into(ts, i, xs, di, out);
+            let g = |i: usize, di: &[S], out: &mut [S]| oracle.eval_into(ts, i, xs, di, out);
             let grad = GradFn::Parallel(&g, pool);
             if naive {
                 run_inner_naive_with(cfg, net, compressor, rng, state, d, grad)
@@ -100,7 +104,7 @@ fn inner_pass<T: Transport>(
         }
         None => {
             let mut g =
-                |i: usize, di: &[f32], out: &mut [f32]| oracle.eval_into(task, i, xs, di, out);
+                |i: usize, di: &[S], out: &mut [S]| oracle.eval_into(task, i, xs, di, out);
             let grad = GradFn::Serial(&mut g);
             if naive {
                 run_inner_naive_with(cfg, net, compressor, rng, state, d, grad)
@@ -113,36 +117,36 @@ fn inner_pass<T: Transport>(
 
 /// C²DFB (Algorithm 1 over Algorithm 2) as a step-driven
 /// [`BilevelAlgorithm`]; `naive = true` is the C²DFB(nc) ablation.
-pub struct C2dfb {
+pub struct C2dfb<S: Scalar = f32> {
     naive: bool,
-    st: Option<St>,
+    st: Option<St<S>>,
 }
 
 /// Iterate state built by `init` and advanced by `step`.
-struct St {
-    lambda: f32,
-    compressor: Box<dyn Compressor>,
+struct St<S: Scalar> {
+    lambda: S,
+    compressor: Box<dyn Compressor<S>>,
     inner_cfg_y: InnerConfig,
     inner_cfg_z: InnerConfig,
-    xs: Vec<Vec<f32>>,
-    ys: Vec<Vec<f32>>,
-    zs: Vec<Vec<f32>>,
-    y_state: InnerState,
-    z_state: InnerState,
-    tracker: DenseTracker,
+    xs: Vec<Vec<S>>,
+    ys: Vec<Vec<S>>,
+    zs: Vec<Vec<S>>,
+    y_state: InnerState<S>,
+    z_state: InnerState<S>,
+    tracker: DenseTracker<S>,
     /// Reused buffers for the outer in-place x mixing.
-    mix: MixScratch,
+    mix: MixScratch<S>,
 }
 
-impl C2dfb {
+impl<S: Scalar> C2dfb<S> {
     /// `naive` selects the error-feedback naive-compression inner protocol
     /// (the paper's C²DFB(nc)) instead of reference points.
-    pub fn new(naive: bool) -> C2dfb {
+    pub fn new(naive: bool) -> C2dfb<S> {
         C2dfb { naive, st: None }
     }
 }
 
-impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
+impl<T: Transport, S: Scalar> BilevelAlgorithm<T, S> for C2dfb<S> {
     fn name(&self) -> &'static str {
         if self.naive {
             "c2dfb_nc"
@@ -151,9 +155,9 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
         }
     }
 
-    fn init(&mut self, ctx: &mut RunContext<'_, T>) -> Result<StepOutcome> {
+    fn init(&mut self, ctx: &mut RunContext<'_, T, S>) -> Result<StepOutcome> {
         let m = ctx.task.nodes();
-        let lambda = ctx.cfg.lambda as f32;
+        let lambda = S::from_f64(ctx.cfg.lambda);
         let compressor = compress::parse(&ctx.cfg.compressor).map_err(anyhow::Error::msg)?;
         let inner_cfg_y = InnerConfig {
             eta: ctx.cfg.eta_in / (1.0 + ctx.cfg.lambda), // h = f + λg is (λL)-smooth
@@ -169,16 +173,16 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
         // Identical models on every node (paper setup).
         let x0 = ctx.task.init_x(&mut ctx.rng);
         let y0 = ctx.task.init_y(&mut ctx.rng);
-        let xs: Vec<Vec<f32>> = vec![x0; m];
-        let ys: Vec<Vec<f32>> = vec![y0.clone(); m];
-        let zs: Vec<Vec<f32>> = vec![y0; m];
+        let xs: Vec<Vec<S>> = vec![x0; m];
+        let ys: Vec<Vec<S>> = vec![y0.clone(); m];
+        let zs: Vec<Vec<S>> = vec![y0; m];
         let mut y_state = InnerState::new(&ctx.net, ctx.task.dy());
         let mut z_state = InnerState::new(&ctx.net, ctx.task.dy());
         y_state.obs = ctx.obs.scoped(Scope::InnerY);
         z_state.obs = ctx.obs.scoped(Scope::InnerZ);
 
         // s_x⁰ = u_i⁰ with the initial (y, z).
-        let u: Vec<Vec<f32>> =
+        let u: Vec<Vec<S>> =
             ctx.par_nodes(|task, i| task.hypergrad(i, &xs[i], &ys[i], &zs[i], lambda))?;
         ctx.metrics.oracles.first_order += m as u64;
         let grad_norm = crate::linalg::norm2(&crate::linalg::mean_rows(&u));
@@ -198,11 +202,12 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
         Ok(StepOutcome { grad_norm })
     }
 
-    fn step(&mut self, ctx: &mut RunContext<'_, T>, _round: usize) -> Result<StepOutcome> {
+    fn step(&mut self, ctx: &mut RunContext<'_, T, S>, _round: usize) -> Result<StepOutcome> {
         let st = self.st.as_mut().expect("init() must run before step()");
         let m = ctx.task.nodes();
         let pool = ctx.pool;
         let lambda = st.lambda;
+        let eta_out = S::from_f64(ctx.cfg.eta_out);
         // Snapshot the round's sampling mask (set on the transport by the
         // driver).  Inactive nodes sit the whole round out: their x/y/z
         // rows freeze, they pay no oracle calls and transmit no bytes —
@@ -220,9 +225,7 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
                     continue;
                 }
             }
-            for (xk, sk) in xi.iter_mut().zip(st.tracker.s.row(i)) {
-                *xk -= ctx.cfg.eta_out as f32 * sk;
-            }
+            kernels::descent(eta_out, st.tracker.s.row(i), xi);
         }
         ctx.obs.phase_comm(Phase::Mix, 0, snap, ctx.net.ledger(), t);
 
@@ -260,7 +263,7 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
         //       zero difference for them and the mean-gradient readout
         //       stays defined at every node.
         let t = ctx.obs.clock();
-        let (u_new, hyper_evals): (Vec<Vec<f32>>, u64) = match &active {
+        let (u_new, hyper_evals): (Vec<Vec<S>>, u64) = match &active {
             None => (
                 ctx.par_nodes(|task, i| {
                     task.hypergrad(i, &st.xs[i], &st.ys[i], &st.zs[i], lambda)
@@ -293,11 +296,11 @@ impl<T: Transport> BilevelAlgorithm<T> for C2dfb {
         Ok(StepOutcome { grad_norm })
     }
 
-    fn xs(&self) -> &[Vec<f32>] {
+    fn xs(&self) -> &[Vec<S>] {
         &self.st.as_ref().expect("init() must run first").xs
     }
 
-    fn ys(&self) -> &[Vec<f32>] {
+    fn ys(&self) -> &[Vec<S>] {
         &self.st.as_ref().expect("init() must run first").ys
     }
 }
@@ -328,7 +331,7 @@ mod tests {
     }
 
     fn run_quad(rounds: usize, naive: bool) -> (f64, crate::metrics::RunMetrics) {
-        let task = QuadraticTask::generate(6, 8, 1.0, 21);
+        let task: QuadraticTask = QuadraticTask::generate(6, 8, 1.0, 21);
         let net = Network::new(Graph::build(Topology::Ring, 6));
         let mut ctx = RunContext::new(&task, net, quad_cfg(rounds));
         let mut algo = C2dfb::new(naive);
@@ -377,7 +380,7 @@ mod tests {
 
     #[test]
     fn target_accuracy_stops_early() {
-        let task = QuadraticTask::generate(6, 8, 0.5, 22);
+        let task: QuadraticTask = QuadraticTask::generate(6, 8, 0.5, 22);
         let net = Network::new(Graph::build(Topology::Ring, 6));
         let mut cfg = quad_cfg(500);
         cfg.target_accuracy = Some(0.0); // any accuracy qualifies
@@ -397,7 +400,7 @@ mod tests {
     /// and counts the same oracle calls.
     #[test]
     fn parallel_pool_matches_serial_run() {
-        let task = QuadraticTask::generate(6, 8, 1.0, 23);
+        let task: QuadraticTask = QuadraticTask::generate(6, 8, 1.0, 23);
         let run_with_threads = |threads: usize| {
             let mut cfg = quad_cfg(30);
             cfg.network.threads = threads;
@@ -422,7 +425,7 @@ mod tests {
     /// still making progress on the hypergradient.
     #[test]
     fn sampled_run_is_deterministic_and_cheaper() {
-        let task = QuadraticTask::generate(6, 8, 1.0, 21);
+        let task: QuadraticTask = QuadraticTask::generate(6, 8, 1.0, 21);
         let run = |rate: f64| {
             let mut cfg = quad_cfg(60);
             cfg.sampling.rate = rate;
@@ -454,5 +457,52 @@ mod tests {
         let a: Vec<u64> = half.trace.iter().map(|p| p.loss.to_bits()).collect();
         let b: Vec<u64> = again.trace.iter().map(|p| p.loss.to_bits()).collect();
         assert_eq!(a, b, "sampled runs must be deterministic");
+    }
+
+    /// An f64 C²DFB run converges on the widened quadratic instance and
+    /// moves roughly double the payload bytes of the f32 run with the
+    /// identical schedule (dtype is the only wire difference).
+    #[test]
+    fn f64_run_converges_and_doubles_payload() {
+        let run_at = |f64_mode: bool| -> (f64, f64, u64) {
+            let cfg = quad_cfg(80);
+            let net = Network::new(Graph::build(Topology::Ring, 6));
+            if f64_mode {
+                let task: QuadraticTask<f64> = QuadraticTask::generate(6, 8, 1.0, 21);
+                let mut ctx = RunContext::new(&task, net, cfg);
+                let mut algo = C2dfb::<f64>::new(false);
+                crate::algorithms::drive(&mut ctx, &mut algo, &mut crate::algorithms::NoObserver)
+                    .unwrap();
+                let t = &ctx.metrics.trace;
+                (
+                    t.first().unwrap().grad_norm,
+                    t.last().unwrap().grad_norm,
+                    ctx.metrics.ledger.total_bytes,
+                )
+            } else {
+                let task: QuadraticTask = QuadraticTask::generate(6, 8, 1.0, 21);
+                let mut ctx = RunContext::new(&task, net, cfg);
+                let mut algo = C2dfb::new(false);
+                crate::algorithms::drive(&mut ctx, &mut algo, &mut crate::algorithms::NoObserver)
+                    .unwrap();
+                let t = &ctx.metrics.trace;
+                (
+                    t.first().unwrap().grad_norm,
+                    t.last().unwrap().grad_norm,
+                    ctx.metrics.ledger.total_bytes,
+                )
+            }
+        };
+        let (g0_32, g1_32, bytes_32) = run_at(false);
+        let (g0_64, g1_64, bytes_64) = run_at(true);
+        assert!(g1_64 < g0_64 * 0.1, "f64 run stalled: {g0_64} -> {g1_64}");
+        assert!(g1_32 < g0_32 * 0.1);
+        // Same message schedule, double-width payloads; headers/index maps
+        // keep the ratio just under 2.
+        let ratio = bytes_64 as f64 / bytes_32 as f64;
+        assert!(
+            ratio > 1.6 && ratio <= 2.0,
+            "byte ratio {ratio} (f64 {bytes_64} vs f32 {bytes_32})"
+        );
     }
 }

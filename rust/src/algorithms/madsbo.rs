@@ -17,67 +17,88 @@
 //! calls — the cost profile the paper's Table 1 contrasts C²DFB against.
 //! (MDBO, by contrast, keeps the published *untracked* gossip SGD and
 //! therefore suffers the full heterogeneity bias — see `mdbo.rs`.)
+//!
+//! Generic over the payload [`Scalar`] `S` like every algorithm here;
+//! `f32` (the default) is byte-identical to the historical path.
 
 use super::{BilevelAlgorithm, RunContext, StepOutcome};
 use crate::collective::{MixScratch, Transport};
+use crate::linalg::{kernels, Scalar};
 use crate::obs::{LedgerSnap, Phase};
 use crate::optim::DenseTracker;
 use anyhow::Result;
 
 /// Moving-average constant (paper Appendix C.1 uses 0.3).
-const THETA: f32 = 0.3;
+const THETA: f64 = 0.3;
 /// Quadratic sub-solver iterations per round.
 pub(crate) const SUBSOLVER_STEPS: usize = 10;
 
 /// MA-DSBO-style second-order baseline as a step-driven
 /// [`BilevelAlgorithm`].
-#[derive(Default)]
-pub struct Madsbo {
-    st: Option<St>,
+pub struct Madsbo<S: Scalar = f32> {
+    st: Option<St<S>>,
 }
 
 /// Iterate state built by `init` and advanced by `step`.
-struct St {
-    eta_in: f32,
-    eta_out: f32,
+struct St<S: Scalar> {
+    eta_in: S,
+    eta_out: S,
     gamma: f64,
-    xs: Vec<Vec<f32>>,
-    ys: Vec<Vec<f32>>,
-    vs: Vec<Vec<f32>>,
-    us: Vec<Vec<f32>>,
+    xs: Vec<Vec<S>>,
+    ys: Vec<Vec<S>>,
+    vs: Vec<Vec<S>>,
+    us: Vec<Vec<S>>,
     /// Lower-level gradient tracker (persists across rounds; MA-DSBO
     /// warm-starts both y and its tracker).
-    y_tracker: DenseTracker,
+    y_tracker: DenseTracker<S>,
     /// Reused buffers for every in-place dense mix (y/v/u/x exchanges).
-    mix: MixScratch,
+    mix: MixScratch<S>,
 }
 
-impl Madsbo {
-    pub fn new() -> Madsbo {
+impl<S: Scalar> Madsbo<S> {
+    pub fn new() -> Madsbo<S> {
         Madsbo::default()
     }
 }
 
-impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
+impl<S: Scalar> Default for Madsbo<S> {
+    fn default() -> Self {
+        Madsbo { st: None }
+    }
+}
+
+/// Per-row `h − g` into a fresh matrix (the sub-solver's tracked field).
+fn rows_sub<S: Scalar>(hv: &[Vec<S>], gyf: &[Vec<S>]) -> Vec<Vec<S>> {
+    hv.iter()
+        .zip(gyf)
+        .map(|(h, g)| {
+            let mut out = vec![S::ZERO; h.len()];
+            kernels::sub(h, g, &mut out);
+            out
+        })
+        .collect()
+}
+
+impl<T: Transport, S: Scalar> BilevelAlgorithm<T, S> for Madsbo<S> {
     fn name(&self) -> &'static str {
         "madsbo"
     }
 
-    fn init(&mut self, ctx: &mut RunContext<'_, T>) -> Result<StepOutcome> {
+    fn init(&mut self, ctx: &mut RunContext<'_, T, S>) -> Result<StepOutcome> {
         let m = ctx.task.nodes();
         let dy = ctx.task.dy();
         let x0 = ctx.task.init_x(&mut ctx.rng);
         let y0 = ctx.task.init_y(&mut ctx.rng);
-        let xs: Vec<Vec<f32>> = vec![x0; m];
-        let ys: Vec<Vec<f32>> = vec![y0; m];
-        let vs: Vec<Vec<f32>> = vec![vec![0.0; dy]; m];
-        let us: Vec<Vec<f32>> = vec![vec![0.0; ctx.task.dx()]; m];
+        let xs: Vec<Vec<S>> = vec![x0; m];
+        let ys: Vec<Vec<S>> = vec![y0; m];
+        let vs: Vec<Vec<S>> = vec![vec![S::ZERO; dy]; m];
+        let us: Vec<Vec<S>> = vec![vec![S::ZERO; ctx.task.dx()]; m];
 
-        let g0: Vec<Vec<f32>> = ctx.par_nodes(|task, i| task.inner_z_grad(i, &xs[i], &ys[i]))?;
+        let g0: Vec<Vec<S>> = ctx.par_nodes(|task, i| task.inner_z_grad(i, &xs[i], &ys[i]))?;
         ctx.metrics.oracles.first_order += m as u64;
         self.st = Some(St {
-            eta_in: ctx.cfg.eta_in as f32,
-            eta_out: ctx.cfg.eta_out as f32,
+            eta_in: S::from_f64(ctx.cfg.eta_in),
+            eta_out: S::from_f64(ctx.cfg.eta_out),
             gamma: ctx.cfg.gamma_out,
             xs,
             ys,
@@ -90,10 +111,11 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
         Ok(StepOutcome { grad_norm: f64::NAN })
     }
 
-    fn step(&mut self, ctx: &mut RunContext<'_, T>, _round: usize) -> Result<StepOutcome> {
+    fn step(&mut self, ctx: &mut RunContext<'_, T, S>, _round: usize) -> Result<StepOutcome> {
         let st = self.st.as_mut().expect("init() must run before step()");
         let m = ctx.task.nodes();
         let (eta_in, eta_out, gamma) = (st.eta_in, st.eta_out, st.gamma);
+        let theta = S::from_f64(THETA);
 
         // -- 1. tracked lower-level loop (in-place dense mixes) -----------
         let snap = LedgerSnap::of(ctx.net.ledger());
@@ -101,11 +123,9 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
         for _k in 0..ctx.cfg.inner_steps {
             ctx.net.mix_paid_into(gamma, st.ys.as_mut_slice(), &mut st.mix);
             for (i, yi) in st.ys.iter_mut().enumerate() {
-                for (yk, sk) in yi.iter_mut().zip(st.y_tracker.s.row(i)) {
-                    *yk -= eta_in * sk;
-                }
+                kernels::descent(eta_in, st.y_tracker.s.row(i), yi);
             }
-            let g: Vec<Vec<f32>> =
+            let g: Vec<Vec<S>> =
                 ctx.par_nodes(|task, i| task.inner_z_grad(i, &st.xs[i], &st.ys[i]))?;
             ctx.metrics.oracles.first_order += m as u64;
             st.y_tracker.update(&mut ctx.net, gamma, &g);
@@ -117,35 +137,27 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
         // -- 2. tracked quadratic sub-solver for v ≈ H⁻¹ ∇_y f -------------
         let snap = LedgerSnap::of(ctx.net.ledger());
         let t = ctx.obs.clock();
-        let gyf: Vec<Vec<f32>> =
+        let gyf: Vec<Vec<S>> =
             ctx.par_nodes(|task, i| task.grad_y_f(i, &st.xs[i], &st.ys[i]))?;
         ctx.metrics.oracles.first_order += m as u64;
         let alpha = eta_in;
-        let q0: Vec<Vec<f32>> = {
-            let hv: Vec<Vec<f32>> =
+        let q0: Vec<Vec<S>> = {
+            let hv: Vec<Vec<S>> =
                 ctx.par_nodes(|task, i| task.hvp_yy_g(i, &st.xs[i], &st.ys[i], &st.vs[i]))?;
             ctx.metrics.oracles.second_order += m as u64;
-            hv.into_iter()
-                .zip(&gyf)
-                .map(|(h, g)| h.iter().zip(g).map(|(hk, gk)| hk - gk).collect())
-                .collect()
+            rows_sub(&hv, &gyf)
         };
         let mut v_tracker = DenseTracker::new(q0);
         for _n in 0..SUBSOLVER_STEPS {
             ctx.net.mix_paid_into(gamma, st.vs.as_mut_slice(), &mut st.mix);
             for (i, vi) in st.vs.iter_mut().enumerate() {
-                for (vk, qk) in vi.iter_mut().zip(v_tracker.s.row(i)) {
-                    *vk -= alpha * qk;
-                }
+                kernels::descent(alpha, v_tracker.s.row(i), vi);
             }
-            let q: Vec<Vec<f32>> = {
-                let hv: Vec<Vec<f32>> =
+            let q: Vec<Vec<S>> = {
+                let hv: Vec<Vec<S>> =
                     ctx.par_nodes(|task, i| task.hvp_yy_g(i, &st.xs[i], &st.ys[i], &st.vs[i]))?;
                 ctx.metrics.oracles.second_order += m as u64;
-                hv.into_iter()
-                    .zip(&gyf)
-                    .map(|(h, g)| h.iter().zip(g).map(|(hk, gk)| hk - gk).collect())
-                    .collect()
+                rows_sub(&hv, &gyf)
             };
             v_tracker.update(&mut ctx.net, gamma, &q);
         }
@@ -155,7 +167,7 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
 
         // -- 3. hypergradient + moving average ----------------------------
         let t = ctx.obs.clock();
-        let hyper: Vec<(Vec<f32>, Vec<f32>)> = ctx.par_nodes(|task, i| {
+        let hyper: Vec<(Vec<S>, Vec<S>)> = ctx.par_nodes(|task, i| {
             let gxf = task.grad_x_f(i, &st.xs[i], &st.ys[i])?;
             let jv = task.jvp_xy_g(i, &st.xs[i], &st.ys[i], &st.vs[i])?;
             Ok((gxf, jv))
@@ -163,10 +175,7 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
         ctx.metrics.oracles.first_order += m as u64;
         ctx.metrics.oracles.second_order += m as u64;
         for (i, (gxf, jv)) in hyper.into_iter().enumerate() {
-            for k in 0..st.us[i].len() {
-                let h = gxf[k] - jv[k];
-                st.us[i][k] = (1.0 - THETA) * st.us[i][k] + THETA * h;
-            }
+            kernels::ema_diff(theta, &gxf, &jv, &mut st.us[i]);
         }
         ctx.obs.phase(Phase::Hypergrad, 2 * m as u64, t);
 
@@ -178,9 +187,7 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
         // -- 4. upper step -------------------------------------------------
         ctx.net.mix_paid_into(gamma, st.xs.as_mut_slice(), &mut st.mix);
         for (xi, ui) in st.xs.iter_mut().zip(&st.us) {
-            for (xk, uk) in xi.iter_mut().zip(ui) {
-                *xk -= eta_out * uk;
-            }
+            kernels::descent(eta_out, ui, xi);
         }
         ctx.obs.phase_comm(Phase::Mix, 0, snap, ctx.net.ledger(), t);
 
@@ -188,11 +195,11 @@ impl<T: Transport> BilevelAlgorithm<T> for Madsbo {
         Ok(StepOutcome { grad_norm })
     }
 
-    fn xs(&self) -> &[Vec<f32>] {
+    fn xs(&self) -> &[Vec<S>] {
         &self.st.as_ref().expect("init() must run first").xs
     }
 
-    fn ys(&self) -> &[Vec<f32>] {
+    fn ys(&self) -> &[Vec<S>] {
         &self.st.as_ref().expect("init() must run first").ys
     }
 }
@@ -222,7 +229,7 @@ mod tests {
     #[test]
     fn madsbo_converges_on_quadratic() {
         use crate::tasks::BilevelTask;
-        let task = QuadraticTask::generate(6, 8, 0.8, 31);
+        let task: QuadraticTask = QuadraticTask::generate(6, 8, 0.8, 31);
         // ψ* > 0: measure excess loss over the analytic hyper-minimum.
         let mut xstar = task.init_x(&mut crate::util::rng::Rng::new(5));
         for _ in 0..5000 {
@@ -249,7 +256,7 @@ mod tests {
 
     #[test]
     fn madsbo_pays_second_order_oracles_and_dense_bytes() {
-        let task = QuadraticTask::generate(6, 8, 0.8, 32);
+        let task: QuadraticTask = QuadraticTask::generate(6, 8, 0.8, 32);
         let net = Network::new(Graph::build(Topology::Ring, 6));
         let mut ctx = super::super::RunContext::new(&task, net, cfg(5));
         let mut algo = Madsbo::new();

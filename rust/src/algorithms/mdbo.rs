@@ -12,9 +12,13 @@
 //!    this is where MDBO's communication volume explodes);
 //! 3. hypergradient h_i = ∇_x f_i − (∇²_xy g_i)·v (one JVP);
 //! 4. upper gossip step x_i ← mix(x)_i − η_out h_i (dense x exchange).
+//!
+//! Generic over the payload [`Scalar`] `S` like every algorithm here;
+//! `f32` (the default) is byte-identical to the historical path.
 
 use super::{BilevelAlgorithm, RunContext, StepOutcome};
 use crate::collective::{MixScratch, Transport};
+use crate::linalg::{kernels, Scalar};
 use crate::obs::{LedgerSnap, Phase};
 use anyhow::Result;
 
@@ -24,40 +28,45 @@ const NEUMANN_TERMS: usize = 15;
 
 /// MDBO (gossip bilevel + Neumann-series hypergradient) as a step-driven
 /// [`BilevelAlgorithm`].
-#[derive(Default)]
-pub struct Mdbo {
-    st: Option<St>,
+pub struct Mdbo<S: Scalar = f32> {
+    st: Option<St<S>>,
 }
 
 /// Iterate state built by `init` and advanced by `step`.
-struct St {
-    eta_in: f32,
-    eta_out: f32,
+struct St<S: Scalar> {
+    eta_in: S,
+    eta_out: S,
     gamma: f64,
-    xs: Vec<Vec<f32>>,
-    ys: Vec<Vec<f32>>,
+    xs: Vec<Vec<S>>,
+    ys: Vec<Vec<S>>,
     /// Reused buffers for every in-place dense mix (y/p/x exchanges).
-    mix: MixScratch,
+    mix: MixScratch<S>,
 }
 
-impl Mdbo {
-    pub fn new() -> Mdbo {
+impl<S: Scalar> Mdbo<S> {
+    pub fn new() -> Mdbo<S> {
         Mdbo::default()
     }
 }
 
-impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
+impl<S: Scalar> Default for Mdbo<S> {
+    fn default() -> Self {
+        Mdbo { st: None }
+    }
+}
+
+impl<T: Transport, S: Scalar> BilevelAlgorithm<T, S> for Mdbo<S> {
     fn name(&self) -> &'static str {
         "mdbo"
     }
 
-    fn init(&mut self, ctx: &mut RunContext<'_, T>) -> Result<StepOutcome> {
+    fn init(&mut self, ctx: &mut RunContext<'_, T, S>) -> Result<StepOutcome> {
         let m = ctx.task.nodes();
         let x0 = ctx.task.init_x(&mut ctx.rng);
         let y0 = ctx.task.init_y(&mut ctx.rng);
         self.st = Some(St {
-            eta_in: ctx.cfg.eta_in as f32,
-            eta_out: ctx.cfg.eta_out as f32,
+            eta_in: S::from_f64(ctx.cfg.eta_in),
+            eta_out: S::from_f64(ctx.cfg.eta_out),
             gamma: ctx.cfg.gamma_out,
             xs: vec![x0; m],
             ys: vec![y0; m],
@@ -67,7 +76,7 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
         Ok(StepOutcome { grad_norm: f64::NAN })
     }
 
-    fn step(&mut self, ctx: &mut RunContext<'_, T>, _round: usize) -> Result<StepOutcome> {
+    fn step(&mut self, ctx: &mut RunContext<'_, T, S>, _round: usize) -> Result<StepOutcome> {
         let st = self.st.as_mut().expect("init() must run before step()");
         let m = ctx.task.nodes();
         let (eta_in, eta_out, gamma) = (st.eta_in, st.eta_out, st.gamma);
@@ -77,13 +86,11 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
         let t = ctx.obs.clock();
         for _k in 0..ctx.cfg.inner_steps {
             ctx.net.mix_paid_into(gamma, st.ys.as_mut_slice(), &mut st.mix);
-            let g: Vec<Vec<f32>> =
+            let g: Vec<Vec<S>> =
                 ctx.par_nodes(|task, i| task.inner_z_grad(i, &st.xs[i], &st.ys[i]))?;
             ctx.metrics.oracles.first_order += m as u64;
             for (yi, gi) in st.ys.iter_mut().zip(&g) {
-                for (yk, gk) in yi.iter_mut().zip(gi) {
-                    *yk -= eta_in * gk;
-                }
+                kernels::descent(eta_in, gi, yi);
             }
         }
         let lower_oracles = (ctx.cfg.inner_steps * m) as u64;
@@ -93,23 +100,25 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
         // -- 2. Neumann series with per-term gossip ------------------------
         let snap = LedgerSnap::of(ctx.net.ledger());
         let t = ctx.obs.clock();
-        let mut ps: Vec<Vec<f32>> =
+        let mut ps: Vec<Vec<S>> =
             ctx.par_nodes(|task, i| task.grad_y_f(i, &st.xs[i], &st.ys[i]))?;
         ctx.metrics.oracles.first_order += m as u64;
-        let mut vs: Vec<Vec<f32>> = ps
+        let mut vs: Vec<Vec<S>> = ps
             .iter()
-            .map(|p| p.iter().map(|x| eta_in * x).collect())
+            .map(|p| {
+                let mut v = p.clone();
+                kernels::scale(eta_in, &mut v);
+                v
+            })
             .collect();
         for _q in 0..NEUMANN_TERMS {
             ctx.net.mix_paid_into(gamma, ps.as_mut_slice(), &mut st.mix);
-            let hp: Vec<Vec<f32>> =
+            let hp: Vec<Vec<S>> =
                 ctx.par_nodes(|task, i| task.hvp_yy_g(i, &st.xs[i], &st.ys[i], &ps[i]))?;
             ctx.metrics.oracles.second_order += m as u64;
             for i in 0..m {
-                for k in 0..ps[i].len() {
-                    ps[i][k] -= eta_in * hp[i][k];
-                    vs[i][k] += eta_in * ps[i][k];
-                }
+                kernels::descent(eta_in, &hp[i], &mut ps[i]);
+                kernels::axpy(eta_in, &ps[i], &mut vs[i]);
             }
         }
         let neumann_oracles = (m + NEUMANN_TERMS * m) as u64;
@@ -118,10 +127,12 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
 
         // -- 3. hypergradient ----------------------------------------------
         let t = ctx.obs.clock();
-        let hs: Vec<Vec<f32>> = ctx.par_nodes(|task, i| {
+        let hs: Vec<Vec<S>> = ctx.par_nodes(|task, i| {
             let gxf = task.grad_x_f(i, &st.xs[i], &st.ys[i])?;
             let jv = task.jvp_xy_g(i, &st.xs[i], &st.ys[i], &vs[i])?;
-            Ok(gxf.iter().zip(&jv).map(|(a, b)| a - b).collect::<Vec<f32>>())
+            let mut h = vec![S::ZERO; gxf.len()];
+            kernels::sub(&gxf, &jv, &mut h);
+            Ok(h)
         })?;
         ctx.metrics.oracles.first_order += m as u64;
         ctx.metrics.oracles.second_order += m as u64;
@@ -132,9 +143,7 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
         let t = ctx.obs.clock();
         ctx.net.mix_paid_into(gamma, st.xs.as_mut_slice(), &mut st.mix);
         for (xi, hi) in st.xs.iter_mut().zip(&hs) {
-            for (xk, hk) in xi.iter_mut().zip(hi) {
-                *xk -= eta_out * hk;
-            }
+            kernels::descent(eta_out, hi, xi);
         }
         ctx.obs.phase_comm(Phase::Mix, 0, snap, ctx.net.ledger(), t);
 
@@ -142,11 +151,11 @@ impl<T: Transport> BilevelAlgorithm<T> for Mdbo {
         Ok(StepOutcome { grad_norm })
     }
 
-    fn xs(&self) -> &[Vec<f32>] {
+    fn xs(&self) -> &[Vec<S>] {
         &self.st.as_ref().expect("init() must run first").xs
     }
 
-    fn ys(&self) -> &[Vec<f32>] {
+    fn ys(&self) -> &[Vec<S>] {
         &self.st.as_ref().expect("init() must run first").ys
     }
 }
@@ -175,7 +184,7 @@ mod tests {
 
     #[test]
     fn mdbo_converges_on_quadratic() {
-        let task = QuadraticTask::generate(6, 8, 0.8, 41);
+        let task: QuadraticTask = QuadraticTask::generate(6, 8, 0.8, 41);
         // ψ* > 0 for this task: measure excess loss over the analytic
         // minimum, found by GD on the closed-form hypergradient.
         let mut xstar = task.init_x(&mut crate::util::rng::Rng::new(5));
@@ -205,7 +214,7 @@ mod tests {
     fn mdbo_communicates_more_than_c2dfb_for_same_rounds() {
         // The structural claim behind Table 1: per outer round MDBO pays
         // (K + Q + 1) dense exchanges vs C²DFB's 2 dense + 4K compressed.
-        let task = QuadraticTask::generate(6, 64, 0.8, 42);
+        let task: QuadraticTask = QuadraticTask::generate(6, 64, 0.8, 42);
 
         let net = Network::new(Graph::build(Topology::Ring, 6));
         let mut ctx = super::super::RunContext::new(&task, net, cfg(10));

@@ -40,6 +40,7 @@ pub use self::mdbo::Mdbo;
 
 use crate::collective::Transport;
 use crate::config::{Algorithm, ExperimentConfig};
+use crate::linalg::Scalar;
 use crate::metrics::{ConsensusEstimator, RunMetrics, StopReason, TracePoint};
 use crate::obs::{LedgerSnap, Phase, Recorder};
 use crate::sim::NodePool;
@@ -48,12 +49,15 @@ use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::Arc;
 
-/// Shared driver state handed to each algorithm.
-pub struct RunContext<'a, T: Transport> {
-    pub task: &'a dyn BilevelTask,
+/// Shared driver state handed to each algorithm.  Generic over the
+/// payload [`Scalar`] `S` (iterates, oracles, and wire payloads all run at
+/// `S`); the type parameter defaults to `f32` so existing
+/// `RunContext<'_, T>` spellings keep meaning the historical path.
+pub struct RunContext<'a, T: Transport, S: Scalar = f32> {
+    pub task: &'a dyn BilevelTask<S>,
     /// Set when the task may be shared across threads (analytic tasks);
     /// enables the parallel per-node executor.
-    task_sync: Option<&'a (dyn BilevelTask + Sync)>,
+    task_sync: Option<&'a (dyn BilevelTask<S> + Sync)>,
     pub net: T,
     pub cfg: ExperimentConfig,
     pub rng: Rng,
@@ -66,8 +70,8 @@ pub struct RunContext<'a, T: Transport> {
     pub obs: Recorder,
 }
 
-impl<'a, T: Transport> RunContext<'a, T> {
-    pub fn new(task: &'a dyn BilevelTask, net: T, cfg: ExperimentConfig) -> Self {
+impl<'a, T: Transport, S: Scalar> RunContext<'a, T, S> {
+    pub fn new(task: &'a dyn BilevelTask<S>, net: T, cfg: ExperimentConfig) -> Self {
         let label = format!("{}_{}", cfg.name, cfg.label());
         let metrics = RunMetrics::new(cfg.algorithm.name(), &label);
         let rng = Rng::new(cfg.seed ^ 0xA1607);
@@ -86,14 +90,18 @@ impl<'a, T: Transport> RunContext<'a, T> {
 
     /// Like [`RunContext::new`] for thread-shareable tasks: per-node
     /// oracle batches may then run on the pool.
-    pub fn new_shared(task: &'a (dyn BilevelTask + Sync), net: T, cfg: ExperimentConfig) -> Self {
+    pub fn new_shared(
+        task: &'a (dyn BilevelTask<S> + Sync),
+        net: T,
+        cfg: ExperimentConfig,
+    ) -> Self {
         let mut ctx = RunContext::new(task, net, cfg);
         ctx.task_sync = Some(task);
         ctx
     }
 
     /// The `Sync` view of the task, when available.
-    pub fn task_shared(&self) -> Option<&'a (dyn BilevelTask + Sync)> {
+    pub fn task_shared(&self) -> Option<&'a (dyn BilevelTask<S> + Sync)> {
         self.task_sync
     }
 
@@ -104,7 +112,7 @@ impl<'a, T: Transport> RunContext<'a, T> {
     pub fn par_nodes<R, F>(&self, f: F) -> Result<Vec<R>>
     where
         R: Send,
-        F: Fn(&dyn BilevelTask, usize) -> Result<R> + Sync,
+        F: Fn(&dyn BilevelTask<S>, usize) -> Result<R> + Sync,
     {
         let m = self.task.nodes();
         match self.task_sync {
@@ -124,8 +132,8 @@ impl<'a, T: Transport> RunContext<'a, T> {
     pub fn record(
         &mut self,
         round: usize,
-        xs: &[Vec<f32>],
-        ys: &[Vec<f32>],
+        xs: &[Vec<S>],
+        ys: &[Vec<S>],
         grad_norm: f64,
     ) -> Result<()> {
         // Consensus-model evaluation (paper protocol): test the averaged
@@ -180,22 +188,22 @@ pub struct StepOutcome {
 /// evaluation cadence, stop conditions, observers, and the ledger mirror.
 /// Constructed by [`make_algorithm`] or directly (e.g.
 /// [`C2dfb::new`]`(naive)` for the compression ablation).
-pub trait BilevelAlgorithm<T: Transport> {
+pub trait BilevelAlgorithm<T: Transport, S: Scalar = f32> {
     /// Algorithm identifier (matches [`Algorithm::name`]).
     fn name(&self) -> &'static str;
     /// Build all run state from the context; returns the round-0 outcome.
-    fn init(&mut self, ctx: &mut RunContext<'_, T>) -> Result<StepOutcome>;
+    fn init(&mut self, ctx: &mut RunContext<'_, T, S>) -> Result<StepOutcome>;
     /// Execute outer round `round` (0-based).
-    fn step(&mut self, ctx: &mut RunContext<'_, T>, round: usize) -> Result<StepOutcome>;
+    fn step(&mut self, ctx: &mut RunContext<'_, T, S>, round: usize) -> Result<StepOutcome>;
     /// Per-node upper iterates (consensus evaluation reads these).
-    fn xs(&self) -> &[Vec<f32>];
+    fn xs(&self) -> &[Vec<S>];
     /// Per-node lower iterates.
-    fn ys(&self) -> &[Vec<f32>];
+    fn ys(&self) -> &[Vec<S>];
 }
 
 /// Construct the configured algorithm.  C²DFB(nc) is the same
 /// implementation as C²DFB with `naive = true`.
-pub fn make_algorithm<T: Transport>(algo: Algorithm) -> Box<dyn BilevelAlgorithm<T>> {
+pub fn make_algorithm<T: Transport, S: Scalar>(algo: Algorithm) -> Box<dyn BilevelAlgorithm<T, S>> {
     match algo {
         Algorithm::C2dfb => Box::new(C2dfb::new(false)),
         Algorithm::C2dfbNc => Box::new(C2dfb::new(true)),
@@ -227,9 +235,9 @@ impl RunObserver for NoObserver {
 /// budget triggers within one eval interval of being exceeded and a
 /// budget-stopped run is a bit-identical prefix of the fixed-round trace.
 /// The stop reason lands in [`RunMetrics::stop_reason`].
-pub fn drive<T: Transport>(
-    ctx: &mut RunContext<'_, T>,
-    algo: &mut dyn BilevelAlgorithm<T>,
+pub fn drive<T: Transport, S: Scalar>(
+    ctx: &mut RunContext<'_, T, S>,
+    algo: &mut dyn BilevelAlgorithm<T, S>,
     observer: &mut dyn RunObserver,
 ) -> Result<()> {
     let stops = ctx.cfg.stop_conditions();

@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use super::{clear_delivered, dense_wire_bytes, Inbox, Transport};
 use crate::compress::Compressed;
+use crate::linalg::scalar::Scalar;
 use crate::metrics::{CommLedger, TimeModel};
 use crate::topology::{GenTopology, Neighborhood, Topology};
 
@@ -102,7 +103,7 @@ impl Transport for GenNetwork {
         self.mask()
     }
 
-    fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+    fn exchange<S: Scalar>(&mut self, msgs: Vec<Compressed<S>>) -> Inbox<Compressed<S>> {
         assert_eq!(msgs.len(), self.m);
         let bytes: Vec<usize> = msgs.iter().map(Compressed::wire_bytes).collect();
         self.ledger
@@ -110,9 +111,9 @@ impl Transport for GenNetwork {
         self.fan_out(msgs)
     }
 
-    fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+    fn exchange_dense<S: Scalar>(&mut self, vecs: &[Vec<S>]) -> Inbox<Vec<S>> {
         assert_eq!(vecs.len(), self.m);
-        let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes(v.len())).collect();
+        let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes::<S>(v.len())).collect();
         self.ledger
             .record_round_active(&bytes, &self.degrees, self.mask(), &self.time_model);
         self.fan_out(vecs.to_vec())

@@ -23,8 +23,13 @@
 //! dense mixing has an in-place twin, [`Transport::mix_paid_into`],
 //! with caller-owned [`MixScratch`] buffers; both are allocation-free
 //! in steady state and bit-identical to their allocating counterparts.
+//!
+//! Payload-carrying methods are generic over the payload [`Scalar`] `S`
+//! (`f32` wire default, `f64` high precision — docs/DTYPE.md); the
+//! transport itself is dtype-agnostic, it only sees byte counts.
 
 use crate::compress::Compressed;
+use crate::linalg::scalar::Scalar;
 use crate::linalg::{NodeBlock, RowsMut};
 use crate::metrics::{CommLedger, TimeModel};
 use crate::topology::{Graph, MixingMatrix};
@@ -38,10 +43,10 @@ pub use gen::GenNetwork;
 /// ascending sender order.  Payloads are shared, not cloned per edge.
 pub type Inbox<T> = Vec<Vec<(usize, Arc<T>)>>;
 
-/// Exact wire size of a dense `f32` vector message (8-byte header + data).
+/// Exact wire size of a dense `S` vector message (8-byte header + data).
 #[inline]
-pub fn dense_wire_bytes(len: usize) -> usize {
-    8 + 4 * len
+pub fn dense_wire_bytes<S: Scalar>(len: usize) -> usize {
+    8 + S::BYTES * len
 }
 
 /// Fan a message set out to each sender's neighbours (shared payloads).
@@ -78,14 +83,14 @@ pub(crate) fn clear_delivered(delivered: &mut Vec<Vec<usize>>, m: usize) {
 /// rows, the per-sender byte sizes, and the delivered-sender lists.  Own
 /// one per mixed variable and the steady state allocates nothing.
 #[derive(Default)]
-pub struct MixScratch {
-    prev: NodeBlock,
+pub struct MixScratch<S: Scalar = f32> {
+    prev: NodeBlock<S>,
     bytes: Vec<usize>,
     delivered: Vec<Vec<usize>>,
 }
 
-impl MixScratch {
-    pub fn new() -> MixScratch {
+impl<S: Scalar> MixScratch<S> {
+    pub fn new() -> MixScratch<S> {
         MixScratch::default()
     }
 }
@@ -131,7 +136,7 @@ pub trait Transport {
 
     /// Gossip-broadcast one compressed message per node to all its
     /// neighbours.  Returns each node's inbox; bytes are recorded.
-    fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed>;
+    fn exchange<S: Scalar>(&mut self, msgs: Vec<Compressed<S>>) -> Inbox<Compressed<S>>;
 
     /// The borrowing gossip round (the inner-loop hot path): pay
     /// `bytes[i]` per neighbour of node i and fill `delivered[i]` with the
@@ -147,11 +152,11 @@ pub trait Transport {
     /// pre-mix rows into `sc`.  Bit-identical to `mix_paid` on every
     /// transport (same fold expression, ascending sender order) but
     /// allocation-free in steady state.
-    fn mix_paid_into<R: RowsMut + ?Sized>(
+    fn mix_paid_into<S: Scalar, R: RowsMut<S> + ?Sized>(
         &mut self,
         gamma: f64,
         rows: &mut R,
-        sc: &mut MixScratch,
+        sc: &mut MixScratch<S>,
     ) {
         let m = self.m();
         let d = rows.dim();
@@ -161,7 +166,7 @@ pub trait Transport {
             sc.prev.row_mut(i).copy_from_slice(rows.row(i));
         }
         sc.bytes.clear();
-        sc.bytes.resize(m, dense_wire_bytes(d));
+        sc.bytes.resize(m, dense_wire_bytes::<S>(d));
         self.exchange_indices(&sc.bytes, &mut sc.delivered);
         for i in 0..m {
             // Under a sampling mask only active nodes take the mix step;
@@ -175,18 +180,15 @@ pub trait Transport {
             let oi = rows.row_mut(i);
             let ri = sc.prev.row(i);
             for &j in &sc.delivered[i] {
-                let w = (gamma * self.weight(i, j)) as f32;
-                let rj = sc.prev.row(j);
-                for k in 0..d {
-                    oi[k] += w * (rj[k] - ri[k]);
-                }
+                let w = S::from_f64(gamma * self.weight(i, j));
+                crate::linalg::kernels::weighted_diff_add(w, sc.prev.row(j), ri, oi);
             }
         }
     }
 
     /// Gossip-broadcast dense vectors (uncompressed algorithms / the outer
     /// loop).
-    fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>>;
+    fn exchange_dense<S: Scalar>(&mut self, vecs: &[Vec<S>]) -> Inbox<Vec<S>>;
 
     /// Dense gossip-mix step `rows_i + γ Σ_j w_ij (rows_j − rows_i)` that
     /// *also* pays for the communication (one dense exchange).  This is the
@@ -194,7 +196,7 @@ pub trait Transport {
     /// of the uncompressed baselines.  The default implementation mixes
     /// with whatever the transport actually delivered, so message loss
     /// degrades consensus exactly as it would in a real deployment.
-    fn mix_paid(&mut self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    fn mix_paid<S: Scalar>(&mut self, gamma: f64, rows: &[Vec<S>]) -> Vec<Vec<S>> {
         let inbox = self.exchange_dense(rows);
         let mut out = rows.to_vec();
         for (i, msgs) in inbox.into_iter().enumerate() {
@@ -206,10 +208,8 @@ pub trait Transport {
             let ri = &rows[i];
             let oi = &mut out[i];
             for (sender, v) in msgs {
-                let w = (gamma * self.weight(i, sender)) as f32;
-                for k in 0..ri.len() {
-                    oi[k] += w * (v[k] - ri[k]);
-                }
+                let w = S::from_f64(gamma * self.weight(i, sender));
+                crate::linalg::kernels::weighted_diff_add(w, &v, ri, oi);
             }
         }
         out
@@ -272,7 +272,7 @@ impl Network {
     }
 
     /// See [`Transport::exchange`].
-    pub fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+    pub fn exchange<S: Scalar>(&mut self, msgs: Vec<Compressed<S>>) -> Inbox<Compressed<S>> {
         assert_eq!(msgs.len(), self.m());
         let bytes: Vec<usize> = msgs.iter().map(Compressed::wire_bytes).collect();
         self.ledger
@@ -282,9 +282,9 @@ impl Network {
 
     /// See [`Transport::exchange_dense`].  One clone per sender (into the
     /// shared payload), not one per edge.
-    pub fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+    pub fn exchange_dense<S: Scalar>(&mut self, vecs: &[Vec<S>]) -> Inbox<Vec<S>> {
         assert_eq!(vecs.len(), self.m());
-        let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes(v.len())).collect();
+        let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes::<S>(v.len())).collect();
         self.ledger
             .record_round_active(&bytes, &self.degrees, self.mask(), &self.time_model);
         deliver(&self.graph, vecs.to_vec(), self.mask())
@@ -297,9 +297,9 @@ impl Network {
     /// it folds explicitly — active receivers mix contributions from
     /// active neighbours only, inactive rows pass through — which is
     /// bit-identical to the trait default's masked fold.
-    pub fn mix_paid(&mut self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    pub fn mix_paid<S: Scalar>(&mut self, gamma: f64, rows: &[Vec<S>]) -> Vec<Vec<S>> {
         assert_eq!(rows.len(), self.m());
-        let bytes: Vec<usize> = rows.iter().map(|v| dense_wire_bytes(v.len())).collect();
+        let bytes: Vec<usize> = rows.iter().map(|v| dense_wire_bytes::<S>(v.len())).collect();
         self.ledger
             .record_round_active(&bytes, &self.degrees, self.mask(), &self.time_model);
         let Some(mask) = self.active.clone() else {
@@ -310,17 +310,13 @@ impl Network {
             if !mask[i] {
                 continue;
             }
-            let ri = &rows[i];
             let oi = &mut out[i];
             for &j in self.graph.neighbors(i) {
                 if !mask[j] {
                     continue;
                 }
-                let w = (gamma * self.mixing.weight(i, j)) as f32;
-                let rj = &rows[j];
-                for k in 0..ri.len() {
-                    oi[k] += w * (rj[k] - ri[k]);
-                }
+                let w = S::from_f64(gamma * self.mixing.weight(i, j));
+                crate::linalg::kernels::weighted_diff_add(w, &rows[j], &rows[i], oi);
             }
         }
         out
@@ -372,11 +368,11 @@ impl Transport for Network {
         self.mask()
     }
 
-    fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+    fn exchange<S: Scalar>(&mut self, msgs: Vec<Compressed<S>>) -> Inbox<Compressed<S>> {
         Network::exchange(self, msgs)
     }
 
-    fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+    fn exchange_dense<S: Scalar>(&mut self, vecs: &[Vec<S>]) -> Inbox<Vec<S>> {
         Network::exchange_dense(self, vecs)
     }
 
@@ -384,7 +380,7 @@ impl Transport for Network {
         Network::exchange_indices(self, bytes, delivered)
     }
 
-    fn mix_paid(&mut self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    fn mix_paid<S: Scalar>(&mut self, gamma: f64, rows: &[Vec<S>]) -> Vec<Vec<S>> {
         Network::mix_paid(self, gamma, rows)
     }
 }
@@ -405,7 +401,7 @@ mod tests {
     fn exchange_delivers_to_neighbors_only() {
         let mut n = net(5);
         let mut rng = Rng::new(1);
-        let msgs: Vec<Compressed> = (0..5)
+        let msgs: Vec<Compressed<f32>> = (0..5)
             .map(|i| Identity.compress(&[i as f32], &mut rng))
             .collect();
         let inbox = n.exchange(msgs);
@@ -441,7 +437,7 @@ mod tests {
         let dense_bytes = n1.ledger.total_bytes;
 
         let mut n2 = net(4);
-        let msgs: Vec<Compressed> =
+        let msgs: Vec<Compressed<f32>> =
             (0..4).map(|_| TopK::new(0.1).compress(&v, &mut rng)).collect();
         n2.exchange(msgs);
         let sparse_bytes = n2.ledger.total_bytes;
@@ -450,6 +446,22 @@ mod tests {
         assert!(sparse_bytes * 4 < dense_bytes, "{sparse_bytes} vs {dense_bytes}");
         assert_eq!(n1.ledger.gossip_rounds, 1);
         assert_eq!(n1.ledger.messages, 8); // ring of 4: deg 2 each
+    }
+
+    /// Dense f64 payloads cost exactly twice the value bytes of f32
+    /// (same 8-byte header), straight from the dtype-aware wire size.
+    #[test]
+    fn dense_f64_exchange_doubles_value_bytes() {
+        assert_eq!(dense_wire_bytes::<f32>(100), 8 + 400);
+        assert_eq!(dense_wire_bytes::<f64>(100), 8 + 800);
+        let rows32: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 100]).collect();
+        let rows64: Vec<Vec<f64>> = (0..4).map(|i| vec![i as f64; 100]).collect();
+        let mut n32 = net(4);
+        n32.exchange_dense(&rows32);
+        let mut n64 = net(4);
+        n64.exchange_dense(&rows64);
+        assert_eq!(n32.ledger.total_bytes, 8 * (8 + 400) as u64);
+        assert_eq!(n64.ledger.total_bytes, 8 * (8 + 800) as u64);
     }
 
     #[test]
@@ -497,10 +509,10 @@ mod tests {
             fn active(&self) -> Option<&[bool]> {
                 Transport::active(&self.0)
             }
-            fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+            fn exchange<S: Scalar>(&mut self, msgs: Vec<Compressed<S>>) -> Inbox<Compressed<S>> {
                 self.0.exchange(msgs)
             }
-            fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+            fn exchange_dense<S: Scalar>(&mut self, vecs: &[Vec<S>]) -> Inbox<Vec<S>> {
                 self.0.exchange_dense(vecs)
             }
             fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {
@@ -526,7 +538,7 @@ mod tests {
     #[test]
     fn exchange_indices_matches_exchange_deliveries_and_ledger() {
         let mut rng = Rng::new(5);
-        let msgs: Vec<Compressed> = (0..5)
+        let msgs: Vec<Compressed<f32>> = (0..5)
             .map(|i| {
                 let mut v = vec![0.0f32; 40 + 10 * i];
                 rng.fill_normal(&mut v, 0.0, 1.0);
@@ -579,6 +591,31 @@ mod tests {
         assert_eq!(n2.ledger.total_bytes, reference.ledger.total_bytes);
     }
 
+    /// The generic mixing path works at f64 and agrees with a plain f64
+    /// reference fold.
+    #[test]
+    fn mix_paid_f64_matches_reference_fold() {
+        let mut rng = Rng::new(11);
+        let rows: Vec<Vec<f64>> = (0..5)
+            .map(|_| (0..9).map(|_| rng.normal()).collect())
+            .collect();
+        let mut n = net(5);
+        let mixed = n.mix_paid(0.8, &rows);
+        let mut expect = rows.clone();
+        let mixing = MixingMatrix::metropolis(&Graph::build(Topology::Ring, 5));
+        for i in 0..5 {
+            for &(j, wij) in mixing.neighbors(i) {
+                let c = 0.8 * wij;
+                for k in 0..9 {
+                    expect[i][k] += c * (rows[j][k] - rows[i][k]);
+                }
+            }
+        }
+        for (a, b) in mixed.iter().flatten().zip(expect.iter().flatten()) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
     /// Sampling semantics on the synchronous transport: inactive senders
     /// pay nothing and deliver nothing, inactive receivers pass through
     /// unchanged, and the masked fast path agrees with the masked trait
@@ -600,14 +637,14 @@ mod tests {
         let mut delivered = Vec::new();
         let mut n2 = net(6);
         n2.set_active(Some(mask.clone()));
-        n2.exchange_indices(&[dense_wire_bytes(4); 6], &mut delivered);
+        n2.exchange_indices(&[dense_wire_bytes::<f32>(4); 6], &mut delivered);
         for senders in &delivered {
             assert!(senders.iter().all(|&s| mask[s]));
             assert!(senders.windows(2).all(|w| w[0] < w[1]));
         }
         // Ledger charges active senders only (4 of 6, degree 2 each).
         assert_eq!(n2.ledger.messages, 8);
-        assert_eq!(n2.ledger.total_bytes, 4 * 2 * dense_wire_bytes(4) as u64);
+        assert_eq!(n2.ledger.total_bytes, 4 * 2 * dense_wire_bytes::<f32>(4) as u64);
 
         // Masked fast path == masked trait default, inactive rows frozen.
         struct DefaultOnly(Network);
@@ -627,10 +664,10 @@ mod tests {
             fn active(&self) -> Option<&[bool]> {
                 Transport::active(&self.0)
             }
-            fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+            fn exchange<S: Scalar>(&mut self, msgs: Vec<Compressed<S>>) -> Inbox<Compressed<S>> {
                 self.0.exchange(msgs)
             }
-            fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+            fn exchange_dense<S: Scalar>(&mut self, vecs: &[Vec<S>]) -> Inbox<Vec<S>> {
                 self.0.exchange_dense(vecs)
             }
             fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {

@@ -3,31 +3,43 @@
 //! [`Payload::decode`]) the `c2dfb serve` daemon lineage needs before any
 //! byte from an untrusted client may reach the gossip fold.
 //!
+//! Payloads are generic over the wire [`Scalar`] `S`: the first byte of
+//! every encoding is `payload kind + S::WIRE_OFFSET`, so the tag doubles
+//! as a dtype tag — f32 payloads use tags 0..=3 (the historical,
+//! golden-pinned format, byte-identical to the pre-dtype codec), f64
+//! payloads use 4..=7.  A decoder instantiated at one dtype rejects the
+//! other dtype's tags with a clean `Err` ("dtype mismatch"), never by
+//! misreading lengths: the count/body arithmetic below never runs before
+//! the tag has pinned the element width.
+//!
 //! The decode path treats its input as hostile: truncated payloads,
-//! oversized counts, inconsistent lengths, out-of-range indices and
-//! non-finite headers all return a clean `Err` — never a panic, never an
-//! over-read, never an attacker-sized allocation (see
-//! [`MAX_WIRE_COORDS`]).  `tests/proptests.rs` feeds it random byte
-//! strings and mutated valid encodings to hold that line.
+//! oversized counts, inconsistent lengths, out-of-range indices,
+//! non-finite headers and wrong-dtype or unknown tags all return a clean
+//! `Err` — never a panic, never an over-read, never an attacker-sized
+//! allocation (see [`MAX_WIRE_COORDS`]).  `tests/proptests.rs` feeds it
+//! random byte strings and mutated valid encodings to hold that line.
 
 // Toolchain-native twin of lint rule R3 (panic-free decode); `c2dfb
 // lint` enforces the same contract lexically.  docs/LINT.md.
 #![warn(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+use crate::linalg::kernels;
+use crate::linalg::scalar::{Dtype, Scalar};
 
 /// The on-the-wire representation of a compressed vector.  The byte counts
 /// model a straightforward binary encoding; no actual serialization happens
 /// in the in-process simulator, but the sizes feed the communication-volume
 /// ledger, which is the paper's headline metric.
 #[derive(Clone, Debug, PartialEq)]
-pub enum Payload {
-    /// Raw f32 values (4 B/coord).
-    Dense(Vec<f32>),
-    /// Coordinate list: index + f32 value.  Indices are modeled at the
+pub enum Payload<S: Scalar = f32> {
+    /// Raw scalar values (`S::BYTES` B/coord).
+    Dense(Vec<S>),
+    /// Coordinate list: index + scalar value.  Indices are modeled at the
     /// narrowest width that covers the max index (u16 below 65536, u32
     /// above), as a real wire encoder would emit.
-    Sparse { idx: Vec<u32>, val: Vec<f32> },
-    /// QSGD: one f32 norm + i16 signed level codes (2 B/coord).
-    Quantized { norm: f32, levels: u32, codes: Vec<i16> },
+    Sparse { idx: Vec<u32>, val: Vec<S> },
+    /// QSGD: one scalar norm + i16 signed level codes (2 B/coord).
+    Quantized { norm: S, levels: u32, codes: Vec<i16> },
 }
 
 /// Coarse payload classification, used by the telemetry layer's
@@ -39,7 +51,18 @@ pub enum PayloadKind {
     Quantized,
 }
 
-impl Payload {
+impl PayloadKind {
+    /// Wire-tag base of this kind (the dtype offset is added on top).
+    fn tag_base(self) -> u8 {
+        match self {
+            PayloadKind::Dense => TAG_DENSE,
+            PayloadKind::Sparse => TAG_SPARSE16,
+            PayloadKind::Quantized => TAG_QUANTIZED,
+        }
+    }
+}
+
+impl<S: Scalar> Payload<S> {
     pub fn kind(&self) -> PayloadKind {
         match self {
             Payload::Dense(_) => PayloadKind::Dense,
@@ -50,7 +73,7 @@ impl Payload {
 
     pub fn payload_bytes(&self) -> usize {
         match self {
-            Payload::Dense(v) => 4 * v.len(),
+            Payload::Dense(v) => S::BYTES * v.len(),
             Payload::Sparse { idx, val } => {
                 // Width from the MAX index, not the last: the encoding must
                 // bill correctly even if a producer ever emits indices out
@@ -58,15 +81,15 @@ impl Payload {
                 // must not under-bill if that invariant slips).
                 let max = idx.iter().copied().max().unwrap_or(0);
                 let idx_width = if max < 65_536 { 2 } else { 4 };
-                idx_width * idx.len() + 4 * val.len()
+                idx_width * idx.len() + S::BYTES * val.len()
             }
-            Payload::Quantized { codes, .. } => 4 + 4 + 2 * codes.len(),
+            Payload::Quantized { codes, .. } => S::BYTES + 4 + 2 * codes.len(),
         }
     }
 
     /// Reuse `self` as a `Dense` payload, returning its cleared value
     /// buffer (allocation-free once the variant and capacity are warm).
-    pub(crate) fn reuse_dense(&mut self) -> &mut Vec<f32> {
+    pub(crate) fn reuse_dense(&mut self) -> &mut Vec<S> {
         if !matches!(self, Payload::Dense(_)) {
             *self = Payload::Dense(Vec::new());
         }
@@ -81,7 +104,7 @@ impl Payload {
 
     /// Reuse `self` as a `Sparse` payload, returning its cleared index and
     /// value buffers.
-    pub(crate) fn reuse_sparse(&mut self) -> (&mut Vec<u32>, &mut Vec<f32>) {
+    pub(crate) fn reuse_sparse(&mut self) -> (&mut Vec<u32>, &mut Vec<S>) {
         if !matches!(self, Payload::Sparse { .. }) {
             *self = Payload::Sparse { idx: Vec::new(), val: Vec::new() };
         }
@@ -97,7 +120,7 @@ impl Payload {
 
     /// Reuse `self` as a `Quantized` payload with the given header fields,
     /// returning its cleared code buffer.
-    pub(crate) fn reuse_quantized(&mut self, norm: f32, levels: u32) -> &mut Vec<i16> {
+    pub(crate) fn reuse_quantized(&mut self, norm: S, levels: u32) -> &mut Vec<i16> {
         if !matches!(self, Payload::Quantized { .. }) {
             *self = Payload::Quantized { norm, levels, codes: Vec::new() };
         }
@@ -121,62 +144,40 @@ impl Payload {
         }
     }
 
-    pub fn write_dense(&self, out: &mut [f32]) {
+    pub fn write_dense(&self, out: &mut [S]) {
         match self {
             Payload::Dense(v) => {
                 // zip, not copy_from_slice: a decoded dense payload may
                 // claim a different dim than the receiver's buffer, and
                 // copy_from_slice panics on mismatch (R3).
                 debug_assert_eq!(v.len(), out.len(), "dense payload dim mismatch");
-                out.fill(0.0);
+                out.fill(S::ZERO);
                 for (o, &x) in out.iter_mut().zip(v) {
                     *o = x;
                 }
             }
             Payload::Sparse { idx, val } => {
-                out.fill(0.0);
-                for (&i, &x) in idx.iter().zip(val) {
-                    // A decoded index can exceed the receiver's dim on
-                    // hostile bytes; dropping it beats panicking (R3).
-                    debug_assert!((i as usize) < out.len(), "sparse index {i} out of range");
-                    if let Some(o) = out.get_mut(i as usize) {
-                        *o = x;
-                    }
-                }
+                out.fill(S::ZERO);
+                kernels::scatter_write(idx, val, out);
             }
             Payload::Quantized { norm, levels, codes } => {
-                let scale = norm / *levels as f32;
-                for (o, &c) in out.iter_mut().zip(codes) {
-                    *o = c as f32 * scale;
-                }
+                let scale = *norm / S::from_u32(*levels);
+                kernels::dequant_write(scale, codes, out);
             }
         }
     }
 
-    pub fn add_dense(&self, target: &mut [f32]) {
-        self.add_scaled_dense(1.0, target);
+    pub fn add_dense(&self, target: &mut [S]) {
+        self.add_scaled_dense(S::ONE, target);
     }
 
-    pub fn add_scaled_dense(&self, w: f32, target: &mut [f32]) {
+    pub fn add_scaled_dense(&self, w: S, target: &mut [S]) {
         match self {
-            Payload::Dense(v) => {
-                for (t, &x) in target.iter_mut().zip(v) {
-                    *t += w * x;
-                }
-            }
-            Payload::Sparse { idx, val } => {
-                for (&i, &x) in idx.iter().zip(val) {
-                    debug_assert!((i as usize) < target.len(), "sparse index {i} out of range");
-                    if let Some(t) = target.get_mut(i as usize) {
-                        *t += w * x;
-                    }
-                }
-            }
+            Payload::Dense(v) => kernels::dense_add_scaled(w, v, target),
+            Payload::Sparse { idx, val } => kernels::scatter_add_scaled(w, idx, val, target),
             Payload::Quantized { norm, levels, codes } => {
-                let scale = w * norm / *levels as f32;
-                for (t, &c) in target.iter_mut().zip(codes) {
-                    *t += c as f32 * scale;
-                }
+                let scale = w * *norm / S::from_u32(*levels);
+                kernels::dequant_add(scale, codes, target);
             }
         }
     }
@@ -189,15 +190,21 @@ impl Payload {
 /// Hard cap on the coordinate count any single decoded payload may claim.
 /// A 4-byte length field can demand a 16 GiB allocation before the first
 /// value byte is read; rejecting counts above this bound keeps a hostile
-/// header from becoming a memory bomb.  2²⁴ coordinates (64 MiB of f32s)
-/// comfortably covers every dimension this repo simulates.
+/// header from becoming a memory bomb.  2²⁴ coordinates (64 MiB of f32s,
+/// 128 MiB of f64s) comfortably covers every dimension this repo
+/// simulates.
 pub const MAX_WIRE_COORDS: u32 = 1 << 24;
 
-/// Wire tags (first byte of every encoded payload).
+/// Wire-tag kind bases (the first byte of every encoded payload is
+/// `base + Scalar::WIRE_OFFSET`: f32 → 0..=3, f64 → 4..=7).
 const TAG_DENSE: u8 = 0;
 const TAG_SPARSE16: u8 = 1;
 const TAG_SPARSE32: u8 = 2;
 const TAG_QUANTIZED: u8 = 3;
+/// Number of kind tags per dtype block.
+const TAG_KINDS: u8 = 4;
+/// First tag value outside any dtype block (f32 0..=3, f64 4..=7).
+const TAG_LIMIT: u8 = 2 * TAG_KINDS;
 
 /// Bounds-checked little-endian reader over untrusted bytes.  Every read
 /// goes through [`Reader::take`], so an over-read is impossible by
@@ -253,8 +260,9 @@ impl<'a> Reader<'a> {
         Ok(u32::from_le_bytes(s))
     }
 
-    fn f32(&mut self) -> Result<f32, String> {
-        Ok(f32::from_bits(self.u32()?))
+    fn scalar<S: Scalar>(&mut self) -> Result<S, String> {
+        let s = self.take(S::BYTES)?;
+        S::read_le(s).ok_or_else(|| "short scalar read".to_string())
     }
 
     fn i16(&mut self) -> Result<i16, String> {
@@ -291,26 +299,28 @@ fn checked_count(n: u32, remaining: usize, elem_bytes: usize) -> Result<usize, S
     Ok(n as usize)
 }
 
-impl Payload {
+impl<S: Scalar> Payload<S> {
     /// Serialize into `out` (appended; caller clears for reuse).  The
     /// format is little-endian and mirrors [`payload_bytes`]'s cost
     /// model: `tag u8 · count u32 · body`, with sparse indices at the
-    /// narrowest width covering the max index, exactly as billed.
+    /// narrowest width covering the max index, exactly as billed.  The
+    /// tag carries the dtype (`kind + S::WIRE_OFFSET`); the f32 encoding
+    /// is byte-identical to the historical untagged-dtype format.
     ///
     /// [`payload_bytes`]: Payload::payload_bytes
     pub fn encode(&self, out: &mut Vec<u8>) {
         match self {
             Payload::Dense(v) => {
-                out.push(TAG_DENSE);
+                out.push(TAG_DENSE + S::WIRE_OFFSET);
                 out.extend_from_slice(&(v.len() as u32).to_le_bytes());
                 for x in v {
-                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                    x.write_le(out);
                 }
             }
             Payload::Sparse { idx, val } => {
                 let max = idx.iter().copied().max().unwrap_or(0);
                 let wide = max >= 65_536;
-                out.push(if wide { TAG_SPARSE32 } else { TAG_SPARSE16 });
+                out.push(if wide { TAG_SPARSE32 } else { TAG_SPARSE16 } + S::WIRE_OFFSET);
                 out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
                 for &i in idx {
                     if wide {
@@ -320,13 +330,13 @@ impl Payload {
                     }
                 }
                 for x in val {
-                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                    x.write_le(out);
                 }
             }
             Payload::Quantized { norm, levels, codes } => {
-                out.push(TAG_QUANTIZED);
+                out.push(TAG_QUANTIZED + S::WIRE_OFFSET);
                 out.extend_from_slice(&(codes.len() as u32).to_le_bytes());
-                out.extend_from_slice(&norm.to_bits().to_le_bytes());
+                norm.write_le(out);
                 out.extend_from_slice(&levels.to_le_bytes());
                 for &c in codes {
                     out.extend_from_slice(&c.to_le_bytes());
@@ -338,48 +348,61 @@ impl Payload {
     /// Exact length [`encode`](Payload::encode) will append.
     pub fn encoded_len(&self) -> usize {
         match self {
-            Payload::Dense(v) => 1 + 4 + 4 * v.len(),
+            Payload::Dense(v) => 1 + 4 + S::BYTES * v.len(),
             Payload::Sparse { idx, val } => {
                 let max = idx.iter().copied().max().unwrap_or(0);
                 let w = if max >= 65_536 { 4 } else { 2 };
-                1 + 4 + w * idx.len() + 4 * val.len()
+                1 + 4 + w * idx.len() + S::BYTES * val.len()
             }
-            Payload::Quantized { codes, .. } => 1 + 4 + 4 + 4 + 2 * codes.len(),
+            Payload::Quantized { codes, .. } => 1 + 4 + S::BYTES + 4 + 2 * codes.len(),
         }
     }
 
-    /// Decode an untrusted byte string.  Structural failures — unknown
-    /// tag, truncation, counts that disagree with the bytes present,
-    /// trailing garbage, a count above [`MAX_WIRE_COORDS`], unsorted or
-    /// duplicate sparse indices, a quantized header with `levels`
-    /// outside `1..=32767` or a non-finite norm — all return `Err`.
-    /// Dimension agreement is the caller's contract: use
+    /// Decode an untrusted byte string at this dtype.  Structural
+    /// failures — unknown tag, a tag of the *other* dtype ("dtype
+    /// mismatch": an f32 payload must not decode into an f64 contract or
+    /// vice versa), truncation, counts that disagree with the bytes
+    /// present, trailing garbage, a count above [`MAX_WIRE_COORDS`],
+    /// unsorted or duplicate sparse indices, a quantized header with
+    /// `levels` outside `1..=32767` or a non-finite norm — all return
+    /// `Err`.  Dimension agreement is the caller's contract: use
     /// [`decode_for_dim`](Payload::decode_for_dim) before folding a
     /// payload into `d`-length state.
-    pub fn decode(bytes: &[u8]) -> Result<Payload, String> {
+    pub fn decode(bytes: &[u8]) -> Result<Payload<S>, String> {
         let mut r = Reader { b: bytes, i: 0 };
         let tag = r.u8().map_err(|_| "empty payload".to_string())?;
+        if tag >= TAG_LIMIT {
+            return Err(format!("unknown payload tag {tag}"));
+        }
+        // The tag pins the wire dtype before any length arithmetic runs:
+        // a wrong-dtype payload is rejected here, never misread with the
+        // wrong element width.
+        let wire_dtype = if tag < TAG_KINDS { Dtype::F32 } else { Dtype::F64 };
+        if wire_dtype != S::DTYPE {
+            return Err(format!(
+                "payload dtype mismatch: wire carries {wire_dtype}, decoder expects {}",
+                S::NAME
+            ));
+        }
+        let kind = tag - S::WIRE_OFFSET;
         let n_raw = r.u32()?;
         let remaining = bytes.len() - r.i;
-        let p = match tag {
+        let p = match kind {
             TAG_DENSE => {
-                let n = checked_count(n_raw, remaining, 4)?;
+                let n = checked_count(n_raw, remaining, S::BYTES)?;
                 let mut v = Vec::with_capacity(n);
                 for _ in 0..n {
-                    v.push(r.f32()?);
+                    v.push(r.scalar::<S>()?);
                 }
                 Payload::Dense(v)
             }
             TAG_SPARSE16 | TAG_SPARSE32 => {
-                let iw = if tag == TAG_SPARSE32 { 4 } else { 2 };
-                let n = checked_count(n_raw, remaining, iw + 4)?;
+                let wide = kind == TAG_SPARSE32;
+                let iw = if wide { 4 } else { 2 };
+                let n = checked_count(n_raw, remaining, iw + S::BYTES)?;
                 let mut idx = Vec::with_capacity(n);
                 for _ in 0..n {
-                    let i = if tag == TAG_SPARSE32 {
-                        r.u32()?
-                    } else {
-                        r.u16()? as u32
-                    };
+                    let i = if wide { r.u32()? } else { r.u16()? as u32 };
                     if let Some(&prev) = idx.last() {
                         if i <= prev {
                             return Err(format!(
@@ -392,17 +415,17 @@ impl Payload {
                 // A canonical encoder uses the narrow tag whenever the max
                 // index fits u16; a wide tag on narrow indices would let a
                 // peer bill 4 B/index for traffic the ledger models at 2 B.
-                if tag == TAG_SPARSE32 && idx.last().is_some_and(|&m| m < 65_536) {
+                if wide && idx.last().is_some_and(|&m| m < 65_536) {
                     return Err("non-canonical width: u32 indices all fit u16".into());
                 }
                 let mut val = Vec::with_capacity(n);
                 for _ in 0..n {
-                    val.push(r.f32()?);
+                    val.push(r.scalar::<S>()?);
                 }
                 Payload::Sparse { idx, val }
             }
             TAG_QUANTIZED => {
-                let norm = r.f32()?;
+                let norm = r.scalar::<S>()?;
                 let levels = r.u32()?;
                 if !norm.is_finite() {
                     return Err("quantized norm is not finite".into());
@@ -417,7 +440,7 @@ impl Payload {
                 }
                 Payload::Quantized { norm, levels, codes }
             }
-            other => return Err(format!("unknown payload tag {other}")),
+            other => return Err(format!("unknown payload kind {other}")),
         };
         r.done()?;
         Ok(p)
@@ -427,8 +450,8 @@ impl Payload {
     /// index/coordinate count must fit a `dim`-length vector, so the
     /// result is safe to pass to [`write_dense`](Payload::write_dense) /
     /// [`add_dense`](Payload::add_dense) with `dim`-length buffers.
-    pub fn decode_for_dim(bytes: &[u8], dim: usize) -> Result<Payload, String> {
-        let p = Payload::decode(bytes)?;
+    pub fn decode_for_dim(bytes: &[u8], dim: usize) -> Result<Payload<S>, String> {
+        let p = Payload::<S>::decode(bytes)?;
         let ok = match &p {
             Payload::Dense(v) => v.len() == dim,
             Payload::Sparse { idx, .. } => {
@@ -450,32 +473,39 @@ mod tests {
 
     #[test]
     fn byte_accounting() {
-        assert_eq!(Payload::Dense(vec![0.0; 10]).payload_bytes(), 40);
+        assert_eq!(Payload::Dense(vec![0.0f32; 10]).payload_bytes(), 40);
+        // Doubled per-coordinate cost at f64.
+        assert_eq!(Payload::Dense(vec![0.0f64; 10]).payload_bytes(), 80);
         // u16 indices below 65536.
         assert_eq!(
-            Payload::Sparse { idx: vec![1, 3], val: vec![1.0, 2.0] }.payload_bytes(),
+            Payload::Sparse { idx: vec![1, 3], val: vec![1.0f32, 2.0] }.payload_bytes(),
             12
         );
         // u32 indices once any index exceeds the u16 range.
         assert_eq!(
-            Payload::Sparse { idx: vec![1, 70_000], val: vec![1.0, 2.0] }.payload_bytes(),
+            Payload::Sparse { idx: vec![1, 70_000], val: vec![1.0f32, 2.0] }.payload_bytes(),
             16
         );
         // Width follows the MAX index even when indices are unsorted (an
         // early wide index must not be under-billed at u16 width).
         assert_eq!(
-            Payload::Sparse { idx: vec![70_000, 1], val: vec![1.0, 2.0] }.payload_bytes(),
+            Payload::Sparse { idx: vec![70_000, 1], val: vec![1.0f32, 2.0] }.payload_bytes(),
             16
         );
         assert_eq!(
-            Payload::Quantized { norm: 1.0, levels: 4, codes: vec![0; 10] }.payload_bytes(),
+            Payload::Quantized { norm: 1.0f32, levels: 4, codes: vec![0; 10] }.payload_bytes(),
             28
+        );
+        // f64 quantized pays only for the wider norm header.
+        assert_eq!(
+            Payload::Quantized { norm: 1.0f64, levels: 4, codes: vec![0; 10] }.payload_bytes(),
+            32
         );
     }
 
     #[test]
     fn sparse_write_and_add() {
-        let p = Payload::Sparse { idx: vec![0, 2], val: vec![5.0, -1.0] };
+        let p = Payload::Sparse { idx: vec![0, 2], val: vec![5.0f32, -1.0] };
         let mut d = vec![9.0f32; 3];
         p.write_dense(&mut d);
         assert_eq!(d, vec![5.0, 0.0, -1.0]);
@@ -486,7 +516,7 @@ mod tests {
 
     #[test]
     fn reuse_helpers_switch_variant_and_clear() {
-        let mut p = Payload::Dense(vec![1.0, 2.0]);
+        let mut p = Payload::Dense(vec![1.0f32, 2.0]);
         {
             let (idx, val) = p.reuse_sparse();
             assert!(idx.is_empty() && val.is_empty());
@@ -506,13 +536,13 @@ mod tests {
 
     #[test]
     fn quantized_roundtrip_scale() {
-        let p = Payload::Quantized { norm: 8.0, levels: 4, codes: vec![4, -2, 0] };
+        let p = Payload::Quantized { norm: 8.0f32, levels: 4, codes: vec![4, -2, 0] };
         let mut d = vec![0.0f32; 3];
         p.write_dense(&mut d);
         assert_eq!(d, vec![8.0, -4.0, 0.0]);
     }
 
-    fn enc(p: &Payload) -> Vec<u8> {
+    fn enc<S: Scalar>(p: &Payload<S>) -> Vec<u8> {
         let mut b = Vec::new();
         p.encode(&mut b);
         assert_eq!(b.len(), p.encoded_len());
@@ -522,7 +552,7 @@ mod tests {
     #[test]
     fn wire_roundtrip_all_variants() {
         let cases = vec![
-            Payload::Dense(vec![1.0, -2.5, 0.0]),
+            Payload::Dense(vec![1.0f32, -2.5, 0.0]),
             Payload::Dense(vec![]),
             Payload::Sparse { idx: vec![0, 3, 9], val: vec![1.0, 2.0, -3.0] },
             Payload::Sparse { idx: vec![5, 70_000], val: vec![0.5, 0.25] },
@@ -530,8 +560,55 @@ mod tests {
         ];
         for p in cases {
             let b = enc(&p);
-            assert_eq!(Payload::decode(&b).unwrap(), p, "roundtrip failed");
+            assert_eq!(Payload::<f32>::decode(&b).unwrap(), p, "roundtrip failed");
         }
+    }
+
+    #[test]
+    fn wire_roundtrip_f64_variants() {
+        let cases = vec![
+            Payload::Dense(vec![1.0f64, -2.5, 1e300]),
+            Payload::Sparse { idx: vec![0, 3, 70_001], val: vec![1.0f64, 2.0, -3.0] },
+            Payload::Quantized { norm: 2.0f64, levels: 4, codes: vec![1, -4, 0] },
+        ];
+        for p in cases {
+            let b = enc(&p);
+            assert!(b[0] >= 4 && b[0] < 8, "f64 tags live in 4..=7, got {}", b[0]);
+            assert_eq!(Payload::<f64>::decode(&b).unwrap(), p, "f64 roundtrip failed");
+        }
+    }
+
+    #[test]
+    fn f32_encoding_is_the_historical_format() {
+        // The dtype tag must not move a single byte of the f32 format the
+        // goldens and the sweep byte-identity suite pin: tag 0..=3, then
+        // count u32, then the body.
+        let p = Payload::Dense(vec![1.0f32, -2.5]);
+        let b = enc(&p);
+        let mut want = vec![0u8];
+        want.extend_from_slice(&2u32.to_le_bytes());
+        want.extend_from_slice(&1.0f32.to_bits().to_le_bytes());
+        want.extend_from_slice(&(-2.5f32).to_bits().to_le_bytes());
+        assert_eq!(b, want);
+    }
+
+    #[test]
+    fn decode_rejects_wrong_dtype_tag() {
+        // An f32 payload must not decode into an f64 contract: the f64
+        // decoder sees tag 0 and stops at the tag, before any length
+        // arithmetic could misread the 4-byte values as 8-byte ones.
+        let f32_bytes = enc(&Payload::Dense(vec![1.0f32, 2.0]));
+        let err = Payload::<f64>::decode(&f32_bytes).unwrap_err();
+        assert!(err.contains("dtype mismatch"), "unhelpful error: {err}");
+        // And symmetrically.
+        let f64_bytes = enc(&Payload::Dense(vec![1.0f64, 2.0]));
+        let err = Payload::<f32>::decode(&f64_bytes).unwrap_err();
+        assert!(err.contains("dtype mismatch"), "unhelpful error: {err}");
+        // decode_for_dim inherits the rejection.
+        assert!(Payload::<f64>::decode_for_dim(&f32_bytes, 2).is_err());
+        // Tags beyond both dtype blocks are unknown, not mismatched.
+        let err = Payload::<f32>::decode(&[9, 0, 0, 0, 0]).unwrap_err();
+        assert!(err.contains("unknown payload tag"), "{err}");
     }
 
     #[test]
@@ -539,89 +616,108 @@ mod tests {
         // The encoded body (minus tag + count header) costs exactly what
         // payload_bytes bills, so the ledger and the wire cannot drift.
         for p in [
-            Payload::Dense(vec![1.0; 7]),
-            Payload::Sparse { idx: vec![1, 2, 65_536], val: vec![1.0; 3] },
-            Payload::Sparse { idx: vec![1, 2, 3], val: vec![1.0; 3] },
+            Payload::Dense(vec![1.0f32; 7]),
+            Payload::Sparse { idx: vec![1, 2, 65_536], val: vec![1.0f32; 3] },
+            Payload::Sparse { idx: vec![1, 2, 3], val: vec![1.0f32; 3] },
         ] {
             assert_eq!(enc(&p).len() - 5, p.payload_bytes());
         }
         // Quantized ships one extra u32 count the cost model folds into
         // its 8-byte header allowance.
-        let q = Payload::Quantized { norm: 1.0, levels: 4, codes: vec![0; 5] };
+        let q = Payload::Quantized { norm: 1.0f32, levels: 4, codes: vec![0; 5] };
         assert_eq!(enc(&q).len(), 1 + 4 + q.payload_bytes());
+        // The identity holds at f64 too.
+        let d64 = Payload::Dense(vec![1.0f64; 7]);
+        assert_eq!(enc(&d64).len() - 5, d64.payload_bytes());
     }
 
     #[test]
     fn decode_rejects_structural_garbage() {
         // Empty, unknown tag, truncated header.
-        assert!(Payload::decode(&[]).is_err());
-        assert!(Payload::decode(&[9, 0, 0, 0, 0]).is_err());
-        assert!(Payload::decode(&[TAG_DENSE, 1]).is_err());
+        assert!(Payload::<f32>::decode(&[]).is_err());
+        assert!(Payload::<f32>::decode(&[9, 0, 0, 0, 0]).is_err());
+        assert!(Payload::<f32>::decode(&[0, 1]).is_err());
         // Count disagrees with the bytes present (both directions).
-        let mut b = enc(&Payload::Dense(vec![1.0, 2.0]));
+        let mut b = enc(&Payload::Dense(vec![1.0f32, 2.0]));
         b[1] = 3; // claims 3 coords, carries 2
-        assert!(Payload::decode(&b).is_err());
-        let mut b = enc(&Payload::Dense(vec![1.0, 2.0]));
+        assert!(Payload::<f32>::decode(&b).is_err());
+        let mut b = enc(&Payload::Dense(vec![1.0f32, 2.0]));
         b[1] = 1; // claims 1 coord → 4 trailing bytes
-        assert!(Payload::decode(&b).is_err());
+        assert!(Payload::<f32>::decode(&b).is_err());
         // Oversized count: a 16 GiB allocation request must die at the
         // header, not at the allocator.
-        let mut b = vec![TAG_DENSE];
+        let mut b = vec![0u8];
         b.extend_from_slice(&u32::MAX.to_le_bytes());
-        assert!(Payload::decode(&b).unwrap_err().contains("MAX_WIRE_COORDS"));
-        // Every truncation of a valid encoding fails cleanly.
-        let full = enc(&Payload::Sparse { idx: vec![2, 7, 70_000], val: vec![1.0, 2.0, 3.0] });
+        assert!(Payload::<f32>::decode(&b)
+            .unwrap_err()
+            .contains("MAX_WIRE_COORDS"));
+        // Every truncation of a valid encoding fails cleanly — both dtypes.
+        let full = enc(&Payload::Sparse {
+            idx: vec![2, 7, 70_000],
+            val: vec![1.0f32, 2.0, 3.0],
+        });
         for cut in 0..full.len() {
-            assert!(Payload::decode(&full[..cut]).is_err(), "cut at {cut} decoded");
+            assert!(Payload::<f32>::decode(&full[..cut]).is_err(), "cut at {cut} decoded");
+        }
+        let full = enc(&Payload::Sparse {
+            idx: vec![2, 7, 70_000],
+            val: vec![1.0f64, 2.0, 3.0],
+        });
+        for cut in 0..full.len() {
+            assert!(Payload::<f64>::decode(&full[..cut]).is_err(), "cut at {cut} decoded");
         }
     }
 
     #[test]
     fn decode_rejects_non_canonical_sparse() {
         // Unsorted and duplicate indices.
-        let mut b = vec![TAG_SPARSE16];
+        let mut b = vec![1u8]; // f32 sparse16 tag
         b.extend_from_slice(&2u32.to_le_bytes());
         b.extend_from_slice(&7u16.to_le_bytes());
         b.extend_from_slice(&3u16.to_le_bytes());
         b.extend_from_slice(&1.0f32.to_bits().to_le_bytes());
         b.extend_from_slice(&2.0f32.to_bits().to_le_bytes());
-        assert!(Payload::decode(&b).unwrap_err().contains("strictly increasing"));
+        assert!(Payload::<f32>::decode(&b)
+            .unwrap_err()
+            .contains("strictly increasing"));
         // Wide tag on indices that all fit u16 (billing inflation).
-        let mut b = vec![TAG_SPARSE32];
+        let mut b = vec![2u8]; // f32 sparse32 tag
         b.extend_from_slice(&1u32.to_le_bytes());
         b.extend_from_slice(&3u32.to_le_bytes());
         b.extend_from_slice(&1.0f32.to_bits().to_le_bytes());
-        assert!(Payload::decode(&b).unwrap_err().contains("non-canonical"));
+        assert!(Payload::<f32>::decode(&b)
+            .unwrap_err()
+            .contains("non-canonical"));
     }
 
     #[test]
     fn decode_rejects_bad_quantized_header() {
-        let good = Payload::Quantized { norm: 1.0, levels: 4, codes: vec![1, 2] };
+        let good = Payload::Quantized { norm: 1.0f32, levels: 4, codes: vec![1, 2] };
         let b = enc(&good);
         // levels = 0 and levels > i16 code range.
         let mut z = b.clone();
         z[9..13].copy_from_slice(&0u32.to_le_bytes());
-        assert!(Payload::decode(&z).is_err());
+        assert!(Payload::<f32>::decode(&z).is_err());
         let mut big = b.clone();
         big[9..13].copy_from_slice(&40_000u32.to_le_bytes());
-        assert!(Payload::decode(&big).is_err());
+        assert!(Payload::<f32>::decode(&big).is_err());
         // Non-finite norm (a NaN scale would poison every fold).
         let mut nan = b;
         nan[5..9].copy_from_slice(&f32::NAN.to_bits().to_le_bytes());
-        assert!(Payload::decode(&nan).unwrap_err().contains("finite"));
+        assert!(Payload::<f32>::decode(&nan).unwrap_err().contains("finite"));
     }
 
     #[test]
     fn decode_for_dim_enforces_fit() {
-        let d = enc(&Payload::Dense(vec![1.0, 2.0, 3.0]));
-        assert!(Payload::decode_for_dim(&d, 3).is_ok());
-        assert!(Payload::decode_for_dim(&d, 4).is_err());
-        let s = enc(&Payload::Sparse { idx: vec![0, 5], val: vec![1.0, 2.0] });
-        assert!(Payload::decode_for_dim(&s, 6).is_ok());
+        let d = enc(&Payload::Dense(vec![1.0f32, 2.0, 3.0]));
+        assert!(Payload::<f32>::decode_for_dim(&d, 3).is_ok());
+        assert!(Payload::<f32>::decode_for_dim(&d, 4).is_err());
+        let s = enc(&Payload::Sparse { idx: vec![0, 5], val: vec![1.0f32, 2.0] });
+        assert!(Payload::<f32>::decode_for_dim(&s, 6).is_ok());
         // Index 5 out of range for dim 5 — write_dense would have panicked.
-        assert!(Payload::decode_for_dim(&s, 5).is_err());
-        let q = enc(&Payload::Quantized { norm: 1.0, levels: 2, codes: vec![0, 1] });
-        assert!(Payload::decode_for_dim(&q, 2).is_ok());
-        assert!(Payload::decode_for_dim(&q, 3).is_err());
+        assert!(Payload::<f32>::decode_for_dim(&s, 5).is_err());
+        let q = enc(&Payload::Quantized { norm: 1.0f32, levels: 2, codes: vec![0, 1] });
+        assert!(Payload::<f32>::decode_for_dim(&q, 2).is_ok());
+        assert!(Payload::<f32>::decode_for_dim(&q, 3).is_err());
     }
 }

@@ -12,10 +12,15 @@
 //!   sign, transmitted as (norm, signs, level indices).
 //! * [`Identity`] — δ = 1 (no compression), the "dense" baseline.
 //!
-//! Wire size is modeled exactly from the encoding (indices u32, values
-//! f32, bit-packed levels for QSGD) — this is what the paper's
-//! communication-volume plots integrate.
+//! Wire size is modeled exactly from the encoding (indices u32, values at
+//! the run's [`Scalar`] width, bit-packed levels for QSGD) — this is what
+//! the paper's communication-volume plots integrate.  Everything is
+//! generic over the payload scalar `S` (default `f32`, the historical
+//! wire type; `f64` doubles per-coordinate value bytes); the dense
+//! selection/quantization passes live in [`crate::linalg::kernels`].
 
+use crate::linalg::kernels;
+use crate::linalg::scalar::Scalar;
 use crate::util::rng::Rng;
 
 mod message;
@@ -29,26 +34,26 @@ pub use message::{Payload, PayloadKind, MAX_WIRE_COORDS};
 /// message is allocation-free in steady state.  The scratch never reaches
 /// the wire and is excluded from equality.
 #[derive(Clone, Debug)]
-pub struct Compressed {
+pub struct Compressed<S: Scalar = f32> {
     pub dim: usize,
-    pub payload: Payload,
-    scratch: Vec<f32>,
+    pub payload: Payload<S>,
+    scratch: Vec<S>,
     scratch_idx: Vec<usize>,
 }
 
-impl PartialEq for Compressed {
+impl<S: Scalar> PartialEq for Compressed<S> {
     fn eq(&self, other: &Self) -> bool {
         self.dim == other.dim && self.payload == other.payload
     }
 }
 
-impl Compressed {
-    pub fn new(dim: usize, payload: Payload) -> Compressed {
+impl<S: Scalar> Compressed<S> {
+    pub fn new(dim: usize, payload: Payload<S>) -> Compressed<S> {
         Compressed { dim, payload, scratch: Vec::new(), scratch_idx: Vec::new() }
     }
 
     /// An empty slot for [`Compressor::compress_into`] to fill.
-    pub fn empty() -> Compressed {
+    pub fn empty() -> Compressed<S> {
         Compressed::new(0, Payload::Dense(Vec::new()))
     }
 
@@ -58,25 +63,25 @@ impl Compressed {
     }
 
     /// Densify into `out` (must be zeroed or will be overwritten).
-    pub fn decompress_into(&self, out: &mut [f32]) {
+    pub fn decompress_into(&self, out: &mut [S]) {
         assert_eq!(out.len(), self.dim);
         self.payload.write_dense(out);
     }
 
-    pub fn to_dense(&self) -> Vec<f32> {
-        let mut out = vec![0.0; self.dim];
+    pub fn to_dense(&self) -> Vec<S> {
+        let mut out = vec![S::ZERO; self.dim];
         self.decompress_into(&mut out);
         out
     }
 
     /// `target += decompress(self)` without materializing.
-    pub fn add_into(&self, target: &mut [f32]) {
+    pub fn add_into(&self, target: &mut [S]) {
         assert_eq!(target.len(), self.dim);
         self.payload.add_dense(target);
     }
 
     /// `target += weight * decompress(self)`.
-    pub fn add_scaled_into(&self, weight: f32, target: &mut [f32]) {
+    pub fn add_scaled_into(&self, weight: S, target: &mut [S]) {
         assert_eq!(target.len(), self.dim);
         self.payload.add_scaled_dense(weight, target);
     }
@@ -87,8 +92,9 @@ impl Compressed {
     }
 }
 
-/// A contractive compression operator Q (Definition 2).
-pub trait Compressor: Send + Sync {
+/// A contractive compression operator Q (Definition 2), generic over the
+/// payload scalar.
+pub trait Compressor<S: Scalar = f32>: Send + Sync {
     fn name(&self) -> String;
     /// The contraction constant δ ∈ (0, 1].
     fn delta(&self) -> f64;
@@ -98,11 +104,11 @@ pub trait Compressor: Send + Sync {
     /// `out` is fully overwritten — its previous contents, variant and dim
     /// are irrelevant.  Equal RNG state ⇒ output identical to
     /// [`Compressor::compress`], which is defined in terms of this method.
-    fn compress_into(&self, v: &[f32], out: &mut Compressed, rng: &mut Rng);
+    fn compress_into(&self, v: &[S], out: &mut Compressed<S>, rng: &mut Rng);
 
     /// Allocating convenience wrapper around
     /// [`Compressor::compress_into`].
-    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress(&self, v: &[S], rng: &mut Rng) -> Compressed<S> {
         let mut out = Compressed::empty();
         self.compress_into(v, &mut out, rng);
         out
@@ -110,7 +116,7 @@ pub trait Compressor: Send + Sync {
 }
 
 /// Parse "topk:0.2" | "randk:0.3" | "qsgd:16" | "none".
-pub fn parse(spec: &str) -> Result<Box<dyn Compressor>, String> {
+pub fn parse<S: Scalar>(spec: &str) -> Result<Box<dyn Compressor<S>>, String> {
     let (kind, arg) = match spec.split_once(':') {
         Some((k, a)) => (k, Some(a)),
         None => (spec, None),
@@ -145,7 +151,7 @@ pub fn parse(spec: &str) -> Result<Box<dyn Compressor>, String> {
 #[derive(Clone, Copy, Debug)]
 pub struct Identity;
 
-impl Compressor for Identity {
+impl<S: Scalar> Compressor<S> for Identity {
     fn name(&self) -> String {
         "none".into()
     }
@@ -154,7 +160,7 @@ impl Compressor for Identity {
         1.0
     }
 
-    fn compress_into(&self, v: &[f32], out: &mut Compressed, _rng: &mut Rng) {
+    fn compress_into(&self, v: &[S], out: &mut Compressed<S>, _rng: &mut Rng) {
         out.dim = v.len();
         out.payload.reuse_dense().extend_from_slice(v);
     }
@@ -177,7 +183,7 @@ impl TopK {
     }
 }
 
-impl Compressor for TopK {
+impl<S: Scalar> Compressor<S> for TopK {
     fn name(&self) -> String {
         format!("topk:{}", self.ratio)
     }
@@ -186,7 +192,7 @@ impl Compressor for TopK {
         self.ratio
     }
 
-    fn compress_into(&self, v: &[f32], out: &mut Compressed, _rng: &mut Rng) {
+    fn compress_into(&self, v: &[S], out: &mut Compressed<S>, _rng: &mut Rng) {
         let d = v.len();
         let k = self.k(d);
         out.dim = d;
@@ -199,67 +205,9 @@ impl Compressor for TopK {
             out.payload.reuse_dense().extend_from_slice(v);
             return;
         }
-        // Quickselect on |v| (in the reusable scratch) for the threshold.
-        out.scratch.clear();
-        out.scratch.extend(v.iter().map(|x| x.abs()));
-        let thresh = quickselect_desc(&mut out.scratch, k - 1);
-        // Count strictly-above entries, then gather in one ascending pass:
-        // everything above the threshold plus the first (k − count) ties in
-        // index order — canonical ascending indices by construction.
-        let n_gt = v.iter().filter(|x| x.abs() > thresh).count();
-        let mut ties_left = k - n_gt;
+        let scratch = &mut out.scratch;
         let (idx, val) = out.payload.reuse_sparse();
-        for (i, &x) in v.iter().enumerate() {
-            let a = x.abs();
-            if a > thresh {
-                idx.push(i as u32);
-                val.push(x);
-            } else if a == thresh && ties_left > 0 {
-                ties_left -= 1;
-                idx.push(i as u32);
-                val.push(x);
-            }
-        }
-    }
-}
-
-/// k-th largest value (0-based) of `xs` by magnitude-descending order.
-fn quickselect_desc(xs: &mut [f32], k: usize) -> f32 {
-    let n = xs.len();
-    assert!(k < n);
-    let (mut lo, mut hi) = (0usize, n - 1);
-    loop {
-        if lo == hi {
-            return xs[lo];
-        }
-        // Median-of-three pivot for adversarial orderings.
-        let mid = lo + (hi - lo) / 2;
-        let (a, b, c) = (xs[lo], xs[mid], xs[hi]);
-        let pivot = if (a >= b) == (b >= c) { b } else if (b >= a) == (a >= c) { a } else { c };
-        let (mut i, mut j) = (lo, hi);
-        while i <= j {
-            while xs[i] > pivot {
-                i += 1;
-            }
-            while xs[j] < pivot {
-                j -= 1;
-            }
-            if i <= j {
-                xs.swap(i, j);
-                i += 1;
-                if j == 0 {
-                    break;
-                }
-                j -= 1;
-            }
-        }
-        if k <= j {
-            hi = j;
-        } else if k >= i {
-            lo = i;
-        } else {
-            return xs[k];
-        }
+        kernels::topk_select(v, k, scratch, idx, val);
     }
 }
 
@@ -276,7 +224,7 @@ impl RandK {
     }
 }
 
-impl Compressor for RandK {
+impl<S: Scalar> Compressor<S> for RandK {
     fn name(&self) -> String {
         format!("randk:{}", self.ratio)
     }
@@ -285,7 +233,7 @@ impl Compressor for RandK {
         self.ratio
     }
 
-    fn compress_into(&self, v: &[f32], out: &mut Compressed, rng: &mut Rng) {
+    fn compress_into(&self, v: &[S], out: &mut Compressed<S>, rng: &mut Rng) {
         let d = v.len();
         let k = ((self.ratio * d as f64).ceil() as usize).clamp(1, d);
         out.dim = d;
@@ -333,7 +281,7 @@ impl Qsgd {
     }
 }
 
-impl Compressor for Qsgd {
+impl<S: Scalar> Compressor<S> for Qsgd {
     fn name(&self) -> String {
         format!("qsgd:{}", self.levels)
     }
@@ -345,25 +293,17 @@ impl Compressor for Qsgd {
         1.0 / (1.0 + self.omega(10_000))
     }
 
-    fn compress_into(&self, v: &[f32], out: &mut Compressed, rng: &mut Rng) {
+    fn compress_into(&self, v: &[S], out: &mut Compressed<S>, rng: &mut Rng) {
         let d = v.len();
-        let norm = crate::linalg::norm2(v) as f32;
+        let norm = S::from_f64(kernels::norm2(v));
         out.dim = d;
-        if norm == 0.0 {
-            let codes = out.payload.reuse_quantized(0.0, self.levels);
+        if norm == S::ZERO {
+            let codes = out.payload.reuse_quantized(S::ZERO, self.levels);
             codes.resize(d, 0);
             return;
         }
-        let s = self.levels as f32;
         let codes = out.payload.reuse_quantized(norm, self.levels);
-        for &x in v {
-            let u = x.abs() / norm * s; // in [0, s]
-            let lo = u.floor();
-            let level = lo + if rng.bernoulli((u - lo) as f64) { 1.0 } else { 0.0 };
-            // Signed code in [−s, s]; Qsgd::new bounds s to the i16 range.
-            let code = (level * x.signum()) as i16;
-            codes.push(code);
-        }
+        kernels::qsgd_quantize(v, norm, self.levels, codes, rng);
     }
 }
 
@@ -382,15 +322,24 @@ mod tests {
     #[test]
     fn identity_roundtrip() {
         let (mut rng, v) = rngv(1, 100);
-        let c = Identity.compress(&v, &mut rng);
+        let c = Compressor::<f32>::compress(&Identity, &v, &mut rng);
         assert_eq!(c.to_dense(), v);
         assert_eq!(c.wire_bytes(), 8 + 400);
     }
 
     #[test]
+    fn identity_f64_doubles_value_bytes() {
+        let mut rng = Rng::new(1);
+        let v: Vec<f64> = (0..100).map(|i| i as f64 * 0.25 - 10.0).collect();
+        let c = Compressor::<f64>::compress(&Identity, &v, &mut rng);
+        assert_eq!(c.to_dense(), v);
+        assert_eq!(c.wire_bytes(), 8 + 800);
+    }
+
+    #[test]
     fn topk_keeps_largest() {
         let mut rng = Rng::new(2);
-        let v = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let v = vec![0.1f32, -5.0, 0.2, 3.0, -0.05];
         let c = TopK::new(0.4).compress(&v, &mut rng); // k = 2
         let dense = c.to_dense();
         assert_eq!(dense[1], -5.0);
@@ -411,14 +360,14 @@ mod tests {
             .zip(&v)
             .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
             .sum();
-        let bound = (1.0 - q.delta()) * linalg::norm2_sq(&v);
+        let bound = (1.0 - Compressor::<f32>::delta(&q)) * linalg::norm2_sq(&v);
         assert!(err <= bound + 1e-6, "{err} > {bound}");
     }
 
     #[test]
     fn topk_wire_smaller_than_dense() {
         let (mut rng, v) = rngv(4, 1000);
-        let dense = Identity.compress(&v, &mut rng).wire_bytes();
+        let dense = Compressor::<f32>::compress(&Identity, &v, &mut rng).wire_bytes();
         let sparse = TopK::new(0.1).compress(&v, &mut rng).wire_bytes();
         assert!(sparse < dense / 4, "{sparse} vs {dense}");
     }
@@ -453,7 +402,7 @@ mod tests {
                 .sum::<f64>();
         }
         let avg = err_sum / trials as f64;
-        let bound = (1.0 - q.delta()) * linalg::norm2_sq(&v);
+        let bound = (1.0 - Compressor::<f32>::delta(&q)) * linalg::norm2_sq(&v);
         assert!(avg <= bound * 1.05, "{avg} > {bound}");
     }
 
@@ -496,6 +445,19 @@ mod tests {
     }
 
     #[test]
+    fn qsgd_f64_same_draw_sequence_as_f32() {
+        // The quantize pass draws one Bernoulli per coordinate in index
+        // order for both dtypes — the RNG advance must not depend on S.
+        let (_, v) = rngv(12, 128);
+        let v64: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        let _ = Compressor::<f32>::compress(&Qsgd::new(8), &v, &mut rng_a);
+        let _ = Compressor::<f64>::compress(&Qsgd::new(8), &v64, &mut rng_b);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "rng divergence across dtypes");
+    }
+
+    #[test]
     fn add_scaled_into_matches_dense_math() {
         let (mut rng, v) = rngv(10, 64);
         let c = TopK::new(0.5).compress(&v, &mut rng);
@@ -509,23 +471,25 @@ mod tests {
 
     #[test]
     fn parse_specs() {
-        assert_eq!(parse("topk:0.2").unwrap().name(), "topk:0.2");
-        assert_eq!(parse("randk:0.5").unwrap().name(), "randk:0.5");
-        assert_eq!(parse("qsgd:16").unwrap().name(), "qsgd:16");
-        assert_eq!(parse("none").unwrap().name(), "none");
-        assert!(parse("bogus").is_err());
-        assert!(parse("topk").is_err());
+        assert_eq!(parse::<f32>("topk:0.2").unwrap().name(), "topk:0.2");
+        assert_eq!(parse::<f32>("randk:0.5").unwrap().name(), "randk:0.5");
+        assert_eq!(parse::<f32>("qsgd:16").unwrap().name(), "qsgd:16");
+        assert_eq!(parse::<f32>("none").unwrap().name(), "none");
+        assert!(parse::<f32>("bogus").is_err());
+        assert!(parse::<f32>("topk").is_err());
+        // The same spec grammar parses at f64.
+        assert_eq!(parse::<f64>("topk:0.2").unwrap().name(), "topk:0.2");
     }
 
     #[test]
     fn parse_rejects_qsgd_level_overflow() {
         // (level · sign) is stored as i16: levels beyond 32767 would
         // silently saturate, so the spec is rejected with a clear error.
-        assert_eq!(parse("qsgd:32767").unwrap().name(), "qsgd:32767");
-        let err = parse("qsgd:32768").unwrap_err();
+        assert_eq!(parse::<f32>("qsgd:32767").unwrap().name(), "qsgd:32767");
+        let err = parse::<f32>("qsgd:32768").unwrap_err();
         assert!(err.contains("i16"), "unhelpful error: {err}");
-        assert!(parse("qsgd:40000").is_err());
-        assert!(parse("qsgd:0").is_err());
+        assert!(parse::<f32>("qsgd:40000").is_err());
+        assert!(parse::<f32>("qsgd:0").is_err());
     }
 
     #[test]
@@ -586,14 +550,16 @@ mod tests {
         let (_, v) = rngv(40, 257);
         let (_, w) = rngv(41, 64);
         for spec in ["none", "topk:0.1", "randk:0.25", "qsgd:8"] {
-            let q = parse(spec).unwrap();
+            let q = parse::<f32>(spec).unwrap();
             let mut rng_a = Rng::new(99);
             let mut rng_b = rng_a.clone();
             let fresh = q.compress(&v, &mut rng_a);
             // Dirty the slot with a different vector and different
             // compressors first, then re-encode v into it.
-            let mut slot = parse("qsgd:4").unwrap().compress(&w, &mut Rng::new(1));
-            parse("topk:0.5").unwrap().compress_into(&w, &mut slot, &mut Rng::new(2));
+            let mut slot = parse::<f32>("qsgd:4").unwrap().compress(&w, &mut Rng::new(1));
+            parse::<f32>("topk:0.5")
+                .unwrap()
+                .compress_into(&w, &mut slot, &mut Rng::new(2));
             q.compress_into(&v, &mut slot, &mut rng_b);
             assert_eq!(slot, fresh, "{spec}: dirty-buffer reuse changed the message");
             assert_eq!(slot.wire_bytes(), fresh.wire_bytes());
@@ -609,7 +575,7 @@ mod tests {
             let n = 1 + rng.below(200);
             let mut v: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
             let k = rng.below(n);
-            let got = quickselect_desc(&mut v.clone(), k);
+            let got = kernels::quickselect_desc(&mut v.clone(), k);
             v.sort_by(|a, b| b.partial_cmp(a).unwrap());
             assert_eq!(got, v[k]);
         }

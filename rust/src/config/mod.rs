@@ -4,6 +4,7 @@
 pub mod toml;
 
 use crate::data::partition::Partition;
+use crate::linalg::Dtype;
 use crate::metrics::StopCondition;
 use crate::sim::{NetConfig, NetMode};
 use crate::topology::Topology;
@@ -128,6 +129,10 @@ pub struct ExperimentConfig {
     pub partition: Partition,
     /// Compressor spec for the inner loop, e.g. "topk:0.2".
     pub compressor: String,
+    /// Payload scalar for iterates, oracles, and wire payloads: "f32"
+    /// (the default, byte-identical to the historical path) or "f64"
+    /// (native tasks only; see docs/DTYPE.md).
+    pub dtype: Dtype,
 
     pub rounds: usize,
     pub inner_steps: usize, // K
@@ -169,6 +174,7 @@ impl Default for ExperimentConfig {
             topology: Topology::Ring,
             partition: Partition::Iid,
             compressor: "topk:0.2".into(),
+            dtype: Dtype::F32,
             rounds: 200,
             inner_steps: 15,
             eta_out: 1.0,
@@ -210,12 +216,19 @@ impl ExperimentConfig {
     }
 
     pub fn label(&self) -> String {
+        // The default dtype stays out of the label so every pre-dtype run
+        // name (goldens, sweep caches) is unchanged.
+        let dtype = match self.dtype {
+            Dtype::F32 => "",
+            Dtype::F64 => "_f64",
+        };
         format!(
-            "{}_{}_{}_m{}",
+            "{}_{}_{}_m{}{}",
             self.preset,
             self.topology.name(),
             self.partition.name().replace(':', ""),
-            self.nodes
+            self.nodes,
+            dtype
         )
     }
 
@@ -262,6 +275,7 @@ impl ExperimentConfig {
             "topology" => self.topology = Topology::parse(&want_str()?, self.seed)?,
             "partition" => self.partition = Partition::parse(&want_str()?)?,
             "compressor" => self.compressor = want_str()?,
+            "dtype" => self.dtype = Dtype::parse(&want_str()?)?,
             "rounds" => self.rounds = want_usize()?,
             "inner_steps" | "K" | "k" => self.inner_steps = want_usize()?,
             "eta_out" => self.eta_out = want_f64()?,
@@ -367,7 +381,9 @@ impl ExperimentConfig {
         if self.inner_steps == 0 {
             anyhow::bail!("inner_steps must be >= 1");
         }
-        crate::compress::parse(&self.compressor).map_err(anyhow::Error::msg)?;
+        // Compressor specs are dtype-independent; validating at f32 covers
+        // both payload widths.
+        crate::compress::parse::<f32>(&self.compressor).map_err(anyhow::Error::msg)?;
         self.network.validate().map_err(anyhow::Error::msg)?;
         for (key, val) in [
             ("stop.comm_mb", self.stop.comm_mb),
@@ -696,6 +712,20 @@ target_accuracy = 0.7
         assert!(c.validate().is_ok());
         c.scale.consensus = "bogus".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dtype_key_parses_and_labels() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.dtype, Dtype::F32);
+        assert!(!c.label().contains("f64"), "default labels must not change");
+        c.apply_one("dtype", &TomlValue::Str("f64".into())).unwrap();
+        assert_eq!(c.dtype, Dtype::F64);
+        assert!(c.label().ends_with("_f64"));
+        c.apply_one("dtype", &TomlValue::Str("single".into())).unwrap();
+        assert_eq!(c.dtype, Dtype::F32);
+        assert!(c.apply_one("dtype", &TomlValue::Str("f16".into())).is_err());
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -17,6 +17,7 @@ use super::sweep::{self, Cell, CellOutcome, TaskRef};
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::coordinator::{summarize, write_runs};
 use crate::data::partition::Partition;
+use crate::linalg::{Dtype, Scalar};
 use crate::metrics::RunMetrics;
 use crate::obs::Console;
 use crate::runtime::ArtifactRegistry;
@@ -55,6 +56,10 @@ pub struct HarnessOpts {
     /// Print each cell's wall-clock phase profile after the grid runs
     /// (CLI: --profile; explicitly nondeterministic, never in the trace).
     pub profile: bool,
+    /// Payload precision for the native (artifact-free) harnesses —
+    /// netsweep and budget (CLI: --dtype).  The registry-backed harnesses
+    /// stay f32: PJRT artifacts are f32-only (docs/DTYPE.md).
+    pub dtype: Dtype,
 }
 
 impl Default for HarnessOpts {
@@ -70,6 +75,7 @@ impl Default for HarnessOpts {
             quiet: false,
             trace: None,
             profile: false,
+            dtype: Dtype::F32,
         }
     }
 }
@@ -89,7 +95,7 @@ impl HarnessOpts {
 fn run_grid(
     id: &str,
     cells: Vec<Cell>,
-    tasks: &[&(dyn BilevelTask + Sync)],
+    tasks: &[sweep::TaskSlot],
     reg: Option<&ArtifactRegistry>,
     o: &HarnessOpts,
 ) -> Result<Vec<RunMetrics>> {
@@ -99,7 +105,7 @@ fn run_grid(
         trace: o.trace.is_some(),
         profile: o.profile,
     };
-    let outcomes = sweep::run_cells_with(&cells, tasks, reg, &opts);
+    let outcomes = sweep::run_cells_slots(&cells, tasks, reg, &opts);
     if let Some(path) = &o.trace {
         std::fs::write(path, sweep::concat_traces(&outcomes))
             .map_err(|e| anyhow::anyhow!("writing trace {path}: {e}"))?;
@@ -365,9 +371,19 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
     let rounds = o.rounds;
     let con = o.console();
     con.info(format_args!(
-        "== netsweep: network regimes on the quadratic task (m={nodes}, d={dim}, {rounds} rounds) =="
+        "== netsweep: network regimes on the quadratic task (m={nodes}, d={dim}, {rounds} rounds, dtype={}) ==",
+        o.dtype
     ));
-    let task = QuadraticTask::generate(nodes, dim, 0.8, o.seed);
+    // Same seed → identical f32 generation streams at either width; the
+    // f64 instance is the exact widening of the f32 one (docs/DTYPE.md).
+    let task = match o.dtype {
+        Dtype::F32 => sweep::NativeTask::F32(Box::new(QuadraticTask::<f32>::generate(
+            nodes, dim, 0.8, o.seed,
+        ))),
+        Dtype::F64 => sweep::NativeTask::F64(Box::new(QuadraticTask::<f64>::generate(
+            nodes, dim, 0.8, o.seed,
+        ))),
+    };
 
     let event = NetConfig { mode: NetMode::Event, ..NetConfig::default() };
     let dynamic = {
@@ -408,6 +424,7 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
             let mut cfg = quad_cfg_for(algo, rounds, nodes, o);
             cfg.name = format!("netsweep_{regime}");
             cfg.network = netcfg.clone();
+            cfg.dtype = o.dtype;
             regime_of.push(*regime);
             cells.push(Cell {
                 id: format!("netsweep+{regime}+{}", algo.name()),
@@ -416,7 +433,7 @@ pub fn netsweep(o: &HarnessOpts, tiny: bool) -> Result<Vec<RunMetrics>> {
             });
         }
     }
-    let runs = run_grid("netsweep", cells, &[&task], None, o)?;
+    let runs = run_grid("netsweep", cells, &[task.slot()], None, o)?;
 
     con.info(format_args!(
         "\n| regime    | algo   | comm (MB) | gossip rounds | virtual time (s) | dropped | final loss |"
@@ -485,6 +502,30 @@ pub fn native_task_with(
     seed: u64,
     part: Partition,
 ) -> Result<Box<dyn BilevelTask + Sync>> {
+    native_task_generic::<f32>(spec, nodes, tiny, seed, part)
+}
+
+/// [`native_task_with`] at f64 — what the sweep's `dtype` axis builds its
+/// high-precision table entries from.  Data generation draws the identical
+/// f32 streams and widens exactly, so this is the *same* problem instance
+/// at higher arithmetic precision (docs/DTYPE.md).
+pub fn native_task_f64(
+    spec: &str,
+    nodes: usize,
+    tiny: bool,
+    seed: u64,
+    part: Partition,
+) -> Result<Box<dyn BilevelTask<f64> + Sync>> {
+    native_task_generic::<f64>(spec, nodes, tiny, seed, part)
+}
+
+fn native_task_generic<S: Scalar>(
+    spec: &str,
+    nodes: usize,
+    tiny: bool,
+    seed: u64,
+    part: Partition,
+) -> Result<Box<dyn BilevelTask<S> + Sync>> {
     Ok(match spec {
         "quadratic" | "quad" => {
             let dim = if tiny { 8 } else { 32 };
@@ -493,15 +534,15 @@ pub fn native_task_with(
                 Partition::Heterogeneous { h } => h,
                 Partition::Dirichlet { .. } => 0.8,
             };
-            Box::new(QuadraticTask::generate(nodes, dim, h, seed))
+            Box::new(QuadraticTask::<S>::generate(nodes, dim, h, seed))
         }
         "logreg" => {
             let (d, n_tr, n_val) = if tiny { (12, 24, 12) } else { (48, 80, 40) };
-            Box::new(LogRegTask::generate(nodes, d, 4, n_tr, n_val, part, 0.4, seed))
+            Box::new(LogRegTask::<S>::generate(nodes, d, 4, n_tr, n_val, part, 0.4, seed))
         }
         "hyperrep" => {
             let (p, k, n_tr, n_val) = if tiny { (12, 4, 20, 10) } else { (36, 8, 64, 32) };
-            Box::new(HyperRepTask::generate(
+            Box::new(HyperRepTask::<S>::generate(
                 nodes, p, k, 4, n_tr, n_val, part, 0.3, seed,
             ))
         }
@@ -611,12 +652,21 @@ pub fn budget_on(
     task_spec: &str,
 ) -> Result<Vec<RunMetrics>> {
     let nodes = if tiny { 6 } else { 8 };
-    let task = native_task(task_spec, nodes, tiny, o.seed)?;
+    let part = Partition::Dirichlet { alpha: 0.5 };
+    let task = match o.dtype {
+        Dtype::F32 => {
+            sweep::NativeTask::F32(native_task_with(task_spec, nodes, tiny, o.seed, part)?)
+        }
+        Dtype::F64 => {
+            sweep::NativeTask::F64(native_task_f64(task_spec, nodes, tiny, o.seed, part)?)
+        }
+    };
     let con = o.console();
     con.info(format_args!(
         "== budget: all algorithms to {budget_mb} MB of communication \
-         ({}, m={nodes}, round cap {}) ==",
+         ({}, m={nodes}, dtype={}, round cap {}) ==",
         task.name(),
+        o.dtype,
         o.rounds
     ));
     let algos = [
@@ -631,6 +681,7 @@ pub fn budget_on(
         let mut cfg = native_cfg_for(algo, task_spec, o.rounds, nodes, o);
         cfg.name = format!("budget_{task_spec}");
         cfg.stop.comm_mb = Some(budget_mb);
+        cfg.dtype = o.dtype;
         // Check the budget every round so each run lands within one outer
         // round of the budget (the stop contract is one eval interval).
         cfg.eval_every = 1;
@@ -640,7 +691,7 @@ pub fn budget_on(
             task: TaskRef::Shared(0),
         });
     }
-    let runs = run_grid("budget", cells, &[task.as_ref()], None, o)?;
+    let runs = run_grid("budget", cells, &[task.slot()], None, o)?;
     for m in &runs {
         con.info(format_args!("  {}", summarize(m)));
     }

@@ -9,7 +9,7 @@
 //! # use c2dfb::tasks::QuadraticTask;
 //! # fn main() -> anyhow::Result<()> {
 //! let cfg = ExperimentConfig::default();
-//! let task = QuadraticTask::generate(10, 16, 0.8, 42);
+//! let task: QuadraticTask = QuadraticTask::generate(10, 16, 0.8, 42);
 //! let metrics = Runner::new(&cfg).shared_task(&task).run()?;
 //! println!("stopped: {:?}", metrics.stop_reason);
 //! # Ok(())
@@ -28,6 +28,7 @@ pub mod sweep;
 use crate::algorithms::{self, NoObserver, RunObserver};
 use crate::collective::{GenNetwork, Network, Transport};
 use crate::config::ExperimentConfig;
+use crate::linalg::{Dtype, Scalar};
 use crate::metrics::RunMetrics;
 use crate::obs::Recorder;
 use crate::runtime::ArtifactRegistry;
@@ -94,11 +95,29 @@ pub struct Runner<'a> {
     recorder: Recorder,
 }
 
+/// The task source, with the payload dtype erased here and nowhere else:
+/// `run()` matches the source width against `cfg.dtype` and dispatches
+/// into the monomorphic [`launch`]`::<S>` — everything downstream
+/// (transports, sim engine, daemon, obs) only ever sees one `S`.
 enum Source<'a> {
     Unset,
     Task(&'a dyn BilevelTask),
     Shared(&'a (dyn BilevelTask + Sync)),
+    TaskF64(&'a dyn BilevelTask<f64>),
+    SharedF64(&'a (dyn BilevelTask<f64> + Sync)),
     Registry(&'a ArtifactRegistry),
+}
+
+impl Source<'_> {
+    /// The payload width this source can run at (None = follows config;
+    /// only `Unset` has no inherent width).
+    fn dtype(&self) -> Option<Dtype> {
+        match self {
+            Source::Unset => None,
+            Source::Task(_) | Source::Shared(_) | Source::Registry(_) => Some(Dtype::F32),
+            Source::TaskF64(_) | Source::SharedF64(_) => Some(Dtype::F64),
+        }
+    }
 }
 
 impl<'a> Runner<'a> {
@@ -122,6 +141,18 @@ impl<'a> Runner<'a> {
     /// [`crate::sim::NodePool`] (bit-identical to serial).
     pub fn shared_task(mut self, task: &'a (dyn BilevelTask + Sync)) -> Self {
         self.source = Source::Shared(task);
+        self
+    }
+
+    /// Run against an f64 task (`dtype = "f64"`; native tasks only).
+    pub fn task_f64(mut self, task: &'a dyn BilevelTask<f64>) -> Self {
+        self.source = Source::TaskF64(task);
+        self
+    }
+
+    /// Like [`Runner::task_f64`] for thread-shareable tasks.
+    pub fn shared_task_f64(mut self, task: &'a (dyn BilevelTask<f64> + Sync)) -> Self {
+        self.source = Source::SharedF64(task);
         self
     }
 
@@ -152,6 +183,17 @@ impl<'a> Runner<'a> {
     pub fn run(self) -> Result<RunMetrics> {
         self.cfg.validate()?;
         let Runner { cfg, source, observer, recorder } = self;
+        if let Some(width) = source.dtype() {
+            if width != cfg.dtype {
+                anyhow::bail!(
+                    "dtype mismatch: config says {} but the task source is {} \
+                     (artifact tasks and .task()/.shared_task() run at f32; \
+                     use .task_f64()/.shared_task_f64() with dtype = \"f64\")",
+                    cfg.dtype.name(),
+                    width.name()
+                );
+            }
+        }
         let mut fallback = NoObserver;
         let obs: &mut dyn RunObserver = match observer {
             Some(o) => o,
@@ -163,6 +205,8 @@ impl<'a> Runner<'a> {
             ),
             Source::Task(task) => launch(task, None, cfg, obs, recorder),
             Source::Shared(task) => launch(task, Some(task), cfg, obs, recorder),
+            Source::TaskF64(task) => launch(task, None, cfg, obs, recorder),
+            Source::SharedF64(task) => launch(task, Some(task), cfg, obs, recorder),
             Source::Registry(reg) => {
                 let task = build_task(reg, cfg)?;
                 launch(&task, None, cfg, obs, recorder)
@@ -173,9 +217,9 @@ impl<'a> Runner<'a> {
 
 /// Transport selection: one place decides sync vs event for every entry
 /// path (previously duplicated across the four `run_*` functions).
-fn launch(
-    task: &dyn BilevelTask,
-    shared: Option<&(dyn BilevelTask + Sync)>,
+fn launch<S: Scalar>(
+    task: &dyn BilevelTask<S>,
+    shared: Option<&(dyn BilevelTask<S> + Sync)>,
     cfg: &ExperimentConfig,
     obs: &mut dyn RunObserver,
     rec: Recorder,
@@ -189,9 +233,9 @@ fn launch(
     }
 }
 
-fn drive_on<T: Transport>(
-    task: &dyn BilevelTask,
-    shared: Option<&(dyn BilevelTask + Sync)>,
+fn drive_on<T: Transport, S: Scalar>(
+    task: &dyn BilevelTask<S>,
+    shared: Option<&(dyn BilevelTask<S> + Sync)>,
     net: T,
     cfg: &ExperimentConfig,
     obs: &mut dyn RunObserver,
@@ -243,7 +287,7 @@ mod tests {
 
     #[test]
     fn runner_all_algorithms() {
-        let task = QuadraticTask::generate(4, 6, 0.5, 77);
+        let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 77);
         for algo in [
             Algorithm::C2dfb,
             Algorithm::C2dfbNc,
@@ -270,7 +314,7 @@ mod tests {
     #[test]
     fn runner_event_engine_all_algorithms() {
         use crate::sim::NetMode;
-        let task = QuadraticTask::generate(4, 6, 0.5, 79);
+        let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 79);
         for algo in [
             Algorithm::C2dfb,
             Algorithm::C2dfbNc,
@@ -297,7 +341,7 @@ mod tests {
 
     #[test]
     fn shared_runner_matches_serial_runner() {
-        let task = QuadraticTask::generate(4, 6, 0.5, 80);
+        let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 80);
         let mut cfg = ExperimentConfig {
             nodes: 4,
             rounds: 4,
@@ -326,7 +370,7 @@ mod tests {
         cfg.network.drop_rate = 1.5;
         let err = build_sim_network(&cfg).unwrap_err();
         assert!(err.to_string().contains("drop_rate"), "{err}");
-        let task = QuadraticTask::generate(4, 6, 0.5, 81);
+        let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 81);
         let err = Runner::new(&cfg).task(&task).run().unwrap_err();
         assert!(err.to_string().contains("drop_rate"), "{err}");
         // A sync-mode config handed to the event constructor: Err too.
@@ -338,7 +382,7 @@ mod tests {
     #[test]
     fn generator_transport_matches_materialized_run_bitwise() {
         use crate::topology::Topology;
-        let task = QuadraticTask::generate(8, 6, 0.5, 83);
+        let task: QuadraticTask = QuadraticTask::generate(8, 6, 0.5, 83);
         for topology in [
             Topology::Ring,
             Topology::Exponential,
@@ -376,9 +420,50 @@ mod tests {
         assert!(err.to_string().contains("no task source"), "{err}");
     }
 
+    /// The f64 path: `dtype = "f64"` + `.task_f64()` runs end to end, and
+    /// the dtype/source width must agree — mismatches are clean errors at
+    /// the erasure boundary, not type confusion downstream.
+    #[test]
+    fn runner_dtype_dispatch_and_mismatch() {
+        use crate::linalg::Dtype;
+        let t32: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 88);
+        let t64: QuadraticTask<f64> = QuadraticTask::generate(4, 6, 0.5, 88);
+        let mut cfg = ExperimentConfig {
+            nodes: 4,
+            rounds: 4,
+            inner_steps: 4,
+            eta_out: 0.1,
+            eta_in: 0.2,
+            eval_every: 2,
+            ..ExperimentConfig::default()
+        };
+
+        cfg.dtype = Dtype::F64;
+        let m64 = Runner::new(&cfg).task_f64(&t64).run().unwrap();
+        assert!(!m64.trace.is_empty());
+        assert!(m64.label.ends_with("_f64"));
+        let err = Runner::new(&cfg).task(&t32).run().unwrap_err();
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
+
+        cfg.dtype = Dtype::F32;
+        let m32 = Runner::new(&cfg).task(&t32).run().unwrap();
+        let err = Runner::new(&cfg).task_f64(&t64).run().unwrap_err();
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
+
+        // Same instance, same schedule: the f64 run moves about twice the
+        // bytes of the f32 run and lands on a nearby trajectory.
+        let ratio = m64.ledger.total_bytes as f64 / m32.ledger.total_bytes as f64;
+        assert!(ratio > 1.6 && ratio <= 2.0, "byte ratio {ratio}");
+        let (a, b) = (
+            m32.trace.last().unwrap().loss,
+            m64.trace.last().unwrap().loss,
+        );
+        assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+
     #[test]
     fn write_runs_creates_files() {
-        let task = QuadraticTask::generate(4, 6, 0.5, 78);
+        let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 78);
         let cfg = ExperimentConfig {
             nodes: 4,
             rounds: 3,

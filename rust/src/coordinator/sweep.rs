@@ -33,6 +33,7 @@ use crate::config::toml::{self, TomlValue};
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::coordinator::{experiments, Runner};
 use crate::data::partition::Partition;
+use crate::linalg::Dtype;
 use crate::metrics::{RunMetrics, TracePoint};
 use crate::obs::{Console, Recorder};
 use crate::runtime::ArtifactRegistry;
@@ -89,6 +90,41 @@ pub enum TaskRef {
     /// Build a PJRT task from the artifact registry inside the cell —
     /// serial lane (oracle handles are thread-local).
     Registry,
+}
+
+/// A shared-lane task reference at its payload width.  The sweep's
+/// `dtype` axis decides which width each cell binds to; type erasure
+/// still happens once, at the [`Runner`] boundary — a slot is just the
+/// pre-erased reference plus its width tag.
+#[derive(Clone, Copy)]
+pub enum TaskSlot<'a> {
+    F32(&'a (dyn BilevelTask + Sync)),
+    F64(&'a (dyn BilevelTask<f64> + Sync)),
+}
+
+/// An owned shared task at either payload width — the expansion's task
+/// table entry ([`Grid::tasks`]).
+pub enum NativeTask {
+    F32(Box<dyn BilevelTask + Sync>),
+    F64(Box<dyn BilevelTask<f64> + Sync>),
+}
+
+impl NativeTask {
+    /// Borrow as the width-tagged reference the execution layer takes.
+    pub fn slot(&self) -> TaskSlot<'_> {
+        match self {
+            NativeTask::F32(t) => TaskSlot::F32(t.as_ref()),
+            NativeTask::F64(t) => TaskSlot::F64(t.as_ref()),
+        }
+    }
+
+    /// The task's display name, width-independent.
+    pub fn name(&self) -> String {
+        match self {
+            NativeTask::F32(t) => t.name(),
+            NativeTask::F64(t) => t.name(),
+        }
+    }
 }
 
 /// One fully-resolved cell of a sweep grid.
@@ -215,15 +251,28 @@ pub fn run_cells_with(
     reg: Option<&ArtifactRegistry>,
     opts: &ExecOpts,
 ) -> Vec<CellOutcome> {
+    let slots: Vec<TaskSlot> = tasks.iter().map(|t| TaskSlot::F32(*t)).collect();
+    run_cells_observed(cells, &slots, reg, opts, None)
+}
+
+/// [`run_cells_with`] over a width-tagged task table — what dtype-axis
+/// sweeps use ([`Grid::slots`]); the f32-only entry points wrap into
+/// [`TaskSlot::F32`] and land here.
+pub fn run_cells_slots(
+    cells: &[Cell],
+    tasks: &[TaskSlot],
+    reg: Option<&ArtifactRegistry>,
+    opts: &ExecOpts,
+) -> Vec<CellOutcome> {
     run_cells_observed(cells, tasks, reg, opts, None)
 }
 
-/// [`run_cells_with`] plus per-cell lifecycle [`CellHooks`].  The hooks
+/// [`run_cells_slots`] plus per-cell lifecycle [`CellHooks`].  The hooks
 /// see every cell start/point/done on whatever pool thread runs the cell;
-/// `hooks = None` is exactly `run_cells_with`.
+/// `hooks = None` is exactly `run_cells_slots`.
 pub fn run_cells_observed(
     cells: &[Cell],
-    tasks: &[&(dyn BilevelTask + Sync)],
+    tasks: &[TaskSlot],
     reg: Option<&ArtifactRegistry>,
     opts: &ExecOpts,
     hooks: Option<&dyn CellHooks>,
@@ -296,7 +345,7 @@ fn finish_cell(
 
 fn run_shared_cell(
     cell: &Cell,
-    tasks: &[&(dyn BilevelTask + Sync)],
+    tasks: &[TaskSlot],
     stream: Console,
     opts: &ExecOpts,
     hooks: Option<&dyn CellHooks>,
@@ -310,14 +359,17 @@ fn run_shared_cell(
     let rec = Recorder::for_cell(opts.trace, opts.profile, &cell.id);
     let result = match cell.task {
         TaskRef::Shared(t) => match tasks.get(t) {
-            Some(task) => {
+            Some(slot) => {
                 let mut guard = GuardedObserver {
                     guard: HarnessObserver { console: stream },
                     id: &cell.id,
                     hooks,
                 };
-                Runner::new(&cell.cfg)
-                    .shared_task(*task)
+                let runner = match *slot {
+                    TaskSlot::F32(task) => Runner::new(&cell.cfg).shared_task(task),
+                    TaskSlot::F64(task) => Runner::new(&cell.cfg).shared_task_f64(task),
+                };
+                runner
                     .observer(&mut guard)
                     .recorder(&rec)
                     .run()
@@ -428,6 +480,17 @@ pub struct SweepSpec {
     /// is rejected: a wall-clock stop is scheduler-dependent and would
     /// break the parallel ≡ serial bit-identity contract.)
     pub stops: Vec<String>,
+    /// Payload-width axis: `"default"` (the base config's dtype, normally
+    /// f32), `"f32"` or `"f64"`.  Non-default values are stamped into the
+    /// cell id, so adding the axis never reshuffles existing cells' seeds.
+    pub dtypes: Vec<String>,
+    /// Node-sampling-rate axis: `"default"` keeps the base `[sampling]`
+    /// table; a number (e.g. `"0.5"`) overrides `sampling.rate` for the
+    /// cell.  Rates below 1 are c2dfb/c2dfb_nc-only (config validation).
+    pub sampling_rates: Vec<String>,
+    /// Generator-transport axis: `"default"` keeps the base `[scale]`
+    /// table; `"on"`/`"off"` override `scale.generator` for the cell.
+    pub generators: Vec<String>,
     /// Cell-level parallelism (0 = all cores).
     pub jobs: usize,
     /// Small task instances (the `--tiny` sizes).
@@ -456,6 +519,9 @@ impl Default for SweepSpec {
             partitions: vec!["dir:0.5".into()],
             engines: vec![NetMode::Sync],
             stops: vec!["rounds".into()],
+            dtypes: vec!["default".into()],
+            sampling_rates: vec!["default".into()],
+            generators: vec!["default".into()],
             jobs: 0,
             tiny: false,
             calibrate: true,
@@ -536,6 +602,9 @@ impl SweepSpec {
                     .collect::<Result<_, _>>()?
             }
             "stops" => self.stops = parse_list(v)?,
+            "dtypes" | "dtype" => self.dtypes = parse_list(v)?,
+            "sampling_rates" | "sampling_rate" => self.sampling_rates = parse_list(v)?,
+            "generators" | "generator" => self.generators = parse_list(v)?,
             "jobs" | "parallelism" => {
                 self.jobs = v
                     .as_i64()
@@ -617,18 +686,43 @@ pub fn apply_stop(cfg: &mut ExperimentConfig, spec: &str) -> Result<(), String> 
 }
 
 /// An expanded sweep: cells in deterministic grid order plus the shared
-/// task table their [`TaskRef::Shared`] indices point into.
+/// task table their [`TaskRef::Shared`] indices point into.  The table
+/// holds one entry per (task, partition, dtype) — a dtype axis gets its
+/// own widened instance of the *same* problem (identical f32 generation
+/// streams, exact widening; see docs/DTYPE.md).
 pub struct Grid {
     pub cells: Vec<Cell>,
-    pub tasks: Vec<Box<dyn BilevelTask + Sync>>,
+    pub tasks: Vec<NativeTask>,
+}
+
+impl Grid {
+    /// Borrow the task table as the width-tagged slice
+    /// [`run_cells_slots`] / [`run_cells_observed`] take.
+    pub fn slots(&self) -> Vec<TaskSlot<'_>> {
+        self.tasks.iter().map(|t| t.slot()).collect()
+    }
+}
+
+/// Resolve one dtype-axis value against the base config's width.
+fn resolve_dtype(spec: &str, base: Dtype) -> Result<Dtype> {
+    match spec {
+        "default" | "" => Ok(base),
+        s => Dtype::parse(s).map_err(anyhow::Error::msg),
+    }
 }
 
 /// Expand a spec into its cell grid.  Axis order (outer→inner): task,
-/// partition, topology, compressor, engine, stop, algorithm — so the rows
-/// to compare (same scenario, different algorithm) sit adjacent.  Task
-/// data is generated once per (task, partition) from the **base** seed:
-/// every cell of a comparison group trains on identical shards no matter
-/// which other cells exist.
+/// partition, topology, compressor, engine, stop, dtype, sampling rate,
+/// generator, algorithm — so the rows to compare (same scenario,
+/// different algorithm) sit adjacent.  Task data is generated once per
+/// (task, partition, dtype) from the **base** seed: every cell of a
+/// comparison group trains on identical shards no matter which other
+/// cells exist.
+///
+/// Cell-id compatibility: the three scale/width axes only contribute an
+/// id segment for **non-default** values (`+f64`, `+sr:0.5`, `+gen:on`),
+/// so a grid that leaves them at `"default"` expands to exactly the
+/// pre-axis ids — and hence the same derived seeds and cached results.
 pub fn expand(spec: &SweepSpec) -> Result<Grid> {
     for (axis, len) in [
         ("algos", spec.algos.len()),
@@ -638,82 +732,158 @@ pub fn expand(spec: &SweepSpec) -> Result<Grid> {
         ("partitions", spec.partitions.len()),
         ("engines", spec.engines.len()),
         ("stops", spec.stops.len()),
+        ("dtypes", spec.dtypes.len()),
+        ("sampling_rates", spec.sampling_rates.len()),
+        ("generators", spec.generators.len()),
     ] {
         if len == 0 {
             anyhow::bail!("sweep axis {axis:?} is empty");
         }
     }
-    let mut tasks: Vec<Box<dyn BilevelTask + Sync>> = Vec::new();
-    let mut task_idx: BTreeMap<(String, String), usize> = BTreeMap::new();
+    // Pre-resolve the scale/width axes so bad values fail before any task
+    // generation, and so the task table below knows which widths it needs.
+    let mut dtypes: Vec<(&str, Dtype)> = Vec::new();
+    for d in &spec.dtypes {
+        dtypes.push((d.as_str(), resolve_dtype(d, spec.base.dtype)?));
+    }
+    let mut rates: Vec<(&str, Option<f64>)> = Vec::new();
+    for r in &spec.sampling_rates {
+        let v = match r.as_str() {
+            "default" | "" => None,
+            s => Some(s.parse::<f64>().map_err(|_| {
+                anyhow::anyhow!("sampling_rates axis wants a number or \"default\", got {s:?}")
+            })?),
+        };
+        rates.push((r.as_str(), v));
+    }
+    let mut gens: Vec<(&str, Option<bool>)> = Vec::new();
+    for g in &spec.generators {
+        let v = match g.as_str() {
+            "default" | "" => None,
+            "on" | "true" => Some(true),
+            "off" | "false" => Some(false),
+            s => anyhow::bail!("generators axis wants on|off|default, got {s:?}"),
+        };
+        gens.push((g.as_str(), v));
+    }
+
+    let mut tasks: Vec<NativeTask> = Vec::new();
+    let mut task_idx: BTreeMap<(String, String, &'static str), usize> = BTreeMap::new();
     let mut cells = Vec::new();
     for task_spec in &spec.tasks {
         for part_spec in &spec.partitions {
             let part = Partition::parse(part_spec).map_err(anyhow::Error::msg)?;
-            let key = (task_spec.clone(), part_spec.clone());
-            let ti = match task_idx.entry(key) {
-                std::collections::btree_map::Entry::Occupied(e) => *e.get(),
-                std::collections::btree_map::Entry::Vacant(e) => {
-                    let t = experiments::native_task_with(
-                        task_spec,
-                        spec.base.nodes,
-                        spec.tiny,
-                        spec.base.seed,
-                        part,
-                    )
+            // One shared instance per width this grid's dtype axis uses.
+            for &(_, dtype) in &dtypes {
+                let key = (task_spec.clone(), part_spec.clone(), dtype.name());
+                if let std::collections::btree_map::Entry::Vacant(e) = task_idx.entry(key) {
+                    let t = match dtype {
+                        Dtype::F32 => experiments::native_task_with(
+                            task_spec,
+                            spec.base.nodes,
+                            spec.tiny,
+                            spec.base.seed,
+                            part,
+                        )
+                        .map(NativeTask::F32),
+                        Dtype::F64 => experiments::native_task_f64(
+                            task_spec,
+                            spec.base.nodes,
+                            spec.tiny,
+                            spec.base.seed,
+                            part,
+                        )
+                        .map(NativeTask::F64),
+                    }
                     .with_context(|| format!("building task for axis value {task_spec:?}"))?;
                     tasks.push(t);
-                    *e.insert(tasks.len() - 1)
+                    e.insert(tasks.len() - 1);
                 }
-            };
+            }
             for topo_spec in &spec.topologies {
                 let topology =
                     Topology::parse(topo_spec, spec.base.seed).map_err(anyhow::Error::msg)?;
                 for comp in &spec.compressors {
                     for engine in &spec.engines {
                         for stop in &spec.stops {
-                            for &algo in &spec.algos {
-                                let id = format!(
-                                    "{task_spec}+{part_spec}+{topo_spec}+{comp}+{}+{stop}+{}",
-                                    engine.name(),
-                                    algo.name()
-                                );
-                                let mut cfg = if spec.calibrate {
-                                    experiments::calibrated_cfg(
-                                        algo,
-                                        task_spec,
-                                        spec.base.rounds,
-                                        spec.base.nodes,
-                                    )
-                                } else {
-                                    let mut c = spec.base.clone();
-                                    c.algorithm = algo;
-                                    c
-                                };
-                                cfg.name = spec.base.name.clone();
-                                cfg.preset = task_spec.clone();
-                                cfg.nodes = spec.base.nodes;
-                                cfg.rounds = spec.base.rounds;
-                                cfg.eval_every = spec.base.eval_every;
-                                cfg.out_dir = spec.base.out_dir.clone();
-                                cfg.network = spec.base.network.clone();
-                                cfg.stop = spec.base.stop.clone();
-                                // Scale machinery rides along even when the
-                                // optimizer knobs come from the calibration
-                                // table: generator transport, consensus
-                                // estimator, and per-round sampling are
-                                // base-config properties of the whole grid.
-                                cfg.sampling = spec.base.sampling.clone();
-                                cfg.scale = spec.base.scale.clone();
-                                cfg.target_accuracy = spec.base.target_accuracy;
-                                cfg.topology = topology;
-                                cfg.partition = part;
-                                if comp != "default" && !comp.is_empty() {
-                                    cfg.compressor = comp.clone();
+                            for &(dspec, dtype) in &dtypes {
+                                for &(rspec, rate) in &rates {
+                                    for &(gspec, genv) in &gens {
+                                        for &algo in &spec.algos {
+                                            let mut id = format!(
+                                                "{task_spec}+{part_spec}+{topo_spec}+{comp}+{}+{stop}",
+                                                engine.name(),
+                                            );
+                                            if dspec != "default" && !dspec.is_empty() {
+                                                let _ = write!(id, "+{}", dtype.name());
+                                            }
+                                            if rspec != "default" && !rspec.is_empty() {
+                                                let _ = write!(id, "+sr:{rspec}");
+                                            }
+                                            if gspec != "default" && !gspec.is_empty() {
+                                                let _ = write!(id, "+gen:{gspec}");
+                                            }
+                                            let _ = write!(id, "+{}", algo.name());
+                                            let mut cfg = if spec.calibrate {
+                                                experiments::calibrated_cfg(
+                                                    algo,
+                                                    task_spec,
+                                                    spec.base.rounds,
+                                                    spec.base.nodes,
+                                                )
+                                            } else {
+                                                let mut c = spec.base.clone();
+                                                c.algorithm = algo;
+                                                c
+                                            };
+                                            cfg.name = spec.base.name.clone();
+                                            cfg.preset = task_spec.clone();
+                                            cfg.nodes = spec.base.nodes;
+                                            cfg.rounds = spec.base.rounds;
+                                            cfg.eval_every = spec.base.eval_every;
+                                            cfg.out_dir = spec.base.out_dir.clone();
+                                            cfg.network = spec.base.network.clone();
+                                            cfg.stop = spec.base.stop.clone();
+                                            // Scale machinery rides along even
+                                            // when the optimizer knobs come from
+                                            // the calibration table: generator
+                                            // transport, consensus estimator,
+                                            // and per-round sampling are
+                                            // base-config properties of the
+                                            // whole grid, then overridden by
+                                            // their axes.
+                                            cfg.sampling = spec.base.sampling.clone();
+                                            cfg.scale = spec.base.scale.clone();
+                                            cfg.target_accuracy = spec.base.target_accuracy;
+                                            cfg.topology = topology;
+                                            cfg.partition = part;
+                                            if comp != "default" && !comp.is_empty() {
+                                                cfg.compressor = comp.clone();
+                                            }
+                                            cfg.network.mode = *engine;
+                                            apply_stop(&mut cfg, stop)
+                                                .map_err(anyhow::Error::msg)?;
+                                            cfg.dtype = dtype;
+                                            if let Some(r) = rate {
+                                                cfg.sampling.rate = r;
+                                            }
+                                            if let Some(g) = genv {
+                                                cfg.scale.generator = g;
+                                            }
+                                            cfg.seed = derive_seed(spec.base.seed, &id);
+                                            let ti = task_idx[&(
+                                                task_spec.clone(),
+                                                part_spec.clone(),
+                                                dtype.name(),
+                                            )];
+                                            cells.push(Cell {
+                                                id,
+                                                cfg,
+                                                task: TaskRef::Shared(ti),
+                                            });
+                                        }
+                                    }
                                 }
-                                cfg.network.mode = *engine;
-                                apply_stop(&mut cfg, stop).map_err(anyhow::Error::msg)?;
-                                cfg.seed = derive_seed(spec.base.seed, &id);
-                                cells.push(Cell { id, cfg, task: TaskRef::Shared(ti) });
                             }
                         }
                     }
@@ -738,8 +908,7 @@ pub fn run(spec: &SweepSpec, verbose: bool) -> Result<(Grid, Vec<CellOutcome>)> 
 /// routing).  `opts.jobs` overrides the spec's own parallelism knob.
 pub fn run_with(spec: &SweepSpec, opts: &ExecOpts) -> Result<(Grid, Vec<CellOutcome>)> {
     let grid = expand(spec)?;
-    let tasks: Vec<&(dyn BilevelTask + Sync)> = grid.tasks.iter().map(|t| t.as_ref()).collect();
-    let outcomes = run_cells_with(&grid.cells, &tasks, None, opts);
+    let outcomes = run_cells_slots(&grid.cells, &grid.slots(), None, opts);
     Ok((grid, outcomes))
 }
 
@@ -1160,6 +1329,59 @@ mod tests {
             assert_eq!(c.cfg.seed, derive_seed(spec.base.seed, &c.id));
             c.cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", c.id));
         }
+    }
+
+    #[test]
+    fn scale_axes_route_into_cells_and_keep_default_ids() {
+        // Default axis values add no id segment: the grid expands to the
+        // exact pre-axis ids (and hence the same derived seeds).
+        let grid = expand(&SweepSpec::tiny()).unwrap();
+        assert!(grid.cells.iter().all(|c| {
+            !c.id.contains("+f32") && !c.id.contains("+sr:") && !c.id.contains("+gen:")
+        }));
+
+        let mut spec = SweepSpec::tiny();
+        spec.algos = vec![Algorithm::C2dfb];
+        spec.tasks = vec!["quadratic".into()];
+        spec.topologies = vec!["ring".into()];
+        spec.engines = vec![NetMode::Sync];
+        spec.dtypes = vec!["default".into(), "f64".into()];
+        spec.sampling_rates = vec!["default".into(), "0.5".into()];
+        spec.generators = vec!["default".into(), "on".into()];
+        let grid = expand(&spec).unwrap();
+        assert_eq!(grid.cells.len(), 2 * 2 * 2, "dtype × rate × generator");
+        assert_eq!(grid.tasks.len(), 2, "one shared instance per width");
+
+        let mut ids: Vec<&str> = grid.cells.iter().map(|c| c.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), grid.cells.len(), "axis segments keep ids unique");
+
+        for c in &grid.cells {
+            assert_eq!(c.id.contains("+f64"), c.cfg.dtype == Dtype::F64);
+            assert_eq!(c.id.contains("+sr:0.5"), c.cfg.sampling.rate == 0.5);
+            assert_eq!(c.id.contains("+gen:on"), c.cfg.scale.generator);
+            assert_eq!(c.cfg.seed, derive_seed(spec.base.seed, &c.id));
+            c.cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", c.id));
+            // Each cell binds to the task entry of its own width.
+            let TaskRef::Shared(ti) = c.task else {
+                panic!("native sweeps never use the registry lane")
+            };
+            match (&grid.tasks[ti], c.cfg.dtype) {
+                (NativeTask::F32(_), Dtype::F32) | (NativeTask::F64(_), Dtype::F64) => {}
+                _ => panic!("{}: cell width disagrees with its task slot", c.id),
+            }
+        }
+
+        // Bad axis values fail expansion with a pointed message.
+        spec.dtypes = vec!["f16".into()];
+        assert!(expand(&spec).is_err());
+        spec.dtypes = vec!["default".into()];
+        spec.sampling_rates = vec!["fast".into()];
+        assert!(expand(&spec).is_err());
+        spec.sampling_rates = vec!["default".into()];
+        spec.generators = vec!["maybe".into()];
+        assert!(expand(&spec).is_err());
     }
 
     #[test]

@@ -50,7 +50,6 @@ use crate::coordinator::sweep::{self, CellHooks, CellOutcome, ExecOpts, SweepSpe
 use crate::data::partition::Partition;
 use crate::metrics::{RunMetrics, TracePoint};
 use crate::obs::Console;
-use crate::tasks::BilevelTask;
 use crate::topology::Topology;
 use crate::util::json::Json;
 use anyhow::Result;
@@ -716,8 +715,7 @@ impl Daemon {
         if !miss.is_empty() {
             let miss_cells: Vec<sweep::Cell> =
                 miss.iter().map(|&i| grid.cells[i].clone()).collect();
-            let tasks: Vec<&(dyn BilevelTask + Sync)> =
-                grid.tasks.iter().map(|t| t.as_ref()).collect();
+            let tasks = grid.slots();
             let hooks = JobHooks { daemon: self, job };
             let eopts = ExecOpts {
                 jobs: self.opts.jobs,

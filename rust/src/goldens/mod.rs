@@ -64,8 +64,8 @@ impl TaskKind {
     /// these exact datasets).
     pub fn build(&self) -> Box<dyn BilevelTask + Sync> {
         match self {
-            TaskKind::Quadratic => Box::new(QuadraticTask::generate(4, 8, 0.8, 11)),
-            TaskKind::Logreg => Box::new(LogRegTask::generate(
+            TaskKind::Quadratic => Box::new(QuadraticTask::<f32>::generate(4, 8, 0.8, 11)),
+            TaskKind::Logreg => Box::new(LogRegTask::<f32>::generate(
                 4,
                 12,
                 3,
@@ -75,7 +75,7 @@ impl TaskKind {
                 0.4,
                 11,
             )),
-            TaskKind::Hyperrep => Box::new(HyperRepTask::generate(
+            TaskKind::Hyperrep => Box::new(HyperRepTask::<f32>::generate(
                 4,
                 12,
                 4,

@@ -1,7 +1,7 @@
 //! Contiguous per-node matrices for the coordination hot path.
 //!
 //! The inner loop (Algorithm 2) and the trackers keep one d-vector per
-//! node.  Backing those with `Vec<Vec<f32>>` scatters the rows across the
+//! node.  Backing those with `Vec<Vec<S>>` scatters the rows across the
 //! heap and forces an allocation every time a batch is rebuilt; a
 //! [`NodeBlock`] is one m×d row-major allocation with row views, so
 //! per-step rebuilds are `copy_from_slice` into storage that already
@@ -10,22 +10,26 @@
 //! The [`Rows`]/[`RowsMut`] traits abstract "m stacked d-vectors" so the
 //! paid gossip-mixing kernels
 //! ([`Transport::mix_paid_into`](crate::collective::Transport::mix_paid_into))
-//! work identically over a `NodeBlock` and over the legacy `[Vec<f32>]`
+//! work identically over a `NodeBlock` and over the legacy `[Vec<S>]`
 //! representation the algorithm iterates still use at their API surface.
+//! Everything here is generic over the payload [`Scalar`] (default
+//! `f32`, the wire dtype).
+
+use super::scalar::Scalar;
 
 /// Read access to m stacked rows of dimension d.
-pub trait Rows {
+pub trait Rows<S: Scalar = f32> {
     fn nrows(&self) -> usize;
     fn dim(&self) -> usize;
-    fn row(&self, i: usize) -> &[f32];
+    fn row(&self, i: usize) -> &[S];
 }
 
 /// Mutable access to m stacked rows of dimension d.
-pub trait RowsMut: Rows {
-    fn row_mut(&mut self, i: usize) -> &mut [f32];
+pub trait RowsMut<S: Scalar = f32>: Rows<S> {
+    fn row_mut(&mut self, i: usize) -> &mut [S];
 }
 
-impl Rows for [Vec<f32>] {
+impl<S: Scalar> Rows<S> for [Vec<S>] {
     fn nrows(&self) -> usize {
         self.len()
     }
@@ -34,40 +38,40 @@ impl Rows for [Vec<f32>] {
         self.first().map_or(0, |r| r.len())
     }
 
-    fn row(&self, i: usize) -> &[f32] {
+    fn row(&self, i: usize) -> &[S] {
         &self[i]
     }
 }
 
-impl RowsMut for [Vec<f32>] {
-    fn row_mut(&mut self, i: usize) -> &mut [f32] {
+impl<S: Scalar> RowsMut<S> for [Vec<S>] {
+    fn row_mut(&mut self, i: usize) -> &mut [S] {
         &mut self[i]
     }
 }
 
-/// One contiguous row-major m×d `f32` matrix holding a per-node vector per
+/// One contiguous row-major m×d matrix holding a per-node vector per
 /// row.  All row accessors are allocation-free; the only methods that
 /// allocate are the explicit conversions ([`NodeBlock::to_vecs`],
 /// [`NodeBlock::mean_row`]).
 #[derive(Clone, Debug, PartialEq)]
-pub struct NodeBlock {
+pub struct NodeBlock<S: Scalar = f32> {
     m: usize,
     d: usize,
-    data: Vec<f32>,
+    data: Vec<S>,
 }
 
-impl Default for NodeBlock {
+impl<S: Scalar> Default for NodeBlock<S> {
     fn default() -> Self {
         NodeBlock::zeros(0, 0)
     }
 }
 
-impl NodeBlock {
-    pub fn zeros(m: usize, d: usize) -> NodeBlock {
-        NodeBlock { m, d, data: vec![0.0; m * d] }
+impl<S: Scalar> NodeBlock<S> {
+    pub fn zeros(m: usize, d: usize) -> NodeBlock<S> {
+        NodeBlock { m, d, data: vec![S::ZERO; m * d] }
     }
 
-    pub fn from_rows(rows: &[Vec<f32>]) -> NodeBlock {
+    pub fn from_rows(rows: &[Vec<S>]) -> NodeBlock<S> {
         let mut b = NodeBlock::zeros(rows.nrows(), rows.dim());
         b.copy_from_rows(rows);
         b
@@ -82,17 +86,17 @@ impl NodeBlock {
     }
 
     #[inline]
-    pub fn row(&self, i: usize) -> &[f32] {
+    pub fn row(&self, i: usize) -> &[S] {
         &self.data[i * self.d..(i + 1) * self.d]
     }
 
     #[inline]
-    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
         &mut self.data[i * self.d..(i + 1) * self.d]
     }
 
     /// Iterate all rows in node order.
-    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+    pub fn rows(&self) -> impl Iterator<Item = &[S]> {
         self.data.chunks_exact(self.d.max(1))
     }
 
@@ -103,15 +107,15 @@ impl NodeBlock {
         self.m = m;
         self.d = d;
         self.data.clear();
-        self.data.resize(m * d, 0.0);
+        self.data.resize(m * d, S::ZERO);
     }
 
-    pub fn fill(&mut self, v: f32) {
+    pub fn fill(&mut self, v: S) {
         self.data.fill(v);
     }
 
     /// Copy all rows from stacked vectors of matching shape.
-    pub fn copy_from_rows(&mut self, rows: &[Vec<f32>]) {
+    pub fn copy_from_rows(&mut self, rows: &[Vec<S>]) {
         debug_assert_eq!(rows.nrows(), self.m);
         for (i, r) in rows.iter().enumerate() {
             self.row_mut(i).copy_from_slice(r);
@@ -119,19 +123,19 @@ impl NodeBlock {
     }
 
     /// Copy from another block of identical shape.
-    pub fn copy_from(&mut self, other: &NodeBlock) {
+    pub fn copy_from(&mut self, other: &NodeBlock<S>) {
         debug_assert_eq!((self.m, self.d), (other.m, other.d));
         self.data.copy_from_slice(&other.data);
     }
 
     /// Node-average row (allocates; evaluation cadence only).
-    pub fn mean_row(&self) -> Vec<f32> {
+    pub fn mean_row(&self) -> Vec<S> {
         assert!(self.m > 0);
-        let mut out = vec![0.0f32; self.d];
+        let mut out = vec![S::ZERO; self.d];
         for r in self.rows() {
             super::add_assign(&mut out, r);
         }
-        super::scale(1.0 / self.m as f32, &mut out);
+        super::scale(S::ONE / S::from_usize(self.m), &mut out);
         out
     }
 
@@ -139,23 +143,16 @@ impl NodeBlock {
     /// evaluation cadence only).
     pub fn consensus_err_sq(&self) -> f64 {
         let mean = self.mean_row();
-        self.rows()
-            .map(|r| {
-                r.iter()
-                    .zip(&mean)
-                    .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
-                    .sum::<f64>()
-            })
-            .sum()
+        self.rows().map(|r| super::kernels::dist_sq(r, &mean)).sum()
     }
 
     /// Convert to the legacy stacked-vector representation (allocates).
-    pub fn to_vecs(&self) -> Vec<Vec<f32>> {
-        self.rows().map(<[f32]>::to_vec).collect()
+    pub fn to_vecs(&self) -> Vec<Vec<S>> {
+        self.rows().map(<[S]>::to_vec).collect()
     }
 }
 
-impl Rows for NodeBlock {
+impl<S: Scalar> Rows<S> for NodeBlock<S> {
     fn nrows(&self) -> usize {
         self.m
     }
@@ -164,27 +161,27 @@ impl Rows for NodeBlock {
         self.d
     }
 
-    fn row(&self, i: usize) -> &[f32] {
+    fn row(&self, i: usize) -> &[S] {
         NodeBlock::row(self, i)
     }
 }
 
-impl RowsMut for NodeBlock {
-    fn row_mut(&mut self, i: usize) -> &mut [f32] {
+impl<S: Scalar> RowsMut<S> for NodeBlock<S> {
+    fn row_mut(&mut self, i: usize) -> &mut [S] {
         NodeBlock::row_mut(self, i)
     }
 }
 
-impl std::ops::Index<usize> for NodeBlock {
-    type Output = [f32];
+impl<S: Scalar> std::ops::Index<usize> for NodeBlock<S> {
+    type Output = [S];
 
-    fn index(&self, i: usize) -> &[f32] {
+    fn index(&self, i: usize) -> &[S] {
         self.row(i)
     }
 }
 
-impl std::ops::IndexMut<usize> for NodeBlock {
-    fn index_mut(&mut self, i: usize) -> &mut [f32] {
+impl<S: Scalar> std::ops::IndexMut<usize> for NodeBlock<S> {
+    fn index_mut(&mut self, i: usize) -> &mut [S] {
         self.row_mut(i)
     }
 }
@@ -195,7 +192,7 @@ mod tests {
 
     #[test]
     fn rows_and_indexing() {
-        let mut b = NodeBlock::zeros(3, 2);
+        let mut b = NodeBlock::<f32>::zeros(3, 2);
         b.row_mut(1).copy_from_slice(&[1.0, 2.0]);
         assert_eq!(b.row(0), &[0.0, 0.0]);
         assert_eq!(&b[1], &[1.0, 2.0]);
@@ -206,7 +203,7 @@ mod tests {
 
     #[test]
     fn from_rows_roundtrip() {
-        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
         let b = NodeBlock::from_rows(&rows);
         assert_eq!(b.to_vecs(), rows);
         assert_eq!(b.nrows(), 2);
@@ -214,8 +211,16 @@ mod tests {
     }
 
     #[test]
+    fn f64_block_works_identically() {
+        let rows = vec![vec![1.0f64, 2.0], vec![3.0, 4.0]];
+        let b = NodeBlock::from_rows(&rows);
+        assert_eq!(b.to_vecs(), rows);
+        assert_eq!(b.mean_row(), vec![2.0, 3.0]);
+    }
+
+    #[test]
     fn mean_and_consensus_match_vec_versions() {
-        let rows = vec![vec![1.0, 0.0], vec![3.0, 4.0]];
+        let rows = vec![vec![1.0f32, 0.0], vec![3.0, 4.0]];
         let b = NodeBlock::from_rows(&rows);
         assert_eq!(b.mean_row(), super::super::mean_rows(&rows));
         assert!((b.consensus_err_sq() - super::super::consensus_err_sq(&rows)).abs() < 1e-12);
@@ -223,7 +228,7 @@ mod tests {
 
     #[test]
     fn reset_reshapes_without_shrinking_capacity() {
-        let mut b = NodeBlock::zeros(4, 8);
+        let mut b = NodeBlock::<f32>::zeros(4, 8);
         let cap = b.data.capacity();
         b.reset(2, 3);
         assert_eq!((b.nrows(), b.dim()), (2, 3));

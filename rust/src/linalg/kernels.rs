@@ -1,0 +1,457 @@
+//! The dense arithmetic kernels behind every hot loop in the stack,
+//! centralized here so the planned `std::simd` feature lands in one
+//! module instead of ten (ROADMAP: SIMD + f32 + PGO).
+//!
+//! Every kernel is generic over [`Scalar`] and falls into one of two
+//! classes with different bit-identity rules:
+//!
+//! * **Elementwise** kernels (axpy, scale, the gossip/tracker folds, the
+//!   quantize/dequantize passes): each output element depends only on
+//!   same-index inputs, so processing in fixed-width chunks cannot
+//!   reassociate anything — the chunked form below is bit-identical to
+//!   the naive loop while handing the autovectorizer provably
+//!   independent lanes.
+//! * **Reductions** ([`dot`], [`norm2_sq`], [`dist_sq`]): accumulate in
+//!   `f64` in strict left-to-right element order.  These are *not*
+//!   chunked — partial sums would reassociate the addition and change
+//!   bits, and the golden traces pin the sequential order.
+//!
+//! The per-element expressions are verbatim transcriptions of the loops
+//! they replaced (`linalg`, `compress`, `optim::{inner,refpoint,tracking}`,
+//! `collective::mix_paid_into`); tests/hotpath.rs holds the
+//! transcription bit-for-bit.
+
+use super::scalar::Scalar;
+use crate::util::rng::Rng;
+
+/// Chunk width for the elementwise kernels.  Eight lanes cover a full
+/// AVX2 register of f32 and two of f64; the remainder loop handles
+/// tails.  Safe for elementwise ops only (no cross-lane dependencies).
+const LANES: usize = 8;
+
+/// Apply `f(&mut y[i], x[i])` over equal-length slices in LANES-wide
+/// chunks plus a tail.  Bit-identical to the plain zip loop.
+#[inline(always)]
+fn zip2<S: Scalar>(y: &mut [S], x: &[S], f: impl Fn(&mut S, S)) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (ys, xs) in (&mut yc).zip(&mut xc) {
+        for (yi, &xi) in ys.iter_mut().zip(xs) {
+            f(yi, xi);
+        }
+    }
+    for (yi, &xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        f(yi, xi);
+    }
+}
+
+/// Apply `f(&mut o[i], a[i], b[i])` over equal-length slices in
+/// LANES-wide chunks plus a tail.
+#[inline(always)]
+fn zip3<S: Scalar>(o: &mut [S], a: &[S], b: &[S], f: impl Fn(&mut S, S, S)) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), o.len());
+    let mut oc = o.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((os, xs), ys) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for ((oi, &xi), &yi) in os.iter_mut().zip(xs).zip(ys) {
+            f(oi, xi, yi);
+        }
+    }
+    for ((oi, &xi), &yi) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        f(oi, xi, yi);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// level-1 BLAS (formerly inlined in linalg::mod)
+// ---------------------------------------------------------------------------
+
+/// `y += alpha * x`
+#[inline]
+pub fn axpy<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+    zip2(y, x, |yi, xi| *yi += alpha * xi);
+}
+
+/// `y = x` (copy)
+#[inline]
+pub fn copy<S: Scalar>(x: &[S], y: &mut [S]) {
+    y.copy_from_slice(x);
+}
+
+/// `x *= alpha`
+#[inline]
+pub fn scale<S: Scalar>(alpha: S, x: &mut [S]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// `out = a - b`
+#[inline]
+pub fn sub<S: Scalar>(a: &[S], b: &[S], out: &mut [S]) {
+    zip3(out, a, b, |o, x, y| *o = x - y);
+}
+
+/// `a -= b`
+#[inline]
+pub fn sub_assign<S: Scalar>(a: &mut [S], b: &[S]) {
+    zip2(a, b, |x, y| *x -= y);
+}
+
+/// `a += b`
+#[inline]
+pub fn add_assign<S: Scalar>(a: &mut [S], b: &[S]) {
+    zip2(a, b, |x, y| *x += y);
+}
+
+/// Dot product with strict left-to-right `f64` accumulation (reduction:
+/// never chunked — see the module docs).
+#[inline]
+pub fn dot<S: Scalar>(x: &[S], y: &[S]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a.to_f64() * b.to_f64()).sum()
+}
+
+/// Squared Euclidean norm with strict left-to-right `f64` accumulation.
+#[inline]
+pub fn norm2_sq<S: Scalar>(x: &[S]) -> f64 {
+    x.iter().map(|a| a.to_f64() * a.to_f64()).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2<S: Scalar>(x: &[S]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// `Σ (a[i] − b[i])²` in strict left-to-right `f64` accumulation — the
+/// consensus-distance fold.
+#[inline]
+pub fn dist_sq<S: Scalar>(a: &[S], b: &[S]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x.to_f64() - y.to_f64()).powi(2))
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// gossip / tracker folds (formerly inlined in optim::{inner,refpoint,
+// tracking} and collective::Transport::mix_paid_into)
+// ---------------------------------------------------------------------------
+
+/// Gradient-descent step `x -= eta * g` (the inner-loop model update).
+#[inline]
+pub fn descent<S: Scalar>(eta: S, g: &[S], x: &mut [S]) {
+    zip2(x, g, |xi, gi| *xi -= eta * gi);
+}
+
+/// Paid-mixing fold `out += w * (a − b)` — the gossip kernel: `a` is the
+/// neighbour's row, `b` the receiver's snapshot, `w` the (already
+/// γ-scaled) mixing weight.
+#[inline]
+pub fn weighted_diff_add<S: Scalar>(w: S, a: &[S], b: &[S], out: &mut [S]) {
+    zip3(out, a, b, |o, x, y| *o += w * (x - y));
+}
+
+/// Tracker fold `s += new − old` (gradient-tracking recursion).
+#[inline]
+pub fn add_diff<S: Scalar>(new: &[S], old: &[S], s: &mut [S]) {
+    zip3(s, new, old, |o, n, p| *o += n - p);
+}
+
+/// Reference-point mixing term `out += gamma * (hat_w − sw · hat)`
+/// ([`crate::optim::RefPoint::add_mix_term`]).
+#[inline]
+pub fn ref_mix_term<S: Scalar>(gamma: S, sw: S, hat_w: &[S], hat: &[S], out: &mut [S]) {
+    zip3(out, hat_w, hat, |o, hw, h| *o += gamma * (hw - sw * h));
+}
+
+/// Moving average toward the difference `a − b`:
+/// `u ← (1−θ)·u + θ·(a − b)` (MA-DSBO's hypergradient tracker).
+#[inline]
+pub fn ema_diff<S: Scalar>(theta: S, a: &[S], b: &[S], u: &mut [S]) {
+    let omt = S::ONE - theta;
+    zip3(u, a, b, |ui, x, y| *ui = omt * *ui + theta * (x - y));
+}
+
+// ---------------------------------------------------------------------------
+// payload expansion (formerly inlined in compress::message)
+// ---------------------------------------------------------------------------
+
+/// Overwrite `out[idx[j]] = val[j]`, silently dropping indices beyond
+/// `out.len()` — a decoded index can exceed the receiver's dim on
+/// hostile bytes; dropping beats panicking (R3).  `out` is NOT zeroed.
+#[inline]
+pub fn scatter_write<S: Scalar>(idx: &[u32], val: &[S], out: &mut [S]) {
+    for (&i, &x) in idx.iter().zip(val) {
+        debug_assert!((i as usize) < out.len(), "sparse index {i} out of range");
+        if let Some(o) = out.get_mut(i as usize) {
+            *o = x;
+        }
+    }
+}
+
+/// `target[idx[j]] += w * val[j]` with the same hostile-index guard.
+#[inline]
+pub fn scatter_add_scaled<S: Scalar>(w: S, idx: &[u32], val: &[S], target: &mut [S]) {
+    for (&i, &x) in idx.iter().zip(val) {
+        debug_assert!((i as usize) < target.len(), "sparse index {i} out of range");
+        if let Some(t) = target.get_mut(i as usize) {
+            *t += w * x;
+        }
+    }
+}
+
+/// `target += w * v` over the zipped prefix (dense payload fold; a
+/// hostile dense payload may claim a different length than the
+/// receiver's buffer, so this zips instead of asserting).
+#[inline]
+pub fn dense_add_scaled<S: Scalar>(w: S, v: &[S], target: &mut [S]) {
+    for (t, &x) in target.iter_mut().zip(v) {
+        *t += w * x;
+    }
+}
+
+/// Dequantize `out[i] = codes[i] · scale` over the zipped prefix.
+#[inline]
+pub fn dequant_write<S: Scalar>(scale: S, codes: &[i16], out: &mut [S]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = S::from_i16(c) * scale;
+    }
+}
+
+/// Dequantize-accumulate `target[i] += codes[i] · scale`.
+#[inline]
+pub fn dequant_add<S: Scalar>(scale: S, codes: &[i16], target: &mut [S]) {
+    for (t, &c) in target.iter_mut().zip(codes) {
+        *t += S::from_i16(c) * scale;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// compression passes (formerly inlined in compress::mod)
+// ---------------------------------------------------------------------------
+
+/// QSGD stochastic quantization pass: fills `codes` with signed level
+/// codes for `v` and returns the vector norm used as the shared scale.
+/// One Bernoulli draw per coordinate, in index order (the RNG draw
+/// sequence is part of the golden contract).  `codes` is cleared first.
+/// Caller guarantees `norm > 0` (the zero-vector fast path never gets
+/// here) and `levels ≤ i16::MAX`.
+#[inline]
+pub fn qsgd_quantize<S: Scalar>(
+    v: &[S],
+    norm: S,
+    levels: u32,
+    codes: &mut Vec<i16>,
+    rng: &mut Rng,
+) {
+    let s = S::from_u32(levels);
+    codes.clear();
+    for &x in v {
+        let u = x.abs() / norm * s; // in [0, s]
+        let lo = u.floor();
+        let level = lo
+            + if rng.bernoulli((u - lo).to_f64()) {
+                S::ONE
+            } else {
+                S::ZERO
+            };
+        // Signed code in [−s, s]; Qsgd::new bounds s to the i16 range.
+        let code = (level * x.signum()).to_f64() as i16;
+        codes.push(code);
+    }
+}
+
+/// k-th largest value (0-based) of `xs` by magnitude-descending order —
+/// the top-k threshold pass.  Median-of-three quickselect; comparisons
+/// assume finite inputs (the top-k compressor falls back to dense on
+/// non-finite vectors before calling this).
+pub fn quickselect_desc<S: Scalar>(xs: &mut [S], k: usize) -> S {
+    let n = xs.len();
+    assert!(k < n);
+    let (mut lo, mut hi) = (0usize, n - 1);
+    loop {
+        if lo == hi {
+            return xs[lo];
+        }
+        // Median-of-three pivot for adversarial orderings.
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (xs[lo], xs[mid], xs[hi]);
+        let pivot = if (a >= b) == (b >= c) {
+            b
+        } else if (b >= a) == (a >= c) {
+            a
+        } else {
+            c
+        };
+        let (mut i, mut j) = (lo, hi);
+        while i <= j {
+            while xs[i] > pivot {
+                i += 1;
+            }
+            while xs[j] < pivot {
+                j -= 1;
+            }
+            if i <= j {
+                xs.swap(i, j);
+                i += 1;
+                if j == 0 {
+                    break;
+                }
+                j -= 1;
+            }
+        }
+        if k <= j {
+            hi = j;
+        } else if k >= i {
+            lo = i;
+        } else {
+            return xs[k];
+        }
+    }
+}
+
+/// Top-k selection: quickselect on `|v|` (in the reusable `scratch`) for
+/// the threshold, then count strictly-above entries and gather in one
+/// ascending pass — everything above the threshold plus the first
+/// (k − count) ties in index order, so indices are canonical ascending
+/// by construction.  Appends to `idx`/`val` (caller clears).
+pub fn topk_select<S: Scalar>(
+    v: &[S],
+    k: usize,
+    scratch: &mut Vec<S>,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<S>,
+) {
+    scratch.clear();
+    scratch.extend(v.iter().map(|x| x.abs()));
+    let thresh = quickselect_desc(scratch, k - 1);
+    let n_gt = v.iter().filter(|x| x.abs() > thresh).count();
+    let mut ties_left = k - n_gt;
+    for (i, &x) in v.iter().enumerate() {
+        let a = x.abs();
+        if a > thresh {
+            idx.push(i as u32);
+            val.push(x);
+        } else if a == thresh && ties_left > 0 {
+            ties_left -= 1;
+            idx.push(i as u32);
+            val.push(x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The chunked elementwise kernels must be bit-identical to the
+    /// naive zip loops at every length straddling the LANES boundary.
+    #[test]
+    fn chunked_matches_naive_at_all_tail_lengths() {
+        for n in 0..=(3 * LANES + 1) {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32) * 0.37 - 1.5).collect();
+            let y0: Vec<f32> = (0..n).map(|i| (i as f32) * -0.11 + 0.5).collect();
+
+            let mut y = y0.clone();
+            axpy(0.625f32, &x, &mut y);
+            let naive: Vec<f32> = y0.iter().zip(&x).map(|(yi, xi)| yi + 0.625 * xi).collect();
+            assert_eq!(y, naive, "axpy n={n}");
+
+            let mut o = vec![0.0f32; n];
+            sub(&x, &y0, &mut o);
+            let naive: Vec<f32> = x.iter().zip(&y0).map(|(a, b)| a - b).collect();
+            assert_eq!(o, naive, "sub n={n}");
+
+            let mut s = y0.clone();
+            add_diff(&x, &o, &mut s);
+            let naive: Vec<f32> = y0
+                .iter()
+                .zip(&x)
+                .zip(&o)
+                .map(|((si, ni), pi)| si + (ni - pi))
+                .collect();
+            assert_eq!(s, naive, "add_diff n={n}");
+        }
+    }
+
+    #[test]
+    fn folds_match_their_formulas() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [0.5f32, 1.0, -1.0];
+        let mut out = [10.0f32, 20.0, 30.0];
+        weighted_diff_add(2.0f32, &a, &b, &mut out);
+        assert_eq!(out, [11.0, 22.0, 38.0]);
+
+        let mut x = [1.0f32, 1.0];
+        descent(0.5f32, &[2.0, -2.0], &mut x);
+        assert_eq!(x, [0.0, 2.0]);
+
+        let mut o = [0.0f32; 2];
+        ref_mix_term(0.5f32, 2.0f32, &[4.0, 8.0], &[1.0, 2.0], &mut o);
+        // o += 0.5 * (hw − 2h) = 0.5·(4−2), 0.5·(8−4)
+        assert_eq!(o, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn reductions_accumulate_sequentially_in_f64() {
+        let x = [1.0f32, 2.0, 3.0];
+        assert_eq!(dot(&x, &x), 14.0);
+        assert_eq!(norm2_sq(&x), 14.0);
+        assert!((norm2(&x) - 14f64.sqrt()).abs() < 1e-12);
+        assert_eq!(dist_sq(&x, &[0.0, 0.0, 0.0]), 14.0);
+        // f64 path too.
+        let y = [1.0f64, 2.0, 3.0];
+        assert_eq!(dot(&y, &y), 14.0);
+    }
+
+    #[test]
+    fn scatter_guards_hostile_indices() {
+        let mut out = [0.0f32; 3];
+        scatter_write(&[0, 2, 9], &[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(out, [1.0, 0.0, 2.0], "index 9 dropped, not panicked");
+        let mut t = [1.0f32; 3];
+        scatter_add_scaled(2.0, &[1, 7], &[3.0, 9.0], &mut t);
+        assert_eq!(t, [1.0, 7.0, 1.0]);
+    }
+
+    #[test]
+    fn dequant_roundtrip() {
+        let mut out = [0.0f32; 3];
+        dequant_write(2.0f32, &[4, -2, 0], &mut out);
+        assert_eq!(out, [8.0, -4.0, 0.0]);
+        dequant_add(1.0f32, &[1, 1, 1], &mut out);
+        assert_eq!(out, [9.0, -3.0, 1.0]);
+    }
+
+    #[test]
+    fn quickselect_generic_matches_sort_f64() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let n = 1 + rng.below(200);
+            let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let k = rng.below(n);
+            let got = quickselect_desc(&mut v.clone(), k);
+            v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            assert_eq!(got, v[k]);
+        }
+    }
+
+    #[test]
+    fn topk_select_canonical_ascending_with_ties() {
+        let v = [1.0f32; 10];
+        let (mut scratch, mut idx, mut val) = (Vec::new(), Vec::new(), Vec::new());
+        topk_select(&v, 3, &mut scratch, &mut idx, &mut val);
+        assert_eq!(idx, vec![0, 1, 2]);
+        assert_eq!(val, vec![1.0; 3]);
+    }
+}

@@ -1,113 +1,97 @@
 //! Dense linear algebra substrate.
 //!
 //! The coordinator's per-round math — gossip mixing, gradient tracking,
-//! compression residuals — is all level-1 BLAS on `f32` vectors plus a
-//! little dense `f64` matrix work for the mixing matrices (doubly
+//! compression residuals — is all level-1 BLAS on [`Scalar`] vectors
+//! (`f32` by default, `f64` in high-precision mode; see docs/DTYPE.md)
+//! plus a little dense `f64` matrix work for the mixing matrices (doubly
 //! stochastic checks, spectral gap via a cyclic Jacobi eigensolver).
+//!
+//! The actual loops live in [`kernels`]; the free functions here are
+//! thin generic re-exports kept for call-site ergonomics.
 
 pub mod block;
+pub mod kernels;
 pub mod matrix;
+pub mod scalar;
 
 pub use block::{NodeBlock, Rows, RowsMut};
 pub use matrix::MatF64;
+pub use scalar::{Dtype, Scalar};
 
 // ---------------------------------------------------------------------------
-// f32 vector kernels (the L3 hot path)
+// vector kernels (the L3 hot path) — generic fronts over linalg::kernels
 // ---------------------------------------------------------------------------
 
 /// `y += alpha * x`
 #[inline]
-pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+pub fn axpy<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+    kernels::axpy(alpha, x, y);
 }
 
 /// `y = x` (copy)
 #[inline]
-pub fn copy(x: &[f32], y: &mut [f32]) {
-    y.copy_from_slice(x);
+pub fn copy<S: Scalar>(x: &[S], y: &mut [S]) {
+    kernels::copy(x, y);
 }
 
 /// `x *= alpha`
 #[inline]
-pub fn scale(alpha: f32, x: &mut [f32]) {
-    for xi in x.iter_mut() {
-        *xi *= alpha;
-    }
+pub fn scale<S: Scalar>(alpha: S, x: &mut [S]) {
+    kernels::scale(alpha, x);
 }
 
 /// Dot product with f64 accumulation.
 #[inline]
-pub fn dot(x: &[f32], y: &[f32]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
-    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+pub fn dot<S: Scalar>(x: &[S], y: &[S]) -> f64 {
+    kernels::dot(x, y)
 }
 
 /// Squared Euclidean norm (f64 accumulation).
 #[inline]
-pub fn norm2_sq(x: &[f32]) -> f64 {
-    x.iter().map(|a| *a as f64 * *a as f64).sum()
+pub fn norm2_sq<S: Scalar>(x: &[S]) -> f64 {
+    kernels::norm2_sq(x)
 }
 
 /// Euclidean norm.
 #[inline]
-pub fn norm2(x: &[f32]) -> f64 {
-    norm2_sq(x).sqrt()
+pub fn norm2<S: Scalar>(x: &[S]) -> f64 {
+    kernels::norm2(x)
 }
 
 /// `out = a - b`
 #[inline]
-pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(a.len(), b.len());
-    debug_assert_eq!(a.len(), out.len());
-    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
-        *o = x - y;
-    }
+pub fn sub<S: Scalar>(a: &[S], b: &[S], out: &mut [S]) {
+    kernels::sub(a, b, out);
 }
 
 /// `a -= b`
 #[inline]
-pub fn sub_assign(a: &mut [f32], b: &[f32]) {
-    debug_assert_eq!(a.len(), b.len());
-    for (x, y) in a.iter_mut().zip(b) {
-        *x -= y;
-    }
+pub fn sub_assign<S: Scalar>(a: &mut [S], b: &[S]) {
+    kernels::sub_assign(a, b);
 }
 
 /// `a += b`
 #[inline]
-pub fn add_assign(a: &mut [f32], b: &[f32]) {
-    debug_assert_eq!(a.len(), b.len());
-    for (x, y) in a.iter_mut().zip(b) {
-        *x += y;
-    }
+pub fn add_assign<S: Scalar>(a: &mut [S], b: &[S]) {
+    kernels::add_assign(a, b);
 }
 
 /// Mean of m stacked vectors of dimension d (`rows` is row-major m×d).
-pub fn mean_rows(rows: &[Vec<f32>]) -> Vec<f32> {
+pub fn mean_rows<S: Scalar>(rows: &[Vec<S>]) -> Vec<S> {
     assert!(!rows.is_empty());
     let d = rows[0].len();
-    let mut out = vec![0.0f32; d];
+    let mut out = vec![S::ZERO; d];
     for r in rows {
         add_assign(&mut out, r);
     }
-    scale(1.0 / rows.len() as f32, &mut out);
+    scale(S::ONE / S::from_usize(rows.len()), &mut out);
     out
 }
 
 /// Frobenius-norm² of the consensus error `‖X − 1·x̄‖²` of stacked rows.
-pub fn consensus_err_sq(rows: &[Vec<f32>]) -> f64 {
+pub fn consensus_err_sq<S: Scalar>(rows: &[Vec<S>]) -> f64 {
     let mean = mean_rows(rows);
-    rows.iter()
-        .map(|r| {
-            r.iter()
-                .zip(&mean)
-                .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
-                .sum::<f64>()
-        })
-        .sum()
+    rows.iter().map(|r| kernels::dist_sq(r, &mean)).sum()
 }
 
 #[cfg(test)]
@@ -116,8 +100,8 @@ mod tests {
 
     #[test]
     fn axpy_dot_norm() {
-        let x = vec![1.0, 2.0, 3.0];
-        let mut y = vec![10.0, 20.0, 30.0];
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![10.0f32, 20.0, 30.0];
         axpy(2.0, &x, &mut y);
         assert_eq!(y, vec![12.0, 24.0, 36.0]);
         assert_eq!(dot(&x, &x), 14.0);
@@ -125,8 +109,17 @@ mod tests {
     }
 
     #[test]
+    fn axpy_dot_norm_f64() {
+        let x = vec![1.0f64, 2.0, 3.0];
+        let mut y = vec![10.0f64, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+    }
+
+    #[test]
     fn mean_and_consensus() {
-        let rows = vec![vec![1.0, 0.0], vec![3.0, 4.0]];
+        let rows = vec![vec![1.0f32, 0.0], vec![3.0, 4.0]];
         assert_eq!(mean_rows(&rows), vec![2.0, 2.0]);
         // ‖(−1,−2)‖² + ‖(1,2)‖² = 5 + 5
         assert!((consensus_err_sq(&rows) - 10.0).abs() < 1e-9);
@@ -134,15 +127,15 @@ mod tests {
 
     #[test]
     fn consensus_zero_when_equal() {
-        let rows = vec![vec![5.0; 8]; 4];
+        let rows = vec![vec![5.0f32; 8]; 4];
         assert!(consensus_err_sq(&rows) < 1e-12);
     }
 
     #[test]
     fn sub_ops() {
-        let a = vec![5.0, 7.0];
-        let b = vec![2.0, 3.0];
-        let mut out = vec![0.0; 2];
+        let a = vec![5.0f32, 7.0];
+        let b = vec![2.0f32, 3.0];
+        let mut out = vec![0.0f32; 2];
         sub(&a, &b, &mut out);
         assert_eq!(out, vec![3.0, 4.0]);
         let mut c = a.clone();

@@ -1,0 +1,391 @@
+//! The sealed scalar-type layer: every module that touches payload data
+//! (vectors on the wire, compressor buffers, inner-loop state, task
+//! oracles) is generic over [`Scalar`], implemented by exactly `f32` and
+//! `f64`.
+//!
+//! `f32` is the repo's historical storage/wire type and stays the
+//! default — the goldens, the hotpath transcription test and the sweep
+//! byte-identity suite all pin the `f32` path bit-for-bit.  `f64` is the
+//! high-precision mode selected with `dtype = "f64"` (CLI `--dtype`): it
+//! doubles every payload byte on the wire and every state byte in memory
+//! in exchange for ~1e-16 relative rounding instead of ~1e-7.  Type
+//! erasure happens exactly once, at the `Runner` boundary
+//! ([`crate::coordinator`]), so `sim`, `daemon` and `obs` stay
+//! monomorphic.
+//!
+//! The trait is sealed: downstream code may assume the two-impl closed
+//! world (e.g. the wire-tag space in [`crate::compress::message`] or the
+//! dtype dispatch in the coordinator) without defensive handling of
+//! hypothetical third scalar types.
+
+/// The payload element type of a run, as named in config/CLI/sweep axes.
+/// This is the *erased* (runtime) twin of the [`Scalar`] type parameter.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// 4 bytes per coordinate on the wire; the default.
+    #[default]
+    F32,
+    /// 8 bytes per coordinate on the wire; high-precision mode.
+    F64,
+}
+
+impl Dtype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        }
+    }
+
+    /// Wire bytes per coordinate.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Dtype, String> {
+        match s {
+            "f32" | "float" | "single" => Ok(Dtype::F32),
+            "f64" | "double" => Ok(Dtype::F64),
+            _ => Err(format!("unknown dtype: {s} (expected \"f32\" or \"f64\")")),
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+}
+
+/// Payload scalar: the element type of everything that crosses the wire
+/// or sits in per-node numeric state.  Sealed; implemented by `f32` and
+/// `f64` only.
+///
+/// Contract notes (load-bearing for bit-identity, see docs/DTYPE.md):
+///
+/// * All conversions (`from_f64`, `from_i16`, …) are single native
+///   casts — generic code written as `S::from_f64(x)` produces exactly
+///   the same bits the historical `x as f32` sites did.
+/// * Math methods (`abs`, `sqrt`, `exp`, …) forward to the native float
+///   method of the same name, never to a widened `f64` round-trip, so
+///   the `f32` path's last-ulp behaviour is unchanged by the refactor.
+/// * Reductions are *not* part of this trait: dot products and norms
+///   accumulate in `f64` for both dtypes (see [`crate::linalg::kernels`]).
+pub trait Scalar:
+    private::Sealed
+    + Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + std::ops::DivAssign
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Machine epsilon of the concrete type.
+    const EPSILON: Self;
+    const NEG_INFINITY: Self;
+    /// Wire bytes per coordinate (4 / 8); must agree with [`Dtype::bytes`].
+    const BYTES: usize;
+    /// The erased runtime tag for this type.
+    const DTYPE: Dtype;
+    /// Added to the payload-kind byte to form the wire tag
+    /// (`0` for f32 → tags 0..=3, `4` for f64 → tags 4..=7); see
+    /// [`crate::compress::message`].
+    const WIRE_OFFSET: u8;
+    /// Human name, matching [`Dtype::name`].
+    const NAME: &'static str;
+    /// Default relative tolerance when comparing a run in this dtype
+    /// against an f64 reference (the docs/DTYPE.md envelope policy).
+    const REL_TOL: f64;
+
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn from_i16(x: i16) -> Self;
+    fn from_u32(x: u32) -> Self;
+    fn from_usize(x: usize) -> Self;
+
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn floor(self) -> Self;
+    fn signum(self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn min(self, other: Self) -> Self;
+    fn is_finite(self) -> bool;
+
+    /// Append the little-endian wire encoding (`Self::BYTES` bytes).
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Decode from exactly `Self::BYTES` little-endian bytes; `None` on a
+    /// wrong-length slice (hostile input — never panics).
+    fn read_le(bytes: &[u8]) -> Option<Self>;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f32::EPSILON;
+    const NEG_INFINITY: Self = f32::NEG_INFINITY;
+    const BYTES: usize = 4;
+    const DTYPE: Dtype = Dtype::F32;
+    const WIRE_OFFSET: u8 = 0;
+    const NAME: &'static str = "f32";
+    const REL_TOL: f64 = 1e-3;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn from_i16(x: i16) -> Self {
+        x as f32
+    }
+
+    #[inline(always)]
+    fn from_u32(x: u32) -> Self {
+        x as f32
+    }
+
+    #[inline(always)]
+    fn from_usize(x: usize) -> Self {
+        x as f32
+    }
+
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f32::exp(self)
+    }
+
+    #[inline(always)]
+    fn ln(self) -> Self {
+        f32::ln(self)
+    }
+
+    #[inline(always)]
+    fn powi(self, n: i32) -> Self {
+        f32::powi(self, n)
+    }
+
+    #[inline(always)]
+    fn floor(self) -> Self {
+        f32::floor(self)
+    }
+
+    #[inline(always)]
+    fn signum(self) -> Self {
+        f32::signum(self)
+    }
+
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+
+    #[inline(always)]
+    fn min(self, other: Self) -> Self {
+        f32::min(self, other)
+    }
+
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+
+    #[inline(always)]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+
+    #[inline(always)]
+    fn read_le(bytes: &[u8]) -> Option<Self> {
+        let b: [u8; 4] = bytes.try_into().ok()?;
+        Some(f32::from_bits(u32::from_le_bytes(b)))
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f64::EPSILON;
+    const NEG_INFINITY: Self = f64::NEG_INFINITY;
+    const BYTES: usize = 8;
+    const DTYPE: Dtype = Dtype::F64;
+    const WIRE_OFFSET: u8 = 4;
+    const NAME: &'static str = "f64";
+    const REL_TOL: f64 = 1e-9;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    fn from_i16(x: i16) -> Self {
+        x as f64
+    }
+
+    #[inline(always)]
+    fn from_u32(x: u32) -> Self {
+        x as f64
+    }
+
+    #[inline(always)]
+    fn from_usize(x: usize) -> Self {
+        x as f64
+    }
+
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f64::exp(self)
+    }
+
+    #[inline(always)]
+    fn ln(self) -> Self {
+        f64::ln(self)
+    }
+
+    #[inline(always)]
+    fn powi(self, n: i32) -> Self {
+        f64::powi(self, n)
+    }
+
+    #[inline(always)]
+    fn floor(self) -> Self {
+        f64::floor(self)
+    }
+
+    #[inline(always)]
+    fn signum(self) -> Self {
+        f64::signum(self)
+    }
+
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+
+    #[inline(always)]
+    fn min(self, other: Self) -> Self {
+        f64::min(self, other)
+    }
+
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+
+    #[inline(always)]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+
+    #[inline(always)]
+    fn read_le(bytes: &[u8]) -> Option<Self> {
+        let b: [u8; 8] = bytes.try_into().ok()?;
+        Some(f64::from_bits(u64::from_le_bytes(b)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_and_names() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("f64").unwrap(), Dtype::F64);
+        assert_eq!(Dtype::parse("double").unwrap(), Dtype::F64);
+        assert!(Dtype::parse("f16").is_err());
+        assert_eq!(Dtype::F32.name(), "f32");
+        assert_eq!(Dtype::default(), Dtype::F32, "f32 is the bit-identity default");
+        assert_eq!(Dtype::F32.bytes(), <f32 as Scalar>::BYTES);
+        assert_eq!(Dtype::F64.bytes(), <f64 as Scalar>::BYTES);
+    }
+
+    #[test]
+    fn casts_match_native() {
+        // The whole bit-identity argument rests on these being single
+        // native casts.
+        assert_eq!(<f32 as Scalar>::from_f64(0.1), 0.1f64 as f32);
+        assert_eq!(<f32 as Scalar>::from_i16(-321), -321.0f32);
+        assert_eq!(<f32 as Scalar>::from_usize(7), 7.0f32);
+        assert_eq!(<f64 as Scalar>::from_f64(0.1), 0.1);
+        assert_eq!(1.5f32.to_f64(), 1.5f64);
+    }
+
+    #[test]
+    fn wire_roundtrip_both_dtypes() {
+        fn check<S: Scalar>(vals: &[f64]) {
+            for &x in vals {
+                let s = S::from_f64(x);
+                let mut b = Vec::new();
+                s.write_le(&mut b);
+                assert_eq!(b.len(), S::BYTES);
+                assert_eq!(S::read_le(&b), Some(s));
+            }
+            assert_eq!(S::read_le(&[0u8; 3]), None, "wrong length must be clean");
+        }
+        check::<f32>(&[0.0, -1.5, 1e30, 0.1]);
+        check::<f64>(&[0.0, -1.5, 1e300, 0.1]);
+    }
+
+    #[test]
+    fn wire_offsets_partition_the_tag_space() {
+        assert_eq!(<f32 as Scalar>::WIRE_OFFSET, 0);
+        assert_eq!(<f64 as Scalar>::WIRE_OFFSET, 4);
+    }
+}

@@ -41,7 +41,8 @@ const USAGE: &str = "usage: c2dfb <run|sweep|scale|table1|fig2|fig3|fig4|fig5|fi
             printed separately)  --quiet (errors only)  --verbose
   run options: --config <file.toml> plus any config key as --key value
                (e.g. --algo mdbo --topology er:0.4 --partition het:0.8
-                --rounds 100 --compressor topk:0.2 --lambda 10)
+                --rounds 100 --compressor topk:0.2 --lambda 10
+                --dtype f32|f64, payload precision; docs/DTYPE.md)
                network keys: --network sync|sim  --latency S  --jitter S
                 --bandwidth B/s  --drop_rate P  --straggler FRAC:DELAY
                 --topology_schedule R:TOPO,...  --threads N
@@ -53,7 +54,8 @@ const USAGE: &str = "usage: c2dfb <run|sweep|scale|table1|fig2|fig3|fig4|fig5|fi
   sweep options (declarative scenario grid, executed concurrently; see
             docs/SWEEP.md): --config <file.toml> with a [sweep] table, or
             axis lists --algos --tasks --topologies --compressors
-            --partitions --engines --stops (comma-separated), base knobs
+            --partitions --engines --stops --dtypes --sampling_rates
+            --generators (comma-separated), base knobs
             --nodes --rounds --seed --eval_every --out, --jobs N (cell
             parallelism, 0 = all cores), --calibrate true|false,
             --verify (prove N-way-parallel ≡ serial bit-identity; implied
@@ -67,10 +69,11 @@ const USAGE: &str = "usage: c2dfb <run|sweep|scale|table1|fig2|fig3|fig4|fig5|fi
             --rounds N  --rate P (per-round node sampling, (0,1])
             --dim D  --seed S  --eta X  --gamma X
             --consensus auto|auto:N|exact|strided:K  --out report.json
-  netsweep: C²DFB vs baselines across network regimes (no artifacts needed)
+  netsweep: C²DFB vs baselines across network regimes (no artifacts needed);
+            --dtype f32|f64 selects the payload precision
   budget:   all four algorithms to one communication budget (--budget_mb MB,
-            --task quadratic|logreg|hyperrep, no artifacts needed); prints
-            comm/oracles/loss + stop reason
+            --task quadratic|logreg|hyperrep, --dtype f32|f64, no artifacts
+            needed); prints comm/oracles/loss + stop reason
   goldens:  replay the 4 algo x 3 task x 2 topology x 2 engine golden-trace
             matrix against rust/goldens/*.json (drift fails; missing files
             are bootstrapped); --bless regenerates the fixtures, --dir D
@@ -154,7 +157,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
         "bandwidth", "drop_rate", "straggler", "topology_schedule", "threads",
         "stop_comm_mb", "stop_first_order", "stop_wall_secs", "stop_sim_secs",
         "stop_target_accuracy", "stop_rounds", "trace", "sample_rate", "generator",
-        "consensus_estimator",
+        "consensus_estimator", "dtype",
     ] {
         if let Some(v) = args.get(key) {
             // Ints/floats/strings: try int, then float, then string.
@@ -256,6 +259,13 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
             spec.apply_one(key, &tv).map_err(anyhow::Error::msg)?;
         }
     }
+    // Scale/width axes take value lists verbatim ("0.5,1" would otherwise
+    // be misparsed as a number by the loop above).
+    for key in ["dtypes", "dtype", "sampling_rates", "sampling_rate", "generators", "generator"] {
+        if let Some(v) = args.get(key) {
+            spec.apply_one(key, &TomlValue::Str(v)).map_err(anyhow::Error::msg)?;
+        }
+    }
     let verify = args.flag("verify") || tiny;
     let verbose = args.flag("verbose");
     let trace_path = args.get("trace");
@@ -327,14 +337,12 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         // changes.  diff_outcomes also compares the per-cell JSONL
         // trace chunks, so a --trace run proves the trace bytes are
         // width-independent too.
-        let tasks: Vec<&(dyn c2dfb::tasks::BilevelTask + Sync)> =
-            grid.tasks.iter().map(|t| t.as_ref()).collect();
         let sopts = sweep::ExecOpts {
             jobs: 1,
             console: c2dfb::obs::Console::quiet(),
             ..eopts
         };
-        let soutcomes = sweep::run_cells_with(&grid.cells, &tasks, None, &sopts);
+        let soutcomes = sweep::run_cells_slots(&grid.cells, &grid.slots(), None, &sopts);
         if let Some(d) = sweep::diff_outcomes(&outcomes, &soutcomes) {
             anyhow::bail!("parallel execution diverged from serial: {d}");
         }
@@ -546,6 +554,8 @@ fn cmd_scale(mut args: Args) -> Result<()> {
 
 fn cmd_netsweep(mut args: Args) -> Result<()> {
     let tiny = args.flag("tiny");
+    let dtype = c2dfb::linalg::Dtype::parse(&args.get_or("dtype", "f32"))
+        .map_err(anyhow::Error::msg)?;
     let opts = experiments::HarnessOpts {
         rounds: args.get_parse("rounds", if tiny { 12 } else { 60 }),
         out_dir: args.get_or("out", "runs"),
@@ -555,6 +565,7 @@ fn cmd_netsweep(mut args: Args) -> Result<()> {
         trace: args.get("trace"),
         profile: args.flag("profile"),
         jobs: args.get_parse("jobs", 1usize),
+        dtype,
         ..Default::default()
     };
     args.finish().map_err(anyhow::Error::msg)?;
@@ -571,6 +582,8 @@ fn cmd_budget(mut args: Args) -> Result<()> {
     let tiny = args.flag("tiny");
     let budget_mb: f64 = args.get_parse("budget_mb", if tiny { 0.75 } else { 8.0 });
     let task_spec = args.get_or("task", "quadratic");
+    let dtype = c2dfb::linalg::Dtype::parse(&args.get_or("dtype", "f32"))
+        .map_err(anyhow::Error::msg)?;
     let opts = experiments::HarnessOpts {
         // A generous non-progress guard; the comm budget should fire first.
         rounds: args.get_parse("rounds", if tiny { 200 } else { 600 }),
@@ -581,6 +594,7 @@ fn cmd_budget(mut args: Args) -> Result<()> {
         trace: args.get("trace"),
         profile: args.flag("profile"),
         jobs: args.get_parse("jobs", 1usize),
+        dtype,
         ..Default::default()
     };
     args.finish().map_err(anyhow::Error::msg)?;

@@ -16,7 +16,7 @@
 //!   existed before this knob (m ≤ 4096) keeps byte-stable traces.
 //! * As the stride shrinks toward 1 the estimate converges to exact.
 
-use crate::linalg;
+use crate::linalg::{self, Scalar};
 
 /// Node count at or below which `auto` stays exact.  Every golden config
 /// sits far under this, so the default estimator never perturbs them.
@@ -83,7 +83,9 @@ impl ConsensusEstimator {
     }
 
     /// Evaluate (or estimate) Σ_i ‖x_i − x̄‖² over the stacked rows.
-    pub fn estimate(&self, rows: &[Vec<f32>]) -> f64 {
+    /// Generic over the payload [`Scalar`]; the reduction itself is always
+    /// f64, so at `S = f32` this is byte-for-byte the historical path.
+    pub fn estimate<S: Scalar>(&self, rows: &[Vec<S>]) -> f64 {
         let m = rows.len();
         match *self {
             ConsensusEstimator::Exact => linalg::consensus_err_sq(rows),
@@ -122,16 +124,16 @@ impl ConsensusEstimator {
     /// stride 1 materializes everything and calls the same exact
     /// function; stride > 1 picks the same subset and runs the same f64
     /// reduction.
-    pub fn estimate_sampled(
+    pub fn estimate_sampled<S: Scalar>(
         &self,
         m: usize,
         d: usize,
-        mut fill: impl FnMut(usize, &mut [f32]),
+        mut fill: impl FnMut(usize, &mut [S]),
     ) -> f64 {
         let stride = self.stride_for(m);
-        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(m.div_ceil(stride));
+        let mut rows: Vec<Vec<S>> = Vec::with_capacity(m.div_ceil(stride));
         for i in (0..m).step_by(stride) {
-            let mut r = vec![0.0f32; d];
+            let mut r = vec![S::ZERO; d];
             fill(i, &mut r);
             rows.push(r);
         }
@@ -146,12 +148,12 @@ impl ConsensusEstimator {
 /// Strided estimate: subset = rows {0, stride, 2·stride, …}, measured
 /// against the subset mean, scaled by m / |subset|.  `stride == 1` is
 /// exactly `linalg::consensus_err_sq` — same call, same bits.
-fn strided_err_sq(rows: &[Vec<f32>], stride: usize) -> f64 {
+fn strided_err_sq<S: Scalar>(rows: &[Vec<S>], stride: usize) -> f64 {
     assert!(stride >= 1, "stride must be >= 1");
     if stride == 1 {
         return linalg::consensus_err_sq(rows);
     }
-    let picked: Vec<&Vec<f32>> = rows.iter().step_by(stride).collect();
+    let picked: Vec<&Vec<S>> = rows.iter().step_by(stride).collect();
     subset_scaled_err_sq(&picked, rows.len())
 }
 
@@ -159,13 +161,13 @@ fn strided_err_sq(rows: &[Vec<f32>], stride: usize) -> f64 {
 /// f64 mean, subset sum scaled by m / |subset|.  One implementation so
 /// the materialized ([`strided_err_sq`]) and lazy
 /// ([`ConsensusEstimator::estimate_sampled`]) paths agree bitwise.
-fn subset_scaled_err_sq<R: AsRef<[f32]>>(picked: &[R], m: usize) -> f64 {
+fn subset_scaled_err_sq<S: Scalar, R: AsRef<[S]>>(picked: &[R], m: usize) -> f64 {
     let n = picked.len();
     let d = picked[0].as_ref().len();
     let mut mean = vec![0.0f64; d];
     for r in picked {
         for (s, x) in mean.iter_mut().zip(r.as_ref()) {
-            *s += *x as f64;
+            *s += x.to_f64();
         }
     }
     for s in &mut mean {
@@ -177,7 +179,7 @@ fn subset_scaled_err_sq<R: AsRef<[f32]>>(picked: &[R], m: usize) -> f64 {
             r.as_ref()
                 .iter()
                 .zip(&mean)
-                .map(|(a, b)| (*a as f64 - b).powi(2))
+                .map(|(a, b)| (a.to_f64() - b).powi(2))
                 .sum::<f64>()
         })
         .sum();

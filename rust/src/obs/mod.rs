@@ -612,7 +612,7 @@ impl Recorder {
 
     /// Count compressor encodes: one per message, with the payload kind
     /// and a log₂ wire-byte histogram.
-    pub fn encoded(&self, msgs: &[Compressed]) {
+    pub fn encoded<S: crate::linalg::Scalar>(&self, msgs: &[Compressed<S>]) {
         let Some(rc) = &self.inner else { return };
         let mut g = rc.borrow_mut();
         for msg in msgs {

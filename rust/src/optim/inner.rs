@@ -9,11 +9,13 @@
 //!   directly with local error feedback (classic error accumulation), no
 //!   reference points.
 //!
-//! Both are generic over [`Transport`] and consume what the transport
-//! *actually delivered*: on the synchronous engine that is every
-//! neighbour's message (identical to the original lockstep formulation);
-//! on the event engine, lost messages simply never reach the reference
-//! points — the exact failure mode a real deployment would see.
+//! Both are generic over [`Transport`] and over the payload [`Scalar`]
+//! `S` (`f32` wire default, `f64` high precision — docs/DTYPE.md), and
+//! consume what the transport *actually delivered*: on the synchronous
+//! engine that is every neighbour's message (identical to the original
+//! lockstep formulation); on the event engine, lost messages simply never
+//! reach the reference points — the exact failure mode a real deployment
+//! would see.
 //!
 //! **This is the communication hot path and it is allocation-free in
 //! steady state.**  Every buffer a step needs — residual scratch, the
@@ -26,6 +28,8 @@
 //! step with a serial in-place oracle; the pool-parallel oracle path
 //! stages rows through the thread pool and is not allocation-free —
 //! there, task-oracle allocations and thread fan-out dominate anyway).
+//! The dense folds themselves (descent, gradient-difference, weighted
+//! mixing) all run through [`crate::linalg::kernels`].
 //!
 //! Weight/epoch consistency: neighbour folds must use the mixing weights
 //! the messages were *sent* under.  A topology schedule can tick in the
@@ -46,6 +50,8 @@
 
 use crate::collective::Transport;
 use crate::compress::{Compressed, Compressor};
+use crate::linalg::kernels;
+use crate::linalg::scalar::Scalar;
 use crate::linalg::NodeBlock;
 use crate::obs::{LedgerSnap, Phase, Recorder};
 use crate::optim::refpoint::RefPoint;
@@ -65,21 +71,21 @@ pub struct InnerConfig {
 /// serial path is allocation-free end to end; the parallel path stages
 /// per-node rows through the pool (those sends allocate — oracle latency
 /// dominates there anyway).
-pub enum GradFn<'f> {
+pub enum GradFn<'f, S: Scalar = f32> {
     /// One shared mutable closure, evaluated node by node into the batch.
-    Serial(&'f mut dyn FnMut(usize, &[f32], &mut [f32])),
+    Serial(&'f mut dyn FnMut(usize, &[S], &mut [S])),
     /// A shareable closure fanned out over a [`NodePool`]; results land in
     /// node order, so the maths is identical to `Serial`.
-    Parallel(&'f (dyn Fn(usize, &[f32], &mut [f32]) + Sync), &'f NodePool),
+    Parallel(&'f (dyn Fn(usize, &[S], &mut [S]) + Sync), &'f NodePool),
 }
 
-impl GradFn<'_> {
+impl<S: Scalar> GradFn<'_, S> {
     /// Evaluate the oracle only at mask-active nodes (rows of inactive
     /// nodes are left untouched — callers must not read them).  The masked
     /// path is always serial: a sampled round evaluates few nodes, so pool
     /// fan-out overhead would dominate, and skipping pool sends keeps the
     /// active nodes' evaluation order identical to `Serial`.
-    fn eval_active(&mut self, d: &[Vec<f32>], out: &mut NodeBlock, mask: Option<&[bool]>) {
+    fn eval_active(&mut self, d: &[Vec<S>], out: &mut NodeBlock<S>, mask: Option<&[bool]>) {
         let Some(mask) = mask else {
             return self.eval_all(d, out);
         };
@@ -103,7 +109,7 @@ impl GradFn<'_> {
     }
 
     /// Evaluate the oracle at every node's current iterate, into `out`.
-    fn eval_all(&mut self, d: &[Vec<f32>], out: &mut NodeBlock) {
+    fn eval_all(&mut self, d: &[Vec<S>], out: &mut NodeBlock<S>) {
         debug_assert_eq!(d.len(), out.nrows());
         match self {
             GradFn::Serial(f) => {
@@ -115,10 +121,10 @@ impl GradFn<'_> {
                 // Copy the shared-closure reference out of the &mut match
                 // binding so the spawned closure captures a plain
                 // `&(dyn Fn + Sync)`.
-                let f: &(dyn Fn(usize, &[f32], &mut [f32]) + Sync) = *f;
+                let f: &(dyn Fn(usize, &[S], &mut [S]) + Sync) = *f;
                 let dim = out.dim();
                 let rows = pool.map(d.len(), |i| {
-                    let mut row = vec![0.0f32; dim];
+                    let mut row = vec![S::ZERO; dim];
                     f(i, &d[i], &mut row);
                     row
                 });
@@ -132,19 +138,19 @@ impl GradFn<'_> {
 
 /// Per-variable persistent inner-loop state across outer rounds, plus all
 /// steady-state scratch the hot loop reuses.
-pub struct InnerState {
+pub struct InnerState<S: Scalar = f32> {
     /// Model reference points (d̂, (d̂)_w) per node.
-    pub d_ref: Vec<RefPoint>,
+    pub d_ref: Vec<RefPoint<S>>,
     /// Tracker values s_i per node (contiguous m×d).
-    pub s: NodeBlock,
+    pub s: NodeBlock<S>,
     /// Tracker reference points (ŝ, (ŝ)_w) per node.
-    pub s_ref: Vec<RefPoint>,
+    pub s_ref: Vec<RefPoint<S>>,
     /// Gradient folded into the tracker last (∇r_i^k), contiguous m×d.
-    pub prev_grad: NodeBlock,
+    pub prev_grad: NodeBlock<S>,
     initialized: bool,
     /// Naive-variant error-feedback accumulators (e_i) for d and s.
-    err_d: NodeBlock,
-    err_s: NodeBlock,
+    err_d: NodeBlock<S>,
+    err_s: NodeBlock<S>,
     /// Transport graph epoch the reference points were built against.
     epoch: u64,
     /// Telemetry recorder; defaults to the no-op recorder (one branch per
@@ -156,27 +162,27 @@ pub struct InnerState {
     steps: u64,
     // ---- reused per-step scratch (never reallocated in steady state) ----
     /// One compressed-message slot per node (payload buffers reused).
-    msgs: Vec<Compressed>,
+    msgs: Vec<Compressed<S>>,
     /// Wire sizes of the current message set.
     bytes: Vec<usize>,
     /// Delivered-sender lists from the last exchange.
     delivered: Vec<Vec<usize>>,
     /// Dense residual / error-feedback carry scratch (one row).
-    resid: Vec<f32>,
+    resid: Vec<S>,
     /// Fresh gradient batch ∇r^{k+1} (swapped into `prev_grad`).
-    g_new: NodeBlock,
+    g_new: NodeBlock<S>,
     /// Naive variant only: densified own messages Q_i, contiguous m×d.
     /// Empty until the first `run_inner_naive_with` call sizes it, so the
     /// reference-point path never pays for it.
-    own: NodeBlock,
+    own: NodeBlock<S>,
     /// Sampling-mask snapshot buffer (copied from the transport at the top
     /// of each inner call so the mask cannot shift mid-call; reused, so
     /// the masked path stays allocation-free in steady state too).
     mask_buf: Vec<bool>,
 }
 
-impl InnerState {
-    pub fn new<T: Transport>(net: &T, dim: usize) -> InnerState {
+impl<S: Scalar> InnerState<S> {
+    pub fn new<T: Transport>(net: &T, dim: usize) -> InnerState<S> {
         let m = net.m();
         let mk_refs = || {
             (0..m)
@@ -235,7 +241,7 @@ impl InnerState {
     /// Tracker bootstrap on the very first call: s_i⁰ = ∇r_i(d_i⁰).  On
     /// warm starts the tracker carries over and self-corrects through the
     /// gradient-difference term.  Returns oracle calls made (0 or m).
-    fn bootstrap(&mut self, d: &[Vec<f32>], grad: &mut GradFn) -> u64 {
+    fn bootstrap(&mut self, d: &[Vec<S>], grad: &mut GradFn<S>) -> u64 {
         if self.initialized {
             return 0;
         }
@@ -285,28 +291,28 @@ fn check_delivered_contract(receiver: usize, delivered: &[usize]) {
 /// is the local first-order oracle ∇r_i.  Communication (two compressed
 /// messages per node per step) is paid through `net`.  Returns the number
 /// of oracle calls made.
-pub fn run_inner<T: Transport>(
+pub fn run_inner<S: Scalar, T: Transport>(
     cfg: &InnerConfig,
     net: &mut T,
-    compressor: &dyn Compressor,
+    compressor: &dyn Compressor<S>,
     rng: &mut Rng,
-    state: &mut InnerState,
-    d: &mut [Vec<f32>],
-    mut grad: impl FnMut(usize, &[f32]) -> Vec<f32>,
+    state: &mut InnerState<S>,
+    d: &mut [Vec<S>],
+    mut grad: impl FnMut(usize, &[S]) -> Vec<S>,
 ) -> u64 {
-    let mut g = |i: usize, di: &[f32], out: &mut [f32]| out.copy_from_slice(&grad(i, di));
+    let mut g = |i: usize, di: &[S], out: &mut [S]| out.copy_from_slice(&grad(i, di));
     run_inner_with(cfg, net, compressor, rng, state, d, GradFn::Serial(&mut g))
 }
 
 /// [`run_inner`] with an explicit (possibly parallel) in-place oracle.
-pub fn run_inner_with<T: Transport>(
+pub fn run_inner_with<S: Scalar, T: Transport>(
     cfg: &InnerConfig,
     net: &mut T,
-    compressor: &dyn Compressor,
+    compressor: &dyn Compressor<S>,
     rng: &mut Rng,
-    state: &mut InnerState,
-    d: &mut [Vec<f32>],
-    mut grad: GradFn,
+    state: &mut InnerState<S>,
+    d: &mut [Vec<S>],
+    mut grad: GradFn<S>,
 ) -> u64 {
     let m = net.m();
     debug_assert_eq!(d.len(), m);
@@ -334,8 +340,8 @@ pub fn run_inner_with<T: Transport>(
     };
     let mut calls = state.bootstrap(d, &mut grad);
 
-    let eta = cfg.eta as f32;
-    let gamma = cfg.gamma as f32;
+    let eta = S::from_f64(cfg.eta);
+    let gamma = S::from_f64(cfg.gamma);
 
     for _k in 0..cfg.k_steps {
         // A topology switch between steps invalidates the reference
@@ -351,9 +357,7 @@ pub fn run_inner_with<T: Transport>(
                 continue;
             }
             state.d_ref[i].add_mix_term(gamma, di);
-            for (dk, sk) in di.iter_mut().zip(state.s.row(i)) {
-                *dk -= eta * sk;
-            }
+            kernels::descent(eta, state.s.row(i), di);
         }
         state.obs.phase(Phase::Mix, 0, t);
         // -- 2. transmit Q(d_new − d̂); update d̂, then fold each DELIVERED
@@ -434,15 +438,7 @@ pub fn run_inner_with<T: Transport>(
             if masked && !mask_store[i] {
                 continue;
             }
-            for ((sk, gn), go) in state
-                .s
-                .row_mut(i)
-                .iter_mut()
-                .zip(state.g_new.row(i))
-                .zip(state.prev_grad.row(i))
-            {
-                *sk += gn - go;
-            }
+            kernels::add_diff(state.g_new.row(i), state.prev_grad.row(i), state.s.row_mut(i));
         }
         if masked {
             // Only active rows of `g_new` are fresh; a wholesale swap would
@@ -519,29 +515,29 @@ pub fn run_inner_with<T: Transport>(
 /// message count/sizes as [`run_inner`] but errors accumulate locally
 /// instead of being implicitly shared — the paper's Fig. 3 shows this is
 /// slower and less stable.  Returns the number of oracle calls made.
-pub fn run_inner_naive<T: Transport>(
+pub fn run_inner_naive<S: Scalar, T: Transport>(
     cfg: &InnerConfig,
     net: &mut T,
-    compressor: &dyn Compressor,
+    compressor: &dyn Compressor<S>,
     rng: &mut Rng,
-    state: &mut InnerState,
-    d: &mut [Vec<f32>],
-    mut grad: impl FnMut(usize, &[f32]) -> Vec<f32>,
+    state: &mut InnerState<S>,
+    d: &mut [Vec<S>],
+    mut grad: impl FnMut(usize, &[S]) -> Vec<S>,
 ) -> u64 {
-    let mut g = |i: usize, di: &[f32], out: &mut [f32]| out.copy_from_slice(&grad(i, di));
+    let mut g = |i: usize, di: &[S], out: &mut [S]| out.copy_from_slice(&grad(i, di));
     run_inner_naive_with(cfg, net, compressor, rng, state, d, GradFn::Serial(&mut g))
 }
 
 /// [`run_inner_naive`] with an explicit (possibly parallel) in-place
 /// oracle.
-pub fn run_inner_naive_with<T: Transport>(
+pub fn run_inner_naive_with<S: Scalar, T: Transport>(
     cfg: &InnerConfig,
     net: &mut T,
-    compressor: &dyn Compressor,
+    compressor: &dyn Compressor<S>,
     rng: &mut Rng,
-    state: &mut InnerState,
-    d: &mut [Vec<f32>],
-    mut grad: GradFn,
+    state: &mut InnerState<S>,
+    d: &mut [Vec<S>],
+    mut grad: GradFn<S>,
 ) -> u64 {
     let m = net.m();
     // Mask semantics for the naive variant are simpler than the refpoint
@@ -565,8 +561,8 @@ pub fn run_inner_naive_with<T: Transport>(
         m as u64
     };
     let mut calls = state.bootstrap(d, &mut grad);
-    let eta = cfg.eta as f32;
-    let gamma = cfg.gamma as f32;
+    let eta = S::from_f64(cfg.eta);
+    let gamma = S::from_f64(cfg.gamma);
     // Size the naive-only dense-message block on first use (no-op and
     // allocation-free afterwards; contents are fully overwritten below).
     state.own.reset(m, state.g_new.dim());
@@ -579,20 +575,11 @@ pub fn run_inner_naive_with<T: Transport>(
                 continue;
             }
             state.resid.clear();
-            state
-                .resid
-                .extend(di.iter().zip(state.err_d.row(i)).map(|(a, e)| a + e));
+            state.resid.extend_from_slice(di);
+            kernels::add_assign(&mut state.resid, state.err_d.row(i));
             compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
             state.msgs[i].decompress_into(state.own.row_mut(i));
-            for ((e, c), q) in state
-                .err_d
-                .row_mut(i)
-                .iter_mut()
-                .zip(&state.resid)
-                .zip(state.own.row(i))
-            {
-                *e = c - q;
-            }
+            kernels::sub(&state.resid, state.own.row(i), state.err_d.row_mut(i));
         }
         state.bytes.clear();
         if masked {
@@ -632,17 +619,11 @@ pub fn run_inner_naive_with<T: Transport>(
             if fold {
                 check_delivered_contract(i, &state.delivered[i]);
                 for &sender in &state.delivered[i] {
-                    let w = (gamma as f64 * net.weight(i, sender)) as f32;
-                    let qd = state.own.row(sender);
-                    let qi = state.own.row(i);
-                    for (k, dk) in di.iter_mut().enumerate() {
-                        *dk += w * (qd[k] - qi[k]);
-                    }
+                    let w = S::from_f64(gamma.to_f64() * net.weight(i, sender));
+                    kernels::weighted_diff_add(w, state.own.row(sender), state.own.row(i), di);
                 }
             }
-            for (dk, sk) in di.iter_mut().zip(state.s.row(i)) {
-                *dk -= eta * sk;
-            }
+            kernels::descent(eta, state.s.row(i), di);
         }
         state.obs.phase(Phase::Mix, 0, t);
         // Tracker: same naive scheme on s.
@@ -652,20 +633,11 @@ pub fn run_inner_naive_with<T: Transport>(
                 continue;
             }
             state.resid.clear();
-            state
-                .resid
-                .extend(state.s.row(i).iter().zip(state.err_s.row(i)).map(|(a, e)| a + e));
+            state.resid.extend_from_slice(state.s.row(i));
+            kernels::add_assign(&mut state.resid, state.err_s.row(i));
             compressor.compress_into(&state.resid, &mut state.msgs[i], rng);
             state.msgs[i].decompress_into(state.own.row_mut(i));
-            for ((e, c), q) in state
-                .err_s
-                .row_mut(i)
-                .iter_mut()
-                .zip(&state.resid)
-                .zip(state.own.row(i))
-            {
-                *e = c - q;
-            }
+            kernels::sub(&state.resid, state.own.row(i), state.err_s.row_mut(i));
         }
         state.bytes.clear();
         if masked {
@@ -700,12 +672,9 @@ pub fn run_inner_naive_with<T: Transport>(
                 }
                 check_delivered_contract(i, &state.delivered[i]);
                 for &sender in &state.delivered[i] {
-                    let w = (gamma as f64 * net.weight(i, sender)) as f32;
-                    let qd = state.own.row(sender);
-                    let qi = state.own.row(i);
-                    for (k, sk) in state.s.row_mut(i).iter_mut().enumerate() {
-                        *sk += w * (qd[k] - qi[k]);
-                    }
+                    let w = S::from_f64(gamma.to_f64() * net.weight(i, sender));
+                    let (own, s) = (&state.own, &mut state.s);
+                    kernels::weighted_diff_add(w, own.row(sender), own.row(i), s.row_mut(i));
                 }
             }
         }
@@ -719,15 +688,7 @@ pub fn run_inner_naive_with<T: Transport>(
             if masked && !mask_store[i] {
                 continue;
             }
-            for ((sk, gn), go) in state
-                .s
-                .row_mut(i)
-                .iter_mut()
-                .zip(state.g_new.row(i))
-                .zip(state.prev_grad.row(i))
-            {
-                *sk += gn - go;
-            }
+            kernels::add_diff(state.g_new.row(i), state.prev_grad.row(i), state.s.row_mut(i));
         }
         if masked {
             for i in 0..m {
@@ -835,6 +796,42 @@ mod tests {
         let (err, cons) = run(&TopK::new(0.25), 800, false);
         assert!(err < 1e-4, "optimality err {err}");
         assert!(cons < 1e-4, "consensus err {cons}");
+    }
+
+    /// The full protocol is dtype-generic: at f64 the same quadratic
+    /// setup converges well past the f32 noise floor.
+    #[test]
+    fn converges_at_f64() {
+        let m = 6;
+        let dim = 8;
+        let q32 = Quad::build(m, dim, 42);
+        let a: Vec<f64> = q32.a.iter().map(|&x| x as f64).collect();
+        let c: Vec<Vec<f64>> = q32
+            .c
+            .iter()
+            .map(|r| r.iter().map(|&x| x as f64).collect())
+            .collect();
+        let mut net = Network::new(Graph::build(Topology::Ring, m));
+        let mut rng = Rng::new(7);
+        let cfg = InnerConfig { eta: 0.15, gamma: 0.6, k_steps: 800 };
+        let mut state = InnerState::<f64>::new(&net, dim);
+        let mut d = vec![vec![0.0f64; dim]; m];
+        let g = |i: usize, di: &[f64]| -> Vec<f64> {
+            di.iter().zip(&c[i]).map(|(x, ci)| a[i] * (x - ci)).collect()
+        };
+        run_inner(&cfg, &mut net, &TopK::new(0.25), &mut rng, &mut state, &mut d, g);
+        let asum: f64 = a.iter().sum();
+        let mut opt = vec![0.0f64; dim];
+        for i in 0..m {
+            for k in 0..dim {
+                opt[k] += a[i] * c[i][k] / asum;
+            }
+        }
+        let err: f64 = d
+            .iter()
+            .map(|di| di.iter().zip(&opt).map(|(x, o)| (x - o).powi(2)).sum::<f64>())
+            .sum();
+        assert!(err < 1e-10, "f64 optimality err {err}");
     }
 
     /// Theorem 1 shape: error after 2K steps ≪ error after K steps
@@ -1200,10 +1197,10 @@ mod tests {
             fn ledger(&self) -> &CommLedger {
                 &self.0.ledger
             }
-            fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+            fn exchange<S: Scalar>(&mut self, msgs: Vec<Compressed<S>>) -> Inbox<Compressed<S>> {
                 self.0.exchange(msgs)
             }
-            fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
+            fn exchange_dense<S: Scalar>(&mut self, vecs: &[Vec<S>]) -> Inbox<Vec<S>> {
                 self.0.exchange_dense(vecs)
             }
             fn exchange_indices(&mut self, bytes: &[usize], delivered: &mut Vec<Vec<usize>>) {

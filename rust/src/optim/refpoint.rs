@@ -14,38 +14,40 @@
 //! sides, `(d̂_i)_w` stays exactly consistent with Σ w_ij d̂_j (the paper's
 //! key invariant), and the global average follows the uncompressed
 //! dynamics (Eq. 7).
+//!
+//! Generic over the payload [`Scalar`] `S`; the dense folds live in
+//! [`crate::linalg::kernels`].
 
 use crate::compress::Compressed;
+use crate::linalg::kernels;
+use crate::linalg::scalar::Scalar;
 
 #[derive(Clone, Debug)]
-pub struct RefPoint {
-    pub hat: Vec<f32>,
-    pub hat_w: Vec<f32>,
+pub struct RefPoint<S: Scalar = f32> {
+    pub hat: Vec<S>,
+    pub hat_w: Vec<S>,
     /// Σ_{j∈N_i} w_ij (constant for a fixed topology; = 1 − w_ii).
-    pub neighbor_weight_sum: f32,
+    pub neighbor_weight_sum: S,
 }
 
-impl RefPoint {
-    pub fn new(dim: usize, neighbor_weight_sum: f64) -> RefPoint {
+impl<S: Scalar> RefPoint<S> {
+    pub fn new(dim: usize, neighbor_weight_sum: f64) -> RefPoint<S> {
         RefPoint {
-            hat: vec![0.0; dim],
-            hat_w: vec![0.0; dim],
-            neighbor_weight_sum: neighbor_weight_sum as f32,
+            hat: vec![S::ZERO; dim],
+            hat_w: vec![S::ZERO; dim],
+            neighbor_weight_sum: S::from_f64(neighbor_weight_sum),
         }
     }
 
     /// The consensus mixing term `γ Σ_j w_ij (d̂_j − d̂_i)` evaluated from the
     /// accumulator: `γ (hat_w − sw · hat)`, added onto `out`.
-    pub fn add_mix_term(&self, gamma: f32, out: &mut [f32]) {
+    pub fn add_mix_term(&self, gamma: S, out: &mut [S]) {
         debug_assert_eq!(out.len(), self.hat.len());
-        let sw = self.neighbor_weight_sum;
-        for ((o, hw), h) in out.iter_mut().zip(&self.hat_w).zip(&self.hat) {
-            *o += gamma * (hw - sw * h);
-        }
+        kernels::ref_mix_term(gamma, self.neighbor_weight_sum, &self.hat_w, &self.hat, out);
     }
 
     /// Residual to transmit this step: `d_new − d̂_i` (dense, pre-compression).
-    pub fn residual(&self, d_new: &[f32]) -> Vec<f32> {
+    pub fn residual(&self, d_new: &[S]) -> Vec<S> {
         let mut out = Vec::new();
         self.residual_into(d_new, &mut out);
         out
@@ -53,38 +55,35 @@ impl RefPoint {
 
     /// [`RefPoint::residual`] into a reusable buffer (the hot path;
     /// allocation-free once `out` has capacity).  `out` is overwritten.
-    pub fn residual_into(&self, d_new: &[f32], out: &mut Vec<f32>) {
+    pub fn residual_into(&self, d_new: &[S], out: &mut Vec<S>) {
         debug_assert_eq!(d_new.len(), self.hat.len());
         out.clear();
-        out.extend(d_new.iter().zip(&self.hat).map(|(d, h)| d - h));
+        out.extend(d_new.iter().zip(&self.hat).map(|(&d, &h)| d - h));
     }
 
     /// Reset to zero reference points against a new neighbour weight sum
     /// (topology-epoch resync) without reallocating.
     pub fn reset(&mut self, neighbor_weight_sum: f64) {
-        self.hat.fill(0.0);
-        self.hat_w.fill(0.0);
-        self.neighbor_weight_sum = neighbor_weight_sum as f32;
+        self.hat.fill(S::ZERO);
+        self.hat_w.fill(S::ZERO);
+        self.neighbor_weight_sum = S::from_f64(neighbor_weight_sum);
     }
 
     /// Fold the node's *own* transmitted message into its reference point:
     /// `d̂_i ← d̂_i + Q(residual)`.
-    pub fn apply_own(&mut self, msg: &Compressed) {
+    pub fn apply_own(&mut self, msg: &Compressed<S>) {
         msg.add_into(&mut self.hat);
     }
 
     /// Fold a *neighbour's* message into the weighted accumulator:
     /// `(d̂)_w ← (d̂)_w + w_ij · Q_j`.
-    pub fn apply_neighbor(&mut self, weight: f64, msg: &Compressed) {
-        msg.add_scaled_into(weight as f32, &mut self.hat_w);
+    pub fn apply_neighbor(&mut self, weight: f64, msg: &Compressed<S>) {
+        msg.add_scaled_into(S::from_f64(weight), &mut self.hat_w);
     }
 
     /// Compression error ‖d − d̂‖² (the inner-loop Lyapunov term Ω₁).
-    pub fn compression_err_sq(&self, d: &[f32]) -> f64 {
-        d.iter()
-            .zip(&self.hat)
-            .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
-            .sum()
+    pub fn compression_err_sq(&self, d: &[S]) -> f64 {
+        kernels::dist_sq(d, &self.hat)
     }
 }
 
@@ -103,7 +102,7 @@ mod tests {
         let w = MixingMatrix::metropolis(&g);
         let d = 7;
         let mut rng = Rng::new(1);
-        let mut states: Vec<RefPoint> = (0..5)
+        let mut states: Vec<RefPoint<f32>> = (0..5)
             .map(|i| RefPoint::new(d, 1.0 - w.weight(i, i)))
             .collect();
         // Each node "has" a vector and sends its full residual (Q = id).
@@ -143,7 +142,7 @@ mod tests {
         let d = 13;
         let mut rng = Rng::new(2);
         let q = TopK::new(0.3);
-        let mut states: Vec<RefPoint> = (0..6)
+        let mut states: Vec<RefPoint<f32>> = (0..6)
             .map(|i| RefPoint::new(d, 1.0 - w.weight(i, i)))
             .collect();
         let mut vecs: Vec<Vec<f32>> = (0..6)
@@ -183,6 +182,44 @@ mod tests {
         }
     }
 
+    /// The invariant machinery is dtype-generic: the same protocol holds
+    /// at f64 with a tighter tolerance.
+    #[test]
+    fn invariant_holds_at_f64() {
+        let g = Graph::build(Topology::Ring, 5);
+        let w = MixingMatrix::metropolis(&g);
+        let d = 9;
+        let mut rng = Rng::new(7);
+        let q = TopK::new(0.4);
+        let mut states: Vec<RefPoint<f64>> = (0..5)
+            .map(|i| RefPoint::new(d, 1.0 - w.weight(i, i)))
+            .collect();
+        let vecs: Vec<Vec<f64>> = (0..5)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let msgs: Vec<_> = (0..5)
+            .map(|i| q.compress(&states[i].residual(&vecs[i]), &mut rng))
+            .collect();
+        for i in 0..5 {
+            states[i].apply_own(&msgs[i]);
+        }
+        for i in 0..5 {
+            for &(j, wij) in w.neighbors(i) {
+                states[i].apply_neighbor(wij, &msgs[j]);
+            }
+        }
+        for i in 0..5 {
+            for k in 0..d {
+                let direct: f64 = w
+                    .neighbors(i)
+                    .iter()
+                    .map(|&(j, wij)| wij * states[j].hat[k])
+                    .sum();
+                assert!((states[i].hat_w[k] - direct).abs() < 1e-10);
+            }
+        }
+    }
+
     /// With repeated compression of a FIXED target the reference point
     /// converges to it geometrically (contractive compressor property).
     #[test]
@@ -191,7 +228,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let q = TopK::new(0.2);
         let target: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let mut rp = RefPoint::new(d, 0.5);
+        let mut rp = RefPoint::<f32>::new(d, 0.5);
         let mut prev = f64::INFINITY;
         for _ in 0..60 {
             let msg = q.compress(&rp.residual(&target), &mut rng);
@@ -205,7 +242,7 @@ mod tests {
 
     #[test]
     fn mix_term_zero_at_consensus() {
-        let mut rp = RefPoint::new(4, 0.6);
+        let mut rp = RefPoint::<f32>::new(4, 0.6);
         rp.hat = vec![2.0; 4];
         rp.hat_w = vec![1.2; 4]; // = 0.6 * 2.0 ⇒ neighbours agree
         let mut out = vec![0.0f32; 4];

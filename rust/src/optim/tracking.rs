@@ -9,23 +9,26 @@
 //! gossip mix runs in place through
 //! [`Transport::mix_paid_into`](crate::collective::Transport::mix_paid_into)
 //! with tracker-owned scratch, so a steady-state update allocates nothing
-//! (the incoming gradient batch is the caller's).
+//! (the incoming gradient batch is the caller's).  Generic over the
+//! payload [`Scalar`] `S`; the dense fold is `kernels::add_diff`.
 
 use crate::collective::{MixScratch, Transport};
+use crate::linalg::kernels;
+use crate::linalg::scalar::Scalar;
 use crate::linalg::NodeBlock;
 
-pub struct DenseTracker {
+pub struct DenseTracker<S: Scalar = f32> {
     /// Per-node tracker s_i (contiguous m×d; index or `.row(i)` for views).
-    pub s: NodeBlock,
+    pub s: NodeBlock<S>,
     /// Last gradient u_i folded in.
-    prev_u: NodeBlock,
+    prev_u: NodeBlock<S>,
     /// Reused mixing buffers.
-    mix: MixScratch,
+    mix: MixScratch<S>,
 }
 
-impl DenseTracker {
+impl<S: Scalar> DenseTracker<S> {
     /// Initialize with the first gradients: s_i⁰ = u_i⁰.
-    pub fn new(u0: Vec<Vec<f32>>) -> DenseTracker {
+    pub fn new(u0: Vec<Vec<S>>) -> DenseTracker<S> {
         let s = NodeBlock::from_rows(&u0);
         DenseTracker { prev_u: s.clone(), s, mix: MixScratch::new() }
     }
@@ -37,7 +40,7 @@ impl DenseTracker {
     /// refresh `prev_u` — inactive rows of `u_new` are stale (the caller
     /// skipped those oracles) and must not enter the tracker.  The mix
     /// itself is already mask-aware through `mix_paid_into`.
-    pub fn update<T: Transport>(&mut self, net: &mut T, gamma: f64, u_new: &[Vec<f32>]) {
+    pub fn update<T: Transport>(&mut self, net: &mut T, gamma: f64, u_new: &[Vec<S>]) {
         net.mix_paid_into(gamma, &mut self.s, &mut self.mix);
         let mask = net.active();
         for i in 0..self.s.nrows() {
@@ -46,15 +49,7 @@ impl DenseTracker {
                     continue;
                 }
             }
-            for ((sk, un), uo) in self
-                .s
-                .row_mut(i)
-                .iter_mut()
-                .zip(&u_new[i])
-                .zip(self.prev_u.row(i))
-            {
-                *sk += un - uo;
-            }
+            kernels::add_diff(&u_new[i], self.prev_u.row(i), self.s.row_mut(i));
         }
         match mask {
             None => self.prev_u.copy_from_rows(u_new),
@@ -71,7 +66,7 @@ impl DenseTracker {
     /// Last gradient folded in for node `i`.  Under sampling, callers
     /// reuse this for nodes that skipped the current round's oracle (the
     /// update above then folds a zero difference for them).
-    pub fn last_u(&self, i: usize) -> &[f32] {
+    pub fn last_u(&self, i: usize) -> &[S] {
         self.prev_u.row(i)
     }
 
@@ -81,7 +76,7 @@ impl DenseTracker {
     }
 
     /// Mean tracker (≡ mean of latest gradients by the invariant).
-    pub fn mean(&self) -> Vec<f32> {
+    pub fn mean(&self) -> Vec<S> {
         self.s.mean_row()
     }
 }
@@ -135,6 +130,28 @@ mod tests {
             }
         }
         assert!(t.consensus_err_sq() < 1e-5);
+    }
+
+    /// The tracking invariant is dtype-generic: at f64 the mean identity
+    /// holds to near machine precision.
+    #[test]
+    fn tracker_invariant_at_f64() {
+        let mut rng = Rng::new(9);
+        let mut net = Network::new(Graph::build(Topology::Ring, 5));
+        let u0: Vec<Vec<f64>> = (0..5)
+            .map(|_| (0..3).map(|_| rng.normal()).collect())
+            .collect();
+        let mut t = DenseTracker::new(u0);
+        for _ in 0..5 {
+            let u: Vec<Vec<f64>> = (0..5)
+                .map(|_| (0..3).map(|_| rng.normal()).collect())
+                .collect();
+            t.update(&mut net, 0.5, &u);
+            let su = linalg::mean_rows(&u);
+            for (a, b) in su.iter().zip(&t.mean()) {
+                assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -27,6 +27,7 @@ use super::event::EventQueue;
 use super::{NetConfig, NetMode};
 use crate::collective::{clear_delivered, dense_wire_bytes, Inbox, Transport};
 use crate::compress::Compressed;
+use crate::linalg::scalar::Scalar;
 use crate::metrics::CommLedger;
 use crate::topology::{Graph, MixingMatrix, Topology};
 use crate::util::rng::Rng;
@@ -320,13 +321,13 @@ impl Transport for SimNetwork {
         self.epoch
     }
 
-    fn exchange(&mut self, msgs: Vec<Compressed>) -> Inbox<Compressed> {
+    fn exchange<S: Scalar>(&mut self, msgs: Vec<Compressed<S>>) -> Inbox<Compressed<S>> {
         let bytes: Vec<usize> = msgs.iter().map(Compressed::wire_bytes).collect();
         self.simulate(msgs, &bytes)
     }
 
-    fn exchange_dense(&mut self, vecs: &[Vec<f32>]) -> Inbox<Vec<f32>> {
-        let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes(v.len())).collect();
+    fn exchange_dense<S: Scalar>(&mut self, vecs: &[Vec<S>]) -> Inbox<Vec<S>> {
+        let bytes: Vec<usize> = vecs.iter().map(|v| dense_wire_bytes::<S>(v.len())).collect();
         self.simulate(vecs.to_vec(), &bytes)
     }
 
@@ -494,7 +495,7 @@ mod tests {
         cfg.jitter_s = 2e-4;
         let rows: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32; 8]).collect();
         let bytes: Vec<usize> =
-            rows.iter().map(|v| dense_wire_bytes(v.len())).collect();
+            rows.iter().map(|v| dense_wire_bytes::<f32>(v.len())).collect();
         let mut a = SimNetwork::new(ring(6), cfg.clone(), 17).unwrap();
         let mut b = SimNetwork::new(ring(6), cfg, 17).unwrap();
         let mut delivered = Vec::new();

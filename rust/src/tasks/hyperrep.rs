@@ -17,28 +17,38 @@
 //! onto one-hot labels, partitioned by any [`Partition`] (including
 //! Dirichlet-α), seeded through [`crate::util::rng::Rng`] for
 //! bit-reproducibility — the golden-trace fixtures pin these runs.
+//!
+//! Generic over the payload [`Scalar`]: data generation draws at `f32`
+//! (identical RNG streams across dtypes), staged shards are widened
+//! exactly, and the oracle matrix algebra runs at `S`.
 
-use super::{resize_guarded, BilevelTask};
+use super::{resize_guarded, widen, BilevelTask};
 use crate::data::{mnist_like, partition::Partition, Dataset};
+use crate::linalg::Scalar;
 use crate::util::rng::Rng;
 use anyhow::Result;
 
-struct Shard {
+struct Shard<S: Scalar> {
     n: usize,
     /// n×p features.
-    a: Vec<f32>,
+    a: Vec<S>,
     /// n×c one-hot targets.
-    b: Vec<f32>,
+    b: Vec<S>,
     labels: Vec<usize>,
 }
 
-impl Shard {
-    fn stage(ds: &Dataset) -> Shard {
-        Shard { n: ds.n, a: ds.features.clone(), b: ds.onehot(), labels: ds.labels.clone() }
+impl<S: Scalar> Shard<S> {
+    fn stage(ds: &Dataset) -> Shard<S> {
+        Shard {
+            n: ds.n,
+            a: widen(&ds.features),
+            b: widen(&ds.onehot()),
+            labels: ds.labels.clone(),
+        }
     }
 }
 
-pub struct HyperRepTask {
+pub struct HyperRepTask<S: Scalar = f32> {
     m: usize,
     /// Input feature dimension p.
     pub inputs: usize,
@@ -46,12 +56,12 @@ pub struct HyperRepTask {
     pub embed: usize,
     pub classes: usize,
     /// Head ridge coefficient ρ (keeps the lower level strongly convex).
-    pub ridge: f32,
-    train: Vec<Shard>,
-    val: Vec<Shard>,
+    pub ridge: S,
+    train: Vec<Shard<S>>,
+    val: Vec<Shard<S>>,
 }
 
-impl HyperRepTask {
+impl<S: Scalar> HyperRepTask<S> {
     #[allow(clippy::too_many_arguments)]
     pub fn generate(
         m: usize,
@@ -63,7 +73,7 @@ impl HyperRepTask {
         partition: Partition,
         noise: f32,
         seed: u64,
-    ) -> HyperRepTask {
+    ) -> HyperRepTask<S> {
         let mut rng = Rng::new(seed);
         let need_tr = m * n_train;
         let need_val = m * n_val;
@@ -86,18 +96,18 @@ impl HyperRepTask {
             .iter()
             .map(|s| Shard::stage(&resize_guarded(s, &val_pool, n_val, &mut rng)))
             .collect();
-        HyperRepTask { m, inputs, embed, classes, ridge: 0.1, train, val }
+        HyperRepTask { m, inputs, embed, classes, ridge: S::from_f64(0.1), train, val }
     }
 
     /// Embedded features Z = A E (n×k) for a shard.
-    fn embed_shard(&self, shard: &Shard, e: &[f32]) -> Vec<f32> {
+    fn embed_shard(&self, shard: &Shard<S>, e: &[S]) -> Vec<S> {
         let (p, k) = (self.inputs, self.embed);
-        let mut z = vec![0.0f32; shard.n * k];
+        let mut z = vec![S::ZERO; shard.n * k];
         for r in 0..shard.n {
             let a = &shard.a[r * p..(r + 1) * p];
             let zr = &mut z[r * k..(r + 1) * k];
             for (j, &aj) in a.iter().enumerate() {
-                if aj != 0.0 {
+                if aj != S::ZERO {
                     let ej = &e[j * k..(j + 1) * k];
                     for (zc, &ejc) in zr.iter_mut().zip(ej) {
                         *zc += aj * ejc;
@@ -109,9 +119,9 @@ impl HyperRepTask {
     }
 
     /// Residual R = Z W − B (n×c).
-    fn residual(&self, shard: &Shard, z: &[f32], w: &[f32]) -> Vec<f32> {
+    fn residual(&self, shard: &Shard<S>, z: &[S], w: &[S]) -> Vec<S> {
         let (k, c) = (self.embed, self.classes);
-        let mut r = vec![0.0f32; shard.n * c];
+        let mut r = vec![S::ZERO; shard.n * c];
         for row in 0..shard.n {
             let zr = &z[row * k..(row + 1) * k];
             let rr = &mut r[row * c..(row + 1) * c];
@@ -129,9 +139,9 @@ impl HyperRepTask {
     }
 
     /// ∇_W [1/(2n)‖ZW − B‖²] = Zᵀ R / n (k×c).
-    fn grad_w(&self, shard: &Shard, z: &[f32], r: &[f32]) -> Vec<f32> {
+    fn grad_w(&self, shard: &Shard<S>, z: &[S], r: &[S]) -> Vec<S> {
         let (k, c) = (self.embed, self.classes);
-        let mut g = vec![0.0f32; k * c];
+        let mut g = vec![S::ZERO; k * c];
         for row in 0..shard.n {
             let zr = &z[row * k..(row + 1) * k];
             let rr = &r[row * c..(row + 1) * c];
@@ -142,7 +152,7 @@ impl HyperRepTask {
                 }
             }
         }
-        let n = shard.n.max(1) as f32;
+        let n = S::from_usize(shard.n.max(1));
         for v in g.iter_mut() {
             *v /= n;
         }
@@ -150,21 +160,24 @@ impl HyperRepTask {
     }
 
     /// ∇_E [1/(2n)‖A E W − B‖²] = Aᵀ R Wᵀ / n (p×k).
-    fn grad_e(&self, shard: &Shard, r: &[f32], w: &[f32]) -> Vec<f32> {
+    fn grad_e(&self, shard: &Shard<S>, r: &[S], w: &[S]) -> Vec<S> {
         let (p, k, c) = (self.inputs, self.embed, self.classes);
         // First S = R Wᵀ (n×k), then Aᵀ S.
-        let mut g = vec![0.0f32; p * k];
-        let mut s_row = vec![0.0f32; k];
+        let mut g = vec![S::ZERO; p * k];
+        let mut s_row = vec![S::ZERO; k];
         for row in 0..r.len() / c {
             let rr = &r[row * c..(row + 1) * c];
-            s_row.fill(0.0);
+            s_row.fill(S::ZERO);
             for (j, sj) in s_row.iter_mut().enumerate() {
                 let wj = &w[j * c..(j + 1) * c];
-                *sj = rr.iter().zip(wj).map(|(a, b)| a * b).sum();
+                *sj = rr
+                    .iter()
+                    .zip(wj)
+                    .fold(S::ZERO, |acc, (&a, &b)| acc + a * b);
             }
             let a = &shard.a[row * p..(row + 1) * p];
             for (jf, &aj) in a.iter().enumerate() {
-                if aj != 0.0 {
+                if aj != S::ZERO {
                     let gj = &mut g[jf * k..(jf + 1) * k];
                     for (gc, &sc) in gj.iter_mut().zip(&s_row) {
                         *gc += aj * sc;
@@ -172,7 +185,7 @@ impl HyperRepTask {
                 }
             }
         }
-        let n = shard.n.max(1) as f32;
+        let n = S::from_usize(shard.n.max(1));
         for v in g.iter_mut() {
             *v /= n;
         }
@@ -182,28 +195,28 @@ impl HyperRepTask {
     /// Unregularized ∇_W of ½/n‖A E W − B‖² on a shard.  Split from
     /// [`Self::grad_e_of`] so the inner loop (which only needs the head
     /// gradient) never pays the O(n·p·k) embedding-gradient product.
-    fn grad_w_of(&self, shard: &Shard, e: &[f32], w: &[f32]) -> Vec<f32> {
+    fn grad_w_of(&self, shard: &Shard<S>, e: &[S], w: &[S]) -> Vec<S> {
         let z = self.embed_shard(shard, e);
         let r = self.residual(shard, &z, w);
         self.grad_w(shard, &z, &r)
     }
 
     /// Unregularized ∇_E of ½/n‖A E W − B‖² on a shard.
-    fn grad_e_of(&self, shard: &Shard, e: &[f32], w: &[f32]) -> Vec<f32> {
+    fn grad_e_of(&self, shard: &Shard<S>, e: &[S], w: &[S]) -> Vec<S> {
         let z = self.embed_shard(shard, e);
         let r = self.residual(shard, &z, w);
         self.grad_e(shard, &r, w)
     }
 
-    fn loss_of(&self, shard: &Shard, e: &[f32], w: &[f32]) -> f64 {
+    fn loss_of(&self, shard: &Shard<S>, e: &[S], w: &[S]) -> f64 {
         let z = self.embed_shard(shard, e);
         let r = self.residual(shard, &z, w);
         let n = shard.n.max(1) as f64;
-        r.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / (2.0 * n)
+        r.iter().map(|v| v.to_f64().powi(2)).sum::<f64>() / (2.0 * n)
     }
 }
 
-impl BilevelTask for HyperRepTask {
+impl<S: Scalar> BilevelTask<S> for HyperRepTask<S> {
     fn nodes(&self) -> usize {
         self.m
     }
@@ -223,7 +236,7 @@ impl BilevelTask for HyperRepTask {
         )
     }
 
-    fn inner_y_grad(&self, i: usize, x: &[f32], y: &[f32], lambda: f32) -> Result<Vec<f32>> {
+    fn inner_y_grad(&self, i: usize, x: &[S], y: &[S], lambda: S) -> Result<Vec<S>> {
         let gf = self.grad_w_of(&self.val[i], x, y);
         let mut gg = self.grad_w_of(&self.train[i], x, y);
         for (g, &wv) in gg.iter_mut().zip(y) {
@@ -232,11 +245,11 @@ impl BilevelTask for HyperRepTask {
         Ok(gf
             .iter()
             .zip(&gg)
-            .map(|(a, b)| a + lambda * b)
+            .map(|(&a, &b)| a + lambda * b)
             .collect())
     }
 
-    fn inner_z_grad(&self, i: usize, x: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+    fn inner_z_grad(&self, i: usize, x: &[S], z: &[S]) -> Result<Vec<S>> {
         let mut gg = self.grad_w_of(&self.train[i], x, z);
         for (g, &wv) in gg.iter_mut().zip(z) {
             *g += self.ridge * wv;
@@ -244,7 +257,7 @@ impl BilevelTask for HyperRepTask {
         Ok(gg)
     }
 
-    fn hypergrad(&self, i: usize, x: &[f32], y: &[f32], z: &[f32], lambda: f32) -> Result<Vec<f32>> {
+    fn hypergrad(&self, i: usize, x: &[S], y: &[S], z: &[S], lambda: S) -> Result<Vec<S>> {
         // u = ∇_E f(x,y) + λ(∇_E g(x,y) − ∇_E g(x,z)); the ridge term has
         // no E-dependence.  The train-shard embedding Z = A·E depends only
         // on x, so compute it once for both penalty residuals.
@@ -257,11 +270,11 @@ impl BilevelTask for HyperRepTask {
             .iter()
             .zip(&gg_e_y)
             .zip(&gg_e_z)
-            .map(|((f, gy), gz)| f + lambda * (gy - gz))
+            .map(|((&f, &gy), &gz)| f + lambda * (gy - gz))
             .collect())
     }
 
-    fn eval(&self, i: usize, x: &[f32], y: &[f32]) -> Result<(f64, f64)> {
+    fn eval(&self, i: usize, x: &[S], y: &[S]) -> Result<(f64, f64)> {
         let shard = &self.val[i];
         let loss = self.loss_of(shard, x, y);
         // Accuracy: argmax of the regressed one-hot scores.
@@ -271,13 +284,12 @@ impl BilevelTask for HyperRepTask {
         for row in 0..shard.n {
             let zr = &z[row * k..(row + 1) * k];
             let mut best = 0usize;
-            let mut best_v = f32::NEG_INFINITY;
+            let mut best_v = S::NEG_INFINITY;
             for j in 0..c {
-                let score: f32 = zr
+                let score = zr
                     .iter()
                     .enumerate()
-                    .map(|(t, &zt)| zt * y[t * c + j])
-                    .sum();
+                    .fold(S::ZERO, |acc, (t, &zt)| acc + zt * y[t * c + j]);
                 if score > best_v {
                     best_v = score;
                     best = j;
@@ -290,21 +302,21 @@ impl BilevelTask for HyperRepTask {
         Ok((loss, hits as f64 / shard.n.max(1) as f64))
     }
 
-    fn grad_y_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+    fn grad_y_f(&self, i: usize, x: &[S], y: &[S]) -> Result<Vec<S>> {
         Ok(self.grad_w_of(&self.val[i], x, y))
     }
 
-    fn grad_x_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+    fn grad_x_f(&self, i: usize, x: &[S], y: &[S]) -> Result<Vec<S>> {
         Ok(self.grad_e_of(&self.val[i], x, y))
     }
 
-    fn hvp_yy_g(&self, i: usize, x: &[f32], _y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+    fn hvp_yy_g(&self, i: usize, x: &[S], _y: &[S], v: &[S]) -> Result<Vec<S>> {
         // The lower level is quadratic in W: H·V = ZᵀZV/n + ρV.
         let shard = &self.train[i];
         let z = self.embed_shard(shard, x);
         let (k, c) = (self.embed, self.classes);
         // ZV (n×c) without the −B shift, then Zᵀ(ZV)/n.
-        let mut zv = vec![0.0f32; shard.n * c];
+        let mut zv = vec![S::ZERO; shard.n * c];
         for row in 0..shard.n {
             let zr = &z[row * k..(row + 1) * k];
             let o = &mut zv[row * c..(row + 1) * c];
@@ -322,14 +334,14 @@ impl BilevelTask for HyperRepTask {
         Ok(out)
     }
 
-    fn jvp_xy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+    fn jvp_xy_g(&self, i: usize, x: &[S], y: &[S], v: &[S]) -> Result<Vec<S>> {
         // ∇_E g = Aᵀ(A E W − B)Wᵀ/n; directional derivative in W-direction
         // V: Aᵀ(A E V)Wᵀ/n + Aᵀ(A E W − B)Vᵀ/n.
         let shard = &self.train[i];
         let z = self.embed_shard(shard, x);
         let (k, c) = (self.embed, self.classes);
         // Term 1: residual' = Z V (no B), contracted against Wᵀ.
-        let mut zv = vec![0.0f32; shard.n * c];
+        let mut zv = vec![S::ZERO; shard.n * c];
         for row in 0..shard.n {
             let zr = &z[row * k..(row + 1) * k];
             let o = &mut zv[row * c..(row + 1) * c];
@@ -344,17 +356,20 @@ impl BilevelTask for HyperRepTask {
         // Term 2: true residual contracted against Vᵀ.
         let r = self.residual(shard, &z, y);
         let t2 = self.grad_e(shard, &r, v);
-        Ok(t1.iter().zip(&t2).map(|(a, b)| a + b).collect())
+        Ok(t1.iter().zip(&t2).map(|(&a, &b)| a + b).collect())
     }
 
-    fn init_x(&self, rng: &mut Rng) -> Vec<f32> {
-        // He-style init for the linear backbone.
+    fn init_x(&self, rng: &mut Rng) -> Vec<S> {
+        // He-style init for the linear backbone; f32 draws widened exactly
+        // so every dtype starts from the same embedding.
         let std = (1.0 / self.inputs as f32).sqrt();
-        (0..self.dx()).map(|_| rng.normal_f32(0.0, std)).collect()
+        (0..self.dx())
+            .map(|_| S::from_f64(rng.normal_f32(0.0, std) as f64))
+            .collect()
     }
 
-    fn init_y(&self, _rng: &mut Rng) -> Vec<f32> {
-        vec![0.0; self.dy()]
+    fn init_y(&self, _rng: &mut Rng) -> Vec<S> {
+        vec![S::ZERO; self.dy()]
     }
 }
 
@@ -515,5 +530,24 @@ mod tests {
         let mut r1 = Rng::new(7);
         let mut r2 = Rng::new(7);
         assert_eq!(a.init_x(&mut r1), b.init_x(&mut r2));
+    }
+
+    /// Same RNG streams at both dtypes: the f64 task's shards and init
+    /// are exact widenings of the f32 task's.
+    #[test]
+    fn f64_task_is_exact_widening() {
+        let t32 = task();
+        let t64: HyperRepTask<f64> =
+            HyperRepTask::generate(3, 9, 4, 3, 18, 10, Partition::Dirichlet { alpha: 0.5 }, 0.2, 6);
+        for (a, &b) in t32.train[1].a.iter().zip(&t64.train[1].a) {
+            assert_eq!(*a as f64, b);
+        }
+        let mut r1 = Rng::new(8);
+        let mut r2 = Rng::new(8);
+        let x32 = t32.init_x(&mut r1);
+        let x64 = t64.init_x(&mut r2);
+        for (a, &b) in x32.iter().zip(&x64) {
+            assert_eq!(*a as f64, b);
+        }
     }
 }

@@ -21,41 +21,47 @@
 //! Dirichlet-α label-skew knob); everything is seeded through
 //! [`crate::util::rng::Rng`], so a `(config, seed)` pair reproduces the
 //! trajectory bit-for-bit — this is what the golden-trace fixtures pin.
+//!
+//! Generic over the payload [`Scalar`]: the corpus is always generated at
+//! `f32` (same RNG stream at every dtype) and the staged shards are
+//! widened exactly, so `dtype = "f64"` runs the same data through
+//! higher-precision oracle arithmetic.
 
-use super::{resize_guarded, BilevelTask};
+use super::{resize_guarded, widen, BilevelTask};
 use crate::data::{newsgroups_like, partition::Partition, Dataset};
+use crate::linalg::{kernels, Scalar};
 use crate::util::rng::Rng;
 use anyhow::Result;
 
 /// One node's staged shards (row-major features, class labels).
-struct Shard {
+struct Shard<S: Scalar> {
     n: usize,
-    features: Vec<f32>,
+    features: Vec<S>,
     labels: Vec<usize>,
 }
 
-impl Shard {
-    fn stage(ds: &Dataset) -> Shard {
-        Shard { n: ds.n, features: ds.features.clone(), labels: ds.labels.clone() }
+impl<S: Scalar> Shard<S> {
+    fn stage(ds: &Dataset) -> Shard<S> {
+        Shard { n: ds.n, features: widen(&ds.features), labels: ds.labels.clone() }
     }
 
-    fn row(&self, i: usize, d: usize) -> &[f32] {
+    fn row(&self, i: usize, d: usize) -> &[S] {
         &self.features[i * d..(i + 1) * d]
     }
 }
 
-pub struct LogRegTask {
+pub struct LogRegTask<S: Scalar = f32> {
     m: usize,
     /// Feature dimension d (= upper dimension).
     pub features: usize,
     pub classes: usize,
     /// Base regularization scale r₀ (per-coordinate weight is r₀·exp(x_k)).
-    pub reg0: f32,
-    train: Vec<Shard>,
-    val: Vec<Shard>,
+    pub reg0: S,
+    train: Vec<Shard<S>>,
+    val: Vec<Shard<S>>,
 }
 
-impl LogRegTask {
+impl<S: Scalar> LogRegTask<S> {
     /// Generate the synthetic corpus, split train/val, partition the train
     /// side with `partition` (validation is split IID so the eval metric
     /// is comparable across nodes — the artifact-task protocol), and
@@ -70,7 +76,7 @@ impl LogRegTask {
         partition: Partition,
         noise: f32,
         seed: u64,
-    ) -> LogRegTask {
+    ) -> LogRegTask<S> {
         let mut rng = Rng::new(seed);
         let need_tr = m * n_train;
         let need_val = m * n_val;
@@ -93,31 +99,31 @@ impl LogRegTask {
             .iter()
             .map(|s| Shard::stage(&resize_guarded(s, &val_pool, n_val, &mut rng)))
             .collect();
-        LogRegTask { m, features, classes, reg0: 0.1, train, val }
+        LogRegTask { m, features, classes, reg0: S::from_f64(0.1), train, val }
     }
 
     /// CE loss, accuracy and (optionally) the CE gradient over a shard at
     /// head `w` (d×c row-major).  One fused pass: logits → stabilized
     /// softmax → loss/acc, plus the rank-1 gradient update per row.
-    fn ce_pass(&self, shard: &Shard, w: &[f32], mut grad: Option<&mut [f32]>) -> (f64, f64) {
+    fn ce_pass(&self, shard: &Shard<S>, w: &[S], mut grad: Option<&mut [S]>) -> (f64, f64) {
         let (d, c) = (self.features, self.classes);
         let mut loss = 0.0f64;
         let mut hits = 0usize;
-        let mut p = vec![0.0f32; c];
+        let mut p = vec![S::ZERO; c];
         for r in 0..shard.n {
             let a = shard.row(r, d);
             softmax_logits(a, w, d, c, &mut p);
             let label = shard.labels[r];
-            loss += -(p[label].max(1e-30) as f64).ln();
+            loss += -p[label].max(S::from_f64(1e-30)).to_f64().ln();
             let pred = argmax(&p);
             if pred == label {
                 hits += 1;
             }
             if let Some(g) = grad.as_deref_mut() {
                 // ∇_W CE for one sample: a · (p − onehot)ᵀ.
-                p[label] -= 1.0;
+                p[label] -= S::ONE;
                 for (k, &ak) in a.iter().enumerate() {
-                    if ak != 0.0 {
+                    if ak != S::ZERO {
                         let gk = &mut g[k * c..(k + 1) * c];
                         for (gkc, &pc) in gk.iter_mut().zip(p.iter()) {
                             *gkc += ak * pc;
@@ -126,10 +132,11 @@ impl LogRegTask {
                 }
             }
         }
-        let n = shard.n.max(1) as f32;
+        let n = shard.n.max(1);
         if let Some(g) = grad {
+            let ns = S::from_usize(n);
             for v in g.iter_mut() {
-                *v /= n;
+                *v /= ns;
             }
         }
         (loss / n as f64, hits as f64 / n as f64)
@@ -137,9 +144,9 @@ impl LogRegTask {
 
     /// ∇_y g_i = ∇_W CE(train) + r₀ exp(x_k) W_{k·} (the regularized
     /// lower-level gradient).
-    fn grad_g(&self, i: usize, x: &[f32], w: &[f32]) -> Vec<f32> {
+    fn grad_g(&self, i: usize, x: &[S], w: &[S]) -> Vec<S> {
         let (d, c) = (self.features, self.classes);
-        let mut g = vec![0.0f32; d * c];
+        let mut g = vec![S::ZERO; d * c];
         self.ce_pass(&self.train[i], w, Some(&mut g[..]));
         for k in 0..d {
             let r = self.reg0 * x[k].exp();
@@ -151,30 +158,33 @@ impl LogRegTask {
     }
 
     /// (∇_x g_i)_k = ½ r₀ exp(x_k) ‖W_{k·}‖².
-    fn grad_x_g(&self, x: &[f32], w: &[f32]) -> Vec<f32> {
+    fn grad_x_g(&self, x: &[S], w: &[S]) -> Vec<S> {
         let (d, c) = (self.features, self.classes);
+        let half = S::from_f64(0.5);
         (0..d)
             .map(|k| {
-                let row_sq: f32 = w[k * c..(k + 1) * c].iter().map(|v| v * v).sum();
-                0.5 * self.reg0 * x[k].exp() * row_sq
+                let row_sq = w[k * c..(k + 1) * c]
+                    .iter()
+                    .fold(S::ZERO, |acc, &v| acc + v * v);
+                half * self.reg0 * x[k].exp() * row_sq
             })
             .collect()
     }
 }
 
 /// `p = softmax(Wᵀ a)` with max-logit stabilization.
-fn softmax_logits(a: &[f32], w: &[f32], d: usize, c: usize, p: &mut [f32]) {
-    p.fill(0.0);
+fn softmax_logits<S: Scalar>(a: &[S], w: &[S], d: usize, c: usize, p: &mut [S]) {
+    p.fill(S::ZERO);
     for (k, &ak) in a.iter().enumerate().take(d) {
-        if ak != 0.0 {
+        if ak != S::ZERO {
             let wk = &w[k * c..(k + 1) * c];
             for (pj, &wkj) in p.iter_mut().zip(wk) {
                 *pj += ak * wkj;
             }
         }
     }
-    let mx = p.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0f32;
+    let mx = p.iter().cloned().fold(S::NEG_INFINITY, S::max);
+    let mut sum = S::ZERO;
     for v in p.iter_mut() {
         *v = (*v - mx).exp();
         sum += *v;
@@ -184,7 +194,7 @@ fn softmax_logits(a: &[f32], w: &[f32], d: usize, c: usize, p: &mut [f32]) {
     }
 }
 
-fn argmax(p: &[f32]) -> usize {
+fn argmax<S: Scalar>(p: &[S]) -> usize {
     let mut best = 0;
     for (j, &v) in p.iter().enumerate() {
         if v > p[best] {
@@ -194,7 +204,7 @@ fn argmax(p: &[f32]) -> usize {
     best
 }
 
-impl BilevelTask for LogRegTask {
+impl<S: Scalar> BilevelTask<S> for LogRegTask<S> {
     fn nodes(&self) -> usize {
         self.m
     }
@@ -214,22 +224,20 @@ impl BilevelTask for LogRegTask {
         )
     }
 
-    fn inner_y_grad(&self, i: usize, x: &[f32], y: &[f32], lambda: f32) -> Result<Vec<f32>> {
+    fn inner_y_grad(&self, i: usize, x: &[S], y: &[S], lambda: S) -> Result<Vec<S>> {
         // ∇_y h = ∇_y f + λ ∇_y g.
-        let mut gf = vec![0.0f32; self.dy()];
+        let mut gf = vec![S::ZERO; self.dy()];
         self.ce_pass(&self.val[i], y, Some(&mut gf[..]));
         let gg = self.grad_g(i, x, y);
-        for (a, b) in gf.iter_mut().zip(&gg) {
-            *a += lambda * b;
-        }
+        kernels::axpy(lambda, &gg, &mut gf);
         Ok(gf)
     }
 
-    fn inner_z_grad(&self, i: usize, x: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+    fn inner_z_grad(&self, i: usize, x: &[S], z: &[S]) -> Result<Vec<S>> {
         Ok(self.grad_g(i, x, z))
     }
 
-    fn hypergrad(&self, _i: usize, x: &[f32], y: &[f32], z: &[f32], lambda: f32) -> Result<Vec<f32>> {
+    fn hypergrad(&self, _i: usize, x: &[S], y: &[S], z: &[S], lambda: S) -> Result<Vec<S>> {
         // ∇_x f ≡ 0 here, so u = λ(∇_x g(x,y) − ∇_x g(x,z)); the reg term
         // is data-independent, hence identical on every node.
         let gy = self.grad_x_g(x, y);
@@ -237,49 +245,52 @@ impl BilevelTask for LogRegTask {
         Ok(gy
             .iter()
             .zip(&gz)
-            .map(|(a, b)| lambda * (a - b))
+            .map(|(&a, &b)| lambda * (a - b))
             .collect())
     }
 
-    fn eval(&self, i: usize, _x: &[f32], y: &[f32]) -> Result<(f64, f64)> {
+    fn eval(&self, i: usize, _x: &[S], y: &[S]) -> Result<(f64, f64)> {
         Ok(self.ce_pass(&self.val[i], y, None))
     }
 
-    fn grad_y_f(&self, i: usize, _x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
-        let mut g = vec![0.0f32; self.dy()];
+    fn grad_y_f(&self, i: usize, _x: &[S], y: &[S]) -> Result<Vec<S>> {
+        let mut g = vec![S::ZERO; self.dy()];
         self.ce_pass(&self.val[i], y, Some(&mut g[..]));
         Ok(g)
     }
 
-    fn grad_x_f(&self, _i: usize, _x: &[f32], _y: &[f32]) -> Result<Vec<f32>> {
-        Ok(vec![0.0; self.dx()])
+    fn grad_x_f(&self, _i: usize, _x: &[S], _y: &[S]) -> Result<Vec<S>> {
+        Ok(vec![S::ZERO; self.dx()])
     }
 
-    fn hvp_yy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+    fn hvp_yy_g(&self, i: usize, x: &[S], y: &[S], v: &[S]) -> Result<Vec<S>> {
         // Softmax-CE Hessian applied to V (per sample: with p = softmax,
         // du = Vᵀa, dp = (diag(p) − ppᵀ)du, contribution a·dpᵀ), plus the
         // diagonal regularizer r₀ exp(x_k).
         let (d, c) = (self.features, self.classes);
         let shard = &self.train[i];
-        let mut out = vec![0.0f32; d * c];
-        let mut p = vec![0.0f32; c];
-        let mut du = vec![0.0f32; c];
+        let mut out = vec![S::ZERO; d * c];
+        let mut p = vec![S::ZERO; c];
+        let mut du = vec![S::ZERO; c];
         for r in 0..shard.n {
             let a = shard.row(r, d);
             softmax_logits(a, y, d, c, &mut p);
-            du.fill(0.0);
+            du.fill(S::ZERO);
             for (k, &ak) in a.iter().enumerate() {
-                if ak != 0.0 {
+                if ak != S::ZERO {
                     let vk = &v[k * c..(k + 1) * c];
                     for (dj, &vkj) in du.iter_mut().zip(vk) {
                         *dj += ak * vkj;
                     }
                 }
             }
-            let pdu: f32 = p.iter().zip(&du).map(|(a, b)| a * b).sum();
+            let pdu = p
+                .iter()
+                .zip(&du)
+                .fold(S::ZERO, |acc, (&a, &b)| acc + a * b);
             // dp_j = p_j (du_j − pᵀdu)
             for (k, &ak) in a.iter().enumerate() {
-                if ak != 0.0 {
+                if ak != S::ZERO {
                     let ok = &mut out[k * c..(k + 1) * c];
                     for ((oj, &pj), &dj) in ok.iter_mut().zip(&p).zip(&du) {
                         *oj += ak * pj * (dj - pdu);
@@ -287,7 +298,7 @@ impl BilevelTask for LogRegTask {
                 }
             }
         }
-        let n = shard.n.max(1) as f32;
+        let n = S::from_usize(shard.n.max(1));
         for o in out.iter_mut() {
             *o /= n;
         }
@@ -300,28 +311,27 @@ impl BilevelTask for LogRegTask {
         Ok(out)
     }
 
-    fn jvp_xy_g(&self, _i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+    fn jvp_xy_g(&self, _i: usize, x: &[S], y: &[S], v: &[S]) -> Result<Vec<S>> {
         // ∂²g/∂x_k∂W_{k·} = r₀ exp(x_k) W_{k·}; contraction with v ∈ R^{dy}.
         let (d, c) = (self.features, self.classes);
         Ok((0..d)
             .map(|k| {
-                let dot: f32 = y[k * c..(k + 1) * c]
+                let dot = y[k * c..(k + 1) * c]
                     .iter()
                     .zip(&v[k * c..(k + 1) * c])
-                    .map(|(a, b)| a * b)
-                    .sum();
+                    .fold(S::ZERO, |acc, (&a, &b)| acc + a * b);
                 self.reg0 * x[k].exp() * dot
             })
             .collect())
     }
 
-    fn init_x(&self, _rng: &mut Rng) -> Vec<f32> {
+    fn init_x(&self, _rng: &mut Rng) -> Vec<S> {
         // Log-weights start at 0 ⇒ per-coordinate reg weight r₀·exp(0).
-        vec![0.0; self.dx()]
+        vec![S::ZERO; self.dx()]
     }
 
-    fn init_y(&self, _rng: &mut Rng) -> Vec<f32> {
-        vec![0.0; self.dy()]
+    fn init_y(&self, _rng: &mut Rng) -> Vec<S> {
+        vec![S::ZERO; self.dy()]
     }
 }
 
@@ -483,7 +493,7 @@ mod tests {
     fn iid_trained_head_beats_chance_on_validation() {
         // Use an IID split so node 0's train shard covers every class (a
         // Dirichlet shard may be near single-class by design).
-        let t = LogRegTask::generate(3, 10, 3, 30, 15, Partition::Iid, 0.3, 8);
+        let t: LogRegTask = LogRegTask::generate(3, 10, 3, 30, 15, Partition::Iid, 0.3, 8);
         let x = vec![0.0f32; t.dx()];
         let mut w = vec![0.0f32; t.dy()];
         for _ in 0..150 {
@@ -510,5 +520,32 @@ mod tests {
         let mut rng = Rng::new(9);
         assert_eq!(a.init_x(&mut rng), vec![0.0; a.dx()]);
         assert_eq!(a.init_y(&mut rng).len(), a.dy());
+    }
+
+    /// The f64 task stages exactly-widened shards (same RNG stream) and
+    /// its lower-level gradient agrees with the f32 one within f32
+    /// rounding — the dtype-envelope contract at the task layer.
+    #[test]
+    fn f64_shards_widen_f32_shards_exactly() {
+        let t32 = task();
+        let t64: LogRegTask<f64> =
+            LogRegTask::generate(3, 10, 3, 20, 12, Partition::Dirichlet { alpha: 0.5 }, 0.3, 5);
+        for i in 0..3 {
+            assert_eq!(t32.train[i].labels, t64.train[i].labels);
+            for (a, &b) in t32.train[i].features.iter().zip(&t64.train[i].features) {
+                assert_eq!(*a as f64, b);
+            }
+        }
+        let mut rng = Rng::new(1);
+        let x = rand_vec(&mut rng, t32.dx(), 0.3);
+        let w = rand_vec(&mut rng, t32.dy(), 0.4);
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+        let g32 = t32.inner_z_grad(0, &x, &w).unwrap();
+        let g64 = t64.inner_z_grad(0, &x64, &w64).unwrap();
+        for (a, b) in g32.iter().zip(&g64) {
+            let rel = (*a as f64 - b).abs() / (1.0 + b.abs());
+            assert!(rel < 1e-5, "f32 {a} vs f64 {b}");
+        }
     }
 }

@@ -3,7 +3,9 @@
 //!
 //! * [`PjrtTask`] — the real thing: oracles are AOT-compiled HLO artifacts
 //!   executed via PJRT ([`crate::runtime`]), per-node data shards staged as
-//!   device buffers once at construction.
+//!   device buffers once at construction.  Artifacts are `f32`; the task
+//!   implements [`BilevelTask`] at the default dtype only (the coordinator
+//!   rejects `dtype = "f64"` for artifact tasks up front).
 //! * [`quadratic::QuadraticTask`] — a fully analytic bilevel quadratic used
 //!   by the convergence tests and benchmarks (no artifacts needed, known
 //!   closed-form hyper-objective).
@@ -12,6 +14,15 @@
 //!   (lower).  Pure Rust, no artifacts; see `docs/TASKS.md`.
 //! * [`hyperrep::HyperRepTask`] — native linear hyper-representation: a
 //!   shared embedding (upper) over per-node ridge heads (lower).
+//!
+//! The native tasks are generic over the payload [`Scalar`] `S`
+//! (docs/DTYPE.md).  Data generation and initialization always draw at
+//! `f32` through the same RNG streams regardless of dtype; staged shards
+//! and parameters are then widened exactly (`f32 → S` is lossless), so an
+//! `f64` run solves the *same problem instance* as the `f32` run — only
+//! the oracle arithmetic and the wire payloads change precision.  At
+//! `S = f32` the widening is the identity and every byte matches the
+//! historical path.
 //!
 //! The native tasks accept any [`crate::data::partition::Partition`]
 //! (including the Dirichlet-α label-skew knob) and are seeded for
@@ -28,11 +39,12 @@ pub use logreg::LogRegTask;
 pub use pjrt::PjrtTask;
 pub use quadratic::QuadraticTask;
 
+use crate::linalg::Scalar;
 use anyhow::Result;
 
-/// Per-node bilevel oracle bundle.  All vectors are flat `f32`; `i` indexes
-/// the node (each node sees only its own data shard).
-pub trait BilevelTask {
+/// Per-node bilevel oracle bundle at payload scalar `S`.  All vectors are
+/// flat; `i` indexes the node (each node sees only its own data shard).
+pub trait BilevelTask<S: Scalar = f32> {
     fn nodes(&self) -> usize;
     /// Upper-level dimension (x).
     fn dx(&self) -> usize;
@@ -41,26 +53,32 @@ pub trait BilevelTask {
     fn name(&self) -> String;
 
     /// ∇_y h_i(x, y) with h = f + λ g (the C²DFB y-sequence oracle).
-    fn inner_y_grad(&self, i: usize, x: &[f32], y: &[f32], lambda: f32) -> Result<Vec<f32>>;
+    fn inner_y_grad(&self, i: usize, x: &[S], y: &[S], lambda: S) -> Result<Vec<S>>;
     /// ∇_y g_i(x, z) (the z-sequence oracle).
-    fn inner_z_grad(&self, i: usize, x: &[f32], z: &[f32]) -> Result<Vec<f32>>;
+    fn inner_z_grad(&self, i: usize, x: &[S], z: &[S]) -> Result<Vec<S>>;
     /// Fully first-order hypergradient estimate u_i (paper Eq. 4).
-    fn hypergrad(&self, i: usize, x: &[f32], y: &[f32], z: &[f32], lambda: f32)
-        -> Result<Vec<f32>>;
+    fn hypergrad(&self, i: usize, x: &[S], y: &[S], z: &[S], lambda: S) -> Result<Vec<S>>;
     /// Upper-level (validation) loss and accuracy at (x, y).
-    fn eval(&self, i: usize, x: &[f32], y: &[f32]) -> Result<(f64, f64)>;
+    fn eval(&self, i: usize, x: &[S], y: &[S]) -> Result<(f64, f64)>;
 
     // ---- second-order oracles (used only by the baselines) -------------
-    fn grad_y_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>>;
-    fn grad_x_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>>;
+    fn grad_y_f(&self, i: usize, x: &[S], y: &[S]) -> Result<Vec<S>>;
+    fn grad_x_f(&self, i: usize, x: &[S], y: &[S]) -> Result<Vec<S>>;
     /// (∇²_yy g_i) · v.
-    fn hvp_yy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>>;
+    fn hvp_yy_g(&self, i: usize, x: &[S], y: &[S], v: &[S]) -> Result<Vec<S>>;
     /// (∇²_xy g_i) · v  (v ∈ R^dy, result ∈ R^dx).
-    fn jvp_xy_g(&self, i: usize, x: &[f32], y: &[f32], v: &[f32]) -> Result<Vec<f32>>;
+    fn jvp_xy_g(&self, i: usize, x: &[S], y: &[S], v: &[S]) -> Result<Vec<S>>;
 
     /// Initial upper/lower parameters (same on every node, like the paper).
-    fn init_x(&self, rng: &mut crate::util::rng::Rng) -> Vec<f32>;
-    fn init_y(&self, rng: &mut crate::util::rng::Rng) -> Vec<f32>;
+    fn init_x(&self, rng: &mut crate::util::rng::Rng) -> Vec<S>;
+    fn init_y(&self, rng: &mut crate::util::rng::Rng) -> Vec<S>;
+}
+
+/// Widen an `f32`-generated vector into the payload scalar (exact; the
+/// identity at `S = f32`).  All native-task staging funnels through this
+/// so the "same instance, higher precision" contract lives in one place.
+pub(crate) fn widen<S: Scalar>(v: &[f32]) -> Vec<S> {
+    v.iter().map(|&x| S::from_f64(x as f64)).collect()
 }
 
 /// Resize a partitioned shard to exactly `n` rows; an empty shard
@@ -81,10 +99,10 @@ pub(crate) fn resize_guarded(
 }
 
 /// Average eval over all nodes at per-node parameters.
-pub fn eval_mean(
-    task: &dyn BilevelTask,
-    xs: &[Vec<f32>],
-    ys: &[Vec<f32>],
+pub fn eval_mean<S: Scalar>(
+    task: &dyn BilevelTask<S>,
+    xs: &[Vec<S>],
+    ys: &[Vec<S>],
 ) -> Result<(f64, f64)> {
     let m = task.nodes();
     let (mut loss, mut acc) = (0.0, 0.0);
@@ -99,13 +117,13 @@ pub fn eval_mean(
 /// Eval the CONSENSUS model (x̄, ȳ) on every node's validation shard and
 /// average — the paper's "upper-level test accuracy" protocol (a single
 /// global model, as standard in decentralized FL evaluations).
-pub fn eval_consensus(
-    task: &dyn BilevelTask,
-    xs: &[Vec<f32>],
-    ys: &[Vec<f32>],
+pub fn eval_consensus<S: Scalar>(
+    task: &dyn BilevelTask<S>,
+    xs: &[Vec<S>],
+    ys: &[Vec<S>],
 ) -> Result<(f64, f64)> {
-    let xbar = crate::linalg::mean_rows(&xs.to_vec());
-    let ybar = crate::linalg::mean_rows(&ys.to_vec());
+    let xbar = crate::linalg::mean_rows(xs);
+    let ybar = crate::linalg::mean_rows(ys);
     let m = task.nodes();
     let (mut loss, mut acc) = (0.0, 0.0);
     for i in 0..m {

@@ -9,28 +9,35 @@
 //! y*(x) = (Q̄x + q̄) / ā coordinate-wise, and the hyper-objective
 //! ψ(x) = ½‖y*(x) − P̄x − p̄‖² + const-ish cross terms is known, so tests
 //! can check the hypergradient estimate against the analytic ∇ψ.
+//!
+//! Generic over the payload [`Scalar`]: coefficients are drawn at `f32`
+//! (identical RNG stream at every dtype) and widened exactly, so the
+//! `f64` instance is the same problem computed in higher precision —
+//! which is what the f32-vs-f64 tolerance-envelope tests rely on.
 
-use super::BilevelTask;
+use super::{widen, BilevelTask};
+use crate::linalg::Scalar;
 use crate::util::rng::Rng;
 use anyhow::Result;
 
 #[derive(Clone, Debug)]
-pub struct QuadraticTask {
+pub struct QuadraticTask<S: Scalar = f32> {
     pub m: usize,
     pub dim: usize,
     /// Per node: diag of the LL Hessian (strong convexity aᵢ > 0).
-    pub a: Vec<Vec<f32>>,
+    pub a: Vec<Vec<S>>,
     /// Per node: diag coupling Q_i and offset q_i of the LL problem.
-    pub q_diag: Vec<Vec<f32>>,
-    pub q_off: Vec<Vec<f32>>,
+    pub q_diag: Vec<Vec<S>>,
+    pub q_off: Vec<Vec<S>>,
     /// Per node: diag P_i and offset p_i of the UL problem.
-    pub p_diag: Vec<Vec<f32>>,
-    pub p_off: Vec<Vec<f32>>,
+    pub p_diag: Vec<Vec<S>>,
+    pub p_off: Vec<Vec<S>>,
 }
 
-impl QuadraticTask {
-    pub fn generate(m: usize, dim: usize, heterogeneity: f32, seed: u64) -> QuadraticTask {
+impl<S: Scalar> QuadraticTask<S> {
+    pub fn generate(m: usize, dim: usize, heterogeneity: f32, seed: u64) -> QuadraticTask<S> {
         let mut rng = Rng::new(seed);
+        // Draw at f32 (dtype-independent streams), widen at the end.
         let mut per_node = |center: f32, spread: f32| -> Vec<Vec<f32>> {
             (0..m)
                 .map(|_| {
@@ -40,27 +47,32 @@ impl QuadraticTask {
                 })
                 .collect()
         };
+        let stage = |rows: Vec<Vec<f32>>| -> Vec<Vec<S>> {
+            rows.iter().map(|r| widen(r)).collect()
+        };
         QuadraticTask {
             m,
             dim,
             // Hessian diag in [0.5, 1.5]-ish, strictly positive.
-            a: per_node(1.0, 0.2 * heterogeneity)
-                .into_iter()
-                .map(|v| v.into_iter().map(|x| x.abs().max(0.3)).collect())
-                .collect(),
-            q_diag: per_node(0.8, 0.5 * heterogeneity),
-            q_off: per_node(0.0, heterogeneity),
-            p_diag: per_node(0.5, 0.5 * heterogeneity),
-            p_off: per_node(0.0, heterogeneity),
+            a: stage(
+                per_node(1.0, 0.2 * heterogeneity)
+                    .into_iter()
+                    .map(|v| v.into_iter().map(|x| x.abs().max(0.3)).collect())
+                    .collect(),
+            ),
+            q_diag: stage(per_node(0.8, 0.5 * heterogeneity)),
+            q_off: stage(per_node(0.0, heterogeneity)),
+            p_diag: stage(per_node(0.5, 0.5 * heterogeneity)),
+            p_off: stage(per_node(0.0, heterogeneity)),
         }
     }
 
-    fn mean_of(field: &[Vec<f32>]) -> Vec<f32> {
-        crate::linalg::mean_rows(&field.to_vec())
+    fn mean_of(field: &[Vec<S>]) -> Vec<S> {
+        crate::linalg::mean_rows(field)
     }
 
     /// Global lower-level solution y*(x) (coordinate-wise).
-    pub fn y_star(&self, x: &[f32]) -> Vec<f32> {
+    pub fn y_star(&self, x: &[S]) -> Vec<S> {
         let a = Self::mean_of(&self.a);
         let qd = Self::mean_of(&self.q_diag);
         let qo = Self::mean_of(&self.q_off);
@@ -73,24 +85,28 @@ impl QuadraticTask {
     /// ∇ψ = (dy*/dx)ᵀ ∇_y f̄ + ∇_x f̄ (all diagonal).  Note ∇_x f̄ needs the
     /// *second moments* of the per-node P_i:
     /// ∇_x f̄ = −(mean(pd) y* − mean(pd²) x − mean(pd·po)).
-    pub fn hypergrad_analytic(&self, x: &[f32]) -> Vec<f32> {
+    pub fn hypergrad_analytic(&self, x: &[S]) -> Vec<S> {
         let a = Self::mean_of(&self.a);
         let qd = Self::mean_of(&self.q_diag);
         let pd = Self::mean_of(&self.p_diag);
         let po = Self::mean_of(&self.p_off);
         let ys = self.y_star(x);
-        let m = self.m as f32;
+        let m = S::from_usize(self.m);
         (0..self.dim)
             .map(|k| {
                 let resid_mean = ys[k] - pd[k] * x[k] - po[k];
-                let m2_pd: f32 =
-                    self.p_diag.iter().map(|p| p[k] * p[k]).sum::<f32>() / m;
-                let m_pd_po: f32 = self
+                let m2_pd = self
+                    .p_diag
+                    .iter()
+                    .map(|p| p[k] * p[k])
+                    .fold(S::ZERO, |acc, v| acc + v)
+                    / m;
+                let m_pd_po = self
                     .p_diag
                     .iter()
                     .zip(&self.p_off)
                     .map(|(p, o)| p[k] * o[k])
-                    .sum::<f32>()
+                    .fold(S::ZERO, |acc, v| acc + v)
                     / m;
                 let gxf_mean = -(pd[k] * ys[k] - m2_pd * x[k] - m_pd_po);
                 (qd[k] / a[k]) * resid_mean + gxf_mean
@@ -99,20 +115,20 @@ impl QuadraticTask {
     }
 
     /// ψ(x) = f̄(x, y*(x)) evaluated exactly (per-node residuals).
-    pub fn psi(&self, x: &[f32]) -> f64 {
+    pub fn psi(&self, x: &[S]) -> f64 {
         let ys = self.y_star(x);
         let mut acc = 0.0;
         for i in 0..self.m {
             for k in 0..self.dim {
                 let r = ys[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k];
-                acc += 0.5 * (r as f64).powi(2);
+                acc += 0.5 * r.to_f64().powi(2);
             }
         }
         acc / self.m as f64
     }
 }
 
-impl BilevelTask for QuadraticTask {
+impl<S: Scalar> BilevelTask<S> for QuadraticTask<S> {
     fn nodes(&self) -> usize {
         self.m
     }
@@ -129,7 +145,7 @@ impl BilevelTask for QuadraticTask {
         format!("quadratic(m={}, d={})", self.m, self.dim)
     }
 
-    fn inner_y_grad(&self, i: usize, x: &[f32], y: &[f32], lambda: f32) -> Result<Vec<f32>> {
+    fn inner_y_grad(&self, i: usize, x: &[S], y: &[S], lambda: S) -> Result<Vec<S>> {
         // ∇_y h = ∇_y f + λ ∇_y g
         Ok((0..self.dim)
             .map(|k| {
@@ -140,13 +156,13 @@ impl BilevelTask for QuadraticTask {
             .collect())
     }
 
-    fn inner_z_grad(&self, i: usize, x: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+    fn inner_z_grad(&self, i: usize, x: &[S], z: &[S]) -> Result<Vec<S>> {
         Ok((0..self.dim)
             .map(|k| self.a[i][k] * z[k] - (self.q_diag[i][k] * x[k] + self.q_off[i][k]))
             .collect())
     }
 
-    fn hypergrad(&self, i: usize, x: &[f32], y: &[f32], z: &[f32], lambda: f32) -> Result<Vec<f32>> {
+    fn hypergrad(&self, i: usize, x: &[S], y: &[S], z: &[S], lambda: S) -> Result<Vec<S>> {
         // ∇_x f_i −... fully first-order form:
         // u = ∇_x f_i(x,y) + λ(∇_x g_i(x,y) − ∇_x g_i(x,z))
         // ∇_x f_i = −P_i (y − P_i x − p_i);  ∇_x g_i(x,·) = −Q_i ·
@@ -160,43 +176,46 @@ impl BilevelTask for QuadraticTask {
             .collect())
     }
 
-    fn eval(&self, i: usize, x: &[f32], y: &[f32]) -> Result<(f64, f64)> {
+    fn eval(&self, i: usize, x: &[S], y: &[S]) -> Result<(f64, f64)> {
         let loss: f64 = (0..self.dim)
             .map(|k| {
-                0.5 * ((y[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k]) as f64).powi(2)
+                0.5 * (y[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k]).to_f64().powi(2)
             })
             .sum();
         // "Accuracy" proxy for a regression task: 1/(1+loss) ∈ (0,1].
         Ok((loss, 1.0 / (1.0 + loss)))
     }
 
-    fn grad_y_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+    fn grad_y_f(&self, i: usize, x: &[S], y: &[S]) -> Result<Vec<S>> {
         Ok((0..self.dim)
             .map(|k| y[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k])
             .collect())
     }
 
-    fn grad_x_f(&self, i: usize, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+    fn grad_x_f(&self, i: usize, x: &[S], y: &[S]) -> Result<Vec<S>> {
         Ok((0..self.dim)
             .map(|k| -self.p_diag[i][k] * (y[k] - self.p_diag[i][k] * x[k] - self.p_off[i][k]))
             .collect())
     }
 
-    fn hvp_yy_g(&self, i: usize, _x: &[f32], _y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+    fn hvp_yy_g(&self, i: usize, _x: &[S], _y: &[S], v: &[S]) -> Result<Vec<S>> {
         Ok((0..self.dim).map(|k| self.a[i][k] * v[k]).collect())
     }
 
-    fn jvp_xy_g(&self, i: usize, _x: &[f32], _y: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+    fn jvp_xy_g(&self, i: usize, _x: &[S], _y: &[S], v: &[S]) -> Result<Vec<S>> {
         // ∂²g/∂x∂y = −Q_i (diagonal) ⇒ (∇²_xy g)·v = −Q_i v
         Ok((0..self.dim).map(|k| -self.q_diag[i][k] * v[k]).collect())
     }
 
-    fn init_x(&self, rng: &mut Rng) -> Vec<f32> {
-        (0..self.dim).map(|_| rng.normal_f32(0.0, 0.5)).collect()
+    fn init_x(&self, rng: &mut Rng) -> Vec<S> {
+        // f32 draw, exact widening: the same x₀ at every dtype.
+        (0..self.dim)
+            .map(|_| S::from_f64(rng.normal_f32(0.0, 0.5) as f64))
+            .collect()
     }
 
-    fn init_y(&self, _rng: &mut Rng) -> Vec<f32> {
-        vec![0.0; self.dim]
+    fn init_y(&self, _rng: &mut Rng) -> Vec<S> {
+        vec![S::ZERO; self.dim]
     }
 }
 
@@ -206,7 +225,7 @@ mod tests {
 
     #[test]
     fn y_star_zeroes_mean_ll_gradient() {
-        let t = QuadraticTask::generate(5, 6, 1.0, 1);
+        let t: QuadraticTask = QuadraticTask::generate(5, 6, 1.0, 1);
         let mut rng = Rng::new(2);
         let x = t.init_x(&mut rng);
         let ys = t.y_star(&x);
@@ -226,7 +245,7 @@ mod tests {
     fn penalty_hypergrad_approaches_analytic_as_lambda_grows() {
         // Kwon-style bound: ‖∇ψ_λ − ∇ψ‖ = O(1/λ).  Evaluate the penalty
         // hypergradient at the EXACT minimizers y*_λ(x), y*(x) and compare.
-        let t = QuadraticTask::generate(4, 5, 0.8, 3);
+        let t: QuadraticTask = QuadraticTask::generate(4, 5, 0.8, 3);
         let mut rng = Rng::new(4);
         let x = t.init_x(&mut rng);
         let analytic = t.hypergrad_analytic(&x);
@@ -270,7 +289,7 @@ mod tests {
 
     #[test]
     fn analytic_hypergrad_matches_finite_difference_of_psi() {
-        let t = QuadraticTask::generate(5, 4, 1.0, 11);
+        let t: QuadraticTask = QuadraticTask::generate(5, 4, 1.0, 11);
         let mut rng = Rng::new(12);
         let x = t.init_x(&mut rng);
         let g = t.hypergrad_analytic(&x);
@@ -291,7 +310,7 @@ mod tests {
 
     #[test]
     fn hvp_and_jvp_match_finite_differences() {
-        let t = QuadraticTask::generate(3, 4, 1.0, 5);
+        let t: QuadraticTask = QuadraticTask::generate(3, 4, 1.0, 5);
         let mut rng = Rng::new(6);
         let x = t.init_x(&mut rng);
         let y = t.init_x(&mut rng);
@@ -314,6 +333,33 @@ mod tests {
         for k in 0..4 {
             let fd = (g3[k] - g1[k]) / eps;
             assert!((fd - jv[k]).abs() < 1e-2, "{fd} vs {}", jv[k]);
+        }
+    }
+
+    /// The f64 instance is the exact widening of the f32 instance (same
+    /// RNG stream, lossless casts), and its oracles agree with the f32
+    /// ones to well within f32 rounding.
+    #[test]
+    fn f64_instance_widens_f32_instance_exactly() {
+        let t32: QuadraticTask = QuadraticTask::generate(4, 6, 1.0, 77);
+        let t64: QuadraticTask<f64> = QuadraticTask::generate(4, 6, 1.0, 77);
+        for i in 0..4 {
+            for k in 0..6 {
+                assert_eq!(t32.a[i][k] as f64, t64.a[i][k]);
+                assert_eq!(t32.q_diag[i][k] as f64, t64.q_diag[i][k]);
+                assert_eq!(t32.p_off[i][k] as f64, t64.p_off[i][k]);
+            }
+        }
+        let mut r32 = Rng::new(5);
+        let mut r64 = Rng::new(5);
+        let x32 = t32.init_x(&mut r32);
+        let x64 = t64.init_x(&mut r64);
+        let y32 = t32.y_star(&x32);
+        let y64 = t64.y_star(&x64);
+        for k in 0..6 {
+            assert_eq!(x32[k] as f64, x64[k], "same x₀ at both dtypes");
+            let rel = (y32[k] as f64 - y64[k]).abs() / (1.0 + y64[k].abs());
+            assert!(rel < 1e-6, "coord {k}: f32 {} vs f64 {}", y32[k], y64[k]);
         }
     }
 }

@@ -1,7 +1,7 @@
 //! Gossip mixing matrices (Assumption 1) with Metropolis–Hastings weights.
 
 use super::Graph;
-use crate::linalg::MatF64;
+use crate::linalg::{kernels, MatF64, Scalar};
 
 /// Symmetric doubly stochastic mixing matrix over a graph, with the
 /// spectral quantities used throughout the convergence analysis cached.
@@ -84,19 +84,14 @@ impl MixingMatrix {
     /// The mixing step of Algorithms 1–2 applied to stacked rows:
     /// `out_i = rows_i + γ Σ_j w_ij (rows_j − rows_i)`, i.e. X ← (I + γ(W−I))X.
     /// Proposition 5: this keeps a spectral gap of at least γρ.
-    pub fn mix(&self, gamma: f64, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    pub fn mix<S: Scalar>(&self, gamma: f64, rows: &[Vec<S>]) -> Vec<Vec<S>> {
         assert_eq!(rows.len(), self.m);
-        let d = rows[0].len();
         let mut out = rows.to_vec();
         for i in 0..self.m {
             let oi = &mut out[i];
             for &(j, wij) in &self.neighbor_weights[i] {
-                let c = (gamma * wij) as f32;
-                let rj = &rows[j];
-                let ri = &rows[i];
-                for k in 0..d {
-                    oi[k] += c * (rj[k] - ri[k]);
-                }
+                let c = S::from_f64(gamma * wij);
+                kernels::weighted_diff_add(c, &rows[j], &rows[i], oi);
             }
         }
         out

@@ -36,7 +36,7 @@ fn psi_min(task: &QuadraticTask) -> (Vec<f32>, f64) {
 fn theorem1_inner_linear_rate_under_compression() {
     let m = 8;
     let dim = 12;
-    let task = QuadraticTask::generate(m, dim, 1.0, 7);
+    let task: QuadraticTask = QuadraticTask::generate(m, dim, 1.0, 7);
     let mut rng_master = Rng::new(3);
     let x = task.init_x(&mut rng_master);
     let xs: Vec<Vec<f32>> = vec![x; m];
@@ -79,7 +79,7 @@ fn theorem1_inner_linear_rate_under_compression() {
 /// as λ grows (bias ∝ 1/λ), at fixed budget.
 #[test]
 fn penalty_bias_shrinks_with_lambda() {
-    let task = QuadraticTask::generate(6, 8, 0.6, 13);
+    let task: QuadraticTask = QuadraticTask::generate(6, 8, 0.6, 13);
     let (_, psi_star) = psi_min(&task);
     let mut last_excess = f64::INFINITY;
     for lambda in [2.0, 8.0, 32.0] {
@@ -112,7 +112,7 @@ fn penalty_bias_shrinks_with_lambda() {
 /// easy quadratic — the cross-validation that the baselines are faithful.
 #[test]
 fn all_algorithms_reach_same_optimum() {
-    let task = QuadraticTask::generate(5, 6, 0.5, 17);
+    let task: QuadraticTask = QuadraticTask::generate(5, 6, 0.5, 17);
     let (_, psi_star) = psi_min(&task);
     for (algo, rounds, eta_out, eta_in, comp) in [
         (Algorithm::C2dfb, 300, 0.3, 0.3, "topk:0.5"),
@@ -153,7 +153,7 @@ fn all_algorithms_reach_same_optimum() {
 /// threshold — the Table 1 phenomenon on the analytic task.
 #[test]
 fn c2dfb_beats_mdbo_on_comm_to_threshold() {
-    let task = QuadraticTask::generate(6, 32, 1.0, 19);
+    let task: QuadraticTask = QuadraticTask::generate(6, 32, 1.0, 19);
     let (_, psi_star) = psi_min(&task);
     let threshold = {
         // Halfway (in log scale) between start and optimum.
@@ -199,7 +199,7 @@ fn c2dfb_beats_mdbo_on_comm_to_threshold() {
 /// Fig. 5(middle) sensitivity shape.
 #[test]
 fn compression_ratio_sensitivity_shape() {
-    let task = QuadraticTask::generate(6, 16, 0.8, 23);
+    let task: QuadraticTask = QuadraticTask::generate(6, 16, 0.8, 23);
     let mut final_losses = Vec::new();
     for ratio in ["0.05", "0.2", "1.0"] {
         let cfg = ExperimentConfig {
@@ -234,7 +234,7 @@ fn compression_ratio_sensitivity_shape() {
 fn refpoint_protocol_fixed_point_matches_dense_tracking() {
     let m = 5;
     let dim = 10;
-    let task = QuadraticTask::generate(m, dim, 0.7, 29);
+    let task: QuadraticTask = QuadraticTask::generate(m, dim, 0.7, 29);
     let x = task.init_x(&mut Rng::new(1));
     let xs: Vec<Vec<f32>> = vec![x; m];
     let opt = task.y_star(&xs[0]);

@@ -13,6 +13,7 @@
 
 use c2dfb::collective::{Network, Transport};
 use c2dfb::compress::{parse, Compressor};
+use c2dfb::linalg::{kernels, Scalar};
 use c2dfb::optim::{run_inner, run_inner_naive, InnerConfig, InnerState, RefPoint};
 use c2dfb::topology::{Graph, Topology};
 use c2dfb::util::rng::Rng;
@@ -339,4 +340,156 @@ fn rewritten_naive_loop_is_bit_identical_to_reference() {
         assert_eq!(net_new.ledger.total_bytes, net_ref.ledger.total_bytes);
         assert_eq!(rng_new.next_u64(), rng_ref.next_u64(), "{spec}: rng drift");
     }
+}
+
+/// Every slice kernel in `linalg::kernels` equals the textbook inline
+/// formulation bit-for-bit, at both dtypes: per-element loops for the
+/// elementwise ops, strict left-to-right f64 folds for the reductions.
+/// The chunked zip layout inside the kernels is a compiler hint for the
+/// autovectorizer, never a numeric change — this test is the proof.
+fn kernels_vs_inline<S: Scalar>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    // Odd length: exercises the chunk-remainder path in zip2/zip3.
+    let n = 37;
+    let mut draw = |n: usize| -> Vec<S> {
+        (0..n)
+            .map(|_| S::from_f64(rng.normal_f32(0.0, 1.0) as f64))
+            .collect()
+    };
+    let a = draw(n);
+    let b = draw(n);
+    let c = draw(n);
+    let alpha = S::from_f64(0.37);
+    let w = S::from_f64(-0.61);
+    let eq = |x: &[S], y: &[S], what: &str| {
+        assert_eq!(x.len(), y.len(), "{}: {what} length", S::NAME);
+        for (k, (u, v)) in x.iter().zip(y).enumerate() {
+            assert_eq!(
+                u.to_f64().to_bits(),
+                v.to_f64().to_bits(),
+                "{}: {what} diverges at [{k}] ({u:?} vs {v:?})",
+                S::NAME
+            );
+        }
+    };
+
+    // axpy: y += alpha * x
+    let (mut yk, mut yi) = (b.clone(), b.clone());
+    kernels::axpy(alpha, &a, &mut yk);
+    for (y, &x) in yi.iter_mut().zip(&a) {
+        *y += alpha * x;
+    }
+    eq(&yk, &yi, "axpy");
+
+    // scale: x *= alpha
+    let (mut xk, mut xi) = (a.clone(), a.clone());
+    kernels::scale(alpha, &mut xk);
+    for x in xi.iter_mut() {
+        *x *= alpha;
+    }
+    eq(&xk, &xi, "scale");
+
+    // sub / sub_assign / add_assign
+    let mut ok = vec![S::ZERO; n];
+    kernels::sub(&a, &b, &mut ok);
+    let oi: Vec<S> = a.iter().zip(&b).map(|(&x, &y)| x - y).collect();
+    eq(&ok, &oi, "sub");
+    let (mut sk, mut si) = (a.clone(), a.clone());
+    kernels::sub_assign(&mut sk, &b);
+    for (x, &y) in si.iter_mut().zip(&b) {
+        *x -= y;
+    }
+    eq(&sk, &si, "sub_assign");
+    let (mut ak, mut ai) = (a.clone(), a.clone());
+    kernels::add_assign(&mut ak, &b);
+    for (x, &y) in ai.iter_mut().zip(&b) {
+        *x += y;
+    }
+    eq(&ak, &ai, "add_assign");
+
+    // descent: x -= eta * g
+    let (mut dk, mut di) = (a.clone(), a.clone());
+    kernels::descent(alpha, &b, &mut dk);
+    for (x, &g) in di.iter_mut().zip(&b) {
+        *x -= alpha * g;
+    }
+    eq(&dk, &di, "descent");
+
+    // weighted_diff_add: out += w * (a - b)
+    let (mut gk, mut gi) = (c.clone(), c.clone());
+    kernels::weighted_diff_add(w, &a, &b, &mut gk);
+    for ((o, &x), &y) in gi.iter_mut().zip(&a).zip(&b) {
+        *o += w * (x - y);
+    }
+    eq(&gk, &gi, "weighted_diff_add");
+
+    // add_diff: s += new - old
+    let (mut tk, mut ti) = (c.clone(), c.clone());
+    kernels::add_diff(&a, &b, &mut tk);
+    for ((s, &new), &old) in ti.iter_mut().zip(&a).zip(&b) {
+        *s += new - old;
+    }
+    eq(&tk, &ti, "add_diff");
+
+    // ref_mix_term: out += gamma * (hat_w - sw * hat)
+    let (mut rk, mut ri) = (c.clone(), c.clone());
+    kernels::ref_mix_term(alpha, w, &a, &b, &mut rk);
+    for ((o, &hw), &h) in ri.iter_mut().zip(&a).zip(&b) {
+        *o += alpha * (hw - w * h);
+    }
+    eq(&rk, &ri, "ref_mix_term");
+
+    // ema_diff: u = (1-theta)*u + theta*(a - b)
+    let (mut uk, mut ui) = (c.clone(), c.clone());
+    kernels::ema_diff(alpha, &a, &b, &mut uk);
+    let omt = S::ONE - alpha;
+    for ((u, &x), &y) in ui.iter_mut().zip(&a).zip(&b) {
+        *u = omt * *u + alpha * (x - y);
+    }
+    eq(&uk, &ui, "ema_diff");
+
+    // dense_add_scaled: target += w * v
+    let (mut pk, mut pi) = (c.clone(), c.clone());
+    kernels::dense_add_scaled(w, &a, &mut pk);
+    for (t, &x) in pi.iter_mut().zip(&a) {
+        *t += w * x;
+    }
+    eq(&pk, &pi, "dense_add_scaled");
+
+    // scatter_add_scaled over an in-range strictly increasing index set
+    let idx: Vec<u32> = (0..12).map(|j| j * 3 + 1).collect();
+    let val = &a[..idx.len()];
+    let (mut qk, mut qi) = (c.clone(), c.clone());
+    kernels::scatter_add_scaled(w, &idx, val, &mut qk);
+    for (&i, &x) in idx.iter().zip(val) {
+        qi[i as usize] += w * x;
+    }
+    eq(&qk, &qi, "scatter_add_scaled");
+
+    // dequant_add: target += codes[i] * scale
+    let codes: Vec<i16> = (0..n).map(|_| rng.next_u64() as i16).collect();
+    let (mut zk, mut zi) = (c.clone(), c.clone());
+    kernels::dequant_add(alpha, &codes, &mut zk);
+    for (t, &cd) in zi.iter_mut().zip(&codes) {
+        *t += S::from_i16(cd) * alpha;
+    }
+    eq(&zk, &zi, "dequant_add");
+
+    // Reductions: strict left-to-right f64 folds, bit-compared as f64.
+    let dot_inline: f64 = a.iter().zip(&b).map(|(x, y)| x.to_f64() * y.to_f64()).sum();
+    assert_eq!(kernels::dot(&a, &b).to_bits(), dot_inline.to_bits(), "{}: dot", S::NAME);
+    let nsq_inline: f64 = a.iter().map(|x| x.to_f64() * x.to_f64()).sum();
+    assert_eq!(kernels::norm2_sq(&a).to_bits(), nsq_inline.to_bits(), "{}: norm2_sq", S::NAME);
+    let dsq_inline: f64 = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x.to_f64() - y.to_f64()).powi(2))
+        .sum();
+    assert_eq!(kernels::dist_sq(&a, &b).to_bits(), dsq_inline.to_bits(), "{}: dist_sq", S::NAME);
+}
+
+#[test]
+fn kernels_match_inline_formulation_bitwise_at_both_dtypes() {
+    kernels_vs_inline::<f32>(31);
+    kernels_vs_inline::<f64>(32);
 }

@@ -8,7 +8,7 @@
 use c2dfb::config::{Algorithm, ExperimentConfig};
 use c2dfb::coordinator::sweep::{self, Cell, ExecOpts, SweepSpec, TaskRef};
 use c2dfb::obs::{self, Console};
-use c2dfb::tasks::{BilevelTask, QuadraticTask};
+use c2dfb::tasks::QuadraticTask;
 
 fn exec(trace: bool, profile: bool, jobs: usize) -> ExecOpts {
     ExecOpts { jobs, console: Console::quiet(), trace, profile }
@@ -21,9 +21,8 @@ fn exec(trace: bool, profile: bool, jobs: usize) -> ExecOpts {
 fn traces_byte_identical_at_parallelism_1_2_and_max() {
     let spec = SweepSpec::tiny();
     let grid = sweep::expand(&spec).expect("tiny grid expands");
-    let tasks: Vec<&(dyn BilevelTask + Sync)> =
-        grid.tasks.iter().map(|t| t.as_ref()).collect();
-    let o1 = sweep::run_cells_with(&grid.cells, &tasks, None, &exec(true, false, 1));
+    let tasks = grid.slots();
+    let o1 = sweep::run_cells_slots(&grid.cells, &tasks, None, &exec(true, false, 1));
     assert!(o1.iter().all(|o| o.result.is_ok()), "tiny grid must be clean");
     assert!(
         o1.iter().all(|o| o.trace.as_ref().is_some_and(|t| !t.is_empty())),
@@ -33,7 +32,7 @@ fn traces_byte_identical_at_parallelism_1_2_and_max() {
     let lines = obs::validate_trace(&t1).expect("trace must validate line-by-line");
     assert!(lines > grid.cells.len(), "at least one line per cell plus spans");
     for jobs in [2, 0] {
-        let o = sweep::run_cells_with(&grid.cells, &tasks, None, &exec(true, false, jobs));
+        let o = sweep::run_cells_slots(&grid.cells, &tasks, None, &exec(true, false, jobs));
         assert_eq!(
             sweep::diff_outcomes(&o1, &o),
             None,
@@ -54,10 +53,9 @@ fn traces_byte_identical_at_parallelism_1_2_and_max() {
 fn tracing_never_perturbs_results() {
     let spec = SweepSpec::tiny();
     let grid = sweep::expand(&spec).expect("tiny grid expands");
-    let tasks: Vec<&(dyn BilevelTask + Sync)> =
-        grid.tasks.iter().map(|t| t.as_ref()).collect();
-    let plain = sweep::run_cells_with(&grid.cells, &tasks, None, &exec(false, false, 2));
-    let traced = sweep::run_cells_with(&grid.cells, &tasks, None, &exec(true, true, 2));
+    let tasks = grid.slots();
+    let plain = sweep::run_cells_slots(&grid.cells, &tasks, None, &exec(false, false, 2));
+    let traced = sweep::run_cells_slots(&grid.cells, &tasks, None, &exec(true, true, 2));
     for (a, b) in plain.iter().zip(&traced) {
         assert!(a.trace.is_none() && a.profile.is_none());
         assert!(b.trace.is_some(), "{}: trace sink was requested", b.id);
@@ -79,7 +77,7 @@ fn tracing_never_perturbs_results() {
 /// HVP sub-solver, MDBO's Neumann series.
 #[test]
 fn summary_covers_every_algorithm_phase_pair() {
-    let task = QuadraticTask::generate(4, 6, 0.5, 21);
+    let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 21);
     let mut cells = Vec::new();
     for algo in [Algorithm::C2dfb, Algorithm::Madsbo, Algorithm::Mdbo] {
         let cfg = ExperimentConfig {
@@ -135,7 +133,7 @@ fn summary_covers_every_algorithm_phase_pair() {
 /// profiler runs alongside it in the same cells.
 #[test]
 fn profiled_trace_stays_wall_clock_free() {
-    let task = QuadraticTask::generate(4, 6, 0.5, 22);
+    let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 22);
     let cfg = ExperimentConfig {
         algorithm: Algorithm::C2dfb,
         nodes: 4,

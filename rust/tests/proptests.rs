@@ -459,11 +459,11 @@ fn prop_wire_codec_roundtrip() {
             bytes.len() == p.encoded_len(),
             format!("encoded_len {} vs actual {}", p.encoded_len(), bytes.len()),
         )?;
-        let back = Payload::decode(&bytes)
+        let back = Payload::<f32>::decode(&bytes)
             .map_err(|e| format!("decode of a valid encoding failed: {e}"))?;
         ensure(back == p, "encode→decode altered the payload")?;
         let dim = fitting_dim(&p);
-        Payload::decode_for_dim(&bytes, dim)
+        Payload::<f32>::decode_for_dim(&bytes, dim)
             .map_err(|e| format!("rejected at its own dim {dim}: {e}"))?;
         // A dimension the payload cannot fit must be rejected: one short
         // of the dense/quantized length, or the max sparse index itself.
@@ -475,7 +475,7 @@ fn prop_wire_codec_roundtrip() {
         };
         if let Some(bad) = too_small {
             ensure(
-                Payload::decode_for_dim(&bytes, bad).is_err(),
+                Payload::<f32>::decode_for_dim(&bytes, bad).is_err(),
                 format!("dim {bad} accepted a payload needing {dim}"),
             )?;
         }
@@ -483,31 +483,40 @@ fn prop_wire_codec_roundtrip() {
     });
 }
 
-/// Arbitrary byte strings never panic the decoder.  When hostile bytes
-/// happen to decode, the result must be a canonical payload: re-encoding
-/// it and decoding again is a bit-exact fixed point (compared on encoded
-/// bytes, so NaN payload values cannot fake a mismatch).
+/// Arbitrary byte strings never panic the decoder — at either dtype.
+/// When hostile bytes happen to decode, the result must be a canonical
+/// payload: re-encoding it and decoding again is a bit-exact fixed point
+/// (compared on encoded bytes, so NaN payload values cannot fake a
+/// mismatch).
 #[test]
 fn prop_wire_decode_survives_random_bytes() {
     check("wire-hostile", 200, |g| {
         let n = g.usize_in(0, 64);
         let mut bytes: Vec<u8> = (0..n).map(|_| g.rng.next_u64() as u8).collect();
-        // Bias half the cases onto real tags so every decode arm is hit.
+        // Bias half the cases onto real tags (both dtype blocks, plus the
+        // first out-of-range value) so every decode arm is hit.
         if !bytes.is_empty() && g.bool() {
-            bytes[0] = g.usize_in(0, 4) as u8;
+            bytes[0] = g.usize_in(0, 8) as u8;
         }
-        match Payload::decode(&bytes) {
-            Err(_) => Ok(()),
-            Ok(p) => {
-                let mut re = Vec::new();
-                p.encode(&mut re);
-                let p2 = Payload::decode(&re)
-                    .map_err(|e| format!("re-encoding not decodable: {e}"))?;
-                let mut re2 = Vec::new();
-                p2.encode(&mut re2);
-                ensure(re == re2, "decode→encode→decode is not a fixed point")
-            }
+        if let Ok(p) = Payload::<f32>::decode(&bytes) {
+            let mut re = Vec::new();
+            p.encode(&mut re);
+            let p2 = Payload::<f32>::decode(&re)
+                .map_err(|e| format!("re-encoding not decodable: {e}"))?;
+            let mut re2 = Vec::new();
+            p2.encode(&mut re2);
+            ensure(re == re2, "decode→encode→decode is not a fixed point")?;
         }
+        if let Ok(p) = Payload::<f64>::decode(&bytes) {
+            let mut re = Vec::new();
+            p.encode(&mut re);
+            let p2 = Payload::<f64>::decode(&re)
+                .map_err(|e| format!("f64 re-encoding not decodable: {e}"))?;
+            let mut re2 = Vec::new();
+            p2.encode(&mut re2);
+            ensure(re == re2, "f64 decode→encode→decode is not a fixed point")?;
+        }
+        Ok(())
     });
 }
 
@@ -697,21 +706,108 @@ fn prop_wire_truncation_and_mutation_are_clean() {
         p.encode(&mut bytes);
         for cut in 0..bytes.len() {
             ensure(
-                Payload::decode(&bytes[..cut]).is_err(),
+                Payload::<f32>::decode(&bytes[..cut]).is_err(),
                 format!("strict prefix {cut}/{} decoded", bytes.len()),
             )?;
         }
         if !bytes.is_empty() {
             let at = g.usize_in(0, bytes.len() - 1);
             bytes[at] ^= (g.rng.next_u64() as u8) | 1;
-            if let Ok(m) = Payload::decode(&bytes) {
+            if let Ok(m) = Payload::<f32>::decode(&bytes) {
                 let mut re = Vec::new();
                 m.encode(&mut re);
                 ensure(
-                    Payload::decode(&re).is_ok(),
+                    Payload::<f32>::decode(&re).is_ok(),
                     "mutated payload decoded but its re-encoding does not",
                 )?;
             }
+        }
+        Ok(())
+    });
+}
+
+/// The payload's f64 twin: same structure, every scalar widened.  Exact
+/// widening keeps the two encodings comparable field-for-field.
+fn widen_payload(p: &Payload) -> Payload<f64> {
+    match p {
+        Payload::Dense(v) => Payload::Dense(v.iter().map(|&x| x as f64).collect()),
+        Payload::Sparse { idx, val } => Payload::Sparse {
+            idx: idx.clone(),
+            val: val.iter().map(|&x| x as f64).collect(),
+        },
+        Payload::Quantized { norm, levels, codes } => Payload::Quantized {
+            norm: *norm as f64,
+            levels: *levels,
+            codes: codes.clone(),
+        },
+    }
+}
+
+/// The wire dtype tag is enforced both ways: f32 encodings use tags
+/// 0..=3 and never decode under the f64 contract, f64 encodings use
+/// 4..=7 and never decode under the f32 contract (clean "dtype mismatch"
+/// errors, not panics or misreads), tags outside both blocks are
+/// rejected by name at either dtype, and the f64 block round-trips and
+/// bills its length as exactly as the historical f32 one.
+#[test]
+fn prop_wire_dtype_tag_is_enforced() {
+    check("wire-dtype", 80, |g| {
+        let p32 = random_payload(g);
+        let p64 = widen_payload(&p32);
+        let (mut b32, mut b64) = (Vec::new(), Vec::new());
+        p32.encode(&mut b32);
+        p64.encode(&mut b64);
+        ensure(b32[0] < 4, format!("f32 tag {} outside 0..=3", b32[0]))?;
+        ensure(
+            (4..8).contains(&b64[0]),
+            format!("f64 tag {} outside 4..=7", b64[0]),
+        )?;
+        ensure(
+            b64.len() == p64.encoded_len(),
+            format!("f64 encoded_len {} vs actual {}", p64.encoded_len(), b64.len()),
+        )?;
+        // Everything but the tag and the scalar width matches: an f64
+        // dense/sparse body is the f32 body with each value re-widened,
+        // so the count fields must agree byte-for-byte.
+        ensure(b32[1..5] == b64[1..5], "count fields diverge across dtypes")?;
+        // Wrong-dtype decodes fail clean, and say why.
+        match Payload::<f64>::decode(&b32) {
+            Ok(_) => return Err("f32 bytes decoded under the f64 contract".into()),
+            Err(e) => ensure(
+                e.contains("dtype mismatch"),
+                format!("unhelpful cross-dtype error: {e}"),
+            )?,
+        }
+        match Payload::<f32>::decode(&b64) {
+            Ok(_) => return Err("f64 bytes decoded under the f32 contract".into()),
+            Err(e) => ensure(
+                e.contains("dtype mismatch"),
+                format!("unhelpful cross-dtype error: {e}"),
+            )?,
+        }
+        // Right-dtype decode round-trips bit-exactly.
+        let back = Payload::<f64>::decode(&b64)
+            .map_err(|e| format!("f64 decode of a valid encoding failed: {e}"))?;
+        ensure(back == p64, "f64 encode→decode altered the payload")?;
+        // Every strict prefix of the f64 encoding fails clean too.
+        for cut in 0..b64.len() {
+            ensure(
+                Payload::<f64>::decode(&b64[..cut]).is_err(),
+                format!("f64 strict prefix {cut}/{} decoded", b64.len()),
+            )?;
+        }
+        // A tag outside both dtype blocks is unknown to both decoders.
+        let junk = 8 + (g.rng.next_u64() % 248) as u8;
+        b64[0] = junk;
+        for (what, err) in [
+            ("f32", Payload::<f32>::decode(&b64).err()),
+            ("f64", Payload::<f64>::decode(&b64).err()),
+        ] {
+            let e = err.ok_or(format!("{what} decoder accepted junk tag {junk}"))?;
+            ensure(
+                e.contains("unknown payload tag"),
+                format!("unhelpful junk-tag error at {what}: {e}"),
+            )?;
         }
         Ok(())
     });

@@ -149,7 +149,7 @@ fn generator_runs_match_materialized_across_node_counts() {
                 if GenTopology::new(topology, m).is_err() {
                     continue; // e.g. rreg:4 below its m floor
                 }
-                let task = QuadraticTask::generate(m, 6, 0.7, 90 + m as u64);
+                let task: QuadraticTask = QuadraticTask::generate(m, 6, 0.7, 90 + m as u64);
                 let mut cfg = quad_cfg(algo, m, topology);
                 let reference = run(&task, &cfg);
                 cfg.scale.generator = true;
@@ -172,7 +172,7 @@ fn generator_matches_materialized_under_sampling() {
     for algo in [Algorithm::C2dfb, Algorithm::C2dfbNc] {
         for topology in gen_topologies() {
             let m = 12;
-            let task = QuadraticTask::generate(m, 6, 0.7, 131);
+            let task: QuadraticTask = QuadraticTask::generate(m, 6, 0.7, 131);
             let mut cfg = quad_cfg(algo, m, topology);
             cfg.sampling.rate = 0.5;
             let reference = run(&task, &cfg);
@@ -199,7 +199,7 @@ fn new_generator_topologies_match_on_benign_event_engine() {
     for topology in [Topology::Torus, Topology::RandomRegular { k: 4, seed: 23 }] {
         for algo in [Algorithm::C2dfb, Algorithm::Madsbo] {
             let m = 9;
-            let task = QuadraticTask::generate(m, 8, 0.8, 77);
+            let task: QuadraticTask = QuadraticTask::generate(m, 8, 0.8, 77);
             let cfg_sync = quad_cfg(algo, m, topology);
             let mut cfg_sim = quad_cfg(algo, m, topology);
             cfg_sim.network.mode = NetMode::Event;
@@ -224,7 +224,7 @@ fn new_generator_topologies_match_on_benign_event_engine() {
 fn sampling_rate_one_is_the_identity() {
     for algo in [Algorithm::C2dfb, Algorithm::C2dfbNc, Algorithm::Madsbo] {
         let m = 8;
-        let task = QuadraticTask::generate(m, 8, 0.8, 55);
+        let task: QuadraticTask = QuadraticTask::generate(m, 8, 0.8, 55);
         let cfg_default = quad_cfg(algo, m, Topology::Ring);
         let mut cfg_explicit = quad_cfg(algo, m, Topology::Ring);
         cfg_explicit.sampling.rate = 1.0;
@@ -240,7 +240,7 @@ fn sampling_rate_one_is_the_identity() {
 fn sampled_runs_are_deterministic_and_cheaper() {
     for algo in [Algorithm::C2dfb, Algorithm::C2dfbNc] {
         let m = 16;
-        let task = QuadraticTask::generate(m, 6, 0.7, 201);
+        let task: QuadraticTask = QuadraticTask::generate(m, 6, 0.7, 201);
         let mut cfg = quad_cfg(algo, m, Topology::Exponential);
         let full = run(&task, &cfg);
         cfg.sampling.rate = 0.5;

@@ -62,7 +62,7 @@ fn event_engine_reproduces_sync_engine_exactly() {
         Algorithm::Madsbo,
         Algorithm::Mdbo,
     ] {
-        let task = QuadraticTask::generate(6, 10, 0.8, 91);
+        let task: QuadraticTask = QuadraticTask::generate(6, 10, 0.8, 91);
         let cfg_sync = quad_cfg(algo);
         let mut cfg_sim = quad_cfg(algo);
         cfg_sim.network.mode = NetMode::Event;
@@ -92,7 +92,7 @@ fn event_engine_reproduces_sync_engine_exactly() {
 /// streams, compute fans out with node-ordered reductions).
 #[test]
 fn runs_are_bit_identical_across_thread_counts() {
-    let task = QuadraticTask::generate(6, 12, 0.8, 92);
+    let task: QuadraticTask = QuadraticTask::generate(6, 12, 0.8, 92);
     let run_at = |threads: usize| {
         let mut cfg = quad_cfg(Algorithm::C2dfb);
         cfg.network.mode = NetMode::Event;
@@ -143,7 +143,7 @@ fn drop_rate_accounting_is_exact() {
     assert!((0.15..0.25).contains(&rate), "empirical drop rate {rate}");
 
     // End-to-end: the trace carries the cumulative dropped counter.
-    let task = QuadraticTask::generate(6, 8, 0.5, 93);
+    let task: QuadraticTask = QuadraticTask::generate(6, 8, 0.5, 93);
     let mut ecfg = quad_cfg(Algorithm::C2dfb);
     ecfg.network.mode = NetMode::Event;
     ecfg.network.drop_rate = 0.1;
@@ -201,7 +201,7 @@ fn straggler_virtual_time_ordering() {
     );
 
     // Sanity at the run level: stragglers inflate virtual time, not bytes.
-    let task = QuadraticTask::generate(6, 8, 0.5, 94);
+    let task: QuadraticTask = QuadraticTask::generate(6, 8, 0.5, 94);
     let mut benign = quad_cfg(Algorithm::C2dfb);
     benign.network.mode = NetMode::Event;
     let mut slow = benign.clone();
@@ -217,7 +217,7 @@ fn straggler_virtual_time_ordering() {
 /// therefore bytes) mid-run, and the dense baselines keep converging.
 #[test]
 fn topology_schedule_changes_cost_profile() {
-    let task = QuadraticTask::generate(6, 8, 0.5, 95);
+    let task: QuadraticTask = QuadraticTask::generate(6, 8, 0.5, 95);
     let mut stat = quad_cfg(Algorithm::Mdbo);
     stat.network.mode = NetMode::Event;
     let mut dyn_cfg = stat.clone();
@@ -237,7 +237,7 @@ fn topology_schedule_changes_cost_profile() {
 /// topology switch (rather than silently mixing with a stale matrix).
 #[test]
 fn c2dfb_resyncs_reference_points_across_topology_switch() {
-    let task = QuadraticTask::generate(6, 8, 0.5, 96);
+    let task: QuadraticTask = QuadraticTask::generate(6, 8, 0.5, 96);
     let mut cfg = quad_cfg(Algorithm::C2dfb);
     cfg.rounds = 40;
     cfg.eval_every = 10;
@@ -288,7 +288,7 @@ fn netsweep_tiny_completes() {
 /// driver still records a finite trace and a `rounds` stop.
 #[test]
 fn total_loss_run_completes_without_panicking() {
-    let task = QuadraticTask::generate(4, 6, 0.5, 97);
+    let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 97);
     let mut cfg = quad_cfg(Algorithm::C2dfb);
     cfg.nodes = 4;
     cfg.rounds = 3;

@@ -7,6 +7,7 @@
 use c2dfb::config::{Algorithm, ExperimentConfig};
 use c2dfb::coordinator::sweep::{self, Cell, SweepSpec, TaskRef};
 use c2dfb::coordinator::experiments;
+use c2dfb::sim::NetMode;
 use c2dfb::tasks::QuadraticTask;
 
 /// The acceptance criterion behind `c2dfb sweep --tiny`: one multi-axis
@@ -43,12 +44,75 @@ fn same_grid_bit_identical_at_parallelism_1_2_and_max() {
     }
 }
 
+/// The scale/width axes (`dtypes`, `sampling_rates`, `generators`) ride
+/// the same bit-identity contract as every other axis: a grid mixing
+/// default and non-default values of all three runs clean and yields
+/// identical per-cell metrics and report bytes at parallelism 1, 2 and
+/// max — f64 cells run through the same pool as f32 ones.
+#[test]
+fn scale_axes_grid_bit_identical_across_jobs() {
+    let run_at = |jobs: usize| {
+        let mut spec = SweepSpec::tiny();
+        spec.algos = vec![Algorithm::C2dfb]; // sampling rates < 1 are c2dfb-only
+        spec.tasks = vec!["quadratic".into()];
+        spec.topologies = vec!["ring".into()]; // generator transport needs a
+        spec.engines = vec![NetMode::Sync]; // generator topology + sync engine
+        spec.dtypes = vec!["default".into(), "f64".into()];
+        spec.sampling_rates = vec!["default".into(), "0.5".into()];
+        spec.generators = vec!["default".into(), "on".into()];
+        spec.jobs = jobs;
+        sweep::run(&spec, false).expect("sweep run")
+    };
+    let (g1, o1) = run_at(1);
+    assert_eq!(g1.cells.len(), 8, "2 dtypes x 2 rates x 2 generator modes");
+    assert!(o1.iter().all(|o| o.result.is_ok()), "scale-axes grid must be clean");
+    // Each f64 cell has an f32 twin differing only in the `+f64` id
+    // segment, and must pay strictly more wire bytes on the same problem
+    // (wider scalars, whatever the calibrated compressor kind).
+    let bytes_of = |id: &str| {
+        g1.cells
+            .iter()
+            .zip(&o1)
+            .find(|(c, _)| c.id == id)
+            .and_then(|(_, o)| o.metrics().map(|m| m.ledger.total_bytes))
+            .unwrap_or_else(|| panic!("no metrics for cell {id}"))
+    };
+    let mut pairs = 0;
+    for c in &g1.cells {
+        if let Some(pos) = c.id.find("+f64") {
+            let twin = format!("{}{}", &c.id[..pos], &c.id[pos + 4..]);
+            let (b64, b32) = (bytes_of(&c.id), bytes_of(&twin));
+            assert!(b64 > b32, "{}: f64 bytes {b64} not above f32 twin's {b32}", c.id);
+            pairs += 1;
+        }
+    }
+    assert_eq!(pairs, 4, "every non-default dtype cell pairs with a default twin");
+    for jobs in [2, 0] {
+        let (g, o) = run_at(jobs);
+        assert_eq!(
+            sweep::diff_outcomes(&o1, &o),
+            None,
+            "per-cell results must be bit-identical at jobs={jobs}"
+        );
+        assert_eq!(
+            sweep::report_csv(&g1.cells, &o1),
+            sweep::report_csv(&g.cells, &o),
+            "CSV report bytes must be identical at jobs={jobs}"
+        );
+        assert_eq!(
+            sweep::report_json(&g1.cells, &o1).to_string(),
+            sweep::report_json(&g.cells, &o).to_string(),
+            "JSON report bytes must be identical at jobs={jobs}"
+        );
+    }
+}
+
 /// Error isolation: a cell with an invalid config fails alone; every
 /// sibling (before and after it in declaration order) completes, and the
 /// report carries the per-cell error.
 #[test]
 fn failing_cell_does_not_abort_siblings() {
-    let task = QuadraticTask::generate(4, 6, 0.5, 11);
+    let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 11);
     let mut cells = Vec::new();
     for (i, comp) in ["topk:0.5", "qsgd:0", "topk:0.5"].iter().enumerate() {
         let cfg = ExperimentConfig {
@@ -81,7 +145,7 @@ fn failing_cell_does_not_abort_siblings() {
 /// never an abort of the other cells.
 #[test]
 fn bad_task_references_are_per_cell_errors() {
-    let task = QuadraticTask::generate(4, 6, 0.5, 12);
+    let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 12);
     let ok_cfg = ExperimentConfig {
         nodes: 4,
         rounds: 2,
@@ -107,7 +171,7 @@ fn bad_task_references_are_per_cell_errors() {
 /// its whole round budget, and its siblings are unaffected.
 #[test]
 fn divergence_guard_fires_inside_parallel_cells() {
-    let task = QuadraticTask::generate(4, 6, 0.5, 13);
+    let task: QuadraticTask = QuadraticTask::generate(4, 6, 0.5, 13);
     let mut diverging = ExperimentConfig {
         nodes: 4,
         rounds: 50,
